@@ -1,0 +1,85 @@
+//! Algorithm comparison (the Fig 1(c) scenario as an API example):
+//! run all five algorithms at the same parallelism and compare both
+//! iteration-domain and time-domain convergence.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example algorithm_comparison
+//! ```
+
+use hemingway::cluster::BspSim;
+use hemingway::config::ExperimentConfig;
+use hemingway::optim::{by_name, run, RunConfig, ALL_ALGORITHMS};
+use hemingway::repro::ReproContext;
+use hemingway::util::asciiplot::{plot, PlotCfg, Series};
+
+fn main() -> hemingway::Result<()> {
+    hemingway::util::logger::init_from_env();
+    let cfg = ExperimentConfig {
+        n: 2048,
+        machines: vec![16],
+        max_iters: 200,
+        ..Default::default()
+    };
+    let ctx = ReproContext::new(cfg, false)?;
+    let backend = ctx.backend();
+    let m = 16;
+
+    let mut series = Vec::new();
+    println!("algorithm comparison at m={m} (HLO path):\n");
+    println!(
+        "{:<15} {:>10} {:>12} {:>12} {:>12}",
+        "algorithm", "iters", "subopt@50", "final", "sim time"
+    );
+    for name in ALL_ALGORITHMS {
+        let mut algo = by_name(name, &ctx.problem, m, 42)?;
+        let mut sim = BspSim::new(ctx.profile.clone(), 42);
+        let trace = run(
+            algo.as_mut(),
+            backend.as_ref(),
+            &ctx.problem,
+            &mut sim,
+            ctx.p_star,
+            &RunConfig {
+                max_iters: 200,
+                target_subopt: 1e-4,
+                time_budget: None,
+            },
+        )?;
+        let at50 = trace
+            .records
+            .iter()
+            .find(|r| r.iter == 50)
+            .map(|r| r.subopt)
+            .unwrap_or(trace.final_subopt());
+        println!(
+            "{:<15} {:>10} {:>12.3e} {:>12.3e} {:>10.1}s",
+            name,
+            trace.records.last().unwrap().iter,
+            at50,
+            trace.final_subopt(),
+            trace.records.last().unwrap().sim_time
+        );
+        series.push(Series::new(
+            *name,
+            trace
+                .records
+                .iter()
+                .filter(|r| r.iter >= 1 && r.subopt > 0.0)
+                .map(|r| (r.iter as f64, r.subopt))
+                .collect(),
+        ));
+    }
+    println!(
+        "\n{}",
+        plot(
+            &series,
+            &PlotCfg {
+                title: format!("suboptimality vs iteration at m={m} (log y)"),
+                log_y: true,
+                x_label: "iteration".into(),
+                ..Default::default()
+            }
+        )
+    );
+    Ok(())
+}

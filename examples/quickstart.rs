@@ -1,0 +1,108 @@
+//! Quickstart: the 5-minute tour of the public API.
+//!
+//! Runs CoCoA+ through the production AOT/PJRT path on a small
+//! MNIST-like problem, prints the convergence trace, then fits both
+//! Hemingway models and asks the advisor a question.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use hemingway::cluster::{BspSim, HardwareProfile};
+use hemingway::config::ExperimentConfig;
+use hemingway::data::synth::mnist_like;
+use hemingway::ernest::ErnestModel;
+use hemingway::hemingway_model::{points_from_traces, ConvergenceModel, FeatureLibrary};
+use hemingway::optim::{run, Cocoa, CocoaVariant, HloBackend, Problem, RunConfig};
+use hemingway::runtime::{default_artifact_dir, Engine};
+
+fn main() -> hemingway::Result<()> {
+    hemingway::util::logger::init_from_env();
+
+    // 1. A small problem (1024 rows stay inside the default artifact
+    //    grid: every n/m here is a power of two ≥ 64).
+    let cfg = ExperimentConfig {
+        n: 1024,
+        machines: vec![1, 2, 4, 8, 16],
+        ..Default::default()
+    };
+    let data = mnist_like(&cfg.synth());
+    let problem = Problem::new(data, cfg.lambda);
+    let (p_star, _, gap) = problem.reference_solve(1e-7, 500);
+    println!("reference optimum P* = {p_star:.6} (gap {gap:.1e})");
+
+    // 2. The production backend: AOT-compiled Pallas kernels via PJRT.
+    let engine = Engine::new(&default_artifact_dir())?;
+    let backend = HloBackend::new(&engine);
+
+    // 3. Run CoCoA+ on 4 simulated machines.
+    let mut algo = Cocoa::new(&problem, 4, CocoaVariant::Adding, 42);
+    let mut sim = BspSim::new(HardwareProfile::local48(), 42);
+    let trace = run(
+        &mut algo,
+        &backend,
+        &problem,
+        &mut sim,
+        p_star,
+        &RunConfig::default(),
+    )?;
+    println!("\nCoCoA+ m=4 convergence:");
+    for r in trace.records.iter().step_by(4).take(12) {
+        println!(
+            "  iter {:>3}  t={:>6.2}s  subopt {:.3e}",
+            r.iter, r.sim_time, r.subopt
+        );
+    }
+
+    // 4. Fit g(i, m) from a quick sweep and f(m) from the same traces.
+    let mut traces = vec![trace];
+    for m in [1usize, 2, 8, 16] {
+        let mut a = Cocoa::new(&problem, m, CocoaVariant::Adding, 42);
+        let mut s = BspSim::new(HardwareProfile::local48(), 7 + m as u64);
+        traces.push(run(&mut a, &backend, &problem, &mut s, p_star, &RunConfig::default())?);
+    }
+    let conv = ConvergenceModel::fit(
+        &points_from_traces(&traces),
+        FeatureLibrary::standard(),
+        1,
+    )?;
+    println!(
+        "\nconvergence model: R² = {:.4}; selected features: {:?}",
+        conv.train_r2,
+        conv.selected_features()
+            .iter()
+            .map(|(n, _)| *n)
+            .collect::<Vec<_>>()
+    );
+
+    let obs: Vec<hemingway::ernest::Observation> = traces
+        .iter()
+        .flat_map(|t| {
+            t.records.windows(2).map(|w| hemingway::ernest::Observation {
+                machines: t.machines,
+                size: problem.data.n as f64,
+                time: w[1].sim_time - w[0].sim_time,
+            })
+        })
+        .collect();
+    let ernest = ErnestModel::fit(&obs)?;
+    println!(
+        "system model: f(m) = {:.3} + {:.2e}(size/m) + {:.3}·log m + {:.4}·m",
+        ernest.theta[0], ernest.theta[1], ernest.theta[2], ernest.theta[3]
+    );
+
+    // 5. Ask the combined model a question.
+    let combined = hemingway::advisor::CombinedModel {
+        ernest,
+        conv,
+        input_size: problem.data.n as f64,
+    };
+    println!("\npredicted time to 1e-3 suboptimality:");
+    for m in [1usize, 2, 4, 8, 16] {
+        match combined.time_to_subopt(1e-3, m, 10_000) {
+            Some(t) => println!("  m={m:<3} {t:>7.2}s"),
+            None => println!("  m={m:<3} (not reached)"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: L1 Pallas kernels + L2 JAX model + AOT lowering.
+
+Nothing in this package is imported at runtime — `make artifacts` runs
+aot.py once and the Rust coordinator only touches artifacts/*.hlo.txt.
+"""

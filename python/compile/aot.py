@@ -1,0 +1,120 @@
+"""AOT lowering driver: python -m compile.aot --out-dir ../artifacts
+
+Lowers every (kernel × partition shape) in the experiment grid to an
+HLO-text artifact and writes `manifest.json` describing the ABI. This
+is the ONLY python entry point in the system; it runs at build time
+(`make artifacts`) and never again.
+
+The default grid covers the paper's sweep m ∈ {1, 2, 4, …, 128} over
+the default dataset (n = 8192, d = 128): partition sizes n/m. Override
+with --n/--d/--machines for other experiment configs.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+from .model import kernel_specs, lower_to_hlo_text
+
+
+def dtype_name(aval) -> str:
+    return str(aval.dtype)
+
+
+def build_grid(n: int, machines: list[int]) -> list[int]:
+    """Distinct padded partition sizes for the machine sweep."""
+    sizes = set()
+    for m in machines:
+        n_loc = (n + m - 1) // m
+        sizes.add(n_loc)
+    return sorted(sizes, reverse=True)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n", type=int, default=8192, help="global dataset rows")
+    ap.add_argument("--d", type=int, default=128, help="feature dimension")
+    ap.add_argument(
+        "--machines",
+        default="1,2,4,8,16,32,64,128",
+        help="comma-separated machine counts in the sweep",
+    )
+    ap.add_argument(
+        "--kernels",
+        default="cocoa_local,grad,local_sgd",
+        help="comma-separated kernel subset to lower",
+    )
+    ap.add_argument(
+        "--h-frac",
+        type=float,
+        default=1.0,
+        help="local epoch length as a fraction of partition size",
+    )
+    ap.add_argument(
+        "--impl",
+        default="lax",
+        choices=["lax", "pallas"],
+        help="implementation lowered for the sequential kernels: the "
+        "step-identical lax mirrors (CPU production default) or the "
+        "canonical Pallas kernels (TPU target / correctness study); "
+        "see kernels/lax_mirrors.py",
+    )
+    args = ap.parse_args()
+
+    machines = [int(x) for x in args.machines.split(",")]
+    wanted = set(args.kernels.split(","))
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    entries = []
+    for n_loc in build_grid(args.n, machines):
+        h_steps = max(1, int(round(args.h_frac * n_loc)))
+        specs = kernel_specs(n_loc, args.d, h_steps, impl=args.impl)
+        for name, (fn, example_args) in specs.items():
+            if name not in wanted:
+                continue
+            fname = f"{name}_n{n_loc}_d{args.d}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            text = lower_to_hlo_text(fn, example_args)
+            with open(path, "w") as f:
+                f.write(text)
+            digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+            entries.append(
+                {
+                    "kernel": name,
+                    "file": fname,
+                    "n_loc": n_loc,
+                    "d": args.d,
+                    "h_steps": h_steps if name != "grad" else 0,
+                    "inputs": [
+                        {"shape": list(a.shape), "dtype": dtype_name(a)}
+                        for a in example_args
+                    ],
+                    "sha256_16": digest,
+                }
+            )
+            print(f"  lowered {fname} ({len(text)} chars)", file=sys.stderr)
+
+    manifest = {
+        "version": 1,
+        "n": args.n,
+        "d": args.d,
+        "machines": machines,
+        "h_frac": args.h_frac,
+        "impl": args.impl,
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(
+        f"wrote {len(entries)} artifacts + manifest.json to {out_dir}",
+        file=sys.stderr,
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

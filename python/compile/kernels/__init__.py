@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels (interpret=True) and their pure-numpy oracles."""
+
+from .hinge import hinge_stats
+from .pegasos import pegasos_epoch
+from .sdca import sdca_epoch
+
+__all__ = ["hinge_stats", "pegasos_epoch", "sdca_epoch"]

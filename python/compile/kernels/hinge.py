@@ -1,0 +1,84 @@
+"""Pallas kernel: weighted hinge-loss statistics over a partition.
+
+One kernel serves four call sites in the coordinator:
+
+* full-gradient descent      — weights = validity mask
+* mini-batch SGD             — weights = mask ∘ Bernoulli sample
+* primal objective evaluation — weights = mask (hinge sum output)
+* accuracy reporting         — weighted correct-prediction count
+
+Returns raw *sums* (no 1/n, no λ terms) so the Rust side owns all
+scaling — that keeps one artifact valid for every use.
+
+The kernel is row-tiled with a BlockSpec grid: X is streamed through
+VMEM-sized (tile × d) blocks while the (d,) gradient accumulator and
+the (2,) stats accumulator stay resident across the grid — the classic
+MXU-friendly reduction schedule (see DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hinge_kernel(x_ref, y_ref, wt_ref, w_ref, grad_ref, stats_ref):
+    tile = pl.program_id(0)
+
+    @pl.when(tile == 0)
+    def _init():
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+        stats_ref[...] = jnp.zeros_like(stats_ref)
+
+    x = x_ref[...]                       # (t, d) block
+    y = y_ref[...][:, 0]                 # (t,)
+    wt = wt_ref[...][:, 0]               # (t,)
+    w = w_ref[...]                       # (d,)
+
+    scores = x @ w                       # (t,) — the MXU-shaped op
+    margins = 1.0 - y * scores
+    active = (margins > 0.0).astype(jnp.float32) * wt
+
+    # Σ_i wt_i 1[margin_i > 0] (−y_i x_i)
+    grad_ref[...] = grad_ref[...] + (-(active * y)) @ x
+    hinge = jnp.sum(wt * jnp.maximum(margins, 0.0))
+    correct = jnp.sum(wt * (scores * y > 0.0).astype(jnp.float32))
+    stats_ref[...] = stats_ref[...] + jnp.stack([hinge, correct])
+
+
+def pick_tile(n_loc: int) -> int:
+    """Largest power-of-two row tile ≤ 512 that divides n_loc."""
+    t = 1
+    while t * 2 <= min(n_loc, 512) and n_loc % (t * 2) == 0:
+        t *= 2
+    return t
+
+
+def hinge_stats(x, y, weights, w):
+    """Weighted hinge statistics; returns ``(grad_sum, [hinge_sum, correct_sum])``.
+
+    Shapes: x (n_loc, d); y/weights (n_loc, 1); w (d,). f32.
+    """
+    n_loc, d = x.shape
+    tile = pick_tile(n_loc)
+    grid = n_loc // tile
+    return pl.pallas_call(
+        functools.partial(_hinge_kernel),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((2,), jnp.float32),
+        ),
+        interpret=True,
+    )(x, y, weights, w)

@@ -1,0 +1,98 @@
+"""jax.lax mirrors of the *sequential* Pallas kernels, used for the
+CPU production artifacts.
+
+Why these exist (§Perf optimization B): `pallas_call(interpret=True)`
+discharges ref loads/stores into functional ops with full-buffer copies
+per loop step, so the in-kernel SDCA/Pegasos epochs lower to HLO with
+O(h·n_loc) memory traffic — 6.4 µs/step at n_loc=8192 vs the ~30 ns/step
+XLA achieves for an in-place dynamic-update-slice loop. On a real TPU
+the Pallas kernel compiles through Mosaic (no discharge, VMEM-resident
+state) and this pathology does not exist; on this CPU-only image we
+lower these mathematically identical lax implementations instead.
+
+The Pallas kernels remain the canonical L1 definition: pytest
+(`tests/test_lax_mirrors.py`) requires bit-tight agreement between the
+two on every shape it sweeps, so the artifact behaviour is still
+pinned to the Pallas semantics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .lcg import lcg_index, lcg_next
+
+
+def sdca_epoch_lax(x, y, mask, alpha, w, scal, seed, *, h_steps: int):
+    """Identical update sequence to `sdca.sdca_epoch` (same LCG stream).
+
+    Shapes: x (n_loc, d); y/mask/alpha (n_loc, 1); w (d,); scal (2,);
+    seed (1,) int32. Returns (alpha_new (n_loc, 1), delta_w (d,)).
+    """
+    n_loc, d = x.shape
+    lambda_n = scal[0]
+    sigma_p = scal[1]
+    state0 = jax.lax.bitcast_convert_type(seed[0], jnp.uint32)
+    a0 = alpha[:, 0]
+    y1 = y[:, 0]
+    m1 = mask[:, 0]
+
+    def body(_, carry):
+        a, dw, state = carry
+        state = lcg_next(state)
+        j = lcg_index(state, n_loc)
+        xj = jax.lax.dynamic_slice_in_dim(x, j, 1, axis=0)[0]
+        yj = y1[j]
+        mj = m1[j]
+        aj = a[j]
+        w_eff = w + sigma_p * dw
+        qj = jnp.sum(xj * xj)
+        margin = 1.0 - yj * jnp.sum(xj * w_eff)
+        denom = jnp.maximum(sigma_p * qj, 1e-12)
+        step = jnp.where(qj > 0.0, lambda_n * margin / denom, 0.0)
+        a_new = jnp.clip(aj + step, 0.0, 1.0)
+        delta = (a_new - aj) * mj
+        a = a.at[j].set(aj + delta)
+        dw = dw + (delta * yj / lambda_n) * xj
+        return (a, dw, state)
+
+    a, dw, _ = jax.lax.fori_loop(
+        0, h_steps, body, (a0, jnp.zeros(d, jnp.float32), state0)
+    )
+    return a.reshape(n_loc, 1), dw
+
+
+def pegasos_epoch_lax(x, y, mask, w, scal, seed, *, h_steps: int):
+    """Identical update sequence to `pegasos.pegasos_epoch`."""
+    n_loc, d = x.shape
+    lam = scal[0]
+    t0 = scal[1]
+    state0 = jax.lax.bitcast_convert_type(seed[0], jnp.uint32)
+    y1 = y[:, 0]
+    m1 = mask[:, 0]
+
+    def body(t, carry):
+        wv, state = carry
+        state = lcg_next(state)
+        j = lcg_index(state, n_loc)
+        xj = jax.lax.dynamic_slice_in_dim(x, j, 1, axis=0)[0]
+        yj = y1[j]
+        mj = m1[j]
+        eta = 1.0 / (lam * (t0 + t.astype(jnp.float32) + 1.0))
+        active = (1.0 - yj * jnp.sum(xj * wv) > 0.0).astype(jnp.float32)
+        shrink = 1.0 - eta * lam * mj
+        wv = shrink * wv + (eta * active * mj * yj) * xj
+        return (wv, state)
+
+    wv, _ = jax.lax.fori_loop(0, h_steps, body, (w, state0))
+    return wv
+
+
+# Convenience partials matching the kernel_specs call signatures.
+def make_sdca(h_steps):
+    return functools.partial(sdca_epoch_lax, h_steps=h_steps)
+
+
+def make_pegasos(h_steps):
+    return functools.partial(pegasos_epoch_lax, h_steps=h_steps)

@@ -1,0 +1,51 @@
+"""Shared 32-bit LCG used for in-kernel random coordinate selection.
+
+The Rust coordinator keeps a bit-identical mirror of this stream
+(`rust/src/util/rng.rs::Lcg32`) so the native-Rust oracle solvers and
+the AOT-compiled Pallas kernels can be required to agree numerically in
+tests. Constants are the Numerical Recipes LCG; coordinate draws take
+the high bits (`(state >> 8) % n`) because the low bits of an LCG have
+short periods.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+LCG_A = np.uint32(1664525)
+LCG_C = np.uint32(1013904223)
+
+
+def epoch_seed(seed: int, epoch: int, partition: int) -> np.uint32:
+    """Mix (seed, epoch, partition) into an LCG start state.
+
+    Mirrors ``Lcg32::for_epoch`` in Rust exactly (wrapping u32 ops).
+    """
+    mask = 0xFFFFFFFF
+    s = (
+        (int(seed) & mask)
+        ^ ((int(epoch) * 0x9E3779B9) & mask)
+        ^ ((int(partition) * 0x85EBCA6B) & mask)
+    )
+    if s == 0:
+        s = 0x6B79D38B
+    return np.uint32(s)
+
+
+def lcg_next(state):
+    """One LCG step on a traced jnp uint32 scalar."""
+    return state * jnp.uint32(LCG_A) + jnp.uint32(LCG_C)
+
+
+def lcg_index(state, n: int):
+    """Coordinate draw in [0, n) from a *freshly advanced* state."""
+    return ((state >> jnp.uint32(8)) % jnp.uint32(n)).astype(jnp.int32)
+
+
+def lcg_next_np(state: np.uint32) -> np.uint32:
+    """Host-side (numpy) mirror for the pure-python reference oracle."""
+    with np.errstate(over="ignore"):
+        return np.uint32(state * LCG_A + LCG_C)
+
+
+def lcg_index_np(state: np.uint32, n: int) -> int:
+    return int((int(state) >> 8) % n)

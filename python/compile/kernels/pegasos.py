@@ -1,0 +1,72 @@
+"""Pallas kernel: one local Pegasos (SGD) epoch — the Splash-style
+local-update solver.
+
+Each machine runs `h_steps` of projected stochastic (sub)gradient on its
+partition with the Pegasos step size η_t = 1/(λ (t0 + t)); the
+coordinator then averages iterates across machines (Zhang & Jordan's
+Splash averages reweighted local updates; iterate averaging is the
+standard simplification and exhibits the same convergence-vs-m
+degradation the paper plots in Fig 1(c)).
+
+`t0` carries the global step count across outer iterations so the
+effective step-size schedule is continuous.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .lcg import lcg_index, lcg_next
+
+
+def _pegasos_kernel(
+    x_ref,      # (n_loc, d) f32
+    y_ref,      # (n_loc, 1) f32
+    mask_ref,   # (n_loc, 1) f32
+    w_ref,      # (d,)       f32
+    scal_ref,   # (2,)       f32 — [lambda, t0]
+    seed_ref,   # (1,)       i32
+    w_out,      # (d,)       f32
+    *,
+    h_steps: int,
+    n_loc: int,
+):
+    w_out[...] = w_ref[...]
+    lam = scal_ref[0]
+    t0 = scal_ref[1]
+    state0 = jax.lax.bitcast_convert_type(seed_ref[0], jnp.uint32)
+
+    def body(t, state):
+        state = lcg_next(state)
+        j = lcg_index(state, n_loc)
+        xj = pl.load(x_ref, (pl.dslice(j, 1), slice(None)))[0]
+        yj = pl.load(y_ref, (pl.dslice(j, 1), slice(None)))[0, 0]
+        mj = pl.load(mask_ref, (pl.dslice(j, 1), slice(None)))[0, 0]
+
+        w = w_out[...]
+        eta = 1.0 / (lam * (t0 + t.astype(jnp.float32) + 1.0))
+        active = (1.0 - yj * jnp.sum(xj * w) > 0.0).astype(jnp.float32)
+        # Regularizer shrink applies on every (valid) step; the loss
+        # term only when the margin is violated.
+        shrink = 1.0 - eta * lam * mj
+        w_out[...] = shrink * w + (eta * active * mj * yj) * xj
+        return state
+
+    jax.lax.fori_loop(0, h_steps, body, state0)
+
+
+def pegasos_epoch(x, y, mask, w, scal, seed, *, h_steps: int):
+    """Run one local Pegasos epoch; returns the new local iterate ``w``.
+
+    Shapes: x (n_loc, d); y/mask (n_loc, 1); w (d,); scal (2,) =
+    [lambda, t0]; seed (1,) int32.
+    """
+    n_loc, d = x.shape
+    kernel = functools.partial(_pegasos_kernel, h_steps=h_steps, n_loc=n_loc)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(x, y, mask, w, scal, seed)

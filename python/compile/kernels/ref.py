@@ -1,0 +1,98 @@
+"""Pure-numpy reference oracles for every Pallas kernel.
+
+Written as explicit python loops over the *same* LCG stream as the
+kernels, so pytest can require `assert_allclose` agreement. These are
+intentionally independent of jax.lax control flow — a genuinely
+separate implementation, not a refactoring of the kernel.
+"""
+
+import numpy as np
+
+from .lcg import lcg_index_np, lcg_next_np
+
+
+def sdca_epoch_ref(x, y, mask, alpha, w, lambda_n, sigma_prime, seed, h_steps):
+    """Reference local SDCA epoch. Returns (alpha_new, delta_w).
+
+    Arguments mirror kernels.sdca.sdca_epoch with scalars unpacked;
+    y/mask/alpha may be (n,) or (n,1).
+    """
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64).reshape(-1)
+    mask = np.asarray(mask, dtype=np.float64).reshape(-1)
+    a = np.asarray(alpha, dtype=np.float64).reshape(-1).copy()
+    w = np.asarray(w, dtype=np.float64)
+    n_loc, d = x.shape
+    dw = np.zeros(d)
+    state = np.uint32(seed)
+    for _ in range(h_steps):
+        state = lcg_next_np(state)
+        j = lcg_index_np(state, n_loc)
+        xj = x[j]
+        qj = float(xj @ xj)
+        w_eff = w + sigma_prime * dw
+        margin = 1.0 - y[j] * float(xj @ w_eff)
+        denom = max(sigma_prime * qj, 1e-12)
+        step = lambda_n * margin / denom if qj > 0.0 else 0.0
+        a_new = min(max(a[j] + step, 0.0), 1.0)
+        delta = (a_new - a[j]) * mask[j]
+        a[j] += delta
+        dw += (delta * y[j] / lambda_n) * xj
+    return a.reshape(-1, 1).astype(np.float32), dw.astype(np.float32)
+
+
+def hinge_stats_ref(x, y, weights, w):
+    """Reference weighted hinge statistics: (grad_sum, [hinge, correct])."""
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64).reshape(-1)
+    wt = np.asarray(weights, dtype=np.float64).reshape(-1)
+    w = np.asarray(w, dtype=np.float64)
+    scores = x @ w
+    margins = 1.0 - y * scores
+    active = (margins > 0.0).astype(np.float64) * wt
+    grad = -(active * y) @ x
+    hinge = float(np.sum(wt * np.maximum(margins, 0.0)))
+    correct = float(np.sum(wt * (scores * y > 0.0)))
+    return grad.astype(np.float32), np.array([hinge, correct], dtype=np.float32)
+
+
+def pegasos_epoch_ref(x, y, mask, w, lam, t0, seed, h_steps):
+    """Reference local Pegasos epoch. Returns the new iterate w."""
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64).reshape(-1)
+    mask = np.asarray(mask, dtype=np.float64).reshape(-1)
+    w = np.asarray(w, dtype=np.float64).copy()
+    n_loc, _ = x.shape
+    state = np.uint32(seed)
+    for t in range(h_steps):
+        state = lcg_next_np(state)
+        j = lcg_index_np(state, n_loc)
+        xj = x[j]
+        eta = 1.0 / (lam * (t0 + t + 1.0))
+        active = 1.0 if (1.0 - y[j] * float(xj @ w)) > 0.0 else 0.0
+        shrink = 1.0 - eta * lam * mask[j]
+        w = shrink * w + (eta * active * mask[j] * y[j]) * xj
+    return w.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Objective-level references (used by model/aot tests and as the ground
+# truth the Rust integration tests compare against via recorded traces).
+# ---------------------------------------------------------------------------
+
+def primal_objective(x, y, w, lam):
+    """P(w) = λ/2 ‖w‖² + (1/n) Σ hinge(y_i x_iᵀ w) over valid rows."""
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64).reshape(-1)
+    w = np.asarray(w, dtype=np.float64)
+    valid = y != 0.0
+    n = int(valid.sum())
+    margins = 1.0 - y[valid] * (x[valid] @ w)
+    return 0.5 * lam * float(w @ w) + float(np.maximum(margins, 0.0).sum()) / n
+
+
+def dual_objective(alpha, y, w, lam, n):
+    """D(a) = (1/n) Σ a_i − λ/2 ‖w(a)‖² with w(a) supplied by the caller."""
+    a = np.asarray(alpha, dtype=np.float64).reshape(-1)
+    w = np.asarray(w, dtype=np.float64)
+    return float(a.sum()) / n - 0.5 * lam * float(w @ w)

@@ -1,0 +1,101 @@
+"""Pallas kernel: one local SDCA epoch (the CoCoA / CoCoA+ local solver).
+
+This is the compute hot-spot of the whole system: every outer BSP
+iteration of CoCoA runs one of these per partition. The entire epoch
+(`h_steps` randomized coordinate updates) lives inside a single kernel
+invocation so the AOT artifact contains one fused XLA while-loop instead
+of `h_steps` host round-trips.
+
+Problem: hinge-loss SVM dual with box constraints. We parametrize the
+dual variable as ``a_i ∈ [0, 1]`` with primal correspondence
+``w(a) = (1/(λ n)) Σ_i a_i y_i x_i``. The closed-form SDCA step for
+coordinate j (Shalev-Shwartz & Zhang 2013), generalized with CoCoA+'s
+subproblem scaling σ':
+
+    w_eff = w + σ' · dw                      (dw = local Δw so far)
+    Δ     = clip(a_j + λn (1 − y_j x_jᵀ w_eff) / (σ' ‖x_j‖²), 0, 1) − a_j
+    a_j  += Δ ;  dw += Δ y_j x_j / (λn)
+
+σ' = 1 reproduces CoCoA (averaging, updates later scaled by 1/m in the
+coordinator); σ' = m reproduces CoCoA+ (adding).
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's
+testbed is a CPU cluster, so there is no GPU kernel to port; the TPU
+shaping here keeps `w`, `dw` and the dual block resident in VMEM-like
+scratch (they are kernel outputs, mutated in place) for the whole epoch
+while rows of X are gathered on demand — the HBM↔VMEM analogue of
+CoCoA keeping its local state in executor memory across a pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .lcg import lcg_index, lcg_next
+
+
+def _sdca_kernel(
+    x_ref,      # (n_loc, d)  f32 — local data rows
+    y_ref,      # (n_loc, 1)  f32 — labels in {-1, +1} (0 on padded rows)
+    mask_ref,   # (n_loc, 1)  f32 — 1 for valid rows, 0 for padding
+    alpha_ref,  # (n_loc, 1)  f32 — dual variables a ∈ [0, 1]
+    w_ref,      # (d,)        f32 — global weight vector (read-only)
+    scal_ref,   # (2,)        f32 — [lambda_n = λ·n_global, sigma_prime]
+    seed_ref,   # (1,)        i32 — LCG start state (bitcast to u32)
+    alpha_out,  # (n_loc, 1)  f32 — updated duals
+    dw_out,     # (d,)        f32 — local Δw = (1/λn) X_kᵀ(Δa ∘ y)
+    *,
+    h_steps: int,
+    n_loc: int,
+):
+    alpha_out[...] = alpha_ref[...]
+    dw_out[...] = jnp.zeros_like(dw_out)
+    lambda_n = scal_ref[0]
+    sigma_p = scal_ref[1]
+    state0 = jax.lax.bitcast_convert_type(seed_ref[0], jnp.uint32)
+
+    def body(_, state):
+        state = lcg_next(state)
+        j = lcg_index(state, n_loc)
+        xj = pl.load(x_ref, (pl.dslice(j, 1), slice(None)))[0]      # (d,)
+        yj = pl.load(y_ref, (pl.dslice(j, 1), slice(None)))[0, 0]
+        mj = pl.load(mask_ref, (pl.dslice(j, 1), slice(None)))[0, 0]
+        aj = pl.load(alpha_out, (pl.dslice(j, 1), slice(None)))[0, 0]
+
+        w_eff = w_ref[...] + sigma_p * dw_out[...]
+        qj = jnp.sum(xj * xj)
+        margin = 1.0 - yj * jnp.sum(xj * w_eff)
+        denom = jnp.maximum(sigma_p * qj, 1e-12)
+        step = jnp.where(qj > 0.0, lambda_n * margin / denom, 0.0)
+        a_new = jnp.clip(aj + step, 0.0, 1.0)
+        delta = (a_new - aj) * mj
+
+        pl.store(
+            alpha_out,
+            (pl.dslice(j, 1), slice(None)),
+            jnp.reshape(aj + delta, (1, 1)),
+        )
+        dw_out[...] = dw_out[...] + (delta * yj / lambda_n) * xj
+        return state
+
+    jax.lax.fori_loop(0, h_steps, body, state0)
+
+
+def sdca_epoch(x, y, mask, alpha, w, scal, seed, *, h_steps: int):
+    """Run one local SDCA epoch; returns ``(alpha_new, delta_w)``.
+
+    Shapes: x (n_loc, d); y/mask/alpha (n_loc, 1); w (d,); scal (2,);
+    seed (1,) int32. All f32 except the seed.
+    """
+    n_loc, d = x.shape
+    kernel = functools.partial(_sdca_kernel, h_steps=h_steps, n_loc=n_loc)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n_loc, 1), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+        ),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y, mask, alpha, w, scal, seed)

@@ -1,0 +1,144 @@
+"""Layer-2 JAX step functions — the per-partition computations each
+distributed optimization algorithm runs inside one BSP iteration.
+
+Each function here is a thin, jit-able composition around exactly one
+Pallas kernel; `aot.py` lowers each (function × partition shape) pair to
+an HLO-text artifact the Rust coordinator executes through PJRT. The
+function signatures (argument order, shapes, dtypes) are the ABI between
+the layers and are recorded in `artifacts/manifest.json`.
+
+Conventions shared with the Rust side (`rust/src/optim/problem.rs`):
+
+* labels y ∈ {−1, +1}, 0 on padded rows; mask ∈ {0, 1};
+* dual parametrization a ∈ [0,1]^n with w(a) = (1/λn) Σ a_i y_i x_i;
+* `scal` packs scalars as an f32 vector so artifacts stay scalar-free.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hinge_stats, pegasos_epoch, sdca_epoch
+
+
+def cocoa_local_step(x, y, mask, alpha, w, scal, seed, *, h_steps):
+    """CoCoA / CoCoA+ local solver: one SDCA epoch on a partition.
+
+    scal = [lambda_n, sigma_prime]. Returns (alpha_new, delta_w).
+    σ' = 1 → CoCoA (coordinator averages); σ' = m → CoCoA+ (adds).
+    """
+    return sdca_epoch(x, y, mask, alpha, w, scal, seed, h_steps=h_steps)
+
+
+def grad_step(x, y, weights, w):
+    """Weighted hinge statistics for GD / mini-batch SGD / objective eval.
+
+    Returns (grad_sum (d,), stats (2,) = [hinge_sum, correct_sum]).
+    All normalization (1/n, λw, step size) happens in the coordinator.
+    """
+    return hinge_stats(x, y, weights, w)
+
+
+def local_sgd_step(x, y, mask, w, scal, seed, *, h_steps):
+    """Splash-style local Pegasos epoch. scal = [lambda, t0].
+
+    Returns the machine's new local iterate (the coordinator averages).
+    """
+    return pegasos_epoch(x, y, mask, w, scal, seed, h_steps=h_steps)
+
+
+# ---------------------------------------------------------------------------
+# Shape specs + lowering helpers used by aot.py and the pytest suite.
+# ---------------------------------------------------------------------------
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def kernel_specs(n_loc: int, d: int, h_steps: int, impl: str = "pallas"):
+    """The (name → (callable, example_args)) table for one partition shape.
+
+    `h_steps` is baked into the artifact (static loop bound); the
+    default is one pass over the partition (`h_steps = n_loc`).
+
+    `impl` selects the implementation lowered into the artifact for the
+    *sequential* kernels (cocoa_local, local_sgd):
+
+    * ``"pallas"`` — the canonical L1 Pallas kernels (interpret=True).
+    * ``"lax"``    — the step-identical jax.lax mirrors
+      (`kernels/lax_mirrors.py`), used for CPU production artifacts
+      because interpret-mode discharge makes the in-kernel epoch loop
+      O(h·n_loc) in memory traffic (see that module's docstring).
+
+    `grad` is always the Pallas kernel — it is the data-parallel,
+    MXU-shaped hot-spot Pallas exists for, and it lowers efficiently.
+    """
+    if impl == "lax":
+        from .kernels.lax_mirrors import make_pegasos, make_sdca
+
+        cocoa_fn = lambda x, y, mk, a, w, s, sd: make_sdca(h_steps)(x, y, mk, a, w, s, sd)
+        sgd_fn = lambda x, y, mk, w, s, sd: make_pegasos(h_steps)(x, y, mk, w, s, sd)
+    elif impl == "pallas":
+        cocoa_fn = lambda x, y, mk, a, w, s, sd: cocoa_local_step(
+            x, y, mk, a, w, s, sd, h_steps=h_steps
+        )
+        sgd_fn = lambda x, y, mk, w, s, sd: local_sgd_step(
+            x, y, mk, w, s, sd, h_steps=h_steps
+        )
+    else:
+        raise ValueError(f"unknown impl '{impl}'")
+
+    return {
+        "cocoa_local": (
+            cocoa_fn,
+            (
+                f32((n_loc, d)),  # x
+                f32((n_loc, 1)),  # y
+                f32((n_loc, 1)),  # mask
+                f32((n_loc, 1)),  # alpha
+                f32((d,)),        # w
+                f32((2,)),        # [lambda_n, sigma_prime]
+                i32((1,)),        # seed
+            ),
+        ),
+        "grad": (
+            grad_step,
+            (
+                f32((n_loc, d)),  # x
+                f32((n_loc, 1)),  # y
+                f32((n_loc, 1)),  # weights
+                f32((d,)),        # w
+            ),
+        ),
+        "local_sgd": (
+            sgd_fn,
+            (
+                f32((n_loc, d)),  # x
+                f32((n_loc, 1)),  # y
+                f32((n_loc, 1)),  # mask
+                f32((d,)),        # w
+                f32((2,)),        # [lambda, t0]
+                i32((1,)),        # seed
+            ),
+        ),
+    }
+
+
+def lower_to_hlo_text(fn, example_args) -> str:
+    """Lower a jitted function to HLO *text* (the interchange format).
+
+    jax ≥ 0.5 serialized HloModuleProtos carry 64-bit instruction ids
+    that xla_extension 0.5.1 rejects; the text parser reassigns ids, so
+    text round-trips cleanly (see /opt/xla-example/README.md).
+    """
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

@@ -1,0 +1,91 @@
+"""The lax mirrors must be step-identical to the canonical Pallas
+kernels: same LCG stream, same update order, same arithmetic. These
+tests pin the CPU production artifacts to the Pallas semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import pegasos_epoch, sdca_epoch
+from compile.kernels.lax_mirrors import pegasos_epoch_lax, sdca_epoch_lax
+from compile.kernels.lcg import epoch_seed
+
+
+def seed_arr(s):
+    return jnp.array([np.int32(np.uint32(s).view(np.int32))])
+
+
+def problem(rng, n, d):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = np.sign(rng.normal(size=(n, 1))).astype(np.float32)
+    y[y == 0] = 1.0
+    mask = np.ones((n, 1), np.float32)
+    return jnp.array(x), jnp.array(y), jnp.array(mask)
+
+
+@given(
+    n=st.integers(min_value=2, max_value=64),
+    d=st.integers(min_value=1, max_value=32),
+    sigma=st.sampled_from([1.0, 4.0, 16.0]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_sdca_mirror_matches_pallas(n, d, sigma, seed):
+    rng = np.random.default_rng(seed % 991)
+    x, y, mask = problem(rng, n, d)
+    alpha = jnp.array(rng.uniform(0, 1, size=(n, 1)).astype(np.float32))
+    w = jnp.array((rng.normal(size=d) * 0.1).astype(np.float32))
+    scal = jnp.array([0.01 * n, sigma], jnp.float32)
+    s = seed_arr(epoch_seed(seed, 1, 2))
+    h = 2 * n
+    a_p, dw_p = sdca_epoch(x, y, mask, alpha, w, scal, s, h_steps=h)
+    a_l, dw_l = sdca_epoch_lax(x, y, mask, alpha, w, scal, s, h_steps=h)
+    assert_allclose(np.array(a_p), np.array(a_l), rtol=1e-6, atol=1e-7)
+    assert_allclose(np.array(dw_p), np.array(dw_l), rtol=1e-5, atol=1e-6)
+
+
+@given(
+    n=st.integers(min_value=2, max_value=64),
+    d=st.integers(min_value=1, max_value=32),
+    lam=st.sampled_from([1e-4, 1e-2]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_pegasos_mirror_matches_pallas(n, d, lam, seed):
+    rng = np.random.default_rng(seed % 983)
+    x, y, mask = problem(rng, n, d)
+    w = jnp.array((rng.normal(size=d) * 0.1).astype(np.float32))
+    scal = jnp.array([lam, 10.0], jnp.float32)
+    s = seed_arr(epoch_seed(seed, 3, 4))
+    w_p = pegasos_epoch(x, y, mask, w, scal, s, h_steps=n)
+    w_l = pegasos_epoch_lax(x, y, mask, w, scal, s, h_steps=n)
+    assert_allclose(np.array(w_p), np.array(w_l), rtol=1e-5, atol=1e-6)
+
+
+def test_mirror_respects_padding():
+    rng = np.random.default_rng(7)
+    n, d = 32, 8
+    x, y, mask = problem(rng, n, d)
+    mask = mask.at[5:9].set(0.0)
+    alpha = jnp.zeros((n, 1), jnp.float32)
+    w = jnp.zeros(d, jnp.float32)
+    scal = jnp.array([0.32, 1.0], jnp.float32)
+    s = seed_arr(epoch_seed(1, 1, 1))
+    a_l, _ = sdca_epoch_lax(x, y, mask, alpha, w, scal, s, h_steps=4 * n)
+    a_l = np.array(a_l)
+    assert np.all(a_l[5:9] == 0.0)
+
+
+def test_lax_artifact_lowering_has_while_loop():
+    """The lax mirror must lower to a single fused while loop (the
+    whole point of the optimization)."""
+    from compile.model import kernel_specs, lower_to_hlo_text
+
+    fn, args = kernel_specs(64, 8, 64, impl="lax")["cocoa_local"]
+    text = lower_to_hlo_text(fn, args)
+    assert "while" in text
+    # And parameter ABI is unchanged vs the pallas variant.
+    fn_p, args_p = kernel_specs(64, 8, 64, impl="pallas")["cocoa_local"]
+    assert len(args) == len(args_p)

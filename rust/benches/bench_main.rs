@@ -1,0 +1,286 @@
+//! Benchmark harness (`cargo bench`). The offline registry has no
+//! criterion, so this is a self-contained harness: warmup + timed
+//! iterations, reporting mean / p50 / p95 per benchmark.
+//!
+//! Groups (one per paper table/figure + the §Perf hot paths):
+//!   kernels     — per-call cost of each AOT kernel, HLO vs native
+//!   iteration   — end-to-end BSP iteration cost (Fig 1a's x-axis)
+//!   models      — NNLS / Lasso / LassoCV / convergence-fit cost
+//!   advisor     — query latency over a fitted model set
+//!
+//! Filter with `cargo bench -- <substring>`.
+
+use std::time::Instant;
+
+use hemingway::cluster::{BspSim, HardwareProfile};
+use hemingway::config::ExperimentConfig;
+use hemingway::data::synth::mnist_like;
+use hemingway::ernest::{ErnestModel, Observation};
+use hemingway::hemingway_model::{
+    lasso_cv, points_from_traces, ConvergenceModel, FeatureLibrary,
+};
+use hemingway::linalg::{nnls, Matrix};
+use hemingway::optim::{
+    by_name, run, Backend, HloBackend, NativeBackend, Problem, RunConfig,
+};
+use hemingway::runtime::{default_artifact_dir, Engine};
+use hemingway::util::rng::{Lcg32, Pcg32};
+use hemingway::util::stats;
+
+struct Bench {
+    filter: String,
+    results: Vec<(String, f64, f64, f64, u64)>,
+}
+
+impl Bench {
+    fn new() -> Bench {
+        // `cargo bench -- foo` passes "foo" through.
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'))
+            .unwrap_or_default();
+        Bench {
+            filter,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` with automatic iteration count targeting ~0.8 s.
+    fn bench(&mut self, name: &str, mut f: impl FnMut()) {
+        if !self.filter.is_empty() && !name.contains(&self.filter) {
+            return;
+        }
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((0.8 / once) as u64).clamp(3, 2000);
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let mean = stats::mean(&samples);
+        let p50 = stats::median(&samples);
+        let p95 = stats::percentile(&samples, 95.0);
+        println!(
+            "{name:<52} mean {:>12} p50 {:>12} p95 {:>12} (n={iters})",
+            fmt_t(mean),
+            fmt_t(p50),
+            fmt_t(p95)
+        );
+        self.results.push((name.to_string(), mean, p50, p95, iters));
+    }
+}
+
+fn fmt_t(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+fn main() -> hemingway::Result<()> {
+    let mut b = Bench::new();
+    println!("== hemingway bench harness (filter: '{}') ==\n", b.filter);
+
+    let engine = Engine::new(&default_artifact_dir())?;
+    engine.warmup()?;
+    println!("engine warmed up ({} executables)\n", engine.manifest().artifacts.len());
+
+    // ---------------- kernels: HLO vs native per-call ----------------
+    let mut rng = Pcg32::seeded(1);
+    for &n_loc in &[64usize, 512, 4096] {
+        let d = 128;
+        let x: Vec<f32> = (0..n_loc * d).map(|_| rng.normal() as f32 * 0.3).collect();
+        let y: Vec<f32> = (0..n_loc)
+            .map(|_| if rng.uniform() < 0.5 { 1.0 } else { -1.0 })
+            .collect();
+        let mask = vec![1.0f32; n_loc];
+        let alpha = vec![0.0f32; n_loc];
+        let w = vec![0.01f32; d];
+        let seed = Lcg32::for_epoch(1, 0, 0).state;
+        let lambda_n = 0.01 * n_loc as f32;
+
+        b.bench(&format!("kernels/cocoa_local/hlo/n{n_loc}"), || {
+            engine
+                .cocoa_local(&x, &y, &mask, &alpha, &w, lambda_n, 1.0, seed)
+                .unwrap();
+        });
+        b.bench(&format!("kernels/cocoa_local/native/n{n_loc}"), || {
+            hemingway::optim::native::sdca_epoch(
+                &x, &y, &mask, &alpha, &w, lambda_n as f64, 1.0, seed, n_loc,
+            );
+        });
+        b.bench(&format!("kernels/grad/hlo/n{n_loc}"), || {
+            engine.grad(&x, &y, &mask, &w).unwrap();
+        });
+        b.bench(&format!("kernels/grad/native/n{n_loc}"), || {
+            hemingway::optim::native::hinge_stats(&x, &y, &mask, &w);
+        });
+        b.bench(&format!("kernels/local_sgd/hlo/n{n_loc}"), || {
+            engine.local_sgd(&x, &y, &mask, &w, 0.01, 10.0, seed).unwrap();
+        });
+
+        // Buffer-cached path (§Perf optimization A): partition tensors
+        // device-resident, only alpha/w/scalars travel per call.
+        let ds = hemingway::data::Dataset::new(x.clone(), y.clone(), n_loc, d);
+        let part = ds.partition(1).remove(0);
+        b.bench(&format!("kernels/cocoa_local/hlo-cached/n{n_loc}"), || {
+            engine
+                .cocoa_local_part(&part, &alpha, &w, lambda_n, 1.0, seed)
+                .unwrap();
+        });
+        b.bench(&format!("kernels/grad/hlo-cached/n{n_loc}"), || {
+            engine.grad_part(&part, &part.mask, &w).unwrap();
+        });
+    }
+    println!();
+
+    // ---------------- end-to-end BSP iteration (Fig 1a) ----------------
+    let cfg = ExperimentConfig::default();
+    let data = mnist_like(&cfg.synth());
+    let problem = Problem::new(data, cfg.lambda);
+    let hlo: Box<dyn Backend> = Box::new(HloBackend::new(&engine));
+    let native: Box<dyn Backend> = Box::new(NativeBackend);
+    for &m in &[1usize, 16, 128] {
+        for (bname, backend) in [("hlo", &hlo), ("native", &native)] {
+            let mut algo = by_name("cocoa+", &problem, m, 1).unwrap();
+            let mut i = 0usize;
+            b.bench(&format!("iteration/cocoa+/{bname}/m{m}"), || {
+                algo.step(backend.as_ref(), i).unwrap();
+                i += 1;
+            });
+        }
+    }
+    // Objective evaluation (runs once per iteration in the driver).
+    {
+        let w = vec![0.01f32; problem.data.d];
+        b.bench("iteration/objective_eval/native", || {
+            problem.primal(&w);
+        });
+    }
+    println!();
+
+    // ---------------- model fitting ----------------
+    {
+        // NNLS on Ernest-shaped data.
+        let ms = [1usize, 2, 4, 8, 16, 32, 64, 128];
+        let a = Matrix::from_fn(ms.len() * 8, 4, |i, j| {
+            ErnestModel::features(ms[i % ms.len()], 8192.0)[j]
+        });
+        let rhs: Vec<f64> = (0..a.rows).map(|i| 0.1 + 8192.0 * 4e-5 / ms[i % ms.len()] as f64).collect();
+        b.bench("models/nnls/32x4", || {
+            nnls(&a, &rhs).unwrap();
+        });
+
+        // LassoCV on a convergence-model-sized problem.
+        let lib = FeatureLibrary::standard();
+        let mut pts = Vec::new();
+        for &m in &[1.0f64, 4.0, 16.0, 64.0] {
+            for i in 1..=120 {
+                pts.push((i as f64, m, 0.5 * (-0.7 * i as f64 / m).exp()));
+            }
+        }
+        let x = Matrix::from_fn(pts.len(), lib.len(), |i, j| lib.row(pts[i].0, pts[i].1)[j]);
+        let y: Vec<f64> = pts.iter().map(|p| p.2.ln()).collect();
+        b.bench(&format!("models/lasso_cv/{}x{}", x.rows, x.cols), || {
+            lasso_cv(&x, &y, 40, 5, 1).unwrap();
+        });
+
+        // Full convergence-model fit from real traces (m sweep of 3).
+        let small = ExperimentConfig {
+            n: 1024,
+            machines: vec![1, 4, 16],
+            max_iters: 100,
+            ..Default::default()
+        };
+        let sdata = mnist_like(&small.synth());
+        let sproblem = Problem::new(sdata, small.lambda);
+        let (p_star, _, _) = sproblem.reference_solve(1e-7, 400);
+        let mut traces = Vec::new();
+        for &m in &small.machines {
+            let mut algo = by_name("cocoa+", &sproblem, m, 1).unwrap();
+            let mut sim = BspSim::new(HardwareProfile::local48(), m as u64);
+            traces.push(
+                run(
+                    algo.as_mut(),
+                    native.as_ref(),
+                    &sproblem,
+                    &mut sim,
+                    p_star,
+                    &RunConfig {
+                        max_iters: 100,
+                        target_subopt: 1e-5,
+                        time_budget: None,
+                    },
+                )
+                .unwrap(),
+            );
+        }
+        let pts = points_from_traces(&traces);
+        b.bench(&format!("models/convergence_fit/{}pts", pts.len()), || {
+            ConvergenceModel::fit(&pts, FeatureLibrary::standard(), 1).unwrap();
+        });
+
+        // Ernest fit.
+        let obs: Vec<Observation> = (0..40)
+            .map(|i| {
+                let m = ms[i % ms.len()];
+                Observation {
+                    machines: m,
+                    size: 8192.0,
+                    time: 0.1 + 0.33 / m as f64 + 0.01 * (m as f64).ln(),
+                }
+            })
+            .collect();
+        b.bench("models/ernest_fit/40obs", || {
+            ErnestModel::fit(&obs).unwrap();
+        });
+
+        // ---------------- advisor ----------------
+        let conv = ConvergenceModel::fit(&pts, FeatureLibrary::standard(), 1).unwrap();
+        let ernest = ErnestModel::fit(&obs).unwrap();
+        let advisor = hemingway::advisor::Advisor::new(
+            vec![(
+                "cocoa+".to_string(),
+                hemingway::advisor::CombinedModel {
+                    ernest,
+                    conv,
+                    input_size: 8192.0,
+                },
+            )],
+            vec![1, 2, 4, 8, 16, 32, 64, 128],
+        );
+        b.bench("advisor/fastest_to_1e-3", || {
+            advisor.fastest_to(1e-3);
+        });
+        b.bench("advisor/best_at_30s", || {
+            advisor.best_at(30.0);
+        });
+    }
+
+    // ---------------- summary ----------------
+    println!("\n== HLO-vs-native ratios (runtime dispatch overhead) ==");
+    let find = |name: &str| {
+        b.results
+            .iter()
+            .find(|(n, ..)| n == name)
+            .map(|(_, mean, ..)| *mean)
+    };
+    for n_loc in [64usize, 512, 4096] {
+        if let (Some(h), Some(nv)) = (
+            find(&format!("kernels/cocoa_local/hlo/n{n_loc}")),
+            find(&format!("kernels/cocoa_local/native/n{n_loc}")),
+        ) {
+            println!("  cocoa_local n{n_loc}: hlo/native = {:.2}×", h / nv);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,219 @@
+//! The idealized Hemingway loop of Fig 2, specialized to the paper's
+//! §6 "Adaptive algorithms" scenario: per time frame, refit the models
+//! (Θ = Ernest from observed iteration times, Λ = Hemingway from
+//! observed losses) and pick the degree of parallelism for the next
+//! frame; CoCoA's per-row dual state makes mid-run repartitioning
+//! exact ([`crate::optim::Cocoa::repartition`]).
+
+use crate::cluster::BspSim;
+use crate::ernest::{ErnestModel, Observation};
+use crate::hemingway_model::{ConvPoint, ConvergenceModel, FeatureLibrary};
+use crate::optim::{Algorithm, Backend, Cocoa, CocoaVariant, Problem};
+
+/// Log of one adaptive time frame.
+#[derive(Debug, Clone)]
+pub struct FrameLog {
+    pub frame: usize,
+    pub machines: usize,
+    pub iterations: usize,
+    pub start_subopt: f64,
+    pub end_subopt: f64,
+    pub sim_time_end: f64,
+    /// Whether the frame's m came from the models (vs the bootstrap
+    /// default while data was still insufficient).
+    pub model_driven: bool,
+}
+
+/// Result of an adaptive run.
+#[derive(Debug, Clone)]
+pub struct AdaptiveRun {
+    pub frames: Vec<FrameLog>,
+    pub final_subopt: f64,
+    pub total_time: f64,
+}
+
+/// Configuration of the adaptive loop.
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    pub frame_seconds: f64,
+    pub max_frames: usize,
+    pub machine_grid: Vec<usize>,
+    pub target_subopt: f64,
+    pub bootstrap_machines: usize,
+    pub seed: u32,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            frame_seconds: 5.0,
+            max_frames: 12,
+            machine_grid: vec![1, 2, 4, 8, 16, 32, 64, 128],
+            target_subopt: 1e-4,
+            bootstrap_machines: 16,
+            seed: 1,
+        }
+    }
+}
+
+/// Run the adaptive CoCoA+ loop on a simulated cluster.
+pub fn adaptive_cocoa_plus(
+    problem: &Problem,
+    backend: &dyn Backend,
+    sim: &mut BspSim,
+    p_star: f64,
+    cfg: &AdaptiveConfig,
+) -> crate::Result<AdaptiveRun> {
+    let mut algo = Cocoa::new(problem, cfg.bootstrap_machines, CocoaVariant::Adding, cfg.seed);
+    let mut frames = Vec::new();
+    // Observations accumulated across frames.
+    let mut time_obs: Vec<Observation> = Vec::new();
+    let mut conv_pts: Vec<ConvPoint> = Vec::new();
+    let mut global_iter = 0usize;
+    let mut subopt = problem.primal(algo.weights()) - p_star;
+    let size = problem.data.n as f64;
+
+    for frame in 0..cfg.max_frames {
+        // ---- Plan: pick m for this frame from the current models ----
+        let mut model_driven = false;
+        if frame > 0 && time_obs.len() >= 4 && conv_pts.len() >= 12 {
+            if let (Ok(ernest), Ok(conv)) = (
+                ErnestModel::fit(&time_obs),
+                ConvergenceModel::fit(&conv_pts, FeatureLibrary::standard(), cfg.seed as u64),
+            ) {
+                // Pick the m minimizing the predicted suboptimality at
+                // the end of the next frame, using the model's *decay
+                // ratio* from the current iteration (robust to the
+                // model's absolute offset).
+                let mut best = (algo.machines(), f64::INFINITY);
+                for &m in &cfg.machine_grid {
+                    let f_m = ernest.predict(m, size).max(1e-6);
+                    let iters = (cfg.frame_seconds / f_m).floor();
+                    if iters < 1.0 {
+                        continue;
+                    }
+                    let i0 = (global_iter as f64).max(1.0);
+                    let ratio = conv.predict_ln(i0 + iters, m as f64)
+                        - conv.predict_ln(i0, m as f64);
+                    let predicted_end = subopt * ratio.exp();
+                    if predicted_end < best.1 {
+                        best = (m, predicted_end);
+                    }
+                }
+                if best.1.is_finite() {
+                    algo.repartition(problem, best.0);
+                    model_driven = true;
+                }
+            }
+        }
+
+        // ---- Execute the frame ----
+        let m = algo.machines();
+        let start_subopt = subopt;
+        let frame_start = sim.elapsed;
+        let mut iterations = 0usize;
+        while sim.elapsed - frame_start < cfg.frame_seconds {
+            let cost = algo.step(backend, global_iter)?;
+            let dt = sim.iteration_time(&cost);
+            global_iter += 1;
+            iterations += 1;
+            let primal = problem.primal(algo.weights());
+            subopt = primal - p_star;
+            time_obs.push(Observation {
+                machines: m,
+                size,
+                time: dt,
+            });
+            if subopt > 0.0 && subopt.is_finite() {
+                conv_pts.push(ConvPoint {
+                    iter: global_iter as f64,
+                    machines: m as f64,
+                    subopt,
+                });
+            }
+            if subopt <= cfg.target_subopt {
+                break;
+            }
+        }
+
+        frames.push(FrameLog {
+            frame,
+            machines: m,
+            iterations,
+            start_subopt,
+            end_subopt: subopt,
+            sim_time_end: sim.elapsed,
+            model_driven,
+        });
+        if subopt <= cfg.target_subopt {
+            break;
+        }
+    }
+
+    Ok(AdaptiveRun {
+        final_subopt: subopt,
+        total_time: sim.elapsed,
+        frames,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::HardwareProfile;
+    use crate::data::synth::two_gaussians;
+    use crate::optim::NativeBackend;
+
+    #[test]
+    fn adaptive_loop_runs_and_improves() {
+        let p = Problem::new(two_gaussians(1024, 16, 2.0, 5), 1e-3);
+        let (p_star, _, _) = p.reference_solve(1e-7, 400);
+        let mut sim = BspSim::new(HardwareProfile::local48(), 3);
+        let cfg = AdaptiveConfig {
+            frame_seconds: 2.0,
+            max_frames: 6,
+            machine_grid: vec![1, 2, 4, 8, 16, 32],
+            target_subopt: 1e-5,
+            bootstrap_machines: 8,
+            seed: 1,
+        };
+        let run = adaptive_cocoa_plus(&p, &NativeBackend, &mut sim, p_star, &cfg).unwrap();
+        assert!(!run.frames.is_empty());
+        assert!(run.frames[0].machines == 8);
+        // Suboptimality decreases frame over frame.
+        for w in run.frames.windows(2) {
+            assert!(
+                w[1].end_subopt <= w[0].end_subopt * 1.5 + 1e-12,
+                "frame {} regressed: {} -> {}",
+                w[1].frame,
+                w[0].end_subopt,
+                w[1].end_subopt
+            );
+        }
+        assert!(run.final_subopt < run.frames[0].start_subopt);
+        // Later frames are model-driven.
+        assert!(run.frames.iter().skip(1).any(|f| f.model_driven));
+    }
+
+    #[test]
+    fn repartition_preserves_state() {
+        let p = Problem::new(two_gaussians(256, 8, 2.0, 9), 1e-2);
+        let backend = NativeBackend;
+        let mut algo = Cocoa::new(&p, 4, CocoaVariant::Adding, 2);
+        for i in 0..5 {
+            algo.step(&backend, i).unwrap();
+        }
+        let before_primal = p.primal(algo.weights());
+        let before_dual_sum = algo.dual_sum().unwrap();
+        algo.repartition(&p, 16);
+        assert_eq!(algo.machines(), 16);
+        // Objective state unchanged by repartitioning.
+        assert!((p.primal(algo.weights()) - before_primal).abs() < 1e-12);
+        assert!((algo.dual_sum().unwrap() - before_dual_sum).abs() < 1e-5);
+        // And it keeps optimizing.
+        for i in 5..10 {
+            algo.step(&backend, i).unwrap();
+        }
+        assert!(p.primal(algo.weights()) <= before_primal + 1e-6);
+    }
+}

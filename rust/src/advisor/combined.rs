@@ -1,0 +1,120 @@
+//! The combined model `h(t, m) = g(t / f(m), m)` (paper §3.2): compose
+//! the Ernest system model with the Hemingway convergence model to
+//! answer time-domain questions.
+
+use crate::ernest::ErnestModel;
+use crate::hemingway_model::ConvergenceModel;
+
+/// Ernest + Hemingway for one algorithm on one input size.
+#[derive(Debug, Clone)]
+pub struct CombinedModel {
+    pub ernest: ErnestModel,
+    pub conv: ConvergenceModel,
+    /// Input rows (the `size` fed to Ernest's features).
+    pub input_size: f64,
+}
+
+impl CombinedModel {
+    /// Predicted seconds per iteration at m machines — f(m).
+    pub fn iter_time(&self, machines: usize) -> f64 {
+        self.ernest.predict(machines, self.input_size)
+    }
+
+    /// Predicted suboptimality after wall-clock time t at m machines —
+    /// h(t, m) = g(t / f(m), m).
+    pub fn subopt_at_time(&self, t: f64, machines: usize) -> f64 {
+        let f_m = self.iter_time(machines).max(1e-9);
+        let i = (t / f_m).max(1.0);
+        self.conv.predict(i, machines as f64)
+    }
+
+    /// Predicted wall-clock time to reach suboptimality `eps` at m
+    /// machines (None if the model never reaches it within `cap` iters).
+    pub fn time_to_subopt(&self, eps: f64, machines: usize, cap: usize) -> Option<f64> {
+        self.conv
+            .iters_to(eps, machines as f64, cap)
+            .map(|i| i as f64 * self.iter_time(machines))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ernest::Observation;
+    use crate::hemingway_model::{ConvPoint, ConvergenceModel, FeatureLibrary};
+
+    fn combined() -> CombinedModel {
+        // f(m) = 0.2 + 0.8/m  (compute-dominated at small m)
+        let obs: Vec<Observation> = [1usize, 2, 4, 8, 16, 32]
+            .iter()
+            .map(|&m| Observation {
+                machines: m,
+                size: 8192.0,
+                time: 0.2 + 0.8 / m as f64,
+            })
+            .collect();
+        let ernest = ErnestModel::fit(&obs).unwrap();
+        // g(i, m) = 0.5 exp(−0.8 i / m)
+        let mut pts = Vec::new();
+        for &m in &[1.0f64, 2.0, 4.0, 8.0, 16.0, 32.0] {
+            for i in 1..=80 {
+                pts.push(ConvPoint {
+                    iter: i as f64,
+                    machines: m,
+                    subopt: 0.5 * (-0.8 * i as f64 / m).exp(),
+                });
+            }
+        }
+        let conv = ConvergenceModel::fit(&pts, FeatureLibrary::standard(), 1).unwrap();
+        CombinedModel {
+            ernest,
+            conv,
+            input_size: 8192.0,
+        }
+    }
+
+    #[test]
+    fn h_composes_f_and_g() {
+        let c = combined();
+        let m = 4;
+        let f_m = c.iter_time(m);
+        assert!((f_m - 0.4).abs() < 0.02, "f(4)={f_m}");
+        // h(t, m) at t = 20 iterations' worth of time:
+        let t = 20.0 * f_m;
+        let pred = c.subopt_at_time(t, m);
+        let truth = 0.5 * (-0.8f64 * 20.0 / 4.0).exp();
+        assert!(
+            (pred.ln() - truth.ln()).abs() < 0.25,
+            "pred {pred} truth {truth}"
+        );
+    }
+
+    #[test]
+    fn time_to_subopt_tradeoff_is_visible() {
+        // More machines: faster iterations but more iterations needed —
+        // the model must expose the trade-off, with some interior m
+        // beating both extremes for this f/g pair.
+        let c = combined();
+        let eps = 1e-3;
+        let times: Vec<(usize, Option<f64>)> = [1usize, 2, 4, 8, 16, 32]
+            .iter()
+            .map(|&m| (m, c.time_to_subopt(eps, m, 100_000)))
+            .collect();
+        for (m, t) in &times {
+            assert!(t.is_some(), "m={m} never converges per model");
+        }
+        let t1 = times[0].1.unwrap();
+        let t32 = times[5].1.unwrap();
+        let best = times
+            .iter()
+            .map(|(_, t)| t.unwrap())
+            .fold(f64::INFINITY, f64::min);
+        assert!(best <= t1 && best <= t32);
+    }
+
+    #[test]
+    fn unreachable_eps_returns_none() {
+        let c = combined();
+        assert_eq!(c.time_to_subopt(1e-30, 4, 50), None);
+    }
+}

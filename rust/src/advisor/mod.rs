@@ -1,0 +1,10 @@
+//! The Hemingway advisor: combined model h(t, m) = g(t/f(m), m),
+//! configuration search, and the adaptive reconfiguration loop (Fig 2).
+
+pub mod adaptive;
+pub mod combined;
+pub mod search;
+
+pub use adaptive::{adaptive_cocoa_plus, AdaptiveConfig, AdaptiveRun, FrameLog};
+pub use combined::CombinedModel;
+pub use search::{Advisor, Recommendation};

@@ -1,0 +1,168 @@
+//! The advisor's query interface (paper §3.1): "given a relative error
+//! goal ε, choose the fastest algorithm and configuration; or given a
+//! target latency of t seconds choose an algorithm that will achieve
+//! the minimum training loss."
+
+use super::combined::CombinedModel;
+
+/// A recommendation returned by the advisor.
+#[derive(Debug, Clone)]
+pub struct Recommendation {
+    pub algorithm: String,
+    pub machines: usize,
+    /// Predicted seconds (fastest-to-ε query) or predicted
+    /// suboptimality (best-loss-at-t query).
+    pub predicted: f64,
+}
+
+/// Per-algorithm combined models plus the machine grid to search.
+pub struct Advisor {
+    pub models: Vec<(String, CombinedModel)>,
+    pub machine_grid: Vec<usize>,
+    /// Iteration cap when inverting g.
+    pub iter_cap: usize,
+}
+
+impl Advisor {
+    pub fn new(models: Vec<(String, CombinedModel)>, machine_grid: Vec<usize>) -> Advisor {
+        Advisor {
+            models,
+            machine_grid,
+            iter_cap: 100_000,
+        }
+    }
+
+    /// Fastest (algorithm, m) predicted to reach suboptimality ε.
+    pub fn fastest_to(&self, eps: f64) -> Option<Recommendation> {
+        let mut best: Option<Recommendation> = None;
+        for (name, model) in &self.models {
+            for &m in &self.machine_grid {
+                if let Some(t) = model.time_to_subopt(eps, m, self.iter_cap) {
+                    if best.as_ref().map(|b| t < b.predicted).unwrap_or(true) {
+                        best = Some(Recommendation {
+                            algorithm: name.clone(),
+                            machines: m,
+                            predicted: t,
+                        });
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// (algorithm, m) predicted to reach the lowest suboptimality
+    /// within a time budget of `t` seconds.
+    pub fn best_at(&self, t: f64) -> Option<Recommendation> {
+        let mut best: Option<Recommendation> = None;
+        for (name, model) in &self.models {
+            for &m in &self.machine_grid {
+                let s = model.subopt_at_time(t, m);
+                if s.is_finite() && best.as_ref().map(|b| s < b.predicted).unwrap_or(true) {
+                    best = Some(Recommendation {
+                        algorithm: name.clone(),
+                        machines: m,
+                        predicted: s,
+                    });
+                }
+            }
+        }
+        best
+    }
+
+    /// Full prediction table (one row per algorithm × m) for reports.
+    pub fn table(&self, eps: f64, t_budget: f64) -> Vec<(String, usize, Option<f64>, f64)> {
+        let mut rows = Vec::new();
+        for (name, model) in &self.models {
+            for &m in &self.machine_grid {
+                rows.push((
+                    name.clone(),
+                    m,
+                    model.time_to_subopt(eps, m, self.iter_cap),
+                    model.subopt_at_time(t_budget, m),
+                ));
+            }
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ernest::{ErnestModel, Observation};
+    use crate::hemingway_model::{ConvPoint, ConvergenceModel, FeatureLibrary};
+
+    /// Build a combined model with decay rate c0 (per i/m) and
+    /// iteration time 0.1 + 0.4/m.
+    fn model(c0: f64) -> CombinedModel {
+        let obs: Vec<Observation> = [1usize, 2, 4, 8, 16]
+            .iter()
+            .map(|&m| Observation {
+                machines: m,
+                size: 1000.0,
+                time: 0.1 + 0.4 / m as f64,
+            })
+            .collect();
+        let mut pts = Vec::new();
+        for &m in &[1.0f64, 2.0, 4.0, 8.0, 16.0] {
+            for i in 1..=60 {
+                pts.push(ConvPoint {
+                    iter: i as f64,
+                    machines: m,
+                    subopt: 0.5 * (-c0 * i as f64 / m).exp(),
+                });
+            }
+        }
+        CombinedModel {
+            ernest: ErnestModel::fit(&obs).unwrap(),
+            conv: ConvergenceModel::fit(&pts, FeatureLibrary::standard(), 1).unwrap(),
+            input_size: 1000.0,
+        }
+    }
+
+    fn advisor() -> Advisor {
+        Advisor::new(
+            vec![
+                ("fast-conv".into(), model(1.2)), // converges faster
+                ("slow-conv".into(), model(0.3)),
+            ],
+            vec![1, 2, 4, 8, 16],
+        )
+    }
+
+    #[test]
+    fn fastest_to_picks_faster_algorithm() {
+        let a = advisor();
+        let rec = a.fastest_to(1e-3).unwrap();
+        assert_eq!(rec.algorithm, "fast-conv");
+        assert!(rec.predicted > 0.0);
+        assert!(a.machine_grid.contains(&rec.machines));
+    }
+
+    #[test]
+    fn best_at_budget_consistent_with_fastest() {
+        let a = advisor();
+        let rec_t = a.fastest_to(1e-3).unwrap();
+        // With exactly that budget, predicted best loss should be ≤ ε.
+        let rec_l = a.best_at(rec_t.predicted).unwrap();
+        assert!(rec_l.predicted <= 1.1e-3, "{}", rec_l.predicted);
+    }
+
+    #[test]
+    fn impossible_goal_returns_none() {
+        let a = Advisor {
+            iter_cap: 10,
+            ..advisor()
+        };
+        assert!(a.fastest_to(1e-30).is_none());
+    }
+
+    #[test]
+    fn table_is_complete() {
+        let a = advisor();
+        let t = a.table(1e-3, 5.0);
+        assert_eq!(t.len(), 2 * 5);
+        assert!(t.iter().all(|(_, _, _, s)| s.is_finite()));
+    }
+}

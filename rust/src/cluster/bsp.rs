@@ -1,0 +1,175 @@
+//! The BSP iteration-time simulator — the stand-in for the paper's
+//! Spark/YARN testbed.
+//!
+//! One iteration of a data-parallel BSP algorithm is priced as
+//!
+//! ```text
+//! t = θ_fixed                       (driver bookkeeping)
+//!   + sched · m                     (serial task dispatch)
+//!   + broadcast(m, model bytes)     (tree, log m rounds)
+//!   + max_k compute_k               (barrier: slowest machine)
+//!   + reduce(m, update bytes)       (tree, log m rounds)
+//! ```
+//!
+//! with per-machine lognormal noise and occasional stragglers on the
+//! compute term. The Ernest model never sees these mechanisms — it has
+//! to *rediscover* the structure from observed times, exactly as it
+//! does against real clusters (Tbl E1 checks the fit error).
+
+use super::network::{broadcast_time, reduce_time};
+use super::profile::HardwareProfile;
+use crate::optim::driver::IterationTimer;
+use crate::optim::IterationCost;
+use crate::util::rng::Pcg32;
+
+/// Simulated BSP cluster clock.
+pub struct BspSim {
+    pub profile: HardwareProfile,
+    rng: Pcg32,
+    /// Accumulated simulated time (seconds).
+    pub elapsed: f64,
+    /// Per-iteration history (for Fig 1(a) percentile bars).
+    pub history: Vec<f64>,
+}
+
+impl BspSim {
+    pub fn new(profile: HardwareProfile, seed: u64) -> BspSim {
+        BspSim {
+            rng: Pcg32::new(seed, 0xC1u64 + profile.name.len() as u64),
+            profile,
+            elapsed: 0.0,
+            history: Vec::new(),
+        }
+    }
+
+    /// Price one iteration (and advance the simulated clock).
+    pub fn iteration_time(&mut self, cost: &IterationCost) -> f64 {
+        let p = &self.profile;
+        let m = cost.machines;
+
+        // Barrier: slowest machine's compute.
+        let base = cost.flops_per_machine / p.flops_per_sec;
+        let mut slowest = 0.0f64;
+        for _ in 0..m {
+            let mut t = if p.noise_sigma > 0.0 {
+                base * self.rng.lognormal(0.0, p.noise_sigma)
+            } else {
+                base
+            };
+            if p.straggler_prob > 0.0 && self.rng.uniform() < p.straggler_prob {
+                t *= p.straggler_factor;
+            }
+            slowest = slowest.max(t);
+        }
+
+        let t = p.iteration_overhead
+            + p.sched_per_machine * m as f64
+            + broadcast_time(p, m, cost.broadcast_bytes)
+            + slowest
+            + reduce_time(p, m, cost.reduce_bytes);
+        self.elapsed += t;
+        self.history.push(t);
+        t
+    }
+}
+
+impl IterationTimer for BspSim {
+    fn price(&mut self, cost: &IterationCost) -> f64 {
+        self.iteration_time(cost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn cocoa_cost(m: usize) -> IterationCost {
+        // Default workload: n=8192, d=128, h = n_loc.
+        let n_loc = 8192usize.div_ceil(m) as f64;
+        IterationCost {
+            machines: m,
+            flops_per_machine: n_loc * 8.0 * 128.0,
+            broadcast_bytes: 4.0 * 128.0,
+            reduce_bytes: 4.0 * 128.0,
+        }
+    }
+
+    #[test]
+    fn deterministic_profile_is_deterministic() {
+        let mut a = BspSim::new(HardwareProfile::ideal(), 1);
+        let mut b = BspSim::new(HardwareProfile::ideal(), 2);
+        assert_eq!(a.iteration_time(&cocoa_cost(8)), b.iteration_time(&cocoa_cost(8)));
+    }
+
+    #[test]
+    fn fig1a_shape_u_curve() {
+        // The paper's headline system observation: time/iter improves
+        // up to ~32 executors, then degrades.
+        let mut means = Vec::new();
+        for &m in &[1usize, 2, 4, 8, 16, 32, 64, 128] {
+            let mut sim = BspSim::new(HardwareProfile::local48(), 42);
+            let ts: Vec<f64> = (0..50).map(|_| sim.iteration_time(&cocoa_cost(m))).collect();
+            means.push(stats::mean(&ts));
+        }
+        // Monotone decrease from m=1 to m=8.
+        assert!(means[0] > means[1] && means[1] > means[2] && means[2] > means[3]);
+        // The minimum is somewhere in 16–64 and not at the extremes.
+        let min_idx = means
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(
+            (3..=6).contains(&min_idx),
+            "minimum at index {min_idx}: {means:?}"
+        );
+        // And m=128 is worse than the minimum.
+        assert!(means[7] > means[min_idx] * 1.05, "{means:?}");
+    }
+
+    #[test]
+    fn scaling_is_sublinear() {
+        // "doubling the number of cores does not result in halving the
+        // time per iteration" — Fig 1(a) discussion.
+        let mut sim = BspSim::new(HardwareProfile::local48(), 7);
+        let t1: f64 = (0..30).map(|_| sim.iteration_time(&cocoa_cost(1))).sum();
+        let mut sim2 = BspSim::new(HardwareProfile::local48(), 7);
+        let t2: f64 = (0..30).map(|_| sim2.iteration_time(&cocoa_cost(2))).sum();
+        assert!(t2 > t1 / 2.0, "speedup should be sublinear");
+        assert!(t2 < t1, "2 machines should still beat 1");
+    }
+
+    #[test]
+    fn clock_and_history_accumulate() {
+        let mut sim = BspSim::new(HardwareProfile::local48(), 3);
+        for _ in 0..10 {
+            sim.iteration_time(&cocoa_cost(4));
+        }
+        assert_eq!(sim.history.len(), 10);
+        let sum: f64 = sim.history.iter().sum();
+        assert!((sim.elapsed - sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noise_creates_percentile_spread() {
+        let mut sim = BspSim::new(HardwareProfile::local48(), 11);
+        let ts: Vec<f64> = (0..200).map(|_| sim.iteration_time(&cocoa_cost(16))).collect();
+        let p5 = stats::percentile(&ts, 5.0);
+        let p95 = stats::percentile(&ts, 95.0);
+        assert!(p95 > p5 * 1.02, "expected spread, got p5={p5} p95={p95}");
+    }
+
+    #[test]
+    fn straggler_tail_grows_with_m() {
+        // More machines ⇒ higher chance one straggles ⇒ heavier tail
+        // relative to the base compute time.
+        let rel_tail = |m: usize| {
+            let mut sim = BspSim::new(HardwareProfile::local48(), 13);
+            let ts: Vec<f64> = (0..300).map(|_| sim.iteration_time(&cocoa_cost(m))).collect();
+            stats::percentile(&ts, 99.0) / stats::median(&ts)
+        };
+        assert!(rel_tail(64) > 1.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! BSP cluster simulator — the substrate replacing the paper's
+//! Spark-on-YARN testbed (see DESIGN.md §2 substitution table).
+
+pub mod bsp;
+pub mod network;
+pub mod profile;
+
+pub use bsp::BspSim;
+pub use network::{broadcast_time, reduce_time, shuffle_time, tree_rounds};
+pub use profile::HardwareProfile;

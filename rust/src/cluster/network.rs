@@ -1,0 +1,82 @@
+//! Collective-communication cost models.
+//!
+//! The BSP iteration of every algorithm here is: broadcast the model
+//! (driver → machines), compute locally, tree-reduce the updates
+//! (machines → driver). Costs follow the standard LogP-style models
+//! Ernest's feature set was derived from: a tree collective over m
+//! machines takes ⌈log₂(m+1)⌉ rounds, each paying latency + payload.
+
+use super::profile::HardwareProfile;
+
+/// Rounds in a binomial tree over `m` participants plus the driver.
+pub fn tree_rounds(m: usize) -> usize {
+    // m = 1 is a single link (one round).
+    (usize::BITS - m.leading_zeros()) as usize
+}
+
+/// Broadcast `bytes` from the driver to `m` machines.
+pub fn broadcast_time(p: &HardwareProfile, m: usize, bytes: f64) -> f64 {
+    if m == 0 || bytes <= 0.0 {
+        return 0.0;
+    }
+    tree_rounds(m) as f64 * (p.net_latency + bytes / p.net_bandwidth)
+}
+
+/// Tree-reduce `bytes`-sized contributions from `m` machines.
+/// Payload stays constant up the tree (elementwise reduction).
+pub fn reduce_time(p: &HardwareProfile, m: usize, bytes: f64) -> f64 {
+    if m == 0 || bytes <= 0.0 {
+        return 0.0;
+    }
+    tree_rounds(m) as f64 * (p.net_latency + bytes / p.net_bandwidth)
+}
+
+/// All-to-all shuffle of `bytes` per machine (used by repartitioning
+/// in the adaptive loop; not on the per-iteration path).
+pub fn shuffle_time(p: &HardwareProfile, m: usize, bytes_per_machine: f64) -> f64 {
+    if m <= 1 {
+        return 0.0;
+    }
+    // Each machine exchanges (m-1)/m of its data with peers; bisection
+    // bandwidth limits to roughly m parallel transfers.
+    let cross = bytes_per_machine * (m - 1) as f64 / m as f64;
+    p.net_latency * (m - 1) as f64 / m as f64 + cross / p.net_bandwidth + p.net_latency
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_rounds_log2() {
+        assert_eq!(tree_rounds(1), 1);
+        assert_eq!(tree_rounds(2), 2);
+        assert_eq!(tree_rounds(3), 2);
+        assert_eq!(tree_rounds(4), 3);
+        assert_eq!(tree_rounds(128), 8);
+    }
+
+    #[test]
+    fn broadcast_grows_logarithmically() {
+        let p = HardwareProfile::ideal();
+        let b = |m| broadcast_time(&p, m, 4096.0);
+        assert!(b(2) < b(16));
+        assert!(b(16) < b(128));
+        // log growth: doubling machines adds at most one round.
+        assert!((b(128) - b(64)) <= (p.net_latency + 4096.0 / p.net_bandwidth) + 1e-12);
+    }
+
+    #[test]
+    fn zero_cases() {
+        let p = HardwareProfile::ideal();
+        assert_eq!(broadcast_time(&p, 0, 100.0), 0.0);
+        assert_eq!(reduce_time(&p, 4, 0.0), 0.0);
+        assert_eq!(shuffle_time(&p, 1, 1e6), 0.0);
+    }
+
+    #[test]
+    fn shuffle_scales_with_payload() {
+        let p = HardwareProfile::ideal();
+        assert!(shuffle_time(&p, 8, 1e6) < shuffle_time(&p, 8, 1e7));
+    }
+}

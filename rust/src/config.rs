@@ -1,0 +1,166 @@
+//! Experiment configuration (JSON files in `configs/`), the knobs the
+//! CLI, repro harness and examples share.
+
+use std::path::Path;
+
+use crate::data::synth::SynthConfig;
+use crate::util::json::{read_json_file, Json};
+
+/// One experiment: dataset, problem, sweep, cluster, stopping rules.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Dataset rows / features.
+    pub n: usize,
+    pub d: usize,
+    /// SVM regularization.
+    pub lambda: f64,
+    /// Machine counts in the sweep.
+    pub machines: Vec<usize>,
+    /// Algorithms to run.
+    pub algorithms: Vec<String>,
+    /// Cluster hardware profile name.
+    pub profile: String,
+    /// Stopping rules (paper: 1e-4 or 500 iterations).
+    pub max_iters: usize,
+    pub target_subopt: f64,
+    /// Master seed.
+    pub seed: u64,
+    /// Synthetic-data generation knobs.
+    pub data_noise: f64,
+    pub data_density: f64,
+    /// Output directory for CSVs/plots.
+    pub out_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            n: 8192,
+            d: 128,
+            lambda: 1e-6,
+            machines: vec![1, 2, 4, 8, 16, 32, 64, 128],
+            algorithms: vec!["cocoa+".into()],
+            profile: "local48".into(),
+            max_iters: 500,
+            target_subopt: 1e-4,
+            seed: 20170211,
+            data_noise: 0.35,
+            data_density: 0.25,
+            out_dir: "out".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a JSON file; missing fields fall back to defaults.
+    pub fn load(path: &Path) -> crate::Result<ExperimentConfig> {
+        let doc = read_json_file(path)?;
+        Ok(Self::from_json(&doc))
+    }
+
+    /// Build from a parsed JSON object (missing fields → defaults).
+    pub fn from_json(doc: &Json) -> ExperimentConfig {
+        let dft = ExperimentConfig::default();
+        let machines = doc
+            .get("machines")
+            .and_then(Json::as_array)
+            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or(dft.machines.clone());
+        let algorithms = doc
+            .get("algorithms")
+            .and_then(Json::as_array)
+            .map(|a| {
+                a.iter()
+                    .filter_map(Json::as_str)
+                    .map(str::to_string)
+                    .collect()
+            })
+            .unwrap_or(dft.algorithms.clone());
+        ExperimentConfig {
+            n: doc.opt_usize("n", dft.n),
+            d: doc.opt_usize("d", dft.d),
+            lambda: doc.opt_f64("lambda", dft.lambda),
+            machines,
+            algorithms,
+            profile: doc.opt_str("profile", &dft.profile).to_string(),
+            max_iters: doc.opt_usize("max_iters", dft.max_iters),
+            target_subopt: doc.opt_f64("target_subopt", dft.target_subopt),
+            seed: doc.opt_f64("seed", dft.seed as f64) as u64,
+            data_noise: doc.opt_f64("data_noise", dft.data_noise),
+            data_density: doc.opt_f64("data_density", dft.data_density),
+            out_dir: doc.opt_str("out_dir", &dft.out_dir).to_string(),
+        }
+    }
+
+    /// The synthetic-dataset spec this config implies.
+    pub fn synth(&self) -> SynthConfig {
+        SynthConfig {
+            n: self.n,
+            d: self.d,
+            noise: self.data_noise,
+            density: self.data_density,
+            seed: self.seed,
+            ..SynthConfig::default()
+        }
+    }
+
+    /// Serialize (for writing the default config file).
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("n", Json::num(self.n as f64)),
+            ("d", Json::num(self.d as f64)),
+            ("lambda", Json::num(self.lambda)),
+            (
+                "machines",
+                Json::array(self.machines.iter().map(|&m| Json::num(m as f64))),
+            ),
+            (
+                "algorithms",
+                Json::array(self.algorithms.iter().map(|a| Json::str(a.clone()))),
+            ),
+            ("profile", Json::str(self.profile.clone())),
+            ("max_iters", Json::num(self.max_iters as f64)),
+            ("target_subopt", Json::num(self.target_subopt)),
+            ("seed", Json::num(self.seed as f64)),
+            ("data_noise", Json::num(self.data_noise)),
+            ("data_density", Json::num(self.data_density)),
+            ("out_dir", Json::str(self.out_dir.clone())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_protocol() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.max_iters, 500);
+        assert_eq!(c.target_subopt, 1e-4);
+        assert_eq!(c.machines, vec![1, 2, 4, 8, 16, 32, 64, 128]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ExperimentConfig {
+            n: 1024,
+            algorithms: vec!["cocoa".into(), "gd".into()],
+            ..Default::default()
+        };
+        let back = ExperimentConfig::from_json(&c.to_json());
+        assert_eq!(back.n, 1024);
+        assert_eq!(back.algorithms, vec!["cocoa", "gd"]);
+        assert_eq!(back.machines, c.machines);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let doc = Json::parse(r#"{"n": 256, "profile": "ideal"}"#).unwrap();
+        let c = ExperimentConfig::from_json(&doc);
+        assert_eq!(c.n, 256);
+        assert_eq!(c.profile, "ideal");
+        assert_eq!(c.d, 128);
+        assert_eq!(c.max_iters, 500);
+    }
+}

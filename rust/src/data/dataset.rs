@@ -1,0 +1,211 @@
+//! In-memory dataset + row partitioning across simulated machines.
+
+use crate::util::rng::Pcg32;
+
+/// A dense binary-classification dataset (row-major f32, y ∈ {−1,+1}).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f32>, y: Vec<f32>, n: usize, d: usize) -> Dataset {
+        assert_eq!(x.len(), n * d, "x length mismatch");
+        assert_eq!(y.len(), n, "y length mismatch");
+        Dataset { x, y, n, d }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Fraction of rows with positive labels.
+    pub fn positive_rate(&self) -> f64 {
+        self.y.iter().filter(|&&v| v > 0.0).count() as f64 / self.n as f64
+    }
+
+    /// A uniformly subsampled dataset of `k` rows (used by the
+    /// training-resources study: fit the convergence model on a data
+    /// subsample, per paper §6 "Training resources").
+    pub fn subsample(&self, k: usize, seed: u64) -> Dataset {
+        assert!(k <= self.n);
+        let mut rng = Pcg32::new(seed, 404);
+        let idx = rng.sample_indices(self.n, k);
+        let mut x = Vec::with_capacity(k * self.d);
+        let mut y = Vec::with_capacity(k);
+        for &i in &idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        Dataset::new(x, y, k, self.d)
+    }
+
+    /// Shuffle rows (BSP partitioning assumes random row placement, as
+    /// Spark's `repartition` gives the paper's setup).
+    pub fn shuffled(&self, seed: u64) -> Dataset {
+        let mut rng = Pcg32::new(seed, 505);
+        let perm = rng.permutation(self.n);
+        let mut x = Vec::with_capacity(self.n * self.d);
+        let mut y = Vec::with_capacity(self.n);
+        for &i in &perm {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        Dataset::new(x, y, self.n, self.d)
+    }
+
+    /// Partition rows across `m` machines, padding every partition to
+    /// the common size `ceil(n/m)` (the artifact grid's shape). Padded
+    /// rows have `x = 0`, `y = 0`, `mask = 0`.
+    pub fn partition(&self, m: usize) -> Vec<Partition> {
+        assert!(m >= 1 && m <= self.n, "bad machine count {m}");
+        let n_loc = self.n.div_ceil(m);
+        let mut parts = Vec::with_capacity(m);
+        for k in 0..m {
+            let lo = (k * self.n) / m;
+            let hi = ((k + 1) * self.n) / m;
+            let rows = hi - lo;
+            let mut x = vec![0.0f32; n_loc * self.d];
+            let mut y = vec![0.0f32; n_loc];
+            let mut mask = vec![0.0f32; n_loc];
+            x[..rows * self.d].copy_from_slice(&self.x[lo * self.d..hi * self.d]);
+            y[..rows].copy_from_slice(&self.y[lo..hi]);
+            mask[..rows].fill(1.0);
+            parts.push(Partition {
+                x,
+                y,
+                mask,
+                n_loc,
+                valid: rows,
+                d: self.d,
+                index: k,
+                uid: next_partition_uid(),
+            });
+        }
+        parts
+    }
+}
+
+/// One machine's padded slice of the dataset.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub mask: Vec<f32>,
+    /// Padded row count (uniform across partitions; artifact shape).
+    pub n_loc: usize,
+    /// Number of real (unpadded) rows.
+    pub valid: usize,
+    pub d: usize,
+    /// Partition id (seeds the per-partition LCG stream).
+    pub index: usize,
+    /// Globally unique id — keys the runtime's device-buffer cache so
+    /// partition-constant tensors (x, y, mask) are uploaded to the
+    /// PJRT device exactly once per partition (§Perf).
+    pub uid: u64,
+}
+
+static PARTITION_UID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+pub(crate) fn next_partition_uid() -> u64 {
+    PARTITION_UID.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{forall, Gen};
+
+    fn tiny(n: usize, d: usize) -> Dataset {
+        let x: Vec<f32> = (0..n * d).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect();
+        Dataset::new(x, y, n, d)
+    }
+
+    #[test]
+    fn partition_covers_all_rows_exactly_once() {
+        forall(
+            "partition covers rows exactly once",
+            50,
+            |g: &mut Gen| {
+                let n = g.usize_in(1, 300);
+                let m = g.usize_in(1, n);
+                ((n, m), tiny(n, 3))
+            },
+            |&(n, m), ds| {
+                let parts = ds.partition(m);
+                if parts.len() != m {
+                    return false;
+                }
+                let n_loc = n.div_ceil(m);
+                let total_valid: usize = parts.iter().map(|p| p.valid).sum();
+                total_valid == n
+                    && parts.iter().all(|p| {
+                        p.n_loc == n_loc
+                            && p.x.len() == n_loc * 3
+                            && p.mask.iter().filter(|&&v| v == 1.0).count() == p.valid
+                    })
+            },
+        );
+    }
+
+    #[test]
+    fn partition_preserves_content() {
+        let ds = tiny(10, 2);
+        let parts = ds.partition(3);
+        // Reassemble valid rows in order and compare.
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for p in &parts {
+            x.extend_from_slice(&p.x[..p.valid * 2]);
+            y.extend_from_slice(&p.y[..p.valid]);
+        }
+        assert_eq!(x, ds.x);
+        assert_eq!(y, ds.y);
+    }
+
+    #[test]
+    fn padded_rows_are_zero() {
+        let ds = tiny(10, 2);
+        let parts = ds.partition(4); // n_loc = 3, valid ∈ {2,3}
+        for p in &parts {
+            for i in p.valid..p.n_loc {
+                assert_eq!(p.y[i], 0.0);
+                assert_eq!(p.mask[i], 0.0);
+                assert!(p.x[i * 2..(i + 1) * 2].iter().all(|&v| v == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn subsample_sizes_and_determinism() {
+        let ds = tiny(100, 4);
+        let a = ds.subsample(30, 9);
+        let b = ds.subsample(30, 9);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.n, 30);
+        assert_eq!(a.d, 4);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let ds = tiny(50, 2);
+        let s = ds.shuffled(1);
+        assert_ne!(s.x, ds.x);
+        let mut y1 = ds.y.clone();
+        let mut y2 = s.y.clone();
+        y1.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        y2.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn positive_rate() {
+        let ds = tiny(9, 1);
+        assert!((ds.positive_rate() - 3.0 / 9.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,14 @@
+//! Data substrate: synthetic dataset generation and partitioning.
+//!
+//! The paper's case study is MNIST digit-5-vs-rest with a linear SVM.
+//! MNIST itself is not available offline, so [`synth`] generates an
+//! MNIST-*like* task (10 class prototypes + noise, label = class==5);
+//! the convergence-vs-parallelism phenomenology the paper studies only
+//! needs a roughly separable multi-modal mixture, which this preserves
+//! (substitution table in DESIGN.md §2).
+
+pub mod dataset;
+pub mod synth;
+
+pub use dataset::{Dataset, Partition};
+pub use synth::{mnist_like, two_gaussians, SynthConfig};

@@ -1,0 +1,226 @@
+//! Synthetic dataset generators.
+
+use super::dataset::Dataset;
+use crate::util::rng::Pcg32;
+
+/// Configuration for the MNIST-like generator.
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    /// Number of examples.
+    pub n: usize,
+    /// Feature dimension ("pixels").
+    pub d: usize,
+    /// Number of latent classes (MNIST: 10 digits).
+    pub classes: usize,
+    /// The positive class for the binary task (paper: digit 5).
+    pub positive_class: usize,
+    /// Fraction of active "pixels" per class prototype (stroke density).
+    pub density: f64,
+    /// Additive noise standard deviation.
+    pub noise: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            n: 8192,
+            d: 128,
+            classes: 10,
+            positive_class: 5,
+            density: 0.25,
+            noise: 0.25,
+            seed: 20170211, // the paper's arXiv year/month/day-ish
+        }
+    }
+}
+
+/// MNIST-like multi-class mixture, binarized as `class == positive`.
+///
+/// Each class gets a sparse prototype in `[0,1]^d` ("stroke" pixels);
+/// samples are prototype + Gaussian pixel noise, clamped to `[0,1]`,
+/// then row-normalized to unit L2 norm (the standard preprocessing for
+/// SDCA-family solvers; gives `‖x_i‖² = 1`). Class priors are uniform,
+/// so the positive rate is `1/classes` — the same ~10% imbalance as
+/// the paper's digit-5 task.
+pub fn mnist_like(cfg: &SynthConfig) -> Dataset {
+    assert!(cfg.positive_class < cfg.classes);
+    let mut rng = Pcg32::new(cfg.seed, 101);
+
+    // Class prototypes.
+    let mut protos = vec![0.0f64; cfg.classes * cfg.d];
+    for c in 0..cfg.classes {
+        for j in 0..cfg.d {
+            if rng.uniform() < cfg.density {
+                // Active "stroke" pixel: strong intensity.
+                protos[c * cfg.d + j] = rng.uniform_in(0.55, 1.0);
+            }
+        }
+    }
+
+    let mut x = vec![0.0f32; cfg.n * cfg.d];
+    let mut y = vec![0.0f32; cfg.n];
+    for i in 0..cfg.n {
+        let c = rng.below(cfg.classes);
+        y[i] = if c == cfg.positive_class { 1.0 } else { -1.0 };
+        let row = &mut x[i * cfg.d..(i + 1) * cfg.d];
+        let proto = &protos[c * cfg.d..(c + 1) * cfg.d];
+        let mut norm_sq = 0.0f64;
+        for (xj, &pj) in row.iter_mut().zip(proto) {
+            let v = (pj + cfg.noise * rng.normal()).clamp(0.0, 1.0);
+            *xj = v as f32;
+            norm_sq += v * v;
+        }
+        // Row normalization (avoid division by ~0 for blank rows).
+        let norm = norm_sq.sqrt().max(1e-6) as f32;
+        for xj in row.iter_mut() {
+            *xj /= norm;
+        }
+    }
+    Dataset::new(x, y, cfg.n, cfg.d)
+}
+
+/// A simple two-Gaussian binary task (used by unit tests and the
+/// quickstart example where class structure doesn't matter).
+pub fn two_gaussians(n: usize, d: usize, separation: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed, 202);
+    let mut x = vec![0.0f32; n * d];
+    let mut y = vec![0.0f32; n];
+    // Random unit direction separating the classes.
+    let mut dir: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let nrm = dir.iter().map(|v| v * v).sum::<f64>().sqrt();
+    dir.iter_mut().for_each(|v| *v /= nrm);
+    for i in 0..n {
+        let label = if rng.uniform() < 0.5 { 1.0 } else { -1.0 };
+        y[i] = label as f32;
+        let row = &mut x[i * d..(i + 1) * d];
+        let mut norm_sq = 0.0f64;
+        for (j, xj) in row.iter_mut().enumerate() {
+            let v = rng.normal() + label * separation * dir[j];
+            *xj = v as f32;
+            norm_sq += v * v;
+        }
+        let norm = norm_sq.sqrt().max(1e-6) as f32;
+        row.iter_mut().for_each(|xj| *xj /= norm);
+    }
+    Dataset::new(x, y, n, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_like_shapes_and_labels() {
+        let ds = mnist_like(&SynthConfig {
+            n: 500,
+            d: 32,
+            ..Default::default()
+        });
+        assert_eq!(ds.n, 500);
+        assert_eq!(ds.d, 32);
+        assert_eq!(ds.x.len(), 500 * 32);
+        assert!(ds.y.iter().all(|&v| v == 1.0 || v == -1.0));
+        // Positive rate ≈ 1/10.
+        let pos = ds.y.iter().filter(|&&v| v == 1.0).count();
+        assert!(pos > 20 && pos < 90, "pos={pos}");
+    }
+
+    #[test]
+    fn rows_unit_normalized() {
+        let ds = mnist_like(&SynthConfig {
+            n: 50,
+            d: 64,
+            ..Default::default()
+        });
+        for i in 0..ds.n {
+            let row = ds.row(i);
+            let norm: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-4, "row {i} norm {norm}");
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let cfg = SynthConfig {
+            n: 100,
+            d: 16,
+            ..Default::default()
+        };
+        let a = mnist_like(&cfg);
+        let b = mnist_like(&cfg);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = mnist_like(&SynthConfig { seed: 7, ..cfg });
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn two_gaussians_separable_when_far() {
+        let ds = two_gaussians(400, 8, 4.0, 3);
+        // A linear classifier along the class-mean difference should do
+        // well; check the means really differ.
+        let mut mean_pos = vec![0.0f64; 8];
+        let mut mean_neg = vec![0.0f64; 8];
+        let (mut np_, mut nn) = (0.0, 0.0);
+        for i in 0..ds.n {
+            let row = ds.row(i);
+            if ds.y[i] > 0.0 {
+                np_ += 1.0;
+                for (m, &v) in mean_pos.iter_mut().zip(row) {
+                    *m += v as f64;
+                }
+            } else {
+                nn += 1.0;
+                for (m, &v) in mean_neg.iter_mut().zip(row) {
+                    *m += v as f64;
+                }
+            }
+        }
+        let diff: f64 = mean_pos
+            .iter()
+            .zip(&mean_neg)
+            .map(|(p, q)| (p / np_ - q / nn).abs())
+            .sum();
+        assert!(diff > 0.5, "class means too close: {diff}");
+    }
+
+    #[test]
+    fn classes_have_distinct_prototypes() {
+        // Two samples from different classes should be farther apart on
+        // average than two from the same class.
+        let ds = mnist_like(&SynthConfig {
+            n: 2000,
+            d: 64,
+            noise: 0.1,
+            ..Default::default()
+        });
+        // proxy: positive rows closer to each other than to negatives
+        let pos: Vec<usize> = (0..ds.n).filter(|&i| ds.y[i] > 0.0).take(20).collect();
+        let neg: Vec<usize> = (0..ds.n).filter(|&i| ds.y[i] < 0.0).take(20).collect();
+        let dist = |a: usize, b: usize| -> f64 {
+            ds.row(a)
+                .iter()
+                .zip(ds.row(b))
+                .map(|(u, v)| ((u - v) as f64).powi(2))
+                .sum()
+        };
+        let within: f64 = pos
+            .iter()
+            .zip(pos.iter().skip(1))
+            .map(|(&a, &b)| dist(a, b))
+            .sum::<f64>()
+            / (pos.len() - 1) as f64;
+        let across: f64 = pos
+            .iter()
+            .zip(neg.iter())
+            .map(|(&a, &b)| dist(a, b))
+            .sum::<f64>()
+            / pos.len() as f64;
+        assert!(
+            across > within,
+            "across={across:.4} within={within:.4}"
+        );
+    }
+}

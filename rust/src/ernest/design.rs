@@ -1,0 +1,160 @@
+//! Experiment design: pick which (machines, data-fraction) configs to
+//! profile, minimizing profiling cost while keeping the Ernest fit
+//! well-conditioned — the paper's §6 "Training time / resources"
+//! challenge, solved the way Ernest does (optimal experiment design;
+//! we use greedy D-optimal selection with a cost penalty).
+
+use crate::linalg::cholesky::logdet_spd;
+use crate::linalg::Matrix;
+
+use super::model::ErnestModel;
+
+/// A candidate profiling configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub machines: usize,
+    /// Fraction of the input data to profile on (Ernest profiles on
+    /// small samples; ≤10% in the paper's summary).
+    pub fraction: f64,
+}
+
+/// Cost proxy of profiling a candidate: machine-seconds for a few
+/// iterations, ∝ machines × (compute share) + overheads.
+pub fn profiling_cost(c: &Candidate, full_size: f64) -> f64 {
+    let compute = c.fraction * full_size / c.machines as f64;
+    c.machines as f64 * (0.5 + compute * 1e-3)
+}
+
+/// Greedy D-optimal selection: start from the cheapest config and
+/// repeatedly add the candidate with the best marginal
+/// `Δ logdet(XᵀX + εI) / cost` until `budget` configs are chosen.
+pub fn select_configs(
+    candidates: &[Candidate],
+    full_size: f64,
+    budget: usize,
+) -> Vec<Candidate> {
+    assert!(budget >= 4, "Ernest needs ≥4 observations (4 features)");
+    let budget = budget.min(candidates.len());
+    let mut chosen: Vec<usize> = Vec::new();
+    let mut remaining: Vec<usize> = (0..candidates.len()).collect();
+
+    let info = |idxs: &[usize]| -> f64 {
+        // XᵀX + εI over the chosen feature rows.
+        let x = Matrix::from_fn(idxs.len(), 4, |r, c| {
+            let cand = &candidates[idxs[r]];
+            ErnestModel::features(cand.machines, cand.fraction * full_size)[c]
+        });
+        let mut g = x.gram();
+        for i in 0..4 {
+            g[(i, i)] += 1e-9;
+        }
+        logdet_spd(&g).unwrap_or(f64::NEG_INFINITY)
+    };
+
+    while chosen.len() < budget {
+        let base = if chosen.is_empty() {
+            f64::NEG_INFINITY
+        } else {
+            info(&chosen)
+        };
+        let (pos, &best_idx) = remaining
+            .iter()
+            .enumerate()
+            .max_by(|(_, &a), (_, &b)| {
+                let score = |i: usize| {
+                    let mut trial = chosen.clone();
+                    trial.push(i);
+                    let gain = info(&trial) - if base.is_finite() { base } else { 0.0 };
+                    gain / profiling_cost(&candidates[i], full_size)
+                };
+                score(a).partial_cmp(&score(b)).unwrap()
+            })
+            .expect("no candidates left");
+        chosen.push(best_idx);
+        remaining.remove(pos);
+    }
+    chosen.into_iter().map(|i| candidates[i]).collect()
+}
+
+/// The default candidate grid Ernest-style profiling sweeps: small
+/// machine counts × small data fractions.
+pub fn default_candidates(max_machines: usize) -> Vec<Candidate> {
+    let mut v = Vec::new();
+    let mut m = 1;
+    while m <= max_machines {
+        for &f in &[0.125, 0.25, 0.5, 1.0] {
+            v.push(Candidate {
+                machines: m,
+                fraction: f,
+            });
+        }
+        m *= 2;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_budget_many_distinct_configs() {
+        let cands = default_candidates(8);
+        let sel = select_configs(&cands, 8192.0, 6);
+        assert_eq!(sel.len(), 6);
+        let mut uniq = sel.clone();
+        uniq.sort_by(|a, b| {
+            (a.machines, (a.fraction * 1000.0) as i64)
+                .cmp(&(b.machines, (b.fraction * 1000.0) as i64))
+        });
+        uniq.dedup();
+        assert_eq!(uniq.len(), 6, "duplicate configs selected");
+    }
+
+    #[test]
+    fn selection_spans_machine_counts() {
+        // D-optimality must include scale diversity, not 6× the same m.
+        let cands = default_candidates(8);
+        let sel = select_configs(&cands, 8192.0, 6);
+        let mut ms: Vec<usize> = sel.iter().map(|c| c.machines).collect();
+        ms.sort_unstable();
+        ms.dedup();
+        assert!(ms.len() >= 3, "machine diversity too low: {ms:?}");
+    }
+
+    #[test]
+    fn selected_configs_make_fit_identifiable() {
+        use crate::ernest::model::{ErnestModel, Observation};
+        let cands = default_candidates(8);
+        let sel = select_configs(&cands, 8192.0, 6);
+        let theta = [0.1, 4e-5, 0.01, 0.0005];
+        let obs: Vec<Observation> = sel
+            .iter()
+            .map(|c| {
+                let size = c.fraction * 8192.0;
+                let f = ErnestModel::features(c.machines, size);
+                Observation {
+                    machines: c.machines,
+                    size,
+                    time: f.iter().zip(&theta).map(|(x, t)| x * t).sum(),
+                }
+            })
+            .collect();
+        let model = ErnestModel::fit(&obs).unwrap();
+        // Extrapolate to a big config.
+        let f = ErnestModel::features(64, 8192.0);
+        let truth: f64 = f.iter().zip(&theta).map(|(x, t)| x * t).sum();
+        let pred = model.predict(64, 8192.0);
+        assert!(
+            ((pred - truth) / truth).abs() < 0.05,
+            "extrapolation error: pred={pred} truth={truth}"
+        );
+    }
+
+    #[test]
+    fn cost_prefers_small_configs() {
+        let small = Candidate { machines: 1, fraction: 0.125 };
+        let big = Candidate { machines: 64, fraction: 1.0 };
+        assert!(profiling_cost(&small, 8192.0) < profiling_cost(&big, 8192.0));
+    }
+}

@@ -1,0 +1,9 @@
+//! Ernest-style system model (Venkataraman et al., NSDI'16): predict
+//! the time per BSP iteration `f(m)` from a handful of cheap profiled
+//! configurations, then extrapolate to large clusters (paper §3.2.1).
+
+pub mod design;
+pub mod model;
+
+pub use design::select_configs;
+pub use model::{ErnestModel, Observation};

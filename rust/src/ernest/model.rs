@@ -1,0 +1,176 @@
+//! The Ernest model: `f(m) = θ0 + θ1·(size/m) + θ2·log m + θ3·m`,
+//! fitted with non-negative least squares (all four terms are real
+//! costs, so θ ≥ 0 — same solver choice as the Ernest paper).
+
+use crate::linalg::{nnls, Matrix};
+use crate::util::stats;
+
+/// One profiled configuration: iteration time measured at a scale.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Observation {
+    /// Machines used.
+    pub machines: usize,
+    /// Input scale (rows processed; Ernest trains on data *samples*,
+    /// so this varies during profiling).
+    pub size: f64,
+    /// Measured seconds per iteration (mean over a few iterations).
+    pub time: f64,
+}
+
+/// Fitted Ernest model.
+#[derive(Debug, Clone)]
+pub struct ErnestModel {
+    /// [θ0, θ1, θ2, θ3] for [1, size/m, log m, m].
+    pub theta: [f64; 4],
+    /// Training residual statistics (diagnostics).
+    pub train_rmse: f64,
+}
+
+impl ErnestModel {
+    /// Feature row for a configuration.
+    pub fn features(machines: usize, size: f64) -> [f64; 4] {
+        let m = machines as f64;
+        [1.0, size / m, m.ln(), m]
+    }
+
+    /// Fit from observations via NNLS.
+    pub fn fit(obs: &[Observation]) -> crate::Result<ErnestModel> {
+        anyhow::ensure!(
+            obs.len() >= 4,
+            "need at least 4 observations to fit the Ernest model, got {}",
+            obs.len()
+        );
+        let a = Matrix::from_fn(obs.len(), 4, |i, j| {
+            Self::features(obs[i].machines, obs[i].size)[j]
+        });
+        let b: Vec<f64> = obs.iter().map(|o| o.time).collect();
+        let theta_v = nnls(&a, &b)?;
+        let theta = [theta_v[0], theta_v[1], theta_v[2], theta_v[3]];
+        let pred: Vec<f64> = obs
+            .iter()
+            .map(|o| {
+                let f = Self::features(o.machines, o.size);
+                f.iter().zip(&theta).map(|(x, t)| x * t).sum()
+            })
+            .collect();
+        Ok(ErnestModel {
+            theta,
+            train_rmse: stats::rmse(&b, &pred),
+        })
+    }
+
+    /// Predicted seconds per iteration at a configuration.
+    pub fn predict(&self, machines: usize, size: f64) -> f64 {
+        Self::features(machines, size)
+            .iter()
+            .zip(&self.theta)
+            .map(|(x, t)| x * t)
+            .sum()
+    }
+
+    /// Mean absolute percentage error against held-out observations
+    /// (the metric Ernest reports; ≤12% in the paper's summary).
+    pub fn mape(&self, obs: &[Observation]) -> f64 {
+        let truth: Vec<f64> = obs.iter().map(|o| o.time).collect();
+        let pred: Vec<f64> = obs.iter().map(|o| self.predict(o.machines, o.size)).collect();
+        stats::mape(&truth, &pred)
+    }
+
+    /// The machine count minimizing predicted iteration time for a
+    /// given input size (grid argmin — f is cheap).
+    pub fn best_machines(&self, size: f64, candidates: &[usize]) -> usize {
+        *candidates
+            .iter()
+            .min_by(|&&a, &&b| {
+                self.predict(a, size)
+                    .partial_cmp(&self.predict(b, size))
+                    .unwrap()
+            })
+            .expect("empty candidate set")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_obs(theta: [f64; 4], configs: &[(usize, f64)]) -> Vec<Observation> {
+        configs
+            .iter()
+            .map(|&(m, size)| {
+                let f = ErnestModel::features(m, size);
+                Observation {
+                    machines: m,
+                    size,
+                    time: f.iter().zip(&theta).map(|(x, t)| x * t).sum(),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_noiseless_coefficients() {
+        let theta = [0.1, 4e-5, 0.01, 0.0005];
+        let configs: Vec<(usize, f64)> =
+            [1, 2, 4, 8, 16].iter().map(|&m| (m, 8192.0)).chain(
+                [2usize, 4].iter().map(|&m| (m, 4096.0)),
+            ).collect();
+        let model = ErnestModel::fit(&synth_obs(theta, &configs)).unwrap();
+        for (got, want) in model.theta.iter().zip(&theta) {
+            assert!((got - want).abs() < 1e-8, "{:?}", model.theta);
+        }
+        assert!(model.train_rmse < 1e-9);
+    }
+
+    #[test]
+    fn extrapolates_from_small_configs() {
+        let theta = [0.1, 4e-5, 0.01, 0.0005];
+        let train = synth_obs(theta, &[(1, 8192.0), (2, 8192.0), (4, 8192.0), (8, 8192.0), (2, 2048.0)]);
+        let test = synth_obs(theta, &[(32, 8192.0), (64, 8192.0), (128, 8192.0)]);
+        let model = ErnestModel::fit(&train).unwrap();
+        assert!(model.mape(&test) < 1.0, "mape {}", model.mape(&test));
+    }
+
+    #[test]
+    fn best_machines_finds_u_curve_minimum() {
+        // θ with strong compute and scheduling terms ⇒ interior optimum.
+        let theta = [0.05, 1e-4, 0.0, 0.002];
+        let model = ErnestModel { theta, train_rmse: 0.0 };
+        let cands = [1, 2, 4, 8, 16, 32, 64, 128];
+        let best = model.best_machines(8192.0, &cands);
+        // d/dm (θ1 s / m + θ3 m) = 0 → m* = sqrt(θ1 s / θ3) ≈ 20.
+        assert!(best == 16 || best == 32, "best={best}");
+    }
+
+    #[test]
+    fn rejects_underdetermined_fit() {
+        let obs = synth_obs([0.1, 1e-4, 0.0, 0.0], &[(1, 100.0), (2, 100.0)]);
+        assert!(ErnestModel::fit(&obs).is_err());
+    }
+
+    #[test]
+    fn noisy_fit_stays_close() {
+        // Ernest measures several iterations per config and fits on the
+        // replicated observations; replicate ×6 here so the noise
+        // averages out the way real profiling does.
+        let theta = [0.1, 4e-5, 0.01, 0.0005];
+        let configs = [(1, 8192.0), (2, 8192.0), (4, 8192.0), (8, 8192.0), (16, 8192.0), (4, 2048.0)];
+        let mut obs = Vec::new();
+        let mut rng = crate::util::rng::Pcg32::seeded(5);
+        for _ in 0..6 {
+            for mut o in synth_obs(theta, &configs) {
+                o.time *= 1.0 + 0.05 * (rng.uniform() - 0.5);
+                obs.push(o);
+            }
+        }
+        let model = ErnestModel::fit(&obs).unwrap();
+        // 2× machine extrapolation stays tight; 4× degrades gracefully
+        // (the θ3·m term contributes <1% of iteration time at m ≤ 16,
+        // so its coefficient is barely identifiable under noise — the
+        // structural limit of small-config profiling).
+        let near = synth_obs(theta, &[(32, 8192.0)]);
+        assert!(model.mape(&near) < 12.0, "near mape {}", model.mape(&near));
+        let far = synth_obs(theta, &[(64, 8192.0)]);
+        assert!(model.mape(&far) < 25.0, "far mape {}", model.mape(&far));
+    }
+}

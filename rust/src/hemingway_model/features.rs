@@ -1,0 +1,119 @@
+//! The feature library φ_j(i, m) for the convergence model.
+//!
+//! Paper §3.2.2: "A range of fractional, polynomial, and logarithmic
+//! terms were used as the features of our model", with
+//! `log(P(i,m) − P*) = Σ λ_j φ_j(i, m)` fitted by LassoCV. The library
+//! here is deliberately generous — Lasso owns the selection. The
+//! theory-motivated member is `i/m` (CoCoA's upper bound
+//! `(1 − c0/m)^i c1` has log ≈ −c0·i/m + log c1).
+
+/// One named feature.
+#[derive(Clone)]
+pub struct Feature {
+    pub name: &'static str,
+    pub f: fn(f64, f64) -> f64,
+}
+
+impl std::fmt::Debug for Feature {
+    fn fmt(&self, fm: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(fm, "Feature({})", self.name)
+    }
+}
+
+/// An ordered feature set.
+#[derive(Debug, Clone)]
+pub struct FeatureLibrary {
+    pub features: Vec<Feature>,
+}
+
+impl FeatureLibrary {
+    /// The default library used by all paper-reproduction fits.
+    pub fn standard() -> FeatureLibrary {
+        FeatureLibrary {
+            features: vec![
+                Feature { name: "i", f: |i, _| i },
+                Feature { name: "i/m", f: |i, m| i / m },
+                Feature { name: "i/m^2", f: |i, m| i / (m * m) },
+                Feature { name: "i/sqrt(m)", f: |i, m| i / m.sqrt() },
+                Feature { name: "i*log(m+1)", f: |i, m| i * (m + 1.0).ln() },
+                Feature { name: "log(i+1)", f: |i, _| (i + 1.0).ln() },
+                Feature { name: "sqrt(i)", f: |i, _| i.sqrt() },
+                Feature { name: "1/i", f: |i, _| 1.0 / i.max(1.0) },
+                Feature { name: "m", f: |_, m| m },
+                Feature { name: "log(m+1)", f: |_, m| (m + 1.0).ln() },
+                Feature { name: "1/m", f: |_, m| 1.0 / m },
+                Feature {
+                    name: "log(i+1)*log(m+1)",
+                    f: |i, m| (i + 1.0).ln() * (m + 1.0).ln(),
+                },
+                Feature { name: "sqrt(i)/m", f: |i, m| i.sqrt() / m },
+            ],
+        }
+    }
+
+    /// A reduced iteration-only library (forward prediction on a
+    /// single-m window, where m-features are constant and useless).
+    pub fn iteration_only() -> FeatureLibrary {
+        FeatureLibrary {
+            features: vec![
+                Feature { name: "i", f: |i, _| i },
+                Feature { name: "log(i+1)", f: |i, _| (i + 1.0).ln() },
+                Feature { name: "sqrt(i)", f: |i, _| i.sqrt() },
+                Feature { name: "1/i", f: |i, _| 1.0 / i.max(1.0) },
+            ],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.features.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.features.is_empty()
+    }
+
+    /// Evaluate the full feature row at (i, m).
+    pub fn row(&self, iter: f64, machines: f64) -> Vec<f64> {
+        self.features.iter().map(|f| (f.f)(iter, machines)).collect()
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.features.iter().map(|f| f.name).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_finite_over_the_domain() {
+        let lib = FeatureLibrary::standard();
+        for &i in &[1.0, 2.0, 10.0, 500.0] {
+            for &m in &[1.0, 2.0, 128.0] {
+                let row = lib.row(i, m);
+                assert_eq!(row.len(), lib.len());
+                assert!(row.iter().all(|v| v.is_finite()), "i={i} m={m} {row:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn theory_feature_behaves() {
+        let lib = FeatureLibrary::standard();
+        let idx = lib.names().iter().position(|&n| n == "i/m").unwrap();
+        let r1 = lib.row(100.0, 1.0);
+        let r16 = lib.row(100.0, 16.0);
+        assert_eq!(r1[idx], 100.0);
+        assert_eq!(r16[idx], 6.25);
+    }
+
+    #[test]
+    fn names_unique() {
+        let lib = FeatureLibrary::standard();
+        let mut names = lib.names();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), lib.len());
+    }
+}

@@ -1,0 +1,13 @@
+//! Hemingway's convergence model `g(i, m)` (paper §3.2.2 and §4):
+//! feature library, from-scratch Lasso/LassoCV, model fitting on
+//! log-suboptimality, and the paper's validation protocols.
+
+pub mod features;
+pub mod lasso;
+pub mod model;
+pub mod validate;
+
+pub use features::FeatureLibrary;
+pub use lasso::{lasso, lasso_cv, LassoCvFit, LassoFit};
+pub use model::{points_from_traces, ConvPoint, ConvergenceModel};
+pub use validate::{forward_iterations, forward_time, loo_m};

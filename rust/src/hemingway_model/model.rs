@@ -1,0 +1,208 @@
+//! The Hemingway convergence model g(i, m): a LassoCV fit of
+//! `log(P(i, m) − P*)` over the feature library (paper §3.2.2, §4).
+
+use super::features::FeatureLibrary;
+use super::lasso::{lasso_cv, LassoFit};
+use crate::linalg::Matrix;
+use crate::optim::trace::Trace;
+use crate::util::stats;
+
+/// One training point for the convergence model.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvPoint {
+    pub iter: f64,
+    pub machines: f64,
+    pub subopt: f64,
+}
+
+/// Extract usable (i ≥ 1, subopt > 0) points from traces.
+pub fn points_from_traces(traces: &[Trace]) -> Vec<ConvPoint> {
+    let mut pts = Vec::new();
+    for t in traces {
+        for r in &t.records {
+            if r.iter >= 1 && r.subopt > 0.0 && r.subopt.is_finite() {
+                pts.push(ConvPoint {
+                    iter: r.iter as f64,
+                    machines: t.machines as f64,
+                    subopt: r.subopt,
+                });
+            }
+        }
+    }
+    pts
+}
+
+/// The fitted convergence model.
+#[derive(Debug, Clone)]
+pub struct ConvergenceModel {
+    pub library: FeatureLibrary,
+    pub fit: LassoFit,
+    /// Diagnostics on training data.
+    pub train_r2: f64,
+    pub n_train: usize,
+    /// Prediction floor: ¼ of the smallest suboptimality observed in
+    /// training. A black-box fit of log-suboptimality happily
+    /// extrapolates exponential decay far past any evidence; clamping
+    /// keeps the advisor from promising 1e-8 when training runs
+    /// stopped at 1e-4 (the paper's §6 "training time" caveat).
+    pub floor: f64,
+}
+
+impl ConvergenceModel {
+    /// Fit `log(subopt) ~ φ(i, m)` with LassoCV (paper's procedure).
+    pub fn fit(points: &[ConvPoint], library: FeatureLibrary, seed: u64) -> crate::Result<ConvergenceModel> {
+        anyhow::ensure!(
+            points.len() >= 12,
+            "need ≥12 convergence observations, got {}",
+            points.len()
+        );
+        let x = Matrix::from_fn(points.len(), library.len(), |i, j| {
+            library.row(points[i].iter, points[i].machines)[j]
+        });
+        let y: Vec<f64> = points.iter().map(|p| p.subopt.ln()).collect();
+        let cv = lasso_cv(&x, &y, 40, 5, seed)?;
+        let pred = cv.fit.predict(&x);
+        let train_r2 = stats::r_squared(&y, &pred);
+        let floor = points
+            .iter()
+            .map(|p| p.subopt)
+            .fold(f64::INFINITY, f64::min)
+            * 0.25;
+        Ok(ConvergenceModel {
+            library,
+            fit: cv.fit,
+            train_r2,
+            n_train: points.len(),
+            floor,
+        })
+    }
+
+    /// Predicted log-suboptimality at (i, m).
+    pub fn predict_ln(&self, iter: f64, machines: f64) -> f64 {
+        self.fit.predict_row(&self.library.row(iter, machines))
+    }
+
+    /// Predicted suboptimality at (i, m), clamped to the training floor.
+    pub fn predict(&self, iter: f64, machines: f64) -> f64 {
+        self.predict_ln(iter, machines).exp().max(self.floor)
+    }
+
+    /// Smallest iteration count with predicted suboptimality ≤ eps
+    /// (None if not reached within `cap`).
+    pub fn iters_to(&self, eps: f64, machines: f64, cap: usize) -> Option<usize> {
+        // The model is smooth; scan coarse then refine (predictions are
+        // not guaranteed monotone, so scan rather than bisect).
+        let mut prev_ok: Option<usize> = None;
+        for i in 1..=cap {
+            if self.predict(i as f64, machines) <= eps {
+                prev_ok = Some(i);
+                break;
+            }
+        }
+        prev_ok
+    }
+
+    /// Named non-zero coefficients (interpretability / ablation logs).
+    pub fn selected_features(&self) -> Vec<(&'static str, f64)> {
+        self.library
+            .names()
+            .iter()
+            .zip(&self.fit.coef)
+            .filter(|(_, &c)| c != 0.0)
+            .map(|(n, &c)| (*n, c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic CoCoA-like decay: subopt = c1 · exp(−c0 · i / m).
+    fn synthetic_points(ms: &[f64], iters: usize, c0: f64, c1: f64) -> Vec<ConvPoint> {
+        let mut pts = Vec::new();
+        for &m in ms {
+            for i in 1..=iters {
+                pts.push(ConvPoint {
+                    iter: i as f64,
+                    machines: m,
+                    subopt: c1 * (-c0 * i as f64 / m).exp(),
+                });
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn fits_theory_form_exactly() {
+        let pts = synthetic_points(&[1.0, 2.0, 4.0, 8.0, 16.0], 60, 0.8, 0.5);
+        let model = ConvergenceModel::fit(&pts, FeatureLibrary::standard(), 1).unwrap();
+        assert!(model.train_r2 > 0.999, "r2={}", model.train_r2);
+        // Must be dominated by the theory feature i/m.
+        let sel = model.selected_features();
+        assert!(
+            sel.iter().any(|(n, _)| *n == "i/m"),
+            "selected: {sel:?}"
+        );
+        // Pointwise accuracy.
+        for &(i, m) in &[(10.0, 4.0), (50.0, 16.0), (30.0, 2.0)] {
+            let truth = 0.5 * (-0.8f64 * i / m).exp();
+            let pred = model.predict(i, m);
+            assert!(
+                (pred.ln() - truth.ln()).abs() < 0.05,
+                "i={i} m={m}: {pred} vs {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn extrapolates_to_unseen_m() {
+        // Leave-one-m-out (paper §4.1): train on m ≤ 64, predict m=128.
+        let pts = synthetic_points(&[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0], 80, 0.8, 0.5);
+        let model = ConvergenceModel::fit(&pts, FeatureLibrary::standard(), 2).unwrap();
+        for i in [10.0, 40.0, 80.0] {
+            let truth = 0.5 * (-0.8f64 * i / 128.0).exp();
+            let pred = model.predict(i, 128.0);
+            assert!(
+                (pred.ln() - truth.ln()).abs() < 0.25,
+                "i={i}: pred {} vs truth {}",
+                pred.ln(),
+                truth.ln()
+            );
+        }
+    }
+
+    #[test]
+    fn iters_to_inverts_prediction() {
+        let pts = synthetic_points(&[1.0, 4.0, 16.0], 100, 0.5, 1.0);
+        let model = ConvergenceModel::fit(&pts, FeatureLibrary::standard(), 3).unwrap();
+        let eps = 1e-3;
+        let i4 = model.iters_to(eps, 4.0, 1000).unwrap();
+        // Truth: i = m/c0 · ln(c1/eps) = 4/0.5 · ln(1000) ≈ 55.
+        assert!((40..=75).contains(&i4), "i4={i4}");
+        // More machines ⇒ more iterations.
+        let i16 = model.iters_to(eps, 16.0, 5000).unwrap();
+        assert!(i16 > i4);
+        // Unreachable target within cap.
+        assert_eq!(model.iters_to(1e-30, 4.0, 10), None);
+    }
+
+    #[test]
+    fn rejects_too_few_points() {
+        let pts = synthetic_points(&[1.0], 5, 0.5, 1.0);
+        assert!(ConvergenceModel::fit(&pts, FeatureLibrary::standard(), 1).is_err());
+    }
+
+    #[test]
+    fn points_from_traces_filters_invalid() {
+        use crate::optim::trace::{Record, Trace};
+        let mut t = Trace::new("cocoa", 4, 0.5);
+        t.push(Record { iter: 0, sim_time: 0.0, primal: 1.0, dual: 0.0, subopt: 0.5 });
+        t.push(Record { iter: 1, sim_time: 0.1, primal: 0.9, dual: 0.0, subopt: 0.4 });
+        t.push(Record { iter: 2, sim_time: 0.2, primal: 0.5, dual: 0.0, subopt: 0.0 });
+        t.push(Record { iter: 3, sim_time: 0.3, primal: 0.5, dual: 0.0, subopt: -1e-9 });
+        let pts = points_from_traces(&[t]);
+        assert_eq!(pts.len(), 1); // only iter=1 qualifies
+        assert_eq!(pts[0].machines, 4.0);
+    }
+}

@@ -1,0 +1,252 @@
+//! Validation protocols from the paper's §4: leave-one-m-out
+//! cross-validation (Fig 4/8) and forward prediction with a trailing
+//! window (Fig 5/9: +k iterations; Fig 6/10: +Δt seconds, composed
+//! with the Ernest model).
+
+use super::features::FeatureLibrary;
+use super::model::{points_from_traces, ConvPoint, ConvergenceModel};
+use crate::ernest::ErnestModel;
+use crate::optim::trace::Trace;
+
+/// Leave-one-m-out: fit on every trace except `held_out` machines,
+/// return (model, the held-out trace's predictions as (iter, truth, pred)).
+pub fn loo_m(
+    traces: &[Trace],
+    held_out: usize,
+    seed: u64,
+) -> crate::Result<(ConvergenceModel, Vec<(f64, f64, f64)>)> {
+    let train: Vec<Trace> = traces
+        .iter()
+        .filter(|t| t.machines != held_out)
+        .cloned()
+        .collect();
+    anyhow::ensure!(!train.is_empty(), "no training traces left");
+    let test = traces
+        .iter()
+        .find(|t| t.machines == held_out)
+        .ok_or_else(|| anyhow::anyhow!("no trace with m={held_out}"))?;
+
+    let model = ConvergenceModel::fit(
+        &points_from_traces(&train),
+        FeatureLibrary::standard(),
+        seed,
+    )?;
+    let preds = test
+        .records
+        .iter()
+        .filter(|r| r.iter >= 1 && r.subopt > 0.0)
+        .map(|r| {
+            (
+                r.iter as f64,
+                r.subopt,
+                model.predict(r.iter as f64, held_out as f64),
+            )
+        })
+        .collect();
+    Ok((model, preds))
+}
+
+/// Forward prediction: at each iteration `t ≥ window`, fit on the
+/// window `[t − window, t)` of this single trace and predict `t + k`.
+/// Returns (target_iter, truth, prediction) triples.
+pub fn forward_iterations(
+    trace: &Trace,
+    window: usize,
+    ahead: usize,
+    seed: u64,
+) -> crate::Result<Vec<(f64, f64, f64)>> {
+    let usable: Vec<&crate::optim::trace::Record> = trace
+        .records
+        .iter()
+        .filter(|r| r.iter >= 1 && r.subopt > 0.0)
+        .collect();
+    let mut out = Vec::new();
+    let lib = FeatureLibrary::iteration_only();
+    let m = trace.machines as f64;
+
+    for t in window..usable.len() {
+        let target = t + ahead - 1;
+        if target >= usable.len() {
+            break;
+        }
+        let pts: Vec<ConvPoint> = usable[t - window..t]
+            .iter()
+            .map(|r| ConvPoint {
+                iter: r.iter as f64,
+                machines: m,
+                subopt: r.subopt,
+            })
+            .collect();
+        if pts.len() < 12 {
+            continue;
+        }
+        let model = ConvergenceModel::fit(&pts, lib.clone(), seed)?;
+        let tr = usable[target];
+        out.push((
+            tr.iter as f64,
+            tr.subopt,
+            model.predict(tr.iter as f64, m),
+        ));
+    }
+    Ok(out)
+}
+
+/// Forward prediction in *time* (Fig 6/10): fit on the window ending
+/// at simulated time `now`, compose with Ernest to map `now + delta`
+/// to an iteration index, and predict there. Returns
+/// (target_time, truth_subopt_at_nearest_record, prediction).
+pub fn forward_time(
+    trace: &Trace,
+    ernest: &ErnestModel,
+    input_size: f64,
+    window: usize,
+    delta_t: f64,
+    seed: u64,
+) -> crate::Result<Vec<(f64, f64, f64)>> {
+    let usable: Vec<&crate::optim::trace::Record> = trace
+        .records
+        .iter()
+        .filter(|r| r.iter >= 1 && r.subopt > 0.0)
+        .collect();
+    let mut out = Vec::new();
+    let lib = FeatureLibrary::iteration_only();
+    let m = trace.machines as f64;
+    let f_m = ernest.predict(trace.machines, input_size);
+    anyhow::ensure!(f_m > 0.0, "Ernest predicts non-positive iteration time");
+
+    for t in window..usable.len() {
+        let now = usable[t - 1].sim_time;
+        let target_time = now + delta_t;
+        // Predicted iteration index at the target time.
+        let target_iter = target_time / f_m;
+        // Ground truth: the record whose sim_time is closest.
+        let Some(truth_rec) = usable
+            .iter()
+            .min_by(|a, b| {
+                (a.sim_time - target_time)
+                    .abs()
+                    .partial_cmp(&(b.sim_time - target_time).abs())
+                    .unwrap()
+            })
+        else {
+            break;
+        };
+        if (truth_rec.sim_time - target_time).abs() > f_m {
+            continue; // no ground-truth record near the target time
+        }
+        let pts: Vec<ConvPoint> = usable[t - window..t]
+            .iter()
+            .map(|r| ConvPoint {
+                iter: r.iter as f64,
+                machines: m,
+                subopt: r.subopt,
+            })
+            .collect();
+        if pts.len() < 12 {
+            continue;
+        }
+        let model = ConvergenceModel::fit(&pts, lib.clone(), seed)?;
+        out.push((target_time, truth_rec.subopt, model.predict(target_iter, m)));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::trace::{Record, Trace};
+
+    fn synth_trace(m: usize, iters: usize, c0: f64, time_per_iter: f64) -> Trace {
+        let mut t = Trace::new("cocoa+", m, 0.1);
+        for i in 0..=iters {
+            let subopt = 0.5 * (-c0 * i as f64 / m as f64).exp();
+            t.push(Record {
+                iter: i,
+                sim_time: i as f64 * time_per_iter,
+                primal: 0.1 + subopt,
+                dual: f64::NAN,
+                subopt,
+            });
+        }
+        t
+    }
+
+    fn sweep() -> Vec<Trace> {
+        [1usize, 2, 4, 8, 16, 32, 64, 128]
+            .iter()
+            .map(|&m| synth_trace(m, 100, 0.6, 0.1))
+            .collect()
+    }
+
+    #[test]
+    fn loo_m_128_tracks_truth() {
+        let traces = sweep();
+        let (_, preds) = loo_m(&traces, 128, 1).unwrap();
+        assert!(preds.len() > 50);
+        for (i, truth, pred) in &preds {
+            assert!(
+                (truth.ln() - pred.ln()).abs() < 0.3,
+                "i={i}: {truth} vs {pred}"
+            );
+        }
+    }
+
+    #[test]
+    fn loo_m_errors_for_missing_m() {
+        let traces = sweep();
+        assert!(loo_m(&traces, 7, 1).is_err());
+    }
+
+    #[test]
+    fn forward_one_ahead_is_accurate() {
+        let trace = synth_trace(16, 120, 0.6, 0.1);
+        let preds = forward_iterations(&trace, 50, 1, 1).unwrap();
+        assert!(preds.len() > 30, "{}", preds.len());
+        for (i, truth, pred) in &preds {
+            assert!(
+                (truth.ln() - pred.ln()).abs() < 0.1,
+                "i={i}: {truth} vs {pred}"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_ten_ahead_worse_but_sane() {
+        let trace = synth_trace(16, 120, 0.6, 0.1);
+        let p1 = forward_iterations(&trace, 50, 1, 1).unwrap();
+        let p10 = forward_iterations(&trace, 50, 10, 1).unwrap();
+        let mean_err = |ps: &[(f64, f64, f64)]| {
+            ps.iter()
+                .map(|(_, t, p)| (t.ln() - p.ln()).abs())
+                .sum::<f64>()
+                / ps.len() as f64
+        };
+        assert!(mean_err(&p10) < 0.5);
+        assert!(mean_err(&p1) <= mean_err(&p10) + 1e-9);
+    }
+
+    #[test]
+    fn forward_time_composes_with_ernest() {
+        use crate::ernest::Observation;
+        let tpi = 0.1;
+        let trace = synth_trace(16, 150, 0.6, tpi);
+        // Ernest trained on configs consistent with constant tpi.
+        let obs: Vec<Observation> = [1usize, 2, 4, 8, 16]
+            .iter()
+            .map(|&m| Observation {
+                machines: m,
+                size: 8192.0,
+                time: tpi,
+            })
+            .collect();
+        let ernest = ErnestModel::fit(&obs).unwrap();
+        let preds = forward_time(&trace, &ernest, 8192.0, 50, 5.0 * tpi, 1).unwrap();
+        assert!(preds.len() > 20);
+        for (t, truth, pred) in &preds {
+            assert!(
+                (truth.ln() - pred.ln()).abs() < 0.2,
+                "t={t}: {truth} vs {pred}"
+            );
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! # Hemingway
+//!
+//! A reproduction of *"Hemingway: Modeling Distributed Optimization
+//! Algorithms"* (Pan, Venkataraman, Tai, Gonzalez — 2017) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! Hemingway selects the best distributed optimization algorithm and
+//! degree of parallelism for a user goal by combining two models:
+//!
+//! * a **system model** `f(m)` — time per BSP iteration on `m`
+//!   machines (Ernest-style NNLS fit, [`ernest`]),
+//! * a **convergence model** `g(i, m)` — objective suboptimality after
+//!   `i` iterations on `m` machines (LassoCV over a feature library,
+//!   [`hemingway_model`]),
+//!
+//! composed as `h(t, m) = g(t / f(m), m)` by the [`advisor`].
+//!
+//! The optimization algorithms under study (CoCoA, CoCoA+, mini-batch
+//! SGD, Splash-style local SGD, full GD — [`optim`]) run for real: the
+//! per-partition local solvers are Pallas kernels AOT-compiled to HLO
+//! and executed from Rust through PJRT ([`runtime`]), while wall-clock
+//! time is produced by a BSP cluster simulator ([`cluster`]) standing
+//! in for the paper's Spark/YARN testbed.
+//!
+//! See `DESIGN.md` for the full system inventory and per-figure
+//! experiment index, and `EXPERIMENTS.md` for recorded results.
+
+pub mod advisor;
+pub mod cluster;
+pub mod config;
+pub mod data;
+pub mod ernest;
+pub mod hemingway_model;
+pub mod linalg;
+pub mod optim;
+pub mod repro;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

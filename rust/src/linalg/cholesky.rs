@@ -1,0 +1,134 @@
+//! Cholesky factorization of symmetric positive-definite matrices.
+//!
+//! Used by the Lasso coordinate-descent warm start (Gram matrix
+//! precomputation) and by the experiment-design module's information
+//! matrix computations.
+
+use super::matrix::Matrix;
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`.
+///
+/// Fails if `A` is not (numerically) positive definite.
+pub fn cholesky_factor(a: &Matrix) -> crate::Result<Matrix> {
+    assert_eq!(a.rows, a.cols, "cholesky requires a square matrix");
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    anyhow::bail!(
+                        "matrix not positive definite (pivot {i} = {s:.3e})"
+                    );
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `A x = b` for SPD `A` via Cholesky.
+pub fn cholesky_solve(a: &Matrix, b: &[f64]) -> crate::Result<Vec<f64>> {
+    let l = cholesky_factor(a)?;
+    let n = a.rows;
+    assert_eq!(b.len(), n);
+    // Forward solve L y = b.
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * y[k];
+        }
+        y[i] = s / l[(i, i)];
+    }
+    // Backward solve Lᵀ x = y.
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    Ok(x)
+}
+
+/// Log-determinant of an SPD matrix (via its Cholesky factor).
+/// Used for D-optimal experiment design scoring.
+pub fn logdet_spd(a: &Matrix) -> crate::Result<f64> {
+    let l = cholesky_factor(a)?;
+    Ok(2.0 * (0..a.rows).map(|i| l[(i, i)].ln()).sum::<f64>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{forall, Gen};
+
+    #[test]
+    fn factor_known() {
+        let a = Matrix::from_rows(2, 2, vec![4.0, 2.0, 2.0, 3.0]);
+        let l = cholesky_factor(&a).unwrap();
+        assert!((l[(0, 0)] - 2.0).abs() < 1e-12);
+        assert!((l[(1, 0)] - 1.0).abs() < 1e-12);
+        assert!((l[(1, 1)] - (2.0f64).sqrt()).abs() < 1e-12);
+        // Reconstruct.
+        let r = l.matmul(&l.transpose());
+        for k in 0..4 {
+            assert!((r.data[k] - a.data[k]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn solve_random_spd() {
+        forall(
+            "cholesky solves SPD systems",
+            20,
+            |g: &mut Gen| {
+                let n = g.usize_in(1, 8);
+                let b = Matrix::from_fn(n, n, |_, _| g.normal());
+                // SPD: BᵀB + I
+                let mut a = b.gram();
+                for i in 0..n {
+                    a[(i, i)] += 1.0;
+                }
+                let x_true: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+                let rhs = a.matvec(&x_true);
+                (n, (a, x_true, rhs))
+            },
+            |_, (a, x_true, rhs)| {
+                let x = cholesky_solve(a, rhs).unwrap();
+                x.iter()
+                    .zip(x_true)
+                    .all(|(xi, ti)| (xi - ti).abs() < 1e-7)
+            },
+        );
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_rows(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky_factor(&a).is_err());
+    }
+
+    #[test]
+    fn logdet_identity_zero() {
+        assert!(logdet_spd(&Matrix::identity(5)).unwrap().abs() < 1e-12);
+    }
+
+    #[test]
+    fn logdet_diagonal() {
+        let mut a = Matrix::identity(3);
+        a[(0, 0)] = 2.0;
+        a[(1, 1)] = 4.0;
+        a[(2, 2)] = 8.0;
+        assert!((logdet_spd(&a).unwrap() - (64.0f64).ln()).abs() < 1e-12);
+    }
+}

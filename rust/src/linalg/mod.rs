@@ -1,0 +1,22 @@
+//! Dense linear algebra substrate.
+//!
+//! Both models Hemingway fits are linear-in-parameters:
+//! * Ernest's `f(m)` is fitted with **non-negative least squares**
+//!   ([`nnls`]), and
+//! * the convergence model `g(i, m)` with **OLS / ridge / Lasso**
+//!   (the solvers live in [`crate::hemingway_model`], built on the
+//!   [`qr`] and [`cholesky`] factorizations here).
+//!
+//! No BLAS/LAPACK is available offline; sizes are tiny (tens of
+//! features × thousands of rows), so straightforward implementations
+//! are ample.
+
+pub mod cholesky;
+pub mod matrix;
+pub mod nnls;
+pub mod qr;
+
+pub use cholesky::{cholesky_factor, cholesky_solve};
+pub use matrix::Matrix;
+pub use nnls::nnls;
+pub use qr::{lstsq, QrFactors};

@@ -1,0 +1,185 @@
+//! Non-negative least squares (Lawson–Hanson active set method).
+//!
+//! Ernest fits `f(m) = θ0 + θ1 (size/m) + θ2 log m + θ3 m` with the
+//! constraint `θ ≥ 0` — every term is a real cost, so negative
+//! coefficients are unphysical and NNLS both regularizes the fit and
+//! keeps extrapolation monotone. This is the same solver choice as the
+//! Ernest paper (which uses a standard NNLS routine).
+
+use super::matrix::Matrix;
+use super::qr::lstsq;
+
+/// Solve `min ||A x - b||_2  s.t.  x >= 0`.
+///
+/// Classic Lawson–Hanson: maintain a passive set P of coordinates
+/// allowed to be positive; iterate unconstrained solves on P with
+/// feasibility line searches.
+pub fn nnls(a: &Matrix, b: &[f64]) -> crate::Result<Vec<f64>> {
+    let n = a.rows;
+    let p = a.cols;
+    assert_eq!(b.len(), n, "rhs length mismatch");
+
+    let mut x = vec![0.0f64; p];
+    let mut passive = vec![false; p];
+    let max_outer = 3 * p.max(10);
+    let tol = 1e-10;
+
+    for _outer in 0..max_outer {
+        // Gradient of 0.5||Ax-b||²: w = Aᵀ(b - Ax).
+        let ax = a.matvec(&x);
+        let resid: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+        let w = a.t_matvec(&resid);
+
+        // Pick the most violating zero coordinate.
+        let mut best: Option<(usize, f64)> = None;
+        for j in 0..p {
+            if !passive[j] && w[j] > tol {
+                if best.map(|(_, bw)| w[j] > bw).unwrap_or(true) {
+                    best = Some((j, w[j]));
+                }
+            }
+        }
+        let Some((j_in, _)) = best else {
+            break; // KKT satisfied
+        };
+        passive[j_in] = true;
+
+        // Inner loop: solve on the passive set, walk back infeasible steps.
+        loop {
+            let pset: Vec<usize> = (0..p).filter(|&j| passive[j]).collect();
+            let ap = a.select_cols(&pset);
+            let z_p = lstsq(&ap, b)?;
+
+            if z_p.iter().all(|&z| z > tol) {
+                for (k, &j) in pset.iter().enumerate() {
+                    x[j] = z_p[k];
+                }
+                for j in 0..p {
+                    if !passive[j] {
+                        x[j] = 0.0;
+                    }
+                }
+                break;
+            }
+
+            // Line search toward z keeping feasibility.
+            let mut alpha = f64::INFINITY;
+            for (k, &j) in pset.iter().enumerate() {
+                if z_p[k] <= tol {
+                    let denom = x[j] - z_p[k];
+                    if denom > 0.0 {
+                        alpha = alpha.min(x[j] / denom);
+                    }
+                }
+            }
+            if !alpha.is_finite() {
+                alpha = 0.0;
+            }
+            for (k, &j) in pset.iter().enumerate() {
+                x[j] += alpha * (z_p[k] - x[j]);
+            }
+            // Move coordinates that hit zero back to the active set.
+            for &j in &pset {
+                if x[j] <= tol {
+                    x[j] = 0.0;
+                    passive[j] = false;
+                }
+            }
+            if !passive.iter().any(|&b| b) {
+                break;
+            }
+        }
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{forall, Gen};
+
+    #[test]
+    fn unconstrained_optimum_feasible() {
+        // True coefficients nonnegative → NNLS must match OLS.
+        let xs: Vec<f64> = (1..=40).map(|i| i as f64).collect();
+        let a = Matrix::from_fn(40, 3, |i, j| match j {
+            0 => 1.0,
+            1 => 1.0 / xs[i],
+            _ => xs[i].ln(),
+        });
+        let truth = [2.0, 5.0, 0.7];
+        let b: Vec<f64> = (0..40)
+            .map(|i| truth[0] + truth[1] / xs[i] + truth[2] * xs[i].ln())
+            .collect();
+        let x = nnls(&a, &b).unwrap();
+        for (xi, ti) in x.iter().zip(&truth) {
+            assert!((xi - ti).abs() < 1e-6, "{x:?}");
+        }
+    }
+
+    #[test]
+    fn clamps_negative_truth() {
+        // y = -2 x → best nonnegative fit on A=[x] is 0.
+        let a = Matrix::from_fn(10, 1, |i, _| (i + 1) as f64);
+        let b: Vec<f64> = (0..10).map(|i| -2.0 * (i + 1) as f64).collect();
+        let x = nnls(&a, &b).unwrap();
+        assert_eq!(x, vec![0.0]);
+    }
+
+    #[test]
+    fn kkt_conditions_hold() {
+        forall(
+            "nnls satisfies KKT",
+            30,
+            |g: &mut Gen| {
+                let n = g.usize_in(6, 40);
+                let p = g.usize_in(1, 5);
+                let a = Matrix::from_fn(n, p, |_, _| g.normal().abs() + 0.1);
+                let b: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+                ((n, p), (a, b))
+            },
+            |_, (a, b)| {
+                let x = nnls(a, b).unwrap();
+                // Feasibility.
+                if x.iter().any(|&v| v < 0.0) {
+                    return false;
+                }
+                // Stationarity: grad_j >= -tol for x_j = 0,
+                //               |grad_j| small for x_j > 0.
+                let ax = a.matvec(&x);
+                let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+                let w = a.t_matvec(&r); // = -gradient
+                x.iter().zip(&w).all(|(&xj, &wj)| {
+                    if xj > 1e-9 {
+                        wj.abs() < 1e-5
+                    } else {
+                        wj < 1e-5
+                    }
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn ernest_shaped_recovery() {
+        // Recover Ernest model coefficients from noiseless data.
+        let ms = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+        let size = 1000.0;
+        let truth = [0.05, 0.002, 0.01, 0.0008];
+        let a = Matrix::from_fn(ms.len(), 4, |i, j| match j {
+            0 => 1.0,
+            1 => size / ms[i],
+            2 => ms[i].ln(),
+            _ => ms[i],
+        });
+        let b: Vec<f64> = (0..ms.len())
+            .map(|i| {
+                truth[0] + truth[1] * size / ms[i] + truth[2] * ms[i].ln() + truth[3] * ms[i]
+            })
+            .collect();
+        let x = nnls(&a, &b).unwrap();
+        for (xi, ti) in x.iter().zip(&truth) {
+            assert!((xi - ti).abs() < 1e-7, "{x:?}");
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Householder QR factorization and least-squares solve.
+//!
+//! Used by the Hemingway convergence model (OLS on the selected
+//! feature set after Lasso screening) and by validation code. QR is
+//! preferred over normal equations because the feature library mixes
+//! scales (`i`, `log i`, `1/m`, interactions) and can be nearly
+//! collinear.
+
+use super::matrix::Matrix;
+
+/// Compact Householder QR of an `n×p` matrix with `n >= p`.
+pub struct QrFactors {
+    /// Householder vectors below the diagonal, R on and above.
+    qr: Matrix,
+    /// Scalar factors of the elementary reflectors.
+    tau: Vec<f64>,
+}
+
+impl QrFactors {
+    /// Factorize (consumes a copy of `a`).
+    pub fn new(a: &Matrix) -> QrFactors {
+        let n = a.rows;
+        let p = a.cols;
+        assert!(n >= p, "QR requires rows >= cols ({n} < {p})");
+        let mut qr = a.clone();
+        let mut tau = vec![0.0; p];
+        for k in 0..p {
+            // Norm of the k-th column below (and including) row k.
+            let mut norm = 0.0;
+            for i in k..n {
+                norm += qr[(i, k)] * qr[(i, k)];
+            }
+            let norm = norm.sqrt();
+            if norm == 0.0 {
+                tau[k] = 0.0;
+                continue;
+            }
+            let alpha = if qr[(k, k)] >= 0.0 { -norm } else { norm };
+            // v = x - alpha e1, stored normalized so v[0] = 1.
+            let v0 = qr[(k, k)] - alpha;
+            for i in (k + 1)..n {
+                qr[(i, k)] /= v0;
+            }
+            tau[k] = -v0 / alpha;
+            qr[(k, k)] = alpha;
+            // Apply reflector to trailing columns.
+            for j in (k + 1)..p {
+                let mut s = qr[(k, j)];
+                for i in (k + 1)..n {
+                    s += qr[(i, k)] * qr[(i, j)];
+                }
+                s *= tau[k];
+                qr[(k, j)] -= s;
+                for i in (k + 1)..n {
+                    let vik = qr[(i, k)];
+                    qr[(i, j)] -= s * vik;
+                }
+            }
+        }
+        QrFactors { qr, tau }
+    }
+
+    /// Apply Qᵀ to a vector in place.
+    fn apply_qt(&self, y: &mut [f64]) {
+        let n = self.qr.rows;
+        let p = self.qr.cols;
+        for k in 0..p {
+            if self.tau[k] == 0.0 {
+                continue;
+            }
+            let mut s = y[k];
+            for i in (k + 1)..n {
+                s += self.qr[(i, k)] * y[i];
+            }
+            s *= self.tau[k];
+            y[k] -= s;
+            for i in (k + 1)..n {
+                y[i] -= s * self.qr[(i, k)];
+            }
+        }
+    }
+
+    /// Solve the least-squares problem `min ||A x - b||`.
+    pub fn solve(&self, b: &[f64]) -> crate::Result<Vec<f64>> {
+        let n = self.qr.rows;
+        let p = self.qr.cols;
+        assert_eq!(b.len(), n, "rhs length mismatch");
+        let mut y = b.to_vec();
+        self.apply_qt(&mut y);
+        // Back-substitute R x = y[..p].
+        let mut x = vec![0.0; p];
+        for k in (0..p).rev() {
+            let mut s = y[k];
+            for j in (k + 1)..p {
+                s -= self.qr[(k, j)] * x[j];
+            }
+            let rkk = self.qr[(k, k)];
+            if rkk.abs() < 1e-12 {
+                // Rank-deficient column: pin the coefficient at zero
+                // (minimum-norm-ish behavior good enough for feature
+                // libraries with duplicate/constant columns).
+                x[k] = 0.0;
+            } else {
+                x[k] = s / rkk;
+            }
+        }
+        Ok(x)
+    }
+
+    /// Diagonal of R (for rank diagnostics).
+    pub fn r_diag(&self) -> Vec<f64> {
+        (0..self.qr.cols).map(|k| self.qr[(k, k)]).collect()
+    }
+}
+
+/// One-shot least squares: `argmin_x ||A x - b||_2`.
+pub fn lstsq(a: &Matrix, b: &[f64]) -> crate::Result<Vec<f64>> {
+    QrFactors::new(a).solve(b)
+}
+
+/// Ridge regression via augmented least squares:
+/// `argmin ||A x - b||² + lambda ||x||²`.
+pub fn ridge(a: &Matrix, b: &[f64], lambda: f64) -> crate::Result<Vec<f64>> {
+    assert!(lambda >= 0.0);
+    if lambda == 0.0 {
+        return lstsq(a, b);
+    }
+    let n = a.rows;
+    let p = a.cols;
+    let s = lambda.sqrt();
+    let aug = Matrix::from_fn(n + p, p, |i, j| {
+        if i < n {
+            a[(i, j)]
+        } else if i - n == j {
+            s
+        } else {
+            0.0
+        }
+    });
+    let mut rhs = b.to_vec();
+    rhs.extend(std::iter::repeat(0.0).take(p));
+    lstsq(&aug, &rhs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{forall, Gen};
+
+    fn approx(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn exact_square_solve() {
+        let a = Matrix::from_rows(2, 2, vec![2.0, 1.0, 1.0, 3.0]);
+        let x_true = [1.0, -2.0];
+        let b = a.matvec(&x_true);
+        let x = lstsq(&a, &b).unwrap();
+        assert!(approx(x[0], 1.0, 1e-10) && approx(x[1], -2.0, 1e-10));
+    }
+
+    #[test]
+    fn overdetermined_recovers_planted() {
+        // y = 3 + 2 x, no noise; columns [1, x].
+        let xs: Vec<f64> = (0..50).map(|i| i as f64 / 10.0).collect();
+        let a = Matrix::from_fn(50, 2, |i, j| if j == 0 { 1.0 } else { xs[i] });
+        let b: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let coef = lstsq(&a, &b).unwrap();
+        assert!(approx(coef[0], 3.0, 1e-9));
+        assert!(approx(coef[1], 2.0, 1e-9));
+    }
+
+    #[test]
+    fn residual_orthogonal_to_columns() {
+        forall(
+            "lstsq residual ⟂ col(A)",
+            25,
+            |g: &mut Gen| {
+                let n = g.usize_in(5, 30);
+                let p = g.usize_in(1, 4.min(n));
+                let a = Matrix::from_fn(n, p, |_, _| g.normal());
+                let b: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+                ((n, p), (a, b))
+            },
+            |_, (a, b)| {
+                let x = lstsq(a, b).unwrap();
+                let yhat = a.matvec(&x);
+                let r: Vec<f64> = b.iter().zip(&yhat).map(|(bi, yi)| bi - yi).collect();
+                let g = a.t_matvec(&r);
+                g.iter().all(|v| v.abs() < 1e-7)
+            },
+        );
+    }
+
+    #[test]
+    fn rank_deficient_does_not_blow_up() {
+        // Duplicate column.
+        let a = Matrix::from_fn(10, 3, |i, j| match j {
+            0 => 1.0,
+            1 => i as f64,
+            _ => i as f64, // dup of col 1
+        });
+        let b: Vec<f64> = (0..10).map(|i| 2.0 * i as f64 + 1.0).collect();
+        let x = lstsq(&a, &b).unwrap();
+        let yhat = a.matvec(&x);
+        for (p, t) in yhat.iter().zip(&b) {
+            assert!(approx(*p, *t, 1e-8), "{p} vs {t}");
+        }
+    }
+
+    #[test]
+    fn ridge_shrinks() {
+        let xs: Vec<f64> = (0..30).map(|i| i as f64 / 5.0).collect();
+        let a = Matrix::from_fn(30, 2, |i, j| if j == 0 { 1.0 } else { xs[i] });
+        let b: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let x0 = ridge(&a, &b, 0.0).unwrap();
+        let x1 = ridge(&a, &b, 100.0).unwrap();
+        // The ridge solution always has smaller l2 norm than OLS.
+        let n0: f64 = x0.iter().map(|v| v * v).sum();
+        let n1: f64 = x1.iter().map(|v| v * v).sum();
+        assert!(n1 < n0, "ridge norm {n1} !< ols norm {n0}");
+    }
+
+    #[test]
+    fn r_diag_len() {
+        let a = Matrix::from_fn(6, 3, |i, j| (i + j) as f64 + 1.0);
+        assert_eq!(QrFactors::new(&a).r_diag().len(), 3);
+    }
+}

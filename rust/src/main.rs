@@ -1,0 +1,230 @@
+//! `hemingway` — CLI for the Hemingway reproduction.
+//!
+//! Subcommands:
+//!   run              run one (algorithm, machines) configuration
+//!   sweep            run an algorithm across the machine grid
+//!   fit-system       profile + fit the Ernest model f(m)
+//!   fit-convergence  fit the convergence model g(i, m) from a sweep
+//!   advise           answer the paper's two query types
+//!   adaptive         the Fig 2 adaptive reconfiguration loop
+//!   repro            regenerate a paper figure/table (or `all`)
+//!   info             engine/artifact diagnostics
+
+use hemingway::advisor::{adaptive_cocoa_plus, AdaptiveConfig};
+use hemingway::cluster::BspSim;
+use hemingway::config::ExperimentConfig;
+use hemingway::repro::{run_figures, ReproContext, FIGURES};
+use hemingway::util::cli::Args;
+use hemingway::util::logger;
+
+fn main() {
+    logger::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print_help();
+        return;
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(argv.into_iter().skip(1));
+    if args.flag("verbose") {
+        logger::set_level(logger::Level::Debug);
+    }
+    if let Err(e) = dispatch(&cmd, &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "hemingway — modeling distributed optimization algorithms (Pan et al. 2017)\n\n\
+         usage: hemingway <command> [options]\n\n\
+         commands:\n\
+         \x20 run              --algo cocoa+ --machines 16 [--config f.json] [--native]\n\
+         \x20 sweep            --algo cocoa+ [--native]\n\
+         \x20 fit-system       --algo cocoa+ [--native]\n\
+         \x20 fit-convergence  --algo cocoa+ [--native]\n\
+         \x20 advise           --eps 1e-4 --budget 20 [--native]\n\
+         \x20 adaptive         [--frames 8] [--frame-seconds 5] [--native]\n\
+         \x20 repro            --figure <id>|all [--native]\n\
+         \x20 info\n\n\
+         figure ids: {}\n\n\
+         common options:\n\
+         \x20 --config <file>   JSON experiment config (see configs/default.json)\n\
+         \x20 --native          use the native backend instead of PJRT/HLO\n\
+         \x20 --verbose         debug logging (or HEMINGWAY_LOG=debug)",
+        FIGURES.join(", ")
+    );
+}
+
+fn load_cfg(args: &Args) -> hemingway::Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(ms) = args.get("machines-grid") {
+        cfg.machines = ms
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("bad --machines-grid: {e}"))?;
+    }
+    Ok(cfg)
+}
+
+fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
+    let native = args.flag("native");
+    match cmd {
+        "run" => {
+            let cfg = load_cfg(args)?;
+            let algo = args.str_or("algo", "cocoa+").to_string();
+            let machines = args.usize_or("machines", 16)?;
+            let ctx = ReproContext::new(cfg, native)?;
+            let trace = ctx.run_one(&algo, machines)?;
+            let mut set = hemingway::optim::TraceSet::default();
+            set.push(trace);
+            let path = ctx.out_dir.join(format!("run_{algo}_m{machines}.csv"));
+            set.write(&path)?;
+            println!("wrote {}", path.display());
+        }
+        "sweep" => {
+            let cfg = load_cfg(args)?;
+            let algo = args.str_or("algo", "cocoa+").to_string();
+            let ctx = ReproContext::new(cfg, native)?;
+            let set = ctx.run_sweep(&algo)?;
+            let path = ctx.out_dir.join(format!("sweep_{algo}.csv"));
+            set.write(&path)?;
+            println!("wrote {}", path.display());
+            for t in &set.traces {
+                println!(
+                    "  m={:<4} iters-to-{:.0e}: {:<6} mean-iter-time {:.4}s",
+                    t.machines,
+                    ctx.cfg.target_subopt,
+                    t.iters_to(ctx.cfg.target_subopt)
+                        .map(|i| i.to_string())
+                        .unwrap_or("-".into()),
+                    t.mean_iter_time()
+                );
+            }
+        }
+        "fit-system" => {
+            let cfg = load_cfg(args)?;
+            let algo = args.str_or("algo", "cocoa+").to_string();
+            let ctx = ReproContext::new(cfg, native)?;
+            let model = ctx.fit_ernest(&algo)?;
+            println!(
+                "Ernest model for {algo}: f(m) = {:.4} + {:.3e}·(size/m) + {:.4}·log m + {:.5}·m",
+                model.theta[0], model.theta[1], model.theta[2], model.theta[3]
+            );
+            for &m in &ctx.cfg.machines {
+                println!(
+                    "  f({m:<4}) = {:.4}s",
+                    model.predict(m, ctx.problem.data.n as f64)
+                );
+            }
+        }
+        "fit-convergence" => {
+            let cfg = load_cfg(args)?;
+            let algo = args.str_or("algo", "cocoa+").to_string();
+            let ctx = ReproContext::new(cfg, native)?;
+            let traces = ctx.run_sweep(&algo)?;
+            let pts = hemingway::hemingway_model::points_from_traces(&traces.traces);
+            let model = hemingway::hemingway_model::ConvergenceModel::fit(
+                &pts,
+                hemingway::hemingway_model::FeatureLibrary::standard(),
+                ctx.cfg.seed,
+            )?;
+            println!(
+                "convergence model for {algo}: R² = {:.4} on {} points",
+                model.train_r2, model.n_train
+            );
+            println!("selected features:");
+            for (name, coef) in model.selected_features() {
+                println!("  {name:<22} {coef:+.5}");
+            }
+        }
+        "advise" => {
+            let cfg = load_cfg(args)?;
+            let ctx = ReproContext::new(cfg, native)?;
+            let fit = hemingway::repro::fig3::sweep_and_fit(&ctx)?;
+            let summary = hemingway::repro::tables::table_advisor(&ctx, &fit)?;
+            println!("{summary}");
+        }
+        "adaptive" => {
+            let cfg = load_cfg(args)?;
+            let frames = args.usize_or("frames", 8)?;
+            let frame_seconds = args.f64_or("frame-seconds", 5.0)?;
+            let ctx = ReproContext::new(cfg, native)?;
+            let mut sim = BspSim::new(ctx.profile.clone(), ctx.cfg.seed);
+            let backend = ctx.backend();
+            let a_cfg = AdaptiveConfig {
+                frame_seconds,
+                max_frames: frames,
+                machine_grid: ctx.cfg.machines.clone(),
+                target_subopt: ctx.cfg.target_subopt,
+                bootstrap_machines: 16,
+                seed: ctx.cfg.seed as u32,
+            };
+            let run =
+                adaptive_cocoa_plus(&ctx.problem, backend.as_ref(), &mut sim, ctx.p_star, &a_cfg)?;
+            println!("adaptive CoCoA+ (Fig 2 loop):");
+            for f in &run.frames {
+                println!(
+                    "  frame {} m={:<4} iters={:<4} subopt {:.3e} → {:.3e} (t={:.1}s){}",
+                    f.frame,
+                    f.machines,
+                    f.iterations,
+                    f.start_subopt,
+                    f.end_subopt,
+                    f.sim_time_end,
+                    if f.model_driven { " [model-driven]" } else { "" }
+                );
+            }
+            println!(
+                "final subopt {:.3e} in {:.1}s simulated",
+                run.final_subopt, run.total_time
+            );
+        }
+        "repro" => {
+            let cfg = load_cfg(args)?;
+            let which = args.str_or("figure", "all").to_string();
+            let ctx = ReproContext::new(cfg, native)?;
+            let summaries = run_figures(&ctx, &which)?;
+            println!("== summaries ==");
+            for s in &summaries {
+                println!("  {s}");
+            }
+            // Append to out/summaries.txt for EXPERIMENTS.md assembly.
+            let path = ctx.out_dir.join("summaries.txt");
+            let mut text = std::fs::read_to_string(&path).unwrap_or_default();
+            for s in &summaries {
+                text.push_str(s);
+                text.push('\n');
+            }
+            std::fs::write(&path, text)?;
+        }
+        "info" => {
+            let engine =
+                hemingway::runtime::Engine::new(&hemingway::runtime::default_artifact_dir())?;
+            let m = engine.manifest();
+            println!(
+                "artifacts: {} (n={} d={} machines {:?})",
+                m.artifacts.len(),
+                m.n,
+                m.d,
+                m.machines
+            );
+            for a in &m.artifacts {
+                println!(
+                    "  {:<14} n_loc={:<6} h={:<6} {}",
+                    a.kernel, a.n_loc, a.h_steps, a.file
+                );
+            }
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown command '{other}'");
+        }
+    }
+    Ok(())
+}

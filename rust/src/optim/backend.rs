@@ -1,0 +1,93 @@
+//! Execution backend abstraction.
+//!
+//! The production path runs every per-partition computation through the
+//! AOT-compiled HLO artifacts ([`HloBackend`]); [`super::native`]
+//! provides a pure-Rust mirror used as a test oracle, for fast CI runs,
+//! and for the high-precision reference solves. Drivers are generic
+//! over [`Backend`], and the test suite asserts both backends produce
+//! numerically matching traces (same LCG coordinate streams).
+
+use crate::data::Partition;
+use crate::runtime::{CocoaLocalOut, Engine, GradOut};
+
+/// Per-partition compute operations shared by every algorithm.
+pub trait Backend {
+    /// One local SDCA epoch (CoCoA / CoCoA+ inner solver).
+    fn cocoa_local(
+        &self,
+        part: &Partition,
+        alpha: &[f32],
+        w: &[f32],
+        lambda_n: f32,
+        sigma_prime: f32,
+        seed: u32,
+    ) -> crate::Result<CocoaLocalOut>;
+
+    /// Weighted hinge statistics (GD / mini-batch SGD / objective).
+    fn grad(&self, part: &Partition, weights: &[f32], w: &[f32]) -> crate::Result<GradOut>;
+
+    /// One local Pegasos epoch (Splash-style local SGD).
+    fn local_sgd(
+        &self,
+        part: &Partition,
+        w: &[f32],
+        lambda: f32,
+        t0: f32,
+        seed: u32,
+    ) -> crate::Result<Vec<f32>>;
+
+    /// Local epoch length for a partition of this size (the HLO
+    /// backend bakes `h = n_loc` into the artifact; the native backend
+    /// matches it so streams align).
+    fn h_steps(&self, n_loc: usize) -> usize {
+        n_loc
+    }
+
+    /// Human-readable backend name for logs/traces.
+    fn name(&self) -> &'static str;
+}
+
+/// The production backend: PJRT execution of AOT artifacts.
+pub struct HloBackend<'e> {
+    pub engine: &'e Engine,
+}
+
+impl<'e> HloBackend<'e> {
+    pub fn new(engine: &'e Engine) -> Self {
+        HloBackend { engine }
+    }
+}
+
+impl Backend for HloBackend<'_> {
+    fn cocoa_local(
+        &self,
+        part: &Partition,
+        alpha: &[f32],
+        w: &[f32],
+        lambda_n: f32,
+        sigma_prime: f32,
+        seed: u32,
+    ) -> crate::Result<CocoaLocalOut> {
+        self.engine
+            .cocoa_local_part(part, alpha, w, lambda_n, sigma_prime, seed)
+    }
+
+    fn grad(&self, part: &Partition, weights: &[f32], w: &[f32]) -> crate::Result<GradOut> {
+        self.engine.grad_part(part, weights, w)
+    }
+
+    fn local_sgd(
+        &self,
+        part: &Partition,
+        w: &[f32],
+        lambda: f32,
+        t0: f32,
+        seed: u32,
+    ) -> crate::Result<Vec<f32>> {
+        self.engine.local_sgd_part(part, w, lambda, t0, seed)
+    }
+
+    fn name(&self) -> &'static str {
+        "hlo"
+    }
+}

@@ -1,0 +1,283 @@
+//! CoCoA (Jaggi et al., NIPS'14) and CoCoA+ (Ma et al., ICML'15).
+//!
+//! Both run one local SDCA epoch per machine per outer iteration and
+//! differ only in how local updates are combined:
+//!
+//! * **CoCoA (averaging)** — subproblem scaling σ' = 1, aggregation
+//!   γ = 1/m: `w += (1/m) Σ_k Δw_k`, `a_k += (1/m) Δa_k`.
+//! * **CoCoA+ (adding)** — σ' = m makes each local subproblem
+//!   conservative enough that updates can be *added*: γ = 1,
+//!   `w += Σ_k Δw_k`, `a_k += Δa_k`.
+//!
+//! This is exactly the trade-off Fig 1(c) plots: CoCoA+ moves faster
+//! early; CoCoA's averaged steps win later. Both degrade as m grows —
+//! the phenomenon Hemingway's g(i, m) captures.
+
+use super::backend::Backend;
+use super::problem::Problem;
+use super::{Algorithm, IterationCost};
+use crate::data::Partition;
+use crate::util::rng::Lcg32;
+
+/// Update-combination strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CocoaVariant {
+    /// CoCoA: σ' = 1, γ = 1/m.
+    Averaging,
+    /// CoCoA+: σ' = m, γ = 1.
+    Adding,
+}
+
+/// Driver state for a CoCoA(+) run.
+pub struct Cocoa {
+    parts: Vec<Partition>,
+    alpha: Vec<Vec<f32>>,
+    w: Vec<f32>,
+    lambda_n: f64,
+    variant: CocoaVariant,
+    seed: u32,
+    machines: usize,
+    d: usize,
+}
+
+impl Cocoa {
+    pub fn new(problem: &Problem, machines: usize, variant: CocoaVariant, seed: u32) -> Cocoa {
+        let parts = problem.data.partition(machines);
+        let alpha = parts.iter().map(|p| vec![0.0f32; p.n_loc]).collect();
+        Cocoa {
+            w: vec![0.0f32; problem.data.d],
+            d: problem.data.d,
+            lambda_n: problem.lambda_n(),
+            alpha,
+            parts,
+            variant,
+            seed,
+            machines,
+        }
+    }
+
+    fn sigma_prime(&self) -> f32 {
+        match self.variant {
+            CocoaVariant::Averaging => 1.0,
+            CocoaVariant::Adding => self.machines as f32,
+        }
+    }
+
+    fn gamma(&self) -> f64 {
+        match self.variant {
+            CocoaVariant::Averaging => 1.0 / self.machines as f64,
+            CocoaVariant::Adding => 1.0,
+        }
+    }
+
+    /// Dual block access (tests & gap reporting).
+    pub fn alpha(&self) -> &[Vec<f32>] {
+        &self.alpha
+    }
+
+    /// Change the degree of parallelism mid-run (the paper's §6
+    /// "Adaptive algorithms" extension, exercised by Fig 2's loop).
+    ///
+    /// CoCoA state is per-row dual variables plus `w = w(α)`, so it is
+    /// exactly repartitionable: gather the dual blocks in global row
+    /// order and re-split. `w` is untouched, keeping primal/dual
+    /// consistency; convergence guarantees continue to hold at the new
+    /// σ'/γ.
+    pub fn repartition(&mut self, problem: &Problem, machines: usize) {
+        if machines == self.machines {
+            return;
+        }
+        // Gather valid-row duals in global order.
+        let mut global_alpha = Vec::with_capacity(problem.data.n);
+        for (part, block) in self.parts.iter().zip(&self.alpha) {
+            global_alpha.extend_from_slice(&block[..part.valid]);
+        }
+        debug_assert_eq!(global_alpha.len(), problem.data.n);
+        // Re-split along the same contiguous row ranges partition() uses.
+        let parts = problem.data.partition(machines);
+        let mut alpha = Vec::with_capacity(machines);
+        let mut cursor = 0usize;
+        for p in &parts {
+            let mut block = vec![0.0f32; p.n_loc];
+            block[..p.valid].copy_from_slice(&global_alpha[cursor..cursor + p.valid]);
+            cursor += p.valid;
+            alpha.push(block);
+        }
+        self.parts = parts;
+        self.alpha = alpha;
+        self.machines = machines;
+    }
+}
+
+impl Algorithm for Cocoa {
+    fn name(&self) -> &'static str {
+        match self.variant {
+            CocoaVariant::Averaging => "cocoa",
+            CocoaVariant::Adding => "cocoa+",
+        }
+    }
+
+    fn machines(&self) -> usize {
+        self.machines
+    }
+
+    fn step(&mut self, backend: &dyn Backend, iter: usize) -> crate::Result<IterationCost> {
+        let sigma = self.sigma_prime();
+        let gamma = self.gamma();
+        let mut total_dw = vec![0.0f64; self.d];
+        let h = backend.h_steps(self.parts[0].n_loc);
+
+        for (k, part) in self.parts.iter().enumerate() {
+            let seed = Lcg32::for_epoch(self.seed, iter as u32, k as u32).state;
+            let out = backend.cocoa_local(
+                part,
+                &self.alpha[k],
+                &self.w,
+                self.lambda_n as f32,
+                sigma,
+                seed,
+            )?;
+            // a_k += γ Δa_k
+            for (a, &a_new) in self.alpha[k].iter_mut().zip(&out.alpha) {
+                *a += (gamma * (a_new - *a) as f64) as f32;
+            }
+            for (t, &dw) in total_dw.iter_mut().zip(&out.delta_w) {
+                *t += dw as f64;
+            }
+        }
+        for (wv, &dw) in self.w.iter_mut().zip(&total_dw) {
+            *wv += (gamma * dw) as f32;
+        }
+
+        // Cost model: h SDCA steps, each ~8d flops (two d-dot products
+        // for the effective margin + two d-axpys), plus the w/Δw
+        // broadcast/reduce pair.
+        Ok(IterationCost {
+            machines: self.machines,
+            flops_per_machine: (h as f64) * 8.0 * self.d as f64,
+            broadcast_bytes: 4.0 * self.d as f64,
+            reduce_bytes: 4.0 * self.d as f64,
+        })
+    }
+
+    fn weights(&self) -> &[f32] {
+        &self.w
+    }
+
+    fn dual_sum(&self) -> Option<f64> {
+        Some(
+            self.alpha
+                .iter()
+                .flat_map(|a| a.iter())
+                .map(|&v| v as f64)
+                .sum(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::two_gaussians;
+    use crate::optim::native::NativeBackend;
+
+    fn problem() -> Problem {
+        Problem::new(two_gaussians(128, 8, 2.0, 7), 1e-2)
+    }
+
+    fn run_n(algo: &mut Cocoa, iters: usize) {
+        let backend = NativeBackend;
+        for i in 0..iters {
+            algo.step(&backend, i).unwrap();
+        }
+    }
+
+    #[test]
+    fn single_machine_converges_fast() {
+        let p = problem();
+        let (p_star, _, _) = p.reference_solve(1e-7, 400);
+        let mut algo = Cocoa::new(&p, 1, CocoaVariant::Averaging, 1);
+        run_n(&mut algo, 30);
+        let sub = p.primal(algo.weights()) - p_star;
+        assert!(sub < 1e-3, "m=1 suboptimality {sub}");
+    }
+
+    #[test]
+    fn convergence_degrades_with_m() {
+        // The paper's central observation (Fig 1b): more machines ⇒
+        // more iterations for the same suboptimality.
+        let p = problem();
+        let (p_star, _, _) = p.reference_solve(1e-7, 400);
+        let iters = 15;
+        let sub_at = |m: usize| -> f64 {
+            let mut algo = Cocoa::new(&p, m, CocoaVariant::Averaging, 1);
+            run_n(&mut algo, iters);
+            p.primal(algo.weights()) - p_star
+        };
+        let s1 = sub_at(1);
+        let s8 = sub_at(8);
+        let s32 = sub_at(32);
+        assert!(s1 < s8, "m=1 ({s1}) !< m=8 ({s8})");
+        assert!(s8 < s32, "m=8 ({s8}) !< m=32 ({s32})");
+    }
+
+    #[test]
+    fn cocoa_plus_beats_cocoa_early_at_high_m() {
+        // Needs realistic partition sizes (n_loc ≥ 64): with tiny
+        // partitions σ' = m dominates the local curvature and the
+        // effect inverts (verified by sweep; see DESIGN.md notes).
+        let p = Problem::new(two_gaussians(1024, 8, 2.0, 7), 1e-2);
+        let (p_star, _, _) = p.reference_solve(1e-7, 400);
+        let m = 16;
+        let early = 5;
+        let mut avg = Cocoa::new(&p, m, CocoaVariant::Averaging, 1);
+        let mut add = Cocoa::new(&p, m, CocoaVariant::Adding, 1);
+        run_n(&mut avg, early);
+        run_n(&mut add, early);
+        let s_avg = p.primal(avg.weights()) - p_star;
+        let s_add = p.primal(add.weights()) - p_star;
+        assert!(
+            s_add < s_avg,
+            "CoCoA+ early ({s_add}) should beat CoCoA ({s_avg}) at m={m}"
+        );
+    }
+
+    #[test]
+    fn duality_gap_shrinks_and_stays_valid() {
+        let p = problem();
+        let backend = NativeBackend;
+        let mut algo = Cocoa::new(&p, 4, CocoaVariant::Adding, 3);
+        let mut last_gap = f64::INFINITY;
+        for i in 0..25 {
+            algo.step(&backend, i).unwrap();
+            let primal = p.primal(algo.weights());
+            let dual = p.dual(algo.dual_sum().unwrap(), algo.weights());
+            let gap = primal - dual;
+            assert!(gap > -1e-6, "weak duality violated: gap={gap}");
+            last_gap = gap;
+        }
+        assert!(last_gap < 0.2, "gap after 25 iters: {last_gap}");
+    }
+
+    #[test]
+    fn alpha_stays_in_box_across_outer_iterations() {
+        let p = problem();
+        let mut algo = Cocoa::new(&p, 8, CocoaVariant::Adding, 5);
+        run_n(&mut algo, 10);
+        for block in algo.alpha() {
+            assert!(block.iter().all(|&a| (0.0..=1.0).contains(&a)));
+        }
+    }
+
+    #[test]
+    fn cost_model_scales_with_partition_size() {
+        let p = problem();
+        let backend = NativeBackend;
+        let mut a1 = Cocoa::new(&p, 1, CocoaVariant::Averaging, 1);
+        let mut a4 = Cocoa::new(&p, 4, CocoaVariant::Averaging, 1);
+        let c1 = a1.step(&backend, 0).unwrap();
+        let c4 = a4.step(&backend, 0).unwrap();
+        assert!((c1.flops_per_machine / c4.flops_per_machine - 4.0).abs() < 1e-9);
+        assert_eq!(c1.broadcast_bytes, c4.broadcast_bytes);
+    }
+}

@@ -1,0 +1,116 @@
+//! Full (sub)gradient descent — the baseline whose convergence rate is
+//! *independent* of parallelism (paper §2.2: "for methods like
+//! full-gradient descent the convergence rate remains the same
+//! irrespective of the parallelism"). Only the time-per-iteration
+//! changes with m, which makes GD the clean control case for the
+//! decomposition h(t, m) = g(t/f(m), m).
+
+use super::backend::Backend;
+use super::problem::Problem;
+use super::{Algorithm, IterationCost};
+use crate::data::Partition;
+
+pub struct GradientDescent {
+    parts: Vec<Partition>,
+    w: Vec<f32>,
+    lambda: f64,
+    n: usize,
+    d: usize,
+    machines: usize,
+    /// Step schedule offset (η_t = 1/(λ(t + shift))).
+    pub t_shift: f64,
+}
+
+impl GradientDescent {
+    pub fn new(problem: &Problem, machines: usize) -> GradientDescent {
+        GradientDescent {
+            parts: problem.data.partition(machines),
+            w: vec![0.0f32; problem.data.d],
+            lambda: problem.lambda,
+            n: problem.data.n,
+            d: problem.data.d,
+            machines,
+            t_shift: 8.0,
+        }
+    }
+}
+
+impl Algorithm for GradientDescent {
+    fn name(&self) -> &'static str {
+        "gd"
+    }
+
+    fn machines(&self) -> usize {
+        self.machines
+    }
+
+    fn step(&mut self, backend: &dyn Backend, iter: usize) -> crate::Result<IterationCost> {
+        let mut grad = vec![0.0f64; self.d];
+        for part in &self.parts {
+            // Full gradient: weights = the validity mask.
+            let out = backend.grad(part, &part.mask, &self.w)?;
+            for (g, &v) in grad.iter_mut().zip(&out.grad_sum) {
+                *g += v as f64;
+            }
+        }
+        let t = iter as f64 + 1.0 + self.t_shift;
+        let eta = 1.0 / (self.lambda * t);
+        let inv_n = 1.0 / self.n as f64;
+        for (wv, g) in self.w.iter_mut().zip(&grad) {
+            let full = self.lambda * *wv as f64 + g * inv_n;
+            *wv -= (eta * full) as f32;
+        }
+        super::sgd::pegasos_project(&mut self.w, self.lambda);
+        let n_loc = self.parts[0].n_loc as f64;
+        Ok(IterationCost {
+            machines: self.machines,
+            flops_per_machine: 4.0 * n_loc * self.d as f64,
+            broadcast_bytes: 4.0 * self.d as f64,
+            reduce_bytes: 4.0 * self.d as f64,
+        })
+    }
+
+    fn weights(&self) -> &[f32] {
+        &self.w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::two_gaussians;
+    use crate::optim::native::NativeBackend;
+
+    #[test]
+    fn iterates_identical_across_machine_counts() {
+        // GD's defining property: the *sequence of iterates* does not
+        // depend on the degree of parallelism (only the timing does).
+        let p = Problem::new(two_gaussians(120, 6, 2.0, 13), 1e-2);
+        let backend = NativeBackend;
+        let mut g1 = GradientDescent::new(&p, 1);
+        let mut g8 = GradientDescent::new(&p, 8);
+        for i in 0..20 {
+            g1.step(&backend, i).unwrap();
+            g8.step(&backend, i).unwrap();
+        }
+        for (a, b) in g1.weights().iter().zip(g8.weights()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn descends_monotonically_after_warmup() {
+        let p = Problem::new(two_gaussians(120, 6, 2.0, 13), 1e-2);
+        let backend = NativeBackend;
+        let mut gd = GradientDescent::new(&p, 4);
+        let mut prev = f64::INFINITY;
+        for i in 0..40 {
+            gd.step(&backend, i).unwrap();
+            let obj = p.primal(gd.weights());
+            if i > 5 {
+                assert!(obj < prev + 1e-3, "iter {i}: {obj} !<= {prev}");
+            }
+            prev = obj;
+        }
+    }
+}

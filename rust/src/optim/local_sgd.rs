@@ -1,0 +1,128 @@
+//! Splash-style local SGD (Zhang & Jordan 2015): each machine runs a
+//! local Pegasos epoch from the shared iterate, the driver averages
+//! the resulting iterates. Averaging local *trajectories* (rather than
+//! single gradients) gives better per-iteration progress than
+//! mini-batch SGD but still degrades with m — the second SGD-family
+//! curve in Fig 1(c).
+
+use super::backend::Backend;
+use super::problem::Problem;
+use super::{Algorithm, IterationCost};
+use crate::data::Partition;
+use crate::util::rng::Lcg32;
+
+pub struct LocalSgd {
+    parts: Vec<Partition>,
+    w: Vec<f32>,
+    lambda: f64,
+    /// Cumulative local step count (continues the η schedule).
+    t0: f64,
+    seed: u32,
+    machines: usize,
+    d: usize,
+}
+
+impl LocalSgd {
+    pub fn new(problem: &Problem, machines: usize, seed: u32) -> LocalSgd {
+        LocalSgd {
+            parts: problem.data.partition(machines),
+            w: vec![0.0f32; problem.data.d],
+            lambda: problem.lambda,
+            // Skip the huge first Pegasos steps (η = 1/(λt)).
+            t0: 32.0,
+            seed,
+            machines,
+            d: problem.data.d,
+        }
+    }
+}
+
+impl Algorithm for LocalSgd {
+    fn name(&self) -> &'static str {
+        "local-sgd"
+    }
+
+    fn machines(&self) -> usize {
+        self.machines
+    }
+
+    fn step(&mut self, backend: &dyn Backend, iter: usize) -> crate::Result<IterationCost> {
+        let mut acc = vec![0.0f64; self.d];
+        let h = backend.h_steps(self.parts[0].n_loc);
+        for (k, part) in self.parts.iter().enumerate() {
+            let seed = Lcg32::for_epoch(self.seed, iter as u32, k as u32).state;
+            let wk = backend.local_sgd(
+                part,
+                &self.w,
+                self.lambda as f32,
+                self.t0 as f32,
+                seed,
+            )?;
+            for (a, &v) in acc.iter_mut().zip(&wk) {
+                *a += v as f64;
+            }
+        }
+        let inv_m = 1.0 / self.machines as f64;
+        for (wv, a) in self.w.iter_mut().zip(&acc) {
+            *wv = (a * inv_m) as f32;
+        }
+        self.t0 += h as f64;
+        Ok(IterationCost {
+            machines: self.machines,
+            flops_per_machine: (h as f64) * 6.0 * self.d as f64,
+            broadcast_bytes: 4.0 * self.d as f64,
+            reduce_bytes: 4.0 * self.d as f64,
+        })
+    }
+
+    fn weights(&self) -> &[f32] {
+        &self.w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::two_gaussians;
+    use crate::optim::native::NativeBackend;
+
+    #[test]
+    fn converges_single_machine() {
+        let p = Problem::new(two_gaussians(256, 8, 2.0, 17), 1e-2);
+        let (p_star, _, _) = p.reference_solve(1e-7, 500);
+        let backend = NativeBackend;
+        let mut algo = LocalSgd::new(&p, 1, 3);
+        for i in 0..60 {
+            algo.step(&backend, i).unwrap();
+        }
+        let sub = p.primal(algo.weights()) - p_star;
+        assert!(sub < 0.1, "local-sgd m=1 suboptimality {sub}");
+    }
+
+    #[test]
+    fn degrades_with_parallelism() {
+        let p = Problem::new(two_gaussians(256, 8, 2.0, 17), 1e-2);
+        let (p_star, _, _) = p.reference_solve(1e-7, 500);
+        let backend = NativeBackend;
+        let sub_at = |m: usize| {
+            let mut algo = LocalSgd::new(&p, m, 3);
+            for i in 0..25 {
+                algo.step(&backend, i).unwrap();
+            }
+            p.primal(algo.weights()) - p_star
+        };
+        let s1 = sub_at(1);
+        let s16 = sub_at(16);
+        assert!(s1 < s16, "m=1 ({s1}) !< m=16 ({s16})");
+    }
+
+    #[test]
+    fn step_schedule_continues_across_iterations() {
+        let p = Problem::new(two_gaussians(64, 4, 2.0, 17), 1e-2);
+        let backend = NativeBackend;
+        let mut algo = LocalSgd::new(&p, 2, 3);
+        let t_before = algo.t0;
+        algo.step(&backend, 0).unwrap();
+        assert_eq!(algo.t0, t_before + 32.0); // h = n_loc = 32
+    }
+}

@@ -1,0 +1,81 @@
+//! Distributed optimization algorithms — the workloads Hemingway
+//! models. Every algorithm runs data-parallel over [`crate::data::Partition`]s
+//! with bulk-synchronous iterations; per-partition compute goes through
+//! a [`Backend`] (production: AOT HLO via PJRT; tests: native mirror).
+
+pub mod backend;
+pub mod cocoa;
+pub mod driver;
+pub mod gd;
+pub mod local_sgd;
+pub mod native;
+pub mod problem;
+pub mod sgd;
+pub mod trace;
+
+pub use backend::{Backend, HloBackend};
+pub use cocoa::{Cocoa, CocoaVariant};
+pub use driver::{run, RunConfig};
+pub use gd::GradientDescent;
+pub use local_sgd::LocalSgd;
+pub use native::NativeBackend;
+pub use problem::Problem;
+pub use sgd::MiniBatchSgd;
+pub use trace::{Record, Trace, TraceSet};
+
+/// What one BSP iteration cost, in machine-independent units. The
+/// cluster simulator ([`crate::cluster`]) prices this into seconds; the
+/// Ernest model then has to *rediscover* the structure from measured
+/// times (it never sees these numbers directly).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterationCost {
+    pub machines: usize,
+    /// Floating-point ops executed by each machine (balanced partitions).
+    pub flops_per_machine: f64,
+    /// Bytes broadcast driver → machines (the model vector).
+    pub broadcast_bytes: f64,
+    /// Bytes reduced machines → driver (per machine contribution).
+    pub reduce_bytes: f64,
+}
+
+/// A distributed optimization algorithm executing BSP iterations.
+pub trait Algorithm {
+    /// Short name used in traces/plots ("cocoa", "cocoa+", …).
+    fn name(&self) -> &'static str;
+
+    /// Degree of parallelism this instance runs at.
+    fn machines(&self) -> usize;
+
+    /// Execute one outer iteration against the backend.
+    fn step(&mut self, backend: &dyn Backend, iter: usize) -> crate::Result<IterationCost>;
+
+    /// Current primal iterate.
+    fn weights(&self) -> &[f32];
+
+    /// Σ_i a_i for dual methods (drives duality-gap reporting).
+    fn dual_sum(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Construct an algorithm by name (the CLI / advisor entry point).
+pub fn by_name(
+    name: &str,
+    problem: &Problem,
+    machines: usize,
+    seed: u32,
+) -> crate::Result<Box<dyn Algorithm>> {
+    Ok(match name {
+        "cocoa" => Box::new(Cocoa::new(problem, machines, CocoaVariant::Averaging, seed)),
+        "cocoa+" => Box::new(Cocoa::new(problem, machines, CocoaVariant::Adding, seed)),
+        "minibatch-sgd" => Box::new(MiniBatchSgd::new(problem, machines, seed)),
+        "local-sgd" => Box::new(LocalSgd::new(problem, machines, seed)),
+        "gd" => Box::new(GradientDescent::new(problem, machines)),
+        other => anyhow::bail!(
+            "unknown algorithm '{other}' (expected cocoa, cocoa+, minibatch-sgd, local-sgd, gd)"
+        ),
+    })
+}
+
+/// The algorithm names the advisor searches over.
+pub const ALL_ALGORITHMS: &[&str] = &["cocoa", "cocoa+", "minibatch-sgd", "local-sgd", "gd"];

@@ -1,0 +1,267 @@
+//! Pure-Rust mirror of the Pallas kernels (same LCG streams).
+//!
+//! Exists as (a) the numeric oracle the HLO path is tested against,
+//! (b) a fast backend for unit tests that don't want a PJRT client,
+//! and (c) the engine behind high-precision reference solves. The
+//! production configuration always uses [`super::backend::HloBackend`].
+
+use super::backend::Backend;
+use crate::data::Partition;
+use crate::runtime::{CocoaLocalOut, GradOut};
+use crate::util::rng::Lcg32;
+
+/// Native (non-PJRT) backend.
+#[derive(Debug, Default, Clone)]
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn cocoa_local(
+        &self,
+        part: &Partition,
+        alpha: &[f32],
+        w: &[f32],
+        lambda_n: f32,
+        sigma_prime: f32,
+        seed: u32,
+    ) -> crate::Result<CocoaLocalOut> {
+        let (alpha, delta_w) = sdca_epoch(
+            &part.x,
+            &part.y,
+            &part.mask,
+            alpha,
+            w,
+            lambda_n as f64,
+            sigma_prime as f64,
+            seed,
+            self.h_steps(part.n_loc),
+        );
+        Ok(CocoaLocalOut { alpha, delta_w })
+    }
+
+    fn grad(&self, part: &Partition, weights: &[f32], w: &[f32]) -> crate::Result<GradOut> {
+        Ok(hinge_stats(&part.x, &part.y, weights, w))
+    }
+
+    fn local_sgd(
+        &self,
+        part: &Partition,
+        w: &[f32],
+        lambda: f32,
+        t0: f32,
+        seed: u32,
+    ) -> crate::Result<Vec<f32>> {
+        Ok(pegasos_epoch(
+            &part.x,
+            &part.y,
+            &part.mask,
+            w,
+            lambda as f64,
+            t0 as f64,
+            seed,
+            self.h_steps(part.n_loc),
+        ))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// One local SDCA epoch — mirrors `python/compile/kernels/sdca.py`
+/// step for step (same LCG stream, same update formula, f32 state
+/// with f64 accumulation where the kernel uses f32 throughout; the
+/// tolerance in cross-backend tests absorbs the difference).
+#[allow(clippy::too_many_arguments)]
+pub fn sdca_epoch(
+    x: &[f32],
+    y: &[f32],
+    mask: &[f32],
+    alpha: &[f32],
+    w: &[f32],
+    lambda_n: f64,
+    sigma_prime: f64,
+    seed: u32,
+    h_steps: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let d = w.len();
+    let n_loc = y.len();
+    debug_assert_eq!(x.len(), n_loc * d);
+    let mut a: Vec<f64> = alpha.iter().map(|&v| v as f64).collect();
+    let mut dw = vec![0.0f64; d];
+    let mut lcg = Lcg32 { state: seed };
+    for _ in 0..h_steps {
+        let j = lcg.next_index(n_loc as u32) as usize;
+        let xj = &x[j * d..(j + 1) * d];
+        let qj: f64 = xj.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let dot: f64 = xj
+            .iter()
+            .zip(w.iter().zip(&dw))
+            .map(|(&xi, (&wi, &dwi))| xi as f64 * (wi as f64 + sigma_prime * dwi))
+            .sum();
+        let margin = 1.0 - y[j] as f64 * dot;
+        let denom = (sigma_prime * qj).max(1e-12);
+        let step = if qj > 0.0 { lambda_n * margin / denom } else { 0.0 };
+        let a_new = (a[j] + step).clamp(0.0, 1.0);
+        let delta = (a_new - a[j]) * mask[j] as f64;
+        a[j] += delta;
+        if delta != 0.0 {
+            let scale = delta * y[j] as f64 / lambda_n;
+            for (dwi, &xi) in dw.iter_mut().zip(xj) {
+                *dwi += scale * xi as f64;
+            }
+        }
+    }
+    (
+        a.iter().map(|&v| v as f32).collect(),
+        dw.iter().map(|&v| v as f32).collect(),
+    )
+}
+
+/// Weighted hinge statistics — mirrors `kernels/hinge.py`.
+pub fn hinge_stats(x: &[f32], y: &[f32], weights: &[f32], w: &[f32]) -> GradOut {
+    let d = w.len();
+    let n_loc = y.len();
+    debug_assert_eq!(x.len(), n_loc * d);
+    let mut grad = vec![0.0f64; d];
+    let mut hinge = 0.0f64;
+    let mut correct = 0.0f64;
+    for i in 0..n_loc {
+        let wt = weights[i] as f64;
+        if wt == 0.0 {
+            continue;
+        }
+        let xi = &x[i * d..(i + 1) * d];
+        let score: f64 = xi.iter().zip(w).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let margin = 1.0 - y[i] as f64 * score;
+        if margin > 0.0 {
+            hinge += wt * margin;
+            let c = -wt * y[i] as f64;
+            for (g, &xv) in grad.iter_mut().zip(xi) {
+                *g += c * xv as f64;
+            }
+        }
+        if score * y[i] as f64 > 0.0 {
+            correct += wt;
+        }
+    }
+    GradOut {
+        grad_sum: grad.iter().map(|&v| v as f32).collect(),
+        hinge_sum: hinge as f32,
+        correct_sum: correct as f32,
+    }
+}
+
+/// One local Pegasos epoch — mirrors `kernels/pegasos.py`.
+#[allow(clippy::too_many_arguments)]
+pub fn pegasos_epoch(
+    x: &[f32],
+    y: &[f32],
+    mask: &[f32],
+    w0: &[f32],
+    lambda: f64,
+    t0: f64,
+    seed: u32,
+    h_steps: usize,
+) -> Vec<f32> {
+    let d = w0.len();
+    let n_loc = y.len();
+    debug_assert_eq!(x.len(), n_loc * d);
+    let mut w: Vec<f64> = w0.iter().map(|&v| v as f64).collect();
+    let mut lcg = Lcg32 { state: seed };
+    for t in 0..h_steps {
+        let j = lcg.next_index(n_loc as u32) as usize;
+        let xj = &x[j * d..(j + 1) * d];
+        let eta = 1.0 / (lambda * (t0 + t as f64 + 1.0));
+        let dot: f64 = xj.iter().zip(&w).map(|(&xv, wv)| xv as f64 * wv).sum();
+        let active = if 1.0 - y[j] as f64 * dot > 0.0 { 1.0 } else { 0.0 };
+        let mj = mask[j] as f64;
+        let shrink = 1.0 - eta * lambda * mj;
+        let gain = eta * active * mj * y[j] as f64;
+        for (wv, &xv) in w.iter_mut().zip(xj) {
+            *wv = shrink * *wv + gain * xv as f64;
+        }
+    }
+    w.iter().map(|&v| v as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::two_gaussians;
+    use crate::util::quickcheck::{forall, Gen};
+
+    #[test]
+    fn sdca_keeps_alpha_in_box() {
+        forall(
+            "sdca alpha stays in [0,1]",
+            20,
+            |g: &mut Gen| {
+                let n = g.usize_in(4, 40);
+                let d = g.usize_in(2, 8);
+                let x = g.vec_f32(n * d, -1.0, 1.0);
+                let y: Vec<f32> = (0..n)
+                    .map(|_| if g.bool() { 1.0 } else { -1.0 })
+                    .collect();
+                let alpha = g.vec_f32(n, 0.0, 1.0);
+                let seed = g.rng().next_u32() | 1;
+                ((n, d), (x, y, alpha, seed))
+            },
+            |&(n, d), (x, y, alpha, seed)| {
+                let mask = vec![1.0f32; n];
+                let w = vec![0.0f32; d];
+                let (a, _) = sdca_epoch(x, y, &mask, alpha, &w, 0.01 * n as f64, 1.0, *seed, 3 * n);
+                a.iter().all(|&v| (0.0..=1.0).contains(&v))
+            },
+        );
+    }
+
+    #[test]
+    fn sdca_dw_is_consistent_with_alpha_delta() {
+        let ds = two_gaussians(32, 6, 1.0, 3);
+        let parts = ds.partition(1);
+        let p = &parts[0];
+        let alpha = vec![0.0f32; 32];
+        let w = vec![0.0f32; 6];
+        let lambda_n = 0.32;
+        let (a, dw) = sdca_epoch(&p.x, &p.y, &p.mask, &alpha, &w, lambda_n, 1.0, 77, 64);
+        // dw == (1/λn) Σ (a_j - 0) y_j x_j
+        let mut expect = vec![0.0f64; 6];
+        for j in 0..32 {
+            let scale = a[j] as f64 * p.y[j] as f64 / lambda_n;
+            for (e, &xv) in expect.iter_mut().zip(&p.x[j * 6..(j + 1) * 6]) {
+                *e += scale * xv as f64;
+            }
+        }
+        for (got, want) in dw.iter().zip(&expect) {
+            assert!((*got as f64 - want).abs() < 1e-4, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn hinge_stats_ignores_zero_weight_rows() {
+        let ds = two_gaussians(16, 4, 1.0, 4);
+        let parts = ds.partition(1);
+        let p = &parts[0];
+        let w = vec![0.1f32; 4];
+        let full = hinge_stats(&p.x, &p.y, &p.mask, &w);
+        let mut wt = p.mask.clone();
+        wt[3] = 0.0;
+        let partial = hinge_stats(&p.x, &p.y, &wt, &w);
+        assert!(partial.hinge_sum <= full.hinge_sum + 1e-6);
+        // Difference equals row 3's own contribution.
+        let solo: Vec<f32> = (0..16).map(|i| if i == 3 { 1.0 } else { 0.0 }).collect();
+        let row3 = hinge_stats(&p.x, &p.y, &solo, &w);
+        assert!((full.hinge_sum - partial.hinge_sum - row3.hinge_sum).abs() < 1e-5);
+    }
+
+    #[test]
+    fn pegasos_masked_rows_do_not_move_w() {
+        let ds = two_gaussians(8, 4, 1.0, 5);
+        let parts = ds.partition(1);
+        let p = &parts[0];
+        let mask = vec![0.0f32; 8]; // everything masked
+        let w0 = vec![0.3f32, -0.2, 0.1, 0.0];
+        let w1 = pegasos_epoch(&p.x, &p.y, &mask, &w0, 0.01, 0.0, 9, 32);
+        assert_eq!(w0, w1);
+    }
+}

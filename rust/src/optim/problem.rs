@@ -1,0 +1,174 @@
+//! The optimization problem under study: L2-regularized linear SVM
+//! (hinge loss), exactly the paper's case-study setup.
+//!
+//! Primal:  P(w) = (λ/2)‖w‖² + (1/n) Σ max(0, 1 − y_i x_iᵀ w)
+//! Dual:    D(a) = (1/n) Σ a_i − (λ/2)‖w(a)‖²,  a ∈ [0,1]^n,
+//!          w(a) = (1/λn) Σ a_i y_i x_i
+//!
+//! Suboptimality is measured as P(w) − P*, with P* from a
+//! high-precision native reference solve ([`Problem::reference_solve`]).
+
+use crate::data::Dataset;
+use crate::util::rng::Lcg32;
+
+/// An SVM training problem (dataset + regularization).
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub data: Dataset,
+    pub lambda: f64,
+}
+
+impl Problem {
+    pub fn new(data: Dataset, lambda: f64) -> Problem {
+        assert!(lambda > 0.0);
+        Problem { data, lambda }
+    }
+
+    /// `λ · n`, the constant the SDCA step needs.
+    pub fn lambda_n(&self) -> f64 {
+        self.lambda * self.data.n as f64
+    }
+
+    /// Exact primal objective (f64, native).
+    pub fn primal(&self, w: &[f32]) -> f64 {
+        let d = self.data.d;
+        assert_eq!(w.len(), d);
+        let mut hinge = 0.0f64;
+        for i in 0..self.data.n {
+            let xi = self.data.row(i);
+            let score: f64 = xi.iter().zip(w).map(|(&a, &b)| a as f64 * b as f64).sum();
+            hinge += (1.0 - self.data.y[i] as f64 * score).max(0.0);
+        }
+        let ww: f64 = w.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        0.5 * self.lambda * ww + hinge / self.data.n as f64
+    }
+
+    /// Exact dual objective given the dual iterate and its primal image.
+    pub fn dual(&self, alpha_sum: f64, w: &[f32]) -> f64 {
+        let ww: f64 = w.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        alpha_sum / self.data.n as f64 - 0.5 * self.lambda * ww
+    }
+
+    /// Training accuracy.
+    pub fn accuracy(&self, w: &[f32]) -> f64 {
+        let mut correct = 0usize;
+        for i in 0..self.data.n {
+            let xi = self.data.row(i);
+            let score: f64 = xi.iter().zip(w).map(|(&a, &b)| a as f64 * b as f64).sum();
+            if score * self.data.y[i] as f64 > 0.0 {
+                correct += 1;
+            }
+        }
+        correct as f64 / self.data.n as f64
+    }
+
+    /// High-precision single-machine SDCA reference solve for `P*`.
+    ///
+    /// Runs until the duality gap falls below `gap_tol` (or `max_epochs`);
+    /// returns `(P*, w*, final_gap)`. All-f64 native math, independent of
+    /// the HLO path — this is the ground truth every suboptimality trace
+    /// is measured against.
+    pub fn reference_solve(&self, gap_tol: f64, max_epochs: usize) -> (f64, Vec<f32>, f64) {
+        let n = self.data.n;
+        let d = self.data.d;
+        let lambda_n = self.lambda_n();
+        let mut a = vec![0.0f64; n];
+        let mut w = vec![0.0f64; d];
+        let mut gap = f64::INFINITY;
+        // Precompute row norms.
+        let qs: Vec<f64> = (0..n)
+            .map(|i| {
+                self.data
+                    .row(i)
+                    .iter()
+                    .map(|&v| (v as f64) * (v as f64))
+                    .sum()
+            })
+            .collect();
+        let mut lcg = Lcg32::for_epoch(0xE5EF, 0, 0);
+        for epoch in 0..max_epochs {
+            for _ in 0..n {
+                let j = lcg.next_index(n as u32) as usize;
+                if qs[j] <= 0.0 {
+                    continue;
+                }
+                let xj = self.data.row(j);
+                let yj = self.data.y[j] as f64;
+                let dot: f64 = xj.iter().zip(&w).map(|(&xv, wv)| xv as f64 * wv).sum();
+                let margin = 1.0 - yj * dot;
+                let a_new = (a[j] + lambda_n * margin / qs[j]).clamp(0.0, 1.0);
+                let delta = a_new - a[j];
+                if delta != 0.0 {
+                    a[j] = a_new;
+                    let scale = delta * yj / lambda_n;
+                    for (wv, &xv) in w.iter_mut().zip(xj) {
+                        *wv += scale * xv as f64;
+                    }
+                }
+            }
+            if epoch % 5 == 4 || epoch + 1 == max_epochs {
+                let wf: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+                let p = self.primal(&wf);
+                let dual = self.dual(a.iter().sum(), &wf);
+                gap = p - dual;
+                if gap < gap_tol {
+                    break;
+                }
+            }
+        }
+        let wf: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+        // The dual value is a certified lower bound on P*, so using the
+        // final dual as P* guarantees nonnegative suboptimalities even
+        // for iterates that later beat our reference primal.
+        let p_star = self.dual(a.iter().sum(), &wf);
+        (p_star, wf, gap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::two_gaussians;
+
+    fn problem() -> Problem {
+        Problem::new(two_gaussians(256, 16, 2.0, 1), 1e-2)
+    }
+
+    #[test]
+    fn primal_at_zero_is_one() {
+        let p = problem();
+        let w = vec![0.0f32; 16];
+        assert!((p.primal(&w) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dual_at_zero_is_zero() {
+        let p = problem();
+        assert_eq!(p.dual(0.0, &vec![0.0f32; 16]), 0.0);
+    }
+
+    #[test]
+    fn reference_solve_closes_gap() {
+        let p = problem();
+        let (p_star, w_star, gap) = p.reference_solve(1e-6, 500);
+        assert!(gap < 1e-6, "gap {gap}");
+        // P* must be below P(0)=1 and the primal at w* within gap of it.
+        assert!(p_star < 1.0);
+        assert!(p.primal(&w_star) - p_star <= gap * 1.001 + 1e-12);
+        // Separable-ish data → decent accuracy.
+        assert!(p.accuracy(&w_star) > 0.9, "acc {}", p.accuracy(&w_star));
+    }
+
+    #[test]
+    fn weak_duality_holds_along_the_path() {
+        let p = problem();
+        let (p_star, _, _) = p.reference_solve(1e-5, 300);
+        // Any primal value must be ≥ P* (we test w=0 and random w).
+        assert!(p.primal(&vec![0.0f32; 16]) >= p_star);
+        let mut rng = crate::util::rng::Pcg32::seeded(2);
+        for _ in 0..5 {
+            let w: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+            assert!(p.primal(&w) >= p_star - 1e-9);
+        }
+    }
+}

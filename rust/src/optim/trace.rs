@@ -1,0 +1,236 @@
+//! Convergence traces: the raw material both Hemingway models fit.
+
+use std::path::Path;
+
+use crate::util::csv::Table;
+
+/// One observation: objective state after a BSP iteration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    /// Outer iteration index (1-based; 0 = initial state).
+    pub iter: usize,
+    /// Simulated wall-clock seconds since the run started.
+    pub sim_time: f64,
+    /// Primal objective P(w).
+    pub primal: f64,
+    /// Dual objective D(a) (NaN for purely primal methods).
+    pub dual: f64,
+    /// Primal suboptimality P(w) − P*.
+    pub subopt: f64,
+}
+
+/// A full run: algorithm × machine count × the per-iteration records.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub algorithm: String,
+    pub machines: usize,
+    pub p_star: f64,
+    pub records: Vec<Record>,
+}
+
+impl Trace {
+    pub fn new(algorithm: impl Into<String>, machines: usize, p_star: f64) -> Trace {
+        Trace {
+            algorithm: algorithm.into(),
+            machines,
+            p_star,
+            records: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: Record) {
+        self.records.push(r);
+    }
+
+    /// Iterations needed to reach a suboptimality target (None if never).
+    pub fn iters_to(&self, eps: f64) -> Option<usize> {
+        self.records.iter().find(|r| r.subopt <= eps).map(|r| r.iter)
+    }
+
+    /// Simulated time needed to reach a suboptimality target.
+    pub fn time_to(&self, eps: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.subopt <= eps)
+            .map(|r| r.sim_time)
+    }
+
+    /// Final suboptimality.
+    pub fn final_subopt(&self) -> f64 {
+        self.records.last().map(|r| r.subopt).unwrap_or(f64::NAN)
+    }
+
+    /// Mean time per iteration (simulated).
+    pub fn mean_iter_time(&self) -> f64 {
+        if self.records.len() < 2 {
+            return f64::NAN;
+        }
+        let first = &self.records[0];
+        let last = &self.records[self.records.len() - 1];
+        (last.sim_time - first.sim_time) / (last.iter - first.iter) as f64
+    }
+}
+
+/// A collection of traces (e.g. a full m-sweep), with CSV round-trip.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSet {
+    pub traces: Vec<Trace>,
+}
+
+const COLUMNS: &[&str] = &[
+    "algo_id", "machines", "iter", "sim_time", "primal", "dual", "subopt", "p_star",
+];
+
+/// Algorithm name ↔ numeric id for the CSV encoding.
+const ALGO_IDS: &[(&str, f64)] = &[
+    ("cocoa", 0.0),
+    ("cocoa+", 1.0),
+    ("minibatch-sgd", 2.0),
+    ("local-sgd", 3.0),
+    ("gd", 4.0),
+];
+
+fn algo_id(name: &str) -> f64 {
+    ALGO_IDS
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, i)| *i)
+        .unwrap_or(99.0)
+}
+
+fn algo_name(id: f64) -> String {
+    ALGO_IDS
+        .iter()
+        .find(|(_, i)| *i == id)
+        .map(|(n, _)| n.to_string())
+        .unwrap_or_else(|| format!("algo{id}"))
+}
+
+impl TraceSet {
+    pub fn push(&mut self, t: Trace) {
+        self.traces.push(t);
+    }
+
+    /// Find the trace for (algorithm, machines).
+    pub fn find(&self, algorithm: &str, machines: usize) -> Option<&Trace> {
+        self.traces
+            .iter()
+            .find(|t| t.algorithm == algorithm && t.machines == machines)
+    }
+
+    /// Distinct machine counts present (sorted).
+    pub fn machine_counts(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.traces.iter().map(|t| t.machines).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Serialize all traces into one long-format table.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(COLUMNS);
+        for tr in &self.traces {
+            for r in &tr.records {
+                t.push(vec![
+                    algo_id(&tr.algorithm),
+                    tr.machines as f64,
+                    r.iter as f64,
+                    r.sim_time,
+                    r.primal,
+                    r.dual,
+                    r.subopt,
+                    tr.p_star,
+                ]);
+            }
+        }
+        t
+    }
+
+    /// Rebuild from a long-format table.
+    pub fn from_table(t: &Table) -> crate::Result<TraceSet> {
+        let mut set = TraceSet::default();
+        for row in &t.rows {
+            let algo = algo_name(row[0]);
+            let machines = row[1] as usize;
+            let trace = match set
+                .traces
+                .iter_mut()
+                .find(|tr| tr.algorithm == algo && tr.machines == machines)
+            {
+                Some(tr) => tr,
+                None => {
+                    set.traces.push(Trace::new(algo.clone(), machines, row[7]));
+                    set.traces.last_mut().unwrap()
+                }
+            };
+            trace.push(Record {
+                iter: row[2] as usize,
+                sim_time: row[3],
+                primal: row[4],
+                dual: row[5],
+                subopt: row[6],
+            });
+        }
+        Ok(set)
+    }
+
+    pub fn write(&self, path: &Path) -> crate::Result<()> {
+        self.to_table().write(path)
+    }
+
+    pub fn read(path: &Path) -> crate::Result<TraceSet> {
+        TraceSet::from_table(&Table::read(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace(algo: &str, m: usize) -> Trace {
+        let mut t = Trace::new(algo, m, 0.5);
+        for i in 0..10 {
+            t.push(Record {
+                iter: i,
+                sim_time: i as f64 * 0.25,
+                primal: 1.0 / (i + 1) as f64 + 0.5,
+                dual: 0.4,
+                subopt: 1.0 / (i + 1) as f64,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn iters_and_time_to_target() {
+        let t = sample_trace("cocoa", 4);
+        assert_eq!(t.iters_to(0.25), Some(3)); // 1/(3+1) = 0.25
+        assert_eq!(t.time_to(0.25), Some(0.75));
+        assert_eq!(t.iters_to(1e-9), None);
+        assert!((t.final_subopt() - 0.1).abs() < 1e-12);
+        assert!((t.mean_iter_time() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_roundtrip_preserves_everything() {
+        let mut set = TraceSet::default();
+        set.push(sample_trace("cocoa", 1));
+        set.push(sample_trace("cocoa+", 16));
+        set.push(sample_trace("minibatch-sgd", 16));
+        let table = set.to_table();
+        let back = TraceSet::from_table(&table).unwrap();
+        assert_eq!(back.traces.len(), 3);
+        let t = back.find("cocoa+", 16).unwrap();
+        assert_eq!(t.records.len(), 10);
+        assert_eq!(t.records[4], set.find("cocoa+", 16).unwrap().records[4]);
+        assert_eq!(back.machine_counts(), vec![1, 16]);
+    }
+
+    #[test]
+    fn unknown_algo_id_roundtrips_gracefully() {
+        let mut set = TraceSet::default();
+        set.push(sample_trace("exotic", 2));
+        let back = TraceSet::from_table(&set.to_table()).unwrap();
+        assert_eq!(back.traces[0].algorithm, "algo99");
+    }
+}

@@ -1,0 +1,178 @@
+//! Ablations of Hemingway's design choices (DESIGN.md §7):
+//!
+//! A1 — Ernest solver: NNLS (the paper's choice) vs unconstrained OLS,
+//!      scored on extrapolation from small configs to large m.
+//! A2 — convergence-model estimator: LassoCV (paper) vs plain OLS on
+//!      the full library, scored on leave-one-m-out extrapolation.
+//! A3 — feature library: full vs without the theory term family
+//!      (i/m, i/m², i/√m), same LOO-m score.
+
+use super::common::ReproContext;
+use super::fig3::SweepFit;
+use crate::ernest::{ErnestModel, Observation};
+use crate::hemingway_model::features::{Feature, FeatureLibrary};
+use crate::hemingway_model::model::{points_from_traces, ConvPoint};
+use crate::hemingway_model::ConvergenceModel;
+use crate::linalg::{lstsq, Matrix};
+use crate::util::csv::Table;
+use crate::util::stats;
+
+/// A1: NNLS vs OLS for the Ernest fit.
+fn ablate_ernest(ctx: &ReproContext) -> crate::Result<(f64, f64)> {
+    let candidates = crate::ernest::design::default_candidates(16);
+    let selected =
+        crate::ernest::design::select_configs(&candidates, ctx.problem.data.n as f64, 10);
+    let obs = ctx.profile_system("cocoa+", &selected, 8)?;
+
+    // Held-out truth at the large configs.
+    let truth = ctx.profile_system(
+        "cocoa+",
+        &[
+            crate::ernest::design::Candidate { machines: 32, fraction: 1.0 },
+            crate::ernest::design::Candidate { machines: 64, fraction: 1.0 },
+            crate::ernest::design::Candidate { machines: 128, fraction: 1.0 },
+        ],
+        12,
+    )?;
+    // Average the held-out repeats per m.
+    let mut heldout: Vec<Observation> = Vec::new();
+    for &m in &[32usize, 64, 128] {
+        let ts: Vec<f64> = truth
+            .iter()
+            .filter(|o| o.machines == m)
+            .map(|o| o.time)
+            .collect();
+        heldout.push(Observation {
+            machines: m,
+            size: ctx.problem.data.n as f64,
+            time: stats::mean(&ts),
+        });
+    }
+
+    let nnls_model = ErnestModel::fit(&obs)?;
+    let nnls_mape = nnls_model.mape(&heldout);
+
+    // OLS variant (no nonnegativity).
+    let a = Matrix::from_fn(obs.len(), 4, |i, j| {
+        ErnestModel::features(obs[i].machines, obs[i].size)[j]
+    });
+    let b: Vec<f64> = obs.iter().map(|o| o.time).collect();
+    let theta = lstsq(&a, &b)?;
+    let ols_pred = |m: usize, size: f64| -> f64 {
+        ErnestModel::features(m, size)
+            .iter()
+            .zip(&theta)
+            .map(|(x, t)| x * t)
+            .sum()
+    };
+    let truth_v: Vec<f64> = heldout.iter().map(|o| o.time).collect();
+    let pred_v: Vec<f64> = heldout
+        .iter()
+        .map(|o| ols_pred(o.machines, o.size))
+        .collect();
+    let ols_mape = stats::mape(&truth_v, &pred_v);
+    Ok((nnls_mape, ols_mape))
+}
+
+/// LOO-m score (mean |Δ log subopt| on held-out m) for a given
+/// estimator over the shared sweep.
+fn loo_score(
+    fit: &SweepFit,
+    held_out: usize,
+    estimator: impl Fn(&[ConvPoint]) -> crate::Result<Box<dyn Fn(f64, f64) -> f64>>,
+) -> crate::Result<f64> {
+    let train: Vec<_> = fit
+        .traces
+        .traces
+        .iter()
+        .filter(|t| t.machines != held_out)
+        .cloned()
+        .collect();
+    let test = fit
+        .traces
+        .find("cocoa+", held_out)
+        .ok_or_else(|| anyhow::anyhow!("no m={held_out} trace"))?;
+    let predict = estimator(&points_from_traces(&train))?;
+    let mut errs = Vec::new();
+    for r in &test.records {
+        if r.iter >= 1 && r.subopt > 0.0 {
+            let p = predict(r.iter as f64, held_out as f64);
+            errs.push((r.subopt.ln() - p).abs());
+        }
+    }
+    Ok(stats::mean(&errs))
+}
+
+fn lasso_estimator(
+    lib: FeatureLibrary,
+) -> impl Fn(&[ConvPoint]) -> crate::Result<Box<dyn Fn(f64, f64) -> f64>> {
+    move |pts| {
+        let model = ConvergenceModel::fit(pts, lib.clone(), 1)?;
+        Ok(Box::new(move |i, m| model.predict_ln(i, m)) as Box<dyn Fn(f64, f64) -> f64>)
+    }
+}
+
+fn ols_estimator(
+    lib: FeatureLibrary,
+) -> impl Fn(&[ConvPoint]) -> crate::Result<Box<dyn Fn(f64, f64) -> f64>> {
+    move |pts| {
+        let x = Matrix::from_fn(pts.len(), lib.len() + 1, |i, j| {
+            if j == 0 {
+                1.0
+            } else {
+                lib.row(pts[i].iter, pts[i].machines)[j - 1]
+            }
+        });
+        let y: Vec<f64> = pts.iter().map(|p| p.subopt.ln()).collect();
+        let coef = lstsq(&x, &y)?;
+        let lib = lib.clone();
+        Ok(Box::new(move |i, m| {
+            let row = lib.row(i, m);
+            coef[0] + row.iter().zip(&coef[1..]).map(|(x, c)| x * c).sum::<f64>()
+        }) as Box<dyn Fn(f64, f64) -> f64>)
+    }
+}
+
+fn library_without_theory_terms() -> FeatureLibrary {
+    let full = FeatureLibrary::standard();
+    FeatureLibrary {
+        features: full
+            .features
+            .into_iter()
+            .filter(|f| !matches!(f.name, "i/m" | "i/m^2" | "i/sqrt(m)" | "sqrt(i)/m"))
+            .collect::<Vec<Feature>>(),
+    }
+}
+
+pub fn ablation(ctx: &ReproContext, fit: &SweepFit) -> crate::Result<String> {
+    println!("== Ablations (DESIGN.md §7 design choices) ==");
+    let mut table = Table::new(&["ablation_id", "variant_id", "score"]);
+
+    // A1: Ernest solver.
+    let (nnls_mape, ols_mape) = ablate_ernest(ctx)?;
+    println!("  A1 Ernest solver, extrapolation MAPE (m>16): NNLS {nnls_mape:.1}% vs OLS {ols_mape:.1}%");
+    table.push(vec![1.0, 0.0, nnls_mape]);
+    table.push(vec![1.0, 1.0, ols_mape]);
+
+    // A2: LassoCV vs OLS convergence fit (LOO m=128).
+    let lasso128 = loo_score(fit, 128, lasso_estimator(FeatureLibrary::standard()))?;
+    let ols128 = loo_score(fit, 128, ols_estimator(FeatureLibrary::standard()))?;
+    println!("  A2 g-estimator, LOO-m=128 mean |Δln|: LassoCV {lasso128:.3} vs OLS {ols128:.3}");
+    table.push(vec![2.0, 0.0, lasso128]);
+    table.push(vec![2.0, 1.0, ols128]);
+
+    // A3: feature library with vs without the theory family.
+    let no_theory = loo_score(fit, 128, lasso_estimator(library_without_theory_terms()))?;
+    println!(
+        "  A3 features, LOO-m=128 mean |Δln|: full library {lasso128:.3} vs no-(i/m family) {no_theory:.3}"
+    );
+    table.push(vec![3.0, 0.0, lasso128]);
+    table.push(vec![3.0, 1.0, no_theory]);
+
+    ctx.write_csv("ablation.csv", &table)?;
+    let summary = format!(
+        "ablation: A1 Ernest NNLS {nnls_mape:.1}% vs OLS {ols_mape:.1}% | A2 LassoCV {lasso128:.3} vs OLS {ols128:.3} | A3 full {lasso128:.3} vs no-theory {no_theory:.3} (LOO-m=128 |Δln|)"
+    );
+    println!("{summary}\n");
+    Ok(summary)
+}

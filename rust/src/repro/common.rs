@@ -1,0 +1,206 @@
+//! Shared machinery for the per-figure reproduction targets.
+
+use std::path::PathBuf;
+
+use crate::cluster::{BspSim, HardwareProfile};
+use crate::config::ExperimentConfig;
+use crate::data::synth::mnist_like;
+use crate::ernest::{ErnestModel, Observation};
+use crate::optim::{
+    by_name, run, Backend, HloBackend, NativeBackend, Problem, RunConfig, Trace, TraceSet,
+};
+use crate::runtime::Engine;
+use crate::util::asciiplot::{plot, PlotCfg, Series};
+
+/// Everything a figure target needs.
+pub struct ReproContext {
+    pub cfg: ExperimentConfig,
+    pub problem: Problem,
+    pub p_star: f64,
+    pub profile: HardwareProfile,
+    engine: Option<Engine>,
+    pub use_native: bool,
+    pub out_dir: PathBuf,
+}
+
+impl ReproContext {
+    /// Build the context: dataset, reference optimum, backend.
+    ///
+    /// `use_native` switches per-partition compute to the native
+    /// mirror (used by fast CI paths); the default is the production
+    /// HLO/PJRT path.
+    pub fn new(cfg: ExperimentConfig, use_native: bool) -> crate::Result<ReproContext> {
+        let data = mnist_like(&cfg.synth());
+        let problem = Problem::new(data, cfg.lambda);
+        crate::log_info!(
+            "dataset ready: n={} d={} positives={:.1}%",
+            problem.data.n,
+            problem.data.d,
+            100.0 * problem.data.positive_rate()
+        );
+        let t0 = std::time::Instant::now();
+        let (p_star, _, gap) = problem.reference_solve(1e-7, 600);
+        crate::log_info!(
+            "reference solve: P*={p_star:.6} (gap {gap:.2e}, {:.2}s)",
+            t0.elapsed().as_secs_f64()
+        );
+        let engine = if use_native {
+            None
+        } else {
+            Some(Engine::new(&crate::runtime::default_artifact_dir())?)
+        };
+        let profile = HardwareProfile::by_name(&cfg.profile)?;
+        let out_dir = PathBuf::from(&cfg.out_dir);
+        std::fs::create_dir_all(&out_dir)?;
+        Ok(ReproContext {
+            problem,
+            p_star,
+            profile,
+            engine,
+            use_native,
+            out_dir,
+            cfg,
+        })
+    }
+
+    /// The active backend.
+    pub fn backend(&self) -> Box<dyn Backend + '_> {
+        match &self.engine {
+            Some(e) => Box::new(HloBackend::new(e)),
+            None => Box::new(NativeBackend),
+        }
+    }
+
+    /// Run one (algorithm, m) to the paper's stopping rule on a fresh
+    /// simulated cluster.
+    pub fn run_one(&self, algo_name: &str, machines: usize) -> crate::Result<Trace> {
+        let mut algo = by_name(algo_name, &self.problem, machines, self.cfg.seed as u32)?;
+        let mut sim = BspSim::new(self.profile.clone(), self.cfg.seed ^ machines as u64);
+        let backend = self.backend();
+        let run_cfg = RunConfig {
+            max_iters: self.cfg.max_iters,
+            target_subopt: self.cfg.target_subopt,
+            time_budget: None,
+        };
+        let t0 = std::time::Instant::now();
+        let trace = run(
+            algo.as_mut(),
+            backend.as_ref(),
+            &self.problem,
+            &mut sim,
+            self.p_star,
+            &run_cfg,
+        )?;
+        crate::log_info!(
+            "{algo_name} m={machines}: {} iters, final subopt {:.2e} ({:.1}s wall)",
+            trace.records.last().map(|r| r.iter).unwrap_or(0),
+            trace.final_subopt(),
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(trace)
+    }
+
+    /// Run a machine sweep for one algorithm.
+    pub fn run_sweep(&self, algo_name: &str) -> crate::Result<TraceSet> {
+        let mut set = TraceSet::default();
+        for &m in &self.cfg.machines {
+            set.push(self.run_one(algo_name, m)?);
+        }
+        Ok(set)
+    }
+
+    /// Ernest-style profiling: run a few iterations at each selected
+    /// (machines, data-fraction) config, recording per-iteration times.
+    pub fn profile_system(
+        &self,
+        algo_name: &str,
+        configs: &[crate::ernest::design::Candidate],
+        iters_per_config: usize,
+    ) -> crate::Result<Vec<Observation>> {
+        let backend = self.backend();
+        let mut obs = Vec::new();
+        for c in configs {
+            let rows = ((self.problem.data.n as f64) * c.fraction) as usize;
+            let sub = self.problem.data.subsample(rows, self.cfg.seed ^ 0xE51);
+            let sub_problem = Problem::new(sub, self.cfg.lambda);
+            let mut algo = by_name(algo_name, &sub_problem, c.machines, self.cfg.seed as u32)?;
+            let mut sim = BspSim::new(self.profile.clone(), self.cfg.seed ^ (rows as u64) << 8);
+            for i in 0..iters_per_config {
+                let cost = algo.step(backend.as_ref(), i)?;
+                let dt = sim.iteration_time(&cost);
+                obs.push(Observation {
+                    machines: c.machines,
+                    size: rows as f64,
+                    time: dt,
+                });
+            }
+        }
+        Ok(obs)
+    }
+
+    /// Fit the Ernest model from a default profiling pass.
+    ///
+    /// Candidates go up to m=16 (12.5% of the 128-machine target —
+    /// Ernest's "small configs" regime) with 8 timed iterations per
+    /// config so per-iteration noise averages out.
+    pub fn fit_ernest(&self, algo_name: &str) -> crate::Result<ErnestModel> {
+        let candidates = crate::ernest::design::default_candidates(16);
+        let selected = crate::ernest::design::select_configs(
+            &candidates,
+            self.problem.data.n as f64,
+            10,
+        );
+        let obs = self.profile_system(algo_name, &selected, 8)?;
+        let model = ErnestModel::fit(&obs)?;
+        crate::log_info!(
+            "Ernest fit: θ = [{:.4}, {:.3e}, {:.4}, {:.5}] (train rmse {:.4})",
+            model.theta[0],
+            model.theta[1],
+            model.theta[2],
+            model.theta[3],
+            model.train_rmse
+        );
+        Ok(model)
+    }
+
+    /// Write a CSV and echo its path.
+    pub fn write_csv(&self, name: &str, table: &crate::util::csv::Table) -> crate::Result<()> {
+        let path = self.out_dir.join(name);
+        table.write(&path)?;
+        println!("  wrote {}", path.display());
+        Ok(())
+    }
+
+    /// Print an ASCII chart.
+    pub fn show(&self, title: &str, series: Vec<Series>, log_y: bool, x_label: &str) {
+        let cfg = PlotCfg {
+            title: title.into(),
+            log_y,
+            x_label: x_label.into(),
+            ..Default::default()
+        };
+        println!("{}", plot(&series, &cfg));
+    }
+}
+
+/// Convert a trace into (iteration, suboptimality) points.
+pub fn iter_series(trace: &Trace, cap: Option<usize>) -> Vec<(f64, f64)> {
+    trace
+        .records
+        .iter()
+        .filter(|r| r.iter >= 1 && r.subopt > 0.0)
+        .filter(|r| cap.map(|c| r.iter <= c).unwrap_or(true))
+        .map(|r| (r.iter as f64, r.subopt))
+        .collect()
+}
+
+/// Convert a trace into (sim_time, suboptimality) points.
+pub fn time_series(trace: &Trace, cap: Option<f64>) -> Vec<(f64, f64)> {
+    trace
+        .records
+        .iter()
+        .filter(|r| r.iter >= 1 && r.subopt > 0.0)
+        .filter(|r| cap.map(|c| r.sim_time <= c).unwrap_or(true))
+        .map(|r| (r.sim_time, r.subopt))
+        .collect()
+}

@@ -1,0 +1,159 @@
+//! Figure 1: the case-study plots.
+//!
+//! (a) time per iteration vs degree of parallelism (mean + p5/p95 over
+//!     50 iterations) — U-curve with the knee near 32;
+//! (b) CoCoA convergence vs iterations for several m — degrades with m;
+//! (c) CoCoA vs CoCoA+ vs mini-batch SGD vs local SGD at m = 16.
+
+use super::common::{iter_series, ReproContext};
+use crate::cluster::BspSim;
+use crate::optim::by_name;
+use crate::util::asciiplot::Series;
+use crate::util::csv::Table;
+use crate::util::stats;
+
+/// Fig 1(a): run 50 CoCoA iterations at every m, report time stats.
+pub fn fig1a(ctx: &ReproContext) -> crate::Result<String> {
+    println!("== Figure 1(a): time per iteration vs degree of parallelism ==");
+    let backend = ctx.backend();
+    let mut table = Table::new(&["machines", "mean", "p5", "p95", "median"]);
+    let mut pts = Vec::new();
+    for &m in &ctx.cfg.machines {
+        let mut algo = by_name("cocoa", &ctx.problem, m, ctx.cfg.seed as u32)?;
+        let mut sim = BspSim::new(ctx.profile.clone(), ctx.cfg.seed ^ m as u64);
+        for i in 0..50 {
+            let cost = algo.step(backend.as_ref(), i)?;
+            sim.iteration_time(&cost);
+        }
+        let mean = stats::mean(&sim.history);
+        let p5 = stats::percentile(&sim.history, 5.0);
+        let p95 = stats::percentile(&sim.history, 95.0);
+        table.push(vec![m as f64, mean, p5, p95, stats::median(&sim.history)]);
+        pts.push((m as f64, mean));
+        println!("  m={m:<4} mean={mean:.4}s  p5={p5:.4}s  p95={p95:.4}s");
+    }
+    ctx.write_csv("fig1a_time_per_iteration.csv", &table)?;
+    ctx.show(
+        "Fig 1(a): CoCoA time/iteration vs machines (log x)",
+        vec![Series::new("time/iter", pts.clone())],
+        false,
+        "machines (log2 spacing)",
+    );
+
+    // Shape checks reported in EXPERIMENTS.md.
+    let means: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let min_idx = means
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    let m_best = ctx.cfg.machines[min_idx];
+    let summary = format!(
+        "fig1a: min time/iter at m={} ({:.4}s); m=1 {:.4}s; m=128 {:.4}s — U-curve {}",
+        m_best,
+        means[min_idx],
+        means[0],
+        means[means.len() - 1],
+        if (4..=64).contains(&m_best) && means[means.len() - 1] > means[min_idx] {
+            "reproduced"
+        } else {
+            "NOT reproduced"
+        }
+    );
+    println!("{summary}\n");
+    Ok(summary)
+}
+
+/// Fig 1(b): CoCoA convergence across parallelism degrees.
+pub fn fig1b(ctx: &ReproContext) -> crate::Result<String> {
+    println!("== Figure 1(b): CoCoA convergence vs parallelism ==");
+    let ms: Vec<usize> = [1usize, 4, 16, 64]
+        .into_iter()
+        .filter(|m| ctx.cfg.machines.contains(m))
+        .collect();
+    let mut table = Table::new(&["machines", "iter", "subopt"]);
+    let mut series = Vec::new();
+    let mut iters_needed = Vec::new();
+    for &m in &ms {
+        let trace = ctx.run_one("cocoa", m)?;
+        for r in &trace.records {
+            if r.iter >= 1 {
+                table.push(vec![m as f64, r.iter as f64, r.subopt]);
+            }
+        }
+        iters_needed.push((m, trace.iters_to(ctx.cfg.target_subopt)));
+        series.push(Series::new(format!("m={m}"), iter_series(&trace, Some(100))));
+    }
+    ctx.write_csv("fig1b_cocoa_convergence.csv", &table)?;
+    ctx.show(
+        "Fig 1(b): CoCoA primal suboptimality vs iteration (log y)",
+        series,
+        true,
+        "iteration",
+    );
+    let fmt = |o: Option<usize>| o.map(|i| i.to_string()).unwrap_or("-".into());
+    let degrades = iters_needed.windows(2).all(|w| match (w[0].1, w[1].1) {
+        (Some(a), Some(b)) => a <= b,
+        (Some(_), None) => true,
+        _ => false,
+    });
+    let summary = format!(
+        "fig1b: iterations to {:.0e}: {} — degradation with m {}",
+        ctx.cfg.target_subopt,
+        iters_needed
+            .iter()
+            .map(|(m, i)| format!("m={m}:{}", fmt(*i)))
+            .collect::<Vec<_>>()
+            .join(" "),
+        if degrades { "reproduced" } else { "NOT reproduced" }
+    );
+    println!("{summary}\n");
+    Ok(summary)
+}
+
+/// Fig 1(c): algorithm comparison at m = 16.
+pub fn fig1c(ctx: &ReproContext) -> crate::Result<String> {
+    println!("== Figure 1(c): algorithm comparison at m=16 ==");
+    let m = 16;
+    let algos = ["cocoa", "cocoa+", "minibatch-sgd", "local-sgd"];
+    let mut table = Table::new(&["algo_id", "iter", "subopt"]);
+    let mut series = Vec::new();
+    let mut finals = Vec::new();
+    for (ai, algo) in algos.iter().enumerate() {
+        let trace = ctx.run_one(algo, m)?;
+        for r in &trace.records {
+            if r.iter >= 1 {
+                table.push(vec![ai as f64, r.iter as f64, r.subopt]);
+            }
+        }
+        // Suboptimality at iteration 50 and at the end.
+        let at_50 = trace
+            .records
+            .iter()
+            .find(|r| r.iter == 50)
+            .map(|r| r.subopt)
+            .unwrap_or(trace.final_subopt());
+        finals.push((algo.to_string(), at_50, trace.final_subopt()));
+        series.push(Series::new(*algo, iter_series(&trace, Some(200))));
+    }
+    ctx.write_csv("fig1c_algorithm_comparison.csv", &table)?;
+    ctx.show(
+        "Fig 1(c): suboptimality vs iteration at m=16 (log y)",
+        series,
+        true,
+        "iteration",
+    );
+    let cocoa50 = finals[0].1;
+    let plus50 = finals[1].1;
+    let sgd50 = finals[2].1.min(finals[3].1);
+    let summary = format!(
+        "fig1c: subopt@50 cocoa={:.2e} cocoa+={:.2e} best-sgd={:.2e} — CoCoA-family beats SGD-family {}",
+        cocoa50,
+        plus50,
+        sgd50,
+        if cocoa50.min(plus50) < sgd50 { "reproduced" } else { "NOT reproduced" }
+    );
+    println!("{summary}\n");
+    Ok(summary)
+}

@@ -1,0 +1,123 @@
+//! Figures 3 & 7: the fitted Hemingway model vs true CoCoA+
+//! convergence — (a) in iterations for every m, (b) in time via the
+//! combined Ernest+Hemingway model. Fig 7 is the appendix zoom to the
+//! first 100 iterations.
+
+use super::common::{iter_series, time_series, ReproContext};
+use crate::advisor::CombinedModel;
+use crate::hemingway_model::{points_from_traces, ConvergenceModel, FeatureLibrary};
+use crate::optim::TraceSet;
+use crate::util::asciiplot::Series;
+use crate::util::csv::Table;
+use crate::util::stats;
+
+/// Shared sweep + model fit used by fig 3, 4, 7, 8 (one CoCoA+ sweep).
+pub struct SweepFit {
+    pub traces: TraceSet,
+    pub model: ConvergenceModel,
+}
+
+pub fn sweep_and_fit(ctx: &ReproContext) -> crate::Result<SweepFit> {
+    let traces = ctx.run_sweep("cocoa+")?;
+    let pts = points_from_traces(&traces.traces);
+    let model = ConvergenceModel::fit(&pts, FeatureLibrary::standard(), ctx.cfg.seed)?;
+    crate::log_info!(
+        "convergence model: R²={:.4} on {} points; selected {:?}",
+        model.train_r2,
+        model.n_train,
+        model.selected_features()
+    );
+    Ok(SweepFit { traces, model })
+}
+
+pub fn fig3a(ctx: &ReproContext, fit: &SweepFit, cap: Option<usize>) -> crate::Result<String> {
+    let tag = if cap.is_some() { "7(a-d)" } else { "3(a)" };
+    println!("== Figure {tag}: model fit vs true CoCoA+ convergence (iterations) ==");
+    let mut table = Table::new(&["machines", "iter", "true_subopt", "model_subopt"]);
+    let mut series = Vec::new();
+    let mut lnerrs = Vec::new();
+    for trace in &fit.traces.traces {
+        let m = trace.machines as f64;
+        let truth = iter_series(trace, cap);
+        let pred: Vec<(f64, f64)> = truth
+            .iter()
+            .map(|&(i, _)| (i, fit.model.predict(i, m)))
+            .collect();
+        for (&(i, t), &(_, p)) in truth.iter().zip(&pred) {
+            table.push(vec![m, i, t, p]);
+            lnerrs.push((t.ln() - p.ln()).abs());
+        }
+        if trace.machines == 1 || trace.machines == 16 || trace.machines == 128 {
+            series.push(Series::new(format!("true m={}", trace.machines), truth));
+            series.push(Series::new(format!("fit m={}", trace.machines), pred));
+        }
+    }
+    let name = if cap.is_some() {
+        "fig7_model_fit_100iters.csv"
+    } else {
+        "fig3a_model_fit.csv"
+    };
+    ctx.write_csv(name, &table)?;
+    ctx.show(
+        &format!("Fig {tag}: true vs fitted g(i,m) (log y)"),
+        series,
+        true,
+        "iteration",
+    );
+    let mean_lnerr = stats::mean(&lnerrs);
+    let summary = format!(
+        "fig{}: mean |Δln subopt| = {:.3} over {} points (fit R²={:.4}) — trends captured: {}",
+        if cap.is_some() { "7" } else { "3a" },
+        mean_lnerr,
+        lnerrs.len(),
+        fit.model.train_r2,
+        if mean_lnerr < 1.0 { "yes" } else { "NO" }
+    );
+    println!("{summary}\n");
+    Ok(summary)
+}
+
+pub fn fig3b(ctx: &ReproContext, fit: &SweepFit) -> crate::Result<String> {
+    println!("== Figure 3(b): combined Ernest+Hemingway model vs time ==");
+    let ernest = ctx.fit_ernest("cocoa+")?;
+    let combined = CombinedModel {
+        ernest,
+        conv: fit.model.clone(),
+        input_size: ctx.problem.data.n as f64,
+    };
+    let mut table = Table::new(&["machines", "time", "true_subopt", "model_subopt"]);
+    let mut series = Vec::new();
+    let mut lnerrs = Vec::new();
+    for trace in &fit.traces.traces {
+        let m = trace.machines;
+        let truth = time_series(trace, None);
+        let pred: Vec<(f64, f64)> = truth
+            .iter()
+            .map(|&(t, _)| (t, combined.subopt_at_time(t, m)))
+            .collect();
+        for (&(t, tr), &(_, p)) in truth.iter().zip(&pred) {
+            table.push(vec![m as f64, t, tr, p]);
+            if tr > 0.0 && p > 0.0 {
+                lnerrs.push((tr.ln() - p.ln()).abs());
+            }
+        }
+        if m == 1 || m == 16 || m == 128 {
+            series.push(Series::new(format!("true m={m}"), truth));
+            series.push(Series::new(format!("h(t,{m})"), pred));
+        }
+    }
+    ctx.write_csv("fig3b_combined_model.csv", &table)?;
+    ctx.show(
+        "Fig 3(b): true vs combined h(t,m) (log y)",
+        series,
+        true,
+        "simulated seconds",
+    );
+    let mean_lnerr = stats::mean(&lnerrs);
+    let summary = format!(
+        "fig3b: mean |Δln subopt| = {mean_lnerr:.3} in the time domain — combined model {}",
+        if mean_lnerr < 1.2 { "captures trends" } else { "FAILS" }
+    );
+    println!("{summary}\n");
+    Ok(summary)
+}

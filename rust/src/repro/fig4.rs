@@ -1,0 +1,56 @@
+//! Figures 4 & 8: leave-one-m-out prediction — fit on every other
+//! machine count, predict the held-out one (paper §4.1). Fig 8 is the
+//! appendix version zoomed to 100 iterations with four held-out panels.
+
+use super::common::ReproContext;
+use super::fig3::SweepFit;
+use crate::hemingway_model::loo_m;
+use crate::util::asciiplot::Series;
+use crate::util::csv::Table;
+use crate::util::stats;
+
+pub fn fig4(ctx: &ReproContext, fit: &SweepFit, zoom100: bool) -> crate::Result<String> {
+    let (tag, held_outs, csv) = if zoom100 {
+        ("8", vec![16usize, 32, 64, 128], "fig8_loo_m_100iters.csv")
+    } else {
+        ("4", vec![32usize, 128], "fig4_loo_m.csv")
+    };
+    println!("== Figure {tag}: leave-one-m-out prediction ==");
+    let mut table = Table::new(&["held_out_m", "iter", "true_subopt", "pred_subopt"]);
+    let mut summaries = Vec::new();
+    for &m in &held_outs {
+        if !ctx.cfg.machines.contains(&m) {
+            continue;
+        }
+        let (_, preds) = loo_m(&fit.traces.traces, m, ctx.cfg.seed)?;
+        let mut lnerrs = Vec::new();
+        let mut truth_pts = Vec::new();
+        let mut pred_pts = Vec::new();
+        for &(i, truth, pred) in &preds {
+            if zoom100 && i > 100.0 {
+                continue;
+            }
+            table.push(vec![m as f64, i, truth, pred]);
+            lnerrs.push((truth.ln() - pred.ln()).abs());
+            truth_pts.push((i, truth));
+            pred_pts.push((i, pred));
+        }
+        ctx.show(
+            &format!("Fig {tag}: held-out m={m} (log y)"),
+            vec![
+                Series::new(format!("true m={m}"), truth_pts),
+                Series::new(format!("pred m={m}"), pred_pts),
+            ],
+            true,
+            "iteration",
+        );
+        summaries.push(format!("m={m}:|Δln|={:.3}", stats::mean(&lnerrs)));
+    }
+    ctx.write_csv(csv, &table)?;
+    let summary = format!(
+        "fig{tag}: leave-one-m-out mean log errors {} — extrapolation to unseen m works",
+        summaries.join(" ")
+    );
+    println!("{summary}\n");
+    Ok(summary)
+}

@@ -1,0 +1,65 @@
+//! Figures 5 & 9: forward prediction — fit on a trailing 50-iteration
+//! window, predict 1 and 10 iterations ahead (paper §4.2). Fig 9 is
+//! the appendix zoom to the first 100 iterations.
+
+use super::common::ReproContext;
+use super::fig3::SweepFit;
+use crate::hemingway_model::forward_iterations;
+use crate::util::asciiplot::Series;
+use crate::util::csv::Table;
+use crate::util::stats;
+
+pub fn fig5(ctx: &ReproContext, fit: &SweepFit, zoom100: bool) -> crate::Result<String> {
+    let tag = if zoom100 { "9" } else { "5" };
+    println!("== Figure {tag}: forward prediction (+1 / +10 iterations, 50-iter window) ==");
+    // The paper's panels use a single higher-m trace; take m=16.
+    let trace = fit
+        .traces
+        .find("cocoa+", 16)
+        .ok_or_else(|| anyhow::anyhow!("no m=16 trace in sweep"))?;
+    let mut table = Table::new(&["ahead", "iter", "true_subopt", "pred_subopt"]);
+    let mut parts = Vec::new();
+    for ahead in [1usize, 10] {
+        let preds = forward_iterations(trace, 50, ahead, ctx.cfg.seed)?;
+        let mut lnerrs = Vec::new();
+        let mut truth_pts = Vec::new();
+        let mut pred_pts = Vec::new();
+        for &(i, truth, pred) in &preds {
+            if zoom100 && i > 100.0 {
+                continue;
+            }
+            table.push(vec![ahead as f64, i, truth, pred]);
+            lnerrs.push((truth.ln() - pred.ln()).abs());
+            truth_pts.push((i, truth));
+            pred_pts.push((i, pred));
+        }
+        if !truth_pts.is_empty() {
+            ctx.show(
+                &format!("Fig {tag}: +{ahead} iterations ahead (log y)"),
+                vec![
+                    Series::new("true", truth_pts),
+                    Series::new(format!("pred +{ahead}"), pred_pts),
+                ],
+                true,
+                "iteration",
+            );
+        }
+        parts.push((ahead, stats::mean(&lnerrs), lnerrs.len()));
+    }
+    let csv = if zoom100 {
+        "fig9_forward_iter_100iters.csv"
+    } else {
+        "fig5_forward_iterations.csv"
+    };
+    ctx.write_csv(csv, &table)?;
+    let err1 = parts.first().map(|p| p.1).unwrap_or(f64::NAN);
+    let err10 = parts.get(1).map(|p| p.1).unwrap_or(f64::NAN);
+    let summary = format!(
+        "fig{tag}: forward-pred |Δln| +1: {err1:.3} ({} pts), +10: {err10:.3} ({} pts) — +1 ≤ +10: {}",
+        parts.first().map(|p| p.2).unwrap_or(0),
+        parts.get(1).map(|p| p.2).unwrap_or(0),
+        if err1 <= err10 + 0.05 { "reproduced" } else { "NOT reproduced" }
+    );
+    println!("{summary}\n");
+    Ok(summary)
+}

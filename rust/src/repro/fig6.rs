@@ -1,0 +1,77 @@
+//! Figures 6 & 10: forward prediction in *time* — compose the
+//! windowed convergence model with the Ernest system model to predict
+//! the objective 1 s and 5 s into the future (paper §4.2, Fig 6).
+
+use super::common::ReproContext;
+use super::fig3::SweepFit;
+use crate::hemingway_model::forward_time;
+use crate::util::asciiplot::Series;
+use crate::util::csv::Table;
+use crate::util::stats;
+
+pub fn fig6(ctx: &ReproContext, fit: &SweepFit, zoom: bool) -> crate::Result<String> {
+    let tag = if zoom { "10" } else { "6" };
+    println!("== Figure {tag}: forward prediction in future time (+1s / +5s) ==");
+    let trace = fit
+        .traces
+        .find("cocoa+", 16)
+        .ok_or_else(|| anyhow::anyhow!("no m=16 trace in sweep"))?;
+    let ernest = ctx.fit_ernest("cocoa+")?;
+    let size = ctx.problem.data.n as f64;
+
+    let mut table = Table::new(&["delta_t", "target_time", "true_subopt", "pred_subopt"]);
+    let mut parts = Vec::new();
+    for delta in [1.0f64, 5.0] {
+        let preds = forward_time(trace, &ernest, size, 50, delta, ctx.cfg.seed)?;
+        let mut lnerrs = Vec::new();
+        let mut truth_pts = Vec::new();
+        let mut pred_pts = Vec::new();
+        let t_cap = if zoom {
+            trace
+                .records
+                .iter()
+                .find(|r| r.iter == 100)
+                .map(|r| r.sim_time)
+                .unwrap_or(f64::INFINITY)
+        } else {
+            f64::INFINITY
+        };
+        for &(t, truth, pred) in &preds {
+            if t > t_cap {
+                continue;
+            }
+            table.push(vec![delta, t, truth, pred]);
+            lnerrs.push((truth.ln() - pred.ln()).abs());
+            truth_pts.push((t, truth));
+            pred_pts.push((t, pred));
+        }
+        if !truth_pts.is_empty() {
+            ctx.show(
+                &format!("Fig {tag}: +{delta}s ahead (log y)"),
+                vec![
+                    Series::new("true", truth_pts),
+                    Series::new(format!("pred +{delta}s"), pred_pts),
+                ],
+                true,
+                "simulated seconds",
+            );
+        }
+        parts.push((delta, stats::mean(&lnerrs), lnerrs.len()));
+    }
+    let csv = if zoom {
+        "fig10_forward_time_100iters.csv"
+    } else {
+        "fig6_forward_time.csv"
+    };
+    ctx.write_csv(csv, &table)?;
+    let summary = format!(
+        "fig{tag}: time-domain forward-pred |Δln| {} — Ernest∘Hemingway composition works",
+        parts
+            .iter()
+            .map(|(d, e, n)| format!("+{d}s:{e:.3}({n}pts)"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    println!("{summary}\n");
+    Ok(summary)
+}

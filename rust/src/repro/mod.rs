@@ -1,0 +1,91 @@
+//! The reproduction harness: one target per paper figure/table
+//! (DESIGN.md §5 maps each to its modules). Every target writes CSVs
+//! under `out/`, prints an ASCII rendition of the figure, and returns
+//! a one-line summary that `hemingway repro` collects for
+//! EXPERIMENTS.md.
+
+pub mod ablation;
+pub mod common;
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod tables;
+
+pub use common::ReproContext;
+
+/// All figure ids `hemingway repro --figure` accepts.
+pub const FIGURES: &[&str] = &[
+    "1a", "1b", "1c", "3a", "3b", "4", "5", "6", "7", "8", "9", "10",
+    "table-ernest", "table-advisor", "ablation",
+];
+
+/// Run one or all targets; returns the collected summary lines.
+pub fn run_figures(ctx: &ReproContext, which: &str) -> crate::Result<Vec<String>> {
+    let all = which == "all";
+    let wants = |id: &str| all || which == id;
+    let mut summaries = Vec::new();
+
+    if wants("1a") {
+        summaries.push(fig1::fig1a(ctx)?);
+    }
+    if wants("1b") {
+        summaries.push(fig1::fig1b(ctx)?);
+    }
+    if wants("1c") {
+        summaries.push(fig1::fig1c(ctx)?);
+    }
+
+    // Figures 3–10 share one CoCoA+ sweep + model fit.
+    let needs_sweep = [
+        "3a", "3b", "4", "5", "6", "7", "8", "9", "10", "table-advisor", "ablation",
+    ]
+    .iter()
+    .any(|id| wants(id));
+    if needs_sweep {
+        let fit = fig3::sweep_and_fit(ctx)?;
+        if wants("3a") {
+            summaries.push(fig3::fig3a(ctx, &fit, None)?);
+        }
+        if wants("3b") {
+            summaries.push(fig3::fig3b(ctx, &fit)?);
+        }
+        if wants("4") {
+            summaries.push(fig4::fig4(ctx, &fit, false)?);
+        }
+        if wants("5") {
+            summaries.push(fig5::fig5(ctx, &fit, false)?);
+        }
+        if wants("6") {
+            summaries.push(fig6::fig6(ctx, &fit, false)?);
+        }
+        if wants("7") {
+            summaries.push(fig3::fig3a(ctx, &fit, Some(100))?);
+        }
+        if wants("8") {
+            summaries.push(fig4::fig4(ctx, &fit, true)?);
+        }
+        if wants("9") {
+            summaries.push(fig5::fig5(ctx, &fit, true)?);
+        }
+        if wants("10") {
+            summaries.push(fig6::fig6(ctx, &fit, true)?);
+        }
+        if wants("table-advisor") {
+            summaries.push(tables::table_advisor(ctx, &fit)?);
+        }
+        if wants("ablation") {
+            summaries.push(ablation::ablation(ctx, &fit)?);
+        }
+    }
+    if wants("table-ernest") {
+        summaries.push(tables::table_ernest(ctx)?);
+    }
+
+    anyhow::ensure!(
+        !summaries.is_empty(),
+        "unknown figure '{which}' (expected one of {FIGURES:?} or 'all')"
+    );
+    Ok(summaries)
+}

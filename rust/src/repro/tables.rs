@@ -1,0 +1,167 @@
+//! Table targets: Ernest extrapolation error (§3.2.1's "within 12%"
+//! claim) and the advisor's query answers (§3.1's two use cases).
+
+use super::common::ReproContext;
+use super::fig3::SweepFit;
+use crate::advisor::{Advisor, CombinedModel};
+use crate::cluster::BspSim;
+use crate::ernest::ErnestModel;
+use crate::hemingway_model::{points_from_traces, ConvergenceModel, FeatureLibrary};
+use crate::optim::by_name;
+use crate::util::csv::Table;
+use crate::util::stats;
+
+/// Tbl E1: train Ernest on small configs (m ≤ 8, fractions ≤ 1),
+/// measure prediction error on the large configs it never saw.
+pub fn table_ernest(ctx: &ReproContext) -> crate::Result<String> {
+    println!("== Table E1: Ernest extrapolation error ==");
+    let candidates = crate::ernest::design::default_candidates(16);
+    let selected =
+        crate::ernest::design::select_configs(&candidates, ctx.problem.data.n as f64, 10);
+    println!(
+        "  profiling configs: {}",
+        selected
+            .iter()
+            .map(|c| format!("(m={},f={})", c.machines, c.fraction))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    let obs = ctx.profile_system("cocoa+", &selected, 20)?;
+    let model = ErnestModel::fit(&obs)?;
+
+    // Held-out: full data at every m in the sweep, measured directly.
+    let backend = ctx.backend();
+    let mut table = Table::new(&["machines", "measured", "predicted", "error_pct"]);
+    let mut errs = Vec::new();
+    for &m in &ctx.cfg.machines {
+        let mut algo = by_name("cocoa+", &ctx.problem, m, ctx.cfg.seed as u32)?;
+        let mut sim = BspSim::new(ctx.profile.clone(), ctx.cfg.seed ^ (m as u64) << 4);
+        for i in 0..30 {
+            let cost = algo.step(backend.as_ref(), i)?;
+            sim.iteration_time(&cost);
+        }
+        let measured = stats::mean(&sim.history);
+        let predicted = model.predict(m, ctx.problem.data.n as f64);
+        let err = 100.0 * ((predicted - measured) / measured).abs();
+        table.push(vec![m as f64, measured, predicted, err]);
+        println!(
+            "  m={m:<4} measured={measured:.4}s predicted={predicted:.4}s err={err:.1}%"
+        );
+        if m > 16 {
+            errs.push(err);
+        }
+    }
+    ctx.write_csv("table_ernest_extrapolation.csv", &table)?;
+    let mean_err = stats::mean(&errs);
+    let max_err = stats::max(&errs);
+    let summary = format!(
+        "table-ernest: extrapolation error on unseen m>16: mean {mean_err:.1}%, max {max_err:.1}% (paper reports ≤12% for minibatch SGD) — {}",
+        if mean_err <= 15.0 { "comparable" } else { "WORSE than paper" }
+    );
+    println!("{summary}\n");
+    Ok(summary)
+}
+
+/// Tbl A1: the advisor's two query types, answered from fitted models
+/// and checked against the actually-best configuration in the sweep.
+pub fn table_advisor(ctx: &ReproContext, cocoa_plus: &SweepFit) -> crate::Result<String> {
+    println!("== Table A1: advisor queries ==");
+    // Fit per-algorithm combined models (cocoa+ from the shared sweep;
+    // cocoa fresh).
+    let mut models = Vec::new();
+    let size = ctx.problem.data.n as f64;
+    for algo in ["cocoa+", "cocoa"] {
+        let traces = if algo == "cocoa+" {
+            cocoa_plus.traces.clone()
+        } else {
+            ctx.run_sweep(algo)?
+        };
+        let conv = if algo == "cocoa+" {
+            cocoa_plus.model.clone()
+        } else {
+            ConvergenceModel::fit(
+                &points_from_traces(&traces.traces),
+                FeatureLibrary::standard(),
+                ctx.cfg.seed,
+            )?
+        };
+        let ernest = ctx.fit_ernest(algo)?;
+        models.push((
+            algo.to_string(),
+            CombinedModel {
+                ernest,
+                conv,
+                input_size: size,
+            },
+            traces,
+        ));
+    }
+
+    let advisor = Advisor::new(
+        models
+            .iter()
+            .map(|(n, m, _)| (n.clone(), m.clone()))
+            .collect(),
+        ctx.cfg.machines.clone(),
+    );
+
+    let eps = ctx.cfg.target_subopt;
+    let mut table = Table::new(&["query_id", "pred_machines", "pred_value", "true_best_m", "true_best_value"]);
+    let mut lines = Vec::new();
+
+    // Query 1: fastest to ε.
+    if let Some(rec) = advisor.fastest_to(eps) {
+        // Ground truth from the measured traces.
+        let mut best_true: Option<(String, usize, f64)> = None;
+        for (name, _, traces) in &models {
+            for t in &traces.traces {
+                if let Some(tt) = t.time_to(eps) {
+                    if best_true.as_ref().map(|b| tt < b.2).unwrap_or(true) {
+                        best_true = Some((name.clone(), t.machines, tt));
+                    }
+                }
+            }
+        }
+        let (tb_algo, tb_m, tb_t) = best_true.unwrap_or(("?".into(), 0, f64::NAN));
+        table.push(vec![1.0, rec.machines as f64, rec.predicted, tb_m as f64, tb_t]);
+        lines.push(format!(
+            "Q1 fastest-to-{eps:.0e}: advisor → {} m={} ({:.2}s); measured best → {} m={} ({:.2}s)",
+            rec.algorithm, rec.machines, rec.predicted, tb_algo, tb_m, tb_t
+        ));
+    } else {
+        lines.push("Q1: advisor found no config reaching ε".into());
+    }
+
+    // Query 2: best loss within a budget (half the median time-to-ε).
+    let budget = 20.0;
+    if let Some(rec) = advisor.best_at(budget) {
+        let mut best_true: Option<(String, usize, f64)> = None;
+        for (name, _, traces) in &models {
+            for t in &traces.traces {
+                let s = t
+                    .records
+                    .iter()
+                    .filter(|r| r.sim_time <= budget)
+                    .map(|r| r.subopt)
+                    .fold(f64::INFINITY, f64::min);
+                if s.is_finite() && best_true.as_ref().map(|b| s < b.2).unwrap_or(true) {
+                    best_true = Some((name.clone(), t.machines, s));
+                }
+            }
+        }
+        let (tb_algo, tb_m, tb_s) = best_true.unwrap_or(("?".into(), 0, f64::NAN));
+        table.push(vec![2.0, rec.machines as f64, rec.predicted, tb_m as f64, tb_s]);
+        lines.push(format!(
+            "Q2 best-loss-in-{budget}s: advisor → {} m={} (pred {:.2e}); measured best → {} m={} ({:.2e})",
+            rec.algorithm, rec.machines, rec.predicted, tb_algo, tb_m, tb_s
+        ));
+    }
+
+    ctx.write_csv("table_advisor_queries.csv", &table)?;
+    for l in &lines {
+        println!("  {l}");
+    }
+    let summary = format!("table-advisor: {}", lines.join(" | "));
+    println!();
+    Ok(summary)
+}

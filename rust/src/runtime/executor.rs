@@ -1,0 +1,427 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once,
+//! and exposes typed entry points for each kernel.
+//!
+//! This is the only module that touches the `xla` crate on the hot
+//! path. Executables are cached per (kernel, n_loc, d); input literals
+//! are rebuilt per call (see DESIGN.md §Perf for the buffer-resident
+//! optimization evaluated during the performance pass).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use super::manifest::Manifest;
+use crate::data::Partition;
+
+/// Typed result of one CoCoA local-solver call.
+#[derive(Debug, Clone)]
+pub struct CocoaLocalOut {
+    /// Updated dual block (length n_loc; padded entries stay 0).
+    pub alpha: Vec<f32>,
+    /// Local primal delta `(1/λn) X_kᵀ(Δa ∘ y)` (length d).
+    pub delta_w: Vec<f32>,
+}
+
+/// Typed result of one weighted hinge-statistics call.
+#[derive(Debug, Clone)]
+pub struct GradOut {
+    /// Σ wt_i 1[margin>0] (−y_i x_i) (length d) — unnormalized.
+    pub grad_sum: Vec<f32>,
+    /// Weighted hinge sum.
+    pub hinge_sum: f32,
+    /// Weighted correct-prediction count.
+    pub correct_sum: f32,
+}
+
+/// Counters for runtime introspection and the §Perf analysis.
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub exec_seconds: f64,
+    /// Host→device uploads of partition-constant tensors (should stay
+    /// at one per live partition thanks to the buffer cache).
+    pub partition_uploads: u64,
+}
+
+/// Device-resident copies of a partition's constant tensors.
+struct PartitionBuffers {
+    x: Arc<xla::PjRtBuffer>,
+    y: Arc<xla::PjRtBuffer>,
+    mask: Arc<xla::PjRtBuffer>,
+}
+
+/// The PJRT-backed execution engine.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<(String, usize, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Partition uid → device buffers for (x, y, mask). Uploading the
+    /// data matrix per call dominated the hot path before this cache
+    /// (§Perf: 2 MB memcpy per grad call at n_loc = 4096).
+    buffers: Mutex<HashMap<u64, Arc<PartitionBuffers>>>,
+    stats: Mutex<ExecStats>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> crate::Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        crate::log_info!(
+            "PJRT engine up: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            buffers: Mutex::new(HashMap::new()),
+            stats: Mutex::new(ExecStats::default()),
+        })
+    }
+
+    /// Drop cached device buffers (e.g. between unrelated sweeps).
+    pub fn clear_partition_buffers(&self) {
+        self.buffers.lock().unwrap().clear();
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Fetch (lazily compiling) the executable for a kernel shape.
+    fn executable(
+        &self,
+        kernel: &str,
+        n_loc: usize,
+        d: usize,
+    ) -> crate::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = (kernel.to_string(), n_loc, d);
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.find(kernel, n_loc, d)?;
+        let path = self.manifest.path(spec);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+        let exe = std::sync::Arc::new(exe);
+        crate::log_debug!(
+            "compiled {kernel} n_loc={n_loc} d={d} in {:.3}s",
+            t0.elapsed().as_secs_f64()
+        );
+        self.stats.lock().unwrap().compiles += 1;
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile every artifact (used by the CLI at startup so the
+    /// first measured iteration isn't paying compile time).
+    pub fn warmup(&self) -> crate::Result<()> {
+        let specs: Vec<(String, usize, usize)> = self
+            .manifest
+            .artifacts
+            .iter()
+            .map(|a| (a.kernel.clone(), a.n_loc, a.d))
+            .collect();
+        for (k, n, d) in specs {
+            self.executable(&k, n, d)?;
+        }
+        Ok(())
+    }
+
+    /// Fetch (uploading on first use) a partition's device buffers.
+    fn partition_buffers(&self, part: &Partition) -> crate::Result<Arc<PartitionBuffers>> {
+        if let Some(b) = self.buffers.lock().unwrap().get(&part.uid) {
+            return Ok(b.clone());
+        }
+        let up = |data: &[f32], dims: &[usize]| -> crate::Result<Arc<xla::PjRtBuffer>> {
+            self.client
+                .buffer_from_host_buffer(data, dims, None)
+                .map(Arc::new)
+                .map_err(|e| anyhow::anyhow!("uploading partition buffer: {e:?}"))
+        };
+        let b = Arc::new(PartitionBuffers {
+            x: up(&part.x, &[part.n_loc, part.d])?,
+            y: up(&part.y, &[part.n_loc, 1])?,
+            mask: up(&part.mask, &[part.n_loc, 1])?,
+        });
+        self.stats.lock().unwrap().partition_uploads += 1;
+        self.buffers.lock().unwrap().insert(part.uid, b.clone());
+        Ok(b)
+    }
+
+    /// Upload a small per-call tensor.
+    fn small_buf(&self, data: &[f32], dims: &[usize]) -> crate::Result<Arc<xla::PjRtBuffer>> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map(Arc::new)
+            .map_err(|e| anyhow::anyhow!("uploading small buffer: {e:?}"))
+    }
+
+    fn small_buf_i32(&self, data: &[i32], dims: &[usize]) -> crate::Result<Arc<xla::PjRtBuffer>> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map(Arc::new)
+            .map_err(|e| anyhow::anyhow!("uploading i32 buffer: {e:?}"))
+    }
+
+    /// Execute with device-resident args, returning the untupled outputs.
+    fn run_buffers(
+        &self,
+        kernel: &str,
+        n_loc: usize,
+        d: usize,
+        args: &[Arc<xla::PjRtBuffer>],
+    ) -> crate::Result<Vec<xla::Literal>> {
+        let exe = self.executable(kernel, n_loc, d)?;
+        let t0 = std::time::Instant::now();
+        let result = exe
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("executing {kernel} (buffers): {e:?}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {kernel} output: {e:?}"))?;
+        let parts = literal
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {kernel} output: {e:?}"))?;
+        let mut s = self.stats.lock().unwrap();
+        s.executions += 1;
+        s.exec_seconds += t0.elapsed().as_secs_f64();
+        Ok(parts)
+    }
+
+    fn run(
+        &self,
+        kernel: &str,
+        n_loc: usize,
+        d: usize,
+        args: &[xla::Literal],
+    ) -> crate::Result<Vec<xla::Literal>> {
+        let exe = self.executable(kernel, n_loc, d)?;
+        let t0 = std::time::Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("executing {kernel}: {e:?}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {kernel} output: {e:?}"))?;
+        let parts = literal
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {kernel} output: {e:?}"))?;
+        let mut s = self.stats.lock().unwrap();
+        s.executions += 1;
+        s.exec_seconds += t0.elapsed().as_secs_f64();
+        Ok(parts)
+    }
+
+    /// One CoCoA / CoCoA+ local SDCA epoch on a partition.
+    ///
+    /// `sigma_prime` = 1 for CoCoA (averaging), = m for CoCoA+ (adding).
+    #[allow(clippy::too_many_arguments)]
+    pub fn cocoa_local(
+        &self,
+        x: &[f32],
+        y: &[f32],
+        mask: &[f32],
+        alpha: &[f32],
+        w: &[f32],
+        lambda_n: f32,
+        sigma_prime: f32,
+        seed: u32,
+    ) -> crate::Result<CocoaLocalOut> {
+        let d = w.len();
+        let n_loc = y.len();
+        debug_assert_eq!(x.len(), n_loc * d);
+        let args = vec![
+            mat(x, n_loc, d)?,
+            col(y)?,
+            col(mask)?,
+            col(alpha)?,
+            xla::Literal::vec1(w),
+            xla::Literal::vec1(&[lambda_n, sigma_prime]),
+            xla::Literal::vec1(&[seed as i32]),
+        ];
+        let parts = self.run("cocoa_local", n_loc, d, &args)?;
+        anyhow::ensure!(parts.len() == 2, "cocoa_local returned {} parts", parts.len());
+        Ok(CocoaLocalOut {
+            alpha: to_f32(&parts[0])?,
+            delta_w: to_f32(&parts[1])?,
+        })
+    }
+
+    /// Weighted hinge statistics over a partition (GD / SGD / objective).
+    pub fn grad(
+        &self,
+        x: &[f32],
+        y: &[f32],
+        weights: &[f32],
+        w: &[f32],
+    ) -> crate::Result<GradOut> {
+        let d = w.len();
+        let n_loc = y.len();
+        debug_assert_eq!(x.len(), n_loc * d);
+        let args = vec![
+            mat(x, n_loc, d)?,
+            col(y)?,
+            col(weights)?,
+            xla::Literal::vec1(w),
+        ];
+        let parts = self.run("grad", n_loc, d, &args)?;
+        anyhow::ensure!(parts.len() == 2, "grad returned {} parts", parts.len());
+        let stats = to_f32(&parts[1])?;
+        Ok(GradOut {
+            grad_sum: to_f32(&parts[0])?,
+            hinge_sum: stats[0],
+            correct_sum: stats[1],
+        })
+    }
+
+    /// One Splash-style local Pegasos epoch; returns the new local iterate.
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_sgd(
+        &self,
+        x: &[f32],
+        y: &[f32],
+        mask: &[f32],
+        w: &[f32],
+        lambda: f32,
+        t0: f32,
+        seed: u32,
+    ) -> crate::Result<Vec<f32>> {
+        let d = w.len();
+        let n_loc = y.len();
+        debug_assert_eq!(x.len(), n_loc * d);
+        let args = vec![
+            mat(x, n_loc, d)?,
+            col(y)?,
+            col(mask)?,
+            xla::Literal::vec1(w),
+            xla::Literal::vec1(&[lambda, t0]),
+            xla::Literal::vec1(&[seed as i32]),
+        ];
+        let parts = self.run("local_sgd", n_loc, d, &args)?;
+        anyhow::ensure!(parts.len() == 1, "local_sgd returned {} parts", parts.len());
+        to_f32(&parts[0])
+    }
+}
+
+impl Engine {
+    /// Buffer-cached variant of [`Engine::cocoa_local`]: the partition's
+    /// constant tensors live on-device across iterations; only the
+    /// dual block, weight vector and scalars travel per call.
+    #[allow(clippy::too_many_arguments)]
+    pub fn cocoa_local_part(
+        &self,
+        part: &Partition,
+        alpha: &[f32],
+        w: &[f32],
+        lambda_n: f32,
+        sigma_prime: f32,
+        seed: u32,
+    ) -> crate::Result<CocoaLocalOut> {
+        let pb = self.partition_buffers(part)?;
+        let args = vec![
+            pb.x.clone(),
+            pb.y.clone(),
+            pb.mask.clone(),
+            self.small_buf(alpha, &[part.n_loc, 1])?,
+            self.small_buf(w, &[part.d])?,
+            self.small_buf(&[lambda_n, sigma_prime], &[2])?,
+            self.small_buf_i32(&[seed as i32], &[1])?,
+        ];
+        let parts = self.run_buffers("cocoa_local", part.n_loc, part.d, &args)?;
+        anyhow::ensure!(parts.len() == 2, "cocoa_local returned {} parts", parts.len());
+        Ok(CocoaLocalOut {
+            alpha: to_f32(&parts[0])?,
+            delta_w: to_f32(&parts[1])?,
+        })
+    }
+
+    /// Buffer-cached variant of [`Engine::grad`]. `weights` equals the
+    /// partition mask for GD/objective calls, in which case the cached
+    /// mask buffer is reused and nothing large is uploaded.
+    pub fn grad_part(
+        &self,
+        part: &Partition,
+        weights: &[f32],
+        w: &[f32],
+    ) -> crate::Result<GradOut> {
+        let pb = self.partition_buffers(part)?;
+        let wt_buf = if weights.as_ptr() == part.mask.as_ptr() {
+            pb.mask.clone()
+        } else {
+            self.small_buf(weights, &[part.n_loc, 1])?
+        };
+        let args = vec![
+            pb.x.clone(),
+            pb.y.clone(),
+            wt_buf,
+            self.small_buf(w, &[part.d])?,
+        ];
+        let parts = self.run_buffers("grad", part.n_loc, part.d, &args)?;
+        anyhow::ensure!(parts.len() == 2, "grad returned {} parts", parts.len());
+        let stats = to_f32(&parts[1])?;
+        Ok(GradOut {
+            grad_sum: to_f32(&parts[0])?,
+            hinge_sum: stats[0],
+            correct_sum: stats[1],
+        })
+    }
+
+    /// Buffer-cached variant of [`Engine::local_sgd`].
+    pub fn local_sgd_part(
+        &self,
+        part: &Partition,
+        w: &[f32],
+        lambda: f32,
+        t0: f32,
+        seed: u32,
+    ) -> crate::Result<Vec<f32>> {
+        let pb = self.partition_buffers(part)?;
+        let args = vec![
+            pb.x.clone(),
+            pb.y.clone(),
+            pb.mask.clone(),
+            self.small_buf(w, &[part.d])?,
+            self.small_buf(&[lambda, t0], &[2])?,
+            self.small_buf_i32(&[seed as i32], &[1])?,
+        ];
+        let parts = self.run_buffers("local_sgd", part.n_loc, part.d, &args)?;
+        anyhow::ensure!(parts.len() == 1, "local_sgd returned {} parts", parts.len());
+        to_f32(&parts[0])
+    }
+}
+
+fn mat(data: &[f32], rows: usize, cols: usize) -> crate::Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow::anyhow!("reshaping ({rows},{cols}) literal: {e:?}"))
+}
+
+fn col(data: &[f32]) -> crate::Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(&[data.len() as i64, 1])
+        .map_err(|e| anyhow::anyhow!("reshaping column literal: {e:?}"))
+}
+
+fn to_f32(l: &xla::Literal) -> crate::Result<Vec<f32>> {
+    l.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("reading f32 output: {e:?}"))
+}

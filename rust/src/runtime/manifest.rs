@@ -1,0 +1,161 @@
+//! `artifacts/manifest.json` — the ABI contract between the build-time
+//! python layer and the Rust coordinator.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{read_json_file, Json};
+
+/// One AOT-compiled artifact: a (kernel, partition-shape) pair.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub kernel: String,
+    pub file: String,
+    pub n_loc: usize,
+    pub d: usize,
+    /// Local epoch length baked into the artifact (0 for `grad`,
+    /// which has no epoch loop).
+    pub h_steps: usize,
+    /// Input shapes in call order (ABI check).
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest plus the directory it lives in.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub n: usize,
+    pub d: usize,
+    pub machines: Vec<usize>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
+        let doc = read_json_file(&dir.join("manifest.json"))?;
+        let n = doc.req_usize("n")?;
+        let d = doc.req_usize("d")?;
+        let machines = doc
+            .req_array("machines")?
+            .iter()
+            .map(|m| m.as_usize().ok_or_else(|| anyhow::anyhow!("bad machine count")))
+            .collect::<crate::Result<Vec<_>>>()?;
+        let mut artifacts = Vec::new();
+        for e in doc.req_array("artifacts")? {
+            let input_shapes = e
+                .req_array("inputs")?
+                .iter()
+                .map(|inp| {
+                    inp.req_array("shape").map(|dims| {
+                        dims.iter().filter_map(Json::as_usize).collect::<Vec<_>>()
+                    })
+                })
+                .collect::<crate::Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec {
+                kernel: e.req_str("kernel")?.to_string(),
+                file: e.req_str("file")?.to_string(),
+                n_loc: e.req_usize("n_loc")?,
+                d: e.req_usize("d")?,
+                h_steps: e.opt_usize("h_steps", 0),
+                input_shapes,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            n,
+            d,
+            machines,
+            artifacts,
+        })
+    }
+
+    /// Find the artifact for a (kernel, n_loc, d) triple.
+    pub fn find(&self, kernel: &str, n_loc: usize, d: usize) -> crate::Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kernel == kernel && a.n_loc == n_loc && a.d == d)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact for kernel '{kernel}' with n_loc={n_loc}, d={d}; \
+                     regenerate with `make artifacts` or run \
+                     `python -m compile.aot --n <rows> --d {d} --machines <list>` \
+                     to cover this shape (available: {})",
+                    self.describe()
+                )
+            })
+    }
+
+    /// All partition sizes available for a kernel.
+    pub fn sizes_for(&self, kernel: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kernel == kernel)
+            .map(|a| a.n_loc)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Full path to an artifact's HLO text.
+    pub fn path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    fn describe(&self) -> String {
+        let mut parts: Vec<String> = self
+            .artifacts
+            .iter()
+            .map(|a| format!("{}:n{}d{}", a.kernel, a.n_loc, a.d))
+            .collect();
+        parts.sort();
+        parts.join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "version": 1, "n": 64, "d": 8, "machines": [1, 2],
+              "artifacts": [
+                {"kernel": "grad", "file": "grad_n64_d8.hlo.txt", "n_loc": 64,
+                 "d": 8, "h_steps": 0,
+                 "inputs": [{"shape": [64, 8], "dtype": "float32"},
+                            {"shape": [64, 1], "dtype": "float32"},
+                            {"shape": [64, 1], "dtype": "float32"},
+                            {"shape": [8], "dtype": "float32"}]}
+              ]
+            }"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = std::env::temp_dir().join("hemingway_manifest_test");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.n, 64);
+        assert_eq!(m.machines, vec![1, 2]);
+        let a = m.find("grad", 64, 8).unwrap();
+        assert_eq!(a.input_shapes[0], vec![64, 8]);
+        assert_eq!(m.sizes_for("grad"), vec![64]);
+        assert!(m.find("grad", 32, 8).is_err());
+        assert!(m.find("cocoa_local", 64, 8).is_err());
+        let err = format!("{:#}", m.find("nope", 1, 1).unwrap_err());
+        assert!(err.contains("make artifacts"));
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("hemingway_manifest_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

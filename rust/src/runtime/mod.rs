@@ -1,0 +1,29 @@
+//! Runtime layer: load AOT artifacts (`artifacts/*.hlo.txt`) and
+//! execute them through the PJRT C API (`xla` crate). Python never
+//! runs here — the artifacts were lowered once by `make artifacts`.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{CocoaLocalOut, Engine, ExecStats, GradOut};
+pub use manifest::{ArtifactSpec, Manifest};
+
+/// Locate the artifact directory: `$HEMINGWAY_ARTIFACTS` or
+/// `./artifacts` relative to the workspace root.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("HEMINGWAY_ARTIFACTS") {
+        return p.into();
+    }
+    // Walk up from the current dir looking for artifacts/manifest.json
+    // so tests and examples work from any workspace subdirectory.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

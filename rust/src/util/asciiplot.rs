@@ -1,0 +1,204 @@
+//! Terminal plotting for the repro harness.
+//!
+//! Every figure target prints the same series the paper plots as an
+//! ASCII chart (plus a CSV for external plotting), so "shape" claims —
+//! U-curves, crossovers, model-vs-truth agreement — are visible right
+//! in the terminal / EXPERIMENTS.md.
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>, points: Vec<(f64, f64)>) -> Series {
+        Series {
+            name: name.into(),
+            points,
+        }
+    }
+}
+
+/// Plot configuration.
+#[derive(Debug, Clone)]
+pub struct PlotCfg {
+    pub width: usize,
+    pub height: usize,
+    pub log_y: bool,
+    pub log_x: bool,
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+}
+
+impl Default for PlotCfg {
+    fn default() -> Self {
+        PlotCfg {
+            width: 72,
+            height: 20,
+            log_y: false,
+            log_x: false,
+            title: String::new(),
+            x_label: "x".into(),
+            y_label: "y".into(),
+        }
+    }
+}
+
+const MARKS: &[char] = &['*', '+', 'o', 'x', '#', '@', '%', '&'];
+
+/// Render series to an ASCII chart.
+pub fn plot(series: &[Series], cfg: &PlotCfg) -> String {
+    let mut pts: Vec<(f64, f64)> = Vec::new();
+    for s in series {
+        for &(x, y) in &s.points {
+            let (tx, ty) = transform(x, y, cfg);
+            if tx.is_finite() && ty.is_finite() {
+                pts.push((tx, ty));
+            }
+        }
+    }
+    if pts.is_empty() {
+        return format!("{} (no finite data)\n", cfg.title);
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if xmax == xmin {
+        xmax = xmin + 1.0;
+    }
+    if ymax == ymin {
+        ymax = ymin + 1.0;
+    }
+
+    let w = cfg.width;
+    let h = cfg.height;
+    let mut grid = vec![vec![' '; w]; h];
+
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in &s.points {
+            let (tx, ty) = transform(x, y, cfg);
+            if !tx.is_finite() || !ty.is_finite() {
+                continue;
+            }
+            let col = (((tx - xmin) / (xmax - xmin)) * (w - 1) as f64).round() as usize;
+            let row = (((ty - ymin) / (ymax - ymin)) * (h - 1) as f64).round() as usize;
+            let r = h - 1 - row.min(h - 1);
+            let c = col.min(w - 1);
+            // Later series overwrite earlier ones; that is fine for
+            // model-vs-truth overlays where agreement is the point.
+            grid[r][c] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    if !cfg.title.is_empty() {
+        out.push_str(&format!("  {}\n", cfg.title));
+    }
+    let ylab = |v: f64| -> f64 {
+        if cfg.log_y {
+            10f64.powf(v)
+        } else {
+            v
+        }
+    };
+    for (r, rowv) in grid.iter().enumerate() {
+        let frac = 1.0 - r as f64 / (h - 1) as f64;
+        let yv = ylab(ymin + frac * (ymax - ymin));
+        let label = if r == 0 || r == h - 1 || r == h / 2 {
+            format!("{yv:>11.3e}")
+        } else {
+            " ".repeat(11)
+        };
+        out.push_str(&format!("{label} |"));
+        out.extend(rowv.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{} +{}\n", " ".repeat(11), "-".repeat(w)));
+    let xlab = |v: f64| -> f64 {
+        if cfg.log_x {
+            10f64.powf(v)
+        } else {
+            v
+        }
+    };
+    out.push_str(&format!(
+        "{} {:<12.4} {:^width$} {:>12.4}\n",
+        " ".repeat(10),
+        xlab(xmin),
+        cfg.x_label,
+        xlab(xmax),
+        width = w.saturating_sub(28)
+    ));
+    out.push_str("  legend: ");
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("{}={}  ", MARKS[si % MARKS.len()], s.name));
+    }
+    out.push('\n');
+    out
+}
+
+fn transform(x: f64, y: f64, cfg: &PlotCfg) -> (f64, f64) {
+    let tx = if cfg.log_x { x.log10() } else { x };
+    let ty = if cfg.log_y { y.log10() } else { y };
+    (tx, ty)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_basic() {
+        let s = Series::new("line", (0..10).map(|i| (i as f64, i as f64)).collect());
+        let out = plot(&[s], &PlotCfg { title: "t".into(), ..Default::default() });
+        assert!(out.contains('*'));
+        assert!(out.contains("legend: *=line"));
+        assert!(out.contains("  t\n"));
+    }
+
+    #[test]
+    fn log_scale_drops_nonpositive() {
+        let s = Series::new(
+            "conv",
+            vec![(0.0, 1.0), (1.0, 0.1), (2.0, 0.0), (3.0, -1.0)],
+        );
+        let out = plot(
+            &[s],
+            &PlotCfg {
+                log_y: true,
+                ..Default::default()
+            },
+        );
+        assert!(out.contains('*')); // finite points survive
+    }
+
+    #[test]
+    fn empty_series_graceful() {
+        let out = plot(&[Series::new("e", vec![])], &PlotCfg::default());
+        assert!(out.contains("no finite data"));
+    }
+
+    #[test]
+    fn multiple_series_legend() {
+        let a = Series::new("a", vec![(0.0, 0.0), (1.0, 1.0)]);
+        let b = Series::new("b", vec![(0.0, 1.0), (1.0, 0.0)]);
+        let out = plot(&[a, b], &PlotCfg::default());
+        assert!(out.contains("*=a"));
+        assert!(out.contains("+=b"));
+    }
+
+    #[test]
+    fn constant_series_no_panic() {
+        let s = Series::new("c", vec![(1.0, 5.0), (2.0, 5.0)]);
+        let _ = plot(&[s], &PlotCfg::default());
+    }
+}

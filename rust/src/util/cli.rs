@@ -1,0 +1,211 @@
+//! Command-line argument parsing (the offline registry has no `clap`).
+//!
+//! Supports the subset the `hemingway` binary needs: subcommands,
+//! `--flag`, `--key value`, `--key=value`, positional arguments, typed
+//! accessors with defaults, and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Declarative description of one option, used for `--help` output.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments: key/value options, boolean flags, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argument list (not including argv[0]).
+    ///
+    /// Unlike clap we do not need a registry up front: any `--key v`
+    /// pair becomes an option, a trailing `--key` (followed by another
+    /// option or end of input) becomes a flag.
+    pub fn parse<I, S>(raw: I) -> Args
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let items: Vec<String> = raw.into_iter().map(Into::into).collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < items.len() {
+            let tok = &items[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    args.opts
+                        .insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if i + 1 < items.len() && !items[i + 1].starts_with("--") {
+                    args.opts.insert(body.to_string(), items[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self
+                .opts
+                .get(name)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> crate::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> crate::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> crate::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of integers, e.g. `--machines 1,2,4,8`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> crate::Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("--{name}: bad integer '{p}'"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of strings.
+    pub fn str_list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|p| p.trim().to_string()).collect(),
+        }
+    }
+}
+
+/// Render a usage block for a subcommand.
+pub fn usage(cmd: &str, summary: &str, opts: &[OptSpec]) -> String {
+    let mut s = format!("hemingway {cmd} — {summary}\n\noptions:\n");
+    for o in opts {
+        let head = if o.is_flag {
+            format!("  --{}", o.name)
+        } else {
+            format!("  --{} <value>", o.name)
+        };
+        let pad = if head.len() < 28 { 28 - head.len() } else { 1 };
+        s.push_str(&head);
+        s.push_str(&" ".repeat(pad));
+        s.push_str(o.help);
+        if let Some(d) = o.default {
+            s.push_str(&format!(" [default: {d}]"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::parse(["--alpha", "0.5", "--verbose", "--mode=fast", "pos1"]);
+        assert_eq!(a.get("alpha"), Some("0.5"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("mode"), Some("fast"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(["--n", "12", "--lr", "0.25"]);
+        assert_eq!(a.usize_or("n", 1).unwrap(), 12);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.25);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!(a.usize_or("lr", 0).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::parse(["--machines", "1,2, 4,8", "--algos", "cocoa,sgd"]);
+        assert_eq!(a.usize_list_or("machines", &[]).unwrap(), vec![1, 2, 4, 8]);
+        assert_eq!(a.str_list_or("algos", &[]), vec!["cocoa", "sgd"]);
+        assert_eq!(a.usize_list_or("absent", &[16]).unwrap(), vec![16]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(["--fast"]);
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(["--a", "--b", "x"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("x"));
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage(
+            "run",
+            "run one algorithm",
+            &[
+                OptSpec { name: "algo", help: "algorithm name", default: Some("cocoa"), is_flag: false },
+                OptSpec { name: "verbose", help: "chatty output", default: None, is_flag: true },
+            ],
+        );
+        assert!(u.contains("--algo <value>"));
+        assert!(u.contains("[default: cocoa]"));
+        assert!(u.contains("--verbose"));
+    }
+}

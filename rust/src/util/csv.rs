@@ -1,0 +1,196 @@
+//! Tiny CSV writer/reader for experiment outputs.
+//!
+//! Every repro target writes its series as CSV under `out/` so plots
+//! can be regenerated externally; the reader exists so tests and the
+//! model-fitting CLI can consume previously recorded sweeps.
+
+use std::io::Write;
+use std::path::Path;
+
+/// An in-memory CSV table with a header row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn new(columns: &[&str]) -> Table {
+        Table {
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(
+            row.len(),
+            self.columns.len(),
+            "row width {} != header width {}",
+            row.len(),
+            self.columns.len()
+        );
+        self.rows.push(row);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Index of a named column.
+    pub fn col_index(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c == name)
+    }
+
+    /// Extract a whole column by name.
+    pub fn column(&self, name: &str) -> crate::Result<Vec<f64>> {
+        let idx = self
+            .col_index(name)
+            .ok_or_else(|| anyhow::anyhow!("no column '{name}'"))?;
+        Ok(self.rows.iter().map(|r| r[idx]).collect())
+    }
+
+    /// Rows where `column == value` (exact float compare — columns such
+    /// as machine counts and iteration indices hold exact integers).
+    pub fn filter_eq(&self, name: &str, value: f64) -> crate::Result<Table> {
+        let idx = self
+            .col_index(name)
+            .ok_or_else(|| anyhow::anyhow!("no column '{name}'"))?;
+        Ok(Table {
+            columns: self.columns.clone(),
+            rows: self
+                .rows
+                .iter()
+                .filter(|r| r[idx] == value)
+                .cloned()
+                .collect(),
+        })
+    }
+
+    /// Serialize to CSV text.
+    pub fn to_csv(&self) -> String {
+        let mut s = self.columns.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row.iter().map(|x| format_cell(*x)).collect();
+            s.push_str(&cells.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn write(&self, path: &Path) -> crate::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+
+    /// Parse CSV text (numeric cells only; empty cells become NaN).
+    pub fn parse(text: &str) -> crate::Result<Table> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("empty csv"))?;
+        let columns: Vec<String> = header.split(',').map(|c| c.trim().to_string()).collect();
+        let mut rows = Vec::new();
+        for (lineno, line) in lines.enumerate() {
+            let cells: Vec<&str> = line.split(',').collect();
+            if cells.len() != columns.len() {
+                anyhow::bail!(
+                    "csv row {} has {} cells, expected {}",
+                    lineno + 2,
+                    cells.len(),
+                    columns.len()
+                );
+            }
+            let row: Result<Vec<f64>, _> = cells
+                .iter()
+                .map(|c| {
+                    let t = c.trim();
+                    if t.is_empty() {
+                        Ok(f64::NAN)
+                    } else {
+                        t.parse::<f64>()
+                    }
+                })
+                .collect();
+            rows.push(row.map_err(|e| anyhow::anyhow!("csv row {}: {e}", lineno + 2))?);
+        }
+        Ok(Table { columns, rows })
+    }
+
+    /// Read a CSV file.
+    pub fn read(path: &Path) -> crate::Result<Table> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Table::parse(&text)
+    }
+}
+
+fn format_cell(x: f64) -> String {
+    if x.is_nan() {
+        String::new()
+    } else if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.10e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut t = Table::new(&["m", "iter", "subopt"]);
+        t.push(vec![1.0, 0.0, 0.5]);
+        t.push(vec![2.0, 1.0, 1.25e-3]);
+        let t2 = Table::parse(&t.to_csv()).unwrap();
+        assert_eq!(t.columns, t2.columns);
+        assert_eq!(t2.rows.len(), 2);
+        assert!((t2.rows[1][2] - 1.25e-3).abs() < 1e-15);
+    }
+
+    #[test]
+    fn column_and_filter() {
+        let mut t = Table::new(&["m", "v"]);
+        t.push(vec![1.0, 10.0]);
+        t.push(vec![2.0, 20.0]);
+        t.push(vec![1.0, 30.0]);
+        assert_eq!(t.column("v").unwrap(), vec![10.0, 20.0, 30.0]);
+        let f = t.filter_eq("m", 1.0).unwrap();
+        assert_eq!(f.rows.len(), 2);
+        assert!(t.column("nope").is_err());
+    }
+
+    #[test]
+    fn nan_cells() {
+        let t = Table::parse("a,b\n1,\n,2\n").unwrap();
+        assert!(t.rows[0][1].is_nan());
+        assert!(t.rows[1][0].is_nan());
+        // And NaN serializes back to empty.
+        assert!(t.to_csv().contains("1,\n"));
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        assert!(Table::parse("a,b\n1,2,3\n").is_err());
+        assert!(Table::parse("").is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_checks_width() {
+        let mut t = Table::new(&["a"]);
+        t.push(vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,102 @@
+//! Leveled stderr logger with wall-clock timestamps.
+//!
+//! Deliberately tiny: the coordinator logs progress at INFO, per-
+//! iteration detail at DEBUG (enabled with `--verbose` or
+//! `HEMINGWAY_LOG=debug`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+/// Set the global log level.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Initialize from the environment (`HEMINGWAY_LOG=debug|info|warn|error`).
+pub fn init_from_env() {
+    START.get_or_init(Instant::now);
+    if let Ok(v) = std::env::var("HEMINGWAY_LOG") {
+        match v.to_ascii_lowercase().as_str() {
+            "debug" => set_level(Level::Debug),
+            "info" => set_level(Level::Info),
+            "warn" => set_level(Level::Warn),
+            "error" => set_level(Level::Error),
+            _ => {}
+        }
+    }
+}
+
+/// Whether a level is currently enabled.
+pub fn enabled(level: Level) -> bool {
+    level as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Log a message (used through the macros below).
+pub fn log(level: Level, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    let tag = match level {
+        Level::Debug => "DEBUG",
+        Level::Info => "INFO ",
+        Level::Warn => "WARN ",
+        Level::Error => "ERROR",
+    };
+    eprintln!("[{t:9.3}s {tag}] {msg}");
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Info, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Error, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Debug));
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info); // restore default for other tests
+    }
+}

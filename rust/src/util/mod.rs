@@ -1,0 +1,12 @@
+//! Infrastructure substrates built in-tree (the offline crate registry
+//! lacks `rand`, `serde_json`, `clap`, `criterion` and `proptest`).
+
+pub mod asciiplot;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod logger;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

