@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 gate: build, tests, formatting. Run from the repo root.
+# HEMINGWAY_THREADS=1 pins the sweep engine's scheduling for
+# reproducible logs; traces are byte-identical at any thread count.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+export HEMINGWAY_THREADS="${HEMINGWAY_THREADS:-1}"
+
+cargo build --release
+cargo test -q
+cargo fmt --check

@@ -23,7 +23,7 @@ fn main() -> hemingway::Result<()> {
         machines: vec![1, 2, 4, 8, 16, 32, 64],
         ..Default::default()
     };
-    let ctx = ReproContext::new(cfg, false)?;
+    let ctx = ReproContext::new_with_fallback(cfg)?;
     let backend = ctx.backend();
 
     // ---- Adaptive run ----

@@ -20,12 +20,15 @@ fn main() -> hemingway::Result<()> {
         max_iters: 200,
         ..Default::default()
     };
-    let ctx = ReproContext::new(cfg, false)?;
+    let ctx = ReproContext::new_with_fallback(cfg)?;
     let backend = ctx.backend();
     let m = 16;
 
     let mut series = Vec::new();
-    println!("algorithm comparison at m={m} (HLO path):\n");
+    println!(
+        "algorithm comparison at m={m} ({} path):\n",
+        if ctx.use_native { "native" } else { "HLO" }
+    );
     println!(
         "{:<15} {:>10} {:>12} {:>12} {:>12}",
         "algorithm", "iters", "subopt@50", "final", "sim time"

@@ -21,7 +21,7 @@ fn main() -> hemingway::Result<()> {
     // The paper's protocol: n=8192×128 MNIST-like, hinge SVM,
     // m ∈ {1..128}, stop at 1e-4 or 500 iterations. HLO backend.
     let cfg = ExperimentConfig::default();
-    let ctx = ReproContext::new(cfg, /*use_native=*/ false)?;
+    let ctx = ReproContext::new_with_fallback(cfg)?;
 
     // ---- Phase 1: the measurement sweep (all through PJRT) ----
     println!("\n=== Phase 1: CoCoA+ sweep over m (production HLO path) ===");
@@ -115,8 +115,9 @@ fn main() -> hemingway::Result<()> {
     );
 
     println!(
-        "\nend_to_end complete in {:.1}s wall-clock (all per-partition compute via PJRT)",
-        t_start.elapsed().as_secs_f64()
+        "\nend_to_end complete in {:.1}s wall-clock (per-partition compute via {})",
+        t_start.elapsed().as_secs_f64(),
+        if ctx.use_native { "the native mirror" } else { "PJRT" }
     );
     Ok(())
 }

@@ -13,7 +13,7 @@ use hemingway::config::ExperimentConfig;
 use hemingway::data::synth::mnist_like;
 use hemingway::ernest::ErnestModel;
 use hemingway::hemingway_model::{points_from_traces, ConvergenceModel, FeatureLibrary};
-use hemingway::optim::{run, Cocoa, CocoaVariant, HloBackend, Problem, RunConfig};
+use hemingway::optim::{run, Backend, Cocoa, CocoaVariant, HloBackend, NativeBackend, Problem, RunConfig};
 use hemingway::runtime::{default_artifact_dir, Engine};
 
 fn main() -> hemingway::Result<()> {
@@ -32,15 +32,23 @@ fn main() -> hemingway::Result<()> {
     println!("reference optimum P* = {p_star:.6} (gap {gap:.1e})");
 
     // 2. The production backend: AOT-compiled Pallas kernels via PJRT.
-    let engine = Engine::new(&default_artifact_dir())?;
-    let backend = HloBackend::new(&engine);
+    //    Falls back to the numerically-equivalent native mirror when
+    //    the PJRT path is unavailable (no `pjrt` feature / artifacts).
+    let engine = Engine::new(&default_artifact_dir());
+    let backend: Box<dyn Backend + '_> = match &engine {
+        Ok(e) => Box::new(HloBackend::new(e)),
+        Err(e) => {
+            eprintln!("PJRT path unavailable ({e}); using the native backend");
+            Box::new(NativeBackend)
+        }
+    };
 
     // 3. Run CoCoA+ on 4 simulated machines.
     let mut algo = Cocoa::new(&problem, 4, CocoaVariant::Adding, 42);
     let mut sim = BspSim::new(HardwareProfile::local48(), 42);
     let trace = run(
         &mut algo,
-        &backend,
+        backend.as_ref(),
         &problem,
         &mut sim,
         p_star,
@@ -59,7 +67,7 @@ fn main() -> hemingway::Result<()> {
     for m in [1usize, 2, 8, 16] {
         let mut a = Cocoa::new(&problem, m, CocoaVariant::Adding, 42);
         let mut s = BspSim::new(HardwareProfile::local48(), 7 + m as u64);
-        traces.push(run(&mut a, &backend, &problem, &mut s, p_star, &RunConfig::default())?);
+        traces.push(run(&mut a, backend.as_ref(), &problem, &mut s, p_star, &RunConfig::default())?);
     }
     let conv = ConvergenceModel::fit(
         &points_from_traces(&traces),

@@ -5,8 +5,12 @@
 //! Groups (one per paper table/figure + the §Perf hot paths):
 //!   kernels     — per-call cost of each AOT kernel, HLO vs native
 //!   iteration   — end-to-end BSP iteration cost (Fig 1a's x-axis)
+//!   sweep       — the sweep engine: thread scaling + cache hits
 //!   models      — NNLS / Lasso / LassoCV / convergence-fit cost
 //!   advisor     — query latency over a fitted model set
+//!
+//! HLO groups run only when the PJRT engine is available (`pjrt`
+//! feature + artifacts); everything else is native and always runs.
 //!
 //! Filter with `cargo bench -- <substring>`.
 
@@ -21,11 +25,13 @@ use hemingway::hemingway_model::{
 };
 use hemingway::linalg::{nnls, Matrix};
 use hemingway::optim::{
-    by_name, run, Backend, HloBackend, NativeBackend, Problem, RunConfig,
+    by_name, run, Backend, HloBackend, NativeBackend, Problem, RunConfig, Trace,
 };
 use hemingway::runtime::{default_artifact_dir, Engine};
+use hemingway::sweep::{CellSpec, SweepEngine, SweepGrid, TraceCache};
 use hemingway::util::rng::{Lcg32, Pcg32};
 use hemingway::util::stats;
+use hemingway::util::threadpool::default_threads;
 
 struct Bench {
     filter: String,
@@ -90,9 +96,20 @@ fn main() -> hemingway::Result<()> {
     let mut b = Bench::new();
     println!("== hemingway bench harness (filter: '{}') ==\n", b.filter);
 
-    let engine = Engine::new(&default_artifact_dir())?;
-    engine.warmup()?;
-    println!("engine warmed up ({} executables)\n", engine.manifest().artifacts.len());
+    let engine = match Engine::new(&default_artifact_dir()) {
+        Ok(e) => {
+            e.warmup()?;
+            println!(
+                "engine warmed up ({} executables)\n",
+                e.manifest().artifacts.len()
+            );
+            Some(e)
+        }
+        Err(e) => {
+            println!("PJRT engine unavailable ({e});\nrunning native-only benches\n");
+            None
+        }
+    };
 
     // ---------------- kernels: HLO vs native per-call ----------------
     let mut rng = Pcg32::seeded(1);
@@ -108,38 +125,44 @@ fn main() -> hemingway::Result<()> {
         let seed = Lcg32::for_epoch(1, 0, 0).state;
         let lambda_n = 0.01 * n_loc as f32;
 
-        b.bench(&format!("kernels/cocoa_local/hlo/n{n_loc}"), || {
-            engine
-                .cocoa_local(&x, &y, &mask, &alpha, &w, lambda_n, 1.0, seed)
-                .unwrap();
-        });
+        if let Some(engine) = &engine {
+            b.bench(&format!("kernels/cocoa_local/hlo/n{n_loc}"), || {
+                engine
+                    .cocoa_local(&x, &y, &mask, &alpha, &w, lambda_n, 1.0, seed)
+                    .unwrap();
+            });
+        }
         b.bench(&format!("kernels/cocoa_local/native/n{n_loc}"), || {
             hemingway::optim::native::sdca_epoch(
                 &x, &y, &mask, &alpha, &w, lambda_n as f64, 1.0, seed, n_loc,
             );
         });
-        b.bench(&format!("kernels/grad/hlo/n{n_loc}"), || {
-            engine.grad(&x, &y, &mask, &w).unwrap();
-        });
+        if let Some(engine) = &engine {
+            b.bench(&format!("kernels/grad/hlo/n{n_loc}"), || {
+                engine.grad(&x, &y, &mask, &w).unwrap();
+            });
+        }
         b.bench(&format!("kernels/grad/native/n{n_loc}"), || {
             hemingway::optim::native::hinge_stats(&x, &y, &mask, &w);
         });
-        b.bench(&format!("kernels/local_sgd/hlo/n{n_loc}"), || {
-            engine.local_sgd(&x, &y, &mask, &w, 0.01, 10.0, seed).unwrap();
-        });
+        if let Some(engine) = &engine {
+            b.bench(&format!("kernels/local_sgd/hlo/n{n_loc}"), || {
+                engine.local_sgd(&x, &y, &mask, &w, 0.01, 10.0, seed).unwrap();
+            });
 
-        // Buffer-cached path (§Perf optimization A): partition tensors
-        // device-resident, only alpha/w/scalars travel per call.
-        let ds = hemingway::data::Dataset::new(x.clone(), y.clone(), n_loc, d);
-        let part = ds.partition(1).remove(0);
-        b.bench(&format!("kernels/cocoa_local/hlo-cached/n{n_loc}"), || {
-            engine
-                .cocoa_local_part(&part, &alpha, &w, lambda_n, 1.0, seed)
-                .unwrap();
-        });
-        b.bench(&format!("kernels/grad/hlo-cached/n{n_loc}"), || {
-            engine.grad_part(&part, &part.mask, &w).unwrap();
-        });
+            // Buffer-cached path (§Perf optimization A): partition tensors
+            // device-resident, only alpha/w/scalars travel per call.
+            let ds = hemingway::data::Dataset::new(x.clone(), y.clone(), n_loc, d);
+            let part = ds.partition(1).remove(0);
+            b.bench(&format!("kernels/cocoa_local/hlo-cached/n{n_loc}"), || {
+                engine
+                    .cocoa_local_part(&part, &alpha, &w, lambda_n, 1.0, seed)
+                    .unwrap();
+            });
+            b.bench(&format!("kernels/grad/hlo-cached/n{n_loc}"), || {
+                engine.grad_part(&part, &part.mask, &w).unwrap();
+            });
+        }
     }
     println!();
 
@@ -147,10 +170,13 @@ fn main() -> hemingway::Result<()> {
     let cfg = ExperimentConfig::default();
     let data = mnist_like(&cfg.synth());
     let problem = Problem::new(data, cfg.lambda);
-    let hlo: Box<dyn Backend> = Box::new(HloBackend::new(&engine));
-    let native: Box<dyn Backend> = Box::new(NativeBackend);
     for &m in &[1usize, 16, 128] {
-        for (bname, backend) in [("hlo", &hlo), ("native", &native)] {
+        let mut backends: Vec<(&str, Box<dyn Backend + '_>)> = Vec::new();
+        if let Some(engine) = &engine {
+            backends.push(("hlo", Box::new(HloBackend::new(engine))));
+        }
+        backends.push(("native", Box::new(NativeBackend)));
+        for (bname, backend) in &backends {
             let mut algo = by_name("cocoa+", &problem, m, 1).unwrap();
             let mut i = 0usize;
             b.bench(&format!("iteration/cocoa+/{bname}/m{m}"), || {
@@ -164,6 +190,61 @@ fn main() -> hemingway::Result<()> {
         let w = vec![0.01f32; problem.data.d];
         b.bench("iteration/objective_eval/native", || {
             problem.primal(&w);
+        });
+    }
+    println!();
+
+    // ---------------- sweep engine: thread scaling + cache ----------------
+    {
+        let small = ExperimentConfig {
+            n: 1024,
+            d: 32,
+            machines: vec![1, 2, 4, 8],
+            max_iters: 30,
+            ..Default::default()
+        };
+        let sdata = mnist_like(&small.synth());
+        let sproblem = Problem::new(sdata, small.lambda);
+        let (sp_star, _, _) = sproblem.reference_solve(1e-6, 300);
+        let grid = SweepGrid {
+            algorithms: vec!["cocoa+".into()],
+            machines: small.machines.clone(),
+            seeds: 2,
+            base_seed: small.seed,
+            run: RunConfig {
+                max_iters: 30,
+                target_subopt: -1.0,
+                time_budget: None,
+            },
+        };
+        let cells = grid.cells();
+        let runner = |cell: &CellSpec| -> hemingway::Result<Trace> {
+            let mut algo = by_name(&cell.algorithm, &sproblem, cell.machines, cell.seed as u32)?;
+            let mut sim = BspSim::new(
+                HardwareProfile::local48(),
+                cell.seed ^ cell.machines as u64,
+            );
+            run(
+                algo.as_mut(),
+                &NativeBackend,
+                &sproblem,
+                &mut sim,
+                sp_star,
+                &grid.run,
+            )
+        };
+        // Cold cache: measures actual fan-out; 1 thread vs all cores.
+        for &threads in &[1usize, default_threads()] {
+            b.bench(&format!("sweep/8cells/cold/threads{threads}"), || {
+                let eng = SweepEngine::new(threads, TraceCache::in_memory());
+                eng.run_cells("bench", &cells, &runner).unwrap();
+            });
+        }
+        // Warm cache: every cell hits, measuring pure cache overhead.
+        let warm = SweepEngine::new(default_threads(), TraceCache::in_memory());
+        warm.run_cells("bench", &cells, &runner).unwrap();
+        b.bench("sweep/8cells/cache_hit", || {
+            warm.run_cells("bench", &cells, &runner).unwrap();
         });
     }
     println!();
@@ -194,7 +275,8 @@ fn main() -> hemingway::Result<()> {
             lasso_cv(&x, &y, 40, 5, 1).unwrap();
         });
 
-        // Full convergence-model fit from real traces (m sweep of 3).
+        // Full convergence-model fit from real traces (m sweep of 3),
+        // produced through the sweep engine like every other grid.
         let small = ExperimentConfig {
             n: 1024,
             machines: vec![1, 4, 16],
@@ -204,26 +286,32 @@ fn main() -> hemingway::Result<()> {
         let sdata = mnist_like(&small.synth());
         let sproblem = Problem::new(sdata, small.lambda);
         let (p_star, _, _) = sproblem.reference_solve(1e-7, 400);
-        let mut traces = Vec::new();
-        for &m in &small.machines {
-            let mut algo = by_name("cocoa+", &sproblem, m, 1).unwrap();
-            let mut sim = BspSim::new(HardwareProfile::local48(), m as u64);
-            traces.push(
+        let grid = SweepGrid::single(
+            "cocoa+",
+            &small.machines,
+            1,
+            RunConfig {
+                max_iters: 100,
+                target_subopt: 1e-5,
+                time_budget: None,
+            },
+        );
+        let eng = SweepEngine::with_default_threads(TraceCache::in_memory());
+        let traces = eng
+            .run_cells("bench-models", &grid.cells(), &|cell| {
+                let mut algo =
+                    by_name(&cell.algorithm, &sproblem, cell.machines, cell.seed as u32)?;
+                let mut sim = BspSim::new(HardwareProfile::local48(), cell.machines as u64);
                 run(
                     algo.as_mut(),
-                    native.as_ref(),
+                    &NativeBackend,
                     &sproblem,
                     &mut sim,
                     p_star,
-                    &RunConfig {
-                        max_iters: 100,
-                        target_subopt: 1e-5,
-                        time_budget: None,
-                    },
+                    &grid.run,
                 )
-                .unwrap(),
-            );
-        }
+            })
+            .unwrap();
         let pts = points_from_traces(&traces);
         b.bench(&format!("models/convergence_fit/{}pts", pts.len()), || {
             ConvergenceModel::fit(&pts, FeatureLibrary::standard(), 1).unwrap();
@@ -267,20 +355,32 @@ fn main() -> hemingway::Result<()> {
     }
 
     // ---------------- summary ----------------
-    println!("\n== HLO-vs-native ratios (runtime dispatch overhead) ==");
     let find = |name: &str| {
         b.results
             .iter()
             .find(|(n, ..)| n == name)
             .map(|(_, mean, ..)| *mean)
     };
-    for n_loc in [64usize, 512, 4096] {
-        if let (Some(h), Some(nv)) = (
-            find(&format!("kernels/cocoa_local/hlo/n{n_loc}")),
-            find(&format!("kernels/cocoa_local/native/n{n_loc}")),
-        ) {
-            println!("  cocoa_local n{n_loc}: hlo/native = {:.2}×", h / nv);
+    if engine.is_some() {
+        println!("\n== HLO-vs-native ratios (runtime dispatch overhead) ==");
+        for n_loc in [64usize, 512, 4096] {
+            if let (Some(h), Some(nv)) = (
+                find(&format!("kernels/cocoa_local/hlo/n{n_loc}")),
+                find(&format!("kernels/cocoa_local/native/n{n_loc}")),
+            ) {
+                println!("  cocoa_local n{n_loc}: hlo/native = {:.2}×", h / nv);
+            }
         }
+    }
+    if let (Some(t1), Some(tn)) = (
+        find("sweep/8cells/cold/threads1"),
+        find(&format!("sweep/8cells/cold/threads{}", default_threads())),
+    ) {
+        println!(
+            "\n== sweep scaling: {} threads = {:.2}× over serial ==",
+            default_threads(),
+            t1 / tn
+        );
     }
     Ok(())
 }

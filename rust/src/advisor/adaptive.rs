@@ -9,6 +9,7 @@ use crate::cluster::BspSim;
 use crate::ernest::{ErnestModel, Observation};
 use crate::hemingway_model::{ConvPoint, ConvergenceModel, FeatureLibrary};
 use crate::optim::{Algorithm, Backend, Cocoa, CocoaVariant, Problem};
+use crate::util::threadpool::{default_threads, parallel_map};
 
 /// Log of one adaptive time frame.
 #[derive(Debug, Clone)]
@@ -84,18 +85,36 @@ pub fn adaptive_cocoa_plus(
                 // Pick the m minimizing the predicted suboptimality at
                 // the end of the next frame, using the model's *decay
                 // ratio* from the current iteration (robust to the
-                // model's absolute offset).
+                // model's absolute offset). The candidate evaluations
+                // are independent model queries fanned out through the
+                // shared thread pool — but only for grids big enough
+                // that the work beats the thread spawn cost; the usual
+                // ≤8-point grid takes parallel_map's serial path. The
+                // argmin below scans in grid order, so ties break
+                // exactly as a serial loop would.
+                let threads = if cfg.machine_grid.len() >= 64 {
+                    default_threads()
+                } else {
+                    1
+                };
+                let i0 = (global_iter as f64).max(1.0);
+                let evals: Vec<f64> = parallel_map(
+                    cfg.machine_grid.len(),
+                    threads,
+                    |k| {
+                        let m = cfg.machine_grid[k];
+                        let f_m = ernest.predict(m, size).max(1e-6);
+                        let iters = (cfg.frame_seconds / f_m).floor();
+                        if iters < 1.0 {
+                            return f64::INFINITY;
+                        }
+                        let ratio = conv.predict_ln(i0 + iters, m as f64)
+                            - conv.predict_ln(i0, m as f64);
+                        subopt * ratio.exp()
+                    },
+                );
                 let mut best = (algo.machines(), f64::INFINITY);
-                for &m in &cfg.machine_grid {
-                    let f_m = ernest.predict(m, size).max(1e-6);
-                    let iters = (cfg.frame_seconds / f_m).floor();
-                    if iters < 1.0 {
-                        continue;
-                    }
-                    let i0 = (global_iter as f64).max(1.0);
-                    let ratio = conv.predict_ln(i0 + iters, m as f64)
-                        - conv.predict_ln(i0, m as f64);
-                    let predicted_end = subopt * ratio.exp();
+                for (&m, &predicted_end) in cfg.machine_grid.iter().zip(&evals) {
                     if predicted_end < best.1 {
                         best = (m, predicted_end);
                     }

@@ -88,7 +88,7 @@ impl HardwareProfile {
             "local48" => Self::local48(),
             "r3_xlarge" => Self::r3_xlarge(),
             "ideal" => Self::ideal(),
-            other => anyhow::bail!(
+            other => crate::bail!(
                 "unknown profile '{other}' (expected local48, r3_xlarge, ideal)"
             ),
         })

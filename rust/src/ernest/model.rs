@@ -35,7 +35,7 @@ impl ErnestModel {
 
     /// Fit from observations via NNLS.
     pub fn fit(obs: &[Observation]) -> crate::Result<ErnestModel> {
-        anyhow::ensure!(
+        crate::ensure!(
             obs.len() >= 4,
             "need at least 4 observations to fit the Ernest model, got {}",
             obs.len()

@@ -93,8 +93,8 @@ fn lasso_warm(
     alpha: f64,
     warm: Option<&[f64]>,
 ) -> crate::Result<LassoFit> {
-    anyhow::ensure!(x.rows == y.len(), "X/y length mismatch");
-    anyhow::ensure!(x.rows > 1, "need more than one row");
+    crate::ensure!(x.rows == y.len(), "X/y length mismatch");
+    crate::ensure!(x.rows > 1, "need more than one row");
     let n = x.rows;
     let p = x.cols;
     let s = standardize(x, y);
@@ -191,8 +191,8 @@ pub fn lasso_cv(
     folds: usize,
     seed: u64,
 ) -> crate::Result<LassoCvFit> {
-    anyhow::ensure!(folds >= 2, "need ≥2 folds");
-    anyhow::ensure!(x.rows >= folds * 2, "too few rows for {folds}-fold CV");
+    crate::ensure!(folds >= 2, "need ≥2 folds");
+    crate::ensure!(x.rows >= folds * 2, "too few rows for {folds}-fold CV");
     let a_max = alpha_max(x, y).max(1e-12);
     let a_min = a_max * 1e-4;
     let alphas: Vec<f64> = (0..n_alphas)

@@ -51,7 +51,7 @@ pub struct ConvergenceModel {
 impl ConvergenceModel {
     /// Fit `log(subopt) ~ φ(i, m)` with LassoCV (paper's procedure).
     pub fn fit(points: &[ConvPoint], library: FeatureLibrary, seed: u64) -> crate::Result<ConvergenceModel> {
-        anyhow::ensure!(
+        crate::ensure!(
             points.len() >= 12,
             "need ≥12 convergence observations, got {}",
             points.len()

@@ -20,11 +20,11 @@ pub fn loo_m(
         .filter(|t| t.machines != held_out)
         .cloned()
         .collect();
-    anyhow::ensure!(!train.is_empty(), "no training traces left");
+    crate::ensure!(!train.is_empty(), "no training traces left");
     let test = traces
         .iter()
         .find(|t| t.machines == held_out)
-        .ok_or_else(|| anyhow::anyhow!("no trace with m={held_out}"))?;
+        .ok_or_else(|| crate::err!("no trace with m={held_out}"))?;
 
     let model = ConvergenceModel::fit(
         &points_from_traces(&train),
@@ -112,7 +112,7 @@ pub fn forward_time(
     let lib = FeatureLibrary::iteration_only();
     let m = trace.machines as f64;
     let f_m = ernest.predict(trace.machines, input_size);
-    anyhow::ensure!(f_m > 0.0, "Ernest predicts non-positive iteration time");
+    crate::ensure!(f_m > 0.0, "Ernest predicts non-positive iteration time");
 
     for t in window..usable.len() {
         let now = usable[t - 1].sim_time;

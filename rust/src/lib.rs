@@ -22,8 +22,15 @@
 //! time is produced by a BSP cluster simulator ([`cluster`]) standing
 //! in for the paper's Spark/YARN testbed.
 //!
-//! See `DESIGN.md` for the full system inventory and per-figure
-//! experiment index, and `EXPERIMENTS.md` for recorded results.
+//! Sweeps over (algorithm × machines × seed) grids — the workload the
+//! whole paper is built on — go through the [`sweep`] subsystem, which
+//! fans cells out across a thread pool and caches finished traces in
+//! memory and on disk.
+//!
+//! See [`DESIGN.md`](../../DESIGN.md) (repo root) for the full system
+//! inventory and per-figure experiment index, and
+//! [`EXPERIMENTS.md`](../../EXPERIMENTS.md) for the experiment
+//! protocol and recorded sweep results.
 
 pub mod advisor;
 pub mod cluster;
@@ -35,7 +42,10 @@ pub mod linalg;
 pub mod optim;
 pub mod repro;
 pub mod runtime;
+pub mod sweep;
 pub mod util;
 
-/// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub use util::error::BoxError;
+
+/// Crate-wide result type (boxed error; see [`util::error`]).
+pub type Result<T> = util::error::Result<T>;

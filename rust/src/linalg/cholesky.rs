@@ -21,7 +21,7 @@ pub fn cholesky_factor(a: &Matrix) -> crate::Result<Matrix> {
             }
             if i == j {
                 if s <= 0.0 {
-                    anyhow::bail!(
+                    crate::bail!(
                         "matrix not positive definite (pivot {i} = {s:.3e})"
                     );
                 }

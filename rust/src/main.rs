@@ -14,6 +14,7 @@ use hemingway::advisor::{adaptive_cocoa_plus, AdaptiveConfig};
 use hemingway::cluster::BspSim;
 use hemingway::config::ExperimentConfig;
 use hemingway::repro::{run_figures, ReproContext, FIGURES};
+use hemingway::sweep::SweepGrid;
 use hemingway::util::cli::Args;
 use hemingway::util::logger;
 
@@ -41,7 +42,7 @@ fn print_help() {
          usage: hemingway <command> [options]\n\n\
          commands:\n\
          \x20 run              --algo cocoa+ --machines 16 [--config f.json] [--native]\n\
-         \x20 sweep            --algo cocoa+ [--native]\n\
+         \x20 sweep            --algo cocoa+ [--seeds N] [--threads K] [--native]\n\
          \x20 fit-system       --algo cocoa+ [--native]\n\
          \x20 fit-convergence  --algo cocoa+ [--native]\n\
          \x20 advise           --eps 1e-4 --budget 20 [--native]\n\
@@ -52,6 +53,8 @@ fn print_help() {
          common options:\n\
          \x20 --config <file>   JSON experiment config (see configs/default.json)\n\
          \x20 --native          use the native backend instead of PJRT/HLO\n\
+         \x20 --seeds <N>       seed replicates per sweep cell (mean±std aggregation)\n\
+         \x20 --threads <K>     sweep worker threads (default: HEMINGWAY_THREADS or cores)\n\
          \x20 --verbose         debug logging (or HEMINGWAY_LOG=debug)",
         FIGURES.join(", ")
     );
@@ -67,7 +70,7 @@ fn load_cfg(args: &Args) -> hemingway::Result<ExperimentConfig> {
             .split(',')
             .map(|s| s.trim().parse::<usize>())
             .collect::<Result<_, _>>()
-            .map_err(|e| anyhow::anyhow!("bad --machines-grid: {e}"))?;
+            .map_err(|e| hemingway::err!("bad --machines-grid: {e}"))?;
     }
     Ok(cfg)
 }
@@ -90,22 +93,86 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
         "sweep" => {
             let cfg = load_cfg(args)?;
             let algo = args.str_or("algo", "cocoa+").to_string();
-            let ctx = ReproContext::new(cfg, native)?;
-            let set = ctx.run_sweep(&algo)?;
+            let seeds = args.usize_or("seeds", 1)?.max(1);
+            let threads = args.usize_or("threads", 0)?; // 0 = auto
+            let mut ctx = ReproContext::new(cfg, native)?;
+            if threads > 0 {
+                ctx.sweep.threads = threads;
+            }
+            let grid = SweepGrid {
+                algorithms: vec![algo.clone()],
+                machines: ctx.cfg.machines.clone(),
+                seeds,
+                base_seed: ctx.cfg.seed,
+                run: ctx.run_config(),
+            };
+            let t0 = std::time::Instant::now();
+            let traces = ctx.run_grid(&grid)?;
+            let (hits, misses) = ctx.sweep.cache.stats();
+            println!(
+                "{} cells in {:.1}s wall ({} threads, cache: {hits} hits / {misses} misses)",
+                traces.len(),
+                t0.elapsed().as_secs_f64(),
+                ctx.sweep.threads
+            );
+
+            // Replicate-0 traces keep the historical long-format CSV.
+            let mut set = hemingway::optim::TraceSet::default();
+            for (cell, trace) in grid.cells().iter().zip(&traces) {
+                if cell.replicate == 0 {
+                    set.push(trace.clone());
+                }
+            }
             let path = ctx.out_dir.join(format!("sweep_{algo}.csv"));
             set.write(&path)?;
             println!("wrote {}", path.display());
-            for t in &set.traces {
+
+            // Seed-replication aggregate: mean ± stddev per cell.
+            let aggs = hemingway::sweep::aggregate(&traces, ctx.cfg.target_subopt);
+            let mut agg_table = hemingway::util::csv::Table::new(&[
+                "machines",
+                "replicates",
+                "reached",
+                "iters_mean",
+                "iters_std",
+                "time_mean",
+                "time_std",
+                "final_subopt_mean",
+                "final_subopt_std",
+                "iter_time_mean",
+                "iter_time_std",
+            ]);
+            for a in &aggs {
+                agg_table.push(vec![
+                    a.machines as f64,
+                    a.replicates as f64,
+                    a.reached as f64,
+                    a.iters_to_target.mean,
+                    a.iters_to_target.std,
+                    a.time_to_target.mean,
+                    a.time_to_target.std,
+                    a.final_subopt.mean,
+                    a.final_subopt.std,
+                    a.mean_iter_time.mean,
+                    a.mean_iter_time.std,
+                ]);
                 println!(
-                    "  m={:<4} iters-to-{:.0e}: {:<6} mean-iter-time {:.4}s",
-                    t.machines,
+                    "  m={:<4} reached {}/{}  iters-to-{:.0e} {}  iter-time {}s",
+                    a.machines,
+                    a.reached,
+                    a.replicates,
                     ctx.cfg.target_subopt,
-                    t.iters_to(ctx.cfg.target_subopt)
-                        .map(|i| i.to_string())
-                        .unwrap_or("-".into()),
-                    t.mean_iter_time()
+                    if a.reached > 0 {
+                        a.iters_to_target.display(1)
+                    } else {
+                        "-".to_string()
+                    },
+                    a.mean_iter_time.display(4),
                 );
             }
+            let agg_path = ctx.out_dir.join(format!("sweep_{algo}_agg.csv"));
+            agg_table.write(&agg_path)?;
+            println!("wrote {}", agg_path.display());
         }
         "fit-system" => {
             let cfg = load_cfg(args)?;
@@ -223,7 +290,7 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
         }
         other => {
             print_help();
-            anyhow::bail!("unknown command '{other}'");
+            hemingway::bail!("unknown command '{other}'");
         }
     }
     Ok(())

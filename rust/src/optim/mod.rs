@@ -71,7 +71,7 @@ pub fn by_name(
         "minibatch-sgd" => Box::new(MiniBatchSgd::new(problem, machines, seed)),
         "local-sgd" => Box::new(LocalSgd::new(problem, machines, seed)),
         "gd" => Box::new(GradientDescent::new(problem, machines)),
-        other => anyhow::bail!(
+        other => crate::bail!(
             "unknown algorithm '{other}' (expected cocoa, cocoa+, minibatch-sgd, local-sgd, gd)"
         ),
     })

@@ -60,6 +60,16 @@ impl Trace {
         self.records.last().map(|r| r.subopt).unwrap_or(f64::NAN)
     }
 
+    /// Per-iteration simulated durations — the differences of the
+    /// cumulative clock (empty for traces with < 2 records). Fig 1(a)
+    /// and the Ernest tables compute their timing statistics from this.
+    pub fn iter_times(&self) -> Vec<f64> {
+        self.records
+            .windows(2)
+            .map(|w| w[1].sim_time - w[0].sim_time)
+            .collect()
+    }
+
     /// Mean time per iteration (simulated).
     pub fn mean_iter_time(&self) -> f64 {
         if self.records.len() < 2 {
@@ -209,6 +219,9 @@ mod tests {
         assert_eq!(t.iters_to(1e-9), None);
         assert!((t.final_subopt() - 0.1).abs() < 1e-12);
         assert!((t.mean_iter_time() - 0.25).abs() < 1e-12);
+        let times = t.iter_times();
+        assert_eq!(times.len(), 9);
+        assert!(times.iter().all(|&dt| (dt - 0.25).abs() < 1e-12));
     }
 
     #[test]

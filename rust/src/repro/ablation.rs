@@ -91,7 +91,7 @@ fn loo_score(
     let test = fit
         .traces
         .find("cocoa+", held_out)
-        .ok_or_else(|| anyhow::anyhow!("no m={held_out} trace"))?;
+        .ok_or_else(|| crate::err!("no m={held_out} trace"))?;
     let predict = estimator(&points_from_traces(&train))?;
     let mut errs = Vec::new();
     for r in &test.records {
@@ -148,21 +148,25 @@ pub fn ablation(ctx: &ReproContext, fit: &SweepFit) -> crate::Result<String> {
     println!("== Ablations (DESIGN.md §7 design choices) ==");
     let mut table = Table::new(&["ablation_id", "variant_id", "score"]);
 
-    // A1: Ernest solver.
+    // A1: Ernest solver (profiling inside fans out through the engine).
     let (nnls_mape, ols_mape) = ablate_ernest(ctx)?;
     println!("  A1 Ernest solver, extrapolation MAPE (m>16): NNLS {nnls_mape:.1}% vs OLS {ols_mape:.1}%");
     table.push(vec![1.0, 0.0, nnls_mape]);
     table.push(vec![1.0, 1.0, ols_mape]);
 
-    // A2: LassoCV vs OLS convergence fit (LOO m=128).
-    let lasso128 = loo_score(fit, 128, lasso_estimator(FeatureLibrary::standard()))?;
-    let ols128 = loo_score(fit, 128, ols_estimator(FeatureLibrary::standard()))?;
+    // A2/A3: three independent LOO-m=128 estimator fits — run them
+    // concurrently through the sweep engine's thread pool.
+    let scores = ctx.sweep.try_map(3, |i| match i {
+        0 => loo_score(fit, 128, lasso_estimator(FeatureLibrary::standard())),
+        1 => loo_score(fit, 128, ols_estimator(FeatureLibrary::standard())),
+        _ => loo_score(fit, 128, lasso_estimator(library_without_theory_terms())),
+    })?;
+    let (lasso128, ols128, no_theory) = (scores[0], scores[1], scores[2]);
     println!("  A2 g-estimator, LOO-m=128 mean |Δln|: LassoCV {lasso128:.3} vs OLS {ols128:.3}");
     table.push(vec![2.0, 0.0, lasso128]);
     table.push(vec![2.0, 1.0, ols128]);
 
     // A3: feature library with vs without the theory family.
-    let no_theory = loo_score(fit, 128, lasso_estimator(library_without_theory_terms()))?;
     println!(
         "  A3 features, LOO-m=128 mean |Δln|: full library {lasso128:.3} vs no-(i/m family) {no_theory:.3}"
     );

@@ -1,4 +1,10 @@
 //! Shared machinery for the per-figure reproduction targets.
+//!
+//! All trace-producing grids go through the [`SweepEngine`]: cells fan
+//! out across the thread pool (native backend) or run serially (PJRT,
+//! whose client is not shared across threads), and finished traces are
+//! cached in memory and on disk under `<out_dir>/cache/` so repeated
+//! figure runs and advisor refits skip already-converged cells.
 
 use std::path::PathBuf;
 
@@ -10,6 +16,7 @@ use crate::optim::{
     by_name, run, Backend, HloBackend, NativeBackend, Problem, RunConfig, Trace, TraceSet,
 };
 use crate::runtime::Engine;
+use crate::sweep::{CellSpec, SweepEngine, SweepGrid, TraceCache};
 use crate::util::asciiplot::{plot, PlotCfg, Series};
 
 /// Everything a figure target needs.
@@ -21,6 +28,11 @@ pub struct ReproContext {
     engine: Option<Engine>,
     pub use_native: bool,
     pub out_dir: PathBuf,
+    /// The shared sweep executor + trace cache.
+    pub sweep: SweepEngine,
+    /// Config-hash prefix pinning dataset, problem, profile and backend
+    /// for every cell this context runs.
+    pub context_key: String,
 }
 
 impl ReproContext {
@@ -30,6 +42,32 @@ impl ReproContext {
     /// mirror (used by fast CI paths); the default is the production
     /// HLO/PJRT path.
     pub fn new(cfg: ExperimentConfig, use_native: bool) -> crate::Result<ReproContext> {
+        let engine = if use_native {
+            None
+        } else {
+            Some(Engine::new(&crate::runtime::default_artifact_dir())?)
+        };
+        Self::build(cfg, engine)
+    }
+
+    /// Prefer the PJRT path, fall back to the native backend when the
+    /// engine is unavailable (no `pjrt` feature / no artifacts) — the
+    /// entry point the examples use. The probed engine is reused, so
+    /// neither the engine nor the expensive dataset + reference solve
+    /// is constructed twice.
+    pub fn new_with_fallback(cfg: ExperimentConfig) -> crate::Result<ReproContext> {
+        let engine = match Engine::new(&crate::runtime::default_artifact_dir()) {
+            Ok(engine) => Some(engine),
+            Err(e) => {
+                crate::log_warn!("PJRT path unavailable ({e}); falling back to the native backend");
+                None
+            }
+        };
+        Self::build(cfg, engine)
+    }
+
+    fn build(cfg: ExperimentConfig, engine: Option<Engine>) -> crate::Result<ReproContext> {
+        let use_native = engine.is_none();
         let data = mnist_like(&cfg.synth());
         let problem = Problem::new(data, cfg.lambda);
         crate::log_info!(
@@ -44,14 +82,21 @@ impl ReproContext {
             "reference solve: P*={p_star:.6} (gap {gap:.2e}, {:.2}s)",
             t0.elapsed().as_secs_f64()
         );
-        let engine = if use_native {
-            None
-        } else {
-            Some(Engine::new(&crate::runtime::default_artifact_dir())?)
-        };
         let profile = HardwareProfile::by_name(&cfg.profile)?;
         let out_dir = PathBuf::from(&cfg.out_dir);
         std::fs::create_dir_all(&out_dir)?;
+        let context_key = format!(
+            "n={};d={};lambda={:e};noise={};density={};seed={};profile={};backend={}",
+            cfg.n,
+            cfg.d,
+            cfg.lambda,
+            cfg.data_noise,
+            cfg.data_density,
+            cfg.seed,
+            cfg.profile,
+            if use_native { "native" } else { "hlo" }
+        );
+        let sweep = SweepEngine::with_default_threads(TraceCache::persistent(&out_dir.join("cache")));
         Ok(ReproContext {
             problem,
             p_star,
@@ -59,6 +104,8 @@ impl ReproContext {
             engine,
             use_native,
             out_dir,
+            sweep,
+            context_key,
             cfg,
         })
     }
@@ -71,71 +118,135 @@ impl ReproContext {
         }
     }
 
-    /// Run one (algorithm, m) to the paper's stopping rule on a fresh
-    /// simulated cluster.
-    pub fn run_one(&self, algo_name: &str, machines: usize) -> crate::Result<Trace> {
-        let mut algo = by_name(algo_name, &self.problem, machines, self.cfg.seed as u32)?;
-        let mut sim = BspSim::new(self.profile.clone(), self.cfg.seed ^ machines as u64);
-        let backend = self.backend();
-        let run_cfg = RunConfig {
+    /// The paper's stopping rules from the config.
+    pub fn run_config(&self) -> RunConfig {
+        RunConfig {
             max_iters: self.cfg.max_iters,
             target_subopt: self.cfg.target_subopt,
             time_budget: None,
-        };
-        let t0 = std::time::Instant::now();
-        let trace = run(
-            algo.as_mut(),
-            backend.as_ref(),
-            &self.problem,
-            &mut sim,
-            self.p_star,
-            &run_cfg,
-        )?;
-        crate::log_info!(
-            "{algo_name} m={machines}: {} iters, final subopt {:.2e} ({:.1}s wall)",
-            trace.records.last().map(|r| r.iter).unwrap_or(0),
-            trace.final_subopt(),
-            t0.elapsed().as_secs_f64()
-        );
-        Ok(trace)
+        }
+    }
+
+    /// Run a full grid through the sweep engine, consulting the trace
+    /// cache per cell. Parallel across cells on the native backend;
+    /// serial (but still cached) on PJRT. Results come back in
+    /// [`SweepGrid::cells`] order regardless of thread count.
+    pub fn run_grid(&self, grid: &SweepGrid) -> crate::Result<Vec<Trace>> {
+        let context_key = format!("{}|{}", self.context_key, grid.run_key());
+        let cells = grid.cells();
+        if self.use_native {
+            let problem = &self.problem;
+            let profile = &self.profile;
+            let p_star = self.p_star;
+            let run_cfg = grid.run.clone();
+            self.sweep.run_cells(&context_key, &cells, &|cell| {
+                run_cell(&NativeBackend, problem, profile, p_star, cell, &run_cfg)
+            })
+        } else {
+            let backend = self.backend();
+            self.sweep.run_cells_serial(&context_key, &cells, &mut |cell| {
+                run_cell(
+                    backend.as_ref(),
+                    &self.problem,
+                    &self.profile,
+                    self.p_star,
+                    cell,
+                    &grid.run,
+                )
+            })
+        }
+    }
+
+    /// Run one (algorithm, m) to the paper's stopping rule on a fresh
+    /// simulated cluster (through the engine, so repeats are cached).
+    pub fn run_one(&self, algo_name: &str, machines: usize) -> crate::Result<Trace> {
+        let traces = self.run_grid(&SweepGrid::single(
+            algo_name,
+            &[machines],
+            self.cfg.seed,
+            self.run_config(),
+        ))?;
+        Ok(traces.into_iter().next().expect("single-cell grid"))
+    }
+
+    /// Traces for one algorithm across a machine list, with custom
+    /// stopping rules.
+    pub fn run_traces(
+        &self,
+        algo_name: &str,
+        machines: &[usize],
+        run: RunConfig,
+    ) -> crate::Result<Vec<Trace>> {
+        self.run_grid(&SweepGrid::single(algo_name, machines, self.cfg.seed, run))
+    }
+
+    /// Traces for several algorithms at one machine count.
+    pub fn run_algos(&self, algos: &[&str], machines: usize) -> crate::Result<Vec<Trace>> {
+        self.run_grid(&SweepGrid {
+            algorithms: algos.iter().map(|s| s.to_string()).collect(),
+            machines: vec![machines],
+            seeds: 1,
+            base_seed: self.cfg.seed,
+            run: self.run_config(),
+        })
     }
 
     /// Run a machine sweep for one algorithm.
     pub fn run_sweep(&self, algo_name: &str) -> crate::Result<TraceSet> {
+        let traces = self.run_traces(algo_name, &self.cfg.machines, self.run_config())?;
         let mut set = TraceSet::default();
-        for &m in &self.cfg.machines {
-            set.push(self.run_one(algo_name, m)?);
+        for t in traces {
+            set.push(t);
         }
         Ok(set)
     }
 
     /// Ernest-style profiling: run a few iterations at each selected
     /// (machines, data-fraction) config, recording per-iteration times.
+    /// Configs fan out across the thread pool on the native backend;
+    /// each task owns its subsampled problem and simulator, and seeds
+    /// depend only on the config, so results are order-independent.
     pub fn profile_system(
         &self,
         algo_name: &str,
         configs: &[crate::ernest::design::Candidate],
         iters_per_config: usize,
     ) -> crate::Result<Vec<Observation>> {
-        let backend = self.backend();
-        let mut obs = Vec::new();
-        for c in configs {
-            let rows = ((self.problem.data.n as f64) * c.fraction) as usize;
-            let sub = self.problem.data.subsample(rows, self.cfg.seed ^ 0xE51);
-            let sub_problem = Problem::new(sub, self.cfg.lambda);
-            let mut algo = by_name(algo_name, &sub_problem, c.machines, self.cfg.seed as u32)?;
-            let mut sim = BspSim::new(self.profile.clone(), self.cfg.seed ^ (rows as u64) << 8);
-            for i in 0..iters_per_config {
-                let cost = algo.step(backend.as_ref(), i)?;
-                let dt = sim.iteration_time(&cost);
-                obs.push(Observation {
-                    machines: c.machines,
-                    size: rows as f64,
-                    time: dt,
-                });
+        let per_config: Vec<Vec<Observation>> = if self.use_native {
+            let problem = &self.problem;
+            let profile = &self.profile;
+            let seed = self.cfg.seed;
+            let lambda = self.cfg.lambda;
+            self.sweep.try_map(configs.len(), |i| {
+                profile_one(
+                    &NativeBackend,
+                    problem,
+                    profile,
+                    seed,
+                    lambda,
+                    algo_name,
+                    &configs[i],
+                    iters_per_config,
+                )
+            })?
+        } else {
+            let backend = self.backend();
+            let mut out = Vec::with_capacity(configs.len());
+            for c in configs {
+                out.push(profile_one(
+                    backend.as_ref(),
+                    &self.problem,
+                    &self.profile,
+                    self.cfg.seed,
+                    self.cfg.lambda,
+                    algo_name,
+                    c,
+                    iters_per_config,
+                )?);
             }
-        }
-        Ok(obs)
+            out
+        };
+        Ok(per_config.into_iter().flatten().collect())
     }
 
     /// Fit the Ernest model from a default profiling pass.
@@ -181,6 +292,64 @@ impl ReproContext {
         };
         println!("{}", plot(&series, &cfg));
     }
+}
+
+/// Run one grid cell: fresh algorithm + simulator against the shared
+/// read-only problem. Seeds are pure functions of the cell, so any
+/// worker may run any cell in any order.
+fn run_cell(
+    backend: &dyn Backend,
+    problem: &Problem,
+    profile: &HardwareProfile,
+    p_star: f64,
+    cell: &CellSpec,
+    run_cfg: &RunConfig,
+) -> crate::Result<Trace> {
+    let mut algo = by_name(&cell.algorithm, problem, cell.machines, cell.seed as u32)?;
+    let mut sim = BspSim::new(profile.clone(), cell.seed ^ cell.machines as u64);
+    let t0 = std::time::Instant::now();
+    let trace = run(algo.as_mut(), backend, problem, &mut sim, p_star, run_cfg)?;
+    crate::log_info!(
+        "{} m={} rep={}: {} iters, final subopt {:.2e} ({:.1}s wall)",
+        cell.algorithm,
+        cell.machines,
+        cell.replicate,
+        trace.records.last().map(|r| r.iter).unwrap_or(0),
+        trace.final_subopt(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(trace)
+}
+
+/// Profile one (machines, fraction) candidate on its own subsampled
+/// problem and simulator.
+#[allow(clippy::too_many_arguments)]
+fn profile_one(
+    backend: &dyn Backend,
+    problem: &Problem,
+    profile: &HardwareProfile,
+    seed: u64,
+    lambda: f64,
+    algo_name: &str,
+    c: &crate::ernest::design::Candidate,
+    iters_per_config: usize,
+) -> crate::Result<Vec<Observation>> {
+    let rows = ((problem.data.n as f64) * c.fraction) as usize;
+    let sub = problem.data.subsample(rows, seed ^ 0xE51);
+    let sub_problem = Problem::new(sub, lambda);
+    let mut algo = by_name(algo_name, &sub_problem, c.machines, seed as u32)?;
+    let mut sim = BspSim::new(profile.clone(), seed ^ (rows as u64) << 8);
+    let mut obs = Vec::with_capacity(iters_per_config);
+    for i in 0..iters_per_config {
+        let cost = algo.step(backend, i)?;
+        let dt = sim.iteration_time(&cost);
+        obs.push(Observation {
+            machines: c.machines,
+            size: rows as f64,
+            time: dt,
+        });
+    }
+    Ok(obs)
 }
 
 /// Convert a trace into (iteration, suboptimality) points.

@@ -4,10 +4,13 @@
 //!     50 iterations) — U-curve with the knee near 32;
 //! (b) CoCoA convergence vs iterations for several m — degrades with m;
 //! (c) CoCoA vs CoCoA+ vs mini-batch SGD vs local SGD at m = 16.
+//!
+//! Every panel's grid fans out through the shared sweep engine; the
+//! cells are cached, so e.g. fig 1(c)'s m=16 CoCoA trace is reused by
+//! fig 1(b) within the same `repro all` invocation.
 
 use super::common::{iter_series, ReproContext};
-use crate::cluster::BspSim;
-use crate::optim::by_name;
+use crate::optim::RunConfig;
 use crate::util::asciiplot::Series;
 use crate::util::csv::Table;
 use crate::util::stats;
@@ -15,20 +18,21 @@ use crate::util::stats;
 /// Fig 1(a): run 50 CoCoA iterations at every m, report time stats.
 pub fn fig1a(ctx: &ReproContext) -> crate::Result<String> {
     println!("== Figure 1(a): time per iteration vs degree of parallelism ==");
-    let backend = ctx.backend();
+    // A fixed-length run (the target is unreachable), one cell per m.
+    let timing_run = RunConfig {
+        max_iters: 50,
+        target_subopt: -1.0,
+        time_budget: None,
+    };
+    let traces = ctx.run_traces("cocoa", &ctx.cfg.machines, timing_run)?;
     let mut table = Table::new(&["machines", "mean", "p5", "p95", "median"]);
     let mut pts = Vec::new();
-    for &m in &ctx.cfg.machines {
-        let mut algo = by_name("cocoa", &ctx.problem, m, ctx.cfg.seed as u32)?;
-        let mut sim = BspSim::new(ctx.profile.clone(), ctx.cfg.seed ^ m as u64);
-        for i in 0..50 {
-            let cost = algo.step(backend.as_ref(), i)?;
-            sim.iteration_time(&cost);
-        }
-        let mean = stats::mean(&sim.history);
-        let p5 = stats::percentile(&sim.history, 5.0);
-        let p95 = stats::percentile(&sim.history, 95.0);
-        table.push(vec![m as f64, mean, p5, p95, stats::median(&sim.history)]);
+    for (&m, trace) in ctx.cfg.machines.iter().zip(&traces) {
+        let times = trace.iter_times();
+        let mean = stats::mean(&times);
+        let p5 = stats::percentile(&times, 5.0);
+        let p95 = stats::percentile(&times, 95.0);
+        table.push(vec![m as f64, mean, p5, p95, stats::median(&times)]);
         pts.push((m as f64, mean));
         println!("  m={m:<4} mean={mean:.4}s  p5={p5:.4}s  p95={p95:.4}s");
     }
@@ -72,18 +76,18 @@ pub fn fig1b(ctx: &ReproContext) -> crate::Result<String> {
         .into_iter()
         .filter(|m| ctx.cfg.machines.contains(m))
         .collect();
+    let traces = ctx.run_traces("cocoa", &ms, ctx.run_config())?;
     let mut table = Table::new(&["machines", "iter", "subopt"]);
     let mut series = Vec::new();
     let mut iters_needed = Vec::new();
-    for &m in &ms {
-        let trace = ctx.run_one("cocoa", m)?;
+    for (&m, trace) in ms.iter().zip(&traces) {
         for r in &trace.records {
             if r.iter >= 1 {
                 table.push(vec![m as f64, r.iter as f64, r.subopt]);
             }
         }
         iters_needed.push((m, trace.iters_to(ctx.cfg.target_subopt)));
-        series.push(Series::new(format!("m={m}"), iter_series(&trace, Some(100))));
+        series.push(Series::new(format!("m={m}"), iter_series(trace, Some(100))));
     }
     ctx.write_csv("fig1b_cocoa_convergence.csv", &table)?;
     ctx.show(
@@ -117,11 +121,11 @@ pub fn fig1c(ctx: &ReproContext) -> crate::Result<String> {
     println!("== Figure 1(c): algorithm comparison at m=16 ==");
     let m = 16;
     let algos = ["cocoa", "cocoa+", "minibatch-sgd", "local-sgd"];
+    let traces = ctx.run_algos(&algos, m)?;
     let mut table = Table::new(&["algo_id", "iter", "subopt"]);
     let mut series = Vec::new();
     let mut finals = Vec::new();
-    for (ai, algo) in algos.iter().enumerate() {
-        let trace = ctx.run_one(algo, m)?;
+    for (ai, (algo, trace)) in algos.iter().zip(&traces).enumerate() {
         for r in &trace.records {
             if r.iter >= 1 {
                 table.push(vec![ai as f64, r.iter as f64, r.subopt]);
@@ -135,7 +139,7 @@ pub fn fig1c(ctx: &ReproContext) -> crate::Result<String> {
             .map(|r| r.subopt)
             .unwrap_or(trace.final_subopt());
         finals.push((algo.to_string(), at_50, trace.final_subopt()));
-        series.push(Series::new(*algo, iter_series(&trace, Some(200))));
+        series.push(Series::new(*algo, iter_series(trace, Some(200))));
     }
     ctx.write_csv("fig1c_algorithm_comparison.csv", &table)?;
     ctx.show(

@@ -18,15 +18,21 @@ pub fn fig4(ctx: &ReproContext, fit: &SweepFit, zoom100: bool) -> crate::Result<
     println!("== Figure {tag}: leave-one-m-out prediction ==");
     let mut table = Table::new(&["held_out_m", "iter", "true_subopt", "pred_subopt"]);
     let mut summaries = Vec::new();
-    for &m in &held_outs {
-        if !ctx.cfg.machines.contains(&m) {
-            continue;
-        }
-        let (_, preds) = loo_m(&fit.traces.traces, m, ctx.cfg.seed)?;
+    // One independent LassoCV refit per held-out m — fan the panels out
+    // through the sweep engine's thread pool.
+    let held_outs: Vec<usize> = held_outs
+        .into_iter()
+        .filter(|m| ctx.cfg.machines.contains(m))
+        .collect();
+    let seed = ctx.cfg.seed;
+    let panels = ctx.sweep.try_map(held_outs.len(), |i| {
+        loo_m(&fit.traces.traces, held_outs[i], seed)
+    })?;
+    for (&m, (_, preds)) in held_outs.iter().zip(&panels) {
         let mut lnerrs = Vec::new();
         let mut truth_pts = Vec::new();
         let mut pred_pts = Vec::new();
-        for &(i, truth, pred) in &preds {
+        for &(i, truth, pred) in preds {
             if zoom100 && i > 100.0 {
                 continue;
             }

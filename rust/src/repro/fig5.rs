@@ -16,15 +16,21 @@ pub fn fig5(ctx: &ReproContext, fit: &SweepFit, zoom100: bool) -> crate::Result<
     let trace = fit
         .traces
         .find("cocoa+", 16)
-        .ok_or_else(|| anyhow::anyhow!("no m=16 trace in sweep"))?;
+        .ok_or_else(|| crate::err!("no m=16 trace in sweep"))?;
     let mut table = Table::new(&["ahead", "iter", "true_subopt", "pred_subopt"]);
     let mut parts = Vec::new();
-    for ahead in [1usize, 10] {
-        let preds = forward_iterations(trace, 50, ahead, ctx.cfg.seed)?;
+    // Each look-ahead refits hundreds of windowed models — run the two
+    // panels concurrently through the sweep engine's thread pool.
+    let aheads = [1usize, 10];
+    let seed = ctx.cfg.seed;
+    let panels = ctx
+        .sweep
+        .try_map(aheads.len(), |i| forward_iterations(trace, 50, aheads[i], seed))?;
+    for (&ahead, preds) in aheads.iter().zip(&panels) {
         let mut lnerrs = Vec::new();
         let mut truth_pts = Vec::new();
         let mut pred_pts = Vec::new();
-        for &(i, truth, pred) in &preds {
+        for &(i, truth, pred) in preds {
             if zoom100 && i > 100.0 {
                 continue;
             }

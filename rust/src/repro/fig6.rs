@@ -15,14 +15,20 @@ pub fn fig6(ctx: &ReproContext, fit: &SweepFit, zoom: bool) -> crate::Result<Str
     let trace = fit
         .traces
         .find("cocoa+", 16)
-        .ok_or_else(|| anyhow::anyhow!("no m=16 trace in sweep"))?;
+        .ok_or_else(|| crate::err!("no m=16 trace in sweep"))?;
     let ernest = ctx.fit_ernest("cocoa+")?;
     let size = ctx.problem.data.n as f64;
 
     let mut table = Table::new(&["delta_t", "target_time", "true_subopt", "pred_subopt"]);
     let mut parts = Vec::new();
-    for delta in [1.0f64, 5.0] {
-        let preds = forward_time(trace, &ernest, size, 50, delta, ctx.cfg.seed)?;
+    // Both look-ahead horizons refit windowed models independently —
+    // run them concurrently through the sweep engine's thread pool.
+    let deltas = [1.0f64, 5.0];
+    let seed = ctx.cfg.seed;
+    let panels = ctx
+        .sweep
+        .try_map(deltas.len(), |i| forward_time(trace, &ernest, size, 50, deltas[i], seed))?;
+    for (&delta, preds) in deltas.iter().zip(&panels) {
         let mut lnerrs = Vec::new();
         let mut truth_pts = Vec::new();
         let mut pred_pts = Vec::new();
@@ -36,7 +42,7 @@ pub fn fig6(ctx: &ReproContext, fit: &SweepFit, zoom: bool) -> crate::Result<Str
         } else {
             f64::INFINITY
         };
-        for &(t, truth, pred) in &preds {
+        for &(t, truth, pred) in preds {
             if t > t_cap {
                 continue;
             }

@@ -83,7 +83,7 @@ pub fn run_figures(ctx: &ReproContext, which: &str) -> crate::Result<Vec<String>
         summaries.push(tables::table_ernest(ctx)?);
     }
 
-    anyhow::ensure!(
+    crate::ensure!(
         !summaries.is_empty(),
         "unknown figure '{which}' (expected one of {FIGURES:?} or 'all')"
     );

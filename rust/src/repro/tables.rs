@@ -4,10 +4,9 @@
 use super::common::ReproContext;
 use super::fig3::SweepFit;
 use crate::advisor::{Advisor, CombinedModel};
-use crate::cluster::BspSim;
 use crate::ernest::ErnestModel;
 use crate::hemingway_model::{points_from_traces, ConvergenceModel, FeatureLibrary};
-use crate::optim::by_name;
+use crate::optim::RunConfig;
 use crate::util::csv::Table;
 use crate::util::stats;
 
@@ -30,17 +29,18 @@ pub fn table_ernest(ctx: &ReproContext) -> crate::Result<String> {
     let model = ErnestModel::fit(&obs)?;
 
     // Held-out: full data at every m in the sweep, measured directly.
-    let backend = ctx.backend();
+    // One 30-iteration timing cell per m, fanned out through the sweep
+    // engine (and cached alongside every other grid cell).
+    let timing_run = RunConfig {
+        max_iters: 30,
+        target_subopt: -1.0,
+        time_budget: None,
+    };
+    let traces = ctx.run_traces("cocoa+", &ctx.cfg.machines, timing_run)?;
     let mut table = Table::new(&["machines", "measured", "predicted", "error_pct"]);
     let mut errs = Vec::new();
-    for &m in &ctx.cfg.machines {
-        let mut algo = by_name("cocoa+", &ctx.problem, m, ctx.cfg.seed as u32)?;
-        let mut sim = BspSim::new(ctx.profile.clone(), ctx.cfg.seed ^ (m as u64) << 4);
-        for i in 0..30 {
-            let cost = algo.step(backend.as_ref(), i)?;
-            sim.iteration_time(&cost);
-        }
-        let measured = stats::mean(&sim.history);
+    for (&m, trace) in ctx.cfg.machines.iter().zip(&traces) {
+        let measured = stats::mean(&trace.iter_times());
         let predicted = model.predict(m, ctx.problem.data.n as f64);
         let err = 100.0 * ((predicted - measured) / measured).abs();
         table.push(vec![m as f64, measured, predicted, err]);

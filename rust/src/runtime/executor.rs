@@ -68,7 +68,7 @@ impl Engine {
     pub fn new(artifact_dir: &Path) -> crate::Result<Engine> {
         let manifest = Manifest::load(artifact_dir)?;
         let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+            .map_err(|e| crate::err!("creating PJRT CPU client: {e:?}"))?;
         crate::log_info!(
             "PJRT engine up: platform={} devices={} artifacts={}",
             client.platform_name(),
@@ -112,12 +112,12 @@ impl Engine {
         let path = self.manifest.path(spec);
         let t0 = std::time::Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+            .map_err(|e| crate::err!("parsing {}: {e:?}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+            .map_err(|e| crate::err!("compiling {}: {e:?}", path.display()))?;
         let exe = std::sync::Arc::new(exe);
         crate::log_debug!(
             "compiled {kernel} n_loc={n_loc} d={d} in {:.3}s",
@@ -155,7 +155,7 @@ impl Engine {
             self.client
                 .buffer_from_host_buffer(data, dims, None)
                 .map(Arc::new)
-                .map_err(|e| anyhow::anyhow!("uploading partition buffer: {e:?}"))
+                .map_err(|e| crate::err!("uploading partition buffer: {e:?}"))
         };
         let b = Arc::new(PartitionBuffers {
             x: up(&part.x, &[part.n_loc, part.d])?,
@@ -172,14 +172,14 @@ impl Engine {
         self.client
             .buffer_from_host_buffer(data, dims, None)
             .map(Arc::new)
-            .map_err(|e| anyhow::anyhow!("uploading small buffer: {e:?}"))
+            .map_err(|e| crate::err!("uploading small buffer: {e:?}"))
     }
 
     fn small_buf_i32(&self, data: &[i32], dims: &[usize]) -> crate::Result<Arc<xla::PjRtBuffer>> {
         self.client
             .buffer_from_host_buffer(data, dims, None)
             .map(Arc::new)
-            .map_err(|e| anyhow::anyhow!("uploading i32 buffer: {e:?}"))
+            .map_err(|e| crate::err!("uploading i32 buffer: {e:?}"))
     }
 
     /// Execute with device-resident args, returning the untupled outputs.
@@ -194,13 +194,13 @@ impl Engine {
         let t0 = std::time::Instant::now();
         let result = exe
             .execute_b(args)
-            .map_err(|e| anyhow::anyhow!("executing {kernel} (buffers): {e:?}"))?;
+            .map_err(|e| crate::err!("executing {kernel} (buffers): {e:?}"))?;
         let literal = result[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching {kernel} output: {e:?}"))?;
+            .map_err(|e| crate::err!("fetching {kernel} output: {e:?}"))?;
         let parts = literal
             .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling {kernel} output: {e:?}"))?;
+            .map_err(|e| crate::err!("untupling {kernel} output: {e:?}"))?;
         let mut s = self.stats.lock().unwrap();
         s.executions += 1;
         s.exec_seconds += t0.elapsed().as_secs_f64();
@@ -218,13 +218,13 @@ impl Engine {
         let t0 = std::time::Instant::now();
         let result = exe
             .execute::<xla::Literal>(args)
-            .map_err(|e| anyhow::anyhow!("executing {kernel}: {e:?}"))?;
+            .map_err(|e| crate::err!("executing {kernel}: {e:?}"))?;
         let literal = result[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching {kernel} output: {e:?}"))?;
+            .map_err(|e| crate::err!("fetching {kernel} output: {e:?}"))?;
         let parts = literal
             .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling {kernel} output: {e:?}"))?;
+            .map_err(|e| crate::err!("untupling {kernel} output: {e:?}"))?;
         let mut s = self.stats.lock().unwrap();
         s.executions += 1;
         s.exec_seconds += t0.elapsed().as_secs_f64();
@@ -259,7 +259,7 @@ impl Engine {
             xla::Literal::vec1(&[seed as i32]),
         ];
         let parts = self.run("cocoa_local", n_loc, d, &args)?;
-        anyhow::ensure!(parts.len() == 2, "cocoa_local returned {} parts", parts.len());
+        crate::ensure!(parts.len() == 2, "cocoa_local returned {} parts", parts.len());
         Ok(CocoaLocalOut {
             alpha: to_f32(&parts[0])?,
             delta_w: to_f32(&parts[1])?,
@@ -284,7 +284,7 @@ impl Engine {
             xla::Literal::vec1(w),
         ];
         let parts = self.run("grad", n_loc, d, &args)?;
-        anyhow::ensure!(parts.len() == 2, "grad returned {} parts", parts.len());
+        crate::ensure!(parts.len() == 2, "grad returned {} parts", parts.len());
         let stats = to_f32(&parts[1])?;
         Ok(GradOut {
             grad_sum: to_f32(&parts[0])?,
@@ -317,7 +317,7 @@ impl Engine {
             xla::Literal::vec1(&[seed as i32]),
         ];
         let parts = self.run("local_sgd", n_loc, d, &args)?;
-        anyhow::ensure!(parts.len() == 1, "local_sgd returned {} parts", parts.len());
+        crate::ensure!(parts.len() == 1, "local_sgd returned {} parts", parts.len());
         to_f32(&parts[0])
     }
 }
@@ -347,7 +347,7 @@ impl Engine {
             self.small_buf_i32(&[seed as i32], &[1])?,
         ];
         let parts = self.run_buffers("cocoa_local", part.n_loc, part.d, &args)?;
-        anyhow::ensure!(parts.len() == 2, "cocoa_local returned {} parts", parts.len());
+        crate::ensure!(parts.len() == 2, "cocoa_local returned {} parts", parts.len());
         Ok(CocoaLocalOut {
             alpha: to_f32(&parts[0])?,
             delta_w: to_f32(&parts[1])?,
@@ -376,7 +376,7 @@ impl Engine {
             self.small_buf(w, &[part.d])?,
         ];
         let parts = self.run_buffers("grad", part.n_loc, part.d, &args)?;
-        anyhow::ensure!(parts.len() == 2, "grad returned {} parts", parts.len());
+        crate::ensure!(parts.len() == 2, "grad returned {} parts", parts.len());
         let stats = to_f32(&parts[1])?;
         Ok(GradOut {
             grad_sum: to_f32(&parts[0])?,
@@ -404,7 +404,7 @@ impl Engine {
             self.small_buf_i32(&[seed as i32], &[1])?,
         ];
         let parts = self.run_buffers("local_sgd", part.n_loc, part.d, &args)?;
-        anyhow::ensure!(parts.len() == 1, "local_sgd returned {} parts", parts.len());
+        crate::ensure!(parts.len() == 1, "local_sgd returned {} parts", parts.len());
         to_f32(&parts[0])
     }
 }
@@ -412,16 +412,16 @@ impl Engine {
 fn mat(data: &[f32], rows: usize, cols: usize) -> crate::Result<xla::Literal> {
     xla::Literal::vec1(data)
         .reshape(&[rows as i64, cols as i64])
-        .map_err(|e| anyhow::anyhow!("reshaping ({rows},{cols}) literal: {e:?}"))
+        .map_err(|e| crate::err!("reshaping ({rows},{cols}) literal: {e:?}"))
 }
 
 fn col(data: &[f32]) -> crate::Result<xla::Literal> {
     xla::Literal::vec1(data)
         .reshape(&[data.len() as i64, 1])
-        .map_err(|e| anyhow::anyhow!("reshaping column literal: {e:?}"))
+        .map_err(|e| crate::err!("reshaping column literal: {e:?}"))
 }
 
 fn to_f32(l: &xla::Literal) -> crate::Result<Vec<f32>> {
     l.to_vec::<f32>()
-        .map_err(|e| anyhow::anyhow!("reading f32 output: {e:?}"))
+        .map_err(|e| crate::err!("reading f32 output: {e:?}"))
 }

@@ -1,0 +1,164 @@
+//! Stub execution engine used when the crate is built without the
+//! `pjrt` feature (the offline registry has no `xla` crate, so the
+//! real PJRT executor in `executor.rs` cannot link).
+//!
+//! The public surface is identical to the real engine; construction
+//! fails with an actionable message, so every caller that can fall
+//! back to the native backend (`--native`, the examples, the repro
+//! harness) does so at startup instead of deep inside a sweep.
+
+use std::path::Path;
+
+use super::manifest::Manifest;
+use crate::data::Partition;
+
+/// Typed result of one CoCoA local-solver call.
+#[derive(Debug, Clone)]
+pub struct CocoaLocalOut {
+    /// Updated dual block (length n_loc; padded entries stay 0).
+    pub alpha: Vec<f32>,
+    /// Local primal delta `(1/λn) X_kᵀ(Δa ∘ y)` (length d).
+    pub delta_w: Vec<f32>,
+}
+
+/// Typed result of one weighted hinge-statistics call.
+#[derive(Debug, Clone)]
+pub struct GradOut {
+    /// Σ wt_i 1[margin>0] (−y_i x_i) (length d) — unnormalized.
+    pub grad_sum: Vec<f32>,
+    /// Weighted hinge sum.
+    pub hinge_sum: f32,
+    /// Weighted correct-prediction count.
+    pub correct_sum: f32,
+}
+
+/// Counters for runtime introspection and the §Perf analysis.
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub exec_seconds: f64,
+    pub partition_uploads: u64,
+}
+
+fn unavailable() -> crate::util::error::BoxError {
+    crate::err!(
+        "the PJRT/HLO execution path is not compiled in: this build has no `pjrt` \
+         feature (the offline registry lacks the `xla` crate). Use the native \
+         backend (`--native`), or rebuild with `--features pjrt` after adding a \
+         vendored `xla` path dependency (see rust/Cargo.toml's [features] notes)."
+    )
+}
+
+/// Placeholder for the PJRT-backed execution engine. [`Engine::new`]
+/// always fails in this build, so no instance ever exists; the methods
+/// only satisfy the call sites' types.
+pub struct Engine {
+    manifest: Manifest,
+}
+
+impl Engine {
+    /// Always fails in non-`pjrt` builds (see module docs).
+    pub fn new(_artifact_dir: &Path) -> crate::Result<Engine> {
+        Err(unavailable())
+    }
+
+    pub fn clear_partition_buffers(&self) {}
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        ExecStats::default()
+    }
+
+    pub fn warmup(&self) -> crate::Result<()> {
+        Err(unavailable())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn cocoa_local(
+        &self,
+        _x: &[f32],
+        _y: &[f32],
+        _mask: &[f32],
+        _alpha: &[f32],
+        _w: &[f32],
+        _lambda_n: f32,
+        _sigma_prime: f32,
+        _seed: u32,
+    ) -> crate::Result<CocoaLocalOut> {
+        Err(unavailable())
+    }
+
+    pub fn grad(
+        &self,
+        _x: &[f32],
+        _y: &[f32],
+        _weights: &[f32],
+        _w: &[f32],
+    ) -> crate::Result<GradOut> {
+        Err(unavailable())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_sgd(
+        &self,
+        _x: &[f32],
+        _y: &[f32],
+        _mask: &[f32],
+        _w: &[f32],
+        _lambda: f32,
+        _t0: f32,
+        _seed: u32,
+    ) -> crate::Result<Vec<f32>> {
+        Err(unavailable())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn cocoa_local_part(
+        &self,
+        _part: &Partition,
+        _alpha: &[f32],
+        _w: &[f32],
+        _lambda_n: f32,
+        _sigma_prime: f32,
+        _seed: u32,
+    ) -> crate::Result<CocoaLocalOut> {
+        Err(unavailable())
+    }
+
+    pub fn grad_part(
+        &self,
+        _part: &Partition,
+        _weights: &[f32],
+        _w: &[f32],
+    ) -> crate::Result<GradOut> {
+        Err(unavailable())
+    }
+
+    pub fn local_sgd_part(
+        &self,
+        _part: &Partition,
+        _w: &[f32],
+        _lambda: f32,
+        _t0: f32,
+        _seed: u32,
+    ) -> crate::Result<Vec<f32>> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_fails_with_actionable_message() {
+        let err = Engine::new(Path::new("artifacts")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("--native"), "unhelpful: {msg}");
+        assert!(msg.contains("pjrt"), "unhelpful: {msg}");
+    }
+}

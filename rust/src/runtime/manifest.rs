@@ -38,7 +38,7 @@ impl Manifest {
         let machines = doc
             .req_array("machines")?
             .iter()
-            .map(|m| m.as_usize().ok_or_else(|| anyhow::anyhow!("bad machine count")))
+            .map(|m| m.as_usize().ok_or_else(|| crate::err!("bad machine count")))
             .collect::<crate::Result<Vec<_>>>()?;
         let mut artifacts = Vec::new();
         for e in doc.req_array("artifacts")? {
@@ -75,7 +75,7 @@ impl Manifest {
             .iter()
             .find(|a| a.kernel == kernel && a.n_loc == n_loc && a.d == d)
             .ok_or_else(|| {
-                anyhow::anyhow!(
+                crate::err!(
                     "no artifact for kernel '{kernel}' with n_loc={n_loc}, d={d}; \
                      regenerate with `make artifacts` or run \
                      `python -m compile.aot --n <rows> --d {d} --machines <list>` \

@@ -1,7 +1,16 @@
 //! Runtime layer: load AOT artifacts (`artifacts/*.hlo.txt`) and
 //! execute them through the PJRT C API (`xla` crate). Python never
 //! runs here — the artifacts were lowered once by `make artifacts`.
+//!
+//! The `xla` crate is unavailable in the offline registry, so the real
+//! executor only compiles under the `pjrt` feature (with a vendored
+//! `xla`); default builds get an API-identical stub whose
+//! `Engine::new` fails with a pointer at the native backend.
 
+#[cfg(feature = "pjrt")]
+pub mod executor;
+#[cfg(not(feature = "pjrt"))]
+#[path = "executor_stub.rs"]
 pub mod executor;
 pub mod manifest;
 

@@ -1,0 +1,296 @@
+//! Trace cache: in-memory + on-disk storage of finished sweep cells,
+//! keyed by a config hash so repeated figure runs and advisor queries
+//! reuse traces instead of recomputing them.
+//!
+//! The on-disk format serializes every float through Rust's
+//! shortest-roundtrip `Display`, so a cached [`Trace`] comes back
+//! byte-identical (re-serializing a loaded trace reproduces the stored
+//! bytes exactly, including NaN duals). Each file carries its full key;
+//! a hash collision or a stale file from another config is detected by
+//! key mismatch and treated as a miss.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::optim::trace::{Record, Trace};
+
+const MAGIC: &str = "hemingway-trace v1";
+
+/// FNV-1a 64-bit hash of a cache key (names the on-disk file).
+pub fn hash_key(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Serialize a trace (with its cache key) to the on-disk format.
+pub fn serialize_trace(key: &str, trace: &Trace) -> String {
+    let mut s = String::with_capacity(64 + trace.records.len() * 48);
+    s.push_str(MAGIC);
+    s.push('\n');
+    s.push_str("key=");
+    s.push_str(key);
+    s.push('\n');
+    s.push_str(&format!(
+        "algorithm={}\nmachines={}\np_star={}\nrecords={}\n",
+        trace.algorithm,
+        trace.machines,
+        trace.p_star,
+        trace.records.len()
+    ));
+    for r in &trace.records {
+        s.push_str(&format!(
+            "{} {} {} {} {}\n",
+            r.iter, r.sim_time, r.primal, r.dual, r.subopt
+        ));
+    }
+    s
+}
+
+/// Parse the on-disk format back into (key, Trace).
+pub fn parse_trace(text: &str) -> crate::Result<(String, Trace)> {
+    let mut lines = text.lines();
+    crate::ensure!(lines.next() == Some(MAGIC), "not a trace cache file");
+    let field = |line: Option<&str>, name: &str| -> crate::Result<String> {
+        let l = line.ok_or_else(|| crate::err!("truncated trace file (missing {name})"))?;
+        l.strip_prefix(&format!("{name}="))
+            .map(str::to_string)
+            .ok_or_else(|| crate::err!("expected '{name}=' line, got '{l}'"))
+    };
+    let key = field(lines.next(), "key")?;
+    let algorithm = field(lines.next(), "algorithm")?;
+    let machines: usize = field(lines.next(), "machines")?
+        .parse()
+        .map_err(|e| crate::err!("bad machines field: {e}"))?;
+    let p_star: f64 = field(lines.next(), "p_star")?
+        .parse()
+        .map_err(|e| crate::err!("bad p_star field: {e}"))?;
+    let n: usize = field(lines.next(), "records")?
+        .parse()
+        .map_err(|e| crate::err!("bad records field: {e}"))?;
+    let mut trace = Trace::new(algorithm, machines, p_star);
+    for i in 0..n {
+        let line = lines
+            .next()
+            .ok_or_else(|| crate::err!("truncated trace file (record {i}/{n})"))?;
+        let mut cells = line.split_ascii_whitespace();
+        let mut next_f64 = || -> crate::Result<f64> {
+            cells
+                .next()
+                .ok_or_else(|| crate::err!("short record line '{line}'"))?
+                .parse::<f64>()
+                .map_err(|e| crate::err!("bad float in record '{line}': {e}"))
+        };
+        let iter = next_f64()? as usize;
+        trace.push(Record {
+            iter,
+            sim_time: next_f64()?,
+            primal: next_f64()?,
+            dual: next_f64()?,
+            subopt: next_f64()?,
+        });
+    }
+    Ok((key, trace))
+}
+
+/// In-memory + optional on-disk trace cache. Thread-safe: sweep
+/// workers get/put concurrently through a mutex (one lock per cell,
+/// never held across a run).
+pub struct TraceCache {
+    dir: Option<PathBuf>,
+    mem: Mutex<HashMap<String, Trace>>,
+    hits: Mutex<(u64, u64)>, // (hits, misses) — diagnostics
+}
+
+impl TraceCache {
+    /// Memory-only cache (unit tests, one-shot runs).
+    pub fn in_memory() -> TraceCache {
+        TraceCache {
+            dir: None,
+            mem: Mutex::new(HashMap::new()),
+            hits: Mutex::new((0, 0)),
+        }
+    }
+
+    /// Cache persisted under `dir` (created lazily on first store), so
+    /// a second invocation skips every already-converged cell.
+    pub fn persistent(dir: &Path) -> TraceCache {
+        TraceCache {
+            dir: Some(dir.to_path_buf()),
+            mem: Mutex::new(HashMap::new()),
+            hits: Mutex::new((0, 0)),
+        }
+    }
+
+    fn path_for(&self, key: &str) -> Option<PathBuf> {
+        self.dir
+            .as_ref()
+            .map(|d| d.join(format!("{:016x}.trace", hash_key(key))))
+    }
+
+    /// Look up a cell. Memory first, then disk (promoting the parsed
+    /// trace into memory). A disk entry whose stored key differs from
+    /// `key` — hash collision or corruption — is a miss.
+    pub fn get(&self, key: &str) -> Option<Trace> {
+        if let Some(t) = self.mem.lock().unwrap().get(key) {
+            self.hits.lock().unwrap().0 += 1;
+            return Some(t.clone());
+        }
+        if let Some(path) = self.path_for(key) {
+            if let Ok(text) = std::fs::read_to_string(&path) {
+                match parse_trace(&text) {
+                    Ok((stored_key, trace)) if stored_key == key => {
+                        self.mem
+                            .lock()
+                            .unwrap()
+                            .insert(key.to_string(), trace.clone());
+                        self.hits.lock().unwrap().0 += 1;
+                        return Some(trace);
+                    }
+                    Ok(_) => {
+                        crate::log_debug!("trace cache key mismatch at {}", path.display());
+                    }
+                    Err(e) => {
+                        crate::log_warn!("unreadable trace cache file {}: {e}", path.display());
+                    }
+                }
+            }
+        }
+        self.hits.lock().unwrap().1 += 1;
+        None
+    }
+
+    /// Store a finished cell (memory + disk). Disk failures degrade to
+    /// memory-only caching with a warning — a sweep never fails because
+    /// the cache directory is read-only.
+    pub fn put(&self, key: &str, trace: &Trace) {
+        self.mem
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), trace.clone());
+        if let Some(path) = self.path_for(key) {
+            let write = || -> crate::Result<()> {
+                if let Some(parent) = path.parent() {
+                    std::fs::create_dir_all(parent)?;
+                }
+                std::fs::write(&path, serialize_trace(key, trace))?;
+                Ok(())
+            };
+            if let Err(e) = write() {
+                crate::log_warn!("could not persist trace cache entry: {e}");
+            }
+        }
+    }
+
+    /// (hits, misses) since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        *self.hits.lock().unwrap()
+    }
+
+    /// Entries resident in memory.
+    pub fn len(&self) -> usize {
+        self.mem.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let mut t = Trace::new("cocoa+", 16, 0.123456789012345);
+        for i in 0..5 {
+            t.push(Record {
+                iter: i,
+                sim_time: i as f64 * 0.1 + 1e-13, // not exactly representable
+                primal: 1.0 / (i + 1) as f64,
+                dual: if i % 2 == 0 { f64::NAN } else { 0.25 },
+                subopt: (0.1f64).powi(i as i32 + 1),
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn serialize_parse_roundtrip_is_byte_identical() {
+        let t = sample_trace();
+        let bytes = serialize_trace("k1", &t);
+        let (key, back) = parse_trace(&bytes).unwrap();
+        assert_eq!(key, "k1");
+        // Re-serializing the parsed trace reproduces the exact bytes:
+        // every f64 (including NaN) survived the round trip.
+        assert_eq!(serialize_trace("k1", &back), bytes);
+        assert_eq!(back.records.len(), t.records.len());
+        assert!(back.records[0].dual.is_nan());
+    }
+
+    #[test]
+    fn memory_cache_hits_after_put() {
+        let c = TraceCache::in_memory();
+        let t = sample_trace();
+        assert!(c.get("a").is_none());
+        c.put("a", &t);
+        let back = c.get("a").unwrap();
+        assert_eq!(serialize_trace("a", &back), serialize_trace("a", &t));
+        assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn disk_cache_survives_a_fresh_instance() {
+        let dir = std::env::temp_dir().join("hemingway_trace_cache_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let t = sample_trace();
+        {
+            let c = TraceCache::persistent(&dir);
+            c.put("cell-1", &t);
+        }
+        // A new cache instance (≈ a second CLI invocation) hits disk.
+        let c2 = TraceCache::persistent(&dir);
+        assert!(c2.is_empty());
+        let back = c2.get("cell-1").unwrap();
+        assert_eq!(
+            serialize_trace("cell-1", &back),
+            serialize_trace("cell-1", &t)
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn key_mismatch_is_a_miss() {
+        let dir = std::env::temp_dir().join("hemingway_trace_cache_collide");
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = TraceCache::persistent(&dir);
+        let t = sample_trace();
+        c.put("key-a", &t);
+        // Simulate a hash collision: key-b's slot holds key-a's bytes.
+        let path = dir.join(format!("{:016x}.trace", hash_key("key-b")));
+        std::fs::write(&path, serialize_trace("key-a", &t)).unwrap();
+        assert!(c.get("key-b").is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn different_config_hash_means_different_entry() {
+        let c = TraceCache::in_memory();
+        let t = sample_trace();
+        c.put("ctx|max_iters=500|algo=cocoa;m=16;rep=0;seed=1", &t);
+        // Changing any config component misses.
+        assert!(c
+            .get("ctx|max_iters=100|algo=cocoa;m=16;rep=0;seed=1")
+            .is_none());
+        assert!(c
+            .get("ctx|max_iters=500|algo=cocoa;m=16;rep=1;seed=1")
+            .is_none());
+        assert!(c
+            .get("ctx|max_iters=500|algo=cocoa;m=16;rep=0;seed=1")
+            .is_some());
+    }
+}

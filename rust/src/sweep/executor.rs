@@ -1,0 +1,396 @@
+//! The sweep executor: fans grid cells out across the thread pool,
+//! consults the trace cache before running anything, and aggregates
+//! seed replicates into per-cell statistics.
+//!
+//! Determinism contract: a cell's trace depends only on its
+//! [`CellSpec`] (and the caller's context), never on which worker ran
+//! it or in what order — so `threads=1` and `threads=N` produce
+//! identical results, and CI pins `HEMINGWAY_THREADS=1` purely to make
+//! scheduling reproducible, not correctness.
+
+use super::cache::TraceCache;
+use super::spec::{cell_key, CellSpec};
+use crate::optim::trace::Trace;
+use crate::util::stats::{self, MeanStd};
+use crate::util::threadpool::{default_threads, parallel_map};
+
+/// Parallel, cache-aware executor for sweep grids.
+pub struct SweepEngine {
+    /// Worker threads for cell fan-out (≥ 1).
+    pub threads: usize,
+    pub cache: TraceCache,
+}
+
+impl SweepEngine {
+    pub fn new(threads: usize, cache: TraceCache) -> SweepEngine {
+        SweepEngine {
+            threads: threads.max(1),
+            cache,
+        }
+    }
+
+    /// Engine with [`default_threads`] (honors `HEMINGWAY_THREADS`).
+    pub fn with_default_threads(cache: TraceCache) -> SweepEngine {
+        SweepEngine::new(default_threads(), cache)
+    }
+
+    /// Deterministic fan-out for non-trace grid work (model fits,
+    /// held-out panels, candidate scans). Results come back in index
+    /// order.
+    pub fn map<T: Send>(&self, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+        parallel_map(n, self.threads, f)
+    }
+
+    /// Fallible fan-out: runs everything, then surfaces the first
+    /// error in index order.
+    pub fn try_map<T: Send>(
+        &self,
+        n: usize,
+        f: impl Fn(usize) -> crate::Result<T> + Sync,
+    ) -> crate::Result<Vec<T>> {
+        parallel_map(n, self.threads, f).into_iter().collect()
+    }
+
+    /// Run every cell through `runner`, in parallel, consulting the
+    /// cache first. `context_key` pins everything the runner closes
+    /// over (dataset, profile, backend, stopping rules) — it is the
+    /// config-hash prefix of every cell's cache key. Results are in
+    /// `cells` order.
+    pub fn run_cells(
+        &self,
+        context_key: &str,
+        cells: &[CellSpec],
+        runner: &(dyn Fn(&CellSpec) -> crate::Result<Trace> + Sync),
+    ) -> crate::Result<Vec<Trace>> {
+        parallel_map(cells.len(), self.threads, |i| {
+            self.run_one_cell(context_key, &cells[i], runner)
+        })
+        .into_iter()
+        .collect()
+    }
+
+    /// Serial variant for backends that must not be shared across
+    /// threads (the PJRT engine); still cache-aware, and `FnMut` so the
+    /// runner can own mutable state.
+    pub fn run_cells_serial(
+        &self,
+        context_key: &str,
+        cells: &[CellSpec],
+        runner: &mut dyn FnMut(&CellSpec) -> crate::Result<Trace>,
+    ) -> crate::Result<Vec<Trace>> {
+        let mut out = Vec::with_capacity(cells.len());
+        for cell in cells {
+            let key = cell_key(context_key, cell);
+            if let Some(t) = self.cache.get(&key) {
+                out.push(t);
+                continue;
+            }
+            let t = runner(cell)?;
+            self.cache.put(&key, &t);
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    fn run_one_cell(
+        &self,
+        context_key: &str,
+        cell: &CellSpec,
+        runner: &(dyn Fn(&CellSpec) -> crate::Result<Trace> + Sync),
+    ) -> crate::Result<Trace> {
+        let key = cell_key(context_key, cell);
+        if let Some(t) = self.cache.get(&key) {
+            return Ok(t);
+        }
+        let t = runner(cell)?;
+        self.cache.put(&key, &t);
+        Ok(t)
+    }
+}
+
+/// Seed-replication aggregate for one (algorithm, machines) cell.
+#[derive(Debug, Clone)]
+pub struct CellAggregate {
+    pub algorithm: String,
+    pub machines: usize,
+    pub replicates: usize,
+    /// Replicates that reached the suboptimality target.
+    pub reached: usize,
+    /// Iterations to target, over the replicates that reached it.
+    pub iters_to_target: MeanStd,
+    /// Simulated seconds to target, over the replicates that reached it.
+    pub time_to_target: MeanStd,
+    pub final_subopt: MeanStd,
+    pub mean_iter_time: MeanStd,
+}
+
+/// Aggregate, with NaN mean/std when no replicate produced a sample —
+/// distinguishable from a real 0.0 (and serialized as an empty CSV
+/// cell by `util::csv`).
+fn agg_or_nan(xs: &[f64]) -> MeanStd {
+    if xs.is_empty() {
+        MeanStd {
+            mean: f64::NAN,
+            std: f64::NAN,
+            n: 0,
+        }
+    } else {
+        stats::mean_stddev(xs)
+    }
+}
+
+/// Group replicate traces by (algorithm, machines) — first-seen order —
+/// and aggregate each cell's metrics with mean ± stddev
+/// ([`stats::mean_stddev`]). Cells no replicate of which reached the
+/// target get NaN (not 0.0) for the to-target metrics.
+pub fn aggregate(traces: &[Trace], target_subopt: f64) -> Vec<CellAggregate> {
+    let mut order: Vec<(String, usize)> = Vec::new();
+    for t in traces {
+        let k = (t.algorithm.clone(), t.machines);
+        if !order.contains(&k) {
+            order.push(k);
+        }
+    }
+    order
+        .into_iter()
+        .map(|(algo, m)| {
+            let group: Vec<&Trace> = traces
+                .iter()
+                .filter(|t| t.algorithm == algo && t.machines == m)
+                .collect();
+            let iters: Vec<f64> = group
+                .iter()
+                .filter_map(|t| t.iters_to(target_subopt))
+                .map(|i| i as f64)
+                .collect();
+            let times: Vec<f64> = group
+                .iter()
+                .filter_map(|t| t.time_to(target_subopt))
+                .collect();
+            let finals: Vec<f64> = group.iter().map(|t| t.final_subopt()).collect();
+            let iter_times: Vec<f64> = group
+                .iter()
+                .map(|t| t.mean_iter_time())
+                .filter(|v| v.is_finite())
+                .collect();
+            CellAggregate {
+                algorithm: algo,
+                machines: m,
+                replicates: group.len(),
+                reached: iters.len(),
+                iters_to_target: agg_or_nan(&iters),
+                time_to_target: agg_or_nan(&times),
+                final_subopt: agg_or_nan(&finals),
+                mean_iter_time: agg_or_nan(&iter_times),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::cache::serialize_trace;
+    use super::super::spec::SweepGrid;
+    use super::*;
+    use crate::cluster::{BspSim, HardwareProfile};
+    use crate::data::synth::two_gaussians;
+    use crate::optim::trace::Record;
+    use crate::optim::{by_name, run, NativeBackend, Problem, RunConfig};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// A synthetic runner whose trace is a pure function of the cell.
+    fn synth_runner(cell: &CellSpec) -> crate::Result<Trace> {
+        let mut t = Trace::new(cell.algorithm.clone(), cell.machines, 0.0);
+        let decay = 0.3 + (cell.seed % 7) as f64 * 0.05;
+        for i in 0..20 {
+            let subopt = (-decay * i as f64 / cell.machines as f64).exp();
+            t.push(Record {
+                iter: i,
+                sim_time: i as f64 * 0.1,
+                primal: subopt,
+                dual: f64::NAN,
+                subopt,
+            });
+        }
+        Ok(t)
+    }
+
+    fn grid(seeds: usize) -> SweepGrid {
+        SweepGrid {
+            algorithms: vec!["cocoa".into(), "cocoa+".into()],
+            machines: vec![1, 2, 4, 8],
+            seeds,
+            base_seed: 7,
+            run: RunConfig::default(),
+        }
+    }
+
+    fn dump(traces: &[Trace]) -> Vec<String> {
+        traces.iter().map(|t| serialize_trace("x", t)).collect()
+    }
+
+    #[test]
+    fn serial_and_parallel_execution_produce_identical_traces() {
+        let cells = grid(3).cells();
+        let serial = SweepEngine::new(1, TraceCache::in_memory())
+            .run_cells("ctx", &cells, &synth_runner)
+            .unwrap();
+        let parallel = SweepEngine::new(8, TraceCache::in_memory())
+            .run_cells("ctx", &cells, &synth_runner)
+            .unwrap();
+        assert_eq!(dump(&serial), dump(&parallel));
+    }
+
+    #[test]
+    fn real_sweep_is_thread_count_invariant() {
+        // End-to-end: actual optimizer runs on the simulated cluster,
+        // fixed seeds, 1 vs 4 threads — byte-identical traces.
+        let problem = Problem::new(two_gaussians(256, 8, 2.0, 3), 1e-2);
+        let (p_star, _, _) = problem.reference_solve(1e-5, 100);
+        let run_cfg = RunConfig {
+            max_iters: 15,
+            target_subopt: -1.0,
+            time_budget: None,
+        };
+        let g = SweepGrid {
+            algorithms: vec!["cocoa".into()],
+            machines: vec![1, 2, 4],
+            seeds: 2,
+            base_seed: 11,
+            run: run_cfg.clone(),
+        };
+        let runner = |cell: &CellSpec| -> crate::Result<Trace> {
+            let mut algo = by_name(&cell.algorithm, &problem, cell.machines, cell.seed as u32)?;
+            let mut sim = BspSim::new(
+                HardwareProfile::local48(),
+                cell.seed ^ cell.machines as u64,
+            );
+            run(
+                algo.as_mut(),
+                &NativeBackend,
+                &problem,
+                &mut sim,
+                p_star,
+                &run_cfg,
+            )
+        };
+        let cells = g.cells();
+        let one = SweepEngine::new(1, TraceCache::in_memory())
+            .run_cells("ctx", &cells, &runner)
+            .unwrap();
+        let four = SweepEngine::new(4, TraceCache::in_memory())
+            .run_cells("ctx", &cells, &runner)
+            .unwrap();
+        assert_eq!(dump(&one), dump(&four));
+        // Replicates differ (different seeds actually took effect).
+        assert_ne!(
+            serialize_trace("x", &one[0]),
+            serialize_trace("x", &one[1])
+        );
+    }
+
+    #[test]
+    fn cache_hit_skips_rerun_and_returns_byte_identical_trace() {
+        let engine = SweepEngine::new(4, TraceCache::in_memory());
+        let cells = grid(2).cells();
+        let calls = AtomicUsize::new(0);
+        let counting = |cell: &CellSpec| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            synth_runner(cell)
+        };
+        let first = engine.run_cells("ctx", &cells, &counting).unwrap();
+        assert_eq!(calls.load(Ordering::Relaxed), cells.len());
+        let second = engine.run_cells("ctx", &cells, &counting).unwrap();
+        // No cell re-ran; the cached traces are byte-identical.
+        assert_eq!(calls.load(Ordering::Relaxed), cells.len());
+        assert_eq!(dump(&first), dump(&second));
+    }
+
+    #[test]
+    fn config_hash_change_invalidates_cache() {
+        let engine = SweepEngine::new(2, TraceCache::in_memory());
+        let mut g = grid(1);
+        let calls = AtomicUsize::new(0);
+        let counting = |cell: &CellSpec| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            synth_runner(cell)
+        };
+        let ck = |g: &SweepGrid| format!("dataset=v1|{}", g.run_key());
+        engine.run_cells(&ck(&g), &g.cells(), &counting).unwrap();
+        let n = g.cells().len();
+        assert_eq!(calls.load(Ordering::Relaxed), n);
+        // Same grid, same context: all hits.
+        engine.run_cells(&ck(&g), &g.cells(), &counting).unwrap();
+        assert_eq!(calls.load(Ordering::Relaxed), n);
+        // Changed stopping rule: the config hash moves, every cell reruns.
+        g.run.max_iters = 123;
+        engine.run_cells(&ck(&g), &g.cells(), &counting).unwrap();
+        assert_eq!(calls.load(Ordering::Relaxed), 2 * n);
+    }
+
+    #[test]
+    fn serial_path_uses_the_same_cache() {
+        let engine = SweepEngine::new(4, TraceCache::in_memory());
+        let cells = grid(1).cells();
+        engine.run_cells("ctx", &cells, &synth_runner).unwrap();
+        let mut calls = 0usize;
+        let out = engine
+            .run_cells_serial("ctx", &cells, &mut |cell| {
+                calls += 1;
+                synth_runner(cell)
+            })
+            .unwrap();
+        assert_eq!(calls, 0, "serial path should hit the shared cache");
+        assert_eq!(out.len(), cells.len());
+    }
+
+    #[test]
+    fn aggregate_computes_mean_and_stddev_per_cell() {
+        // Three replicates with known iters-to-target.
+        let mk = |m: usize, iters_to: usize| {
+            let mut t = Trace::new("cocoa", m, 0.0);
+            for i in 0..=iters_to {
+                let subopt = if i < iters_to { 1.0 } else { 1e-6 };
+                t.push(Record {
+                    iter: i,
+                    sim_time: i as f64,
+                    primal: subopt,
+                    dual: f64::NAN,
+                    subopt,
+                });
+            }
+            t
+        };
+        let traces = vec![mk(4, 10), mk(4, 12), mk(4, 14), mk(8, 20)];
+        let aggs = aggregate(&traces, 1e-4);
+        assert_eq!(aggs.len(), 2);
+        let a4 = &aggs[0];
+        assert_eq!((a4.machines, a4.replicates, a4.reached), (4, 3, 3));
+        assert!((a4.iters_to_target.mean - 12.0).abs() < 1e-12);
+        assert!((a4.iters_to_target.std - 2.0).abs() < 1e-12);
+        assert!((a4.time_to_target.mean - 12.0).abs() < 1e-12);
+        let a8 = &aggs[1];
+        assert_eq!((a8.machines, a8.replicates, a8.reached), (8, 1, 1));
+        assert_eq!(a8.iters_to_target.std, 0.0);
+        // A cell that never reached the target reports NaN, not 0.0.
+        let unreached = aggregate(&traces, 1e-12);
+        assert_eq!(unreached[0].reached, 0);
+        assert!(unreached[0].iters_to_target.mean.is_nan());
+        assert!(unreached[0].time_to_target.mean.is_nan());
+        assert!(!unreached[0].final_subopt.mean.is_nan());
+    }
+
+    #[test]
+    fn errors_propagate_from_workers() {
+        let engine = SweepEngine::new(4, TraceCache::in_memory());
+        let cells = grid(1).cells();
+        let failing = |cell: &CellSpec| -> crate::Result<Trace> {
+            if cell.machines == 4 {
+                crate::bail!("machine 4 exploded");
+            }
+            synth_runner(cell)
+        };
+        let err = engine.run_cells("ctx", &cells, &failing).unwrap_err();
+        assert!(err.to_string().contains("exploded"));
+    }
+}

@@ -1,0 +1,30 @@
+//! The sweep subsystem: every (algorithm × machines × seed) grid in
+//! the repo — repro figures, tables, the advisor's refits, the `sweep`
+//! CLI subcommand, and the benchmark harness — runs through this one
+//! engine instead of hand-rolled serial loops.
+//!
+//! Three pieces:
+//!
+//! * [`spec`] — grid specification ([`SweepGrid`] → ordered
+//!   [`CellSpec`]s) with deterministic per-cell seed derivation
+//!   (splitmix64), so results never depend on execution order;
+//! * [`executor`] — the [`SweepEngine`]: fan-out over
+//!   [`crate::util::threadpool::parallel_map`] with a shared read-only
+//!   `Problem`/`p_star` and per-task `BspSim` instances, plus
+//!   seed-replication aggregation ([`aggregate`]);
+//! * [`cache`] — the [`TraceCache`]: in-memory + on-disk traces keyed
+//!   by a config hash, byte-identical on reload, so repeated figure
+//!   runs and advisor queries skip already-converged cells.
+//!
+//! Thread count defaults to
+//! [`crate::util::threadpool::default_threads`], which honors the
+//! `HEMINGWAY_THREADS` environment override (CI pins it to 1 for
+//! determinism checks; the traces are identical either way).
+
+pub mod cache;
+pub mod executor;
+pub mod spec;
+
+pub use cache::TraceCache;
+pub use executor::{aggregate, CellAggregate, SweepEngine};
+pub use spec::{cell_key, cell_seed, mix_seed, CellSpec, SweepGrid};

@@ -1,0 +1,160 @@
+//! Grid specification for sweep runs: which (algorithm, machines,
+//! seed-replicate) cells to execute, and the deterministic per-cell
+//! seed derivation that makes the fan-out order-independent.
+
+use crate::optim::RunConfig;
+
+/// One cell of a sweep grid: a single (algorithm, machines, seed) run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CellSpec {
+    pub algorithm: String,
+    pub machines: usize,
+    /// Replicate index (0-based) along the seed axis.
+    pub replicate: usize,
+    /// Fully-mixed RNG seed for this cell — a pure function of the
+    /// grid's base seed and the replicate index, never of execution
+    /// order, so parallel and serial sweeps produce identical traces.
+    pub seed: u64,
+}
+
+/// splitmix64 finalizer — the standard way to derive independent
+/// streams from (base, salt) without correlated low bits.
+pub fn mix_seed(base: u64, salt: u64) -> u64 {
+    let mut z = base ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Per-cell seed for a replicate. Replicate 0 keeps the base seed so
+/// single-seed sweeps reproduce the historical serial traces exactly;
+/// later replicates get independent splitmix streams.
+pub fn cell_seed(base: u64, replicate: usize) -> u64 {
+    if replicate == 0 {
+        base
+    } else {
+        mix_seed(base, replicate as u64)
+    }
+}
+
+/// A sweep grid: algorithms × machines × seed replicates, plus the
+/// stopping rules every cell shares.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    pub algorithms: Vec<String>,
+    pub machines: Vec<usize>,
+    /// Seed replicates per (algorithm, machines) cell (≥ 1).
+    pub seeds: usize,
+    pub base_seed: u64,
+    pub run: RunConfig,
+}
+
+impl SweepGrid {
+    /// A one-algorithm, single-seed grid (the historical sweep shape).
+    pub fn single(algorithm: &str, machines: &[usize], base_seed: u64, run: RunConfig) -> SweepGrid {
+        SweepGrid {
+            algorithms: vec![algorithm.to_string()],
+            machines: machines.to_vec(),
+            seeds: 1,
+            base_seed,
+            run,
+        }
+    }
+
+    /// Expand into cells, algorithm-major then machines then replicate.
+    /// The order is part of the contract: results come back in exactly
+    /// this order regardless of how many threads executed them.
+    pub fn cells(&self) -> Vec<CellSpec> {
+        let mut out = Vec::with_capacity(self.algorithms.len() * self.machines.len() * self.seeds);
+        for algo in &self.algorithms {
+            for &m in &self.machines {
+                for rep in 0..self.seeds.max(1) {
+                    out.push(CellSpec {
+                        algorithm: algo.clone(),
+                        machines: m,
+                        replicate: rep,
+                        seed: cell_seed(self.base_seed, rep),
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Canonical cache-key fragment for the stopping rules. Any change
+    /// here changes every cell's config hash and invalidates the cache.
+    pub fn run_key(&self) -> String {
+        format!(
+            "max_iters={};target={:e};budget={:?}",
+            self.run.max_iters, self.run.target_subopt, self.run.time_budget
+        )
+    }
+}
+
+/// The full cache key for one cell under a given context (dataset,
+/// profile, backend, stopping rules). The sweep executor and every
+/// caller key the trace cache through this single function.
+pub fn cell_key(context_key: &str, cell: &CellSpec) -> String {
+    format!(
+        "{context_key}|algo={};m={};rep={};seed={}",
+        cell.algorithm, cell.machines, cell.replicate, cell.seed
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> SweepGrid {
+        SweepGrid {
+            algorithms: vec!["cocoa".into(), "gd".into()],
+            machines: vec![1, 4],
+            seeds: 3,
+            base_seed: 42,
+            run: RunConfig::default(),
+        }
+    }
+
+    #[test]
+    fn cells_enumerate_in_deterministic_order() {
+        let cells = grid().cells();
+        assert_eq!(cells.len(), 2 * 2 * 3);
+        assert_eq!(cells[0].algorithm, "cocoa");
+        assert_eq!((cells[0].machines, cells[0].replicate), (1, 0));
+        assert_eq!((cells[2].machines, cells[2].replicate), (1, 2));
+        assert_eq!(cells[3].machines, 4);
+        assert_eq!(cells[6].algorithm, "gd");
+        // Twice-expanded grids agree exactly.
+        assert_eq!(grid().cells(), grid().cells());
+    }
+
+    #[test]
+    fn replicate_zero_keeps_base_seed() {
+        assert_eq!(cell_seed(42, 0), 42);
+        let s1 = cell_seed(42, 1);
+        let s2 = cell_seed(42, 2);
+        assert_ne!(s1, 42);
+        assert_ne!(s1, s2);
+        // Deterministic.
+        assert_eq!(s1, cell_seed(42, 1));
+    }
+
+    #[test]
+    fn cell_keys_separate_configs() {
+        let cells = grid().cells();
+        let a = cell_key("ctx", &cells[0]);
+        let b = cell_key("ctx", &cells[1]);
+        let c = cell_key("other-ctx", &cells[0]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, cell_key("ctx", &cells[0]));
+    }
+
+    #[test]
+    fn run_key_tracks_stopping_rules() {
+        let mut g = grid();
+        let k1 = g.run_key();
+        g.run.max_iters += 1;
+        assert_ne!(k1, g.run_key());
+    }
+}

@@ -83,7 +83,7 @@ impl Args {
             None => Ok(default),
             Some(v) => v
                 .parse::<usize>()
-                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+                .map_err(|_| crate::err!("--{name} expects an integer, got '{v}'")),
         }
     }
 
@@ -92,7 +92,7 @@ impl Args {
             None => Ok(default),
             Some(v) => v
                 .parse::<u64>()
-                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+                .map_err(|_| crate::err!("--{name} expects an integer, got '{v}'")),
         }
     }
 
@@ -101,7 +101,7 @@ impl Args {
             None => Ok(default),
             Some(v) => v
                 .parse::<f64>()
-                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+                .map_err(|_| crate::err!("--{name} expects a number, got '{v}'")),
         }
     }
 
@@ -114,7 +114,7 @@ impl Args {
                 .map(|p| {
                     p.trim()
                         .parse::<usize>()
-                        .map_err(|_| anyhow::anyhow!("--{name}: bad integer '{p}'"))
+                        .map_err(|_| crate::err!("--{name}: bad integer '{p}'"))
                 })
                 .collect(),
         }

@@ -50,7 +50,7 @@ impl Table {
     pub fn column(&self, name: &str) -> crate::Result<Vec<f64>> {
         let idx = self
             .col_index(name)
-            .ok_or_else(|| anyhow::anyhow!("no column '{name}'"))?;
+            .ok_or_else(|| crate::err!("no column '{name}'"))?;
         Ok(self.rows.iter().map(|r| r[idx]).collect())
     }
 
@@ -59,7 +59,7 @@ impl Table {
     pub fn filter_eq(&self, name: &str, value: f64) -> crate::Result<Table> {
         let idx = self
             .col_index(name)
-            .ok_or_else(|| anyhow::anyhow!("no column '{name}'"))?;
+            .ok_or_else(|| crate::err!("no column '{name}'"))?;
         Ok(Table {
             columns: self.columns.clone(),
             rows: self
@@ -98,13 +98,13 @@ impl Table {
         let mut lines = text.lines().filter(|l| !l.trim().is_empty());
         let header = lines
             .next()
-            .ok_or_else(|| anyhow::anyhow!("empty csv"))?;
+            .ok_or_else(|| crate::err!("empty csv"))?;
         let columns: Vec<String> = header.split(',').map(|c| c.trim().to_string()).collect();
         let mut rows = Vec::new();
         for (lineno, line) in lines.enumerate() {
             let cells: Vec<&str> = line.split(',').collect();
             if cells.len() != columns.len() {
-                anyhow::bail!(
+                crate::bail!(
                     "csv row {} has {} cells, expected {}",
                     lineno + 2,
                     cells.len(),
@@ -122,7 +122,7 @@ impl Table {
                     }
                 })
                 .collect();
-            rows.push(row.map_err(|e| anyhow::anyhow!("csv row {}: {e}", lineno + 2))?);
+            rows.push(row.map_err(|e| crate::err!("csv row {}: {e}", lineno + 2))?);
         }
         Ok(Table { columns, rows })
     }
@@ -130,7 +130,7 @@ impl Table {
     /// Read a CSV file.
     pub fn read(path: &Path) -> crate::Result<Table> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+            .map_err(|e| crate::err!("reading {}: {e}", path.display()))?;
         Table::parse(&text)
     }
 }

@@ -1,0 +1,84 @@
+//! Crate-local error plumbing (the offline registry has no `anyhow`):
+//! a boxed error type, the crate-wide [`Result`], and the `err!`,
+//! `bail!` and `ensure!` macros the rest of the crate formats errors
+//! with. Call sites read exactly like the `anyhow` equivalents.
+
+/// The crate's error type: any boxed error, thread-safe so sweep
+/// workers can carry failures across the thread pool.
+pub type BoxError = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// Crate-wide result type.
+pub type Result<T> = std::result::Result<T, BoxError>;
+
+/// Build a [`BoxError`] from an already-formatted message (used by the
+/// `err!` macro; call that instead).
+pub fn msg(text: String) -> BoxError {
+    text.into()
+}
+
+/// Construct a [`BoxError`] from a format string:
+/// `err!("no column '{name}'")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted error: `bail!("unknown command '{cmd}'")`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with a formatted error unless a condition holds:
+/// `ensure!(folds >= 2, "need ≥2 folds")`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn err_formats() {
+        let e = crate::err!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(x: i32) -> crate::Result<i32> {
+            if x < 0 {
+                crate::bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+    }
+
+    #[test]
+    fn ensure_checks_condition() {
+        fn f(x: i32) -> crate::Result<()> {
+            crate::ensure!(x % 2 == 0, "odd: {x}");
+            Ok(())
+        }
+        assert!(f(2).is_ok());
+        assert_eq!(f(3).unwrap_err().to_string(), "odd: 3");
+    }
+
+    #[test]
+    fn io_errors_convert_through_question_mark() {
+        fn f() -> crate::Result<String> {
+            Ok(std::fs::read_to_string("/nonexistent/hemingway")?)
+        }
+        assert!(f().is_err());
+    }
+}

@@ -112,25 +112,25 @@ impl Json {
     pub fn req_str(&self, key: &str) -> crate::Result<&str> {
         self.get(key)
             .and_then(Json::as_str)
-            .ok_or_else(|| anyhow::anyhow!("missing/invalid string field '{key}'"))
+            .ok_or_else(|| crate::err!("missing/invalid string field '{key}'"))
     }
 
     pub fn req_f64(&self, key: &str) -> crate::Result<f64> {
         self.get(key)
             .and_then(Json::as_f64)
-            .ok_or_else(|| anyhow::anyhow!("missing/invalid numeric field '{key}'"))
+            .ok_or_else(|| crate::err!("missing/invalid numeric field '{key}'"))
     }
 
     pub fn req_usize(&self, key: &str) -> crate::Result<usize> {
         self.get(key)
             .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow::anyhow!("missing/invalid integer field '{key}'"))
+            .ok_or_else(|| crate::err!("missing/invalid integer field '{key}'"))
     }
 
     pub fn req_array(&self, key: &str) -> crate::Result<&[Json]> {
         self.get(key)
             .and_then(Json::as_array)
-            .ok_or_else(|| anyhow::anyhow!("missing/invalid array field '{key}'"))
+            .ok_or_else(|| crate::err!("missing/invalid array field '{key}'"))
     }
 
     /// Optional field with default.
@@ -505,8 +505,8 @@ impl<'a> Parser<'a> {
 /// Read and parse a JSON file.
 pub fn read_json_file(path: &std::path::Path) -> crate::Result<Json> {
     let text = std::fs::read_to_string(path)
-        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
-    Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+        .map_err(|e| crate::err!("reading {}: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| crate::err!("parsing {}: {e}", path.display()))
 }
 
 /// Pretty-write a JSON file, creating parent directories.

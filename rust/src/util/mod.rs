@@ -4,6 +4,7 @@
 pub mod asciiplot;
 pub mod cli;
 pub mod csv;
+pub mod error;
 pub mod json;
 pub mod logger;
 pub mod quickcheck;

@@ -111,6 +111,33 @@ pub fn mape(truth: &[f64], pred: &[f64]) -> f64 {
     }
 }
 
+/// Mean and sample standard deviation of a replicate set — the
+/// aggregate the sweep engine reports per (algorithm, machines) cell
+/// when a grid runs with multiple seeds.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct MeanStd {
+    pub mean: f64,
+    pub std: f64,
+    /// Number of samples aggregated.
+    pub n: usize,
+}
+
+impl MeanStd {
+    /// Render as `mean±std` with the given precision (for sweep logs).
+    pub fn display(&self, decimals: usize) -> String {
+        format!("{:.*}±{:.*}", decimals, self.mean, decimals, self.std)
+    }
+}
+
+/// Aggregate seed replicates into mean ± sample stddev.
+pub fn mean_stddev(xs: &[f64]) -> MeanStd {
+    MeanStd {
+        mean: mean(xs),
+        std: stddev(xs),
+        n: xs.len(),
+    }
+}
+
 /// A running summary for streaming timing samples.
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
@@ -206,6 +233,18 @@ mod tests {
         let t = [0.0, 10.0];
         let p = [5.0, 11.0];
         assert!((mape(&t, &p) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_stddev_aggregates_replicates() {
+        let a = mean_stddev(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.n, 4);
+        assert_eq!(a.mean, 2.5);
+        assert!((a.std - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        // Single replicate: defined, zero spread.
+        let one = mean_stddev(&[7.0]);
+        assert_eq!((one.mean, one.std, one.n), (7.0, 0.0, 1));
+        assert_eq!(one.display(1), "7.0±0.0");
     }
 
     #[test]

@@ -51,12 +51,31 @@ pub fn parallel_map<T: Send>(
         .collect()
 }
 
-/// Default worker count: physical parallelism, capped.
+/// Default worker count: the `HEMINGWAY_THREADS` environment override
+/// when set (CI pins `HEMINGWAY_THREADS=1` for determinism checks),
+/// else physical parallelism, capped.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4)
-        .min(16)
+    let env = std::env::var("HEMINGWAY_THREADS").ok();
+    match parse_thread_override(env.as_deref()) {
+        Some(n) => n,
+        None => {
+            if let Some(v) = env {
+                crate::log_warn!("ignoring invalid HEMINGWAY_THREADS='{v}'");
+            }
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4)
+                .min(16)
+        }
+    }
+}
+
+/// Parse a `HEMINGWAY_THREADS` value (split out so tests don't have to
+/// mutate the process environment, which races with concurrent
+/// readers in other tests).
+fn parse_thread_override(v: Option<&str>) -> Option<usize> {
+    v.and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
 }
 
 #[cfg(test)]
@@ -85,6 +104,17 @@ mod tests {
     fn more_threads_than_items() {
         let out = parallel_map(3, 64, |i| i);
         assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn env_override_parsing() {
+        assert_eq!(parse_thread_override(Some("3")), Some(3));
+        assert_eq!(parse_thread_override(Some(" 8 ")), Some(8));
+        assert_eq!(parse_thread_override(Some("0")), None);
+        assert_eq!(parse_thread_override(Some("not-a-number")), None);
+        assert_eq!(parse_thread_override(None), None);
+        // Whatever the ambient environment, the default is usable.
+        assert!(default_threads() >= 1);
     }
 
     #[test]

@@ -1,8 +1,12 @@
 //! Integration tests: AOT artifacts → PJRT load/compile/execute.
 //!
 //! Requires `make artifacts` (the default grid: n=8192, d=128,
-//! m ∈ {1,…,128}). These tests exercise the exact path the coordinator
-//! uses in production.
+//! m ∈ {1,…,128}) and a build with the `pjrt` feature — without it the
+//! engine is a stub and there is nothing to integrate against.
+//! These tests exercise the exact path the coordinator uses in
+//! production.
+
+#![cfg(feature = "pjrt")]
 
 use hemingway::runtime::{default_artifact_dir, Engine};
 use hemingway::util::rng::Lcg32;
