@@ -8,5 +8,33 @@ cd "$(dirname "$0")/rust"
 export HEMINGWAY_THREADS="${HEMINGWAY_THREADS:-1}"
 
 cargo build --release
+# Stub-compile check: the real PJRT executor must keep building against
+# the in-tree xla API stub so the feature gate can't rot.
+cargo build --release --features pjrt
 cargo test -q
 cargo fmt --check
+
+# Advisor-service smoke: fit-on-miss once, then three JSON queries
+# through one `serve` process, with typed (seconds vs suboptimality)
+# responses.
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+cat > "$tmp/config.json" <<EOF
+{"n": 512, "d": 32, "machines": [1, 2, 4], "max_iters": 120,
+ "target_subopt": 1e-3, "out_dir": "$tmp/out"}
+EOF
+printf '%s\n' \
+  '{"query":"fastest_to","eps":1e-2}' \
+  '{"query":"fastest_to","eps":1e-2,"max_machines":2}' \
+  '{"query":"best_at","budget":10}' \
+  | cargo run --release --quiet -- serve --native --config "$tmp/config.json" \
+  > "$tmp/serve.out"
+cat "$tmp/serve.out"
+[ "$(wc -l < "$tmp/serve.out")" -eq 3 ]
+grep -q '"predicted_seconds"' "$tmp/serve.out"
+grep -q '"predicted_suboptimality"' "$tmp/serve.out"
+if grep -q '"ok":false' "$tmp/serve.out"; then
+  echo "serve smoke returned an error response" >&2
+  exit 1
+fi
+echo "serve smoke OK"

@@ -34,12 +34,9 @@ fn main() -> hemingway::Result<()> {
         &mut sim,
         ctx.p_star,
         &AdaptiveConfig {
-            frame_seconds: 8.0,
-            max_frames: 10,
-            machine_grid: ctx.cfg.machines.clone(),
-            target_subopt: 1e-4,
             bootstrap_machines: 32,
             seed: 5,
+            ..AdaptiveConfig::from_experiment(&ctx.cfg, 8.0, 10)
         },
     )?;
     println!("adaptive CoCoA+ (reconfigures m each frame):");

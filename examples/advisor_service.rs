@@ -1,0 +1,103 @@
+//! Fit-once / query-many: the advisor as a service.
+//!
+//! First invocation pays the full cost (sweep + profiling + model
+//! fits) and persists the artifacts under `<out_dir>/models/`; every
+//! later invocation — and every query inside one — answers from the
+//! loaded models in microseconds. This is the paper's §3.1 interface
+//! turned into an actual serving surface (`hemingway serve` wires the
+//! same registry to stdin/stdout).
+//!
+//! ```bash
+//! cargo run --release --example advisor_service
+//! ```
+
+use std::time::Instant;
+
+use hemingway::advisor::{handle_line, AlgorithmId, Constraints, Query};
+use hemingway::config::ExperimentConfig;
+use hemingway::repro::common::load_or_fit_registry;
+
+fn main() -> hemingway::Result<()> {
+    hemingway::util::logger::init_from_env();
+    let cfg = ExperimentConfig {
+        n: 2048,
+        d: 64,
+        machines: vec![1, 2, 4, 8, 16, 32],
+        max_iters: 200,
+        out_dir: std::env::temp_dir()
+            .join("hemingway_advisor_service")
+            .to_string_lossy()
+            .into_owned(),
+        ..Default::default()
+    };
+    let algos = [AlgorithmId::CocoaPlus, AlgorithmId::Cocoa];
+
+    // ---- Fit once (or load the persisted artifacts) ----
+    let t0 = Instant::now();
+    let registry = load_or_fit_registry(&cfg, true, &algos)?;
+    println!(
+        "registry ready: {} models in {:.2}s (second run loads artifacts and takes milliseconds)",
+        registry.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // ---- Query many ----
+    let t1 = Instant::now();
+    let mut answered = 0usize;
+    for k in 0..500 {
+        let eps = 10f64.powf(-2.0 - 2.0 * (k as f64 / 499.0)); // 1e-2 … 1e-4
+        if registry.answer(&Query::fastest_to(eps)).is_some() {
+            answered += 1;
+        }
+        if registry.answer(&Query::best_at(1.0 + k as f64 / 10.0)).is_some() {
+            answered += 1;
+        }
+    }
+    let elapsed = t1.elapsed().as_secs_f64();
+    println!(
+        "answered {answered} queries in {:.3}s ({:.1} µs/query) — no sweep re-run",
+        elapsed,
+        1e6 * elapsed / answered.max(1) as f64
+    );
+
+    // ---- Typed answers, including constrained variants ----
+    if let Some(rec) = registry.answer(&Query::fastest_to(cfg.target_subopt)) {
+        println!(
+            "fastest to {:.0e}:          {} m={} → {:.2} predicted seconds",
+            cfg.target_subopt,
+            rec.algorithm,
+            rec.machines,
+            rec.predicted.value()
+        );
+    }
+    let capped = Query::fastest_to(cfg.target_subopt).with(Constraints {
+        max_machines: Some(4),
+        machine_cost_weight: 0.0,
+    });
+    if let Some(rec) = registry.answer(&capped) {
+        println!(
+            "… with at most 4 machines: {} m={} → {:.2} predicted seconds",
+            rec.algorithm,
+            rec.machines,
+            rec.predicted.value()
+        );
+    }
+    if let Some(rec) = registry.answer(&Query::best_at(20.0)) {
+        println!(
+            "best loss in 20s:          {} m={} → {:.2e} predicted suboptimality",
+            rec.algorithm,
+            rec.machines,
+            rec.predicted.value()
+        );
+    }
+
+    // ---- The serve wire format, without a process boundary ----
+    for line in [
+        r#"{"query":"fastest_to","eps":1e-3,"machine_cost_weight":0.05}"#,
+        r#"{"query":"models"}"#,
+    ] {
+        println!("→ {line}");
+        println!("← {}", handle_line(&registry, line));
+    }
+    Ok(())
+}

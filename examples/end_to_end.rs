@@ -8,7 +8,10 @@
 //! make artifacts && cargo run --release --example end_to_end
 //! ```
 
-use hemingway::advisor::{adaptive_cocoa_plus, AdaptiveConfig, Advisor, CombinedModel};
+use hemingway::advisor::{
+    adaptive_cocoa_plus, AdaptiveConfig, AlgorithmId, CombinedModel, ModelKey, ModelRegistry,
+    Query,
+};
 use hemingway::cluster::BspSim;
 use hemingway::config::ExperimentConfig;
 use hemingway::hemingway_model::{points_from_traces, ConvergenceModel, FeatureLibrary};
@@ -56,27 +59,36 @@ fn main() -> hemingway::Result<()> {
         ernest.theta[0], ernest.theta[1], ernest.theta[2], ernest.theta[3]
     );
 
-    // ---- Phase 3: advisor queries ----
+    // ---- Phase 3: advisor queries (typed API over the registry) ----
     println!("\n=== Phase 3: advisor ===");
     let combined = CombinedModel {
         ernest,
         conv,
         input_size: ctx.problem.data.n as f64,
     };
-    let advisor = Advisor::new(
-        vec![("cocoa+".into(), combined)],
-        ctx.cfg.machines.clone(),
+    let mut registry =
+        ModelRegistry::new(ctx.cfg.machines.clone(), ctx.cfg.advisor_iter_cap);
+    registry.insert(
+        ModelKey {
+            algorithm: AlgorithmId::CocoaPlus,
+            context: ctx.cfg.model_context_hash(ctx.use_native),
+        },
+        combined,
     );
-    if let Some(rec) = advisor.fastest_to(1e-4) {
+    if let Some(rec) = registry.answer(&Query::fastest_to(1e-4)) {
         println!(
             "  fastest to 1e-4:   {} m={} (predicted {:.1}s)",
-            rec.algorithm, rec.machines, rec.predicted
+            rec.algorithm,
+            rec.machines,
+            rec.predicted.value()
         );
     }
-    if let Some(rec) = advisor.best_at(30.0) {
+    if let Some(rec) = registry.answer(&Query::best_at(30.0)) {
         println!(
             "  best loss in 30s:  {} m={} (predicted {:.2e})",
-            rec.algorithm, rec.machines, rec.predicted
+            rec.algorithm,
+            rec.machines,
+            rec.predicted.value()
         );
     }
 
@@ -90,12 +102,8 @@ fn main() -> hemingway::Result<()> {
         &mut sim,
         ctx.p_star,
         &AdaptiveConfig {
-            frame_seconds: 10.0,
-            max_frames: 8,
-            machine_grid: ctx.cfg.machines.clone(),
-            target_subopt: 1e-4,
-            bootstrap_machines: 16,
             seed: 9,
+            ..AdaptiveConfig::from_experiment(&ctx.cfg, 10.0, 8)
         },
     )?;
     for f in &run.frames {

@@ -335,22 +335,30 @@ fn main() -> hemingway::Result<()> {
         // ---------------- advisor ----------------
         let conv = ConvergenceModel::fit(&pts, FeatureLibrary::standard(), 1).unwrap();
         let ernest = ErnestModel::fit(&obs).unwrap();
-        let advisor = hemingway::advisor::Advisor::new(
-            vec![(
-                "cocoa+".to_string(),
-                hemingway::advisor::CombinedModel {
-                    ernest,
-                    conv,
-                    input_size: 8192.0,
-                },
-            )],
-            vec![1, 2, 4, 8, 16, 32, 64, 128],
+        let mut registry =
+            hemingway::advisor::ModelRegistry::new(vec![1, 2, 4, 8, 16, 32, 64, 128], 100_000);
+        registry.insert(
+            hemingway::advisor::ModelKey {
+                algorithm: hemingway::advisor::AlgorithmId::CocoaPlus,
+                context: "bench".to_string(),
+            },
+            hemingway::advisor::CombinedModel {
+                ernest,
+                conv,
+                input_size: 8192.0,
+            },
         );
         b.bench("advisor/fastest_to_1e-3", || {
-            advisor.fastest_to(1e-3);
+            registry.answer(&hemingway::advisor::Query::fastest_to(1e-3));
         });
         b.bench("advisor/best_at_30s", || {
-            advisor.best_at(30.0);
+            registry.answer(&hemingway::advisor::Query::best_at(30.0));
+        });
+        b.bench("advisor/serve_line", || {
+            hemingway::advisor::handle_line(
+                &registry,
+                r#"{"query":"fastest_to","eps":1e-3,"max_machines":32}"#,
+            );
         });
     }
 

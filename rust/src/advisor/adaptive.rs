@@ -5,7 +5,9 @@
 //! frame; CoCoA's per-row dual state makes mid-run repartitioning
 //! exact ([`crate::optim::Cocoa::repartition`]).
 
+use super::combined::CombinedModel;
 use crate::cluster::BspSim;
+use crate::config::ExperimentConfig;
 use crate::ernest::{ErnestModel, Observation};
 use crate::hemingway_model::{ConvPoint, ConvergenceModel, FeatureLibrary};
 use crate::optim::{Algorithm, Backend, Cocoa, CocoaVariant, Problem};
@@ -57,6 +59,25 @@ impl Default for AdaptiveConfig {
     }
 }
 
+impl AdaptiveConfig {
+    /// Derive the adaptive-loop knobs an experiment config implies
+    /// (machine grid, target, bootstrap parallelism, seed).
+    pub fn from_experiment(
+        cfg: &ExperimentConfig,
+        frame_seconds: f64,
+        max_frames: usize,
+    ) -> AdaptiveConfig {
+        AdaptiveConfig {
+            frame_seconds,
+            max_frames,
+            machine_grid: cfg.machines.clone(),
+            target_subopt: cfg.target_subopt,
+            bootstrap_machines: cfg.bootstrap_machines,
+            seed: cfg.seed as u32,
+        }
+    }
+}
+
 /// Run the adaptive CoCoA+ loop on a simulated cluster.
 pub fn adaptive_cocoa_plus(
     problem: &Problem,
@@ -82,16 +103,22 @@ pub fn adaptive_cocoa_plus(
                 ErnestModel::fit(&time_obs),
                 ConvergenceModel::fit(&conv_pts, FeatureLibrary::standard(), cfg.seed as u64),
             ) {
+                let combined = CombinedModel {
+                    ernest,
+                    conv,
+                    input_size: size,
+                };
                 // Pick the m minimizing the predicted suboptimality at
-                // the end of the next frame, using the model's *decay
-                // ratio* from the current iteration (robust to the
-                // model's absolute offset). The candidate evaluations
-                // are independent model queries fanned out through the
-                // shared thread pool — but only for grids big enough
-                // that the work beats the thread spawn cost; the usual
-                // ≤8-point grid takes parallel_map's serial path. The
-                // argmin below scans in grid order, so ties break
-                // exactly as a serial loop would.
+                // the end of the next frame, via the combined model's
+                // frame-decay *ratio* from the current iteration
+                // (robust to the model's absolute offset). The
+                // candidate evaluations are independent model queries
+                // fanned out through the shared thread pool — but only
+                // for grids big enough that the work beats the thread
+                // spawn cost; the usual ≤8-point grid takes
+                // parallel_map's serial path. The argmin below scans
+                // in grid order, so ties break exactly as a serial
+                // loop would.
                 let threads = if cfg.machine_grid.len() >= 64 {
                     default_threads()
                 } else {
@@ -103,14 +130,10 @@ pub fn adaptive_cocoa_plus(
                     threads,
                     |k| {
                         let m = cfg.machine_grid[k];
-                        let f_m = ernest.predict(m, size).max(1e-6);
-                        let iters = (cfg.frame_seconds / f_m).floor();
-                        if iters < 1.0 {
-                            return f64::INFINITY;
+                        match combined.frame_decay(i0, cfg.frame_seconds, m) {
+                            Some(ratio) => subopt * ratio,
+                            None => f64::INFINITY,
                         }
-                        let ratio = conv.predict_ln(i0 + iters, m as f64)
-                            - conv.predict_ln(i0, m as f64);
-                        subopt * ratio.exp()
                     },
                 );
                 let mut best = (algo.machines(), f64::INFINITY);

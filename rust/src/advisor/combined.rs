@@ -4,6 +4,7 @@
 
 use crate::ernest::ErnestModel;
 use crate::hemingway_model::ConvergenceModel;
+use crate::util::json::Json;
 
 /// Ernest + Hemingway for one algorithm on one input size.
 #[derive(Debug, Clone)]
@@ -34,6 +35,46 @@ impl CombinedModel {
         self.conv
             .iters_to(eps, machines as f64, cap)
             .map(|i| i as f64 * self.iter_time(machines))
+    }
+
+    /// Predicted end/start suboptimality ratio over one `frame_seconds`
+    /// time frame starting at iteration `i0` on m machines — the
+    /// adaptive loop's planning primitive. Using the decay *ratio*
+    /// rather than the absolute prediction keeps the plan robust to
+    /// the model's offset error. None if the frame fits less than one
+    /// iteration at this m.
+    pub fn frame_decay(&self, i0: f64, frame_seconds: f64, machines: usize) -> Option<f64> {
+        let f_m = self.iter_time(machines).max(1e-6);
+        let iters = (frame_seconds / f_m).floor();
+        if iters < 1.0 {
+            return None;
+        }
+        let m = machines as f64;
+        Some((self.conv.predict_ln(i0 + iters, m) - self.conv.predict_ln(i0, m)).exp())
+    }
+
+    /// Serialize for a model artifact (`util::json`).
+    pub fn to_json(&self) -> crate::Result<Json> {
+        Ok(Json::object(vec![
+            ("input_size", Json::num(self.input_size)),
+            ("ernest", self.ernest.to_json()?),
+            ("convergence", self.conv.to_json()?),
+        ]))
+    }
+
+    /// Rebuild from the artifact form.
+    pub fn from_json(doc: &Json) -> crate::Result<CombinedModel> {
+        let ernest = doc
+            .get("ernest")
+            .ok_or_else(|| crate::err!("model artifact is missing the 'ernest' object"))?;
+        let conv = doc
+            .get("convergence")
+            .ok_or_else(|| crate::err!("model artifact is missing the 'convergence' object"))?;
+        Ok(CombinedModel {
+            ernest: ErnestModel::from_json(ernest)?,
+            conv: ConvergenceModel::from_json(conv)?,
+            input_size: doc.req_f64("input_size")?,
+        })
     }
 }
 
@@ -116,5 +157,34 @@ mod tests {
     fn unreachable_eps_returns_none() {
         let c = combined();
         assert_eq!(c.time_to_subopt(1e-30, 4, 50), None);
+    }
+
+    #[test]
+    fn frame_decay_shrinks_suboptimality() {
+        let c = combined();
+        let r = c.frame_decay(10.0, 5.0, 4).unwrap();
+        assert!(r > 0.0 && r < 1.0, "ratio {r}");
+        // A frame shorter than one iteration has no plan.
+        assert_eq!(c.frame_decay(10.0, 1e-6, 4), None);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_predictions() {
+        let c = combined();
+        let text = c.to_json().unwrap().to_pretty();
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        let back = CombinedModel::from_json(&doc).unwrap();
+        assert_eq!(back.input_size.to_bits(), c.input_size.to_bits());
+        for &m in &[1usize, 4, 32] {
+            assert_eq!(back.iter_time(m).to_bits(), c.iter_time(m).to_bits());
+            assert_eq!(
+                back.subopt_at_time(12.5, m).to_bits(),
+                c.subopt_at_time(12.5, m).to_bits()
+            );
+            assert_eq!(
+                back.time_to_subopt(1e-3, m, 100_000),
+                c.time_to_subopt(1e-3, m, 100_000)
+            );
+        }
     }
 }

@@ -1,10 +1,20 @@
-//! The Hemingway advisor: combined model h(t, m) = g(t/f(m), m),
-//! configuration search, and the adaptive reconfiguration loop (Fig 2).
+//! The Hemingway advisor: combined model h(t, m) = g(t/f(m), m), the
+//! typed query layer over a [`ModelRegistry`] of persisted model
+//! artifacts, the newline-JSON [`service`] behind `hemingway serve`,
+//! and the adaptive reconfiguration loop (Fig 2).
 
 pub mod adaptive;
 pub mod combined;
-pub mod search;
+pub mod query;
+pub mod registry;
+pub mod service;
 
 pub use adaptive::{adaptive_cocoa_plus, AdaptiveConfig, AdaptiveRun, FrameLog};
 pub use combined::CombinedModel;
-pub use search::{Advisor, Recommendation};
+pub use query::{Constraints, Predicted, PredictionRow, Query, Recommendation};
+pub use registry::{
+    artifact_path, load_artifact, save_artifact, LoadReport, ModelKey, ModelRegistry,
+};
+pub use service::{handle_line, serve, ServeStats};
+
+pub use crate::optim::AlgorithmId;

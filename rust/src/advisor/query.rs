@@ -1,0 +1,348 @@
+//! The advisor's typed query layer (paper §3.1): "given a relative
+//! error goal ε, choose the fastest algorithm and configuration; or
+//! given a target latency of t seconds choose an algorithm that will
+//! achieve the minimum training loss" — plus the constrained variants
+//! (machine caps, machine-cost weighting) a shared cluster needs.
+//!
+//! Every type here has a JSON wire form (`util::json`) so the same
+//! queries flow through the `serve` loop, the CLI and the library API.
+
+use crate::optim::AlgorithmId;
+use crate::util::json::Json;
+
+/// Optional constraints a query carries.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Constraints {
+    /// Never recommend more than this many machines.
+    pub max_machines: Option<usize>,
+    /// Relative price of one machine-second against one wall-clock
+    /// second. With weight w, running m machines for t seconds costs
+    /// `t·(1 + w·m)`: fastest-to-ε ranks by that cost, and
+    /// best-at-budget treats the budget as a cost budget (time
+    /// available at m machines shrinks to `budget / (1 + w·m)`).
+    pub machine_cost_weight: f64,
+}
+
+impl Constraints {
+    /// No constraints (the paper's unconstrained queries).
+    pub fn none() -> Constraints {
+        Constraints::default()
+    }
+
+    /// Whether a machine count is admissible.
+    pub fn admits(&self, machines: usize) -> bool {
+        self.max_machines.map(|cap| machines <= cap).unwrap_or(true)
+    }
+
+    /// Cost of t wall-clock seconds at m machines.
+    pub fn weighted_seconds(&self, t: f64, machines: usize) -> f64 {
+        t * (1.0 + self.machine_cost_weight * machines as f64)
+    }
+
+    /// Wall-clock seconds a cost budget buys at m machines.
+    pub fn effective_budget(&self, budget: f64, machines: usize) -> f64 {
+        budget / (1.0 + self.machine_cost_weight * machines as f64)
+    }
+
+    /// Parse the optional constraint fields of a wire query. A field
+    /// that is present but malformed is an error, never silently
+    /// ignored — dropping a requested `max_machines` would answer with
+    /// configurations the client explicitly excluded.
+    pub fn from_json(doc: &Json) -> crate::Result<Constraints> {
+        let max_machines = match doc.get("max_machines") {
+            None => None,
+            Some(v) => Some(v.as_usize().ok_or_else(|| {
+                crate::err!("max_machines must be a non-negative integer")
+            })?),
+        };
+        let machine_cost_weight = match doc.get("machine_cost_weight") {
+            None => 0.0,
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| crate::err!("machine_cost_weight must be a number"))?,
+        };
+        let constraints = Constraints {
+            max_machines,
+            machine_cost_weight,
+        };
+        constraints.validate()?;
+        Ok(constraints)
+    }
+
+    /// Reject weights that would invert the ranking (negative) or
+    /// poison every comparison (NaN).
+    pub fn validate(&self) -> crate::Result<()> {
+        crate::ensure!(
+            self.machine_cost_weight.is_finite() && self.machine_cost_weight >= 0.0,
+            "machine_cost_weight must be finite and ≥ 0, got {}",
+            self.machine_cost_weight
+        );
+        Ok(())
+    }
+
+    fn push_json(&self, fields: &mut Vec<(String, Json)>) {
+        if let Some(cap) = self.max_machines {
+            fields.push(("max_machines".into(), Json::num(cap as f64)));
+        }
+        if self.machine_cost_weight != 0.0 {
+            fields.push((
+                "machine_cost_weight".into(),
+                Json::num(self.machine_cost_weight),
+            ));
+        }
+    }
+}
+
+/// The two §3.1 query types.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Query {
+    /// Fastest (algorithm, m) predicted to reach suboptimality ε.
+    FastestTo { eps: f64, constraints: Constraints },
+    /// (algorithm, m) predicted to reach the lowest suboptimality
+    /// within a budget of `budget` seconds.
+    BestAt { budget: f64, constraints: Constraints },
+}
+
+impl Query {
+    /// Unconstrained fastest-to-ε query.
+    pub fn fastest_to(eps: f64) -> Query {
+        Query::FastestTo {
+            eps,
+            constraints: Constraints::none(),
+        }
+    }
+
+    /// Unconstrained best-loss-at-budget query.
+    pub fn best_at(budget: f64) -> Query {
+        Query::BestAt {
+            budget,
+            constraints: Constraints::none(),
+        }
+    }
+
+    /// The same query under different constraints.
+    pub fn with(self, constraints: Constraints) -> Query {
+        match self {
+            Query::FastestTo { eps, .. } => Query::FastestTo { eps, constraints },
+            Query::BestAt { budget, .. } => Query::BestAt { budget, constraints },
+        }
+    }
+
+    /// Wire name of the query kind.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Query::FastestTo { .. } => "fastest_to",
+            Query::BestAt { .. } => "best_at",
+        }
+    }
+
+    pub fn constraints(&self) -> Constraints {
+        match *self {
+            Query::FastestTo { constraints, .. } => constraints,
+            Query::BestAt { constraints, .. } => constraints,
+        }
+    }
+
+    /// Parse a wire query, e.g. `{"query":"fastest_to","eps":1e-4}` or
+    /// `{"query":"best_at","budget":20,"max_machines":32}`.
+    pub fn from_json(doc: &Json) -> crate::Result<Query> {
+        let constraints = Constraints::from_json(doc)?;
+        match doc.req_str("query")? {
+            "fastest_to" => {
+                let eps = doc.req_f64("eps")?;
+                crate::ensure!(
+                    eps > 0.0 && eps.is_finite(),
+                    "fastest_to needs a finite eps > 0, got {eps}"
+                );
+                Ok(Query::FastestTo { eps, constraints })
+            }
+            "best_at" => {
+                let budget = doc.req_f64("budget")?;
+                crate::ensure!(
+                    budget > 0.0 && budget.is_finite(),
+                    "best_at needs a finite budget > 0, got {budget}"
+                );
+                Ok(Query::BestAt { budget, constraints })
+            }
+            other => crate::bail!("unknown query kind '{other}' (expected fastest_to or best_at)"),
+        }
+    }
+
+    /// Wire form of the query.
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(String, Json)> =
+            vec![("query".into(), Json::str(self.kind()))];
+        match *self {
+            Query::FastestTo { eps, .. } => fields.push(("eps".into(), Json::num(eps))),
+            Query::BestAt { budget, .. } => fields.push(("budget".into(), Json::num(budget))),
+        }
+        self.constraints().push_json(&mut fields);
+        Json::Object(fields)
+    }
+}
+
+/// A predicted quantity with its unit attached: the fastest-to-ε query
+/// answers in seconds, the best-at-budget query in suboptimality. The
+/// old advisor returned a bare f64 whose meaning depended on which
+/// method produced it; this type makes misreading one as the other a
+/// compile error.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Predicted {
+    Seconds(f64),
+    Suboptimality(f64),
+}
+
+impl Predicted {
+    /// The raw number, unit erased (display/CSV use).
+    pub fn value(self) -> f64 {
+        match self {
+            Predicted::Seconds(v) | Predicted::Suboptimality(v) => v,
+        }
+    }
+
+    pub fn seconds(self) -> Option<f64> {
+        match self {
+            Predicted::Seconds(v) => Some(v),
+            Predicted::Suboptimality(_) => None,
+        }
+    }
+
+    pub fn suboptimality(self) -> Option<f64> {
+        match self {
+            Predicted::Suboptimality(v) => Some(v),
+            Predicted::Seconds(_) => None,
+        }
+    }
+
+    /// Wire field name carrying this prediction.
+    pub fn field_name(self) -> &'static str {
+        match self {
+            Predicted::Seconds(_) => "predicted_seconds",
+            Predicted::Suboptimality(_) => "predicted_suboptimality",
+        }
+    }
+}
+
+/// A recommendation returned by the advisor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Recommendation {
+    pub algorithm: AlgorithmId,
+    pub machines: usize,
+    /// The raw model prediction for the winning configuration.
+    pub predicted: Predicted,
+    /// The objective the search actually ranked: equals the raw
+    /// prediction for unconstrained queries, the cost-weighted value
+    /// otherwise.
+    pub objective: f64,
+}
+
+impl Recommendation {
+    /// Wire form: the prediction's unit is the field name
+    /// (`predicted_seconds` vs `predicted_suboptimality`).
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("algorithm", Json::str(self.algorithm.as_str())),
+            ("machines", Json::num(self.machines as f64)),
+            (self.predicted.field_name(), Json::num(self.predicted.value())),
+        ])
+    }
+}
+
+/// One row of the advisor's full prediction table (per algorithm × m),
+/// replacing the old anonymous 4-tuple.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PredictionRow {
+    pub algorithm: AlgorithmId,
+    pub machines: usize,
+    /// Predicted seconds to the ε goal (None if unreachable).
+    pub time_to_eps: Option<f64>,
+    /// Predicted suboptimality at the time budget.
+    pub subopt_at_budget: f64,
+}
+
+impl PredictionRow {
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("algorithm", Json::str(self.algorithm.as_str())),
+            ("machines", Json::num(self.machines as f64)),
+            (
+                "time_to_eps",
+                self.time_to_eps.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("subopt_at_budget", Json::num(self.subopt_at_budget)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_roundtrip_both_kinds() {
+        let q1 = Query::fastest_to(1e-4);
+        let q2 = Query::best_at(20.0).with(Constraints {
+            max_machines: Some(32),
+            machine_cost_weight: 0.01,
+        });
+        for q in [q1, q2] {
+            let doc = Json::parse(&q.to_json().to_string()).unwrap();
+            assert_eq!(Query::from_json(&doc).unwrap(), q);
+        }
+    }
+
+    #[test]
+    fn wire_rejects_bad_queries() {
+        for bad in [
+            r#"{"eps": 1e-4}"#,
+            r#"{"query": "fastest_to"}"#,
+            r#"{"query": "fastest_to", "eps": -1}"#,
+            r#"{"query": "fastest_to", "eps": 1e-4, "machine_cost_weight": -1}"#,
+            r#"{"query": "fastest_to", "eps": 1e-4, "max_machines": -8}"#,
+            r#"{"query": "fastest_to", "eps": 1e-4, "max_machines": "8"}"#,
+            r#"{"query": "best_at", "budget": 0}"#,
+            r#"{"query": "nope", "eps": 1e-4}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(Query::from_json(&doc).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn constraints_math() {
+        let c = Constraints {
+            max_machines: Some(8),
+            machine_cost_weight: 0.5,
+        };
+        assert!(c.admits(8) && !c.admits(16));
+        assert!(Constraints::none().admits(usize::MAX));
+        assert_eq!(c.weighted_seconds(10.0, 2), 20.0);
+        assert_eq!(c.effective_budget(20.0, 2), 10.0);
+    }
+
+    #[test]
+    fn predicted_units_do_not_cross() {
+        let s = Predicted::Seconds(3.0);
+        assert_eq!(s.seconds(), Some(3.0));
+        assert_eq!(s.suboptimality(), None);
+        assert_eq!(s.field_name(), "predicted_seconds");
+        let l = Predicted::Suboptimality(1e-4);
+        assert_eq!(l.seconds(), None);
+        assert_eq!(l.suboptimality(), Some(1e-4));
+        assert_eq!(l.field_name(), "predicted_suboptimality");
+    }
+
+    #[test]
+    fn recommendation_json_carries_the_unit() {
+        let rec = Recommendation {
+            algorithm: AlgorithmId::CocoaPlus,
+            machines: 16,
+            predicted: Predicted::Seconds(12.5),
+            objective: 12.5,
+        };
+        let doc = rec.to_json();
+        assert_eq!(doc.req_f64("predicted_seconds").unwrap(), 12.5);
+        assert!(doc.get("predicted_suboptimality").is_none());
+        assert_eq!(doc.req_str("algorithm").unwrap(), "cocoa+");
+    }
+}

@@ -1,0 +1,469 @@
+//! The model registry: fitted [`CombinedModel`]s keyed by
+//! (algorithm, fit-context hash), the query search over them, and the
+//! on-disk artifact format behind `hemingway fit` / `advise` / `serve`.
+//!
+//! Artifacts live under `<out_dir>/models/<algo-slug>.json` and embed
+//! the FNV-64 hash of [`crate::config::ExperimentConfig::model_context`]
+//! — the same scheme the sweep trace cache uses — so a loader can tell
+//! a fresh model from one fitted against a different dataset, machine
+//! grid or stopping rule without refitting anything.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::combined::CombinedModel;
+use super::query::{Constraints, Predicted, PredictionRow, Query, Recommendation};
+use crate::optim::AlgorithmId;
+use crate::util::json::{read_json_file, write_json_file, Json};
+
+/// Schema tag every artifact carries (bump on breaking format change).
+pub const ARTIFACT_SCHEMA: &str = "hemingway-advisor-model/v1";
+
+/// Registry key: which algorithm the model describes and the hash of
+/// the fit context (dataset/profile/grid/stopping rules) it was
+/// trained under.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ModelKey {
+    pub algorithm: AlgorithmId,
+    pub context: String,
+}
+
+/// What a directory load found.
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    /// Artifacts loaded into the registry.
+    pub loaded: Vec<(AlgorithmId, PathBuf)>,
+    /// Artifacts whose context did not match the expected one.
+    pub stale: Vec<(AlgorithmId, PathBuf)>,
+    /// Files that could not be parsed as artifacts (truncated writes,
+    /// foreign .json, schema bumps) — skipped so fit-on-miss can
+    /// recover by overwriting them, never a fatal error.
+    pub invalid: Vec<(PathBuf, String)>,
+}
+
+/// Fitted models plus the machine grid the advisor searches.
+#[derive(Debug, Clone)]
+pub struct ModelRegistry {
+    models: BTreeMap<ModelKey, CombinedModel>,
+    pub machine_grid: Vec<usize>,
+    /// Iteration cap when inverting g for time-to-target queries
+    /// ([`crate::config::ExperimentConfig::advisor_iter_cap`]).
+    pub iter_cap: usize,
+}
+
+impl ModelRegistry {
+    pub fn new(machine_grid: Vec<usize>, iter_cap: usize) -> ModelRegistry {
+        ModelRegistry {
+            models: BTreeMap::new(),
+            machine_grid,
+            iter_cap,
+        }
+    }
+
+    pub fn insert(&mut self, key: ModelKey, model: CombinedModel) {
+        self.models.insert(key, model);
+    }
+
+    pub fn get(&self, algorithm: AlgorithmId, context: &str) -> Option<&CombinedModel> {
+        self.models.get(&ModelKey {
+            algorithm,
+            context: context.to_string(),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Iterate over (key, model) pairs in key order.
+    pub fn iter(&self) -> impl Iterator<Item = (&ModelKey, &CombinedModel)> {
+        self.models.iter()
+    }
+
+    /// Keep only the models a predicate admits (e.g. restrict a
+    /// directory load to the algorithms an invocation targets).
+    pub fn retain<F: FnMut(&ModelKey) -> bool>(&mut self, mut keep: F) {
+        self.models.retain(|k, _| keep(k));
+    }
+
+    /// Answer a typed query over every model × machine-grid point.
+    pub fn answer(&self, query: &Query) -> Option<Recommendation> {
+        match *query {
+            Query::FastestTo { eps, constraints } => {
+                let mut best: Option<Recommendation> = None;
+                for (key, model) in &self.models {
+                    for &m in &self.machine_grid {
+                        if !constraints.admits(m) {
+                            continue;
+                        }
+                        if let Some(t) = model.time_to_subopt(eps, m, self.iter_cap) {
+                            let objective = constraints.weighted_seconds(t, m);
+                            if best.as_ref().map(|b| objective < b.objective).unwrap_or(true) {
+                                best = Some(Recommendation {
+                                    algorithm: key.algorithm,
+                                    machines: m,
+                                    predicted: Predicted::Seconds(t),
+                                    objective,
+                                });
+                            }
+                        }
+                    }
+                }
+                best
+            }
+            Query::BestAt { budget, constraints } => {
+                let mut best: Option<Recommendation> = None;
+                for (key, model) in &self.models {
+                    for &m in &self.machine_grid {
+                        if !constraints.admits(m) {
+                            continue;
+                        }
+                        let s = model.subopt_at_time(constraints.effective_budget(budget, m), m);
+                        if s.is_finite()
+                            && best.as_ref().map(|b| s < b.objective).unwrap_or(true)
+                        {
+                            best = Some(Recommendation {
+                                algorithm: key.algorithm,
+                                machines: m,
+                                predicted: Predicted::Suboptimality(s),
+                                objective: s,
+                            });
+                        }
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Full prediction table (one typed row per algorithm × admitted
+    /// m). Inadmissible machine counts are skipped before the
+    /// (expensive) g-inversion, not filtered afterwards.
+    pub fn table(&self, eps: f64, budget: f64, constraints: &Constraints) -> Vec<PredictionRow> {
+        let mut rows = Vec::new();
+        for (key, model) in &self.models {
+            for &m in &self.machine_grid {
+                if !constraints.admits(m) {
+                    continue;
+                }
+                rows.push(PredictionRow {
+                    algorithm: key.algorithm,
+                    machines: m,
+                    time_to_eps: model.time_to_subopt(eps, m, self.iter_cap),
+                    subopt_at_budget: model.subopt_at_time(budget, m),
+                });
+            }
+        }
+        rows
+    }
+
+    /// Load every `*.json` artifact in a directory, keeping the ones
+    /// whose context matches `expect_context` (all of them when None)
+    /// and reporting the stale rest. A missing directory is an empty
+    /// registry, not an error.
+    pub fn load_dir(
+        dir: &Path,
+        expect_context: Option<&str>,
+        machine_grid: Vec<usize>,
+        iter_cap: usize,
+    ) -> crate::Result<(ModelRegistry, LoadReport)> {
+        let mut registry = ModelRegistry::new(machine_grid, iter_cap);
+        let mut report = LoadReport::default();
+        let entries = match std::fs::read_dir(dir) {
+            Ok(e) => e,
+            Err(_) => return Ok((registry, report)),
+        };
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+            .collect();
+        paths.sort();
+        for path in paths {
+            let (algorithm, context, model) = match load_artifact(&path) {
+                Ok(v) => v,
+                Err(e) => {
+                    crate::log_warn!(
+                        "skipping unreadable model artifact {}: {e}",
+                        path.display()
+                    );
+                    report.invalid.push((path, e.to_string()));
+                    continue;
+                }
+            };
+            if expect_context.map(|c| c != context).unwrap_or(false) {
+                report.stale.push((algorithm, path));
+                continue;
+            }
+            registry.insert(ModelKey { algorithm, context }, model);
+            report.loaded.push((algorithm, path));
+        }
+        Ok((registry, report))
+    }
+
+    /// Write one artifact per model into `dir` (named by algorithm
+    /// slug; one context per directory by construction).
+    pub fn save(&self, dir: &Path, context_detail: &str) -> crate::Result<Vec<PathBuf>> {
+        let mut out = Vec::new();
+        for (key, model) in &self.models {
+            let path = artifact_path(dir, key.algorithm);
+            save_artifact(&path, key.algorithm, &key.context, context_detail, model)?;
+            out.push(path);
+        }
+        Ok(out)
+    }
+}
+
+/// Canonical artifact path for an algorithm's model.
+pub fn artifact_path(dir: &Path, algorithm: AlgorithmId) -> PathBuf {
+    dir.join(format!("{}.json", algorithm.slug()))
+}
+
+/// Write one model artifact. `context` is the staleness hash;
+/// `context_detail` is the human-readable string it digests (kept in
+/// the file for debugging, never compared).
+pub fn save_artifact(
+    path: &Path,
+    algorithm: AlgorithmId,
+    context: &str,
+    context_detail: &str,
+    model: &CombinedModel,
+) -> crate::Result<()> {
+    let doc = Json::object(vec![
+        ("schema", Json::str(ARTIFACT_SCHEMA)),
+        ("algorithm", Json::str(algorithm.as_str())),
+        ("context", Json::str(context)),
+        ("context_detail", Json::str(context_detail)),
+        ("model", model.to_json()?),
+    ]);
+    write_json_file(path, &doc)
+}
+
+/// Read one model artifact back.
+pub fn load_artifact(path: &Path) -> crate::Result<(AlgorithmId, String, CombinedModel)> {
+    let doc = read_json_file(path)?;
+    let schema = doc.req_str("schema")?;
+    crate::ensure!(
+        schema == ARTIFACT_SCHEMA,
+        "{}: unsupported artifact schema '{schema}' (expected '{ARTIFACT_SCHEMA}')",
+        path.display()
+    );
+    let algorithm = AlgorithmId::parse(doc.req_str("algorithm")?)?;
+    let context = doc.req_str("context")?.to_string();
+    let model = doc
+        .get("model")
+        .ok_or_else(|| crate::err!("{}: artifact has no 'model' object", path.display()))
+        .and_then(CombinedModel::from_json)?;
+    Ok((algorithm, context, model))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::advisor::query::Constraints;
+    use crate::ernest::{ErnestModel, Observation};
+    use crate::hemingway_model::{ConvPoint, ConvergenceModel, FeatureLibrary};
+
+    /// Build a combined model with decay rate c0 (per i/m) and
+    /// iteration time 0.1 + 0.4/m.
+    fn model(c0: f64) -> CombinedModel {
+        let obs: Vec<Observation> = [1usize, 2, 4, 8, 16]
+            .iter()
+            .map(|&m| Observation {
+                machines: m,
+                size: 1000.0,
+                time: 0.1 + 0.4 / m as f64,
+            })
+            .collect();
+        let mut pts = Vec::new();
+        for &m in &[1.0f64, 2.0, 4.0, 8.0, 16.0] {
+            for i in 1..=60 {
+                pts.push(ConvPoint {
+                    iter: i as f64,
+                    machines: m,
+                    subopt: 0.5 * (-c0 * i as f64 / m).exp(),
+                });
+            }
+        }
+        CombinedModel {
+            ernest: ErnestModel::fit(&obs).unwrap(),
+            conv: ConvergenceModel::fit(&pts, FeatureLibrary::standard(), 1).unwrap(),
+            input_size: 1000.0,
+        }
+    }
+
+    fn registry() -> ModelRegistry {
+        let mut r = ModelRegistry::new(vec![1, 2, 4, 8, 16], 100_000);
+        // CoCoA+ converges faster than CoCoA here.
+        r.insert(
+            ModelKey {
+                algorithm: AlgorithmId::CocoaPlus,
+                context: "ctx".into(),
+            },
+            model(1.2),
+        );
+        r.insert(
+            ModelKey {
+                algorithm: AlgorithmId::Cocoa,
+                context: "ctx".into(),
+            },
+            model(0.3),
+        );
+        r
+    }
+
+    #[test]
+    fn fastest_to_picks_faster_algorithm() {
+        let r = registry();
+        let rec = r.answer(&Query::fastest_to(1e-3)).unwrap();
+        assert_eq!(rec.algorithm, AlgorithmId::CocoaPlus);
+        let t = rec.predicted.seconds().expect("fastest_to answers in seconds");
+        assert!(t > 0.0);
+        assert!(r.machine_grid.contains(&rec.machines));
+    }
+
+    #[test]
+    fn best_at_budget_consistent_with_fastest() {
+        let r = registry();
+        let rec_t = r.answer(&Query::fastest_to(1e-3)).unwrap();
+        // With exactly that budget, predicted best loss should be ≤ ε.
+        let rec_l = r
+            .answer(&Query::best_at(rec_t.predicted.seconds().unwrap()))
+            .unwrap();
+        let s = rec_l.predicted.suboptimality().unwrap();
+        assert!(s <= 1.1e-3, "{s}");
+    }
+
+    #[test]
+    fn impossible_goal_returns_none() {
+        let mut r = registry();
+        r.iter_cap = 10;
+        assert!(r.answer(&Query::fastest_to(1e-30)).is_none());
+    }
+
+    #[test]
+    fn max_machines_constraint_filters_the_grid() {
+        let r = registry();
+        let free = r.answer(&Query::fastest_to(1e-3)).unwrap();
+        let capped = r
+            .answer(&Query::fastest_to(1e-3).with(Constraints {
+                max_machines: Some(2),
+                machine_cost_weight: 0.0,
+            }))
+            .unwrap();
+        assert!(capped.machines <= 2);
+        // The constraint can only cost time.
+        if free.machines > 2 {
+            assert!(
+                capped.predicted.seconds().unwrap() >= free.predicted.seconds().unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn cost_weighting_prefers_fewer_machines() {
+        let r = registry();
+        let free = r.answer(&Query::fastest_to(1e-3)).unwrap();
+        // An extreme machine price forces the recommendation down the
+        // grid (or keeps it if m was already minimal).
+        let priced = r
+            .answer(&Query::fastest_to(1e-3).with(Constraints {
+                max_machines: None,
+                machine_cost_weight: 100.0,
+            }))
+            .unwrap();
+        assert!(priced.machines <= free.machines);
+        assert!(priced.objective >= priced.predicted.seconds().unwrap());
+    }
+
+    #[test]
+    fn table_is_complete_and_typed() {
+        let r = registry();
+        let rows = r.table(1e-3, 5.0, &Constraints::none());
+        assert_eq!(rows.len(), 2 * 5);
+        assert!(rows.iter().all(|row| row.subopt_at_budget.is_finite()));
+        assert!(rows.iter().any(|row| row.algorithm == AlgorithmId::Cocoa));
+        // Constraints prune rows before the expensive inversion.
+        let capped = r.table(
+            1e-3,
+            5.0,
+            &Constraints {
+                max_machines: Some(2),
+                machine_cost_weight: 0.0,
+            },
+        );
+        assert_eq!(capped.len(), 2 * 2);
+        assert!(capped.iter().all(|row| row.machines <= 2));
+    }
+
+    #[test]
+    fn retain_restricts_the_serving_set() {
+        let mut r = registry();
+        r.retain(|k| k.algorithm == AlgorithmId::Cocoa);
+        assert_eq!(r.len(), 1);
+        // With cocoa+ retained out, the slower algorithm must win.
+        let rec = r.answer(&Query::fastest_to(1e-3)).unwrap();
+        assert_eq!(rec.algorithm, AlgorithmId::Cocoa);
+    }
+
+    #[test]
+    fn artifact_roundtrip_through_disk() {
+        let dir = std::env::temp_dir().join("hemingway_registry_rt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = registry();
+        let paths = r.save(&dir, "detail-string").unwrap();
+        assert_eq!(paths.len(), 2);
+        let (back, report) =
+            ModelRegistry::load_dir(&dir, Some("ctx"), vec![1, 2, 4, 8, 16], 100_000).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(report.loaded.len(), 2);
+        assert!(report.stale.is_empty());
+        // Same answers, bit for bit.
+        for q in [Query::fastest_to(1e-3), Query::best_at(5.0)] {
+            let a = r.answer(&q).unwrap();
+            let b = back.answer(&q).unwrap();
+            assert_eq!(a, b);
+        }
+        // A different expected context marks everything stale.
+        let (empty, report) =
+            ModelRegistry::load_dir(&dir, Some("other"), vec![1, 2], 100).unwrap();
+        assert!(empty.is_empty());
+        assert_eq!(report.stale.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_artifact_is_skipped_not_fatal() {
+        let dir = std::env::temp_dir().join("hemingway_registry_corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = registry();
+        r.save(&dir, "detail").unwrap();
+        // A truncated write and a foreign file must not brick loading.
+        std::fs::write(dir.join("cocoa.json"), "{\"schema\": \"hemingway-adv").unwrap();
+        std::fs::write(dir.join("notes.json"), "{\"hello\": 1}").unwrap();
+        let (back, report) =
+            ModelRegistry::load_dir(&dir, Some("ctx"), vec![1, 2, 4, 8, 16], 100_000).unwrap();
+        assert_eq!(back.len(), 1); // cocoa_plus survives
+        assert_eq!(report.loaded.len(), 1);
+        assert_eq!(report.invalid.len(), 2);
+        assert!(back.answer(&Query::fastest_to(1e-3)).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_dir_loads_empty() {
+        let (r, report) = ModelRegistry::load_dir(
+            Path::new("/nonexistent/hemingway-models"),
+            None,
+            vec![1],
+            100,
+        )
+        .unwrap();
+        assert!(r.is_empty());
+        assert!(report.loaded.is_empty() && report.stale.is_empty());
+    }
+}

@@ -1,0 +1,285 @@
+//! The advisor service: answer newline-delimited JSON queries over any
+//! reader/writer pair. `hemingway serve` wires this to stdin/stdout —
+//! fit once (or load persisted artifacts), then answer thousands of
+//! queries in microseconds each instead of one per sweep.
+//!
+//! Wire protocol, one JSON object per line:
+//!
+//! ```text
+//! → {"query":"fastest_to","eps":1e-4}
+//! ← {"ok":true,"query":"fastest_to","algorithm":"cocoa+","machines":16,"predicted_seconds":12.5}
+//! → {"query":"best_at","budget":20,"max_machines":8}
+//! ← {"ok":true,"query":"best_at","algorithm":"cocoa+","machines":8,"predicted_suboptimality":3.1e-5}
+//! → {"query":"table","eps":1e-4,"budget":20}
+//! ← {"ok":true,"query":"table","rows":[{"algorithm":"cocoa+","machines":1,...},...]}
+//! → {"query":"models"}
+//! ← {"ok":true,"query":"models","models":[{"algorithm":"cocoa+","context":"…","train_r2":0.99,...}]}
+//! ```
+//!
+//! Responses carry the prediction's unit in the field name
+//! (seconds vs suboptimality); failures are `{"ok":false,"error":…}`.
+//! The loop never aborts on a bad query — only on I/O failure.
+
+use std::io::{BufRead, Write};
+
+use super::query::{Constraints, Query};
+use super::registry::ModelRegistry;
+use crate::util::json::Json;
+
+/// Counters the serve loop reports when its input ends.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStats {
+    pub queries: usize,
+    pub errors: usize,
+}
+
+fn error_response(msg: impl Into<String>) -> Json {
+    Json::object(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg.into())),
+    ])
+}
+
+fn ok_response(kind: &str, body: Vec<(String, Json)>) -> Json {
+    let mut fields: Vec<(String, Json)> = vec![
+        ("ok".into(), Json::Bool(true)),
+        ("query".into(), Json::str(kind)),
+    ];
+    fields.extend(body);
+    Json::Object(fields)
+}
+
+/// Answer one wire query against the registry. Never panics and never
+/// fails — malformed input becomes an `{"ok":false}` response.
+pub fn handle_line(registry: &ModelRegistry, line: &str) -> Json {
+    let doc = match Json::parse(line.trim()) {
+        Ok(d) => d,
+        Err(e) => return error_response(e.to_string()),
+    };
+    let kind = match doc.req_str("query") {
+        Ok(k) => k.to_string(),
+        Err(e) => return error_response(e.to_string()),
+    };
+    match kind.as_str() {
+        "fastest_to" | "best_at" => {
+            let query = match Query::from_json(&doc) {
+                Ok(q) => q,
+                Err(e) => return error_response(e.to_string()),
+            };
+            match registry.answer(&query) {
+                Some(rec) => {
+                    let body = match rec.to_json() {
+                        Json::Object(fields) => fields,
+                        _ => unreachable!("Recommendation::to_json returns an object"),
+                    };
+                    ok_response(&kind, body)
+                }
+                None => error_response("no feasible configuration for this query"),
+            }
+        }
+        "table" => {
+            let (eps, budget) = match (doc.req_f64("eps"), doc.req_f64("budget")) {
+                (Ok(e), Ok(b)) => (e, b),
+                (Err(e), _) | (_, Err(e)) => return error_response(e.to_string()),
+            };
+            // max_machines prunes the grid; cost weighting has no
+            // sensible per-row meaning here, so reject it rather than
+            // silently ignore it.
+            let constraints = match Constraints::from_json(&doc) {
+                Ok(c) => c,
+                Err(e) => return error_response(e.to_string()),
+            };
+            if constraints.machine_cost_weight != 0.0 {
+                return error_response(
+                    "machine_cost_weight is not supported for table queries",
+                );
+            }
+            let rows = registry.table(eps, budget, &constraints);
+            ok_response(
+                &kind,
+                vec![(
+                    "rows".into(),
+                    Json::array(rows.iter().map(|r| r.to_json())),
+                )],
+            )
+        }
+        "models" => {
+            let models: Vec<Json> = registry
+                .iter()
+                .map(|(key, model)| {
+                    Json::object(vec![
+                        ("algorithm", Json::str(key.algorithm.as_str())),
+                        ("context", Json::str(key.context.clone())),
+                        ("input_size", Json::num(model.input_size)),
+                        ("train_r2", Json::num(model.conv.train_r2)),
+                        ("floor", Json::num(model.conv.floor)),
+                    ])
+                })
+                .collect();
+            ok_response(&kind, vec![("models".into(), Json::array(models))])
+        }
+        other => error_response(format!(
+            "unknown query kind '{other}' (expected fastest_to, best_at, table or models)"
+        )),
+    }
+}
+
+/// The serve loop: one response line per non-empty input line, flushed
+/// immediately so pipes and interactive sessions both work.
+pub fn serve<R: BufRead, W: Write>(
+    registry: &ModelRegistry,
+    input: R,
+    mut output: W,
+) -> crate::Result<ServeStats> {
+    let mut stats = ServeStats::default();
+    for line in input.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_line(registry, &line);
+        stats.queries += 1;
+        if !resp.get("ok").and_then(Json::as_bool).unwrap_or(false) {
+            stats.errors += 1;
+        }
+        writeln!(output, "{resp}")?;
+        output.flush()?;
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::advisor::registry::ModelKey;
+    use crate::advisor::CombinedModel;
+    use crate::ernest::ErnestModel;
+    use crate::hemingway_model::{ConvergenceModel, FeatureLibrary, LassoFit};
+    use crate::optim::AlgorithmId;
+
+    /// Hand-built registry with exactly-known numbers:
+    /// f(m) = 0.5 (constant), g(i, m) = 0.5·e^(−i/m), floor 1e-12.
+    /// Every prediction is then exact arithmetic, so responses are
+    /// byte-stable golden strings.
+    fn golden_registry() -> ModelRegistry {
+        let library = FeatureLibrary::standard();
+        let i_over_m = library
+            .names()
+            .iter()
+            .position(|&n| n == "i/m")
+            .unwrap();
+        let mut coef = vec![0.0; library.len()];
+        coef[i_over_m] = -1.0;
+        let conv = ConvergenceModel {
+            library,
+            fit: LassoFit {
+                coef,
+                intercept: 0.5f64.ln(),
+                alpha: 0.01,
+                iterations: 1,
+            },
+            train_r2: 1.0,
+            n_train: 0,
+            floor: 1e-12,
+        };
+        let ernest = ErnestModel {
+            theta: [0.5, 0.0, 0.0, 0.0],
+            train_rmse: 0.0,
+        };
+        let mut registry = ModelRegistry::new(vec![1, 2, 4], 100_000);
+        registry.insert(
+            ModelKey {
+                algorithm: AlgorithmId::CocoaPlus,
+                context: "golden".into(),
+            },
+            CombinedModel {
+                ernest,
+                conv,
+                input_size: 1000.0,
+            },
+        );
+        registry
+    }
+
+    #[test]
+    fn golden_fastest_to_response() {
+        let registry = golden_registry();
+        // ε = 0.02 needs i ≥ m·ln 25 ≈ 3.22·m iterations: 4 at m=1
+        // (2.0s), 7 at m=2 (3.5s), 13 at m=4 (6.5s) — m=1 wins at
+        // exactly 4·0.5 = 2 seconds, an integer the serializer prints
+        // without a fraction.
+        let resp = handle_line(&registry, r#"{"query":"fastest_to","eps":0.02}"#);
+        assert_eq!(
+            resp.to_string(),
+            r#"{"ok":true,"query":"fastest_to","algorithm":"cocoa+","machines":1,"predicted_seconds":2}"#
+        );
+    }
+
+    #[test]
+    fn golden_best_at_response() {
+        let registry = golden_registry();
+        // Budget 4s = 8 iterations at any m; g is best at m=1. The
+        // expectation mirrors the model's own arithmetic
+        // (exp(ln 0.5 − i/m)) so the comparison is exact, not ≈.
+        let resp = handle_line(&registry, r#"{"query":"best_at","budget":4}"#);
+        let expected = (0.5f64.ln() - 8.0).exp();
+        assert_eq!(
+            resp.to_string(),
+            format!(
+                r#"{{"ok":true,"query":"best_at","algorithm":"cocoa+","machines":1,"predicted_suboptimality":{expected}}}"#
+            )
+        );
+    }
+
+    #[test]
+    fn serve_loop_answers_many_queries_in_one_process() {
+        let registry = golden_registry();
+        let input = b"{\"query\":\"fastest_to\",\"eps\":0.01}\n\
+                      \n\
+                      {\"query\":\"best_at\",\"budget\":4}\n\
+                      {\"query\":\"fastest_to\",\"eps\":0.01,\"max_machines\":2}\n\
+                      {\"query\":\"models\"}\n\
+                      not json\n";
+        let mut out = Vec::new();
+        let stats = serve(&registry, &input[..], &mut out).unwrap();
+        assert_eq!(stats.queries, 5);
+        assert_eq!(stats.errors, 1);
+        let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().lines().collect();
+        assert_eq!(lines.len(), 5);
+        for (i, line) in lines.iter().enumerate() {
+            let doc = Json::parse(line).unwrap();
+            let ok = doc.get("ok").and_then(Json::as_bool).unwrap();
+            assert_eq!(ok, i != 4, "line {i}: {line}");
+        }
+        // Typed fields: seconds for fastest_to, suboptimality for best_at.
+        assert!(lines[0].contains("\"predicted_seconds\""));
+        assert!(lines[1].contains("\"predicted_suboptimality\""));
+        assert!(lines[2].contains("\"machines\":2") || lines[2].contains("\"machines\":1"));
+        assert!(lines[3].contains("\"models\""));
+        assert!(lines[4].contains("\"error\""));
+    }
+
+    #[test]
+    fn table_and_error_queries() {
+        let registry = golden_registry();
+        let resp = handle_line(&registry, r#"{"query":"table","eps":0.01,"budget":4}"#);
+        let rows = resp.get("rows").and_then(Json::as_array).unwrap();
+        assert_eq!(rows.len(), 3); // one per machine-grid point
+        for row in rows {
+            assert!(row.get("subopt_at_budget").is_some());
+        }
+        // max_machines filters table rows; cost weighting is rejected.
+        let capped =
+            handle_line(&registry, r#"{"query":"table","eps":0.01,"budget":4,"max_machines":2}"#);
+        assert_eq!(capped.get("rows").and_then(Json::as_array).unwrap().len(), 2);
+        let priced = handle_line(
+            &registry,
+            r#"{"query":"table","eps":0.01,"budget":4,"machine_cost_weight":0.1}"#,
+        );
+        assert!(!priced.get("ok").and_then(Json::as_bool).unwrap());
+        let bad = handle_line(&registry, r#"{"query":"fastest_to"}"#);
+        assert!(!bad.get("ok").and_then(Json::as_bool).unwrap());
+        let unknown = handle_line(&registry, r#"{"query":"what"}"#);
+        assert!(unknown.to_string().contains("unknown query kind"));
+    }
+}

@@ -30,6 +30,12 @@ pub struct ExperimentConfig {
     pub data_density: f64,
     /// Output directory for CSVs/plots.
     pub out_dir: String,
+    /// Iteration cap when the advisor inverts g(i, m) for a
+    /// time-to-target query.
+    pub advisor_iter_cap: usize,
+    /// Degree of parallelism the adaptive loop starts with before the
+    /// models have enough data to choose one.
+    pub bootstrap_machines: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -47,6 +53,8 @@ impl Default for ExperimentConfig {
             data_noise: 0.35,
             data_density: 0.25,
             out_dir: "out".into(),
+            advisor_iter_cap: 100_000,
+            bootstrap_machines: 16,
         }
     }
 }
@@ -89,6 +97,8 @@ impl ExperimentConfig {
             data_noise: doc.opt_f64("data_noise", dft.data_noise),
             data_density: doc.opt_f64("data_density", dft.data_density),
             out_dir: doc.opt_str("out_dir", &dft.out_dir).to_string(),
+            advisor_iter_cap: doc.opt_usize("advisor_iter_cap", dft.advisor_iter_cap),
+            bootstrap_machines: doc.opt_usize("bootstrap_machines", dft.bootstrap_machines),
         }
     }
 
@@ -125,7 +135,50 @@ impl ExperimentConfig {
             ("data_noise", Json::num(self.data_noise)),
             ("data_density", Json::num(self.data_density)),
             ("out_dir", Json::str(self.out_dir.clone())),
+            ("advisor_iter_cap", Json::num(self.advisor_iter_cap as f64)),
+            ("bootstrap_machines", Json::num(self.bootstrap_machines as f64)),
         ])
+    }
+
+    /// Config-hash prefix pinning dataset, problem, profile and backend
+    /// for every sweep cell this config runs (the per-grid stopping
+    /// rules are appended by [`crate::sweep::SweepGrid::run_key`]).
+    pub fn context_key(&self, native: bool) -> String {
+        format!(
+            "n={};d={};lambda={:e};noise={};density={};seed={};profile={};backend={}",
+            self.n,
+            self.d,
+            self.lambda,
+            self.data_noise,
+            self.data_density,
+            self.seed,
+            self.profile,
+            if native { "native" } else { "hlo" }
+        )
+    }
+
+    /// Everything a fitted advisor model depends on: the sweep context
+    /// plus the machine grid and stopping rules the training sweep
+    /// used. Model artifacts persist the hash of this string; a
+    /// mismatch at load time marks the artifact stale.
+    pub fn model_context(&self, native: bool) -> String {
+        format!(
+            "{}|machines={:?};max_iters={};target={:e}",
+            self.context_key(native),
+            self.machines,
+            self.max_iters,
+            self.target_subopt
+        )
+    }
+
+    /// FNV-64 hex digest of [`Self::model_context`] — the staleness key
+    /// stored inside every model artifact (same hash family as the
+    /// sweep trace cache).
+    pub fn model_context_hash(&self, native: bool) -> String {
+        format!(
+            "{:016x}",
+            crate::sweep::cache::hash_key(&self.model_context(native))
+        )
     }
 }
 
@@ -152,6 +205,30 @@ mod tests {
         assert_eq!(back.n, 1024);
         assert_eq!(back.algorithms, vec!["cocoa", "gd"]);
         assert_eq!(back.machines, c.machines);
+    }
+
+    #[test]
+    fn advisor_knobs_load_from_json() {
+        let doc = Json::parse(r#"{"advisor_iter_cap": 5000, "bootstrap_machines": 8}"#).unwrap();
+        let c = ExperimentConfig::from_json(&doc);
+        assert_eq!(c.advisor_iter_cap, 5000);
+        assert_eq!(c.bootstrap_machines, 8);
+        let back = ExperimentConfig::from_json(&c.to_json());
+        assert_eq!(back.advisor_iter_cap, 5000);
+        assert_eq!(back.bootstrap_machines, 8);
+    }
+
+    #[test]
+    fn model_context_tracks_fit_inputs() {
+        let a = ExperimentConfig::default();
+        assert_eq!(a.model_context_hash(true), a.model_context_hash(true));
+        assert_ne!(a.model_context_hash(true), a.model_context_hash(false));
+        let mut b = a.clone();
+        b.max_iters += 1;
+        assert_ne!(a.model_context_hash(true), b.model_context_hash(true));
+        let mut c = a.clone();
+        c.machines.pop();
+        assert_ne!(a.model_context_hash(true), c.model_context_hash(true));
     }
 
     #[test]

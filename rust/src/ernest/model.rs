@@ -3,6 +3,7 @@
 //! costs, so θ ≥ 0 — same solver choice as the Ernest paper).
 
 use crate::linalg::{nnls, Matrix};
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// One profiled configuration: iteration time measured at a scale.
@@ -76,6 +77,40 @@ impl ErnestModel {
         stats::mape(&truth, &pred)
     }
 
+    /// Serialize for a model artifact (`util::json`). Floats go
+    /// through Rust's shortest-roundtrip formatting, so
+    /// [`Self::from_json`] recovers bit-identical coefficients. A
+    /// non-finite value is refused here — JSON would silently turn it
+    /// into `null` and produce an artifact that can never load.
+    pub fn to_json(&self) -> crate::Result<Json> {
+        crate::ensure!(
+            self.theta.iter().all(|t| t.is_finite()) && self.train_rmse.is_finite(),
+            "refusing to persist a non-finite Ernest model: θ={:?} rmse={}",
+            self.theta,
+            self.train_rmse
+        );
+        Ok(Json::object(vec![
+            ("theta", Json::array(self.theta.iter().map(|&t| Json::num(t)))),
+            ("train_rmse", Json::num(self.train_rmse)),
+        ]))
+    }
+
+    /// Rebuild a fitted model from its artifact form.
+    pub fn from_json(doc: &Json) -> crate::Result<ErnestModel> {
+        let arr = doc.req_array("theta")?;
+        crate::ensure!(arr.len() == 4, "ernest theta must have 4 entries, got {}", arr.len());
+        let mut theta = [0.0f64; 4];
+        for (i, v) in arr.iter().enumerate() {
+            theta[i] = v
+                .as_f64()
+                .ok_or_else(|| crate::err!("ernest theta[{i}] is not a number"))?;
+        }
+        Ok(ErnestModel {
+            theta,
+            train_rmse: doc.req_f64("train_rmse")?,
+        })
+    }
+
     /// The machine count minimizing predicted iteration time for a
     /// given input size (grid argmin — f is cheap).
     pub fn best_machines(&self, size: f64, candidates: &[usize]) -> usize {
@@ -140,6 +175,22 @@ mod tests {
         let best = model.best_machines(8192.0, &cands);
         // d/dm (θ1 s / m + θ3 m) = 0 → m* = sqrt(θ1 s / θ3) ≈ 20.
         assert!(best == 16 || best == 32, "best={best}");
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_identical() {
+        let theta = [0.1, 4e-5, 0.01, 0.0005];
+        let configs: Vec<(usize, f64)> = [1, 2, 4, 8, 16].iter().map(|&m| (m, 8192.0)).collect();
+        let model = ErnestModel::fit(&synth_obs(theta, &configs)).unwrap();
+        let text = model.to_json().unwrap().to_pretty();
+        let back = ErnestModel::from_json(&Json::parse(&text).unwrap()).unwrap();
+        for (a, b) in model.theta.iter().zip(&back.theta) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(model.train_rmse.to_bits(), back.train_rmse.to_bits());
+        for &(m, s) in &[(1usize, 8192.0), (7, 4096.0), (128, 8192.0)] {
+            assert_eq!(model.predict(m, s).to_bits(), back.predict(m, s).to_bits());
+        }
     }
 
     #[test]

@@ -64,6 +64,26 @@ impl FeatureLibrary {
         }
     }
 
+    /// Rebuild a library from persisted feature names (model
+    /// artifacts). Every built-in library draws from the standard
+    /// catalog, so names are the durable identity of a feature — the
+    /// function pointers themselves cannot be serialized.
+    pub fn from_names(names: &[&str]) -> crate::Result<FeatureLibrary> {
+        let catalog = FeatureLibrary::standard();
+        let mut features = Vec::with_capacity(names.len());
+        for name in names {
+            let f = catalog
+                .features
+                .iter()
+                .find(|f| f.name == *name)
+                .ok_or_else(|| {
+                    crate::err!("unknown convergence feature '{name}' in model artifact")
+                })?;
+            features.push(f.clone());
+        }
+        Ok(FeatureLibrary { features })
+    }
+
     pub fn len(&self) -> usize {
         self.features.len()
     }
@@ -106,6 +126,18 @@ mod tests {
         let r16 = lib.row(100.0, 16.0);
         assert_eq!(r1[idx], 100.0);
         assert_eq!(r16[idx], 6.25);
+    }
+
+    #[test]
+    fn from_names_roundtrips_every_builtin_library() {
+        for lib in [FeatureLibrary::standard(), FeatureLibrary::iteration_only()] {
+            let names = lib.names();
+            let back = FeatureLibrary::from_names(&names).unwrap();
+            assert_eq!(back.names(), names);
+            // Same functions, not just the same labels.
+            assert_eq!(back.row(17.0, 8.0), lib.row(17.0, 8.0));
+        }
+        assert!(FeatureLibrary::from_names(&["i", "not-a-feature"]).is_err());
     }
 
     #[test]

@@ -5,6 +5,7 @@ use super::features::FeatureLibrary;
 use super::lasso::{lasso_cv, LassoFit};
 use crate::linalg::Matrix;
 use crate::optim::trace::Trace;
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// One training point for the convergence model.
@@ -102,6 +103,83 @@ impl ConvergenceModel {
         prev_ok
     }
 
+    /// Serialize for a model artifact (`util::json`): feature names
+    /// (the library's durable identity), Lasso coefficients, and the
+    /// prediction floor. Floats round-trip bit-identically; any
+    /// non-finite value is refused here rather than silently becoming
+    /// JSON `null` (which would produce an artifact that never loads).
+    pub fn to_json(&self) -> crate::Result<Json> {
+        crate::ensure!(
+            self.floor.is_finite(),
+            "refusing to persist a non-finite prediction floor ({})",
+            self.floor
+        );
+        let coeffs_finite = self.fit.coef.iter().all(|c| c.is_finite())
+            && self.fit.intercept.is_finite()
+            && self.fit.alpha.is_finite()
+            && self.train_r2.is_finite();
+        crate::ensure!(
+            coeffs_finite,
+            "refusing to persist a non-finite convergence model (intercept {}, alpha {})",
+            self.fit.intercept,
+            self.fit.alpha
+        );
+        Ok(Json::object(vec![
+            (
+                "features",
+                Json::array(self.library.names().iter().map(|n| Json::str(*n))),
+            ),
+            ("coef", Json::array(self.fit.coef.iter().map(|&c| Json::num(c)))),
+            ("intercept", Json::num(self.fit.intercept)),
+            ("alpha", Json::num(self.fit.alpha)),
+            ("iterations", Json::num(self.fit.iterations as f64)),
+            ("train_r2", Json::num(self.train_r2)),
+            ("n_train", Json::num(self.n_train as f64)),
+            ("floor", Json::num(self.floor)),
+        ]))
+    }
+
+    /// Rebuild a fitted model from its artifact form.
+    pub fn from_json(doc: &Json) -> crate::Result<ConvergenceModel> {
+        let names: Vec<&str> = doc
+            .req_array("features")?
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .ok_or_else(|| crate::err!("convergence feature name is not a string"))
+            })
+            .collect::<crate::Result<_>>()?;
+        let library = FeatureLibrary::from_names(&names)?;
+        let coef: Vec<f64> = doc
+            .req_array("coef")?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .ok_or_else(|| crate::err!("convergence coefficient is not a number"))
+            })
+            .collect::<crate::Result<_>>()?;
+        crate::ensure!(
+            coef.len() == library.len(),
+            "artifact has {} coefficients for {} features",
+            coef.len(),
+            library.len()
+        );
+        let floor = doc.req_f64("floor")?;
+        crate::ensure!(floor.is_finite(), "model artifact has a non-finite floor");
+        Ok(ConvergenceModel {
+            library,
+            fit: LassoFit {
+                coef,
+                intercept: doc.req_f64("intercept")?,
+                alpha: doc.req_f64("alpha")?,
+                iterations: doc.req_usize("iterations")?,
+            },
+            train_r2: doc.req_f64("train_r2")?,
+            n_train: doc.req_usize("n_train")?,
+            floor,
+        })
+    }
+
     /// Named non-zero coefficients (interpretability / ablation logs).
     pub fn selected_features(&self) -> Vec<(&'static str, f64)> {
         self.library
@@ -185,6 +263,29 @@ mod tests {
         assert!(i16 > i4);
         // Unreachable target within cap.
         assert_eq!(model.iters_to(1e-30, 4.0, 10), None);
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_identical() {
+        let pts = synthetic_points(&[1.0, 2.0, 4.0, 8.0, 16.0], 60, 0.8, 0.5);
+        let model = ConvergenceModel::fit(&pts, FeatureLibrary::standard(), 1).unwrap();
+        assert!(model.floor.is_finite() && model.floor > 0.0);
+        let text = model.to_json().unwrap().to_pretty();
+        let back = ConvergenceModel::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.library.names(), model.library.names());
+        for (a, b) in model.fit.coef.iter().zip(&back.fit.coef) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(model.fit.intercept.to_bits(), back.fit.intercept.to_bits());
+        assert_eq!(model.floor.to_bits(), back.floor.to_bits());
+        assert_eq!(model.selected_features(), back.selected_features());
+        for &(i, m) in &[(1.0, 1.0), (10.0, 4.0), (50.0, 16.0), (500.0, 128.0)] {
+            assert_eq!(model.predict(i, m).to_bits(), back.predict(i, m).to_bits());
+            assert_eq!(
+                model.predict_ln(i, m).to_bits(),
+                back.predict_ln(i, m).to_bits()
+            );
+        }
     }
 
     #[test]

@@ -5,14 +5,19 @@
 //!   sweep            run an algorithm across the machine grid
 //!   fit-system       profile + fit the Ernest model f(m)
 //!   fit-convergence  fit the convergence model g(i, m) from a sweep
-//!   advise           answer the paper's two query types
+//!   fit              fit + persist advisor model artifacts (models/*.json)
+//!   advise           answer the paper's two query types from artifacts
+//!   serve            long-lived advisor: JSON queries on stdin, answers on stdout
 //!   adaptive         the Fig 2 adaptive reconfiguration loop
 //!   repro            regenerate a paper figure/table (or `all`)
 //!   info             engine/artifact diagnostics
 
-use hemingway::advisor::{adaptive_cocoa_plus, AdaptiveConfig};
+use hemingway::advisor::{
+    adaptive_cocoa_plus, AdaptiveConfig, AlgorithmId, Constraints, Query,
+};
 use hemingway::cluster::BspSim;
 use hemingway::config::ExperimentConfig;
+use hemingway::repro::common::{load_or_fit_registry, update_summary_file};
 use hemingway::repro::{run_figures, ReproContext, FIGURES};
 use hemingway::sweep::SweepGrid;
 use hemingway::util::cli::Args;
@@ -45,7 +50,9 @@ fn print_help() {
          \x20 sweep            --algo cocoa+ [--seeds N] [--threads K] [--native]\n\
          \x20 fit-system       --algo cocoa+ [--native]\n\
          \x20 fit-convergence  --algo cocoa+ [--native]\n\
-         \x20 advise           --eps 1e-4 --budget 20 [--native]\n\
+         \x20 fit              [--algos cocoa+,cocoa] [--native]  fit + persist model artifacts\n\
+         \x20 advise           --eps 1e-4 --budget 20 [--max-machines M] [--cost-weight W] [--native]\n\
+         \x20 serve            [--algos ...] [--native]  JSON queries on stdin, one answer/line\n\
          \x20 adaptive         [--frames 8] [--frame-seconds 5] [--native]\n\
          \x20 repro            --figure <id>|all [--native]\n\
          \x20 info\n\n\
@@ -55,7 +62,9 @@ fn print_help() {
          \x20 --native          use the native backend instead of PJRT/HLO\n\
          \x20 --seeds <N>       seed replicates per sweep cell (mean±std aggregation)\n\
          \x20 --threads <K>     sweep worker threads (default: HEMINGWAY_THREADS or cores)\n\
-         \x20 --verbose         debug logging (or HEMINGWAY_LOG=debug)",
+         \x20 --verbose         debug logging (or HEMINGWAY_LOG=debug)\n\n\
+         `fit` writes <out_dir>/models/*.json; `advise` and `serve` load them\n\
+         (fit-on-miss) and detect stale artifacts via the config hash.",
         FIGURES.join(", ")
     );
 }
@@ -73,6 +82,19 @@ fn load_cfg(args: &Args) -> hemingway::Result<ExperimentConfig> {
             .map_err(|e| hemingway::err!("bad --machines-grid: {e}"))?;
     }
     Ok(cfg)
+}
+
+/// The algorithms a fit/advise/serve invocation targets: `--algos`
+/// (comma-separated) or the config's `algorithms` list.
+fn parse_algos(args: &Args, cfg: &ExperimentConfig) -> hemingway::Result<Vec<AlgorithmId>> {
+    let defaults: Vec<&str> = cfg.algorithms.iter().map(String::as_str).collect();
+    let algos: Vec<AlgorithmId> = args
+        .str_list_or("algos", &defaults)
+        .iter()
+        .map(|s| AlgorithmId::parse(s))
+        .collect::<hemingway::Result<_>>()?;
+    hemingway::ensure!(!algos.is_empty(), "no algorithms selected (--algos or config)");
+    Ok(algos)
 }
 
 fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
@@ -210,12 +232,82 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                 println!("  {name:<22} {coef:+.5}");
             }
         }
+        "fit" => {
+            let cfg = load_cfg(args)?;
+            let algos = parse_algos(args, &cfg)?;
+            let context = cfg.model_context_hash(native);
+            let detail = cfg.model_context(native);
+            let dir = hemingway::repro::common::models_dir(&cfg);
+            let ctx = ReproContext::new(cfg, native)?;
+            for algo in algos {
+                let model = ctx.fit_combined(algo)?;
+                let path = hemingway::advisor::artifact_path(&dir, algo);
+                hemingway::advisor::save_artifact(&path, algo, &context, &detail, &model)?;
+                println!(
+                    "wrote {} (context {context}, conv R²={:.4})",
+                    path.display(),
+                    model.conv.train_r2
+                );
+            }
+        }
         "advise" => {
             let cfg = load_cfg(args)?;
-            let ctx = ReproContext::new(cfg, native)?;
-            let fit = hemingway::repro::fig3::sweep_and_fit(&ctx)?;
-            let summary = hemingway::repro::tables::table_advisor(&ctx, &fit)?;
-            println!("{summary}");
+            let eps = args.f64_or("eps", cfg.target_subopt)?;
+            let budget = args.f64_or("budget", 20.0)?;
+            let constraints = Constraints {
+                max_machines: match args.get("max-machines") {
+                    Some(_) => Some(args.usize_or("max-machines", 0)?),
+                    None => None,
+                },
+                machine_cost_weight: args.f64_or("cost-weight", 0.0)?,
+            };
+            constraints.validate()?;
+            let algos = parse_algos(args, &cfg)?;
+            let registry = load_or_fit_registry(&cfg, native, &algos)?;
+            match registry.answer(&Query::FastestTo { eps, constraints }) {
+                Some(rec) => println!(
+                    "fastest to {eps:.0e}:   {} m={} → {:.2} predicted seconds",
+                    rec.algorithm,
+                    rec.machines,
+                    rec.predicted.value()
+                ),
+                None => println!("fastest to {eps:.0e}:   no configuration reaches the target"),
+            }
+            match registry.answer(&Query::BestAt { budget, constraints }) {
+                Some(rec) => println!(
+                    "best loss in {budget}s: {} m={} → {:.2e} predicted suboptimality",
+                    rec.algorithm,
+                    rec.machines,
+                    rec.predicted.value()
+                ),
+                None => println!("best loss in {budget}s: no feasible configuration"),
+            }
+            println!("\nprediction table (algorithm × m):");
+            for row in registry.table(eps, budget, &constraints) {
+                println!(
+                    "  {:<13} m={:<4} time-to-ε {:<10} subopt@{budget}s {:.3e}",
+                    row.algorithm,
+                    row.machines,
+                    row.time_to_eps
+                        .map(|t| format!("{t:.2}s"))
+                        .unwrap_or_else(|| "-".into()),
+                    row.subopt_at_budget
+                );
+            }
+        }
+        "serve" => {
+            let cfg = load_cfg(args)?;
+            let algos = parse_algos(args, &cfg)?;
+            let registry = load_or_fit_registry(&cfg, native, &algos)?;
+            eprintln!(
+                "serving {} model(s); one JSON query per line, e.g. \
+                 {{\"query\":\"fastest_to\",\"eps\":1e-4}} — Ctrl-D to stop",
+                registry.len()
+            );
+            let stdin = std::io::stdin();
+            let stdout = std::io::stdout();
+            let stats = hemingway::advisor::serve(&registry, stdin.lock(), stdout.lock())?;
+            eprintln!("served {} queries ({} errors)", stats.queries, stats.errors);
         }
         "adaptive" => {
             let cfg = load_cfg(args)?;
@@ -224,14 +316,7 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
             let ctx = ReproContext::new(cfg, native)?;
             let mut sim = BspSim::new(ctx.profile.clone(), ctx.cfg.seed);
             let backend = ctx.backend();
-            let a_cfg = AdaptiveConfig {
-                frame_seconds,
-                max_frames: frames,
-                machine_grid: ctx.cfg.machines.clone(),
-                target_subopt: ctx.cfg.target_subopt,
-                bootstrap_machines: 16,
-                seed: ctx.cfg.seed as u32,
-            };
+            let a_cfg = AdaptiveConfig::from_experiment(&ctx.cfg, frame_seconds, frames);
             let run =
                 adaptive_cocoa_plus(&ctx.problem, backend.as_ref(), &mut sim, ctx.p_star, &a_cfg)?;
             println!("adaptive CoCoA+ (Fig 2 loop):");
@@ -261,14 +346,10 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
             for s in &summaries {
                 println!("  {s}");
             }
-            // Append to out/summaries.txt for EXPERIMENTS.md assembly.
-            let path = ctx.out_dir.join("summaries.txt");
-            let mut text = std::fs::read_to_string(&path).unwrap_or_default();
-            for s in &summaries {
-                text.push_str(s);
-                text.push('\n');
-            }
-            std::fs::write(&path, text)?;
+            // Merge into out/summaries.txt for EXPERIMENTS.md assembly
+            // (replaces each figure's previous line; re-runs don't
+            // accumulate duplicates).
+            update_summary_file(&ctx.out_dir.join("summaries.txt"), &summaries)?;
         }
         "info" => {
             let engine =

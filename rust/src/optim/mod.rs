@@ -58,6 +58,70 @@ pub trait Algorithm {
     }
 }
 
+/// Typed identifier for the algorithms under study. The advisor's
+/// query layer, model artifacts and CLI all speak this type; the bare
+/// strings only survive at the parse boundary (CLI flags, config
+/// files, cache keys).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum AlgorithmId {
+    Cocoa,
+    CocoaPlus,
+    MiniBatchSgd,
+    LocalSgd,
+    Gd,
+}
+
+impl AlgorithmId {
+    /// Every algorithm, in canonical order.
+    pub const ALL: [AlgorithmId; 5] = [
+        AlgorithmId::Cocoa,
+        AlgorithmId::CocoaPlus,
+        AlgorithmId::MiniBatchSgd,
+        AlgorithmId::LocalSgd,
+        AlgorithmId::Gd,
+    ];
+
+    /// The canonical name used in traces, configs and the CLI.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AlgorithmId::Cocoa => "cocoa",
+            AlgorithmId::CocoaPlus => "cocoa+",
+            AlgorithmId::MiniBatchSgd => "minibatch-sgd",
+            AlgorithmId::LocalSgd => "local-sgd",
+            AlgorithmId::Gd => "gd",
+        }
+    }
+
+    /// File-name-safe form (model artifacts: `models/<slug>.json`).
+    pub fn slug(self) -> &'static str {
+        match self {
+            AlgorithmId::Cocoa => "cocoa",
+            AlgorithmId::CocoaPlus => "cocoa_plus",
+            AlgorithmId::MiniBatchSgd => "minibatch_sgd",
+            AlgorithmId::LocalSgd => "local_sgd",
+            AlgorithmId::Gd => "gd",
+        }
+    }
+
+    /// Parse a canonical name back into the id.
+    pub fn parse(name: &str) -> crate::Result<AlgorithmId> {
+        AlgorithmId::ALL
+            .into_iter()
+            .find(|a| a.as_str() == name)
+            .ok_or_else(|| {
+                crate::err!(
+                    "unknown algorithm '{name}' (expected cocoa, cocoa+, minibatch-sgd, local-sgd, gd)"
+                )
+            })
+    }
+}
+
+impl std::fmt::Display for AlgorithmId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Construct an algorithm by name (the CLI / advisor entry point).
 pub fn by_name(
     name: &str,
@@ -65,15 +129,16 @@ pub fn by_name(
     machines: usize,
     seed: u32,
 ) -> crate::Result<Box<dyn Algorithm>> {
-    Ok(match name {
-        "cocoa" => Box::new(Cocoa::new(problem, machines, CocoaVariant::Averaging, seed)),
-        "cocoa+" => Box::new(Cocoa::new(problem, machines, CocoaVariant::Adding, seed)),
-        "minibatch-sgd" => Box::new(MiniBatchSgd::new(problem, machines, seed)),
-        "local-sgd" => Box::new(LocalSgd::new(problem, machines, seed)),
-        "gd" => Box::new(GradientDescent::new(problem, machines)),
-        other => crate::bail!(
-            "unknown algorithm '{other}' (expected cocoa, cocoa+, minibatch-sgd, local-sgd, gd)"
-        ),
+    Ok(match AlgorithmId::parse(name)? {
+        AlgorithmId::Cocoa => {
+            Box::new(Cocoa::new(problem, machines, CocoaVariant::Averaging, seed))
+        }
+        AlgorithmId::CocoaPlus => {
+            Box::new(Cocoa::new(problem, machines, CocoaVariant::Adding, seed))
+        }
+        AlgorithmId::MiniBatchSgd => Box::new(MiniBatchSgd::new(problem, machines, seed)),
+        AlgorithmId::LocalSgd => Box::new(LocalSgd::new(problem, machines, seed)),
+        AlgorithmId::Gd => Box::new(GradientDescent::new(problem, machines)),
     })
 }
 

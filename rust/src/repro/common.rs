@@ -6,12 +6,16 @@
 //! cached in memory and on disk under `<out_dir>/cache/` so repeated
 //! figure runs and advisor refits skip already-converged cells.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
+use crate::advisor::{
+    artifact_path, save_artifact, AlgorithmId, CombinedModel, ModelKey, ModelRegistry,
+};
 use crate::cluster::{BspSim, HardwareProfile};
 use crate::config::ExperimentConfig;
 use crate::data::synth::mnist_like;
 use crate::ernest::{ErnestModel, Observation};
+use crate::hemingway_model::{points_from_traces, ConvergenceModel, FeatureLibrary};
 use crate::optim::{
     by_name, run, Backend, HloBackend, NativeBackend, Problem, RunConfig, Trace, TraceSet,
 };
@@ -85,17 +89,7 @@ impl ReproContext {
         let profile = HardwareProfile::by_name(&cfg.profile)?;
         let out_dir = PathBuf::from(&cfg.out_dir);
         std::fs::create_dir_all(&out_dir)?;
-        let context_key = format!(
-            "n={};d={};lambda={:e};noise={};density={};seed={};profile={};backend={}",
-            cfg.n,
-            cfg.d,
-            cfg.lambda,
-            cfg.data_noise,
-            cfg.data_density,
-            cfg.seed,
-            cfg.profile,
-            if use_native { "native" } else { "hlo" }
-        );
+        let context_key = cfg.context_key(use_native);
         let sweep = SweepEngine::with_default_threads(TraceCache::persistent(&out_dir.join("cache")));
         Ok(ReproContext {
             problem,
@@ -274,6 +268,23 @@ impl ReproContext {
         Ok(model)
     }
 
+    /// Fit the full combined model for one algorithm: convergence
+    /// model from the machine sweep, system model from Ernest-style
+    /// profiling. This is the expensive half of the fit-once /
+    /// query-many split — `hemingway fit` persists the result so
+    /// `advise` and `serve` never pay it again.
+    pub fn fit_combined(&self, algo: AlgorithmId) -> crate::Result<CombinedModel> {
+        let traces = self.run_sweep(algo.as_str())?;
+        let pts = points_from_traces(&traces.traces);
+        let conv = ConvergenceModel::fit(&pts, FeatureLibrary::standard(), self.cfg.seed)?;
+        let ernest = self.fit_ernest(algo.as_str())?;
+        Ok(CombinedModel {
+            ernest,
+            conv,
+            input_size: self.problem.data.n as f64,
+        })
+    }
+
     /// Write a CSV and echo its path.
     pub fn write_csv(&self, name: &str, table: &crate::util::csv::Table) -> crate::Result<()> {
         let path = self.out_dir.join(name);
@@ -352,6 +363,97 @@ fn profile_one(
     Ok(obs)
 }
 
+/// The models directory this config's artifacts live in.
+pub fn models_dir(cfg: &ExperimentConfig) -> PathBuf {
+    Path::new(&cfg.out_dir).join("models")
+}
+
+/// Load fresh advisor artifacts for `algos` from `<out_dir>/models/`,
+/// fitting and persisting any missing or stale ones. The expensive
+/// [`ReproContext`] (dataset + reference solve + sweeps) is only built
+/// on the first miss — with fresh artifacts this returns in
+/// milliseconds and `advise`/`serve` answer queries without touching a
+/// sweep.
+pub fn load_or_fit_registry(
+    cfg: &ExperimentConfig,
+    native: bool,
+    algos: &[AlgorithmId],
+) -> crate::Result<ModelRegistry> {
+    let context = cfg.model_context_hash(native);
+    let dir = models_dir(cfg);
+    let (mut registry, report) = ModelRegistry::load_dir(
+        &dir,
+        Some(&context),
+        cfg.machines.clone(),
+        cfg.advisor_iter_cap,
+    )?;
+    for (algo, path) in &report.stale {
+        crate::log_warn!(
+            "model artifact {} ({algo}) was fitted under a different config; \
+             ignoring it (refit on demand)",
+            path.display()
+        );
+    }
+    for (algo, path) in &report.loaded {
+        crate::log_info!("loaded {algo} model from {}", path.display());
+    }
+    // Only the requested algorithms answer queries — a directory can
+    // hold artifacts for more (from a broader `fit`) without widening
+    // what this invocation serves.
+    registry.retain(|key| algos.contains(&key.algorithm));
+    let missing: Vec<AlgorithmId> = algos
+        .iter()
+        .copied()
+        .filter(|&a| registry.get(a, &context).is_none())
+        .collect();
+    if !missing.is_empty() {
+        let detail = cfg.model_context(native);
+        let ctx = ReproContext::new(cfg.clone(), native)?;
+        for algo in missing {
+            let model = ctx.fit_combined(algo)?;
+            let path = artifact_path(&dir, algo);
+            save_artifact(&path, algo, &context, &detail, &model)?;
+            crate::log_info!("fitted {algo} and saved {}", path.display());
+            registry.insert(
+                ModelKey {
+                    algorithm: algo,
+                    context: context.clone(),
+                },
+                model,
+            );
+        }
+    }
+    Ok(registry)
+}
+
+/// Merge new summary lines into `summaries.txt`, replacing any
+/// previous line with the same figure id (the `fig3a:`-style prefix)
+/// instead of appending duplicates — re-running a figure updates its
+/// line in place.
+pub fn update_summary_file(path: &Path, new: &[String]) -> crate::Result<()> {
+    fn key_of(line: &str) -> &str {
+        line.split(':').next().unwrap_or(line).trim()
+    }
+    let mut lines: Vec<String> = std::fs::read_to_string(path)
+        .map(|t| {
+            t.lines()
+                .filter(|l| !l.trim().is_empty())
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default();
+    for s in new {
+        match lines.iter_mut().find(|l| key_of(l) == key_of(s)) {
+            Some(slot) => *slot = s.clone(),
+            None => lines.push(s.clone()),
+        }
+    }
+    let mut text = lines.join("\n");
+    text.push('\n');
+    std::fs::write(path, text)?;
+    Ok(())
+}
+
 /// Convert a trace into (iteration, suboptimality) points.
 pub fn iter_series(trace: &Trace, cap: Option<usize>) -> Vec<(f64, f64)> {
     trace
@@ -372,4 +474,30 @@ pub fn time_series(trace: &Trace, cap: Option<f64>) -> Vec<(f64, f64)> {
         .filter(|r| cap.map(|c| r.sim_time <= c).unwrap_or(true))
         .map(|r| (r.sim_time, r.subopt))
         .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::update_summary_file;
+
+    #[test]
+    fn summary_file_replaces_per_figure_id() {
+        let path = std::env::temp_dir().join("hemingway_summaries_test.txt");
+        let _ = std::fs::remove_file(&path);
+        update_summary_file(
+            &path,
+            &["fig3a: first run".to_string(), "fig4: stays".to_string()],
+        )
+        .unwrap();
+        // Re-running one figure replaces its line, keeps the others.
+        update_summary_file(&path, &["fig3a: second run".to_string()]).unwrap();
+        update_summary_file(&path, &["table-advisor: new line".to_string()]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            text,
+            "fig3a: second run\nfig4: stays\ntable-advisor: new line\n"
+        );
+        assert_eq!(text.matches("fig3a").count(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
 }

@@ -3,7 +3,7 @@
 
 use super::common::ReproContext;
 use super::fig3::SweepFit;
-use crate::advisor::{Advisor, CombinedModel};
+use crate::advisor::{AlgorithmId, CombinedModel, Constraints, ModelKey, ModelRegistry, Query};
 use crate::ernest::ErnestModel;
 use crate::hemingway_model::{points_from_traces, ConvergenceModel, FeatureLibrary};
 use crate::optim::RunConfig;
@@ -63,20 +63,23 @@ pub fn table_ernest(ctx: &ReproContext) -> crate::Result<String> {
 }
 
 /// Tbl A1: the advisor's two query types, answered from fitted models
-/// and checked against the actually-best configuration in the sweep.
+/// through the typed query API and checked against the actually-best
+/// configuration in the sweep.
 pub fn table_advisor(ctx: &ReproContext, cocoa_plus: &SweepFit) -> crate::Result<String> {
     println!("== Table A1: advisor queries ==");
     // Fit per-algorithm combined models (cocoa+ from the shared sweep;
-    // cocoa fresh).
-    let mut models = Vec::new();
+    // cocoa fresh) and register them under this config's fit context.
+    let context = ctx.cfg.model_context_hash(ctx.use_native);
+    let mut registry = ModelRegistry::new(ctx.cfg.machines.clone(), ctx.cfg.advisor_iter_cap);
+    let mut measured = Vec::new();
     let size = ctx.problem.data.n as f64;
-    for algo in ["cocoa+", "cocoa"] {
-        let traces = if algo == "cocoa+" {
+    for algo in [AlgorithmId::CocoaPlus, AlgorithmId::Cocoa] {
+        let traces = if algo == AlgorithmId::CocoaPlus {
             cocoa_plus.traces.clone()
         } else {
-            ctx.run_sweep(algo)?
+            ctx.run_sweep(algo.as_str())?
         };
-        let conv = if algo == "cocoa+" {
+        let conv = if algo == AlgorithmId::CocoaPlus {
             cocoa_plus.model.clone()
         } else {
             ConvergenceModel::fit(
@@ -85,58 +88,67 @@ pub fn table_advisor(ctx: &ReproContext, cocoa_plus: &SweepFit) -> crate::Result
                 ctx.cfg.seed,
             )?
         };
-        let ernest = ctx.fit_ernest(algo)?;
-        models.push((
-            algo.to_string(),
+        let ernest = ctx.fit_ernest(algo.as_str())?;
+        registry.insert(
+            ModelKey {
+                algorithm: algo,
+                context: context.clone(),
+            },
             CombinedModel {
                 ernest,
                 conv,
                 input_size: size,
             },
-            traces,
-        ));
+        );
+        measured.push((algo, traces));
     }
 
-    let advisor = Advisor::new(
-        models
-            .iter()
-            .map(|(n, m, _)| (n.clone(), m.clone()))
-            .collect(),
-        ctx.cfg.machines.clone(),
-    );
-
     let eps = ctx.cfg.target_subopt;
-    let mut table = Table::new(&["query_id", "pred_machines", "pred_value", "true_best_m", "true_best_value"]);
+    let budget = 20.0;
+    let mut table = Table::new(&[
+        "query_id",
+        "pred_machines",
+        "pred_value",
+        "true_best_m",
+        "true_best_value",
+    ]);
     let mut lines = Vec::new();
 
     // Query 1: fastest to ε.
-    if let Some(rec) = advisor.fastest_to(eps) {
+    if let Some(rec) = registry.answer(&Query::fastest_to(eps)) {
+        let pred_t = rec.predicted.seconds().expect("fastest_to answers in seconds");
         // Ground truth from the measured traces.
-        let mut best_true: Option<(String, usize, f64)> = None;
-        for (name, _, traces) in &models {
+        let mut best_true: Option<(AlgorithmId, usize, f64)> = None;
+        for (algo, traces) in &measured {
             for t in &traces.traces {
                 if let Some(tt) = t.time_to(eps) {
                     if best_true.as_ref().map(|b| tt < b.2).unwrap_or(true) {
-                        best_true = Some((name.clone(), t.machines, tt));
+                        best_true = Some((*algo, t.machines, tt));
                     }
                 }
             }
         }
-        let (tb_algo, tb_m, tb_t) = best_true.unwrap_or(("?".into(), 0, f64::NAN));
-        table.push(vec![1.0, rec.machines as f64, rec.predicted, tb_m as f64, tb_t]);
+        let (tb_algo, tb_m, tb_t) = match best_true {
+            Some((a, m, t)) => (a.as_str(), m, t),
+            None => ("?", 0, f64::NAN),
+        };
+        table.push(vec![1.0, rec.machines as f64, pred_t, tb_m as f64, tb_t]);
         lines.push(format!(
-            "Q1 fastest-to-{eps:.0e}: advisor → {} m={} ({:.2}s); measured best → {} m={} ({:.2}s)",
-            rec.algorithm, rec.machines, rec.predicted, tb_algo, tb_m, tb_t
+            "Q1 fastest-to-{eps:.0e}: advisor → {} m={} ({pred_t:.2}s); measured best → {tb_algo} m={tb_m} ({tb_t:.2}s)",
+            rec.algorithm, rec.machines
         ));
     } else {
         lines.push("Q1: advisor found no config reaching ε".into());
     }
 
-    // Query 2: best loss within a budget (half the median time-to-ε).
-    let budget = 20.0;
-    if let Some(rec) = advisor.best_at(budget) {
-        let mut best_true: Option<(String, usize, f64)> = None;
-        for (name, _, traces) in &models {
+    // Query 2: best loss within a budget.
+    if let Some(rec) = registry.answer(&Query::best_at(budget)) {
+        let pred_s = rec
+            .predicted
+            .suboptimality()
+            .expect("best_at answers in suboptimality");
+        let mut best_true: Option<(AlgorithmId, usize, f64)> = None;
+        for (algo, traces) in &measured {
             for t in &traces.traces {
                 let s = t
                     .records
@@ -145,19 +157,37 @@ pub fn table_advisor(ctx: &ReproContext, cocoa_plus: &SweepFit) -> crate::Result
                     .map(|r| r.subopt)
                     .fold(f64::INFINITY, f64::min);
                 if s.is_finite() && best_true.as_ref().map(|b| s < b.2).unwrap_or(true) {
-                    best_true = Some((name.clone(), t.machines, s));
+                    best_true = Some((*algo, t.machines, s));
                 }
             }
         }
-        let (tb_algo, tb_m, tb_s) = best_true.unwrap_or(("?".into(), 0, f64::NAN));
-        table.push(vec![2.0, rec.machines as f64, rec.predicted, tb_m as f64, tb_s]);
+        let (tb_algo, tb_m, tb_s) = match best_true {
+            Some((a, m, s)) => (a.as_str(), m, s),
+            None => ("?", 0, f64::NAN),
+        };
+        table.push(vec![2.0, rec.machines as f64, pred_s, tb_m as f64, tb_s]);
         lines.push(format!(
-            "Q2 best-loss-in-{budget}s: advisor → {} m={} (pred {:.2e}); measured best → {} m={} ({:.2e})",
-            rec.algorithm, rec.machines, rec.predicted, tb_algo, tb_m, tb_s
+            "Q2 best-loss-in-{budget}s: advisor → {} m={} (pred {pred_s:.2e}); measured best → {tb_algo} m={tb_m} ({tb_s:.2e})",
+            rec.algorithm, rec.machines
         ));
     }
 
     ctx.write_csv("table_advisor_queries.csv", &table)?;
+
+    // The full typed prediction table (one row per algorithm × m).
+    let mut pred_table =
+        Table::new(&["algorithm_id", "machines", "time_to_eps", "subopt_at_budget"]);
+    for row in registry.table(eps, budget, &Constraints::none()) {
+        let algo_idx = AlgorithmId::ALL.iter().position(|&a| a == row.algorithm);
+        pred_table.push(vec![
+            algo_idx.unwrap_or(0) as f64,
+            row.machines as f64,
+            row.time_to_eps.unwrap_or(f64::NAN),
+            row.subopt_at_budget,
+        ]);
+    }
+    ctx.write_csv("table_advisor_predictions.csv", &pred_table)?;
+
     for l in &lines {
         println!("  {l}");
     }

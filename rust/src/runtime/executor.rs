@@ -11,6 +11,11 @@ use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 use super::manifest::Manifest;
+// Vendored builds replace this import with the real crate
+// (`use xla;` plus the Cargo.toml path dependency); the default
+// `--features pjrt` build compiles against the in-tree API stub so
+// this module stays honest without network access.
+use super::xla_stub as xla;
 use crate::data::Partition;
 
 /// Typed result of one CoCoA local-solver call.

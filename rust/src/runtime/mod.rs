@@ -13,6 +13,8 @@ pub mod executor;
 #[path = "executor_stub.rs"]
 pub mod executor;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub(crate) mod xla_stub;
 
 pub use executor::{CocoaLocalOut, Engine, ExecStats, GradOut};
 pub use manifest::{ArtifactSpec, Manifest};

@@ -1,0 +1,155 @@
+//! End-to-end advisor-service tests: fit combined models on a real
+//! (small) sweep, persist them as artifacts, reload through the
+//! registry, and answer typed + wire queries — the full
+//! `hemingway fit && hemingway advise / serve` path without process
+//! boundaries. Model round-trips must be bit-identical.
+
+use hemingway::advisor::{
+    load_artifact, save_artifact, AlgorithmId, ModelRegistry, Predicted, Query,
+};
+use hemingway::config::ExperimentConfig;
+use hemingway::repro::common::load_or_fit_registry;
+use hemingway::repro::ReproContext;
+use hemingway::util::json::Json;
+
+fn small_cfg(out_tag: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        n: 512,
+        d: 32,
+        machines: vec![1, 2, 4],
+        max_iters: 120,
+        target_subopt: 1e-3,
+        out_dir: std::env::temp_dir()
+            .join(format!("hemingway_advsvc_{out_tag}"))
+            .to_string_lossy()
+            .into_owned(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fit_persist_reload_answer_is_bit_identical() {
+    let cfg = small_cfg("roundtrip");
+    let _ = std::fs::remove_dir_all(&cfg.out_dir);
+    let ctx = ReproContext::new(cfg.clone(), true).unwrap();
+    let model = ctx.fit_combined(AlgorithmId::CocoaPlus).unwrap();
+    assert!(model.conv.floor.is_finite() && model.conv.floor > 0.0);
+
+    // Persist and reload the artifact.
+    let dir = hemingway::repro::common::models_dir(&cfg);
+    let path = hemingway::advisor::artifact_path(&dir, AlgorithmId::CocoaPlus);
+    let context = cfg.model_context_hash(true);
+    save_artifact(&path, AlgorithmId::CocoaPlus, &context, &cfg.model_context(true), &model)
+        .unwrap();
+    let (algo, ctx_back, back) = load_artifact(&path).unwrap();
+    assert_eq!(algo, AlgorithmId::CocoaPlus);
+    assert_eq!(ctx_back, context);
+
+    // Bit-identical predictions across the save→load boundary.
+    for &m in &cfg.machines {
+        assert_eq!(back.iter_time(m).to_bits(), model.iter_time(m).to_bits());
+        for &t in &[0.5, 5.0, 50.0] {
+            assert_eq!(
+                back.subopt_at_time(t, m).to_bits(),
+                model.subopt_at_time(t, m).to_bits()
+            );
+        }
+        assert_eq!(
+            back.time_to_subopt(1e-2, m, cfg.advisor_iter_cap),
+            model.time_to_subopt(1e-2, m, cfg.advisor_iter_cap)
+        );
+    }
+
+    // The artifact file itself is valid, schema-tagged JSON.
+    let doc = hemingway::util::json::read_json_file(&path).unwrap();
+    assert_eq!(
+        doc.req_str("schema").unwrap(),
+        hemingway::advisor::registry::ARTIFACT_SCHEMA
+    );
+    let _ = std::fs::remove_dir_all(&cfg.out_dir);
+}
+
+#[test]
+fn advise_from_artifacts_then_serve_three_queries() {
+    let cfg = small_cfg("serve");
+    let _ = std::fs::remove_dir_all(&cfg.out_dir);
+
+    // First call fits and persists (the `hemingway fit` role)…
+    let registry = load_or_fit_registry(&cfg, true, &[AlgorithmId::CocoaPlus]).unwrap();
+    assert_eq!(registry.len(), 1);
+
+    // …second call must load the fresh artifacts instead of refitting:
+    // with the sweep answered from disk, this is near-instant, and the
+    // answers are identical objects.
+    let t0 = std::time::Instant::now();
+    let reloaded = load_or_fit_registry(&cfg, true, &[AlgorithmId::CocoaPlus]).unwrap();
+    let load_secs = t0.elapsed().as_secs_f64();
+    assert!(
+        load_secs < 2.0,
+        "artifact load took {load_secs}s — did it refit?"
+    );
+    let q_time = Query::fastest_to(1e-2);
+    let q_loss = Query::best_at(10.0);
+    for q in [q_time, q_loss] {
+        assert_eq!(registry.answer(&q), reloaded.answer(&q), "query {q:?}");
+    }
+
+    // Typed answers: seconds for fastest-to, suboptimality for best-at.
+    let rec = reloaded.answer(&q_time).expect("fastest_to answerable");
+    assert!(matches!(rec.predicted, Predicted::Seconds(t) if t > 0.0));
+    let rec = reloaded.answer(&q_loss).expect("best_at answerable");
+    assert!(matches!(rec.predicted, Predicted::Suboptimality(s) if s.is_finite()));
+
+    // One serve loop, three distinct queries, typed responses.
+    let input = b"{\"query\":\"fastest_to\",\"eps\":0.01}\n\
+                  {\"query\":\"best_at\",\"budget\":10}\n\
+                  {\"query\":\"table\",\"eps\":0.01,\"budget\":10}\n";
+    let mut out = Vec::new();
+    let stats = hemingway::advisor::serve(&reloaded, &input[..], &mut out).unwrap();
+    assert_eq!(stats.queries, 3);
+    assert_eq!(stats.errors, 0);
+    let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().lines().collect();
+    assert_eq!(lines.len(), 3);
+    assert!(lines[0].contains("\"predicted_seconds\""));
+    assert!(lines[1].contains("\"predicted_suboptimality\""));
+    let table = Json::parse(lines[2]).unwrap();
+    assert_eq!(
+        table.get("rows").and_then(Json::as_array).unwrap().len(),
+        cfg.machines.len()
+    );
+    let _ = std::fs::remove_dir_all(&cfg.out_dir);
+}
+
+#[test]
+fn stale_artifacts_are_detected_not_served() {
+    let cfg = small_cfg("stale");
+    let _ = std::fs::remove_dir_all(&cfg.out_dir);
+    let _ = load_or_fit_registry(&cfg, true, &[AlgorithmId::CocoaPlus]).unwrap();
+
+    // A config change that invalidates the fit (different machine
+    // grid) must mark the artifact stale at load time.
+    let mut changed = cfg.clone();
+    changed.machines = vec![1, 2];
+    let dir = hemingway::repro::common::models_dir(&cfg);
+    let (registry, report) = ModelRegistry::load_dir(
+        &dir,
+        Some(&changed.model_context_hash(true)),
+        changed.machines.clone(),
+        changed.advisor_iter_cap,
+    )
+    .unwrap();
+    assert!(registry.is_empty());
+    assert_eq!(report.stale.len(), 1);
+
+    // Under the original config it still loads.
+    let (registry, report) = ModelRegistry::load_dir(
+        &dir,
+        Some(&cfg.model_context_hash(true)),
+        cfg.machines.clone(),
+        cfg.advisor_iter_cap,
+    )
+    .unwrap();
+    assert_eq!(registry.len(), 1);
+    assert!(report.stale.is_empty());
+    let _ = std::fs::remove_dir_all(&cfg.out_dir);
+}

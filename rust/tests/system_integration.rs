@@ -53,19 +53,28 @@ fn full_pipeline_sweep_fit_predict() {
         assert!(f > 0.0 && f < 10.0, "f({m}) = {f}");
     }
 
-    // Combined queries behave.
+    // Combined queries behave (typed query API over the registry).
     let combined = hemingway::advisor::CombinedModel {
         ernest,
         conv: model,
         input_size: ctx.problem.data.n as f64,
     };
-    let advisor = hemingway::advisor::Advisor::new(
-        vec![("cocoa+".into(), combined)],
+    let mut registry = hemingway::advisor::ModelRegistry::new(
         ctx.cfg.machines.clone(),
+        ctx.cfg.advisor_iter_cap,
     );
-    let rec = advisor.fastest_to(1e-3).expect("advisor found nothing");
+    registry.insert(
+        hemingway::advisor::ModelKey {
+            algorithm: hemingway::advisor::AlgorithmId::CocoaPlus,
+            context: ctx.cfg.model_context_hash(true),
+        },
+        combined,
+    );
+    let rec = registry
+        .answer(&hemingway::advisor::Query::fastest_to(1e-3))
+        .expect("advisor found nothing");
     assert!(ctx.cfg.machines.contains(&rec.machines));
-    assert!(rec.predicted > 0.0);
+    assert!(rec.predicted.seconds().expect("fastest_to answers in seconds") > 0.0);
 
     // The recommendation should be within 3× of the measured best —
     // black-box models, sparse data at converged-early m values.
