@@ -12,6 +12,9 @@ cargo build --release
 # the in-tree xla API stub so the feature gate can't rot.
 cargo build --release --features pjrt
 cargo test -q
+# Barrier-mode invariants under an explicitly pinned quickcheck seed, so
+# a property failure in CI names a seed that reproduces locally.
+QUICKCHECK_SEED=20170211 cargo test -q --release --test barrier_props
 cargo fmt --check
 
 # Advisor-service smoke: fit-on-miss once, then three JSON queries
@@ -37,4 +40,19 @@ if grep -q '"ok":false' "$tmp/serve.out"; then
   echo "serve smoke returned an error response" >&2
   exit 1
 fi
+grep -q '"barrier_mode":"bsp"' "$tmp/serve.out"
 echo "serve smoke OK"
+
+# SSP smoke: the barrier-mode scenario end to end on a tiny config —
+# short iteration budget and a small advisor_iter_cap keep this well
+# inside the CI time budget.
+cat > "$tmp/ssp.json" <<EOF
+{"n": 256, "d": 16, "machines": [1, 2, 4, 8], "max_iters": 40,
+ "target_subopt": 1e-2, "advisor_iter_cap": 2000,
+ "algorithms": ["local-sgd"],
+ "barrier_modes": ["bsp", "ssp:2", "async"], "out_dir": "$tmp/ssp_out"}
+EOF
+cargo run --release --quiet -- repro --figure ssp --native --config "$tmp/ssp.json"
+grep -q '^ssp:' "$tmp/ssp_out/summaries.txt"
+test -f "$tmp/ssp_out/ssp_barrier_modes.csv"
+echo "ssp smoke OK"

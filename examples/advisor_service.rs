@@ -72,7 +72,7 @@ fn main() -> hemingway::Result<()> {
     }
     let capped = Query::fastest_to(cfg.target_subopt).with(Constraints {
         max_machines: Some(4),
-        machine_cost_weight: 0.0,
+        ..Constraints::none()
     });
     if let Some(rec) = registry.answer(&capped) {
         println!(

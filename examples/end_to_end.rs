@@ -61,11 +61,7 @@ fn main() -> hemingway::Result<()> {
 
     // ---- Phase 3: advisor queries (typed API over the registry) ----
     println!("\n=== Phase 3: advisor ===");
-    let combined = CombinedModel {
-        ernest,
-        conv,
-        input_size: ctx.problem.data.n as f64,
-    };
+    let combined = CombinedModel::new(ernest, conv, ctx.problem.data.n as f64);
     let mut registry =
         ModelRegistry::new(ctx.cfg.machines.clone(), ctx.cfg.advisor_iter_cap);
     registry.insert(

@@ -100,11 +100,8 @@ fn main() -> hemingway::Result<()> {
     );
 
     // 5. Ask the combined model a question.
-    let combined = hemingway::advisor::CombinedModel {
-        ernest,
-        conv,
-        input_size: problem.data.n as f64,
-    };
+    let combined =
+        hemingway::advisor::CombinedModel::new(ernest, conv, problem.data.n as f64);
     println!("\npredicted time to 1e-3 suboptimality:");
     for m in [1usize, 2, 4, 8, 16] {
         match combined.time_to_subopt(1e-3, m, 10_000) {

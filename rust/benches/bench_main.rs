@@ -209,6 +209,7 @@ fn main() -> hemingway::Result<()> {
         let grid = SweepGrid {
             algorithms: vec!["cocoa+".into()],
             machines: small.machines.clone(),
+            modes: vec![hemingway::cluster::BarrierMode::Bsp],
             seeds: 2,
             base_seed: small.seed,
             run: RunConfig {
@@ -342,11 +343,7 @@ fn main() -> hemingway::Result<()> {
                 algorithm: hemingway::advisor::AlgorithmId::CocoaPlus,
                 context: "bench".to_string(),
             },
-            hemingway::advisor::CombinedModel {
-                ernest,
-                conv,
-                input_size: 8192.0,
-            },
+            hemingway::advisor::CombinedModel::new(ernest, conv, 8192.0),
         );
         b.bench("advisor/fastest_to_1e-3", || {
             registry.answer(&hemingway::advisor::Query::fastest_to(1e-3));

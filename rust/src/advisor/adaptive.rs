@@ -103,11 +103,7 @@ pub fn adaptive_cocoa_plus(
                 ErnestModel::fit(&time_obs),
                 ConvergenceModel::fit(&conv_pts, FeatureLibrary::standard(), cfg.seed as u64),
             ) {
-                let combined = CombinedModel {
-                    ernest,
-                    conv,
-                    input_size: size,
-                };
+                let combined = CombinedModel::new(ernest, conv, size);
                 // Pick the m minimizing the predicted suboptimality at
                 // the end of the next frame, via the combined model's
                 // frame-decay *ratio* from the current iteration

@@ -1,40 +1,131 @@
 //! The combined model `h(t, m) = g(t / f(m), m)` (paper §3.2): compose
 //! the Ernest system model with the Hemingway convergence model to
-//! answer time-domain questions.
+//! answer time-domain questions — now per barrier mode. The base
+//! `(ernest, conv)` pair is the BSP fit (the historical artifact
+//! layout, so pre-barrier-axis artifacts still load); each additional
+//! mode carries its own pair, fitted from traces simulated under that
+//! mode: relaxed barriers buy faster iterations (a different f) at the
+//! price of stale updates (a different, slower-decaying g).
 
+use crate::cluster::BarrierMode;
 use crate::ernest::ErnestModel;
 use crate::hemingway_model::ConvergenceModel;
 use crate::util::json::Json;
 
+/// The (system, convergence) model pair for one non-BSP barrier mode.
+#[derive(Debug, Clone)]
+pub struct ModeModel {
+    pub ernest: ErnestModel,
+    pub conv: ConvergenceModel,
+}
+
 /// Ernest + Hemingway for one algorithm on one input size.
 #[derive(Debug, Clone)]
 pub struct CombinedModel {
+    /// System model under BSP.
     pub ernest: ErnestModel,
+    /// Convergence model under BSP.
     pub conv: ConvergenceModel,
     /// Input rows (the `size` fed to Ernest's features).
     pub input_size: f64,
+    /// Additional barrier modes this model can answer for, sorted by
+    /// mode. BSP is always implicitly present via the base pair.
+    pub modes: Vec<(BarrierMode, ModeModel)>,
 }
 
 impl CombinedModel {
-    /// Predicted seconds per iteration at m machines — f(m).
+    /// A BSP-only model (the historical constructor).
+    pub fn new(ernest: ErnestModel, conv: ConvergenceModel, input_size: f64) -> CombinedModel {
+        CombinedModel {
+            ernest,
+            conv,
+            input_size,
+            modes: Vec::new(),
+        }
+    }
+
+    /// Attach (or replace) a fitted mode pair. BSP is the base pair by
+    /// construction, so inserting it replaces `self.ernest`/`self.conv`
+    /// rather than growing `modes` — `fitted_modes()` never lists a
+    /// mode twice and every inserted pair is actually served.
+    pub fn insert_mode(&mut self, mode: BarrierMode, model: ModeModel) {
+        if mode.is_bsp() {
+            self.ernest = model.ernest;
+            self.conv = model.conv;
+            return;
+        }
+        match self.modes.binary_search_by(|(m, _)| m.cmp(&mode)) {
+            Ok(i) => self.modes[i].1 = model,
+            Err(i) => self.modes.insert(i, (mode, model)),
+        }
+    }
+
+    /// Every barrier mode this model can answer for (BSP first).
+    pub fn fitted_modes(&self) -> Vec<BarrierMode> {
+        let mut out = vec![BarrierMode::Bsp];
+        out.extend(self.modes.iter().map(|(m, _)| *m));
+        out
+    }
+
+    /// The (system, convergence) pair serving a mode.
+    pub fn pair(&self, mode: BarrierMode) -> Option<(&ErnestModel, &ConvergenceModel)> {
+        if mode.is_bsp() {
+            return Some((&self.ernest, &self.conv));
+        }
+        self.modes
+            .iter()
+            .find(|(m, _)| *m == mode)
+            .map(|(_, mm)| (&mm.ernest, &mm.conv))
+    }
+
+    /// Predicted seconds per iteration at m machines — f(m) under BSP.
+    /// The base methods are thin wrappers over their `_in` variants so
+    /// the BSP and `Only(Bsp)` query paths share one formula.
     pub fn iter_time(&self, machines: usize) -> f64 {
-        self.ernest.predict(machines, self.input_size)
+        self.iter_time_in(BarrierMode::Bsp, machines)
+            .expect("the BSP pair is always present")
+    }
+
+    /// f(m) under a barrier mode (None when the mode is not fitted).
+    pub fn iter_time_in(&self, mode: BarrierMode, machines: usize) -> Option<f64> {
+        self.pair(mode)
+            .map(|(ernest, _)| ernest.predict(machines, self.input_size))
     }
 
     /// Predicted suboptimality after wall-clock time t at m machines —
-    /// h(t, m) = g(t / f(m), m).
+    /// h(t, m) = g(t / f(m), m), under BSP.
     pub fn subopt_at_time(&self, t: f64, machines: usize) -> f64 {
-        let f_m = self.iter_time(machines).max(1e-9);
+        self.subopt_at_time_in(BarrierMode::Bsp, t, machines)
+            .expect("the BSP pair is always present")
+    }
+
+    /// h(t, m) under a barrier mode (None when the mode is not fitted).
+    pub fn subopt_at_time_in(&self, mode: BarrierMode, t: f64, machines: usize) -> Option<f64> {
+        let (ernest, conv) = self.pair(mode)?;
+        let f_m = ernest.predict(machines, self.input_size).max(1e-9);
         let i = (t / f_m).max(1.0);
-        self.conv.predict(i, machines as f64)
+        Some(conv.predict(i, machines as f64))
     }
 
     /// Predicted wall-clock time to reach suboptimality `eps` at m
-    /// machines (None if the model never reaches it within `cap` iters).
+    /// machines under BSP (None if the model never reaches it within
+    /// `cap` iterations).
     pub fn time_to_subopt(&self, eps: f64, machines: usize, cap: usize) -> Option<f64> {
-        self.conv
-            .iters_to(eps, machines as f64, cap)
-            .map(|i| i as f64 * self.iter_time(machines))
+        self.time_to_subopt_in(BarrierMode::Bsp, eps, machines, cap)
+    }
+
+    /// Time-to-ε under a barrier mode (None when the mode is not
+    /// fitted, or the goal is unreachable within `cap` iterations).
+    pub fn time_to_subopt_in(
+        &self,
+        mode: BarrierMode,
+        eps: f64,
+        machines: usize,
+        cap: usize,
+    ) -> Option<f64> {
+        let (ernest, conv) = self.pair(mode)?;
+        conv.iters_to(eps, machines as f64, cap)
+            .map(|i| i as f64 * ernest.predict(machines, self.input_size))
     }
 
     /// Predicted end/start suboptimality ratio over one `frame_seconds`
@@ -53,16 +144,34 @@ impl CombinedModel {
         Some((self.conv.predict_ln(i0 + iters, m) - self.conv.predict_ln(i0, m)).exp())
     }
 
-    /// Serialize for a model artifact (`util::json`).
+    /// Serialize for a model artifact (`util::json`). The `modes`
+    /// array is omitted when empty, keeping BSP-only artifacts in the
+    /// pre-barrier-axis layout.
     pub fn to_json(&self) -> crate::Result<Json> {
-        Ok(Json::object(vec![
-            ("input_size", Json::num(self.input_size)),
-            ("ernest", self.ernest.to_json()?),
-            ("convergence", self.conv.to_json()?),
-        ]))
+        let mut fields = Vec::new();
+        fields.push(("input_size", Json::num(self.input_size)));
+        fields.push(("ernest", self.ernest.to_json()?));
+        fields.push(("convergence", self.conv.to_json()?));
+        if !self.modes.is_empty() {
+            let entries = self
+                .modes
+                .iter()
+                .map(|(mode, mm)| {
+                    Ok(Json::object(vec![
+                        ("barrier_mode", Json::str(mode.as_str())),
+                        ("ernest", mm.ernest.to_json()?),
+                        ("convergence", mm.conv.to_json()?),
+                    ]))
+                })
+                .collect::<crate::Result<Vec<Json>>>()?;
+            fields.push(("modes", Json::Array(entries)));
+        }
+        Ok(Json::object(fields))
     }
 
-    /// Rebuild from the artifact form.
+    /// Rebuild from the artifact form. A `modes` entry naming an
+    /// unknown barrier mode is an error — the registry must skip such
+    /// an artifact rather than serve a subset of what it promises.
     pub fn from_json(doc: &Json) -> crate::Result<CombinedModel> {
         let ernest = doc
             .get("ernest")
@@ -70,11 +179,35 @@ impl CombinedModel {
         let conv = doc
             .get("convergence")
             .ok_or_else(|| crate::err!("model artifact is missing the 'convergence' object"))?;
-        Ok(CombinedModel {
+        let mut model = CombinedModel {
             ernest: ErnestModel::from_json(ernest)?,
             conv: ConvergenceModel::from_json(conv)?,
             input_size: doc.req_f64("input_size")?,
-        })
+            modes: Vec::new(),
+        };
+        if let Some(entries) = doc.get("modes").and_then(Json::as_array) {
+            for entry in entries {
+                let mode = crate::cluster::BarrierMode::parse(entry.req_str("barrier_mode")?)?;
+                crate::ensure!(
+                    !mode.is_bsp(),
+                    "model artifact lists bsp under 'modes'; bsp is the base pair"
+                );
+                let ernest = entry
+                    .get("ernest")
+                    .ok_or_else(|| crate::err!("mode entry is missing the 'ernest' object"))?;
+                let conv = entry.get("convergence").ok_or_else(|| {
+                    crate::err!("mode entry is missing the 'convergence' object")
+                })?;
+                model.insert_mode(
+                    mode,
+                    ModeModel {
+                        ernest: ErnestModel::from_json(ernest)?,
+                        conv: ConvergenceModel::from_json(conv)?,
+                    },
+                );
+            }
+        }
+        Ok(model)
     }
 }
 
@@ -84,34 +217,43 @@ mod tests {
     use crate::ernest::Observation;
     use crate::hemingway_model::{ConvPoint, ConvergenceModel, FeatureLibrary};
 
-    fn combined() -> CombinedModel {
-        // f(m) = 0.2 + 0.8/m  (compute-dominated at small m)
+    fn fit_pair(decay: f64, time_base: f64) -> (ErnestModel, ConvergenceModel) {
+        // f(m) = time_base·(0.2 + 0.8/m), g(i, m) = 0.5 exp(−decay·i/m)
         let obs: Vec<Observation> = [1usize, 2, 4, 8, 16, 32]
             .iter()
             .map(|&m| Observation {
                 machines: m,
                 size: 8192.0,
-                time: 0.2 + 0.8 / m as f64,
+                time: time_base * (0.2 + 0.8 / m as f64),
             })
             .collect();
         let ernest = ErnestModel::fit(&obs).unwrap();
-        // g(i, m) = 0.5 exp(−0.8 i / m)
         let mut pts = Vec::new();
         for &m in &[1.0f64, 2.0, 4.0, 8.0, 16.0, 32.0] {
             for i in 1..=80 {
                 pts.push(ConvPoint {
                     iter: i as f64,
                     machines: m,
-                    subopt: 0.5 * (-0.8 * i as f64 / m).exp(),
+                    subopt: 0.5 * (-decay * i as f64 / m).exp(),
                 });
             }
         }
         let conv = ConvergenceModel::fit(&pts, FeatureLibrary::standard(), 1).unwrap();
-        CombinedModel {
-            ernest,
-            conv,
-            input_size: 8192.0,
-        }
+        (ernest, conv)
+    }
+
+    fn combined() -> CombinedModel {
+        let (ernest, conv) = fit_pair(0.8, 1.0);
+        CombinedModel::new(ernest, conv, 8192.0)
+    }
+
+    /// The BSP pair plus an async mode: 2× faster iterations, 2×
+    /// slower decay.
+    fn combined_with_async() -> CombinedModel {
+        let mut c = combined();
+        let (ernest, conv) = fit_pair(0.4, 0.5);
+        c.insert_mode(BarrierMode::Async, ModeModel { ernest, conv });
+        c
     }
 
     #[test]
@@ -169,12 +311,61 @@ mod tests {
     }
 
     #[test]
+    fn mode_pairs_route_predictions() {
+        let c = combined_with_async();
+        assert_eq!(
+            c.fitted_modes(),
+            vec![BarrierMode::Bsp, BarrierMode::Async]
+        );
+        // BSP routing equals the base methods bit for bit.
+        for &m in &[1usize, 4, 32] {
+            assert_eq!(
+                c.iter_time_in(BarrierMode::Bsp, m).unwrap().to_bits(),
+                c.iter_time(m).to_bits()
+            );
+            assert_eq!(
+                c.subopt_at_time_in(BarrierMode::Bsp, 7.5, m).unwrap().to_bits(),
+                c.subopt_at_time(7.5, m).to_bits()
+            );
+            assert_eq!(
+                c.time_to_subopt_in(BarrierMode::Bsp, 1e-3, m, 100_000),
+                c.time_to_subopt(1e-3, m, 100_000)
+            );
+        }
+        // Async: iterations are ~2× faster but decay ~2× slower.
+        let f_bsp = c.iter_time_in(BarrierMode::Bsp, 4).unwrap();
+        let f_asn = c.iter_time_in(BarrierMode::Async, 4).unwrap();
+        assert!(f_asn < f_bsp * 0.7, "f_async={f_asn} f_bsp={f_bsp}");
+        let t_bsp = c.time_to_subopt_in(BarrierMode::Bsp, 1e-3, 4, 100_000).unwrap();
+        let t_asn = c.time_to_subopt_in(BarrierMode::Async, 1e-3, 4, 100_000).unwrap();
+        // 2× time speedup and 2× iteration inflation roughly cancel.
+        assert!((t_asn / t_bsp - 1.0).abs() < 0.35, "{t_asn} vs {t_bsp}");
+        // Unfitted modes answer nothing.
+        assert_eq!(
+            c.iter_time_in(BarrierMode::Ssp { staleness: 2 }, 4),
+            None
+        );
+    }
+
+    #[test]
+    fn inserting_bsp_replaces_the_base_pair() {
+        let mut c = combined_with_async();
+        let (ernest, conv) = fit_pair(1.6, 2.0);
+        let expected = ernest.predict(4, c.input_size);
+        c.insert_mode(BarrierMode::Bsp, ModeModel { ernest, conv });
+        // No duplicate bsp entry, and the base predictions moved.
+        assert_eq!(c.fitted_modes(), vec![BarrierMode::Bsp, BarrierMode::Async]);
+        assert_eq!(c.iter_time(4).to_bits(), expected.to_bits());
+    }
+
+    #[test]
     fn json_roundtrip_preserves_predictions() {
-        let c = combined();
+        let c = combined_with_async();
         let text = c.to_json().unwrap().to_pretty();
         let doc = crate::util::json::Json::parse(&text).unwrap();
         let back = CombinedModel::from_json(&doc).unwrap();
         assert_eq!(back.input_size.to_bits(), c.input_size.to_bits());
+        assert_eq!(back.fitted_modes(), c.fitted_modes());
         for &m in &[1usize, 4, 32] {
             assert_eq!(back.iter_time(m).to_bits(), c.iter_time(m).to_bits());
             assert_eq!(
@@ -185,6 +376,29 @@ mod tests {
                 back.time_to_subopt(1e-3, m, 100_000),
                 c.time_to_subopt(1e-3, m, 100_000)
             );
+            for mode in c.fitted_modes() {
+                assert_eq!(
+                    back.iter_time_in(mode, m).unwrap().to_bits(),
+                    c.iter_time_in(mode, m).unwrap().to_bits()
+                );
+                assert_eq!(
+                    back.subopt_at_time_in(mode, 12.5, m).unwrap().to_bits(),
+                    c.subopt_at_time_in(mode, 12.5, m).unwrap().to_bits()
+                );
+            }
         }
+    }
+
+    #[test]
+    fn artifact_with_unknown_mode_is_rejected() {
+        let c = combined_with_async();
+        let text = c
+            .to_json()
+            .unwrap()
+            .to_pretty()
+            .replace("\"async\"", "\"quantum\"");
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        let err = CombinedModel::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("barrier mode"), "{err}");
     }
 }

@@ -7,8 +7,51 @@
 //! Every type here has a JSON wire form (`util::json`) so the same
 //! queries flow through the `serve` loop, the CLI and the library API.
 
+use crate::cluster::BarrierMode;
 use crate::optim::AlgorithmId;
 use crate::util::json::Json;
+
+/// Which barrier modes a query's search may range over. The wire
+/// default is `Only(Bsp)` — a query that does not mention barrier
+/// modes gets exactly the pre-barrier-axis answer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ModeFilter {
+    /// Search a single mode.
+    Only(BarrierMode),
+    /// Search every mode the serving models were fitted for.
+    Any,
+}
+
+impl Default for ModeFilter {
+    fn default() -> Self {
+        ModeFilter::Only(BarrierMode::Bsp)
+    }
+}
+
+impl ModeFilter {
+    pub fn admits(self, mode: BarrierMode) -> bool {
+        match self {
+            ModeFilter::Only(only) => only == mode,
+            ModeFilter::Any => true,
+        }
+    }
+
+    /// Wire form: a mode string, or `any`.
+    pub fn as_str(&self) -> String {
+        match self {
+            ModeFilter::Only(mode) => mode.as_str(),
+            ModeFilter::Any => "any".to_string(),
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<ModeFilter> {
+        if s.trim() == "any" {
+            Ok(ModeFilter::Any)
+        } else {
+            BarrierMode::parse(s).map(ModeFilter::Only)
+        }
+    }
+}
 
 /// Optional constraints a query carries.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -21,6 +64,8 @@ pub struct Constraints {
     /// best-at-budget treats the budget as a cost budget (time
     /// available at m machines shrinks to `budget / (1 + w·m)`).
     pub machine_cost_weight: f64,
+    /// Barrier modes the search may recommend (default: BSP only).
+    pub barrier_mode: ModeFilter,
 }
 
 impl Constraints {
@@ -61,9 +106,16 @@ impl Constraints {
                 .as_f64()
                 .ok_or_else(|| crate::err!("machine_cost_weight must be a number"))?,
         };
+        let barrier_mode = match doc.get("barrier_mode") {
+            None => ModeFilter::default(),
+            Some(v) => ModeFilter::parse(v.as_str().ok_or_else(|| {
+                crate::err!("barrier_mode must be a string (a mode name or 'any')")
+            })?)?,
+        };
         let constraints = Constraints {
             max_machines,
             machine_cost_weight,
+            barrier_mode,
         };
         constraints.validate()?;
         Ok(constraints)
@@ -89,6 +141,9 @@ impl Constraints {
                 "machine_cost_weight".into(),
                 Json::num(self.machine_cost_weight),
             ));
+        }
+        if self.barrier_mode != ModeFilter::default() {
+            fields.push(("barrier_mode".into(), Json::str(self.barrier_mode.as_str())));
         }
     }
 }
@@ -228,6 +283,8 @@ impl Predicted {
 pub struct Recommendation {
     pub algorithm: AlgorithmId,
     pub machines: usize,
+    /// The barrier mode the winning configuration runs under.
+    pub barrier_mode: BarrierMode,
     /// The raw model prediction for the winning configuration.
     pub predicted: Predicted,
     /// The objective the search actually ranked: equals the raw
@@ -243,17 +300,19 @@ impl Recommendation {
         Json::object(vec![
             ("algorithm", Json::str(self.algorithm.as_str())),
             ("machines", Json::num(self.machines as f64)),
+            ("barrier_mode", Json::str(self.barrier_mode.as_str())),
             (self.predicted.field_name(), Json::num(self.predicted.value())),
         ])
     }
 }
 
-/// One row of the advisor's full prediction table (per algorithm × m),
-/// replacing the old anonymous 4-tuple.
+/// One row of the advisor's full prediction table (per algorithm × m
+/// × barrier mode), replacing the old anonymous 4-tuple.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PredictionRow {
     pub algorithm: AlgorithmId,
     pub machines: usize,
+    pub barrier_mode: BarrierMode,
     /// Predicted seconds to the ε goal (None if unreachable).
     pub time_to_eps: Option<f64>,
     /// Predicted suboptimality at the time budget.
@@ -265,6 +324,7 @@ impl PredictionRow {
         Json::object(vec![
             ("algorithm", Json::str(self.algorithm.as_str())),
             ("machines", Json::num(self.machines as f64)),
+            ("barrier_mode", Json::str(self.barrier_mode.as_str())),
             (
                 "time_to_eps",
                 self.time_to_eps.map(Json::num).unwrap_or(Json::Null),
@@ -284,11 +344,36 @@ mod tests {
         let q2 = Query::best_at(20.0).with(Constraints {
             max_machines: Some(32),
             machine_cost_weight: 0.01,
+            barrier_mode: ModeFilter::default(),
         });
-        for q in [q1, q2] {
+        let q3 = Query::fastest_to(1e-3).with(Constraints {
+            max_machines: None,
+            machine_cost_weight: 0.0,
+            barrier_mode: ModeFilter::Any,
+        });
+        let q4 = Query::best_at(5.0).with(Constraints {
+            max_machines: None,
+            machine_cost_weight: 0.0,
+            barrier_mode: ModeFilter::Only(BarrierMode::Ssp { staleness: 4 }),
+        });
+        for q in [q1, q2, q3, q4] {
             let doc = Json::parse(&q.to_json().to_string()).unwrap();
             assert_eq!(Query::from_json(&doc).unwrap(), q);
         }
+    }
+
+    #[test]
+    fn legacy_wire_queries_default_to_bsp() {
+        // Pre-barrier-axis clients omit the field: exactly BSP-only.
+        let doc = Json::parse(r#"{"query":"fastest_to","eps":1e-4}"#).unwrap();
+        let q = Query::from_json(&doc).unwrap();
+        assert_eq!(
+            q.constraints().barrier_mode,
+            ModeFilter::Only(BarrierMode::Bsp)
+        );
+        // And the default filter serializes to nothing (byte-stable
+        // wire form for legacy queries).
+        assert!(!q.to_json().to_string().contains("barrier_mode"));
     }
 
     #[test]
@@ -300,6 +385,8 @@ mod tests {
             r#"{"query": "fastest_to", "eps": 1e-4, "machine_cost_weight": -1}"#,
             r#"{"query": "fastest_to", "eps": 1e-4, "max_machines": -8}"#,
             r#"{"query": "fastest_to", "eps": 1e-4, "max_machines": "8"}"#,
+            r#"{"query": "fastest_to", "eps": 1e-4, "barrier_mode": "quantum"}"#,
+            r#"{"query": "fastest_to", "eps": 1e-4, "barrier_mode": 3}"#,
             r#"{"query": "best_at", "budget": 0}"#,
             r#"{"query": "nope", "eps": 1e-4}"#,
         ] {
@@ -313,11 +400,26 @@ mod tests {
         let c = Constraints {
             max_machines: Some(8),
             machine_cost_weight: 0.5,
+            barrier_mode: ModeFilter::default(),
         };
         assert!(c.admits(8) && !c.admits(16));
         assert!(Constraints::none().admits(usize::MAX));
         assert_eq!(c.weighted_seconds(10.0, 2), 20.0);
         assert_eq!(c.effective_budget(20.0, 2), 10.0);
+    }
+
+    #[test]
+    fn mode_filter_admission() {
+        let bsp_only = ModeFilter::default();
+        assert!(bsp_only.admits(BarrierMode::Bsp));
+        assert!(!bsp_only.admits(BarrierMode::Async));
+        assert!(ModeFilter::Any.admits(BarrierMode::Ssp { staleness: 7 }));
+        assert_eq!(ModeFilter::parse("any").unwrap(), ModeFilter::Any);
+        assert_eq!(
+            ModeFilter::parse("ssp:2").unwrap(),
+            ModeFilter::Only(BarrierMode::Ssp { staleness: 2 })
+        );
+        assert!(ModeFilter::parse("sometimes").is_err());
     }
 
     #[test]
@@ -333,10 +435,11 @@ mod tests {
     }
 
     #[test]
-    fn recommendation_json_carries_the_unit() {
+    fn recommendation_json_carries_the_unit_and_mode() {
         let rec = Recommendation {
             algorithm: AlgorithmId::CocoaPlus,
             machines: 16,
+            barrier_mode: BarrierMode::Ssp { staleness: 2 },
             predicted: Predicted::Seconds(12.5),
             objective: 12.5,
         };
@@ -344,5 +447,6 @@ mod tests {
         assert_eq!(doc.req_f64("predicted_seconds").unwrap(), 12.5);
         assert!(doc.get("predicted_suboptimality").is_none());
         assert_eq!(doc.req_str("algorithm").unwrap(), "cocoa+");
+        assert_eq!(doc.req_str("barrier_mode").unwrap(), "ssp:2");
     }
 }

@@ -90,25 +90,40 @@ impl ModelRegistry {
         self.models.retain(|k, _| keep(k));
     }
 
-    /// Answer a typed query over every model × machine-grid point.
+    /// Answer a typed query over every model × machine-grid point ×
+    /// admitted barrier mode. A model only competes in the modes it
+    /// was fitted for; the default `Only(Bsp)` filter reproduces the
+    /// pre-barrier-axis search exactly.
     pub fn answer(&self, query: &Query) -> Option<Recommendation> {
         match *query {
             Query::FastestTo { eps, constraints } => {
                 let mut best: Option<Recommendation> = None;
                 for (key, model) in &self.models {
-                    for &m in &self.machine_grid {
-                        if !constraints.admits(m) {
+                    for mode in model.fitted_modes() {
+                        if !constraints.barrier_mode.admits(mode) {
                             continue;
                         }
-                        if let Some(t) = model.time_to_subopt(eps, m, self.iter_cap) {
-                            let objective = constraints.weighted_seconds(t, m);
-                            if best.as_ref().map(|b| objective < b.objective).unwrap_or(true) {
-                                best = Some(Recommendation {
-                                    algorithm: key.algorithm,
-                                    machines: m,
-                                    predicted: Predicted::Seconds(t),
-                                    objective,
-                                });
+                        for &m in &self.machine_grid {
+                            if !constraints.admits(m) {
+                                continue;
+                            }
+                            if let Some(t) =
+                                model.time_to_subopt_in(mode, eps, m, self.iter_cap)
+                            {
+                                let objective = constraints.weighted_seconds(t, m);
+                                if best
+                                    .as_ref()
+                                    .map(|b| objective < b.objective)
+                                    .unwrap_or(true)
+                                {
+                                    best = Some(Recommendation {
+                                        algorithm: key.algorithm,
+                                        machines: m,
+                                        barrier_mode: mode,
+                                        predicted: Predicted::Seconds(t),
+                                        objective,
+                                    });
+                                }
                             }
                         }
                     }
@@ -118,20 +133,33 @@ impl ModelRegistry {
             Query::BestAt { budget, constraints } => {
                 let mut best: Option<Recommendation> = None;
                 for (key, model) in &self.models {
-                    for &m in &self.machine_grid {
-                        if !constraints.admits(m) {
+                    for mode in model.fitted_modes() {
+                        if !constraints.barrier_mode.admits(mode) {
                             continue;
                         }
-                        let s = model.subopt_at_time(constraints.effective_budget(budget, m), m);
-                        if s.is_finite()
-                            && best.as_ref().map(|b| s < b.objective).unwrap_or(true)
-                        {
-                            best = Some(Recommendation {
-                                algorithm: key.algorithm,
-                                machines: m,
-                                predicted: Predicted::Suboptimality(s),
-                                objective: s,
-                            });
+                        for &m in &self.machine_grid {
+                            if !constraints.admits(m) {
+                                continue;
+                            }
+                            let s = match model.subopt_at_time_in(
+                                mode,
+                                constraints.effective_budget(budget, m),
+                                m,
+                            ) {
+                                Some(s) => s,
+                                None => continue,
+                            };
+                            if s.is_finite()
+                                && best.as_ref().map(|b| s < b.objective).unwrap_or(true)
+                            {
+                                best = Some(Recommendation {
+                                    algorithm: key.algorithm,
+                                    machines: m,
+                                    barrier_mode: mode,
+                                    predicted: Predicted::Suboptimality(s),
+                                    objective: s,
+                                });
+                            }
                         }
                     }
                 }
@@ -141,21 +169,30 @@ impl ModelRegistry {
     }
 
     /// Full prediction table (one typed row per algorithm × admitted
-    /// m). Inadmissible machine counts are skipped before the
-    /// (expensive) g-inversion, not filtered afterwards.
+    /// m × admitted fitted mode). Inadmissible machine counts are
+    /// skipped before the (expensive) g-inversion, not filtered
+    /// afterwards.
     pub fn table(&self, eps: f64, budget: f64, constraints: &Constraints) -> Vec<PredictionRow> {
         let mut rows = Vec::new();
         for (key, model) in &self.models {
-            for &m in &self.machine_grid {
-                if !constraints.admits(m) {
+            for mode in model.fitted_modes() {
+                if !constraints.barrier_mode.admits(mode) {
                     continue;
                 }
-                rows.push(PredictionRow {
-                    algorithm: key.algorithm,
-                    machines: m,
-                    time_to_eps: model.time_to_subopt(eps, m, self.iter_cap),
-                    subopt_at_budget: model.subopt_at_time(budget, m),
-                });
+                for &m in &self.machine_grid {
+                    if !constraints.admits(m) {
+                        continue;
+                    }
+                    rows.push(PredictionRow {
+                        algorithm: key.algorithm,
+                        machines: m,
+                        barrier_mode: mode,
+                        time_to_eps: model.time_to_subopt_in(mode, eps, m, self.iter_cap),
+                        subopt_at_budget: model
+                            .subopt_at_time_in(mode, budget, m)
+                            .unwrap_or(f64::NAN),
+                    });
+                }
             }
         }
         rows
@@ -289,11 +326,11 @@ mod tests {
                 });
             }
         }
-        CombinedModel {
-            ernest: ErnestModel::fit(&obs).unwrap(),
-            conv: ConvergenceModel::fit(&pts, FeatureLibrary::standard(), 1).unwrap(),
-            input_size: 1000.0,
-        }
+        CombinedModel::new(
+            ErnestModel::fit(&obs).unwrap(),
+            ConvergenceModel::fit(&pts, FeatureLibrary::standard(), 1).unwrap(),
+            1000.0,
+        )
     }
 
     fn registry() -> ModelRegistry {
@@ -352,7 +389,7 @@ mod tests {
         let capped = r
             .answer(&Query::fastest_to(1e-3).with(Constraints {
                 max_machines: Some(2),
-                machine_cost_weight: 0.0,
+                ..Constraints::none()
             }))
             .unwrap();
         assert!(capped.machines <= 2);
@@ -372,8 +409,8 @@ mod tests {
         // grid (or keeps it if m was already minimal).
         let priced = r
             .answer(&Query::fastest_to(1e-3).with(Constraints {
-                max_machines: None,
                 machine_cost_weight: 100.0,
+                ..Constraints::none()
             }))
             .unwrap();
         assert!(priced.machines <= free.machines);
@@ -393,7 +430,7 @@ mod tests {
             5.0,
             &Constraints {
                 max_machines: Some(2),
-                machine_cost_weight: 0.0,
+                ..Constraints::none()
             },
         );
         assert_eq!(capped.len(), 2 * 2);
@@ -408,6 +445,95 @@ mod tests {
         // With cocoa+ retained out, the slower algorithm must win.
         let rec = r.answer(&Query::fastest_to(1e-3)).unwrap();
         assert_eq!(rec.algorithm, AlgorithmId::Cocoa);
+    }
+
+    /// Registry whose cocoa model also carries an Async pair: same
+    /// convergence, 3× faster iterations — Async strictly dominates.
+    fn registry_with_modes() -> ModelRegistry {
+        use crate::advisor::combined::ModeModel;
+        let mut r = registry();
+        let mut cocoa = r.get(AlgorithmId::Cocoa, "ctx").unwrap().clone();
+        let mut fast = cocoa.ernest.clone();
+        for t in fast.theta.iter_mut() {
+            *t /= 3.0;
+        }
+        cocoa.insert_mode(
+            crate::cluster::BarrierMode::Async,
+            ModeModel {
+                ernest: fast,
+                conv: cocoa.conv.clone(),
+            },
+        );
+        r.insert(
+            ModelKey {
+                algorithm: AlgorithmId::Cocoa,
+                context: "ctx".into(),
+            },
+            cocoa,
+        );
+        r
+    }
+
+    #[test]
+    fn mode_search_beats_pure_bsp_when_admitted() {
+        use crate::advisor::query::ModeFilter;
+        use crate::cluster::BarrierMode;
+        let r = registry_with_modes();
+        let bsp_only = r.answer(&Query::fastest_to(1e-3)).unwrap();
+        assert_eq!(bsp_only.barrier_mode, BarrierMode::Bsp);
+        let any = r
+            .answer(&Query::fastest_to(1e-3).with(Constraints {
+                barrier_mode: ModeFilter::Any,
+                ..Constraints::none()
+            }))
+            .unwrap();
+        // The Any search includes every BSP candidate, so it can only
+        // do better — and here the Async pair is strictly faster, so
+        // the recommended (mode) must actually differ.
+        assert!(any.objective <= bsp_only.objective);
+        assert_eq!(any.barrier_mode, BarrierMode::Async);
+        assert_ne!(
+            (any.machines, any.barrier_mode),
+            (bsp_only.machines, bsp_only.barrier_mode)
+        );
+        // A single-mode filter pins the recommendation to that mode.
+        let only_async = r
+            .answer(&Query::fastest_to(1e-3).with(Constraints {
+                barrier_mode: ModeFilter::Only(BarrierMode::Async),
+                ..Constraints::none()
+            }))
+            .unwrap();
+        assert_eq!(only_async.barrier_mode, BarrierMode::Async);
+        assert_eq!(only_async.algorithm, AlgorithmId::Cocoa);
+        // A mode nobody fitted answers nothing.
+        assert!(r
+            .answer(&Query::fastest_to(1e-3).with(Constraints {
+                barrier_mode: ModeFilter::Only(BarrierMode::Ssp { staleness: 9 }),
+                ..Constraints::none()
+            }))
+            .is_none());
+    }
+
+    #[test]
+    fn table_expands_over_fitted_modes() {
+        use crate::advisor::query::ModeFilter;
+        let r = registry_with_modes();
+        // BSP-only default: one row per algorithm × m, as before.
+        let rows = r.table(1e-3, 5.0, &Constraints::none());
+        assert_eq!(rows.len(), 2 * 5);
+        // Any: cocoa contributes its async rows too.
+        let all = r.table(
+            1e-3,
+            5.0,
+            &Constraints {
+                barrier_mode: ModeFilter::Any,
+                ..Constraints::none()
+            },
+        );
+        assert_eq!(all.len(), 3 * 5);
+        assert!(all
+            .iter()
+            .any(|row| row.barrier_mode == crate::cluster::BarrierMode::Async));
     }
 
     #[test]
@@ -433,6 +559,143 @@ mod tests {
             ModelRegistry::load_dir(&dir, Some("other"), vec![1, 2], 100).unwrap();
         assert!(empty.is_empty());
         assert_eq!(report.stale.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fuzz_artifact_roundtrip_with_mode_fields() {
+        use crate::advisor::combined::ModeModel;
+        use crate::cluster::BarrierMode;
+        use crate::hemingway_model::LassoFit;
+        use crate::util::quickcheck::{forall_ok, Gen};
+
+        fn random_conv(g: &mut Gen) -> ConvergenceModel {
+            let library = FeatureLibrary::standard();
+            let coef = g.vec_f64(library.len(), -2.0, 2.0);
+            ConvergenceModel {
+                library,
+                fit: LassoFit {
+                    coef,
+                    intercept: g.f64_in(-5.0, 5.0),
+                    alpha: g.f64_in(1e-4, 1.0),
+                    iterations: g.usize_in(1, 500),
+                },
+                train_r2: g.f64_in(0.0, 1.0),
+                n_train: g.usize_in(12, 4000),
+                floor: g.f64_in(1e-12, 1e-2),
+            }
+        }
+
+        fn random_model(g: &mut Gen) -> CombinedModel {
+            let ernest = ErnestModel {
+                theta: [
+                    g.f64_in(0.0, 1.0),
+                    g.f64_in(0.0, 1e-3),
+                    g.f64_in(0.0, 0.1),
+                    g.f64_in(0.0, 0.01),
+                ],
+                train_rmse: g.f64_in(0.0, 0.1),
+            };
+            let mut model = CombinedModel::new(ernest, random_conv(g), g.f64_in(16.0, 1e6));
+            if g.bool() {
+                let mode = if g.bool() {
+                    BarrierMode::Async
+                } else {
+                    BarrierMode::Ssp { staleness: g.usize_in(0, 16) }
+                };
+                let ernest = ErnestModel {
+                    theta: [g.f64_in(0.0, 1.0), 0.0, 0.0, 0.0],
+                    train_rmse: 0.0,
+                };
+                model.insert_mode(mode, ModeModel { ernest, conv: random_conv(g) });
+            }
+            model
+        }
+
+        let dir = std::env::temp_dir().join("hemingway_registry_fuzz");
+        let _ = std::fs::remove_dir_all(&dir);
+        forall_ok(
+            "artifact save/load round-trips bit-identically",
+            30,
+            |g| (g.usize_in(0, 1 << 20), random_model(g)),
+            |&salt, model| {
+                let path = dir.join(format!("fuzz_{salt}.json"));
+                let ctx = format!("ctx-{salt}");
+                save_artifact(&path, AlgorithmId::LocalSgd, &ctx, "detail", model)
+                    .map_err(|e| e.to_string())?;
+                let (algo, ctx_back, back) =
+                    load_artifact(&path).map_err(|e| e.to_string())?;
+                if algo != AlgorithmId::LocalSgd || ctx_back != ctx {
+                    return Err("identity fields did not round-trip".into());
+                }
+                // Every float comes back bit for bit, including the
+                // per-mode pairs.
+                for (a, b) in model.ernest.theta.iter().zip(&back.ernest.theta) {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("theta {a} != {b}"));
+                    }
+                }
+                for (a, b) in model.conv.fit.coef.iter().zip(&back.conv.fit.coef) {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("conv coef {a} != {b}"));
+                    }
+                }
+                if model.conv.floor.to_bits() != back.conv.floor.to_bits() {
+                    return Err("floor drifted".into());
+                }
+                if back.fitted_modes() != model.fitted_modes() {
+                    return Err(format!("modes drifted: {:?}", back.fitted_modes()));
+                }
+                for mode in model.fitted_modes() {
+                    for &m in &[1usize, 4, 32] {
+                        let a = model.iter_time_in(mode, m).unwrap();
+                        let b = back.iter_time_in(mode, m).unwrap();
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!("iter_time_in({mode}, {m}): {a} != {b}"));
+                        }
+                        let a = model.subopt_at_time_in(mode, 3.5, m).unwrap();
+                        let b = back.subopt_at_time_in(mode, 3.5, m).unwrap();
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!("subopt_at_time_in({mode}, {m}): {a} != {b}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn artifact_with_unknown_mode_is_skipped_not_served() {
+        use crate::advisor::combined::ModeModel;
+        use crate::cluster::BarrierMode;
+        let dir = std::env::temp_dir().join("hemingway_registry_badmode");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut r = registry();
+        let mut cocoa = r.get(AlgorithmId::Cocoa, "ctx").unwrap().clone();
+        let pair = ModeModel {
+            ernest: cocoa.ernest.clone(),
+            conv: cocoa.conv.clone(),
+        };
+        cocoa.insert_mode(BarrierMode::Async, pair);
+        r.insert(
+            ModelKey { algorithm: AlgorithmId::Cocoa, context: "ctx".into() },
+            cocoa,
+        );
+        r.save(&dir, "detail").unwrap();
+        // A future (or corrupted) artifact naming a mode this build
+        // does not know must be skipped with a clear report — never
+        // silently served without the mode.
+        let path = artifact_path(&dir, AlgorithmId::Cocoa);
+        let text = std::fs::read_to_string(&path).unwrap().replace("async", "quantum");
+        std::fs::write(&path, text).unwrap();
+        let (back, report) =
+            ModelRegistry::load_dir(&dir, Some("ctx"), vec![1, 2, 4], 1000).unwrap();
+        assert_eq!(back.len(), 1, "only cocoa_plus should survive");
+        assert!(back.get(AlgorithmId::Cocoa, "ctx").is_none());
+        assert_eq!(report.invalid.len(), 1);
+        assert!(report.invalid[0].1.contains("barrier mode"), "{}", report.invalid[0].1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -113,6 +113,12 @@ pub fn handle_line(registry: &ModelRegistry, line: &str) -> Json {
                         ("input_size", Json::num(model.input_size)),
                         ("train_r2", Json::num(model.conv.train_r2)),
                         ("floor", Json::num(model.conv.floor)),
+                        (
+                            "barrier_modes",
+                            Json::array(
+                                model.fitted_modes().iter().map(|m| Json::str(m.as_str())),
+                            ),
+                        ),
                     ])
                 })
                 .collect();
@@ -192,11 +198,37 @@ mod tests {
                 algorithm: AlgorithmId::CocoaPlus,
                 context: "golden".into(),
             },
-            CombinedModel {
-                ernest,
-                conv,
-                input_size: 1000.0,
+            CombinedModel::new(ernest, conv, 1000.0),
+        );
+        registry
+    }
+
+    /// The golden registry plus an async pair on the same model:
+    /// identical g, but f(m) = 0.25 (2× faster iterations).
+    fn golden_registry_with_async() -> ModelRegistry {
+        use crate::advisor::combined::ModeModel;
+        use crate::cluster::BarrierMode;
+        let mut registry = golden_registry();
+        let mut model = registry
+            .get(AlgorithmId::CocoaPlus, "golden")
+            .unwrap()
+            .clone();
+        model.insert_mode(
+            BarrierMode::Async,
+            ModeModel {
+                ernest: ErnestModel {
+                    theta: [0.25, 0.0, 0.0, 0.0],
+                    train_rmse: 0.0,
+                },
+                conv: model.conv.clone(),
             },
+        );
+        registry.insert(
+            ModelKey {
+                algorithm: AlgorithmId::CocoaPlus,
+                context: "golden".into(),
+            },
+            model,
         );
         registry
     }
@@ -211,7 +243,7 @@ mod tests {
         let resp = handle_line(&registry, r#"{"query":"fastest_to","eps":0.02}"#);
         assert_eq!(
             resp.to_string(),
-            r#"{"ok":true,"query":"fastest_to","algorithm":"cocoa+","machines":1,"predicted_seconds":2}"#
+            r#"{"ok":true,"query":"fastest_to","algorithm":"cocoa+","machines":1,"barrier_mode":"bsp","predicted_seconds":2}"#
         );
     }
 
@@ -226,9 +258,34 @@ mod tests {
         assert_eq!(
             resp.to_string(),
             format!(
-                r#"{{"ok":true,"query":"best_at","algorithm":"cocoa+","machines":1,"predicted_suboptimality":{expected}}}"#
+                r#"{{"ok":true,"query":"best_at","algorithm":"cocoa+","machines":1,"barrier_mode":"bsp","predicted_suboptimality":{expected}}}"#
             )
         );
+    }
+
+    #[test]
+    fn golden_mode_query_responses() {
+        let registry = golden_registry_with_async();
+        // A legacy query (no barrier_mode) must keep the pure-BSP
+        // golden answer even though an async pair exists.
+        let resp = handle_line(&registry, r#"{"query":"fastest_to","eps":0.02}"#);
+        assert_eq!(
+            resp.to_string(),
+            r#"{"ok":true,"query":"fastest_to","algorithm":"cocoa+","machines":1,"barrier_mode":"bsp","predicted_seconds":2}"#
+        );
+        // barrier_mode "any": the async pair halves iteration time —
+        // 4 iterations at m=1 now cost exactly 1 second, and the
+        // recommended mode differs from the best pure-BSP answer.
+        let resp =
+            handle_line(&registry, r#"{"query":"fastest_to","eps":0.02,"barrier_mode":"any"}"#);
+        assert_eq!(
+            resp.to_string(),
+            r#"{"ok":true,"query":"fastest_to","algorithm":"cocoa+","machines":1,"barrier_mode":"async","predicted_seconds":1}"#
+        );
+        // Pinning an unfitted mode is a clean miss, not a fallback.
+        let resp =
+            handle_line(&registry, r#"{"query":"fastest_to","eps":0.02,"barrier_mode":"ssp:3"}"#);
+        assert!(!resp.get("ok").and_then(Json::as_bool).unwrap());
     }
 
     #[test]

@@ -1,0 +1,169 @@
+//! Barrier modes: how tightly the simulated cluster synchronizes the
+//! machines between iterations.
+//!
+//! The paper's testbed (and the original simulator here) is pure BSP:
+//! every iteration ends with a global barrier, so each iteration costs
+//! the *slowest* machine's compute time. Petuum-style stale-synchronous
+//! parallel (SSP) relaxes that: a machine only blocks when it runs more
+//! than `staleness` iterations ahead of the slowest, trading statistical
+//! efficiency (updates are computed against stale model state) for
+//! throughput. `Async` removes the barrier entirely.
+//!
+//! `Ssp { staleness: 0 }` is exactly BSP — no machine may run ahead, so
+//! everyone proceeds in lockstep — and the simulator prices the two
+//! identically (property-tested in `tests/barrier_props.rs`).
+
+/// Coordination regime of one simulated run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BarrierMode {
+    /// Bulk-synchronous: global barrier every iteration.
+    Bsp,
+    /// Stale-synchronous: a machine blocks only when it would run more
+    /// than `staleness` iterations ahead of the slowest machine.
+    Ssp { staleness: usize },
+    /// No barrier at all: machines free-run; the model state a machine
+    /// reads can be arbitrarily stale.
+    Async,
+}
+
+impl BarrierMode {
+    /// Canonical wire form: `bsp`, `ssp:<staleness>`, `async`.
+    pub fn as_str(&self) -> String {
+        match self {
+            BarrierMode::Bsp => "bsp".to_string(),
+            BarrierMode::Ssp { staleness } => format!("ssp:{staleness}"),
+            BarrierMode::Async => "async".to_string(),
+        }
+    }
+
+    /// Parse the wire form back. Unknown strings are an error with the
+    /// accepted grammar spelled out — a config or artifact naming a
+    /// mode this build does not know must never be silently served.
+    pub fn parse(s: &str) -> crate::Result<BarrierMode> {
+        match s.trim() {
+            "bsp" => Ok(BarrierMode::Bsp),
+            "async" => Ok(BarrierMode::Async),
+            other => match other.strip_prefix("ssp:") {
+                Some(k) => k
+                    .parse::<usize>()
+                    .map(|staleness| BarrierMode::Ssp { staleness })
+                    .map_err(|_| {
+                        crate::err!(
+                            "bad SSP staleness '{k}' in barrier mode '{other}' \
+                             (expected ssp:<non-negative integer>)"
+                        )
+                    }),
+                None => crate::bail!(
+                    "unknown barrier mode '{other}' (expected bsp, ssp:<staleness> or async)"
+                ),
+            },
+        }
+    }
+
+    /// The iteration-staleness bound this mode guarantees (None for
+    /// `Async`, which guarantees nothing).
+    pub fn staleness_bound(&self) -> Option<usize> {
+        match self {
+            BarrierMode::Bsp => Some(0),
+            BarrierMode::Ssp { staleness } => Some(*staleness),
+            BarrierMode::Async => None,
+        }
+    }
+
+    /// The one numeric encoding every CSV column uses:
+    /// `bsp` → 0, `ssp:k` → k + 1, `async` → −1. Keeps `ssp:0`
+    /// distinguishable from `bsp` across files.
+    pub fn csv_id(&self) -> f64 {
+        match self {
+            BarrierMode::Bsp => 0.0,
+            BarrierMode::Ssp { staleness } => 1.0 + *staleness as f64,
+            BarrierMode::Async => -1.0,
+        }
+    }
+
+    /// Inverse of [`Self::csv_id`] (pre-barrier-axis tables carry no
+    /// column and default to 0 → BSP).
+    pub fn from_csv_id(id: f64) -> BarrierMode {
+        if id < 0.0 {
+            BarrierMode::Async
+        } else if id == 0.0 {
+            BarrierMode::Bsp
+        } else {
+            BarrierMode::Ssp {
+                staleness: (id - 1.0) as usize,
+            }
+        }
+    }
+
+    pub fn is_bsp(&self) -> bool {
+        matches!(self, BarrierMode::Bsp)
+    }
+}
+
+impl std::fmt::Display for BarrierMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_roundtrip() {
+        for mode in [
+            BarrierMode::Bsp,
+            BarrierMode::Ssp { staleness: 0 },
+            BarrierMode::Ssp { staleness: 7 },
+            BarrierMode::Async,
+        ] {
+            assert_eq!(BarrierMode::parse(&mode.as_str()).unwrap(), mode);
+        }
+        assert_eq!(BarrierMode::parse(" bsp ").unwrap(), BarrierMode::Bsp);
+    }
+
+    #[test]
+    fn unknown_modes_rejected_with_clear_error() {
+        for bad in ["ssp", "ssp:", "ssp:-1", "ssp:two", "bsp2", "sync", ""] {
+            let err = BarrierMode::parse(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("barrier mode") || err.contains("staleness"),
+                "unhelpful error for '{bad}': {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn staleness_bounds() {
+        assert_eq!(BarrierMode::Bsp.staleness_bound(), Some(0));
+        assert_eq!(
+            BarrierMode::Ssp { staleness: 3 }.staleness_bound(),
+            Some(3)
+        );
+        assert_eq!(BarrierMode::Async.staleness_bound(), None);
+    }
+
+    #[test]
+    fn csv_id_roundtrips_and_separates_bsp_from_ssp0() {
+        for mode in [
+            BarrierMode::Bsp,
+            BarrierMode::Ssp { staleness: 0 },
+            BarrierMode::Ssp { staleness: 7 },
+            BarrierMode::Async,
+        ] {
+            assert_eq!(BarrierMode::from_csv_id(mode.csv_id()), mode);
+        }
+        assert_ne!(
+            BarrierMode::Bsp.csv_id(),
+            BarrierMode::Ssp { staleness: 0 }.csv_id()
+        );
+    }
+
+    #[test]
+    fn ordering_is_stable_for_registry_keys() {
+        // Bsp < Ssp{..} < Async — model artifacts sort modes with this.
+        assert!(BarrierMode::Bsp < BarrierMode::Ssp { staleness: 0 });
+        assert!(BarrierMode::Ssp { staleness: 9 } < BarrierMode::Async);
+    }
+}

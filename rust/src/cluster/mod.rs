@@ -1,10 +1,14 @@
-//! BSP cluster simulator — the substrate replacing the paper's
-//! Spark-on-YARN testbed (see DESIGN.md §2 substitution table).
+//! Cluster simulator — the substrate replacing the paper's
+//! Spark-on-YARN testbed (see DESIGN.md §2 substitution table), now
+//! with per-machine clocks and a selectable barrier mode
+//! ([`BarrierMode`]: BSP, stale-synchronous, fully async).
 
-pub mod bsp;
+pub mod barrier;
 pub mod network;
 pub mod profile;
+pub mod sim;
 
-pub use bsp::BspSim;
+pub use barrier::BarrierMode;
 pub use network::{broadcast_time, reduce_time, shuffle_time, tree_rounds};
 pub use profile::HardwareProfile;
+pub use sim::{BspSim, ClusterSim};

@@ -32,9 +32,10 @@ pub fn reduce_time(p: &HardwareProfile, m: usize, bytes: f64) -> f64 {
 }
 
 /// All-to-all shuffle of `bytes` per machine (used by repartitioning
-/// in the adaptive loop; not on the per-iteration path).
+/// in the adaptive loop; not on the per-iteration path). Free when
+/// there is nothing to exchange (`m <= 1` or no payload).
 pub fn shuffle_time(p: &HardwareProfile, m: usize, bytes_per_machine: f64) -> f64 {
-    if m <= 1 {
+    if m <= 1 || bytes_per_machine <= 0.0 {
         return 0.0;
     }
     // Each machine exchanges (m-1)/m of its data with peers; bisection
@@ -78,5 +79,90 @@ mod tests {
     fn shuffle_scales_with_payload() {
         let p = HardwareProfile::ideal();
         assert!(shuffle_time(&p, 8, 1e6) < shuffle_time(&p, 8, 1e7));
+    }
+
+    // ---- property tests (util::quickcheck) --------------------------
+
+    use crate::util::quickcheck::{forall, Gen};
+
+    /// A random but physically sane profile for the properties.
+    fn random_profile(g: &mut Gen) -> HardwareProfile {
+        HardwareProfile {
+            name: "prop".into(),
+            flops_per_sec: g.f64_in(1e6, 1e9),
+            iteration_overhead: g.f64_in(1e-3, 0.5),
+            sched_per_machine: g.f64_in(0.0, 1e-2),
+            net_latency: g.f64_in(1e-5, 1e-2),
+            net_bandwidth: g.f64_in(1e6, 1e9),
+            noise_sigma: g.f64_in(0.0, 0.3),
+            straggler_prob: g.f64_in(0.0, 0.1),
+            straggler_factor: g.f64_in(1.0, 5.0),
+        }
+    }
+
+    #[test]
+    fn prop_tree_rounds_closed_form_and_monotone() {
+        // tree_rounds(m) = ⌈log₂(m+1)⌉, and it never decreases in m.
+        forall(
+            "tree_rounds = ceil(log2(m+1)) and monotone",
+            500,
+            |g| (g.usize_in(0, 1 << 20), ()),
+            |&m, _| {
+                let ceil_log2 = (m + 1).next_power_of_two().trailing_zeros() as usize;
+                tree_rounds(m) == ceil_log2
+                    && (m == 0 || tree_rounds(m - 1) <= tree_rounds(m))
+            },
+        );
+    }
+
+    #[test]
+    fn prop_collectives_monotone_in_bytes() {
+        forall(
+            "broadcast/reduce/shuffle are monotone in bytes",
+            300,
+            |g| {
+                let p = random_profile(g);
+                let m = g.usize_in(1, 512);
+                let lo = g.f64_in(0.0, 1e7);
+                let hi = lo + g.f64_in(0.0, 1e7);
+                ((m, lo, hi), p)
+            },
+            |&(m, lo, hi), p| {
+                broadcast_time(p, m, lo) <= broadcast_time(p, m, hi)
+                    && reduce_time(p, m, lo) <= reduce_time(p, m, hi)
+                    && shuffle_time(p, m, lo) <= shuffle_time(p, m, hi)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_collectives_zero_on_edge_cases() {
+        // m == 0 and bytes <= 0 are free for every collective; every
+        // other configuration costs strictly more than nothing.
+        forall(
+            "collectives are zero exactly on the documented edges",
+            300,
+            |g| {
+                let p = random_profile(g);
+                let m = g.usize_in(0, 256);
+                let bytes = if g.bool() {
+                    g.f64_in(-1e6, 0.0)
+                } else {
+                    g.f64_in(1.0, 1e8)
+                };
+                ((m, bytes), p)
+            },
+            |&(m, bytes), p| {
+                let zero_edge = m == 0 || bytes <= 0.0;
+                let bc = broadcast_time(p, m, bytes);
+                let rd = reduce_time(p, m, bytes);
+                let sh = shuffle_time(p, m, bytes);
+                if zero_edge {
+                    bc == 0.0 && rd == 0.0 && sh == 0.0
+                } else {
+                    bc > 0.0 && rd > 0.0 && (m == 1) == (sh == 0.0)
+                }
+            },
+        );
     }
 }

@@ -1,0 +1,378 @@
+//! The cluster iteration-time simulator — the stand-in for the paper's
+//! Spark/YARN testbed, generalized from a pure-BSP barrier to the full
+//! [`BarrierMode`] axis.
+//!
+//! Every machine keeps its **own clock**. One iteration of machine `k`
+//! costs
+//!
+//! ```text
+//! d_k = θ_fixed                       (driver bookkeeping)
+//!     + sched · m                     (serial task dispatch)
+//!     + broadcast(m, model bytes)     (tree, log m rounds)
+//!     + compute_k                     (lognormal noise + stragglers)
+//!     + reduce(m, update bytes)       (tree, log m rounds)
+//! ```
+//!
+//! and the machine starts its next iteration at
+//! `max(own clock, barrier)`, where the barrier is the time at which
+//! *all* machines finished the iteration `staleness` steps back:
+//!
+//! * **BSP** — staleness 0: every start waits for everyone's previous
+//!   finish, so each iteration costs the slowest machine's `d_k` —
+//!   exactly the original `BspSim` pricing.
+//! * **SSP(s)** — a machine only blocks when it would run more than
+//!   `s` iterations ahead of the slowest; fast machines absorb slow
+//!   ones' noise, and a straggler no longer stalls the whole cluster.
+//! * **Async** — no barrier: elapsed time is throughput-derived (the
+//!   max of independent per-machine clock sums) instead of a per-step
+//!   barrier max.
+//!
+//! All modes consume the RNG identically (m compute draws per
+//! iteration, in machine order), so for a fixed seed the three modes
+//! price the *same* noise realization — which is what makes the
+//! `Async ≤ SSP(s) ≤ BSP` elapsed-time ordering and the
+//! `SSP(0) ≡ BSP` equivalence exact, seed by seed, rather than merely
+//! statistical (property-tested in `tests/barrier_props.rs`).
+//!
+//! The Ernest model never sees these mechanisms — it has to
+//! *rediscover* the structure from observed times, exactly as it does
+//! against real clusters (Tbl E1 checks the fit error).
+
+use std::collections::VecDeque;
+
+use super::barrier::BarrierMode;
+use super::network::{broadcast_time, reduce_time};
+use super::profile::HardwareProfile;
+use crate::optim::driver::IterationTimer;
+use crate::optim::IterationCost;
+use crate::util::rng::Pcg32;
+
+/// How many committed-iteration barrier times `Async` retains for the
+/// staleness probe (its staleness is unbounded in principle; reads
+/// report at most this). Tied to the algorithms' snapshot retention so
+/// a reported staleness always has a snapshot to serve it.
+const ASYNC_STALENESS_WINDOW: usize = crate::optim::stale::MAX_STALE_SNAPSHOTS;
+
+/// Simulated cluster clock with per-machine progress.
+pub struct ClusterSim {
+    pub profile: HardwareProfile,
+    pub mode: BarrierMode,
+    rng: Pcg32,
+    /// Simulated time at which the last machine finished the most
+    /// recent iteration (the driver-visible clock).
+    pub elapsed: f64,
+    /// Per-iteration marginal elapsed time (Fig 1(a) percentile bars).
+    pub history: Vec<f64>,
+    /// Per-machine finish time of that machine's latest iteration.
+    clocks: Vec<f64>,
+    /// Completion times of recent iterations: `barriers.back()` is the
+    /// time all machines finished the latest iteration. Bounded by the
+    /// blocking window (staleness + 1; a fixed window for Async).
+    barriers: VecDeque<f64>,
+}
+
+impl ClusterSim {
+    /// A BSP-mode simulator (the historical default).
+    pub fn new(profile: HardwareProfile, seed: u64) -> ClusterSim {
+        Self::with_mode(profile, BarrierMode::Bsp, seed)
+    }
+
+    /// A simulator in an explicit barrier mode. Seeding is identical
+    /// across modes so a fixed seed prices the same noise realization
+    /// under every mode.
+    pub fn with_mode(profile: HardwareProfile, mode: BarrierMode, seed: u64) -> ClusterSim {
+        ClusterSim {
+            rng: Pcg32::new(seed, 0xC1u64 + profile.name.len() as u64),
+            profile,
+            mode,
+            elapsed: 0.0,
+            history: Vec::new(),
+            clocks: Vec::new(),
+            barriers: VecDeque::new(),
+        }
+    }
+
+    /// Price one iteration (and advance the simulated clocks). Returns
+    /// the marginal increase of the driver-visible elapsed time.
+    pub fn iteration_time(&mut self, cost: &IterationCost) -> f64 {
+        let p = &self.profile;
+        let m = cost.machines.max(1);
+        if self.clocks.len() != m {
+            // First iteration, or a mid-run reconfiguration (the
+            // adaptive loop repartitions): a global barrier — all
+            // machines restart in sync at the current elapsed time.
+            self.clocks.clear();
+            self.clocks.resize(m, self.elapsed);
+            self.barriers.clear();
+        }
+
+        let base = cost.flops_per_machine / p.flops_per_sec;
+        // Everything but compute is identical across machines; the sum
+        // order matches the historical BSP formula term for term.
+        let fixed = p.iteration_overhead
+            + p.sched_per_machine * m as f64
+            + broadcast_time(p, m, cost.broadcast_bytes);
+        let reduce = reduce_time(p, m, cost.reduce_bytes);
+
+        // The barrier this iteration's starts must respect: the finish
+        // of the iteration `staleness` steps back (none while fewer
+        // iterations have committed, and never for Async).
+        let barrier = match self.mode.staleness_bound() {
+            Some(s) if self.barriers.len() > s => {
+                Some(self.barriers[self.barriers.len() - 1 - s])
+            }
+            _ => None,
+        };
+
+        let mut done = 0.0f64;
+        for k in 0..m {
+            let mut compute = if p.noise_sigma > 0.0 {
+                base * self.rng.lognormal(0.0, p.noise_sigma)
+            } else {
+                base
+            };
+            if p.straggler_prob > 0.0 && self.rng.uniform() < p.straggler_prob {
+                compute *= p.straggler_factor;
+            }
+            let d = fixed + compute + reduce;
+            let start = match barrier {
+                Some(b) => self.clocks[k].max(b),
+                None => self.clocks[k],
+            };
+            let finish = start + d;
+            self.clocks[k] = finish;
+            done = done.max(finish);
+        }
+
+        self.barriers.push_back(done);
+        let keep = match self.mode.staleness_bound() {
+            Some(s) => s + 1,
+            None => ASYNC_STALENESS_WINDOW,
+        };
+        while self.barriers.len() > keep {
+            self.barriers.pop_front();
+        }
+
+        let dt = done - self.elapsed;
+        self.elapsed = done;
+        self.history.push(dt);
+        dt
+    }
+
+    /// Iteration staleness of the model state the *next* iteration's
+    /// fastest reader observes: how many committed iterations are not
+    /// yet globally complete at the moment that machine starts. Always
+    /// 0 for BSP, at most `s` for SSP(s), reported up to a fixed
+    /// window for Async.
+    pub fn read_staleness(&self) -> usize {
+        if self.clocks.is_empty() {
+            return 0;
+        }
+        let fastest = self.clocks.iter().cloned().fold(f64::INFINITY, f64::min);
+        let start = match self.mode.staleness_bound() {
+            Some(s) if self.barriers.len() > s => {
+                fastest.max(self.barriers[self.barriers.len() - 1 - s])
+            }
+            _ => fastest,
+        };
+        // `barriers` is strictly increasing, so the stale ones form a
+        // suffix.
+        self.barriers.iter().rev().take_while(|&&b| b > start).count()
+    }
+}
+
+impl IterationTimer for ClusterSim {
+    fn price(&mut self, cost: &IterationCost) -> f64 {
+        self.iteration_time(cost)
+    }
+
+    fn staleness(&self) -> usize {
+        self.read_staleness()
+    }
+
+    fn mode(&self) -> BarrierMode {
+        self.mode
+    }
+}
+
+/// The historical name for the BSP-mode simulator. Construction via
+/// [`ClusterSim::new`] keeps the pure-BSP default; the type is the
+/// same so all modes flow through one clock implementation.
+pub type BspSim = ClusterSim;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn cocoa_cost(m: usize) -> IterationCost {
+        // Default workload: n=8192, d=128, h = n_loc.
+        let n_loc = 8192usize.div_ceil(m) as f64;
+        IterationCost {
+            machines: m,
+            flops_per_machine: n_loc * 8.0 * 128.0,
+            broadcast_bytes: 4.0 * 128.0,
+            reduce_bytes: 4.0 * 128.0,
+        }
+    }
+
+    #[test]
+    fn deterministic_profile_is_deterministic() {
+        let mut a = BspSim::new(HardwareProfile::ideal(), 1);
+        let mut b = BspSim::new(HardwareProfile::ideal(), 2);
+        assert_eq!(a.iteration_time(&cocoa_cost(8)), b.iteration_time(&cocoa_cost(8)));
+    }
+
+    #[test]
+    fn fig1a_shape_u_curve() {
+        // The paper's headline system observation: time/iter improves
+        // up to ~32 executors, then degrades.
+        let mut means = Vec::new();
+        for &m in &[1usize, 2, 4, 8, 16, 32, 64, 128] {
+            let mut sim = BspSim::new(HardwareProfile::local48(), 42);
+            let ts: Vec<f64> = (0..50).map(|_| sim.iteration_time(&cocoa_cost(m))).collect();
+            means.push(stats::mean(&ts));
+        }
+        // Monotone decrease from m=1 to m=8.
+        assert!(means[0] > means[1] && means[1] > means[2] && means[2] > means[3]);
+        // The minimum is somewhere in 16–64 and not at the extremes.
+        let min_idx = means
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(
+            (3..=6).contains(&min_idx),
+            "minimum at index {min_idx}: {means:?}"
+        );
+        // And m=128 is worse than the minimum.
+        assert!(means[7] > means[min_idx] * 1.05, "{means:?}");
+    }
+
+    #[test]
+    fn scaling_is_sublinear() {
+        // "doubling the number of cores does not result in halving the
+        // time per iteration" — Fig 1(a) discussion.
+        let mut sim = BspSim::new(HardwareProfile::local48(), 7);
+        let t1: f64 = (0..30).map(|_| sim.iteration_time(&cocoa_cost(1))).sum();
+        let mut sim2 = BspSim::new(HardwareProfile::local48(), 7);
+        let t2: f64 = (0..30).map(|_| sim2.iteration_time(&cocoa_cost(2))).sum();
+        assert!(t2 > t1 / 2.0, "speedup should be sublinear");
+        assert!(t2 < t1, "2 machines should still beat 1");
+    }
+
+    #[test]
+    fn clock_and_history_accumulate() {
+        let mut sim = BspSim::new(HardwareProfile::local48(), 3);
+        for _ in 0..10 {
+            sim.iteration_time(&cocoa_cost(4));
+        }
+        assert_eq!(sim.history.len(), 10);
+        let sum: f64 = sim.history.iter().sum();
+        assert!((sim.elapsed - sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noise_creates_percentile_spread() {
+        let mut sim = BspSim::new(HardwareProfile::local48(), 11);
+        let ts: Vec<f64> = (0..200).map(|_| sim.iteration_time(&cocoa_cost(16))).collect();
+        let p5 = stats::percentile(&ts, 5.0);
+        let p95 = stats::percentile(&ts, 95.0);
+        assert!(p95 > p5 * 1.02, "expected spread, got p5={p5} p95={p95}");
+    }
+
+    #[test]
+    fn straggler_tail_grows_with_m() {
+        // More machines ⇒ higher chance one straggles ⇒ heavier tail
+        // relative to the base compute time.
+        let rel_tail = |m: usize| {
+            let mut sim = BspSim::new(HardwareProfile::local48(), 13);
+            let ts: Vec<f64> = (0..300).map(|_| sim.iteration_time(&cocoa_cost(m))).collect();
+            stats::percentile(&ts, 99.0) / stats::median(&ts)
+        };
+        assert!(rel_tail(64) > 1.0);
+    }
+
+    #[test]
+    fn ssp_zero_is_bitwise_bsp() {
+        let mut bsp = ClusterSim::with_mode(HardwareProfile::local48(), BarrierMode::Bsp, 17);
+        let mut ssp0 = ClusterSim::with_mode(
+            HardwareProfile::local48(),
+            BarrierMode::Ssp { staleness: 0 },
+            17,
+        );
+        for _ in 0..40 {
+            let a = bsp.iteration_time(&cocoa_cost(16));
+            let b = ssp0.iteration_time(&cocoa_cost(16));
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(bsp.elapsed.to_bits(), ssp0.elapsed.to_bits());
+        assert_eq!(bsp.read_staleness(), 0);
+        assert_eq!(ssp0.read_staleness(), 0);
+    }
+
+    #[test]
+    fn relaxed_barriers_are_faster_under_noise() {
+        // Same seed → same noise realization; the modes only differ in
+        // how much waiting they impose.
+        let run = |mode: BarrierMode| {
+            let mut sim = ClusterSim::with_mode(HardwareProfile::local48(), mode, 23);
+            for _ in 0..200 {
+                sim.iteration_time(&cocoa_cost(32));
+            }
+            sim.elapsed
+        };
+        let bsp = run(BarrierMode::Bsp);
+        let ssp = run(BarrierMode::Ssp { staleness: 4 });
+        let asn = run(BarrierMode::Async);
+        assert!(asn <= ssp && ssp <= bsp, "async={asn} ssp={ssp} bsp={bsp}");
+        // With lognormal noise and stragglers over 32 machines the gap
+        // is substantial, not an epsilon artifact.
+        assert!(asn < bsp * 0.95, "async={asn} bsp={bsp}");
+    }
+
+    #[test]
+    fn ssp_staleness_stays_within_bound() {
+        let mut sim = ClusterSim::with_mode(
+            HardwareProfile::local48(),
+            BarrierMode::Ssp { staleness: 3 },
+            29,
+        );
+        for _ in 0..100 {
+            sim.iteration_time(&cocoa_cost(16));
+            assert!(sim.read_staleness() <= 3, "staleness {}", sim.read_staleness());
+        }
+        // Under per-machine noise the clocks do drift apart, so SSP
+        // reads are genuinely stale some of the time.
+        let mut any_stale = false;
+        let mut probe = ClusterSim::with_mode(
+            HardwareProfile::local48(),
+            BarrierMode::Ssp { staleness: 3 },
+            31,
+        );
+        for _ in 0..200 {
+            probe.iteration_time(&cocoa_cost(16));
+            any_stale |= probe.read_staleness() > 0;
+        }
+        assert!(any_stale, "SSP never produced a stale read");
+    }
+
+    #[test]
+    fn reconfiguration_resynchronizes() {
+        // The adaptive loop changes m mid-run; that is a global
+        // barrier, after which the clock keeps monotonically advancing.
+        let mut sim = ClusterSim::with_mode(
+            HardwareProfile::local48(),
+            BarrierMode::Ssp { staleness: 2 },
+            5,
+        );
+        for _ in 0..10 {
+            sim.iteration_time(&cocoa_cost(8));
+        }
+        let before = sim.elapsed;
+        sim.iteration_time(&cocoa_cost(32));
+        assert!(sim.elapsed > before);
+        assert_eq!(sim.read_staleness(), 0, "fresh clocks start in sync");
+    }
+}

@@ -3,6 +3,7 @@
 
 use std::path::Path;
 
+use crate::cluster::BarrierMode;
 use crate::data::synth::SynthConfig;
 use crate::util::json::{read_json_file, Json};
 
@@ -36,6 +37,11 @@ pub struct ExperimentConfig {
     /// Degree of parallelism the adaptive loop starts with before the
     /// models have enough data to choose one.
     pub bootstrap_machines: usize,
+    /// Barrier modes the fit/advise/repro targets cover. The wire form
+    /// is a list of mode strings (`"bsp"`, `"ssp:<k>"`, `"async"`);
+    /// omitted, it defaults to pure BSP — the pre-barrier-axis
+    /// behavior.
+    pub barrier_modes: Vec<BarrierMode>,
 }
 
 impl Default for ExperimentConfig {
@@ -55,6 +61,7 @@ impl Default for ExperimentConfig {
             out_dir: "out".into(),
             advisor_iter_cap: 100_000,
             bootstrap_machines: 16,
+            barrier_modes: vec![BarrierMode::Bsp],
         }
     }
 }
@@ -63,11 +70,14 @@ impl ExperimentConfig {
     /// Load from a JSON file; missing fields fall back to defaults.
     pub fn load(path: &Path) -> crate::Result<ExperimentConfig> {
         let doc = read_json_file(path)?;
-        Ok(Self::from_json(&doc))
+        Self::from_json(&doc)
     }
 
-    /// Build from a parsed JSON object (missing fields → defaults).
-    pub fn from_json(doc: &Json) -> ExperimentConfig {
+    /// Build from a parsed JSON object (missing fields → defaults; a
+    /// present but malformed `barrier_modes` entry is an error, never
+    /// silently replaced — a config asking for a mode this build does
+    /// not know must not quietly run BSP instead).
+    pub fn from_json(doc: &Json) -> crate::Result<ExperimentConfig> {
         let dft = ExperimentConfig::default();
         let machines = doc
             .get("machines")
@@ -84,7 +94,22 @@ impl ExperimentConfig {
                     .collect()
             })
             .unwrap_or(dft.algorithms.clone());
-        ExperimentConfig {
+        let barrier_modes = match doc.get("barrier_modes") {
+            None => dft.barrier_modes.clone(),
+            Some(v) => v
+                .as_array()
+                .ok_or_else(|| {
+                    crate::err!("barrier_modes must be an array of mode strings")
+                })?
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .ok_or_else(|| crate::err!("barrier_modes entries must be strings"))
+                        .and_then(BarrierMode::parse)
+                })
+                .collect::<crate::Result<Vec<_>>>()?,
+        };
+        Ok(ExperimentConfig {
             n: doc.opt_usize("n", dft.n),
             d: doc.opt_usize("d", dft.d),
             lambda: doc.opt_f64("lambda", dft.lambda),
@@ -99,7 +124,8 @@ impl ExperimentConfig {
             out_dir: doc.opt_str("out_dir", &dft.out_dir).to_string(),
             advisor_iter_cap: doc.opt_usize("advisor_iter_cap", dft.advisor_iter_cap),
             bootstrap_machines: doc.opt_usize("bootstrap_machines", dft.bootstrap_machines),
-        }
+            barrier_modes,
+        })
     }
 
     /// The synthetic-dataset spec this config implies.
@@ -137,6 +163,10 @@ impl ExperimentConfig {
             ("out_dir", Json::str(self.out_dir.clone())),
             ("advisor_iter_cap", Json::num(self.advisor_iter_cap as f64)),
             ("bootstrap_machines", Json::num(self.bootstrap_machines as f64)),
+            (
+                "barrier_modes",
+                Json::array(self.barrier_modes.iter().map(|m| Json::str(m.as_str()))),
+            ),
         ])
     }
 
@@ -158,16 +188,18 @@ impl ExperimentConfig {
     }
 
     /// Everything a fitted advisor model depends on: the sweep context
-    /// plus the machine grid and stopping rules the training sweep
-    /// used. Model artifacts persist the hash of this string; a
-    /// mismatch at load time marks the artifact stale.
+    /// plus the machine grid, barrier modes and stopping rules the
+    /// training sweep used. Model artifacts persist the hash of this
+    /// string; a mismatch at load time marks the artifact stale.
     pub fn model_context(&self, native: bool) -> String {
+        let modes: Vec<String> = self.barrier_modes.iter().map(|m| m.as_str()).collect();
         format!(
-            "{}|machines={:?};max_iters={};target={:e}",
+            "{}|machines={:?};max_iters={};target={:e};modes=[{}]",
             self.context_key(native),
             self.machines,
             self.max_iters,
-            self.target_subopt
+            self.target_subopt,
+            modes.join(",")
         )
     }
 
@@ -199,23 +231,46 @@ mod tests {
         let c = ExperimentConfig {
             n: 1024,
             algorithms: vec!["cocoa".into(), "gd".into()],
+            barrier_modes: vec![
+                BarrierMode::Bsp,
+                BarrierMode::Ssp { staleness: 4 },
+                BarrierMode::Async,
+            ],
             ..Default::default()
         };
-        let back = ExperimentConfig::from_json(&c.to_json());
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.n, 1024);
         assert_eq!(back.algorithms, vec!["cocoa", "gd"]);
         assert_eq!(back.machines, c.machines);
+        assert_eq!(back.barrier_modes, c.barrier_modes);
     }
 
     #[test]
     fn advisor_knobs_load_from_json() {
         let doc = Json::parse(r#"{"advisor_iter_cap": 5000, "bootstrap_machines": 8}"#).unwrap();
-        let c = ExperimentConfig::from_json(&doc);
+        let c = ExperimentConfig::from_json(&doc).unwrap();
         assert_eq!(c.advisor_iter_cap, 5000);
         assert_eq!(c.bootstrap_machines, 8);
-        let back = ExperimentConfig::from_json(&c.to_json());
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.advisor_iter_cap, 5000);
         assert_eq!(back.bootstrap_machines, 8);
+    }
+
+    #[test]
+    fn barrier_modes_default_and_reject_unknown() {
+        // Omitted → wire-compatible BSP default.
+        let doc = Json::parse(r#"{"n": 64}"#).unwrap();
+        let c = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(c.barrier_modes, vec![BarrierMode::Bsp]);
+        // Present but unknown → a clear error, not silent BSP.
+        let doc = Json::parse(r#"{"barrier_modes": ["bsp", "quantum"]}"#).unwrap();
+        let err = ExperimentConfig::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("barrier mode"), "{err}");
+        // So is a present-but-wrong-shape field (string instead of
+        // array) — indistinguishable from absent would mean silent BSP.
+        let doc = Json::parse(r#"{"barrier_modes": "ssp:2"}"#).unwrap();
+        let err = ExperimentConfig::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("array"), "{err}");
     }
 
     #[test]
@@ -229,12 +284,16 @@ mod tests {
         let mut c = a.clone();
         c.machines.pop();
         assert_ne!(a.model_context_hash(true), c.model_context_hash(true));
+        // Adding a barrier mode changes the fit context too.
+        let mut d = a.clone();
+        d.barrier_modes.push(BarrierMode::Async);
+        assert_ne!(a.model_context_hash(true), d.model_context_hash(true));
     }
 
     #[test]
     fn partial_json_uses_defaults() {
         let doc = Json::parse(r#"{"n": 256, "profile": "ideal"}"#).unwrap();
-        let c = ExperimentConfig::from_json(&doc);
+        let c = ExperimentConfig::from_json(&doc).unwrap();
         assert_eq!(c.n, 256);
         assert_eq!(c.profile, "ideal");
         assert_eq!(c.d, 128);

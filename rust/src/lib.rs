@@ -19,13 +19,16 @@
 //! SGD, Splash-style local SGD, full GD — [`optim`]) run for real: the
 //! per-partition local solvers are Pallas kernels AOT-compiled to HLO
 //! and executed from Rust through PJRT ([`runtime`]), while wall-clock
-//! time is produced by a BSP cluster simulator ([`cluster`]) standing
-//! in for the paper's Spark/YARN testbed.
+//! time is produced by a per-machine-clock cluster simulator
+//! ([`cluster`]) standing in for the paper's Spark/YARN testbed —
+//! priced under a selectable barrier mode
+//! ([`cluster::BarrierMode`]: BSP, stale-synchronous, fully async),
+//! with staleness fed back into the SGD-family updates.
 //!
-//! Sweeps over (algorithm × machines × seed) grids — the workload the
-//! whole paper is built on — go through the [`sweep`] subsystem, which
-//! fans cells out across a thread pool and caches finished traces in
-//! memory and on disk.
+//! Sweeps over (algorithm × machines × barrier mode × seed) grids —
+//! the workload the whole paper is built on — go through the [`sweep`]
+//! subsystem, which fans cells out across a thread pool and caches
+//! finished traces in memory and on disk.
 //!
 //! See [`DESIGN.md`](../../DESIGN.md) (repo root) for the full system
 //! inventory and per-figure experiment index, and

@@ -13,9 +13,9 @@
 //!   info             engine/artifact diagnostics
 
 use hemingway::advisor::{
-    adaptive_cocoa_plus, AdaptiveConfig, AlgorithmId, Constraints, Query,
+    adaptive_cocoa_plus, AdaptiveConfig, AlgorithmId, Constraints, ModeFilter, Query,
 };
-use hemingway::cluster::BspSim;
+use hemingway::cluster::{BarrierMode, BspSim};
 use hemingway::config::ExperimentConfig;
 use hemingway::repro::common::{load_or_fit_registry, update_summary_file};
 use hemingway::repro::{run_figures, ReproContext, FIGURES};
@@ -47,12 +47,14 @@ fn print_help() {
          usage: hemingway <command> [options]\n\n\
          commands:\n\
          \x20 run              --algo cocoa+ --machines 16 [--config f.json] [--native]\n\
-         \x20 sweep            --algo cocoa+ [--seeds N] [--threads K] [--native]\n\
+         \x20 sweep            --algo cocoa+ [--seeds N] [--threads K] [--barrier MODE]\n\
+         \x20                  [--staleness-grid 0,2,8] [--native]\n\
          \x20 fit-system       --algo cocoa+ [--native]\n\
          \x20 fit-convergence  --algo cocoa+ [--native]\n\
-         \x20 fit              [--algos cocoa+,cocoa] [--native]  fit + persist model artifacts\n\
-         \x20 advise           --eps 1e-4 --budget 20 [--max-machines M] [--cost-weight W] [--native]\n\
-         \x20 serve            [--algos ...] [--native]  JSON queries on stdin, one answer/line\n\
+         \x20 fit              [--algos cocoa+,cocoa] [--barriers bsp,ssp:4,async] [--native]\n\
+         \x20 advise           --eps 1e-4 --budget 20 [--max-machines M] [--cost-weight W]\n\
+         \x20                  [--barrier MODE|any] [--native]\n\
+         \x20 serve            [--algos ...] [--barriers ...] [--native]  JSON queries on stdin\n\
          \x20 adaptive         [--frames 8] [--frame-seconds 5] [--native]\n\
          \x20 repro            --figure <id>|all [--native]\n\
          \x20 info\n\n\
@@ -62,9 +64,12 @@ fn print_help() {
          \x20 --native          use the native backend instead of PJRT/HLO\n\
          \x20 --seeds <N>       seed replicates per sweep cell (mean±std aggregation)\n\
          \x20 --threads <K>     sweep worker threads (default: HEMINGWAY_THREADS or cores)\n\
+         \x20 --barriers <M,..> barrier modes to fit/serve (bsp, ssp:<staleness>, async)\n\
          \x20 --verbose         debug logging (or HEMINGWAY_LOG=debug)\n\n\
          `fit` writes <out_dir>/models/*.json; `advise` and `serve` load them\n\
-         (fit-on-miss) and detect stale artifacts via the config hash.",
+         (fit-on-miss) and detect stale artifacts via the config hash.\n\
+         Queries default to barrier mode 'bsp'; pass --barrier any (or a\n\
+         wire \"barrier_mode\" field) to search over fitted modes too.",
         FIGURES.join(", ")
     );
 }
@@ -80,6 +85,13 @@ fn load_cfg(args: &Args) -> hemingway::Result<ExperimentConfig> {
             .map(|s| s.trim().parse::<usize>())
             .collect::<Result<_, _>>()
             .map_err(|e| hemingway::err!("bad --machines-grid: {e}"))?;
+    }
+    if let Some(bs) = args.get("barriers") {
+        cfg.barrier_modes = bs
+            .split(',')
+            .map(BarrierMode::parse)
+            .collect::<hemingway::Result<_>>()?;
+        hemingway::ensure!(!cfg.barrier_modes.is_empty(), "--barriers lists no modes");
     }
     Ok(cfg)
 }
@@ -117,6 +129,29 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
             let algo = args.str_or("algo", "cocoa+").to_string();
             let seeds = args.usize_or("seeds", 1)?.max(1);
             let threads = args.usize_or("threads", 0)?; // 0 = auto
+            // The barrier-mode axis: an explicit staleness grid
+            // (ssp:k per entry), a single --barrier mode, or BSP. The
+            // two flags would contradict each other, so together they
+            // are an error rather than one silently winning.
+            let modes: Vec<BarrierMode> = match (args.get("staleness-grid"), args.get("barrier"))
+            {
+                (Some(_), Some(_)) => hemingway::bail!(
+                    "--barrier and --staleness-grid are mutually exclusive \
+                     (a staleness grid already names its modes)"
+                ),
+                (Some(sg), None) => sg
+                    .split(',')
+                    .map(|s| {
+                        s.trim()
+                            .parse::<usize>()
+                            .map(|staleness| BarrierMode::Ssp { staleness })
+                            .map_err(|_| {
+                                hemingway::err!("--staleness-grid: bad integer '{s}'")
+                            })
+                    })
+                    .collect::<hemingway::Result<_>>()?,
+                (None, barrier) => vec![BarrierMode::parse(barrier.unwrap_or("bsp"))?],
+            };
             let mut ctx = ReproContext::new(cfg, native)?;
             if threads > 0 {
                 ctx.sweep.threads = threads;
@@ -124,6 +159,7 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
             let grid = SweepGrid {
                 algorithms: vec![algo.clone()],
                 machines: ctx.cfg.machines.clone(),
+                modes,
                 seeds,
                 base_seed: ctx.cfg.seed,
                 run: ctx.run_config(),
@@ -153,6 +189,7 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
             let aggs = hemingway::sweep::aggregate(&traces, ctx.cfg.target_subopt);
             let mut agg_table = hemingway::util::csv::Table::new(&[
                 "machines",
+                "barrier",
                 "replicates",
                 "reached",
                 "iters_mean",
@@ -167,6 +204,7 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
             for a in &aggs {
                 agg_table.push(vec![
                     a.machines as f64,
+                    a.barrier_mode.csv_id(),
                     a.replicates as f64,
                     a.reached as f64,
                     a.iters_to_target.mean,
@@ -179,8 +217,9 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                     a.mean_iter_time.std,
                 ]);
                 println!(
-                    "  m={:<4} reached {}/{}  iters-to-{:.0e} {}  iter-time {}s",
+                    "  m={:<4} {:<7} reached {}/{}  iters-to-{:.0e} {}  iter-time {}s",
                     a.machines,
+                    a.barrier_mode.as_str(),
                     a.reached,
                     a.replicates,
                     ctx.cfg.target_subopt,
@@ -260,34 +299,38 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                     None => None,
                 },
                 machine_cost_weight: args.f64_or("cost-weight", 0.0)?,
+                barrier_mode: ModeFilter::parse(args.str_or("barrier", "bsp"))?,
             };
             constraints.validate()?;
             let algos = parse_algos(args, &cfg)?;
             let registry = load_or_fit_registry(&cfg, native, &algos)?;
             match registry.answer(&Query::FastestTo { eps, constraints }) {
                 Some(rec) => println!(
-                    "fastest to {eps:.0e}:   {} m={} → {:.2} predicted seconds",
+                    "fastest to {eps:.0e}:   {} m={} [{}] → {:.2} predicted seconds",
                     rec.algorithm,
                     rec.machines,
+                    rec.barrier_mode,
                     rec.predicted.value()
                 ),
                 None => println!("fastest to {eps:.0e}:   no configuration reaches the target"),
             }
             match registry.answer(&Query::BestAt { budget, constraints }) {
                 Some(rec) => println!(
-                    "best loss in {budget}s: {} m={} → {:.2e} predicted suboptimality",
+                    "best loss in {budget}s: {} m={} [{}] → {:.2e} predicted suboptimality",
                     rec.algorithm,
                     rec.machines,
+                    rec.barrier_mode,
                     rec.predicted.value()
                 ),
                 None => println!("best loss in {budget}s: no feasible configuration"),
             }
-            println!("\nprediction table (algorithm × m):");
+            println!("\nprediction table (algorithm × m × mode):");
             for row in registry.table(eps, budget, &constraints) {
                 println!(
-                    "  {:<13} m={:<4} time-to-ε {:<10} subopt@{budget}s {:.3e}",
+                    "  {:<13} m={:<4} {:<7} time-to-ε {:<10} subopt@{budget}s {:.3e}",
                     row.algorithm,
                     row.machines,
+                    row.barrier_mode.as_str(),
                     row.time_to_eps
                         .map(|t| format!("{t:.2}s"))
                         .unwrap_or_else(|| "-".into()),

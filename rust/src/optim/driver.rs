@@ -1,16 +1,31 @@
-//! The BSP run loop: step an algorithm, price each iteration through a
+//! The run loop: step an algorithm, price each iteration through a
 //! timer (the cluster simulator in production), record the trace.
+//! Under relaxed barrier modes the timer additionally reports how
+//! stale the model state the machines read is, and the loop feeds
+//! that to the algorithm before each step.
 
 use super::problem::Problem;
 use super::trace::{Record, Trace};
 use super::{Algorithm, Backend, IterationCost};
+use crate::cluster::BarrierMode;
 
-/// Prices one BSP iteration in (simulated) seconds.
+/// Prices one iteration in (simulated) seconds.
 ///
-/// Production implementation: [`crate::cluster::BspSim`]. Tests use
-/// [`ZeroTimer`] (pure iteration-domain traces).
+/// Production implementation: [`crate::cluster::ClusterSim`]. Tests
+/// use [`ZeroTimer`] (pure iteration-domain traces).
 pub trait IterationTimer {
     fn price(&mut self, cost: &IterationCost) -> f64;
+
+    /// Iteration staleness of the model state the next step's machines
+    /// read (0 for barrier-synchronous timers).
+    fn staleness(&self) -> usize {
+        0
+    }
+
+    /// The barrier mode this timer simulates (recorded on the trace).
+    fn mode(&self) -> BarrierMode {
+        BarrierMode::Bsp
+    }
 }
 
 /// A timer that charges nothing (iteration-domain studies).
@@ -59,6 +74,7 @@ pub fn run(
     cfg: &RunConfig,
 ) -> crate::Result<Trace> {
     let mut trace = Trace::new(algo.name(), algo.machines(), p_star);
+    trace.barrier_mode = timer.mode();
     let mut sim_time = 0.0f64;
 
     let initial_primal = problem.primal(algo.weights());
@@ -74,6 +90,7 @@ pub fn run(
     });
 
     for i in 0..cfg.max_iters {
+        algo.set_staleness(timer.staleness());
         let cost = algo.step(backend, i)?;
         sim_time += timer.price(&cost);
 

@@ -4,9 +4,17 @@
 //! single gradients) gives better per-iteration progress than
 //! mini-batch SGD but still degrades with m — the second SGD-family
 //! curve in Fig 1(c).
+//!
+//! Under relaxed barrier modes the machines epoch from a bounded-stale
+//! snapshot `w_{t−τ}` and the driver applies the resulting *delta* to
+//! the live iterate (`w += mean_k(w_k) − w_{t−τ}`) — stale trajectories
+//! partially overwrite fresher progress, which is exactly the
+//! statistical price SSP pays for its throughput. τ = 0 reproduces the
+//! synchronous update bit for bit.
 
 use super::backend::Backend;
 use super::problem::Problem;
+use super::stale::StaleWeights;
 use super::{Algorithm, IterationCost};
 use crate::data::Partition;
 use crate::util::rng::Lcg32;
@@ -20,6 +28,9 @@ pub struct LocalSgd {
     seed: u32,
     machines: usize,
     d: usize,
+    /// Bounded-stale snapshots of `w` (driver-fed staleness; fresh
+    /// under BSP).
+    stale: StaleWeights,
 }
 
 impl LocalSgd {
@@ -33,6 +44,7 @@ impl LocalSgd {
             seed,
             machines,
             d: problem.data.d,
+            stale: StaleWeights::new(),
         }
     }
 }
@@ -47,13 +59,20 @@ impl Algorithm for LocalSgd {
     }
 
     fn step(&mut self, backend: &dyn Backend, iter: usize) -> crate::Result<IterationCost> {
+        // The machines epoch from the (possibly stale) snapshot; the
+        // fresh path neither copies nor allocates and is bitwise the
+        // synchronous update.
+        self.stale.record(&self.w);
+        let stale_base: Option<&[f32]> = self.stale.view();
+        let base: &[f32] = stale_base.unwrap_or(&self.w);
+
         let mut acc = vec![0.0f64; self.d];
         let h = backend.h_steps(self.parts[0].n_loc);
         for (k, part) in self.parts.iter().enumerate() {
             let seed = Lcg32::for_epoch(self.seed, iter as u32, k as u32).state;
             let wk = backend.local_sgd(
                 part,
-                &self.w,
+                base,
                 self.lambda as f32,
                 self.t0 as f32,
                 seed,
@@ -63,8 +82,19 @@ impl Algorithm for LocalSgd {
             }
         }
         let inv_m = 1.0 / self.machines as f64;
-        for (wv, a) in self.w.iter_mut().zip(&acc) {
-            *wv = (a * inv_m) as f32;
+        match stale_base {
+            // Delta derived from the stale base, applied to the live
+            // iterate — the stale-synchronous update rule.
+            Some(sb) => {
+                for ((wv, a), &b) in self.w.iter_mut().zip(&acc).zip(sb) {
+                    *wv += (a * inv_m) as f32 - b;
+                }
+            }
+            None => {
+                for (wv, a) in self.w.iter_mut().zip(&acc) {
+                    *wv = (a * inv_m) as f32;
+                }
+            }
         }
         self.t0 += h as f64;
         Ok(IterationCost {
@@ -77,6 +107,10 @@ impl Algorithm for LocalSgd {
 
     fn weights(&self) -> &[f32] {
         &self.w
+    }
+
+    fn set_staleness(&mut self, staleness: usize) {
+        self.stale.set_staleness(staleness);
     }
 }
 
@@ -114,6 +148,41 @@ mod tests {
         let s1 = sub_at(1);
         let s16 = sub_at(16);
         assert!(s1 < s16, "m=1 ({s1}) !< m=16 ({s16})");
+    }
+
+    #[test]
+    fn zero_staleness_is_bitwise_synchronous() {
+        let p = Problem::new(two_gaussians(256, 8, 2.0, 17), 1e-2);
+        let backend = NativeBackend;
+        let mut plain = LocalSgd::new(&p, 4, 3);
+        let mut staled = LocalSgd::new(&p, 4, 3);
+        for i in 0..15 {
+            plain.step(&backend, i).unwrap();
+            staled.set_staleness(0);
+            staled.step(&backend, i).unwrap();
+        }
+        assert_eq!(plain.weights(), staled.weights());
+    }
+
+    #[test]
+    fn staleness_degrades_convergence() {
+        let p = Problem::new(two_gaussians(256, 8, 2.0, 17), 1e-2);
+        let (p_star, _, _) = p.reference_solve(1e-7, 500);
+        let backend = NativeBackend;
+        let run = |tau: usize| {
+            let mut algo = LocalSgd::new(&p, 4, 3);
+            for i in 0..40 {
+                algo.set_staleness(tau);
+                algo.step(&backend, i).unwrap();
+            }
+            p.primal(algo.weights()) - p_star
+        };
+        let fresh = run(0);
+        let stale = run(16);
+        assert!(
+            stale > fresh,
+            "staleness 16 ({stale}) should converge worse than 0 ({fresh})"
+        );
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub mod local_sgd;
 pub mod native;
 pub mod problem;
 pub mod sgd;
+pub mod stale;
 pub mod trace;
 
 pub use backend::{Backend, HloBackend};
@@ -56,6 +57,14 @@ pub trait Algorithm {
     fn dual_sum(&self) -> Option<f64> {
         None
     }
+
+    /// Tell the algorithm how many iterations stale the model state its
+    /// machines read this iteration is (derived from the cluster
+    /// simulator's per-machine clocks under SSP/Async barrier modes).
+    /// Barrier-synchronous algorithms ignore it; the SGD variants
+    /// compute their updates against a bounded-stale weight snapshot,
+    /// which is where staleness genuinely costs convergence.
+    fn set_staleness(&mut self, _staleness: usize) {}
 }
 
 /// Typed identifier for the algorithms under study. The advisor's

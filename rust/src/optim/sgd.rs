@@ -6,9 +6,17 @@
 //! Pegasos-style step `η_t = 1/(λ(t + t₀))`. Per Dekel et al. /
 //! Li et al., convergence improves only ~√b with batch size — the
 //! degradation-with-parallelism the paper contrasts against CoCoA.
+//!
+//! Under relaxed barrier modes ([`crate::cluster::BarrierMode`]) the
+//! driver reports a read staleness τ per iteration: the gradient is
+//! then evaluated at the bounded-stale snapshot `w_{t−τ}` and applied
+//! to the current iterate — the classic asynchronous-SGD update, whose
+//! convergence genuinely degrades as τ grows. τ = 0 reproduces the
+//! synchronous step bit for bit.
 
 use super::backend::Backend;
 use super::problem::Problem;
+use super::stale::StaleWeights;
 use super::{Algorithm, IterationCost};
 use crate::data::Partition;
 use crate::util::rng::Pcg32;
@@ -25,6 +33,9 @@ pub struct MiniBatchSgd {
     machines: usize,
     d: usize,
     weights_buf: Vec<Vec<f32>>,
+    /// Bounded-stale snapshots of `w` (driver-fed staleness; fresh
+    /// under BSP).
+    stale: StaleWeights,
 }
 
 impl MiniBatchSgd {
@@ -48,6 +59,7 @@ impl MiniBatchSgd {
             parts,
             machines,
             weights_buf,
+            stale: StaleWeights::new(),
         }
     }
 }
@@ -75,6 +87,15 @@ impl Algorithm for MiniBatchSgd {
     }
 
     fn step(&mut self, backend: &dyn Backend, iter: usize) -> crate::Result<IterationCost> {
+        // Remember the current iterate so later (staler) steps can
+        // read it; the machines then evaluate their gradients at the
+        // (possibly stale) snapshot. The RNG stream is independent of
+        // staleness, so BSP and SSP(0) runs consume identical
+        // randomness, and the fresh path neither copies nor allocates.
+        self.stale.record(&self.w);
+        let stale_w: Option<&[f32]> = self.stale.view();
+        let read_w: &[f32] = stale_w.unwrap_or(&self.w);
+
         let local_b = self.batch / self.machines;
         let mut grad = vec![0.0f64; self.d];
         let mut sampled = 0usize;
@@ -88,7 +109,7 @@ impl Algorithm for MiniBatchSgd {
                 wt[i] = 1.0;
             }
             sampled += take;
-            let out = backend.grad(part, wt, &self.w)?;
+            let out = backend.grad(part, wt, read_w)?;
             for (g, &v) in grad.iter_mut().zip(&out.grad_sum) {
                 *g += v as f64;
             }
@@ -97,9 +118,21 @@ impl Algorithm for MiniBatchSgd {
         let t = iter as f64 + 1.0 + self.t_shift;
         let eta = 1.0 / (self.lambda * t);
         let scale = 1.0 / sampled.max(1) as f64;
-        for (wv, g) in self.w.iter_mut().zip(&grad) {
-            let full_grad = self.lambda * *wv as f64 + g * scale;
-            *wv -= (eta * full_grad) as f32;
+        match stale_w {
+            // Gradient from the stale point, applied to the live
+            // iterate (the asynchronous-SGD update rule).
+            Some(sv) => {
+                for ((wv, g), s) in self.w.iter_mut().zip(&grad).zip(sv) {
+                    let full_grad = self.lambda * *s as f64 + g * scale;
+                    *wv -= (eta * full_grad) as f32;
+                }
+            }
+            None => {
+                for (wv, g) in self.w.iter_mut().zip(&grad) {
+                    let full_grad = self.lambda * *wv as f64 + g * scale;
+                    *wv -= (eta * full_grad) as f32;
+                }
+            }
         }
         pegasos_project(&mut self.w, self.lambda);
 
@@ -118,6 +151,10 @@ impl Algorithm for MiniBatchSgd {
 
     fn weights(&self) -> &[f32] {
         &self.w
+    }
+
+    fn set_staleness(&mut self, staleness: usize) {
+        self.stale.set_staleness(staleness);
     }
 }
 
@@ -167,6 +204,43 @@ mod tests {
             c.step(&backend, i).unwrap();
         }
         assert_ne!(a.weights(), c.weights());
+    }
+
+    #[test]
+    fn zero_staleness_matches_never_calling_set_staleness() {
+        // The stale-snapshot plumbing must be invisible at τ = 0 —
+        // bit-identical weights to the plain synchronous step.
+        let p = problem();
+        let backend = NativeBackend;
+        let mut plain = MiniBatchSgd::new(&p, 4, 9);
+        let mut staled = MiniBatchSgd::new(&p, 4, 9);
+        for i in 0..20 {
+            plain.step(&backend, i).unwrap();
+            staled.set_staleness(0);
+            staled.step(&backend, i).unwrap();
+        }
+        assert_eq!(plain.weights(), staled.weights());
+    }
+
+    #[test]
+    fn staleness_degrades_convergence() {
+        let p = problem();
+        let (p_star, _, _) = p.reference_solve(1e-7, 500);
+        let backend = NativeBackend;
+        let run = |tau: usize| {
+            let mut algo = MiniBatchSgd::new(&p, 4, 1);
+            for i in 0..200 {
+                algo.set_staleness(if i >= tau { tau } else { 0 });
+                algo.step(&backend, i).unwrap();
+            }
+            p.primal(algo.weights()) - p_star
+        };
+        let fresh = run(0);
+        let stale = run(24);
+        assert!(
+            stale > fresh,
+            "staleness 24 ({stale}) should converge worse than 0 ({fresh})"
+        );
     }
 
     #[test]

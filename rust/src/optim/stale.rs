@@ -1,0 +1,140 @@
+//! Bounded-stale weight snapshots — the shared machinery behind the
+//! SGD family's staleness-aware steps.
+//!
+//! Under relaxed barrier modes the driver reports a read staleness τ
+//! before each step; the algorithm then computes its update against
+//! the iterate from τ steps ago and applies it to the live weights.
+//! This type owns the snapshot ring and the τ bookkeeping so both
+//! [`crate::optim::MiniBatchSgd`] and [`crate::optim::LocalSgd`]
+//! share one indexing rule.
+//!
+//! The ring only starts retaining snapshots once a nonzero τ has been
+//! seen (barrier-synchronous runs never arm it), so the pure-BSP path
+//! allocates nothing. The first stale step after arming reads the
+//! live iterate — it has no history yet — which under-reports that
+//! one step's staleness by at most τ and is exact from the next step
+//! on.
+
+use std::collections::VecDeque;
+
+/// Oldest snapshot retained for stale reads. Async staleness reports
+/// are clamped here (SSP's are bounded by its staleness parameter);
+/// the cluster simulator's staleness-reporting window is defined in
+/// terms of this constant so the two bounds cannot drift apart.
+pub const MAX_STALE_SNAPSHOTS: usize = 64;
+
+/// A bounded ring of recent iterates plus the current read staleness.
+#[derive(Debug, Clone, Default)]
+pub struct StaleWeights {
+    staleness: usize,
+    /// Set once a nonzero staleness is reported; recording starts
+    /// then and never stops (τ may oscillate back through 0).
+    armed: bool,
+    /// Recent iterates, newest last (`back()` == the weights recorded
+    /// at the start of the current step).
+    snapshots: VecDeque<Vec<f32>>,
+}
+
+impl StaleWeights {
+    pub fn new() -> StaleWeights {
+        StaleWeights::default()
+    }
+
+    /// Set the read staleness for the next step (driver-fed, clamped
+    /// to the retention window).
+    pub fn set_staleness(&mut self, staleness: usize) {
+        self.staleness = staleness.min(MAX_STALE_SNAPSHOTS);
+        if staleness > 0 {
+            self.armed = true;
+        }
+    }
+
+    /// Remember the live iterate at the start of a step so later
+    /// (staler) steps can read it. A no-op until the first nonzero
+    /// staleness arms the ring — barrier-synchronous runs never copy.
+    pub fn record(&mut self, w: &[f32]) {
+        if !self.armed {
+            return;
+        }
+        self.snapshots.push_back(w.to_vec());
+        while self.snapshots.len() > MAX_STALE_SNAPSHOTS + 1 {
+            self.snapshots.pop_front();
+        }
+    }
+
+    /// The stale iterate this step's machines read: the snapshot
+    /// `staleness` steps back (clamped to the oldest retained), or
+    /// `None` when reads are fresh — callers then use the live
+    /// weights directly, with no copy.
+    pub fn view(&self) -> Option<&[f32]> {
+        if self.staleness == 0 || self.snapshots.len() <= 1 {
+            return None;
+        }
+        let idx = self.snapshots.len().saturating_sub(self.staleness + 1);
+        Some(&self.snapshots[idx])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(v: f32) -> Vec<f32> {
+        vec![v; 4]
+    }
+
+    #[test]
+    fn fresh_runs_never_arm_or_allocate() {
+        let mut s = StaleWeights::new();
+        for i in 0..10 {
+            s.set_staleness(0);
+            s.record(&w(i as f32));
+        }
+        assert!(s.view().is_none());
+        assert!(s.snapshots.is_empty(), "BSP path must not retain snapshots");
+    }
+
+    #[test]
+    fn view_indexes_tau_steps_back() {
+        let mut s = StaleWeights::new();
+        s.set_staleness(2); // arms the ring
+        for i in 0..6 {
+            s.record(&w(i as f32));
+        }
+        // back() is w(5); τ = 2 → w(3).
+        assert_eq!(s.view().unwrap()[0], 3.0);
+        s.set_staleness(100);
+        // Clamped to the oldest retained snapshot.
+        assert_eq!(s.view().unwrap()[0], 0.0);
+        // τ back to 0: reads are fresh again, but the ring stays armed
+        // (later stale reads need today's history).
+        s.set_staleness(0);
+        assert!(s.view().is_none());
+        s.record(&w(6.0));
+        assert_eq!(s.snapshots.len(), 7);
+    }
+
+    #[test]
+    fn first_stale_step_has_no_history_yet() {
+        let mut s = StaleWeights::new();
+        s.set_staleness(0);
+        s.record(&w(0.0)); // not armed — dropped
+        s.set_staleness(3);
+        s.record(&w(1.0)); // first armed record
+        assert!(s.view().is_none(), "single snapshot == the live iterate");
+        s.record(&w(2.0));
+        assert_eq!(s.view().unwrap()[0], 1.0);
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let mut s = StaleWeights::new();
+        s.set_staleness(MAX_STALE_SNAPSHOTS);
+        for i in 0..(3 * MAX_STALE_SNAPSHOTS) {
+            s.record(&w(i as f32));
+        }
+        let oldest = s.view().unwrap()[0] as usize;
+        assert_eq!(oldest, 3 * MAX_STALE_SNAPSHOTS - 1 - MAX_STALE_SNAPSHOTS);
+        assert_eq!(s.snapshots.len(), MAX_STALE_SNAPSHOTS + 1);
+    }
+}

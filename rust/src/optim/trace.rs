@@ -2,6 +2,7 @@
 
 use std::path::Path;
 
+use crate::cluster::BarrierMode;
 use crate::util::csv::Table;
 
 /// One observation: objective state after a BSP iteration.
@@ -19,11 +20,14 @@ pub struct Record {
     pub subopt: f64,
 }
 
-/// A full run: algorithm × machine count × the per-iteration records.
+/// A full run: algorithm × machine count × barrier mode × the
+/// per-iteration records.
 #[derive(Debug, Clone)]
 pub struct Trace {
     pub algorithm: String,
     pub machines: usize,
+    /// Coordination regime the run was priced under (BSP by default).
+    pub barrier_mode: BarrierMode,
     pub p_star: f64,
     pub records: Vec<Record>,
 }
@@ -33,6 +37,7 @@ impl Trace {
         Trace {
             algorithm: algorithm.into(),
             machines,
+            barrier_mode: BarrierMode::Bsp,
             p_star,
             records: Vec::new(),
         }
@@ -88,7 +93,7 @@ pub struct TraceSet {
 }
 
 const COLUMNS: &[&str] = &[
-    "algo_id", "machines", "iter", "sim_time", "primal", "dual", "subopt", "p_star",
+    "algo_id", "machines", "iter", "sim_time", "primal", "dual", "subopt", "p_star", "barrier",
 ];
 
 /// Algorithm name ↔ numeric id for the CSV encoding.
@@ -121,11 +126,24 @@ impl TraceSet {
         self.traces.push(t);
     }
 
-    /// Find the trace for (algorithm, machines).
+    /// Find the trace for (algorithm, machines) — first match in
+    /// insertion order (unique in single-mode sets).
     pub fn find(&self, algorithm: &str, machines: usize) -> Option<&Trace> {
         self.traces
             .iter()
             .find(|t| t.algorithm == algorithm && t.machines == machines)
+    }
+
+    /// Find the trace for (algorithm, machines, barrier mode).
+    pub fn find_mode(
+        &self,
+        algorithm: &str,
+        machines: usize,
+        mode: BarrierMode,
+    ) -> Option<&Trace> {
+        self.traces.iter().find(|t| {
+            t.algorithm == algorithm && t.machines == machines && t.barrier_mode == mode
+        })
     }
 
     /// Distinct machine counts present (sorted).
@@ -150,6 +168,7 @@ impl TraceSet {
                     r.dual,
                     r.subopt,
                     tr.p_star,
+                    tr.barrier_mode.csv_id(),
                 ]);
             }
         }
@@ -162,14 +181,17 @@ impl TraceSet {
         for row in &t.rows {
             let algo = algo_name(row[0]);
             let machines = row[1] as usize;
-            let trace = match set
-                .traces
-                .iter_mut()
-                .find(|tr| tr.algorithm == algo && tr.machines == machines)
-            {
+            // Column 8 was added with the barrier-mode axis; tables
+            // written before it default to BSP.
+            let mode = BarrierMode::from_csv_id(row.get(8).copied().unwrap_or(0.0));
+            let trace = match set.traces.iter_mut().find(|tr| {
+                tr.algorithm == algo && tr.machines == machines && tr.barrier_mode == mode
+            }) {
                 Some(tr) => tr,
                 None => {
-                    set.traces.push(Trace::new(algo.clone(), machines, row[7]));
+                    let mut tr = Trace::new(algo.clone(), machines, row[7]);
+                    tr.barrier_mode = mode;
+                    set.traces.push(tr);
                     set.traces.last_mut().unwrap()
                 }
             };
@@ -245,5 +267,34 @@ mod tests {
         set.push(sample_trace("exotic", 2));
         let back = TraceSet::from_table(&set.to_table()).unwrap();
         assert_eq!(back.traces[0].algorithm, "algo99");
+    }
+
+    #[test]
+    fn barrier_mode_roundtrips_and_separates_traces() {
+        let mut set = TraceSet::default();
+        for mode in [
+            BarrierMode::Bsp,
+            BarrierMode::Ssp { staleness: 4 },
+            BarrierMode::Async,
+        ] {
+            let mut t = sample_trace("local-sgd", 8);
+            t.barrier_mode = mode;
+            set.push(t);
+        }
+        let back = TraceSet::from_table(&set.to_table()).unwrap();
+        // Same (algo, m) but distinct modes stay distinct traces.
+        assert_eq!(back.traces.len(), 3);
+        for mode in [
+            BarrierMode::Bsp,
+            BarrierMode::Ssp { staleness: 4 },
+            BarrierMode::Async,
+        ] {
+            let t = back.find_mode("local-sgd", 8, mode).unwrap();
+            assert_eq!(t.records.len(), 10);
+        }
+        // Legacy 8-column rows (no barrier column) default to BSP.
+        assert_eq!(BarrierMode::from_csv_id(0.0), BarrierMode::Bsp);
+        assert_eq!(BarrierMode::from_csv_id(-1.0), BarrierMode::Async);
+        assert_eq!(BarrierMode::from_csv_id(5.0), BarrierMode::Ssp { staleness: 4 });
     }
 }

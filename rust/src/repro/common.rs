@@ -9,9 +9,9 @@
 use std::path::{Path, PathBuf};
 
 use crate::advisor::{
-    artifact_path, save_artifact, AlgorithmId, CombinedModel, ModelKey, ModelRegistry,
+    artifact_path, save_artifact, AlgorithmId, CombinedModel, ModeModel, ModelKey, ModelRegistry,
 };
-use crate::cluster::{BspSim, HardwareProfile};
+use crate::cluster::{BarrierMode, BspSim, ClusterSim, HardwareProfile};
 use crate::config::ExperimentConfig;
 use crate::data::synth::mnist_like;
 use crate::ernest::{ErnestModel, Observation};
@@ -179,15 +179,31 @@ impl ReproContext {
         self.run_grid(&SweepGrid {
             algorithms: algos.iter().map(|s| s.to_string()).collect(),
             machines: vec![machines],
+            modes: vec![BarrierMode::Bsp],
             seeds: 1,
             base_seed: self.cfg.seed,
             run: self.run_config(),
         })
     }
 
-    /// Run a machine sweep for one algorithm.
+    /// Run a machine sweep for one algorithm (BSP).
     pub fn run_sweep(&self, algo_name: &str) -> crate::Result<TraceSet> {
-        let traces = self.run_traces(algo_name, &self.cfg.machines, self.run_config())?;
+        self.run_sweep_in_mode(algo_name, BarrierMode::Bsp)
+    }
+
+    /// Run a machine sweep for one algorithm under one barrier mode.
+    pub fn run_sweep_in_mode(
+        &self,
+        algo_name: &str,
+        mode: BarrierMode,
+    ) -> crate::Result<TraceSet> {
+        let traces = self.run_grid(&SweepGrid::single_in_mode(
+            algo_name,
+            &self.cfg.machines,
+            mode,
+            self.cfg.seed,
+            self.run_config(),
+        ))?;
         let mut set = TraceSet::default();
         for t in traces {
             set.push(t);
@@ -270,19 +286,45 @@ impl ReproContext {
 
     /// Fit the full combined model for one algorithm: convergence
     /// model from the machine sweep, system model from Ernest-style
-    /// profiling. This is the expensive half of the fit-once /
-    /// query-many split — `hemingway fit` persists the result so
-    /// `advise` and `serve` never pay it again.
+    /// profiling. Every non-BSP mode in the config's `barrier_modes`
+    /// gets its own (f, g) pair, fitted from a sweep simulated under
+    /// that mode (the sweep also supplies the mode's iteration-time
+    /// observations — relaxed barriers change f as well as g). This is
+    /// the expensive half of the fit-once / query-many split —
+    /// `hemingway fit` persists the result so `advise` and `serve`
+    /// never pay it again.
     pub fn fit_combined(&self, algo: AlgorithmId) -> crate::Result<CombinedModel> {
         let traces = self.run_sweep(algo.as_str())?;
         let pts = points_from_traces(&traces.traces);
         let conv = ConvergenceModel::fit(&pts, FeatureLibrary::standard(), self.cfg.seed)?;
         let ernest = self.fit_ernest(algo.as_str())?;
-        Ok(CombinedModel {
-            ernest,
-            conv,
-            input_size: self.problem.data.n as f64,
-        })
+        let mut model = CombinedModel::new(ernest, conv, self.problem.data.n as f64);
+        for &mode in &self.cfg.barrier_modes {
+            if mode.is_bsp() {
+                continue;
+            }
+            let mode_traces = self.run_sweep_in_mode(algo.as_str(), mode)?;
+            let conv = ConvergenceModel::fit(
+                &points_from_traces(&mode_traces.traces),
+                FeatureLibrary::standard(),
+                self.cfg.seed,
+            )?;
+            let obs = observations_from_traces(
+                &mode_traces.traces,
+                self.problem.data.n as f64,
+            );
+            let ernest = crate::ernest::ErnestModel::fit(&obs)?;
+            crate::log_info!(
+                "{algo} {mode}: conv R²={:.4}, f(θ)=[{:.4}, {:.3e}, {:.4}, {:.5}]",
+                conv.train_r2,
+                ernest.theta[0],
+                ernest.theta[1],
+                ernest.theta[2],
+                ernest.theta[3]
+            );
+            model.insert_mode(mode, ModeModel { ernest, conv });
+        }
+        Ok(model)
     }
 
     /// Write a CSV and echo its path.
@@ -317,19 +359,45 @@ fn run_cell(
     run_cfg: &RunConfig,
 ) -> crate::Result<Trace> {
     let mut algo = by_name(&cell.algorithm, problem, cell.machines, cell.seed as u32)?;
-    let mut sim = BspSim::new(profile.clone(), cell.seed ^ cell.machines as u64);
+    // Same seed across modes: the modes price one noise realization.
+    let mut sim = ClusterSim::with_mode(
+        profile.clone(),
+        cell.mode,
+        cell.seed ^ cell.machines as u64,
+    );
     let t0 = std::time::Instant::now();
     let trace = run(algo.as_mut(), backend, problem, &mut sim, p_star, run_cfg)?;
     crate::log_info!(
-        "{} m={} rep={}: {} iters, final subopt {:.2e} ({:.1}s wall)",
+        "{} m={} mode={} rep={}: {} iters, final subopt {:.2e} ({:.1}s wall)",
         cell.algorithm,
         cell.machines,
+        cell.mode,
         cell.replicate,
         trace.records.last().map(|r| r.iter).unwrap_or(0),
         trace.final_subopt(),
         t0.elapsed().as_secs_f64()
     );
     Ok(trace)
+}
+
+/// Per-iteration timing observations from finished traces — how the
+/// non-BSP modes get their Ernest fits (their iteration time is a
+/// property of the whole clock simulation, not of one barrier max, so
+/// it is measured from the same sweeps that feed the convergence fit).
+pub fn observations_from_traces(traces: &[Trace], size: f64) -> Vec<Observation> {
+    let mut obs = Vec::new();
+    for t in traces {
+        for dt in t.iter_times() {
+            if dt.is_finite() && dt > 0.0 {
+                obs.push(Observation {
+                    machines: t.machines,
+                    size,
+                    time: dt,
+                });
+            }
+        }
+    }
+    obs
 }
 
 /// Profile one (machines, fraction) candidate on its own subsampled

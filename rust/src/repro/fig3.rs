@@ -80,11 +80,7 @@ pub fn fig3a(ctx: &ReproContext, fit: &SweepFit, cap: Option<usize>) -> crate::R
 pub fn fig3b(ctx: &ReproContext, fit: &SweepFit) -> crate::Result<String> {
     println!("== Figure 3(b): combined Ernest+Hemingway model vs time ==");
     let ernest = ctx.fit_ernest("cocoa+")?;
-    let combined = CombinedModel {
-        ernest,
-        conv: fit.model.clone(),
-        input_size: ctx.problem.data.n as f64,
-    };
+    let combined = CombinedModel::new(ernest, fit.model.clone(), ctx.problem.data.n as f64);
     let mut table = Table::new(&["machines", "time", "true_subopt", "model_subopt"]);
     let mut series = Vec::new();
     let mut lnerrs = Vec::new();

@@ -94,11 +94,7 @@ pub fn table_advisor(ctx: &ReproContext, cocoa_plus: &SweepFit) -> crate::Result
                 algorithm: algo,
                 context: context.clone(),
             },
-            CombinedModel {
-                ernest,
-                conv,
-                input_size: size,
-            },
+            CombinedModel::new(ernest, conv, size),
         );
         measured.push((algo, traces));
     }

@@ -13,9 +13,12 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
+use crate::cluster::BarrierMode;
 use crate::optim::trace::{Record, Trace};
 
-const MAGIC: &str = "hemingway-trace v1";
+// v2 added the barrier-mode line; v1 files are treated as misses and
+// regenerated (the cache is always reconstructible).
+const MAGIC: &str = "hemingway-trace v2";
 
 /// FNV-1a 64-bit hash of a cache key (names the on-disk file).
 pub fn hash_key(key: &str) -> u64 {
@@ -36,9 +39,10 @@ pub fn serialize_trace(key: &str, trace: &Trace) -> String {
     s.push_str(key);
     s.push('\n');
     s.push_str(&format!(
-        "algorithm={}\nmachines={}\np_star={}\nrecords={}\n",
+        "algorithm={}\nmachines={}\nbarrier={}\np_star={}\nrecords={}\n",
         trace.algorithm,
         trace.machines,
+        trace.barrier_mode,
         trace.p_star,
         trace.records.len()
     ));
@@ -66,6 +70,7 @@ pub fn parse_trace(text: &str) -> crate::Result<(String, Trace)> {
     let machines: usize = field(lines.next(), "machines")?
         .parse()
         .map_err(|e| crate::err!("bad machines field: {e}"))?;
+    let barrier_mode = BarrierMode::parse(&field(lines.next(), "barrier")?)?;
     let p_star: f64 = field(lines.next(), "p_star")?
         .parse()
         .map_err(|e| crate::err!("bad p_star field: {e}"))?;
@@ -73,6 +78,7 @@ pub fn parse_trace(text: &str) -> crate::Result<(String, Trace)> {
         .parse()
         .map_err(|e| crate::err!("bad records field: {e}"))?;
     let mut trace = Trace::new(algorithm, machines, p_star);
+    trace.barrier_mode = barrier_mode;
     for i in 0..n {
         let line = lines
             .next()
@@ -221,7 +227,8 @@ mod tests {
 
     #[test]
     fn serialize_parse_roundtrip_is_byte_identical() {
-        let t = sample_trace();
+        let mut t = sample_trace();
+        t.barrier_mode = BarrierMode::Ssp { staleness: 3 };
         let bytes = serialize_trace("k1", &t);
         let (key, back) = parse_trace(&bytes).unwrap();
         assert_eq!(key, "k1");
@@ -229,7 +236,21 @@ mod tests {
         // every f64 (including NaN) survived the round trip.
         assert_eq!(serialize_trace("k1", &back), bytes);
         assert_eq!(back.records.len(), t.records.len());
+        assert_eq!(back.barrier_mode, BarrierMode::Ssp { staleness: 3 });
         assert!(back.records[0].dual.is_nan());
+    }
+
+    #[test]
+    fn v1_files_and_unknown_modes_are_rejected() {
+        // A pre-barrier-axis cache file (old magic) parses as an error
+        // — the cache layer treats that as a miss and regenerates.
+        let old = "hemingway-trace v1\nkey=k\nalgorithm=cocoa\nmachines=4\np_star=0\nrecords=0\n";
+        assert!(parse_trace(old).is_err());
+        // So does a file naming a barrier mode this build doesn't know.
+        let weird = serialize_trace("k", &sample_trace())
+            .replace("barrier=bsp", "barrier=quantum");
+        let err = parse_trace(&weird).unwrap_err().to_string();
+        assert!(err.contains("barrier mode"), "{err}");
     }
 
     #[test]

@@ -108,11 +108,13 @@ impl SweepEngine {
     }
 }
 
-/// Seed-replication aggregate for one (algorithm, machines) cell.
+/// Seed-replication aggregate for one (algorithm, machines, barrier
+/// mode) cell.
 #[derive(Debug, Clone)]
 pub struct CellAggregate {
     pub algorithm: String,
     pub machines: usize,
+    pub barrier_mode: crate::cluster::BarrierMode,
     pub replicates: usize,
     /// Replicates that reached the suboptimality target.
     pub reached: usize,
@@ -139,24 +141,24 @@ fn agg_or_nan(xs: &[f64]) -> MeanStd {
     }
 }
 
-/// Group replicate traces by (algorithm, machines) — first-seen order —
-/// and aggregate each cell's metrics with mean ± stddev
-/// ([`stats::mean_stddev`]). Cells no replicate of which reached the
-/// target get NaN (not 0.0) for the to-target metrics.
+/// Group replicate traces by (algorithm, machines, barrier mode) —
+/// first-seen order — and aggregate each cell's metrics with mean ±
+/// stddev ([`stats::mean_stddev`]). Cells no replicate of which
+/// reached the target get NaN (not 0.0) for the to-target metrics.
 pub fn aggregate(traces: &[Trace], target_subopt: f64) -> Vec<CellAggregate> {
-    let mut order: Vec<(String, usize)> = Vec::new();
+    let mut order: Vec<(String, usize, crate::cluster::BarrierMode)> = Vec::new();
     for t in traces {
-        let k = (t.algorithm.clone(), t.machines);
+        let k = (t.algorithm.clone(), t.machines, t.barrier_mode);
         if !order.contains(&k) {
             order.push(k);
         }
     }
     order
         .into_iter()
-        .map(|(algo, m)| {
+        .map(|(algo, m, mode)| {
             let group: Vec<&Trace> = traces
                 .iter()
-                .filter(|t| t.algorithm == algo && t.machines == m)
+                .filter(|t| t.algorithm == algo && t.machines == m && t.barrier_mode == mode)
                 .collect();
             let iters: Vec<f64> = group
                 .iter()
@@ -176,6 +178,7 @@ pub fn aggregate(traces: &[Trace], target_subopt: f64) -> Vec<CellAggregate> {
             CellAggregate {
                 algorithm: algo,
                 machines: m,
+                barrier_mode: mode,
                 replicates: group.len(),
                 reached: iters.len(),
                 iters_to_target: agg_or_nan(&iters),
@@ -201,6 +204,7 @@ mod tests {
     /// A synthetic runner whose trace is a pure function of the cell.
     fn synth_runner(cell: &CellSpec) -> crate::Result<Trace> {
         let mut t = Trace::new(cell.algorithm.clone(), cell.machines, 0.0);
+        t.barrier_mode = cell.mode;
         let decay = 0.3 + (cell.seed % 7) as f64 * 0.05;
         for i in 0..20 {
             let subopt = (-decay * i as f64 / cell.machines as f64).exp();
@@ -219,6 +223,7 @@ mod tests {
         SweepGrid {
             algorithms: vec!["cocoa".into(), "cocoa+".into()],
             machines: vec![1, 2, 4, 8],
+            modes: vec![crate::cluster::BarrierMode::Bsp],
             seeds,
             base_seed: 7,
             run: RunConfig::default(),
@@ -255,14 +260,16 @@ mod tests {
         let g = SweepGrid {
             algorithms: vec!["cocoa".into()],
             machines: vec![1, 2, 4],
+            modes: vec![crate::cluster::BarrierMode::Bsp],
             seeds: 2,
             base_seed: 11,
             run: run_cfg.clone(),
         };
         let runner = |cell: &CellSpec| -> crate::Result<Trace> {
             let mut algo = by_name(&cell.algorithm, &problem, cell.machines, cell.seed as u32)?;
-            let mut sim = BspSim::new(
+            let mut sim = BspSim::with_mode(
                 HardwareProfile::local48(),
+                cell.mode,
                 cell.seed ^ cell.machines as u64,
             );
             run(
@@ -378,6 +385,36 @@ mod tests {
         assert!(unreached[0].iters_to_target.mean.is_nan());
         assert!(unreached[0].time_to_target.mean.is_nan());
         assert!(!unreached[0].final_subopt.mean.is_nan());
+    }
+
+    #[test]
+    fn aggregate_separates_barrier_modes() {
+        use crate::cluster::BarrierMode;
+        let mk = |mode: BarrierMode| {
+            let mut t = Trace::new("local-sgd", 8, 0.0);
+            t.barrier_mode = mode;
+            for i in 0..5 {
+                t.push(Record {
+                    iter: i,
+                    sim_time: i as f64,
+                    primal: 1.0,
+                    dual: f64::NAN,
+                    subopt: 1.0,
+                });
+            }
+            t
+        };
+        let traces = vec![
+            mk(BarrierMode::Bsp),
+            mk(BarrierMode::Ssp { staleness: 2 }),
+            mk(BarrierMode::Bsp),
+        ];
+        let aggs = aggregate(&traces, 1e-4);
+        assert_eq!(aggs.len(), 2);
+        assert_eq!(aggs[0].barrier_mode, BarrierMode::Bsp);
+        assert_eq!(aggs[0].replicates, 2);
+        assert_eq!(aggs[1].barrier_mode, BarrierMode::Ssp { staleness: 2 });
+        assert_eq!(aggs[1].replicates, 1);
     }
 
     #[test]

@@ -1,19 +1,27 @@
 //! Grid specification for sweep runs: which (algorithm, machines,
-//! seed-replicate) cells to execute, and the deterministic per-cell
-//! seed derivation that makes the fan-out order-independent.
+//! barrier-mode, seed-replicate) cells to execute, and the
+//! deterministic per-cell seed derivation that makes the fan-out
+//! order-independent.
 
+use crate::cluster::BarrierMode;
 use crate::optim::RunConfig;
 
-/// One cell of a sweep grid: a single (algorithm, machines, seed) run.
+/// One cell of a sweep grid: a single (algorithm, machines, barrier
+/// mode, seed) run.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CellSpec {
     pub algorithm: String,
     pub machines: usize,
+    /// Coordination regime the cell's simulator runs under.
+    pub mode: BarrierMode,
     /// Replicate index (0-based) along the seed axis.
     pub replicate: usize,
     /// Fully-mixed RNG seed for this cell — a pure function of the
     /// grid's base seed and the replicate index, never of execution
     /// order, so parallel and serial sweeps produce identical traces.
+    /// Shared across barrier modes on purpose: the modes then price
+    /// the same noise realization, making cross-mode comparisons
+    /// paired rather than merely distributional.
     pub seed: u64,
 }
 
@@ -37,44 +45,71 @@ pub fn cell_seed(base: u64, replicate: usize) -> u64 {
     }
 }
 
-/// A sweep grid: algorithms × machines × seed replicates, plus the
-/// stopping rules every cell shares.
+/// A sweep grid: algorithms × machines × barrier modes × seed
+/// replicates, plus the stopping rules every cell shares.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
     pub algorithms: Vec<String>,
     pub machines: Vec<usize>,
-    /// Seed replicates per (algorithm, machines) cell (≥ 1).
+    /// Barrier modes to sweep (≥ 1 entry; `[Bsp]` is the historical
+    /// single-mode shape). A staleness sweep is a list of
+    /// `Ssp { staleness }` entries.
+    pub modes: Vec<BarrierMode>,
+    /// Seed replicates per (algorithm, machines, mode) cell (≥ 1).
     pub seeds: usize,
     pub base_seed: u64,
     pub run: RunConfig,
 }
 
 impl SweepGrid {
-    /// A one-algorithm, single-seed grid (the historical sweep shape).
+    /// A one-algorithm, single-seed, BSP grid (the historical shape).
     pub fn single(algorithm: &str, machines: &[usize], base_seed: u64, run: RunConfig) -> SweepGrid {
+        Self::single_in_mode(algorithm, machines, BarrierMode::Bsp, base_seed, run)
+    }
+
+    /// A one-algorithm, single-seed grid under one barrier mode.
+    pub fn single_in_mode(
+        algorithm: &str,
+        machines: &[usize],
+        mode: BarrierMode,
+        base_seed: u64,
+        run: RunConfig,
+    ) -> SweepGrid {
         SweepGrid {
             algorithms: vec![algorithm.to_string()],
             machines: machines.to_vec(),
+            modes: vec![mode],
             seeds: 1,
             base_seed,
             run,
         }
     }
 
-    /// Expand into cells, algorithm-major then machines then replicate.
-    /// The order is part of the contract: results come back in exactly
-    /// this order regardless of how many threads executed them.
+    /// Expand into cells, algorithm-major then machines then mode then
+    /// replicate. The order is part of the contract: results come back
+    /// in exactly this order regardless of how many threads executed
+    /// them.
     pub fn cells(&self) -> Vec<CellSpec> {
-        let mut out = Vec::with_capacity(self.algorithms.len() * self.machines.len() * self.seeds);
+        let modes: &[BarrierMode] = if self.modes.is_empty() {
+            &[BarrierMode::Bsp]
+        } else {
+            &self.modes
+        };
+        let mut out = Vec::with_capacity(
+            self.algorithms.len() * self.machines.len() * modes.len() * self.seeds,
+        );
         for algo in &self.algorithms {
             for &m in &self.machines {
-                for rep in 0..self.seeds.max(1) {
-                    out.push(CellSpec {
-                        algorithm: algo.clone(),
-                        machines: m,
-                        replicate: rep,
-                        seed: cell_seed(self.base_seed, rep),
-                    });
+                for &mode in modes {
+                    for rep in 0..self.seeds.max(1) {
+                        out.push(CellSpec {
+                            algorithm: algo.clone(),
+                            machines: m,
+                            mode,
+                            replicate: rep,
+                            seed: cell_seed(self.base_seed, rep),
+                        });
+                    }
                 }
             }
         }
@@ -96,8 +131,8 @@ impl SweepGrid {
 /// caller key the trace cache through this single function.
 pub fn cell_key(context_key: &str, cell: &CellSpec) -> String {
     format!(
-        "{context_key}|algo={};m={};rep={};seed={}",
-        cell.algorithm, cell.machines, cell.replicate, cell.seed
+        "{context_key}|algo={};m={};mode={};rep={};seed={}",
+        cell.algorithm, cell.machines, cell.mode, cell.replicate, cell.seed
     )
 }
 
@@ -109,6 +144,7 @@ mod tests {
         SweepGrid {
             algorithms: vec!["cocoa".into(), "gd".into()],
             machines: vec![1, 4],
+            modes: vec![BarrierMode::Bsp],
             seeds: 3,
             base_seed: 42,
             run: RunConfig::default(),
@@ -124,8 +160,32 @@ mod tests {
         assert_eq!((cells[2].machines, cells[2].replicate), (1, 2));
         assert_eq!(cells[3].machines, 4);
         assert_eq!(cells[6].algorithm, "gd");
+        assert!(cells.iter().all(|c| c.mode == BarrierMode::Bsp));
         // Twice-expanded grids agree exactly.
         assert_eq!(grid().cells(), grid().cells());
+    }
+
+    #[test]
+    fn mode_axis_multiplies_cells_and_shares_seeds() {
+        let mut g = grid();
+        g.modes = vec![
+            BarrierMode::Bsp,
+            BarrierMode::Ssp { staleness: 2 },
+            BarrierMode::Async,
+        ];
+        let cells = g.cells();
+        assert_eq!(cells.len(), 2 * 2 * 3 * 3);
+        // Mode varies inside (algorithm, machines), replicate inside
+        // mode — and the same replicate carries the same seed across
+        // modes (paired noise realizations).
+        assert_eq!(cells[0].mode, BarrierMode::Bsp);
+        assert_eq!(cells[3].mode, BarrierMode::Ssp { staleness: 2 });
+        assert_eq!(cells[0].seed, cells[3].seed);
+        assert_eq!(cells[0].machines, cells[3].machines);
+        // An empty mode list behaves as [Bsp].
+        g.modes.clear();
+        assert_eq!(g.cells().len(), 2 * 2 * 3);
+        assert!(g.cells().iter().all(|c| c.mode == BarrierMode::Bsp));
     }
 
     #[test]
@@ -148,6 +208,10 @@ mod tests {
         assert_ne!(a, b);
         assert_ne!(a, c);
         assert_eq!(a, cell_key("ctx", &cells[0]));
+        // A mode change alone moves the key too.
+        let mut ssp = cells[0].clone();
+        ssp.mode = BarrierMode::Ssp { staleness: 1 };
+        assert_ne!(a, cell_key("ctx", &ssp));
     }
 
     #[test]

@@ -121,6 +121,75 @@ fn advise_from_artifacts_then_serve_three_queries() {
 }
 
 #[test]
+fn serve_answers_barrier_mode_queries_and_legacy_stays_bsp() {
+    use hemingway::cluster::BarrierMode;
+
+    let mut cfg = small_cfg("modes");
+    // A staleness-aware algorithm and a non-trivial mode set.
+    cfg.algorithms = vec!["local-sgd".into()];
+    cfg.target_subopt = 1e-2;
+    cfg.barrier_modes = vec![
+        BarrierMode::Bsp,
+        BarrierMode::Ssp { staleness: 2 },
+        BarrierMode::Async,
+    ];
+    let _ = std::fs::remove_dir_all(&cfg.out_dir);
+    let registry = load_or_fit_registry(&cfg, true, &[AlgorithmId::LocalSgd]).unwrap();
+    assert_eq!(registry.len(), 1);
+
+    // One serve loop: a legacy query (no barrier_mode — wire compat),
+    // an explicit mode pin, the cross-mode search, and the model list.
+    // ε = 0.1 sits far above any fitted prediction floor (¼ of the
+    // smallest observed suboptimality), so every model can answer.
+    let input = b"{\"query\":\"fastest_to\",\"eps\":0.1}\n\
+                  {\"query\":\"fastest_to\",\"eps\":0.1,\"barrier_mode\":\"ssp:2\"}\n\
+                  {\"query\":\"best_at\",\"budget\":10,\"barrier_mode\":\"any\"}\n\
+                  {\"query\":\"fastest_to\",\"eps\":0.1,\"barrier_mode\":\"any\"}\n\
+                  {\"query\":\"models\"}\n";
+    let mut out = Vec::new();
+    let stats = hemingway::advisor::serve(&registry, &input[..], &mut out).unwrap();
+    assert_eq!(stats.queries, 5);
+    assert_eq!(stats.errors, 0, "{}", String::from_utf8_lossy(&out));
+    let lines: Vec<Json> = std::str::from_utf8(&out)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+
+    // Legacy pin: a query without the field answers pure BSP, exactly
+    // as before the barrier axis existed.
+    assert_eq!(lines[0].req_str("barrier_mode").unwrap(), "bsp");
+    // Pinned mode is echoed back.
+    assert_eq!(lines[1].req_str("barrier_mode").unwrap(), "ssp:2");
+    assert!(lines[2].get("predicted_suboptimality").is_some());
+    // The any-search ranges over a superset of the BSP candidates, so
+    // its answer can only be at least as fast.
+    let t_bsp = lines[0].req_f64("predicted_seconds").unwrap();
+    let t_any = lines[3].req_f64("predicted_seconds").unwrap();
+    assert!(t_any <= t_bsp, "any={t_any} bsp={t_bsp}");
+    // The model list advertises every fitted mode.
+    let models = lines[4].get("models").and_then(Json::as_array).unwrap();
+    let modes = models[0].get("barrier_modes").and_then(Json::as_array).unwrap();
+    let mode_strs: Vec<&str> = modes.iter().filter_map(Json::as_str).collect();
+    assert_eq!(mode_strs, vec!["bsp", "ssp:2", "async"]);
+
+    // Typed path agrees with the wire path, and the relaxed-barrier
+    // candidates genuinely compete: with stragglers in the profile the
+    // per-iteration clock under Async is strictly cheaper, so the
+    // cross-mode recommendation is not forced back to BSP by fiat.
+    let rec_any = registry
+        .answer(
+            &Query::fastest_to(0.1).with(hemingway::advisor::Constraints {
+                barrier_mode: hemingway::advisor::ModeFilter::Any,
+                ..Default::default()
+            }),
+        )
+        .unwrap();
+    assert!(rec_any.predicted.seconds().unwrap() <= t_bsp);
+    let _ = std::fs::remove_dir_all(&cfg.out_dir);
+}
+
+#[test]
 fn stale_artifacts_are_detected_not_served() {
     let cfg = small_cfg("stale");
     let _ = std::fs::remove_dir_all(&cfg.out_dir);

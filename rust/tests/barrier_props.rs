@@ -1,0 +1,264 @@
+//! Property tests for the barrier-mode subsystem (via
+//! `util::quickcheck`): the invariants ISSUE 3 pins down.
+//!
+//! * `Ssp { staleness: 0 }` is BSP — bit-identical elapsed times at
+//!   the simulator level and bit-identical weight trajectories through
+//!   the full driver, for random costs, profiles and seeds;
+//! * per-iteration times are always finite and strictly positive in
+//!   every mode;
+//! * for one seed (one noise realization), relaxing the barrier never
+//!   costs time: `Async ≤ Ssp(s) ≤ Bsp` elapsed, and Ssp elapsed is
+//!   monotone in the staleness bound;
+//! * SSP never reports a read staleness above its bound.
+//!
+//! All runs share the driver's RNG discipline: every mode consumes
+//! the generator identically, so cross-mode comparisons are paired,
+//! not statistical.
+
+use hemingway::cluster::{BarrierMode, ClusterSim, HardwareProfile};
+use hemingway::data::synth::two_gaussians;
+use hemingway::optim::{by_name, run, IterationCost, NativeBackend, Problem, RunConfig};
+use hemingway::util::quickcheck::{forall_ok, Gen};
+
+/// A random but physically sane hardware profile.
+fn random_profile(g: &mut Gen) -> HardwareProfile {
+    HardwareProfile {
+        name: "prop".into(),
+        flops_per_sec: g.f64_in(1e6, 1e9),
+        iteration_overhead: g.f64_in(1e-3, 0.5),
+        sched_per_machine: g.f64_in(0.0, 1e-2),
+        net_latency: g.f64_in(1e-5, 1e-2),
+        net_bandwidth: g.f64_in(1e6, 1e9),
+        noise_sigma: g.f64_in(0.0, 0.4),
+        straggler_prob: g.f64_in(0.0, 0.15),
+        straggler_factor: g.f64_in(1.0, 6.0),
+    }
+}
+
+/// A random per-iteration cost sequence at a fixed machine count.
+fn random_costs(g: &mut Gen) -> Vec<IterationCost> {
+    let machines = g.usize_in(1, 64);
+    let iters = g.usize_in(5, 60);
+    (0..iters)
+        .map(|_| IterationCost {
+            machines,
+            flops_per_machine: g.f64_in(0.0, 1e7),
+            broadcast_bytes: g.f64_in(-10.0, 1e6), // ≤ 0 is a free edge case
+            reduce_bytes: g.f64_in(0.0, 1e6),
+        })
+        .collect()
+}
+
+/// Run one simulator over a cost sequence; returns (per-iter dts, elapsed).
+fn simulate(
+    profile: &HardwareProfile,
+    mode: BarrierMode,
+    seed: u64,
+    costs: &[IterationCost],
+) -> (Vec<f64>, f64) {
+    let mut sim = ClusterSim::with_mode(profile.clone(), mode, seed);
+    let dts: Vec<f64> = costs.iter().map(|c| sim.iteration_time(c)).collect();
+    (dts, sim.elapsed)
+}
+
+#[test]
+fn prop_ssp_zero_is_bitwise_bsp() {
+    forall_ok(
+        "Ssp{0} elapsed and per-iteration times == Bsp, bit for bit",
+        150,
+        |g| {
+            let seed = g.rng().next_u64();
+            ((seed, random_costs(g)), random_profile(g))
+        },
+        |&(seed, ref costs), profile| {
+            let (dts_bsp, el_bsp) = simulate(profile, BarrierMode::Bsp, seed, costs);
+            let (dts_ssp, el_ssp) =
+                simulate(profile, BarrierMode::Ssp { staleness: 0 }, seed, costs);
+            if el_bsp.to_bits() != el_ssp.to_bits() {
+                return Err(format!("elapsed differs: {el_bsp} vs {el_ssp}"));
+            }
+            for (i, (a, b)) in dts_bsp.iter().zip(&dts_ssp).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("iteration {i}: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_iteration_times_finite_and_positive() {
+    forall_ok(
+        "per-iteration times are finite and > 0 in every mode",
+        150,
+        |g| {
+            let mode = *g.choose(&[
+                BarrierMode::Bsp,
+                BarrierMode::Ssp { staleness: g.usize_in(0, 12) },
+                BarrierMode::Async,
+            ]);
+            let seed = g.rng().next_u64();
+            ((mode, seed, random_costs(g)), random_profile(g))
+        },
+        |&(mode, seed, ref costs), profile| {
+            let (dts, elapsed) = simulate(profile, mode, seed, costs);
+            for (i, dt) in dts.iter().enumerate() {
+                if !dt.is_finite() || *dt <= 0.0 {
+                    return Err(format!("iteration {i} under {mode}: dt = {dt}"));
+                }
+            }
+            if !elapsed.is_finite() || elapsed <= 0.0 {
+                return Err(format!("elapsed under {mode}: {elapsed}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_elapsed_ordering_async_le_ssp_le_bsp() {
+    forall_ok(
+        "Async ≤ Ssp(s) ≤ Bsp elapsed for the same seed; Ssp monotone in s",
+        120,
+        |g| {
+            let s_lo = g.usize_in(0, 4);
+            let s_hi = s_lo + g.usize_in(0, 8);
+            let seed = g.rng().next_u64();
+            ((seed, s_lo, s_hi, random_costs(g)), random_profile(g))
+        },
+        |&(seed, s_lo, s_hi, ref costs), profile| {
+            let (_, bsp) = simulate(profile, BarrierMode::Bsp, seed, costs);
+            let (_, ssp_lo) =
+                simulate(profile, BarrierMode::Ssp { staleness: s_lo }, seed, costs);
+            let (_, ssp_hi) =
+                simulate(profile, BarrierMode::Ssp { staleness: s_hi }, seed, costs);
+            let (_, asn) = simulate(profile, BarrierMode::Async, seed, costs);
+            if !(asn <= ssp_hi && ssp_hi <= ssp_lo && ssp_lo <= bsp) {
+                return Err(format!(
+                    "ordering violated: async={asn} ssp:{s_hi}={ssp_hi} \
+                     ssp:{s_lo}={ssp_lo} bsp={bsp}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ssp_read_staleness_never_exceeds_bound() {
+    forall_ok(
+        "SSP read staleness ≤ its bound at every iteration",
+        100,
+        |g| {
+            let staleness = g.usize_in(0, 8);
+            let seed = g.rng().next_u64();
+            ((staleness, seed, random_costs(g)), random_profile(g))
+        },
+        |&(staleness, seed, ref costs), profile| {
+            let mut sim =
+                ClusterSim::with_mode(profile.clone(), BarrierMode::Ssp { staleness }, seed);
+            for (i, c) in costs.iter().enumerate() {
+                sim.iteration_time(c);
+                let tau = sim.read_staleness();
+                if tau > staleness {
+                    return Err(format!("iteration {i}: staleness {tau} > bound {staleness}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Run one (algorithm, mode) through the full driver on a fresh
+/// simulated cluster; returns (per-record sim_times, final weights).
+fn drive(
+    problem: &Problem,
+    p_star: f64,
+    algo_name: &str,
+    machines: usize,
+    mode: BarrierMode,
+    seed: u64,
+    iters: usize,
+) -> (Vec<f64>, Vec<f32>) {
+    let mut algo = by_name(algo_name, problem, machines, seed as u32).unwrap();
+    let mut sim = ClusterSim::with_mode(HardwareProfile::local48(), mode, seed);
+    let cfg = RunConfig {
+        max_iters: iters,
+        target_subopt: -1.0, // run the full budget in every mode
+        time_budget: None,
+    };
+    let trace = run(algo.as_mut(), &NativeBackend, problem, &mut sim, p_star, &cfg).unwrap();
+    let times: Vec<f64> = trace.records.iter().map(|r| r.sim_time).collect();
+    (times, algo.weights().to_vec())
+}
+
+#[test]
+fn prop_ssp_zero_weight_trajectories_bitwise_equal_bsp() {
+    // Full stack: optimizer + staleness plumbing + simulator. A few
+    // random (algorithm, machines, seed) draws — each case runs a real
+    // optimization, so the case count stays small.
+    let problem = Problem::new(two_gaussians(192, 8, 2.0, 7), 1e-2);
+    let (p_star, _, _) = problem.reference_solve(1e-6, 300);
+    forall_ok(
+        "driver under Ssp{0} == Bsp: sim times and weights, bit for bit",
+        6,
+        |g| {
+            let algo = if g.bool() { "minibatch-sgd" } else { "local-sgd" };
+            ((algo, g.usize_in(1, 16), g.rng().next_u64(), g.usize_in(4, 12)), ())
+        },
+        |&(algo, m, seed, iters), _| {
+            let (t_bsp, w_bsp) =
+                drive(&problem, p_star, algo, m, BarrierMode::Bsp, seed, iters);
+            let (t_ssp, w_ssp) = drive(
+                &problem,
+                p_star,
+                algo,
+                m,
+                BarrierMode::Ssp { staleness: 0 },
+                seed,
+                iters,
+            );
+            for (i, (a, b)) in t_bsp.iter().zip(&t_ssp).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("{algo} m={m}: sim_time[{i}] {a} vs {b}"));
+                }
+            }
+            if w_bsp != w_ssp {
+                return Err(format!("{algo} m={m}: weight trajectories diverged"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn driver_elapsed_ordering_and_staleness_cost() {
+    // One fixed end-to-end case (cheap enough to run unconditionally):
+    // relaxing the barrier is never slower in simulated time, and the
+    // stale modes pay for it statistically — they never *beat* BSP's
+    // per-iteration progress on the same seed.
+    let problem = Problem::new(two_gaussians(192, 8, 2.0, 11), 1e-2);
+    let (p_star, _, _) = problem.reference_solve(1e-6, 300);
+    for &algo in &["minibatch-sgd", "local-sgd"] {
+        let (t_bsp, _) = drive(&problem, p_star, algo, 8, BarrierMode::Bsp, 42, 25);
+        let (t_ssp, _) = drive(
+            &problem,
+            p_star,
+            algo,
+            8,
+            BarrierMode::Ssp { staleness: 3 },
+            42,
+            25,
+        );
+        let (t_asn, _) = drive(&problem, p_star, algo, 8, BarrierMode::Async, 42, 25);
+        let last = |v: &Vec<f64>| *v.last().unwrap();
+        assert!(
+            last(&t_asn) <= last(&t_ssp) && last(&t_ssp) <= last(&t_bsp),
+            "{algo}: async={} ssp={} bsp={}",
+            last(&t_asn),
+            last(&t_ssp),
+            last(&t_bsp)
+        );
+    }
+}

@@ -54,11 +54,8 @@ fn full_pipeline_sweep_fit_predict() {
     }
 
     // Combined queries behave (typed query API over the registry).
-    let combined = hemingway::advisor::CombinedModel {
-        ernest,
-        conv: model,
-        input_size: ctx.problem.data.n as f64,
-    };
+    let combined =
+        hemingway::advisor::CombinedModel::new(ernest, model, ctx.problem.data.n as f64);
     let mut registry = hemingway::advisor::ModelRegistry::new(
         ctx.cfg.machines.clone(),
         ctx.cfg.advisor_iter_cap,
