@@ -12,8 +12,10 @@ cargo build --release
 # the in-tree xla API stub so the feature gate can't rot.
 cargo build --release --features pjrt
 cargo test -q
-# Barrier-mode invariants under an explicitly pinned quickcheck seed, so
-# a property failure in CI names a seed that reproduces locally.
+# Barrier-mode and fleet invariants (uniform-fleet ≡ plain-profile
+# bitwise, slower-fleet ⇒ ≥ elapsed) under an explicitly pinned
+# quickcheck seed, so a property failure in CI names a seed that
+# reproduces locally.
 QUICKCHECK_SEED=20170211 cargo test -q --release --test barrier_props
 cargo fmt --check
 
@@ -56,3 +58,33 @@ cargo run --release --quiet -- repro --figure ssp --native --config "$tmp/ssp.js
 grep -q '^ssp:' "$tmp/ssp_out/summaries.txt"
 test -f "$tmp/ssp_out/ssp_barrier_modes.csv"
 echo "ssp smoke OK"
+
+# Hetero smoke: the fleet scenario end to end — a tiny mixed fleet
+# (uniform local48 next to a slow-node variant) across three barrier
+# modes, with time- and dollar-to-target in the CSV, plus one
+# cheapest_to query through the serve loop.
+cat > "$tmp/hetero.json" <<EOF
+{"n": 256, "d": 16, "machines": [1, 2, 4, 8], "max_iters": 40,
+ "target_subopt": 1e-2, "advisor_iter_cap": 2000,
+ "algorithms": ["local-sgd"],
+ "barrier_modes": ["bsp", "ssp:2", "async"],
+ "fleets": ["local48", "local48*0.25:slow=3x"],
+ "out_dir": "$tmp/hetero_out"}
+EOF
+cargo run --release --quiet -- repro --figure hetero --native --config "$tmp/hetero.json"
+grep -q '^hetero:' "$tmp/hetero_out/summaries.txt"
+test -f "$tmp/hetero_out/hetero_fleets.csv"
+grep -q 'dollars_to_target' "$tmp/hetero_out/hetero_fleets.csv"
+# ε = 0.1 sits far above any fitted prediction floor (see the serve
+# tests), so every variant can answer and the response must be ok:true.
+printf '%s\n' '{"query":"cheapest_to","eps":0.1,"barrier_mode":"any","fleet":"any"}' \
+  | cargo run --release --quiet -- serve --native --config "$tmp/hetero.json" \
+  > "$tmp/cheapest.out"
+cat "$tmp/cheapest.out"
+grep -q '"predicted_dollars"' "$tmp/cheapest.out"
+grep -q '"fleet"' "$tmp/cheapest.out"
+if grep -q '"ok":false' "$tmp/cheapest.out"; then
+  echo "cheapest_to smoke returned an error response" >&2
+  exit 1
+fi
+echo "hetero smoke OK"

@@ -210,6 +210,7 @@ fn main() -> hemingway::Result<()> {
             algorithms: vec!["cocoa+".into()],
             machines: small.machines.clone(),
             modes: vec![hemingway::cluster::BarrierMode::Bsp],
+            fleets: Vec::new(),
             seeds: 2,
             base_seed: small.seed,
             run: RunConfig {

@@ -1,18 +1,22 @@
 //! The combined model `h(t, m) = g(t / f(m), m)` (paper §3.2): compose
 //! the Ernest system model with the Hemingway convergence model to
-//! answer time-domain questions — now per barrier mode. The base
-//! `(ernest, conv)` pair is the BSP fit (the historical artifact
-//! layout, so pre-barrier-axis artifacts still load); each additional
-//! mode carries its own pair, fitted from traces simulated under that
-//! mode: relaxed barriers buy faster iterations (a different f) at the
-//! price of stale updates (a different, slower-decaying g).
+//! answer time-domain questions — now per (barrier mode, fleet). The
+//! base `(ernest, conv)` pair is the BSP fit on the base fleet (the
+//! historical artifact layout, so pre-barrier-axis artifacts still
+//! load); each additional mode carries its own pair fitted from traces
+//! simulated under that mode, and each additional *fleet* carries a
+//! pair per mode fitted from traces priced on that hardware: relaxed
+//! barriers buy faster iterations (a different f) at the price of
+//! stale updates (a different, slower-decaying g), and a slower or
+//! mixed fleet shifts f without touching the iteration-domain g.
 
 use crate::cluster::BarrierMode;
 use crate::ernest::ErnestModel;
 use crate::hemingway_model::ConvergenceModel;
 use crate::util::json::Json;
 
-/// The (system, convergence) model pair for one non-BSP barrier mode.
+/// The (system, convergence) model pair for one non-base
+/// (barrier mode, fleet) variant.
 #[derive(Debug, Clone)]
 pub struct ModeModel {
     pub ernest: ErnestModel,
@@ -22,15 +26,24 @@ pub struct ModeModel {
 /// Ernest + Hemingway for one algorithm on one input size.
 #[derive(Debug, Clone)]
 pub struct CombinedModel {
-    /// System model under BSP.
+    /// System model under BSP on the base fleet.
     pub ernest: ErnestModel,
-    /// Convergence model under BSP.
+    /// Convergence model under BSP on the base fleet.
     pub conv: ConvergenceModel,
     /// Input rows (the `size` fed to Ernest's features).
     pub input_size: f64,
-    /// Additional barrier modes this model can answer for, sorted by
-    /// mode. BSP is always implicitly present via the base pair.
+    /// Wire name of the fleet the base pair (and the `modes` pairs)
+    /// were fitted on. Empty in pre-fleet artifacts, meaning the
+    /// config's uniform profile fleet.
+    pub base_fleet: String,
+    /// Additional barrier modes this model can answer for *on the base
+    /// fleet*, sorted by mode. BSP is always implicitly present via
+    /// the base pair.
     pub modes: Vec<(BarrierMode, ModeModel)>,
+    /// (fleet, mode) pairs beyond the base fleet, sorted by key. Every
+    /// fleet here carries its own BSP entry — nothing is implicit for
+    /// non-base fleets.
+    pub fleet_pairs: Vec<((String, BarrierMode), ModeModel)>,
 }
 
 impl CombinedModel {
@@ -40,7 +53,9 @@ impl CombinedModel {
             ernest,
             conv,
             input_size,
+            base_fleet: String::new(),
             modes: Vec::new(),
+            fleet_pairs: Vec::new(),
         }
     }
 
@@ -60,14 +75,54 @@ impl CombinedModel {
         }
     }
 
-    /// Every barrier mode this model can answer for (BSP first).
+    /// Attach (or replace) a fitted pair for a (fleet, mode) variant.
+    /// The base fleet's pairs route into the base slot / `modes` (so
+    /// pre-fleet lookups see them); other fleets keep explicit
+    /// per-mode entries, BSP included.
+    pub fn insert_fleet_pair(&mut self, fleet: &str, mode: BarrierMode, model: ModeModel) {
+        if fleet == self.base_fleet {
+            return self.insert_mode(mode, model);
+        }
+        let key = (fleet.to_string(), mode);
+        match self.fleet_pairs.binary_search_by(|(k, _)| k.cmp(&key)) {
+            Ok(i) => self.fleet_pairs[i].1 = model,
+            Err(i) => self.fleet_pairs.insert(i, (key, model)),
+        }
+    }
+
+    /// Every barrier mode this model can answer for on the base fleet
+    /// (BSP first).
     pub fn fitted_modes(&self) -> Vec<BarrierMode> {
         let mut out = vec![BarrierMode::Bsp];
         out.extend(self.modes.iter().map(|(m, _)| *m));
         out
     }
 
-    /// The (system, convergence) pair serving a mode.
+    /// Every (fleet, mode) variant this model can answer for: the base
+    /// fleet's modes first (fleet = `base_fleet`), then the non-base
+    /// fleet pairs in key order.
+    pub fn fitted_variants(&self) -> Vec<(String, BarrierMode)> {
+        let mut out: Vec<(String, BarrierMode)> = self
+            .fitted_modes()
+            .into_iter()
+            .map(|m| (self.base_fleet.clone(), m))
+            .collect();
+        out.extend(self.fleet_pairs.iter().map(|((f, m), _)| (f.clone(), *m)));
+        out
+    }
+
+    /// Every distinct fleet this model can answer for, base first.
+    pub fn fitted_fleets(&self) -> Vec<String> {
+        let mut out = vec![self.base_fleet.clone()];
+        for ((f, _), _) in &self.fleet_pairs {
+            if !out.contains(f) {
+                out.push(f.clone());
+            }
+        }
+        out
+    }
+
+    /// The (system, convergence) pair serving a mode on the base fleet.
     pub fn pair(&self, mode: BarrierMode) -> Option<(&ErnestModel, &ConvergenceModel)> {
         if mode.is_bsp() {
             return Some((&self.ernest, &self.conv));
@@ -75,6 +130,21 @@ impl CombinedModel {
         self.modes
             .iter()
             .find(|(m, _)| *m == mode)
+            .map(|(_, mm)| (&mm.ernest, &mm.conv))
+    }
+
+    /// The (system, convergence) pair serving a (fleet, mode) variant.
+    pub fn pair_v(
+        &self,
+        fleet: &str,
+        mode: BarrierMode,
+    ) -> Option<(&ErnestModel, &ConvergenceModel)> {
+        if fleet == self.base_fleet {
+            return self.pair(mode);
+        }
+        self.fleet_pairs
+            .iter()
+            .find(|((f, m), _)| f == fleet && *m == mode)
             .map(|(_, mm)| (&mm.ernest, &mm.conv))
     }
 
@@ -92,6 +162,14 @@ impl CombinedModel {
             .map(|(ernest, _)| ernest.predict(machines, self.input_size))
     }
 
+    /// f(m) under a (fleet, mode) variant. The base fleet routes
+    /// through [`Self::iter_time_in`], so the pre-fleet query paths
+    /// share one formula bit for bit.
+    pub fn iter_time_v(&self, fleet: &str, mode: BarrierMode, machines: usize) -> Option<f64> {
+        self.pair_v(fleet, mode)
+            .map(|(ernest, _)| ernest.predict(machines, self.input_size))
+    }
+
     /// Predicted suboptimality after wall-clock time t at m machines —
     /// h(t, m) = g(t / f(m), m), under BSP.
     pub fn subopt_at_time(&self, t: f64, machines: usize) -> f64 {
@@ -102,9 +180,32 @@ impl CombinedModel {
     /// h(t, m) under a barrier mode (None when the mode is not fitted).
     pub fn subopt_at_time_in(&self, mode: BarrierMode, t: f64, machines: usize) -> Option<f64> {
         let (ernest, conv) = self.pair(mode)?;
-        let f_m = ernest.predict(machines, self.input_size).max(1e-9);
+        Some(Self::subopt_from_pair(ernest, conv, self.input_size, t, machines))
+    }
+
+    /// h(t, m) under a (fleet, mode) variant.
+    pub fn subopt_at_time_v(
+        &self,
+        fleet: &str,
+        mode: BarrierMode,
+        t: f64,
+        machines: usize,
+    ) -> Option<f64> {
+        let (ernest, conv) = self.pair_v(fleet, mode)?;
+        Some(Self::subopt_from_pair(ernest, conv, self.input_size, t, machines))
+    }
+
+    /// The one h(t, m) formula every (pair, time) lookup shares.
+    fn subopt_from_pair(
+        ernest: &ErnestModel,
+        conv: &ConvergenceModel,
+        input_size: f64,
+        t: f64,
+        machines: usize,
+    ) -> f64 {
+        let f_m = ernest.predict(machines, input_size).max(1e-9);
         let i = (t / f_m).max(1.0);
-        Some(conv.predict(i, machines as f64))
+        conv.predict(i, machines as f64)
     }
 
     /// Predicted wall-clock time to reach suboptimality `eps` at m
@@ -128,6 +229,20 @@ impl CombinedModel {
             .map(|i| i as f64 * ernest.predict(machines, self.input_size))
     }
 
+    /// Time-to-ε under a (fleet, mode) variant.
+    pub fn time_to_subopt_v(
+        &self,
+        fleet: &str,
+        mode: BarrierMode,
+        eps: f64,
+        machines: usize,
+        cap: usize,
+    ) -> Option<f64> {
+        let (ernest, conv) = self.pair_v(fleet, mode)?;
+        conv.iters_to(eps, machines as f64, cap)
+            .map(|i| i as f64 * ernest.predict(machines, self.input_size))
+    }
+
     /// Predicted end/start suboptimality ratio over one `frame_seconds`
     /// time frame starting at iteration `i0` on m machines — the
     /// adaptive loop's planning primitive. Using the decay *ratio*
@@ -144,12 +259,16 @@ impl CombinedModel {
         Some((self.conv.predict_ln(i0 + iters, m) - self.conv.predict_ln(i0, m)).exp())
     }
 
-    /// Serialize for a model artifact (`util::json`). The `modes`
-    /// array is omitted when empty, keeping BSP-only artifacts in the
-    /// pre-barrier-axis layout.
+    /// Serialize for a model artifact (`util::json`). The `modes` and
+    /// `fleet_modes` arrays (and the `base_fleet` field) are omitted
+    /// when empty, keeping BSP-only artifacts in the pre-barrier-axis
+    /// layout and single-fleet artifacts in the pre-fleet layout.
     pub fn to_json(&self) -> crate::Result<Json> {
         let mut fields = Vec::new();
         fields.push(("input_size", Json::num(self.input_size)));
+        if !self.base_fleet.is_empty() {
+            fields.push(("base_fleet", Json::str(self.base_fleet.clone())));
+        }
         fields.push(("ernest", self.ernest.to_json()?));
         fields.push(("convergence", self.conv.to_json()?));
         if !self.modes.is_empty() {
@@ -166,12 +285,28 @@ impl CombinedModel {
                 .collect::<crate::Result<Vec<Json>>>()?;
             fields.push(("modes", Json::Array(entries)));
         }
+        if !self.fleet_pairs.is_empty() {
+            let entries = self
+                .fleet_pairs
+                .iter()
+                .map(|((fleet, mode), mm)| {
+                    Ok(Json::object(vec![
+                        ("fleet", Json::str(fleet.clone())),
+                        ("barrier_mode", Json::str(mode.as_str())),
+                        ("ernest", mm.ernest.to_json()?),
+                        ("convergence", mm.conv.to_json()?),
+                    ]))
+                })
+                .collect::<crate::Result<Vec<Json>>>()?;
+            fields.push(("fleet_modes", Json::Array(entries)));
+        }
         Ok(Json::object(fields))
     }
 
-    /// Rebuild from the artifact form. A `modes` entry naming an
-    /// unknown barrier mode is an error — the registry must skip such
-    /// an artifact rather than serve a subset of what it promises.
+    /// Rebuild from the artifact form. A `modes`/`fleet_modes` entry
+    /// naming an unknown barrier mode or an unparseable fleet is an
+    /// error — the registry must skip such an artifact rather than
+    /// serve a subset of what it promises.
     pub fn from_json(doc: &Json) -> crate::Result<CombinedModel> {
         let ernest = doc
             .get("ernest")
@@ -179,11 +314,35 @@ impl CombinedModel {
         let conv = doc
             .get("convergence")
             .ok_or_else(|| crate::err!("model artifact is missing the 'convergence' object"))?;
+        let base_fleet = match doc.get("base_fleet") {
+            None => String::new(),
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| crate::err!("base_fleet must be a fleet spec string"))?;
+                crate::cluster::FleetSpec::parse(s)?;
+                s.to_string()
+            }
+        };
         let mut model = CombinedModel {
             ernest: ErnestModel::from_json(ernest)?,
             conv: ConvergenceModel::from_json(conv)?,
             input_size: doc.req_f64("input_size")?,
+            base_fleet,
             modes: Vec::new(),
+            fleet_pairs: Vec::new(),
+        };
+        let pair_of = |entry: &Json| -> crate::Result<ModeModel> {
+            let ernest = entry
+                .get("ernest")
+                .ok_or_else(|| crate::err!("mode entry is missing the 'ernest' object"))?;
+            let conv = entry
+                .get("convergence")
+                .ok_or_else(|| crate::err!("mode entry is missing the 'convergence' object"))?;
+            Ok(ModeModel {
+                ernest: ErnestModel::from_json(ernest)?,
+                conv: ConvergenceModel::from_json(conv)?,
+            })
         };
         if let Some(entries) = doc.get("modes").and_then(Json::as_array) {
             for entry in entries {
@@ -192,19 +351,20 @@ impl CombinedModel {
                     !mode.is_bsp(),
                     "model artifact lists bsp under 'modes'; bsp is the base pair"
                 );
-                let ernest = entry
-                    .get("ernest")
-                    .ok_or_else(|| crate::err!("mode entry is missing the 'ernest' object"))?;
-                let conv = entry.get("convergence").ok_or_else(|| {
-                    crate::err!("mode entry is missing the 'convergence' object")
-                })?;
-                model.insert_mode(
-                    mode,
-                    ModeModel {
-                        ernest: ErnestModel::from_json(ernest)?,
-                        conv: ConvergenceModel::from_json(conv)?,
-                    },
+                model.insert_mode(mode, pair_of(entry)?);
+            }
+        }
+        if let Some(entries) = doc.get("fleet_modes").and_then(Json::as_array) {
+            for entry in entries {
+                let fleet = entry.req_str("fleet")?;
+                crate::cluster::FleetSpec::parse(fleet)?;
+                crate::ensure!(
+                    fleet != model.base_fleet,
+                    "model artifact lists the base fleet '{fleet}' under 'fleet_modes'; \
+                     base-fleet pairs belong in the base slot / 'modes'"
                 );
+                let mode = crate::cluster::BarrierMode::parse(entry.req_str("barrier_mode")?)?;
+                model.insert_fleet_pair(fleet, mode, pair_of(entry)?);
             }
         }
         Ok(model)
@@ -387,6 +547,120 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Base (BSP) pair, an async mode pair, and a slow-fleet pair:
+    /// the fleet's iterations are 2× slower at identical decay.
+    fn combined_with_fleet() -> CombinedModel {
+        let mut c = combined_with_async();
+        c.base_fleet = "local48".into();
+        let (ernest, conv) = fit_pair(0.8, 2.0);
+        c.insert_fleet_pair("straggly48", BarrierMode::Bsp, ModeModel { ernest, conv });
+        c
+    }
+
+    #[test]
+    fn fleet_pairs_route_predictions() {
+        let c = combined_with_fleet();
+        assert_eq!(
+            c.fitted_variants(),
+            vec![
+                ("local48".into(), BarrierMode::Bsp),
+                ("local48".into(), BarrierMode::Async),
+                ("straggly48".into(), BarrierMode::Bsp),
+            ]
+        );
+        assert_eq!(c.fitted_fleets(), vec!["local48".to_string(), "straggly48".into()]);
+        // Base-fleet routing equals the mode-only methods bit for bit.
+        for &m in &[1usize, 4, 32] {
+            for mode in c.fitted_modes() {
+                assert_eq!(
+                    c.iter_time_v("local48", mode, m).unwrap().to_bits(),
+                    c.iter_time_in(mode, m).unwrap().to_bits()
+                );
+                assert_eq!(
+                    c.subopt_at_time_v("local48", mode, 7.5, m).unwrap().to_bits(),
+                    c.subopt_at_time_in(mode, 7.5, m).unwrap().to_bits()
+                );
+                assert_eq!(
+                    c.time_to_subopt_v("local48", mode, 1e-3, m, 100_000),
+                    c.time_to_subopt_in(mode, 1e-3, m, 100_000)
+                );
+            }
+        }
+        // The slow fleet's f is ~2× the base fleet's, so time-to-ε is
+        // correspondingly larger at the same decay.
+        let f_base = c.iter_time_v("local48", BarrierMode::Bsp, 4).unwrap();
+        let f_slow = c.iter_time_v("straggly48", BarrierMode::Bsp, 4).unwrap();
+        assert!(f_slow > f_base * 1.5, "f_slow={f_slow} f_base={f_base}");
+        let t_base = c.time_to_subopt_v("local48", BarrierMode::Bsp, 1e-3, 4, 100_000).unwrap();
+        let t_slow = c.time_to_subopt_v("straggly48", BarrierMode::Bsp, 1e-3, 4, 100_000).unwrap();
+        assert!(t_slow > t_base, "{t_slow} vs {t_base}");
+        // Unfitted (fleet, mode) variants answer nothing.
+        assert_eq!(c.iter_time_v("straggly48", BarrierMode::Async, 4), None);
+        assert_eq!(c.iter_time_v("mixed48", BarrierMode::Bsp, 4), None);
+        // Inserting at the base fleet's name routes into the base pair.
+        let mut c2 = c.clone();
+        let (ernest, conv) = fit_pair(1.6, 3.0);
+        let expected = ernest.predict(4, c2.input_size);
+        c2.insert_fleet_pair("local48", BarrierMode::Bsp, ModeModel { ernest, conv });
+        assert_eq!(c2.iter_time(4).to_bits(), expected.to_bits());
+        assert_eq!(c2.fitted_variants().len(), c.fitted_variants().len());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_fleet_pairs() {
+        let c = combined_with_fleet();
+        let text = c.to_json().unwrap().to_pretty();
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        let back = CombinedModel::from_json(&doc).unwrap();
+        assert_eq!(back.base_fleet, "local48");
+        assert_eq!(back.fitted_variants(), c.fitted_variants());
+        for (fleet, mode) in c.fitted_variants() {
+            for &m in &[1usize, 4, 32] {
+                assert_eq!(
+                    back.iter_time_v(&fleet, mode, m).unwrap().to_bits(),
+                    c.iter_time_v(&fleet, mode, m).unwrap().to_bits()
+                );
+                assert_eq!(
+                    back.subopt_at_time_v(&fleet, mode, 12.5, m).unwrap().to_bits(),
+                    c.subopt_at_time_v(&fleet, mode, 12.5, m).unwrap().to_bits()
+                );
+            }
+        }
+        // A pre-fleet artifact (no base_fleet / fleet_modes) still
+        // loads with an empty base fleet.
+        let legacy = combined_with_async();
+        let doc = crate::util::json::Json::parse(&legacy.to_json().unwrap().to_pretty()).unwrap();
+        assert!(!doc.to_string().contains("base_fleet"));
+        let back = CombinedModel::from_json(&doc).unwrap();
+        assert_eq!(back.base_fleet, "");
+        assert!(back.fleet_pairs.is_empty());
+    }
+
+    #[test]
+    fn artifact_with_base_fleet_under_fleet_modes_is_rejected() {
+        let c = combined_with_fleet();
+        let text = c
+            .to_json()
+            .unwrap()
+            .to_pretty()
+            .replace("\"straggly48\"", "\"local48\"");
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        let err = CombinedModel::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("base fleet"), "{err}");
+    }
+
+    #[test]
+    fn artifact_with_unknown_fleet_is_rejected() {
+        let c = combined_with_fleet();
+        let text = c
+            .to_json()
+            .unwrap()
+            .to_pretty()
+            .replace("\"straggly48\"", "\"quantum-fleet\"");
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        assert!(CombinedModel::from_json(&doc).is_err());
     }
 
     #[test]

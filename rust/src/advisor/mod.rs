@@ -11,11 +11,13 @@ pub mod service;
 
 pub use adaptive::{adaptive_cocoa_plus, AdaptiveConfig, AdaptiveRun, FrameLog};
 pub use combined::{CombinedModel, ModeModel};
-pub use query::{Constraints, ModeFilter, Predicted, PredictionRow, Query, Recommendation};
+pub use query::{
+    Constraints, FleetFilter, ModeFilter, Predicted, PredictionRow, Query, Recommendation,
+};
 pub use registry::{
     artifact_path, load_artifact, save_artifact, LoadReport, ModelKey, ModelRegistry,
 };
 pub use service::{handle_line, serve, ServeStats};
 
-pub use crate::cluster::BarrierMode;
+pub use crate::cluster::{BarrierMode, FleetSpec};
 pub use crate::optim::AlgorithmId;

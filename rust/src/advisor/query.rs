@@ -2,12 +2,15 @@
 //! error goal ε, choose the fastest algorithm and configuration; or
 //! given a target latency of t seconds choose an algorithm that will
 //! achieve the minimum training loss" — plus the constrained variants
-//! (machine caps, machine-cost weighting) a shared cluster needs.
+//! (machine caps, machine-cost weighting, barrier-mode and fleet
+//! filters) a shared cluster needs, and the dollar-denominated
+//! `cheapest_to` query that replaces the abstract cost weight with
+//! real per-machine fleet prices.
 //!
 //! Every type here has a JSON wire form (`util::json`) so the same
 //! queries flow through the `serve` loop, the CLI and the library API.
 
-use crate::cluster::BarrierMode;
+use crate::cluster::{BarrierMode, FleetSpec};
 use crate::optim::AlgorithmId;
 use crate::util::json::Json;
 
@@ -53,8 +56,62 @@ impl ModeFilter {
     }
 }
 
+/// Which fleets a query's search may range over. The wire default is
+/// `Base` — only the fleet the serving models' base pairs were fitted
+/// on, which is exactly the pre-fleet search space.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FleetFilter {
+    /// Search only each model's base fleet.
+    Base,
+    /// Search a single named fleet (`cluster::fleet` wire form).
+    Only(String),
+    /// Search every fleet the serving models were fitted for.
+    Any,
+}
+
+impl Default for FleetFilter {
+    fn default() -> Self {
+        FleetFilter::Base
+    }
+}
+
+impl FleetFilter {
+    /// Whether a model variant fitted on `fleet` is admitted, given
+    /// the model's own base fleet name.
+    pub fn admits(&self, fleet: &str, base_fleet: &str) -> bool {
+        match self {
+            FleetFilter::Base => fleet == base_fleet,
+            FleetFilter::Only(name) => fleet == name,
+            FleetFilter::Any => true,
+        }
+    }
+
+    /// Wire form: a fleet spec string, `base`, or `any`.
+    pub fn as_str(&self) -> String {
+        match self {
+            FleetFilter::Base => "base".to_string(),
+            FleetFilter::Only(name) => name.clone(),
+            FleetFilter::Any => "any".to_string(),
+        }
+    }
+
+    /// Parse the wire form. A named fleet is validated against the
+    /// fleet grammar so a typo fails loudly instead of matching
+    /// nothing forever.
+    pub fn parse(s: &str) -> crate::Result<FleetFilter> {
+        match s.trim() {
+            "any" => Ok(FleetFilter::Any),
+            "base" => Ok(FleetFilter::Base),
+            other => {
+                FleetSpec::parse(other)?;
+                Ok(FleetFilter::Only(other.to_string()))
+            }
+        }
+    }
+}
+
 /// Optional constraints a query carries.
-#[derive(Debug, Clone, Copy, PartialEq, Default)]
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct Constraints {
     /// Never recommend more than this many machines.
     pub max_machines: Option<usize>,
@@ -63,9 +120,14 @@ pub struct Constraints {
     /// `t·(1 + w·m)`: fastest-to-ε ranks by that cost, and
     /// best-at-budget treats the budget as a cost budget (time
     /// available at m machines shrinks to `budget / (1 + w·m)`).
+    /// `cheapest_to` rejects it: that query prices machines through
+    /// real fleet prices instead.
     pub machine_cost_weight: f64,
     /// Barrier modes the search may recommend (default: BSP only).
     pub barrier_mode: ModeFilter,
+    /// Fleets the search may recommend (default: each model's base
+    /// fleet only).
+    pub fleet: FleetFilter,
 }
 
 impl Constraints {
@@ -112,10 +174,17 @@ impl Constraints {
                 crate::err!("barrier_mode must be a string (a mode name or 'any')")
             })?)?,
         };
+        let fleet = match doc.get("fleet") {
+            None => FleetFilter::default(),
+            Some(v) => FleetFilter::parse(v.as_str().ok_or_else(|| {
+                crate::err!("fleet must be a string (a fleet spec, 'base' or 'any')")
+            })?)?,
+        };
         let constraints = Constraints {
             max_machines,
             machine_cost_weight,
             barrier_mode,
+            fleet,
         };
         constraints.validate()?;
         Ok(constraints)
@@ -145,17 +214,24 @@ impl Constraints {
         if self.barrier_mode != ModeFilter::default() {
             fields.push(("barrier_mode".into(), Json::str(self.barrier_mode.as_str())));
         }
+        if self.fleet != FleetFilter::default() {
+            fields.push(("fleet".into(), Json::str(self.fleet.as_str())));
+        }
     }
 }
 
-/// The two §3.1 query types.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// The two §3.1 query types, plus the dollar-denominated variant.
+#[derive(Debug, Clone, PartialEq)]
 pub enum Query {
     /// Fastest (algorithm, m) predicted to reach suboptimality ε.
     FastestTo { eps: f64, constraints: Constraints },
     /// (algorithm, m) predicted to reach the lowest suboptimality
     /// within a budget of `budget` seconds.
     BestAt { budget: f64, constraints: Constraints },
+    /// Cheapest (algorithm, m, mode, fleet) predicted to reach
+    /// suboptimality ε, ranked by dollars = predicted seconds × the
+    /// fleet's real `$/second` allocation rate at m machines.
+    CheapestTo { eps: f64, constraints: Constraints },
 }
 
 impl Query {
@@ -175,11 +251,20 @@ impl Query {
         }
     }
 
+    /// Unconstrained cheapest-to-ε query.
+    pub fn cheapest_to(eps: f64) -> Query {
+        Query::CheapestTo {
+            eps,
+            constraints: Constraints::none(),
+        }
+    }
+
     /// The same query under different constraints.
     pub fn with(self, constraints: Constraints) -> Query {
         match self {
             Query::FastestTo { eps, .. } => Query::FastestTo { eps, constraints },
             Query::BestAt { budget, .. } => Query::BestAt { budget, constraints },
+            Query::CheapestTo { eps, .. } => Query::CheapestTo { eps, constraints },
         }
     }
 
@@ -188,27 +273,33 @@ impl Query {
         match self {
             Query::FastestTo { .. } => "fastest_to",
             Query::BestAt { .. } => "best_at",
+            Query::CheapestTo { .. } => "cheapest_to",
         }
     }
 
     pub fn constraints(&self) -> Constraints {
-        match *self {
-            Query::FastestTo { constraints, .. } => constraints,
-            Query::BestAt { constraints, .. } => constraints,
+        match self {
+            Query::FastestTo { constraints, .. }
+            | Query::BestAt { constraints, .. }
+            | Query::CheapestTo { constraints, .. } => constraints.clone(),
         }
     }
 
-    /// Parse a wire query, e.g. `{"query":"fastest_to","eps":1e-4}` or
-    /// `{"query":"best_at","budget":20,"max_machines":32}`.
+    /// Parse a wire query, e.g. `{"query":"fastest_to","eps":1e-4}`,
+    /// `{"query":"best_at","budget":20,"max_machines":32}` or
+    /// `{"query":"cheapest_to","eps":1e-4,"fleet":"any"}`.
     pub fn from_json(doc: &Json) -> crate::Result<Query> {
         let constraints = Constraints::from_json(doc)?;
+        let finite_eps = |eps: f64, kind: &str| -> crate::Result<f64> {
+            crate::ensure!(
+                eps > 0.0 && eps.is_finite(),
+                "{kind} needs a finite eps > 0, got {eps}"
+            );
+            Ok(eps)
+        };
         match doc.req_str("query")? {
             "fastest_to" => {
-                let eps = doc.req_f64("eps")?;
-                crate::ensure!(
-                    eps > 0.0 && eps.is_finite(),
-                    "fastest_to needs a finite eps > 0, got {eps}"
-                );
+                let eps = finite_eps(doc.req_f64("eps")?, "fastest_to")?;
                 Ok(Query::FastestTo { eps, constraints })
             }
             "best_at" => {
@@ -219,7 +310,18 @@ impl Query {
                 );
                 Ok(Query::BestAt { budget, constraints })
             }
-            other => crate::bail!("unknown query kind '{other}' (expected fastest_to or best_at)"),
+            "cheapest_to" => {
+                let eps = finite_eps(doc.req_f64("eps")?, "cheapest_to")?;
+                crate::ensure!(
+                    constraints.machine_cost_weight == 0.0,
+                    "cheapest_to prices machines through real fleet prices; \
+                     machine_cost_weight is not supported"
+                );
+                Ok(Query::CheapestTo { eps, constraints })
+            }
+            other => crate::bail!(
+                "unknown query kind '{other}' (expected fastest_to, best_at or cheapest_to)"
+            ),
         }
     }
 
@@ -227,9 +329,13 @@ impl Query {
     pub fn to_json(&self) -> Json {
         let mut fields: Vec<(String, Json)> =
             vec![("query".into(), Json::str(self.kind()))];
-        match *self {
-            Query::FastestTo { eps, .. } => fields.push(("eps".into(), Json::num(eps))),
-            Query::BestAt { budget, .. } => fields.push(("budget".into(), Json::num(budget))),
+        match self {
+            Query::FastestTo { eps, .. } | Query::CheapestTo { eps, .. } => {
+                fields.push(("eps".into(), Json::num(*eps)))
+            }
+            Query::BestAt { budget, .. } => {
+                fields.push(("budget".into(), Json::num(*budget)))
+            }
         }
         self.constraints().push_json(&mut fields);
         Json::Object(fields)
@@ -237,35 +343,43 @@ impl Query {
 }
 
 /// A predicted quantity with its unit attached: the fastest-to-ε query
-/// answers in seconds, the best-at-budget query in suboptimality. The
-/// old advisor returned a bare f64 whose meaning depended on which
-/// method produced it; this type makes misreading one as the other a
-/// compile error.
+/// answers in seconds, the best-at-budget query in suboptimality, the
+/// cheapest-to-ε query in dollars. The old advisor returned a bare f64
+/// whose meaning depended on which method produced it; this type makes
+/// misreading one as another a compile error.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Predicted {
     Seconds(f64),
     Suboptimality(f64),
+    Dollars(f64),
 }
 
 impl Predicted {
     /// The raw number, unit erased (display/CSV use).
     pub fn value(self) -> f64 {
         match self {
-            Predicted::Seconds(v) | Predicted::Suboptimality(v) => v,
+            Predicted::Seconds(v) | Predicted::Suboptimality(v) | Predicted::Dollars(v) => v,
         }
     }
 
     pub fn seconds(self) -> Option<f64> {
         match self {
             Predicted::Seconds(v) => Some(v),
-            Predicted::Suboptimality(_) => None,
+            _ => None,
         }
     }
 
     pub fn suboptimality(self) -> Option<f64> {
         match self {
             Predicted::Suboptimality(v) => Some(v),
-            Predicted::Seconds(_) => None,
+            _ => None,
+        }
+    }
+
+    pub fn dollars(self) -> Option<f64> {
+        match self {
+            Predicted::Dollars(v) => Some(v),
+            _ => None,
         }
     }
 
@@ -274,6 +388,7 @@ impl Predicted {
         match self {
             Predicted::Seconds(_) => "predicted_seconds",
             Predicted::Suboptimality(_) => "predicted_suboptimality",
+            Predicted::Dollars(_) => "predicted_dollars",
         }
     }
 }
@@ -285,34 +400,47 @@ pub struct Recommendation {
     pub machines: usize,
     /// The barrier mode the winning configuration runs under.
     pub barrier_mode: BarrierMode,
+    /// Wire name of the fleet the winning configuration runs on.
+    /// Empty = the model's (unnamed) base fleet — pre-fleet artifacts
+    /// and the pre-fleet wire shape.
+    pub fleet: String,
     /// The raw model prediction for the winning configuration.
     pub predicted: Predicted,
     /// The objective the search actually ranked: equals the raw
-    /// prediction for unconstrained queries, the cost-weighted value
-    /// otherwise.
+    /// prediction for unconstrained queries, the cost-weighted (or
+    /// dollar-priced) value otherwise.
     pub objective: f64,
 }
 
 impl Recommendation {
     /// Wire form: the prediction's unit is the field name
-    /// (`predicted_seconds` vs `predicted_suboptimality`).
+    /// (`predicted_seconds` / `predicted_suboptimality` /
+    /// `predicted_dollars`). The fleet field is omitted when the
+    /// winner is an unnamed base fleet, keeping pre-fleet responses
+    /// byte-stable.
     pub fn to_json(&self) -> Json {
-        Json::object(vec![
+        let mut fields = vec![
             ("algorithm", Json::str(self.algorithm.as_str())),
             ("machines", Json::num(self.machines as f64)),
             ("barrier_mode", Json::str(self.barrier_mode.as_str())),
-            (self.predicted.field_name(), Json::num(self.predicted.value())),
-        ])
+        ];
+        if !self.fleet.is_empty() {
+            fields.push(("fleet", Json::str(self.fleet.clone())));
+        }
+        fields.push((self.predicted.field_name(), Json::num(self.predicted.value())));
+        Json::object(fields)
     }
 }
 
 /// One row of the advisor's full prediction table (per algorithm × m
-/// × barrier mode), replacing the old anonymous 4-tuple.
+/// × barrier mode × fleet), replacing the old anonymous 4-tuple.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PredictionRow {
     pub algorithm: AlgorithmId,
     pub machines: usize,
     pub barrier_mode: BarrierMode,
+    /// Fleet wire name ("" = the model's unnamed base fleet).
+    pub fleet: String,
     /// Predicted seconds to the ε goal (None if unreachable).
     pub time_to_eps: Option<f64>,
     /// Predicted suboptimality at the time budget.
@@ -321,16 +449,20 @@ pub struct PredictionRow {
 
 impl PredictionRow {
     pub fn to_json(&self) -> Json {
-        Json::object(vec![
+        let mut fields = vec![
             ("algorithm", Json::str(self.algorithm.as_str())),
             ("machines", Json::num(self.machines as f64)),
             ("barrier_mode", Json::str(self.barrier_mode.as_str())),
-            (
-                "time_to_eps",
-                self.time_to_eps.map(Json::num).unwrap_or(Json::Null),
-            ),
-            ("subopt_at_budget", Json::num(self.subopt_at_budget)),
-        ])
+        ];
+        if !self.fleet.is_empty() {
+            fields.push(("fleet", Json::str(self.fleet.clone())));
+        }
+        fields.push((
+            "time_to_eps",
+            self.time_to_eps.map(Json::num).unwrap_or(Json::Null),
+        ));
+        fields.push(("subopt_at_budget", Json::num(self.subopt_at_budget)));
+        Json::object(fields)
     }
 }
 
@@ -344,19 +476,26 @@ mod tests {
         let q2 = Query::best_at(20.0).with(Constraints {
             max_machines: Some(32),
             machine_cost_weight: 0.01,
-            barrier_mode: ModeFilter::default(),
+            ..Constraints::none()
         });
         let q3 = Query::fastest_to(1e-3).with(Constraints {
-            max_machines: None,
-            machine_cost_weight: 0.0,
             barrier_mode: ModeFilter::Any,
+            ..Constraints::none()
         });
         let q4 = Query::best_at(5.0).with(Constraints {
-            max_machines: None,
-            machine_cost_weight: 0.0,
             barrier_mode: ModeFilter::Only(BarrierMode::Ssp { staleness: 4 }),
+            ..Constraints::none()
         });
-        for q in [q1, q2, q3, q4] {
+        let q5 = Query::cheapest_to(1e-4).with(Constraints {
+            fleet: FleetFilter::Any,
+            barrier_mode: ModeFilter::Any,
+            ..Constraints::none()
+        });
+        let q6 = Query::fastest_to(1e-3).with(Constraints {
+            fleet: FleetFilter::Only("mixed:r3_xlarge+local48".into()),
+            ..Constraints::none()
+        });
+        for q in [q1, q2, q3, q4, q5, q6] {
             let doc = Json::parse(&q.to_json().to_string()).unwrap();
             assert_eq!(Query::from_json(&doc).unwrap(), q);
         }
@@ -364,16 +503,20 @@ mod tests {
 
     #[test]
     fn legacy_wire_queries_default_to_bsp() {
-        // Pre-barrier-axis clients omit the field: exactly BSP-only.
+        // Pre-barrier-axis clients omit the field: exactly BSP-only on
+        // the base fleet.
         let doc = Json::parse(r#"{"query":"fastest_to","eps":1e-4}"#).unwrap();
         let q = Query::from_json(&doc).unwrap();
         assert_eq!(
             q.constraints().barrier_mode,
             ModeFilter::Only(BarrierMode::Bsp)
         );
-        // And the default filter serializes to nothing (byte-stable
+        assert_eq!(q.constraints().fleet, FleetFilter::Base);
+        // And the default filters serialize to nothing (byte-stable
         // wire form for legacy queries).
-        assert!(!q.to_json().to_string().contains("barrier_mode"));
+        let wire = q.to_json().to_string();
+        assert!(!wire.contains("barrier_mode"));
+        assert!(!wire.contains("fleet"));
     }
 
     #[test]
@@ -387,7 +530,13 @@ mod tests {
             r#"{"query": "fastest_to", "eps": 1e-4, "max_machines": "8"}"#,
             r#"{"query": "fastest_to", "eps": 1e-4, "barrier_mode": "quantum"}"#,
             r#"{"query": "fastest_to", "eps": 1e-4, "barrier_mode": 3}"#,
+            r#"{"query": "fastest_to", "eps": 1e-4, "fleet": "quantum"}"#,
+            r#"{"query": "fastest_to", "eps": 1e-4, "fleet": 7}"#,
+            r#"{"query": "fastest_to", "eps": 1e-4, "fleet": "local48*2"}"#,
             r#"{"query": "best_at", "budget": 0}"#,
+            r#"{"query": "cheapest_to"}"#,
+            r#"{"query": "cheapest_to", "eps": 0}"#,
+            r#"{"query": "cheapest_to", "eps": 1e-4, "machine_cost_weight": 0.1}"#,
             r#"{"query": "nope", "eps": 1e-4}"#,
         ] {
             let doc = Json::parse(bad).unwrap();
@@ -400,7 +549,7 @@ mod tests {
         let c = Constraints {
             max_machines: Some(8),
             machine_cost_weight: 0.5,
-            barrier_mode: ModeFilter::default(),
+            ..Constraints::none()
         };
         assert!(c.admits(8) && !c.admits(16));
         assert!(Constraints::none().admits(usize::MAX));
@@ -427,19 +576,44 @@ mod tests {
         let s = Predicted::Seconds(3.0);
         assert_eq!(s.seconds(), Some(3.0));
         assert_eq!(s.suboptimality(), None);
+        assert_eq!(s.dollars(), None);
         assert_eq!(s.field_name(), "predicted_seconds");
         let l = Predicted::Suboptimality(1e-4);
         assert_eq!(l.seconds(), None);
         assert_eq!(l.suboptimality(), Some(1e-4));
         assert_eq!(l.field_name(), "predicted_suboptimality");
+        let d = Predicted::Dollars(0.75);
+        assert_eq!(d.seconds(), None);
+        assert_eq!(d.suboptimality(), None);
+        assert_eq!(d.dollars(), Some(0.75));
+        assert_eq!(d.field_name(), "predicted_dollars");
+        assert_eq!(d.value(), 0.75);
     }
 
     #[test]
-    fn recommendation_json_carries_the_unit_and_mode() {
+    fn fleet_filter_admission() {
+        let base = FleetFilter::Base;
+        assert!(base.admits("", ""));
+        assert!(base.admits("local48", "local48"));
+        assert!(!base.admits("straggly48", "local48"));
+        let only = FleetFilter::parse("straggly48").unwrap();
+        assert_eq!(only, FleetFilter::Only("straggly48".into()));
+        assert!(only.admits("straggly48", "local48"));
+        assert!(!only.admits("local48", "local48"));
+        assert!(FleetFilter::Any.admits("anything-fitted", ""));
+        assert_eq!(FleetFilter::parse("any").unwrap(), FleetFilter::Any);
+        assert_eq!(FleetFilter::parse("base").unwrap(), FleetFilter::Base);
+        // Typos fail at parse time, not by matching nothing forever.
+        assert!(FleetFilter::parse("locl48").is_err());
+    }
+
+    #[test]
+    fn recommendation_json_carries_the_unit_mode_and_fleet() {
         let rec = Recommendation {
             algorithm: AlgorithmId::CocoaPlus,
             machines: 16,
             barrier_mode: BarrierMode::Ssp { staleness: 2 },
+            fleet: String::new(),
             predicted: Predicted::Seconds(12.5),
             objective: 12.5,
         };
@@ -448,5 +622,17 @@ mod tests {
         assert!(doc.get("predicted_suboptimality").is_none());
         assert_eq!(doc.req_str("algorithm").unwrap(), "cocoa+");
         assert_eq!(doc.req_str("barrier_mode").unwrap(), "ssp:2");
+        // Unnamed base fleet: no fleet field (pre-fleet wire shape).
+        assert!(doc.get("fleet").is_none());
+        // A named fleet (and a dollar prediction) appear explicitly.
+        let rec = Recommendation {
+            fleet: "mixed:r3_xlarge+local48".into(),
+            predicted: Predicted::Dollars(0.5),
+            objective: 0.5,
+            ..rec
+        };
+        let doc = rec.to_json();
+        assert_eq!(doc.req_str("fleet").unwrap(), "mixed:r3_xlarge+local48");
+        assert_eq!(doc.req_f64("predicted_dollars").unwrap(), 0.5);
     }
 }

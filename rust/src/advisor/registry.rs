@@ -13,6 +13,7 @@ use std::path::{Path, PathBuf};
 
 use super::combined::CombinedModel;
 use super::query::{Constraints, Predicted, PredictionRow, Query, Recommendation};
+use crate::cluster::FleetSpec;
 use crate::optim::AlgorithmId;
 use crate::util::json::{read_json_file, write_json_file, Json};
 
@@ -49,6 +50,11 @@ pub struct ModelRegistry {
     /// Iteration cap when inverting g for time-to-target queries
     /// ([`crate::config::ExperimentConfig::advisor_iter_cap`]).
     pub iter_cap: usize,
+    /// The fleet axis this registry can price in dollars (the config's
+    /// parsed `fleets`, base first). `cheapest_to` resolves each model
+    /// variant's fleet name here — an unnamed base fleet (legacy
+    /// artifacts) falls back to the first entry.
+    pub fleets: Vec<FleetSpec>,
 }
 
 impl ModelRegistry {
@@ -57,7 +63,23 @@ impl ModelRegistry {
             models: BTreeMap::new(),
             machine_grid,
             iter_cap,
+            fleets: Vec::new(),
         }
+    }
+
+    /// Resolve a model variant's fleet name to a priceable spec: the
+    /// registry's fleet axis first, the wire grammar as a fallback,
+    /// and the base (first) fleet for the unnamed legacy fleet. None
+    /// means the variant cannot be priced and `cheapest_to` skips it.
+    pub fn resolve_fleet(&self, name: &str) -> Option<FleetSpec> {
+        if name.is_empty() {
+            return self.fleets.first().cloned();
+        }
+        self.fleets
+            .iter()
+            .find(|f| f.name == name)
+            .cloned()
+            .or_else(|| FleetSpec::parse(name).ok())
     }
 
     pub fn insert(&mut self, key: ModelKey, model: CombinedModel) {
@@ -91,16 +113,19 @@ impl ModelRegistry {
     }
 
     /// Answer a typed query over every model × machine-grid point ×
-    /// admitted barrier mode. A model only competes in the modes it
-    /// was fitted for; the default `Only(Bsp)` filter reproduces the
-    /// pre-barrier-axis search exactly.
+    /// admitted (barrier mode, fleet) variant. A model only competes
+    /// in the variants it was fitted for; the default
+    /// `Only(Bsp)`/`Base` filters reproduce the pre-barrier-axis,
+    /// pre-fleet search exactly.
     pub fn answer(&self, query: &Query) -> Option<Recommendation> {
-        match *query {
+        match query {
             Query::FastestTo { eps, constraints } => {
                 let mut best: Option<Recommendation> = None;
                 for (key, model) in &self.models {
-                    for mode in model.fitted_modes() {
-                        if !constraints.barrier_mode.admits(mode) {
+                    for (fleet, mode) in model.fitted_variants() {
+                        if !constraints.barrier_mode.admits(mode)
+                            || !constraints.fleet.admits(&fleet, &model.base_fleet)
+                        {
                             continue;
                         }
                         for &m in &self.machine_grid {
@@ -108,7 +133,7 @@ impl ModelRegistry {
                                 continue;
                             }
                             if let Some(t) =
-                                model.time_to_subopt_in(mode, eps, m, self.iter_cap)
+                                model.time_to_subopt_v(&fleet, mode, *eps, m, self.iter_cap)
                             {
                                 let objective = constraints.weighted_seconds(t, m);
                                 if best
@@ -120,6 +145,7 @@ impl ModelRegistry {
                                         algorithm: key.algorithm,
                                         machines: m,
                                         barrier_mode: mode,
+                                        fleet: fleet.clone(),
                                         predicted: Predicted::Seconds(t),
                                         objective,
                                     });
@@ -133,17 +159,20 @@ impl ModelRegistry {
             Query::BestAt { budget, constraints } => {
                 let mut best: Option<Recommendation> = None;
                 for (key, model) in &self.models {
-                    for mode in model.fitted_modes() {
-                        if !constraints.barrier_mode.admits(mode) {
+                    for (fleet, mode) in model.fitted_variants() {
+                        if !constraints.barrier_mode.admits(mode)
+                            || !constraints.fleet.admits(&fleet, &model.base_fleet)
+                        {
                             continue;
                         }
                         for &m in &self.machine_grid {
                             if !constraints.admits(m) {
                                 continue;
                             }
-                            let s = match model.subopt_at_time_in(
+                            let s = match model.subopt_at_time_v(
+                                &fleet,
                                 mode,
-                                constraints.effective_budget(budget, m),
+                                constraints.effective_budget(*budget, m),
                                 m,
                             ) {
                                 Some(s) => s,
@@ -156,9 +185,59 @@ impl ModelRegistry {
                                     algorithm: key.algorithm,
                                     machines: m,
                                     barrier_mode: mode,
+                                    fleet: fleet.clone(),
                                     predicted: Predicted::Suboptimality(s),
                                     objective: s,
                                 });
+                            }
+                        }
+                    }
+                }
+                best
+            }
+            Query::CheapestTo { eps, constraints } => {
+                let mut best: Option<Recommendation> = None;
+                for (key, model) in &self.models {
+                    for (fleet, mode) in model.fitted_variants() {
+                        if !constraints.barrier_mode.admits(mode)
+                            || !constraints.fleet.admits(&fleet, &model.base_fleet)
+                        {
+                            continue;
+                        }
+                        // A variant without a priceable fleet cannot
+                        // compete in dollars.
+                        let Some(spec) = self.resolve_fleet(&fleet) else {
+                            continue;
+                        };
+                        for &m in &self.machine_grid {
+                            if !constraints.admits(m) {
+                                continue;
+                            }
+                            if let Some(t) =
+                                model.time_to_subopt_v(&fleet, mode, *eps, m, self.iter_cap)
+                            {
+                                let dollars = spec.dollars(t, m);
+                                if best
+                                    .as_ref()
+                                    .map(|b| dollars < b.objective)
+                                    .unwrap_or(true)
+                                {
+                                    best = Some(Recommendation {
+                                        algorithm: key.algorithm,
+                                        machines: m,
+                                        barrier_mode: mode,
+                                        // Name the priced fleet even
+                                        // when the model's base fleet
+                                        // is the unnamed legacy one.
+                                        fleet: if fleet.is_empty() {
+                                            spec.name.clone()
+                                        } else {
+                                            fleet.clone()
+                                        },
+                                        predicted: Predicted::Dollars(dollars),
+                                        objective: dollars,
+                                    });
+                                }
                             }
                         }
                     }
@@ -169,14 +248,16 @@ impl ModelRegistry {
     }
 
     /// Full prediction table (one typed row per algorithm × admitted
-    /// m × admitted fitted mode). Inadmissible machine counts are
-    /// skipped before the (expensive) g-inversion, not filtered
-    /// afterwards.
+    /// m × admitted fitted (mode, fleet) variant). Inadmissible
+    /// machine counts are skipped before the (expensive) g-inversion,
+    /// not filtered afterwards.
     pub fn table(&self, eps: f64, budget: f64, constraints: &Constraints) -> Vec<PredictionRow> {
         let mut rows = Vec::new();
         for (key, model) in &self.models {
-            for mode in model.fitted_modes() {
-                if !constraints.barrier_mode.admits(mode) {
+            for (fleet, mode) in model.fitted_variants() {
+                if !constraints.barrier_mode.admits(mode)
+                    || !constraints.fleet.admits(&fleet, &model.base_fleet)
+                {
                     continue;
                 }
                 for &m in &self.machine_grid {
@@ -187,9 +268,10 @@ impl ModelRegistry {
                         algorithm: key.algorithm,
                         machines: m,
                         barrier_mode: mode,
-                        time_to_eps: model.time_to_subopt_in(mode, eps, m, self.iter_cap),
+                        fleet: fleet.clone(),
+                        time_to_eps: model.time_to_subopt_v(&fleet, mode, eps, m, self.iter_cap),
                         subopt_at_budget: model
-                            .subopt_at_time_in(mode, budget, m)
+                            .subopt_at_time_v(&fleet, mode, budget, m)
                             .unwrap_or(f64::NAN),
                     });
                 }
@@ -512,6 +594,116 @@ mod tests {
                 ..Constraints::none()
             }))
             .is_none());
+    }
+
+    /// Registry whose cocoa model also carries a named base fleet and
+    /// a "straggly48" BSP pair with 2× slower iterations — plus a
+    /// fleet axis so dollars are resolvable.
+    fn registry_with_fleets() -> ModelRegistry {
+        use crate::advisor::combined::ModeModel;
+        let mut r = registry();
+        r.fleets = vec![
+            FleetSpec::parse("local48").unwrap(),
+            FleetSpec::parse("straggly48").unwrap(),
+        ];
+        let mut cocoa = r.get(AlgorithmId::Cocoa, "ctx").unwrap().clone();
+        cocoa.base_fleet = "local48".into();
+        let mut slow = cocoa.ernest.clone();
+        for t in slow.theta.iter_mut() {
+            *t *= 2.0;
+        }
+        cocoa.insert_fleet_pair(
+            "straggly48",
+            crate::cluster::BarrierMode::Bsp,
+            ModeModel { ernest: slow, conv: cocoa.conv.clone() },
+        );
+        let mut plus = r.get(AlgorithmId::CocoaPlus, "ctx").unwrap().clone();
+        plus.base_fleet = "local48".into();
+        r.insert(
+            ModelKey { algorithm: AlgorithmId::Cocoa, context: "ctx".into() },
+            cocoa,
+        );
+        r.insert(
+            ModelKey { algorithm: AlgorithmId::CocoaPlus, context: "ctx".into() },
+            plus,
+        );
+        r
+    }
+
+    #[test]
+    fn fleet_search_defaults_to_base_and_expands_on_request() {
+        use crate::advisor::query::FleetFilter;
+        let r = registry_with_fleets();
+        // Default: base-fleet-only search, as before the fleet axis.
+        let base = r.answer(&Query::fastest_to(1e-3)).unwrap();
+        assert_eq!(base.fleet, "local48");
+        // Any-fleet search includes every base candidate: it can only
+        // tie or win, and here the slow fleet never wins on *time*.
+        let any = r
+            .answer(&Query::fastest_to(1e-3).with(Constraints {
+                fleet: FleetFilter::Any,
+                ..Constraints::none()
+            }))
+            .unwrap();
+        assert!(any.objective <= base.objective);
+        assert_eq!(any.fleet, "local48");
+        // Pinning the slow fleet answers from its own pair — slower.
+        let pinned = r
+            .answer(&Query::fastest_to(1e-3).with(Constraints {
+                fleet: FleetFilter::Only("straggly48".into()),
+                ..Constraints::none()
+            }))
+            .unwrap();
+        assert_eq!(pinned.fleet, "straggly48");
+        assert_eq!(pinned.algorithm, AlgorithmId::Cocoa);
+        assert!(pinned.predicted.seconds().unwrap() > base.predicted.seconds().unwrap());
+        // A fleet nobody fitted answers nothing.
+        assert!(r
+            .answer(&Query::fastest_to(1e-3).with(Constraints {
+                fleet: FleetFilter::Only("mixed48".into()),
+                ..Constraints::none()
+            }))
+            .is_none());
+    }
+
+    #[test]
+    fn cheapest_to_prices_in_dollars() {
+        use crate::advisor::query::FleetFilter;
+        let r = registry_with_fleets();
+        let rec = r.answer(&Query::cheapest_to(1e-3)).unwrap();
+        let dollars = rec.predicted.dollars().expect("cheapest_to answers in dollars");
+        assert!(dollars > 0.0 && dollars.is_finite());
+        assert!(!rec.fleet.is_empty(), "cheapest recommendations name their fleet");
+        // The dollars are exactly predicted-seconds × the fleet's rate
+        // at the recommended m.
+        let spec = r.resolve_fleet(&rec.fleet).unwrap();
+        let model = r.get(rec.algorithm, "ctx").unwrap();
+        let t = model
+            .time_to_subopt_v(&rec.fleet, rec.barrier_mode, 1e-3, rec.machines, r.iter_cap)
+            .unwrap();
+        assert_eq!(dollars.to_bits(), spec.dollars(t, rec.machines).to_bits());
+        // Fastest ≠ cheapest in general: the cheapest recommendation
+        // never costs more than the fastest one's dollar price.
+        let fast = r
+            .answer(&Query::fastest_to(1e-3).with(Constraints {
+                fleet: FleetFilter::Any,
+                ..Constraints::none()
+            }))
+            .unwrap();
+        let fast_spec = r.resolve_fleet(&fast.fleet).unwrap();
+        let fast_dollars = fast_spec.dollars(fast.predicted.seconds().unwrap(), fast.machines);
+        assert!(dollars <= fast_dollars + 1e-12);
+        // Without a resolvable fleet axis, legacy unnamed-base models
+        // cannot be priced: no answer, not a panic.
+        let bare = registry(); // base_fleet "" everywhere, fleets empty
+        assert!(bare.answer(&Query::cheapest_to(1e-3)).is_none());
+        // Giving the bare registry a fleet axis restores pricing via
+        // the base-fleet fallback.
+        let mut priced = registry();
+        priced.fleets = vec![FleetSpec::parse("local48").unwrap()];
+        let rec = priced.answer(&Query::cheapest_to(1e-3)).unwrap();
+        assert_eq!(rec.fleet, "local48");
+        assert!(rec.predicted.dollars().unwrap() > 0.0);
     }
 
     #[test]

@@ -10,6 +10,8 @@
 //! ← {"ok":true,"query":"fastest_to","algorithm":"cocoa+","machines":16,"predicted_seconds":12.5}
 //! → {"query":"best_at","budget":20,"max_machines":8}
 //! ← {"ok":true,"query":"best_at","algorithm":"cocoa+","machines":8,"predicted_suboptimality":3.1e-5}
+//! → {"query":"cheapest_to","eps":1e-4,"fleet":"any"}
+//! ← {"ok":true,"query":"cheapest_to","algorithm":"cocoa+","machines":8,"barrier_mode":"bsp","fleet":"local48","predicted_dollars":0.0123}
 //! → {"query":"table","eps":1e-4,"budget":20}
 //! ← {"ok":true,"query":"table","rows":[{"algorithm":"cocoa+","machines":1,...},...]}
 //! → {"query":"models"}
@@ -61,7 +63,7 @@ pub fn handle_line(registry: &ModelRegistry, line: &str) -> Json {
         Err(e) => return error_response(e.to_string()),
     };
     match kind.as_str() {
-        "fastest_to" | "best_at" => {
+        "fastest_to" | "best_at" | "cheapest_to" => {
             let query = match Query::from_json(&doc) {
                 Ok(q) => q,
                 Err(e) => return error_response(e.to_string()),
@@ -119,13 +121,24 @@ pub fn handle_line(registry: &ModelRegistry, line: &str) -> Json {
                                 model.fitted_modes().iter().map(|m| Json::str(m.as_str())),
                             ),
                         ),
+                        (
+                            "fleets",
+                            Json::array(
+                                model
+                                    .fitted_fleets()
+                                    .into_iter()
+                                    .filter(|f| !f.is_empty())
+                                    .map(Json::str),
+                            ),
+                        ),
                     ])
                 })
                 .collect();
             ok_response(&kind, vec![("models".into(), Json::array(models))])
         }
         other => error_response(format!(
-            "unknown query kind '{other}' (expected fastest_to, best_at, table or models)"
+            "unknown query kind '{other}' \
+             (expected fastest_to, best_at, cheapest_to, table or models)"
         )),
     }
 }
@@ -285,6 +298,57 @@ mod tests {
         // Pinning an unfitted mode is a clean miss, not a fallback.
         let resp =
             handle_line(&registry, r#"{"query":"fastest_to","eps":0.02,"barrier_mode":"ssp:3"}"#);
+        assert!(!resp.get("ok").and_then(Json::as_bool).unwrap());
+    }
+
+    /// The golden registry with a named base fleet and a priced fleet
+    /// axis: f(m) = 0.5 stays exact, the unit price is a hand-built
+    /// 0.25 $/machine-second, so dollars are exact arithmetic too.
+    fn golden_registry_with_fleet() -> ModelRegistry {
+        use crate::cluster::{FleetSpec, HardwareProfile};
+        let mut registry = golden_registry();
+        let mut profile = HardwareProfile::ideal();
+        profile.name = "ideal".into();
+        profile.price_per_machine_second = 0.25;
+        let fleet = FleetSpec::uniform(profile);
+        let mut model = registry
+            .get(AlgorithmId::CocoaPlus, "golden")
+            .unwrap()
+            .clone();
+        model.base_fleet = "ideal".into();
+        registry.insert(
+            ModelKey {
+                algorithm: AlgorithmId::CocoaPlus,
+                context: "golden".into(),
+            },
+            model,
+        );
+        registry.fleets = vec![fleet];
+        registry
+    }
+
+    #[test]
+    fn golden_cheapest_to_response() {
+        let registry = golden_registry_with_fleet();
+        // ε = 0.02 needs 4 iters at m=1 (2.0s → $0.5), 7 at m=2
+        // (3.5s → $1.75), 13 at m=4 (6.5s → $6.5): m=1 is cheapest at
+        // exactly 2.0·1·0.25 = $0.5.
+        let resp = handle_line(&registry, r#"{"query":"cheapest_to","eps":0.02}"#);
+        assert_eq!(
+            resp.to_string(),
+            r#"{"ok":true,"query":"cheapest_to","algorithm":"cocoa+","machines":1,"barrier_mode":"bsp","fleet":"ideal","predicted_dollars":0.5}"#
+        );
+        // machine_cost_weight is rejected for cheapest_to — real
+        // prices, not the abstract weight.
+        let resp = handle_line(
+            &registry,
+            r#"{"query":"cheapest_to","eps":0.02,"machine_cost_weight":0.1}"#,
+        );
+        assert!(!resp.get("ok").and_then(Json::as_bool).unwrap());
+        // A registry with no fleet axis and unnamed base fleets cannot
+        // price: a clean error response, not a panic.
+        let unpriced = golden_registry();
+        let resp = handle_line(&unpriced, r#"{"query":"cheapest_to","eps":0.02}"#);
         assert!(!resp.get("ok").and_then(Json::as_bool).unwrap());
     }
 

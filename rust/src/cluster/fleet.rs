@@ -1,0 +1,347 @@
+//! Heterogeneous fleets: what a cluster is actually *made of*.
+//!
+//! The paper's testbed — and every simulator in this repo until now —
+//! treats a cluster as m identical clones of one [`HardwareProfile`].
+//! Real deployments mix instance generations, carry persistently slow
+//! nodes, and price machine types differently (Dünner et al. show
+//! distributed-ML iteration time on Spark is dominated by exactly this
+//! machine-level heterogeneity; Tsianos et al. frame the machine count
+//! itself as a cost trade-off). A [`FleetSpec`] describes such a
+//! cluster:
+//!
+//! * a **base profile** — fixed per-iteration costs, the network, the
+//!   noise model, and the compute rate of the even-ranked machines;
+//! * an optional **secondary profile** (`mixed:` fleets) — odd-ranked
+//!   machines compute at the secondary type's rate;
+//! * a **persistent-slow-node fraction** — the first
+//!   `round(fraction·m)` machines compute `slow_factor`× slower, every
+//!   iteration, unlike the profile's transient stragglers;
+//! * **per-machine prices** — every machine bills its own type's
+//!   `$/machine-second` for the full wall-clock of the run (waiting at
+//!   a barrier is not free).
+//!
+//! ## Wire grammar (strict)
+//!
+//! ```text
+//! fleet      := preset | mixed | shaped
+//! mixed      := "mixed:" profile "+" profile       # even ranks get the
+//!                                                  # first type, odd the second
+//! shaped     := profile [ "*" fraction ] [ ":slow=" factor "x" ]
+//! profile    := a HardwareProfile name (local48, r3_xlarge, ideal)
+//! preset     := "mixed48"     = mixed:local48+r3_xlarge
+//!             | "straggly48"  = local48*0.25:slow=3x
+//! ```
+//!
+//! A bare profile name parses to the **uniform fleet** of that profile,
+//! which the simulator prices bit-identically to the plain-profile path
+//! (property-tested in `tests/barrier_props.rs`) — fleets are a strict
+//! generalization, never a behavior change for homogeneous clusters.
+//!
+//! Heterogeneity only multiplies each machine's *compute* term; the
+//! fixed driver costs, the collectives and the noise draws stay on the
+//! base profile, so RNG consumption is identical across fleets of the
+//! same base and cross-fleet comparisons at one seed are paired the
+//! same way cross-barrier-mode comparisons are.
+
+use super::profile::HardwareProfile;
+
+/// Default slowdown when a spec names a slow fraction without a factor
+/// (`"local48*0.3"`).
+pub const DEFAULT_SLOW_FACTOR: f64 = 2.0;
+
+/// Named fleet presets: shorthand → canonical spec. `parse` accepts
+/// either form; the preset name is kept as the fleet's wire name so it
+/// round-trips.
+pub const PRESETS: &[(&str, &str)] = &[
+    ("mixed48", "mixed:local48+r3_xlarge"),
+    ("straggly48", "local48*0.25:slow=3x"),
+];
+
+/// A heterogeneous (or trivially uniform) cluster description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    /// Canonical wire name — the string `parse` accepts and the id
+    /// that appears in sweep cell keys and model artifacts.
+    pub name: String,
+    /// Primary machine type: fixed costs, network, noise, and the
+    /// compute rate of even-ranked machines.
+    pub base: HardwareProfile,
+    /// Secondary machine type (`mixed:` fleets); odd-ranked machines
+    /// compute at this type's rate and bill at its price.
+    pub secondary: Option<HardwareProfile>,
+    /// Fraction of machines that are persistently slow (in `[0, 1]`).
+    pub slow_fraction: f64,
+    /// Compute slowdown of a persistent slow node (≥ 1).
+    pub slow_factor: f64,
+}
+
+impl FleetSpec {
+    /// The uniform fleet of one profile — the degenerate case every
+    /// pre-fleet code path maps onto. Its wire name is the profile
+    /// name itself.
+    pub fn uniform(base: HardwareProfile) -> FleetSpec {
+        FleetSpec {
+            name: base.name.clone(),
+            base,
+            secondary: None,
+            slow_fraction: 0.0,
+            slow_factor: 1.0,
+        }
+    }
+
+    /// Whether every machine is identical (no secondary type, no
+    /// persistent slow nodes).
+    pub fn is_uniform(&self) -> bool {
+        self.secondary.is_none() && self.slow_fraction == 0.0
+    }
+
+    /// Parse the strict wire grammar (see module docs), including the
+    /// named presets. Anything unrecognized is an error with the
+    /// grammar spelled out — a config naming a fleet this build does
+    /// not know must never silently run a uniform cluster instead.
+    pub fn parse(s: &str) -> crate::Result<FleetSpec> {
+        let input = s.trim();
+        crate::ensure!(!input.is_empty(), "empty fleet spec");
+        if let Some((_, canonical)) = PRESETS.iter().find(|(name, _)| *name == input) {
+            let mut fleet = Self::parse(canonical)?;
+            fleet.name = input.to_string();
+            return Ok(fleet);
+        }
+        if let Some(rest) = input.strip_prefix("mixed:") {
+            let mut parts = rest.split('+');
+            let (a, b) = match (parts.next(), parts.next(), parts.next()) {
+                (Some(a), Some(b), None) => (a.trim(), b.trim()),
+                _ => crate::bail!(
+                    "bad mixed fleet '{input}' (expected mixed:<profile>+<profile>)"
+                ),
+            };
+            let base = HardwareProfile::by_name(a)?;
+            let secondary = HardwareProfile::by_name(b)?;
+            return Ok(FleetSpec {
+                name: input.to_string(),
+                base,
+                secondary: Some(secondary),
+                slow_fraction: 0.0,
+                slow_factor: 1.0,
+            });
+        }
+        // shaped := profile [ "*" fraction ] [ ":slow=" factor "x" ]
+        let (head, slow_factor) = match input.split_once(":slow=") {
+            Some((head, tail)) => {
+                let digits = tail.strip_suffix('x').ok_or_else(|| {
+                    crate::err!(
+                        "bad slow factor '{tail}' in fleet '{input}' (expected :slow=<factor>x)"
+                    )
+                })?;
+                let f: f64 = digits.parse().map_err(|_| {
+                    crate::err!(
+                        "bad slow factor '{digits}' in fleet '{input}' (expected a number ≥ 1)"
+                    )
+                })?;
+                crate::ensure!(
+                    f.is_finite() && f >= 1.0,
+                    "slow factor must be finite and ≥ 1, got {f} in fleet '{input}'"
+                );
+                (head, Some(f))
+            }
+            None => (input, None),
+        };
+        let (profile_name, slow_fraction) = match head.split_once('*') {
+            Some((p, frac)) => {
+                let f: f64 = frac.parse().map_err(|_| {
+                    crate::err!(
+                        "bad slow fraction '{frac}' in fleet '{input}' \
+                         (expected <profile>*<fraction in [0,1]>)"
+                    )
+                })?;
+                crate::ensure!(
+                    f.is_finite() && (0.0..=1.0).contains(&f),
+                    "slow fraction must be in [0, 1], got {f} in fleet '{input}'"
+                );
+                (p.trim(), f)
+            }
+            None => (head.trim(), 0.0),
+        };
+        if slow_factor.is_some() && slow_fraction == 0.0 {
+            crate::bail!(
+                "fleet '{input}' names a slow factor but no slow machines \
+                 (write <profile>*<fraction>:slow=<factor>x)"
+            );
+        }
+        let base = HardwareProfile::by_name(profile_name)?;
+        Ok(FleetSpec {
+            name: input.to_string(),
+            base,
+            secondary: None,
+            slow_fraction,
+            slow_factor: slow_factor.unwrap_or(if slow_fraction > 0.0 {
+                DEFAULT_SLOW_FACTOR
+            } else {
+                1.0
+            }),
+        })
+    }
+
+    /// How many of an m-machine allocation are persistently slow.
+    pub fn slow_count(&self, m: usize) -> usize {
+        ((self.slow_fraction * m as f64).round() as usize).min(m)
+    }
+
+    /// The machine type serving rank `k` (even ranks: base; odd ranks:
+    /// the secondary type on mixed fleets). Rank-parity rather than a
+    /// prefix split keeps the mix stable when the adaptive loop
+    /// changes m mid-run.
+    pub fn machine_profile(&self, k: usize) -> &HardwareProfile {
+        match &self.secondary {
+            Some(sec) if k % 2 == 1 => sec,
+            _ => &self.base,
+        }
+    }
+
+    /// Multiplier on machine k's *compute* time relative to the base
+    /// profile. Exactly 1.0 on a uniform fleet — the bit-identity
+    /// guarantee the simulator's uniform-≡-plain property rests on.
+    pub fn compute_factor(&self, k: usize, m: usize) -> f64 {
+        let mut factor = 1.0;
+        if let Some(sec) = &self.secondary {
+            if k % 2 == 1 {
+                factor = self.base.flops_per_sec / sec.flops_per_sec;
+            }
+        }
+        if k < self.slow_count(m) {
+            factor *= self.slow_factor;
+        }
+        factor
+    }
+
+    /// Dollars per wall-clock second of an m-machine allocation —
+    /// every machine bills its own type's rate for the whole run,
+    /// computing or waiting.
+    pub fn price_rate(&self, m: usize) -> f64 {
+        (0..m)
+            .map(|k| self.machine_profile(k).price_per_machine_second)
+            .sum()
+    }
+
+    /// Dollar cost of `elapsed` simulated seconds at m machines.
+    pub fn dollars(&self, elapsed: f64, m: usize) -> f64 {
+        elapsed * self.price_rate(m)
+    }
+}
+
+impl std::fmt::Display for FleetSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_profile_parses_to_uniform() {
+        for name in ["local48", "r3_xlarge", "ideal"] {
+            let fleet = FleetSpec::parse(name).unwrap();
+            assert_eq!(fleet, FleetSpec::uniform(HardwareProfile::by_name(name).unwrap()));
+            assert!(fleet.is_uniform());
+            assert_eq!(fleet.name, name);
+            // Uniform ⇒ every machine computes at factor exactly 1.
+            for k in 0..8 {
+                assert_eq!(fleet.compute_factor(k, 8), 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn shaped_fleet_parses_fraction_and_factor() {
+        let fleet = FleetSpec::parse("local48*0.3:slow=2x").unwrap();
+        assert_eq!(fleet.base.name, "local48");
+        assert_eq!(fleet.slow_fraction, 0.3);
+        assert_eq!(fleet.slow_factor, 2.0);
+        assert!(!fleet.is_uniform());
+        // round(0.3·10) = 3 slow machines; they (and only they) pay 2×.
+        assert_eq!(fleet.slow_count(10), 3);
+        assert_eq!(fleet.compute_factor(0, 10), 2.0);
+        assert_eq!(fleet.compute_factor(2, 10), 2.0);
+        assert_eq!(fleet.compute_factor(3, 10), 1.0);
+        assert_eq!(fleet.compute_factor(9, 10), 1.0);
+        // Fraction without factor defaults to 2×.
+        let dft = FleetSpec::parse("local48*0.5").unwrap();
+        assert_eq!(dft.slow_factor, DEFAULT_SLOW_FACTOR);
+        assert_eq!(dft.slow_count(4), 2);
+    }
+
+    #[test]
+    fn mixed_fleet_alternates_types() {
+        let fleet = FleetSpec::parse("mixed:r3_xlarge+local48").unwrap();
+        assert_eq!(fleet.base.name, "r3_xlarge");
+        assert_eq!(fleet.secondary.as_ref().unwrap().name, "local48");
+        assert!(!fleet.is_uniform());
+        // Odd ranks run on the (here faster) secondary type: their
+        // compute factor is flops_base / flops_secondary < 1.
+        let expect = 1.5e7 / 2.0e7;
+        assert_eq!(fleet.compute_factor(0, 4), 1.0);
+        assert_eq!(fleet.compute_factor(1, 4), expect);
+        assert_eq!(fleet.compute_factor(2, 4), 1.0);
+        assert_eq!(fleet.compute_factor(3, 4), expect);
+        // Each machine bills its own type.
+        let r3 = HardwareProfile::r3_xlarge().price_per_machine_second;
+        let l48 = HardwareProfile::local48().price_per_machine_second;
+        assert!((fleet.price_rate(4) - (2.0 * r3 + 2.0 * l48)).abs() < 1e-15);
+        assert!((fleet.dollars(10.0, 2) - 10.0 * (r3 + l48)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn presets_resolve_and_keep_their_name() {
+        let fleet = FleetSpec::parse("straggly48").unwrap();
+        assert_eq!(fleet.name, "straggly48");
+        assert_eq!(fleet.base.name, "local48");
+        assert_eq!(fleet.slow_fraction, 0.25);
+        assert_eq!(fleet.slow_factor, 3.0);
+        let mixed = FleetSpec::parse("mixed48").unwrap();
+        assert_eq!(mixed.name, "mixed48");
+        assert_eq!(mixed.base.name, "local48");
+        assert_eq!(mixed.secondary.as_ref().unwrap().name, "r3_xlarge");
+    }
+
+    #[test]
+    fn strict_parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "quantum",                    // unknown profile
+            "mixed:local48",              // missing second type
+            "mixed:local48+r3_xlarge+x",  // too many types
+            "mixed:local48+quantum",      // unknown second type
+            "local48*1.5",                // fraction out of range
+            "local48*-0.1",               // negative fraction
+            "local48*half",               // non-numeric fraction
+            "local48*0.3:slow=2",         // missing the 'x'
+            "local48*0.3:slow=0.5x",      // factor < 1
+            "local48*0.3:slow=manyx",     // non-numeric factor
+            "local48:slow=2x",            // factor without a fraction
+        ] {
+            assert!(FleetSpec::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn slow_count_rounds_and_clamps() {
+        let fleet = FleetSpec::parse("local48*0.5").unwrap();
+        assert_eq!(fleet.slow_count(0), 0);
+        assert_eq!(fleet.slow_count(1), 1); // round(0.5) = 1
+        assert_eq!(fleet.slow_count(3), 2); // round(1.5) = 2
+        let all = FleetSpec::parse("local48*1").unwrap();
+        assert_eq!(all.slow_count(7), 7);
+    }
+
+    #[test]
+    fn uniform_price_is_linear_in_m() {
+        let fleet = FleetSpec::uniform(HardwareProfile::ideal());
+        let unit = HardwareProfile::ideal().price_per_machine_second;
+        for m in [1usize, 2, 32] {
+            assert!((fleet.price_rate(m) - unit * m as f64).abs() < 1e-15);
+        }
+        assert_eq!(fleet.price_rate(0), 0.0);
+    }
+}

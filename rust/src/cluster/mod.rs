@@ -1,14 +1,18 @@
 //! Cluster simulator — the substrate replacing the paper's
 //! Spark-on-YARN testbed (see DESIGN.md §2 substitution table), now
-//! with per-machine clocks and a selectable barrier mode
-//! ([`BarrierMode`]: BSP, stale-synchronous, fully async).
+//! with per-machine clocks, a selectable barrier mode ([`BarrierMode`]:
+//! BSP, stale-synchronous, fully async), and heterogeneous fleets
+//! ([`FleetSpec`]: mixed machine types, persistent slow nodes,
+//! per-machine dollar prices).
 
 pub mod barrier;
+pub mod fleet;
 pub mod network;
 pub mod profile;
 pub mod sim;
 
 pub use barrier::BarrierMode;
+pub use fleet::FleetSpec;
 pub use network::{broadcast_time, reduce_time, shuffle_time, tree_rounds};
 pub use profile::HardwareProfile;
 pub use sim::{BspSim, ClusterSim};

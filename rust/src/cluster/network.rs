@@ -97,6 +97,7 @@ mod tests {
             noise_sigma: g.f64_in(0.0, 0.3),
             straggler_prob: g.f64_in(0.0, 0.1),
             straggler_factor: g.f64_in(1.0, 5.0),
+            price_per_machine_second: g.f64_in(1e-6, 1e-3),
         }
     }
 

@@ -9,7 +9,7 @@
 //! match the authors' absolute seconds (substitution note, DESIGN.md §2).
 
 /// Cost parameters of one simulated cluster.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct HardwareProfile {
     pub name: String,
     /// Effective FLOP/s of one executor on this workload (includes the
@@ -30,6 +30,10 @@ pub struct HardwareProfile {
     pub straggler_prob: f64,
     /// Straggler slowdown factor.
     pub straggler_factor: f64,
+    /// Dollar price of one machine-second of this type (what the fleet
+    /// pricing layer — `cluster::fleet` — charges while a machine is
+    /// allocated, whether it computes, waits at a barrier, or idles).
+    pub price_per_machine_second: f64,
 }
 
 impl HardwareProfile {
@@ -48,6 +52,9 @@ impl HardwareProfile {
             noise_sigma: 0.08,
             straggler_prob: 0.02,
             straggler_factor: 2.5,
+            // On-prem node amortization: cheaper per machine-second
+            // than the cloud instance below.
+            price_per_machine_second: 5.0e-5,
         }
     }
 
@@ -64,6 +71,8 @@ impl HardwareProfile {
             noise_sigma: 0.12,
             straggler_prob: 0.04,
             straggler_factor: 3.0,
+            // ≈ the historical r3.xlarge on-demand rate ($0.333/hr).
+            price_per_machine_second: 9.25e-5,
         }
     }
 
@@ -79,6 +88,9 @@ impl HardwareProfile {
             noise_sigma: 0.0,
             straggler_prob: 0.0,
             straggler_factor: 1.0,
+            // A round unit price keeps dollar arithmetic exact in
+            // deterministic tests.
+            price_per_machine_second: 1.0e-4,
         }
     }
 
@@ -112,5 +124,17 @@ mod tests {
         let p = HardwareProfile::ideal();
         assert_eq!(p.noise_sigma, 0.0);
         assert_eq!(p.straggler_prob, 0.0);
+    }
+
+    #[test]
+    fn every_profile_has_a_positive_price() {
+        for n in ["local48", "r3_xlarge", "ideal"] {
+            let p = HardwareProfile::by_name(n).unwrap();
+            assert!(
+                p.price_per_machine_second > 0.0 && p.price_per_machine_second.is_finite(),
+                "{n} price {}",
+                p.price_per_machine_second
+            );
+        }
     }
 }

@@ -9,7 +9,10 @@
 //! d_k = θ_fixed                       (driver bookkeeping)
 //!     + sched · m                     (serial task dispatch)
 //!     + broadcast(m, model bytes)     (tree, log m rounds)
-//!     + compute_k                     (lognormal noise + stragglers)
+//!     + compute_k · fleet_factor_k    (lognormal noise + stragglers,
+//!                                      scaled by the machine's fleet
+//!                                      factor: mixed types, persistent
+//!                                      slow nodes — cluster::fleet)
 //!     + reduce(m, update bytes)       (tree, log m rounds)
 //! ```
 //!
@@ -41,11 +44,12 @@
 use std::collections::VecDeque;
 
 use super::barrier::BarrierMode;
+use super::fleet::FleetSpec;
 use super::network::{broadcast_time, reduce_time};
 use super::profile::HardwareProfile;
 use crate::optim::driver::IterationTimer;
 use crate::optim::IterationCost;
-use crate::util::rng::Pcg32;
+use crate::util::rng::{fnv1a_64, Pcg32};
 
 /// How many committed-iteration barrier times `Async` retains for the
 /// staleness probe (its staleness is unbounded in principle; reads
@@ -55,12 +59,18 @@ const ASYNC_STALENESS_WINDOW: usize = crate::optim::stale::MAX_STALE_SNAPSHOTS;
 
 /// Simulated cluster clock with per-machine progress.
 pub struct ClusterSim {
-    pub profile: HardwareProfile,
+    /// The hardware this cluster is made of — a uniform fleet for the
+    /// historical plain-profile constructors.
+    pub fleet: FleetSpec,
     pub mode: BarrierMode,
     rng: Pcg32,
     /// Simulated time at which the last machine finished the most
     /// recent iteration (the driver-visible clock).
     pub elapsed: f64,
+    /// Dollars billed so far: every allocated machine pays its type's
+    /// `$/machine-second` for the full wall clock, computing or waiting
+    /// at a barrier.
+    pub spent_dollars: f64,
     /// Per-iteration marginal elapsed time (Fig 1(a) percentile bars).
     pub history: Vec<f64>,
     /// Per-machine finish time of that machine's latest iteration.
@@ -77,25 +87,45 @@ impl ClusterSim {
         Self::with_mode(profile, BarrierMode::Bsp, seed)
     }
 
-    /// A simulator in an explicit barrier mode. Seeding is identical
-    /// across modes so a fixed seed prices the same noise realization
-    /// under every mode.
+    /// A simulator over a uniform fleet of one profile in an explicit
+    /// barrier mode — bit-identical to `with_fleet` on
+    /// [`FleetSpec::uniform`] of the same profile.
     pub fn with_mode(profile: HardwareProfile, mode: BarrierMode, seed: u64) -> ClusterSim {
+        Self::with_fleet(FleetSpec::uniform(profile), mode, seed)
+    }
+
+    /// A simulator over an arbitrary fleet. The RNG stream is derived
+    /// from the FNV-1a hash of the *base profile's name* (not its
+    /// length — two profiles with equal-length names must not share a
+    /// noise realization), so:
+    ///
+    /// * every barrier mode prices the same draws (cross-mode pairing,
+    ///   as before), and
+    /// * every fleet built on the same base profile prices the same
+    ///   draws too — uniform-vs-heterogeneous comparisons at one seed
+    ///   are paired, not merely distributional.
+    pub fn with_fleet(fleet: FleetSpec, mode: BarrierMode, seed: u64) -> ClusterSim {
         ClusterSim {
-            rng: Pcg32::new(seed, 0xC1u64 + profile.name.len() as u64),
-            profile,
+            rng: Pcg32::new(seed, 0xC1u64 ^ fnv1a_64(fleet.base.name.as_bytes())),
+            fleet,
             mode,
             elapsed: 0.0,
+            spent_dollars: 0.0,
             history: Vec::new(),
             clocks: Vec::new(),
             barriers: VecDeque::new(),
         }
     }
 
+    /// The base hardware profile (fixed costs, network, noise).
+    pub fn profile(&self) -> &HardwareProfile {
+        &self.fleet.base
+    }
+
     /// Price one iteration (and advance the simulated clocks). Returns
     /// the marginal increase of the driver-visible elapsed time.
     pub fn iteration_time(&mut self, cost: &IterationCost) -> f64 {
-        let p = &self.profile;
+        let p = &self.fleet.base;
         let m = cost.machines.max(1);
         if self.clocks.len() != m {
             // First iteration, or a mid-run reconfiguration (the
@@ -134,6 +164,14 @@ impl ClusterSim {
             if p.straggler_prob > 0.0 && self.rng.uniform() < p.straggler_prob {
                 compute *= p.straggler_factor;
             }
+            // Heterogeneity scales only the compute term, after the
+            // draws: RNG consumption is identical across fleets of one
+            // base profile, and a uniform fleet's factor of exactly
+            // 1.0 leaves the arithmetic untouched bit for bit.
+            let factor = self.fleet.compute_factor(k, m);
+            if factor != 1.0 {
+                compute *= factor;
+            }
             let d = fixed + compute + reduce;
             let start = match barrier {
                 Some(b) => self.clocks[k].max(b),
@@ -155,6 +193,11 @@ impl ClusterSim {
 
         let dt = done - self.elapsed;
         self.elapsed = done;
+        // Bill the allocation: m machines held for dt wall-clock
+        // seconds, each at its own type's rate. BSP thus pays for the
+        // waiting the barrier imposes; the relaxed modes buy more
+        // progress for the same machine-seconds.
+        self.spent_dollars += self.fleet.price_rate(m) * dt;
         self.history.push(dt);
         dt
     }
@@ -356,6 +399,95 @@ mod tests {
             any_stale |= probe.read_staleness() > 0;
         }
         assert!(any_stale, "SSP never produced a stale read");
+    }
+
+    #[test]
+    fn rng_streams_separate_equal_length_profile_names() {
+        // The pre-fix stream id was `0xC1 + name.len()`, so any two
+        // profiles with equal-length names (local48 vs a hypothetical
+        // local64) shared one noise realization. The FNV-hash stream
+        // must not.
+        let a = HardwareProfile::local48();
+        let mut b = HardwareProfile::local48();
+        b.name = "local64".into();
+        assert_eq!(a.name.len(), b.name.len());
+        let mut sim_a = ClusterSim::new(a.clone(), 99);
+        let mut sim_b = ClusterSim::new(b, 99);
+        let da = sim_a.iteration_time(&cocoa_cost(8));
+        let db = sim_b.iteration_time(&cocoa_cost(8));
+        assert_ne!(da.to_bits(), db.to_bits(), "equal-length names share a stream");
+        // Same name ⇒ same stream (the pairing guarantee): a second
+        // local48 sim reproduces the draws exactly.
+        let mut sim_a2 = ClusterSim::new(a, 99);
+        assert_eq!(da.to_bits(), sim_a2.iteration_time(&cocoa_cost(8)).to_bits());
+    }
+
+    #[test]
+    fn uniform_fleet_is_bitwise_plain_profile() {
+        use crate::cluster::FleetSpec;
+        for mode in [BarrierMode::Bsp, BarrierMode::Ssp { staleness: 2 }, BarrierMode::Async] {
+            let mut plain = ClusterSim::with_mode(HardwareProfile::local48(), mode, 7);
+            let mut fleet = ClusterSim::with_fleet(
+                FleetSpec::uniform(HardwareProfile::local48()),
+                mode,
+                7,
+            );
+            for _ in 0..50 {
+                let a = plain.iteration_time(&cocoa_cost(16));
+                let b = fleet.iteration_time(&cocoa_cost(16));
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(plain.elapsed.to_bits(), fleet.elapsed.to_bits());
+            assert_eq!(plain.spent_dollars.to_bits(), fleet.spent_dollars.to_bits());
+        }
+    }
+
+    #[test]
+    fn slow_fleet_is_never_faster_and_bills_dollars() {
+        use crate::cluster::FleetSpec;
+        let uniform = FleetSpec::uniform(HardwareProfile::local48());
+        let slow = FleetSpec::parse("local48*0.25:slow=3x").unwrap();
+        let mut u = ClusterSim::with_fleet(uniform.clone(), BarrierMode::Bsp, 31);
+        let mut s = ClusterSim::with_fleet(slow, BarrierMode::Bsp, 31);
+        for _ in 0..100 {
+            // Same base profile ⇒ same draws; slow nodes only scale
+            // them up, so the ordering is pointwise, not statistical.
+            let du = u.iteration_time(&cocoa_cost(16));
+            let ds = s.iteration_time(&cocoa_cost(16));
+            assert!(ds >= du, "slow fleet iterated faster: {ds} < {du}");
+        }
+        assert!(s.elapsed > u.elapsed);
+        // Dollar accounting: wall clock × m × the (uniform) unit rate.
+        let rate = HardwareProfile::local48().price_per_machine_second;
+        let expect = u.elapsed * 16.0 * rate;
+        assert!((u.spent_dollars - expect).abs() < 1e-9 * expect.max(1.0));
+        // The slow fleet holds the same machines for longer: it can
+        // only cost more.
+        assert!(s.spent_dollars > u.spent_dollars);
+    }
+
+    #[test]
+    fn relaxed_modes_beat_bsp_on_a_heterogeneous_fleet() {
+        use crate::cluster::FleetSpec;
+        // With a persistently slow group, BSP pays the *max* over that
+        // group's noisy draws every iteration; SSP/async pay each slow
+        // machine's own average. Same seed ⇒ same draws ⇒ the ordering
+        // is exact per seed.
+        let run = |mode: BarrierMode| {
+            let fleet = FleetSpec::parse("local48*0.25:slow=3x").unwrap();
+            let mut sim = ClusterSim::with_fleet(fleet, mode, 23);
+            for _ in 0..200 {
+                sim.iteration_time(&cocoa_cost(32));
+            }
+            (sim.elapsed, sim.spent_dollars)
+        };
+        let (bsp, bsp_cost) = run(BarrierMode::Bsp);
+        let (ssp, ssp_cost) = run(BarrierMode::Ssp { staleness: 4 });
+        let (asn, asn_cost) = run(BarrierMode::Async);
+        assert!(asn <= ssp && ssp <= bsp, "async={asn} ssp={ssp} bsp={bsp}");
+        assert!(asn < bsp * 0.99, "no heterogeneity absorption: async={asn} bsp={bsp}");
+        // Same machines held for less wall clock ⇒ fewer dollars.
+        assert!(asn_cost <= ssp_cost && ssp_cost <= bsp_cost);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use crate::cluster::BarrierMode;
+use crate::cluster::{BarrierMode, FleetSpec, HardwareProfile};
 use crate::data::synth::SynthConfig;
 use crate::util::json::{read_json_file, Json};
 
@@ -42,6 +42,12 @@ pub struct ExperimentConfig {
     /// omitted, it defaults to pure BSP — the pre-barrier-axis
     /// behavior.
     pub barrier_modes: Vec<BarrierMode>,
+    /// Fleets the fit/advise/repro targets cover, as `cluster::fleet`
+    /// wire specs. The first entry is the *base* fleet the historical
+    /// single-fleet paths run on. Empty (the default) means the
+    /// uniform fleet of `profile` under the pre-fleet cache-key shape
+    /// (`fleet == ""` in cell keys).
+    pub fleets: Vec<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -62,6 +68,7 @@ impl Default for ExperimentConfig {
             advisor_iter_cap: 100_000,
             bootstrap_machines: 16,
             barrier_modes: vec![BarrierMode::Bsp],
+            fleets: Vec::new(),
         }
     }
 }
@@ -109,6 +116,26 @@ impl ExperimentConfig {
                 })
                 .collect::<crate::Result<Vec<_>>>()?,
         };
+        // Like barrier_modes: a present but malformed `fleets` entry is
+        // an error — a config asking for a fleet this build cannot
+        // parse must not quietly run a uniform cluster instead.
+        let fleets = match doc.get("fleets") {
+            None => dft.fleets.clone(),
+            Some(v) => v
+                .as_array()
+                .ok_or_else(|| {
+                    crate::err!("fleets must be an array of fleet spec strings")
+                })?
+                .iter()
+                .map(|v| {
+                    let s = v
+                        .as_str()
+                        .ok_or_else(|| crate::err!("fleets entries must be strings"))?;
+                    FleetSpec::parse(s)?; // validate eagerly, keep the wire form
+                    Ok(s.to_string())
+                })
+                .collect::<crate::Result<Vec<_>>>()?,
+        };
         Ok(ExperimentConfig {
             n: doc.opt_usize("n", dft.n),
             d: doc.opt_usize("d", dft.d),
@@ -125,7 +152,19 @@ impl ExperimentConfig {
             advisor_iter_cap: doc.opt_usize("advisor_iter_cap", dft.advisor_iter_cap),
             bootstrap_machines: doc.opt_usize("bootstrap_machines", dft.bootstrap_machines),
             barrier_modes,
+            fleets,
         })
+    }
+
+    /// The parsed fleet list this config sweeps/fits over: the
+    /// `fleets` entries, or the uniform fleet of `profile` when the
+    /// config names none (the pre-fleet behavior).
+    pub fn fleet_specs(&self) -> crate::Result<Vec<FleetSpec>> {
+        if self.fleets.is_empty() {
+            Ok(vec![FleetSpec::uniform(HardwareProfile::by_name(&self.profile)?)])
+        } else {
+            self.fleets.iter().map(|s| FleetSpec::parse(s)).collect()
+        }
     }
 
     /// The synthetic-dataset spec this config implies.
@@ -167,6 +206,10 @@ impl ExperimentConfig {
                 "barrier_modes",
                 Json::array(self.barrier_modes.iter().map(|m| Json::str(m.as_str()))),
             ),
+            (
+                "fleets",
+                Json::array(self.fleets.iter().map(|f| Json::str(f.clone()))),
+            ),
         ])
     }
 
@@ -194,12 +237,13 @@ impl ExperimentConfig {
     pub fn model_context(&self, native: bool) -> String {
         let modes: Vec<String> = self.barrier_modes.iter().map(|m| m.as_str()).collect();
         format!(
-            "{}|machines={:?};max_iters={};target={:e};modes=[{}]",
+            "{}|machines={:?};max_iters={};target={:e};modes=[{}];fleets=[{}]",
             self.context_key(native),
             self.machines,
             self.max_iters,
             self.target_subopt,
-            modes.join(",")
+            modes.join(","),
+            self.fleets.join(",")
         )
     }
 
@@ -236,6 +280,7 @@ mod tests {
                 BarrierMode::Ssp { staleness: 4 },
                 BarrierMode::Async,
             ],
+            fleets: vec!["local48".into(), "mixed:r3_xlarge+local48".into()],
             ..Default::default()
         };
         let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
@@ -243,6 +288,7 @@ mod tests {
         assert_eq!(back.algorithms, vec!["cocoa", "gd"]);
         assert_eq!(back.machines, c.machines);
         assert_eq!(back.barrier_modes, c.barrier_modes);
+        assert_eq!(back.fleets, c.fleets);
     }
 
     #[test]
@@ -288,6 +334,37 @@ mod tests {
         let mut d = a.clone();
         d.barrier_modes.push(BarrierMode::Async);
         assert_ne!(a.model_context_hash(true), d.model_context_hash(true));
+        // So does the fleet axis — fleet-blind artifacts must read as
+        // stale once a config starts naming fleets.
+        let mut e = a.clone();
+        e.fleets.push("straggly48".into());
+        assert_ne!(a.model_context_hash(true), e.model_context_hash(true));
+    }
+
+    #[test]
+    fn fleets_default_validate_and_reject_unknown() {
+        // Omitted → the uniform fleet of the config's profile.
+        let c = ExperimentConfig::from_json(&Json::parse(r#"{"n": 64}"#).unwrap()).unwrap();
+        assert!(c.fleets.is_empty());
+        let specs = c.fleet_specs().unwrap();
+        assert_eq!(specs.len(), 1);
+        assert!(specs[0].is_uniform());
+        assert_eq!(specs[0].base.name, c.profile);
+        // Named fleets parse (presets included) and keep wire order.
+        let doc = Json::parse(
+            r#"{"fleets": ["local48", "straggly48", "mixed:r3_xlarge+local48"]}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(c.fleets.len(), 3);
+        assert_eq!(c.fleet_specs().unwrap()[2].base.name, "r3_xlarge");
+        // A malformed spec is a load-time error, not a silent uniform
+        // run; so is a wrong-shape field.
+        let doc = Json::parse(r#"{"fleets": ["local48", "local48*2.0"]}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+        let doc = Json::parse(r#"{"fleets": "local48"}"#).unwrap();
+        let err = ExperimentConfig::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("array"), "{err}");
     }
 
     #[test]

@@ -22,13 +22,15 @@
 //! time is produced by a per-machine-clock cluster simulator
 //! ([`cluster`]) standing in for the paper's Spark/YARN testbed —
 //! priced under a selectable barrier mode
-//! ([`cluster::BarrierMode`]: BSP, stale-synchronous, fully async),
+//! ([`cluster::BarrierMode`]: BSP, stale-synchronous, fully async)
+//! on a configurable hardware fleet ([`cluster::FleetSpec`]: mixed
+//! machine types, persistent slow nodes, per-machine dollar rates),
 //! with staleness fed back into the SGD-family updates.
 //!
-//! Sweeps over (algorithm × machines × barrier mode × seed) grids —
-//! the workload the whole paper is built on — go through the [`sweep`]
-//! subsystem, which fans cells out across a thread pool and caches
-//! finished traces in memory and on disk.
+//! Sweeps over (algorithm × machines × barrier mode × fleet × seed)
+//! grids — the workload the whole paper is built on — go through the
+//! [`sweep`] subsystem, which fans cells out across a thread pool and
+//! caches finished traces in memory and on disk.
 //!
 //! See [`DESIGN.md`](../../DESIGN.md) (repo root) for the full system
 //! inventory and per-figure experiment index, and

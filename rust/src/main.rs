@@ -13,9 +13,9 @@
 //!   info             engine/artifact diagnostics
 
 use hemingway::advisor::{
-    adaptive_cocoa_plus, AdaptiveConfig, AlgorithmId, Constraints, ModeFilter, Query,
+    adaptive_cocoa_plus, AdaptiveConfig, AlgorithmId, Constraints, FleetFilter, ModeFilter, Query,
 };
-use hemingway::cluster::{BarrierMode, BspSim};
+use hemingway::cluster::{BarrierMode, BspSim, FleetSpec};
 use hemingway::config::ExperimentConfig;
 use hemingway::repro::common::{load_or_fit_registry, update_summary_file};
 use hemingway::repro::{run_figures, ReproContext, FIGURES};
@@ -48,13 +48,15 @@ fn print_help() {
          commands:\n\
          \x20 run              --algo cocoa+ --machines 16 [--config f.json] [--native]\n\
          \x20 sweep            --algo cocoa+ [--seeds N] [--threads K] [--barrier MODE]\n\
-         \x20                  [--staleness-grid 0,2,8] [--native]\n\
+         \x20                  [--staleness-grid 0,2,8] [--fleets F,..] [--native]\n\
          \x20 fit-system       --algo cocoa+ [--native]\n\
          \x20 fit-convergence  --algo cocoa+ [--native]\n\
-         \x20 fit              [--algos cocoa+,cocoa] [--barriers bsp,ssp:4,async] [--native]\n\
+         \x20 fit              [--algos cocoa+,cocoa] [--barriers bsp,ssp:4,async]\n\
+         \x20                  [--fleets local48,straggly48] [--native]\n\
          \x20 advise           --eps 1e-4 --budget 20 [--max-machines M] [--cost-weight W]\n\
-         \x20                  [--barrier MODE|any] [--native]\n\
-         \x20 serve            [--algos ...] [--barriers ...] [--native]  JSON queries on stdin\n\
+         \x20                  [--barrier MODE|any] [--fleet SPEC|base|any] [--native]\n\
+         \x20 serve            [--algos ...] [--barriers ...] [--fleets ...] [--native]\n\
+         \x20                  JSON queries on stdin\n\
          \x20 adaptive         [--frames 8] [--frame-seconds 5] [--native]\n\
          \x20 repro            --figure <id>|all [--native]\n\
          \x20 info\n\n\
@@ -65,11 +67,16 @@ fn print_help() {
          \x20 --seeds <N>       seed replicates per sweep cell (mean±std aggregation)\n\
          \x20 --threads <K>     sweep worker threads (default: HEMINGWAY_THREADS or cores)\n\
          \x20 --barriers <M,..> barrier modes to fit/serve (bsp, ssp:<staleness>, async)\n\
+         \x20 --fleets <F,..>   fleets to sweep/fit/serve: a profile (local48), a shaped\n\
+         \x20                  fleet (local48*0.25:slow=3x), a mix (mixed:r3_xlarge+local48)\n\
+         \x20                  or a preset (mixed48, straggly48); first entry = base fleet\n\
          \x20 --verbose         debug logging (or HEMINGWAY_LOG=debug)\n\n\
          `fit` writes <out_dir>/models/*.json; `advise` and `serve` load them\n\
          (fit-on-miss) and detect stale artifacts via the config hash.\n\
-         Queries default to barrier mode 'bsp'; pass --barrier any (or a\n\
-         wire \"barrier_mode\" field) to search over fitted modes too.",
+         Queries default to barrier mode 'bsp' on the base fleet; pass\n\
+         --barrier any / --fleet any (or wire \"barrier_mode\"/\"fleet\" fields)\n\
+         to search over every fitted variant. The serve loop also answers\n\
+         {{\"query\":\"cheapest_to\",\"eps\":…}} in real fleet dollars.",
         FIGURES.join(", ")
     );
 }
@@ -92,6 +99,17 @@ fn load_cfg(args: &Args) -> hemingway::Result<ExperimentConfig> {
             .map(BarrierMode::parse)
             .collect::<hemingway::Result<_>>()?;
         hemingway::ensure!(!cfg.barrier_modes.is_empty(), "--barriers lists no modes");
+    }
+    if let Some(fs) = args.get("fleets") {
+        cfg.fleets = fs
+            .split(',')
+            .map(|s| {
+                let s = s.trim();
+                FleetSpec::parse(s)?; // strict: fail fast on typos
+                Ok(s.to_string())
+            })
+            .collect::<hemingway::Result<_>>()?;
+        hemingway::ensure!(!cfg.fleets.is_empty(), "--fleets lists no fleets");
     }
     Ok(cfg)
 }
@@ -160,6 +178,7 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                 algorithms: vec![algo.clone()],
                 machines: ctx.cfg.machines.clone(),
                 modes,
+                fleets: ctx.cfg.fleets.clone(),
                 seeds,
                 base_seed: ctx.cfg.seed,
                 run: ctx.run_config(),
@@ -190,6 +209,7 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
             let mut agg_table = hemingway::util::csv::Table::new(&[
                 "machines",
                 "barrier",
+                "fleet",
                 "replicates",
                 "reached",
                 "iters_mean",
@@ -202,9 +222,17 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                 "iter_time_std",
             ]);
             for a in &aggs {
+                // The fleet column holds the index into the sweep's
+                // fleet axis (0 = the base/default fleet).
+                let fleet_idx = grid
+                    .fleets
+                    .iter()
+                    .position(|f| *f == a.fleet)
+                    .unwrap_or(0);
                 agg_table.push(vec![
                     a.machines as f64,
                     a.barrier_mode.csv_id(),
+                    fleet_idx as f64,
                     a.replicates as f64,
                     a.reached as f64,
                     a.iters_to_target.mean,
@@ -217,9 +245,10 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                     a.mean_iter_time.std,
                 ]);
                 println!(
-                    "  m={:<4} {:<7} reached {}/{}  iters-to-{:.0e} {}  iter-time {}s",
+                    "  m={:<4} {:<7} {:<12} reached {}/{}  iters-to-{:.0e} {}  iter-time {}s",
                     a.machines,
                     a.barrier_mode.as_str(),
+                    if a.fleet.is_empty() { "-" } else { a.fleet.as_str() },
                     a.reached,
                     a.replicates,
                     ctx.cfg.target_subopt,
@@ -300,37 +329,65 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                 },
                 machine_cost_weight: args.f64_or("cost-weight", 0.0)?,
                 barrier_mode: ModeFilter::parse(args.str_or("barrier", "bsp"))?,
+                fleet: FleetFilter::parse(args.str_or("fleet", "base"))?,
             };
             constraints.validate()?;
             let algos = parse_algos(args, &cfg)?;
             let registry = load_or_fit_registry(&cfg, native, &algos)?;
-            match registry.answer(&Query::FastestTo { eps, constraints }) {
+            let fleet_tag = |fleet: &str| {
+                if fleet.is_empty() {
+                    String::new()
+                } else {
+                    format!(" fleet={fleet}")
+                }
+            };
+            match registry.answer(&Query::FastestTo { eps, constraints: constraints.clone() }) {
                 Some(rec) => println!(
-                    "fastest to {eps:.0e}:   {} m={} [{}] → {:.2} predicted seconds",
+                    "fastest to {eps:.0e}:   {} m={} [{}]{} → {:.2} predicted seconds",
                     rec.algorithm,
                     rec.machines,
                     rec.barrier_mode,
+                    fleet_tag(&rec.fleet),
                     rec.predicted.value()
                 ),
                 None => println!("fastest to {eps:.0e}:   no configuration reaches the target"),
             }
-            match registry.answer(&Query::BestAt { budget, constraints }) {
+            match registry.answer(&Query::BestAt { budget, constraints: constraints.clone() }) {
                 Some(rec) => println!(
-                    "best loss in {budget}s: {} m={} [{}] → {:.2e} predicted suboptimality",
+                    "best loss in {budget}s: {} m={} [{}]{} → {:.2e} predicted suboptimality",
                     rec.algorithm,
                     rec.machines,
                     rec.barrier_mode,
+                    fleet_tag(&rec.fleet),
                     rec.predicted.value()
                 ),
                 None => println!("best loss in {budget}s: no feasible configuration"),
             }
-            println!("\nprediction table (algorithm × m × mode):");
+            // Dollars only rank cleanly without the abstract cost
+            // weight (cheapest_to refuses to mix the two).
+            if constraints.machine_cost_weight == 0.0 {
+                match registry
+                    .answer(&Query::CheapestTo { eps, constraints: constraints.clone() })
+                {
+                    Some(rec) => println!(
+                        "cheapest to {eps:.0e}:  {} m={} [{}]{} → ${:.4} predicted",
+                        rec.algorithm,
+                        rec.machines,
+                        rec.barrier_mode,
+                        fleet_tag(&rec.fleet),
+                        rec.predicted.value()
+                    ),
+                    None => println!("cheapest to {eps:.0e}:  no priceable configuration"),
+                }
+            }
+            println!("\nprediction table (algorithm × m × mode × fleet):");
             for row in registry.table(eps, budget, &constraints) {
                 println!(
-                    "  {:<13} m={:<4} {:<7} time-to-ε {:<10} subopt@{budget}s {:.3e}",
+                    "  {:<13} m={:<4} {:<7}{:<14} time-to-ε {:<10} subopt@{budget}s {:.3e}",
                     row.algorithm,
                     row.machines,
                     row.barrier_mode.as_str(),
+                    fleet_tag(&row.fleet),
                     row.time_to_eps
                         .map(|t| format!("{t:.2}s"))
                         .unwrap_or_else(|| "-".into()),

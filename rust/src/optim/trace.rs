@@ -20,7 +20,7 @@ pub struct Record {
     pub subopt: f64,
 }
 
-/// A full run: algorithm × machine count × barrier mode × the
+/// A full run: algorithm × machine count × barrier mode × fleet × the
 /// per-iteration records.
 #[derive(Debug, Clone)]
 pub struct Trace {
@@ -28,6 +28,10 @@ pub struct Trace {
     pub machines: usize,
     /// Coordination regime the run was priced under (BSP by default).
     pub barrier_mode: BarrierMode,
+    /// Wire name of the fleet the run was priced on (`cluster::fleet`
+    /// grammar). Empty = the context's default uniform fleet — the
+    /// pre-fleet behavior.
+    pub fleet: String,
     pub p_star: f64,
     pub records: Vec<Record>,
 }
@@ -38,6 +42,7 @@ impl Trace {
             algorithm: algorithm.into(),
             machines,
             barrier_mode: BarrierMode::Bsp,
+            fleet: String::new(),
             p_star,
             records: Vec::new(),
         }

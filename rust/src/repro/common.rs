@@ -11,7 +11,7 @@ use std::path::{Path, PathBuf};
 use crate::advisor::{
     artifact_path, save_artifact, AlgorithmId, CombinedModel, ModeModel, ModelKey, ModelRegistry,
 };
-use crate::cluster::{BarrierMode, BspSim, ClusterSim, HardwareProfile};
+use crate::cluster::{BarrierMode, ClusterSim, FleetSpec, HardwareProfile};
 use crate::config::ExperimentConfig;
 use crate::data::synth::mnist_like;
 use crate::ernest::{ErnestModel, Observation};
@@ -121,6 +121,32 @@ impl ReproContext {
         }
     }
 
+    /// The base fleet's wire name: the config's first `fleets` entry,
+    /// or the empty string (= the uniform fleet of `cfg.profile` under
+    /// the pre-fleet cache-key shape).
+    pub fn base_fleet_name(&self) -> String {
+        self.cfg.fleets.first().cloned().unwrap_or_default()
+    }
+
+    /// Fleet axis for single-fleet grids: the base fleet alone, in the
+    /// shape `SweepGrid.fleets` expects (empty = unnamed default).
+    fn base_fleet_axis(&self) -> Vec<String> {
+        match self.cfg.fleets.first() {
+            Some(f) => vec![f.clone()],
+            None => Vec::new(),
+        }
+    }
+
+    /// Resolve a cell's fleet wire name against this context ("" = the
+    /// uniform fleet of the config's profile).
+    pub fn fleet_for(&self, name: &str) -> crate::Result<FleetSpec> {
+        if name.is_empty() {
+            Ok(FleetSpec::uniform(self.profile.clone()))
+        } else {
+            FleetSpec::parse(name)
+        }
+    }
+
     /// Run a full grid through the sweep engine, consulting the trace
     /// cache per cell. Parallel across cells on the native backend;
     /// serial (but still cached) on PJRT. Results come back in
@@ -128,13 +154,22 @@ impl ReproContext {
     pub fn run_grid(&self, grid: &SweepGrid) -> crate::Result<Vec<Trace>> {
         let context_key = format!("{}|{}", self.context_key, grid.run_key());
         let cells = grid.cells();
+        // Resolve every distinct fleet once, before the fan-out: a
+        // malformed spec fails the whole grid up front, and workers
+        // share read-only parsed specs instead of re-parsing per cell.
+        let mut fleets: Vec<(String, FleetSpec)> = Vec::new();
+        for cell in &cells {
+            if !fleets.iter().any(|(name, _)| *name == cell.fleet) {
+                fleets.push((cell.fleet.clone(), self.fleet_for(&cell.fleet)?));
+            }
+        }
         if self.use_native {
             let problem = &self.problem;
-            let profile = &self.profile;
             let p_star = self.p_star;
             let run_cfg = grid.run.clone();
+            let fleets = &fleets;
             self.sweep.run_cells(&context_key, &cells, &|cell| {
-                run_cell(&NativeBackend, problem, profile, p_star, cell, &run_cfg)
+                run_cell(&NativeBackend, problem, fleets, p_star, cell, &run_cfg)
             })
         } else {
             let backend = self.backend();
@@ -142,7 +177,7 @@ impl ReproContext {
                 run_cell(
                     backend.as_ref(),
                     &self.problem,
-                    &self.profile,
+                    &fleets,
                     self.p_star,
                     cell,
                     &grid.run,
@@ -154,12 +189,10 @@ impl ReproContext {
     /// Run one (algorithm, m) to the paper's stopping rule on a fresh
     /// simulated cluster (through the engine, so repeats are cached).
     pub fn run_one(&self, algo_name: &str, machines: usize) -> crate::Result<Trace> {
-        let traces = self.run_grid(&SweepGrid::single(
-            algo_name,
-            &[machines],
-            self.cfg.seed,
-            self.run_config(),
-        ))?;
+        let mut grid =
+            SweepGrid::single(algo_name, &[machines], self.cfg.seed, self.run_config());
+        grid.fleets = self.base_fleet_axis();
+        let traces = self.run_grid(&grid)?;
         Ok(traces.into_iter().next().expect("single-cell grid"))
     }
 
@@ -171,7 +204,9 @@ impl ReproContext {
         machines: &[usize],
         run: RunConfig,
     ) -> crate::Result<Vec<Trace>> {
-        self.run_grid(&SweepGrid::single(algo_name, machines, self.cfg.seed, run))
+        let mut grid = SweepGrid::single(algo_name, machines, self.cfg.seed, run);
+        grid.fleets = self.base_fleet_axis();
+        self.run_grid(&grid)
     }
 
     /// Traces for several algorithms at one machine count.
@@ -180,30 +215,47 @@ impl ReproContext {
             algorithms: algos.iter().map(|s| s.to_string()).collect(),
             machines: vec![machines],
             modes: vec![BarrierMode::Bsp],
+            fleets: self.base_fleet_axis(),
             seeds: 1,
             base_seed: self.cfg.seed,
             run: self.run_config(),
         })
     }
 
-    /// Run a machine sweep for one algorithm (BSP).
+    /// Run a machine sweep for one algorithm (BSP, base fleet).
     pub fn run_sweep(&self, algo_name: &str) -> crate::Result<TraceSet> {
         self.run_sweep_in_mode(algo_name, BarrierMode::Bsp)
     }
 
-    /// Run a machine sweep for one algorithm under one barrier mode.
+    /// Run a machine sweep for one algorithm under one barrier mode on
+    /// the base fleet.
     pub fn run_sweep_in_mode(
         &self,
         algo_name: &str,
         mode: BarrierMode,
     ) -> crate::Result<TraceSet> {
-        let traces = self.run_grid(&SweepGrid::single_in_mode(
+        self.run_sweep_variant(algo_name, mode, &self.base_fleet_name())
+    }
+
+    /// Run a machine sweep for one algorithm under one (mode, fleet)
+    /// variant — the advisor's per-variant fit input.
+    pub fn run_sweep_variant(
+        &self,
+        algo_name: &str,
+        mode: BarrierMode,
+        fleet: &str,
+    ) -> crate::Result<TraceSet> {
+        let mut grid = SweepGrid::single_in_mode(
             algo_name,
             &self.cfg.machines,
             mode,
             self.cfg.seed,
             self.run_config(),
-        ))?;
+        );
+        if !fleet.is_empty() {
+            grid.fleets = vec![fleet.to_string()];
+        }
+        let traces = self.run_grid(&grid)?;
         let mut set = TraceSet::default();
         for t in traces {
             set.push(t);
@@ -222,16 +274,20 @@ impl ReproContext {
         configs: &[crate::ernest::design::Candidate],
         iters_per_config: usize,
     ) -> crate::Result<Vec<Observation>> {
+        // Profiling runs on the base fleet (the uniform profile when
+        // the config names no fleets — bit-identical to the historical
+        // plain-profile path).
+        let fleet = self.fleet_for(&self.base_fleet_name())?;
         let per_config: Vec<Vec<Observation>> = if self.use_native {
             let problem = &self.problem;
-            let profile = &self.profile;
+            let fleet = &fleet;
             let seed = self.cfg.seed;
             let lambda = self.cfg.lambda;
             self.sweep.try_map(configs.len(), |i| {
                 profile_one(
                     &NativeBackend,
                     problem,
-                    profile,
+                    fleet,
                     seed,
                     lambda,
                     algo_name,
@@ -246,7 +302,7 @@ impl ReproContext {
                 out.push(profile_one(
                     backend.as_ref(),
                     &self.problem,
-                    &self.profile,
+                    &fleet,
                     self.cfg.seed,
                     self.cfg.lambda,
                     algo_name,
@@ -287,44 +343,69 @@ impl ReproContext {
     /// Fit the full combined model for one algorithm: convergence
     /// model from the machine sweep, system model from Ernest-style
     /// profiling. Every non-BSP mode in the config's `barrier_modes`
-    /// gets its own (f, g) pair, fitted from a sweep simulated under
-    /// that mode (the sweep also supplies the mode's iteration-time
-    /// observations — relaxed barriers change f as well as g). This is
-    /// the expensive half of the fit-once / query-many split —
-    /// `hemingway fit` persists the result so `advise` and `serve`
-    /// never pay it again.
+    /// gets its own (f, g) pair fitted from a sweep simulated under
+    /// that mode, and every fleet beyond the base one gets a pair per
+    /// mode (BSP included) fitted from sweeps priced on that hardware
+    /// — the sweeps also supply each variant's iteration-time
+    /// observations, since relaxed barriers and slower fleets both
+    /// change f. This is the expensive half of the fit-once /
+    /// query-many split — `hemingway fit` persists the result so
+    /// `advise` and `serve` never pay it again.
     pub fn fit_combined(&self, algo: AlgorithmId) -> crate::Result<CombinedModel> {
+        let base_fleet = self.base_fleet_name();
         let traces = self.run_sweep(algo.as_str())?;
         let pts = points_from_traces(&traces.traces);
         let conv = ConvergenceModel::fit(&pts, FeatureLibrary::standard(), self.cfg.seed)?;
         let ernest = self.fit_ernest(algo.as_str())?;
         let mut model = CombinedModel::new(ernest, conv, self.problem.data.n as f64);
+        model.base_fleet = base_fleet.clone();
         for &mode in &self.cfg.barrier_modes {
             if mode.is_bsp() {
                 continue;
             }
-            let mode_traces = self.run_sweep_in_mode(algo.as_str(), mode)?;
-            let conv = ConvergenceModel::fit(
-                &points_from_traces(&mode_traces.traces),
-                FeatureLibrary::standard(),
-                self.cfg.seed,
-            )?;
-            let obs = observations_from_traces(
-                &mode_traces.traces,
-                self.problem.data.n as f64,
-            );
-            let ernest = crate::ernest::ErnestModel::fit(&obs)?;
-            crate::log_info!(
-                "{algo} {mode}: conv R²={:.4}, f(θ)=[{:.4}, {:.3e}, {:.4}, {:.5}]",
-                conv.train_r2,
-                ernest.theta[0],
-                ernest.theta[1],
-                ernest.theta[2],
-                ernest.theta[3]
-            );
-            model.insert_mode(mode, ModeModel { ernest, conv });
+            let pair = self.fit_variant_pair(algo, mode, &base_fleet)?;
+            model.insert_mode(mode, pair);
+        }
+        for fleet in self.cfg.fleets.iter().skip(1) {
+            let mut modes = vec![BarrierMode::Bsp];
+            for &mode in &self.cfg.barrier_modes {
+                if !mode.is_bsp() && !modes.contains(&mode) {
+                    modes.push(mode);
+                }
+            }
+            for mode in modes {
+                let pair = self.fit_variant_pair(algo, mode, fleet)?;
+                model.insert_fleet_pair(fleet, mode, pair);
+            }
         }
         Ok(model)
+    }
+
+    /// Fit one (mode, fleet) pair from a sweep run under that variant.
+    fn fit_variant_pair(
+        &self,
+        algo: AlgorithmId,
+        mode: BarrierMode,
+        fleet: &str,
+    ) -> crate::Result<ModeModel> {
+        let traces = self.run_sweep_variant(algo.as_str(), mode, fleet)?;
+        let conv = ConvergenceModel::fit(
+            &points_from_traces(&traces.traces),
+            FeatureLibrary::standard(),
+            self.cfg.seed,
+        )?;
+        let obs = observations_from_traces(&traces.traces, self.problem.data.n as f64);
+        let ernest = crate::ernest::ErnestModel::fit(&obs)?;
+        crate::log_info!(
+            "{algo} {mode} fleet={}: conv R²={:.4}, f(θ)=[{:.4}, {:.3e}, {:.4}, {:.5}]",
+            if fleet.is_empty() { "-" } else { fleet },
+            conv.train_r2,
+            ernest.theta[0],
+            ernest.theta[1],
+            ernest.theta[2],
+            ernest.theta[3]
+        );
+        Ok(ModeModel { ernest, conv })
     }
 
     /// Write a CSV and echo its path.
@@ -349,29 +430,34 @@ impl ReproContext {
 
 /// Run one grid cell: fresh algorithm + simulator against the shared
 /// read-only problem. Seeds are pure functions of the cell, so any
-/// worker may run any cell in any order.
+/// worker may run any cell in any order. `fleets` maps each cell fleet
+/// wire name to its pre-resolved spec (resolved once per grid).
 fn run_cell(
     backend: &dyn Backend,
     problem: &Problem,
-    profile: &HardwareProfile,
+    fleets: &[(String, FleetSpec)],
     p_star: f64,
     cell: &CellSpec,
     run_cfg: &RunConfig,
 ) -> crate::Result<Trace> {
     let mut algo = by_name(&cell.algorithm, problem, cell.machines, cell.seed as u32)?;
-    // Same seed across modes: the modes price one noise realization.
-    let mut sim = ClusterSim::with_mode(
-        profile.clone(),
-        cell.mode,
-        cell.seed ^ cell.machines as u64,
-    );
+    let fleet = fleets
+        .iter()
+        .find(|(name, _)| *name == cell.fleet)
+        .map(|(_, spec)| spec.clone())
+        .ok_or_else(|| crate::err!("cell fleet '{}' was not pre-resolved", cell.fleet))?;
+    // Same seed across modes and fleets: one noise realization, priced
+    // under every (mode, fleet) variant.
+    let mut sim = ClusterSim::with_fleet(fleet, cell.mode, cell.seed ^ cell.machines as u64);
     let t0 = std::time::Instant::now();
-    let trace = run(algo.as_mut(), backend, problem, &mut sim, p_star, run_cfg)?;
+    let mut trace = run(algo.as_mut(), backend, problem, &mut sim, p_star, run_cfg)?;
+    trace.fleet = cell.fleet.clone();
     crate::log_info!(
-        "{} m={} mode={} rep={}: {} iters, final subopt {:.2e} ({:.1}s wall)",
+        "{} m={} mode={} fleet={} rep={}: {} iters, final subopt {:.2e} ({:.1}s wall)",
         cell.algorithm,
         cell.machines,
         cell.mode,
+        if cell.fleet.is_empty() { "-" } else { &cell.fleet },
         cell.replicate,
         trace.records.last().map(|r| r.iter).unwrap_or(0),
         trace.final_subopt(),
@@ -406,7 +492,7 @@ pub fn observations_from_traces(traces: &[Trace], size: f64) -> Vec<Observation>
 fn profile_one(
     backend: &dyn Backend,
     problem: &Problem,
-    profile: &HardwareProfile,
+    fleet: &FleetSpec,
     seed: u64,
     lambda: f64,
     algo_name: &str,
@@ -417,7 +503,8 @@ fn profile_one(
     let sub = problem.data.subsample(rows, seed ^ 0xE51);
     let sub_problem = Problem::new(sub, lambda);
     let mut algo = by_name(algo_name, &sub_problem, c.machines, seed as u32)?;
-    let mut sim = BspSim::new(profile.clone(), seed ^ (rows as u64) << 8);
+    let mut sim =
+        ClusterSim::with_fleet(fleet.clone(), BarrierMode::Bsp, seed ^ (rows as u64) << 8);
     let mut obs = Vec::with_capacity(iters_per_config);
     for i in 0..iters_per_config {
         let cost = algo.step(backend, i)?;
@@ -455,6 +542,9 @@ pub fn load_or_fit_registry(
         cfg.machines.clone(),
         cfg.advisor_iter_cap,
     )?;
+    // The fleet axis prices cheapest_to queries (per-machine dollar
+    // rates); the base fleet also backs unnamed-legacy artifacts.
+    registry.fleets = cfg.fleet_specs()?;
     for (algo, path) in &report.stale {
         crate::log_warn!(
             "model artifact {} ({algo}) was fitted under a different config; \

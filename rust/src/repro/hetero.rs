@@ -1,0 +1,220 @@
+//! Heterogeneous-fleet scenario (beyond the paper): time-to-target
+//! *and dollar-to-target* across barrier modes on uniform vs. mixed
+//! fleets as machines scale.
+//!
+//! Dünner et al. observe that distributed-ML iteration time on shared
+//! clusters is dominated by machine-level heterogeneity — persistent
+//! slow nodes, mixed instance generations — and Tsianos et al. frame
+//! the machine count itself as a communication/computation *cost*
+//! trade-off. This target measures both ends on the simulator: one
+//! SGD-family algorithm, the config's machine grid, a uniform fleet
+//! next to a heterogeneous one, and the three barrier modes on each.
+//! Because every (mode, fleet) cell shares the cell seed and fleets of
+//! one base profile share the RNG stream, all comparisons are paired.
+//!
+//! The headline questions:
+//!
+//! * on the heterogeneous fleet, how much of BSP's slowdown do
+//!   SSP/async claw back? (BSP pays the max over the slow group's
+//!   noisy draws every iteration; the relaxed modes pay each machine's
+//!   own average);
+//! * where does the *cheapest* (fleet, mode, m) configuration land
+//!   once machines bill real per-type `$/machine-second` rates —
+//!   which is generally not where the fastest one lands.
+
+use crate::cluster::{BarrierMode, FleetSpec};
+use crate::optim::Trace;
+use crate::sweep::SweepGrid;
+use crate::util::asciiplot::Series;
+use crate::util::csv::Table;
+use crate::util::stats;
+
+use super::common::ReproContext;
+
+/// The mode set swept when the config does not name one.
+fn default_modes() -> Vec<BarrierMode> {
+    vec![
+        BarrierMode::Bsp,
+        BarrierMode::Ssp { staleness: 2 },
+        BarrierMode::Async,
+    ]
+}
+
+/// The fleet pair swept when the config names fewer than two fleets:
+/// the uniform base profile next to the same profile with a quarter of
+/// the machines persistently 3× slow.
+fn default_fleets(ctx: &ReproContext) -> crate::Result<Vec<String>> {
+    let uniform = ctx.cfg.profile.clone();
+    let hetero = format!("{uniform}*0.25:slow=3x");
+    FleetSpec::parse(&hetero)?; // the profile name must fit the grammar
+    Ok(vec![uniform, hetero])
+}
+
+/// Same algorithm choice as the ssp scenario: staleness only has
+/// consequences for the SGD family.
+fn pick_algorithm(ctx: &ReproContext) -> String {
+    ctx.cfg
+        .algorithms
+        .iter()
+        .find(|a| a.as_str() == "minibatch-sgd" || a.as_str() == "local-sgd")
+        .cloned()
+        .unwrap_or_else(|| "local-sgd".to_string())
+}
+
+pub fn hetero(ctx: &ReproContext) -> crate::Result<String> {
+    println!("== hetero scenario: time- and dollar-to-target across fleets ==");
+    let modes = if ctx.cfg.barrier_modes.len() > 1 {
+        ctx.cfg.barrier_modes.clone()
+    } else {
+        default_modes()
+    };
+    let fleet_names = if ctx.cfg.fleets.len() >= 2 {
+        ctx.cfg.fleets.clone()
+    } else {
+        default_fleets(ctx)?
+    };
+    let fleet_specs = fleet_names
+        .iter()
+        .map(|f| FleetSpec::parse(f))
+        .collect::<crate::Result<Vec<_>>>()?;
+    let algo = pick_algorithm(ctx);
+    let grid = SweepGrid {
+        algorithms: vec![algo.clone()],
+        machines: ctx.cfg.machines.clone(),
+        modes: modes.clone(),
+        fleets: fleet_names.clone(),
+        seeds: 1,
+        base_seed: ctx.cfg.seed,
+        run: ctx.run_config(),
+    };
+    let traces = ctx.run_grid(&grid)?;
+
+    // A target every comparison shares (same relaxation rule as the
+    // ssp scenario: SGD on a short budget may never see 1e-4).
+    let mut eps = ctx.cfg.target_subopt;
+    let reached = traces.iter().filter(|t| t.time_to(eps).is_some()).count();
+    if reached * 2 < traces.len() {
+        let finals: Vec<f64> = traces
+            .iter()
+            .map(|t| t.final_subopt().max(1e-12))
+            .collect();
+        eps = stats::percentile(&finals, 75.0) * 1.2;
+        println!(
+            "  (target {:.0e} unreachable for most cells; comparing at {eps:.2e})",
+            ctx.cfg.target_subopt
+        );
+    }
+
+    let mut table = Table::new(&[
+        "machines",
+        "barrier",
+        "fleet",
+        "mean_iter_time",
+        "time_to_target",
+        "dollars_to_target",
+        "final_subopt",
+    ]);
+    let mut series = Vec::new();
+    // Best (time, dollars) per fleet, and best BSP time per fleet.
+    let mut best_time: Vec<Option<(BarrierMode, usize, f64)>> = vec![None; fleet_names.len()];
+    let mut best_bsp: Vec<Option<(usize, f64)>> = vec![None; fleet_names.len()];
+    let mut cheapest: Option<(usize, BarrierMode, usize, f64)> = None; // (fleet, mode, m, $)
+    for (fi, fleet_name) in fleet_names.iter().enumerate() {
+        let spec = &fleet_specs[fi];
+        for &mode in &modes {
+            let mut pts = Vec::new();
+            for &m in &ctx.cfg.machines {
+                let Some(trace) = find_trace(&traces, &algo, m, mode, fleet_name) else {
+                    continue;
+                };
+                let tt = trace.time_to(eps);
+                let dollars = tt.map(|t| spec.dollars(t, m));
+                table.push(vec![
+                    m as f64,
+                    mode.csv_id(),
+                    fi as f64,
+                    trace.mean_iter_time(),
+                    tt.unwrap_or(f64::NAN),
+                    dollars.unwrap_or(f64::NAN),
+                    trace.final_subopt(),
+                ]);
+                if let (Some(t), Some(d)) = (tt, dollars) {
+                    pts.push((m as f64, t));
+                    if best_time[fi].as_ref().map(|b| t < b.2).unwrap_or(true) {
+                        best_time[fi] = Some((mode, m, t));
+                    }
+                    if mode.is_bsp()
+                        && best_bsp[fi].as_ref().map(|b| t < b.1).unwrap_or(true)
+                    {
+                        best_bsp[fi] = Some((m, t));
+                    }
+                    if cheapest.as_ref().map(|c| d < c.3).unwrap_or(true) {
+                        cheapest = Some((fi, mode, m, d));
+                    }
+                }
+            }
+            if !pts.is_empty() {
+                let tag = if spec.is_uniform() { "uni" } else { "het" };
+                series.push(Series::new(format!("{tag}:{mode}"), pts));
+            }
+        }
+    }
+    ctx.write_csv("hetero_fleets.csv", &table)?;
+    if !series.is_empty() {
+        ctx.show(
+            &format!("hetero: seconds to {eps:.1e} vs machines ({algo}, log y)"),
+            series,
+            true,
+            "machines",
+        );
+    }
+
+    // Summary: the relaxed-barrier payoff on the heterogeneous fleet,
+    // and the dollar winner across everything. Fleet roles are
+    // detected from the specs, not assumed from list position — a
+    // config may order its fleets either way.
+    let het = fleet_specs
+        .iter()
+        .rposition(|s| !s.is_uniform())
+        .unwrap_or(fleet_names.len() - 1);
+    let uni_idx = fleet_specs.iter().position(|s| s.is_uniform());
+    let summary = match (&best_bsp[het], &best_time[het]) {
+        (Some((m_bsp, t_bsp)), Some((mode, m, t))) => {
+            let cheap = cheapest
+                .map(|(fi, mode, m, d)| {
+                    format!(
+                        "; cheapest ${d:.4} @ ({}, m={m}, {mode})",
+                        fleet_names[fi]
+                    )
+                })
+                .unwrap_or_default();
+            let uni = uni_idx
+                .and_then(|i| best_time[i])
+                .map(|(mode, m, t)| format!("uniform best {t:.2}s @ (m={m}, {mode}); "))
+                .unwrap_or_default();
+            format!(
+                "hetero: {algo} to {eps:.1e} — {uni}hetero bsp {t_bsp:.2}s @ m={m_bsp}, \
+                 hetero best {t:.2}s @ (m={m}, {mode}), speedup ×{:.2}{}{cheap}",
+                t_bsp / t,
+                if mode.is_bsp() { " (barrier relaxation did not pay)" } else { "" }
+            )
+        }
+        _ => format!(
+            "hetero: {algo} reached {eps:.1e} under no heterogeneous (m, mode) — grid too small"
+        ),
+    };
+    println!("{summary}\n");
+    Ok(summary)
+}
+
+fn find_trace<'a>(
+    traces: &'a [Trace],
+    algo: &str,
+    machines: usize,
+    mode: BarrierMode,
+    fleet: &str,
+) -> Option<&'a Trace> {
+    traces.iter().find(|t| {
+        t.algorithm == algo && t.machines == machines && t.barrier_mode == mode && t.fleet == fleet
+    })
+}

@@ -11,6 +11,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
+pub mod hetero;
 pub mod ssp;
 pub mod tables;
 
@@ -19,7 +20,7 @@ pub use common::ReproContext;
 /// All figure ids `hemingway repro --figure` accepts.
 pub const FIGURES: &[&str] = &[
     "1a", "1b", "1c", "3a", "3b", "4", "5", "6", "7", "8", "9", "10",
-    "table-ernest", "table-advisor", "ablation", "ssp",
+    "table-ernest", "table-advisor", "ablation", "ssp", "hetero",
 ];
 
 /// Run one or all targets; returns the collected summary lines.
@@ -85,6 +86,9 @@ pub fn run_figures(ctx: &ReproContext, which: &str) -> crate::Result<Vec<String>
     }
     if wants("ssp") {
         summaries.push(ssp::ssp(ctx)?);
+    }
+    if wants("hetero") {
+        summaries.push(hetero::hetero(ctx)?);
     }
 
     crate::ensure!(

@@ -57,6 +57,13 @@ pub fn ssp(ctx: &ReproContext) -> crate::Result<String> {
         algorithms: vec![algo.clone()],
         machines: ctx.cfg.machines.clone(),
         modes: modes.clone(),
+        // Single-fleet scenario: run on the config's base fleet, like
+        // every other single-fleet path (the hetero scenario is the
+        // one that sweeps the fleet axis).
+        fleets: match ctx.cfg.fleets.first() {
+            Some(f) => vec![f.clone()],
+            None => Vec::new(),
+        },
         seeds: 1,
         base_seed: ctx.cfg.seed,
         run: ctx.run_config(),

@@ -16,18 +16,15 @@ use std::sync::Mutex;
 use crate::cluster::BarrierMode;
 use crate::optim::trace::{Record, Trace};
 
-// v2 added the barrier-mode line; v1 files are treated as misses and
-// regenerated (the cache is always reconstructible).
-const MAGIC: &str = "hemingway-trace v2";
+// v3 added the fleet line; v2 added the barrier-mode line. Files in
+// either older format are treated as misses and regenerated (the
+// cache is always reconstructible).
+const MAGIC: &str = "hemingway-trace v3";
 
-/// FNV-1a 64-bit hash of a cache key (names the on-disk file).
+/// FNV-1a 64-bit hash of a cache key (names the on-disk file). One
+/// shared implementation with the simulator's RNG-stream derivation.
 pub fn hash_key(key: &str) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in key.as_bytes() {
-        h ^= *b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
+    crate::util::rng::fnv1a_64(key.as_bytes())
 }
 
 /// Serialize a trace (with its cache key) to the on-disk format.
@@ -39,10 +36,11 @@ pub fn serialize_trace(key: &str, trace: &Trace) -> String {
     s.push_str(key);
     s.push('\n');
     s.push_str(&format!(
-        "algorithm={}\nmachines={}\nbarrier={}\np_star={}\nrecords={}\n",
+        "algorithm={}\nmachines={}\nbarrier={}\nfleet={}\np_star={}\nrecords={}\n",
         trace.algorithm,
         trace.machines,
         trace.barrier_mode,
+        trace.fleet,
         trace.p_star,
         trace.records.len()
     ));
@@ -71,6 +69,7 @@ pub fn parse_trace(text: &str) -> crate::Result<(String, Trace)> {
         .parse()
         .map_err(|e| crate::err!("bad machines field: {e}"))?;
     let barrier_mode = BarrierMode::parse(&field(lines.next(), "barrier")?)?;
+    let fleet = field(lines.next(), "fleet")?;
     let p_star: f64 = field(lines.next(), "p_star")?
         .parse()
         .map_err(|e| crate::err!("bad p_star field: {e}"))?;
@@ -79,6 +78,7 @@ pub fn parse_trace(text: &str) -> crate::Result<(String, Trace)> {
         .map_err(|e| crate::err!("bad records field: {e}"))?;
     let mut trace = Trace::new(algorithm, machines, p_star);
     trace.barrier_mode = barrier_mode;
+    trace.fleet = fleet;
     for i in 0..n {
         let line = lines
             .next()
@@ -229,6 +229,7 @@ mod tests {
     fn serialize_parse_roundtrip_is_byte_identical() {
         let mut t = sample_trace();
         t.barrier_mode = BarrierMode::Ssp { staleness: 3 };
+        t.fleet = "mixed:r3_xlarge+local48".into();
         let bytes = serialize_trace("k1", &t);
         let (key, back) = parse_trace(&bytes).unwrap();
         assert_eq!(key, "k1");
@@ -237,20 +238,53 @@ mod tests {
         assert_eq!(serialize_trace("k1", &back), bytes);
         assert_eq!(back.records.len(), t.records.len());
         assert_eq!(back.barrier_mode, BarrierMode::Ssp { staleness: 3 });
+        assert_eq!(back.fleet, "mixed:r3_xlarge+local48");
         assert!(back.records[0].dual.is_nan());
+        // The default (unnamed) fleet round-trips as the empty string.
+        let bytes = serialize_trace("k2", &sample_trace());
+        let (_, back) = parse_trace(&bytes).unwrap();
+        assert_eq!(back.fleet, "");
     }
 
     #[test]
-    fn v1_files_and_unknown_modes_are_rejected() {
-        // A pre-barrier-axis cache file (old magic) parses as an error
-        // — the cache layer treats that as a miss and regenerates.
-        let old = "hemingway-trace v1\nkey=k\nalgorithm=cocoa\nmachines=4\np_star=0\nrecords=0\n";
-        assert!(parse_trace(old).is_err());
+    fn old_format_files_and_unknown_modes_are_rejected() {
+        // Pre-barrier-axis (v1) and pre-fleet-axis (v2) cache files
+        // parse as errors — the cache layer treats both as misses and
+        // regenerates.
+        let v1 = "hemingway-trace v1\nkey=k\nalgorithm=cocoa\nmachines=4\np_star=0\nrecords=0\n";
+        assert!(parse_trace(v1).is_err());
+        let v2 = "hemingway-trace v2\nkey=k\nalgorithm=cocoa\nmachines=4\nbarrier=bsp\n\
+                  p_star=0\nrecords=0\n";
+        assert!(parse_trace(v2).is_err());
         // So does a file naming a barrier mode this build doesn't know.
         let weird = serialize_trace("k", &sample_trace())
             .replace("barrier=bsp", "barrier=quantum");
         let err = parse_trace(&weird).unwrap_err().to_string();
         assert!(err.contains("barrier mode"), "{err}");
+    }
+
+    #[test]
+    fn v2_disk_entries_are_cache_misses_not_errors() {
+        // A persistent cache directory left over from the v2 format:
+        // `get` must report a miss (and regenerate through `put`),
+        // never fail the sweep.
+        let dir = std::env::temp_dir().join("hemingway_trace_cache_v2");
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = TraceCache::persistent(&dir);
+        let t = sample_trace();
+        // Forge the v2 layout (no fleet line) at the key's slot.
+        let v2 = serialize_trace("cell-v2", &t)
+            .replace("hemingway-trace v3", "hemingway-trace v2")
+            .replace("fleet=\n", "");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{:016x}.trace", hash_key("cell-v2")));
+        std::fs::write(&path, v2).unwrap();
+        assert!(c.get("cell-v2").is_none(), "v2 file served as a hit");
+        // The regenerated entry overwrites the stale file and hits.
+        c.put("cell-v2", &t);
+        let c2 = TraceCache::persistent(&dir);
+        assert!(c2.get("cell-v2").is_some());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

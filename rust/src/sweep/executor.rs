@@ -109,12 +109,14 @@ impl SweepEngine {
 }
 
 /// Seed-replication aggregate for one (algorithm, machines, barrier
-/// mode) cell.
+/// mode, fleet) cell.
 #[derive(Debug, Clone)]
 pub struct CellAggregate {
     pub algorithm: String,
     pub machines: usize,
     pub barrier_mode: crate::cluster::BarrierMode,
+    /// Fleet wire name ("" = the context's default uniform fleet).
+    pub fleet: String,
     pub replicates: usize,
     /// Replicates that reached the suboptimality target.
     pub reached: usize,
@@ -141,24 +143,29 @@ fn agg_or_nan(xs: &[f64]) -> MeanStd {
     }
 }
 
-/// Group replicate traces by (algorithm, machines, barrier mode) —
-/// first-seen order — and aggregate each cell's metrics with mean ±
-/// stddev ([`stats::mean_stddev`]). Cells no replicate of which
+/// Group replicate traces by (algorithm, machines, barrier mode,
+/// fleet) — first-seen order — and aggregate each cell's metrics with
+/// mean ± stddev ([`stats::mean_stddev`]). Cells no replicate of which
 /// reached the target get NaN (not 0.0) for the to-target metrics.
 pub fn aggregate(traces: &[Trace], target_subopt: f64) -> Vec<CellAggregate> {
-    let mut order: Vec<(String, usize, crate::cluster::BarrierMode)> = Vec::new();
+    let mut order: Vec<(String, usize, crate::cluster::BarrierMode, String)> = Vec::new();
     for t in traces {
-        let k = (t.algorithm.clone(), t.machines, t.barrier_mode);
+        let k = (t.algorithm.clone(), t.machines, t.barrier_mode, t.fleet.clone());
         if !order.contains(&k) {
             order.push(k);
         }
     }
     order
         .into_iter()
-        .map(|(algo, m, mode)| {
+        .map(|(algo, m, mode, fleet)| {
             let group: Vec<&Trace> = traces
                 .iter()
-                .filter(|t| t.algorithm == algo && t.machines == m && t.barrier_mode == mode)
+                .filter(|t| {
+                    t.algorithm == algo
+                        && t.machines == m
+                        && t.barrier_mode == mode
+                        && t.fleet == fleet
+                })
                 .collect();
             let iters: Vec<f64> = group
                 .iter()
@@ -179,6 +186,7 @@ pub fn aggregate(traces: &[Trace], target_subopt: f64) -> Vec<CellAggregate> {
                 algorithm: algo,
                 machines: m,
                 barrier_mode: mode,
+                fleet,
                 replicates: group.len(),
                 reached: iters.len(),
                 iters_to_target: agg_or_nan(&iters),
@@ -205,6 +213,7 @@ mod tests {
     fn synth_runner(cell: &CellSpec) -> crate::Result<Trace> {
         let mut t = Trace::new(cell.algorithm.clone(), cell.machines, 0.0);
         t.barrier_mode = cell.mode;
+        t.fleet = cell.fleet.clone();
         let decay = 0.3 + (cell.seed % 7) as f64 * 0.05;
         for i in 0..20 {
             let subopt = (-decay * i as f64 / cell.machines as f64).exp();
@@ -224,6 +233,7 @@ mod tests {
             algorithms: vec!["cocoa".into(), "cocoa+".into()],
             machines: vec![1, 2, 4, 8],
             modes: vec![crate::cluster::BarrierMode::Bsp],
+            fleets: Vec::new(),
             seeds,
             base_seed: 7,
             run: RunConfig::default(),
@@ -261,6 +271,7 @@ mod tests {
             algorithms: vec!["cocoa".into()],
             machines: vec![1, 2, 4],
             modes: vec![crate::cluster::BarrierMode::Bsp],
+            fleets: Vec::new(),
             seeds: 2,
             base_seed: 11,
             run: run_cfg.clone(),
@@ -415,6 +426,31 @@ mod tests {
         assert_eq!(aggs[0].replicates, 2);
         assert_eq!(aggs[1].barrier_mode, BarrierMode::Ssp { staleness: 2 });
         assert_eq!(aggs[1].replicates, 1);
+    }
+
+    #[test]
+    fn aggregate_separates_fleets() {
+        let mk = |fleet: &str| {
+            let mut t = Trace::new("local-sgd", 8, 0.0);
+            t.fleet = fleet.to_string();
+            for i in 0..5 {
+                t.push(Record {
+                    iter: i,
+                    sim_time: i as f64,
+                    primal: 1.0,
+                    dual: f64::NAN,
+                    subopt: 1.0,
+                });
+            }
+            t
+        };
+        let traces = vec![mk(""), mk("straggly48"), mk(""), mk("straggly48")];
+        let aggs = aggregate(&traces, 1e-4);
+        assert_eq!(aggs.len(), 2);
+        assert_eq!(aggs[0].fleet, "");
+        assert_eq!(aggs[0].replicates, 2);
+        assert_eq!(aggs[1].fleet, "straggly48");
+        assert_eq!(aggs[1].replicates, 2);
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Grid specification for sweep runs: which (algorithm, machines,
-//! barrier-mode, seed-replicate) cells to execute, and the
+//! barrier-mode, fleet, seed-replicate) cells to execute, and the
 //! deterministic per-cell seed derivation that makes the fan-out
 //! order-independent.
 
@@ -7,21 +7,26 @@ use crate::cluster::BarrierMode;
 use crate::optim::RunConfig;
 
 /// One cell of a sweep grid: a single (algorithm, machines, barrier
-/// mode, seed) run.
+/// mode, fleet, seed) run.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CellSpec {
     pub algorithm: String,
     pub machines: usize,
     /// Coordination regime the cell's simulator runs under.
     pub mode: BarrierMode,
+    /// Fleet wire name (`cluster::fleet` grammar) the cell's simulator
+    /// prices against. Empty = the caller's default uniform fleet (the
+    /// pre-fleet behavior, and the pre-fleet cache-key shape).
+    pub fleet: String,
     /// Replicate index (0-based) along the seed axis.
     pub replicate: usize,
     /// Fully-mixed RNG seed for this cell — a pure function of the
     /// grid's base seed and the replicate index, never of execution
     /// order, so parallel and serial sweeps produce identical traces.
-    /// Shared across barrier modes on purpose: the modes then price
-    /// the same noise realization, making cross-mode comparisons
-    /// paired rather than merely distributional.
+    /// Shared across barrier modes and fleets on purpose: they then
+    /// price the same noise realization, making cross-mode and
+    /// cross-fleet comparisons paired rather than merely
+    /// distributional.
     pub seed: u64,
 }
 
@@ -45,8 +50,8 @@ pub fn cell_seed(base: u64, replicate: usize) -> u64 {
     }
 }
 
-/// A sweep grid: algorithms × machines × barrier modes × seed
-/// replicates, plus the stopping rules every cell shares.
+/// A sweep grid: algorithms × machines × barrier modes × fleets ×
+/// seed replicates, plus the stopping rules every cell shares.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
     pub algorithms: Vec<String>,
@@ -55,7 +60,10 @@ pub struct SweepGrid {
     /// single-mode shape). A staleness sweep is a list of
     /// `Ssp { staleness }` entries.
     pub modes: Vec<BarrierMode>,
-    /// Seed replicates per (algorithm, machines, mode) cell (≥ 1).
+    /// Fleet wire names to sweep. Empty behaves as one unnamed default
+    /// fleet (`fleet == ""` on every cell) — the pre-fleet grid shape.
+    pub fleets: Vec<String>,
+    /// Seed replicates per (algorithm, machines, mode, fleet) cell (≥ 1).
     pub seeds: usize,
     pub base_seed: u64,
     pub run: RunConfig,
@@ -79,6 +87,7 @@ impl SweepGrid {
             algorithms: vec![algorithm.to_string()],
             machines: machines.to_vec(),
             modes: vec![mode],
+            fleets: Vec::new(),
             seeds: 1,
             base_seed,
             run,
@@ -86,29 +95,38 @@ impl SweepGrid {
     }
 
     /// Expand into cells, algorithm-major then machines then mode then
-    /// replicate. The order is part of the contract: results come back
-    /// in exactly this order regardless of how many threads executed
-    /// them.
+    /// fleet then replicate. The order is part of the contract: results
+    /// come back in exactly this order regardless of how many threads
+    /// executed them.
     pub fn cells(&self) -> Vec<CellSpec> {
         let modes: &[BarrierMode] = if self.modes.is_empty() {
             &[BarrierMode::Bsp]
         } else {
             &self.modes
         };
+        let default_fleet = [String::new()];
+        let fleets: &[String] = if self.fleets.is_empty() {
+            &default_fleet
+        } else {
+            &self.fleets
+        };
         let mut out = Vec::with_capacity(
-            self.algorithms.len() * self.machines.len() * modes.len() * self.seeds,
+            self.algorithms.len() * self.machines.len() * modes.len() * fleets.len() * self.seeds,
         );
         for algo in &self.algorithms {
             for &m in &self.machines {
                 for &mode in modes {
-                    for rep in 0..self.seeds.max(1) {
-                        out.push(CellSpec {
-                            algorithm: algo.clone(),
-                            machines: m,
-                            mode,
-                            replicate: rep,
-                            seed: cell_seed(self.base_seed, rep),
-                        });
+                    for fleet in fleets {
+                        for rep in 0..self.seeds.max(1) {
+                            out.push(CellSpec {
+                                algorithm: algo.clone(),
+                                machines: m,
+                                mode,
+                                fleet: fleet.clone(),
+                                replicate: rep,
+                                seed: cell_seed(self.base_seed, rep),
+                            });
+                        }
                     }
                 }
             }
@@ -131,8 +149,8 @@ impl SweepGrid {
 /// caller key the trace cache through this single function.
 pub fn cell_key(context_key: &str, cell: &CellSpec) -> String {
     format!(
-        "{context_key}|algo={};m={};mode={};rep={};seed={}",
-        cell.algorithm, cell.machines, cell.mode, cell.replicate, cell.seed
+        "{context_key}|algo={};m={};mode={};fleet={};rep={};seed={}",
+        cell.algorithm, cell.machines, cell.mode, cell.fleet, cell.replicate, cell.seed
     )
 }
 
@@ -145,6 +163,7 @@ mod tests {
             algorithms: vec!["cocoa".into(), "gd".into()],
             machines: vec![1, 4],
             modes: vec![BarrierMode::Bsp],
+            fleets: Vec::new(),
             seeds: 3,
             base_seed: 42,
             run: RunConfig::default(),
@@ -212,6 +231,49 @@ mod tests {
         let mut ssp = cells[0].clone();
         ssp.mode = BarrierMode::Ssp { staleness: 1 };
         assert_ne!(a, cell_key("ctx", &ssp));
+    }
+
+    #[test]
+    fn fleet_axis_multiplies_cells_and_shares_seeds() {
+        let mut g = grid();
+        g.fleets = vec!["local48".into(), "mixed:r3_xlarge+local48".into()];
+        let cells = g.cells();
+        assert_eq!(cells.len(), 2 * 2 * 2 * 3);
+        // Fleet varies inside (algorithm, machines, mode), replicate
+        // inside fleet — and the same replicate carries the same seed
+        // across fleets (paired noise realizations).
+        assert_eq!(cells[0].fleet, "local48");
+        assert_eq!(cells[3].fleet, "mixed:r3_xlarge+local48");
+        assert_eq!(cells[0].seed, cells[3].seed);
+        assert_eq!(
+            (cells[0].machines, cells[0].mode, &cells[0].algorithm),
+            (cells[3].machines, cells[3].mode, &cells[3].algorithm)
+        );
+        // An empty fleet list behaves as one unnamed default fleet.
+        g.fleets.clear();
+        assert!(g.cells().iter().all(|c| c.fleet.is_empty()));
+        assert_eq!(g.cells().len(), 2 * 2 * 3);
+    }
+
+    #[test]
+    fn cell_keys_separate_fleets() {
+        // Two cells differing only in fleet must never share a cache
+        // key — including the default unnamed fleet vs a named uniform
+        // one (they are bit-identical runs, but key equality would let
+        // a future non-uniform edit silently serve stale traces).
+        let base = grid().cells().remove(0);
+        let mut named = base.clone();
+        named.fleet = "local48".into();
+        let mut hetero = base.clone();
+        hetero.fleet = "local48*0.3:slow=2x".into();
+        let keys = [
+            cell_key("ctx", &base),
+            cell_key("ctx", &named),
+            cell_key("ctx", &hetero),
+        ];
+        assert_ne!(keys[0], keys[1]);
+        assert_ne!(keys[0], keys[2]);
+        assert_ne!(keys[1], keys[2]);
     }
 
     #[test]

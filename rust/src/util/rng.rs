@@ -13,6 +13,20 @@
 //!   and the JAX kernel on an identical sequence lets tests assert
 //!   numeric agreement between the native and HLO execution paths.
 
+/// FNV-1a 64-bit hash — the crate's one FNV implementation, shared by
+/// the sweep trace cache's key hashing (`sweep::cache::hash_key`) and
+/// the cluster simulator's RNG-stream derivation, which needs every
+/// hardware profile to get an independent noise stream (profiles with
+/// equal-length names must not collide; see `cluster::sim`).
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// PCG-XSH-RR 64/32: 64-bit state, 32-bit output.
 #[derive(Debug, Clone)]
 pub struct Pcg32 {
@@ -285,6 +299,16 @@ mod tests {
         for _ in 0..1000 {
             assert!(l.next_index(17) < 17);
         }
+    }
+
+    #[test]
+    fn fnv1a_separates_equal_length_inputs() {
+        // The exact property the simulator's stream seeding needs.
+        assert_ne!(fnv1a_64(b"local48"), fnv1a_64(b"local64"));
+        assert_ne!(fnv1a_64(b"ab"), fnv1a_64(b"ba"));
+        assert_eq!(fnv1a_64(b"local48"), fnv1a_64(b"local48"));
+        // Known FNV-1a offset basis for empty input.
+        assert_eq!(fnv1a_64(b""), 0xcbf2_9ce4_8422_2325);
     }
 
     #[test]

@@ -25,13 +25,17 @@ pub fn stddev(xs: &[f64]) -> f64 {
 
 /// Percentile by linear interpolation between order statistics
 /// (the same convention as numpy's default). `q` in `[0, 100]`.
+///
+/// NaN entries carry no order information and are dropped before the
+/// sort (degenerate traces feed NaN duals through here); the result is
+/// NaN only when nothing survives the filter.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     assert!((0.0..=100.0).contains(&q), "percentile q out of range: {q}");
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
         return f64::NAN;
     }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile input"));
+    v.sort_by(|a, b| a.partial_cmp(b).expect("non-NaN floats are totally ordered"));
     let pos = q / 100.0 * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -265,5 +269,19 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert!(percentile(&[], 50.0).is_nan());
         assert_eq!(rmse(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_ignores_nans() {
+        // NaN entries are dropped, not panicked on: the percentile of
+        // what remains is exactly the NaN-free answer.
+        let with_nan = [5.0, f64::NAN, 1.0, f64::NAN, 3.0];
+        assert_eq!(percentile(&with_nan, 50.0), 3.0);
+        assert_eq!(percentile(&with_nan, 0.0), 1.0);
+        assert_eq!(percentile(&with_nan, 100.0), 5.0);
+        assert_eq!(median(&with_nan), percentile(&[1.0, 3.0, 5.0], 50.0));
+        // Only when nothing survives is the answer NaN.
+        assert!(percentile(&[f64::NAN, f64::NAN], 95.0).is_nan());
+        assert!(median(&[f64::NAN]).is_nan());
     }
 }

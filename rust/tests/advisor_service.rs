@@ -90,7 +90,7 @@ fn advise_from_artifacts_then_serve_three_queries() {
     );
     let q_time = Query::fastest_to(1e-2);
     let q_loss = Query::best_at(10.0);
-    for q in [q_time, q_loss] {
+    for q in [q_time.clone(), q_loss.clone()] {
         assert_eq!(registry.answer(&q), reloaded.answer(&q), "query {q:?}");
     }
 
@@ -145,10 +145,11 @@ fn serve_answers_barrier_mode_queries_and_legacy_stays_bsp() {
                   {\"query\":\"fastest_to\",\"eps\":0.1,\"barrier_mode\":\"ssp:2\"}\n\
                   {\"query\":\"best_at\",\"budget\":10,\"barrier_mode\":\"any\"}\n\
                   {\"query\":\"fastest_to\",\"eps\":0.1,\"barrier_mode\":\"any\"}\n\
+                  {\"query\":\"cheapest_to\",\"eps\":0.1,\"barrier_mode\":\"any\"}\n\
                   {\"query\":\"models\"}\n";
     let mut out = Vec::new();
     let stats = hemingway::advisor::serve(&registry, &input[..], &mut out).unwrap();
-    assert_eq!(stats.queries, 5);
+    assert_eq!(stats.queries, 6);
     assert_eq!(stats.errors, 0, "{}", String::from_utf8_lossy(&out));
     let lines: Vec<Json> = std::str::from_utf8(&out)
         .unwrap()
@@ -167,8 +168,13 @@ fn serve_answers_barrier_mode_queries_and_legacy_stays_bsp() {
     let t_bsp = lines[0].req_f64("predicted_seconds").unwrap();
     let t_any = lines[3].req_f64("predicted_seconds").unwrap();
     assert!(t_any <= t_bsp, "any={t_any} bsp={t_bsp}");
+    // cheapest_to answers in dollars, naming the (fallback) base
+    // fleet the config's profile implies.
+    let dollars = lines[4].req_f64("predicted_dollars").unwrap();
+    assert!(dollars > 0.0 && dollars.is_finite());
+    assert_eq!(lines[4].req_str("fleet").unwrap(), "local48");
     // The model list advertises every fitted mode.
-    let models = lines[4].get("models").and_then(Json::as_array).unwrap();
+    let models = lines[5].get("models").and_then(Json::as_array).unwrap();
     let modes = models[0].get("barrier_modes").and_then(Json::as_array).unwrap();
     let mode_strs: Vec<&str> = modes.iter().filter_map(Json::as_str).collect();
     assert_eq!(mode_strs, vec!["bsp", "ssp:2", "async"]);

@@ -9,13 +9,18 @@
 //! * for one seed (one noise realization), relaxing the barrier never
 //!   costs time: `Async ≤ Ssp(s) ≤ Bsp` elapsed, and Ssp elapsed is
 //!   monotone in the staleness bound;
-//! * SSP never reports a read staleness above its bound.
+//! * SSP never reports a read staleness above its bound;
+//! * (ISSUE 4) a uniform [`FleetSpec`] prices bit-identically to the
+//!   plain profile path in every mode, and a fleet with persistent
+//!   slow nodes never finishes earlier than the uniform fleet on the
+//!   same draws.
 //!
 //! All runs share the driver's RNG discipline: every mode consumes
-//! the generator identically, so cross-mode comparisons are paired,
-//! not statistical.
+//! the generator identically (and fleets of one base profile share the
+//! stream), so cross-mode and cross-fleet comparisons are paired, not
+//! statistical.
 
-use hemingway::cluster::{BarrierMode, ClusterSim, HardwareProfile};
+use hemingway::cluster::{BarrierMode, ClusterSim, FleetSpec, HardwareProfile};
 use hemingway::data::synth::two_gaussians;
 use hemingway::optim::{by_name, run, IterationCost, NativeBackend, Problem, RunConfig};
 use hemingway::util::quickcheck::{forall_ok, Gen};
@@ -32,6 +37,7 @@ fn random_profile(g: &mut Gen) -> HardwareProfile {
         noise_sigma: g.f64_in(0.0, 0.4),
         straggler_prob: g.f64_in(0.0, 0.15),
         straggler_factor: g.f64_in(1.0, 6.0),
+        price_per_machine_second: g.f64_in(1e-6, 1e-3),
     }
 }
 
@@ -164,6 +170,97 @@ fn prop_ssp_read_staleness_never_exceeds_bound() {
                 if tau > staleness {
                     return Err(format!("iteration {i}: staleness {tau} > bound {staleness}"));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Simulate over an explicit fleet; returns (per-iter dts, elapsed).
+fn simulate_fleet(
+    fleet: &FleetSpec,
+    mode: BarrierMode,
+    seed: u64,
+    costs: &[IterationCost],
+) -> (Vec<f64>, f64) {
+    let mut sim = ClusterSim::with_fleet(fleet.clone(), mode, seed);
+    let dts: Vec<f64> = costs.iter().map(|c| sim.iteration_time(c)).collect();
+    (dts, sim.elapsed)
+}
+
+#[test]
+fn prop_uniform_fleet_is_bitwise_plain_profile() {
+    // The fleet axis is a strict generalization: wrapping a profile in
+    // FleetSpec::uniform must change nothing, bit for bit, in any
+    // barrier mode — the ISSUE 4 acceptance property.
+    forall_ok(
+        "uniform FleetSpec ≡ plain profile: per-iteration times and elapsed, bit for bit",
+        120,
+        |g| {
+            let mode = *g.choose(&[
+                BarrierMode::Bsp,
+                BarrierMode::Ssp { staleness: g.usize_in(0, 8) },
+                BarrierMode::Async,
+            ]);
+            let seed = g.rng().next_u64();
+            ((mode, seed, random_costs(g)), random_profile(g))
+        },
+        |&(mode, seed, ref costs), profile| {
+            let (dts_plain, el_plain) = simulate(profile, mode, seed, costs);
+            let fleet = FleetSpec::uniform(profile.clone());
+            let (dts_fleet, el_fleet) = simulate_fleet(&fleet, mode, seed, costs);
+            if el_plain.to_bits() != el_fleet.to_bits() {
+                return Err(format!("elapsed differs: {el_plain} vs {el_fleet}"));
+            }
+            for (i, (a, b)) in dts_plain.iter().zip(&dts_fleet).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("iteration {i}: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_slower_fleet_never_finishes_earlier() {
+    // A fleet that only scales some machines' compute up (slow factor
+    // ≥ 1) shares the uniform fleet's draws (same base profile ⇒ same
+    // RNG stream), so its elapsed time is ≥ pointwise — in every mode,
+    // for every slow fraction.
+    forall_ok(
+        "fleet with persistent slow nodes ⇒ elapsed ≥ uniform elapsed",
+        120,
+        |g| {
+            let mode = *g.choose(&[
+                BarrierMode::Bsp,
+                BarrierMode::Ssp { staleness: g.usize_in(0, 8) },
+                BarrierMode::Async,
+            ]);
+            let seed = g.rng().next_u64();
+            let slow_fraction = g.f64_in(0.05, 1.0);
+            let slow_factor = g.f64_in(1.0, 5.0);
+            (
+                (mode, seed, slow_fraction, slow_factor, random_costs(g)),
+                random_profile(g),
+            )
+        },
+        |&(mode, seed, slow_fraction, slow_factor, ref costs), profile| {
+            let uniform = FleetSpec::uniform(profile.clone());
+            let slow = FleetSpec {
+                name: format!("{}*slowprop", profile.name),
+                base: profile.clone(),
+                secondary: None,
+                slow_fraction,
+                slow_factor,
+            };
+            let (_, el_uniform) = simulate_fleet(&uniform, mode, seed, costs);
+            let (_, el_slow) = simulate_fleet(&slow, mode, seed, costs);
+            if el_slow < el_uniform {
+                return Err(format!(
+                    "slow fleet finished earlier: {el_slow} < {el_uniform} \
+                     (fraction {slow_fraction}, factor {slow_factor}, {mode})"
+                ));
             }
             Ok(())
         },

@@ -199,6 +199,10 @@ fn run_config_stopping_rules_compose() {
     )
     .unwrap();
     let last = trace.records.last().unwrap();
-    assert!(last.sim_time >= 3.0);
-    assert!(last.sim_time < 6.0, "overshot the budget: {}", last.sim_time);
+    // The budget is a hard ceiling: the driver never records a state
+    // the budget didn't buy (the pre-fix loop overshot by up to one
+    // iteration), and it still uses most of the budget.
+    assert!(last.sim_time <= 3.0, "overshot the budget: {}", last.sim_time);
+    assert!(last.sim_time > 2.0, "budget mostly unused: {}", last.sim_time);
+    assert!(trace.records.len() > 2);
 }
