@@ -12,11 +12,14 @@ cargo build --release
 # the in-tree xla API stub so the feature gate can't rot.
 cargo build --release --features pjrt
 cargo test -q
-# Barrier-mode and fleet invariants (uniform-fleet ≡ plain-profile
-# bitwise, slower-fleet ⇒ ≥ elapsed) under an explicitly pinned
+# Barrier-mode, fleet and workload invariants (uniform-fleet ≡
+# plain-profile bitwise, slower-fleet ⇒ ≥ elapsed, hinge ≡ the
+# pre-workload-axis path bitwise, suboptimality ≥ 0 on every workload,
+# cache v3-as-miss / v4 round trip) under an explicitly pinned
 # quickcheck seed, so a property failure in CI names a seed that
 # reproduces locally.
 QUICKCHECK_SEED=20170211 cargo test -q --release --test barrier_props
+QUICKCHECK_SEED=20170211 cargo test -q --release --test workload_props
 cargo fmt --check
 
 # Advisor-service smoke: fit-on-miss once, then three JSON queries
@@ -88,3 +91,33 @@ if grep -q '"ok":false' "$tmp/cheapest.out"; then
   exit 1
 fi
 echo "hetero smoke OK"
+
+# Workloads smoke: the objective axis end to end — a tiny
+# `repro --figure workloads` on a ridge-first grid, then one
+# workload-filtered fastest_to query through a freshly fitted registry
+# (workload pairs persisted in the artifacts, filter honored on the
+# wire).
+cat > "$tmp/workloads.json" <<EOF
+{"n": 256, "d": 16, "machines": [1, 2, 4], "max_iters": 40,
+ "target_subopt": 1e-2, "advisor_iter_cap": 2000,
+ "algorithms": ["cocoa+", "minibatch-sgd"],
+ "workloads": ["hinge", "ridge"],
+ "out_dir": "$tmp/workloads_out"}
+EOF
+cargo run --release --quiet -- repro --figure workloads --native \
+  --config "$tmp/workloads.json"
+grep -q '^workloads:' "$tmp/workloads_out/summaries.txt"
+test -f "$tmp/workloads_out/workloads_crossover.csv"
+# ε = 0.5 sits far above any fitted prediction floor, so every variant
+# can answer; the ridge-filtered response must name its workload.
+printf '%s\n' '{"query":"fastest_to","eps":0.5,"workload":"ridge"}' \
+  | cargo run --release --quiet -- serve --native --config "$tmp/workloads.json" \
+  > "$tmp/workload_query.out"
+cat "$tmp/workload_query.out"
+grep -q '"workload":"ridge"' "$tmp/workload_query.out"
+grep -q '"predicted_seconds"' "$tmp/workload_query.out"
+if grep -q '"ok":false' "$tmp/workload_query.out"; then
+  echo "workload-filtered serve smoke returned an error response" >&2
+  exit 1
+fi
+echo "workloads smoke OK"

@@ -194,6 +194,87 @@ fn main() -> hemingway::Result<()> {
     }
     println!();
 
+    // ---------------- workloads: one sweep cell per objective ----------------
+    // The objective-generic hot paths: a full driver run (one sweep
+    // cell) per workload on a small problem, plus each workload's
+    // primal evaluation. Means land in BENCH_workloads.json so the
+    // perf trajectory tracks the generic kernels per objective.
+    let mut workload_means: Vec<(hemingway::optim::Objective, f64, f64)> = Vec::new();
+    {
+        use hemingway::data::synth::dataset_for;
+        use hemingway::optim::Objective;
+        let small = ExperimentConfig {
+            n: 1024,
+            d: 32,
+            ..Default::default()
+        };
+        for obj in Objective::ALL {
+            let sdata = dataset_for(obj, &small.synth());
+            let sproblem = Problem::with_objective(sdata, small.lambda, obj);
+            let (sp_star, _, _) = sproblem.reference_solve(1e-5, 200);
+            let cell_run = RunConfig {
+                max_iters: 15,
+                target_subopt: -1.0,
+                time_budget: None,
+            };
+            b.bench(&format!("workloads/cell/cocoa+/{obj}"), || {
+                let mut algo = by_name("cocoa+", &sproblem, 4, 1).unwrap();
+                let mut sim = BspSim::new(HardwareProfile::local48(), 7);
+                run(
+                    algo.as_mut(),
+                    &NativeBackend,
+                    &sproblem,
+                    &mut sim,
+                    sp_star,
+                    &cell_run,
+                )
+                .unwrap();
+            });
+            let w = vec![0.01f32; sproblem.data.d];
+            b.bench(&format!("workloads/primal/{obj}"), || {
+                sproblem.primal(&w);
+            });
+            let find_mean = |name: &str| {
+                b.results
+                    .iter()
+                    .find(|(n, ..)| n == name)
+                    .map(|(_, mean, ..)| *mean)
+                    .unwrap_or(f64::NAN)
+            };
+            workload_means.push((
+                obj,
+                find_mean(&format!("workloads/cell/cocoa+/{obj}")),
+                find_mean(&format!("workloads/primal/{obj}")),
+            ));
+        }
+    }
+    // Emit the per-workload perf snapshot (skipped under a filter that
+    // excluded the workload benches — no stale file overwrites).
+    if workload_means.iter().any(|(_, cell, _)| cell.is_finite()) {
+        use hemingway::util::json::Json;
+        let entries: Vec<(String, Json)> = workload_means
+            .iter()
+            .map(|(obj, cell, primal)| {
+                (
+                    obj.as_str().to_string(),
+                    Json::object(vec![
+                        ("cell_seconds_mean", Json::num(*cell)),
+                        ("primal_seconds_mean", Json::num(*primal)),
+                    ]),
+                )
+            })
+            .collect();
+        let doc = Json::object(vec![
+            ("bench", Json::str("workloads")),
+            ("algorithm", Json::str("cocoa+")),
+            ("machines", Json::num(4.0)),
+            ("workloads", Json::Object(entries)),
+        ]);
+        std::fs::write("BENCH_workloads.json", doc.to_pretty())?;
+        println!("wrote BENCH_workloads.json");
+    }
+    println!();
+
     // ---------------- sweep engine: thread scaling + cache ----------------
     {
         let small = ExperimentConfig {
@@ -211,6 +292,7 @@ fn main() -> hemingway::Result<()> {
             machines: small.machines.clone(),
             modes: vec![hemingway::cluster::BarrierMode::Bsp],
             fleets: Vec::new(),
+            workloads: Vec::new(),
             seeds: 2,
             base_seed: small.seed,
             run: RunConfig {

@@ -1,18 +1,21 @@
 //! The combined model `h(t, m) = g(t / f(m), m)` (paper §3.2): compose
 //! the Ernest system model with the Hemingway convergence model to
-//! answer time-domain questions — now per (barrier mode, fleet). The
-//! base `(ernest, conv)` pair is the BSP fit on the base fleet (the
-//! historical artifact layout, so pre-barrier-axis artifacts still
-//! load); each additional mode carries its own pair fitted from traces
-//! simulated under that mode, and each additional *fleet* carries a
-//! pair per mode fitted from traces priced on that hardware: relaxed
-//! barriers buy faster iterations (a different f) at the price of
-//! stale updates (a different, slower-decaying g), and a slower or
-//! mixed fleet shifts f without touching the iteration-domain g.
+//! answer time-domain questions — now per (workload, fleet, barrier
+//! mode). The base `(ernest, conv)` pair is the base workload's BSP
+//! fit on the base fleet (the historical artifact layout, so
+//! pre-barrier-axis artifacts still load); each additional mode
+//! carries its own pair fitted from traces simulated under that mode,
+//! each additional *fleet* carries a pair per mode fitted from traces
+//! priced on that hardware, and each additional *workload* carries its
+//! own (fleet, mode) pairs fitted from sweeps of that objective: the
+//! objective's conditioning changes the iteration-domain g (and, via
+//! different per-iteration flops, f), which is exactly why the right
+//! algorithm and cluster size flip between problems.
 
 use crate::cluster::BarrierMode;
 use crate::ernest::ErnestModel;
 use crate::hemingway_model::ConvergenceModel;
+use crate::optim::Objective;
 use crate::util::json::Json;
 
 /// The (system, convergence) model pair for one non-base
@@ -44,6 +47,14 @@ pub struct CombinedModel {
     /// fleet here carries its own BSP entry — nothing is implicit for
     /// non-base fleets.
     pub fleet_pairs: Vec<((String, BarrierMode), ModeModel)>,
+    /// The workload the base pair (and `modes`/`fleet_pairs`) were
+    /// fitted on. Hinge in pre-workload-axis artifacts — the paper's
+    /// case study.
+    pub base_workload: Objective,
+    /// (workload, fleet, mode) pairs beyond the base workload, sorted
+    /// by key. Every workload here carries explicit per-variant
+    /// entries — nothing is implicit for non-base workloads.
+    pub workload_pairs: Vec<((Objective, String, BarrierMode), ModeModel)>,
 }
 
 impl CombinedModel {
@@ -56,6 +67,8 @@ impl CombinedModel {
             base_fleet: String::new(),
             modes: Vec::new(),
             fleet_pairs: Vec::new(),
+            base_workload: Objective::Hinge,
+            workload_pairs: Vec::new(),
         }
     }
 
@@ -120,6 +133,114 @@ impl CombinedModel {
             }
         }
         out
+    }
+
+    /// Attach (or replace) a fitted pair for a (workload, fleet, mode)
+    /// variant. The base workload's pairs route into the base slot /
+    /// `modes` / `fleet_pairs` (so pre-workload lookups see them);
+    /// other workloads keep explicit per-variant entries.
+    pub fn insert_workload_pair(
+        &mut self,
+        workload: Objective,
+        fleet: &str,
+        mode: BarrierMode,
+        model: ModeModel,
+    ) {
+        if workload == self.base_workload {
+            return self.insert_fleet_pair(fleet, mode, model);
+        }
+        let key = (workload, fleet.to_string(), mode);
+        match self.workload_pairs.binary_search_by(|(k, _)| k.cmp(&key)) {
+            Ok(i) => self.workload_pairs[i].1 = model,
+            Err(i) => self.workload_pairs.insert(i, (key, model)),
+        }
+    }
+
+    /// Every (workload, fleet, mode) variant this model can answer
+    /// for: the base workload's (fleet, mode) variants first, then the
+    /// non-base workload pairs in key order.
+    pub fn fitted_workload_variants(&self) -> Vec<(Objective, String, BarrierMode)> {
+        let mut out: Vec<(Objective, String, BarrierMode)> = self
+            .fitted_variants()
+            .into_iter()
+            .map(|(f, m)| (self.base_workload, f, m))
+            .collect();
+        out.extend(
+            self.workload_pairs
+                .iter()
+                .map(|((w, f, m), _)| (*w, f.clone(), *m)),
+        );
+        out
+    }
+
+    /// Every distinct workload this model can answer for, base first.
+    pub fn fitted_workloads(&self) -> Vec<Objective> {
+        let mut out = vec![self.base_workload];
+        for ((w, _, _), _) in &self.workload_pairs {
+            if !out.contains(w) {
+                out.push(*w);
+            }
+        }
+        out
+    }
+
+    /// The (system, convergence) pair serving a (workload, fleet,
+    /// mode) variant. The base workload routes through
+    /// [`Self::pair_v`], so the pre-workload query paths share one
+    /// formula bit for bit.
+    pub fn pair_w(
+        &self,
+        workload: Objective,
+        fleet: &str,
+        mode: BarrierMode,
+    ) -> Option<(&ErnestModel, &ConvergenceModel)> {
+        if workload == self.base_workload {
+            return self.pair_v(fleet, mode);
+        }
+        self.workload_pairs
+            .iter()
+            .find(|((w, f, m), _)| *w == workload && f == fleet && *m == mode)
+            .map(|(_, mm)| (&mm.ernest, &mm.conv))
+    }
+
+    /// f(m) under a (workload, fleet, mode) variant.
+    pub fn iter_time_w(
+        &self,
+        workload: Objective,
+        fleet: &str,
+        mode: BarrierMode,
+        machines: usize,
+    ) -> Option<f64> {
+        self.pair_w(workload, fleet, mode)
+            .map(|(ernest, _)| ernest.predict(machines, self.input_size))
+    }
+
+    /// h(t, m) under a (workload, fleet, mode) variant.
+    pub fn subopt_at_time_w(
+        &self,
+        workload: Objective,
+        fleet: &str,
+        mode: BarrierMode,
+        t: f64,
+        machines: usize,
+    ) -> Option<f64> {
+        let (ernest, conv) = self.pair_w(workload, fleet, mode)?;
+        Some(Self::subopt_from_pair(ernest, conv, self.input_size, t, machines))
+    }
+
+    /// Time-to-ε under a (workload, fleet, mode) variant.
+    pub fn time_to_subopt_w(
+        &self,
+        workload: Objective,
+        fleet: &str,
+        mode: BarrierMode,
+        eps: f64,
+        machines: usize,
+        cap: usize,
+    ) -> Option<f64> {
+        let (ernest, conv) = self.pair_w(workload, fleet, mode)?;
+        conv.iters_to(eps, machines as f64, cap)
+            .map(|i| i as f64 * ernest.predict(machines, self.input_size))
     }
 
     /// The (system, convergence) pair serving a mode on the base fleet.
@@ -259,15 +380,20 @@ impl CombinedModel {
         Some((self.conv.predict_ln(i0 + iters, m) - self.conv.predict_ln(i0, m)).exp())
     }
 
-    /// Serialize for a model artifact (`util::json`). The `modes` and
-    /// `fleet_modes` arrays (and the `base_fleet` field) are omitted
-    /// when empty, keeping BSP-only artifacts in the pre-barrier-axis
-    /// layout and single-fleet artifacts in the pre-fleet layout.
+    /// Serialize for a model artifact (`util::json`). The `modes`,
+    /// `fleet_modes` and `workloads` arrays (and the `base_fleet` /
+    /// `base_workload` fields) are omitted when empty/hinge, keeping
+    /// BSP-only artifacts in the pre-barrier-axis layout, single-fleet
+    /// artifacts in the pre-fleet layout, and hinge-only artifacts in
+    /// the pre-workload layout.
     pub fn to_json(&self) -> crate::Result<Json> {
         let mut fields = Vec::new();
         fields.push(("input_size", Json::num(self.input_size)));
         if !self.base_fleet.is_empty() {
             fields.push(("base_fleet", Json::str(self.base_fleet.clone())));
+        }
+        if !self.base_workload.is_hinge() {
+            fields.push(("base_workload", Json::str(self.base_workload.as_str())));
         }
         fields.push(("ernest", self.ernest.to_json()?));
         fields.push(("convergence", self.conv.to_json()?));
@@ -300,13 +426,30 @@ impl CombinedModel {
                 .collect::<crate::Result<Vec<Json>>>()?;
             fields.push(("fleet_modes", Json::Array(entries)));
         }
+        if !self.workload_pairs.is_empty() {
+            let entries = self
+                .workload_pairs
+                .iter()
+                .map(|((workload, fleet, mode), mm)| {
+                    Ok(Json::object(vec![
+                        ("workload", Json::str(workload.as_str())),
+                        ("fleet", Json::str(fleet.clone())),
+                        ("barrier_mode", Json::str(mode.as_str())),
+                        ("ernest", mm.ernest.to_json()?),
+                        ("convergence", mm.conv.to_json()?),
+                    ]))
+                })
+                .collect::<crate::Result<Vec<Json>>>()?;
+            fields.push(("workloads", Json::Array(entries)));
+        }
         Ok(Json::object(fields))
     }
 
-    /// Rebuild from the artifact form. A `modes`/`fleet_modes` entry
-    /// naming an unknown barrier mode or an unparseable fleet is an
-    /// error — the registry must skip such an artifact rather than
-    /// serve a subset of what it promises.
+    /// Rebuild from the artifact form. A `modes`/`fleet_modes`/
+    /// `workloads` entry naming an unknown barrier mode, an
+    /// unparseable fleet or an unknown workload is an error — the
+    /// registry must skip such an artifact rather than serve a subset
+    /// of what it promises.
     pub fn from_json(doc: &Json) -> crate::Result<CombinedModel> {
         let ernest = doc
             .get("ernest")
@@ -324,6 +467,12 @@ impl CombinedModel {
                 s.to_string()
             }
         };
+        let base_workload = match doc.get("base_workload") {
+            None => Objective::Hinge,
+            Some(v) => Objective::parse(v.as_str().ok_or_else(|| {
+                crate::err!("base_workload must be a workload name string")
+            })?)?,
+        };
         let mut model = CombinedModel {
             ernest: ErnestModel::from_json(ernest)?,
             conv: ConvergenceModel::from_json(conv)?,
@@ -331,6 +480,8 @@ impl CombinedModel {
             base_fleet,
             modes: Vec::new(),
             fleet_pairs: Vec::new(),
+            base_workload,
+            workload_pairs: Vec::new(),
         };
         let pair_of = |entry: &Json| -> crate::Result<ModeModel> {
             let ernest = entry
@@ -365,6 +516,22 @@ impl CombinedModel {
                 );
                 let mode = crate::cluster::BarrierMode::parse(entry.req_str("barrier_mode")?)?;
                 model.insert_fleet_pair(fleet, mode, pair_of(entry)?);
+            }
+        }
+        if let Some(entries) = doc.get("workloads").and_then(Json::as_array) {
+            for entry in entries {
+                let workload = Objective::parse(entry.req_str("workload")?)?;
+                crate::ensure!(
+                    workload != model.base_workload,
+                    "model artifact lists the base workload '{workload}' under 'workloads'; \
+                     base-workload pairs belong in the base slot / 'modes' / 'fleet_modes'"
+                );
+                let fleet = entry.req_str("fleet")?;
+                if !fleet.is_empty() {
+                    crate::cluster::FleetSpec::parse(fleet)?;
+                }
+                let mode = crate::cluster::BarrierMode::parse(entry.req_str("barrier_mode")?)?;
+                model.insert_workload_pair(workload, fleet, mode, pair_of(entry)?);
             }
         }
         Ok(model)
@@ -674,5 +841,147 @@ mod tests {
         let doc = crate::util::json::Json::parse(&text).unwrap();
         let err = CombinedModel::from_json(&doc).unwrap_err().to_string();
         assert!(err.contains("barrier mode"), "{err}");
+    }
+
+    /// Base (hinge) pairs plus a ridge BSP pair on the base fleet:
+    /// ridge converges 2× faster per iteration here.
+    fn combined_with_workload() -> CombinedModel {
+        let mut c = combined_with_async();
+        let (ernest, conv) = fit_pair(1.6, 1.0);
+        c.insert_workload_pair(
+            crate::optim::Objective::Ridge,
+            "",
+            BarrierMode::Bsp,
+            ModeModel { ernest, conv },
+        );
+        c
+    }
+
+    #[test]
+    fn workload_pairs_route_predictions() {
+        use crate::optim::Objective;
+        let c = combined_with_workload();
+        assert_eq!(c.base_workload, Objective::Hinge);
+        assert_eq!(
+            c.fitted_workloads(),
+            vec![Objective::Hinge, Objective::Ridge]
+        );
+        assert_eq!(
+            c.fitted_workload_variants(),
+            vec![
+                (Objective::Hinge, String::new(), BarrierMode::Bsp),
+                (Objective::Hinge, String::new(), BarrierMode::Async),
+                (Objective::Ridge, String::new(), BarrierMode::Bsp),
+            ]
+        );
+        // Base-workload routing equals the (fleet, mode) methods bit
+        // for bit.
+        for &m in &[1usize, 4, 32] {
+            for (fleet, mode) in c.fitted_variants() {
+                assert_eq!(
+                    c.iter_time_w(Objective::Hinge, &fleet, mode, m)
+                        .unwrap()
+                        .to_bits(),
+                    c.iter_time_v(&fleet, mode, m).unwrap().to_bits()
+                );
+                assert_eq!(
+                    c.subopt_at_time_w(Objective::Hinge, &fleet, mode, 7.5, m)
+                        .unwrap()
+                        .to_bits(),
+                    c.subopt_at_time_v(&fleet, mode, 7.5, m).unwrap().to_bits()
+                );
+                assert_eq!(
+                    c.time_to_subopt_w(Objective::Hinge, &fleet, mode, 1e-3, m, 100_000),
+                    c.time_to_subopt_v(&fleet, mode, 1e-3, m, 100_000)
+                );
+            }
+        }
+        // The ridge pair decays 2× faster, so time-to-ε is smaller.
+        let t_hinge = c
+            .time_to_subopt_w(Objective::Hinge, "", BarrierMode::Bsp, 1e-3, 4, 100_000)
+            .unwrap();
+        let t_ridge = c
+            .time_to_subopt_w(Objective::Ridge, "", BarrierMode::Bsp, 1e-3, 4, 100_000)
+            .unwrap();
+        assert!(t_ridge < t_hinge, "{t_ridge} !< {t_hinge}");
+        // Unfitted (workload, fleet, mode) variants answer nothing.
+        assert_eq!(
+            c.iter_time_w(Objective::Ridge, "", BarrierMode::Async, 4),
+            None
+        );
+        assert_eq!(
+            c.iter_time_w(Objective::Logistic, "", BarrierMode::Bsp, 4),
+            None
+        );
+        // Inserting at the base workload routes into the fleet/mode
+        // slots.
+        let mut c2 = c.clone();
+        let (ernest, conv) = fit_pair(0.9, 3.0);
+        let expected = ernest.predict(4, c2.input_size);
+        c2.insert_workload_pair(
+            Objective::Hinge,
+            "",
+            BarrierMode::Bsp,
+            ModeModel { ernest, conv },
+        );
+        assert_eq!(c2.iter_time(4).to_bits(), expected.to_bits());
+        assert_eq!(c2.workload_pairs.len(), c.workload_pairs.len());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_workload_pairs() {
+        use crate::optim::Objective;
+        let c = combined_with_workload();
+        let text = c.to_json().unwrap().to_pretty();
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        let back = CombinedModel::from_json(&doc).unwrap();
+        assert_eq!(back.base_workload, Objective::Hinge);
+        assert_eq!(back.fitted_workload_variants(), c.fitted_workload_variants());
+        for (w, fleet, mode) in c.fitted_workload_variants() {
+            for &m in &[1usize, 4, 32] {
+                assert_eq!(
+                    back.iter_time_w(w, &fleet, mode, m).unwrap().to_bits(),
+                    c.iter_time_w(w, &fleet, mode, m).unwrap().to_bits()
+                );
+                assert_eq!(
+                    back.subopt_at_time_w(w, &fleet, mode, 12.5, m).unwrap().to_bits(),
+                    c.subopt_at_time_w(w, &fleet, mode, 12.5, m).unwrap().to_bits()
+                );
+            }
+        }
+        // A hinge-only artifact stays in the pre-workload layout: no
+        // base_workload / workloads fields on the wire.
+        let legacy = combined_with_async();
+        let text = legacy.to_json().unwrap().to_pretty();
+        assert!(!text.contains("base_workload"));
+        assert!(!text.contains("\"workloads\""));
+        let back = CombinedModel::from_json(
+            &crate::util::json::Json::parse(&text).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.base_workload, Objective::Hinge);
+        assert!(back.workload_pairs.is_empty());
+    }
+
+    #[test]
+    fn artifact_with_unknown_workload_is_rejected() {
+        let c = combined_with_workload();
+        let text = c
+            .to_json()
+            .unwrap()
+            .to_pretty()
+            .replace("\"ridge\"", "\"quantum\"");
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        let err = CombinedModel::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("workload"), "{err}");
+        // Listing the base workload under `workloads` is rejected too.
+        let text = c
+            .to_json()
+            .unwrap()
+            .to_pretty()
+            .replace("\"workload\": \"ridge\"", "\"workload\": \"hinge\"");
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        let err = CombinedModel::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("base workload"), "{err}");
     }
 }

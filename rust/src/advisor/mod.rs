@@ -13,6 +13,7 @@ pub use adaptive::{adaptive_cocoa_plus, AdaptiveConfig, AdaptiveRun, FrameLog};
 pub use combined::{CombinedModel, ModeModel};
 pub use query::{
     Constraints, FleetFilter, ModeFilter, Predicted, PredictionRow, Query, Recommendation,
+    WorkloadFilter,
 };
 pub use registry::{
     artifact_path, load_artifact, save_artifact, LoadReport, ModelKey, ModelRegistry,
@@ -20,4 +21,4 @@ pub use registry::{
 pub use service::{handle_line, serve, ServeStats};
 
 pub use crate::cluster::{BarrierMode, FleetSpec};
-pub use crate::optim::AlgorithmId;
+pub use crate::optim::{AlgorithmId, Objective};

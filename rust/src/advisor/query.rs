@@ -11,7 +11,7 @@
 //! queries flow through the `serve` loop, the CLI and the library API.
 
 use crate::cluster::{BarrierMode, FleetSpec};
-use crate::optim::AlgorithmId;
+use crate::optim::{AlgorithmId, Objective};
 use crate::util::json::Json;
 
 /// Which barrier modes a query's search may range over. The wire
@@ -110,6 +110,57 @@ impl FleetFilter {
     }
 }
 
+/// Which workloads a query's search may range over. The wire default
+/// is `Base` — only the workload each serving model's base pairs were
+/// fitted on (hinge for every pre-workload-axis artifact), which is
+/// exactly the pre-workload search space.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WorkloadFilter {
+    /// Search only each model's base workload.
+    Base,
+    /// Search a single named workload.
+    Only(Objective),
+    /// Search every workload the serving models were fitted for.
+    Any,
+}
+
+impl Default for WorkloadFilter {
+    fn default() -> Self {
+        WorkloadFilter::Base
+    }
+}
+
+impl WorkloadFilter {
+    /// Whether a model variant fitted on `workload` is admitted, given
+    /// the model's own base workload.
+    pub fn admits(self, workload: Objective, base_workload: Objective) -> bool {
+        match self {
+            WorkloadFilter::Base => workload == base_workload,
+            WorkloadFilter::Only(only) => workload == only,
+            WorkloadFilter::Any => true,
+        }
+    }
+
+    /// Wire form: a workload name, `base`, or `any`.
+    pub fn as_str(&self) -> String {
+        match self {
+            WorkloadFilter::Base => "base".to_string(),
+            WorkloadFilter::Only(w) => w.as_str().to_string(),
+            WorkloadFilter::Any => "any".to_string(),
+        }
+    }
+
+    /// Parse the wire form. An unknown workload fails loudly instead
+    /// of matching nothing forever.
+    pub fn parse(s: &str) -> crate::Result<WorkloadFilter> {
+        match s.trim() {
+            "any" => Ok(WorkloadFilter::Any),
+            "base" => Ok(WorkloadFilter::Base),
+            other => Objective::parse(other).map(WorkloadFilter::Only),
+        }
+    }
+}
+
 /// Optional constraints a query carries.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct Constraints {
@@ -128,6 +179,9 @@ pub struct Constraints {
     /// Fleets the search may recommend (default: each model's base
     /// fleet only).
     pub fleet: FleetFilter,
+    /// Workloads the search may recommend (default: each model's base
+    /// workload only).
+    pub workload: WorkloadFilter,
 }
 
 impl Constraints {
@@ -180,11 +234,18 @@ impl Constraints {
                 crate::err!("fleet must be a string (a fleet spec, 'base' or 'any')")
             })?)?,
         };
+        let workload = match doc.get("workload") {
+            None => WorkloadFilter::default(),
+            Some(v) => WorkloadFilter::parse(v.as_str().ok_or_else(|| {
+                crate::err!("workload must be a string (a workload name, 'base' or 'any')")
+            })?)?,
+        };
         let constraints = Constraints {
             max_machines,
             machine_cost_weight,
             barrier_mode,
             fleet,
+            workload,
         };
         constraints.validate()?;
         Ok(constraints)
@@ -216,6 +277,9 @@ impl Constraints {
         }
         if self.fleet != FleetFilter::default() {
             fields.push(("fleet".into(), Json::str(self.fleet.as_str())));
+        }
+        if self.workload != WorkloadFilter::default() {
+            fields.push(("workload".into(), Json::str(self.workload.as_str())));
         }
     }
 }
@@ -404,6 +468,9 @@ pub struct Recommendation {
     /// Empty = the model's (unnamed) base fleet — pre-fleet artifacts
     /// and the pre-fleet wire shape.
     pub fleet: String,
+    /// The workload the winning configuration trains (hinge = the
+    /// pre-workload-axis wire shape).
+    pub workload: Objective,
     /// The raw model prediction for the winning configuration.
     pub predicted: Predicted,
     /// The objective the search actually ranked: equals the raw
@@ -416,8 +483,9 @@ impl Recommendation {
     /// Wire form: the prediction's unit is the field name
     /// (`predicted_seconds` / `predicted_suboptimality` /
     /// `predicted_dollars`). The fleet field is omitted when the
-    /// winner is an unnamed base fleet, keeping pre-fleet responses
-    /// byte-stable.
+    /// winner is an unnamed base fleet, and the workload field when
+    /// the winner is the hinge workload, keeping pre-fleet and
+    /// pre-workload responses byte-stable.
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
             ("algorithm", Json::str(self.algorithm.as_str())),
@@ -426,6 +494,9 @@ impl Recommendation {
         ];
         if !self.fleet.is_empty() {
             fields.push(("fleet", Json::str(self.fleet.clone())));
+        }
+        if !self.workload.is_hinge() {
+            fields.push(("workload", Json::str(self.workload.as_str())));
         }
         fields.push((self.predicted.field_name(), Json::num(self.predicted.value())));
         Json::object(fields)
@@ -441,6 +512,9 @@ pub struct PredictionRow {
     pub barrier_mode: BarrierMode,
     /// Fleet wire name ("" = the model's unnamed base fleet).
     pub fleet: String,
+    /// The workload the row predicts for (hinge = the
+    /// pre-workload-axis wire shape, omitted on the wire).
+    pub workload: Objective,
     /// Predicted seconds to the ε goal (None if unreachable).
     pub time_to_eps: Option<f64>,
     /// Predicted suboptimality at the time budget.
@@ -456,6 +530,9 @@ impl PredictionRow {
         ];
         if !self.fleet.is_empty() {
             fields.push(("fleet", Json::str(self.fleet.clone())));
+        }
+        if !self.workload.is_hinge() {
+            fields.push(("workload", Json::str(self.workload.as_str())));
         }
         fields.push((
             "time_to_eps",
@@ -495,7 +572,16 @@ mod tests {
             fleet: FleetFilter::Only("mixed:r3_xlarge+local48".into()),
             ..Constraints::none()
         });
-        for q in [q1, q2, q3, q4, q5, q6] {
+        let q7 = Query::fastest_to(1e-3).with(Constraints {
+            workload: WorkloadFilter::Only(Objective::Ridge),
+            ..Constraints::none()
+        });
+        let q8 = Query::best_at(8.0).with(Constraints {
+            workload: WorkloadFilter::Any,
+            barrier_mode: ModeFilter::Any,
+            ..Constraints::none()
+        });
+        for q in [q1, q2, q3, q4, q5, q6, q7, q8] {
             let doc = Json::parse(&q.to_json().to_string()).unwrap();
             assert_eq!(Query::from_json(&doc).unwrap(), q);
         }
@@ -512,11 +598,13 @@ mod tests {
             ModeFilter::Only(BarrierMode::Bsp)
         );
         assert_eq!(q.constraints().fleet, FleetFilter::Base);
+        assert_eq!(q.constraints().workload, WorkloadFilter::Base);
         // And the default filters serialize to nothing (byte-stable
         // wire form for legacy queries).
         let wire = q.to_json().to_string();
         assert!(!wire.contains("barrier_mode"));
         assert!(!wire.contains("fleet"));
+        assert!(!wire.contains("workload"));
     }
 
     #[test]
@@ -533,6 +621,8 @@ mod tests {
             r#"{"query": "fastest_to", "eps": 1e-4, "fleet": "quantum"}"#,
             r#"{"query": "fastest_to", "eps": 1e-4, "fleet": 7}"#,
             r#"{"query": "fastest_to", "eps": 1e-4, "fleet": "local48*2"}"#,
+            r#"{"query": "fastest_to", "eps": 1e-4, "workload": "quantum"}"#,
+            r#"{"query": "fastest_to", "eps": 1e-4, "workload": 3}"#,
             r#"{"query": "best_at", "budget": 0}"#,
             r#"{"query": "cheapest_to"}"#,
             r#"{"query": "cheapest_to", "eps": 0}"#,
@@ -614,6 +704,7 @@ mod tests {
             machines: 16,
             barrier_mode: BarrierMode::Ssp { staleness: 2 },
             fleet: String::new(),
+            workload: Objective::Hinge,
             predicted: Predicted::Seconds(12.5),
             objective: 12.5,
         };
@@ -622,8 +713,10 @@ mod tests {
         assert!(doc.get("predicted_suboptimality").is_none());
         assert_eq!(doc.req_str("algorithm").unwrap(), "cocoa+");
         assert_eq!(doc.req_str("barrier_mode").unwrap(), "ssp:2");
-        // Unnamed base fleet: no fleet field (pre-fleet wire shape).
+        // Unnamed base fleet: no fleet field (pre-fleet wire shape),
+        // and the hinge workload stays off the wire too.
         assert!(doc.get("fleet").is_none());
+        assert!(doc.get("workload").is_none());
         // A named fleet (and a dollar prediction) appear explicitly.
         let rec = Recommendation {
             fleet: "mixed:r3_xlarge+local48".into(),
@@ -634,5 +727,28 @@ mod tests {
         let doc = rec.to_json();
         assert_eq!(doc.req_str("fleet").unwrap(), "mixed:r3_xlarge+local48");
         assert_eq!(doc.req_f64("predicted_dollars").unwrap(), 0.5);
+        // A non-hinge workload appears explicitly.
+        let rec = Recommendation {
+            workload: Objective::Ridge,
+            ..rec
+        };
+        assert_eq!(rec.to_json().req_str("workload").unwrap(), "ridge");
+    }
+
+    #[test]
+    fn workload_filter_admission() {
+        let base = WorkloadFilter::Base;
+        assert!(base.admits(Objective::Hinge, Objective::Hinge));
+        assert!(base.admits(Objective::Ridge, Objective::Ridge));
+        assert!(!base.admits(Objective::Ridge, Objective::Hinge));
+        let only = WorkloadFilter::parse("logistic").unwrap();
+        assert_eq!(only, WorkloadFilter::Only(Objective::Logistic));
+        assert!(only.admits(Objective::Logistic, Objective::Hinge));
+        assert!(!only.admits(Objective::Hinge, Objective::Hinge));
+        assert!(WorkloadFilter::Any.admits(Objective::Ridge, Objective::Hinge));
+        assert_eq!(WorkloadFilter::parse("any").unwrap(), WorkloadFilter::Any);
+        assert_eq!(WorkloadFilter::parse("base").unwrap(), WorkloadFilter::Base);
+        // Typos fail at parse time, not by matching nothing forever.
+        assert!(WorkloadFilter::parse("rigde").is_err());
     }
 }

@@ -113,18 +113,19 @@ impl ModelRegistry {
     }
 
     /// Answer a typed query over every model × machine-grid point ×
-    /// admitted (barrier mode, fleet) variant. A model only competes
-    /// in the variants it was fitted for; the default
-    /// `Only(Bsp)`/`Base` filters reproduce the pre-barrier-axis,
-    /// pre-fleet search exactly.
+    /// admitted (workload, barrier mode, fleet) variant. A model only
+    /// competes in the variants it was fitted for; the default
+    /// `Base`/`Only(Bsp)`/`Base` filters reproduce the
+    /// pre-workload-axis, pre-barrier-axis, pre-fleet search exactly.
     pub fn answer(&self, query: &Query) -> Option<Recommendation> {
         match query {
             Query::FastestTo { eps, constraints } => {
                 let mut best: Option<Recommendation> = None;
                 for (key, model) in &self.models {
-                    for (fleet, mode) in model.fitted_variants() {
+                    for (workload, fleet, mode) in model.fitted_workload_variants() {
                         if !constraints.barrier_mode.admits(mode)
                             || !constraints.fleet.admits(&fleet, &model.base_fleet)
+                            || !constraints.workload.admits(workload, model.base_workload)
                         {
                             continue;
                         }
@@ -132,8 +133,8 @@ impl ModelRegistry {
                             if !constraints.admits(m) {
                                 continue;
                             }
-                            if let Some(t) =
-                                model.time_to_subopt_v(&fleet, mode, *eps, m, self.iter_cap)
+                            if let Some(t) = model
+                                .time_to_subopt_w(workload, &fleet, mode, *eps, m, self.iter_cap)
                             {
                                 let objective = constraints.weighted_seconds(t, m);
                                 if best
@@ -146,6 +147,7 @@ impl ModelRegistry {
                                         machines: m,
                                         barrier_mode: mode,
                                         fleet: fleet.clone(),
+                                        workload,
                                         predicted: Predicted::Seconds(t),
                                         objective,
                                     });
@@ -159,9 +161,10 @@ impl ModelRegistry {
             Query::BestAt { budget, constraints } => {
                 let mut best: Option<Recommendation> = None;
                 for (key, model) in &self.models {
-                    for (fleet, mode) in model.fitted_variants() {
+                    for (workload, fleet, mode) in model.fitted_workload_variants() {
                         if !constraints.barrier_mode.admits(mode)
                             || !constraints.fleet.admits(&fleet, &model.base_fleet)
+                            || !constraints.workload.admits(workload, model.base_workload)
                         {
                             continue;
                         }
@@ -169,7 +172,8 @@ impl ModelRegistry {
                             if !constraints.admits(m) {
                                 continue;
                             }
-                            let s = match model.subopt_at_time_v(
+                            let s = match model.subopt_at_time_w(
+                                workload,
                                 &fleet,
                                 mode,
                                 constraints.effective_budget(*budget, m),
@@ -186,6 +190,7 @@ impl ModelRegistry {
                                     machines: m,
                                     barrier_mode: mode,
                                     fleet: fleet.clone(),
+                                    workload,
                                     predicted: Predicted::Suboptimality(s),
                                     objective: s,
                                 });
@@ -198,9 +203,10 @@ impl ModelRegistry {
             Query::CheapestTo { eps, constraints } => {
                 let mut best: Option<Recommendation> = None;
                 for (key, model) in &self.models {
-                    for (fleet, mode) in model.fitted_variants() {
+                    for (workload, fleet, mode) in model.fitted_workload_variants() {
                         if !constraints.barrier_mode.admits(mode)
                             || !constraints.fleet.admits(&fleet, &model.base_fleet)
+                            || !constraints.workload.admits(workload, model.base_workload)
                         {
                             continue;
                         }
@@ -213,8 +219,8 @@ impl ModelRegistry {
                             if !constraints.admits(m) {
                                 continue;
                             }
-                            if let Some(t) =
-                                model.time_to_subopt_v(&fleet, mode, *eps, m, self.iter_cap)
+                            if let Some(t) = model
+                                .time_to_subopt_w(workload, &fleet, mode, *eps, m, self.iter_cap)
                             {
                                 let dollars = spec.dollars(t, m);
                                 if best
@@ -234,6 +240,7 @@ impl ModelRegistry {
                                         } else {
                                             fleet.clone()
                                         },
+                                        workload,
                                         predicted: Predicted::Dollars(dollars),
                                         objective: dollars,
                                     });
@@ -248,15 +255,16 @@ impl ModelRegistry {
     }
 
     /// Full prediction table (one typed row per algorithm × admitted
-    /// m × admitted fitted (mode, fleet) variant). Inadmissible
-    /// machine counts are skipped before the (expensive) g-inversion,
-    /// not filtered afterwards.
+    /// m × admitted fitted (workload, mode, fleet) variant).
+    /// Inadmissible machine counts are skipped before the (expensive)
+    /// g-inversion, not filtered afterwards.
     pub fn table(&self, eps: f64, budget: f64, constraints: &Constraints) -> Vec<PredictionRow> {
         let mut rows = Vec::new();
         for (key, model) in &self.models {
-            for (fleet, mode) in model.fitted_variants() {
+            for (workload, fleet, mode) in model.fitted_workload_variants() {
                 if !constraints.barrier_mode.admits(mode)
                     || !constraints.fleet.admits(&fleet, &model.base_fleet)
+                    || !constraints.workload.admits(workload, model.base_workload)
                 {
                     continue;
                 }
@@ -269,9 +277,11 @@ impl ModelRegistry {
                         machines: m,
                         barrier_mode: mode,
                         fleet: fleet.clone(),
-                        time_to_eps: model.time_to_subopt_v(&fleet, mode, eps, m, self.iter_cap),
+                        workload,
+                        time_to_eps: model
+                            .time_to_subopt_w(workload, &fleet, mode, eps, m, self.iter_cap),
                         subopt_at_budget: model
-                            .subopt_at_time_v(&fleet, mode, budget, m)
+                            .subopt_at_time_w(workload, &fleet, mode, budget, m)
                             .unwrap_or(f64::NAN),
                     });
                 }
@@ -704,6 +714,102 @@ mod tests {
         let rec = priced.answer(&Query::cheapest_to(1e-3)).unwrap();
         assert_eq!(rec.fleet, "local48");
         assert!(rec.predicted.dollars().unwrap() > 0.0);
+    }
+
+    /// Registry whose cocoa model also carries a ridge BSP pair with
+    /// 3× faster decay — ridge strictly dominates when admitted.
+    fn registry_with_workloads() -> ModelRegistry {
+        use crate::advisor::combined::ModeModel;
+        use crate::optim::Objective;
+        let mut r = registry();
+        let mut cocoa = r.get(AlgorithmId::Cocoa, "ctx").unwrap().clone();
+        let fast = model(3.6);
+        cocoa.insert_workload_pair(
+            Objective::Ridge,
+            "",
+            crate::cluster::BarrierMode::Bsp,
+            ModeModel { ernest: fast.ernest.clone(), conv: fast.conv.clone() },
+        );
+        r.insert(
+            ModelKey { algorithm: AlgorithmId::Cocoa, context: "ctx".into() },
+            cocoa,
+        );
+        r
+    }
+
+    #[test]
+    fn workload_search_defaults_to_base_and_expands_on_request() {
+        use crate::advisor::query::WorkloadFilter;
+        use crate::optim::Objective;
+        let r = registry_with_workloads();
+        // Default: base-workload-only search, as before the axis.
+        let base = r.answer(&Query::fastest_to(1e-3)).unwrap();
+        assert_eq!(base.workload, Objective::Hinge);
+        // Any-workload search includes every base candidate: it can
+        // only tie or win — and the ridge pair decays strictly faster,
+        // so the winner must actually be ridge.
+        let any = r
+            .answer(&Query::fastest_to(1e-3).with(Constraints {
+                workload: WorkloadFilter::Any,
+                ..Constraints::none()
+            }))
+            .unwrap();
+        assert!(any.objective <= base.objective);
+        assert_eq!(any.workload, Objective::Ridge);
+        assert_eq!(any.algorithm, AlgorithmId::Cocoa);
+        // Pinning a workload answers from its own pair.
+        let pinned = r
+            .answer(&Query::fastest_to(1e-3).with(Constraints {
+                workload: WorkloadFilter::Only(Objective::Ridge),
+                ..Constraints::none()
+            }))
+            .unwrap();
+        assert_eq!(pinned.workload, Objective::Ridge);
+        assert_eq!(pinned.algorithm, AlgorithmId::Cocoa);
+        // A workload nobody fitted answers nothing.
+        assert!(r
+            .answer(&Query::fastest_to(1e-3).with(Constraints {
+                workload: WorkloadFilter::Only(Objective::Logistic),
+                ..Constraints::none()
+            }))
+            .is_none());
+        // The table gains ridge rows only when admitted.
+        let rows = r.table(1e-3, 5.0, &Constraints::none());
+        assert_eq!(rows.len(), 2 * 5);
+        assert!(rows.iter().all(|row| row.workload == Objective::Hinge));
+        let all = r.table(
+            1e-3,
+            5.0,
+            &Constraints {
+                workload: WorkloadFilter::Any,
+                ..Constraints::none()
+            },
+        );
+        assert_eq!(all.len(), 3 * 5);
+        assert!(all.iter().any(|row| row.workload == Objective::Ridge));
+    }
+
+    #[test]
+    fn artifact_with_unknown_workload_is_skipped_not_served() {
+        let dir = std::env::temp_dir().join("hemingway_registry_badworkload");
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = registry_with_workloads();
+        r.save(&dir, "detail").unwrap();
+        // A future (or corrupted) artifact naming a workload this
+        // build does not know must be skipped with a clear report —
+        // never silently served without (or with the wrong) workload.
+        let path = artifact_path(&dir, AlgorithmId::Cocoa);
+        let text = std::fs::read_to_string(&path)
+            .unwrap()
+            .replace("\"ridge\"", "\"quantum\"");
+        std::fs::write(&path, text).unwrap();
+        let (back, report) =
+            ModelRegistry::load_dir(&dir, Some("ctx"), vec![1, 2, 4], 1000).unwrap();
+        assert_eq!(back.len(), 1, "only cocoa_plus should survive");
+        assert!(back.get(AlgorithmId::Cocoa, "ctx").is_none());
+        assert_eq!(report.invalid.len(), 1);
+        assert!(report.invalid[0].1.contains("workload"), "{}", report.invalid[0].1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

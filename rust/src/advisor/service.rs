@@ -131,6 +131,15 @@ pub fn handle_line(registry: &ModelRegistry, line: &str) -> Json {
                                     .map(Json::str),
                             ),
                         ),
+                        (
+                            "workloads",
+                            Json::array(
+                                model
+                                    .fitted_workloads()
+                                    .iter()
+                                    .map(|w| Json::str(w.as_str())),
+                            ),
+                        ),
                     ])
                 })
                 .collect();
@@ -350,6 +359,75 @@ mod tests {
         let unpriced = golden_registry();
         let resp = handle_line(&unpriced, r#"{"query":"cheapest_to","eps":0.02}"#);
         assert!(!resp.get("ok").and_then(Json::as_bool).unwrap());
+    }
+
+    /// The golden registry plus a ridge pair on the same model:
+    /// identical g, but f(m) = 0.25 (2× faster iterations) — exact
+    /// arithmetic, so workload-filtered responses are golden strings.
+    fn golden_registry_with_ridge() -> ModelRegistry {
+        use crate::advisor::combined::ModeModel;
+        use crate::cluster::BarrierMode;
+        use crate::optim::Objective;
+        let mut registry = golden_registry();
+        let mut model = registry
+            .get(AlgorithmId::CocoaPlus, "golden")
+            .unwrap()
+            .clone();
+        model.insert_workload_pair(
+            Objective::Ridge,
+            "",
+            BarrierMode::Bsp,
+            ModeModel {
+                ernest: ErnestModel {
+                    theta: [0.25, 0.0, 0.0, 0.0],
+                    train_rmse: 0.0,
+                },
+                conv: model.conv.clone(),
+            },
+        );
+        registry.insert(
+            ModelKey {
+                algorithm: AlgorithmId::CocoaPlus,
+                context: "golden".into(),
+            },
+            model,
+        );
+        registry
+    }
+
+    #[test]
+    fn golden_workload_query_responses() {
+        let registry = golden_registry_with_ridge();
+        // A legacy query (no workload field) must keep the pure-hinge
+        // golden answer even though a ridge pair exists — byte-stable.
+        let resp = handle_line(&registry, r#"{"query":"fastest_to","eps":0.02}"#);
+        assert_eq!(
+            resp.to_string(),
+            r#"{"ok":true,"query":"fastest_to","algorithm":"cocoa+","machines":1,"barrier_mode":"bsp","predicted_seconds":2}"#
+        );
+        // workload "any": the ridge pair halves iteration time — 4
+        // iterations at m=1 now cost exactly 1 second, and the
+        // response names the winning workload.
+        let resp =
+            handle_line(&registry, r#"{"query":"fastest_to","eps":0.02,"workload":"any"}"#);
+        assert_eq!(
+            resp.to_string(),
+            r#"{"ok":true,"query":"fastest_to","algorithm":"cocoa+","machines":1,"barrier_mode":"bsp","workload":"ridge","predicted_seconds":1}"#
+        );
+        // Pinning the fitted workload gives the same winner; pinning
+        // an unfitted one is a clean miss, not a fallback.
+        let resp =
+            handle_line(&registry, r#"{"query":"fastest_to","eps":0.02,"workload":"ridge"}"#);
+        assert!(resp.to_string().contains("\"workload\":\"ridge\""));
+        let resp = handle_line(
+            &registry,
+            r#"{"query":"fastest_to","eps":0.02,"workload":"logistic"}"#,
+        );
+        assert!(!resp.get("ok").and_then(Json::as_bool).unwrap());
+        // The models listing names every fitted workload.
+        let resp = handle_line(&registry, r#"{"query":"models"}"#);
+        let text = resp.to_string();
+        assert!(text.contains(r#""workloads":["hinge","ridge"]"#), "{text}");
     }
 
     #[test]

@@ -279,12 +279,11 @@ mod tests {
         // Monotone decrease from m=1 to m=8.
         assert!(means[0] > means[1] && means[1] > means[2] && means[2] > means[3]);
         // The minimum is somewhere in 16–64 and not at the extremes.
-        let min_idx = means
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
+        // NaN-filtering total-order selection: a NaN mean (e.g. from a
+        // degenerate profile edit) must fail the range assert below,
+        // not panic inside an unwrap'd partial_cmp — the same latent
+        // panic class as the stats::percentile bug fixed in PR 4.
+        let min_idx = stats::argmin(&means).expect("at least one finite mean");
         assert!(
             (3..=6).contains(&min_idx),
             "minimum at index {min_idx}: {means:?}"

@@ -5,6 +5,7 @@ use std::path::Path;
 
 use crate::cluster::{BarrierMode, FleetSpec, HardwareProfile};
 use crate::data::synth::SynthConfig;
+use crate::optim::Objective;
 use crate::util::json::{read_json_file, Json};
 
 /// One experiment: dataset, problem, sweep, cluster, stopping rules.
@@ -48,6 +49,11 @@ pub struct ExperimentConfig {
     /// uniform fleet of `profile` under the pre-fleet cache-key shape
     /// (`fleet == ""` in cell keys).
     pub fleets: Vec<String>,
+    /// Workloads the sweep/fit/advise/repro targets cover. The first
+    /// entry is the *base* workload the historical single-workload
+    /// paths run on; the wire default is `["hinge"]` — the
+    /// pre-workload-axis behavior.
+    pub workloads: Vec<Objective>,
 }
 
 impl Default for ExperimentConfig {
@@ -69,6 +75,7 @@ impl Default for ExperimentConfig {
             bootstrap_machines: 16,
             barrier_modes: vec![BarrierMode::Bsp],
             fleets: Vec::new(),
+            workloads: vec![Objective::Hinge],
         }
     }
 }
@@ -136,6 +143,29 @@ impl ExperimentConfig {
                 })
                 .collect::<crate::Result<Vec<_>>>()?,
         };
+        // Like barrier_modes and fleets: a present but malformed
+        // `workloads` entry is an error — a config asking for an
+        // objective this build does not know must not quietly train
+        // hinge instead.
+        let workloads = match doc.get("workloads") {
+            None => dft.workloads.clone(),
+            Some(v) => {
+                let parsed = v
+                    .as_array()
+                    .ok_or_else(|| {
+                        crate::err!("workloads must be an array of objective strings")
+                    })?
+                    .iter()
+                    .map(|v| {
+                        v.as_str()
+                            .ok_or_else(|| crate::err!("workloads entries must be strings"))
+                            .and_then(Objective::parse)
+                    })
+                    .collect::<crate::Result<Vec<_>>>()?;
+                crate::ensure!(!parsed.is_empty(), "workloads lists no objectives");
+                parsed
+            }
+        };
         Ok(ExperimentConfig {
             n: doc.opt_usize("n", dft.n),
             d: doc.opt_usize("d", dft.d),
@@ -153,7 +183,14 @@ impl ExperimentConfig {
             bootstrap_machines: doc.opt_usize("bootstrap_machines", dft.bootstrap_machines),
             barrier_modes,
             fleets,
+            workloads,
         })
+    }
+
+    /// The base workload: the first `workloads` entry (hinge for
+    /// configs that never mention the axis).
+    pub fn base_workload(&self) -> Objective {
+        self.workloads.first().copied().unwrap_or(Objective::Hinge)
     }
 
     /// The parsed fleet list this config sweeps/fits over: the
@@ -210,6 +247,10 @@ impl ExperimentConfig {
                 "fleets",
                 Json::array(self.fleets.iter().map(|f| Json::str(f.clone()))),
             ),
+            (
+                "workloads",
+                Json::array(self.workloads.iter().map(|w| Json::str(w.as_str()))),
+            ),
         ])
     }
 
@@ -236,14 +277,16 @@ impl ExperimentConfig {
     /// string; a mismatch at load time marks the artifact stale.
     pub fn model_context(&self, native: bool) -> String {
         let modes: Vec<String> = self.barrier_modes.iter().map(|m| m.as_str()).collect();
+        let workloads: Vec<&str> = self.workloads.iter().map(|w| w.as_str()).collect();
         format!(
-            "{}|machines={:?};max_iters={};target={:e};modes=[{}];fleets=[{}]",
+            "{}|machines={:?};max_iters={};target={:e};modes=[{}];fleets=[{}];workloads=[{}]",
             self.context_key(native),
             self.machines,
             self.max_iters,
             self.target_subopt,
             modes.join(","),
-            self.fleets.join(",")
+            self.fleets.join(","),
+            workloads.join(",")
         )
     }
 
@@ -339,6 +382,39 @@ mod tests {
         let mut e = a.clone();
         e.fleets.push("straggly48".into());
         assert_ne!(a.model_context_hash(true), e.model_context_hash(true));
+        // And the workload axis — workload-blind artifacts go stale
+        // once a config starts naming objectives.
+        let mut f = a.clone();
+        f.workloads.push(Objective::Ridge);
+        assert_ne!(a.model_context_hash(true), f.model_context_hash(true));
+    }
+
+    #[test]
+    fn workloads_default_roundtrip_and_reject_unknown() {
+        // Omitted → the hinge-only pre-workload-axis behavior.
+        let c = ExperimentConfig::from_json(&Json::parse(r#"{"n": 64}"#).unwrap()).unwrap();
+        assert_eq!(c.workloads, vec![Objective::Hinge]);
+        assert_eq!(c.base_workload(), Objective::Hinge);
+        // Named workloads parse and keep wire order (first = base).
+        let doc = Json::parse(r#"{"workloads": ["ridge", "hinge", "logistic"]}"#).unwrap();
+        let c = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(
+            c.workloads,
+            vec![Objective::Ridge, Objective::Hinge, Objective::Logistic]
+        );
+        assert_eq!(c.base_workload(), Objective::Ridge);
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.workloads, c.workloads);
+        // Unknown objectives, wrong shapes and empty lists are errors,
+        // never a silent hinge run.
+        let doc = Json::parse(r#"{"workloads": ["hinge", "quantum"]}"#).unwrap();
+        let err = ExperimentConfig::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("workload"), "{err}");
+        let doc = Json::parse(r#"{"workloads": "ridge"}"#).unwrap();
+        let err = ExperimentConfig::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("array"), "{err}");
+        let doc = Json::parse(r#"{"workloads": []}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
     }
 
     #[test]

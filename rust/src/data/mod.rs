@@ -11,4 +11,6 @@ pub mod dataset;
 pub mod synth;
 
 pub use dataset::{Dataset, Partition};
-pub use synth::{mnist_like, two_gaussians, SynthConfig};
+pub use synth::{
+    dataset_for, logistic_like, mnist_like, regression_like, two_gaussians, SynthConfig,
+};

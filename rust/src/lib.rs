@@ -27,10 +27,14 @@
 //! machine types, persistent slow nodes, per-machine dollar rates),
 //! with staleness fed back into the SGD-family updates.
 //!
-//! Sweeps over (algorithm × machines × barrier mode × fleet × seed)
-//! grids — the workload the whole paper is built on — go through the
-//! [`sweep`] subsystem, which fans cells out across a thread pool and
-//! caches finished traces in memory and on disk.
+//! The optimization problem itself is an axis
+//! ([`optim::Objective`]: the paper's hinge SVM next to logistic
+//! regression and ridge regression, each with its own loss/gradient,
+//! SDCA dual step and certified reference optimum), and sweeps over
+//! (algorithm × machines × barrier mode × fleet × workload × seed)
+//! grids go through the [`sweep`] subsystem, which fans cells out
+//! across a thread pool and caches finished traces in memory and on
+//! disk.
 //!
 //! See [`DESIGN.md`](../../DESIGN.md) (repo root) for the full system
 //! inventory and per-figure experiment index, and

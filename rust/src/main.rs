@@ -14,8 +14,10 @@
 
 use hemingway::advisor::{
     adaptive_cocoa_plus, AdaptiveConfig, AlgorithmId, Constraints, FleetFilter, ModeFilter, Query,
+    WorkloadFilter,
 };
 use hemingway::cluster::{BarrierMode, BspSim, FleetSpec};
+use hemingway::optim::Objective;
 use hemingway::config::ExperimentConfig;
 use hemingway::repro::common::{load_or_fit_registry, update_summary_file};
 use hemingway::repro::{run_figures, ReproContext, FIGURES};
@@ -48,15 +50,17 @@ fn print_help() {
          commands:\n\
          \x20 run              --algo cocoa+ --machines 16 [--config f.json] [--native]\n\
          \x20 sweep            --algo cocoa+ [--seeds N] [--threads K] [--barrier MODE]\n\
-         \x20                  [--staleness-grid 0,2,8] [--fleets F,..] [--native]\n\
+         \x20                  [--staleness-grid 0,2,8] [--fleets F,..]\n\
+         \x20                  [--workloads hinge,logistic,ridge] [--native]\n\
          \x20 fit-system       --algo cocoa+ [--native]\n\
          \x20 fit-convergence  --algo cocoa+ [--native]\n\
          \x20 fit              [--algos cocoa+,cocoa] [--barriers bsp,ssp:4,async]\n\
-         \x20                  [--fleets local48,straggly48] [--native]\n\
+         \x20                  [--fleets local48,straggly48] [--workloads W,..] [--native]\n\
          \x20 advise           --eps 1e-4 --budget 20 [--max-machines M] [--cost-weight W]\n\
-         \x20                  [--barrier MODE|any] [--fleet SPEC|base|any] [--native]\n\
-         \x20 serve            [--algos ...] [--barriers ...] [--fleets ...] [--native]\n\
-         \x20                  JSON queries on stdin\n\
+         \x20                  [--barrier MODE|any] [--fleet SPEC|base|any]\n\
+         \x20                  [--workload hinge|logistic|ridge|base|any] [--native]\n\
+         \x20 serve            [--algos ...] [--barriers ...] [--fleets ...]\n\
+         \x20                  [--workloads ...] [--native]  JSON queries on stdin\n\
          \x20 adaptive         [--frames 8] [--frame-seconds 5] [--native]\n\
          \x20 repro            --figure <id>|all [--native]\n\
          \x20 info\n\n\
@@ -70,12 +74,15 @@ fn print_help() {
          \x20 --fleets <F,..>   fleets to sweep/fit/serve: a profile (local48), a shaped\n\
          \x20                  fleet (local48*0.25:slow=3x), a mix (mixed:r3_xlarge+local48)\n\
          \x20                  or a preset (mixed48, straggly48); first entry = base fleet\n\
+         \x20 --workloads <W,..> objectives to sweep/fit/serve (hinge, logistic, ridge);\n\
+         \x20                  first entry = base workload (default: hinge)\n\
          \x20 --verbose         debug logging (or HEMINGWAY_LOG=debug)\n\n\
          `fit` writes <out_dir>/models/*.json; `advise` and `serve` load them\n\
          (fit-on-miss) and detect stale artifacts via the config hash.\n\
-         Queries default to barrier mode 'bsp' on the base fleet; pass\n\
-         --barrier any / --fleet any (or wire \"barrier_mode\"/\"fleet\" fields)\n\
-         to search over every fitted variant. The serve loop also answers\n\
+         Queries default to barrier mode 'bsp' on the base fleet and base\n\
+         workload; pass --barrier any / --fleet any / --workload any (or wire\n\
+         \"barrier_mode\"/\"fleet\"/\"workload\" fields) to search over every\n\
+         fitted variant. The serve loop also answers\n\
          {{\"query\":\"cheapest_to\",\"eps\":…}} in real fleet dollars.",
         FIGURES.join(", ")
     );
@@ -110,6 +117,13 @@ fn load_cfg(args: &Args) -> hemingway::Result<ExperimentConfig> {
             })
             .collect::<hemingway::Result<_>>()?;
         hemingway::ensure!(!cfg.fleets.is_empty(), "--fleets lists no fleets");
+    }
+    if let Some(ws) = args.get("workloads") {
+        cfg.workloads = ws
+            .split(',')
+            .map(Objective::parse)
+            .collect::<hemingway::Result<_>>()?;
+        hemingway::ensure!(!cfg.workloads.is_empty(), "--workloads lists no objectives");
     }
     Ok(cfg)
 }
@@ -179,6 +193,7 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                 machines: ctx.cfg.machines.clone(),
                 modes,
                 fleets: ctx.cfg.fleets.clone(),
+                workloads: ctx.cfg.workloads.clone(),
                 seeds,
                 base_seed: ctx.cfg.seed,
                 run: ctx.run_config(),
@@ -210,6 +225,7 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                 "machines",
                 "barrier",
                 "fleet",
+                "workload",
                 "replicates",
                 "reached",
                 "iters_mean",
@@ -233,6 +249,7 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                     a.machines as f64,
                     a.barrier_mode.csv_id(),
                     fleet_idx as f64,
+                    a.workload.csv_id(),
                     a.replicates as f64,
                     a.reached as f64,
                     a.iters_to_target.mean,
@@ -245,10 +262,11 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                     a.mean_iter_time.std,
                 ]);
                 println!(
-                    "  m={:<4} {:<7} {:<12} reached {}/{}  iters-to-{:.0e} {}  iter-time {}s",
+                    "  m={:<4} {:<7} {:<12} {:<8} reached {}/{}  iters-to-{:.0e} {}  iter-time {}s",
                     a.machines,
                     a.barrier_mode.as_str(),
                     if a.fleet.is_empty() { "-" } else { a.fleet.as_str() },
+                    a.workload.as_str(),
                     a.reached,
                     a.replicates,
                     ctx.cfg.target_subopt,
@@ -330,6 +348,7 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                 machine_cost_weight: args.f64_or("cost-weight", 0.0)?,
                 barrier_mode: ModeFilter::parse(args.str_or("barrier", "bsp"))?,
                 fleet: FleetFilter::parse(args.str_or("fleet", "base"))?,
+                workload: WorkloadFilter::parse(args.str_or("workload", "base"))?,
             };
             constraints.validate()?;
             let algos = parse_algos(args, &cfg)?;
@@ -341,24 +360,33 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                     format!(" fleet={fleet}")
                 }
             };
+            let workload_tag = |workload: Objective| {
+                if workload.is_hinge() {
+                    String::new()
+                } else {
+                    format!(" workload={workload}")
+                }
+            };
             match registry.answer(&Query::FastestTo { eps, constraints: constraints.clone() }) {
                 Some(rec) => println!(
-                    "fastest to {eps:.0e}:   {} m={} [{}]{} → {:.2} predicted seconds",
+                    "fastest to {eps:.0e}:   {} m={} [{}]{}{} → {:.2} predicted seconds",
                     rec.algorithm,
                     rec.machines,
                     rec.barrier_mode,
                     fleet_tag(&rec.fleet),
+                    workload_tag(rec.workload),
                     rec.predicted.value()
                 ),
                 None => println!("fastest to {eps:.0e}:   no configuration reaches the target"),
             }
             match registry.answer(&Query::BestAt { budget, constraints: constraints.clone() }) {
                 Some(rec) => println!(
-                    "best loss in {budget}s: {} m={} [{}]{} → {:.2e} predicted suboptimality",
+                    "best loss in {budget}s: {} m={} [{}]{}{} → {:.2e} predicted suboptimality",
                     rec.algorithm,
                     rec.machines,
                     rec.barrier_mode,
                     fleet_tag(&rec.fleet),
+                    workload_tag(rec.workload),
                     rec.predicted.value()
                 ),
                 None => println!("best loss in {budget}s: no feasible configuration"),
@@ -370,24 +398,26 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                     .answer(&Query::CheapestTo { eps, constraints: constraints.clone() })
                 {
                     Some(rec) => println!(
-                        "cheapest to {eps:.0e}:  {} m={} [{}]{} → ${:.4} predicted",
+                        "cheapest to {eps:.0e}:  {} m={} [{}]{}{} → ${:.4} predicted",
                         rec.algorithm,
                         rec.machines,
                         rec.barrier_mode,
                         fleet_tag(&rec.fleet),
+                        workload_tag(rec.workload),
                         rec.predicted.value()
                     ),
                     None => println!("cheapest to {eps:.0e}:  no priceable configuration"),
                 }
             }
-            println!("\nprediction table (algorithm × m × mode × fleet):");
+            println!("\nprediction table (algorithm × m × mode × fleet × workload):");
             for row in registry.table(eps, budget, &constraints) {
                 println!(
-                    "  {:<13} m={:<4} {:<7}{:<14} time-to-ε {:<10} subopt@{budget}s {:.3e}",
+                    "  {:<13} m={:<4} {:<7}{:<14}{:<10} time-to-ε {:<10} subopt@{budget}s {:.3e}",
                     row.algorithm,
                     row.machines,
                     row.barrier_mode.as_str(),
                     fleet_tag(&row.fleet),
+                    workload_tag(row.workload),
                     row.time_to_eps
                         .map(|t| format!("{t:.2}s"))
                         .unwrap_or_else(|| "-".into()),

@@ -7,14 +7,21 @@
 //! over [`Backend`], and the test suite asserts both backends produce
 //! numerically matching traces (same LCG coordinate streams).
 
+use super::objective::Objective;
 use crate::data::Partition;
 use crate::runtime::{CocoaLocalOut, Engine, GradOut};
 
-/// Per-partition compute operations shared by every algorithm.
+/// Per-partition compute operations shared by every algorithm. Every
+/// method names the [`Objective`] it computes for — the workload axis
+/// reaches the kernel boundary, where the native backend dispatches
+/// per objective and the HLO backend (whose AOT artifacts are compiled
+/// for the hinge case study) rejects anything else instead of silently
+/// computing the wrong loss.
 pub trait Backend {
     /// One local SDCA epoch (CoCoA / CoCoA+ inner solver).
     fn cocoa_local(
         &self,
+        objective: Objective,
         part: &Partition,
         alpha: &[f32],
         w: &[f32],
@@ -23,12 +30,20 @@ pub trait Backend {
         seed: u32,
     ) -> crate::Result<CocoaLocalOut>;
 
-    /// Weighted hinge statistics (GD / mini-batch SGD / objective).
-    fn grad(&self, part: &Partition, weights: &[f32], w: &[f32]) -> crate::Result<GradOut>;
+    /// Weighted loss statistics (GD / mini-batch SGD / objective).
+    fn grad(
+        &self,
+        objective: Objective,
+        part: &Partition,
+        weights: &[f32],
+        w: &[f32],
+    ) -> crate::Result<GradOut>;
 
-    /// One local Pegasos epoch (Splash-style local SGD).
+    /// One local SGD epoch (Splash-style local SGD; Pegasos for the
+    /// hinge workload).
     fn local_sgd(
         &self,
+        objective: Objective,
         part: &Partition,
         w: &[f32],
         lambda: f32,
@@ -58,9 +73,21 @@ impl<'e> HloBackend<'e> {
     }
 }
 
+/// The AOT artifacts are compiled for the hinge case study; any other
+/// workload must fail loudly here, never silently run hinge math.
+fn ensure_hinge(objective: Objective, kernel: &str) -> crate::Result<()> {
+    crate::ensure!(
+        objective.is_hinge(),
+        "the HLO backend's {kernel} artifact is compiled for the hinge workload; \
+         '{objective}' requires the native backend (--native)"
+    );
+    Ok(())
+}
+
 impl Backend for HloBackend<'_> {
     fn cocoa_local(
         &self,
+        objective: Objective,
         part: &Partition,
         alpha: &[f32],
         w: &[f32],
@@ -68,22 +95,32 @@ impl Backend for HloBackend<'_> {
         sigma_prime: f32,
         seed: u32,
     ) -> crate::Result<CocoaLocalOut> {
+        ensure_hinge(objective, "cocoa_local")?;
         self.engine
             .cocoa_local_part(part, alpha, w, lambda_n, sigma_prime, seed)
     }
 
-    fn grad(&self, part: &Partition, weights: &[f32], w: &[f32]) -> crate::Result<GradOut> {
+    fn grad(
+        &self,
+        objective: Objective,
+        part: &Partition,
+        weights: &[f32],
+        w: &[f32],
+    ) -> crate::Result<GradOut> {
+        ensure_hinge(objective, "grad")?;
         self.engine.grad_part(part, weights, w)
     }
 
     fn local_sgd(
         &self,
+        objective: Objective,
         part: &Partition,
         w: &[f32],
         lambda: f32,
         t0: f32,
         seed: u32,
     ) -> crate::Result<Vec<f32>> {
+        ensure_hinge(objective, "local_sgd")?;
         self.engine.local_sgd_part(part, w, lambda, t0, seed)
     }
 

@@ -14,6 +14,7 @@
 //! the phenomenon Hemingway's g(i, m) captures.
 
 use super::backend::Backend;
+use super::objective::Objective;
 use super::problem::Problem;
 use super::{Algorithm, IterationCost};
 use crate::data::Partition;
@@ -34,6 +35,7 @@ pub struct Cocoa {
     alpha: Vec<Vec<f32>>,
     w: Vec<f32>,
     lambda_n: f64,
+    objective: Objective,
     variant: CocoaVariant,
     seed: u32,
     machines: usize,
@@ -48,6 +50,7 @@ impl Cocoa {
             w: vec![0.0f32; problem.data.d],
             d: problem.data.d,
             lambda_n: problem.lambda_n(),
+            objective: problem.objective,
             alpha,
             parts,
             variant,
@@ -130,6 +133,7 @@ impl Algorithm for Cocoa {
         for (k, part) in self.parts.iter().enumerate() {
             let seed = Lcg32::for_epoch(self.seed, iter as u32, k as u32).state;
             let out = backend.cocoa_local(
+                self.objective,
                 part,
                 &self.alpha[k],
                 &self.w,
@@ -164,14 +168,18 @@ impl Algorithm for Cocoa {
         &self.w
     }
 
+    /// Σ_i dual_contrib(a_i, y_i) — the objective's dual contribution
+    /// sum, fed to [`Problem::dual`]. The hinge contribution is the
+    /// identity, so the hinge sum is the historical Σ a_i bit for bit
+    /// (same block order, same f64 accumulation).
     fn dual_sum(&self) -> Option<f64> {
-        Some(
-            self.alpha
-                .iter()
-                .flat_map(|a| a.iter())
-                .map(|&v| v as f64)
-                .sum(),
-        )
+        let mut s = 0.0f64;
+        for (part, block) in self.parts.iter().zip(&self.alpha) {
+            for (&a, &y) in block.iter().zip(&part.y) {
+                s += self.objective.dual_contrib(a as f64, y as f64);
+            }
+        }
+        Some(s)
     }
 }
 
@@ -266,6 +274,39 @@ mod tests {
         run_n(&mut algo, 10);
         for block in algo.alpha() {
             assert!(block.iter().all(|&a| (0.0..=1.0).contains(&a)));
+        }
+    }
+
+    #[test]
+    fn converges_on_every_workload_with_valid_gaps() {
+        use crate::data::synth::{dataset_for, SynthConfig};
+        let cfg = SynthConfig {
+            n: 256,
+            d: 12,
+            ..Default::default()
+        };
+        let backend = NativeBackend;
+        for obj in Objective::ALL {
+            let p = Problem::with_objective(dataset_for(obj, &cfg), 1e-2, obj);
+            let (p_star, _, _) = p.reference_solve(1e-6, 400);
+            let mut algo = Cocoa::new(&p, 4, CocoaVariant::Adding, 3);
+            let start = p.primal(algo.weights()) - p_star;
+            for i in 0..25 {
+                algo.step(&backend, i).unwrap();
+                let primal = p.primal(algo.weights());
+                let dual = p.dual(algo.dual_sum().unwrap(), algo.weights());
+                assert!(
+                    primal - dual > -1e-6,
+                    "{obj}: weak duality violated at iter {i}: gap {}",
+                    primal - dual
+                );
+            }
+            let end = p.primal(algo.weights()) - p_star;
+            assert!(
+                end < start * 0.5,
+                "{obj}: no convergence ({start:.3e} → {end:.3e})"
+            );
+            assert!(end >= -1e-9, "{obj}: suboptimality went negative: {end}");
         }
     }
 

@@ -75,6 +75,7 @@ pub fn run(
 ) -> crate::Result<Trace> {
     let mut trace = Trace::new(algo.name(), algo.machines(), p_star);
     trace.barrier_mode = timer.mode();
+    trace.workload = problem.objective;
     let mut sim_time = 0.0f64;
 
     let initial_primal = problem.primal(algo.weights());

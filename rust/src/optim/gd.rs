@@ -6,6 +6,7 @@
 //! decomposition h(t, m) = g(t/f(m), m).
 
 use super::backend::Backend;
+use super::objective::Objective;
 use super::problem::Problem;
 use super::{Algorithm, IterationCost};
 use crate::data::Partition;
@@ -14,6 +15,7 @@ pub struct GradientDescent {
     parts: Vec<Partition>,
     w: Vec<f32>,
     lambda: f64,
+    objective: Objective,
     n: usize,
     d: usize,
     machines: usize,
@@ -27,6 +29,7 @@ impl GradientDescent {
             parts: problem.data.partition(machines),
             w: vec![0.0f32; problem.data.d],
             lambda: problem.lambda,
+            objective: problem.objective,
             n: problem.data.n,
             d: problem.data.d,
             machines,
@@ -48,19 +51,22 @@ impl Algorithm for GradientDescent {
         let mut grad = vec![0.0f64; self.d];
         for part in &self.parts {
             // Full gradient: weights = the validity mask.
-            let out = backend.grad(part, &part.mask, &self.w)?;
+            let out = backend.grad(self.objective, part, &part.mask, &self.w)?;
             for (g, &v) in grad.iter_mut().zip(&out.grad_sum) {
                 *g += v as f64;
             }
         }
         let t = iter as f64 + 1.0 + self.t_shift;
-        let eta = 1.0 / (self.lambda * t);
+        let mut eta = 1.0 / (self.lambda * t);
+        if let Some(cap) = self.objective.max_stable_step(self.lambda) {
+            eta = eta.min(cap);
+        }
         let inv_n = 1.0 / self.n as f64;
         for (wv, g) in self.w.iter_mut().zip(&grad) {
             let full = self.lambda * *wv as f64 + g * inv_n;
             *wv -= (eta * full) as f32;
         }
-        super::sgd::pegasos_project(&mut self.w, self.lambda);
+        super::sgd::project_for(&mut self.w, self.lambda, self.objective);
         let n_loc = self.parts[0].n_loc as f64;
         Ok(IterationCost {
             machines: self.machines,
@@ -111,6 +117,29 @@ mod tests {
                 assert!(obj < prev + 1e-3, "iter {i}: {obj} !<= {prev}");
             }
             prev = obj;
+        }
+    }
+
+    #[test]
+    fn descends_on_every_workload() {
+        use crate::data::synth::{dataset_for, SynthConfig};
+        use crate::optim::Objective;
+        let cfg = SynthConfig {
+            n: 160,
+            d: 8,
+            ..Default::default()
+        };
+        let backend = NativeBackend;
+        for obj in Objective::ALL {
+            let p = Problem::with_objective(dataset_for(obj, &cfg), 1e-2, obj);
+            let mut gd = GradientDescent::new(&p, 2);
+            let start = p.primal(gd.weights());
+            for i in 0..60 {
+                gd.step(&backend, i).unwrap();
+            }
+            let end = p.primal(gd.weights());
+            assert!(end < start, "{obj}: GD did not descend ({start} → {end})");
+            assert!(end.is_finite(), "{obj}: diverged");
         }
     }
 }

@@ -13,6 +13,7 @@
 //! synchronous update bit for bit.
 
 use super::backend::Backend;
+use super::objective::Objective;
 use super::problem::Problem;
 use super::stale::StaleWeights;
 use super::{Algorithm, IterationCost};
@@ -23,6 +24,7 @@ pub struct LocalSgd {
     parts: Vec<Partition>,
     w: Vec<f32>,
     lambda: f64,
+    objective: Objective,
     /// Cumulative local step count (continues the η schedule).
     t0: f64,
     seed: u32,
@@ -39,6 +41,7 @@ impl LocalSgd {
             parts: problem.data.partition(machines),
             w: vec![0.0f32; problem.data.d],
             lambda: problem.lambda,
+            objective: problem.objective,
             // Skip the huge first Pegasos steps (η = 1/(λt)).
             t0: 32.0,
             seed,
@@ -71,6 +74,7 @@ impl Algorithm for LocalSgd {
         for (k, part) in self.parts.iter().enumerate() {
             let seed = Lcg32::for_epoch(self.seed, iter as u32, k as u32).state;
             let wk = backend.local_sgd(
+                self.objective,
                 part,
                 base,
                 self.lambda as f32,

@@ -9,6 +9,7 @@ pub mod driver;
 pub mod gd;
 pub mod local_sgd;
 pub mod native;
+pub mod objective;
 pub mod problem;
 pub mod sgd;
 pub mod stale;
@@ -20,6 +21,7 @@ pub use driver::{run, RunConfig};
 pub use gd::GradientDescent;
 pub use local_sgd::LocalSgd;
 pub use native::NativeBackend;
+pub use objective::Objective;
 pub use problem::Problem;
 pub use sgd::MiniBatchSgd;
 pub use trace::{Record, Trace, TraceSet};

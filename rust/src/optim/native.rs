@@ -6,6 +6,7 @@
 //! production configuration always uses [`super::backend::HloBackend`].
 
 use super::backend::Backend;
+use super::objective::Objective;
 use crate::data::Partition;
 use crate::runtime::{CocoaLocalOut, GradOut};
 use crate::util::rng::Lcg32;
@@ -17,6 +18,7 @@ pub struct NativeBackend;
 impl Backend for NativeBackend {
     fn cocoa_local(
         &self,
+        objective: Objective,
         part: &Partition,
         alpha: &[f32],
         w: &[f32],
@@ -24,42 +26,84 @@ impl Backend for NativeBackend {
         sigma_prime: f32,
         seed: u32,
     ) -> crate::Result<CocoaLocalOut> {
-        let (alpha, delta_w) = sdca_epoch(
-            &part.x,
-            &part.y,
-            &part.mask,
-            alpha,
-            w,
-            lambda_n as f64,
-            sigma_prime as f64,
-            seed,
-            self.h_steps(part.n_loc),
-        );
+        // The hinge workload dispatches to the historical kernel
+        // verbatim — bit-identical to the pre-workload-axis path.
+        let (alpha, delta_w) = if objective.is_hinge() {
+            sdca_epoch(
+                &part.x,
+                &part.y,
+                &part.mask,
+                alpha,
+                w,
+                lambda_n as f64,
+                sigma_prime as f64,
+                seed,
+                self.h_steps(part.n_loc),
+            )
+        } else {
+            sdca_epoch_obj(
+                objective,
+                &part.x,
+                &part.y,
+                &part.mask,
+                alpha,
+                w,
+                lambda_n as f64,
+                sigma_prime as f64,
+                seed,
+                self.h_steps(part.n_loc),
+            )
+        };
         Ok(CocoaLocalOut { alpha, delta_w })
     }
 
-    fn grad(&self, part: &Partition, weights: &[f32], w: &[f32]) -> crate::Result<GradOut> {
-        Ok(hinge_stats(&part.x, &part.y, weights, w))
+    fn grad(
+        &self,
+        objective: Objective,
+        part: &Partition,
+        weights: &[f32],
+        w: &[f32],
+    ) -> crate::Result<GradOut> {
+        Ok(if objective.is_hinge() {
+            hinge_stats(&part.x, &part.y, weights, w)
+        } else {
+            loss_stats(objective, &part.x, &part.y, weights, w)
+        })
     }
 
     fn local_sgd(
         &self,
+        objective: Objective,
         part: &Partition,
         w: &[f32],
         lambda: f32,
         t0: f32,
         seed: u32,
     ) -> crate::Result<Vec<f32>> {
-        Ok(pegasos_epoch(
-            &part.x,
-            &part.y,
-            &part.mask,
-            w,
-            lambda as f64,
-            t0 as f64,
-            seed,
-            self.h_steps(part.n_loc),
-        ))
+        Ok(if objective.is_hinge() {
+            pegasos_epoch(
+                &part.x,
+                &part.y,
+                &part.mask,
+                w,
+                lambda as f64,
+                t0 as f64,
+                seed,
+                self.h_steps(part.n_loc),
+            )
+        } else {
+            sgd_epoch_obj(
+                objective,
+                &part.x,
+                &part.y,
+                &part.mask,
+                w,
+                lambda as f64,
+                t0 as f64,
+                seed,
+                self.h_steps(part.n_loc),
+            )
+        })
     }
 
     fn name(&self) -> &'static str {
@@ -184,6 +228,147 @@ pub fn pegasos_epoch(
     w.iter().map(|&v| v as f32).collect()
 }
 
+/// One local SDCA epoch for a non-hinge [`Objective`] — the same LCG
+/// coordinate stream, masking and σ′ discipline as [`sdca_epoch`], with
+/// the coordinate update supplied by [`Objective::dual_step`] (closed
+/// form for ridge, bounded bisection for logistic). The hinge workload
+/// never routes here (it dispatches to the historical kernel), but for
+/// reference, `sdca_epoch_obj(Hinge, …)` computes the same update rule.
+#[allow(clippy::too_many_arguments)]
+pub fn sdca_epoch_obj(
+    objective: Objective,
+    x: &[f32],
+    y: &[f32],
+    mask: &[f32],
+    alpha: &[f32],
+    w: &[f32],
+    lambda_n: f64,
+    sigma_prime: f64,
+    seed: u32,
+    h_steps: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let d = w.len();
+    let n_loc = y.len();
+    debug_assert_eq!(x.len(), n_loc * d);
+    let mut a: Vec<f64> = alpha.iter().map(|&v| v as f64).collect();
+    let mut dw = vec![0.0f64; d];
+    let mut lcg = Lcg32 { state: seed };
+    for _ in 0..h_steps {
+        let j = lcg.next_index(n_loc as u32) as usize;
+        let xj = &x[j * d..(j + 1) * d];
+        let qj: f64 = xj.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let dot: f64 = xj
+            .iter()
+            .zip(w.iter().zip(&dw))
+            .map(|(&xi, (&wi, &dwi))| xi as f64 * (wi as f64 + sigma_prime * dwi))
+            .sum();
+        let denom = (sigma_prime * qj).max(1e-12);
+        let yj = y[j] as f64;
+        let a_new = if qj > 0.0 {
+            objective.dual_step(a[j], yj, dot, denom, lambda_n)
+        } else {
+            a[j]
+        };
+        let delta = (a_new - a[j]) * mask[j] as f64;
+        a[j] += delta;
+        if delta != 0.0 {
+            let scale = delta * objective.coef_scale(yj) / lambda_n;
+            for (dwi, &xi) in dw.iter_mut().zip(xj) {
+                *dwi += scale * xi as f64;
+            }
+        }
+    }
+    (
+        a.iter().map(|&v| v as f32).collect(),
+        dw.iter().map(|&v| v as f32).collect(),
+    )
+}
+
+/// Weighted loss statistics for a non-hinge [`Objective`] — the
+/// generic analog of [`hinge_stats`]: per-row `dloss` gradients, the
+/// weighted loss sum, and the weighted "correct" count (sign agreement
+/// for classifiers, the ±0.5 tolerance band for ridge).
+pub fn loss_stats(
+    objective: Objective,
+    x: &[f32],
+    y: &[f32],
+    weights: &[f32],
+    w: &[f32],
+) -> GradOut {
+    let d = w.len();
+    let n_loc = y.len();
+    debug_assert_eq!(x.len(), n_loc * d);
+    let mut grad = vec![0.0f64; d];
+    let mut loss = 0.0f64;
+    let mut correct = 0.0f64;
+    for i in 0..n_loc {
+        let wt = weights[i] as f64;
+        if wt == 0.0 {
+            continue;
+        }
+        let xi = &x[i * d..(i + 1) * d];
+        let score: f64 = xi.iter().zip(w).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let yi = y[i] as f64;
+        loss += wt * objective.loss(score, yi);
+        let g = objective.dloss(score, yi);
+        if g != 0.0 {
+            let c = wt * g;
+            for (gv, &xv) in grad.iter_mut().zip(xi) {
+                *gv += c * xv as f64;
+            }
+        }
+        if objective.is_hit(score, yi) {
+            correct += wt;
+        }
+    }
+    GradOut {
+        grad_sum: grad.iter().map(|&v| v as f32).collect(),
+        hinge_sum: loss as f32,
+        correct_sum: correct as f32,
+    }
+}
+
+/// One local SGD epoch for a non-hinge [`Objective`] — the generic
+/// analog of [`pegasos_epoch`]: the same LCG stream and masking, the
+/// λ-strongly-convex schedule η = 1/(λ(t₀+t+1)), and the step
+/// `w ← (1 − ηλ·mask)·w − η·mask·dloss·x`.
+#[allow(clippy::too_many_arguments)]
+pub fn sgd_epoch_obj(
+    objective: Objective,
+    x: &[f32],
+    y: &[f32],
+    mask: &[f32],
+    w0: &[f32],
+    lambda: f64,
+    t0: f64,
+    seed: u32,
+    h_steps: usize,
+) -> Vec<f32> {
+    let d = w0.len();
+    let n_loc = y.len();
+    debug_assert_eq!(x.len(), n_loc * d);
+    let mut w: Vec<f64> = w0.iter().map(|&v| v as f64).collect();
+    let mut lcg = Lcg32 { state: seed };
+    let step_cap = objective.max_stable_step(lambda);
+    for t in 0..h_steps {
+        let j = lcg.next_index(n_loc as u32) as usize;
+        let xj = &x[j * d..(j + 1) * d];
+        let mut eta = 1.0 / (lambda * (t0 + t as f64 + 1.0));
+        if let Some(cap) = step_cap {
+            eta = eta.min(cap);
+        }
+        let dot: f64 = xj.iter().zip(&w).map(|(&xv, wv)| xv as f64 * wv).sum();
+        let g = objective.dloss(dot, y[j] as f64);
+        let mj = mask[j] as f64;
+        let shrink = 1.0 - eta * lambda * mj;
+        let gain = -eta * g * mj;
+        for (wv, &xv) in w.iter_mut().zip(xj) {
+            *wv = shrink * *wv + gain * xv as f64;
+        }
+    }
+    w.iter().map(|&v| v as f32).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -263,5 +448,100 @@ mod tests {
         let w0 = vec![0.3f32, -0.2, 0.1, 0.0];
         let w1 = pegasos_epoch(&p.x, &p.y, &mask, &w0, 0.01, 0.0, 9, 32);
         assert_eq!(w0, w1);
+    }
+
+    #[test]
+    fn generic_sdca_epoch_on_hinge_matches_dedicated_kernel() {
+        // The hinge workload dispatches to `sdca_epoch`, but the
+        // generic kernel instantiated at Hinge must agree bit for bit
+        // on in-box duals — pinning that the two formulations are one
+        // update rule, not two drifting ones.
+        let ds = two_gaussians(48, 6, 1.5, 8);
+        let parts = ds.partition(1);
+        let p = &parts[0];
+        let alpha = vec![0.25f32; 48];
+        let w = vec![0.05f32; 6];
+        for &sigma in &[1.0f64, 4.0] {
+            let (a1, dw1) =
+                sdca_epoch(&p.x, &p.y, &p.mask, &alpha, &w, 0.48, sigma, 77, 96);
+            let (a2, dw2) = sdca_epoch_obj(
+                Objective::Hinge,
+                &p.x,
+                &p.y,
+                &p.mask,
+                &alpha,
+                &w,
+                0.48,
+                sigma,
+                77,
+                96,
+            );
+            assert_eq!(a1, a2);
+            assert_eq!(dw1, dw2);
+        }
+    }
+
+    #[test]
+    fn generic_kernels_respect_masks_and_domains() {
+        use crate::data::synth::{dataset_for, SynthConfig};
+        let cfg = SynthConfig {
+            n: 40,
+            d: 6,
+            ..Default::default()
+        };
+        for obj in [Objective::Logistic, Objective::Ridge] {
+            let ds = dataset_for(obj, &cfg);
+            let parts = ds.partition(1);
+            let p = &parts[0];
+            // Fully masked epochs change nothing.
+            let mask0 = vec![0.0f32; p.n_loc];
+            let alpha = vec![0.0f32; p.n_loc];
+            let w0 = vec![0.2f32; 6];
+            let (a, dw) =
+                sdca_epoch_obj(obj, &p.x, &p.y, &mask0, &alpha, &w0, 0.4, 1.0, 5, 80);
+            assert_eq!(a, alpha, "{obj}: masked sdca moved alpha");
+            assert!(dw.iter().all(|&v| v == 0.0), "{obj}: masked sdca moved w");
+            let w1 = sgd_epoch_obj(obj, &p.x, &p.y, &mask0, &w0, 0.01, 0.0, 5, 80);
+            assert_eq!(w0, w1, "{obj}: masked sgd moved w");
+            // Unmasked epochs keep the logistic dual in (0, 1).
+            let (a, _) =
+                sdca_epoch_obj(obj, &p.x, &p.y, &p.mask, &alpha, &w0, 0.4, 1.0, 5, 120);
+            if obj == Objective::Logistic {
+                assert!(a.iter().all(|&v| (0.0..=1.0).contains(&v)), "{obj}");
+            }
+            assert!(a.iter().all(|v| v.is_finite()), "{obj}: non-finite dual");
+        }
+    }
+
+    #[test]
+    fn loss_stats_gradient_matches_finite_differences() {
+        use crate::data::synth::{dataset_for, SynthConfig};
+        let cfg = SynthConfig {
+            n: 24,
+            d: 4,
+            ..Default::default()
+        };
+        for obj in [Objective::Logistic, Objective::Ridge] {
+            let ds = dataset_for(obj, &cfg);
+            let parts = ds.partition(1);
+            let p = &parts[0];
+            let w = vec![0.1f32, -0.2, 0.05, 0.3];
+            let out = loss_stats(obj, &p.x, &p.y, &p.mask, &w);
+            let h = 1e-3f32;
+            for j in 0..4 {
+                let mut wp = w.clone();
+                wp[j] += h;
+                let mut wm = w.clone();
+                wm[j] -= h;
+                let lp = loss_stats(obj, &p.x, &p.y, &p.mask, &wp).hinge_sum;
+                let lm = loss_stats(obj, &p.x, &p.y, &p.mask, &wm).hinge_sum;
+                let num = (lp - lm) as f64 / (2.0 * h as f64);
+                let ana = out.grad_sum[j] as f64;
+                assert!(
+                    (num - ana).abs() < 1e-2,
+                    "{obj} coord {j}: analytic {ana} vs numeric {num}"
+                );
+            }
+        }
     }
 }

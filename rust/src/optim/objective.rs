@@ -1,0 +1,454 @@
+//! The optimization objective — the *workload* axis of the stack.
+//!
+//! Hemingway's core claim is that the right algorithm and cluster size
+//! depend on the problem, yet the original reproduction hardcoded the
+//! paper's single L2-regularized hinge-SVM case study. This module
+//! makes the objective a first-class, strictly-parsed enum (the same
+//! wire discipline as [`crate::cluster::BarrierMode`]): every
+//! algorithm, sweep cell, trace, model artifact and advisor query now
+//! names the workload it runs.
+//!
+//! All three objectives share one primal/dual frame (SDCA,
+//! Shalev-Shwartz & Zhang):
+//!
+//! ```text
+//! P(w) = (λ/2)‖w‖² + (1/n) Σ_i loss(x_iᵀw, y_i)
+//! D(α) = (1/n) Σ_i dual_contrib(α_i, y_i) − (λ/2)‖w(α)‖²
+//! w(α) = (1/λn) Σ_i α_i · coef_scale(y_i) · x_i
+//! ```
+//!
+//! so weak duality holds for every workload and the final dual value of
+//! [`crate::optim::Problem::reference_solve`] is a certified lower
+//! bound on P* — suboptimality traces are nonnegative by construction
+//! (property-tested in `tests/workload_props.rs`).
+//!
+//! The hinge arm of every method reproduces the pre-redesign
+//! arithmetic expression for expression, and the hinge kernels
+//! themselves ([`crate::optim::native`]) are dispatched to verbatim,
+//! so the hinge workload is bitwise identical to the historical path.
+
+/// The objective a problem optimizes. Wire names: `hinge`, `logistic`,
+/// `ridge`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Objective {
+    /// L2-regularized hinge-loss SVM — the paper's case study.
+    Hinge,
+    /// L2-regularized logistic regression (binary labels, smooth loss).
+    Logistic,
+    /// Ridge regression (least squares, real-valued targets).
+    Ridge,
+}
+
+impl Objective {
+    /// Every objective, in canonical order (hinge first: the
+    /// historical default).
+    pub const ALL: [Objective; 3] = [Objective::Hinge, Objective::Logistic, Objective::Ridge];
+
+    /// Canonical wire form.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Objective::Hinge => "hinge",
+            Objective::Logistic => "logistic",
+            Objective::Ridge => "ridge",
+        }
+    }
+
+    /// Parse the wire form back. Unknown strings are an error with the
+    /// accepted grammar spelled out — a config, cache file or model
+    /// artifact naming a workload this build does not know must never
+    /// be silently served as a different one.
+    pub fn parse(s: &str) -> crate::Result<Objective> {
+        match s.trim() {
+            "hinge" => Ok(Objective::Hinge),
+            "logistic" => Ok(Objective::Logistic),
+            "ridge" => Ok(Objective::Ridge),
+            other => crate::bail!(
+                "unknown workload '{other}' (expected hinge, logistic or ridge)"
+            ),
+        }
+    }
+
+    /// The one numeric encoding every CSV column uses:
+    /// hinge → 0, logistic → 1, ridge → 2.
+    pub fn csv_id(self) -> f64 {
+        match self {
+            Objective::Hinge => 0.0,
+            Objective::Logistic => 1.0,
+            Objective::Ridge => 2.0,
+        }
+    }
+
+    /// Inverse of [`Self::csv_id`] (pre-workload-axis tables carry no
+    /// column and default to 0 → hinge).
+    pub fn from_csv_id(id: f64) -> Objective {
+        if id == 1.0 {
+            Objective::Logistic
+        } else if id == 2.0 {
+            Objective::Ridge
+        } else {
+            Objective::Hinge
+        }
+    }
+
+    pub fn is_hinge(self) -> bool {
+        matches!(self, Objective::Hinge)
+    }
+
+    /// Whether the targets are ±1 class labels (hinge, logistic) or
+    /// real-valued regression targets (ridge).
+    pub fn is_classification(self) -> bool {
+        !matches!(self, Objective::Ridge)
+    }
+
+    /// Whether a prediction counts as "correct" for accuracy-style
+    /// reporting: sign agreement for the classification workloads, a
+    /// ±0.5 tolerance band for ridge — one rule shared by
+    /// `Problem::accuracy` and the gradient kernels' `correct_sum`.
+    pub fn is_hit(self, score: f64, y: f64) -> bool {
+        if self.is_classification() {
+            score * y > 0.0
+        } else {
+            (score - y).abs() < 0.5
+        }
+    }
+
+    /// Per-example loss as a function of the score `x_iᵀw` and the
+    /// target. The hinge arm is the historical expression verbatim.
+    pub fn loss(self, score: f64, y: f64) -> f64 {
+        match self {
+            Objective::Hinge => (1.0 - y * score).max(0.0),
+            Objective::Logistic => {
+                // Numerically stable log(1 + e^{−y·s}).
+                let z = y * score;
+                if z > 0.0 {
+                    (-z).exp().ln_1p()
+                } else {
+                    z.exp().ln_1p() - z
+                }
+            }
+            Objective::Ridge => {
+                let r = score - y;
+                0.5 * r * r
+            }
+        }
+    }
+
+    /// Derivative of [`Self::loss`] with respect to the score. The
+    /// hinge arm matches the historical gradient kernel's active-set
+    /// rule (`margin > 0` strictly).
+    pub fn dloss(self, score: f64, y: f64) -> f64 {
+        match self {
+            Objective::Hinge => {
+                if 1.0 - y * score > 0.0 {
+                    -y
+                } else {
+                    0.0
+                }
+            }
+            Objective::Logistic => -y / (1.0 + (y * score).exp()),
+            Objective::Ridge => score - y,
+        }
+    }
+
+    /// How a dual coordinate scales into the primal image:
+    /// `w(α) = (1/λn) Σ α_i · coef_scale(y_i) · x_i`. Classification
+    /// objectives carry their label (α·y), ridge uses the raw dual.
+    pub fn coef_scale(self, y: f64) -> f64 {
+        match self {
+            Objective::Hinge | Objective::Logistic => y,
+            Objective::Ridge => 1.0,
+        }
+    }
+
+    /// Per-coordinate dual objective term (see the module docs). The
+    /// hinge arm is the identity, matching the historical
+    /// `D(α) = (1/n)Σα_i − (λ/2)‖w‖²`.
+    pub fn dual_contrib(self, alpha: f64, y: f64) -> f64 {
+        match self {
+            Objective::Hinge => alpha,
+            Objective::Logistic => {
+                // Entropy −α ln α − (1−α) ln(1−α), with the 0·ln 0 = 0
+                // limits so untouched (padded) coordinates contribute 0.
+                let mut e = 0.0;
+                if alpha > 0.0 {
+                    e -= alpha * alpha.ln();
+                }
+                if alpha < 1.0 {
+                    e -= (1.0 - alpha) * (1.0 - alpha).ln();
+                }
+                e
+            }
+            Objective::Ridge => alpha * y - 0.5 * alpha * alpha,
+        }
+    }
+
+    /// The exact single-coordinate dual ascent step the SDCA-family
+    /// solvers take: given the current dual `alpha`, the target, the
+    /// score `dot = x_jᵀ w_eff` at the solver's effective iterate, the
+    /// effective quadratic scale `denom` (σ′‖x_j‖² in the CoCoA local
+    /// subproblem, ‖x_j‖² in the reference solve — computed by the
+    /// caller so the hinge path keeps its historical arithmetic), and
+    /// `λn`, return the maximizing new dual value.
+    ///
+    /// * hinge — closed form, clamped to `[0, 1]` (the historical
+    ///   update expression verbatim);
+    /// * ridge — closed form on the unconstrained dual;
+    /// * logistic — no closed form: the stationarity condition
+    ///   `ln((1−α)/α) = y·dot + (α − α₀)·denom/λn` is solved by
+    ///   bounded bisection (the left side is strictly decreasing, the
+    ///   right side increasing, so the root is unique in (0, 1)).
+    pub fn dual_step(self, alpha: f64, y: f64, dot: f64, denom: f64, lambda_n: f64) -> f64 {
+        match self {
+            Objective::Hinge => {
+                let margin = 1.0 - y * dot;
+                (alpha + lambda_n * margin / denom).clamp(0.0, 1.0)
+            }
+            Objective::Ridge => alpha + (y - alpha - dot) / (1.0 + denom / lambda_n),
+            Objective::Logistic => {
+                let g = |a: f64| ((1.0 - a) / a).ln() - y * dot - (a - alpha) * denom / lambda_n;
+                let (mut lo, mut hi) = (1e-12, 1.0 - 1e-12);
+                if g(lo) <= 0.0 {
+                    return lo;
+                }
+                if g(hi) >= 0.0 {
+                    return hi;
+                }
+                // 60 halvings take the bracket below 1e-18 — more than
+                // f64 resolution on (0, 1).
+                for _ in 0..60 {
+                    let mid = 0.5 * (lo + hi);
+                    if g(mid) > 0.0 {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                0.5 * (lo + hi)
+            }
+        }
+    }
+
+    /// Smoothness constant of the loss in the score (None for the
+    /// non-smooth hinge) — the 1/L that smooth-loss step-size rules
+    /// use.
+    pub fn smoothness(self) -> Option<f64> {
+        match self {
+            Objective::Hinge => None,
+            Objective::Logistic => Some(0.25),
+            Objective::Ridge => Some(1.0),
+        }
+    }
+
+    /// Lipschitz constant of the loss in the score (None for ridge,
+    /// whose gradient is unbounded).
+    pub fn lipschitz(self) -> Option<f64> {
+        match self {
+            Objective::Hinge | Objective::Logistic => Some(1.0),
+            Objective::Ridge => None,
+        }
+    }
+
+    /// Radius of the ball the optimum provably lies in, for the
+    /// Pegasos-style projection the first-order methods use. The hinge
+    /// arm is the historical `1/√λ` (Shalev-Shwartz et al.); logistic
+    /// follows from `(λ/2)‖w*‖² ≤ P(w*) ≤ P(0) = ln 2`; ridge targets
+    /// are unbounded, so no projection.
+    pub fn projection_radius(self, lambda: f64) -> Option<f64> {
+        match self {
+            Objective::Hinge => Some(1.0 / lambda.sqrt()),
+            Objective::Logistic => Some((2.0 * std::f64::consts::LN_2 / lambda).sqrt()),
+            Objective::Ridge => None,
+        }
+    }
+
+    /// The dual-ascent per-step budget is identical across objectives;
+    /// what differs is the strong-convexity/smoothness trade the
+    /// advisor's models rediscover from traces. Exposed for step-size
+    /// rules: the λ-strongly-convex schedule η_t = 1/(λt) is valid for
+    /// every objective here (all are λ-strongly convex in w).
+    pub fn strongly_convex(self) -> bool {
+        true
+    }
+
+    /// Largest per-step GD/SGD learning rate that keeps the update
+    /// contractive, for smooth losses with *unbounded* gradient:
+    /// `η ≤ 1/(λ + L·‖x‖²)` with `‖x‖² = 1` (every generator
+    /// row-normalizes). The 1/(λt) schedule's enormous early steps are
+    /// capped here — without it, ridge at small λ diverges before the
+    /// schedule decays into the stable region. Bounded-gradient losses
+    /// (hinge, logistic) need no cap: their iterates stay bounded
+    /// Pegasos-style, and returning None keeps the historical hinge
+    /// arithmetic untouched bit for bit.
+    pub fn max_stable_step(self, lambda: f64) -> Option<f64> {
+        match self {
+            Objective::Ridge => Some(1.0 / (lambda + 1.0)),
+            Objective::Hinge | Objective::Logistic => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_roundtrip_and_rejection() {
+        for obj in Objective::ALL {
+            assert_eq!(Objective::parse(obj.as_str()).unwrap(), obj);
+            assert_eq!(Objective::from_csv_id(obj.csv_id()), obj);
+        }
+        assert_eq!(Objective::parse(" ridge ").unwrap(), Objective::Ridge);
+        for bad in ["svm", "HINGE", "l2", "", "hinge2"] {
+            let err = Objective::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("workload"), "{err}");
+        }
+        // Legacy tables (no workload column → 0.0) read as hinge.
+        assert_eq!(Objective::from_csv_id(0.0), Objective::Hinge);
+    }
+
+    #[test]
+    fn hinge_loss_matches_historical_expression() {
+        for &(s, y) in &[(0.3f64, 1.0f64), (-2.0, 1.0), (0.99, -1.0), (5.0, -1.0)] {
+            let expect = (1.0 - y * s).max(0.0);
+            assert_eq!(Objective::Hinge.loss(s, y).to_bits(), expect.to_bits());
+        }
+    }
+
+    #[test]
+    fn losses_are_nonnegative_and_consistent_with_gradients() {
+        let h = 1e-6;
+        for obj in Objective::ALL {
+            for &y in &[-1.0f64, 1.0] {
+                for i in -20..=20 {
+                    let s = i as f64 * 0.3;
+                    let l = obj.loss(s, y);
+                    assert!(l >= 0.0, "{obj} loss({s}, {y}) = {l}");
+                    // Finite-difference check away from the hinge kink.
+                    if obj.is_hinge() && (1.0 - y * s).abs() < 1e-3 {
+                        continue;
+                    }
+                    let num = (obj.loss(s + h, y) - obj.loss(s - h, y)) / (2.0 * h);
+                    let ana = obj.dloss(s, y);
+                    assert!(
+                        (num - ana).abs() < 1e-5,
+                        "{obj} dloss({s}, {y}): {ana} vs numeric {num}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn logistic_loss_is_stable_at_extreme_scores() {
+        let l = Objective::Logistic.loss(1e4, -1.0);
+        assert!(l.is_finite() && (l - 1e4).abs() < 1e-6, "{l}");
+        let l = Objective::Logistic.loss(1e4, 1.0);
+        assert!(l >= 0.0 && l < 1e-300, "{l}");
+    }
+
+    #[test]
+    fn dual_contrib_vanishes_at_zero() {
+        // Padded partition rows keep α = 0 forever; they must add
+        // nothing to the dual in any workload.
+        for obj in Objective::ALL {
+            assert_eq!(obj.dual_contrib(0.0, 0.0), 0.0);
+            assert_eq!(obj.dual_contrib(0.0, 1.0), 0.0);
+        }
+        // Logistic entropy endpoints are exact limits, not NaN.
+        assert_eq!(Objective::Logistic.dual_contrib(1.0, 1.0), 0.0);
+        assert!(Objective::Logistic.dual_contrib(0.5, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn hinge_dual_step_is_the_historical_update() {
+        let (a, y, dot, q, ln) = (0.25f64, 1.0f64, 0.4f64, 0.9f64, 1.28f64);
+        let margin = 1.0 - y * dot;
+        let expect = (a + ln * margin / q).clamp(0.0, 1.0);
+        assert_eq!(
+            Objective::Hinge.dual_step(a, y, dot, q, ln).to_bits(),
+            expect.to_bits()
+        );
+    }
+
+    /// The dual step must actually maximize the per-coordinate dual.
+    /// Changing coordinate j from α₀ to α moves the (n-scaled) dual by
+    /// `contrib(α) − contrib(α₀) − Δ·c·dot − Δ²·c²·q/(2λn)` with
+    /// `Δ = α − α₀` and `c = coef_scale(y)` (expand ‖w + Δcx/λn‖²).
+    /// The step's answer must beat every candidate on a grid.
+    #[test]
+    fn dual_steps_ascend_the_coordinate_dual() {
+        for obj in Objective::ALL {
+            let (lambda_n, q) = (1.6f64, 0.8f64);
+            let targets: &[f64] = if obj.is_classification() {
+                &[-1.0, 1.0]
+            } else {
+                &[-0.7, 0.0, 1.3]
+            };
+            for &y in targets {
+                let c = obj.coef_scale(y);
+                for &a0 in &[0.0f64, 0.2, 0.7] {
+                    for &dot in &[-0.5f64, 0.0, 0.8] {
+                        let dual_of = |a: f64| {
+                            let d = a - a0;
+                            obj.dual_contrib(a, y) - d * c * dot
+                                - 0.5 * d * d * c * c * q / lambda_n
+                        };
+                        let a_new = obj.dual_step(a0, y, dot, q, lambda_n);
+                        let best = dual_of(a_new);
+                        for i in 0..=60 {
+                            let cand = match obj {
+                                Objective::Ridge => -3.0 + i as f64 * 0.1,
+                                _ => i as f64 / 60.0,
+                            };
+                            assert!(
+                                dual_of(cand) <= best + 1e-6,
+                                "{obj} y={y} a0={a0} dot={dot}: α={cand} \
+                                 ({}) beats step {a_new} ({best})",
+                                dual_of(cand)
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn logistic_dual_step_solves_stationarity() {
+        let (a0, y, dot, q, ln) = (0.3f64, -1.0f64, 0.7f64, 1.1f64, 2.56f64);
+        let a = Objective::Logistic.dual_step(a0, y, dot, q, ln);
+        assert!(a > 0.0 && a < 1.0);
+        let resid = ((1.0 - a) / a).ln() - y * dot - (a - a0) * q / ln;
+        assert!(resid.abs() < 1e-9, "stationarity residual {resid}");
+    }
+
+    #[test]
+    fn constants_match_the_textbook_values() {
+        assert_eq!(Objective::Hinge.smoothness(), None);
+        assert_eq!(Objective::Logistic.smoothness(), Some(0.25));
+        assert_eq!(Objective::Ridge.smoothness(), Some(1.0));
+        assert_eq!(Objective::Ridge.lipschitz(), None);
+        let lambda = 0.04;
+        assert_eq!(
+            Objective::Hinge.projection_radius(lambda).unwrap().to_bits(),
+            (1.0 / lambda.sqrt()).to_bits()
+        );
+        assert!(Objective::Logistic.projection_radius(lambda).unwrap() > 0.0);
+        assert_eq!(Objective::Ridge.projection_radius(lambda), None);
+        // Ridge (unbounded gradient) caps the step; the bounded-
+        // gradient losses keep the historical schedule untouched.
+        assert_eq!(Objective::Hinge.max_stable_step(lambda), None);
+        assert_eq!(Objective::Logistic.max_stable_step(lambda), None);
+        let cap = Objective::Ridge.max_stable_step(lambda).unwrap();
+        assert!((cap - 1.0 / (lambda + 1.0)).abs() < 1e-15);
+        assert!(Objective::ALL.iter().all(|o| o.strongly_convex()));
+        assert!(Objective::Hinge.is_classification());
+        assert!(!Objective::Ridge.is_classification());
+    }
+}

@@ -15,6 +15,7 @@
 //! synchronous step bit for bit.
 
 use super::backend::Backend;
+use super::objective::Objective;
 use super::problem::Problem;
 use super::stale::StaleWeights;
 use super::{Algorithm, IterationCost};
@@ -25,6 +26,7 @@ pub struct MiniBatchSgd {
     parts: Vec<Partition>,
     w: Vec<f32>,
     lambda: f64,
+    objective: Objective,
     /// Global batch size per iteration.
     pub batch: usize,
     /// Step-size schedule offset (avoids the enormous first steps).
@@ -50,6 +52,7 @@ impl MiniBatchSgd {
             w: vec![0.0f32; problem.data.d],
             d: problem.data.d,
             lambda: problem.lambda,
+            objective: problem.objective,
             batch: local_batch * machines,
             // Published Pegasos schedule η_t = 1/(λ(t+shift)) with a
             // small warmup shift; the projection below (not a tuned
@@ -64,16 +67,25 @@ impl MiniBatchSgd {
     }
 }
 
-/// Pegasos projection onto the ball ‖w‖ ≤ 1/√λ (Shalev-Shwartz et al.:
-/// the optimum of the SVM objective always lies inside it).
-pub(crate) fn pegasos_project(w: &mut [f32], lambda: f64) {
+/// Projection onto the ball ‖w‖ ≤ radius.
+pub(crate) fn project_ball(w: &mut [f32], radius: f64) {
     let norm: f64 = w.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
-    let radius = 1.0 / lambda.sqrt();
     if norm > radius {
         let s = (radius / norm) as f32;
         for v in w.iter_mut() {
             *v *= s;
         }
+    }
+}
+
+/// Objective-aware projection: each workload's optimum lies inside a
+/// ball whose radius [`Objective::projection_radius`] derives from the
+/// loss at zero — the hinge radius is the historical Pegasos `1/√λ`
+/// (so the hinge path is bit-identical), ridge targets are unbounded
+/// and skip the projection.
+pub(crate) fn project_for(w: &mut [f32], lambda: f64, objective: Objective) {
+    if let Some(radius) = objective.projection_radius(lambda) {
+        project_ball(w, radius);
     }
 }
 
@@ -109,14 +121,17 @@ impl Algorithm for MiniBatchSgd {
                 wt[i] = 1.0;
             }
             sampled += take;
-            let out = backend.grad(part, wt, read_w)?;
+            let out = backend.grad(self.objective, part, wt, read_w)?;
             for (g, &v) in grad.iter_mut().zip(&out.grad_sum) {
                 *g += v as f64;
             }
         }
 
         let t = iter as f64 + 1.0 + self.t_shift;
-        let eta = 1.0 / (self.lambda * t);
+        let mut eta = 1.0 / (self.lambda * t);
+        if let Some(cap) = self.objective.max_stable_step(self.lambda) {
+            eta = eta.min(cap);
+        }
         let scale = 1.0 / sampled.max(1) as f64;
         match stale_w {
             // Gradient from the stale point, applied to the live
@@ -134,7 +149,7 @@ impl Algorithm for MiniBatchSgd {
                 }
             }
         }
-        pegasos_project(&mut self.w, self.lambda);
+        project_for(&mut self.w, self.lambda, self.objective);
 
         // Cost: every machine scores its whole partition (the kernel
         // computes X@w for all rows) — 2·n_loc·d flops — plus the

@@ -2,6 +2,7 @@
 
 use std::path::Path;
 
+use super::objective::Objective;
 use crate::cluster::BarrierMode;
 use crate::util::csv::Table;
 
@@ -20,8 +21,8 @@ pub struct Record {
     pub subopt: f64,
 }
 
-/// A full run: algorithm × machine count × barrier mode × fleet × the
-/// per-iteration records.
+/// A full run: algorithm × machine count × barrier mode × fleet ×
+/// workload × the per-iteration records.
 #[derive(Debug, Clone)]
 pub struct Trace {
     pub algorithm: String,
@@ -32,6 +33,9 @@ pub struct Trace {
     /// grammar). Empty = the context's default uniform fleet — the
     /// pre-fleet behavior.
     pub fleet: String,
+    /// The objective the run optimized (hinge = the pre-workload-axis
+    /// behavior).
+    pub workload: Objective,
     pub p_star: f64,
     pub records: Vec<Record>,
 }
@@ -43,6 +47,7 @@ impl Trace {
             machines,
             barrier_mode: BarrierMode::Bsp,
             fleet: String::new(),
+            workload: Objective::Hinge,
             p_star,
             records: Vec::new(),
         }
@@ -99,6 +104,7 @@ pub struct TraceSet {
 
 const COLUMNS: &[&str] = &[
     "algo_id", "machines", "iter", "sim_time", "primal", "dual", "subopt", "p_star", "barrier",
+    "workload",
 ];
 
 /// Algorithm name ↔ numeric id for the CSV encoding.
@@ -151,6 +157,19 @@ impl TraceSet {
         })
     }
 
+    /// Find the trace for (algorithm, machines, workload) — first
+    /// match in insertion order.
+    pub fn find_workload(
+        &self,
+        algorithm: &str,
+        machines: usize,
+        workload: Objective,
+    ) -> Option<&Trace> {
+        self.traces.iter().find(|t| {
+            t.algorithm == algorithm && t.machines == machines && t.workload == workload
+        })
+    }
+
     /// Distinct machine counts present (sorted).
     pub fn machine_counts(&self) -> Vec<usize> {
         let mut v: Vec<usize> = self.traces.iter().map(|t| t.machines).collect();
@@ -174,6 +193,7 @@ impl TraceSet {
                     r.subopt,
                     tr.p_star,
                     tr.barrier_mode.csv_id(),
+                    tr.workload.csv_id(),
                 ]);
             }
         }
@@ -186,16 +206,22 @@ impl TraceSet {
         for row in &t.rows {
             let algo = algo_name(row[0]);
             let machines = row[1] as usize;
-            // Column 8 was added with the barrier-mode axis; tables
-            // written before it default to BSP.
+            // Column 8 was added with the barrier-mode axis, column 9
+            // with the workload axis; tables written before them
+            // default to BSP / hinge.
             let mode = BarrierMode::from_csv_id(row.get(8).copied().unwrap_or(0.0));
+            let workload = Objective::from_csv_id(row.get(9).copied().unwrap_or(0.0));
             let trace = match set.traces.iter_mut().find(|tr| {
-                tr.algorithm == algo && tr.machines == machines && tr.barrier_mode == mode
+                tr.algorithm == algo
+                    && tr.machines == machines
+                    && tr.barrier_mode == mode
+                    && tr.workload == workload
             }) {
                 Some(tr) => tr,
                 None => {
                     let mut tr = Trace::new(algo.clone(), machines, row[7]);
                     tr.barrier_mode = mode;
+                    tr.workload = workload;
                     set.traces.push(tr);
                     set.traces.last_mut().unwrap()
                 }
@@ -301,5 +327,32 @@ mod tests {
         assert_eq!(BarrierMode::from_csv_id(0.0), BarrierMode::Bsp);
         assert_eq!(BarrierMode::from_csv_id(-1.0), BarrierMode::Async);
         assert_eq!(BarrierMode::from_csv_id(5.0), BarrierMode::Ssp { staleness: 4 });
+    }
+
+    #[test]
+    fn workload_roundtrips_and_separates_traces() {
+        let mut set = TraceSet::default();
+        for workload in Objective::ALL {
+            let mut t = sample_trace("cocoa+", 8);
+            t.workload = workload;
+            set.push(t);
+        }
+        let back = TraceSet::from_table(&set.to_table()).unwrap();
+        // Same (algo, m, mode) but distinct workloads stay distinct.
+        assert_eq!(back.traces.len(), 3);
+        for workload in Objective::ALL {
+            let t = back.find_workload("cocoa+", 8, workload).unwrap();
+            assert_eq!(t.records.len(), 10);
+            assert_eq!(t.workload, workload);
+        }
+        // Legacy 9-column rows (no workload column) default to hinge.
+        let mut table = set.to_table();
+        table.columns.truncate(9);
+        for row in table.rows.iter_mut() {
+            row.truncate(9);
+        }
+        let legacy = TraceSet::from_table(&table).unwrap();
+        assert_eq!(legacy.traces.len(), 1, "all rows collapse onto hinge");
+        assert_eq!(legacy.traces[0].workload, Objective::Hinge);
     }
 }

@@ -7,25 +7,36 @@
 //! figure runs and advisor refits skip already-converged cells.
 
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 use crate::advisor::{
     artifact_path, save_artifact, AlgorithmId, CombinedModel, ModeModel, ModelKey, ModelRegistry,
 };
 use crate::cluster::{BarrierMode, ClusterSim, FleetSpec, HardwareProfile};
 use crate::config::ExperimentConfig;
-use crate::data::synth::mnist_like;
+use crate::data::synth::dataset_for;
 use crate::ernest::{ErnestModel, Observation};
 use crate::hemingway_model::{points_from_traces, ConvergenceModel, FeatureLibrary};
 use crate::optim::{
-    by_name, run, Backend, HloBackend, NativeBackend, Problem, RunConfig, Trace, TraceSet,
+    by_name, run, Backend, HloBackend, NativeBackend, Objective, Problem, RunConfig, Trace,
+    TraceSet,
 };
 use crate::runtime::Engine;
 use crate::sweep::{CellSpec, SweepEngine, SweepGrid, TraceCache};
 use crate::util::asciiplot::{plot, PlotCfg, Series};
 
+/// One workload's problem plus its certified reference optimum — the
+/// pair every sweep cell of that workload shares.
+pub struct WorkloadProblem {
+    pub problem: Problem,
+    pub p_star: f64,
+}
+
 /// Everything a figure target needs.
 pub struct ReproContext {
     pub cfg: ExperimentConfig,
+    /// The base workload's problem (the config's first `workloads`
+    /// entry; hinge for legacy configs — bit-identical construction).
     pub problem: Problem,
     pub p_star: f64,
     pub profile: HardwareProfile,
@@ -37,6 +48,11 @@ pub struct ReproContext {
     /// Config-hash prefix pinning dataset, problem, profile and backend
     /// for every cell this context runs.
     pub context_key: String,
+    /// Lazily built per-workload problems + reference optima (the base
+    /// workload is seeded at construction; others are built — dataset
+    /// generation plus a reference solve — on first use and shared
+    /// across grids from then on).
+    workload_problems: Mutex<Vec<(Objective, Arc<WorkloadProblem>)>>,
 }
 
 impl ReproContext {
@@ -72,10 +88,12 @@ impl ReproContext {
 
     fn build(cfg: ExperimentConfig, engine: Option<Engine>) -> crate::Result<ReproContext> {
         let use_native = engine.is_none();
-        let data = mnist_like(&cfg.synth());
-        let problem = Problem::new(data, cfg.lambda);
+        let base_workload = cfg.base_workload();
+        let data = dataset_for(base_workload, &cfg.synth());
+        let problem = Problem::with_objective(data, cfg.lambda, base_workload);
         crate::log_info!(
-            "dataset ready: n={} d={} positives={:.1}%",
+            "dataset ready: workload={} n={} d={} positives={:.1}%",
+            base_workload,
             problem.data.n,
             problem.data.d,
             100.0 * problem.data.positive_rate()
@@ -91,6 +109,13 @@ impl ReproContext {
         std::fs::create_dir_all(&out_dir)?;
         let context_key = cfg.context_key(use_native);
         let sweep = SweepEngine::with_default_threads(TraceCache::persistent(&out_dir.join("cache")));
+        let workload_problems = Mutex::new(vec![(
+            base_workload,
+            Arc::new(WorkloadProblem {
+                problem: problem.clone(),
+                p_star,
+            }),
+        )]);
         Ok(ReproContext {
             problem,
             p_star,
@@ -100,8 +125,36 @@ impl ReproContext {
             out_dir,
             sweep,
             context_key,
+            workload_problems,
             cfg,
         })
+    }
+
+    /// The base workload (the config's first `workloads` entry).
+    pub fn base_workload(&self) -> Objective {
+        self.cfg.base_workload()
+    }
+
+    /// The (problem, P*) pair a workload's cells run against. The base
+    /// workload is seeded at construction; any other workload is built
+    /// on first use (dataset generation + high-precision reference
+    /// solve) and cached for every later grid.
+    pub fn workload_problem(&self, workload: Objective) -> crate::Result<Arc<WorkloadProblem>> {
+        let mut cache = self.workload_problems.lock().unwrap();
+        if let Some((_, wp)) = cache.iter().find(|(w, _)| *w == workload) {
+            return Ok(wp.clone());
+        }
+        let data = dataset_for(workload, &self.cfg.synth());
+        let problem = Problem::with_objective(data, self.cfg.lambda, workload);
+        let t0 = std::time::Instant::now();
+        let (p_star, _, gap) = problem.reference_solve(1e-7, 600);
+        crate::log_info!(
+            "workload {workload} ready: P*={p_star:.6} (gap {gap:.2e}, {:.2}s)",
+            t0.elapsed().as_secs_f64()
+        );
+        let wp = Arc::new(WorkloadProblem { problem, p_star });
+        cache.push((workload, wp.clone()));
+        Ok(wp)
     }
 
     /// The active backend.
@@ -130,7 +183,7 @@ impl ReproContext {
 
     /// Fleet axis for single-fleet grids: the base fleet alone, in the
     /// shape `SweepGrid.fleets` expects (empty = unnamed default).
-    fn base_fleet_axis(&self) -> Vec<String> {
+    pub fn base_fleet_axis(&self) -> Vec<String> {
         match self.cfg.fleets.first() {
             Some(f) => vec![f.clone()],
             None => Vec::new(),
@@ -154,34 +207,40 @@ impl ReproContext {
     pub fn run_grid(&self, grid: &SweepGrid) -> crate::Result<Vec<Trace>> {
         let context_key = format!("{}|{}", self.context_key, grid.run_key());
         let cells = grid.cells();
-        // Resolve every distinct fleet once, before the fan-out: a
-        // malformed spec fails the whole grid up front, and workers
-        // share read-only parsed specs instead of re-parsing per cell.
+        // Resolve every distinct fleet and workload once, before the
+        // fan-out: a malformed spec (or an expensive reference solve)
+        // is paid up front, and workers share read-only parsed specs
+        // and problems instead of rebuilding them per cell.
         let mut fleets: Vec<(String, FleetSpec)> = Vec::new();
+        let mut problems: Vec<(Objective, Arc<WorkloadProblem>)> = Vec::new();
         for cell in &cells {
+            // The HLO backend's artifacts are hinge-only; fail before
+            // the expensive per-workload reference solves, not on the
+            // first cell mid-sweep.
+            crate::ensure!(
+                self.use_native || cell.workload.is_hinge(),
+                "workload '{}' requires the native backend (--native); \
+                 the HLO artifacts are compiled for hinge",
+                cell.workload
+            );
             if !fleets.iter().any(|(name, _)| *name == cell.fleet) {
                 fleets.push((cell.fleet.clone(), self.fleet_for(&cell.fleet)?));
             }
+            if !problems.iter().any(|(w, _)| *w == cell.workload) {
+                problems.push((cell.workload, self.workload_problem(cell.workload)?));
+            }
         }
         if self.use_native {
-            let problem = &self.problem;
-            let p_star = self.p_star;
             let run_cfg = grid.run.clone();
             let fleets = &fleets;
+            let problems = &problems;
             self.sweep.run_cells(&context_key, &cells, &|cell| {
-                run_cell(&NativeBackend, problem, fleets, p_star, cell, &run_cfg)
+                run_cell(&NativeBackend, problems, fleets, cell, &run_cfg)
             })
         } else {
             let backend = self.backend();
             self.sweep.run_cells_serial(&context_key, &cells, &mut |cell| {
-                run_cell(
-                    backend.as_ref(),
-                    &self.problem,
-                    &fleets,
-                    self.p_star,
-                    cell,
-                    &grid.run,
-                )
+                run_cell(backend.as_ref(), &problems, &fleets, cell, &grid.run)
             })
         }
     }
@@ -192,6 +251,7 @@ impl ReproContext {
         let mut grid =
             SweepGrid::single(algo_name, &[machines], self.cfg.seed, self.run_config());
         grid.fleets = self.base_fleet_axis();
+        grid.workloads = vec![self.base_workload()];
         let traces = self.run_grid(&grid)?;
         Ok(traces.into_iter().next().expect("single-cell grid"))
     }
@@ -206,6 +266,7 @@ impl ReproContext {
     ) -> crate::Result<Vec<Trace>> {
         let mut grid = SweepGrid::single(algo_name, machines, self.cfg.seed, run);
         grid.fleets = self.base_fleet_axis();
+        grid.workloads = vec![self.base_workload()];
         self.run_grid(&grid)
     }
 
@@ -216,6 +277,7 @@ impl ReproContext {
             machines: vec![machines],
             modes: vec![BarrierMode::Bsp],
             fleets: self.base_fleet_axis(),
+            workloads: vec![self.base_workload()],
             seeds: 1,
             base_seed: self.cfg.seed,
             run: self.run_config(),
@@ -238,10 +300,24 @@ impl ReproContext {
     }
 
     /// Run a machine sweep for one algorithm under one (mode, fleet)
-    /// variant — the advisor's per-variant fit input.
+    /// variant on the base workload — the advisor's per-variant fit
+    /// input.
     pub fn run_sweep_variant(
         &self,
         algo_name: &str,
+        mode: BarrierMode,
+        fleet: &str,
+    ) -> crate::Result<TraceSet> {
+        self.run_sweep_workload(algo_name, self.base_workload(), mode, fleet)
+    }
+
+    /// Run a machine sweep for one algorithm under one (workload,
+    /// mode, fleet) variant — the fully-qualified fit input the
+    /// workload axis adds.
+    pub fn run_sweep_workload(
+        &self,
+        algo_name: &str,
+        workload: Objective,
         mode: BarrierMode,
         fleet: &str,
     ) -> crate::Result<TraceSet> {
@@ -255,6 +331,7 @@ impl ReproContext {
         if !fleet.is_empty() {
             grid.fleets = vec![fleet.to_string()];
         }
+        grid.workloads = vec![workload];
         let traces = self.run_grid(&grid)?;
         let mut set = TraceSet::default();
         for t in traces {
@@ -353,42 +430,60 @@ impl ReproContext {
     /// `advise` and `serve` never pay it again.
     pub fn fit_combined(&self, algo: AlgorithmId) -> crate::Result<CombinedModel> {
         let base_fleet = self.base_fleet_name();
+        let base_workload = self.base_workload();
         let traces = self.run_sweep(algo.as_str())?;
         let pts = points_from_traces(&traces.traces);
         let conv = ConvergenceModel::fit(&pts, FeatureLibrary::standard(), self.cfg.seed)?;
         let ernest = self.fit_ernest(algo.as_str())?;
         let mut model = CombinedModel::new(ernest, conv, self.problem.data.n as f64);
         model.base_fleet = base_fleet.clone();
+        model.base_workload = base_workload;
         for &mode in &self.cfg.barrier_modes {
             if mode.is_bsp() {
                 continue;
             }
-            let pair = self.fit_variant_pair(algo, mode, &base_fleet)?;
+            let pair = self.fit_variant_pair(algo, base_workload, mode, &base_fleet)?;
             model.insert_mode(mode, pair);
         }
-        for fleet in self.cfg.fleets.iter().skip(1) {
-            let mut modes = vec![BarrierMode::Bsp];
-            for &mode in &self.cfg.barrier_modes {
-                if !mode.is_bsp() && !modes.contains(&mode) {
-                    modes.push(mode);
-                }
+        let mut modes = vec![BarrierMode::Bsp];
+        for &mode in &self.cfg.barrier_modes {
+            if !mode.is_bsp() && !modes.contains(&mode) {
+                modes.push(mode);
             }
-            for mode in modes {
-                let pair = self.fit_variant_pair(algo, mode, fleet)?;
+        }
+        for fleet in self.cfg.fleets.iter().skip(1) {
+            for &mode in &modes {
+                let pair = self.fit_variant_pair(algo, base_workload, mode, fleet)?;
                 model.insert_fleet_pair(fleet, mode, pair);
+            }
+        }
+        // Every non-base workload gets its own per-mode pairs on the
+        // base fleet (the workload axis changes g — and f, via
+        // per-iteration flops — so nothing is shared with the base
+        // pairs; crossing workloads with non-base fleets is left to an
+        // explicit future need, keeping fit cost linear in the axes).
+        for &workload in &self.cfg.workloads {
+            if workload == base_workload {
+                continue;
+            }
+            for &mode in &modes {
+                let pair = self.fit_variant_pair(algo, workload, mode, &base_fleet)?;
+                model.insert_workload_pair(workload, &base_fleet, mode, pair);
             }
         }
         Ok(model)
     }
 
-    /// Fit one (mode, fleet) pair from a sweep run under that variant.
+    /// Fit one (workload, mode, fleet) pair from a sweep run under
+    /// that variant.
     fn fit_variant_pair(
         &self,
         algo: AlgorithmId,
+        workload: Objective,
         mode: BarrierMode,
         fleet: &str,
     ) -> crate::Result<ModeModel> {
-        let traces = self.run_sweep_variant(algo.as_str(), mode, fleet)?;
+        let traces = self.run_sweep_workload(algo.as_str(), workload, mode, fleet)?;
         let conv = ConvergenceModel::fit(
             &points_from_traces(&traces.traces),
             FeatureLibrary::standard(),
@@ -397,7 +492,8 @@ impl ReproContext {
         let obs = observations_from_traces(&traces.traces, self.problem.data.n as f64);
         let ernest = crate::ernest::ErnestModel::fit(&obs)?;
         crate::log_info!(
-            "{algo} {mode} fleet={}: conv R²={:.4}, f(θ)=[{:.4}, {:.3e}, {:.4}, {:.5}]",
+            "{algo} {mode} fleet={} workload={workload}: conv R²={:.4}, \
+             f(θ)=[{:.4}, {:.3e}, {:.4}, {:.5}]",
             if fleet.is_empty() { "-" } else { fleet },
             conv.train_r2,
             ernest.theta[0],
@@ -429,35 +525,42 @@ impl ReproContext {
 }
 
 /// Run one grid cell: fresh algorithm + simulator against the shared
-/// read-only problem. Seeds are pure functions of the cell, so any
-/// worker may run any cell in any order. `fleets` maps each cell fleet
-/// wire name to its pre-resolved spec (resolved once per grid).
+/// read-only problem of the cell's workload. Seeds are pure functions
+/// of the cell, so any worker may run any cell in any order. `fleets`
+/// and `problems` map each cell's fleet wire name / workload to its
+/// pre-resolved spec / problem (resolved once per grid).
 fn run_cell(
     backend: &dyn Backend,
-    problem: &Problem,
+    problems: &[(Objective, Arc<WorkloadProblem>)],
     fleets: &[(String, FleetSpec)],
-    p_star: f64,
     cell: &CellSpec,
     run_cfg: &RunConfig,
 ) -> crate::Result<Trace> {
+    let wp = problems
+        .iter()
+        .find(|(w, _)| *w == cell.workload)
+        .map(|(_, wp)| wp.clone())
+        .ok_or_else(|| crate::err!("cell workload '{}' was not pre-resolved", cell.workload))?;
+    let problem = &wp.problem;
     let mut algo = by_name(&cell.algorithm, problem, cell.machines, cell.seed as u32)?;
     let fleet = fleets
         .iter()
         .find(|(name, _)| *name == cell.fleet)
         .map(|(_, spec)| spec.clone())
         .ok_or_else(|| crate::err!("cell fleet '{}' was not pre-resolved", cell.fleet))?;
-    // Same seed across modes and fleets: one noise realization, priced
-    // under every (mode, fleet) variant.
+    // Same seed across modes, fleets and workloads: one noise
+    // realization, priced under every variant.
     let mut sim = ClusterSim::with_fleet(fleet, cell.mode, cell.seed ^ cell.machines as u64);
     let t0 = std::time::Instant::now();
-    let mut trace = run(algo.as_mut(), backend, problem, &mut sim, p_star, run_cfg)?;
+    let mut trace = run(algo.as_mut(), backend, problem, &mut sim, wp.p_star, run_cfg)?;
     trace.fleet = cell.fleet.clone();
     crate::log_info!(
-        "{} m={} mode={} fleet={} rep={}: {} iters, final subopt {:.2e} ({:.1}s wall)",
+        "{} m={} mode={} fleet={} workload={} rep={}: {} iters, final subopt {:.2e} ({:.1}s wall)",
         cell.algorithm,
         cell.machines,
         cell.mode,
         if cell.fleet.is_empty() { "-" } else { &cell.fleet },
+        cell.workload,
         cell.replicate,
         trace.records.last().map(|r| r.iter).unwrap_or(0),
         trace.final_subopt(),
@@ -501,7 +604,7 @@ fn profile_one(
 ) -> crate::Result<Vec<Observation>> {
     let rows = ((problem.data.n as f64) * c.fraction) as usize;
     let sub = problem.data.subsample(rows, seed ^ 0xE51);
-    let sub_problem = Problem::new(sub, lambda);
+    let sub_problem = Problem::with_objective(sub, lambda, problem.objective);
     let mut algo = by_name(algo_name, &sub_problem, c.machines, seed as u32)?;
     let mut sim =
         ClusterSim::with_fleet(fleet.clone(), BarrierMode::Bsp, seed ^ (rows as u64) << 8);

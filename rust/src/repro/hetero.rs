@@ -83,6 +83,7 @@ pub fn hetero(ctx: &ReproContext) -> crate::Result<String> {
         machines: ctx.cfg.machines.clone(),
         modes: modes.clone(),
         fleets: fleet_names.clone(),
+        workloads: vec![ctx.base_workload()],
         seeds: 1,
         base_seed: ctx.cfg.seed,
         run: ctx.run_config(),

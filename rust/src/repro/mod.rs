@@ -14,13 +14,14 @@ pub mod fig6;
 pub mod hetero;
 pub mod ssp;
 pub mod tables;
+pub mod workloads;
 
 pub use common::ReproContext;
 
 /// All figure ids `hemingway repro --figure` accepts.
 pub const FIGURES: &[&str] = &[
     "1a", "1b", "1c", "3a", "3b", "4", "5", "6", "7", "8", "9", "10",
-    "table-ernest", "table-advisor", "ablation", "ssp", "hetero",
+    "table-ernest", "table-advisor", "ablation", "ssp", "hetero", "workloads",
 ];
 
 /// Run one or all targets; returns the collected summary lines.
@@ -89,6 +90,9 @@ pub fn run_figures(ctx: &ReproContext, which: &str) -> crate::Result<Vec<String>
     }
     if wants("hetero") {
         summaries.push(hetero::hetero(ctx)?);
+    }
+    if wants("workloads") {
+        summaries.push(workloads::workloads(ctx)?);
     }
 
     crate::ensure!(

@@ -60,10 +60,10 @@ pub fn ssp(ctx: &ReproContext) -> crate::Result<String> {
         // Single-fleet scenario: run on the config's base fleet, like
         // every other single-fleet path (the hetero scenario is the
         // one that sweeps the fleet axis).
-        fleets: match ctx.cfg.fleets.first() {
-            Some(f) => vec![f.clone()],
-            None => Vec::new(),
-        },
+        fleets: ctx.base_fleet_axis(),
+        // Single-workload scenario too: the base workload (the
+        // workloads scenario is the one that sweeps the objective).
+        workloads: vec![ctx.base_workload()],
         seeds: 1,
         base_seed: ctx.cfg.seed,
         run: ctx.run_config(),

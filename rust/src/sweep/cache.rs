@@ -15,11 +15,12 @@ use std::sync::Mutex;
 
 use crate::cluster::BarrierMode;
 use crate::optim::trace::{Record, Trace};
+use crate::optim::Objective;
 
-// v3 added the fleet line; v2 added the barrier-mode line. Files in
-// either older format are treated as misses and regenerated (the
-// cache is always reconstructible).
-const MAGIC: &str = "hemingway-trace v3";
+// v4 added the workload line; v3 added the fleet line; v2 added the
+// barrier-mode line. Files in any older format are treated as misses
+// and regenerated (the cache is always reconstructible).
+const MAGIC: &str = "hemingway-trace v4";
 
 /// FNV-1a 64-bit hash of a cache key (names the on-disk file). One
 /// shared implementation with the simulator's RNG-stream derivation.
@@ -36,11 +37,12 @@ pub fn serialize_trace(key: &str, trace: &Trace) -> String {
     s.push_str(key);
     s.push('\n');
     s.push_str(&format!(
-        "algorithm={}\nmachines={}\nbarrier={}\nfleet={}\np_star={}\nrecords={}\n",
+        "algorithm={}\nmachines={}\nbarrier={}\nfleet={}\nworkload={}\np_star={}\nrecords={}\n",
         trace.algorithm,
         trace.machines,
         trace.barrier_mode,
         trace.fleet,
+        trace.workload,
         trace.p_star,
         trace.records.len()
     ));
@@ -70,6 +72,7 @@ pub fn parse_trace(text: &str) -> crate::Result<(String, Trace)> {
         .map_err(|e| crate::err!("bad machines field: {e}"))?;
     let barrier_mode = BarrierMode::parse(&field(lines.next(), "barrier")?)?;
     let fleet = field(lines.next(), "fleet")?;
+    let workload = Objective::parse(&field(lines.next(), "workload")?)?;
     let p_star: f64 = field(lines.next(), "p_star")?
         .parse()
         .map_err(|e| crate::err!("bad p_star field: {e}"))?;
@@ -79,6 +82,7 @@ pub fn parse_trace(text: &str) -> crate::Result<(String, Trace)> {
     let mut trace = Trace::new(algorithm, machines, p_star);
     trace.barrier_mode = barrier_mode;
     trace.fleet = fleet;
+    trace.workload = workload;
     for i in 0..n {
         let line = lines
             .next()
@@ -230,6 +234,7 @@ mod tests {
         let mut t = sample_trace();
         t.barrier_mode = BarrierMode::Ssp { staleness: 3 };
         t.fleet = "mixed:r3_xlarge+local48".into();
+        t.workload = Objective::Ridge;
         let bytes = serialize_trace("k1", &t);
         let (key, back) = parse_trace(&bytes).unwrap();
         assert_eq!(key, "k1");
@@ -239,51 +244,62 @@ mod tests {
         assert_eq!(back.records.len(), t.records.len());
         assert_eq!(back.barrier_mode, BarrierMode::Ssp { staleness: 3 });
         assert_eq!(back.fleet, "mixed:r3_xlarge+local48");
+        assert_eq!(back.workload, Objective::Ridge);
         assert!(back.records[0].dual.is_nan());
-        // The default (unnamed) fleet round-trips as the empty string.
+        // The default (unnamed) fleet round-trips as the empty string,
+        // and the default workload as hinge.
         let bytes = serialize_trace("k2", &sample_trace());
         let (_, back) = parse_trace(&bytes).unwrap();
         assert_eq!(back.fleet, "");
+        assert_eq!(back.workload, Objective::Hinge);
     }
 
     #[test]
     fn old_format_files_and_unknown_modes_are_rejected() {
-        // Pre-barrier-axis (v1) and pre-fleet-axis (v2) cache files
-        // parse as errors — the cache layer treats both as misses and
-        // regenerates.
+        // Pre-barrier-axis (v1), pre-fleet-axis (v2) and pre-workload-
+        // axis (v3) cache files parse as errors — the cache layer
+        // treats them all as misses and regenerates.
         let v1 = "hemingway-trace v1\nkey=k\nalgorithm=cocoa\nmachines=4\np_star=0\nrecords=0\n";
         assert!(parse_trace(v1).is_err());
         let v2 = "hemingway-trace v2\nkey=k\nalgorithm=cocoa\nmachines=4\nbarrier=bsp\n\
                   p_star=0\nrecords=0\n";
         assert!(parse_trace(v2).is_err());
-        // So does a file naming a barrier mode this build doesn't know.
+        let v3 = "hemingway-trace v3\nkey=k\nalgorithm=cocoa\nmachines=4\nbarrier=bsp\n\
+                  fleet=\np_star=0\nrecords=0\n";
+        assert!(parse_trace(v3).is_err());
+        // So does a file naming a barrier mode or workload this build
+        // doesn't know.
         let weird = serialize_trace("k", &sample_trace())
             .replace("barrier=bsp", "barrier=quantum");
         let err = parse_trace(&weird).unwrap_err().to_string();
         assert!(err.contains("barrier mode"), "{err}");
+        let weird = serialize_trace("k", &sample_trace())
+            .replace("workload=hinge", "workload=quantum");
+        let err = parse_trace(&weird).unwrap_err().to_string();
+        assert!(err.contains("workload"), "{err}");
     }
 
     #[test]
-    fn v2_disk_entries_are_cache_misses_not_errors() {
-        // A persistent cache directory left over from the v2 format:
+    fn v3_disk_entries_are_cache_misses_not_errors() {
+        // A persistent cache directory left over from the v3 format:
         // `get` must report a miss (and regenerate through `put`),
         // never fail the sweep.
-        let dir = std::env::temp_dir().join("hemingway_trace_cache_v2");
+        let dir = std::env::temp_dir().join("hemingway_trace_cache_v3");
         let _ = std::fs::remove_dir_all(&dir);
         let c = TraceCache::persistent(&dir);
         let t = sample_trace();
-        // Forge the v2 layout (no fleet line) at the key's slot.
-        let v2 = serialize_trace("cell-v2", &t)
-            .replace("hemingway-trace v3", "hemingway-trace v2")
-            .replace("fleet=\n", "");
+        // Forge the v3 layout (no workload line) at the key's slot.
+        let v3 = serialize_trace("cell-v3", &t)
+            .replace("hemingway-trace v4", "hemingway-trace v3")
+            .replace("workload=hinge\n", "");
         std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join(format!("{:016x}.trace", hash_key("cell-v2")));
-        std::fs::write(&path, v2).unwrap();
-        assert!(c.get("cell-v2").is_none(), "v2 file served as a hit");
+        let path = dir.join(format!("{:016x}.trace", hash_key("cell-v3")));
+        std::fs::write(&path, v3).unwrap();
+        assert!(c.get("cell-v3").is_none(), "v3 file served as a hit");
         // The regenerated entry overwrites the stale file and hits.
-        c.put("cell-v2", &t);
+        c.put("cell-v3", &t);
         let c2 = TraceCache::persistent(&dir);
-        assert!(c2.get("cell-v2").is_some());
+        assert!(c2.get("cell-v3").is_some());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

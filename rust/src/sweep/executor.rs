@@ -109,7 +109,7 @@ impl SweepEngine {
 }
 
 /// Seed-replication aggregate for one (algorithm, machines, barrier
-/// mode, fleet) cell.
+/// mode, fleet, workload) cell.
 #[derive(Debug, Clone)]
 pub struct CellAggregate {
     pub algorithm: String,
@@ -117,6 +117,8 @@ pub struct CellAggregate {
     pub barrier_mode: crate::cluster::BarrierMode,
     /// Fleet wire name ("" = the context's default uniform fleet).
     pub fleet: String,
+    /// The objective the cell optimized.
+    pub workload: crate::optim::Objective,
     pub replicates: usize,
     /// Replicates that reached the suboptimality target.
     pub reached: usize,
@@ -144,20 +146,34 @@ fn agg_or_nan(xs: &[f64]) -> MeanStd {
 }
 
 /// Group replicate traces by (algorithm, machines, barrier mode,
-/// fleet) — first-seen order — and aggregate each cell's metrics with
-/// mean ± stddev ([`stats::mean_stddev`]). Cells no replicate of which
-/// reached the target get NaN (not 0.0) for the to-target metrics.
+/// fleet, workload) — first-seen order — and aggregate each cell's
+/// metrics with mean ± stddev ([`stats::mean_stddev`]). Cells no
+/// replicate of which reached the target get NaN (not 0.0) for the
+/// to-target metrics.
 pub fn aggregate(traces: &[Trace], target_subopt: f64) -> Vec<CellAggregate> {
-    let mut order: Vec<(String, usize, crate::cluster::BarrierMode, String)> = Vec::new();
+    type Key = (
+        String,
+        usize,
+        crate::cluster::BarrierMode,
+        String,
+        crate::optim::Objective,
+    );
+    let mut order: Vec<Key> = Vec::new();
     for t in traces {
-        let k = (t.algorithm.clone(), t.machines, t.barrier_mode, t.fleet.clone());
+        let k = (
+            t.algorithm.clone(),
+            t.machines,
+            t.barrier_mode,
+            t.fleet.clone(),
+            t.workload,
+        );
         if !order.contains(&k) {
             order.push(k);
         }
     }
     order
         .into_iter()
-        .map(|(algo, m, mode, fleet)| {
+        .map(|(algo, m, mode, fleet, workload)| {
             let group: Vec<&Trace> = traces
                 .iter()
                 .filter(|t| {
@@ -165,6 +181,7 @@ pub fn aggregate(traces: &[Trace], target_subopt: f64) -> Vec<CellAggregate> {
                         && t.machines == m
                         && t.barrier_mode == mode
                         && t.fleet == fleet
+                        && t.workload == workload
                 })
                 .collect();
             let iters: Vec<f64> = group
@@ -187,6 +204,7 @@ pub fn aggregate(traces: &[Trace], target_subopt: f64) -> Vec<CellAggregate> {
                 machines: m,
                 barrier_mode: mode,
                 fleet,
+                workload,
                 replicates: group.len(),
                 reached: iters.len(),
                 iters_to_target: agg_or_nan(&iters),
@@ -214,6 +232,7 @@ mod tests {
         let mut t = Trace::new(cell.algorithm.clone(), cell.machines, 0.0);
         t.barrier_mode = cell.mode;
         t.fleet = cell.fleet.clone();
+        t.workload = cell.workload;
         let decay = 0.3 + (cell.seed % 7) as f64 * 0.05;
         for i in 0..20 {
             let subopt = (-decay * i as f64 / cell.machines as f64).exp();
@@ -234,6 +253,7 @@ mod tests {
             machines: vec![1, 2, 4, 8],
             modes: vec![crate::cluster::BarrierMode::Bsp],
             fleets: Vec::new(),
+            workloads: Vec::new(),
             seeds,
             base_seed: 7,
             run: RunConfig::default(),
@@ -272,6 +292,7 @@ mod tests {
             machines: vec![1, 2, 4],
             modes: vec![crate::cluster::BarrierMode::Bsp],
             fleets: Vec::new(),
+            workloads: Vec::new(),
             seeds: 2,
             base_seed: 11,
             run: run_cfg.clone(),
@@ -451,6 +472,37 @@ mod tests {
         assert_eq!(aggs[0].replicates, 2);
         assert_eq!(aggs[1].fleet, "straggly48");
         assert_eq!(aggs[1].replicates, 2);
+    }
+
+    #[test]
+    fn aggregate_separates_workloads() {
+        use crate::optim::Objective;
+        let mk = |workload: Objective| {
+            let mut t = Trace::new("cocoa+", 8, 0.0);
+            t.workload = workload;
+            for i in 0..5 {
+                t.push(Record {
+                    iter: i,
+                    sim_time: i as f64,
+                    primal: 1.0,
+                    dual: f64::NAN,
+                    subopt: 1.0,
+                });
+            }
+            t
+        };
+        let traces = vec![
+            mk(Objective::Hinge),
+            mk(Objective::Ridge),
+            mk(Objective::Hinge),
+            mk(Objective::Logistic),
+        ];
+        let aggs = aggregate(&traces, 1e-4);
+        assert_eq!(aggs.len(), 3);
+        assert_eq!(aggs[0].workload, Objective::Hinge);
+        assert_eq!(aggs[0].replicates, 2);
+        assert_eq!(aggs[1].workload, Objective::Ridge);
+        assert_eq!(aggs[2].workload, Objective::Logistic);
     }
 
     #[test]

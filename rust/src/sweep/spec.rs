@@ -1,13 +1,13 @@
 //! Grid specification for sweep runs: which (algorithm, machines,
-//! barrier-mode, fleet, seed-replicate) cells to execute, and the
-//! deterministic per-cell seed derivation that makes the fan-out
-//! order-independent.
+//! barrier-mode, fleet, workload, seed-replicate) cells to execute,
+//! and the deterministic per-cell seed derivation that makes the
+//! fan-out order-independent.
 
 use crate::cluster::BarrierMode;
-use crate::optim::RunConfig;
+use crate::optim::{Objective, RunConfig};
 
 /// One cell of a sweep grid: a single (algorithm, machines, barrier
-/// mode, fleet, seed) run.
+/// mode, fleet, workload, seed) run.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CellSpec {
     pub algorithm: String,
@@ -18,15 +18,18 @@ pub struct CellSpec {
     /// prices against. Empty = the caller's default uniform fleet (the
     /// pre-fleet behavior, and the pre-fleet cache-key shape).
     pub fleet: String,
+    /// The objective the cell optimizes (hinge = the historical
+    /// single-workload shape).
+    pub workload: Objective,
     /// Replicate index (0-based) along the seed axis.
     pub replicate: usize,
     /// Fully-mixed RNG seed for this cell — a pure function of the
     /// grid's base seed and the replicate index, never of execution
     /// order, so parallel and serial sweeps produce identical traces.
-    /// Shared across barrier modes and fleets on purpose: they then
-    /// price the same noise realization, making cross-mode and
-    /// cross-fleet comparisons paired rather than merely
-    /// distributional.
+    /// Shared across barrier modes, fleets and workloads on purpose:
+    /// they then price the same noise realization, making cross-mode,
+    /// cross-fleet and cross-workload comparisons paired rather than
+    /// merely distributional.
     pub seed: u64,
 }
 
@@ -51,7 +54,8 @@ pub fn cell_seed(base: u64, replicate: usize) -> u64 {
 }
 
 /// A sweep grid: algorithms × machines × barrier modes × fleets ×
-/// seed replicates, plus the stopping rules every cell shares.
+/// workloads × seed replicates, plus the stopping rules every cell
+/// shares.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
     pub algorithms: Vec<String>,
@@ -63,7 +67,11 @@ pub struct SweepGrid {
     /// Fleet wire names to sweep. Empty behaves as one unnamed default
     /// fleet (`fleet == ""` on every cell) — the pre-fleet grid shape.
     pub fleets: Vec<String>,
-    /// Seed replicates per (algorithm, machines, mode, fleet) cell (≥ 1).
+    /// Workloads to sweep. Empty behaves as `[Hinge]` — the
+    /// pre-workload-axis grid shape.
+    pub workloads: Vec<Objective>,
+    /// Seed replicates per (algorithm, machines, mode, fleet,
+    /// workload) cell (≥ 1).
     pub seeds: usize,
     pub base_seed: u64,
     pub run: RunConfig,
@@ -88,6 +96,7 @@ impl SweepGrid {
             machines: machines.to_vec(),
             modes: vec![mode],
             fleets: Vec::new(),
+            workloads: Vec::new(),
             seeds: 1,
             base_seed,
             run,
@@ -95,9 +104,9 @@ impl SweepGrid {
     }
 
     /// Expand into cells, algorithm-major then machines then mode then
-    /// fleet then replicate. The order is part of the contract: results
-    /// come back in exactly this order regardless of how many threads
-    /// executed them.
+    /// fleet then workload then replicate. The order is part of the
+    /// contract: results come back in exactly this order regardless of
+    /// how many threads executed them.
     pub fn cells(&self) -> Vec<CellSpec> {
         let modes: &[BarrierMode] = if self.modes.is_empty() {
             &[BarrierMode::Bsp]
@@ -110,22 +119,35 @@ impl SweepGrid {
         } else {
             &self.fleets
         };
+        let workloads: &[Objective] = if self.workloads.is_empty() {
+            &[Objective::Hinge]
+        } else {
+            &self.workloads
+        };
         let mut out = Vec::with_capacity(
-            self.algorithms.len() * self.machines.len() * modes.len() * fleets.len() * self.seeds,
+            self.algorithms.len()
+                * self.machines.len()
+                * modes.len()
+                * fleets.len()
+                * workloads.len()
+                * self.seeds,
         );
         for algo in &self.algorithms {
             for &m in &self.machines {
                 for &mode in modes {
                     for fleet in fleets {
-                        for rep in 0..self.seeds.max(1) {
-                            out.push(CellSpec {
-                                algorithm: algo.clone(),
-                                machines: m,
-                                mode,
-                                fleet: fleet.clone(),
-                                replicate: rep,
-                                seed: cell_seed(self.base_seed, rep),
-                            });
+                        for &workload in workloads {
+                            for rep in 0..self.seeds.max(1) {
+                                out.push(CellSpec {
+                                    algorithm: algo.clone(),
+                                    machines: m,
+                                    mode,
+                                    fleet: fleet.clone(),
+                                    workload,
+                                    replicate: rep,
+                                    seed: cell_seed(self.base_seed, rep),
+                                });
+                            }
                         }
                     }
                 }
@@ -149,8 +171,14 @@ impl SweepGrid {
 /// caller key the trace cache through this single function.
 pub fn cell_key(context_key: &str, cell: &CellSpec) -> String {
     format!(
-        "{context_key}|algo={};m={};mode={};fleet={};rep={};seed={}",
-        cell.algorithm, cell.machines, cell.mode, cell.fleet, cell.replicate, cell.seed
+        "{context_key}|algo={};m={};mode={};fleet={};workload={};rep={};seed={}",
+        cell.algorithm,
+        cell.machines,
+        cell.mode,
+        cell.fleet,
+        cell.workload,
+        cell.replicate,
+        cell.seed
     )
 }
 
@@ -164,6 +192,7 @@ mod tests {
             machines: vec![1, 4],
             modes: vec![BarrierMode::Bsp],
             fleets: Vec::new(),
+            workloads: Vec::new(),
             seeds: 3,
             base_seed: 42,
             run: RunConfig::default(),
@@ -274,6 +303,48 @@ mod tests {
         assert_ne!(keys[0], keys[1]);
         assert_ne!(keys[0], keys[2]);
         assert_ne!(keys[1], keys[2]);
+    }
+
+    #[test]
+    fn workload_axis_multiplies_cells_and_shares_seeds() {
+        let mut g = grid();
+        g.workloads = vec![Objective::Hinge, Objective::Logistic, Objective::Ridge];
+        let cells = g.cells();
+        assert_eq!(cells.len(), 2 * 2 * 3 * 3);
+        // Workload varies inside (algorithm, machines, mode, fleet),
+        // replicate inside workload — and the same replicate carries
+        // the same seed across workloads (paired noise realizations).
+        assert_eq!(cells[0].workload, Objective::Hinge);
+        assert_eq!(cells[3].workload, Objective::Logistic);
+        assert_eq!(cells[6].workload, Objective::Ridge);
+        assert_eq!(cells[0].seed, cells[3].seed);
+        assert_eq!(
+            (cells[0].machines, cells[0].mode, &cells[0].algorithm),
+            (cells[3].machines, cells[3].mode, &cells[3].algorithm)
+        );
+        // An empty workload list behaves as [Hinge].
+        g.workloads.clear();
+        assert!(g.cells().iter().all(|c| c.workload == Objective::Hinge));
+        assert_eq!(g.cells().len(), 2 * 2 * 3);
+    }
+
+    #[test]
+    fn cell_keys_separate_workloads() {
+        let base = grid().cells().remove(0);
+        let mut ridge = base.clone();
+        ridge.workload = Objective::Ridge;
+        let mut logistic = base.clone();
+        logistic.workload = Objective::Logistic;
+        let keys = [
+            cell_key("ctx", &base),
+            cell_key("ctx", &ridge),
+            cell_key("ctx", &logistic),
+        ];
+        assert_ne!(keys[0], keys[1]);
+        assert_ne!(keys[0], keys[2]);
+        assert_ne!(keys[1], keys[2]);
+        assert!(keys[0].contains("workload=hinge"));
+        assert!(keys[1].contains("workload=ridge"));
     }
 
     #[test]

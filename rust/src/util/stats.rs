@@ -57,6 +57,19 @@ pub fn min(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NAN, f64::min)
 }
 
+/// Index of the smallest value, NaN-safe: NaN entries carry no order
+/// information and are filtered out before a *total-order* comparison
+/// (`f64::total_cmp`), so this never panics the way
+/// `partial_cmp(..).unwrap()` min-selections do when a NaN slips into
+/// a metric vector. `None` only when the slice is empty or all-NaN.
+pub fn argmin(xs: &[f64]) -> Option<usize> {
+    xs.iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_nan())
+        .min_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+}
+
 /// Maximum (NaN for empty input).
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NAN, f64::max)
@@ -269,6 +282,22 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert!(percentile(&[], 50.0).is_nan());
         assert_eq!(rmse(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn argmin_is_nan_safe() {
+        // The plain case.
+        assert_eq!(argmin(&[3.0, 1.0, 2.0]), Some(1));
+        assert_eq!(argmin(&[7.0]), Some(0));
+        // NaNs anywhere — including first — neither panic nor win.
+        assert_eq!(argmin(&[f64::NAN, 5.0, 2.0, f64::NAN, 9.0]), Some(2));
+        assert_eq!(argmin(&[f64::NAN, f64::NAN, 4.0]), Some(2));
+        // Total order handles infinities and signed zeros.
+        assert_eq!(argmin(&[0.0, f64::NEG_INFINITY, 1.0]), Some(1));
+        assert_eq!(argmin(&[0.0, -0.0]), Some(1), "-0.0 orders below +0.0");
+        // Empty and all-NaN inputs answer nothing instead of panicking.
+        assert_eq!(argmin(&[]), None);
+        assert_eq!(argmin(&[f64::NAN, f64::NAN]), None);
     }
 
     #[test]

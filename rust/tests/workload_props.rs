@@ -1,0 +1,397 @@
+//! Property tests for the workload axis (via `util::quickcheck`): the
+//! invariants ISSUE 5 pins down.
+//!
+//! * the hinge workload is **bitwise identical** to the pre-redesign
+//!   path, at the kernel level (a legacy backend wired straight to the
+//!   historical hinge kernels, objective argument ignored, produces
+//!   the same driver traces as the objective-dispatching backend) and
+//!   at the objective level (the generic primal / reference solve
+//!   reproduce the pre-redesign hinge arithmetic expression for
+//!   expression);
+//! * every objective's `reference_solve` returns a *certified lower
+//!   bound* (the final dual value), so suboptimality is ≥ 0 along any
+//!   trace of any algorithm on any workload;
+//! * trace-cache format v4 round-trips byte-identically and v3 files
+//!   are treated as misses, never served or fatal.
+//!
+//! CI runs this suite under a pinned `QUICKCHECK_SEED` (see ci.sh) so
+//! a property failure names a seed that reproduces locally.
+
+use hemingway::cluster::{BarrierMode, ClusterSim, HardwareProfile};
+use hemingway::data::synth::{dataset_for, two_gaussians, SynthConfig};
+use hemingway::data::Partition;
+use hemingway::optim::{
+    by_name, native, run, Backend, NativeBackend, Objective, Problem, RunConfig,
+};
+use hemingway::runtime::{CocoaLocalOut, GradOut};
+use hemingway::sweep::cache::{hash_key, parse_trace, serialize_trace};
+use hemingway::sweep::TraceCache;
+use hemingway::util::quickcheck::{forall_ok, Gen};
+use hemingway::util::rng::Lcg32;
+
+/// The pre-redesign backend wiring: straight to the historical hinge
+/// kernels, the objective argument ignored. Any trace produced through
+/// this backend is exactly what the pre-workload-axis code computed.
+struct LegacyHingeBackend;
+
+impl Backend for LegacyHingeBackend {
+    fn cocoa_local(
+        &self,
+        _objective: Objective,
+        part: &Partition,
+        alpha: &[f32],
+        w: &[f32],
+        lambda_n: f32,
+        sigma_prime: f32,
+        seed: u32,
+    ) -> hemingway::Result<CocoaLocalOut> {
+        let (alpha, delta_w) = native::sdca_epoch(
+            &part.x,
+            &part.y,
+            &part.mask,
+            alpha,
+            w,
+            lambda_n as f64,
+            sigma_prime as f64,
+            seed,
+            part.n_loc,
+        );
+        Ok(CocoaLocalOut { alpha, delta_w })
+    }
+
+    fn grad(
+        &self,
+        _objective: Objective,
+        part: &Partition,
+        weights: &[f32],
+        w: &[f32],
+    ) -> hemingway::Result<GradOut> {
+        Ok(native::hinge_stats(&part.x, &part.y, weights, w))
+    }
+
+    fn local_sgd(
+        &self,
+        _objective: Objective,
+        part: &Partition,
+        w: &[f32],
+        lambda: f32,
+        t0: f32,
+        seed: u32,
+    ) -> hemingway::Result<Vec<f32>> {
+        Ok(native::pegasos_epoch(
+            &part.x,
+            &part.y,
+            &part.mask,
+            w,
+            lambda as f64,
+            t0 as f64,
+            seed,
+            part.n_loc,
+        ))
+    }
+
+    fn name(&self) -> &'static str {
+        "legacy-hinge"
+    }
+}
+
+/// Run one (algorithm, machines, mode) through the full driver on a
+/// fresh simulated cluster; returns (per-record (sim_time, primal,
+/// subopt) triples, final weights).
+fn drive(
+    backend: &dyn Backend,
+    problem: &Problem,
+    p_star: f64,
+    algo_name: &str,
+    machines: usize,
+    mode: BarrierMode,
+    seed: u64,
+    iters: usize,
+) -> (Vec<(f64, f64, f64)>, Vec<f32>) {
+    let mut algo = by_name(algo_name, problem, machines, seed as u32).unwrap();
+    let mut sim = ClusterSim::with_mode(HardwareProfile::local48(), mode, seed);
+    let cfg = RunConfig {
+        max_iters: iters,
+        target_subopt: -1.0,
+        time_budget: None,
+    };
+    let trace = run(algo.as_mut(), backend, problem, &mut sim, p_star, &cfg).unwrap();
+    let rows = trace
+        .records
+        .iter()
+        .map(|r| (r.sim_time, r.primal, r.subopt))
+        .collect();
+    (rows, algo.weights().to_vec())
+}
+
+#[test]
+fn prop_hinge_driver_is_bitwise_the_pre_redesign_path() {
+    // Full stack: objective dispatch + algorithms + simulator. Every
+    // algorithm on the hinge workload must produce the exact trace the
+    // pre-redesign (legacy kernel wiring) produces — sim times,
+    // primal/suboptimality values and final weights, bit for bit.
+    let problem = Problem::new(two_gaussians(192, 8, 2.0, 7), 1e-2);
+    assert_eq!(problem.objective, Objective::Hinge);
+    let (p_star, _, _) = problem.reference_solve(1e-6, 300);
+    forall_ok(
+        "hinge driver traces: objective dispatch == legacy kernels, bit for bit",
+        8,
+        |g| {
+            let algo = *g.choose(&["cocoa", "cocoa+", "minibatch-sgd", "local-sgd", "gd"]);
+            let mode = *g.choose(&[
+                BarrierMode::Bsp,
+                BarrierMode::Ssp { staleness: g.usize_in(0, 4) },
+            ]);
+            ((algo, mode, g.usize_in(1, 16), g.rng().next_u64(), g.usize_in(3, 10)), ())
+        },
+        |&(algo, mode, m, seed, iters), _| {
+            let (rows_new, w_new) =
+                drive(&NativeBackend, &problem, p_star, algo, m, mode, seed, iters);
+            let (rows_old, w_old) =
+                drive(&LegacyHingeBackend, &problem, p_star, algo, m, mode, seed, iters);
+            if rows_new.len() != rows_old.len() {
+                return Err(format!("{algo} m={m}: record counts differ"));
+            }
+            for (i, (a, b)) in rows_new.iter().zip(&rows_old).enumerate() {
+                for (name, x, y) in [
+                    ("sim_time", a.0, b.0),
+                    ("primal", a.1, b.1),
+                    ("subopt", a.2, b.2),
+                ] {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!("{algo} m={m} {mode} record {i}: {name} {x} vs {y}"));
+                    }
+                }
+            }
+            if w_new != w_old {
+                return Err(format!("{algo} m={m}: weight trajectories diverged"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hinge_objective_reproduces_the_pre_redesign_arithmetic() {
+    // The generic primal and reference solve at Objective::Hinge must
+    // equal the historical hinge-only formulas bit for bit. The legacy
+    // formulas are reimplemented inline here, frozen, so any later
+    // refactor of the generic path that moves hinge bits fails this.
+    fn legacy_primal(data: &hemingway::data::Dataset, lambda: f64, w: &[f32]) -> f64 {
+        let mut hinge = 0.0f64;
+        for i in 0..data.n {
+            let xi = data.row(i);
+            let score: f64 = xi.iter().zip(w).map(|(&a, &b)| a as f64 * b as f64).sum();
+            hinge += (1.0 - data.y[i] as f64 * score).max(0.0);
+        }
+        let ww: f64 = w.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        0.5 * lambda * ww + hinge / data.n as f64
+    }
+    fn legacy_reference_solve(
+        data: &hemingway::data::Dataset,
+        lambda: f64,
+        gap_tol: f64,
+        max_epochs: usize,
+    ) -> (f64, Vec<f32>, f64) {
+        let (n, d) = (data.n, data.d);
+        let lambda_n = lambda * n as f64;
+        let mut a = vec![0.0f64; n];
+        let mut w = vec![0.0f64; d];
+        let mut gap = f64::INFINITY;
+        let qs: Vec<f64> = (0..n)
+            .map(|i| data.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum())
+            .collect();
+        let dual = |alpha_sum: f64, wf: &[f32]| -> f64 {
+            let ww: f64 = wf.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            alpha_sum / n as f64 - 0.5 * lambda * ww
+        };
+        let mut lcg = Lcg32::for_epoch(0xE5EF, 0, 0);
+        for epoch in 0..max_epochs {
+            for _ in 0..n {
+                let j = lcg.next_index(n as u32) as usize;
+                if qs[j] <= 0.0 {
+                    continue;
+                }
+                let xj = data.row(j);
+                let yj = data.y[j] as f64;
+                let dot: f64 = xj.iter().zip(&w).map(|(&xv, wv)| xv as f64 * wv).sum();
+                let margin = 1.0 - yj * dot;
+                let a_new = (a[j] + lambda_n * margin / qs[j]).clamp(0.0, 1.0);
+                let delta = a_new - a[j];
+                if delta != 0.0 {
+                    a[j] = a_new;
+                    let scale = delta * yj / lambda_n;
+                    for (wv, &xv) in w.iter_mut().zip(xj) {
+                        *wv += scale * xv as f64;
+                    }
+                }
+            }
+            if epoch % 5 == 4 || epoch + 1 == max_epochs {
+                let wf: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+                let p = legacy_primal(data, lambda, &wf);
+                gap = p - dual(a.iter().sum(), &wf);
+                if gap < gap_tol {
+                    break;
+                }
+            }
+        }
+        let wf: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+        let p_star = dual(a.iter().sum(), &wf);
+        (p_star, wf, gap)
+    }
+
+    forall_ok(
+        "hinge primal + reference solve == frozen legacy formulas, bit for bit",
+        10,
+        |g| {
+            let n = g.usize_in(16, 96);
+            let d = g.usize_in(2, 10);
+            let sep = g.f64_in(0.3, 3.0);
+            let lambda = g.f64_in(1e-3, 0.2);
+            let data_seed = g.rng().next_u64();
+            let w = g.vec_f32(d, -1.0, 1.0);
+            ((n, d, sep, lambda, data_seed), w)
+        },
+        |&(n, d, sep, lambda, data_seed), w| {
+            let data = two_gaussians(n, d, sep, data_seed);
+            let problem = Problem::new(data.clone(), lambda);
+            let a = problem.primal(w);
+            let b = legacy_primal(&data, lambda, w);
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("primal {a} vs legacy {b}"));
+            }
+            let (ps_a, w_a, gap_a) = problem.reference_solve(1e-5, 60);
+            let (ps_b, w_b, gap_b) = legacy_reference_solve(&data, lambda, 1e-5, 60);
+            if ps_a.to_bits() != ps_b.to_bits() || gap_a.to_bits() != gap_b.to_bits() {
+                return Err(format!(
+                    "reference solve drifted: P* {ps_a} vs {ps_b}, gap {gap_a} vs {gap_b}"
+                ));
+            }
+            if w_a != w_b {
+                return Err("reference w* drifted".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_reference_solve_certifies_nonnegative_suboptimality() {
+    // P* is the final *dual* value — a lower bound on the true optimum
+    // by weak duality for every objective — so P(w) − P* stays ≥ 0
+    // along any trace of any algorithm on any workload (up to f64
+    // rounding of two nearly-equal numbers).
+    forall_ok(
+        "subopt ≥ 0 along any (workload, algorithm, m) trace",
+        12,
+        |g| {
+            let workload = *g.choose(&Objective::ALL);
+            let algo = *g.choose(&["cocoa", "cocoa+", "minibatch-sgd", "local-sgd", "gd"]);
+            ((workload, algo, g.usize_in(1, 8), g.rng().next_u64(), g.usize_in(4, 15)), ())
+        },
+        |&(workload, algo, m, seed, iters), _| {
+            let cfg = SynthConfig {
+                n: 128,
+                d: 8,
+                seed: seed ^ 0xA5,
+                ..Default::default()
+            };
+            let problem = Problem::with_objective(dataset_for(workload, &cfg), 1e-2, workload);
+            let (p_star, _, _) = problem.reference_solve(1e-6, 200);
+            let (rows, _) = drive(
+                &NativeBackend,
+                &problem,
+                p_star,
+                algo,
+                m,
+                BarrierMode::Bsp,
+                seed,
+                iters,
+            );
+            for (i, (_, primal, subopt)) in rows.iter().enumerate() {
+                if !subopt.is_finite() || *subopt < -1e-9 {
+                    return Err(format!(
+                        "{workload} {algo} m={m} record {i}: subopt {subopt} (primal {primal}, \
+                         P* {p_star})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cache_v4_roundtrips_and_v3_is_a_miss() {
+    forall_ok(
+        "trace cache: v4 byte-identical round trip; forged v3 file == miss",
+        25,
+        |g| {
+            let workload = *g.choose(&Objective::ALL);
+            let machines = g.usize_in(1, 128);
+            let n_records = g.usize_in(0, 12);
+            let records: Vec<(f64, f64, f64, f64)> = (0..n_records)
+                .map(|_| {
+                    (
+                        g.f64_in(0.0, 100.0),
+                        g.f64_in(-2.0, 2.0),
+                        if g.bool() { g.f64_in(-2.0, 2.0) } else { f64::NAN },
+                        g.f64_in(0.0, 1.5),
+                    )
+                })
+                .collect();
+            let salt = g.rng().next_u64();
+            ((workload, machines, salt), records)
+        },
+        |&(workload, machines, salt), records| {
+            let mut t = hemingway::optim::Trace::new("cocoa+", machines, 0.123);
+            t.workload = workload;
+            for (i, &(sim_time, primal, dual, subopt)) in records.iter().enumerate() {
+                t.push(hemingway::optim::Record {
+                    iter: i,
+                    sim_time,
+                    primal,
+                    dual,
+                    subopt,
+                });
+            }
+            let key = format!("ctx|workload={workload};salt={salt}");
+            // v4 round trip: re-serializing the parsed trace must
+            // reproduce the stored bytes exactly (NaN duals included).
+            let bytes = serialize_trace(&key, &t);
+            let (key_back, back) = parse_trace(&bytes).map_err(|e| e.to_string())?;
+            if key_back != key {
+                return Err("key drifted".into());
+            }
+            if back.workload != workload {
+                return Err(format!("workload drifted: {}", back.workload));
+            }
+            if serialize_trace(&key, &back) != bytes {
+                return Err("v4 round trip is not byte-identical".into());
+            }
+            // A forged v3 file (no workload line) at the key's slot is
+            // a miss — regenerated via put, never served or fatal.
+            let dir = std::env::temp_dir().join(format!("hemingway_workload_v3_{salt:016x}"));
+            let _ = std::fs::remove_dir_all(&dir);
+            let cache = TraceCache::persistent(&dir);
+            let v3 = bytes
+                .replace("hemingway-trace v4", "hemingway-trace v3")
+                .replace(&format!("workload={workload}\n"), "");
+            std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+            let path = dir.join(format!("{:016x}.trace", hash_key(&key)));
+            std::fs::write(&path, v3).map_err(|e| e.to_string())?;
+            if cache.get(&key).is_some() {
+                return Err("v3 file served as a hit".into());
+            }
+            cache.put(&key, &t);
+            let fresh = TraceCache::persistent(&dir);
+            let served = fresh.get(&key).ok_or("regenerated entry missed")?;
+            let ok = serialize_trace(&key, &served) == bytes;
+            let _ = std::fs::remove_dir_all(&dir);
+            if !ok {
+                return Err("regenerated entry not byte-identical".into());
+            }
+            Ok(())
+        },
+    );
+}
