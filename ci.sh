@@ -20,6 +20,11 @@ cargo test -q
 # reproduces locally.
 QUICKCHECK_SEED=20170211 cargo test -q --release --test barrier_props
 QUICKCHECK_SEED=20170211 cargo test -q --release --test workload_props
+# Sweep-store invariants (interrupted sweep + torn manifest resumes to
+# a bitwise-identical aggregate, v4 flat fixtures migrate-on-hit and
+# serve bit-identically, header-only probe ≡ full parse at any key
+# length) under the same pinned seed.
+QUICKCHECK_SEED=20170211 cargo test -q --release --test sweep_store
 cargo fmt --check
 
 # Advisor-service smoke: fit-on-miss once, then three JSON queries
@@ -121,3 +126,41 @@ if grep -q '"ok":false' "$tmp/workload_query.out"; then
   exit 1
 fi
 echo "workloads smoke OK"
+
+# Resume smoke: a tiny sweep, then tear the trace-store manifest tail
+# (as a kill mid-append would) and rerun with --resume. Planning runs
+# off the torn manifest so exactly one cell replans, but the shard
+# files are ground truth: nothing recomputes (0 misses) and both sweep
+# CSVs must come back byte-identical.
+cat > "$tmp/sweep.json" <<EOF
+{"n": 256, "d": 16, "machines": [1, 2, 4], "max_iters": 40,
+ "target_subopt": 1e-2, "out_dir": "$tmp/sweep_out"}
+EOF
+cargo run --release --quiet -- sweep --native --seeds 2 --config "$tmp/sweep.json"
+cp "$tmp/sweep_out/sweep_cocoa+.csv" "$tmp/sweep_first.csv"
+cp "$tmp/sweep_out/sweep_cocoa+_agg.csv" "$tmp/agg_first.csv"
+manifest="$tmp/sweep_out/cache/MANIFEST"
+test -f "$manifest"
+size="$(wc -c < "$manifest")"
+head -c "$((size - 3))" "$manifest" > "$manifest.torn"
+mv "$manifest.torn" "$manifest"
+cargo run --release --quiet -- sweep --native --seeds 2 --resume \
+  --config "$tmp/sweep.json" > "$tmp/sweep_resume.out"
+cat "$tmp/sweep_resume.out"
+grep -q 'cells already in the trace store; 1 to run' "$tmp/sweep_resume.out"
+grep -q 'cache: 6 hits / 0 misses' "$tmp/sweep_resume.out"
+cmp "$tmp/sweep_first.csv" "$tmp/sweep_out/sweep_cocoa+.csv"
+cmp "$tmp/agg_first.csv" "$tmp/sweep_out/sweep_cocoa+_agg.csv"
+echo "resume smoke OK"
+
+# Bench snapshots: regenerate BENCH_workloads.json and BENCH_sweep.json
+# at the repo root (cache-probe hit/miss latency sharded-v5 vs flat-v4,
+# streamed cells/sec, aggregate throughput — see benches/bench_main.rs).
+# Timings are machine-local; set HEMINGWAY_BENCH=0 to skip on
+# contended runners.
+if [ "${HEMINGWAY_BENCH:-1}" = "1" ]; then
+  cargo bench --bench bench_main
+  test -f ../BENCH_workloads.json
+  test -f ../BENCH_sweep.json
+  echo "bench snapshots OK"
+fi

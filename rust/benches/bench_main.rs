@@ -6,6 +6,8 @@
 //!   kernels     — per-call cost of each AOT kernel, HLO vs native
 //!   iteration   — end-to-end BSP iteration cost (Fig 1a's x-axis)
 //!   sweep       — the sweep engine: thread scaling + cache hits
+//!   sweep_store — sharded v5 store vs flat v4: probe/load/codec, plus
+//!                 streaming + aggregation throughput (BENCH_sweep.json)
 //!   models      — NNLS / Lasso / LassoCV / convergence-fit cost
 //!   advisor     — query latency over a fitted model set
 //!
@@ -25,10 +27,12 @@ use hemingway::hemingway_model::{
 };
 use hemingway::linalg::{nnls, Matrix};
 use hemingway::optim::{
-    by_name, run, Backend, HloBackend, NativeBackend, Problem, RunConfig, Trace,
+    by_name, run, Backend, HloBackend, NativeBackend, Problem, Record, RunConfig, Trace,
 };
 use hemingway::runtime::{default_artifact_dir, Engine};
-use hemingway::sweep::{CellSpec, SweepEngine, SweepGrid, TraceCache};
+use hemingway::sweep::{
+    CellScratch, CellSpec, StreamAggregator, SweepEngine, SweepGrid, TraceCache,
+};
 use hemingway::util::rng::{Lcg32, Pcg32};
 use hemingway::util::stats;
 use hemingway::util::threadpool::default_threads;
@@ -78,6 +82,13 @@ impl Bench {
         );
         self.results.push((name.to_string(), mean, p50, p95, iters));
     }
+}
+
+/// Bench snapshots (`BENCH_*.json`) are checked in at the repo root,
+/// not the crate dir — resolve against the manifest dir so `cargo
+/// bench` lands them in the same place regardless of cwd.
+fn bench_out(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/..")).join(name)
 }
 
 fn fmt_t(s: f64) -> String {
@@ -270,8 +281,9 @@ fn main() -> hemingway::Result<()> {
             ("machines", Json::num(4.0)),
             ("workloads", Json::Object(entries)),
         ]);
-        std::fs::write("BENCH_workloads.json", doc.to_pretty())?;
-        println!("wrote BENCH_workloads.json");
+        let path = bench_out("BENCH_workloads.json");
+        std::fs::write(&path, doc.to_pretty())?;
+        println!("wrote {}", path.display());
     }
     println!();
 
@@ -302,7 +314,7 @@ fn main() -> hemingway::Result<()> {
             },
         };
         let cells = grid.cells();
-        let runner = |cell: &CellSpec| -> hemingway::Result<Trace> {
+        let runner = |cell: &CellSpec, _scratch: &mut CellScratch| -> hemingway::Result<Trace> {
             let mut algo = by_name(&cell.algorithm, &sproblem, cell.machines, cell.seed as u32)?;
             let mut sim = BspSim::new(
                 HardwareProfile::local48(),
@@ -330,6 +342,187 @@ fn main() -> hemingway::Result<()> {
         b.bench("sweep/8cells/cache_hit", || {
             warm.run_cells("bench", &cells, &runner).unwrap();
         });
+    }
+    println!();
+
+    // ---------------- sweep store: sharded v5 vs flat v4 ----------------
+    // The on-disk trace store at scale: a 10k-entry grid probed and
+    // loaded through the sharded binary layout, against an emulated
+    // pre-v5 flat text layout (full read + parse per lookup — what the
+    // cache did before sharding). Means land in BENCH_sweep.json.
+    {
+        use hemingway::sweep::cache::{hash_key, parse_trace, serialize_trace};
+        use hemingway::sweep::store::{decode_trace_v5, encode_trace, encode_trace_into, Probe};
+        use hemingway::sweep::ShardedStore;
+
+        const STORE_CELLS: usize = 10_000;
+        let mut trace = Trace::new("cocoa+", 16, 0.01);
+        for i in 0..8 {
+            trace.push(Record {
+                iter: i,
+                sim_time: i as f64 * 0.1,
+                primal: 0.5 / (i + 1) as f64,
+                dual: f64::NAN,
+                subopt: 0.5 / (i + 1) as f64,
+            });
+        }
+
+        let base =
+            std::env::temp_dir().join(format!("hemingway_bench_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let flat_dir = base.join("flat_v4");
+        std::fs::create_dir_all(&flat_dir)?;
+        let store = ShardedStore::open(&base.join("sharded"));
+        let key_of = |i: usize| format!("bench-store|algo=cocoa+|m=16|cell={i}");
+        let mut buf = Vec::new();
+        for i in 0..STORE_CELLS {
+            let key = key_of(i);
+            store.store(&key, &trace, &mut buf);
+            std::fs::write(
+                flat_dir.join(format!("{:016x}.trace", hash_key(&key))),
+                serialize_trace(&key, &trace),
+            )?;
+        }
+
+        // The pre-shard lookup: read the whole flat file, parse every
+        // record, compare the key.
+        let flat_load = |key: &str| -> Option<Trace> {
+            let path = flat_dir.join(format!("{:016x}.trace", hash_key(key)));
+            let text = std::fs::read_to_string(path).ok()?;
+            let (k, t) = parse_trace(&text).ok()?;
+            (k == key).then_some(t)
+        };
+
+        let mut i = 0usize;
+        b.bench("sweep_store/probe_hit/sharded_v5", || {
+            i += 1;
+            assert!(!matches!(store.probe(&key_of(i % STORE_CELLS)), Probe::Miss));
+        });
+        let mut i = 0usize;
+        b.bench("sweep_store/probe_hit/flat_v4", || {
+            i += 1;
+            assert!(flat_load(&key_of(i % STORE_CELLS)).is_some());
+        });
+        let mut i = 0usize;
+        b.bench("sweep_store/probe_miss/sharded_v5", || {
+            i += 1;
+            assert!(matches!(store.probe(&key_of(STORE_CELLS + i)), Probe::Miss));
+        });
+        let mut i = 0usize;
+        b.bench("sweep_store/probe_miss/flat_v4", || {
+            i += 1;
+            assert!(flat_load(&key_of(STORE_CELLS + i)).is_none());
+        });
+        let mut i = 0usize;
+        b.bench("sweep_store/load_hit/sharded_v5", || {
+            i += 1;
+            assert!(store.load(&key_of(i % STORE_CELLS)).is_some());
+        });
+
+        // Codec cost alone, no filesystem: binary v5 vs text v4.
+        let v5_bytes = encode_trace("k", &trace);
+        let v4_text = serialize_trace("k", &trace);
+        b.bench("sweep_store/decode/v5", || {
+            decode_trace_v5(&v5_bytes).unwrap();
+        });
+        b.bench("sweep_store/decode/v4_text", || {
+            parse_trace(&v4_text).unwrap();
+        });
+        let mut enc = Vec::new();
+        b.bench("sweep_store/encode/v5_into", || {
+            encode_trace_into("k", &trace, &mut enc);
+        });
+
+        // Streaming executor + aggregator throughput on a synthetic
+        // 512-cell grid (runner cost ~ trace construction, so this
+        // measures the engine's own overhead per cell).
+        let sgrid = SweepGrid {
+            algorithms: vec!["cocoa+".into()],
+            machines: (1..=512).collect(),
+            modes: vec![hemingway::cluster::BarrierMode::Bsp],
+            fleets: Vec::new(),
+            workloads: Vec::new(),
+            seeds: 1,
+            base_seed: 1,
+            run: RunConfig::default(),
+        };
+        let scells = sgrid.cells();
+        let synth = |cell: &CellSpec, _scratch: &mut CellScratch| -> hemingway::Result<Trace> {
+            let mut t = Trace::new(cell.algorithm.clone(), cell.machines, 0.0);
+            for i in 0..8 {
+                t.push(Record {
+                    iter: i,
+                    sim_time: i as f64,
+                    primal: 1.0,
+                    dual: f64::NAN,
+                    subopt: 1.0 / (i + 1) as f64,
+                });
+            }
+            Ok(t)
+        };
+        b.bench("sweep_store/stream/512cells", || {
+            let eng = SweepEngine::new(default_threads(), TraceCache::in_memory());
+            let mut n = 0usize;
+            eng.run_cells_stream("bench-stream", &scells, &synth, &mut |_, _| {
+                n += 1;
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(n, scells.len());
+        });
+        let agg_input: Vec<Trace> = scells
+            .iter()
+            .map(|c| synth(c, &mut CellScratch::default()).unwrap())
+            .collect();
+        b.bench("sweep_store/aggregate/512traces", || {
+            let mut acc = StreamAggregator::new(1e-4);
+            for t in &agg_input {
+                acc.push(t);
+            }
+            assert_eq!(acc.finish().len(), scells.len());
+        });
+
+        // Emit the store perf snapshot (skipped under a filter that
+        // excluded these benches — no stale file overwrites).
+        let mean = |name: &str| {
+            b.results
+                .iter()
+                .find(|(n, ..)| n == name)
+                .map(|(_, m, ..)| *m)
+                .unwrap_or(f64::NAN)
+        };
+        let hit5 = mean("sweep_store/probe_hit/sharded_v5");
+        let hit4 = mean("sweep_store/probe_hit/flat_v4");
+        if hit5.is_finite() && hit4.is_finite() {
+            use hemingway::util::json::Json;
+            let miss5 = mean("sweep_store/probe_miss/sharded_v5");
+            let miss4 = mean("sweep_store/probe_miss/flat_v4");
+            let load5 = mean("sweep_store/load_hit/sharded_v5");
+            let dec5 = mean("sweep_store/decode/v5");
+            let dec4 = mean("sweep_store/decode/v4_text");
+            let enc5 = mean("sweep_store/encode/v5_into");
+            let stream = mean("sweep_store/stream/512cells");
+            let agg = mean("sweep_store/aggregate/512traces");
+            let doc = Json::object(vec![
+                ("bench", Json::str("sweep_store")),
+                ("store_entries", Json::num(STORE_CELLS as f64)),
+                ("probe_hit_sharded_v5_s", Json::num(hit5)),
+                ("probe_hit_flat_v4_s", Json::num(hit4)),
+                ("probe_hit_speedup_vs_flat_v4", Json::num(hit4 / hit5)),
+                ("probe_miss_sharded_v5_s", Json::num(miss5)),
+                ("probe_miss_flat_v4_s", Json::num(miss4)),
+                ("load_hit_sharded_v5_s", Json::num(load5)),
+                ("decode_v5_s", Json::num(dec5)),
+                ("decode_v4_text_s", Json::num(dec4)),
+                ("encode_v5_into_s", Json::num(enc5)),
+                ("stream_cells_per_s", Json::num(scells.len() as f64 / stream)),
+                ("aggregate_traces_per_s", Json::num(agg_input.len() as f64 / agg)),
+            ]);
+            let path = bench_out("BENCH_sweep.json");
+            std::fs::write(&path, doc.to_pretty())?;
+            println!("wrote {}", path.display());
+        }
+        let _ = std::fs::remove_dir_all(&base);
     }
     println!();
 
@@ -381,8 +574,8 @@ fn main() -> hemingway::Result<()> {
             },
         );
         let eng = SweepEngine::with_default_threads(TraceCache::in_memory());
-        let traces = eng
-            .run_cells("bench-models", &grid.cells(), &|cell| {
+        let models_runner =
+            |cell: &CellSpec, _scratch: &mut CellScratch| -> hemingway::Result<Trace> {
                 let mut algo =
                     by_name(&cell.algorithm, &sproblem, cell.machines, cell.seed as u32)?;
                 let mut sim = BspSim::new(HardwareProfile::local48(), cell.machines as u64);
@@ -394,7 +587,9 @@ fn main() -> hemingway::Result<()> {
                     p_star,
                     &grid.run,
                 )
-            })
+            };
+        let traces = eng
+            .run_cells("bench-models", &grid.cells(), &models_runner)
             .unwrap();
         let pts = points_from_traces(&traces);
         b.bench(&format!("models/convergence_fit/{}pts", pts.len()), || {

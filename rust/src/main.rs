@@ -51,7 +51,7 @@ fn print_help() {
          \x20 run              --algo cocoa+ --machines 16 [--config f.json] [--native]\n\
          \x20 sweep            --algo cocoa+ [--seeds N] [--threads K] [--barrier MODE]\n\
          \x20                  [--staleness-grid 0,2,8] [--fleets F,..]\n\
-         \x20                  [--workloads hinge,logistic,ridge] [--native]\n\
+         \x20                  [--workloads hinge,logistic,ridge] [--resume] [--native]\n\
          \x20 fit-system       --algo cocoa+ [--native]\n\
          \x20 fit-convergence  --algo cocoa+ [--native]\n\
          \x20 fit              [--algos cocoa+,cocoa] [--barriers bsp,ssp:4,async]\n\
@@ -76,6 +76,8 @@ fn print_help() {
          \x20                  or a preset (mixed48, straggly48); first entry = base fleet\n\
          \x20 --workloads <W,..> objectives to sweep/fit/serve (hinge, logistic, ridge);\n\
          \x20                  first entry = base workload (default: hinge)\n\
+         \x20 --resume         (sweep) report how many cells the trace store already\n\
+         \x20                  holds, then run only the remainder\n\
          \x20 --verbose         debug logging (or HEMINGWAY_LOG=debug)\n\n\
          `fit` writes <out_dir>/models/*.json; `advise` and `serve` load them\n\
          (fit-on-miss) and detect stale artifacts via the config hash.\n\
@@ -198,29 +200,49 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                 base_seed: ctx.cfg.seed,
                 run: ctx.run_config(),
             };
+            let cells = grid.cells();
+            if args.flag("resume") {
+                // Manifest-backed: counts membership, loads no traces.
+                let context_key = ctx.grid_context_key(&grid);
+                let plan = ctx.sweep.plan(&context_key, &cells);
+                println!(
+                    "resume: {}/{} cells already in the trace store; {} to run",
+                    plan.done,
+                    plan.total,
+                    plan.remaining()
+                );
+            }
+            ctx.sweep.progress = true;
+
+            // Stream: each finished trace is folded into the aggregate
+            // (and, for replicate 0, the long-format CSV) and dropped —
+            // peak residency is O(groups), not O(cells).
             let t0 = std::time::Instant::now();
-            let traces = ctx.run_grid(&grid)?;
+            let mut set = hemingway::optim::TraceSet::default();
+            let mut agg = hemingway::sweep::StreamAggregator::new(ctx.cfg.target_subopt);
+            let mut n_cells = 0usize;
+            ctx.run_grid_stream(&grid, &mut |i, trace| {
+                n_cells += 1;
+                agg.push(&trace);
+                if cells[i].replicate == 0 {
+                    set.push(trace);
+                }
+                Ok(())
+            })?;
             let (hits, misses) = ctx.sweep.cache.stats();
             println!(
-                "{} cells in {:.1}s wall ({} threads, cache: {hits} hits / {misses} misses)",
-                traces.len(),
+                "{n_cells} cells in {:.1}s wall ({} threads, cache: {hits} hits / {misses} misses)",
                 t0.elapsed().as_secs_f64(),
                 ctx.sweep.threads
             );
 
             // Replicate-0 traces keep the historical long-format CSV.
-            let mut set = hemingway::optim::TraceSet::default();
-            for (cell, trace) in grid.cells().iter().zip(&traces) {
-                if cell.replicate == 0 {
-                    set.push(trace.clone());
-                }
-            }
             let path = ctx.out_dir.join(format!("sweep_{algo}.csv"));
             set.write(&path)?;
             println!("wrote {}", path.display());
 
             // Seed-replication aggregate: mean ± stddev per cell.
-            let aggs = hemingway::sweep::aggregate(&traces, ctx.cfg.target_subopt);
+            let aggs = agg.finish();
             let mut agg_table = hemingway::util::csv::Table::new(&[
                 "machines",
                 "barrier",

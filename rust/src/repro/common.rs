@@ -16,7 +16,7 @@ use crate::cluster::{BarrierMode, ClusterSim, FleetSpec, HardwareProfile};
 use crate::config::ExperimentConfig;
 use crate::data::synth::dataset_for;
 use crate::ernest::{ErnestModel, Observation};
-use crate::hemingway_model::{points_from_traces, ConvergenceModel, FeatureLibrary};
+use crate::hemingway_model::{points_from_traces, ConvPoint, ConvergenceModel, FeatureLibrary};
 use crate::optim::{
     by_name, run, Backend, HloBackend, NativeBackend, Objective, Problem, RunConfig, Trace,
     TraceSet,
@@ -200,12 +200,39 @@ impl ReproContext {
         }
     }
 
+    /// The config-hash prefix every cell of `grid` is keyed under —
+    /// what [`SweepEngine::plan`] needs to report resume progress for
+    /// this context.
+    pub fn grid_context_key(&self, grid: &SweepGrid) -> String {
+        format!("{}|{}", self.context_key, grid.run_key())
+    }
+
     /// Run a full grid through the sweep engine, consulting the trace
     /// cache per cell. Parallel across cells on the native backend;
     /// serial (but still cached) on PJRT. Results come back in
     /// [`SweepGrid::cells`] order regardless of thread count.
+    ///
+    /// This collects every trace; grids too large to hold resident
+    /// should go through [`Self::run_grid_stream`].
     pub fn run_grid(&self, grid: &SweepGrid) -> crate::Result<Vec<Trace>> {
-        let context_key = format!("{}|{}", self.context_key, grid.run_key());
+        let mut out = Vec::new();
+        self.run_grid_stream(grid, &mut |_, t| {
+            out.push(t);
+            Ok(())
+        })?;
+        Ok(out)
+    }
+
+    /// Streaming variant of [`Self::run_grid`]: each finished trace is
+    /// handed to `sink(cell_index, trace)` in [`SweepGrid::cells`]
+    /// order and then dropped, so peak resident traces are O(threads)
+    /// regardless of grid size.
+    pub fn run_grid_stream(
+        &self,
+        grid: &SweepGrid,
+        sink: &mut dyn FnMut(usize, Trace) -> crate::Result<()>,
+    ) -> crate::Result<()> {
+        let context_key = self.grid_context_key(grid);
         let cells = grid.cells();
         // Resolve every distinct fleet and workload once, before the
         // fan-out: a malformed spec (or an expensive reference solve)
@@ -234,14 +261,22 @@ impl ReproContext {
             let run_cfg = grid.run.clone();
             let fleets = &fleets;
             let problems = &problems;
-            self.sweep.run_cells(&context_key, &cells, &|cell| {
-                run_cell(&NativeBackend, problems, fleets, cell, &run_cfg)
-            })
+            self.sweep.run_cells_stream(
+                &context_key,
+                &cells,
+                &|cell, _scratch| run_cell(&NativeBackend, problems, fleets, cell, &run_cfg),
+                sink,
+            )
         } else {
             let backend = self.backend();
-            self.sweep.run_cells_serial(&context_key, &cells, &mut |cell| {
-                run_cell(backend.as_ref(), &problems, &fleets, cell, &grid.run)
-            })
+            self.sweep.run_cells_serial_stream(
+                &context_key,
+                &cells,
+                &mut |cell, _scratch| {
+                    run_cell(backend.as_ref(), &problems, &fleets, cell, &grid.run)
+                },
+                sink,
+            )
         }
     }
 
@@ -431,8 +466,8 @@ impl ReproContext {
     pub fn fit_combined(&self, algo: AlgorithmId) -> crate::Result<CombinedModel> {
         let base_fleet = self.base_fleet_name();
         let base_workload = self.base_workload();
-        let traces = self.run_sweep(algo.as_str())?;
-        let pts = points_from_traces(&traces.traces);
+        let (pts, _) =
+            self.sweep_fit_inputs(algo.as_str(), base_workload, BarrierMode::Bsp, &base_fleet)?;
         let conv = ConvergenceModel::fit(&pts, FeatureLibrary::standard(), self.cfg.seed)?;
         let ernest = self.fit_ernest(algo.as_str())?;
         let mut model = CombinedModel::new(ernest, conv, self.problem.data.n as f64);
@@ -474,6 +509,43 @@ impl ReproContext {
         Ok(model)
     }
 
+    /// The two fit inputs (convergence points, per-iteration timing
+    /// observations) for one (algorithm, workload, mode, fleet) sweep,
+    /// computed by streaming: each trace is reduced to its points and
+    /// observations as it finishes, then dropped — the fit path never
+    /// holds a sweep's traces resident. Point and observation order is
+    /// identical to the collect-then-convert path (both conversions
+    /// are per-trace folds in cell order).
+    pub fn sweep_fit_inputs(
+        &self,
+        algo_name: &str,
+        workload: Objective,
+        mode: BarrierMode,
+        fleet: &str,
+    ) -> crate::Result<(Vec<ConvPoint>, Vec<Observation>)> {
+        let mut grid = SweepGrid::single_in_mode(
+            algo_name,
+            &self.cfg.machines,
+            mode,
+            self.cfg.seed,
+            self.run_config(),
+        );
+        if !fleet.is_empty() {
+            grid.fleets = vec![fleet.to_string()];
+        }
+        grid.workloads = vec![workload];
+        let size = self.problem.data.n as f64;
+        let mut pts: Vec<ConvPoint> = Vec::new();
+        let mut obs: Vec<Observation> = Vec::new();
+        self.run_grid_stream(&grid, &mut |_, t| {
+            let one = std::slice::from_ref(&t);
+            pts.extend(points_from_traces(one));
+            obs.extend(observations_from_traces(one, size));
+            Ok(())
+        })?;
+        Ok((pts, obs))
+    }
+
     /// Fit one (workload, mode, fleet) pair from a sweep run under
     /// that variant.
     fn fit_variant_pair(
@@ -483,13 +555,8 @@ impl ReproContext {
         mode: BarrierMode,
         fleet: &str,
     ) -> crate::Result<ModeModel> {
-        let traces = self.run_sweep_workload(algo.as_str(), workload, mode, fleet)?;
-        let conv = ConvergenceModel::fit(
-            &points_from_traces(&traces.traces),
-            FeatureLibrary::standard(),
-            self.cfg.seed,
-        )?;
-        let obs = observations_from_traces(&traces.traces, self.problem.data.n as f64);
+        let (pts, obs) = self.sweep_fit_inputs(algo.as_str(), workload, mode, fleet)?;
+        let conv = ConvergenceModel::fit(&pts, FeatureLibrary::standard(), self.cfg.seed)?;
         let ernest = crate::ernest::ErnestModel::fit(&obs)?;
         crate::log_info!(
             "{algo} {mode} fleet={} workload={workload}: conv R²={:.4}, \

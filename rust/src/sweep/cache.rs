@@ -1,26 +1,44 @@
-//! Trace cache: in-memory + on-disk storage of finished sweep cells,
-//! keyed by a config hash so repeated figure runs and advisor queries
-//! reuse traces instead of recomputing them.
+//! Trace cache: a bounded in-memory layer over the sharded on-disk
+//! [`store`](super::store), keyed by a config hash so repeated figure
+//! runs and advisor queries reuse traces instead of recomputing them.
 //!
-//! The on-disk format serializes every float through Rust's
+//! The legacy text format (v4) serializes every float through Rust's
 //! shortest-roundtrip `Display`, so a cached [`Trace`] comes back
 //! byte-identical (re-serializing a loaded trace reproduces the stored
-//! bytes exactly, including NaN duals). Each file carries its full key;
-//! a hash collision or a stale file from another config is detected by
-//! key mismatch and treated as a miss.
+//! bytes exactly, including NaN duals). New writes use the binary v5
+//! format; v4 files on disk are still hits and are migrated to v5 the
+//! first time they are read. Each file carries its full key; a hash
+//! collision or a stale file from another config is detected by key
+//! mismatch and treated as a miss.
+//!
+//! For persistent caches the memory layer is a bounded FIFO
+//! ([`MEM_CAP`] entries): disk is the source of truth, memory only
+//! absorbs the replicate-group-local reuse a streaming sweep needs, so
+//! a million-cell grid never holds a million traces resident. A pure
+//! in-memory cache (tests, one-shot runs) stays unbounded — it *is*
+//! the store.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::collections::{HashMap, VecDeque};
+use std::fmt::Write as _;
+use std::path::Path;
 use std::sync::Mutex;
 
 use crate::cluster::BarrierMode;
 use crate::optim::trace::{Record, Trace};
 use crate::optim::Objective;
 
+use super::store::ShardedStore;
+
 // v4 added the workload line; v3 added the fleet line; v2 added the
 // barrier-mode line. Files in any older format are treated as misses
-// and regenerated (the cache is always reconstructible).
-const MAGIC: &str = "hemingway-trace v4";
+// and regenerated (the cache is always reconstructible). v5 moved to
+// the binary encoding in `store`; v4 files remain readable.
+pub const MAGIC_V4: &str = "hemingway-trace v4";
+
+/// Resident-entry cap for the memory layer of a persistent cache.
+/// Sized to cover every replicate of a few in-flight aggregation
+/// groups, not a whole grid.
+pub const MEM_CAP: usize = 1024;
 
 /// FNV-1a 64-bit hash of a cache key (names the on-disk file). One
 /// shared implementation with the simulator's RNG-stream derivation.
@@ -28,15 +46,19 @@ pub fn hash_key(key: &str) -> u64 {
     crate::util::rng::fnv1a_64(key.as_bytes())
 }
 
-/// Serialize a trace (with its cache key) to the on-disk format.
+/// Serialize a trace (with its cache key) to the legacy v4 text
+/// format. Still the byte-identity yardstick in tests (and what a v4
+/// migration must reproduce); all fields are written straight into the
+/// output buffer — no per-record allocation.
 pub fn serialize_trace(key: &str, trace: &Trace) -> String {
     let mut s = String::with_capacity(64 + trace.records.len() * 48);
-    s.push_str(MAGIC);
+    s.push_str(MAGIC_V4);
     s.push('\n');
     s.push_str("key=");
     s.push_str(key);
     s.push('\n');
-    s.push_str(&format!(
+    let _ = write!(
+        s,
         "algorithm={}\nmachines={}\nbarrier={}\nfleet={}\nworkload={}\np_star={}\nrecords={}\n",
         trace.algorithm,
         trace.machines,
@@ -45,23 +67,25 @@ pub fn serialize_trace(key: &str, trace: &Trace) -> String {
         trace.workload,
         trace.p_star,
         trace.records.len()
-    ));
+    );
     for r in &trace.records {
-        s.push_str(&format!(
-            "{} {} {} {} {}\n",
+        let _ = writeln!(
+            s,
+            "{} {} {} {} {}",
             r.iter, r.sim_time, r.primal, r.dual, r.subopt
-        ));
+        );
     }
     s
 }
 
-/// Parse the on-disk format back into (key, Trace).
+/// Parse the v4 text format back into (key, Trace).
 pub fn parse_trace(text: &str) -> crate::Result<(String, Trace)> {
     let mut lines = text.lines();
-    crate::ensure!(lines.next() == Some(MAGIC), "not a trace cache file");
+    crate::ensure!(lines.next() == Some(MAGIC_V4), "not a trace cache file");
     let field = |line: Option<&str>, name: &str| -> crate::Result<String> {
         let l = line.ok_or_else(|| crate::err!("truncated trace file (missing {name})"))?;
-        l.strip_prefix(&format!("{name}="))
+        l.strip_prefix(name)
+            .and_then(|rest| rest.strip_prefix('='))
             .map(str::to_string)
             .ok_or_else(|| crate::err!("expected '{name}=' line, got '{l}'"))
     };
@@ -107,67 +131,90 @@ pub fn parse_trace(text: &str) -> crate::Result<(String, Trace)> {
     Ok((key, trace))
 }
 
-/// In-memory + optional on-disk trace cache. Thread-safe: sweep
-/// workers get/put concurrently through a mutex (one lock per cell,
-/// never held across a run).
+/// The in-memory layer: a HashMap plus FIFO insertion order for the
+/// bounded (persistent-backed) configuration.
+struct MemLayer {
+    map: HashMap<String, Trace>,
+    order: VecDeque<String>,
+    /// None = unbounded (memory-only cache).
+    cap: Option<usize>,
+}
+
+impl MemLayer {
+    fn insert(&mut self, key: &str, trace: Trace) {
+        if self.map.insert(key.to_string(), trace).is_some() {
+            return; // overwrite keeps its FIFO slot
+        }
+        self.order.push_back(key.to_string());
+        if let Some(cap) = self.cap {
+            while self.order.len() > cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                }
+            }
+        }
+    }
+}
+
+/// In-memory + optional sharded on-disk trace cache. Thread-safe:
+/// sweep workers get/put concurrently through a mutex (one lock per
+/// cell, never held across a run).
 pub struct TraceCache {
-    dir: Option<PathBuf>,
-    mem: Mutex<HashMap<String, Trace>>,
+    store: Option<ShardedStore>,
+    mem: Mutex<MemLayer>,
     hits: Mutex<(u64, u64)>, // (hits, misses) — diagnostics
 }
 
 impl TraceCache {
-    /// Memory-only cache (unit tests, one-shot runs).
+    /// Memory-only cache (unit tests, one-shot runs). Unbounded: with
+    /// no disk behind it, memory is the store.
     pub fn in_memory() -> TraceCache {
         TraceCache {
-            dir: None,
-            mem: Mutex::new(HashMap::new()),
+            store: None,
+            mem: Mutex::new(MemLayer {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                cap: None,
+            }),
             hits: Mutex::new((0, 0)),
         }
     }
 
     /// Cache persisted under `dir` (created lazily on first store), so
-    /// a second invocation skips every already-converged cell.
+    /// a second invocation skips every already-converged cell. Disk is
+    /// the source of truth; the memory layer is bounded to [`MEM_CAP`]
+    /// entries so resident traces stay O(working set), not O(grid).
     pub fn persistent(dir: &Path) -> TraceCache {
         TraceCache {
-            dir: Some(dir.to_path_buf()),
-            mem: Mutex::new(HashMap::new()),
+            store: Some(ShardedStore::open(dir)),
+            mem: Mutex::new(MemLayer {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                cap: Some(MEM_CAP),
+            }),
             hits: Mutex::new((0, 0)),
         }
     }
 
-    fn path_for(&self, key: &str) -> Option<PathBuf> {
-        self.dir
-            .as_ref()
-            .map(|d| d.join(format!("{:016x}.trace", hash_key(key))))
+    /// The sharded store behind this cache (None for memory-only).
+    pub fn store(&self) -> Option<&ShardedStore> {
+        self.store.as_ref()
     }
 
-    /// Look up a cell. Memory first, then disk (promoting the parsed
-    /// trace into memory). A disk entry whose stored key differs from
-    /// `key` — hash collision or corruption — is a miss.
+    /// Look up a cell. Memory first, then the sharded store (promoting
+    /// the decoded trace into memory). A disk entry whose stored key
+    /// differs from `key` — hash collision or corruption — is a miss;
+    /// a legacy v4 file is a hit and is migrated to v5 in passing.
     pub fn get(&self, key: &str) -> Option<Trace> {
-        if let Some(t) = self.mem.lock().unwrap().get(key) {
+        if let Some(t) = self.mem.lock().unwrap().map.get(key) {
             self.hits.lock().unwrap().0 += 1;
             return Some(t.clone());
         }
-        if let Some(path) = self.path_for(key) {
-            if let Ok(text) = std::fs::read_to_string(&path) {
-                match parse_trace(&text) {
-                    Ok((stored_key, trace)) if stored_key == key => {
-                        self.mem
-                            .lock()
-                            .unwrap()
-                            .insert(key.to_string(), trace.clone());
-                        self.hits.lock().unwrap().0 += 1;
-                        return Some(trace);
-                    }
-                    Ok(_) => {
-                        crate::log_debug!("trace cache key mismatch at {}", path.display());
-                    }
-                    Err(e) => {
-                        crate::log_warn!("unreadable trace cache file {}: {e}", path.display());
-                    }
-                }
+        if let Some(store) = &self.store {
+            if let Some(trace) = store.load(key) {
+                self.mem.lock().unwrap().insert(key, trace.clone());
+                self.hits.lock().unwrap().0 += 1;
+                return Some(trace);
             }
         }
         self.hits.lock().unwrap().1 += 1;
@@ -178,21 +225,31 @@ impl TraceCache {
     /// memory-only caching with a warning — a sweep never fails because
     /// the cache directory is read-only.
     pub fn put(&self, key: &str, trace: &Trace) {
-        self.mem
-            .lock()
-            .unwrap()
-            .insert(key.to_string(), trace.clone());
-        if let Some(path) = self.path_for(key) {
-            let write = || -> crate::Result<()> {
-                if let Some(parent) = path.parent() {
-                    std::fs::create_dir_all(parent)?;
-                }
-                std::fs::write(&path, serialize_trace(key, trace))?;
-                Ok(())
-            };
-            if let Err(e) = write() {
-                crate::log_warn!("could not persist trace cache entry: {e}");
-            }
+        let mut buf = Vec::new();
+        self.put_buf(key, trace, &mut buf);
+    }
+
+    /// [`Self::put`] with a caller-owned encode buffer, so the sweep
+    /// hot loop reuses one scratch allocation per worker instead of
+    /// allocating per cell.
+    pub fn put_buf(&self, key: &str, trace: &Trace, buf: &mut Vec<u8>) {
+        self.mem.lock().unwrap().insert(key, trace.clone());
+        if let Some(store) = &self.store {
+            store.store(key, trace, buf);
+        }
+    }
+
+    /// Is this key already completed, *without* loading the trace?
+    /// Memory, then the append-only manifest — O(1), used by resume
+    /// planning. Advisory: a manifest entry whose file was deleted
+    /// still `get`s as a miss and reruns.
+    pub fn is_done(&self, key: &str) -> bool {
+        if self.mem.lock().unwrap().map.contains_key(key) {
+            return true;
+        }
+        match &self.store {
+            Some(store) => store.manifest_contains(key),
+            None => false,
         }
     }
 
@@ -201,9 +258,10 @@ impl TraceCache {
         *self.hits.lock().unwrap()
     }
 
-    /// Entries resident in memory.
+    /// Entries resident in memory (bounded by [`MEM_CAP`] for
+    /// persistent caches).
     pub fn len(&self) -> usize {
-        self.mem.lock().unwrap().len()
+        self.mem.lock().unwrap().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -269,12 +327,12 @@ mod tests {
         assert!(parse_trace(v3).is_err());
         // So does a file naming a barrier mode or workload this build
         // doesn't know.
-        let weird = serialize_trace("k", &sample_trace())
-            .replace("barrier=bsp", "barrier=quantum");
+        let weird =
+            serialize_trace("k", &sample_trace()).replace("barrier=bsp", "barrier=quantum");
         let err = parse_trace(&weird).unwrap_err().to_string();
         assert!(err.contains("barrier mode"), "{err}");
-        let weird = serialize_trace("k", &sample_trace())
-            .replace("workload=hinge", "workload=quantum");
+        let weird =
+            serialize_trace("k", &sample_trace()).replace("workload=hinge", "workload=quantum");
         let err = parse_trace(&weird).unwrap_err().to_string();
         assert!(err.contains("workload"), "{err}");
     }
@@ -288,7 +346,8 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let c = TraceCache::persistent(&dir);
         let t = sample_trace();
-        // Forge the v3 layout (no workload line) at the key's slot.
+        // Forge the v3 layout (no workload line) at the key's slot —
+        // the pre-shard flat path, where a real v3 cache would sit.
         let v3 = serialize_trace("cell-v3", &t)
             .replace("hemingway-trace v4", "hemingway-trace v3")
             .replace("workload=hinge\n", "");
@@ -296,7 +355,7 @@ mod tests {
         let path = dir.join(format!("{:016x}.trace", hash_key("cell-v3")));
         std::fs::write(&path, v3).unwrap();
         assert!(c.get("cell-v3").is_none(), "v3 file served as a hit");
-        // The regenerated entry overwrites the stale file and hits.
+        // The regenerated entry shadows the stale file and hits.
         c.put("cell-v3", &t);
         let c2 = TraceCache::persistent(&dir);
         assert!(c2.get("cell-v3").is_some());
@@ -341,7 +400,8 @@ mod tests {
         let c = TraceCache::persistent(&dir);
         let t = sample_trace();
         c.put("key-a", &t);
-        // Simulate a hash collision: key-b's slot holds key-a's bytes.
+        // Simulate a hash collision: key-b's flat slot holds key-a's
+        // bytes (v4, the layout a collision would historically hit).
         let path = dir.join(format!("{:016x}.trace", hash_key("key-b")));
         std::fs::write(&path, serialize_trace("key-a", &t)).unwrap();
         assert!(c.get("key-b").is_none());
@@ -363,5 +423,42 @@ mod tests {
         assert!(c
             .get("ctx|max_iters=500|algo=cocoa;m=16;rep=0;seed=1")
             .is_some());
+    }
+
+    #[test]
+    fn persistent_memory_layer_is_bounded_but_disk_still_hits() {
+        let dir = std::env::temp_dir().join("hemingway_trace_cache_bounded");
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = TraceCache::persistent(&dir);
+        let t = sample_trace();
+        let n = MEM_CAP + 50;
+        for i in 0..n {
+            c.put(&format!("cell-{i}"), &t);
+        }
+        // Residency is capped — a big sweep never holds the whole grid
+        // in memory...
+        assert_eq!(c.len(), MEM_CAP);
+        // ...the earliest entries were evicted from memory but still
+        // hit through the sharded store, and everything is `is_done`.
+        let back = c.get("cell-0").unwrap();
+        assert_eq!(
+            serialize_trace("cell-0", &back),
+            serialize_trace("cell-0", &t)
+        );
+        assert!((0..n).all(|i| c.is_done(&format!("cell-{i}"))));
+        assert!(!c.is_done("cell-never-ran"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn in_memory_cache_is_unbounded_and_is_done_tracks_membership() {
+        let c = TraceCache::in_memory();
+        let t = sample_trace();
+        for i in 0..MEM_CAP + 50 {
+            c.put(&format!("cell-{i}"), &t);
+        }
+        assert_eq!(c.len(), MEM_CAP + 50);
+        assert!(c.is_done("cell-0"));
+        assert!(!c.is_done("cell-missing"));
     }
 }

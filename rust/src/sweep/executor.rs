@@ -7,18 +7,69 @@
 //! it or in what order — so `threads=1` and `threads=N` produce
 //! identical results, and CI pins `HEMINGWAY_THREADS=1` purely to make
 //! scheduling reproducible, not correctness.
+//!
+//! Large grids run through the *streaming* entry points
+//! ([`SweepEngine::run_cells_stream`] + [`StreamAggregator`]): cells
+//! are executed in bounded chunks and handed to a sink in grid order,
+//! so peak resident traces are O(chunk), and aggregation folds each
+//! trace into per-group accumulators instead of holding the whole
+//! grid. [`SweepEngine::plan`] consults the store's manifest to report
+//! how much of a grid is already done — the basis of `sweep --resume`.
+
+use std::collections::HashMap;
+use std::time::Instant;
 
 use super::cache::TraceCache;
-use super::spec::{cell_key, CellSpec};
+use super::spec::{cell_key_into, CellSpec};
+use crate::cluster::BarrierMode;
 use crate::optim::trace::Trace;
+use crate::optim::Objective;
 use crate::util::stats::{self, MeanStd};
-use crate::util::threadpool::{default_threads, parallel_map};
+use crate::util::threadpool::{default_threads, parallel_map, parallel_map_init};
+
+/// Per-worker scratch reused across every cell a worker runs: the
+/// derived cache key and the v5 encode buffer. Runners may use these
+/// fields as general-purpose scratch during a run (the executor
+/// re-derives the key afterwards); they must never let scratch leak
+/// into the returned trace — which cells share a scratch depends on
+/// scheduling, and traces must not.
+#[derive(Default)]
+pub struct CellScratch {
+    /// Cache-key buffer (rewritten per cell by the executor).
+    pub key: String,
+    /// Trace encode buffer (reused by the cache's `put_buf`).
+    pub encode: Vec<u8>,
+}
+
+/// What a streaming run delivers per finished cell, in grid order.
+pub type CellSink<'a> = dyn FnMut(usize, Trace) -> crate::Result<()> + 'a;
+
+/// A runner executes one cell (parallel flavor).
+pub type CellRunner = dyn Fn(&CellSpec, &mut CellScratch) -> crate::Result<Trace> + Sync;
+
+/// How much of a grid is already in the store (manifest-backed, O(1)
+/// per cell — no trace is loaded).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SweepPlan {
+    pub total: usize,
+    pub done: usize,
+}
+
+impl SweepPlan {
+    pub fn remaining(&self) -> usize {
+        self.total - self.done
+    }
+}
 
 /// Parallel, cache-aware executor for sweep grids.
 pub struct SweepEngine {
     /// Worker threads for cell fan-out (≥ 1).
     pub threads: usize,
     pub cache: TraceCache,
+    /// Emit throttled progress lines (done/total, cells/s, ETA) to
+    /// stderr while streaming. Off by default; the `sweep` CLI turns
+    /// it on.
+    pub progress: bool,
 }
 
 impl SweepEngine {
@@ -26,6 +77,7 @@ impl SweepEngine {
         SweepEngine {
             threads: threads.max(1),
             cache,
+            progress: false,
         }
     }
 
@@ -51,22 +103,80 @@ impl SweepEngine {
         parallel_map(n, self.threads, f).into_iter().collect()
     }
 
+    /// How much of this grid the store has already completed —
+    /// memory/manifest membership only, no trace bytes are read. This
+    /// is what `sweep --resume` prints before running the remainder.
+    pub fn plan(&self, context_key: &str, cells: &[CellSpec]) -> SweepPlan {
+        let mut key = String::new();
+        let done = cells
+            .iter()
+            .filter(|cell| {
+                cell_key_into(&mut key, context_key, cell);
+                self.cache.is_done(&key)
+            })
+            .count();
+        SweepPlan {
+            total: cells.len(),
+            done,
+        }
+    }
+
     /// Run every cell through `runner`, in parallel, consulting the
     /// cache first. `context_key` pins everything the runner closes
     /// over (dataset, profile, backend, stopping rules) — it is the
     /// config-hash prefix of every cell's cache key. Results are in
     /// `cells` order.
+    ///
+    /// This collects the whole grid; for grids too large to hold
+    /// resident, use [`Self::run_cells_stream`].
     pub fn run_cells(
         &self,
         context_key: &str,
         cells: &[CellSpec],
-        runner: &(dyn Fn(&CellSpec) -> crate::Result<Trace> + Sync),
+        runner: &CellRunner,
     ) -> crate::Result<Vec<Trace>> {
-        parallel_map(cells.len(), self.threads, |i| {
-            self.run_one_cell(context_key, &cells[i], runner)
-        })
-        .into_iter()
-        .collect()
+        let mut out = Vec::with_capacity(cells.len());
+        self.run_cells_stream(context_key, cells, runner, &mut |_, t| {
+            out.push(t);
+            Ok(())
+        })?;
+        Ok(out)
+    }
+
+    /// Streaming variant of [`Self::run_cells`]: cells execute in
+    /// bounded chunks (a few per worker), and each finished trace is
+    /// handed to `sink(index, trace)` in grid order — so peak resident
+    /// traces are O(threads), however large the grid. The sink runs on
+    /// the coordinating thread between chunks; a sink error aborts the
+    /// sweep (already-finished cells are in the store and resume).
+    pub fn run_cells_stream(
+        &self,
+        context_key: &str,
+        cells: &[CellSpec],
+        runner: &CellRunner,
+        sink: &mut CellSink,
+    ) -> crate::Result<()> {
+        let chunk_size = (self.threads * 4).max(1);
+        let start = Instant::now();
+        let mut last_report = start;
+        let mut done = 0usize;
+        for (ci, chunk) in cells.chunks(chunk_size).enumerate() {
+            let base = ci * chunk_size;
+            let results = parallel_map_init(
+                chunk.len(),
+                self.threads,
+                CellScratch::default,
+                |i, scratch| {
+                    self.run_one_cell(context_key, &chunk[i], &mut |c, s| runner(c, s), scratch)
+                },
+            );
+            for (i, r) in results.into_iter().enumerate() {
+                sink(base + i, r?)?;
+            }
+            done += chunk.len();
+            self.report_progress(done, cells.len(), start, &mut last_report);
+        }
+        Ok(())
     }
 
     /// Serial variant for backends that must not be shared across
@@ -76,35 +186,89 @@ impl SweepEngine {
         &self,
         context_key: &str,
         cells: &[CellSpec],
-        runner: &mut dyn FnMut(&CellSpec) -> crate::Result<Trace>,
+        runner: &mut dyn FnMut(&CellSpec, &mut CellScratch) -> crate::Result<Trace>,
     ) -> crate::Result<Vec<Trace>> {
         let mut out = Vec::with_capacity(cells.len());
-        for cell in cells {
-            let key = cell_key(context_key, cell);
-            if let Some(t) = self.cache.get(&key) {
-                out.push(t);
-                continue;
-            }
-            let t = runner(cell)?;
-            self.cache.put(&key, &t);
+        self.run_cells_serial_stream(context_key, cells, runner, &mut |_, t| {
             out.push(t);
-        }
+            Ok(())
+        })?;
         Ok(out)
+    }
+
+    /// Streaming serial execution: one scratch for the whole grid, one
+    /// trace resident at a time.
+    pub fn run_cells_serial_stream(
+        &self,
+        context_key: &str,
+        cells: &[CellSpec],
+        runner: &mut dyn FnMut(&CellSpec, &mut CellScratch) -> crate::Result<Trace>,
+        sink: &mut CellSink,
+    ) -> crate::Result<()> {
+        let mut scratch = CellScratch::default();
+        let start = Instant::now();
+        let mut last_report = start;
+        for (i, cell) in cells.iter().enumerate() {
+            let t = self.run_one_cell(context_key, cell, runner, &mut scratch)?;
+            sink(i, t)?;
+            self.report_progress(i + 1, cells.len(), start, &mut last_report);
+        }
+        Ok(())
     }
 
     fn run_one_cell(
         &self,
         context_key: &str,
         cell: &CellSpec,
-        runner: &(dyn Fn(&CellSpec) -> crate::Result<Trace> + Sync),
+        runner: &mut dyn FnMut(&CellSpec, &mut CellScratch) -> crate::Result<Trace>,
+        scratch: &mut CellScratch,
     ) -> crate::Result<Trace> {
-        let key = cell_key(context_key, cell);
-        if let Some(t) = self.cache.get(&key) {
+        cell_key_into(&mut scratch.key, context_key, cell);
+        if let Some(t) = self.cache.get(&scratch.key) {
             return Ok(t);
         }
-        let t = runner(cell)?;
-        self.cache.put(&key, &t);
+        let t = runner(cell, scratch)?;
+        // The runner is allowed to use the scratch; re-derive the key
+        // before storing.
+        cell_key_into(&mut scratch.key, context_key, cell);
+        self.cache.put_buf(&scratch.key, &t, &mut scratch.encode);
         Ok(t)
+    }
+
+    /// Throttled (≥ 1 s apart, always on completion) progress line.
+    fn report_progress(&self, done: usize, total: usize, start: Instant, last: &mut Instant) {
+        if !self.progress || total == 0 {
+            return;
+        }
+        let now = Instant::now();
+        if done < total && now.duration_since(*last).as_secs_f64() < 1.0 {
+            return;
+        }
+        *last = now;
+        let elapsed = now.duration_since(start).as_secs_f64();
+        let rate = if elapsed > 0.0 {
+            done as f64 / elapsed
+        } else {
+            f64::INFINITY
+        };
+        let eta = if rate > 0.0 && rate.is_finite() {
+            (total - done) as f64 / rate
+        } else {
+            0.0
+        };
+        eprintln!(
+            "sweep: {done}/{total} cells ({:.1}%) · {rate:.1} cells/s · eta {}",
+            100.0 * done as f64 / total as f64,
+            format_eta(eta)
+        );
+    }
+}
+
+fn format_eta(secs: f64) -> String {
+    if secs >= 90.0 {
+        format!("{:.1}min", secs / 60.0)
+    } else {
+        format!("{secs:.1}s")
     }
 }
 
@@ -114,11 +278,11 @@ impl SweepEngine {
 pub struct CellAggregate {
     pub algorithm: String,
     pub machines: usize,
-    pub barrier_mode: crate::cluster::BarrierMode,
+    pub barrier_mode: BarrierMode,
     /// Fleet wire name ("" = the context's default uniform fleet).
     pub fleet: String,
     /// The objective the cell optimized.
-    pub workload: crate::optim::Objective,
+    pub workload: Objective,
     pub replicates: usize,
     /// Replicates that reached the suboptimality target.
     pub reached: usize,
@@ -145,75 +309,165 @@ fn agg_or_nan(xs: &[f64]) -> MeanStd {
     }
 }
 
+/// Per-group accumulator: only the scalar metric samples are kept, the
+/// trace itself is dropped after [`StreamAggregator::push`].
+struct GroupAcc {
+    algorithm: String,
+    machines: usize,
+    mode: BarrierMode,
+    fleet: String,
+    workload: Objective,
+    replicates: usize,
+    iters: Vec<f64>,
+    times: Vec<f64>,
+    finals: Vec<f64>,
+    iter_times: Vec<f64>,
+}
+
+impl GroupAcc {
+    fn matches(&self, t: &Trace) -> bool {
+        self.algorithm == t.algorithm
+            && self.machines == t.machines
+            && self.mode == t.barrier_mode
+            && self.fleet == t.fleet
+            && self.workload == t.workload
+    }
+}
+
+fn fnv_step(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Hash a trace's group identity without allocating.
+fn group_hash(t: &Trace) -> u64 {
+    let (mode_tag, staleness) = match t.barrier_mode {
+        BarrierMode::Bsp => (0u8, 0usize),
+        BarrierMode::Ssp { staleness } => (1, staleness),
+        BarrierMode::Async => (2, 0),
+    };
+    let mut h = 0xCBF2_9CE4_8422_2325;
+    h = fnv_step(h, t.algorithm.as_bytes());
+    h = fnv_step(h, &[0xFF]);
+    h = fnv_step(h, &(t.machines as u64).to_le_bytes());
+    h = fnv_step(h, &[mode_tag]);
+    h = fnv_step(h, &(staleness as u64).to_le_bytes());
+    h = fnv_step(h, t.fleet.as_bytes());
+    h = fnv_step(h, &[0xFF]);
+    h = fnv_step(h, t.workload.as_str().as_bytes());
+    h
+}
+
+/// Fold-style replacement for whole-grid aggregation: push traces one
+/// at a time (each is reduced to its scalar metrics and dropped), then
+/// [`Self::finish`] into the same `Vec<CellAggregate>` — same groups,
+/// same first-seen order, same numerics — that [`aggregate`] returns.
+/// Peak memory is O(groups), not O(traces).
+pub struct StreamAggregator {
+    target_subopt: f64,
+    groups: Vec<GroupAcc>,
+    /// group-identity hash → indices into `groups` (collision-checked
+    /// by full field comparison), so push is O(1) instead of a linear
+    /// scan over all groups.
+    index: HashMap<u64, Vec<usize>>,
+}
+
+impl StreamAggregator {
+    pub fn new(target_subopt: f64) -> StreamAggregator {
+        StreamAggregator {
+            target_subopt,
+            groups: Vec::new(),
+            index: HashMap::new(),
+        }
+    }
+
+    /// Groups seen so far.
+    pub fn len(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+
+    /// Fold one replicate trace into its group's accumulators.
+    pub fn push(&mut self, t: &Trace) {
+        let h = group_hash(t);
+        let found = self
+            .index
+            .get(&h)
+            .and_then(|cands| cands.iter().copied().find(|&i| self.groups[i].matches(t)));
+        let gi = match found {
+            Some(i) => i,
+            None => {
+                let i = self.groups.len();
+                self.groups.push(GroupAcc {
+                    algorithm: t.algorithm.clone(),
+                    machines: t.machines,
+                    mode: t.barrier_mode,
+                    fleet: t.fleet.clone(),
+                    workload: t.workload,
+                    replicates: 0,
+                    iters: Vec::new(),
+                    times: Vec::new(),
+                    finals: Vec::new(),
+                    iter_times: Vec::new(),
+                });
+                self.index.entry(h).or_default().push(i);
+                i
+            }
+        };
+        let g = &mut self.groups[gi];
+        g.replicates += 1;
+        if let Some(iters) = t.iters_to(self.target_subopt) {
+            g.iters.push(iters as f64);
+        }
+        if let Some(time) = t.time_to(self.target_subopt) {
+            g.times.push(time);
+        }
+        g.finals.push(t.final_subopt());
+        let it = t.mean_iter_time();
+        if it.is_finite() {
+            g.iter_times.push(it);
+        }
+    }
+
+    /// Finish into per-cell aggregates, in first-seen group order.
+    pub fn finish(self) -> Vec<CellAggregate> {
+        self.groups
+            .into_iter()
+            .map(|g| CellAggregate {
+                algorithm: g.algorithm,
+                machines: g.machines,
+                barrier_mode: g.mode,
+                fleet: g.fleet,
+                workload: g.workload,
+                replicates: g.replicates,
+                reached: g.iters.len(),
+                iters_to_target: agg_or_nan(&g.iters),
+                time_to_target: agg_or_nan(&g.times),
+                final_subopt: agg_or_nan(&g.finals),
+                mean_iter_time: agg_or_nan(&g.iter_times),
+            })
+            .collect()
+    }
+}
+
 /// Group replicate traces by (algorithm, machines, barrier mode,
 /// fleet, workload) — first-seen order — and aggregate each cell's
 /// metrics with mean ± stddev ([`stats::mean_stddev`]). Cells no
 /// replicate of which reached the target get NaN (not 0.0) for the
-/// to-target metrics.
+/// to-target metrics. (A fold over [`StreamAggregator`]; callers that
+/// stream should use the aggregator directly and never materialize
+/// the slice.)
 pub fn aggregate(traces: &[Trace], target_subopt: f64) -> Vec<CellAggregate> {
-    type Key = (
-        String,
-        usize,
-        crate::cluster::BarrierMode,
-        String,
-        crate::optim::Objective,
-    );
-    let mut order: Vec<Key> = Vec::new();
+    let mut acc = StreamAggregator::new(target_subopt);
     for t in traces {
-        let k = (
-            t.algorithm.clone(),
-            t.machines,
-            t.barrier_mode,
-            t.fleet.clone(),
-            t.workload,
-        );
-        if !order.contains(&k) {
-            order.push(k);
-        }
+        acc.push(t);
     }
-    order
-        .into_iter()
-        .map(|(algo, m, mode, fleet, workload)| {
-            let group: Vec<&Trace> = traces
-                .iter()
-                .filter(|t| {
-                    t.algorithm == algo
-                        && t.machines == m
-                        && t.barrier_mode == mode
-                        && t.fleet == fleet
-                        && t.workload == workload
-                })
-                .collect();
-            let iters: Vec<f64> = group
-                .iter()
-                .filter_map(|t| t.iters_to(target_subopt))
-                .map(|i| i as f64)
-                .collect();
-            let times: Vec<f64> = group
-                .iter()
-                .filter_map(|t| t.time_to(target_subopt))
-                .collect();
-            let finals: Vec<f64> = group.iter().map(|t| t.final_subopt()).collect();
-            let iter_times: Vec<f64> = group
-                .iter()
-                .map(|t| t.mean_iter_time())
-                .filter(|v| v.is_finite())
-                .collect();
-            CellAggregate {
-                algorithm: algo,
-                machines: m,
-                barrier_mode: mode,
-                fleet,
-                workload,
-                replicates: group.len(),
-                reached: iters.len(),
-                iters_to_target: agg_or_nan(&iters),
-                time_to_target: agg_or_nan(&times),
-                final_subopt: agg_or_nan(&finals),
-                mean_iter_time: agg_or_nan(&iter_times),
-            }
-        })
-        .collect()
+    acc.finish()
 }
 
 #[cfg(test)]
@@ -228,7 +482,7 @@ mod tests {
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     /// A synthetic runner whose trace is a pure function of the cell.
-    fn synth_runner(cell: &CellSpec) -> crate::Result<Trace> {
+    fn synth_runner(cell: &CellSpec, _scratch: &mut CellScratch) -> crate::Result<Trace> {
         let mut t = Trace::new(cell.algorithm.clone(), cell.machines, 0.0);
         t.barrier_mode = cell.mode;
         t.fleet = cell.fleet.clone();
@@ -277,6 +531,40 @@ mod tests {
     }
 
     #[test]
+    fn streaming_delivers_cells_in_grid_order() {
+        let cells = grid(2).cells();
+        let engine = SweepEngine::new(4, TraceCache::in_memory());
+        let collected = engine.run_cells("ctx", &cells, &synth_runner).unwrap();
+        let mut streamed: Vec<(usize, Trace)> = Vec::new();
+        let fresh = SweepEngine::new(4, TraceCache::in_memory());
+        fresh
+            .run_cells_stream("ctx", &cells, &synth_runner, &mut |i, t| {
+                streamed.push((i, t));
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(
+            streamed.iter().map(|(i, _)| *i).collect::<Vec<_>>(),
+            (0..cells.len()).collect::<Vec<_>>()
+        );
+        let streamed: Vec<Trace> = streamed.into_iter().map(|(_, t)| t).collect();
+        assert_eq!(dump(&collected), dump(&streamed));
+    }
+
+    #[test]
+    fn streaming_sink_error_aborts() {
+        let cells = grid(1).cells();
+        let engine = SweepEngine::new(2, TraceCache::in_memory());
+        let err = engine
+            .run_cells_stream("ctx", &cells, &synth_runner, &mut |i, _| {
+                crate::ensure!(i < 2, "sink full");
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("sink full"));
+    }
+
+    #[test]
     fn real_sweep_is_thread_count_invariant() {
         // End-to-end: actual optimizer runs on the simulated cluster,
         // fixed seeds, 1 vs 4 threads — byte-identical traces.
@@ -297,7 +585,7 @@ mod tests {
             base_seed: 11,
             run: run_cfg.clone(),
         };
-        let runner = |cell: &CellSpec| -> crate::Result<Trace> {
+        let runner = |cell: &CellSpec, _scratch: &mut CellScratch| -> crate::Result<Trace> {
             let mut algo = by_name(&cell.algorithm, &problem, cell.machines, cell.seed as u32)?;
             let mut sim = BspSim::with_mode(
                 HardwareProfile::local48(),
@@ -333,9 +621,9 @@ mod tests {
         let engine = SweepEngine::new(4, TraceCache::in_memory());
         let cells = grid(2).cells();
         let calls = AtomicUsize::new(0);
-        let counting = |cell: &CellSpec| {
+        let counting = |cell: &CellSpec, scratch: &mut CellScratch| {
             calls.fetch_add(1, Ordering::Relaxed);
-            synth_runner(cell)
+            synth_runner(cell, scratch)
         };
         let first = engine.run_cells("ctx", &cells, &counting).unwrap();
         assert_eq!(calls.load(Ordering::Relaxed), cells.len());
@@ -350,9 +638,9 @@ mod tests {
         let engine = SweepEngine::new(2, TraceCache::in_memory());
         let mut g = grid(1);
         let calls = AtomicUsize::new(0);
-        let counting = |cell: &CellSpec| {
+        let counting = |cell: &CellSpec, scratch: &mut CellScratch| {
             calls.fetch_add(1, Ordering::Relaxed);
-            synth_runner(cell)
+            synth_runner(cell, scratch)
         };
         let ck = |g: &SweepGrid| format!("dataset=v1|{}", g.run_key());
         engine.run_cells(&ck(&g), &g.cells(), &counting).unwrap();
@@ -374,13 +662,30 @@ mod tests {
         engine.run_cells("ctx", &cells, &synth_runner).unwrap();
         let mut calls = 0usize;
         let out = engine
-            .run_cells_serial("ctx", &cells, &mut |cell| {
+            .run_cells_serial("ctx", &cells, &mut |cell, scratch| {
                 calls += 1;
-                synth_runner(cell)
+                synth_runner(cell, scratch)
             })
             .unwrap();
         assert_eq!(calls, 0, "serial path should hit the shared cache");
         assert_eq!(out.len(), cells.len());
+    }
+
+    #[test]
+    fn plan_reports_done_and_remaining() {
+        let engine = SweepEngine::new(2, TraceCache::in_memory());
+        let cells = grid(2).cells();
+        let before = engine.plan("ctx", &cells);
+        assert_eq!((before.total, before.done), (cells.len(), 0));
+        assert_eq!(before.remaining(), cells.len());
+        // Run only the first three cells, as an interrupted sweep would.
+        engine.run_cells("ctx", &cells[..3], &synth_runner).unwrap();
+        let mid = engine.plan("ctx", &cells);
+        assert_eq!((mid.total, mid.done), (cells.len(), 3));
+        // A different context shares nothing.
+        assert_eq!(engine.plan("other", &cells).done, 0);
+        engine.run_cells("ctx", &cells, &synth_runner).unwrap();
+        assert_eq!(engine.plan("ctx", &cells).remaining(), 0);
     }
 
     #[test]
@@ -417,6 +722,57 @@ mod tests {
         assert!(unreached[0].iters_to_target.mean.is_nan());
         assert!(unreached[0].time_to_target.mean.is_nan());
         assert!(!unreached[0].final_subopt.mean.is_nan());
+    }
+
+    #[test]
+    fn streaming_aggregator_matches_batch_aggregate() {
+        // Fold a realistic multi-axis replicate stream one trace at a
+        // time; the result must be indistinguishable from the batch
+        // path (same groups, same order, same numerics bit-for-bit).
+        let mut g = grid(3);
+        g.modes = vec![
+            BarrierMode::Bsp,
+            BarrierMode::Ssp { staleness: 2 },
+            BarrierMode::Async,
+        ];
+        g.workloads = vec![Objective::Hinge, Objective::Ridge];
+        let cells = g.cells();
+        let traces: Vec<Trace> = cells
+            .iter()
+            .map(|c| synth_runner(c, &mut CellScratch::default()).unwrap())
+            .collect();
+        let batch = aggregate(&traces, 1e-3);
+        let mut acc = StreamAggregator::new(1e-3);
+        assert!(acc.is_empty());
+        for t in &traces {
+            acc.push(t);
+        }
+        let streamed = acc.finish();
+        assert_eq!(batch.len(), streamed.len());
+        for (b, s) in batch.iter().zip(&streamed) {
+            assert_eq!(b.algorithm, s.algorithm);
+            assert_eq!(b.machines, s.machines);
+            assert_eq!(b.barrier_mode, s.barrier_mode);
+            assert_eq!(b.fleet, s.fleet);
+            assert_eq!(b.workload, s.workload);
+            assert_eq!((b.replicates, b.reached), (s.replicates, s.reached));
+            assert_eq!(
+                b.iters_to_target.mean.to_bits(),
+                s.iters_to_target.mean.to_bits()
+            );
+            assert_eq!(
+                b.time_to_target.std.to_bits(),
+                s.time_to_target.std.to_bits()
+            );
+            assert_eq!(
+                b.final_subopt.mean.to_bits(),
+                s.final_subopt.mean.to_bits()
+            );
+            assert_eq!(
+                b.mean_iter_time.mean.to_bits(),
+                s.mean_iter_time.mean.to_bits()
+            );
+        }
     }
 
     #[test]
@@ -509,11 +865,11 @@ mod tests {
     fn errors_propagate_from_workers() {
         let engine = SweepEngine::new(4, TraceCache::in_memory());
         let cells = grid(1).cells();
-        let failing = |cell: &CellSpec| -> crate::Result<Trace> {
+        let failing = |cell: &CellSpec, scratch: &mut CellScratch| -> crate::Result<Trace> {
             if cell.machines == 4 {
                 crate::bail!("machine 4 exploded");
             }
-            synth_runner(cell)
+            synth_runner(cell, scratch)
         };
         let err = engine.run_cells("ctx", &cells, &failing).unwrap_err();
         assert!(err.to_string().contains("exploded"));

@@ -12,9 +12,19 @@
 //!   [`crate::util::threadpool::parallel_map`] with a shared read-only
 //!   `Problem`/`p_star` and per-task `BspSim` instances, plus
 //!   seed-replication aggregation ([`aggregate`]);
-//! * [`cache`] — the [`TraceCache`]: in-memory + on-disk traces keyed
-//!   by a config hash, byte-identical on reload, so repeated figure
-//!   runs and advisor queries skip already-converged cells.
+//! * [`cache`] — the [`TraceCache`]: a bounded in-memory layer over
+//!   the sharded [`store`], keyed by a config hash, byte-identical on
+//!   reload, so repeated figure runs and advisor queries skip
+//!   already-converged cells;
+//! * [`store`] — the sharded on-disk layout: hash-prefix directory
+//!   fan-out, compact binary trace encoding (format v5, bit-exact
+//!   f64s), header-only probes, and the append-only manifest that
+//!   makes `sweep --resume` planning O(1) per cell.
+//!
+//! Grids too large to hold resident run through the streaming entry
+//! points ([`SweepEngine::run_cells_stream`] feeding a
+//! [`StreamAggregator`]), which bound peak trace residency by the
+//! chunk size rather than the grid size.
 //!
 //! Thread count defaults to
 //! [`crate::util::threadpool::default_threads`], which honors the
@@ -24,7 +34,11 @@
 pub mod cache;
 pub mod executor;
 pub mod spec;
+pub mod store;
 
 pub use cache::TraceCache;
-pub use executor::{aggregate, CellAggregate, SweepEngine};
+pub use executor::{
+    aggregate, CellAggregate, CellScratch, StreamAggregator, SweepEngine, SweepPlan,
+};
 pub use spec::{cell_key, cell_seed, mix_seed, CellSpec, SweepGrid};
+pub use store::ShardedStore;

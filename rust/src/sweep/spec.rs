@@ -170,7 +170,18 @@ impl SweepGrid {
 /// profile, backend, stopping rules). The sweep executor and every
 /// caller key the trace cache through this single function.
 pub fn cell_key(context_key: &str, cell: &CellSpec) -> String {
-    format!(
+    let mut out = String::new();
+    cell_key_into(&mut out, context_key, cell);
+    out
+}
+
+/// [`cell_key`] into a caller-owned buffer — the sweep hot loop derives
+/// one key per cell and reuses a per-worker scratch String for it.
+pub fn cell_key_into(out: &mut String, context_key: &str, cell: &CellSpec) {
+    use std::fmt::Write as _;
+    out.clear();
+    let _ = write!(
+        out,
         "{context_key}|algo={};m={};mode={};fleet={};workload={};rep={};seed={}",
         cell.algorithm,
         cell.machines,
@@ -179,7 +190,7 @@ pub fn cell_key(context_key: &str, cell: &CellSpec) -> String {
         cell.workload,
         cell.replicate,
         cell.seed
-    )
+    );
 }
 
 #[cfg(test)]

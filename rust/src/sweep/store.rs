@@ -1,0 +1,710 @@
+//! The sharded on-disk trace store: directory fan-out by key-hash
+//! prefix, a compact length-prefixed binary record encoding (format
+//! v5), and a single append-only manifest that makes resumable sweeps
+//! O(1) to plan.
+//!
+//! Layout under the store root:
+//!
+//! ```text
+//! cache/
+//!   MANIFEST            append-only: "hemingway-manifest v1" + one
+//!                       "<fnv16>\t<key>" line per completed cell
+//!   a3/a3f0…c2.trace    shard = first two hex chars of the key hash
+//!   7b/7b09…11.trace
+//!   <fnv16>.trace       legacy v4 flat layout — still readable; a hit
+//!                       is served bit-identically and migrated to v5
+//! ```
+//!
+//! Every `.trace` file starts with a two-line text header
+//! (`MAGIC\nkey=<full key>\n`) regardless of format, so a **probe**
+//! reads only that prefix to decide hit/miss — cold probes and
+//! collision/stale-file rejections never parse record bodies. The v5
+//! body is binary: length-prefixed strings and `f64::to_bits`
+//! round-tripping, so every float (NaN payloads included) survives
+//! bit-exactly and re-encoding a decoded trace reproduces the stored
+//! bytes.
+//!
+//! The manifest is advisory, never authoritative: the shard files are
+//! ground truth. A truncated or forged manifest line is skipped with a
+//! warning, a manifest entry whose file vanished simply re-runs, and a
+//! hit whose key the manifest lost is re-appended (self-healing) — so
+//! `sweep --resume` survives any torn write.
+
+use std::collections::HashSet;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::cluster::BarrierMode;
+use crate::optim::trace::{Record, Trace};
+use crate::optim::Objective;
+
+use super::cache::{hash_key, parse_trace, MAGIC_V4};
+
+/// Magic line of the binary v5 format (v4 and older are text).
+pub const MAGIC_V5: &str = "hemingway-trace v5";
+/// First line of a well-formed manifest.
+pub const MANIFEST_MAGIC: &str = "hemingway-manifest v1";
+/// Manifest file name under the store root.
+pub const MANIFEST_FILE: &str = "MANIFEST";
+
+/// How much of a file the header probe reads. Big enough for the magic
+/// line plus any realistic cache key; longer keys fall back to a full
+/// read (correctness never depends on the cap).
+const PROBE_BYTES: usize = 4096;
+
+// ---------------------------------------------------------------------------
+// v5 binary encoding
+// ---------------------------------------------------------------------------
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Encode a trace (with its cache key) into the v5 binary format,
+/// reusing `out`'s capacity (the sweep hot loop hands every worker one
+/// scratch buffer instead of allocating per cell).
+pub fn encode_trace_into(key: &str, trace: &Trace, out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(64 + key.len() + trace.records.len() * 40);
+    out.extend_from_slice(MAGIC_V5.as_bytes());
+    out.push(b'\n');
+    out.extend_from_slice(b"key=");
+    out.extend_from_slice(key.as_bytes());
+    out.push(b'\n');
+    put_str(out, &trace.algorithm);
+    put_u64(out, trace.machines as u64);
+    put_str(out, &trace.barrier_mode.as_str());
+    put_str(out, &trace.fleet);
+    put_str(out, trace.workload.as_str());
+    put_f64(out, trace.p_star);
+    put_u64(out, trace.records.len() as u64);
+    for r in &trace.records {
+        put_u64(out, r.iter as u64);
+        put_f64(out, r.sim_time);
+        put_f64(out, r.primal);
+        put_f64(out, r.dual);
+        put_f64(out, r.subopt);
+    }
+}
+
+/// Convenience allocating wrapper around [`encode_trace_into`].
+pub fn encode_trace(key: &str, trace: &Trace) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_trace_into(key, trace, &mut out);
+    out
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &str) -> crate::Result<&'a [u8]> {
+        crate::ensure!(
+            self.pos + n <= self.bytes.len(),
+            "truncated v5 trace (reading {what} at offset {})",
+            self.pos
+        );
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self, what: &str) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &str) -> crate::Result<f64> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    fn str(&mut self, what: &str) -> crate::Result<String> {
+        let len = u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()) as usize;
+        let raw = self.take(len, what)?;
+        String::from_utf8(raw.to_vec()).map_err(|e| crate::err!("bad utf-8 in {what}: {e}"))
+    }
+}
+
+/// Decode a v5 binary file back into (key, Trace). Strict: truncation,
+/// bad UTF-8, or an unknown barrier mode / workload is an error (the
+/// cache layer treats errors as misses and regenerates).
+pub fn decode_trace_v5(bytes: &[u8]) -> crate::Result<(String, Trace)> {
+    let body = strip_header(bytes, MAGIC_V5)?;
+    let (key, body) = body;
+    let mut c = Cursor { bytes: body, pos: 0 };
+    let algorithm = c.str("algorithm")?;
+    let machines = c.u64("machines")? as usize;
+    let barrier_mode = BarrierMode::parse(&c.str("barrier")?)?;
+    let fleet = c.str("fleet")?;
+    let workload = Objective::parse(&c.str("workload")?)?;
+    let p_star = c.f64("p_star")?;
+    let n = c.u64("record count")? as usize;
+    // A forged count can't make us allocate past the file's own size
+    // (checked_mul: u64::MAX * 40 must error, not wrap).
+    crate::ensure!(
+        n.checked_mul(40) == Some(c.bytes.len() - c.pos),
+        "v5 trace body length {} does not match {} records",
+        c.bytes.len() - c.pos,
+        n
+    );
+    let mut trace = Trace::new(algorithm, machines, p_star);
+    trace.barrier_mode = barrier_mode;
+    trace.fleet = fleet;
+    trace.workload = workload;
+    trace.records.reserve_exact(n);
+    for _ in 0..n {
+        trace.push(Record {
+            iter: c.u64("record")? as usize,
+            sim_time: c.f64("record")?,
+            primal: c.f64("record")?,
+            dual: c.f64("record")?,
+            subopt: c.f64("record")?,
+        });
+    }
+    Ok((key, trace))
+}
+
+/// Split a trace file into its (key, body-after-header) given the
+/// expected magic line.
+fn strip_header<'a>(bytes: &'a [u8], magic: &str) -> crate::Result<(String, &'a [u8])> {
+    let (m, k, body_start) =
+        header_lines(bytes).ok_or_else(|| crate::err!("missing trace header"))?;
+    crate::ensure!(m == magic.as_bytes(), "not a {magic} file");
+    let key = std::str::from_utf8(k)
+        .map_err(|e| crate::err!("bad utf-8 in trace key: {e}"))?
+        .to_string();
+    Ok((key, &bytes[body_start..]))
+}
+
+/// The first two header lines (magic, key-line payload) and the offset
+/// of the body. Returns None when the prefix holds fewer than two
+/// newlines or the second line is not `key=`.
+fn header_lines(bytes: &[u8]) -> Option<(&[u8], &[u8], usize)> {
+    let nl1 = bytes.iter().position(|&b| b == b'\n')?;
+    let rest = &bytes[nl1 + 1..];
+    let nl2 = rest.iter().position(|&b| b == b'\n')?;
+    let line1 = rest[..nl2].strip_prefix(b"key=")?;
+    Some((&bytes[..nl1], line1, nl1 + 1 + nl2 + 1))
+}
+
+/// Decode any readable on-disk format (v5 binary or v4 text) into
+/// (key, Trace, was_legacy_text).
+pub fn decode_any(bytes: &[u8]) -> crate::Result<(String, Trace, bool)> {
+    match header_lines(bytes) {
+        Some((m, _, _)) if m == MAGIC_V5.as_bytes() => {
+            let (key, trace) = decode_trace_v5(bytes)?;
+            Ok((key, trace, false))
+        }
+        Some((m, _, _)) if m == MAGIC_V4.as_bytes() => {
+            let text = std::str::from_utf8(bytes)
+                .map_err(|e| crate::err!("bad utf-8 in v4 trace: {e}"))?;
+            let (key, trace) = parse_trace(text)?;
+            Ok((key, trace, true))
+        }
+        _ => crate::bail!("not a readable trace file (v4/v5)"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The sharded store
+// ---------------------------------------------------------------------------
+
+/// What a header-only probe concluded about one key's slot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Probe {
+    /// No file, wrong key, or an unreadable/old format.
+    Miss,
+    /// A v5 file in the sharded layout carries this key.
+    V5(PathBuf),
+    /// A legacy v4 text file (flat layout) carries this key — a hit
+    /// that wants migration.
+    V4(PathBuf),
+}
+
+#[derive(Default)]
+struct Manifest {
+    loaded: bool,
+    keys: HashSet<String>,
+}
+
+/// Sharded on-disk trace store with an append-only manifest.
+pub struct ShardedStore {
+    root: PathBuf,
+    manifest: Mutex<Manifest>,
+}
+
+impl ShardedStore {
+    pub fn open(root: &Path) -> ShardedStore {
+        ShardedStore {
+            root: root.to_path_buf(),
+            manifest: Mutex::new(Manifest::default()),
+        }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// The sharded path for a key hash: `<root>/<hh>/<hash16>.trace`.
+    pub fn shard_path(&self, hash: u64) -> PathBuf {
+        self.root
+            .join(format!("{:02x}", hash >> 56))
+            .join(format!("{hash:016x}.trace"))
+    }
+
+    /// The pre-shard flat path (v4 layout): `<root>/<hash16>.trace`.
+    pub fn legacy_path(&self, hash: u64) -> PathBuf {
+        self.root.join(format!("{hash:016x}.trace"))
+    }
+
+    /// Header-only probe: read at most [`PROBE_BYTES`] of the key's
+    /// slot (sharded first, then the legacy flat slot) and decide
+    /// hit/miss from the `MAGIC` + `key=` lines alone — no record body
+    /// is ever parsed.
+    pub fn probe(&self, key: &str) -> Probe {
+        let hash = hash_key(key);
+        let shard = self.shard_path(hash);
+        match probe_file(&shard, key) {
+            Some(MAGIC_V5) => return Probe::V5(shard),
+            // A v4 file can sit in the sharded slot too (hand-copied
+            // caches); it is just as migratable as a flat one.
+            Some(MAGIC_V4) => return Probe::V4(shard),
+            _ => {}
+        }
+        let legacy = self.legacy_path(hash);
+        match probe_file(&legacy, key) {
+            Some(MAGIC_V5) => Probe::V5(legacy),
+            Some(MAGIC_V4) => Probe::V4(legacy),
+            _ => Probe::Miss,
+        }
+    }
+
+    /// Load a key's trace. v5 hits decode the binary body; v4 hits are
+    /// served bit-identically and migrated (re-encoded as v5 into the
+    /// sharded layout, manifest appended, legacy file removed). Any
+    /// decode failure degrades to a miss.
+    pub fn load(&self, key: &str) -> Option<Trace> {
+        let path = match self.probe(key) {
+            Probe::Miss => return None,
+            Probe::V5(p) | Probe::V4(p) => p,
+        };
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) => {
+                crate::log_warn!("unreadable trace file {}: {e}", path.display());
+                return None;
+            }
+        };
+        match decode_any(&bytes) {
+            Ok((stored_key, trace, was_legacy)) if stored_key == key => {
+                if was_legacy {
+                    self.migrate(key, &trace, &path);
+                } else {
+                    // Self-heal a manifest that lost this entry (torn
+                    // write, deleted tail): the file is ground truth.
+                    self.manifest_append(key);
+                }
+                Some(trace)
+            }
+            Ok(_) => {
+                // The probe matched but the full key disagrees — only
+                // possible when the header was longer than the probe
+                // window; treat exactly like any collision.
+                crate::log_debug!("trace store key mismatch at {}", path.display());
+                None
+            }
+            Err(e) => {
+                crate::log_warn!("corrupt trace file {}: {e}", path.display());
+                None
+            }
+        }
+    }
+
+    /// Persist one finished cell: encode v5 into `buf` (reused scratch)
+    /// and write it to the sharded slot, then append the manifest.
+    /// Failures degrade to a warning — a sweep never dies because the
+    /// cache directory is read-only.
+    pub fn store(&self, key: &str, trace: &Trace, buf: &mut Vec<u8>) {
+        encode_trace_into(key, trace, buf);
+        let path = self.shard_path(hash_key(key));
+        let write = || -> crate::Result<()> {
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(&path, &buf)?;
+            Ok(())
+        };
+        if let Err(e) = write() {
+            crate::log_warn!("could not persist trace store entry: {e}");
+            return;
+        }
+        self.manifest_append(key);
+    }
+
+    /// Rewrite a v4 hit as v5 in the sharded layout and drop the
+    /// legacy file (migrated-on-hit: the next probe is header-only
+    /// binary, and the flat directory shrinks as it is touched).
+    fn migrate(&self, key: &str, trace: &Trace, legacy: &Path) {
+        let mut buf = Vec::new();
+        self.store(key, trace, &mut buf);
+        let shard = self.shard_path(hash_key(key));
+        if shard != *legacy && shard.exists() {
+            if let Err(e) = std::fs::remove_file(legacy) {
+                crate::log_warn!("could not remove migrated v4 file {}: {e}", legacy.display());
+            } else {
+                crate::log_debug!("migrated v4 trace {} → v5 shard", legacy.display());
+            }
+        }
+    }
+
+    // -- manifest ----------------------------------------------------------
+
+    fn manifest_path(&self) -> PathBuf {
+        self.root.join(MANIFEST_FILE)
+    }
+
+    fn with_manifest<T>(&self, f: impl FnOnce(&mut Manifest, &Path) -> T) -> T {
+        let mut m = self.manifest.lock().unwrap();
+        if !m.loaded {
+            m.keys = load_manifest(&self.manifest_path());
+            m.loaded = true;
+        }
+        f(&mut m, &self.manifest_path())
+    }
+
+    /// Is this key recorded as done? Advisory (used by `sweep
+    /// --resume` planning); the shard files remain ground truth.
+    pub fn manifest_contains(&self, key: &str) -> bool {
+        self.with_manifest(|m, _| m.keys.contains(key))
+    }
+
+    /// Completed entries the manifest knows about.
+    pub fn manifest_len(&self) -> usize {
+        self.with_manifest(|m, _| m.keys.len())
+    }
+
+    /// Append one completed key (no-op if already recorded). Failures
+    /// warn and degrade: the manifest self-heals on the next hit.
+    pub fn manifest_append(&self, key: &str) {
+        self.with_manifest(|m, path| {
+            if m.keys.contains(key) {
+                return;
+            }
+            let fresh = std::fs::metadata(path).map(|md| md.len() == 0).unwrap_or(true);
+            let append = || -> crate::Result<()> {
+                use std::io::Write;
+                std::fs::create_dir_all(path.parent().unwrap())?;
+                let mut f = std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(path)?;
+                if fresh {
+                    writeln!(f, "{MANIFEST_MAGIC}")?;
+                }
+                writeln!(f, "{:016x}\t{key}", hash_key(key))?;
+                Ok(())
+            };
+            match append() {
+                Ok(()) => {
+                    m.keys.insert(key.to_string());
+                }
+                Err(e) => crate::log_warn!("could not append sweep manifest: {e}"),
+            }
+        })
+    }
+}
+
+/// Probe one file's two-line header: Some(magic) when the magic is a
+/// known trace format AND the key line matches `key` exactly.
+fn probe_file(path: &Path, key: &str) -> Option<&'static str> {
+    let mut f = std::fs::File::open(path).ok()?;
+    let mut buf = [0u8; PROBE_BYTES];
+    let mut read = 0usize;
+    while read < buf.len() {
+        match f.read(&mut buf[read..]) {
+            Ok(0) => break,
+            Ok(n) => read += n,
+            Err(_) => return None,
+        }
+    }
+    let head = &buf[..read];
+    let (magic, key_line, _) = match header_lines(head) {
+        Some(h) => h,
+        None if read == PROBE_BYTES => {
+            // Header longer than the probe window (a pathological key):
+            // fall back to a full read for correctness.
+            let bytes = std::fs::read(path).ok()?;
+            let (magic, key_line, _) = header_lines(&bytes)?;
+            return verdict(magic, key_line, key);
+        }
+        None => return None,
+    };
+    verdict(magic, key_line, key)
+}
+
+fn verdict(magic: &[u8], key_line: &[u8], key: &str) -> Option<&'static str> {
+    if key_line != key.as_bytes() {
+        return None;
+    }
+    if magic == MAGIC_V5.as_bytes() {
+        Some(MAGIC_V5)
+    } else if magic == MAGIC_V4.as_bytes() {
+        Some(MAGIC_V4)
+    } else {
+        None
+    }
+}
+
+/// Parse a manifest file into its recorded key set. Malformed lines
+/// (torn writes, forged hashes, truncated tails) are skipped with a
+/// warning — never fatal, the store recomputes or self-heals.
+fn load_manifest(path: &Path) -> HashSet<String> {
+    let mut keys = HashSet::new();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => return keys,
+    };
+    let mut lines = text.split_inclusive('\n');
+    match lines.next() {
+        Some(first) if first.trim_end_matches('\n') == MANIFEST_MAGIC => {}
+        _ => {
+            crate::log_warn!(
+                "sweep manifest {} has no magic line; ignoring it (it will be rebuilt)",
+                path.display()
+            );
+            return keys;
+        }
+    }
+    for line in lines {
+        // A tail with no newline is a torn final write — skip it.
+        let Some(line) = line.strip_suffix('\n') else {
+            crate::log_warn!("sweep manifest has a truncated final line; skipping it");
+            continue;
+        };
+        let Some((hash, key)) = line.split_once('\t') else {
+            crate::log_warn!("malformed sweep manifest line skipped: '{line}'");
+            continue;
+        };
+        match u64::from_str_radix(hash, 16) {
+            Ok(h) if h == hash_key(key) => {
+                keys.insert(key.to_string());
+            }
+            _ => crate::log_warn!("forged/corrupt sweep manifest line skipped: '{line}'"),
+        }
+    }
+    keys
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::cache::serialize_trace;
+
+    fn sample_trace() -> Trace {
+        let mut t = Trace::new("cocoa+", 16, 0.123456789012345);
+        t.barrier_mode = BarrierMode::Ssp { staleness: 3 };
+        t.fleet = "mixed:r3_xlarge+local48".into();
+        t.workload = Objective::Ridge;
+        for i in 0..5 {
+            t.push(Record {
+                iter: i,
+                sim_time: i as f64 * 0.1 + 1e-13,
+                primal: 1.0 / (i + 1) as f64,
+                // A NaN with a payload: bit-exactness is stronger than
+                // "is_nan survived".
+                dual: if i % 2 == 0 { f64::from_bits(0x7ff8_dead_beef_0001) } else { 0.25 },
+                subopt: (0.1f64).powi(i as i32 + 1),
+            });
+        }
+        t
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hemingway_store_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn v5_roundtrip_is_bit_exact() {
+        let t = sample_trace();
+        let bytes = encode_trace("k1", &t);
+        let (key, back) = decode_trace_v5(&bytes).unwrap();
+        assert_eq!(key, "k1");
+        // Re-encoding the decoded trace reproduces the exact bytes —
+        // every f64 (NaN payloads included) survived to_bits.
+        assert_eq!(encode_trace("k1", &back), bytes);
+        assert_eq!(back.records[0].dual.to_bits(), 0x7ff8_dead_beef_0001);
+        assert_eq!(back.fleet, t.fleet);
+        assert_eq!(back.workload, t.workload);
+        assert_eq!(back.barrier_mode, t.barrier_mode);
+    }
+
+    #[test]
+    fn v5_rejects_truncation_and_forged_counts() {
+        let t = sample_trace();
+        let bytes = encode_trace("k", &t);
+        for cut in [bytes.len() - 1, bytes.len() - 40, 30] {
+            assert!(decode_trace_v5(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // Forge the record count (body length no longer matches).
+        let mut forged = bytes.clone();
+        let body_at = bytes.len() - 5 * 40 - 8;
+        forged[body_at..body_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_trace_v5(&forged).is_err());
+    }
+
+    #[test]
+    fn decode_any_reads_both_formats() {
+        let t = sample_trace();
+        let v5 = encode_trace("k", &t);
+        let (k5, b5, legacy5) = decode_any(&v5).unwrap();
+        assert_eq!((k5.as_str(), legacy5), ("k", false));
+        assert_eq!(encode_trace("k", &b5), v5);
+        let v4 = serialize_trace("k", &t);
+        let (k4, b4, legacy4) = decode_any(v4.as_bytes()).unwrap();
+        assert_eq!((k4.as_str(), legacy4), ("k", true));
+        assert_eq!(serialize_trace("k", &b4), v4);
+        assert!(decode_any(b"hemingway-trace v3\nkey=k\n").is_err());
+        assert!(decode_any(b"garbage").is_err());
+    }
+
+    #[test]
+    fn probe_agrees_with_full_parse() {
+        let dir = tmp_dir("probe");
+        let store = ShardedStore::open(&dir);
+        let t = sample_trace();
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // v5 in the sharded slot.
+        let mut buf = Vec::new();
+        store.store("hit5", &t, &mut buf);
+        // v4 in the legacy flat slot.
+        std::fs::write(
+            store.legacy_path(hash_key("hit4")),
+            serialize_trace("hit4", &t),
+        )
+        .unwrap();
+        // v3 (old format), wrong key, truncated header, garbage.
+        std::fs::write(
+            store.legacy_path(hash_key("old3")),
+            serialize_trace("old3", &t).replace("hemingway-trace v4", "hemingway-trace v3"),
+        )
+        .unwrap();
+        std::fs::write(
+            store.legacy_path(hash_key("stolen")),
+            serialize_trace("other-key", &t),
+        )
+        .unwrap();
+        std::fs::write(store.legacy_path(hash_key("torn")), b"hemingway-trace v4").unwrap();
+        std::fs::write(store.legacy_path(hash_key("noise")), b"\x00\x01\x02").unwrap();
+
+        // Probe (header-only) and load (full parse) must agree on
+        // every slot.
+        for (key, expect_hit) in [
+            ("hit5", true),
+            ("hit4", true),
+            ("old3", false),
+            ("stolen", false),
+            ("torn", false),
+            ("noise", false),
+            ("absent", false),
+        ] {
+            let probe_hit = store.probe(key) != Probe::Miss;
+            let load_hit = store.load(key).is_some();
+            assert_eq!(probe_hit, load_hit, "probe/load disagree on {key}");
+            assert_eq!(load_hit, expect_hit, "unexpected verdict for {key}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn v4_hit_is_served_bit_identically_and_migrated() {
+        let dir = tmp_dir("migrate");
+        let store = ShardedStore::open(&dir);
+        let t = sample_trace();
+        let v4_bytes = serialize_trace("cell", &t);
+        let legacy = store.legacy_path(hash_key("cell"));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(&legacy, &v4_bytes).unwrap();
+
+        let served = store.load("cell").expect("v4 file must hit");
+        // Bit-identical service: re-serializing in the v4 format
+        // reproduces the legacy bytes exactly.
+        assert_eq!(serialize_trace("cell", &served), v4_bytes);
+        // Migration happened: sharded v5 file exists, legacy removed,
+        // manifest recorded the key.
+        let shard = store.shard_path(hash_key("cell"));
+        assert!(shard.exists(), "migrated v5 shard missing");
+        assert!(!legacy.exists(), "legacy v4 file should be removed");
+        assert!(store.manifest_contains("cell"));
+        // The second load is a pure v5 hit, still bit-identical.
+        let again = store.load("cell").unwrap();
+        assert_eq!(serialize_trace("cell", &again), v4_bytes);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_recovers_from_forged_and_truncated_lines() {
+        let dir = tmp_dir("manifest");
+        let store = ShardedStore::open(&dir);
+        let t = sample_trace();
+        let mut buf = Vec::new();
+        for key in ["a", "b", "c"] {
+            store.store(key, &t, &mut buf);
+        }
+        assert_eq!(store.manifest_len(), 3);
+
+        // Corrupt the manifest: forge one line's hash, truncate the
+        // tail mid-line.
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut forged = text.replace(
+            &format!("{:016x}\tb", hash_key("b")),
+            &format!("{:016x}\tb", hash_key("not-b")),
+        );
+        forged.truncate(forged.len() - 3); // torn final write
+        std::fs::write(&path, forged).unwrap();
+
+        // A fresh store sees only the surviving entry...
+        let fresh = ShardedStore::open(&dir);
+        assert!(fresh.manifest_contains("a"));
+        assert!(!fresh.manifest_contains("b"), "forged hash must be rejected");
+        assert!(!fresh.manifest_contains("c"), "torn line must be skipped");
+        // ...but the shard files are ground truth: loads still hit and
+        // self-heal the manifest.
+        assert!(fresh.load("b").is_some());
+        assert!(fresh.load("c").is_some());
+        assert!(fresh.manifest_contains("b"));
+        assert!(fresh.manifest_contains("c"));
+        // And the healed manifest parses cleanly next time.
+        let healed = ShardedStore::open(&dir);
+        assert_eq!(healed.manifest_len(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_entry_with_missing_file_is_just_a_miss() {
+        let dir = tmp_dir("ghost");
+        let store = ShardedStore::open(&dir);
+        let t = sample_trace();
+        let mut buf = Vec::new();
+        store.store("ghost", &t, &mut buf);
+        std::fs::remove_file(store.shard_path(hash_key("ghost"))).unwrap();
+        let fresh = ShardedStore::open(&dir);
+        assert!(fresh.manifest_contains("ghost"), "manifest remembers it");
+        assert!(fresh.load("ghost").is_none(), "but the file is ground truth");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -9,10 +9,22 @@
 /// `threads` OS threads, and collect the results in index order.
 ///
 /// Panics in workers are propagated to the caller.
-pub fn parallel_map<T: Send>(
+pub fn parallel_map<T: Send>(n: usize, threads: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    parallel_map_init(n, threads, || (), |i, ()| f(i))
+}
+
+/// [`parallel_map`] with per-worker scratch state: each worker calls
+/// `init()` once and threads the resulting value through every `f`
+/// call it services. The sweep executor uses this to reuse encode
+/// buffers and key strings across the cells a worker runs, instead of
+/// reallocating per cell. Determinism note: `f` must not let `scratch`
+/// leak into results — which cells share a scratch depends on
+/// scheduling.
+pub fn parallel_map_init<T: Send, S>(
     n: usize,
     threads: usize,
-    f: impl Fn(usize) -> T + Sync,
+    init: impl Fn() -> S + Sync,
+    f: impl Fn(usize, &mut S) -> T + Sync,
 ) -> Vec<T> {
     assert!(threads > 0, "threads must be > 0");
     if n == 0 {
@@ -20,7 +32,8 @@ pub fn parallel_map<T: Send>(
     }
     let workers = threads.min(n);
     if workers == 1 {
-        return (0..n).map(f).collect();
+        let mut scratch = init();
+        return (0..n).map(|i| f(i, &mut scratch)).collect();
     }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let next = std::sync::atomic::AtomicUsize::new(0);
@@ -31,13 +44,14 @@ pub fn parallel_map<T: Send>(
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| {
+                let mut scratch = init();
                 let mut local: Vec<(usize, T)> = Vec::new();
                 loop {
                     let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     if i >= n {
                         break;
                     }
-                    local.push((i, f(i)));
+                    local.push((i, f(i, &mut scratch)));
                 }
                 results.lock().unwrap().extend(local);
             });
@@ -115,6 +129,24 @@ mod tests {
         assert_eq!(parse_thread_override(None), None);
         // Whatever the ambient environment, the default is usable.
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn scratch_is_reused_within_a_worker() {
+        // Each worker's scratch buffer grows once and is reused; the
+        // results are still in index order and scheduling-independent.
+        let out = parallel_map_init(
+            50,
+            4,
+            || Vec::with_capacity(8),
+            |i, scratch: &mut Vec<usize>| {
+                scratch.clear();
+                scratch.extend(0..=i);
+                scratch.iter().sum::<usize>()
+            },
+        );
+        let expect: Vec<usize> = (0..50).map(|i| i * (i + 1) / 2).collect();
+        assert_eq!(out, expect);
     }
 
     #[test]

@@ -1,0 +1,276 @@
+//! Integration tests for the sharded trace store + resumable sweeps
+//! (ISSUE 6): an interrupted sweep — including a torn manifest tail —
+//! resumes to a bitwise-identical aggregate without recomputing intact
+//! cells; legacy v4 flat files are served bit-identically and migrated
+//! to sharded v5 on hit; and the header-only probe always agrees with
+//! a full parse, however long the key.
+//!
+//! CI runs this suite under a pinned `QUICKCHECK_SEED` (see ci.sh) so
+//! a property failure names a seed that reproduces locally.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use hemingway::cluster::BarrierMode;
+use hemingway::optim::{Objective, Record, RunConfig, Trace};
+use hemingway::sweep::cache::{hash_key, serialize_trace};
+use hemingway::sweep::store::{encode_trace, Probe, MANIFEST_FILE};
+use hemingway::sweep::{
+    aggregate, cell_key, CellAggregate, CellScratch, CellSpec, ShardedStore, StreamAggregator,
+    SweepEngine, SweepGrid, TraceCache,
+};
+use hemingway::util::quickcheck::forall_ok;
+
+/// A synthetic runner whose trace is a pure function of the cell, so
+/// cached/resumed results are checkable bit for bit.
+fn synth_runner(cell: &CellSpec, _scratch: &mut CellScratch) -> hemingway::Result<Trace> {
+    let mut t = Trace::new(cell.algorithm.clone(), cell.machines, 0.0);
+    t.barrier_mode = cell.mode;
+    t.fleet = cell.fleet.clone();
+    t.workload = cell.workload;
+    let decay = 0.2 + (cell.seed % 11) as f64 * 0.04;
+    for i in 0..12 {
+        let subopt = (-decay * i as f64 / cell.machines as f64).exp();
+        t.push(Record {
+            iter: i,
+            sim_time: i as f64 * 0.25,
+            primal: subopt + 0.5,
+            dual: if i % 3 == 0 { f64::NAN } else { 0.5 },
+            subopt,
+        });
+    }
+    Ok(t)
+}
+
+fn grid(seeds: usize, base_seed: u64) -> SweepGrid {
+    SweepGrid {
+        algorithms: vec!["cocoa".into(), "cocoa+".into()],
+        machines: vec![1, 2, 4],
+        modes: vec![BarrierMode::Bsp, BarrierMode::Ssp { staleness: 2 }],
+        fleets: Vec::new(),
+        workloads: vec![Objective::Hinge, Objective::Ridge],
+        seeds,
+        base_seed,
+        run: RunConfig::default(),
+    }
+}
+
+/// Bit-exact fingerprint of an aggregate slice (f64s via to_bits, so
+/// even NaN payload differences would show).
+fn fingerprint(aggs: &[CellAggregate]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    for a in aggs {
+        let _ = write!(
+            s,
+            "{}|m={}|{}|{}|{}|rep={}|reach={}",
+            a.algorithm, a.machines, a.barrier_mode, a.fleet, a.workload, a.replicates, a.reached
+        );
+        for v in [
+            a.iters_to_target.mean,
+            a.iters_to_target.std,
+            a.time_to_target.mean,
+            a.time_to_target.std,
+            a.final_subopt.mean,
+            a.final_subopt.std,
+            a.mean_iter_time.mean,
+            a.mean_iter_time.std,
+        ] {
+            let _ = write!(s, ",{:016x}", v.to_bits());
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[test]
+fn prop_interrupted_sweep_resumes_bitwise_identical() {
+    forall_ok(
+        "kill after k cells (torn manifest) + resume == one uninterrupted sweep",
+        6,
+        |g| {
+            let seeds = g.usize_in(1, 2);
+            let base_seed = g.rng().next_u64();
+            let salt = g.rng().next_u64();
+            ((seeds, base_seed, salt, g.usize_in(1, 20)), ())
+        },
+        |&(seeds, base_seed, salt, k), _| {
+            let sg = grid(seeds, base_seed);
+            let cells = sg.cells();
+            let k = k.min(cells.len() - 1).max(1);
+            let ctx = format!("itest|{}", sg.run_key());
+
+            // The uninterrupted reference run, fully in memory.
+            let full = SweepEngine::new(2, TraceCache::in_memory())
+                .run_cells(&ctx, &cells, &synth_runner)
+                .map_err(|e| e.to_string())?;
+            let want = fingerprint(&aggregate(&full, 1e-3));
+
+            // Interrupted run: only the first k cells reach the store,
+            // and the "kill" tears the manifest's final line.
+            let dir = std::env::temp_dir().join(format!("hemingway_resume_{salt:016x}"));
+            let _ = std::fs::remove_dir_all(&dir);
+            SweepEngine::new(2, TraceCache::persistent(&dir))
+                .run_cells(&ctx, &cells[..k], &synth_runner)
+                .map_err(|e| e.to_string())?;
+            let mpath = dir.join(MANIFEST_FILE);
+            let mut manifest = std::fs::read(&mpath).map_err(|e| e.to_string())?;
+            manifest.truncate(manifest.len().saturating_sub(3));
+            std::fs::write(&mpath, &manifest).map_err(|e| e.to_string())?;
+
+            // Resume with a fresh engine. Planning runs off the torn
+            // manifest (it lost exactly the final entry)...
+            let eng = SweepEngine::new(2, TraceCache::persistent(&dir));
+            let plan = eng.plan(&ctx, &cells);
+            if plan.total != cells.len() || plan.done + 1 != k {
+                return Err(format!(
+                    "plan says {}/{} done after storing {k} cells",
+                    plan.done, plan.total
+                ));
+            }
+            // ...but the shard files are ground truth: no stored cell
+            // reruns, and the streamed aggregate is bit-identical.
+            let runs = AtomicUsize::new(0);
+            let mut agg = StreamAggregator::new(1e-3);
+            eng.run_cells_stream(
+                &ctx,
+                &cells,
+                &|cell, scratch| {
+                    runs.fetch_add(1, Ordering::Relaxed);
+                    synth_runner(cell, scratch)
+                },
+                &mut |_, t| {
+                    agg.push(&t);
+                    Ok(())
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            let reran = runs.load(Ordering::Relaxed);
+            let got = fingerprint(&agg.finish());
+            let healed = eng.plan(&ctx, &cells).remaining();
+            let _ = std::fs::remove_dir_all(&dir);
+            if reran != cells.len() - k {
+                return Err(format!(
+                    "resume reran {reran} cells, wanted {} ({k} of {} were stored)",
+                    cells.len() - k,
+                    cells.len()
+                ));
+            }
+            if healed != 0 {
+                return Err(format!("{healed} cells still unplanned after resume"));
+            }
+            if got != want {
+                return Err("resumed aggregate differs from the uninterrupted run".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn v4_flat_files_hit_migrate_and_serve_bitwise() {
+    let sg = grid(1, 99);
+    let cells = sg.cells();
+    let ctx = "itest-migrate";
+    // What a fresh compute would produce (the runner is pure).
+    let want: Vec<Trace> = cells
+        .iter()
+        .map(|c| synth_runner(c, &mut CellScratch::default()).unwrap())
+        .collect();
+
+    let dir = std::env::temp_dir().join("hemingway_itest_v4_migrate");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    // Seed the store with the pre-shard layout: flat v4 text files.
+    let probe_store = ShardedStore::open(&dir);
+    for (c, t) in cells.iter().zip(&want) {
+        let key = cell_key(ctx, c);
+        std::fs::write(probe_store.legacy_path(hash_key(&key)), serialize_trace(&key, t))
+            .unwrap();
+    }
+
+    // The engine must serve every cell from the v4 files (zero runs)...
+    let eng = SweepEngine::new(2, TraceCache::persistent(&dir));
+    let runs = AtomicUsize::new(0);
+    let got = eng
+        .run_cells(ctx, &cells, &|cell, scratch| {
+            runs.fetch_add(1, Ordering::Relaxed);
+            synth_runner(cell, scratch)
+        })
+        .unwrap();
+    assert_eq!(runs.load(Ordering::Relaxed), 0, "v4 hits must not rerun");
+    // ...bit-identically...
+    for ((c, w), t) in cells.iter().zip(&want).zip(&got) {
+        let key = cell_key(ctx, c);
+        assert_eq!(serialize_trace(&key, w), serialize_trace(&key, t));
+    }
+    // ...and migrate each hit: sharded v5 file present, flat file
+    // gone, manifest complete.
+    for c in &cells {
+        let key = cell_key(ctx, c);
+        let hash = hash_key(&key);
+        assert!(probe_store.shard_path(hash).exists(), "missing v5 shard for {key}");
+        assert!(!probe_store.legacy_path(hash).exists(), "legacy file not removed for {key}");
+        assert!(matches!(probe_store.probe(&key), Probe::V5(_)));
+    }
+    assert_eq!(ShardedStore::open(&dir).manifest_len(), cells.len());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn prop_header_probe_matches_full_parse() {
+    fn small_trace() -> Trace {
+        let mut t = Trace::new("gd", 4, 0.5);
+        for i in 0..3 {
+            t.push(Record {
+                iter: i,
+                sim_time: i as f64,
+                primal: 1.0,
+                dual: f64::NAN,
+                subopt: 0.5,
+            });
+        }
+        t
+    }
+    forall_ok(
+        "header-only probe == full-parse verdict, any key length",
+        20,
+        |g| {
+            // Keys up to ~5 KB exercise the probe-window fallback (the
+            // header no longer fits in the 4 KiB probe read).
+            let len = g.usize_in(1, 5000);
+            let chars: Vec<u8> = (0..len)
+                .map(|_| *g.choose(b"abcdefgh0123456789|=;:+*._-"))
+                .collect();
+            let salt = g.rng().next_u64();
+            ((salt, g.bool()), String::from_utf8(chars).unwrap())
+        },
+        |&(salt, stale), key| {
+            let dir = std::env::temp_dir().join(format!("hemingway_probe_{salt:016x}"));
+            let _ = std::fs::remove_dir_all(&dir);
+            let store = ShardedStore::open(&dir);
+            let t = small_trace();
+            if stale {
+                // A file written under a *different* key sits in this
+                // key's slot (stale or colliding entry): probe and load
+                // must both reject it.
+                let other = format!("{key}!other");
+                let slot = store.shard_path(hash_key(key));
+                std::fs::create_dir_all(slot.parent().unwrap()).map_err(|e| e.to_string())?;
+                std::fs::write(&slot, encode_trace(&other, &t)).map_err(|e| e.to_string())?;
+            } else {
+                let mut buf = Vec::new();
+                store.store(key, &t, &mut buf);
+            }
+            let probe_hit = !matches!(store.probe(key), Probe::Miss);
+            let load_hit = store.load(key).is_some();
+            let _ = std::fs::remove_dir_all(&dir);
+            if probe_hit != load_hit {
+                return Err(format!("probe says {probe_hit}, full parse says {load_hit}"));
+            }
+            if load_hit == stale {
+                return Err(format!("verdict {load_hit}, wanted {}", !stale));
+            }
+            Ok(())
+        },
+    );
+}
