@@ -25,13 +25,17 @@ QUICKCHECK_SEED=20170211 cargo test -q --release --test workload_props
 # serve bit-identically, header-only probe ≡ full parse at any key
 # length) under the same pinned seed.
 QUICKCHECK_SEED=20170211 cargo test -q --release --test sweep_store
+# Concurrent-server invariants (N clients byte-identical to the pure
+# core, hot reload under load never tears a response) under the same
+# pinned seed for log comparability.
+QUICKCHECK_SEED=20170211 cargo test -q --release --test advisor_server
 cargo fmt --check
 
 # Advisor-service smoke: fit-on-miss once, then three JSON queries
 # through one `serve` process, with typed (seconds vs suboptimality)
 # responses.
 tmp="$(mktemp -d)"
-trap 'rm -rf "$tmp"' EXIT
+trap 'kill "${serve_pid:-}" 2>/dev/null || true; rm -rf "$tmp"' EXIT
 cat > "$tmp/config.json" <<EOF
 {"n": 512, "d": 32, "machines": [1, 2, 4], "max_iters": 120,
  "target_subopt": 1e-3, "out_dir": "$tmp/out"}
@@ -52,6 +56,35 @@ if grep -q '"ok":false' "$tmp/serve.out"; then
 fi
 grep -q '"barrier_mode":"bsp"' "$tmp/serve.out"
 echo "serve smoke OK"
+
+# TCP serve smoke: the concurrent front end end to end — an ephemeral
+# port published through --port-file, a mixed serve-load burst from 4
+# client threads, a stats query with finite latency percentiles, and a
+# graceful wire shutdown after which the server must exit 0. Reuses the
+# registry the stdin smoke just fitted.
+cargo run --release --quiet -- serve --native --config "$tmp/config.json" \
+  --tcp 127.0.0.1:0 --workers 2 --port-file "$tmp/serve.port" \
+  > "$tmp/tcp_serve.out" 2>&1 &
+serve_pid=$!
+for _ in $(seq 1 100); do
+  [ -s "$tmp/serve.port" ] && break
+  sleep 0.1
+done
+[ -s "$tmp/serve.port" ] || { cat "$tmp/tcp_serve.out" >&2; exit 1; }
+addr="$(tr -d '[:space:]' < "$tmp/serve.port")"
+cargo run --release --quiet -- serve-load --addr "$addr" --clients 4 --queries 50 \
+  --json "$tmp/load.json" --shutdown > "$tmp/load.out"
+cat "$tmp/load.out"
+grep -q '"query":"stats"' "$tmp/load.out"
+grep -q '"p50_us":' "$tmp/load.out"
+grep -q '"query":"shutdown"' "$tmp/load.out"
+if grep -q '"p50_us":null' "$tmp/load.out"; then
+  echo "TCP serve smoke: non-finite latency percentiles" >&2
+  exit 1
+fi
+grep -q '"qps":' "$tmp/load.json"
+wait "$serve_pid"
+echo "tcp serve smoke OK"
 
 # SSP smoke: the barrier-mode scenario end to end on a tiny config —
 # short iteration budget and a small advisor_iter_cap keep this well
@@ -153,14 +186,16 @@ cmp "$tmp/sweep_first.csv" "$tmp/sweep_out/sweep_cocoa+.csv"
 cmp "$tmp/agg_first.csv" "$tmp/sweep_out/sweep_cocoa+_agg.csv"
 echo "resume smoke OK"
 
-# Bench snapshots: regenerate BENCH_workloads.json and BENCH_sweep.json
-# at the repo root (cache-probe hit/miss latency sharded-v5 vs flat-v4,
-# streamed cells/sec, aggregate throughput — see benches/bench_main.rs).
+# Bench snapshots: regenerate BENCH_workloads.json, BENCH_sweep.json
+# and BENCH_serve.json at the repo root (cache-probe hit/miss latency
+# sharded-v5 vs flat-v4, streamed cells/sec, aggregate throughput, TCP
+# serve qps single- vs multi-client — see benches/bench_main.rs).
 # Timings are machine-local; set HEMINGWAY_BENCH=0 to skip on
 # contended runners.
 if [ "${HEMINGWAY_BENCH:-1}" = "1" ]; then
   cargo bench --bench bench_main
   test -f ../BENCH_workloads.json
   test -f ../BENCH_sweep.json
+  test -f ../BENCH_serve.json
   echo "bench snapshots OK"
 fi

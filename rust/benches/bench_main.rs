@@ -635,6 +635,68 @@ fn main() -> hemingway::Result<()> {
                 r#"{"query":"fastest_to","eps":1e-3,"max_machines":32}"#,
             );
         });
+
+        // ---------------- serve: concurrent TCP front end ----------------
+        // Whole load runs rather than closure timings, so gate on the
+        // filter by hand; qps and percentiles come from the load
+        // generator (client-side view, framing and sockets included).
+        if b.filter.is_empty() || "serve/load".contains(&b.filter) {
+            use hemingway::advisor::{AdvisorServer, FleetSpec, LoadConfig, ServerConfig};
+            use hemingway::util::json::Json;
+            // The load mix includes cheapest_to, which prices against
+            // the model's base fleet — give the bench registry one.
+            let mut serve_registry = registry.clone();
+            let mut model = serve_registry
+                .get(hemingway::advisor::AlgorithmId::CocoaPlus, "bench")
+                .unwrap()
+                .clone();
+            model.base_fleet = "local48".into();
+            serve_registry.insert(
+                hemingway::advisor::ModelKey {
+                    algorithm: hemingway::advisor::AlgorithmId::CocoaPlus,
+                    context: "bench".to_string(),
+                },
+                model,
+            );
+            serve_registry.fleets = vec![FleetSpec::uniform(HardwareProfile::local48())];
+            let workers = default_threads().clamp(2, 8);
+            let server = AdvisorServer::bind(
+                "127.0.0.1:0",
+                serve_registry,
+                ServerConfig {
+                    workers,
+                    queue_capacity: workers * 4,
+                    reload: None,
+                },
+            )?;
+            let addr = server.local_addr().to_string();
+            let handle = std::thread::spawn(move || server.run());
+            let queries = 4000;
+            let single = hemingway::advisor::run_load(&LoadConfig::new(addr.clone(), 1, queries))?;
+            let multi =
+                hemingway::advisor::run_load(&LoadConfig::new(addr.clone(), workers, queries))?;
+            hemingway::advisor::send_control(&addr, r#"{"query":"shutdown"}"#)?;
+            handle.join().expect("server thread panicked")?;
+            println!(
+                "serve/load/1client             {:>10.0} qps   p50 {:>8.1}µs p99 {:>8.1}µs",
+                single.qps, single.p50_us, single.p99_us
+            );
+            println!(
+                "serve/load/{workers}clients            {:>10.0} qps   p50 {:>8.1}µs p99 {:>8.1}µs",
+                multi.qps, multi.p50_us, multi.p99_us
+            );
+            let doc = Json::object(vec![
+                ("bench", Json::str("serve")),
+                ("workers", Json::num(workers as f64)),
+                ("queries_per_client", Json::num(queries as f64)),
+                ("single_client", single.to_json()),
+                ("multi_client", multi.to_json()),
+                ("multi_vs_single_qps", Json::num(multi.qps / single.qps)),
+            ]);
+            let path = bench_out("BENCH_serve.json");
+            std::fs::write(&path, doc.to_pretty())?;
+            println!("wrote {}", path.display());
+        }
     }
 
     // ---------------- summary ----------------

@@ -1,12 +1,14 @@
 //! The Hemingway advisor: combined model h(t, m) = g(t/f(m), m), the
 //! typed query layer over a [`ModelRegistry`] of persisted model
 //! artifacts, the newline-JSON [`service`] behind `hemingway serve`,
-//! and the adaptive reconfiguration loop (Fig 2).
+//! the concurrent TCP [`server`] front end, and the adaptive
+//! reconfiguration loop (Fig 2).
 
 pub mod adaptive;
 pub mod combined;
 pub mod query;
 pub mod registry;
+pub mod server;
 pub mod service;
 
 pub use adaptive::{adaptive_cocoa_plus, AdaptiveConfig, AdaptiveRun, FrameLog};
@@ -18,7 +20,11 @@ pub use query::{
 pub use registry::{
     artifact_path, load_artifact, save_artifact, LoadReport, ModelKey, ModelRegistry,
 };
-pub use service::{handle_line, serve, ServeStats};
+pub use server::{
+    install_sigint_handler, run_load, send_control, AdvisorServer, LoadConfig, ReloadConfig,
+    ServeMetrics, ServerConfig, SharedRegistry,
+};
+pub use service::{handle_doc, handle_line, serve, ServeStats, KIND_NAMES};
 
 pub use crate::cluster::{BarrierMode, FleetSpec};
 pub use crate::optim::{AlgorithmId, Objective};

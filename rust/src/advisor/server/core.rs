@@ -1,0 +1,121 @@
+//! The shared service core: one wire line in, one accounted response
+//! out. Both serve front ends — the stdin adapter in
+//! [`crate::advisor::service::serve`] and the TCP connection handler —
+//! route every line through [`handle_service_line`], so responses,
+//! per-kind counts, and latency accounting cannot drift between them.
+
+use std::time::Instant;
+
+use crate::advisor::registry::ModelRegistry;
+use crate::advisor::service::{error_response, handle_doc, ok_response};
+use crate::util::json::Json;
+
+use super::metrics::ServeMetrics;
+
+/// What the caller should do with the response it just got.
+pub enum Handled {
+    /// Write the response and keep serving.
+    Response(Json),
+    /// Write the response, then stop serving (graceful shutdown).
+    Shutdown(Json),
+}
+
+impl Handled {
+    /// The response either way (tests compare bytes regardless of
+    /// control flow).
+    pub fn response(&self) -> &Json {
+        match self {
+            Handled::Response(r) | Handled::Shutdown(r) => r,
+        }
+    }
+}
+
+/// Handle one wire line: parse once, intercept the server-level
+/// `stats` and `shutdown` queries, and delegate everything else to the
+/// pure [`handle_doc`] core. Every line — including malformed ones —
+/// is accounted into `metrics` with its wall latency.
+pub fn handle_service_line(
+    registry: &ModelRegistry,
+    metrics: &ServeMetrics,
+    line: &str,
+) -> Handled {
+    let start = Instant::now();
+    let doc = Json::parse(line.trim());
+    let kind = match &doc {
+        Ok(d) => d
+            .get("query")
+            .and_then(Json::as_str)
+            .unwrap_or("other")
+            .to_string(),
+        Err(_) => "other".to_string(),
+    };
+    let (resp, shutdown) = match (&doc, kind.as_str()) {
+        (Ok(_), "stats") => (metrics.stats_response(), false),
+        (Ok(_), "shutdown") => {
+            let resp = ok_response(
+                "shutdown",
+                vec![
+                    ("served".into(), Json::num(metrics.queries() as f64)),
+                    ("errors".into(), Json::num(metrics.errors() as f64)),
+                ],
+            );
+            (resp, true)
+        }
+        (Ok(d), _) => (handle_doc(registry, d), false),
+        (Err(e), _) => (error_response(e.to_string()), false),
+    };
+    let ok = resp.get("ok").and_then(Json::as_bool).unwrap_or(false);
+    metrics.record(&kind, start.elapsed().as_secs_f64(), ok);
+    if shutdown {
+        Handled::Shutdown(resp)
+    } else {
+        Handled::Response(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::advisor::registry::ModelRegistry;
+
+    fn empty_registry() -> ModelRegistry {
+        ModelRegistry::new(vec![1, 2], 1000)
+    }
+
+    #[test]
+    fn registry_queries_match_handle_line_bytes() {
+        let registry = empty_registry();
+        let metrics = ServeMetrics::new();
+        for line in [
+            r#"{"query":"fastest_to","eps":0.01}"#,
+            r#"{"query":"models"}"#,
+            r#"{"query":"what"}"#,
+            "not json",
+        ] {
+            let core = handle_service_line(&registry, &metrics, line);
+            let direct = crate::advisor::service::handle_line(&registry, line);
+            assert_eq!(core.response().to_string(), direct.to_string());
+            assert!(matches!(core, Handled::Response(_)));
+        }
+        assert_eq!(metrics.queries(), 4);
+    }
+
+    #[test]
+    fn stats_and_shutdown_are_intercepted() {
+        let registry = empty_registry();
+        let metrics = ServeMetrics::new();
+        let stats = handle_service_line(&registry, &metrics, r#"{"query":"stats"}"#);
+        let text = stats.response().to_string();
+        assert!(text.contains(r#""query":"stats""#), "{text}");
+        assert!(text.contains(r#""p99_us""#), "{text}");
+        assert!(matches!(stats, Handled::Response(_)));
+        let down = handle_service_line(&registry, &metrics, r#"{"query":"shutdown"}"#);
+        let text = down.response().to_string();
+        assert!(text.contains(r#""query":"shutdown""#), "{text}");
+        assert!(text.contains(r#""served":1"#), "{text}");
+        assert!(matches!(down, Handled::Shutdown(_)));
+        let snap = metrics.serve_stats();
+        assert_eq!(snap.queries, 2);
+        assert_eq!(snap.errors, 0);
+    }
+}

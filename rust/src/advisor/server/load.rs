@@ -1,0 +1,175 @@
+//! The `serve-load` load generator: N client threads × M queries each
+//! against a live TCP server, with per-query latency accounting on the
+//! client side. The serve bench and the CI smoke both drive the server
+//! through this, so throughput is measured the way a real client fleet
+//! would see it (including framing and socket round-trips).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::util::threadpool::parallel_map;
+
+/// The default mixed workload: one of each typed query plus a table
+/// scan, cycled per client with a per-client phase shift so concurrent
+/// clients are never in lockstep on the same kind.
+pub const DEFAULT_MIX: [&str; 4] = [
+    r#"{"query":"fastest_to","eps":1e-2}"#,
+    r#"{"query":"best_at","budget":10}"#,
+    r#"{"query":"cheapest_to","eps":1e-2,"barrier_mode":"any","fleet":"any"}"#,
+    r#"{"query":"table","eps":1e-2,"budget":10}"#,
+];
+
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    /// Server address, `host:port`.
+    pub addr: String,
+    /// Concurrent client connections (one thread each).
+    pub clients: usize,
+    /// Queries per client (total sent = clients × this).
+    pub queries_per_client: usize,
+    /// Query lines to cycle through.
+    pub mix: Vec<String>,
+}
+
+impl LoadConfig {
+    pub fn new(addr: impl Into<String>, clients: usize, queries_per_client: usize) -> LoadConfig {
+        LoadConfig {
+            addr: addr.into(),
+            clients,
+            queries_per_client,
+            mix: DEFAULT_MIX.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+/// What a load run measured, client-side.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub clients: usize,
+    pub sent: usize,
+    pub ok: usize,
+    pub errors: usize,
+    pub elapsed_seconds: f64,
+    /// Aggregate throughput: responses across all clients over wall
+    /// time.
+    pub qps: f64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("clients", Json::num(self.clients as f64)),
+            ("sent", Json::num(self.sent as f64)),
+            ("ok", Json::num(self.ok as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("elapsed_seconds", Json::num(self.elapsed_seconds)),
+            ("qps", Json::num(self.qps)),
+            ("mean_us", Json::num(self.mean_us)),
+            ("p50_us", Json::num(self.p50_us)),
+            ("p90_us", Json::num(self.p90_us)),
+            ("p99_us", Json::num(self.p99_us)),
+        ])
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} clients × {} queries: {:.0} qps over {:.2}s \
+             ({} ok, {} errors; p50 {:.1}µs p90 {:.1}µs p99 {:.1}µs)",
+            self.clients,
+            self.sent / self.clients.max(1),
+            self.qps,
+            self.elapsed_seconds,
+            self.ok,
+            self.errors,
+            self.p50_us,
+            self.p90_us,
+            self.p99_us
+        )
+    }
+}
+
+/// Run the load: every client connects once, then sends its queries
+/// back-to-back (closed loop — the next query waits for the previous
+/// response). Error responses count as answered-but-error; a closed
+/// connection or I/O failure fails the run.
+pub fn run_load(cfg: &LoadConfig) -> crate::Result<LoadReport> {
+    crate::ensure!(cfg.clients >= 1, "serve-load needs at least one client");
+    crate::ensure!(cfg.queries_per_client >= 1, "serve-load needs at least one query");
+    crate::ensure!(!cfg.mix.is_empty(), "serve-load needs a non-empty query mix");
+    let start = Instant::now();
+    let per_client = parallel_map(cfg.clients, cfg.clients, |client| run_client(cfg, client));
+    let elapsed = start.elapsed().as_secs_f64().max(1e-9);
+    let mut ok = 0usize;
+    let mut errors = 0usize;
+    let mut latencies: Vec<f64> = Vec::with_capacity(cfg.clients * cfg.queries_per_client);
+    for result in per_client {
+        let (client_ok, client_err, mut lat) = result?;
+        ok += client_ok;
+        errors += client_err;
+        latencies.append(&mut lat);
+    }
+    let sent = ok + errors;
+    Ok(LoadReport {
+        clients: cfg.clients,
+        sent,
+        ok,
+        errors,
+        elapsed_seconds: elapsed,
+        qps: sent as f64 / elapsed,
+        mean_us: stats::mean(&latencies) * 1e6,
+        p50_us: stats::percentile(&latencies, 50.0) * 1e6,
+        p90_us: stats::percentile(&latencies, 90.0) * 1e6,
+        p99_us: stats::percentile(&latencies, 99.0) * 1e6,
+    })
+}
+
+fn run_client(cfg: &LoadConfig, client: usize) -> crate::Result<(usize, usize, Vec<f64>)> {
+    let stream = TcpStream::connect(&cfg.addr)
+        .map_err(|e| crate::err!("serve-load: connect {}: {e}", cfg.addr))?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut latencies = Vec::with_capacity(cfg.queries_per_client);
+    let mut ok = 0usize;
+    let mut errors = 0usize;
+    let mut response = String::new();
+    for q in 0..cfg.queries_per_client {
+        // Phase-shift by client index so concurrent clients mix kinds.
+        let line = &cfg.mix[(client + q) % cfg.mix.len()];
+        let sent_at = Instant::now();
+        writeln!(stream, "{line}")?;
+        response.clear();
+        let n = reader.read_line(&mut response)?;
+        crate::ensure!(n > 0, "serve-load: server closed the connection mid-run");
+        latencies.push(sent_at.elapsed().as_secs_f64());
+        if response.contains("\"ok\":true") {
+            ok += 1;
+        } else {
+            errors += 1;
+        }
+    }
+    Ok((ok, errors, latencies))
+}
+
+/// Send one control line (e.g. `{"query":"stats"}` or
+/// `{"query":"shutdown"}`) on a fresh connection and return the raw
+/// response line.
+pub fn send_control(addr: &str, line: &str) -> crate::Result<String> {
+    let stream =
+        TcpStream::connect(addr).map_err(|e| crate::err!("serve-load: connect {addr}: {e}"))?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    writeln!(stream, "{}", line.trim())?;
+    let mut response = String::new();
+    let n = reader.read_line(&mut response)?;
+    crate::ensure!(n > 0, "serve-load: no response to control query");
+    Ok(response.trim_end().to_string())
+}

@@ -1,0 +1,148 @@
+//! Per-query accounting shared by the stdin adapter and the TCP
+//! server: one [`LatencyHistogram`] plus per-kind counters, all
+//! updatable concurrently from every worker thread without locking.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::advisor::service::{kind_index, ServeStats, KIND_NAMES};
+use crate::util::json::Json;
+use crate::util::stats::LatencyHistogram;
+
+/// Lock-free(ish) serve metrics: relaxed atomic counters per query
+/// kind, an atomic latency histogram, and the start instant for qps.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    started: Instant,
+    latency: LatencyHistogram,
+    by_kind: [AtomicU64; KIND_NAMES.len()],
+    errors: AtomicU64,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> ServeMetrics {
+        ServeMetrics::new()
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics {
+            started: Instant::now(),
+            latency: LatencyHistogram::new(),
+            by_kind: std::array::from_fn(|_| AtomicU64::new(0)),
+            errors: AtomicU64::new(0),
+        }
+    }
+
+    /// Account one handled query: its kind, wall latency, and whether
+    /// the response was `ok`.
+    pub fn record(&self, kind: &str, seconds: f64, ok: bool) {
+        self.by_kind[kind_index(kind)].fetch_add(1, Ordering::Relaxed);
+        self.latency.record(seconds);
+        if !ok {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Total queries handled so far.
+    pub fn queries(&self) -> u64 {
+        self.by_kind.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    fn qps(&self) -> f64 {
+        self.queries() as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    /// The wire response to `{"query":"stats"}`: totals, throughput,
+    /// latency percentiles (µs), and non-zero per-kind counts.
+    pub fn stats_response(&self) -> Json {
+        let by_kind: Vec<(String, Json)> = KIND_NAMES
+            .iter()
+            .zip(&self.by_kind)
+            .map(|(&k, c)| (k.to_string(), c.load(Ordering::Relaxed)))
+            .filter(|&(_, n)| n > 0)
+            .map(|(k, n)| (k, Json::num(n as f64)))
+            .collect();
+        let uptime = self.started.elapsed().as_secs_f64();
+        let pct = |q: f64| Json::num(self.latency.percentile_seconds(q) * 1e6);
+        crate::advisor::service::ok_response(
+            "stats",
+            vec![
+                ("queries".into(), Json::num(self.queries() as f64)),
+                ("errors".into(), Json::num(self.errors() as f64)),
+                ("uptime_seconds".into(), Json::num(uptime)),
+                ("qps".into(), Json::num(self.qps())),
+                ("mean_us".into(), Json::num(self.latency.mean_seconds() * 1e6)),
+                ("p50_us".into(), pct(50.0)),
+                ("p90_us".into(), pct(90.0)),
+                ("p99_us".into(), pct(99.0)),
+                ("by_kind".into(), Json::Object(by_kind)),
+            ],
+        )
+    }
+
+    /// Snapshot the accounting into the [`ServeStats`] both serve
+    /// modes return and log on shutdown/EOF.
+    pub fn serve_stats(&self) -> ServeStats {
+        let mut by_kind = [0usize; KIND_NAMES.len()];
+        for (out, c) in by_kind.iter_mut().zip(&self.by_kind) {
+            *out = c.load(Ordering::Relaxed) as usize;
+        }
+        ServeStats {
+            queries: by_kind.iter().sum(),
+            errors: self.errors() as usize,
+            by_kind,
+            qps: self.qps(),
+            p50_us: self.latency.percentile_seconds(50.0) * 1e6,
+            p90_us: self.latency.percentile_seconds(90.0) * 1e6,
+            p99_us: self.latency.percentile_seconds(99.0) * 1e6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_per_kind_and_errors() {
+        let m = ServeMetrics::new();
+        m.record("fastest_to", 10e-6, true);
+        m.record("fastest_to", 10e-6, true);
+        m.record("best_at", 20e-6, true);
+        m.record("nonsense", 1e-6, false);
+        assert_eq!(m.queries(), 4);
+        assert_eq!(m.errors(), 1);
+        let stats = m.serve_stats();
+        assert_eq!(stats.queries, 4);
+        assert_eq!(stats.errors, 1);
+        let kinds = stats.kind_counts();
+        assert_eq!(kinds, vec![("fastest_to", 2), ("best_at", 1), ("other", 1)]);
+        assert!(stats.qps > 0.0);
+        assert!(stats.p50_us > 0.0 && stats.p99_us >= stats.p50_us);
+        let line = stats.summary();
+        assert!(line.contains("served 4 queries (1 errors)"), "{line}");
+        assert!(line.contains("fastest_to=2"), "{line}");
+    }
+
+    #[test]
+    fn stats_response_shape() {
+        let m = ServeMetrics::new();
+        m.record("table", 5e-6, true);
+        let resp = m.stats_response();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(resp.get("query").and_then(Json::as_str), Some("stats"));
+        assert_eq!(resp.get("queries").and_then(Json::as_usize), Some(1));
+        let p50 = resp.get("p50_us").and_then(Json::as_f64).unwrap();
+        let p99 = resp.get("p99_us").and_then(Json::as_f64).unwrap();
+        assert!(p50.is_finite() && p99.is_finite() && p50 > 0.0);
+        let by_kind = resp.get("by_kind").and_then(Json::as_object).unwrap();
+        assert_eq!(by_kind.len(), 1);
+        assert_eq!(by_kind[0].0, "table");
+    }
+}

@@ -1,0 +1,314 @@
+//! The concurrent advisor server: a dependency-free threaded TCP
+//! front end over the same newline-JSON protocol as `hemingway serve`
+//! on stdin.
+//!
+//! Architecture (DESIGN.md §6.11):
+//!
+//! - an accept loop hands each connection to a bounded
+//!   [`TaskPool`](crate::util::threadpool::TaskPool) worker; a worker
+//!   owns its connection until EOF, answering each line through the
+//!   shared [`handle_service_line`] core,
+//! - queries snapshot an `Arc<ModelRegistry>` out of a
+//!   [`SharedRegistry`] (read-mostly lock); an optional watcher thread
+//!   re-checks `model_context_hash` staleness on the artifact
+//!   directory and hot-swaps freshly fitted models in without
+//!   dropping in-flight queries,
+//! - every line is accounted into a shared [`ServeMetrics`]
+//!   (lock-free histogram + per-kind counters), surfaced by the
+//!   `{"query":"stats"}` wire query and in the shutdown summary,
+//! - shutdown is graceful on SIGINT or a `{"query":"shutdown"}` wire
+//!   query: stop accepting, close idle connections, and drain queued
+//!   plus in-flight work before exiting.
+
+pub mod core;
+pub mod load;
+pub mod metrics;
+pub mod shared;
+
+pub use self::core::{handle_service_line, Handled};
+pub use self::load::{run_load, send_control, LoadConfig, LoadReport, DEFAULT_MIX};
+pub use self::metrics::ServeMetrics;
+pub use self::shared::{ReloadConfig, SharedRegistry};
+
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::advisor::registry::ModelRegistry;
+use crate::advisor::service::ServeStats;
+use crate::util::threadpool::TaskPool;
+
+/// How the server runs; [`ServerConfig::default`] serves with the
+/// default thread count and no artifact watching.
+#[derive(Debug)]
+pub struct ServerConfig {
+    /// Connection worker threads (a worker owns one connection at a
+    /// time, so this is also the concurrent-connection limit).
+    pub workers: usize,
+    /// Accepted connections that may wait for a free worker before the
+    /// accept loop itself blocks (backpressure).
+    pub queue_capacity: usize,
+    /// Artifact hot-reload; `None` serves the initial registry
+    /// forever.
+    pub reload: Option<ReloadConfig>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        let workers = crate::util::threadpool::default_threads();
+        ServerConfig {
+            workers,
+            queue_capacity: (workers * 4).max(4),
+            reload: None,
+        }
+    }
+}
+
+/// A bound-but-not-yet-running advisor server. [`AdvisorServer::bind`]
+/// reserves the port (so `127.0.0.1:0` callers can read the ephemeral
+/// address before spawning clients), [`AdvisorServer::run`] serves
+/// until shutdown.
+pub struct AdvisorServer {
+    listener: TcpListener,
+    addr: SocketAddr,
+    shared: Arc<SharedRegistry>,
+    metrics: Arc<ServeMetrics>,
+    shutdown: Arc<AtomicBool>,
+    config: ServerConfig,
+}
+
+impl AdvisorServer {
+    pub fn bind(
+        addr: &str,
+        registry: ModelRegistry,
+        config: ServerConfig,
+    ) -> crate::Result<AdvisorServer> {
+        crate::ensure!(config.workers >= 1, "server needs at least one worker");
+        let listener = TcpListener::bind(addr).map_err(|e| crate::err!("bind {addr}: {e}"))?;
+        // Non-blocking accept: the loop polls the shutdown flag between
+        // accept attempts instead of parking in the kernel forever.
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        Ok(AdvisorServer {
+            listener,
+            addr: local,
+            shared: Arc::new(SharedRegistry::new(registry)),
+            metrics: Arc::new(ServeMetrics::new()),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            config,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The swappable registry (tests trigger reloads through this).
+    pub fn shared(&self) -> Arc<SharedRegistry> {
+        Arc::clone(&self.shared)
+    }
+
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Flip to request a graceful shutdown from another thread.
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+
+    /// Serve until SIGINT or a `{"query":"shutdown"}` wire query:
+    /// accept connections, dispatch them to the worker pool, then
+    /// drain everything and return the final stats (also logged, so
+    /// both serve modes report the same summary line).
+    pub fn run(mut self) -> crate::Result<ServeStats> {
+        let pool = TaskPool::new(self.config.workers, self.config.queue_capacity);
+        let watcher = self.config.reload.take().map(|reload| {
+            let shared = Arc::clone(&self.shared);
+            let stop = Arc::clone(&self.shutdown);
+            std::thread::Builder::new()
+                .name("hemingway-reload".into())
+                .spawn(move || shared::watch_artifacts(&shared, &reload, &stop))
+                .expect("spawn reload watcher")
+        });
+        crate::log_info!(
+            "advisor server on {} ({} workers{})",
+            self.addr,
+            self.config.workers,
+            if watcher.is_some() {
+                ", watching artifacts"
+            } else {
+                ""
+            }
+        );
+        loop {
+            if sigint_triggered() {
+                crate::log_info!("SIGINT: draining connections");
+                self.shutdown.store(true, Ordering::SeqCst);
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    let shared = Arc::clone(&self.shared);
+                    let metrics = Arc::clone(&self.metrics);
+                    let shutdown = Arc::clone(&self.shutdown);
+                    let submitted = pool.submit(move || {
+                        if let Err(e) = handle_connection(stream, &shared, &metrics, &shutdown) {
+                            crate::log_debug!("connection {peer}: {e}");
+                        }
+                    });
+                    if !submitted {
+                        break;
+                    }
+                }
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::Interrupted) => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    self.shutdown.store(true, Ordering::SeqCst);
+                    pool.shutdown();
+                    return Err(crate::err!("serve: accept: {e}"));
+                }
+            }
+        }
+        // Drain: workers finish their connections (handlers observe
+        // the shutdown flag on their next read timeout), the watcher
+        // notices the flag within its sleep slice.
+        pool.shutdown();
+        if let Some(watcher) = watcher {
+            let _ = watcher.join();
+        }
+        let stats = self.metrics.serve_stats();
+        crate::log_info!("{}", stats.summary());
+        Ok(stats)
+    }
+}
+
+/// Serve one connection until EOF or shutdown. The read side polls
+/// with a short timeout so an idle connection notices a server
+/// shutdown instead of pinning its worker forever; a partially read
+/// line survives timeout polls (bytes already consumed stay in `line`
+/// and the next read appends to it).
+fn handle_connection(
+    stream: TcpStream,
+    shared: &SharedRegistry,
+    metrics: &ServeMetrics,
+    shutdown: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => {
+                // EOF; answer a final unterminated line if one arrived.
+                if !line.trim().is_empty() {
+                    respond(shared, metrics, &line, &mut writer, shutdown)?;
+                }
+                return Ok(());
+            }
+            Ok(_) => {
+                if !line.trim().is_empty() {
+                    let keep = respond(shared, metrics, &line, &mut writer, shutdown)?;
+                    if !keep {
+                        return Ok(());
+                    }
+                }
+                line.clear();
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Answer one line; returns false when the connection should close
+/// (shutdown query — which also stops the whole server).
+fn respond<W: Write>(
+    shared: &SharedRegistry,
+    metrics: &ServeMetrics,
+    line: &str,
+    writer: &mut W,
+    shutdown: &AtomicBool,
+) -> std::io::Result<bool> {
+    let registry = shared.snapshot();
+    match handle_service_line(&registry, metrics, line) {
+        Handled::Response(resp) => {
+            writeln!(writer, "{resp}")?;
+            writer.flush()?;
+            Ok(true)
+        }
+        Handled::Shutdown(resp) => {
+            writeln!(writer, "{resp}")?;
+            writer.flush()?;
+            shutdown.store(true, Ordering::SeqCst);
+            Ok(false)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SIGINT → graceful shutdown. The crate links no libc, so the handler
+// binds the C `signal` symbol directly (std already links the platform
+// libc on unix). The handler only flips an atomic — async-signal-safe
+// — and the accept loop polls it.
+
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static SIGINT_FLAG: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_sigint(_signum: i32) {
+        SIGINT_FLAG.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    const SIGINT: i32 = 2;
+
+    pub fn install() {
+        // SAFETY: `signal` is the POSIX call; the handler writes one
+        // atomic and returns, which is async-signal-safe.
+        unsafe {
+            signal(SIGINT, on_sigint);
+        }
+    }
+
+    pub fn triggered() -> bool {
+        SIGINT_FLAG.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+
+    pub fn triggered() -> bool {
+        false
+    }
+}
+
+/// Install the SIGINT → graceful-shutdown handler (the `serve --tcp`
+/// CLI calls this; tests and benches shut down over the wire instead).
+pub fn install_sigint_handler() {
+    sig::install();
+}
+
+fn sigint_triggered() -> bool {
+    sig::triggered()
+}

@@ -1,0 +1,209 @@
+//! The shared read-mostly registry behind the TCP front end, plus the
+//! artifact watcher that hot-reloads freshly fitted models.
+//!
+//! Queries take an `Arc` snapshot per line, so a reload swaps the
+//! registry pointer under a write lock held for nanoseconds while
+//! every in-flight query keeps answering against the snapshot it
+//! already holds — no query is ever dropped or answered by a torn
+//! half-loaded registry.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, SystemTime};
+
+use crate::advisor::registry::ModelRegistry;
+use crate::cluster::FleetSpec;
+use crate::optim::AlgorithmId;
+
+/// An `Arc<RwLock<Arc<ModelRegistry>>>` in substance: readers clone
+/// the inner `Arc` (one read-lock acquisition per query), writers
+/// replace it whole. The generation counter lets tests and the
+/// watcher observe swaps without comparing registries.
+#[derive(Debug)]
+pub struct SharedRegistry {
+    inner: RwLock<Arc<ModelRegistry>>,
+    generation: AtomicU64,
+}
+
+impl SharedRegistry {
+    pub fn new(registry: ModelRegistry) -> SharedRegistry {
+        SharedRegistry {
+            inner: RwLock::new(Arc::new(registry)),
+            generation: AtomicU64::new(0),
+        }
+    }
+
+    /// The current registry; in-flight holders of older snapshots are
+    /// unaffected by later swaps.
+    pub fn snapshot(&self) -> Arc<ModelRegistry> {
+        Arc::clone(&self.inner.read().expect("registry lock poisoned"))
+    }
+
+    /// Replace the registry wholesale (hot reload).
+    pub fn swap(&self, registry: ModelRegistry) {
+        *self.inner.write().expect("registry lock poisoned") = Arc::new(registry);
+        self.generation.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Bumped once per [`SharedRegistry::swap`].
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
+    }
+}
+
+/// What the artifact watcher reloads and how often it looks.
+#[derive(Debug, Clone)]
+pub struct ReloadConfig {
+    /// The artifact directory (`<out_dir>/models`).
+    pub dir: PathBuf,
+    /// Expected `model_context_hash`; artifacts fitted under any other
+    /// config are stale and never swapped in.
+    pub expect_context: Option<String>,
+    pub machine_grid: Vec<usize>,
+    pub iter_cap: usize,
+    /// Fleet axis to price `cheapest_to` queries with (the registry
+    /// artifacts don't carry it).
+    pub fleets: Vec<FleetSpec>,
+    /// Restrict the reloaded registry to these algorithms (`None`
+    /// serves whatever the directory holds).
+    pub algos: Option<Vec<AlgorithmId>>,
+    /// Poll interval for the staleness re-check.
+    pub poll: Duration,
+}
+
+/// One directory scan, cheap enough to poll: (path, length, mtime)
+/// for every artifact, sorted. Any refit rewrites an artifact and
+/// moves its mtime, which is what triggers a reload attempt.
+fn fingerprint(dir: &Path) -> Vec<(PathBuf, u64, SystemTime)> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return out,
+    };
+    for entry in entries.filter_map(|e| e.ok()) {
+        let path = entry.path();
+        if path.extension().map(|x| x == "json").unwrap_or(false) {
+            if let Ok(meta) = entry.metadata() {
+                let mtime = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+                out.push((path, meta.len(), mtime));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// The watcher loop: poll the artifact directory, and when anything
+/// changed, re-run the same staleness-checked load the server started
+/// from and swap the result in. A failed or empty reload keeps the
+/// previous registry — serving stale answers beats serving none.
+/// Runs until `stop` flips; exits promptly (≤ ~50 ms) on shutdown.
+pub(crate) fn watch_artifacts(shared: &SharedRegistry, cfg: &ReloadConfig, stop: &AtomicBool) {
+    let mut last = fingerprint(&cfg.dir);
+    while !sleep_interruptibly(cfg.poll, stop) {
+        let now = fingerprint(&cfg.dir);
+        if now == last {
+            continue;
+        }
+        last = now;
+        let loaded = ModelRegistry::load_dir(
+            &cfg.dir,
+            cfg.expect_context.as_deref(),
+            cfg.machine_grid.clone(),
+            cfg.iter_cap,
+        );
+        match loaded {
+            Ok((mut registry, report)) => {
+                registry.fleets = cfg.fleets.clone();
+                if let Some(algos) = &cfg.algos {
+                    registry.retain(|key| algos.contains(&key.algorithm));
+                }
+                if registry.is_empty() {
+                    crate::log_warn!(
+                        "artifact reload: no fresh models in {} ({} stale, {} invalid); \
+                         keeping the previous registry",
+                        cfg.dir.display(),
+                        report.stale.len(),
+                        report.invalid.len()
+                    );
+                    continue;
+                }
+                let n = registry.len();
+                shared.swap(registry);
+                crate::log_info!(
+                    "hot-reloaded {n} model artifact(s) from {} (generation {})",
+                    cfg.dir.display(),
+                    shared.generation()
+                );
+            }
+            Err(e) => {
+                crate::log_warn!("artifact reload failed: {e}; keeping the previous registry");
+            }
+        }
+    }
+}
+
+/// Sleep for `total` in short slices, returning true as soon as `stop`
+/// flips (so server shutdown never waits out a long poll interval).
+fn sleep_interruptibly(total: Duration, stop: &AtomicBool) -> bool {
+    let slice = Duration::from_millis(25);
+    let mut slept = Duration::ZERO;
+    while slept < total {
+        if stop.load(Ordering::Relaxed) {
+            return true;
+        }
+        let step = slice.min(total - slept);
+        std::thread::sleep(step);
+        slept += step;
+    }
+    stop.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_survives_swap() {
+        let shared = SharedRegistry::new(ModelRegistry::new(vec![1, 2], 100));
+        let before = shared.snapshot();
+        assert_eq!(shared.generation(), 0);
+        shared.swap(ModelRegistry::new(vec![1, 2, 4, 8], 100));
+        assert_eq!(shared.generation(), 1);
+        // The old snapshot still answers with the old grid; a fresh
+        // snapshot sees the new one.
+        assert_eq!(before.machine_grid.len(), 2);
+        assert_eq!(shared.snapshot().machine_grid.len(), 4);
+    }
+
+    #[test]
+    fn fingerprint_tracks_json_artifacts() {
+        let dir = std::env::temp_dir().join(format!(
+            "hemingway_fingerprint_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(fingerprint(&dir).is_empty());
+        std::fs::write(dir.join("a.json"), "{}").unwrap();
+        std::fs::write(dir.join("ignored.txt"), "x").unwrap();
+        let one = fingerprint(&dir);
+        assert_eq!(one.len(), 1);
+        std::fs::write(dir.join("a.json"), "{\"longer\":1}").unwrap();
+        let changed = fingerprint(&dir);
+        assert_ne!(one, changed, "rewrite must change the fingerprint");
+        // A missing directory is an empty fingerprint, not an error.
+        std::fs::remove_dir_all(&dir).unwrap();
+        assert!(fingerprint(&dir).is_empty());
+    }
+
+    #[test]
+    fn interruptible_sleep_honors_stop() {
+        let stop = AtomicBool::new(true);
+        let t0 = std::time::Instant::now();
+        assert!(sleep_interruptibly(Duration::from_secs(60), &stop));
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+}

@@ -28,21 +28,81 @@ use super::query::{Constraints, Query};
 use super::registry::ModelRegistry;
 use crate::util::json::Json;
 
-/// Counters the serve loop reports when its input ends.
+/// Every query kind the service layer accounts for, in wire-name
+/// order; `other` absorbs unknown kinds and unparseable lines. The
+/// serve summary line and the `{"query":"stats"}` response both report
+/// per-kind counts against this list.
+pub const KIND_NAMES: [&str; 8] = [
+    "fastest_to",
+    "best_at",
+    "cheapest_to",
+    "table",
+    "models",
+    "stats",
+    "shutdown",
+    "other",
+];
+
+/// Index of a wire kind in [`KIND_NAMES`] (unknown kinds → `other`).
+pub fn kind_index(kind: &str) -> usize {
+    KIND_NAMES
+        .iter()
+        .position(|&k| k == kind)
+        .unwrap_or(KIND_NAMES.len() - 1)
+}
+
+/// Counters the serve loop reports when its input ends. Both the
+/// stdin adapter and the TCP server produce one of these from the
+/// same [`super::server::ServeMetrics`], so their summary lines match.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ServeStats {
     pub queries: usize,
     pub errors: usize,
+    /// Per-kind query counts, indexed like [`KIND_NAMES`].
+    pub by_kind: [usize; KIND_NAMES.len()],
+    /// Mean sustained throughput over the serve lifetime.
+    pub qps: f64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
 }
 
-fn error_response(msg: impl Into<String>) -> Json {
+impl ServeStats {
+    /// The kinds actually seen, paired with their counts.
+    pub fn kind_counts(&self) -> Vec<(&'static str, usize)> {
+        KIND_NAMES
+            .iter()
+            .zip(self.by_kind)
+            .filter(|&(_, n)| n > 0)
+            .map(|(&k, n)| (k, n))
+            .collect()
+    }
+
+    /// The one-line summary both serve modes log through
+    /// [`crate::util::logger`] on shutdown/EOF.
+    pub fn summary(&self) -> String {
+        let kinds = self
+            .kind_counts()
+            .iter()
+            .map(|(k, n)| format!("{k}={n}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        format!(
+            "served {} queries ({} errors) [{kinds}] — {:.1} qps, \
+             p50 {:.1}µs p90 {:.1}µs p99 {:.1}µs",
+            self.queries, self.errors, self.qps, self.p50_us, self.p90_us, self.p99_us
+        )
+    }
+}
+
+pub(crate) fn error_response(msg: impl Into<String>) -> Json {
     Json::object(vec![
         ("ok", Json::Bool(false)),
         ("error", Json::str(msg.into())),
     ])
 }
 
-fn ok_response(kind: &str, body: Vec<(String, Json)>) -> Json {
+pub(crate) fn ok_response(kind: &str, body: Vec<(String, Json)>) -> Json {
     let mut fields: Vec<(String, Json)> = vec![
         ("ok".into(), Json::Bool(true)),
         ("query".into(), Json::str(kind)),
@@ -58,13 +118,21 @@ pub fn handle_line(registry: &ModelRegistry, line: &str) -> Json {
         Ok(d) => d,
         Err(e) => return error_response(e.to_string()),
     };
+    handle_doc(registry, &doc)
+}
+
+/// [`handle_line`] after parsing: answer one already-parsed query
+/// document. The server layer parses once (it needs the kind for
+/// accounting and for the server-level `stats`/`shutdown` queries)
+/// and dispatches the rest here.
+pub fn handle_doc(registry: &ModelRegistry, doc: &Json) -> Json {
     let kind = match doc.req_str("query") {
         Ok(k) => k.to_string(),
         Err(e) => return error_response(e.to_string()),
     };
     match kind.as_str() {
         "fastest_to" | "best_at" | "cheapest_to" => {
-            let query = match Query::from_json(&doc) {
+            let query = match Query::from_json(doc) {
                 Ok(q) => q,
                 Err(e) => return error_response(e.to_string()),
             };
@@ -87,7 +155,7 @@ pub fn handle_line(registry: &ModelRegistry, line: &str) -> Json {
             // max_machines prunes the grid; cost weighting has no
             // sensible per-row meaning here, so reject it rather than
             // silently ignore it.
-            let constraints = match Constraints::from_json(&doc) {
+            let constraints = match Constraints::from_json(doc) {
                 Ok(c) => c,
                 Err(e) => return error_response(e.to_string()),
             };
@@ -154,26 +222,37 @@ pub fn handle_line(registry: &ModelRegistry, line: &str) -> Json {
 
 /// The serve loop: one response line per non-empty input line, flushed
 /// immediately so pipes and interactive sessions both work.
+///
+/// A thin adapter over the same service core the TCP server runs
+/// ([`super::server::handle_service_line`]): identical responses for
+/// registry queries, the same `stats` and `shutdown` wire queries, and
+/// the same per-kind accounting in the returned [`ServeStats`]. A
+/// `shutdown` query ends the loop early (stdin's Ctrl-D equivalent).
 pub fn serve<R: BufRead, W: Write>(
     registry: &ModelRegistry,
     input: R,
     mut output: W,
 ) -> crate::Result<ServeStats> {
-    let mut stats = ServeStats::default();
+    use super::server::{handle_service_line, Handled, ServeMetrics};
+    let metrics = ServeMetrics::new();
     for line in input.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        let resp = handle_line(registry, &line);
-        stats.queries += 1;
-        if !resp.get("ok").and_then(Json::as_bool).unwrap_or(false) {
-            stats.errors += 1;
+        match handle_service_line(registry, &metrics, &line) {
+            Handled::Response(resp) => {
+                writeln!(output, "{resp}")?;
+                output.flush()?;
+            }
+            Handled::Shutdown(resp) => {
+                writeln!(output, "{resp}")?;
+                output.flush()?;
+                break;
+            }
         }
-        writeln!(output, "{resp}")?;
-        output.flush()?;
     }
-    Ok(stats)
+    Ok(metrics.serve_stats())
 }
 
 #[cfg(test)]

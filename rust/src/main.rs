@@ -7,7 +7,8 @@
 //!   fit-convergence  fit the convergence model g(i, m) from a sweep
 //!   fit              fit + persist advisor model artifacts (models/*.json)
 //!   advise           answer the paper's two query types from artifacts
-//!   serve            long-lived advisor: JSON queries on stdin, answers on stdout
+//!   serve            long-lived advisor: JSON queries on stdin (or TCP with --tcp)
+//!   serve-load       load-generate against a running TCP advisor server
 //!   adaptive         the Fig 2 adaptive reconfiguration loop
 //!   repro            regenerate a paper figure/table (or `all`)
 //!   info             engine/artifact diagnostics
@@ -61,6 +62,10 @@ fn print_help() {
          \x20                  [--workload hinge|logistic|ridge|base|any] [--native]\n\
          \x20 serve            [--algos ...] [--barriers ...] [--fleets ...]\n\
          \x20                  [--workloads ...] [--native]  JSON queries on stdin\n\
+         \x20                  [--tcp <addr>] [--workers N] [--reload-ms MS]\n\
+         \x20                  [--port-file <f>]  threaded TCP server instead of stdin\n\
+         \x20 serve-load       --addr <host:port> [--clients N] [--queries M]\n\
+         \x20                  [--json <f>] [--shutdown]  load-generate against a server\n\
          \x20 adaptive         [--frames 8] [--frame-seconds 5] [--native]\n\
          \x20 repro            --figure <id>|all [--native]\n\
          \x20 info\n\n\
@@ -85,7 +90,11 @@ fn print_help() {
          workload; pass --barrier any / --fleet any / --workload any (or wire\n\
          \"barrier_mode\"/\"fleet\"/\"workload\" fields) to search over every\n\
          fitted variant. The serve loop also answers\n\
-         {{\"query\":\"cheapest_to\",\"eps\":…}} in real fleet dollars.",
+         {{\"query\":\"cheapest_to\",\"eps\":…}} in real fleet dollars, plus\n\
+         {{\"query\":\"stats\"}} (qps + latency percentiles) and\n\
+         {{\"query\":\"shutdown\"}} (graceful drain). With --tcp the same\n\
+         protocol runs over newline-JSON TCP; --reload-ms polls the model\n\
+         artifact dir and hot-swaps freshly fitted models (0 disables).",
         FIGURES.join(", ")
     );
 }
@@ -451,15 +460,76 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
             let cfg = load_cfg(args)?;
             let algos = parse_algos(args, &cfg)?;
             let registry = load_or_fit_registry(&cfg, native, &algos)?;
-            eprintln!(
-                "serving {} model(s); one JSON query per line, e.g. \
-                 {{\"query\":\"fastest_to\",\"eps\":1e-4}} — Ctrl-D to stop",
-                registry.len()
-            );
-            let stdin = std::io::stdin();
-            let stdout = std::io::stdout();
-            let stats = hemingway::advisor::serve(&registry, stdin.lock(), stdout.lock())?;
-            eprintln!("served {} queries ({} errors)", stats.queries, stats.errors);
+            if let Some(addr) = args.get("tcp") {
+                let workers = args.usize_or(
+                    "workers",
+                    hemingway::util::threadpool::default_threads(),
+                )?;
+                let reload_ms = args.u64_or("reload-ms", 2000)?;
+                let reload = if reload_ms > 0 {
+                    Some(hemingway::advisor::ReloadConfig {
+                        dir: hemingway::repro::common::models_dir(&cfg),
+                        expect_context: Some(cfg.model_context_hash(native)),
+                        machine_grid: cfg.machines.clone(),
+                        iter_cap: cfg.advisor_iter_cap,
+                        fleets: cfg.fleet_specs()?,
+                        algos: Some(algos.clone()),
+                        poll: std::time::Duration::from_millis(reload_ms),
+                    })
+                } else {
+                    None
+                };
+                let server = hemingway::advisor::AdvisorServer::bind(
+                    addr,
+                    registry,
+                    hemingway::advisor::ServerConfig {
+                        workers,
+                        queue_capacity: (workers * 4).max(4),
+                        reload,
+                    },
+                )?;
+                let local = server.local_addr();
+                println!("listening on {local}");
+                std::io::Write::flush(&mut std::io::stdout())?;
+                // Scripts starting the server on an ephemeral port
+                // (--tcp 127.0.0.1:0) read the resolved address here.
+                if let Some(path) = args.get("port-file") {
+                    std::fs::write(path, format!("{local}\n"))?;
+                }
+                hemingway::advisor::install_sigint_handler();
+                server.run()?;
+            } else {
+                eprintln!(
+                    "serving {} model(s); one JSON query per line, e.g. \
+                     {{\"query\":\"fastest_to\",\"eps\":1e-4}} — Ctrl-D to stop",
+                    registry.len()
+                );
+                let stdin = std::io::stdin();
+                let stdout = std::io::stdout();
+                let stats = hemingway::advisor::serve(&registry, stdin.lock(), stdout.lock())?;
+                hemingway::log_info!("{}", stats.summary());
+            }
+        }
+        "serve-load" => {
+            let addr = args
+                .get("addr")
+                .ok_or_else(|| hemingway::err!("serve-load needs --addr host:port"))?
+                .to_string();
+            let clients = args.usize_or("clients", 4)?;
+            let queries = args.usize_or("queries", 200)?;
+            let load_cfg = hemingway::advisor::LoadConfig::new(addr.clone(), clients, queries);
+            let report = hemingway::advisor::run_load(&load_cfg)?;
+            println!("{}", report.summary());
+            // The server-side view of the same burst.
+            let stats = hemingway::advisor::send_control(&addr, r#"{"query":"stats"}"#)?;
+            println!("{stats}");
+            if let Some(path) = args.get("json") {
+                std::fs::write(path, report.to_json().to_pretty())?;
+            }
+            if args.flag("shutdown") {
+                let resp = hemingway::advisor::send_control(&addr, r#"{"query":"shutdown"}"#)?;
+                println!("{resp}");
+            }
         }
         "adaptive" => {
             let cfg = load_cfg(args)?;

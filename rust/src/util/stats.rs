@@ -203,6 +203,90 @@ impl Summary {
     }
 }
 
+/// A concurrent latency histogram over power-of-two nanosecond
+/// buckets: bucket `i` covers `[2^i, 2^(i+1))` ns, so 64 buckets span
+/// sub-nanosecond to centuries. Recording is one relaxed atomic
+/// increment — no locking and no allocation — which is what the serve
+/// path needs when many worker threads account latency into one
+/// shared histogram. Percentiles come back as the geometric midpoint
+/// of the covering bucket (≤ √2× resolution), plenty for p50/p90/p99
+/// reporting.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [std::sync::atomic::AtomicU64; 64],
+    count: std::sync::atomic::AtomicU64,
+    sum_nanos: std::sync::atomic::AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> LatencyHistogram {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        // `Default` is not derivable for 64-element arrays.
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| std::sync::atomic::AtomicU64::new(0)),
+            count: std::sync::atomic::AtomicU64::new(0),
+            sum_nanos: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Record one latency sample. Non-positive and non-finite
+    /// durations clamp into the smallest bucket rather than panicking
+    /// (a clock glitch must not take the server down).
+    pub fn record(&self, seconds: f64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let nanos = if seconds.is_finite() && seconds > 0.0 {
+            (seconds * 1e9) as u64
+        } else {
+            0
+        }
+        .max(1);
+        let bucket = 63 - nanos.leading_zeros() as usize;
+        self.buckets[bucket].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum_nanos.fetch_add(nanos, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Mean latency in seconds (0 when empty).
+    pub fn mean_seconds(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let sum = self.sum_nanos.load(std::sync::atomic::Ordering::Relaxed);
+        sum as f64 * 1e-9 / n as f64
+    }
+
+    /// The `q`-th percentile in seconds (0 when empty): the geometric
+    /// midpoint of the bucket holding the rank-`⌈q/100·n⌉` sample.
+    pub fn percentile_seconds(&self, q: f64) -> f64 {
+        use std::sync::atomic::Ordering::Relaxed;
+        assert!((0.0..=100.0).contains(&q), "percentile q out of range: {q}");
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q / 100.0 * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return (1u64 << i) as f64 * std::f64::consts::SQRT_2 * 1e-9;
+            }
+        }
+        unreachable!("rank {rank} beyond total {total}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -312,5 +396,53 @@ mod tests {
         // Only when nothing survives is the answer NaN.
         assert!(percentile(&[f64::NAN, f64::NAN], 95.0).is_nan());
         assert!(median(&[f64::NAN]).is_nan());
+    }
+
+    #[test]
+    fn latency_histogram_buckets_and_percentiles() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_seconds(50.0), 0.0);
+        assert_eq!(h.mean_seconds(), 0.0);
+        // 90 fast samples (~10µs) and 10 slow ones (~10ms): p50 lands
+        // in the fast bucket, p99 in the slow one, each within the
+        // histogram's 2× bucket resolution.
+        for _ in 0..90 {
+            h.record(10e-6);
+        }
+        for _ in 0..10 {
+            h.record(10e-3);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile_seconds(50.0);
+        let p99 = h.percentile_seconds(99.0);
+        assert!((5e-6..20e-6).contains(&p50), "p50 {p50}");
+        assert!((5e-3..20e-3).contains(&p99), "p99 {p99}");
+        assert!(p50 < p99);
+        let mean = h.mean_seconds();
+        assert!((0.5e-3..2e-3).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn latency_histogram_tolerates_degenerate_samples() {
+        let h = LatencyHistogram::new();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        // All four clamp into the smallest bucket instead of panicking.
+        assert_eq!(h.count(), 4);
+        assert!(h.percentile_seconds(100.0) < 1e-8);
+        // Concurrent recording from many threads stays consistent.
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..1000 {
+                        h.record(1e-6);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 4 + 4000);
     }
 }

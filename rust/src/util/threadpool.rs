@@ -65,6 +65,131 @@ pub fn parallel_map_init<T: Send, S>(
         .collect()
 }
 
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    queue: std::collections::VecDeque<Job>,
+    closed: bool,
+}
+
+struct PoolShared {
+    state: std::sync::Mutex<PoolState>,
+    capacity: usize,
+    /// Signaled when the queue gains a job or the pool closes.
+    available: std::sync::Condvar,
+    /// Signaled when a worker takes a job (submitters waiting on a
+    /// full queue re-check here).
+    space: std::sync::Condvar,
+}
+
+/// A bounded long-lived worker pool for connection/request handling.
+///
+/// [`parallel_map`] covers fork/join over a known workload; the serve
+/// path instead needs workers that outlive any one task and a queue
+/// that applies backpressure when connections arrive faster than they
+/// drain. Submission blocks while the queue is at capacity, and
+/// [`TaskPool::shutdown`] drains queued plus in-flight jobs before
+/// returning — the graceful-shutdown contract the advisor server
+/// relies on.
+pub struct TaskPool {
+    shared: std::sync::Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl TaskPool {
+    pub fn new(workers: usize, capacity: usize) -> TaskPool {
+        assert!(workers > 0, "workers must be > 0");
+        assert!(capacity > 0, "capacity must be > 0");
+        let shared = std::sync::Arc::new(PoolShared {
+            state: std::sync::Mutex::new(PoolState {
+                queue: std::collections::VecDeque::new(),
+                closed: false,
+            }),
+            capacity,
+            available: std::sync::Condvar::new(),
+            space: std::sync::Condvar::new(),
+        });
+        let workers = (0..workers)
+            .map(|i| {
+                let shared = std::sync::Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("hemingway-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        TaskPool { shared, workers }
+    }
+
+    /// Submit a job, blocking while the queue is at capacity. Returns
+    /// false (dropping the job) once the pool has shut down.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) -> bool {
+        let mut state = self.shared.state.lock().unwrap();
+        while state.queue.len() >= self.shared.capacity && !state.closed {
+            state = self.shared.space.wait(state).unwrap();
+        }
+        if state.closed {
+            return false;
+        }
+        state.queue.push_back(Box::new(job));
+        drop(state);
+        self.shared.available.notify_one();
+        true
+    }
+
+    /// Jobs currently queued (not yet picked up by a worker).
+    pub fn queued(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    /// Stop accepting new jobs and wait for queued and in-flight jobs
+    /// to finish.
+    pub fn shutdown(mut self) {
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        {
+            let mut state = self.shared.state.lock().unwrap();
+            state.closed = true;
+        }
+        self.shared.available.notify_all();
+        self.shared.space.notify_all();
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+    }
+}
+
+impl Drop for TaskPool {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut state = shared.state.lock().unwrap();
+            loop {
+                if let Some(job) = state.queue.pop_front() {
+                    break job;
+                }
+                if state.closed {
+                    return;
+                }
+                state = shared.available.wait(state).unwrap();
+            }
+        };
+        shared.space.notify_one();
+        // A panicking job must not kill the worker — the pool would
+        // silently lose capacity. Contain it and keep serving.
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
+            crate::log_warn!("a pool job panicked; worker continues");
+        }
+    }
+}
+
 /// Default worker count: the `HEMINGWAY_THREADS` environment override
 /// when set (CI pins `HEMINGWAY_THREADS=1` for determinism checks),
 /// else physical parallelism, capped.
@@ -158,5 +283,56 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    fn task_pool_runs_every_job() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let pool = TaskPool::new(4, 2);
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let done = Arc::clone(&done);
+            // Capacity 2 forces submit-side backpressure along the way.
+            assert!(pool.submit(move || {
+                done.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        pool.shutdown();
+        assert_eq!(done.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn task_pool_drains_queued_jobs_on_shutdown() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        // One slow worker with a deep queue: shutdown must wait for the
+        // queued jobs, not drop them.
+        let pool = TaskPool::new(1, 64);
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..20 {
+            let done = Arc::clone(&done);
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                done.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(done.load(Ordering::Relaxed), 20);
+    }
+
+    #[test]
+    fn task_pool_survives_a_panicking_job() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let pool = TaskPool::new(1, 8);
+        let done = Arc::new(AtomicUsize::new(0));
+        pool.submit(|| panic!("job boom"));
+        let after = Arc::clone(&done);
+        pool.submit(move || {
+            after.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.shutdown();
+        assert_eq!(done.load(Ordering::Relaxed), 1, "worker died with the job");
     }
 }

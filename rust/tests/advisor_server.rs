@@ -1,0 +1,315 @@
+//! Concurrency-correctness tests for the TCP advisor server: N client
+//! threads hammer a live server and every response must be
+//! byte-identical to single-threaded `handle_line` on the same query;
+//! a registry hot-swap under load must never drop or cross-wire a
+//! response; and the `stats`/`shutdown` wire queries must work over
+//! TCP and through the stdin adapter alike.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+use hemingway::advisor::registry::ModelKey;
+use hemingway::advisor::{
+    handle_line, save_artifact, AdvisorServer, AlgorithmId, CombinedModel, ModelRegistry,
+    ReloadConfig, ServerConfig,
+};
+use hemingway::ernest::ErnestModel;
+use hemingway::hemingway_model::{ConvergenceModel, FeatureLibrary, LassoFit};
+use hemingway::util::json::Json;
+
+/// Hand-built registry with exactly-known numbers (the same golden
+/// model as the service unit tests): f(m) = `iter_seconds` constant,
+/// g(i, m) = 0.5·e^(−i/m), floor 1e-12, machines [1, 2, 4].
+fn golden_model(iter_seconds: f64) -> CombinedModel {
+    let library = FeatureLibrary::standard();
+    let i_over_m = library.names().iter().position(|&n| n == "i/m").unwrap();
+    let mut coef = vec![0.0; library.len()];
+    coef[i_over_m] = -1.0;
+    let conv = ConvergenceModel {
+        library,
+        fit: LassoFit {
+            coef,
+            intercept: 0.5f64.ln(),
+            alpha: 0.01,
+            iterations: 1,
+        },
+        train_r2: 1.0,
+        n_train: 0,
+        floor: 1e-12,
+    };
+    let ernest = ErnestModel {
+        theta: [iter_seconds, 0.0, 0.0, 0.0],
+        train_rmse: 0.0,
+    };
+    CombinedModel::new(ernest, conv, 1000.0)
+}
+
+fn golden_registry() -> ModelRegistry {
+    let mut registry = ModelRegistry::new(vec![1, 2, 4], 100_000);
+    registry.insert(
+        ModelKey {
+            algorithm: AlgorithmId::CocoaPlus,
+            context: "golden".into(),
+        },
+        golden_model(0.5),
+    );
+    registry
+}
+
+/// One connected client with line-level send/expect helpers.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    response: String,
+}
+
+impl Client {
+    fn connect(addr: &std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_nodelay(true).ok();
+        Client {
+            reader: BufReader::new(stream.try_clone().expect("clone stream")),
+            writer: stream,
+            response: String::new(),
+        }
+    }
+
+    fn roundtrip(&mut self, query: &str) -> String {
+        writeln!(self.writer, "{query}").expect("send query");
+        self.response.clear();
+        let n = self.reader.read_line(&mut self.response).expect("read response");
+        assert!(n > 0, "server closed the connection mid-query");
+        self.response.trim_end().to_string()
+    }
+}
+
+#[test]
+fn concurrent_clients_get_byte_identical_responses() {
+    const CLIENTS: usize = 8;
+    const ROUNDS: usize = 3;
+    let queries = [
+        r#"{"query":"fastest_to","eps":0.02}"#,
+        r#"{"query":"best_at","budget":4}"#,
+        r#"{"query":"table","eps":0.01,"budget":4}"#,
+        r#"{"query":"models"}"#,
+        r#"{"query":"what"}"#,
+        "not json",
+    ];
+    // Expectations from the single-threaded pure core on an identical
+    // registry — the concurrency layer must not change a single byte.
+    let reference = golden_registry();
+    let expected: Vec<String> = queries
+        .iter()
+        .map(|q| handle_line(&reference, q).to_string())
+        .collect();
+
+    let server = AdvisorServer::bind(
+        "127.0.0.1:0",
+        golden_registry(),
+        ServerConfig {
+            workers: 4, // fewer workers than clients: exercises queueing
+            queue_capacity: 16,
+            reload: None,
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    std::thread::scope(|scope| {
+        for client_id in 0..CLIENTS {
+            let expected = &expected;
+            let queries = &queries;
+            scope.spawn(move || {
+                let mut client = Client::connect(&addr);
+                for round in 0..ROUNDS {
+                    // Per-client phase shift: concurrent clients are
+                    // never in lockstep on the same query kind.
+                    for i in 0..queries.len() {
+                        let k = (client_id + round + i) % queries.len();
+                        let got = client.roundtrip(queries[k]);
+                        assert_eq!(
+                            got,
+                            expected[k],
+                            "client {client_id} round {round} query {k} diverged"
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    // Graceful wire shutdown, then the server-side accounting: every
+    // query from every client was counted, per kind.
+    let mut control = Client::connect(&addr);
+    let shutdown_resp = control.roundtrip(r#"{"query":"shutdown"}"#);
+    assert!(shutdown_resp.contains(r#""ok":true"#), "{shutdown_resp}");
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.queries, CLIENTS * ROUNDS * queries.len() + 1);
+    // Two error lines per round per client ("what" + "not json").
+    assert_eq!(stats.errors, CLIENTS * ROUNDS * 2);
+    let kinds = stats.kind_counts();
+    assert!(
+        kinds.contains(&("fastest_to", CLIENTS * ROUNDS)),
+        "{kinds:?}"
+    );
+    assert!(kinds.contains(&("other", CLIENTS * ROUNDS * 2)), "{kinds:?}");
+    assert!(kinds.contains(&("shutdown", 1)), "{kinds:?}");
+    assert!(stats.qps > 0.0 && stats.p99_us.is_finite());
+}
+
+#[test]
+fn hot_reload_under_load_never_drops_or_tears_a_response() {
+    let base = std::env::temp_dir().join(format!("hemingway_reload_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let watched = base.join("models");
+    let staged = base.join("staged");
+    std::fs::create_dir_all(&watched).unwrap();
+    std::fs::create_dir_all(&staged).unwrap();
+
+    // Artifact A (f(m)=0.5) in the watched dir; artifact B (f(m)=0.25,
+    // twice as fast) staged for the mid-load swap. Expectations come
+    // from registries loaded through the same artifact round-trip the
+    // watcher uses, so float round-trips cannot skew the comparison.
+    let path_a = hemingway::advisor::artifact_path(&watched, AlgorithmId::CocoaPlus);
+    let path_b = hemingway::advisor::artifact_path(&staged, AlgorithmId::CocoaPlus);
+    save_artifact(&path_a, AlgorithmId::CocoaPlus, "ctx", "golden A", &golden_model(0.5)).unwrap();
+    save_artifact(&path_b, AlgorithmId::CocoaPlus, "ctx", "golden B", &golden_model(0.25)).unwrap();
+    let load = |dir: &std::path::Path| {
+        ModelRegistry::load_dir(dir, Some("ctx"), vec![1, 2, 4], 100_000)
+            .unwrap()
+            .0
+    };
+    let query = r#"{"query":"fastest_to","eps":0.02}"#;
+    let expect_a = handle_line(&load(&watched), query).to_string();
+    let expect_b = handle_line(&load(&staged), query).to_string();
+    assert_ne!(expect_a, expect_b, "the two models must answer differently");
+
+    let server = AdvisorServer::bind(
+        "127.0.0.1:0",
+        load(&watched),
+        ServerConfig {
+            workers: 4,
+            queue_capacity: 16,
+            reload: Some(ReloadConfig {
+                dir: watched.clone(),
+                expect_context: Some("ctx".into()),
+                machine_grid: vec![1, 2, 4],
+                iter_cap: 100_000,
+                fleets: Vec::new(),
+                algos: None,
+                poll: Duration::from_millis(25),
+            }),
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    let saw_b = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        for client_id in 0..3 {
+            let saw_b = &saw_b;
+            let expect_a = &expect_a;
+            let expect_b = &expect_b;
+            scope.spawn(move || {
+                let mut client = Client::connect(&addr);
+                let deadline = Instant::now() + Duration::from_secs(20);
+                loop {
+                    let got = client.roundtrip(query);
+                    // Every response is exactly the old or the new
+                    // model's answer — never torn, never cross-wired.
+                    assert!(
+                        got == *expect_a || got == *expect_b,
+                        "client {client_id}: unexpected response {got}"
+                    );
+                    if got == *expect_b {
+                        saw_b.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                    assert!(
+                        Instant::now() < deadline,
+                        "client {client_id}: reload never became visible"
+                    );
+                }
+            });
+        }
+        // Swap the artifact mid-load: write-to-temp + rename is atomic
+        // within the directory, exactly how a concurrent `fit` would
+        // land a fresh artifact.
+        std::thread::sleep(Duration::from_millis(100));
+        let tmp = watched.join("cocoa_plus.json.tmp");
+        std::fs::copy(&path_b, &tmp).unwrap();
+        std::fs::rename(&tmp, &path_a).unwrap();
+    });
+    assert!(saw_b.load(Ordering::SeqCst));
+
+    let mut control = Client::connect(&addr);
+    control.roundtrip(r#"{"query":"shutdown"}"#);
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.errors, 0, "no response may error during a swap");
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn stats_and_shutdown_over_the_wire() {
+    let server =
+        AdvisorServer::bind("127.0.0.1:0", golden_registry(), ServerConfig::default()).unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    let mut client = Client::connect(&addr);
+    for _ in 0..3 {
+        let resp = client.roundtrip(r#"{"query":"fastest_to","eps":0.02}"#);
+        assert!(resp.contains(r#""predicted_seconds""#), "{resp}");
+    }
+    let stats_resp = client.roundtrip(r#"{"query":"stats"}"#);
+    let doc = Json::parse(&stats_resp).unwrap();
+    assert_eq!(doc.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(doc.get("queries").and_then(Json::as_usize), Some(3));
+    let p50 = doc.get("p50_us").and_then(Json::as_f64).unwrap();
+    let p99 = doc.get("p99_us").and_then(Json::as_f64).unwrap();
+    let qps = doc.get("qps").and_then(Json::as_f64).unwrap();
+    assert!(p50.is_finite() && p50 > 0.0, "{stats_resp}");
+    assert!(p99.is_finite() && p99 >= p50, "{stats_resp}");
+    assert!(qps.is_finite() && qps > 0.0, "{stats_resp}");
+
+    let shutdown_resp = client.roundtrip(r#"{"query":"shutdown"}"#);
+    let doc = Json::parse(&shutdown_resp).unwrap();
+    assert_eq!(doc.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(doc.get("served").and_then(Json::as_usize), Some(4));
+
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.queries, 5);
+    assert_eq!(stats.errors, 0);
+    assert!(stats.kind_counts().contains(&("stats", 1)), "{stats:?}");
+    assert!(stats.kind_counts().contains(&("shutdown", 1)), "{stats:?}");
+}
+
+#[test]
+fn stdin_adapter_shares_the_service_core() {
+    // The stdin loop is a thin adapter over the same core: it answers
+    // `stats`, stops at `shutdown` (lines after it are never read),
+    // and accounts per-kind like the TCP server.
+    let registry = golden_registry();
+    let input = b"{\"query\":\"fastest_to\",\"eps\":0.02}\n\
+                  {\"query\":\"stats\"}\n\
+                  {\"query\":\"shutdown\"}\n\
+                  {\"query\":\"models\"}\n";
+    let mut out = Vec::new();
+    let stats = hemingway::advisor::serve(&registry, &input[..], &mut out).unwrap();
+    let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().lines().collect();
+    assert_eq!(lines.len(), 3, "serving must stop at the shutdown query");
+    assert!(lines[0].contains(r#""predicted_seconds":2"#), "{}", lines[0]);
+    assert!(lines[1].contains(r#""query":"stats""#), "{}", lines[1]);
+    assert!(lines[1].contains(r#""p99_us""#), "{}", lines[1]);
+    assert!(lines[2].contains(r#""query":"shutdown""#), "{}", lines[2]);
+    assert_eq!(stats.queries, 3);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(
+        stats.kind_counts(),
+        vec![("fastest_to", 1), ("stats", 1), ("shutdown", 1)]
+    );
+}
