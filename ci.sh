@@ -29,6 +29,11 @@ QUICKCHECK_SEED=20170211 cargo test -q --release --test sweep_store
 # core, hot reload under load never tears a response) under the same
 # pinned seed for log comparability.
 QUICKCHECK_SEED=20170211 cargo test -q --release --test advisor_server
+# Elastic-execution invariants (no-event elastic ≡ static bitwise,
+# checkpoint/restore resumes bit-identically under live events, m→m
+# resize is a strict no-op, wire encoding byte-stable for every f32/f64
+# bit pattern incl. NaN/-0.0/±∞) under the same pinned seed.
+QUICKCHECK_SEED=20170211 cargo test -q --release --test elastic_props
 cargo fmt --check
 
 # Advisor-service smoke: fit-on-miss once, then three JSON queries
@@ -159,6 +164,30 @@ if grep -q '"ok":false' "$tmp/workload_query.out"; then
   exit 1
 fi
 echo "workloads smoke OK"
+
+# Elastic smoke: the failure scenario end to end — a tiny grid, one
+# preemption at 25% of the running plan's time-to-target, advisor
+# re-planning every 5 iterations. The re-planned run must reach the
+# target (non-empty t_replanned cell, column 5 of the compare row) and
+# the event timeline must record the preemption.
+cat > "$tmp/elastic.json" <<EOF
+{"n": 256, "d": 16, "machines": [1, 2, 4, 8], "max_iters": 60,
+ "target_subopt": 1e-2, "advisor_iter_cap": 2000,
+ "algorithms": ["cocoa+"], "out_dir": "$tmp/elastic_out"}
+EOF
+cargo run --release --quiet -- repro --figure elastic --native \
+  --config "$tmp/elastic.json"
+grep -q '^elastic:' "$tmp/elastic_out/summaries.txt"
+test -f "$tmp/elastic_out/elastic_events.csv"
+[ "$(wc -l < "$tmp/elastic_out/elastic_events.csv")" -ge 2 ]
+grep -q '^preempt,' "$tmp/elastic_out/elastic_events.csv"
+test -f "$tmp/elastic_out/elastic_compare.csv"
+t_replanned="$(tail -n 1 "$tmp/elastic_out/elastic_compare.csv" | cut -d, -f5)"
+if [ -z "$t_replanned" ]; then
+  echo "elastic smoke: re-planned run did not reach the target" >&2
+  exit 1
+fi
+echo "elastic smoke OK"
 
 # Resume smoke: a tiny sweep, then tear the trace-store manifest tail
 # (as a kill mid-append would) and rerun with --resume. Planning runs

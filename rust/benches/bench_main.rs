@@ -305,6 +305,7 @@ fn main() -> hemingway::Result<()> {
             modes: vec![hemingway::cluster::BarrierMode::Bsp],
             fleets: Vec::new(),
             workloads: Vec::new(),
+            events: String::new(),
             seeds: 2,
             base_seed: small.seed,
             run: RunConfig {
@@ -442,6 +443,7 @@ fn main() -> hemingway::Result<()> {
             modes: vec![hemingway::cluster::BarrierMode::Bsp],
             fleets: Vec::new(),
             workloads: Vec::new(),
+            events: String::new(),
             seeds: 1,
             base_seed: 1,
             run: RunConfig::default(),

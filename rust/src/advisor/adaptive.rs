@@ -6,11 +6,17 @@
 //! exact ([`crate::optim::Cocoa::repartition`]).
 
 use super::combined::CombinedModel;
-use crate::cluster::BspSim;
+use super::query::{Constraints, ModeFilter, ReplanQuery};
+use super::registry::ModelRegistry;
+use crate::cluster::{BspSim, ClusterSim};
 use crate::config::ExperimentConfig;
 use crate::ernest::{ErnestModel, Observation};
 use crate::hemingway_model::{ConvPoint, ConvergenceModel, FeatureLibrary};
-use crate::optim::{Algorithm, Backend, Cocoa, CocoaVariant, Problem};
+use crate::optim::{
+    Algorithm, AlgorithmId, Backend, Checkpoint, Cocoa, CocoaVariant, Problem, Record, RunConfig,
+    Trace,
+};
+use crate::util::json::Json;
 use crate::util::threadpool::{default_threads, parallel_map};
 
 /// Log of one adaptive time frame.
@@ -195,6 +201,291 @@ pub fn adaptive_cocoa_plus(
     })
 }
 
+/// Configuration of the elastic loop: how often a running job asks the
+/// advisor whether its degree of parallelism is still the right one,
+/// given what the cluster scenario has done to the machine pool.
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Consult the advisor every this many outer iterations
+    /// (0 disables re-planning entirely).
+    pub replan_every: usize,
+    /// Machine counts a re-plan may land on. Carried for callers that
+    /// build the registry and the driver from one experiment config;
+    /// the registry's own grid is what the search actually walks.
+    pub machine_grid: Vec<usize>,
+    /// Construction seed of the running algorithm, recorded into
+    /// checkpoints so a restore rebuilds the identical RNG streams.
+    pub seed: u32,
+}
+
+/// Log of one advisor consultation by the elastic driver.
+#[derive(Debug, Clone)]
+pub struct ReplanLog {
+    /// Outer iteration at which the consultation happened.
+    pub iter: usize,
+    /// Simulated seconds elapsed at that point.
+    pub sim_time: f64,
+    pub from_machines: usize,
+    pub to_machines: usize,
+    /// Predicted seconds-to-ε if the job stays at `from_machines`,
+    /// stretched by the oversubscription load the shrunken pool
+    /// imposes (None if the model deems the target unreachable there).
+    pub predicted_stay_seconds: Option<f64>,
+    /// Predicted seconds-to-ε at the advisor's recommendation (None if
+    /// no admitted configuration reaches the target).
+    pub predicted_move_seconds: Option<f64>,
+    /// Whether the driver actually checkpointed and resized.
+    pub moved: bool,
+}
+
+/// Result of an elastic run: the convergence trace plus the advisor
+/// consultations that shaped it.
+#[derive(Debug, Clone)]
+pub struct ElasticRun {
+    pub trace: Trace,
+    pub replans: Vec<ReplanLog>,
+}
+
+/// Run an algorithm under the elastic protocol. The loop mirrors
+/// [`crate::optim::run`] step for step, but every `ecfg.replan_every`
+/// iterations — and only when the scenario has changed the usable
+/// machine pool since the last plan — it asks the advisor whether to
+/// keep the current degree of parallelism or to checkpoint, resize and
+/// continue. With no scenario events (or no registry, or
+/// `replan_every == 0`) the elastic machinery is inert: the loop
+/// executes exactly the static code path — no extra simulator calls,
+/// float operations or RNG draws — and produces a bitwise-identical
+/// trace (`tests/elastic_props.rs` pins this).
+#[allow(clippy::too_many_arguments)]
+pub fn run_elastic(
+    algo: &mut Box<dyn Algorithm>,
+    backend: &dyn Backend,
+    problem: &Problem,
+    sim: &mut ClusterSim,
+    p_star: f64,
+    cfg: &RunConfig,
+    ecfg: &ElasticConfig,
+    registry: Option<&ModelRegistry>,
+) -> crate::Result<ElasticRun> {
+    let mut trace = Trace::new(algo.name(), algo.machines(), p_star);
+    trace.barrier_mode = sim.mode;
+    trace.workload = problem.objective;
+
+    let initial_primal = problem.primal(algo.weights());
+    trace.push(Record {
+        iter: 0,
+        sim_time: 0.0,
+        primal: initial_primal,
+        dual: algo
+            .dual_sum()
+            .map(|s| problem.dual(s, algo.weights()))
+            .unwrap_or(f64::NAN),
+        subopt: initial_primal - p_star,
+    });
+
+    elastic_loop(algo, backend, problem, sim, cfg, ecfg, registry, 0, 0.0, trace)
+}
+
+/// Resume an elastic run from a checkpoint: rebuild the algorithm and
+/// the simulator's clock state from the checkpoint payloads, then
+/// continue the loop from the recorded iteration and simulated time,
+/// appending to `trace_so_far`. The simulator must be constructed with
+/// the same fleet, mode and scenario as the interrupted run; a resume
+/// then continues bit-identically to the run that never stopped.
+#[allow(clippy::too_many_arguments)]
+pub fn resume_elastic(
+    ckpt: &Checkpoint,
+    trace_so_far: Trace,
+    backend: &dyn Backend,
+    problem: &Problem,
+    sim: &mut ClusterSim,
+    cfg: &RunConfig,
+    ecfg: &ElasticConfig,
+    registry: Option<&ModelRegistry>,
+) -> crate::Result<ElasticRun> {
+    let mut algo = ckpt.restore(problem)?;
+    if let Some(state) = &ckpt.sim {
+        sim.load_state(state)?;
+    }
+    elastic_loop(
+        &mut algo,
+        backend,
+        problem,
+        sim,
+        cfg,
+        ecfg,
+        registry,
+        ckpt.iter,
+        ckpt.sim_time,
+        trace_so_far,
+    )
+}
+
+/// The shared loop body: a line-for-line mirror of
+/// [`crate::optim::run`] with the consult block spliced in at the top
+/// of each iteration, gated on `elastic_active`.
+#[allow(clippy::too_many_arguments)]
+fn elastic_loop(
+    algo: &mut Box<dyn Algorithm>,
+    backend: &dyn Backend,
+    problem: &Problem,
+    sim: &mut ClusterSim,
+    cfg: &RunConfig,
+    ecfg: &ElasticConfig,
+    registry: Option<&ModelRegistry>,
+    start_iter: usize,
+    start_time: f64,
+    mut trace: Trace,
+) -> crate::Result<ElasticRun> {
+    let p_star = trace.p_star;
+    let elastic_active = registry.is_some() && ecfg.replan_every > 0 && !sim.events().is_empty();
+    let mut replans: Vec<ReplanLog> = Vec::new();
+    // Capacity the current plan was made against; consult only when it
+    // moves, so a stable cluster never pays for repeated queries.
+    let mut last_planned_cap = if elastic_active {
+        sim.capacity(algo.machines())
+    } else {
+        0
+    };
+    let mut sim_time = start_time;
+
+    for i in start_iter..cfg.max_iters {
+        if elastic_active && i > 0 && i % ecfg.replan_every == 0 {
+            let cap = sim.capacity(algo.machines());
+            if cap != last_planned_cap {
+                last_planned_cap = cap;
+                if let Some(reg) = registry {
+                    if let Some(log) =
+                        consult(algo, problem, sim, cfg, ecfg, reg, i, sim_time, &trace, cap)?
+                    {
+                        replans.push(log);
+                    }
+                }
+            }
+        }
+
+        algo.set_staleness(sim.read_staleness());
+        let cost = algo.step(backend, i)?;
+        let dt = sim.iteration_time(&cost);
+        if let Some(budget) = cfg.time_budget {
+            // Same pre-charge rule as the static driver: an iteration
+            // whose priced finish overshoots the budget was never
+            // bought and must not be recorded.
+            if sim_time + dt > budget {
+                break;
+            }
+        }
+        sim_time += dt;
+
+        let primal = problem.primal(algo.weights());
+        let dual = algo
+            .dual_sum()
+            .map(|s| problem.dual(s, algo.weights()))
+            .unwrap_or(f64::NAN);
+        let subopt = primal - p_star;
+        trace.push(Record {
+            iter: i + 1,
+            sim_time,
+            primal,
+            dual,
+            subopt,
+        });
+
+        if subopt <= cfg.target_subopt {
+            crate::log_debug!(
+                "{} m={} reached {:.1e} at iter {}",
+                algo.name(),
+                algo.machines(),
+                cfg.target_subopt,
+                i + 1
+            );
+            break;
+        }
+        if let Some(budget) = cfg.time_budget {
+            if sim_time >= budget {
+                break;
+            }
+        }
+    }
+
+    Ok(ElasticRun { trace, replans })
+}
+
+/// One advisor consultation: anchor on the last trace record, ask the
+/// registry for the fastest admitted configuration *from here* under
+/// the shrunken pool, compare against staying put (stretched by the
+/// oversubscription load the simulator would charge), and move via a
+/// byte-round-tripped checkpoint when moving wins.
+#[allow(clippy::too_many_arguments)]
+fn consult(
+    algo: &mut Box<dyn Algorithm>,
+    problem: &Problem,
+    sim: &ClusterSim,
+    cfg: &RunConfig,
+    ecfg: &ElasticConfig,
+    registry: &ModelRegistry,
+    iter: usize,
+    sim_time: f64,
+    trace: &Trace,
+    cap: usize,
+) -> crate::Result<Option<ReplanLog>> {
+    let last = match trace.records.last() {
+        Some(r) if r.subopt.is_finite() && r.subopt > 0.0 => r,
+        _ => return Ok(None),
+    };
+    let m_cur = algo.machines();
+    let query = ReplanQuery {
+        eps: cfg.target_subopt,
+        iter: (last.iter as f64).max(1.0),
+        subopt: last.subopt,
+        algorithm: AlgorithmId::parse(algo.name()).ok(),
+        constraints: Constraints {
+            max_machines: Some(cap),
+            barrier_mode: ModeFilter::Only(sim.mode),
+            ..Constraints::none()
+        },
+    };
+    let rec = registry.replan(&query);
+    // Staying put on a pool of `cap` hosts oversubscribes the worst
+    // host by ceil(m_cur / cap), and every barrier stretches by that
+    // load — exactly the simulator's preemption pricing.
+    let load = m_cur.div_ceil(cap) as f64;
+    let t_stay = query.algorithm.and_then(|id| {
+        registry
+            .iter()
+            .find(|(k, _)| k.algorithm == id)
+            .and_then(|(_, model)| {
+                model.replan_seconds(query.iter, query.subopt, query.eps, m_cur, registry.iter_cap)
+            })
+            .map(|t| t * load)
+    });
+    let t_move = rec.as_ref().and_then(|r| r.predicted.seconds());
+    let to_machines = rec.as_ref().map(|r| r.machines).unwrap_or(m_cur);
+    let moved = match t_move {
+        Some(tm) if to_machines != m_cur => t_stay.map(|ts| tm < ts).unwrap_or(true),
+        _ => false,
+    };
+    if moved {
+        // Move through the full checkpoint path — serialize to bytes
+        // and parse back — so the in-process resize exercises exactly
+        // what a disk restore would (the property tests pin this).
+        let ckpt =
+            Checkpoint::capture(algo.as_ref(), ecfg.seed, iter, sim_time, Some(sim.save_state()));
+        let doc = Json::parse(&ckpt.to_json().to_string())
+            .map_err(|e| crate::err!("re-parsing elastic checkpoint: {e}"))?;
+        *algo = Checkpoint::from_json(&doc)?.restore_resized(problem, to_machines)?;
+    }
+    Ok(Some(ReplanLog {
+        iter,
+        sim_time,
+        from_machines: m_cur,
+        to_machines,
+        predicted_stay_seconds: t_stay,
+        predicted_move_seconds: t_move,
+        moved,
+    }))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -234,6 +525,76 @@ mod tests {
     }
 
     #[test]
+    fn budget_exhaustion_runs_all_frames_with_consistent_accounting() {
+        // An unreachable target must exhaust max_frames exactly, with
+        // the frame ledger internally consistent: indices sequential,
+        // sim_time_end monotone, each frame's start_subopt the previous
+        // frame's end_subopt bit for bit, and the run totals equal to
+        // the last frame's (and the simulator's) state.
+        let p = Problem::new(two_gaussians(256, 8, 2.0, 9), 1e-3);
+        let (p_star, _, _) = p.reference_solve(1e-7, 400);
+        let mut sim = BspSim::new(HardwareProfile::local48(), 7);
+        let cfg = AdaptiveConfig {
+            frame_seconds: 0.5,
+            max_frames: 3,
+            machine_grid: vec![1, 2, 4, 8],
+            target_subopt: -1.0, // unreachable: exhaust the budget
+            bootstrap_machines: 4,
+            seed: 2,
+        };
+        let run = adaptive_cocoa_plus(&p, &NativeBackend, &mut sim, p_star, &cfg).unwrap();
+        assert_eq!(run.frames.len(), cfg.max_frames);
+        for (i, f) in run.frames.iter().enumerate() {
+            assert_eq!(f.frame, i);
+            assert!(f.iterations >= 1, "frame {i} ran no iterations");
+        }
+        for w in run.frames.windows(2) {
+            assert!(w[0].sim_time_end <= w[1].sim_time_end);
+            assert_eq!(w[0].end_subopt.to_bits(), w[1].start_subopt.to_bits());
+        }
+        let last = run.frames.last().unwrap();
+        assert_eq!(run.final_subopt.to_bits(), last.end_subopt.to_bits());
+        assert_eq!(run.total_time.to_bits(), last.sim_time_end.to_bits());
+        assert_eq!(run.total_time.to_bits(), sim.elapsed.to_bits());
+    }
+
+    #[test]
+    fn plan_gate_and_subsecond_frames_never_leave_bootstrap() {
+        // Frames shorter than one iteration run exactly one iteration
+        // each, so observations accrue one per frame. The planner needs
+        // ≥4 timing observations AND ≥12 convergence points before it
+        // may fit, so frames 0..=11 must stay on the bootstrap m with
+        // model_driven = false. From frame 12 on the gate is open, but
+        // frame_decay over a 1e-9s frame fits less than one iteration
+        // and returns None for every candidate — the planner must
+        // decline (all-infinite evals) rather than repartition on a
+        // vacuous plan. Either way: no frame ever leaves the bootstrap.
+        let p = Problem::new(two_gaussians(256, 8, 2.0, 5), 1e-3);
+        let (p_star, _, _) = p.reference_solve(1e-7, 400);
+        let mut sim = BspSim::new(HardwareProfile::local48(), 11);
+        let cfg = AdaptiveConfig {
+            frame_seconds: 1e-9,
+            max_frames: 14,
+            machine_grid: vec![1, 2, 4, 8],
+            target_subopt: -1.0,
+            bootstrap_machines: 8,
+            seed: 3,
+        };
+        let run = adaptive_cocoa_plus(&p, &NativeBackend, &mut sim, p_star, &cfg).unwrap();
+        assert_eq!(run.frames.len(), cfg.max_frames);
+        for f in &run.frames {
+            assert_eq!(f.iterations, 1, "frame {} ran {} iterations", f.frame, f.iterations);
+        }
+        for f in &run.frames[..12] {
+            assert!(!f.model_driven, "frame {} planned before the gate", f.frame);
+        }
+        for f in &run.frames {
+            assert!(!f.model_driven, "frame {} acted on a vacuous plan", f.frame);
+            assert_eq!(f.machines, 8, "frame {} left the bootstrap m", f.frame);
+        }
+    }
+
+    #[test]
     fn repartition_preserves_state() {
         let p = Problem::new(two_gaussians(256, 8, 2.0, 9), 1e-2);
         let backend = NativeBackend;
@@ -253,5 +614,214 @@ mod tests {
             algo.step(&backend, i).unwrap();
         }
         assert!(p.primal(algo.weights()) <= before_primal + 1e-6);
+    }
+
+    /// A hand-checkable registry: f(m) = 0.5 s/iter for every m and
+    /// ln g = ln 0.5 − i/m, so the predicted time-to-ε from an anchor
+    /// (i0, s0) is 0.5 · ceil(m · ln(s0/ε)) — strictly better at
+    /// smaller m (the same arithmetic as the service-layer goldens).
+    fn golden_elastic_registry() -> ModelRegistry {
+        use crate::advisor::registry::ModelKey;
+        use crate::hemingway_model::LassoFit;
+        let library = FeatureLibrary::standard();
+        let i_over_m = library.names().iter().position(|&n| n == "i/m").unwrap();
+        let mut coef = vec![0.0; library.len()];
+        coef[i_over_m] = -1.0;
+        let conv = ConvergenceModel {
+            library,
+            fit: LassoFit {
+                coef,
+                intercept: 0.5f64.ln(),
+                alpha: 0.01,
+                iterations: 1,
+            },
+            train_r2: 1.0,
+            n_train: 0,
+            floor: 1e-12,
+        };
+        let ernest = ErnestModel {
+            theta: [0.5, 0.0, 0.0, 0.0],
+            train_rmse: 0.0,
+        };
+        let mut registry = ModelRegistry::new(vec![1, 2, 4], 100_000);
+        registry.insert(
+            ModelKey {
+                algorithm: AlgorithmId::CocoaPlus,
+                context: "elastic".into(),
+            },
+            CombinedModel::new(ernest, conv, 1000.0),
+        );
+        registry
+    }
+
+    #[test]
+    fn no_event_elastic_matches_static_run_bitwise() {
+        use crate::cluster::HardwareProfile;
+        let p = Problem::new(two_gaussians(256, 8, 2.0, 5), 1e-3);
+        let (p_star, _, _) = p.reference_solve(1e-7, 400);
+        let cfg = RunConfig {
+            max_iters: 40,
+            target_subopt: 1e-6,
+            time_budget: None,
+        };
+        let ecfg = ElasticConfig {
+            replan_every: 5,
+            machine_grid: vec![1, 2, 4],
+            seed: 7,
+        };
+
+        let mut sim_s = ClusterSim::new(HardwareProfile::local48(), 3);
+        let mut algo_s = crate::optim::by_name("cocoa+", &p, 4, 7).unwrap();
+        let static_trace = crate::optim::run(
+            algo_s.as_mut(),
+            &crate::optim::NativeBackend,
+            &p,
+            &mut sim_s,
+            p_star,
+            &cfg,
+        )
+        .unwrap();
+
+        let mut sim_e = ClusterSim::new(HardwareProfile::local48(), 3);
+        let mut algo_e = crate::optim::by_name("cocoa+", &p, 4, 7).unwrap();
+        let registry = golden_elastic_registry();
+        let run = run_elastic(
+            &mut algo_e,
+            &crate::optim::NativeBackend,
+            &p,
+            &mut sim_e,
+            p_star,
+            &cfg,
+            &ecfg,
+            Some(&registry),
+        )
+        .unwrap();
+
+        // No scenario events: the elastic machinery must be inert.
+        assert!(run.replans.is_empty());
+        assert_eq!(static_trace.records.len(), run.trace.records.len());
+        for (a, b) in static_trace.records.iter().zip(&run.trace.records) {
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+            assert_eq!(a.primal.to_bits(), b.primal.to_bits());
+            assert_eq!(a.subopt.to_bits(), b.subopt.to_bits());
+        }
+        assert_eq!(sim_s.elapsed.to_bits(), sim_e.elapsed.to_bits());
+        assert_eq!(sim_s.spent_dollars.to_bits(), sim_e.spent_dollars.to_bits());
+    }
+
+    #[test]
+    fn preemption_triggers_checkpointed_downsize() {
+        use crate::cluster::{HardwareProfile, Scenario};
+        let p = Problem::new(two_gaussians(256, 8, 2.0, 9), 1e-3);
+        let (p_star, _, _) = p.reference_solve(1e-7, 400);
+        let cfg = RunConfig {
+            max_iters: 12,
+            target_subopt: 1e-9,
+            time_budget: None,
+        };
+        let ecfg = ElasticConfig {
+            replan_every: 5,
+            machine_grid: vec![1, 2, 4],
+            seed: 3,
+        };
+        // Half the 4-machine pool is preempted immediately: staying at
+        // m=4 doubles every barrier, and the golden model says smaller
+        // m converges in strictly less time anyway.
+        let scenario = Scenario::parse("pool=4,preempt@0x2").unwrap();
+        let mut sim = ClusterSim::new(HardwareProfile::local48(), 3).with_scenario(&scenario);
+        let mut algo = crate::optim::by_name("cocoa+", &p, 4, 3).unwrap();
+        let registry = golden_elastic_registry();
+        let run = run_elastic(
+            &mut algo,
+            &crate::optim::NativeBackend,
+            &p,
+            &mut sim,
+            p_star,
+            &cfg,
+            &ecfg,
+            Some(&registry),
+        )
+        .unwrap();
+
+        assert!(!run.replans.is_empty(), "no consultation despite a preemption");
+        let log = &run.replans[0];
+        assert_eq!(log.iter, 5);
+        assert_eq!(log.from_machines, 4);
+        assert_eq!(log.to_machines, 1);
+        assert!(log.moved);
+        assert!(log.predicted_move_seconds.unwrap() < log.predicted_stay_seconds.unwrap());
+        assert_eq!(run.replans.iter().filter(|l| l.moved).count(), 1);
+        assert_eq!(algo.machines(), 1);
+        // The run keeps optimizing after the resize.
+        assert_eq!(run.trace.records.len(), cfg.max_iters + 1);
+        assert!(run.trace.final_subopt() < run.trace.records[0].subopt);
+    }
+
+    #[test]
+    fn resume_from_checkpoint_continues_bitwise() {
+        use crate::cluster::{HardwareProfile, Scenario};
+        let p = Problem::new(two_gaussians(128, 8, 2.0, 7), 1e-2);
+        let (p_star, _, _) = p.reference_solve(1e-7, 400);
+        let cfg = RunConfig {
+            max_iters: 20,
+            target_subopt: 1e-9,
+            time_budget: None,
+        };
+        let ecfg = ElasticConfig {
+            replan_every: 0,
+            machine_grid: Vec::new(),
+            seed: 5,
+        };
+        // A mid-run slowdown keeps the scenario cursor honest across
+        // the checkpoint boundary.
+        let scenario = Scenario::parse("pool=4,slow@1.0x2.0").unwrap();
+        let backend = crate::optim::NativeBackend;
+
+        // Uninterrupted reference run.
+        let mut sim_a = ClusterSim::new(HardwareProfile::local48(), 11).with_scenario(&scenario);
+        let mut algo_a = crate::optim::by_name("local-sgd", &p, 4, 5).unwrap();
+        let full =
+            run_elastic(&mut algo_a, &backend, &p, &mut sim_a, p_star, &cfg, &ecfg, None).unwrap();
+
+        // Interrupted at iteration 8: checkpoint through bytes, drop
+        // everything, resume into fresh objects.
+        let mut sim_b = ClusterSim::new(HardwareProfile::local48(), 11).with_scenario(&scenario);
+        let mut algo_b = crate::optim::by_name("local-sgd", &p, 4, 5).unwrap();
+        let head_cfg = RunConfig {
+            max_iters: 8,
+            ..cfg.clone()
+        };
+        let head = run_elastic(
+            &mut algo_b,
+            &backend,
+            &p,
+            &mut sim_b,
+            p_star,
+            &head_cfg,
+            &ecfg,
+            None,
+        )
+        .unwrap();
+        let last = head.trace.records.last().unwrap();
+        assert_eq!(last.iter, 8);
+        let ckpt =
+            Checkpoint::capture(algo_b.as_ref(), 5, last.iter, last.sim_time, Some(sim_b.save_state()));
+        let doc = Json::parse(&ckpt.to_json().to_string()).unwrap();
+        let ckpt = Checkpoint::from_json(&doc).unwrap();
+
+        let mut sim_c = ClusterSim::new(HardwareProfile::local48(), 11).with_scenario(&scenario);
+        let resumed =
+            resume_elastic(&ckpt, head.trace, &backend, &p, &mut sim_c, &cfg, &ecfg, None).unwrap();
+
+        assert_eq!(full.trace.records.len(), resumed.trace.records.len());
+        for (a, b) in full.trace.records.iter().zip(&resumed.trace.records) {
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+            assert_eq!(a.primal.to_bits(), b.primal.to_bits());
+            assert_eq!(a.dual.to_bits(), b.dual.to_bits());
+            assert_eq!(a.subopt.to_bits(), b.subopt.to_bits());
+        }
+        assert_eq!(sim_a.elapsed.to_bits(), sim_c.elapsed.to_bits());
     }
 }

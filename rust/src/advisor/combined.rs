@@ -380,6 +380,79 @@ impl CombinedModel {
         Some((self.conv.predict_ln(i0 + iters, m) - self.conv.predict_ln(i0, m)).exp())
     }
 
+    /// Predicted wall-clock seconds to finish from an *observed*
+    /// progress point: the smallest Δi whose accumulated model decay
+    /// `g_ln(i0+Δi, m) − g_ln(i0, m)` reaches `ln(eps/s0)`, times
+    /// f(m) — time-to-ε anchored on the running job's last measured
+    /// (iteration, suboptimality) rather than the model's absolute
+    /// level, the same offset-robust ratio trick as
+    /// [`Self::frame_decay`]. `Some(0.0)` when the goal is already
+    /// met; None when the decay never accumulates within `cap`
+    /// further iterations or the anchor is unusable. BSP on the base
+    /// fleet; [`Self::replan_seconds_w`] routes other variants.
+    pub fn replan_seconds(
+        &self,
+        i0: f64,
+        s0: f64,
+        eps: f64,
+        machines: usize,
+        cap: usize,
+    ) -> Option<f64> {
+        Self::replan_from_pair(&self.ernest, &self.conv, self.input_size, i0, s0, eps, machines, cap)
+    }
+
+    /// [`Self::replan_seconds`] under a (workload, fleet, mode)
+    /// variant (None when the variant is not fitted).
+    #[allow(clippy::too_many_arguments)]
+    pub fn replan_seconds_w(
+        &self,
+        workload: Objective,
+        fleet: &str,
+        mode: BarrierMode,
+        i0: f64,
+        s0: f64,
+        eps: f64,
+        machines: usize,
+        cap: usize,
+    ) -> Option<f64> {
+        let (ernest, conv) = self.pair_w(workload, fleet, mode)?;
+        Self::replan_from_pair(ernest, conv, self.input_size, i0, s0, eps, machines, cap)
+    }
+
+    /// The one anchored-replan formula every variant lookup shares.
+    #[allow(clippy::too_many_arguments)]
+    fn replan_from_pair(
+        ernest: &ErnestModel,
+        conv: &ConvergenceModel,
+        input_size: f64,
+        i0: f64,
+        s0: f64,
+        eps: f64,
+        machines: usize,
+        cap: usize,
+    ) -> Option<f64> {
+        if !(s0.is_finite() && s0 > 0.0 && eps.is_finite() && eps > 0.0 && i0.is_finite() && i0 >= 0.0)
+        {
+            return None;
+        }
+        if s0 <= eps {
+            return Some(0.0);
+        }
+        let m = machines as f64;
+        let target = (eps / s0).ln();
+        let i0 = i0.max(1.0);
+        let base = conv.predict_ln(i0, m);
+        // Mirrors `ConvergenceModel::iters_to`: the model is smooth
+        // but not guaranteed monotone, so scan for the first Δi that
+        // has accumulated the required decay.
+        for di in 1..=cap {
+            if conv.predict_ln(i0 + di as f64, m) - base <= target {
+                return Some(di as f64 * ernest.predict(machines, input_size));
+            }
+        }
+        None
+    }
+
     /// Serialize for a model artifact (`util::json`). The `modes`,
     /// `fleet_modes` and `workloads` arrays (and the `base_fleet` /
     /// `base_workload` fields) are omitted when empty/hinge, keeping
@@ -635,6 +708,41 @@ mod tests {
         assert!(r > 0.0 && r < 1.0, "ratio {r}");
         // A frame shorter than one iteration has no plan.
         assert_eq!(c.frame_decay(10.0, 1e-6, 4), None);
+    }
+
+    #[test]
+    fn replan_anchors_on_observed_progress() {
+        let c = combined();
+        // Already at (or past) the goal: nothing left to buy.
+        assert_eq!(c.replan_seconds(20.0, 1e-4, 1e-3, 4, 100_000), Some(0.0));
+        // The anchored prediction is offset-robust: it depends on the
+        // decay *ratio* from i0, so a finish from s0 = 0.5 to a 4×
+        // lower goal costs the same iterations as from 0.25 to its
+        // own 4× lower goal (both ratios are exact in binary, so the
+        // two targets are the same f64 and the answers match bitwise).
+        let a = c.replan_seconds(30.0, 0.5, 0.125, 4, 100_000).unwrap();
+        let b = c.replan_seconds(30.0, 0.25, 0.0625, 4, 100_000).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert!(a > 0.0);
+        // Finishing from further along is never more expensive than
+        // the from-scratch time for the same overall drop.
+        let fresh = c.time_to_subopt(1e-3, 4, 100_000).unwrap();
+        let resumed = c.replan_seconds(40.0, 0.01, 1e-3, 4, 100_000).unwrap();
+        assert!(resumed < fresh, "{resumed} !< {fresh}");
+        // Unusable anchors and unreachable goals answer nothing.
+        assert_eq!(c.replan_seconds(10.0, f64::NAN, 1e-3, 4, 100), None);
+        assert_eq!(c.replan_seconds(10.0, 0.05, 0.0, 4, 100), None);
+        assert_eq!(c.replan_seconds(10.0, 0.05, 1e-30, 4, 50), None);
+        // Variant routing: the base workload's BSP pair is the base
+        // formula bit for bit.
+        let w = c
+            .replan_seconds_w(Objective::Hinge, "", BarrierMode::Bsp, 30.0, 0.5, 0.125, 4, 100_000)
+            .unwrap();
+        assert_eq!(w.to_bits(), a.to_bits());
+        assert_eq!(
+            c.replan_seconds_w(Objective::Ridge, "", BarrierMode::Bsp, 30.0, 0.5, 0.125, 4, 100),
+            None
+        );
     }
 
     #[test]

@@ -11,11 +11,14 @@ pub mod registry;
 pub mod server;
 pub mod service;
 
-pub use adaptive::{adaptive_cocoa_plus, AdaptiveConfig, AdaptiveRun, FrameLog};
+pub use adaptive::{
+    adaptive_cocoa_plus, resume_elastic, run_elastic, AdaptiveConfig, AdaptiveRun, ElasticConfig,
+    ElasticRun, FrameLog, ReplanLog,
+};
 pub use combined::{CombinedModel, ModeModel};
 pub use query::{
     Constraints, FleetFilter, ModeFilter, Predicted, PredictionRow, Query, Recommendation,
-    WorkloadFilter,
+    ReplanQuery, WorkloadFilter,
 };
 pub use registry::{
     artifact_path, load_artifact, save_artifact, LoadReport, ModelKey, ModelRegistry,

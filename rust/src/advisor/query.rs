@@ -406,6 +406,111 @@ impl Query {
     }
 }
 
+/// The elastic driver's mid-run query (`{"query":"replan",…}`): given
+/// the observed progress of a *running* job — a trace of
+/// `[iter, subopt]` samples, of which the advisor anchors on the last
+/// — find the admitted configuration predicted to finish to ε fastest
+/// *from here*, rather than from scratch like `fastest_to`
+/// ([`crate::advisor::CombinedModel::replan_seconds_w`]). The
+/// optional algorithm pin restricts the search to the running job's
+/// own algorithm: a checkpoint restore re-shards optimizer state, it
+/// cannot convert it across algorithms.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplanQuery {
+    pub eps: f64,
+    /// Outer iterations the running job has completed (the anchor).
+    pub iter: f64,
+    /// Its last observed primal suboptimality (the anchor).
+    pub subopt: f64,
+    /// Restrict the search to one algorithm (None = every model).
+    pub algorithm: Option<AlgorithmId>,
+    pub constraints: Constraints,
+}
+
+impl ReplanQuery {
+    /// Unconstrained, unpinned replan from one observed point.
+    pub fn new(eps: f64, iter: f64, subopt: f64) -> ReplanQuery {
+        ReplanQuery {
+            eps,
+            iter,
+            subopt,
+            algorithm: None,
+            constraints: Constraints::none(),
+        }
+    }
+
+    /// Parse the wire form, e.g.
+    /// `{"query":"replan","eps":1e-4,"trace":[[10,0.05]],"max_machines":8}`.
+    /// Every trace entry is validated (a malformed sample is an error,
+    /// never silently dropped) and the last one becomes the anchor.
+    pub fn from_json(doc: &Json) -> crate::Result<ReplanQuery> {
+        let constraints = Constraints::from_json(doc)?;
+        let eps = doc.req_f64("eps")?;
+        crate::ensure!(
+            eps > 0.0 && eps.is_finite(),
+            "replan needs a finite eps > 0, got {eps}"
+        );
+        let trace = doc.req_array("trace")?;
+        crate::ensure!(
+            !trace.is_empty(),
+            "replan needs a non-empty trace of [iter, subopt] pairs"
+        );
+        let mut anchor = (0.0f64, 0.0f64);
+        for (i, entry) in trace.iter().enumerate() {
+            let pair = entry
+                .as_array()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| crate::err!("trace[{i}] must be an [iter, subopt] pair"))?;
+            let iter = pair[0]
+                .as_f64()
+                .filter(|x| x.is_finite() && *x >= 0.0)
+                .ok_or_else(|| {
+                    crate::err!("trace[{i}] needs a finite iteration count >= 0")
+                })?;
+            let subopt = pair[1]
+                .as_f64()
+                .filter(|x| x.is_finite() && *x > 0.0)
+                .ok_or_else(|| {
+                    crate::err!("trace[{i}] needs a finite suboptimality > 0")
+                })?;
+            anchor = (iter, subopt);
+        }
+        let algorithm = match doc.get("algorithm") {
+            None => None,
+            Some(v) => Some(AlgorithmId::parse(v.as_str().ok_or_else(|| {
+                crate::err!("algorithm must be an algorithm name string")
+            })?)?),
+        };
+        Ok(ReplanQuery {
+            eps,
+            iter: anchor.0,
+            subopt: anchor.1,
+            algorithm,
+            constraints,
+        })
+    }
+
+    /// Wire form (the single anchor point the parse keeps).
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(String, Json)> = vec![
+            ("query".into(), Json::str("replan")),
+            ("eps".into(), Json::num(self.eps)),
+            (
+                "trace".into(),
+                Json::Array(vec![Json::Array(vec![
+                    Json::num(self.iter),
+                    Json::num(self.subopt),
+                ])]),
+            ),
+        ];
+        if let Some(algorithm) = self.algorithm {
+            fields.push(("algorithm".into(), Json::str(algorithm.as_str())));
+        }
+        self.constraints.push_json(&mut fields);
+        Json::Object(fields)
+    }
+}
+
 /// A predicted quantity with its unit attached: the fastest-to-ε query
 /// answers in seconds, the best-at-budget query in suboptimality, the
 /// cheapest-to-ε query in dollars. The old advisor returned a bare f64
@@ -631,6 +736,54 @@ mod tests {
         ] {
             let doc = Json::parse(bad).unwrap();
             assert!(Query::from_json(&doc).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn replan_wire_roundtrip_and_anchor() {
+        // Round trip: pinned and unpinned, constrained and not.
+        let q1 = ReplanQuery::new(1e-4, 10.0, 0.05);
+        let q2 = ReplanQuery {
+            algorithm: Some(AlgorithmId::CocoaPlus),
+            constraints: Constraints {
+                max_machines: Some(8),
+                ..Constraints::none()
+            },
+            ..ReplanQuery::new(1e-3, 25.0, 0.125)
+        };
+        for q in [q1, q2] {
+            let doc = Json::parse(&q.to_json().to_string()).unwrap();
+            assert_eq!(ReplanQuery::from_json(&doc).unwrap(), q);
+        }
+        // A multi-point trace anchors on the last sample.
+        let doc = Json::parse(
+            r#"{"query":"replan","eps":1e-4,"trace":[[1,0.5],[5,0.2],[10,0.05]]}"#,
+        )
+        .unwrap();
+        let q = ReplanQuery::from_json(&doc).unwrap();
+        assert_eq!(q.iter, 10.0);
+        assert_eq!(q.subopt, 0.05);
+        assert_eq!(q.algorithm, None);
+    }
+
+    #[test]
+    fn replan_wire_rejects_bad_queries() {
+        for bad in [
+            r#"{"query":"replan"}"#,
+            r#"{"query":"replan","eps":0,"trace":[[1,0.5]]}"#,
+            r#"{"query":"replan","eps":1e-4}"#,
+            r#"{"query":"replan","eps":1e-4,"trace":[]}"#,
+            r#"{"query":"replan","eps":1e-4,"trace":[[1,0.5,9]]}"#,
+            r#"{"query":"replan","eps":1e-4,"trace":[[1,0.5],[2]]}"#,
+            r#"{"query":"replan","eps":1e-4,"trace":[[-1,0.5]]}"#,
+            r#"{"query":"replan","eps":1e-4,"trace":[[1,0]]}"#,
+            r#"{"query":"replan","eps":1e-4,"trace":[[1,"x"]]}"#,
+            r#"{"query":"replan","eps":1e-4,"trace":[[1,0.5]],"algorithm":"quantum"}"#,
+            r#"{"query":"replan","eps":1e-4,"trace":[[1,0.5]],"algorithm":7}"#,
+            r#"{"query":"replan","eps":1e-4,"trace":[[1,0.5]],"max_machines":-2}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(ReplanQuery::from_json(&doc).is_err(), "accepted {bad}");
         }
     }
 

@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use super::combined::CombinedModel;
-use super::query::{Constraints, Predicted, PredictionRow, Query, Recommendation};
+use super::query::{Constraints, Predicted, PredictionRow, Query, Recommendation, ReplanQuery};
 use crate::cluster::FleetSpec;
 use crate::optim::AlgorithmId;
 use crate::util::json::{read_json_file, write_json_file, Json};
@@ -254,6 +254,65 @@ impl ModelRegistry {
         }
     }
 
+    /// Answer the elastic driver's mid-run query: fastest predicted
+    /// finish to ε *from the observed (iter, subopt) anchor*, over
+    /// every admitted model × (workload, fleet, mode) variant ×
+    /// machine-grid point — the same search shape as `fastest_to`,
+    /// but scored by [`CombinedModel::replan_seconds_w`] so each
+    /// model's absolute offset cancels and "stay" vs "move" compare
+    /// on one scale. The query's optional algorithm pin keeps a
+    /// checkpointed run from being advised into an algorithm its
+    /// saved state cannot restore into.
+    pub fn replan(&self, query: &ReplanQuery) -> Option<Recommendation> {
+        let mut best: Option<Recommendation> = None;
+        for (key, model) in &self.models {
+            if query.algorithm.map(|a| a != key.algorithm).unwrap_or(false) {
+                continue;
+            }
+            for (workload, fleet, mode) in model.fitted_workload_variants() {
+                if !query.constraints.barrier_mode.admits(mode)
+                    || !query.constraints.fleet.admits(&fleet, &model.base_fleet)
+                    || !query.constraints.workload.admits(workload, model.base_workload)
+                {
+                    continue;
+                }
+                for &m in &self.machine_grid {
+                    if !query.constraints.admits(m) {
+                        continue;
+                    }
+                    if let Some(t) = model.replan_seconds_w(
+                        workload,
+                        &fleet,
+                        mode,
+                        query.iter,
+                        query.subopt,
+                        query.eps,
+                        m,
+                        self.iter_cap,
+                    ) {
+                        let objective = query.constraints.weighted_seconds(t, m);
+                        if best
+                            .as_ref()
+                            .map(|b| objective < b.objective)
+                            .unwrap_or(true)
+                        {
+                            best = Some(Recommendation {
+                                algorithm: key.algorithm,
+                                machines: m,
+                                barrier_mode: mode,
+                                fleet: fleet.clone(),
+                                workload,
+                                predicted: Predicted::Seconds(t),
+                                objective,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        best
+    }
+
     /// Full prediction table (one typed row per algorithm × admitted
     /// m × admitted fitted (workload, mode, fleet) variant).
     /// Inadmissible machine counts are skipped before the (expensive)
@@ -465,6 +524,46 @@ mod tests {
             .unwrap();
         let s = rec_l.predicted.suboptimality().unwrap();
         assert!(s <= 1.1e-3, "{s}");
+    }
+
+    #[test]
+    fn replan_search_anchors_pins_and_constrains() {
+        use crate::advisor::query::ReplanQuery;
+        let r = registry();
+        // Unpinned: the faster-decaying cocoa+ wins, from the anchor.
+        let rec = r.replan(&ReplanQuery::new(1e-3, 20.0, 0.05)).unwrap();
+        assert_eq!(rec.algorithm, AlgorithmId::CocoaPlus);
+        let t = rec.predicted.seconds().expect("replan answers in seconds");
+        assert!(t > 0.0 && r.machine_grid.contains(&rec.machines));
+        // The anchored finish is cheaper than the from-scratch one —
+        // part of the work is already done.
+        let fresh = r.answer(&Query::fastest_to(1e-3)).unwrap();
+        assert!(t < fresh.predicted.seconds().unwrap());
+        // An algorithm pin restricts the search even when the pinned
+        // model is slower.
+        let pinned = r
+            .replan(&ReplanQuery {
+                algorithm: Some(AlgorithmId::Cocoa),
+                ..ReplanQuery::new(1e-3, 20.0, 0.05)
+            })
+            .unwrap();
+        assert_eq!(pinned.algorithm, AlgorithmId::Cocoa);
+        assert!(pinned.predicted.seconds().unwrap() >= t);
+        // max_machines caps the recommendation like every other query.
+        let capped = r
+            .replan(&ReplanQuery {
+                constraints: Constraints {
+                    max_machines: Some(2),
+                    ..Constraints::none()
+                },
+                ..ReplanQuery::new(1e-3, 20.0, 0.05)
+            })
+            .unwrap();
+        assert!(capped.machines <= 2);
+        // An unreachable goal answers nothing.
+        let mut tiny = registry();
+        tiny.iter_cap = 10;
+        assert!(tiny.replan(&ReplanQuery::new(1e-30, 20.0, 0.05)).is_none());
     }
 
     #[test]

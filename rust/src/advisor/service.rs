@@ -12,6 +12,8 @@
 //! ← {"ok":true,"query":"best_at","algorithm":"cocoa+","machines":8,"predicted_suboptimality":3.1e-5}
 //! → {"query":"cheapest_to","eps":1e-4,"fleet":"any"}
 //! ← {"ok":true,"query":"cheapest_to","algorithm":"cocoa+","machines":8,"barrier_mode":"bsp","fleet":"local48","predicted_dollars":0.0123}
+//! → {"query":"replan","eps":1e-4,"trace":[[10,0.05]],"max_machines":8}
+//! ← {"ok":true,"query":"replan","algorithm":"cocoa+","machines":4,"barrier_mode":"bsp","predicted_seconds":3.5}
 //! → {"query":"table","eps":1e-4,"budget":20}
 //! ← {"ok":true,"query":"table","rows":[{"algorithm":"cocoa+","machines":1,...},...]}
 //! → {"query":"models"}
@@ -24,7 +26,7 @@
 
 use std::io::{BufRead, Write};
 
-use super::query::{Constraints, Query};
+use super::query::{Constraints, Query, ReplanQuery};
 use super::registry::ModelRegistry;
 use crate::util::json::Json;
 
@@ -32,10 +34,11 @@ use crate::util::json::Json;
 /// order; `other` absorbs unknown kinds and unparseable lines. The
 /// serve summary line and the `{"query":"stats"}` response both report
 /// per-kind counts against this list.
-pub const KIND_NAMES: [&str; 8] = [
+pub const KIND_NAMES: [&str; 9] = [
     "fastest_to",
     "best_at",
     "cheapest_to",
+    "replan",
     "table",
     "models",
     "stats",
@@ -147,6 +150,22 @@ pub fn handle_doc(registry: &ModelRegistry, doc: &Json) -> Json {
                 None => error_response("no feasible configuration for this query"),
             }
         }
+        "replan" => {
+            let query = match ReplanQuery::from_json(doc) {
+                Ok(q) => q,
+                Err(e) => return error_response(e.to_string()),
+            };
+            match registry.replan(&query) {
+                Some(rec) => {
+                    let body = match rec.to_json() {
+                        Json::Object(fields) => fields,
+                        _ => unreachable!("Recommendation::to_json returns an object"),
+                    };
+                    ok_response(&kind, body)
+                }
+                None => error_response("no feasible configuration for this query"),
+            }
+        }
         "table" => {
             let (eps, budget) = match (doc.req_f64("eps"), doc.req_f64("budget")) {
                 (Ok(e), Ok(b)) => (e, b),
@@ -215,7 +234,7 @@ pub fn handle_doc(registry: &ModelRegistry, doc: &Json) -> Json {
         }
         other => error_response(format!(
             "unknown query kind '{other}' \
-             (expected fastest_to, best_at, cheapest_to, table or models)"
+             (expected fastest_to, best_at, cheapest_to, replan, table or models)"
         )),
     }
 }
@@ -507,6 +526,41 @@ mod tests {
         let resp = handle_line(&registry, r#"{"query":"models"}"#);
         let text = resp.to_string();
         assert!(text.contains(r#""workloads":["hinge","ridge"]"#), "{text}");
+    }
+
+    #[test]
+    fn golden_replan_response() {
+        let registry = golden_registry();
+        // Anchored at (i=10, s=0.05), goal 0.01: the needed decay is
+        // ln 5 ≈ 1.609 nats at 1/m nats per iteration — Δi = 2 at m=1
+        // (1.0s), 4 at m=2 (2.0s), 7 at m=4 (3.5s). m=1 wins at
+        // exactly 2·0.5 = 1 second, an integer the serializer prints
+        // without a fraction, so the response is a golden byte string.
+        let resp = handle_line(
+            &registry,
+            r#"{"query":"replan","eps":0.01,"trace":[[10,0.05]]}"#,
+        );
+        assert_eq!(
+            resp.to_string(),
+            r#"{"ok":true,"query":"replan","algorithm":"cocoa+","machines":1,"barrier_mode":"bsp","predicted_seconds":1}"#
+        );
+        // An anchor already at the goal costs exactly 0 seconds.
+        let resp = handle_line(
+            &registry,
+            r#"{"query":"replan","eps":0.01,"trace":[[10,0.005]]}"#,
+        );
+        assert_eq!(
+            resp.to_string(),
+            r#"{"ok":true,"query":"replan","algorithm":"cocoa+","machines":1,"barrier_mode":"bsp","predicted_seconds":0}"#
+        );
+        // Malformed and infeasible replans are clean errors.
+        let resp = handle_line(&registry, r#"{"query":"replan","eps":0.01,"trace":[]}"#);
+        assert!(!resp.get("ok").and_then(Json::as_bool).unwrap());
+        let resp = handle_line(
+            &registry,
+            r#"{"query":"replan","eps":1e-30,"trace":[[10,0.05]],"algorithm":"gd"}"#,
+        );
+        assert!(!resp.get("ok").and_then(Json::as_bool).unwrap());
     }
 
     #[test]

@@ -15,4 +15,4 @@ pub use barrier::BarrierMode;
 pub use fleet::FleetSpec;
 pub use network::{broadcast_time, reduce_time, shuffle_time, tree_rounds};
 pub use profile::HardwareProfile;
-pub use sim::{BspSim, ClusterSim};
+pub use sim::{BspSim, ClusterSim, Scenario, ScenarioEvent};

@@ -57,6 +57,146 @@ use crate::util::rng::{fnv1a_64, Pcg32};
 /// a reported staleness always has a snapshot to serve it.
 const ASYNC_STALENESS_WINDOW: usize = crate::optim::stale::MAX_STALE_SNAPSHOTS;
 
+/// A time-varying cluster event, fired when the simulated clock
+/// reaches its timestamp. Extends PR 4's *static* slow-node machinery
+/// ([`FleetSpec`]) with mid-run dynamics: machines leaving
+/// (preemption), returning, and the whole cluster slowing down.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScenarioEvent {
+    /// At simulated time `at`, `machines` physical machines are
+    /// preempted. Logical slots keep running — survivors host the
+    /// orphaned slots round-robin and serialize their compute — so
+    /// the *algorithm* is untouched while iterations slow down.
+    Preempt { at: f64, machines: usize },
+    /// At simulated time `at`, `machines` preempted machines return.
+    Restore { at: f64, machines: usize },
+    /// At simulated time `at`, every machine's compute scales by
+    /// `factor` from now on (a cluster-wide interference episode;
+    /// `1.0` ends it).
+    SlowDown { at: f64, factor: f64 },
+}
+
+impl ScenarioEvent {
+    /// The simulated timestamp this event fires at.
+    pub fn at(&self) -> f64 {
+        match self {
+            ScenarioEvent::Preempt { at, .. }
+            | ScenarioEvent::Restore { at, .. }
+            | ScenarioEvent::SlowDown { at, .. } => *at,
+        }
+    }
+}
+
+impl std::fmt::Display for ScenarioEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScenarioEvent::Preempt { at, machines } => write!(f, "preempt@{at}x{machines}"),
+            ScenarioEvent::Restore { at, machines } => write!(f, "restore@{at}x{machines}"),
+            ScenarioEvent::SlowDown { at, factor } => write!(f, "slow@{at}x{factor}"),
+        }
+    }
+}
+
+/// A named sequence of [`ScenarioEvent`]s over a physical machine
+/// pool. The string form — `pool=16,preempt@5x8,restore@20x8,
+/// slow@8x1.5` — is what configs, sweep cell keys and the trace
+/// format carry; [`Scenario::parse`] and `Display` round-trip it.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Scenario {
+    /// Physical machines backing the cluster. `0` (the default) means
+    /// "as many as each request asks for" — preemption then bites any
+    /// m; a concrete pool caps how many slots run unshared.
+    pub pool: usize,
+    /// Events in firing order (sorted on attach).
+    pub events: Vec<ScenarioEvent>,
+}
+
+impl Scenario {
+    /// No events at all — the provably-inert static scenario.
+    pub fn is_static(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse the comma-separated scenario string. The empty string is
+    /// the static scenario.
+    pub fn parse(spec: &str) -> crate::Result<Scenario> {
+        let mut sc = Scenario::default();
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            if let Some(v) = tok.strip_prefix("pool=") {
+                sc.pool = v
+                    .parse()
+                    .map_err(|_| crate::err!("invalid pool '{v}' in scenario '{spec}'"))?;
+            } else if let Some(rest) = tok.strip_prefix("preempt@") {
+                let (at, arg) = event_parts(rest, spec)?;
+                let machines = parse_count(arg, spec)?;
+                sc.events.push(ScenarioEvent::Preempt { at, machines });
+            } else if let Some(rest) = tok.strip_prefix("restore@") {
+                let (at, arg) = event_parts(rest, spec)?;
+                let machines = parse_count(arg, spec)?;
+                sc.events.push(ScenarioEvent::Restore { at, machines });
+            } else if let Some(rest) = tok.strip_prefix("slow@") {
+                let (at, arg) = event_parts(rest, spec)?;
+                let factor: f64 = arg
+                    .parse()
+                    .map_err(|_| crate::err!("invalid slow factor '{arg}' in scenario '{spec}'"))?;
+                crate::ensure!(
+                    factor.is_finite() && factor > 0.0,
+                    "slow factor must be positive and finite in scenario '{spec}'"
+                );
+                sc.events.push(ScenarioEvent::SlowDown { at, factor });
+            } else {
+                crate::bail!(
+                    "unknown scenario token '{tok}' in '{spec}' \
+                     (expected pool=N, preempt@TxM, restore@TxM, slow@TxF)"
+                );
+            }
+        }
+        Ok(sc)
+    }
+}
+
+impl std::fmt::Display for Scenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut sep = "";
+        if self.pool != 0 {
+            write!(f, "pool={}", self.pool)?;
+            sep = ",";
+        }
+        for ev in &self.events {
+            write!(f, "{sep}{ev}")?;
+            sep = ",";
+        }
+        Ok(())
+    }
+}
+
+/// Split an event body `"<at>x<arg>"` (the `@` prefix already gone).
+fn event_parts<'a>(rest: &'a str, spec: &str) -> crate::Result<(f64, &'a str)> {
+    let (t, arg) = rest
+        .split_once('x')
+        .ok_or_else(|| crate::err!("malformed event '{rest}' in scenario '{spec}' (want T x ARG)"))?;
+    let at: f64 = t
+        .parse()
+        .map_err(|_| crate::err!("invalid event time '{t}' in scenario '{spec}'"))?;
+    crate::ensure!(
+        at.is_finite() && at >= 0.0,
+        "event time must be finite and non-negative in scenario '{spec}'"
+    );
+    Ok((at, arg))
+}
+
+fn parse_count(arg: &str, spec: &str) -> crate::Result<usize> {
+    let n: usize = arg
+        .parse()
+        .map_err(|_| crate::err!("invalid machine count '{arg}' in scenario '{spec}'"))?;
+    crate::ensure!(n >= 1, "event machine count must be >= 1 in scenario '{spec}'");
+    Ok(n)
+}
+
 /// Simulated cluster clock with per-machine progress.
 pub struct ClusterSim {
     /// The hardware this cluster is made of — a uniform fleet for the
@@ -79,6 +219,20 @@ pub struct ClusterSim {
     /// time all machines finished the latest iteration. Bounded by the
     /// blocking window (staleness + 1; a fixed window for Async).
     barriers: VecDeque<f64>,
+    /// Scenario events sorted by timestamp; empty on the static path,
+    /// which gates *all* event logic out of `iteration_time`.
+    events: Vec<ScenarioEvent>,
+    /// Physical pool the events act on (0 = per-request m).
+    pool: usize,
+    /// Index of the next unfired event.
+    next_event: usize,
+    /// Machines currently preempted out of the pool.
+    preempted: usize,
+    /// Cluster-wide compute multiplier set by `SlowDown` events.
+    slow_factor: f64,
+    /// Fired events with the elapsed time they were applied at (the
+    /// `elastic_events.csv` source).
+    fired: Vec<(f64, ScenarioEvent)>,
 }
 
 impl ClusterSim {
@@ -114,7 +268,28 @@ impl ClusterSim {
             history: Vec::new(),
             clocks: Vec::new(),
             barriers: VecDeque::new(),
+            events: Vec::new(),
+            pool: 0,
+            next_event: 0,
+            preempted: 0,
+            slow_factor: 1.0,
+            fired: Vec::new(),
         }
+    }
+
+    /// Attach a [`Scenario`]: time-varying preempt/restore/slow-down
+    /// events over a physical pool. With an event-free scenario this
+    /// is provably inert — `iteration_time`'s event block is gated on
+    /// `events.is_empty()`, so the static path's RNG draws and
+    /// arithmetic are untouched bit for bit
+    /// (`tests/elastic_props.rs`).
+    pub fn with_scenario(mut self, scenario: &Scenario) -> ClusterSim {
+        self.pool = scenario.pool;
+        self.events = scenario.events.clone();
+        self.events.sort_by(|a, b| {
+            a.at().partial_cmp(&b.at()).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        self
     }
 
     /// The base hardware profile (fixed costs, network, noise).
@@ -125,8 +300,17 @@ impl ClusterSim {
     /// Price one iteration (and advance the simulated clocks). Returns
     /// the marginal increase of the driver-visible elapsed time.
     pub fn iteration_time(&mut self, cost: &IterationCost) -> f64 {
-        let p = &self.fleet.base;
         let m = cost.machines.max(1);
+        // Scenario events fire against the clock as it stood *before*
+        // this iteration; the whole block is gated so the static path
+        // executes exactly the historical code.
+        let cap = if self.events.is_empty() {
+            m
+        } else {
+            self.apply_due_events();
+            self.capacity(m)
+        };
+        let p = &self.fleet.base;
         if self.clocks.len() != m {
             // First iteration, or a mid-run reconfiguration (the
             // adaptive loop repartitions): a global barrier — all
@@ -172,6 +356,20 @@ impl ClusterSim {
             if factor != 1.0 {
                 compute *= factor;
             }
+            // Preemption: the m logical slots share `cap` surviving
+            // machines round-robin; a host running `load` slots
+            // serializes their compute. Like the fleet factor this
+            // scales *after* the draws, so event and static runs at
+            // one seed price the same noise realization — the
+            // slowdown ordering is pointwise, not statistical.
+            if cap < m {
+                let host = k % cap;
+                let load = (m - host - 1) / cap + 1;
+                compute *= load as f64;
+            }
+            if self.slow_factor != 1.0 {
+                compute *= self.slow_factor;
+            }
             let d = fixed + compute + reduce;
             let start = match barrier {
                 Some(b) => self.clocks[k].max(b),
@@ -193,13 +391,61 @@ impl ClusterSim {
 
         let dt = done - self.elapsed;
         self.elapsed = done;
-        // Bill the allocation: m machines held for dt wall-clock
-        // seconds, each at its own type's rate. BSP thus pays for the
-        // waiting the barrier imposes; the relaxed modes buy more
-        // progress for the same machine-seconds.
-        self.spent_dollars += self.fleet.price_rate(m) * dt;
+        // Bill the allocation: the machines actually held (`cap`,
+        // which is m on the static path) for dt wall-clock seconds,
+        // each at its own type's rate. BSP thus pays for the waiting
+        // the barrier imposes; the relaxed modes buy more progress for
+        // the same machine-seconds; preempted machines stop billing.
+        self.spent_dollars += self.fleet.price_rate(cap) * dt;
         self.history.push(dt);
         dt
+    }
+
+    /// Fire every event whose timestamp the clock has reached,
+    /// recording each in the `fired` log.
+    fn apply_due_events(&mut self) {
+        while self.next_event < self.events.len() {
+            let ev = self.events[self.next_event];
+            if ev.at() > self.elapsed {
+                break;
+            }
+            match ev {
+                ScenarioEvent::Preempt { machines, .. } => self.preempted += machines,
+                ScenarioEvent::Restore { machines, .. } => {
+                    self.preempted = self.preempted.saturating_sub(machines);
+                }
+                ScenarioEvent::SlowDown { factor, .. } => self.slow_factor = factor,
+            }
+            self.fired.push((self.elapsed, ev));
+            self.next_event += 1;
+        }
+    }
+
+    /// Physical machines available to an m-slot request right now:
+    /// `min(m, pool − preempted)`, floored at 1 (the cluster never
+    /// vanishes entirely). On the static path this is m.
+    pub fn capacity(&self, machines: usize) -> usize {
+        if self.events.is_empty() {
+            return machines;
+        }
+        let pool = if self.pool == 0 { machines } else { self.pool };
+        pool.saturating_sub(self.preempted).clamp(1, machines)
+    }
+
+    /// The attached scenario's events (empty on the static path — the
+    /// elastic driver's inertness gate).
+    pub fn events(&self) -> &[ScenarioEvent] {
+        &self.events
+    }
+
+    /// Events fired so far, with the elapsed time each was applied at.
+    pub fn fired(&self) -> &[(f64, ScenarioEvent)] {
+        &self.fired
+    }
+
+    /// Machines currently preempted out of the pool.
+    pub fn preempted(&self) -> usize {
+        self.preempted
     }
 
     /// Iteration staleness of the model state the *next* iteration's
@@ -221,6 +467,86 @@ impl ClusterSim {
         // `barriers` is strictly increasing, so the stale ones form a
         // suffix.
         self.barriers.iter().rev().take_while(|&&b| b > start).count()
+    }
+
+    /// Serialize the evolving clock state for a [`crate::optim::Checkpoint`]:
+    /// per-machine clocks, the barrier window, the RNG position, and
+    /// the scenario cursor. Construction inputs (fleet, mode, events)
+    /// are *not* included — restore into a sim built with the same
+    /// inputs. The `history` and `fired` logs are observability, not
+    /// state: they do not affect future pricing and stay empty on a
+    /// restored sim.
+    pub fn save_state(&self) -> crate::util::json::Json {
+        use crate::optim::checkpoint::{f64_to_json, u64_to_json};
+        use crate::util::json::Json;
+        let (rng_state, rng_inc) = self.rng.raw_state();
+        Json::object(vec![
+            ("elapsed", f64_to_json(self.elapsed)),
+            ("spent_dollars", f64_to_json(self.spent_dollars)),
+            ("rng_state", u64_to_json(rng_state)),
+            ("rng_inc", u64_to_json(rng_inc)),
+            (
+                "clocks",
+                Json::array(self.clocks.iter().map(|&c| f64_to_json(c))),
+            ),
+            (
+                "barriers",
+                Json::array(self.barriers.iter().map(|&b| f64_to_json(b))),
+            ),
+            ("next_event", Json::num(self.next_event as f64)),
+            ("preempted", Json::num(self.preempted as f64)),
+            ("slow_factor", f64_to_json(self.slow_factor)),
+        ])
+    }
+
+    /// Restore the state produced by [`ClusterSim::save_state`]; the
+    /// subsequent pricing sequence continues bit-identically.
+    pub fn load_state(&mut self, state: &crate::util::json::Json) -> crate::Result<()> {
+        use crate::optim::checkpoint::{f64_from_json, u64_from_json};
+        use crate::util::json::Json;
+        let field = |key: &str| -> crate::Result<&Json> {
+            state
+                .get(key)
+                .ok_or_else(|| crate::err!("missing sim checkpoint field '{key}'"))
+        };
+        let elapsed = f64_from_json(field("elapsed")?, "elapsed")?;
+        let spent = f64_from_json(field("spent_dollars")?, "spent_dollars")?;
+        let rng_state = u64_from_json(field("rng_state")?, "rng_state")?;
+        let rng_inc = u64_from_json(field("rng_inc")?, "rng_inc")?;
+        let mut clocks = Vec::new();
+        for (i, c) in field("clocks")?
+            .as_array()
+            .ok_or_else(|| crate::err!("sim checkpoint field 'clocks' is not an array"))?
+            .iter()
+            .enumerate()
+        {
+            clocks.push(f64_from_json(c, &format!("clocks[{i}]"))?);
+        }
+        let mut barriers = VecDeque::new();
+        for (i, b) in field("barriers")?
+            .as_array()
+            .ok_or_else(|| crate::err!("sim checkpoint field 'barriers' is not an array"))?
+            .iter()
+            .enumerate()
+        {
+            barriers.push_back(f64_from_json(b, &format!("barriers[{i}]"))?);
+        }
+        let next_event = state.req_usize("next_event")?;
+        crate::ensure!(
+            next_event <= self.events.len(),
+            "sim checkpoint fires {} events, scenario has {}",
+            next_event,
+            self.events.len()
+        );
+        self.elapsed = elapsed;
+        self.spent_dollars = spent;
+        self.rng = Pcg32::from_raw(rng_state, rng_inc);
+        self.clocks = clocks;
+        self.barriers = barriers;
+        self.next_event = next_event;
+        self.preempted = state.req_usize("preempted")?;
+        self.slow_factor = f64_from_json(field("slow_factor")?, "slow_factor")?;
+        Ok(())
     }
 }
 
@@ -505,5 +831,125 @@ mod tests {
         sim.iteration_time(&cocoa_cost(32));
         assert!(sim.elapsed > before);
         assert_eq!(sim.read_staleness(), 0, "fresh clocks start in sync");
+    }
+
+    #[test]
+    fn scenario_parse_display_round_trip() {
+        let sc = Scenario::parse("pool=16,preempt@5x8,restore@20x8,slow@8x1.5").unwrap();
+        assert_eq!(sc.pool, 16);
+        assert_eq!(sc.events.len(), 3);
+        assert_eq!(sc.events[0], ScenarioEvent::Preempt { at: 5.0, machines: 8 });
+        assert_eq!(sc.events[2], ScenarioEvent::SlowDown { at: 8.0, factor: 1.5 });
+        let again = Scenario::parse(&sc.to_string()).unwrap();
+        assert_eq!(sc, again);
+        assert!(Scenario::parse("").unwrap().is_static());
+        for bad in [
+            "preempt@5",
+            "preempt@x8",
+            "preempt@5x0",
+            "slow@5x-1",
+            "slow@-1x2",
+            "pool=abc",
+            "vanish@5x8",
+        ] {
+            assert!(Scenario::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn empty_scenario_is_bitwise_static() {
+        for mode in [BarrierMode::Bsp, BarrierMode::Ssp { staleness: 2 }, BarrierMode::Async] {
+            let mut plain = ClusterSim::with_mode(HardwareProfile::local48(), mode, 7);
+            let mut evented = ClusterSim::with_mode(HardwareProfile::local48(), mode, 7)
+                .with_scenario(&Scenario { pool: 16, events: vec![] });
+            for _ in 0..50 {
+                let a = plain.iteration_time(&cocoa_cost(16));
+                let b = evented.iteration_time(&cocoa_cost(16));
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(plain.elapsed.to_bits(), evented.elapsed.to_bits());
+            assert_eq!(plain.spent_dollars.to_bits(), evented.spent_dollars.to_bits());
+            assert_eq!(evented.capacity(16), 16);
+            assert!(evented.fired().is_empty());
+        }
+    }
+
+    #[test]
+    fn preemption_slows_pointwise_and_restore_recovers() {
+        // Same seed ⇒ same draws; the load multiplier only scales them
+        // up, so the slowdown is pointwise per iteration.
+        let sc = Scenario::parse("preempt@0x8,restore@1e6x8").unwrap();
+        let mut evented = ClusterSim::new(HardwareProfile::local48(), 23).with_scenario(&sc);
+        let mut plain = ClusterSim::new(HardwareProfile::local48(), 23);
+        for i in 0..50 {
+            let de = evented.iteration_time(&cocoa_cost(16));
+            let dp = plain.iteration_time(&cocoa_cost(16));
+            assert!(de > dp, "iter {i}: preempted dt {de} !> static {dp}");
+        }
+        assert_eq!(evented.preempted(), 8);
+        assert_eq!(evented.capacity(16), 8);
+        assert_eq!(evented.fired().len(), 1);
+        // Preempted machines stop billing: fewer machine-seconds per
+        // (longer) iteration, so dollars grow slower than 2× wall.
+        assert!(evented.spent_dollars < 2.0 * plain.spent_dollars);
+        // A restore due immediately brings capacity back.
+        let sc2 = Scenario::parse("preempt@0x8,restore@0x8").unwrap();
+        let mut back = ClusterSim::new(HardwareProfile::local48(), 23).with_scenario(&sc2);
+        back.iteration_time(&cocoa_cost(16));
+        assert_eq!(back.preempted(), 0);
+        assert_eq!(back.capacity(16), 16);
+        assert_eq!(back.fired().len(), 2);
+    }
+
+    #[test]
+    fn slowdown_scales_compute_pointwise() {
+        let sc = Scenario::parse("slow@0x2").unwrap();
+        let mut slowed = ClusterSim::new(HardwareProfile::local48(), 29).with_scenario(&sc);
+        let mut plain = ClusterSim::new(HardwareProfile::local48(), 29);
+        for _ in 0..30 {
+            let ds = slowed.iteration_time(&cocoa_cost(8));
+            let dp = plain.iteration_time(&cocoa_cost(8));
+            assert!(ds > dp, "slowdown did not slow: {ds} !> {dp}");
+        }
+    }
+
+    #[test]
+    fn capacity_never_drops_below_one() {
+        let sc = Scenario::parse("pool=4,preempt@0x100").unwrap();
+        let mut sim = ClusterSim::new(HardwareProfile::local48(), 3).with_scenario(&sc);
+        let dt = sim.iteration_time(&cocoa_cost(8));
+        assert!(dt.is_finite() && dt > 0.0);
+        assert_eq!(sim.capacity(8), 1);
+    }
+
+    #[test]
+    fn save_load_state_resumes_bit_identically() {
+        let sc = Scenario::parse("pool=16,preempt@0.05x8").unwrap();
+        let make = || {
+            ClusterSim::with_mode(
+                HardwareProfile::local48(),
+                BarrierMode::Ssp { staleness: 2 },
+                41,
+            )
+            .with_scenario(&sc)
+        };
+        let mut full = make();
+        for _ in 0..10 {
+            full.iteration_time(&cocoa_cost(16));
+        }
+        let snap = full.save_state();
+        let tail: Vec<u64> = (0..10)
+            .map(|_| full.iteration_time(&cocoa_cost(16)).to_bits())
+            .collect();
+        let mut resumed = make();
+        resumed
+            .load_state(&crate::util::json::Json::parse(&snap.to_string()).unwrap())
+            .unwrap();
+        let replay: Vec<u64> = (0..10)
+            .map(|_| resumed.iteration_time(&cocoa_cost(16)).to_bits())
+            .collect();
+        assert_eq!(tail, replay, "restored sim diverged");
+        assert_eq!(full.elapsed.to_bits(), resumed.elapsed.to_bits());
+        assert_eq!(full.spent_dollars.to_bits(), resumed.spent_dollars.to_bits());
     }
 }

@@ -10,14 +10,15 @@
 //!   serve            long-lived advisor: JSON queries on stdin (or TCP with --tcp)
 //!   serve-load       load-generate against a running TCP advisor server
 //!   adaptive         the Fig 2 adaptive reconfiguration loop
+//!   elastic          one run under a failure scenario with advisor re-planning
 //!   repro            regenerate a paper figure/table (or `all`)
 //!   info             engine/artifact diagnostics
 
 use hemingway::advisor::{
-    adaptive_cocoa_plus, AdaptiveConfig, AlgorithmId, Constraints, FleetFilter, ModeFilter, Query,
-    WorkloadFilter,
+    adaptive_cocoa_plus, run_elastic, AdaptiveConfig, AlgorithmId, Constraints, ElasticConfig,
+    FleetFilter, ModeFilter, Query, WorkloadFilter,
 };
-use hemingway::cluster::{BarrierMode, BspSim, FleetSpec};
+use hemingway::cluster::{BarrierMode, BspSim, ClusterSim, FleetSpec, Scenario};
 use hemingway::optim::Objective;
 use hemingway::config::ExperimentConfig;
 use hemingway::repro::common::{load_or_fit_registry, update_summary_file};
@@ -67,6 +68,9 @@ fn print_help() {
          \x20 serve-load       --addr <host:port> [--clients N] [--queries M]\n\
          \x20                  [--json <f>] [--shutdown]  load-generate against a server\n\
          \x20 adaptive         [--frames 8] [--frame-seconds 5] [--native]\n\
+         \x20 elastic          --scenario pool=16,preempt@5x12 [--algo cocoa+]\n\
+         \x20                  [--machines 16] [--replan-every 5] [--native]\n\
+         \x20                  advisor-driven checkpoint/resize under failure events\n\
          \x20 repro            --figure <id>|all [--native]\n\
          \x20 info\n\n\
          figure ids: {}\n\n\
@@ -205,6 +209,7 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                 modes,
                 fleets: ctx.cfg.fleets.clone(),
                 workloads: ctx.cfg.workloads.clone(),
+                events: String::new(),
                 seeds,
                 base_seed: ctx.cfg.seed,
                 run: ctx.run_config(),
@@ -557,6 +562,71 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
             println!(
                 "final subopt {:.3e} in {:.1}s simulated",
                 run.final_subopt, run.total_time
+            );
+        }
+        "elastic" => {
+            let cfg = load_cfg(args)?;
+            let algo = AlgorithmId::parse(args.str_or("algo", "cocoa+"))?;
+            let machines = args.usize_or("machines", 16)?;
+            let replan_every = args.usize_or("replan-every", 5)?;
+            let spec = args.str_or("scenario", "").to_string();
+            hemingway::ensure!(
+                !spec.is_empty(),
+                "elastic needs --scenario (e.g. pool=16,preempt@5x12)"
+            );
+            let scenario = Scenario::parse(&spec)?;
+            let registry = load_or_fit_registry(&cfg, native, &[algo])?;
+            let ctx = ReproContext::new(cfg, native)?;
+            let backend = ctx.backend();
+            let fleet = ctx.fleet_for(&ctx.base_fleet_name())?;
+            // Seeded like the corresponding sweep cell so the run is
+            // comparable against a cached static trace.
+            let mut sim =
+                ClusterSim::with_fleet(fleet, BarrierMode::Bsp, ctx.cfg.seed ^ machines as u64)
+                    .with_scenario(&scenario);
+            let mut algo_box = hemingway::optim::by_name(
+                algo.as_str(),
+                &ctx.problem,
+                machines,
+                ctx.cfg.seed as u32,
+            )?;
+            let e_cfg = ElasticConfig {
+                replan_every,
+                machine_grid: ctx.cfg.machines.clone(),
+                seed: ctx.cfg.seed as u32,
+            };
+            let run_cfg = ctx.run_config();
+            let run = run_elastic(
+                &mut algo_box,
+                backend.as_ref(),
+                &ctx.problem,
+                &mut sim,
+                ctx.p_star,
+                &run_cfg,
+                &e_cfg,
+                Some(&registry),
+            )?;
+            println!("elastic {algo} m={machines} under '{spec}' (replan every {replan_every}):");
+            for (t, ev) in sim.fired() {
+                println!("  event  t={t:<8.2} {ev}");
+            }
+            for r in &run.replans {
+                println!(
+                    "  replan t={:<8.2} iter={:<4} m {}→{} {}",
+                    r.sim_time,
+                    r.iter,
+                    r.from_machines,
+                    r.to_machines,
+                    if r.moved { "[checkpointed move]" } else { "[stayed]" }
+                );
+            }
+            let last = run.trace.records.last().expect("trace has records");
+            println!(
+                "final subopt {:.3e} at t={:.1}s ({} iterations, {} move(s))",
+                run.trace.final_subopt(),
+                last.sim_time,
+                last.iter,
+                run.replans.iter().filter(|r| r.moved).count()
             );
         }
         "repro" => {

@@ -1,0 +1,367 @@
+//! Serializable optimizer state — the foundation of elastic execution.
+//!
+//! A [`Checkpoint`] freezes everything a run needs to continue
+//! bit-identically: the algorithm's evolving state (primal iterate,
+//! CoCoA dual blocks, SGD RNG position, stale-snapshot rings) plus an
+//! opaque cluster-simulator payload captured by the caller. Restoring
+//! reconstructs the algorithm from the same [`Problem`] via
+//! [`crate::optim::by_name`] and replays the saved payload;
+//! [`Checkpoint::restore_resized`] additionally re-partitions to a new
+//! machine count (re-sharding CoCoA's per-row duals in global row
+//! order).
+//!
+//! ## Encoding
+//!
+//! The crate's JSON serializer renders non-finite numbers as `null`
+//! and may shorten floats, so raw `f64` fields would not survive a
+//! byte-stable round trip. Checkpoints therefore store floats by *bit
+//! pattern*: `f32` vectors as arrays of `u32` bit patterns (every
+//! `u32` is exact as an f64 JSON number) and `u64`/`f64` scalars as
+//! 16-digit hex strings. NaN, −0.0 and ±∞ round-trip bit for bit.
+//!
+//! ## Loud failure
+//!
+//! Mirroring the trace-store's torn-tail discipline
+//! (`sweep/store.rs`), a truncated checkpoint file fails the full-input
+//! JSON parse and a schema mismatch is rejected by name — a checkpoint
+//! is either restored exactly or not at all.
+
+use std::collections::VecDeque;
+use std::path::Path;
+
+use super::problem::Problem;
+use super::stale::StaleWeights;
+use super::Algorithm;
+use crate::util::json::{read_json_file, write_json_file, Json};
+
+/// Schema tag checked on load; bump on any incompatible change.
+pub const SCHEMA: &str = "hemingway-checkpoint/v1";
+
+// ----- bit-exact encoding helpers -----------------------------------------
+
+/// `f32` slice → array of `u32` bit patterns (exact as JSON numbers).
+pub fn f32s_to_json(xs: &[f32]) -> Json {
+    Json::array(xs.iter().map(|v| Json::num(v.to_bits())))
+}
+
+/// Inverse of [`f32s_to_json`]; rejects non-u32 entries by field name.
+pub fn f32s_from_json(v: &Json, what: &str) -> crate::Result<Vec<f32>> {
+    let items = v
+        .as_array()
+        .ok_or_else(|| crate::err!("checkpoint field '{what}' is not an array"))?;
+    let mut out = Vec::with_capacity(items.len());
+    for item in items {
+        let bits = item
+            .as_f64()
+            .filter(|x| x.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(x))
+            .ok_or_else(|| crate::err!("checkpoint field '{what}' holds a non-u32 bit pattern"))?;
+        out.push(f32::from_bits(bits as u32));
+    }
+    Ok(out)
+}
+
+/// `u64` → 16-digit hex string (JSON numbers lose precision past 2^53).
+pub fn u64_to_json(x: u64) -> Json {
+    Json::str(format!("{x:016x}"))
+}
+
+/// Inverse of [`u64_to_json`].
+pub fn u64_from_json(v: &Json, what: &str) -> crate::Result<u64> {
+    let s = v
+        .as_str()
+        .ok_or_else(|| crate::err!("checkpoint field '{what}' is not a hex string"))?;
+    u64::from_str_radix(s, 16)
+        .map_err(|_| crate::err!("checkpoint field '{what}': invalid hex '{s}'"))
+}
+
+/// `f64` by bit pattern — survives NaN/−0.0/∞ byte-stably.
+pub fn f64_to_json(x: f64) -> Json {
+    u64_to_json(x.to_bits())
+}
+
+/// Inverse of [`f64_to_json`].
+pub fn f64_from_json(v: &Json, what: &str) -> crate::Result<f64> {
+    Ok(f64::from_bits(u64_from_json(v, what)?))
+}
+
+/// Serialize a [`StaleWeights`] ring (staleness, armed flag, snapshot
+/// history) — restored runs must replay the same stale reads.
+pub fn stale_to_json(s: &StaleWeights) -> Json {
+    let (staleness, armed, snapshots) = s.parts();
+    Json::object(vec![
+        ("staleness", Json::num(staleness as f64)),
+        ("armed", Json::Bool(armed)),
+        ("snapshots", Json::array(snapshots.iter().map(|w| f32s_to_json(w)))),
+    ])
+}
+
+/// Inverse of [`stale_to_json`].
+pub fn stale_from_json(v: &Json) -> crate::Result<StaleWeights> {
+    let staleness = v.req_usize("staleness")?;
+    let armed = v
+        .get("armed")
+        .and_then(Json::as_bool)
+        .ok_or_else(|| crate::err!("checkpoint field 'armed' is not a bool"))?;
+    let mut ring = VecDeque::new();
+    for (i, snap) in v.req_array("snapshots")?.iter().enumerate() {
+        ring.push_back(f32s_from_json(snap, &format!("snapshots[{i}]"))?);
+    }
+    Ok(StaleWeights::from_parts(staleness, armed, ring))
+}
+
+// ----- the checkpoint itself ----------------------------------------------
+
+/// A frozen run: enough to reconstruct the algorithm mid-stream and
+/// continue bit-identically (optionally at a different machine count).
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Canonical algorithm name ([`crate::optim::by_name`] key).
+    pub algorithm: String,
+    /// Degree of parallelism at capture time.
+    pub machines: usize,
+    /// Construction seed (CoCoA/LocalSgd re-derive per-iteration
+    /// streams from it; also replayed inside the state payload).
+    pub seed: u32,
+    /// Outer iterations completed at capture time.
+    pub iter: usize,
+    /// Simulated seconds elapsed at capture time.
+    pub sim_time: f64,
+    /// Algorithm payload from [`Algorithm::save_state`].
+    pub state: Json,
+    /// Opaque cluster-simulator payload (`ClusterSim::save_state`);
+    /// `None` for optimizer-only checkpoints.
+    pub sim: Option<Json>,
+}
+
+impl Checkpoint {
+    /// Freeze a running algorithm (plus an optional simulator payload
+    /// the caller captured alongside it).
+    pub fn capture(
+        algo: &dyn Algorithm,
+        seed: u32,
+        iter: usize,
+        sim_time: f64,
+        sim: Option<Json>,
+    ) -> Checkpoint {
+        Checkpoint {
+            algorithm: algo.name().to_string(),
+            machines: algo.machines(),
+            seed,
+            iter,
+            sim_time,
+            state: algo.save_state(),
+            sim,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("schema", Json::str(SCHEMA)),
+            ("algorithm", Json::str(self.algorithm.clone())),
+            ("machines", Json::num(self.machines as f64)),
+            ("seed", Json::num(self.seed)),
+            ("iter", Json::num(self.iter as f64)),
+            ("sim_time", f64_to_json(self.sim_time)),
+            ("state", self.state.clone()),
+        ];
+        if let Some(sim) = &self.sim {
+            fields.push(("sim", sim.clone()));
+        }
+        Json::object(fields)
+    }
+
+    /// Parse and validate. A wrong or missing schema tag is rejected
+    /// loudly — silently restoring across format versions is how runs
+    /// diverge unnoticed.
+    pub fn from_json(v: &Json) -> crate::Result<Checkpoint> {
+        let schema = v.req_str("schema")?;
+        crate::ensure!(
+            schema == SCHEMA,
+            "unsupported checkpoint schema '{schema}' (expected '{SCHEMA}')"
+        );
+        let seed = v.req_usize("seed")?;
+        crate::ensure!(seed <= u32::MAX as usize, "checkpoint seed out of u32 range");
+        Ok(Checkpoint {
+            algorithm: v.req_str("algorithm")?.to_string(),
+            machines: v.req_usize("machines")?,
+            seed: seed as u32,
+            iter: v.req_usize("iter")?,
+            sim_time: f64_from_json(
+                v.get("sim_time")
+                    .ok_or_else(|| crate::err!("missing checkpoint field 'sim_time'"))?,
+                "sim_time",
+            )?,
+            state: v
+                .get("state")
+                .ok_or_else(|| crate::err!("missing checkpoint field 'state'"))?
+                .clone(),
+            sim: v.get("sim").cloned(),
+        })
+    }
+
+    /// Write as pretty JSON (a partial write is detected on load: the
+    /// parser requires a complete document).
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        write_json_file(path, &self.to_json())
+    }
+
+    /// Read and validate a checkpoint file; truncated files fail the
+    /// full-input parse, foreign schemas are rejected by name.
+    pub fn load(path: &Path) -> crate::Result<Checkpoint> {
+        Checkpoint::from_json(&read_json_file(path)?)
+    }
+
+    /// Reconstruct the algorithm at the captured machine count and
+    /// replay the saved state — the run continues bit-identically.
+    pub fn restore(&self, problem: &Problem) -> crate::Result<Box<dyn Algorithm>> {
+        let mut algo = super::by_name(&self.algorithm, problem, self.machines, self.seed)?;
+        algo.load_state(&self.state)?;
+        Ok(algo)
+    }
+
+    /// Restore, then re-partition to `machines` (the elastic resize
+    /// path). `machines == self.machines` is a strict no-op resize.
+    pub fn restore_resized(
+        &self,
+        problem: &Problem,
+        machines: usize,
+    ) -> crate::Result<Box<dyn Algorithm>> {
+        crate::ensure!(machines >= 1, "cannot resize to {machines} machines");
+        let mut algo = self.restore(problem)?;
+        algo.resize(problem, machines)?;
+        Ok(algo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::two_gaussians;
+    use crate::optim::{by_name, NativeBackend, ALL_ALGORITHMS};
+
+    fn problem() -> Problem {
+        Problem::new(two_gaussians(192, 8, 2.0, 7), 1e-2)
+    }
+
+    #[test]
+    fn bit_helpers_round_trip_nonfinite() {
+        let xs = [0.0f32, -0.0, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.5e-39];
+        let back = f32s_from_json(&f32s_to_json(&xs), "w").unwrap();
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for x in [f64::NAN, -0.0f64, f64::INFINITY, 1.0 / 3.0] {
+            let r = f64_from_json(&f64_to_json(x), "t").unwrap();
+            assert_eq!(x.to_bits(), r.to_bits());
+        }
+        assert_eq!(u64_from_json(&u64_to_json(u64::MAX), "x").unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn capture_restore_resumes_bit_identically_for_all_algorithms() {
+        let p = problem();
+        let backend = NativeBackend;
+        for name in ALL_ALGORITHMS {
+            // Reference: 12 uninterrupted steps.
+            let mut full = by_name(name, &p, 4, 9).unwrap();
+            for i in 0..12 {
+                full.step(&backend, i).unwrap();
+            }
+            // Checkpoint after 5, restore, run the remaining 7.
+            let mut head = by_name(name, &p, 4, 9).unwrap();
+            for i in 0..5 {
+                head.step(&backend, i).unwrap();
+            }
+            let ckpt = Checkpoint::capture(head.as_ref(), 9, 5, 0.0, None);
+            let json = Json::parse(&ckpt.to_json().to_string()).unwrap();
+            let mut tail = Checkpoint::from_json(&json).unwrap().restore(&p).unwrap();
+            for i in 5..12 {
+                tail.step(&backend, i).unwrap();
+            }
+            let a: Vec<u32> = full.weights().iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = tail.weights().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "{name}: restored run diverged");
+        }
+    }
+
+    #[test]
+    fn resize_to_same_machine_count_is_a_noop() {
+        let p = problem();
+        let backend = NativeBackend;
+        for name in ALL_ALGORITHMS {
+            let mut a = by_name(name, &p, 4, 3).unwrap();
+            let mut b = by_name(name, &p, 4, 3).unwrap();
+            for i in 0..6 {
+                a.step(&backend, i).unwrap();
+                b.step(&backend, i).unwrap();
+            }
+            b.resize(&p, 4).unwrap();
+            for i in 6..12 {
+                a.step(&backend, i).unwrap();
+                b.step(&backend, i).unwrap();
+            }
+            let wa: Vec<u32> = a.weights().iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = b.weights().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(wa, wb, "{name}: resize 4→4 changed the run");
+        }
+    }
+
+    #[test]
+    fn resize_reshards_cocoa_duals_in_row_order() {
+        let p = problem();
+        let backend = NativeBackend;
+        let mut algo = by_name("cocoa+", &p, 8, 3).unwrap();
+        for i in 0..6 {
+            algo.step(&backend, i).unwrap();
+        }
+        let before_dual = algo.dual_sum().unwrap();
+        let before_w: Vec<u32> = algo.weights().iter().map(|v| v.to_bits()).collect();
+        let ckpt = Checkpoint::capture(algo.as_ref(), 3, 6, 0.0, None);
+        let resized = ckpt.restore_resized(&p, 2).unwrap();
+        assert_eq!(resized.machines(), 2);
+        let after_w: Vec<u32> = resized.weights().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(before_w, after_w, "resize must not touch the iterate");
+        let after_dual = resized.dual_sum().unwrap();
+        assert!(
+            (before_dual - after_dual).abs() < 1e-9,
+            "dual mass changed across resize: {before_dual} vs {after_dual}"
+        );
+    }
+
+    #[test]
+    fn schema_bump_and_shape_mismatch_are_rejected() {
+        let p = problem();
+        let algo = by_name("gd", &p, 2, 1).unwrap();
+        let ckpt = Checkpoint::capture(algo.as_ref(), 1, 0, 0.0, None);
+        let mut doc = ckpt.to_json();
+        if let Json::Object(fields) = &mut doc {
+            for (k, v) in fields.iter_mut() {
+                if k == "schema" {
+                    *v = Json::str("hemingway-checkpoint/v2");
+                }
+            }
+        }
+        let err = Checkpoint::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("checkpoint schema"), "{err}");
+        // Payload from a different machine count must not load.
+        let donor = by_name("cocoa", &p, 8, 1).unwrap();
+        let mut target = by_name("cocoa", &p, 2, 1).unwrap();
+        assert!(target.load_state(&donor.save_state()).is_err());
+    }
+
+    #[test]
+    fn truncated_checkpoint_file_is_rejected() {
+        let p = problem();
+        let algo = by_name("minibatch-sgd", &p, 2, 5).unwrap();
+        let ckpt = Checkpoint::capture(algo.as_ref(), 5, 0, 0.0, None);
+        let dir = std::env::temp_dir().join(format!("hw_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.json");
+        ckpt.save(&path).unwrap();
+        assert!(Checkpoint::load(&path).is_ok());
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&path).is_err(), "torn checkpoint must not load");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -14,10 +14,12 @@
 //! the phenomenon Hemingway's g(i, m) captures.
 
 use super::backend::Backend;
+use super::checkpoint::{f32s_from_json, f32s_to_json};
 use super::objective::Objective;
 use super::problem::Problem;
 use super::{Algorithm, IterationCost};
 use crate::data::Partition;
+use crate::util::json::Json;
 use crate::util::rng::Lcg32;
 
 /// Update-combination strategy.
@@ -180,6 +182,64 @@ impl Algorithm for Cocoa {
             }
         }
         Some(s)
+    }
+
+    /// CoCoA's evolving state: the iterate, the per-partition dual
+    /// blocks, and the seed the per-iteration LCG streams derive from.
+    fn save_state(&self) -> Json {
+        Json::object(vec![
+            ("seed", Json::num(self.seed)),
+            ("w", f32s_to_json(&self.w)),
+            (
+                "alpha",
+                Json::array(self.alpha.iter().map(|b| f32s_to_json(b))),
+            ),
+        ])
+    }
+
+    fn load_state(&mut self, state: &Json) -> crate::Result<()> {
+        let seed = state.req_usize("seed")?;
+        crate::ensure!(seed <= u32::MAX as usize, "cocoa seed out of u32 range");
+        let w = f32s_from_json(
+            state
+                .get("w")
+                .ok_or_else(|| crate::err!("missing checkpoint field 'w'"))?,
+            "w",
+        )?;
+        crate::ensure!(
+            w.len() == self.d,
+            "checkpoint iterate has {} weights, problem has {}",
+            w.len(),
+            self.d
+        );
+        let blocks = state.req_array("alpha")?;
+        crate::ensure!(
+            blocks.len() == self.parts.len(),
+            "checkpoint has {} dual blocks, instance has {} partitions",
+            blocks.len(),
+            self.parts.len()
+        );
+        let mut alpha = Vec::with_capacity(blocks.len());
+        for (k, (block, part)) in blocks.iter().zip(&self.parts).enumerate() {
+            let b = f32s_from_json(block, &format!("alpha[{k}]"))?;
+            crate::ensure!(
+                b.len() == part.n_loc,
+                "dual block {k} has {} rows, partition has {}",
+                b.len(),
+                part.n_loc
+            );
+            alpha.push(b);
+        }
+        self.seed = seed as u32;
+        self.w = w;
+        self.alpha = alpha;
+        Ok(())
+    }
+
+    fn resize(&mut self, problem: &Problem, machines: usize) -> crate::Result<()> {
+        crate::ensure!(machines >= 1, "cannot resize to {machines} machines");
+        self.repartition(problem, machines);
+        Ok(())
     }
 }
 

@@ -6,10 +6,12 @@
 //! decomposition h(t, m) = g(t/f(m), m).
 
 use super::backend::Backend;
+use super::checkpoint::{f32s_from_json, f32s_to_json, f64_from_json, f64_to_json};
 use super::objective::Objective;
 use super::problem::Problem;
 use super::{Algorithm, IterationCost};
 use crate::data::Partition;
+use crate::util::json::Json;
 
 pub struct GradientDescent {
     parts: Vec<Partition>,
@@ -78,6 +80,49 @@ impl Algorithm for GradientDescent {
 
     fn weights(&self) -> &[f32] {
         &self.w
+    }
+
+    /// GD is memoryless beyond the iterate and the schedule offset.
+    fn save_state(&self) -> Json {
+        Json::object(vec![
+            ("w", f32s_to_json(&self.w)),
+            ("t_shift", f64_to_json(self.t_shift)),
+        ])
+    }
+
+    fn load_state(&mut self, state: &Json) -> crate::Result<()> {
+        let w = f32s_from_json(
+            state
+                .get("w")
+                .ok_or_else(|| crate::err!("missing checkpoint field 'w'"))?,
+            "w",
+        )?;
+        crate::ensure!(
+            w.len() == self.d,
+            "checkpoint iterate has {} weights, problem has {}",
+            w.len(),
+            self.d
+        );
+        self.w = w;
+        self.t_shift = f64_from_json(
+            state
+                .get("t_shift")
+                .ok_or_else(|| crate::err!("missing checkpoint field 't_shift'"))?,
+            "t_shift",
+        )?;
+        Ok(())
+    }
+
+    /// Re-partition only: the full-gradient iterate sequence is
+    /// independent of m, so resizing changes timing and nothing else.
+    fn resize(&mut self, problem: &Problem, machines: usize) -> crate::Result<()> {
+        if machines == self.machines {
+            return Ok(());
+        }
+        crate::ensure!(machines >= 1, "cannot resize to {machines} machines");
+        self.parts = problem.data.partition(machines);
+        self.machines = machines;
+        Ok(())
     }
 }
 

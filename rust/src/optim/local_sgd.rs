@@ -13,11 +13,14 @@
 //! synchronous update bit for bit.
 
 use super::backend::Backend;
+use super::checkpoint::{f32s_from_json, f32s_to_json, f64_from_json, f64_to_json};
+use super::checkpoint::{stale_from_json, stale_to_json};
 use super::objective::Objective;
 use super::problem::Problem;
 use super::stale::StaleWeights;
 use super::{Algorithm, IterationCost};
 use crate::data::Partition;
+use crate::util::json::Json;
 use crate::util::rng::Lcg32;
 
 pub struct LocalSgd {
@@ -115,6 +118,65 @@ impl Algorithm for LocalSgd {
 
     fn set_staleness(&mut self, staleness: usize) {
         self.stale.set_staleness(staleness);
+    }
+
+    /// Local SGD's evolving state: the iterate, the cumulative step
+    /// count `t0` (stored by bit pattern — it is a float sum), the
+    /// seed the per-iteration LCG streams derive from, and the stale
+    /// ring.
+    fn save_state(&self) -> Json {
+        Json::object(vec![
+            ("seed", Json::num(self.seed)),
+            ("w", f32s_to_json(&self.w)),
+            ("t0", f64_to_json(self.t0)),
+            ("stale", stale_to_json(&self.stale)),
+        ])
+    }
+
+    fn load_state(&mut self, state: &Json) -> crate::Result<()> {
+        let seed = state.req_usize("seed")?;
+        crate::ensure!(seed <= u32::MAX as usize, "local-sgd seed out of u32 range");
+        let w = f32s_from_json(
+            state
+                .get("w")
+                .ok_or_else(|| crate::err!("missing checkpoint field 'w'"))?,
+            "w",
+        )?;
+        crate::ensure!(
+            w.len() == self.d,
+            "checkpoint iterate has {} weights, problem has {}",
+            w.len(),
+            self.d
+        );
+        let t0 = f64_from_json(
+            state
+                .get("t0")
+                .ok_or_else(|| crate::err!("missing checkpoint field 't0'"))?,
+            "t0",
+        )?;
+        let stale = stale_from_json(
+            state
+                .get("stale")
+                .ok_or_else(|| crate::err!("missing checkpoint field 'stale'"))?,
+        )?;
+        self.seed = seed as u32;
+        self.w = w;
+        self.t0 = t0;
+        self.stale = stale;
+        Ok(())
+    }
+
+    /// Re-partition to `machines`. The averaged iterate and the η
+    /// schedule position carry over unchanged; only the data split
+    /// (and with it each machine's epoch length) changes.
+    fn resize(&mut self, problem: &Problem, machines: usize) -> crate::Result<()> {
+        if machines == self.machines {
+            return Ok(());
+        }
+        crate::ensure!(machines >= 1, "cannot resize to {machines} machines");
+        self.parts = problem.data.partition(machines);
+        self.machines = machines;
+        Ok(())
     }
 }
 

@@ -4,6 +4,7 @@
 //! a [`Backend`] (production: AOT HLO via PJRT; tests: native mirror).
 
 pub mod backend;
+pub mod checkpoint;
 pub mod cocoa;
 pub mod driver;
 pub mod gd;
@@ -16,6 +17,7 @@ pub mod stale;
 pub mod trace;
 
 pub use backend::{Backend, HloBackend};
+pub use checkpoint::Checkpoint;
 pub use cocoa::{Cocoa, CocoaVariant};
 pub use driver::{run, RunConfig};
 pub use gd::GradientDescent;
@@ -67,6 +69,25 @@ pub trait Algorithm {
     /// compute their updates against a bounded-stale weight snapshot,
     /// which is where staleness genuinely costs convergence.
     fn set_staleness(&mut self, _staleness: usize) {}
+
+    /// Serialize the evolving optimizer state (iterate, duals, RNG
+    /// position, stale snapshots — everything `step` mutates) into a
+    /// JSON payload. Problem-derived fields (partitions, λ, objective)
+    /// are *not* included: [`Checkpoint::restore`] reconstructs the
+    /// algorithm from the same problem and then replays this payload,
+    /// after which the run continues bit-identically.
+    fn save_state(&self) -> crate::util::json::Json;
+
+    /// Restore the state produced by [`Algorithm::save_state`] into a
+    /// freshly constructed instance (same problem, machines, seed).
+    /// Rejects payloads whose shapes don't match this instance.
+    fn load_state(&mut self, state: &crate::util::json::Json) -> crate::Result<()>;
+
+    /// Change the degree of parallelism mid-run: re-partition the data
+    /// across `machines` workers and re-shard any per-row state (CoCoA
+    /// duals). `machines == self.machines()` must be a strict no-op —
+    /// the elastic driver's inertness property depends on it.
+    fn resize(&mut self, problem: &Problem, machines: usize) -> crate::Result<()>;
 }
 
 /// Typed identifier for the algorithms under study. The advisor's

@@ -15,11 +15,14 @@
 //! synchronous step bit for bit.
 
 use super::backend::Backend;
+use super::checkpoint::{f32s_from_json, f32s_to_json, f64_from_json, f64_to_json};
+use super::checkpoint::{stale_from_json, stale_to_json, u64_from_json, u64_to_json};
 use super::objective::Objective;
 use super::problem::Problem;
 use super::stale::StaleWeights;
 use super::{Algorithm, IterationCost};
 use crate::data::Partition;
+use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 
 pub struct MiniBatchSgd {
@@ -170,6 +173,83 @@ impl Algorithm for MiniBatchSgd {
 
     fn set_staleness(&mut self, staleness: usize) {
         self.stale.set_staleness(staleness);
+    }
+
+    /// Mini-batch SGD's evolving state: the iterate, the *live* RNG
+    /// position (the batch-sampling stream is stateful, unlike CoCoA's
+    /// per-iteration LCGs), the schedule knobs, and the stale ring.
+    /// `weights_buf` is per-step scratch, fully overwritten before
+    /// every read, so it is not part of the state.
+    fn save_state(&self) -> Json {
+        let (rng_state, rng_inc) = self.rng.raw_state();
+        Json::object(vec![
+            ("w", f32s_to_json(&self.w)),
+            ("batch", Json::num(self.batch as f64)),
+            ("t_shift", f64_to_json(self.t_shift)),
+            ("rng_state", u64_to_json(rng_state)),
+            ("rng_inc", u64_to_json(rng_inc)),
+            ("stale", stale_to_json(&self.stale)),
+        ])
+    }
+
+    fn load_state(&mut self, state: &Json) -> crate::Result<()> {
+        let w = f32s_from_json(
+            state
+                .get("w")
+                .ok_or_else(|| crate::err!("missing checkpoint field 'w'"))?,
+            "w",
+        )?;
+        crate::ensure!(
+            w.len() == self.d,
+            "checkpoint iterate has {} weights, problem has {}",
+            w.len(),
+            self.d
+        );
+        let rng_state = u64_from_json(
+            state
+                .get("rng_state")
+                .ok_or_else(|| crate::err!("missing checkpoint field 'rng_state'"))?,
+            "rng_state",
+        )?;
+        let rng_inc = u64_from_json(
+            state
+                .get("rng_inc")
+                .ok_or_else(|| crate::err!("missing checkpoint field 'rng_inc'"))?,
+            "rng_inc",
+        )?;
+        let stale = stale_from_json(
+            state
+                .get("stale")
+                .ok_or_else(|| crate::err!("missing checkpoint field 'stale'"))?,
+        )?;
+        self.w = w;
+        self.batch = state.req_usize("batch")?;
+        self.t_shift = f64_from_json(
+            state
+                .get("t_shift")
+                .ok_or_else(|| crate::err!("missing checkpoint field 't_shift'"))?,
+            "t_shift",
+        )?;
+        self.rng = Pcg32::from_raw(rng_state, rng_inc);
+        self.stale = stale;
+        Ok(())
+    }
+
+    /// Re-partition to `machines`, preserving the per-machine local
+    /// batch and — crucially — the *live* RNG position: re-deriving
+    /// the `900 + m` stream would rewind the sampler and break the
+    /// restored run's bit-for-bit continuation.
+    fn resize(&mut self, problem: &Problem, machines: usize) -> crate::Result<()> {
+        if machines == self.machines {
+            return Ok(());
+        }
+        crate::ensure!(machines >= 1, "cannot resize to {machines} machines");
+        let local = (self.batch / self.machines).max(1);
+        self.parts = problem.data.partition(machines);
+        self.weights_buf = self.parts.iter().map(|p| vec![0.0f32; p.n_loc]).collect();
+        self.batch = local * machines;
+        self.machines = machines;
+        Ok(())
     }
 }
 

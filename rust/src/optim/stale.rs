@@ -62,6 +62,23 @@ impl StaleWeights {
         }
     }
 
+    /// Decompose into `(staleness, armed, snapshots)` for
+    /// checkpointing. The snapshot ring is part of the optimizer state:
+    /// a restored stale run must replay the same stale reads.
+    pub fn parts(&self) -> (usize, bool, &VecDeque<Vec<f32>>) {
+        (self.staleness, self.armed, &self.snapshots)
+    }
+
+    /// Rebuild from checkpointed parts, verbatim — no clamping or
+    /// re-arming logic, so restore is exactly the saved state.
+    pub fn from_parts(staleness: usize, armed: bool, snapshots: VecDeque<Vec<f32>>) -> Self {
+        StaleWeights {
+            staleness,
+            armed,
+            snapshots,
+        }
+    }
+
     /// The stale iterate this step's machines read: the snapshot
     /// `staleness` steps back (clamped to the oldest retained), or
     /// `None` when reads are fresh — callers then use the live

@@ -36,6 +36,12 @@ pub struct Trace {
     /// The objective the run optimized (hinge = the pre-workload-axis
     /// behavior).
     pub workload: Objective,
+    /// Scenario string the run was priced under (`cluster::sim::Scenario`
+    /// grammar: `pool=N,preempt@TxM,…`). Empty = the static path. Like
+    /// [`fleet`](Self::fleet) this is run metadata, not a CSV column: it
+    /// is carried by the binary sweep store (format v6 when non-empty)
+    /// and left out of the numeric trace table.
+    pub events: String,
     pub p_star: f64,
     pub records: Vec<Record>,
 }
@@ -48,6 +54,7 @@ impl Trace {
             barrier_mode: BarrierMode::Bsp,
             fleet: String::new(),
             workload: Objective::Hinge,
+            events: String::new(),
             p_star,
             records: Vec::new(),
         }

@@ -12,7 +12,7 @@ use std::sync::{Arc, Mutex};
 use crate::advisor::{
     artifact_path, save_artifact, AlgorithmId, CombinedModel, ModeModel, ModelKey, ModelRegistry,
 };
-use crate::cluster::{BarrierMode, ClusterSim, FleetSpec, HardwareProfile};
+use crate::cluster::{BarrierMode, ClusterSim, FleetSpec, HardwareProfile, Scenario};
 use crate::config::ExperimentConfig;
 use crate::data::synth::dataset_for;
 use crate::ernest::{ErnestModel, Observation};
@@ -313,6 +313,7 @@ impl ReproContext {
             modes: vec![BarrierMode::Bsp],
             fleets: self.base_fleet_axis(),
             workloads: vec![self.base_workload()],
+            events: String::new(),
             seeds: 1,
             base_seed: self.cfg.seed,
             run: self.run_config(),
@@ -618,9 +619,15 @@ fn run_cell(
     // Same seed across modes, fleets and workloads: one noise
     // realization, priced under every variant.
     let mut sim = ClusterSim::with_fleet(fleet, cell.mode, cell.seed ^ cell.machines as u64);
+    if !cell.events.is_empty() {
+        // An event-carrying cell replays its failure scenario; the
+        // static path never parses (or pays for) one.
+        sim = sim.with_scenario(&Scenario::parse(&cell.events)?);
+    }
     let t0 = std::time::Instant::now();
     let mut trace = run(algo.as_mut(), backend, problem, &mut sim, wp.p_star, run_cfg)?;
     trace.fleet = cell.fleet.clone();
+    trace.events = cell.events.clone();
     crate::log_info!(
         "{} m={} mode={} fleet={} workload={} rep={}: {} iters, final subopt {:.2e} ({:.1}s wall)",
         cell.algorithm,

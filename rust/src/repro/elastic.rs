@@ -1,0 +1,268 @@
+//! Elastic-execution scenario (beyond the paper): checkpoint/restore
+//! plus mid-run re-planning against timed failure events.
+//!
+//! The paper's advisor plans once, up front. This target measures what
+//! that costs when the cluster changes mid-run: a preemption takes
+//! away most of the machine pool at 25% of the static-best
+//! time-to-target, and the run either (a) stays on its original plan,
+//! paying the oversubscription stretch the simulator charges for
+//! orphaned slots, or (b) consults the advisor every few iterations
+//! ([`crate::advisor::run_elastic`]), checkpoints, and resizes onto
+//! the surviving machines. The interesting output is the time-to-
+//! target gap between the two under the *same* priced noise stream —
+//! both runs share the static cell's seed derivation, so the
+//! comparison is paired, not distributional.
+
+use super::common::{time_series, ReproContext};
+use crate::advisor::{run_elastic, AlgorithmId, ElasticConfig, ModelKey, ModelRegistry};
+use crate::cluster::{BarrierMode, ClusterSim, Scenario, ScenarioEvent};
+use crate::optim::{by_name, RunConfig};
+use crate::sweep::SweepGrid;
+use crate::util::asciiplot::Series;
+use crate::util::csv::Table;
+use crate::util::stats;
+
+/// The elastic scenario prefers CoCoA+ (its per-row dual state makes
+/// mid-run resharding exact); any configured algorithm works.
+fn pick_algorithm(ctx: &ReproContext) -> crate::Result<AlgorithmId> {
+    let name = ctx
+        .cfg
+        .algorithms
+        .iter()
+        .find(|a| a.as_str() == "cocoa+")
+        .or_else(|| ctx.cfg.algorithms.first())
+        .cloned()
+        .unwrap_or_else(|| "cocoa+".to_string());
+    AlgorithmId::parse(&name)
+}
+
+pub fn elastic(ctx: &ReproContext) -> crate::Result<String> {
+    println!("== elastic scenario: re-planning under preemption ==");
+    let algo = pick_algorithm(ctx)?;
+
+    // ---- Static baseline: the one-shot best (m*, T*) on a calm
+    // cluster, at the config's target or one relaxed to what ~three
+    // quarters of the sweep achieved (same rule as the ssp scenario).
+    let set = ctx.run_sweep(algo.as_str())?;
+    let mut eps = ctx.cfg.target_subopt;
+    let reached = set.traces.iter().filter(|t| t.time_to(eps).is_some()).count();
+    if reached * 2 < set.traces.len() {
+        let finals: Vec<f64> = set
+            .traces
+            .iter()
+            .map(|t| t.final_subopt().max(1e-12))
+            .collect();
+        eps = stats::percentile(&finals, 75.0) * 1.2;
+        println!(
+            "  (target {:.0e} unreachable for most cells; comparing at {eps:.2e})",
+            ctx.cfg.target_subopt
+        );
+    }
+    let mut best: Option<(usize, f64)> = None;
+    for t in &set.traces {
+        if let Some(tt) = t.time_to(eps) {
+            if best.map(|b| tt < b.1).unwrap_or(true) {
+                best = Some((t.machines, tt));
+            }
+        }
+    }
+    let Some((m_star, t_star)) = best else {
+        let summary =
+            format!("elastic: {algo} reached {eps:.1e} at no machine count — grid too small");
+        println!("{summary}\n");
+        return Ok(summary);
+    };
+
+    // The plan that actually runs: the static best — unless the best
+    // is a single machine (a preemption can take nothing away from
+    // it), in which case the largest grid entry stands in as the
+    // as-provisioned parallel plan.
+    let m_run = if m_star > 1 {
+        m_star
+    } else {
+        ctx.cfg
+            .machines
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(m_star)
+            .max(2)
+    };
+    let t_run = set
+        .traces
+        .iter()
+        .find(|t| t.machines == m_run)
+        .and_then(|t| t.time_to(eps))
+        .unwrap_or(t_star);
+
+    // ---- The failure scenario: at a quarter of the running plan's
+    // time-to-target, the pool shrinks to ~m/4 surviving machines.
+    let survivors = (m_run / 4).max(1);
+    let taken = (m_run - survivors).max(1);
+    let at = 0.25 * t_run;
+    let spec = format!("pool={m_run},preempt@{at}x{taken}");
+    let scenario = Scenario::parse(&spec)?;
+    println!(
+        "  static best: m={m_star} in {t_star:.2}s; running plan m={m_run}; scenario: {spec}"
+    );
+
+    let run_cfg = RunConfig {
+        max_iters: ctx.cfg.max_iters,
+        target_subopt: eps,
+        time_budget: None,
+    };
+
+    // ---- Static-under-preemption: the original plan, no reaction ----
+    let grid = SweepGrid {
+        algorithms: vec![algo.as_str().to_string()],
+        machines: vec![m_run],
+        modes: vec![BarrierMode::Bsp],
+        fleets: ctx.base_fleet_axis(),
+        workloads: vec![ctx.base_workload()],
+        events: spec.clone(),
+        seeds: 1,
+        base_seed: ctx.cfg.seed,
+        run: run_cfg.clone(),
+    };
+    let static_trace = ctx.run_grid(&grid)?.into_iter().next().expect("one cell");
+    let t_static = static_trace.time_to(eps);
+
+    // ---- Re-planned: consult the advisor, checkpoint, resize ----
+    let mut registry = ModelRegistry::new(ctx.cfg.machines.clone(), ctx.cfg.advisor_iter_cap);
+    registry.insert(
+        ModelKey {
+            algorithm: algo,
+            context: "elastic".into(),
+        },
+        ctx.fit_combined(algo)?,
+    );
+    let ecfg = ElasticConfig {
+        replan_every: 5,
+        machine_grid: ctx.cfg.machines.clone(),
+        seed: ctx.cfg.seed as u32,
+    };
+    let backend = ctx.backend();
+    let fleet = ctx.fleet_for(&ctx.base_fleet_name())?;
+    // Same seed derivation as the sweep cell above: one noise
+    // realization, priced under both the static plan and the
+    // re-planned run.
+    let mut sim = ClusterSim::with_fleet(fleet, BarrierMode::Bsp, ctx.cfg.seed ^ m_run as u64)
+        .with_scenario(&scenario);
+    let mut algo_box = by_name(algo.as_str(), &ctx.problem, m_run, ctx.cfg.seed as u32)?;
+    let run = run_elastic(
+        &mut algo_box,
+        backend.as_ref(),
+        &ctx.problem,
+        &mut sim,
+        ctx.p_star,
+        &run_cfg,
+        &ecfg,
+        Some(&registry),
+    )?;
+    let t_elastic = run.trace.time_to(eps);
+    let moves = run.replans.iter().filter(|r| r.moved).count();
+
+    // ---- Outputs: event/replan timeline, comparison row, plot ----
+    write_events_csv(ctx, sim.fired(), &run.replans)?;
+    let mut table = Table::new(&[
+        "machines_static_best",
+        "machines_run",
+        "t_static_best",
+        "t_static_preempted",
+        "t_replanned",
+        "replans",
+        "moves",
+    ]);
+    table.push(vec![
+        m_star as f64,
+        m_run as f64,
+        t_star,
+        t_static.unwrap_or(f64::NAN),
+        t_elastic.unwrap_or(f64::NAN),
+        run.replans.len() as f64,
+        moves as f64,
+    ]);
+    ctx.write_csv("elastic_compare.csv", &table)?;
+
+    let mut series = Vec::new();
+    let pts = time_series(&static_trace, None);
+    if !pts.is_empty() {
+        series.push(Series::new("static plan", pts));
+    }
+    let pts = time_series(&run.trace, None);
+    if !pts.is_empty() {
+        series.push(Series::new("re-planned", pts));
+    }
+    if !series.is_empty() {
+        ctx.show(
+            &format!("elastic scenario: suboptimality vs seconds under {spec} (log y)"),
+            series,
+            true,
+            "seconds",
+        );
+    }
+
+    let fmt = |t: Option<f64>| t.map(|t| format!("{t:.2}s")).unwrap_or_else(|| "-".into());
+    let summary = match (t_static, t_elastic) {
+        (Some(ts), Some(te)) => format!(
+            "elastic: {algo} to {eps:.1e} — static best {t_star:.2}s @ m={m_star}; \
+             under preemption @ m={m_run}: static {ts:.2}s, re-planned {te:.2}s \
+             (×{:.2}, {moves} move(s))",
+            ts / te
+        ),
+        _ => format!(
+            "elastic: {algo} to {eps:.1e} — static best {t_star:.2}s @ m={m_star}; \
+             under preemption @ m={m_run}: static {}, re-planned {} ({moves} move(s))",
+            fmt(t_static),
+            fmt(t_elastic)
+        ),
+    };
+    println!("{summary}\n");
+    Ok(summary)
+}
+
+/// `elastic_events.csv`: the fired scenario events and the elastic
+/// driver's consultations, merged in simulated-time order. Kinds are
+/// strings, so this file is written directly rather than through the
+/// numeric [`Table`].
+fn write_events_csv(
+    ctx: &ReproContext,
+    fired: &[(f64, ScenarioEvent)],
+    replans: &[crate::advisor::ReplanLog],
+) -> crate::Result<()> {
+    let fmt_opt = |t: Option<f64>| t.map(|t| format!("{t:.4}")).unwrap_or_default();
+    let mut rows: Vec<(f64, String)> = Vec::new();
+    for (t, ev) in fired {
+        let (kind, detail) = match ev {
+            ScenarioEvent::Preempt { machines, .. } => ("preempt", format!("machines={machines}")),
+            ScenarioEvent::Restore { machines, .. } => ("restore", format!("machines={machines}")),
+            ScenarioEvent::SlowDown { factor, .. } => ("slow", format!("factor={factor}")),
+        };
+        rows.push((*t, format!("{kind},{t:.4},{detail}")));
+    }
+    for r in replans {
+        rows.push((
+            r.sim_time,
+            format!(
+                "replan,{:.4},iter={} from={} to={} moved={} stay={} move={}",
+                r.sim_time,
+                r.iter,
+                r.from_machines,
+                r.to_machines,
+                r.moved as u8,
+                fmt_opt(r.predicted_stay_seconds),
+                fmt_opt(r.predicted_move_seconds),
+            ),
+        ));
+    }
+    rows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    let mut csv = String::from("kind,sim_time,detail\n");
+    for (_, line) in &rows {
+        csv.push_str(line);
+        csv.push('\n');
+    }
+    let path = ctx.out_dir.join("elastic_events.csv");
+    std::fs::write(&path, csv)?;
+    println!("  wrote {}", path.display());
+    Ok(())
+}

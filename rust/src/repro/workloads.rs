@@ -70,6 +70,7 @@ pub fn workloads(ctx: &ReproContext) -> crate::Result<String> {
         modes: vec![crate::cluster::BarrierMode::Bsp],
         fleets: ctx.base_fleet_axis(),
         workloads: workload_list.clone(),
+        events: String::new(),
         seeds: 1,
         base_seed: ctx.cfg.seed,
         run: ctx.run_config(),

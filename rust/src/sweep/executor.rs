@@ -508,6 +508,7 @@ mod tests {
             modes: vec![crate::cluster::BarrierMode::Bsp],
             fleets: Vec::new(),
             workloads: Vec::new(),
+            events: String::new(),
             seeds,
             base_seed: 7,
             run: RunConfig::default(),
@@ -581,6 +582,7 @@ mod tests {
             modes: vec![crate::cluster::BarrierMode::Bsp],
             fleets: Vec::new(),
             workloads: Vec::new(),
+            events: String::new(),
             seeds: 2,
             base_seed: 11,
             run: run_cfg.clone(),

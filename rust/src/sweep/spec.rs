@@ -21,6 +21,11 @@ pub struct CellSpec {
     /// The objective the cell optimizes (hinge = the historical
     /// single-workload shape).
     pub workload: Objective,
+    /// Scenario string (`cluster::sim::Scenario` grammar) the cell's
+    /// simulator replays: pool size plus timed preempt/restore/slowdown
+    /// events. Empty = the static path — and the historical cache-key
+    /// shape (the key only grows an `events=` field when one is set).
+    pub events: String,
     /// Replicate index (0-based) along the seed axis.
     pub replicate: usize,
     /// Fully-mixed RNG seed for this cell — a pure function of the
@@ -70,6 +75,10 @@ pub struct SweepGrid {
     /// Workloads to sweep. Empty behaves as `[Hinge]` — the
     /// pre-workload-axis grid shape.
     pub workloads: Vec<Objective>,
+    /// Scenario string every cell replays (the events axis is a grid
+    /// constant, not a cross product: a sweep is either static or runs
+    /// one failure scenario). Empty = static.
+    pub events: String,
     /// Seed replicates per (algorithm, machines, mode, fleet,
     /// workload) cell (≥ 1).
     pub seeds: usize,
@@ -97,6 +106,7 @@ impl SweepGrid {
             modes: vec![mode],
             fleets: Vec::new(),
             workloads: Vec::new(),
+            events: String::new(),
             seeds: 1,
             base_seed,
             run,
@@ -144,6 +154,7 @@ impl SweepGrid {
                                     mode,
                                     fleet: fleet.clone(),
                                     workload,
+                                    events: self.events.clone(),
                                     replicate: rep,
                                     seed: cell_seed(self.base_seed, rep),
                                 });
@@ -191,6 +202,11 @@ pub fn cell_key_into(out: &mut String, context_key: &str, cell: &CellSpec) {
         cell.replicate,
         cell.seed
     );
+    // Event-free cells keep the historical key byte-for-byte, so every
+    // pre-elastic cache entry still hits; a scenario adds its own field.
+    if !cell.events.is_empty() {
+        let _ = write!(out, ";events={}", cell.events);
+    }
 }
 
 #[cfg(test)]
@@ -204,6 +220,7 @@ mod tests {
             modes: vec![BarrierMode::Bsp],
             fleets: Vec::new(),
             workloads: Vec::new(),
+            events: String::new(),
             seeds: 3,
             base_seed: 42,
             run: RunConfig::default(),
@@ -356,6 +373,32 @@ mod tests {
         assert_ne!(keys[1], keys[2]);
         assert!(keys[0].contains("workload=hinge"));
         assert!(keys[1].contains("workload=ridge"));
+    }
+
+    #[test]
+    fn event_free_cell_keys_are_byte_stable_and_scenarios_separate() {
+        // The pre-elastic key shape is a cache-compatibility contract:
+        // a cell with no events must produce the exact historical key
+        // (no trailing `events=` field), while any scenario moves it.
+        let base = grid().cells().remove(0);
+        assert!(base.events.is_empty());
+        let k = cell_key("ctx", &base);
+        assert_eq!(
+            k,
+            format!(
+                "ctx|algo=cocoa;m=1;mode=bsp;fleet=;workload=hinge;rep=0;seed={}",
+                base.seed
+            )
+        );
+        let mut stormy = base.clone();
+        stormy.events = "pool=4,preempt@0.5x2".into();
+        let sk = cell_key("ctx", &stormy);
+        assert_ne!(k, sk);
+        assert!(sk.contains(";events=pool=4,preempt@0.5x2"));
+        // The grid copies its scenario onto every cell.
+        let mut g = grid();
+        g.events = "slow@1x2".into();
+        assert!(g.cells().iter().all(|c| c.events == "slow@1x2"));
     }
 
     #[test]

@@ -43,6 +43,11 @@ use super::cache::{hash_key, parse_trace, MAGIC_V4};
 
 /// Magic line of the binary v5 format (v4 and older are text).
 pub const MAGIC_V5: &str = "hemingway-trace v5";
+/// Magic line of the binary v6 format: v5 plus an `events` string
+/// (the scenario a run was priced under) after the workload field.
+/// Event-free traces keep encoding as v5 byte-for-byte, so the v6
+/// axis costs existing caches nothing.
+pub const MAGIC_V6: &str = "hemingway-trace v6";
 /// First line of a well-formed manifest.
 pub const MANIFEST_MAGIC: &str = "hemingway-manifest v1";
 /// Manifest file name under the store root.
@@ -70,13 +75,16 @@ fn put_f64(out: &mut Vec<u8>, v: f64) {
     out.extend_from_slice(&v.to_bits().to_le_bytes());
 }
 
-/// Encode a trace (with its cache key) into the v5 binary format,
+/// Encode a trace (with its cache key) into the binary format,
 /// reusing `out`'s capacity (the sweep hot loop hands every worker one
-/// scratch buffer instead of allocating per cell).
+/// scratch buffer instead of allocating per cell). Traces with no
+/// scenario events encode as v5 **byte-for-byte** (the pre-elastic
+/// bytes); only an event-carrying trace pays the v6 `events` field.
 pub fn encode_trace_into(key: &str, trace: &Trace, out: &mut Vec<u8>) {
     out.clear();
     out.reserve(64 + key.len() + trace.records.len() * 40);
-    out.extend_from_slice(MAGIC_V5.as_bytes());
+    let magic = if trace.events.is_empty() { MAGIC_V5 } else { MAGIC_V6 };
+    out.extend_from_slice(magic.as_bytes());
     out.push(b'\n');
     out.extend_from_slice(b"key=");
     out.extend_from_slice(key.as_bytes());
@@ -86,6 +94,9 @@ pub fn encode_trace_into(key: &str, trace: &Trace, out: &mut Vec<u8>) {
     put_str(out, &trace.barrier_mode.as_str());
     put_str(out, &trace.fleet);
     put_str(out, trace.workload.as_str());
+    if !trace.events.is_empty() {
+        put_str(out, &trace.events);
+    }
     put_f64(out, trace.p_star);
     put_u64(out, trace.records.len() as u64);
     for r in &trace.records {
@@ -140,7 +151,17 @@ impl<'a> Cursor<'a> {
 /// bad UTF-8, or an unknown barrier mode / workload is an error (the
 /// cache layer treats errors as misses and regenerates).
 pub fn decode_trace_v5(bytes: &[u8]) -> crate::Result<(String, Trace)> {
-    let body = strip_header(bytes, MAGIC_V5)?;
+    decode_binary(bytes, MAGIC_V5, false)
+}
+
+/// Decode a v6 binary file (v5 + the `events` scenario string) back
+/// into (key, Trace). Same strictness as v5.
+pub fn decode_trace_v6(bytes: &[u8]) -> crate::Result<(String, Trace)> {
+    decode_binary(bytes, MAGIC_V6, true)
+}
+
+fn decode_binary(bytes: &[u8], magic: &str, has_events: bool) -> crate::Result<(String, Trace)> {
+    let body = strip_header(bytes, magic)?;
     let (key, body) = body;
     let mut c = Cursor { bytes: body, pos: 0 };
     let algorithm = c.str("algorithm")?;
@@ -148,13 +169,14 @@ pub fn decode_trace_v5(bytes: &[u8]) -> crate::Result<(String, Trace)> {
     let barrier_mode = BarrierMode::parse(&c.str("barrier")?)?;
     let fleet = c.str("fleet")?;
     let workload = Objective::parse(&c.str("workload")?)?;
+    let events = if has_events { c.str("events")? } else { String::new() };
     let p_star = c.f64("p_star")?;
     let n = c.u64("record count")? as usize;
     // A forged count can't make us allocate past the file's own size
     // (checked_mul: u64::MAX * 40 must error, not wrap).
     crate::ensure!(
         n.checked_mul(40) == Some(c.bytes.len() - c.pos),
-        "v5 trace body length {} does not match {} records",
+        "binary trace body length {} does not match {} records",
         c.bytes.len() - c.pos,
         n
     );
@@ -162,6 +184,7 @@ pub fn decode_trace_v5(bytes: &[u8]) -> crate::Result<(String, Trace)> {
     trace.barrier_mode = barrier_mode;
     trace.fleet = fleet;
     trace.workload = workload;
+    trace.events = events;
     trace.records.reserve_exact(n);
     for _ in 0..n {
         trace.push(Record {
@@ -198,12 +221,16 @@ fn header_lines(bytes: &[u8]) -> Option<(&[u8], &[u8], usize)> {
     Some((&bytes[..nl1], line1, nl1 + 1 + nl2 + 1))
 }
 
-/// Decode any readable on-disk format (v5 binary or v4 text) into
+/// Decode any readable on-disk format (v5/v6 binary or v4 text) into
 /// (key, Trace, was_legacy_text).
 pub fn decode_any(bytes: &[u8]) -> crate::Result<(String, Trace, bool)> {
     match header_lines(bytes) {
         Some((m, _, _)) if m == MAGIC_V5.as_bytes() => {
             let (key, trace) = decode_trace_v5(bytes)?;
+            Ok((key, trace, false))
+        }
+        Some((m, _, _)) if m == MAGIC_V6.as_bytes() => {
+            let (key, trace) = decode_trace_v6(bytes)?;
             Ok((key, trace, false))
         }
         Some((m, _, _)) if m == MAGIC_V4.as_bytes() => {
@@ -212,7 +239,7 @@ pub fn decode_any(bytes: &[u8]) -> crate::Result<(String, Trace, bool)> {
             let (key, trace) = parse_trace(text)?;
             Ok((key, trace, true))
         }
-        _ => crate::bail!("not a readable trace file (v4/v5)"),
+        _ => crate::bail!("not a readable trace file (v4/v5/v6)"),
     }
 }
 
@@ -225,7 +252,8 @@ pub fn decode_any(bytes: &[u8]) -> crate::Result<(String, Trace, bool)> {
 pub enum Probe {
     /// No file, wrong key, or an unreadable/old format.
     Miss,
-    /// A v5 file in the sharded layout carries this key.
+    /// A binary-format file (v5, or v6 when the trace carries scenario
+    /// events) in the sharded layout carries this key.
     V5(PathBuf),
     /// A legacy v4 text file (flat layout) carries this key — a hit
     /// that wants migration.
@@ -276,7 +304,7 @@ impl ShardedStore {
         let hash = hash_key(key);
         let shard = self.shard_path(hash);
         match probe_file(&shard, key) {
-            Some(MAGIC_V5) => return Probe::V5(shard),
+            Some(MAGIC_V5) | Some(MAGIC_V6) => return Probe::V5(shard),
             // A v4 file can sit in the sharded slot too (hand-copied
             // caches); it is just as migratable as a flat one.
             Some(MAGIC_V4) => return Probe::V4(shard),
@@ -284,7 +312,7 @@ impl ShardedStore {
         }
         let legacy = self.legacy_path(hash);
         match probe_file(&legacy, key) {
-            Some(MAGIC_V5) => Probe::V5(legacy),
+            Some(MAGIC_V5) | Some(MAGIC_V6) => Probe::V5(legacy),
             Some(MAGIC_V4) => Probe::V4(legacy),
             _ => Probe::Miss,
         }
@@ -459,6 +487,8 @@ fn verdict(magic: &[u8], key_line: &[u8], key: &str) -> Option<&'static str> {
     }
     if magic == MAGIC_V5.as_bytes() {
         Some(MAGIC_V5)
+    } else if magic == MAGIC_V6.as_bytes() {
+        Some(MAGIC_V6)
     } else if magic == MAGIC_V4.as_bytes() {
         Some(MAGIC_V4)
     } else {
@@ -549,6 +579,48 @@ mod tests {
         assert_eq!(back.fleet, t.fleet);
         assert_eq!(back.workload, t.workload);
         assert_eq!(back.barrier_mode, t.barrier_mode);
+    }
+
+    #[test]
+    fn event_free_traces_keep_encoding_as_v5_bytes() {
+        // The elastic events axis must cost pre-elastic caches nothing:
+        // a trace with no scenario events encodes with the v5 magic and
+        // body layout, so every byte matches what the seed wrote.
+        let t = sample_trace();
+        assert!(t.events.is_empty());
+        let bytes = encode_trace("k", &t);
+        assert!(bytes.starts_with(MAGIC_V5.as_bytes()));
+        let (key, back) = decode_trace_v5(&bytes).unwrap();
+        assert_eq!(key, "k");
+        assert_eq!(back.events, "");
+        assert_eq!(encode_trace("k", &back), bytes);
+    }
+
+    #[test]
+    fn v6_roundtrip_carries_events_bit_exactly() {
+        let mut t = sample_trace();
+        t.events = "pool=16,preempt@0.5x8".to_string();
+        let bytes = encode_trace("k6", &t);
+        assert!(bytes.starts_with(MAGIC_V6.as_bytes()));
+        let (key, back, legacy) = decode_any(&bytes).unwrap();
+        assert_eq!((key.as_str(), legacy), ("k6", false));
+        assert_eq!(back.events, t.events);
+        // Re-encoding the decoded trace reproduces the exact bytes.
+        assert_eq!(encode_trace("k6", &back), bytes);
+        // Same torn-tail discipline as v5: any truncation is an error.
+        for cut in [bytes.len() - 1, bytes.len() - 40, 30] {
+            assert!(decode_any(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // And the sharded store serves v6 entries through probe + load.
+        let dir = tmp_dir("v6");
+        let store = ShardedStore::open(&dir);
+        let mut buf = Vec::new();
+        store.store("cell-v6", &t, &mut buf);
+        assert!(store.probe("cell-v6") != Probe::Miss);
+        let served = store.load("cell-v6").expect("v6 entry must hit");
+        assert_eq!(served.events, t.events);
+        assert_eq!(encode_trace("cell-v6", &served), encode_trace("cell-v6", &t));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

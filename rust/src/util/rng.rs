@@ -54,6 +54,18 @@ impl Pcg32 {
         Self::new(seed, 0xda3e39cb94b95bdb)
     }
 
+    /// Raw `(state, inc)` pair for checkpointing. Restoring through
+    /// [`Pcg32::from_raw`] resumes the stream at the exact position,
+    /// which is what lets a restored optimizer replay bit-identically.
+    pub fn raw_state(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from a checkpointed `(state, inc)` pair.
+    pub fn from_raw(state: u64, inc: u64) -> Self {
+        Pcg32 { state, inc }
+    }
+
     /// Next raw 32-bit output.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {

@@ -92,6 +92,7 @@ fn concurrent_clients_get_byte_identical_responses() {
     let queries = [
         r#"{"query":"fastest_to","eps":0.02}"#,
         r#"{"query":"best_at","budget":4}"#,
+        r#"{"query":"replan","eps":0.01,"trace":[[10,0.05]]}"#,
         r#"{"query":"table","eps":0.01,"budget":4}"#,
         r#"{"query":"models"}"#,
         r#"{"query":"what"}"#,
@@ -155,9 +156,48 @@ fn concurrent_clients_get_byte_identical_responses() {
         kinds.contains(&("fastest_to", CLIENTS * ROUNDS)),
         "{kinds:?}"
     );
+    assert!(kinds.contains(&("replan", CLIENTS * ROUNDS)), "{kinds:?}");
     assert!(kinds.contains(&("other", CLIENTS * ROUNDS * 2)), "{kinds:?}");
     assert!(kinds.contains(&("shutdown", 1)), "{kinds:?}");
     assert!(stats.qps > 0.0 && stats.p99_us.is_finite());
+}
+
+#[test]
+fn replan_wire_kind_is_byte_identical_across_stdin_and_tcp() {
+    // Pinned golden bytes for the elastic driver's wire kind: anchored
+    // at (i=10, s=0.05) with goal 0.01 the needed decay is ln 5 nats at
+    // 1/m per iteration — Δi = 2 at m=1, so 2·0.5 = 1 second exactly.
+    // The legacy kind on the same registry answers from scratch
+    // (ln 50 nats → 4 iterations → 2 seconds) and must keep its
+    // pre-replan byte shape.
+    let replan = r#"{"query":"replan","eps":0.01,"trace":[[10,0.05]]}"#;
+    let legacy = r#"{"query":"fastest_to","eps":0.01}"#;
+    let golden_replan = r#"{"ok":true,"query":"replan","algorithm":"cocoa+","machines":1,"barrier_mode":"bsp","predicted_seconds":1}"#;
+    let golden_legacy = r#"{"ok":true,"query":"fastest_to","algorithm":"cocoa+","machines":1,"barrier_mode":"bsp","predicted_seconds":2}"#;
+    let registry = golden_registry();
+    assert_eq!(handle_line(&registry, replan).to_string(), golden_replan);
+    assert_eq!(handle_line(&registry, legacy).to_string(), golden_legacy);
+
+    // The stdin adapter emits exactly the core's bytes…
+    let input = format!("{legacy}\n{replan}\n");
+    let mut out = Vec::new();
+    let stats = hemingway::advisor::serve(&registry, input.as_bytes(), &mut out).unwrap();
+    assert_eq!((stats.queries, stats.errors), (2, 0));
+    let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().lines().collect();
+    assert_eq!(lines, vec![golden_legacy, golden_replan]);
+
+    // …and so does the threaded TCP front end.
+    let server =
+        AdvisorServer::bind("127.0.0.1:0", golden_registry(), ServerConfig::default()).unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    let mut client = Client::connect(&addr);
+    assert_eq!(client.roundtrip(legacy), golden_legacy);
+    assert_eq!(client.roundtrip(replan), golden_replan);
+    client.roundtrip(r#"{"query":"shutdown"}"#);
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.errors, 0);
+    assert!(stats.kind_counts().contains(&("replan", 1)), "{stats:?}");
 }
 
 #[test]

@@ -196,6 +196,79 @@ fn serve_answers_barrier_mode_queries_and_legacy_stays_bsp() {
 }
 
 #[test]
+fn serve_replan_wire_kind_is_golden_and_legacy_lines_unchanged() {
+    use hemingway::advisor::registry::ModelKey;
+    use hemingway::advisor::CombinedModel;
+    use hemingway::ernest::ErnestModel;
+    use hemingway::hemingway_model::{ConvergenceModel, FeatureLibrary, LassoFit};
+
+    // Exactly-known golden model: f(m) = 0.5s, g(i, m) = 0.5·e^(−i/m),
+    // floor 1e-12, machines [1, 2, 4]. Every prediction below is an
+    // integer number of seconds, so responses pin as byte strings.
+    let library = FeatureLibrary::standard();
+    let i_over_m = library.names().iter().position(|&n| n == "i/m").unwrap();
+    let mut coef = vec![0.0; library.len()];
+    coef[i_over_m] = -1.0;
+    let conv = ConvergenceModel {
+        library,
+        fit: LassoFit {
+            coef,
+            intercept: 0.5f64.ln(),
+            alpha: 0.01,
+            iterations: 1,
+        },
+        train_r2: 1.0,
+        n_train: 0,
+        floor: 1e-12,
+    };
+    let ernest = ErnestModel {
+        theta: [0.5, 0.0, 0.0, 0.0],
+        train_rmse: 0.0,
+    };
+    let mut registry = ModelRegistry::new(vec![1, 2, 4], 100_000);
+    registry.insert(
+        ModelKey {
+            algorithm: AlgorithmId::CocoaPlus,
+            context: "golden".into(),
+        },
+        CombinedModel::new(ernest, conv, 1000.0),
+    );
+
+    // One serve loop: a legacy query, the golden replan, a replan
+    // anchoring on the LAST of several trace samples, a malformed
+    // replan (empty trace), and a second legacy kind — the new wire
+    // kind must not disturb a byte of the old ones.
+    let input = b"{\"query\":\"fastest_to\",\"eps\":0.01}\n\
+                  {\"query\":\"replan\",\"eps\":0.01,\"trace\":[[10,0.05]]}\n\
+                  {\"query\":\"replan\",\"eps\":0.01,\"trace\":[[4,0.5],[10,0.05]],\"max_machines\":4}\n\
+                  {\"query\":\"replan\",\"eps\":0.01,\"trace\":[]}\n\
+                  {\"query\":\"best_at\",\"budget\":4}\n";
+    let mut out = Vec::new();
+    let stats = hemingway::advisor::serve(&registry, &input[..], &mut out).unwrap();
+    assert_eq!(stats.queries, 5);
+    assert_eq!(stats.errors, 1, "{}", String::from_utf8_lossy(&out));
+    let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().lines().collect();
+    assert_eq!(lines.len(), 5);
+    // Legacy kinds, byte-for-byte: from scratch, ln 50 ≈ 3.912 nats at
+    // 1/m per iteration → 4 iterations at m=1 → 2.0s exactly.
+    assert_eq!(
+        lines[0],
+        r#"{"ok":true,"query":"fastest_to","algorithm":"cocoa+","machines":1,"barrier_mode":"bsp","predicted_seconds":2}"#
+    );
+    // The golden replan bytes: from (i=10, s=0.05), ln 5 ≈ 1.609 nats
+    // → 2 more iterations at m=1 → 1.0s exactly.
+    assert_eq!(
+        lines[1],
+        r#"{"ok":true,"query":"replan","algorithm":"cocoa+","machines":1,"barrier_mode":"bsp","predicted_seconds":1}"#
+    );
+    // A multi-sample trace anchors on its last entry: same answer.
+    assert_eq!(lines[2], lines[1]);
+    // An empty trace is a clean wire error, not a crash.
+    assert!(lines[3].starts_with(r#"{"ok":false"#), "{}", lines[3]);
+    assert!(lines[4].contains("\"predicted_suboptimality\""), "{}", lines[4]);
+}
+
+#[test]
 fn stale_artifacts_are_detected_not_served() {
     let cfg = small_cfg("stale");
     let _ = std::fs::remove_dir_all(&cfg.out_dir);

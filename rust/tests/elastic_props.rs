@@ -1,0 +1,461 @@
+//! Property tests for elastic execution (ISSUE 8): the elastic driver
+//! is provably inert without scenario events, checkpoints resume
+//! bit-identically through the wire encoding (simulator payload
+//! included), same-count resizes are strict no-ops, and the
+//! checkpoint's bit-pattern JSON encoding is byte-stable for every
+//! f64 — NaN, −0.0 and ±∞ included. Truncated or version-bumped
+//! checkpoint files must be rejected loudly, never half-restored.
+//!
+//! All cross-run comparisons are paired (same seed, same noise
+//! realization), so equality is asserted bit for bit, not
+//! approximately.
+
+use hemingway::advisor::registry::ModelKey;
+use hemingway::advisor::{
+    resume_elastic, run_elastic, AlgorithmId, CombinedModel, ElasticConfig, ModelRegistry,
+};
+use hemingway::cluster::{BarrierMode, ClusterSim, HardwareProfile, Scenario};
+use hemingway::data::synth::two_gaussians;
+use hemingway::ernest::ErnestModel;
+use hemingway::hemingway_model::{ConvergenceModel, FeatureLibrary, LassoFit};
+use hemingway::optim::checkpoint::{f32s_to_json, f64_to_json, u64_to_json, SCHEMA};
+use hemingway::optim::{
+    by_name, run, Checkpoint, NativeBackend, Objective, Problem, RunConfig, Trace,
+};
+use hemingway::util::json::Json;
+use hemingway::util::quickcheck::{forall_ok, Gen};
+
+const ALGOS: [&str; 5] = ["cocoa", "cocoa+", "minibatch-sgd", "local-sgd", "gd"];
+
+fn small_problem(objective: Objective) -> (Problem, f64) {
+    let p = Problem::with_objective(two_gaussians(192, 8, 2.0, 7), 1e-2, objective);
+    let (p_star, _, _) = p.reference_solve(1e-6, 300);
+    (p, p_star)
+}
+
+fn random_mode(g: &mut Gen) -> BarrierMode {
+    *g.choose(&[
+        BarrierMode::Bsp,
+        BarrierMode::Ssp { staleness: g.usize_in(0, 4) },
+        BarrierMode::Async,
+    ])
+}
+
+/// A live registry with exactly-known numbers (f(m) = 0.5s,
+/// g(i, m) = 0.5·e^(−i/m)) — armed but, without events, never
+/// consulted.
+fn golden_registry() -> ModelRegistry {
+    let library = FeatureLibrary::standard();
+    let i_over_m = library.names().iter().position(|&n| n == "i/m").unwrap();
+    let mut coef = vec![0.0; library.len()];
+    coef[i_over_m] = -1.0;
+    let conv = ConvergenceModel {
+        library,
+        fit: LassoFit {
+            coef,
+            intercept: 0.5f64.ln(),
+            alpha: 0.01,
+            iterations: 1,
+        },
+        train_r2: 1.0,
+        n_train: 0,
+        floor: 1e-12,
+    };
+    let ernest = ErnestModel {
+        theta: [0.5, 0.0, 0.0, 0.0],
+        train_rmse: 0.0,
+    };
+    let mut registry = ModelRegistry::new(vec![1, 2, 4, 8], 100_000);
+    registry.insert(
+        ModelKey {
+            algorithm: AlgorithmId::CocoaPlus,
+            context: "elastic-props".into(),
+        },
+        CombinedModel::new(ernest, conv, 1000.0),
+    );
+    registry
+}
+
+fn records_bitwise_equal(a: &Trace, b: &Trace) -> Result<(), String> {
+    if a.records.len() != b.records.len() {
+        return Err(format!(
+            "record counts differ: {} vs {}",
+            a.records.len(),
+            b.records.len()
+        ));
+    }
+    for (i, (ra, rb)) in a.records.iter().zip(&b.records).enumerate() {
+        if ra.iter != rb.iter
+            || ra.sim_time.to_bits() != rb.sim_time.to_bits()
+            || ra.primal.to_bits() != rb.primal.to_bits()
+            || ra.dual.to_bits() != rb.dual.to_bits()
+            || ra.subopt.to_bits() != rb.subopt.to_bits()
+        {
+            return Err(format!(
+                "record {i} diverged: iter {}/{} t {}/{} primal {}/{} subopt {}/{}",
+                ra.iter, rb.iter, ra.sim_time, rb.sim_time, ra.primal, rb.primal, ra.subopt,
+                rb.subopt
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The ISSUE 8 acceptance property: with no scenario events, the
+/// elastic driver — advisor armed and all — must be a bitwise no-op
+/// relative to the plain static driver, across every algorithm,
+/// barrier mode and workload. Zero extra RNG draws, zero extra float
+/// operations.
+#[test]
+fn prop_no_event_elastic_is_bitwise_static() {
+    let problems: Vec<(Problem, f64)> = [Objective::Hinge, Objective::Logistic, Objective::Ridge]
+        .iter()
+        .map(|&o| small_problem(o))
+        .collect();
+    let registry = golden_registry();
+    forall_ok(
+        "no-event elastic run ≡ static driver, bit for bit",
+        8,
+        |g| {
+            let algo = *g.choose(&ALGOS);
+            let mode = random_mode(g);
+            (
+                (
+                    algo,
+                    mode,
+                    g.usize_in(0, 2),
+                    g.usize_in(1, 8),
+                    g.rng().next_u64(),
+                    g.usize_in(4, 10),
+                ),
+                (),
+            )
+        },
+        |&(algo, mode, wl, m, seed, iters), _| {
+            let (problem, p_star) = &problems[wl];
+            let cfg = RunConfig {
+                max_iters: iters,
+                target_subopt: -1.0, // run the full budget
+                time_budget: None,
+            };
+            let mut a_static = by_name(algo, problem, m, seed as u32).unwrap();
+            let mut sim_static = ClusterSim::with_mode(HardwareProfile::local48(), mode, seed);
+            let t_static = run(
+                a_static.as_mut(),
+                &NativeBackend,
+                problem,
+                &mut sim_static,
+                *p_star,
+                &cfg,
+            )
+            .map_err(|e| e.to_string())?;
+
+            let ecfg = ElasticConfig {
+                replan_every: 3,
+                machine_grid: vec![1, 2, 4, 8],
+                seed: seed as u32,
+            };
+            let mut a_elastic = by_name(algo, problem, m, seed as u32).unwrap();
+            let mut sim_elastic = ClusterSim::with_mode(HardwareProfile::local48(), mode, seed);
+            let elastic = run_elastic(
+                &mut a_elastic,
+                &NativeBackend,
+                problem,
+                &mut sim_elastic,
+                *p_star,
+                &cfg,
+                &ecfg,
+                Some(&registry),
+            )
+            .map_err(|e| e.to_string())?;
+
+            if !elastic.replans.is_empty() {
+                return Err(format!(
+                    "{algo} {mode} m={m}: advisor consulted {} time(s) without events",
+                    elastic.replans.len()
+                ));
+            }
+            records_bitwise_equal(&t_static, &elastic.trace)
+                .map_err(|e| format!("{algo} {mode} m={m}: {e}"))?;
+            if sim_static.elapsed.to_bits() != sim_elastic.elapsed.to_bits()
+                || sim_static.spent_dollars.to_bits() != sim_elastic.spent_dollars.to_bits()
+            {
+                return Err(format!(
+                    "{algo} {mode} m={m}: simulator state diverged \
+                     (elapsed {} vs {}, dollars {} vs {})",
+                    sim_static.elapsed,
+                    sim_elastic.elapsed,
+                    sim_static.spent_dollars,
+                    sim_elastic.spent_dollars
+                ));
+            }
+            let wa: Vec<u32> = a_static.weights().iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = a_elastic.weights().iter().map(|v| v.to_bits()).collect();
+            if wa != wb {
+                return Err(format!("{algo} {mode} m={m}: final weights diverged"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Checkpoint → byte round-trip → restore in a *fresh* simulator must
+/// continue bit-identically — with live scenario events (preemption
+/// from t=0, a slow-down mid-run) exercising the simulator's saved
+/// clocks, RNG position and event cursor across the boundary.
+#[test]
+fn prop_checkpoint_restore_resumes_bitwise_with_events() {
+    let (problem, p_star) = small_problem(Objective::Hinge);
+    forall_ok(
+        "capture→wire→resume ≡ uninterrupted elastic run, bit for bit",
+        6,
+        |g| {
+            let algo = *g.choose(&ALGOS);
+            let mode = random_mode(g);
+            let total = g.usize_in(8, 14);
+            (
+                (
+                    algo,
+                    mode,
+                    g.usize_in(2, 6),
+                    g.rng().next_u64(),
+                    total,
+                    g.usize_in(2, total - 1),
+                ),
+                (),
+            )
+        },
+        |&(algo, mode, m, seed, total, cut), _| {
+            let spec = format!("pool={m},preempt@0x1,slow@1.0x1.5");
+            let scenario = Scenario::parse(&spec).unwrap();
+            let ecfg = ElasticConfig {
+                replan_every: 0, // checkpointing path only, no re-planning
+                machine_grid: vec![m],
+                seed: seed as u32,
+            };
+            let full_cfg = RunConfig {
+                max_iters: total,
+                target_subopt: -1.0,
+                time_budget: None,
+            };
+            let fresh_sim = || {
+                ClusterSim::with_mode(HardwareProfile::local48(), mode, seed)
+                    .with_scenario(&scenario)
+            };
+
+            // Reference: one uninterrupted run.
+            let mut a_full = by_name(algo, &problem, m, seed as u32).unwrap();
+            let mut sim_full = fresh_sim();
+            let full = run_elastic(
+                &mut a_full,
+                &NativeBackend,
+                &problem,
+                &mut sim_full,
+                p_star,
+                &full_cfg,
+                &ecfg,
+                None,
+            )
+            .map_err(|e| e.to_string())?;
+
+            // Head: stop at `cut`, freeze everything, cross the wire.
+            let head_cfg = RunConfig {
+                max_iters: cut,
+                ..full_cfg.clone()
+            };
+            let mut a_head = by_name(algo, &problem, m, seed as u32).unwrap();
+            let mut sim_head = fresh_sim();
+            let head = run_elastic(
+                &mut a_head,
+                &NativeBackend,
+                &problem,
+                &mut sim_head,
+                p_star,
+                &head_cfg,
+                &ecfg,
+                None,
+            )
+            .map_err(|e| e.to_string())?;
+            let at = head.trace.records.last().unwrap();
+            let ckpt = Checkpoint::capture(
+                a_head.as_ref(),
+                seed as u32,
+                at.iter,
+                at.sim_time,
+                Some(sim_head.save_state()),
+            );
+            let doc = Json::parse(&ckpt.to_json().to_string())
+                .map_err(|e| format!("checkpoint re-parse: {e}"))?;
+            let ckpt = Checkpoint::from_json(&doc).map_err(|e| e.to_string())?;
+
+            // Tail: a fresh simulator, state replayed from the payload.
+            let mut sim_tail = fresh_sim();
+            let resumed = resume_elastic(
+                &ckpt,
+                head.trace,
+                &NativeBackend,
+                &problem,
+                &mut sim_tail,
+                &full_cfg,
+                &ecfg,
+                None,
+            )
+            .map_err(|e| e.to_string())?;
+
+            records_bitwise_equal(&full.trace, &resumed.trace)
+                .map_err(|e| format!("{algo} {mode} m={m} cut={cut}/{total}: {e}"))?;
+            if sim_full.elapsed.to_bits() != sim_tail.elapsed.to_bits() {
+                return Err(format!(
+                    "{algo} {mode} m={m} cut={cut}: elapsed {} vs {}",
+                    sim_full.elapsed, sim_tail.elapsed
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `restore_resized(problem, m)` at the captured machine count is a
+/// strict no-op: identical state payload bytes, identical weights, and
+/// an identical trajectory afterwards.
+#[test]
+fn prop_resize_to_same_machine_count_is_strict_noop() {
+    let (problem, _) = small_problem(Objective::Hinge);
+    forall_ok(
+        "resize m→m ≡ no-op: state bytes, weights and future steps",
+        10,
+        |g| {
+            let algo = *g.choose(&ALGOS);
+            (
+                (algo, g.usize_in(1, 8), g.rng().next_u32(), g.usize_in(1, 8)),
+                (),
+            )
+        },
+        |&(algo, m, seed, steps), _| {
+            let backend = NativeBackend;
+            let mut original = by_name(algo, &problem, m, seed).unwrap();
+            for i in 0..steps {
+                original.step(&backend, i).map_err(|e| e.to_string())?;
+            }
+            let ckpt = Checkpoint::capture(original.as_ref(), seed, steps, 0.0, None);
+            let mut resized = ckpt
+                .restore_resized(&problem, m)
+                .map_err(|e| e.to_string())?;
+            if resized.machines() != m {
+                return Err(format!("machines changed: {} vs {m}", resized.machines()));
+            }
+            if resized.save_state().to_string() != original.save_state().to_string() {
+                return Err(format!("{algo} m={m}: state payload changed across m→m resize"));
+            }
+            for i in steps..steps + 3 {
+                original.step(&backend, i).map_err(|e| e.to_string())?;
+                resized.step(&backend, i).map_err(|e| e.to_string())?;
+            }
+            let wa: Vec<u32> = original.weights().iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = resized.weights().iter().map(|v| v.to_bits()).collect();
+            if wa != wb {
+                return Err(format!("{algo} m={m}: trajectories diverged after m→m resize"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Fuzz the checkpoint wire encoding: arbitrary `u32`/`u64` bit
+/// patterns — which cover every NaN payload, −0.0 and both infinities
+/// — must serialize to JSON whose parse → re-serialize is the
+/// identical byte string, with every float's bits preserved.
+#[test]
+fn prop_checkpoint_wire_encoding_is_byte_stable_for_all_bit_patterns() {
+    forall_ok(
+        "checkpoint JSON round-trip is byte-stable incl. NaN/−0.0/∞",
+        60,
+        |g| {
+            let mut words: Vec<u32> = (0..g.usize_in(0, 12)).map(|_| g.rng().next_u32()).collect();
+            words.push(f32::NAN.to_bits());
+            words.push((-0.0f32).to_bits());
+            words.push(f32::INFINITY.to_bits());
+            words.push(f32::NEG_INFINITY.to_bits());
+            let sim_time = if g.bool() {
+                *g.choose(&[f64::NAN, -0.0, f64::INFINITY, f64::NEG_INFINITY])
+            } else {
+                f64::from_bits(g.rng().next_u64())
+            };
+            let raw = g.rng().next_u64();
+            (
+                (words, sim_time, raw, g.usize_in(0, 1_000_000), g.rng().next_u32()),
+                (),
+            )
+        },
+        |&(ref words, sim_time, raw, iter, seed), _| {
+            let floats: Vec<f32> = words.iter().map(|&w| f32::from_bits(w)).collect();
+            let ckpt = Checkpoint {
+                algorithm: "cocoa+".into(),
+                machines: 4,
+                seed,
+                iter,
+                sim_time,
+                state: Json::object(vec![
+                    ("w", f32s_to_json(&floats)),
+                    ("t", f64_to_json(sim_time)),
+                    ("raw", u64_to_json(raw)),
+                ]),
+                sim: Some(Json::object(vec![("elapsed", f64_to_json(sim_time))])),
+            };
+            let s1 = ckpt.to_json().to_string();
+            let doc = Json::parse(&s1).map_err(|e| format!("parse: {e}"))?;
+            let back = Checkpoint::from_json(&doc).map_err(|e| e.to_string())?;
+            let s2 = back.to_json().to_string();
+            if s1 != s2 {
+                return Err(format!("byte drift:\n  {s1}\n  {s2}"));
+            }
+            if back.sim_time.to_bits() != sim_time.to_bits() {
+                return Err(format!(
+                    "sim_time bits drifted: {:016x} vs {:016x}",
+                    sim_time.to_bits(),
+                    back.sim_time.to_bits()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// File-level loud failure: a truncated checkpoint (any torn prefix)
+/// and a schema-bumped checkpoint must both refuse to load — never a
+/// silent partial restore.
+#[test]
+fn truncated_and_version_bumped_checkpoint_files_fail_loudly() {
+    let (problem, _) = small_problem(Objective::Hinge);
+    let backend = NativeBackend;
+    let mut algo = by_name("cocoa+", &problem, 4, 2).unwrap();
+    let mut sim = ClusterSim::with_mode(HardwareProfile::local48(), BarrierMode::Bsp, 2);
+    for i in 0..4 {
+        let cost = algo.step(&backend, i).unwrap();
+        sim.iteration_time(&cost);
+    }
+    let ckpt = Checkpoint::capture(algo.as_ref(), 2, 4, sim.elapsed, Some(sim.save_state()));
+    let dir = std::env::temp_dir().join(format!("hw_elastic_props_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ckpt.json");
+    ckpt.save(&path).unwrap();
+    assert!(Checkpoint::load(&path).is_ok());
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    for frac in [4, 2] {
+        std::fs::write(&path, &text[..text.len() / frac]).unwrap();
+        assert!(
+            Checkpoint::load(&path).is_err(),
+            "truncated to 1/{frac} must not load"
+        );
+    }
+    std::fs::write(&path, &text[..text.len() - 1]).unwrap();
+    assert!(Checkpoint::load(&path).is_err(), "one torn byte must not load");
+
+    let bumped = text.replace(SCHEMA, "hemingway-checkpoint/v999");
+    assert_ne!(bumped, text, "fixture must actually contain the schema tag");
+    std::fs::write(&path, &bumped).unwrap();
+    let err = Checkpoint::load(&path).unwrap_err().to_string();
+    assert!(err.contains("checkpoint schema"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
