@@ -20,6 +20,12 @@ cargo test -q
 # reproduces locally.
 QUICKCHECK_SEED=20170211 cargo test -q --release --test barrier_props
 QUICKCHECK_SEED=20170211 cargo test -q --release --test workload_props
+# Data-axis invariants (dense scenario ≡ the historical path bitwise,
+# density-1.0 CSR ≡ dense to 0 ULP through the full driver, skewed
+# partitions cover every row exactly once, trace-store v7 byte round
+# trip with legacy v5/v6 bytes decoding as implicit dense) under the
+# same pinned seed.
+QUICKCHECK_SEED=20170211 cargo test -q --release --test data_props
 # Sweep-store invariants (interrupted sweep + torn manifest resumes to
 # a bitwise-identical aggregate, v4 flat fixtures migrate-on-hit and
 # serve bit-identically, header-only probe ≡ full parse at any key
@@ -165,6 +171,36 @@ if grep -q '"ok":false' "$tmp/workload_query.out"; then
 fi
 echo "workloads smoke OK"
 
+# Data smoke: the data-scenario axis end to end — a tiny
+# `repro --figure data` over dense vs a sparse+skewed scenario (the
+# committed demo config's shape, shrunk), then one scenario-filtered
+# fastest_to query through a freshly fitted registry (per-scenario
+# model pairs persisted, the `data` filter honored on the wire).
+cat > "$tmp/data.json" <<EOF
+{"n": 256, "d": 16, "machines": [1, 2, 4], "max_iters": 40,
+ "target_subopt": 1e-2, "advisor_iter_cap": 2000,
+ "algorithms": ["cocoa+", "minibatch-sgd"],
+ "data_scenarios": ["dense", "sparse:0.05+skew:0.5"],
+ "out_dir": "$tmp/data_out"}
+EOF
+cargo run --release --quiet -- repro --figure data --native \
+  --config "$tmp/data.json"
+grep -q '^data:' "$tmp/data_out/summaries.txt"
+test -f "$tmp/data_out/data_crossover.csv"
+# ε = 0.5 sits far above any fitted prediction floor, so every variant
+# can answer; the scenario-filtered response must name its scenario.
+printf '%s\n' '{"query":"fastest_to","eps":0.5,"data":"sparse:0.05+skew:0.5"}' \
+  | cargo run --release --quiet -- serve --native --config "$tmp/data.json" \
+  > "$tmp/data_query.out"
+cat "$tmp/data_query.out"
+grep -q '"data":"sparse:0.05+skew:0.5"' "$tmp/data_query.out"
+grep -q '"predicted_seconds"' "$tmp/data_query.out"
+if grep -q '"ok":false' "$tmp/data_query.out"; then
+  echo "data-filtered serve smoke returned an error response" >&2
+  exit 1
+fi
+echo "data smoke OK"
+
 # Elastic smoke: the failure scenario end to end — a tiny grid, one
 # preemption at 25% of the running plan's time-to-target, advisor
 # re-planning every 5 iterations. The re-planned run must reach the
@@ -215,10 +251,12 @@ cmp "$tmp/sweep_first.csv" "$tmp/sweep_out/sweep_cocoa+.csv"
 cmp "$tmp/agg_first.csv" "$tmp/sweep_out/sweep_cocoa+_agg.csv"
 echo "resume smoke OK"
 
-# Bench snapshots: regenerate BENCH_workloads.json, BENCH_sweep.json
-# and BENCH_serve.json at the repo root (cache-probe hit/miss latency
-# sharded-v5 vs flat-v4, streamed cells/sec, aggregate throughput, TCP
-# serve qps single- vs multi-client — see benches/bench_main.rs).
+# Bench snapshots: regenerate BENCH_workloads.json, BENCH_sweep.json,
+# BENCH_serve.json and BENCH_data.json at the repo root (cache-probe
+# hit/miss latency sharded-v5 vs flat-v4, streamed cells/sec, aggregate
+# throughput, TCP serve qps single- vs multi-client, dense-vs-CSR
+# kernel cost and skewed-partition overhead — see
+# benches/bench_main.rs).
 # Timings are machine-local; set HEMINGWAY_BENCH=0 to skip on
 # contended runners.
 if [ "${HEMINGWAY_BENCH:-1}" = "1" ]; then
@@ -226,5 +264,6 @@ if [ "${HEMINGWAY_BENCH:-1}" = "1" ]; then
   test -f ../BENCH_workloads.json
   test -f ../BENCH_sweep.json
   test -f ../BENCH_serve.json
+  test -f ../BENCH_data.json
   echo "bench snapshots OK"
 fi

@@ -8,6 +8,8 @@
 //!   sweep       — the sweep engine: thread scaling + cache hits
 //!   sweep_store — sharded v5 store vs flat v4: probe/load/codec, plus
 //!                 streaming + aggregation throughput (BENCH_sweep.json)
+//!   data        — dense vs CSR kernels at the scenario densities and
+//!                 the skewed partitioner's overhead (BENCH_data.json)
 //!   models      — NNLS / Lasso / LassoCV / convergence-fit cost
 //!   advisor     — query latency over a fitted model set
 //!
@@ -164,7 +166,7 @@ fn main() -> hemingway::Result<()> {
             // Buffer-cached path (§Perf optimization A): partition tensors
             // device-resident, only alpha/w/scalars travel per call.
             let ds = hemingway::data::Dataset::new(x.clone(), y.clone(), n_loc, d);
-            let part = ds.partition(1).remove(0);
+            let part = ds.partition(1)?.remove(0);
             b.bench(&format!("kernels/cocoa_local/hlo-cached/n{n_loc}"), || {
                 engine
                     .cocoa_local_part(&part, &alpha, &w, lambda_n, 1.0, seed)
@@ -287,6 +289,145 @@ fn main() -> hemingway::Result<()> {
     }
     println!();
 
+    // ---------------- data: dense vs CSR kernels + partition skew ----------------
+    // The data-axis hot paths: one local SDCA epoch and one
+    // loss/gradient scan, dense store vs CSR at the sweep's scenario
+    // densities, plus the partitioner's skewed-placement overhead.
+    // Means land in BENCH_data.json so the sparse speedup and the
+    // skew cost track over time.
+    {
+        use hemingway::data::synth::{dataset_for, dataset_for_scenario, SynthConfig};
+        use hemingway::data::{Csr, DataScenario};
+        use hemingway::optim::{native, Objective};
+
+        let dcfg = SynthConfig {
+            n: 4096,
+            d: 128,
+            seed: 11,
+            ..Default::default()
+        };
+        let dense = dataset_for(Objective::Hinge, &dcfg);
+        let dpart = dense.partition(1)?.remove(0);
+        let alpha = vec![0.0f32; dpart.n_loc];
+        let w = vec![0.01f32; dpart.d];
+        let weights = vec![1.0f32 / dpart.n_loc as f32; dpart.n_loc];
+        let lambda_n = 0.01 * dpart.n_loc as f64;
+        let kseed = Lcg32::for_epoch(3, 0, 0).state;
+        b.bench("data/sdca_epoch/dense", || {
+            native::sdca_epoch_obj(
+                Objective::Hinge,
+                &dpart.x,
+                &dpart.y,
+                &dpart.mask,
+                &alpha,
+                &w,
+                lambda_n,
+                1.0,
+                kseed,
+                dpart.n_loc,
+            );
+        });
+        b.bench("data/loss_stats/dense", || {
+            native::loss_stats(Objective::Hinge, &dpart.x, &dpart.y, &weights, &w);
+        });
+        // CSR at density 1.0 stores every entry (zeros included): the
+        // pure store-format overhead, same flops as the dense scan.
+        let full = Csr::from_dense_full(&dpart.x, dpart.n_loc, dpart.d);
+        b.bench("data/sdca_epoch/csr/density1", || {
+            native::sdca_epoch_csr(
+                Objective::Hinge,
+                &full,
+                &dpart.y,
+                &dpart.mask,
+                &alpha,
+                &w,
+                lambda_n,
+                1.0,
+                kseed,
+                dpart.n_loc,
+            );
+        });
+        // Real sparse stores: the scenario generator's CSR datasets.
+        for &density in &[0.1f64, 0.01] {
+            let scenario = DataScenario::parse(&format!("sparse:{density}"))?;
+            let sds = dataset_for_scenario(Objective::Hinge, &scenario, &dcfg);
+            let spart = sds.partition(1)?.remove(0);
+            let csr = spart.csr.as_ref().expect("scenario partition is CSR-stored");
+            b.bench(&format!("data/sdca_epoch/csr/density{density}"), || {
+                native::sdca_epoch_csr(
+                    Objective::Hinge,
+                    csr,
+                    &spart.y,
+                    &spart.mask,
+                    &alpha,
+                    &w,
+                    lambda_n,
+                    1.0,
+                    kseed,
+                    spart.n_loc,
+                );
+            });
+            if density == 0.01 {
+                b.bench(&format!("data/loss_stats/csr/density{density}"), || {
+                    native::loss_stats_csr(Objective::Hinge, csr, &spart.y, &weights, &w);
+                });
+            }
+        }
+        // Partitioner cost: the historical IID split vs the skewed
+        // placement (label-sorted keys + ramped sizes) at m=16.
+        let pcfg = SynthConfig {
+            n: 8192,
+            d: 32,
+            seed: 12,
+            ..Default::default()
+        };
+        let pds = dataset_for(Objective::Hinge, &pcfg);
+        let skewed = pds.clone().with_skew(0.6, 7);
+        b.bench("data/partition/m16/iid", || {
+            pds.partition(16).unwrap();
+        });
+        b.bench("data/partition/m16/skew0.6", || {
+            skewed.partition(16).unwrap();
+        });
+
+        // Emit the data-axis perf snapshot (skipped under a filter that
+        // excluded these benches — no stale file overwrites).
+        let mean = |name: &str| {
+            b.results
+                .iter()
+                .find(|(n, ..)| n == name)
+                .map(|(_, m, ..)| *m)
+                .unwrap_or(f64::NAN)
+        };
+        let dense_epoch = mean("data/sdca_epoch/dense");
+        let csr001 = mean("data/sdca_epoch/csr/density0.01");
+        if dense_epoch.is_finite() && csr001.is_finite() {
+            use hemingway::util::json::Json;
+            let doc = Json::object(vec![
+                ("bench", Json::str("data")),
+                ("n", Json::num(dcfg.n as f64)),
+                ("d", Json::num(dcfg.d as f64)),
+                ("sdca_epoch_dense_s", Json::num(dense_epoch)),
+                ("sdca_epoch_csr_density1_s", Json::num(mean("data/sdca_epoch/csr/density1"))),
+                ("sdca_epoch_csr_density0.1_s", Json::num(mean("data/sdca_epoch/csr/density0.1"))),
+                ("sdca_epoch_csr_density0.01_s", Json::num(csr001)),
+                ("csr_speedup_at_density0.01", Json::num(dense_epoch / csr001)),
+                ("loss_stats_dense_s", Json::num(mean("data/loss_stats/dense"))),
+                ("loss_stats_csr_density0.01_s", Json::num(mean("data/loss_stats/csr/density0.01"))),
+                ("partition_iid_m16_s", Json::num(mean("data/partition/m16/iid"))),
+                ("partition_skew0.6_m16_s", Json::num(mean("data/partition/m16/skew0.6"))),
+                (
+                    "partition_skew_overhead",
+                    Json::num(mean("data/partition/m16/skew0.6") / mean("data/partition/m16/iid")),
+                ),
+            ]);
+            let path = bench_out("BENCH_data.json");
+            std::fs::write(&path, doc.to_pretty())?;
+            println!("wrote {}", path.display());
+        }
+    }
+    println!();
+
     // ---------------- sweep engine: thread scaling + cache ----------------
     {
         let small = ExperimentConfig {
@@ -305,6 +446,7 @@ fn main() -> hemingway::Result<()> {
             modes: vec![hemingway::cluster::BarrierMode::Bsp],
             fleets: Vec::new(),
             workloads: Vec::new(),
+            data: Vec::new(),
             events: String::new(),
             seeds: 2,
             base_seed: small.seed,
@@ -443,6 +585,7 @@ fn main() -> hemingway::Result<()> {
             modes: vec![hemingway::cluster::BarrierMode::Bsp],
             fleets: Vec::new(),
             workloads: Vec::new(),
+            data: Vec::new(),
             events: String::new(),
             seeds: 1,
             base_seed: 1,

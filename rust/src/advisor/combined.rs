@@ -55,6 +55,17 @@ pub struct CombinedModel {
     /// by key. Every workload here carries explicit per-variant
     /// entries — nothing is implicit for non-base workloads.
     pub workload_pairs: Vec<((Objective, String, BarrierMode), ModeModel)>,
+    /// Canonical data-scenario string the base pair (and every
+    /// `modes`/`fleet_pairs`/`workload_pairs` entry) was fitted on.
+    /// Empty in pre-data-axis artifacts — the implicit dense IID
+    /// dataset.
+    pub base_data: String,
+    /// (data, workload, fleet, mode) pairs beyond the base scenario,
+    /// sorted by key. A sparse or skewed scenario changes both f (per
+    /// -iteration flops scale with nnz, stragglers with skew) and g
+    /// (conditioning), so every non-base scenario carries explicit
+    /// per-variant pairs — nothing is implicit.
+    pub data_pairs: Vec<((String, Objective, String, BarrierMode), ModeModel)>,
 }
 
 impl CombinedModel {
@@ -69,6 +80,8 @@ impl CombinedModel {
             fleet_pairs: Vec::new(),
             base_workload: Objective::Hinge,
             workload_pairs: Vec::new(),
+            base_data: String::new(),
+            data_pairs: Vec::new(),
         }
     }
 
@@ -182,6 +195,122 @@ impl CombinedModel {
             }
         }
         out
+    }
+
+    /// Attach (or replace) a fitted pair for a (data, workload, fleet,
+    /// mode) variant. The base scenario's pairs route into the
+    /// workload/fleet/mode slots (so pre-data lookups see them); other
+    /// scenarios keep explicit per-variant entries.
+    pub fn insert_data_pair(
+        &mut self,
+        data: &str,
+        workload: Objective,
+        fleet: &str,
+        mode: BarrierMode,
+        model: ModeModel,
+    ) {
+        if data == self.base_data {
+            return self.insert_workload_pair(workload, fleet, mode, model);
+        }
+        let key = (data.to_string(), workload, fleet.to_string(), mode);
+        match self.data_pairs.binary_search_by(|(k, _)| k.cmp(&key)) {
+            Ok(i) => self.data_pairs[i].1 = model,
+            Err(i) => self.data_pairs.insert(i, (key, model)),
+        }
+    }
+
+    /// Every (data, workload, fleet, mode) variant this model can
+    /// answer for: the base scenario's variants first, then the
+    /// non-base data pairs in key order.
+    pub fn fitted_data_variants(&self) -> Vec<(String, Objective, String, BarrierMode)> {
+        let mut out: Vec<(String, Objective, String, BarrierMode)> = self
+            .fitted_workload_variants()
+            .into_iter()
+            .map(|(w, f, m)| (self.base_data.clone(), w, f, m))
+            .collect();
+        out.extend(
+            self.data_pairs
+                .iter()
+                .map(|((d, w, f, m), _)| (d.clone(), *w, f.clone(), *m)),
+        );
+        out
+    }
+
+    /// Every distinct data scenario this model can answer for, base
+    /// first.
+    pub fn fitted_data(&self) -> Vec<String> {
+        let mut out = vec![self.base_data.clone()];
+        for ((d, _, _, _), _) in &self.data_pairs {
+            if !out.contains(d) {
+                out.push(d.clone());
+            }
+        }
+        out
+    }
+
+    /// The (system, convergence) pair serving a (data, workload,
+    /// fleet, mode) variant. The base scenario routes through
+    /// [`Self::pair_w`], so the pre-data query paths share one formula
+    /// bit for bit.
+    pub fn pair_d(
+        &self,
+        data: &str,
+        workload: Objective,
+        fleet: &str,
+        mode: BarrierMode,
+    ) -> Option<(&ErnestModel, &ConvergenceModel)> {
+        if data == self.base_data {
+            return self.pair_w(workload, fleet, mode);
+        }
+        self.data_pairs
+            .iter()
+            .find(|((d, w, f, m), _)| d == data && *w == workload && f == fleet && *m == mode)
+            .map(|(_, mm)| (&mm.ernest, &mm.conv))
+    }
+
+    /// f(m) under a (data, workload, fleet, mode) variant.
+    pub fn iter_time_d(
+        &self,
+        data: &str,
+        workload: Objective,
+        fleet: &str,
+        mode: BarrierMode,
+        machines: usize,
+    ) -> Option<f64> {
+        self.pair_d(data, workload, fleet, mode)
+            .map(|(ernest, _)| ernest.predict(machines, self.input_size))
+    }
+
+    /// h(t, m) under a (data, workload, fleet, mode) variant.
+    #[allow(clippy::too_many_arguments)]
+    pub fn subopt_at_time_d(
+        &self,
+        data: &str,
+        workload: Objective,
+        fleet: &str,
+        mode: BarrierMode,
+        t: f64,
+        machines: usize,
+    ) -> Option<f64> {
+        let (ernest, conv) = self.pair_d(data, workload, fleet, mode)?;
+        Some(Self::subopt_from_pair(ernest, conv, self.input_size, t, machines))
+    }
+
+    /// Time-to-ε under a (data, workload, fleet, mode) variant.
+    #[allow(clippy::too_many_arguments)]
+    pub fn time_to_subopt_d(
+        &self,
+        data: &str,
+        workload: Objective,
+        fleet: &str,
+        mode: BarrierMode,
+        eps: f64,
+        machines: usize,
+        cap: usize,
+    ) -> Option<f64> {
+        let (ernest, conv) = self.pair_d(data, workload, fleet, mode)?;
+        conv.iters_to(eps, machines as f64, cap)
+            .map(|i| i as f64 * ernest.predict(machines, self.input_size))
     }
 
     /// The (system, convergence) pair serving a (workload, fleet,
@@ -419,6 +548,25 @@ impl CombinedModel {
         Self::replan_from_pair(ernest, conv, self.input_size, i0, s0, eps, machines, cap)
     }
 
+    /// [`Self::replan_seconds`] under a (data, workload, fleet, mode)
+    /// variant (None when the variant is not fitted).
+    #[allow(clippy::too_many_arguments)]
+    pub fn replan_seconds_d(
+        &self,
+        data: &str,
+        workload: Objective,
+        fleet: &str,
+        mode: BarrierMode,
+        i0: f64,
+        s0: f64,
+        eps: f64,
+        machines: usize,
+        cap: usize,
+    ) -> Option<f64> {
+        let (ernest, conv) = self.pair_d(data, workload, fleet, mode)?;
+        Self::replan_from_pair(ernest, conv, self.input_size, i0, s0, eps, machines, cap)
+    }
+
     /// The one anchored-replan formula every variant lookup shares.
     #[allow(clippy::too_many_arguments)]
     fn replan_from_pair(
@@ -454,16 +602,20 @@ impl CombinedModel {
     }
 
     /// Serialize for a model artifact (`util::json`). The `modes`,
-    /// `fleet_modes` and `workloads` arrays (and the `base_fleet` /
-    /// `base_workload` fields) are omitted when empty/hinge, keeping
-    /// BSP-only artifacts in the pre-barrier-axis layout, single-fleet
-    /// artifacts in the pre-fleet layout, and hinge-only artifacts in
-    /// the pre-workload layout.
+    /// `fleet_modes`, `workloads` and `data_scenarios` arrays (and the
+    /// `base_fleet` / `base_workload` / `base_data` fields) are
+    /// omitted when empty/hinge, keeping BSP-only artifacts in the
+    /// pre-barrier-axis layout, single-fleet artifacts in the
+    /// pre-fleet layout, hinge-only artifacts in the pre-workload
+    /// layout, and dense-only artifacts in the pre-data layout.
     pub fn to_json(&self) -> crate::Result<Json> {
         let mut fields = Vec::new();
         fields.push(("input_size", Json::num(self.input_size)));
         if !self.base_fleet.is_empty() {
             fields.push(("base_fleet", Json::str(self.base_fleet.clone())));
+        }
+        if !self.base_data.is_empty() {
+            fields.push(("base_data", Json::str(self.base_data.clone())));
         }
         if !self.base_workload.is_hinge() {
             fields.push(("base_workload", Json::str(self.base_workload.as_str())));
@@ -515,14 +667,32 @@ impl CombinedModel {
                 .collect::<crate::Result<Vec<Json>>>()?;
             fields.push(("workloads", Json::Array(entries)));
         }
+        if !self.data_pairs.is_empty() {
+            let entries = self
+                .data_pairs
+                .iter()
+                .map(|((data, workload, fleet, mode), mm)| {
+                    Ok(Json::object(vec![
+                        ("data", Json::str(data.clone())),
+                        ("workload", Json::str(workload.as_str())),
+                        ("fleet", Json::str(fleet.clone())),
+                        ("barrier_mode", Json::str(mode.as_str())),
+                        ("ernest", mm.ernest.to_json()?),
+                        ("convergence", mm.conv.to_json()?),
+                    ]))
+                })
+                .collect::<crate::Result<Vec<Json>>>()?;
+            fields.push(("data_scenarios", Json::Array(entries)));
+        }
         Ok(Json::object(fields))
     }
 
     /// Rebuild from the artifact form. A `modes`/`fleet_modes`/
-    /// `workloads` entry naming an unknown barrier mode, an
-    /// unparseable fleet or an unknown workload is an error — the
-    /// registry must skip such an artifact rather than serve a subset
-    /// of what it promises.
+    /// `workloads`/`data_scenarios` entry naming an unknown barrier
+    /// mode, an unparseable fleet, an unknown workload or an
+    /// unparseable data scenario is an error — the registry must skip
+    /// such an artifact rather than serve a subset of what it
+    /// promises.
     pub fn from_json(doc: &Json) -> crate::Result<CombinedModel> {
         let ernest = doc
             .get("ernest")
@@ -546,6 +716,16 @@ impl CombinedModel {
                 crate::err!("base_workload must be a workload name string")
             })?)?,
         };
+        let base_data = match doc.get("base_data") {
+            None => String::new(),
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| crate::err!("base_data must be a data scenario string"))?;
+                crate::data::DataScenario::parse(s)?;
+                s.to_string()
+            }
+        };
         let mut model = CombinedModel {
             ernest: ErnestModel::from_json(ernest)?,
             conv: ConvergenceModel::from_json(conv)?,
@@ -555,6 +735,8 @@ impl CombinedModel {
             fleet_pairs: Vec::new(),
             base_workload,
             workload_pairs: Vec::new(),
+            base_data,
+            data_pairs: Vec::new(),
         };
         let pair_of = |entry: &Json| -> crate::Result<ModeModel> {
             let ernest = entry
@@ -605,6 +787,25 @@ impl CombinedModel {
                 }
                 let mode = crate::cluster::BarrierMode::parse(entry.req_str("barrier_mode")?)?;
                 model.insert_workload_pair(workload, fleet, mode, pair_of(entry)?);
+            }
+        }
+        if let Some(entries) = doc.get("data_scenarios").and_then(Json::as_array) {
+            for entry in entries {
+                let data = entry.req_str("data")?;
+                crate::data::DataScenario::parse(data)?;
+                crate::ensure!(
+                    data != model.base_data,
+                    "model artifact lists the base data scenario '{data}' under \
+                     'data_scenarios'; base-scenario pairs belong in the base slot / \
+                     'modes' / 'fleet_modes' / 'workloads'"
+                );
+                let workload = Objective::parse(entry.req_str("workload")?)?;
+                let fleet = entry.req_str("fleet")?;
+                if !fleet.is_empty() {
+                    crate::cluster::FleetSpec::parse(fleet)?;
+                }
+                let mode = crate::cluster::BarrierMode::parse(entry.req_str("barrier_mode")?)?;
+                model.insert_data_pair(data, workload, fleet, mode, pair_of(entry)?);
             }
         }
         Ok(model)
@@ -741,6 +942,19 @@ mod tests {
         assert_eq!(w.to_bits(), a.to_bits());
         assert_eq!(
             c.replan_seconds_w(Objective::Ridge, "", BarrierMode::Bsp, 30.0, 0.5, 0.125, 4, 100),
+            None
+        );
+        // The base data scenario routes through the same formula too.
+        let d = c
+            .replan_seconds_d(
+                "", Objective::Hinge, "", BarrierMode::Bsp, 30.0, 0.5, 0.125, 4, 100_000,
+            )
+            .unwrap();
+        assert_eq!(d.to_bits(), a.to_bits());
+        assert_eq!(
+            c.replan_seconds_d(
+                "sparse:0.5", Objective::Hinge, "", BarrierMode::Bsp, 30.0, 0.5, 0.125, 4, 100,
+            ),
             None
         );
     }
@@ -1069,6 +1283,148 @@ mod tests {
         .unwrap();
         assert_eq!(back.base_workload, Objective::Hinge);
         assert!(back.workload_pairs.is_empty());
+    }
+
+    /// Base (hinge, dense) pairs plus a sparse-scenario BSP pair: the
+    /// sparse scenario's iterations are 4× cheaper (fewer flops per
+    /// row) at half the decay rate (worse conditioning).
+    fn combined_with_data() -> CombinedModel {
+        let mut c = combined_with_workload();
+        let (ernest, conv) = fit_pair(0.4, 0.25);
+        c.insert_data_pair(
+            "sparse:0.01",
+            crate::optim::Objective::Hinge,
+            "",
+            BarrierMode::Bsp,
+            ModeModel { ernest, conv },
+        );
+        c
+    }
+
+    #[test]
+    fn data_pairs_route_predictions() {
+        use crate::optim::Objective;
+        let c = combined_with_data();
+        assert_eq!(c.base_data, "");
+        assert_eq!(c.fitted_data(), vec!["".to_string(), "sparse:0.01".into()]);
+        assert_eq!(
+            c.fitted_data_variants().last().unwrap(),
+            &(
+                "sparse:0.01".to_string(),
+                Objective::Hinge,
+                String::new(),
+                BarrierMode::Bsp
+            )
+        );
+        // Base-scenario routing equals the workload methods bit for
+        // bit.
+        for &m in &[1usize, 4, 32] {
+            for (w, fleet, mode) in c.fitted_workload_variants() {
+                assert_eq!(
+                    c.iter_time_d("", w, &fleet, mode, m).unwrap().to_bits(),
+                    c.iter_time_w(w, &fleet, mode, m).unwrap().to_bits()
+                );
+                assert_eq!(
+                    c.subopt_at_time_d("", w, &fleet, mode, 7.5, m)
+                        .unwrap()
+                        .to_bits(),
+                    c.subopt_at_time_w(w, &fleet, mode, 7.5, m).unwrap().to_bits()
+                );
+                assert_eq!(
+                    c.time_to_subopt_d("", w, &fleet, mode, 1e-3, m, 100_000),
+                    c.time_to_subopt_w(w, &fleet, mode, 1e-3, m, 100_000)
+                );
+            }
+        }
+        // The sparse pair's iterations are cheaper but decay slower.
+        let f_dense = c
+            .iter_time_d("", Objective::Hinge, "", BarrierMode::Bsp, 4)
+            .unwrap();
+        let f_sparse = c
+            .iter_time_d("sparse:0.01", Objective::Hinge, "", BarrierMode::Bsp, 4)
+            .unwrap();
+        assert!(f_sparse < f_dense * 0.5, "f_sparse={f_sparse} f_dense={f_dense}");
+        // Unfitted (data, …) variants answer nothing.
+        assert_eq!(
+            c.iter_time_d("sparse:0.01", Objective::Ridge, "", BarrierMode::Bsp, 4),
+            None
+        );
+        assert_eq!(
+            c.iter_time_d("skew:0.5", Objective::Hinge, "", BarrierMode::Bsp, 4),
+            None
+        );
+        // Inserting at the base scenario routes into the inner slots.
+        let mut c2 = c.clone();
+        let (ernest, conv) = fit_pair(0.9, 3.0);
+        let expected = ernest.predict(4, c2.input_size);
+        c2.insert_data_pair("", Objective::Hinge, "", BarrierMode::Bsp, ModeModel {
+            ernest,
+            conv,
+        });
+        assert_eq!(c2.iter_time(4).to_bits(), expected.to_bits());
+        assert_eq!(c2.data_pairs.len(), c.data_pairs.len());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_data_pairs() {
+        use crate::optim::Objective;
+        let c = combined_with_data();
+        let text = c.to_json().unwrap().to_pretty();
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        let back = CombinedModel::from_json(&doc).unwrap();
+        assert_eq!(back.base_data, "");
+        assert_eq!(back.fitted_data_variants(), c.fitted_data_variants());
+        for (d, w, fleet, mode) in c.fitted_data_variants() {
+            for &m in &[1usize, 4, 32] {
+                assert_eq!(
+                    back.iter_time_d(&d, w, &fleet, mode, m).unwrap().to_bits(),
+                    c.iter_time_d(&d, w, &fleet, mode, m).unwrap().to_bits()
+                );
+                assert_eq!(
+                    back.subopt_at_time_d(&d, w, &fleet, mode, 12.5, m)
+                        .unwrap()
+                        .to_bits(),
+                    c.subopt_at_time_d(&d, w, &fleet, mode, 12.5, m)
+                        .unwrap()
+                        .to_bits()
+                );
+            }
+        }
+        // A dense-only artifact stays in the pre-data layout: no
+        // base_data / data_scenarios fields on the wire.
+        let legacy = combined_with_workload();
+        let text = legacy.to_json().unwrap().to_pretty();
+        assert!(!text.contains("base_data"));
+        assert!(!text.contains("data_scenarios"));
+        let back = CombinedModel::from_json(
+            &crate::util::json::Json::parse(&text).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.base_data, "");
+        assert!(back.data_pairs.is_empty());
+    }
+
+    #[test]
+    fn artifact_with_unknown_data_scenario_is_rejected() {
+        let c = combined_with_data();
+        let text = c
+            .to_json()
+            .unwrap()
+            .to_pretty()
+            .replace("\"sparse:0.01\"", "\"sparse:2.0\"");
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        assert!(CombinedModel::from_json(&doc).is_err());
+        // Listing the base scenario under `data_scenarios` is rejected
+        // too (base_data defaults to the implicit dense "" — forge an
+        // explicit base_data to collide).
+        let text = c
+            .to_json()
+            .unwrap()
+            .to_pretty()
+            .replace("\"input_size\"", "\"base_data\": \"sparse:0.01\",\n  \"input_size\"");
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        let err = CombinedModel::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("base data scenario"), "{err}");
     }
 
     #[test]

@@ -17,8 +17,8 @@ pub use adaptive::{
 };
 pub use combined::{CombinedModel, ModeModel};
 pub use query::{
-    Constraints, FleetFilter, ModeFilter, Predicted, PredictionRow, Query, Recommendation,
-    ReplanQuery, WorkloadFilter,
+    Constraints, DataFilter, FleetFilter, ModeFilter, Predicted, PredictionRow, Query,
+    Recommendation, ReplanQuery, WorkloadFilter,
 };
 pub use registry::{
     artifact_path, load_artifact, save_artifact, LoadReport, ModelKey, ModelRegistry,

@@ -11,6 +11,7 @@
 //! queries flow through the `serve` loop, the CLI and the library API.
 
 use crate::cluster::{BarrierMode, FleetSpec};
+use crate::data::DataScenario;
 use crate::optim::{AlgorithmId, Objective};
 use crate::util::json::Json;
 
@@ -161,6 +162,60 @@ impl WorkloadFilter {
     }
 }
 
+/// Which data scenarios a query's search may range over. The wire
+/// default is `Base` — only the scenario each serving model's base
+/// pairs were fitted on (the implicit dense dataset for every
+/// pre-data-axis artifact), which is exactly the pre-data search
+/// space.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DataFilter {
+    /// Search only each model's base data scenario.
+    Base,
+    /// Search a single named scenario (canonical [`DataScenario`]
+    /// string).
+    Only(String),
+    /// Search every scenario the serving models were fitted for.
+    Any,
+}
+
+impl Default for DataFilter {
+    fn default() -> Self {
+        DataFilter::Base
+    }
+}
+
+impl DataFilter {
+    /// Whether a model variant fitted on `data` is admitted, given the
+    /// model's own base scenario.
+    pub fn admits(&self, data: &str, base_data: &str) -> bool {
+        match self {
+            DataFilter::Base => data == base_data,
+            DataFilter::Only(name) => data == name,
+            DataFilter::Any => true,
+        }
+    }
+
+    /// Wire form: a canonical scenario string, `base`, or `any`.
+    pub fn as_str(&self) -> String {
+        match self {
+            DataFilter::Base => "base".to_string(),
+            DataFilter::Only(name) => name.clone(),
+            DataFilter::Any => "any".to_string(),
+        }
+    }
+
+    /// Parse the wire form. A named scenario is validated against the
+    /// scenario grammar and canonicalized, so a typo fails loudly and
+    /// two spellings of one scenario never diverge.
+    pub fn parse(s: &str) -> crate::Result<DataFilter> {
+        match s.trim() {
+            "any" => Ok(DataFilter::Any),
+            "base" => Ok(DataFilter::Base),
+            other => Ok(DataFilter::Only(DataScenario::parse(other)?.to_string())),
+        }
+    }
+}
+
 /// Optional constraints a query carries.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct Constraints {
@@ -182,6 +237,9 @@ pub struct Constraints {
     /// Workloads the search may recommend (default: each model's base
     /// workload only).
     pub workload: WorkloadFilter,
+    /// Data scenarios the search may recommend (default: each model's
+    /// base scenario only).
+    pub data: DataFilter,
 }
 
 impl Constraints {
@@ -240,12 +298,19 @@ impl Constraints {
                 crate::err!("workload must be a string (a workload name, 'base' or 'any')")
             })?)?,
         };
+        let data = match doc.get("data") {
+            None => DataFilter::default(),
+            Some(v) => DataFilter::parse(v.as_str().ok_or_else(|| {
+                crate::err!("data must be a string (a data scenario, 'base' or 'any')")
+            })?)?,
+        };
         let constraints = Constraints {
             max_machines,
             machine_cost_weight,
             barrier_mode,
             fleet,
             workload,
+            data,
         };
         constraints.validate()?;
         Ok(constraints)
@@ -280,6 +345,9 @@ impl Constraints {
         }
         if self.workload != WorkloadFilter::default() {
             fields.push(("workload".into(), Json::str(self.workload.as_str())));
+        }
+        if self.data != DataFilter::default() {
+            fields.push(("data".into(), Json::str(self.data.as_str())));
         }
     }
 }
@@ -576,6 +644,10 @@ pub struct Recommendation {
     /// The workload the winning configuration trains (hinge = the
     /// pre-workload-axis wire shape).
     pub workload: Objective,
+    /// Canonical data-scenario string the winning configuration
+    /// trains on ("" = the implicit dense dataset — the pre-data wire
+    /// shape, omitted on the wire).
+    pub data: String,
     /// The raw model prediction for the winning configuration.
     pub predicted: Predicted,
     /// The objective the search actually ranked: equals the raw
@@ -588,9 +660,10 @@ impl Recommendation {
     /// Wire form: the prediction's unit is the field name
     /// (`predicted_seconds` / `predicted_suboptimality` /
     /// `predicted_dollars`). The fleet field is omitted when the
-    /// winner is an unnamed base fleet, and the workload field when
-    /// the winner is the hinge workload, keeping pre-fleet and
-    /// pre-workload responses byte-stable.
+    /// winner is an unnamed base fleet, the workload field when the
+    /// winner is the hinge workload, and the data field when the
+    /// winner is the implicit dense scenario, keeping pre-fleet,
+    /// pre-workload and pre-data responses byte-stable.
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
             ("algorithm", Json::str(self.algorithm.as_str())),
@@ -602,6 +675,9 @@ impl Recommendation {
         }
         if !self.workload.is_hinge() {
             fields.push(("workload", Json::str(self.workload.as_str())));
+        }
+        if !self.data.is_empty() {
+            fields.push(("data", Json::str(self.data.clone())));
         }
         fields.push((self.predicted.field_name(), Json::num(self.predicted.value())));
         Json::object(fields)
@@ -620,6 +696,9 @@ pub struct PredictionRow {
     /// The workload the row predicts for (hinge = the
     /// pre-workload-axis wire shape, omitted on the wire).
     pub workload: Objective,
+    /// Canonical data-scenario string the row predicts for ("" = the
+    /// implicit dense dataset, omitted on the wire).
+    pub data: String,
     /// Predicted seconds to the ε goal (None if unreachable).
     pub time_to_eps: Option<f64>,
     /// Predicted suboptimality at the time budget.
@@ -638,6 +717,9 @@ impl PredictionRow {
         }
         if !self.workload.is_hinge() {
             fields.push(("workload", Json::str(self.workload.as_str())));
+        }
+        if !self.data.is_empty() {
+            fields.push(("data", Json::str(self.data.clone())));
         }
         fields.push((
             "time_to_eps",
@@ -686,7 +768,16 @@ mod tests {
             barrier_mode: ModeFilter::Any,
             ..Constraints::none()
         });
-        for q in [q1, q2, q3, q4, q5, q6, q7, q8] {
+        let q9 = Query::fastest_to(1e-3).with(Constraints {
+            data: DataFilter::Only("sparse:0.01+skew:0.8".into()),
+            ..Constraints::none()
+        });
+        let q10 = Query::cheapest_to(1e-4).with(Constraints {
+            data: DataFilter::Any,
+            workload: WorkloadFilter::Any,
+            ..Constraints::none()
+        });
+        for q in [q1, q2, q3, q4, q5, q6, q7, q8, q9, q10] {
             let doc = Json::parse(&q.to_json().to_string()).unwrap();
             assert_eq!(Query::from_json(&doc).unwrap(), q);
         }
@@ -704,12 +795,14 @@ mod tests {
         );
         assert_eq!(q.constraints().fleet, FleetFilter::Base);
         assert_eq!(q.constraints().workload, WorkloadFilter::Base);
+        assert_eq!(q.constraints().data, DataFilter::Base);
         // And the default filters serialize to nothing (byte-stable
         // wire form for legacy queries).
         let wire = q.to_json().to_string();
         assert!(!wire.contains("barrier_mode"));
         assert!(!wire.contains("fleet"));
         assert!(!wire.contains("workload"));
+        assert!(!wire.contains("data"));
     }
 
     #[test]
@@ -728,6 +821,8 @@ mod tests {
             r#"{"query": "fastest_to", "eps": 1e-4, "fleet": "local48*2"}"#,
             r#"{"query": "fastest_to", "eps": 1e-4, "workload": "quantum"}"#,
             r#"{"query": "fastest_to", "eps": 1e-4, "workload": 3}"#,
+            r#"{"query": "fastest_to", "eps": 1e-4, "data": "sparse:2.0"}"#,
+            r#"{"query": "fastest_to", "eps": 1e-4, "data": 3}"#,
             r#"{"query": "best_at", "budget": 0}"#,
             r#"{"query": "cheapest_to"}"#,
             r#"{"query": "cheapest_to", "eps": 0}"#,
@@ -858,6 +953,7 @@ mod tests {
             barrier_mode: BarrierMode::Ssp { staleness: 2 },
             fleet: String::new(),
             workload: Objective::Hinge,
+            data: String::new(),
             predicted: Predicted::Seconds(12.5),
             objective: 12.5,
         };
@@ -867,9 +963,11 @@ mod tests {
         assert_eq!(doc.req_str("algorithm").unwrap(), "cocoa+");
         assert_eq!(doc.req_str("barrier_mode").unwrap(), "ssp:2");
         // Unnamed base fleet: no fleet field (pre-fleet wire shape),
-        // and the hinge workload stays off the wire too.
+        // and the hinge workload / dense scenario stay off the wire
+        // too.
         assert!(doc.get("fleet").is_none());
         assert!(doc.get("workload").is_none());
+        assert!(doc.get("data").is_none());
         // A named fleet (and a dollar prediction) appear explicitly.
         let rec = Recommendation {
             fleet: "mixed:r3_xlarge+local48".into(),
@@ -886,6 +984,31 @@ mod tests {
             ..rec
         };
         assert_eq!(rec.to_json().req_str("workload").unwrap(), "ridge");
+        // A non-dense data scenario appears explicitly.
+        let rec = Recommendation {
+            data: "sparse:0.01".into(),
+            ..rec
+        };
+        assert_eq!(rec.to_json().req_str("data").unwrap(), "sparse:0.01");
+    }
+
+    #[test]
+    fn data_filter_admission() {
+        let base = DataFilter::Base;
+        assert!(base.admits("", ""));
+        assert!(base.admits("sparse:0.01", "sparse:0.01"));
+        assert!(!base.admits("sparse:0.01", ""));
+        // Parsing canonicalizes the scenario spelling.
+        let only = DataFilter::parse("skew:0.80+sparse:0.01").unwrap();
+        assert_eq!(only, DataFilter::Only("sparse:0.01+skew:0.8".into()));
+        assert!(only.admits("sparse:0.01+skew:0.8", ""));
+        assert!(!only.admits("", ""));
+        assert!(DataFilter::Any.admits("anything-fitted", ""));
+        assert_eq!(DataFilter::parse("any").unwrap(), DataFilter::Any);
+        assert_eq!(DataFilter::parse("base").unwrap(), DataFilter::Base);
+        // Malformed scenarios fail at parse time, not by matching
+        // nothing forever.
+        assert!(DataFilter::parse("sparse:0").is_err());
     }
 
     #[test]

@@ -113,19 +113,21 @@ impl ModelRegistry {
     }
 
     /// Answer a typed query over every model × machine-grid point ×
-    /// admitted (workload, barrier mode, fleet) variant. A model only
-    /// competes in the variants it was fitted for; the default
-    /// `Base`/`Only(Bsp)`/`Base` filters reproduce the
-    /// pre-workload-axis, pre-barrier-axis, pre-fleet search exactly.
+    /// admitted (data, workload, barrier mode, fleet) variant. A model
+    /// only competes in the variants it was fitted for; the default
+    /// `Base`/`Base`/`Only(Bsp)`/`Base` filters reproduce the
+    /// pre-data-axis, pre-workload-axis, pre-barrier-axis, pre-fleet
+    /// search exactly.
     pub fn answer(&self, query: &Query) -> Option<Recommendation> {
         match query {
             Query::FastestTo { eps, constraints } => {
                 let mut best: Option<Recommendation> = None;
                 for (key, model) in &self.models {
-                    for (workload, fleet, mode) in model.fitted_workload_variants() {
+                    for (data, workload, fleet, mode) in model.fitted_data_variants() {
                         if !constraints.barrier_mode.admits(mode)
                             || !constraints.fleet.admits(&fleet, &model.base_fleet)
                             || !constraints.workload.admits(workload, model.base_workload)
+                            || !constraints.data.admits(&data, &model.base_data)
                         {
                             continue;
                         }
@@ -133,9 +135,15 @@ impl ModelRegistry {
                             if !constraints.admits(m) {
                                 continue;
                             }
-                            if let Some(t) = model
-                                .time_to_subopt_w(workload, &fleet, mode, *eps, m, self.iter_cap)
-                            {
+                            if let Some(t) = model.time_to_subopt_d(
+                                &data,
+                                workload,
+                                &fleet,
+                                mode,
+                                *eps,
+                                m,
+                                self.iter_cap,
+                            ) {
                                 let objective = constraints.weighted_seconds(t, m);
                                 if best
                                     .as_ref()
@@ -148,6 +156,7 @@ impl ModelRegistry {
                                         barrier_mode: mode,
                                         fleet: fleet.clone(),
                                         workload,
+                                        data: data.clone(),
                                         predicted: Predicted::Seconds(t),
                                         objective,
                                     });
@@ -161,10 +170,11 @@ impl ModelRegistry {
             Query::BestAt { budget, constraints } => {
                 let mut best: Option<Recommendation> = None;
                 for (key, model) in &self.models {
-                    for (workload, fleet, mode) in model.fitted_workload_variants() {
+                    for (data, workload, fleet, mode) in model.fitted_data_variants() {
                         if !constraints.barrier_mode.admits(mode)
                             || !constraints.fleet.admits(&fleet, &model.base_fleet)
                             || !constraints.workload.admits(workload, model.base_workload)
+                            || !constraints.data.admits(&data, &model.base_data)
                         {
                             continue;
                         }
@@ -172,7 +182,8 @@ impl ModelRegistry {
                             if !constraints.admits(m) {
                                 continue;
                             }
-                            let s = match model.subopt_at_time_w(
+                            let s = match model.subopt_at_time_d(
+                                &data,
                                 workload,
                                 &fleet,
                                 mode,
@@ -191,6 +202,7 @@ impl ModelRegistry {
                                     barrier_mode: mode,
                                     fleet: fleet.clone(),
                                     workload,
+                                    data: data.clone(),
                                     predicted: Predicted::Suboptimality(s),
                                     objective: s,
                                 });
@@ -203,10 +215,11 @@ impl ModelRegistry {
             Query::CheapestTo { eps, constraints } => {
                 let mut best: Option<Recommendation> = None;
                 for (key, model) in &self.models {
-                    for (workload, fleet, mode) in model.fitted_workload_variants() {
+                    for (data, workload, fleet, mode) in model.fitted_data_variants() {
                         if !constraints.barrier_mode.admits(mode)
                             || !constraints.fleet.admits(&fleet, &model.base_fleet)
                             || !constraints.workload.admits(workload, model.base_workload)
+                            || !constraints.data.admits(&data, &model.base_data)
                         {
                             continue;
                         }
@@ -219,9 +232,15 @@ impl ModelRegistry {
                             if !constraints.admits(m) {
                                 continue;
                             }
-                            if let Some(t) = model
-                                .time_to_subopt_w(workload, &fleet, mode, *eps, m, self.iter_cap)
-                            {
+                            if let Some(t) = model.time_to_subopt_d(
+                                &data,
+                                workload,
+                                &fleet,
+                                mode,
+                                *eps,
+                                m,
+                                self.iter_cap,
+                            ) {
                                 let dollars = spec.dollars(t, m);
                                 if best
                                     .as_ref()
@@ -241,6 +260,7 @@ impl ModelRegistry {
                                             fleet.clone()
                                         },
                                         workload,
+                                        data: data.clone(),
                                         predicted: Predicted::Dollars(dollars),
                                         objective: dollars,
                                     });
@@ -256,9 +276,9 @@ impl ModelRegistry {
 
     /// Answer the elastic driver's mid-run query: fastest predicted
     /// finish to ε *from the observed (iter, subopt) anchor*, over
-    /// every admitted model × (workload, fleet, mode) variant ×
+    /// every admitted model × (data, workload, fleet, mode) variant ×
     /// machine-grid point — the same search shape as `fastest_to`,
-    /// but scored by [`CombinedModel::replan_seconds_w`] so each
+    /// but scored by [`CombinedModel::replan_seconds_d`] so each
     /// model's absolute offset cancels and "stay" vs "move" compare
     /// on one scale. The query's optional algorithm pin keeps a
     /// checkpointed run from being advised into an algorithm its
@@ -269,10 +289,11 @@ impl ModelRegistry {
             if query.algorithm.map(|a| a != key.algorithm).unwrap_or(false) {
                 continue;
             }
-            for (workload, fleet, mode) in model.fitted_workload_variants() {
+            for (data, workload, fleet, mode) in model.fitted_data_variants() {
                 if !query.constraints.barrier_mode.admits(mode)
                     || !query.constraints.fleet.admits(&fleet, &model.base_fleet)
                     || !query.constraints.workload.admits(workload, model.base_workload)
+                    || !query.constraints.data.admits(&data, &model.base_data)
                 {
                     continue;
                 }
@@ -280,7 +301,8 @@ impl ModelRegistry {
                     if !query.constraints.admits(m) {
                         continue;
                     }
-                    if let Some(t) = model.replan_seconds_w(
+                    if let Some(t) = model.replan_seconds_d(
+                        &data,
                         workload,
                         &fleet,
                         mode,
@@ -302,6 +324,7 @@ impl ModelRegistry {
                                 barrier_mode: mode,
                                 fleet: fleet.clone(),
                                 workload,
+                                data: data.clone(),
                                 predicted: Predicted::Seconds(t),
                                 objective,
                             });
@@ -314,16 +337,17 @@ impl ModelRegistry {
     }
 
     /// Full prediction table (one typed row per algorithm × admitted
-    /// m × admitted fitted (workload, mode, fleet) variant).
+    /// m × admitted fitted (data, workload, mode, fleet) variant).
     /// Inadmissible machine counts are skipped before the (expensive)
     /// g-inversion, not filtered afterwards.
     pub fn table(&self, eps: f64, budget: f64, constraints: &Constraints) -> Vec<PredictionRow> {
         let mut rows = Vec::new();
         for (key, model) in &self.models {
-            for (workload, fleet, mode) in model.fitted_workload_variants() {
+            for (data, workload, fleet, mode) in model.fitted_data_variants() {
                 if !constraints.barrier_mode.admits(mode)
                     || !constraints.fleet.admits(&fleet, &model.base_fleet)
                     || !constraints.workload.admits(workload, model.base_workload)
+                    || !constraints.data.admits(&data, &model.base_data)
                 {
                     continue;
                 }
@@ -337,10 +361,12 @@ impl ModelRegistry {
                         barrier_mode: mode,
                         fleet: fleet.clone(),
                         workload,
-                        time_to_eps: model
-                            .time_to_subopt_w(workload, &fleet, mode, eps, m, self.iter_cap),
+                        data: data.clone(),
+                        time_to_eps: model.time_to_subopt_d(
+                            &data, workload, &fleet, mode, eps, m, self.iter_cap,
+                        ),
                         subopt_at_budget: model
-                            .subopt_at_time_w(workload, &fleet, mode, budget, m)
+                            .subopt_at_time_d(&data, workload, &fleet, mode, budget, m)
                             .unwrap_or(f64::NAN),
                     });
                 }
@@ -886,6 +912,113 @@ mod tests {
         );
         assert_eq!(all.len(), 3 * 5);
         assert!(all.iter().any(|row| row.workload == Objective::Ridge));
+    }
+
+    /// Registry whose cocoa model also carries a sparse-scenario BSP
+    /// pair with 3× faster decay — the sparse scenario strictly
+    /// dominates when admitted.
+    fn registry_with_data() -> ModelRegistry {
+        use crate::advisor::combined::ModeModel;
+        use crate::optim::Objective;
+        let mut r = registry();
+        let mut cocoa = r.get(AlgorithmId::Cocoa, "ctx").unwrap().clone();
+        let fast = model(3.6);
+        cocoa.insert_data_pair(
+            "sparse:0.01",
+            Objective::Hinge,
+            "",
+            crate::cluster::BarrierMode::Bsp,
+            ModeModel { ernest: fast.ernest.clone(), conv: fast.conv.clone() },
+        );
+        r.insert(
+            ModelKey { algorithm: AlgorithmId::Cocoa, context: "ctx".into() },
+            cocoa,
+        );
+        r
+    }
+
+    #[test]
+    fn data_search_defaults_to_base_and_expands_on_request() {
+        use crate::advisor::query::{DataFilter, ReplanQuery};
+        let r = registry_with_data();
+        // Default: base-scenario-only search, as before the axis.
+        let base = r.answer(&Query::fastest_to(1e-3)).unwrap();
+        assert_eq!(base.data, "");
+        // Any-scenario search includes every base candidate: it can
+        // only tie or win — and the sparse pair decays strictly
+        // faster, so the winner must actually be the sparse scenario.
+        let any = r
+            .answer(&Query::fastest_to(1e-3).with(Constraints {
+                data: DataFilter::Any,
+                ..Constraints::none()
+            }))
+            .unwrap();
+        assert!(any.objective <= base.objective);
+        assert_eq!(any.data, "sparse:0.01");
+        assert_eq!(any.algorithm, AlgorithmId::Cocoa);
+        // Pinning a scenario answers from its own pair.
+        let pinned = r
+            .answer(&Query::fastest_to(1e-3).with(Constraints {
+                data: DataFilter::Only("sparse:0.01".into()),
+                ..Constraints::none()
+            }))
+            .unwrap();
+        assert_eq!(pinned.data, "sparse:0.01");
+        assert_eq!(pinned.algorithm, AlgorithmId::Cocoa);
+        // A scenario nobody fitted answers nothing.
+        assert!(r
+            .answer(&Query::fastest_to(1e-3).with(Constraints {
+                data: DataFilter::Only("skew:0.5".into()),
+                ..Constraints::none()
+            }))
+            .is_none());
+        // Replan searches the data axis under the same admission.
+        let rp = r
+            .replan(&ReplanQuery {
+                constraints: Constraints {
+                    data: DataFilter::Any,
+                    ..Constraints::none()
+                },
+                ..ReplanQuery::new(1e-3, 20.0, 0.05)
+            })
+            .unwrap();
+        assert_eq!(rp.data, "sparse:0.01");
+        // The table gains sparse rows only when admitted.
+        let rows = r.table(1e-3, 5.0, &Constraints::none());
+        assert_eq!(rows.len(), 2 * 5);
+        assert!(rows.iter().all(|row| row.data.is_empty()));
+        let all = r.table(
+            1e-3,
+            5.0,
+            &Constraints {
+                data: DataFilter::Any,
+                ..Constraints::none()
+            },
+        );
+        assert_eq!(all.len(), 3 * 5);
+        assert!(all.iter().any(|row| row.data == "sparse:0.01"));
+    }
+
+    #[test]
+    fn artifact_with_unknown_data_scenario_is_skipped_not_served() {
+        let dir = std::env::temp_dir().join("hemingway_registry_baddata");
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = registry_with_data();
+        r.save(&dir, "detail").unwrap();
+        // A future (or corrupted) artifact naming a data scenario this
+        // build does not know must be skipped with a clear report —
+        // never silently served without (or with the wrong) scenario.
+        let path = artifact_path(&dir, AlgorithmId::Cocoa);
+        let text = std::fs::read_to_string(&path)
+            .unwrap()
+            .replace("\"sparse:0.01\"", "\"sparse:2.0\"");
+        std::fs::write(&path, text).unwrap();
+        let (back, report) =
+            ModelRegistry::load_dir(&dir, Some("ctx"), vec![1, 2, 4], 1000).unwrap();
+        assert_eq!(back.len(), 1, "only cocoa_plus should survive");
+        assert!(back.get(AlgorithmId::Cocoa, "ctx").is_none());
+        assert_eq!(report.invalid.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -227,6 +227,16 @@ pub fn handle_doc(registry: &ModelRegistry, doc: &Json) -> Json {
                                     .map(|w| Json::str(w.as_str())),
                             ),
                         ),
+                        (
+                            "data_scenarios",
+                            Json::array(
+                                model
+                                    .fitted_data()
+                                    .into_iter()
+                                    .filter(|d| !d.is_empty())
+                                    .map(Json::str),
+                            ),
+                        ),
                     ])
                 })
                 .collect();
@@ -526,6 +536,85 @@ mod tests {
         let resp = handle_line(&registry, r#"{"query":"models"}"#);
         let text = resp.to_string();
         assert!(text.contains(r#""workloads":["hinge","ridge"]"#), "{text}");
+    }
+
+    /// The golden registry plus a sparse-scenario pair on the same
+    /// model: identical g, but f(m) = 0.25 (2× faster iterations on
+    /// the mostly-zero rows) — exact arithmetic, so data-filtered
+    /// responses are golden strings.
+    fn golden_registry_with_sparse() -> ModelRegistry {
+        use crate::advisor::combined::ModeModel;
+        use crate::cluster::BarrierMode;
+        use crate::optim::Objective;
+        let mut registry = golden_registry();
+        let mut model = registry
+            .get(AlgorithmId::CocoaPlus, "golden")
+            .unwrap()
+            .clone();
+        model.insert_data_pair(
+            "sparse:0.01",
+            Objective::Hinge,
+            "",
+            BarrierMode::Bsp,
+            ModeModel {
+                ernest: ErnestModel {
+                    theta: [0.25, 0.0, 0.0, 0.0],
+                    train_rmse: 0.0,
+                },
+                conv: model.conv.clone(),
+            },
+        );
+        registry.insert(
+            ModelKey {
+                algorithm: AlgorithmId::CocoaPlus,
+                context: "golden".into(),
+            },
+            model,
+        );
+        registry
+    }
+
+    #[test]
+    fn golden_data_query_responses() {
+        let registry = golden_registry_with_sparse();
+        // A legacy query (no data field) must keep the pure-dense
+        // golden answer even though a sparse pair exists — byte-stable.
+        let resp = handle_line(&registry, r#"{"query":"fastest_to","eps":0.02}"#);
+        assert_eq!(
+            resp.to_string(),
+            r#"{"ok":true,"query":"fastest_to","algorithm":"cocoa+","machines":1,"barrier_mode":"bsp","predicted_seconds":2}"#
+        );
+        // data "any": the sparse pair halves iteration time — 4
+        // iterations at m=1 now cost exactly 1 second, and the
+        // response names the winning scenario.
+        let resp = handle_line(&registry, r#"{"query":"fastest_to","eps":0.02,"data":"any"}"#);
+        assert_eq!(
+            resp.to_string(),
+            r#"{"ok":true,"query":"fastest_to","algorithm":"cocoa+","machines":1,"barrier_mode":"bsp","data":"sparse:0.01","predicted_seconds":1}"#
+        );
+        // Pinning the fitted scenario gives the same winner — and the
+        // filter canonicalizes spelling (trailing zeros) on parse.
+        let resp = handle_line(
+            &registry,
+            r#"{"query":"fastest_to","eps":0.02,"data":"sparse:0.010"}"#,
+        );
+        assert!(resp.to_string().contains(r#""data":"sparse:0.01""#), "{resp}");
+        // Pinning an unfitted scenario is a clean miss, a malformed
+        // one a parse error — never a silent dense fallback.
+        let resp = handle_line(
+            &registry,
+            r#"{"query":"fastest_to","eps":0.02,"data":"skew:0.5"}"#,
+        );
+        assert!(!resp.get("ok").and_then(Json::as_bool).unwrap());
+        let resp = handle_line(
+            &registry,
+            r#"{"query":"fastest_to","eps":0.02,"data":"sparse:2.0"}"#,
+        );
+        assert!(!resp.get("ok").and_then(Json::as_bool).unwrap());
+        // The models listing names every fitted non-base scenario.
+        let resp = handle_line(&registry, r#"{"query":"models"}"#);
+        let text = resp.to_string();
+        assert!(text.contains(r#""data_scenarios":["sparse:0.01"]"#), "{text}");
     }
 
     #[test]

@@ -356,6 +356,17 @@ impl ClusterSim {
             if factor != 1.0 {
                 compute *= factor;
             }
+            // Non-IID data load: machine k only computes over its own
+            // share of the rows, so skewed partitions turn the heavy
+            // machine into a straggler. Applied after the draws, like
+            // the fleet factor — an empty load vector (balanced
+            // partitions) leaves the arithmetic untouched bit for bit.
+            if !cost.load.is_empty() {
+                let lk = cost.load[k.min(cost.load.len() - 1)];
+                if lk != 1.0 {
+                    compute *= lk;
+                }
+            }
             // Preemption: the m logical slots share `cap` surviving
             // machines round-robin; a host running `load` slots
             // serializes their compute. Like the fleet factor this
@@ -582,6 +593,7 @@ mod tests {
             flops_per_machine: n_loc * 8.0 * 128.0,
             broadcast_bytes: 4.0 * 128.0,
             reduce_bytes: 4.0 * 128.0,
+            load: Vec::new(),
         }
     }
 

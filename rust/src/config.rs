@@ -5,6 +5,7 @@ use std::path::Path;
 
 use crate::cluster::{BarrierMode, FleetSpec, HardwareProfile};
 use crate::data::synth::SynthConfig;
+use crate::data::DataScenario;
 use crate::optim::Objective;
 use crate::util::json::{read_json_file, Json};
 
@@ -54,6 +55,14 @@ pub struct ExperimentConfig {
     /// paths run on; the wire default is `["hinge"]` — the
     /// pre-workload-axis behavior.
     pub workloads: Vec<Objective>,
+    /// Data scenarios the sweep/fit/advise/repro targets cover, as
+    /// canonical [`DataScenario`] strings (`"dense"`, `"sparse:0.01"`,
+    /// `"sparse:0.05+skew:0.6"`). Entries are validated and
+    /// canonicalized at load. The first entry is the *base* scenario
+    /// the historical single-dataset paths run on. Empty (the default)
+    /// means the implicit dense IID dataset under the pre-data-axis
+    /// cache-key shape (`data == ""` in cell keys).
+    pub data_scenarios: Vec<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -76,6 +85,7 @@ impl Default for ExperimentConfig {
             barrier_modes: vec![BarrierMode::Bsp],
             fleets: Vec::new(),
             workloads: vec![Objective::Hinge],
+            data_scenarios: Vec::new(),
         }
     }
 }
@@ -166,6 +176,27 @@ impl ExperimentConfig {
                 parsed
             }
         };
+        // Like fleets: a present but malformed `data_scenarios` entry
+        // is an error — a config asking for a scenario this build
+        // cannot parse must not quietly train on dense IID data
+        // instead. Entries are stored canonicalized so cache keys and
+        // advisor routing never see two spellings of one scenario.
+        let data_scenarios = match doc.get("data_scenarios") {
+            None => dft.data_scenarios.clone(),
+            Some(v) => v
+                .as_array()
+                .ok_or_else(|| {
+                    crate::err!("data_scenarios must be an array of scenario strings")
+                })?
+                .iter()
+                .map(|v| {
+                    let s = v
+                        .as_str()
+                        .ok_or_else(|| crate::err!("data_scenarios entries must be strings"))?;
+                    Ok(DataScenario::parse(s)?.to_string())
+                })
+                .collect::<crate::Result<Vec<_>>>()?,
+        };
         Ok(ExperimentConfig {
             n: doc.opt_usize("n", dft.n),
             d: doc.opt_usize("d", dft.d),
@@ -184,6 +215,7 @@ impl ExperimentConfig {
             barrier_modes,
             fleets,
             workloads,
+            data_scenarios,
         })
     }
 
@@ -191,6 +223,13 @@ impl ExperimentConfig {
     /// configs that never mention the axis).
     pub fn base_workload(&self) -> Objective {
         self.workloads.first().copied().unwrap_or(Objective::Hinge)
+    }
+
+    /// The base data scenario: the first `data_scenarios` entry, or
+    /// the implicit dense scenario (`""`, the pre-data-axis cache-key
+    /// shape) for configs that never mention the axis.
+    pub fn base_data(&self) -> &str {
+        self.data_scenarios.first().map(String::as_str).unwrap_or("")
     }
 
     /// The parsed fleet list this config sweeps/fits over: the
@@ -251,6 +290,10 @@ impl ExperimentConfig {
                 "workloads",
                 Json::array(self.workloads.iter().map(|w| Json::str(w.as_str()))),
             ),
+            (
+                "data_scenarios",
+                Json::array(self.data_scenarios.iter().map(|s| Json::str(s.clone()))),
+            ),
         ])
     }
 
@@ -278,15 +321,24 @@ impl ExperimentConfig {
     pub fn model_context(&self, native: bool) -> String {
         let modes: Vec<String> = self.barrier_modes.iter().map(|m| m.as_str()).collect();
         let workloads: Vec<&str> = self.workloads.iter().map(|w| w.as_str()).collect();
+        // The data segment only appears when a config names scenarios,
+        // so data-blind configs keep their historical hash (artifacts
+        // fitted before the data axis stay valid for them).
+        let data = if self.data_scenarios.is_empty() {
+            String::new()
+        } else {
+            format!(";data=[{}]", self.data_scenarios.join(","))
+        };
         format!(
-            "{}|machines={:?};max_iters={};target={:e};modes=[{}];fleets=[{}];workloads=[{}]",
+            "{}|machines={:?};max_iters={};target={:e};modes=[{}];fleets=[{}];workloads=[{}]{}",
             self.context_key(native),
             self.machines,
             self.max_iters,
             self.target_subopt,
             modes.join(","),
             self.fleets.join(","),
-            workloads.join(",")
+            workloads.join(","),
+            data
         )
     }
 
@@ -441,6 +493,40 @@ mod tests {
         let doc = Json::parse(r#"{"fleets": "local48"}"#).unwrap();
         let err = ExperimentConfig::from_json(&doc).unwrap_err().to_string();
         assert!(err.contains("array"), "{err}");
+    }
+
+    #[test]
+    fn data_scenarios_default_canonicalize_and_reject_unknown() {
+        // Omitted → the implicit dense pre-data-axis behavior.
+        let c = ExperimentConfig::from_json(&Json::parse(r#"{"n": 64}"#).unwrap()).unwrap();
+        assert!(c.data_scenarios.is_empty());
+        assert_eq!(c.base_data(), "");
+        // Named scenarios validate, canonicalize and keep wire order
+        // (first = base).
+        let doc = Json::parse(
+            r#"{"data_scenarios": ["dense", "skew:0.80+sparse:0.01"]}"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(c.data_scenarios, vec!["dense", "sparse:0.01+skew:0.8"]);
+        assert_eq!(c.base_data(), "dense");
+        let back = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.data_scenarios, c.data_scenarios);
+        // Malformed scenarios and wrong shapes are load-time errors,
+        // never a silent dense run.
+        let doc = Json::parse(r#"{"data_scenarios": ["sparse:2.0"]}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+        let doc = Json::parse(r#"{"data_scenarios": "dense"}"#).unwrap();
+        let err = ExperimentConfig::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("array"), "{err}");
+        // Naming scenarios moves the model context; omitting them keeps
+        // the pre-data-axis hash.
+        let a = ExperimentConfig::default();
+        let mut b = a.clone();
+        b.data_scenarios.push("sparse:0.01".into());
+        assert_ne!(a.model_context_hash(true), b.model_context_hash(true));
+        assert!(!a.model_context(true).contains(";data=["));
+        assert!(b.model_context(true).contains(";data=[sparse:0.01]"));
     }
 
     #[test]

@@ -1,26 +1,141 @@
-//! In-memory dataset + row partitioning across simulated machines.
+//! In-memory data matrix + row partitioning across simulated machines.
+//!
+//! [`DataMatrix`] is the data layer's one type, with two storage
+//! backends: the historical dense row-major layout (the bit-identical
+//! fast path — every pre-data-axis construction routes through it
+//! unchanged) and a CSR sparse store ([`crate::data::sparse::Csr`]).
+//! Partition skew (non-IID placement) lives here too: a skew of 0 is
+//! the historical contiguous IID placement, verbatim.
 
+use crate::data::sparse::Csr;
 use crate::util::rng::Pcg32;
 
-/// A dense binary-classification dataset (row-major f32, y ∈ {−1,+1}).
+/// Historical name for [`DataMatrix`] — the dense constructor path
+/// predates the sparse store, and every existing call site keeps
+/// compiling against it.
+pub type Dataset = DataMatrix;
+
+/// The two storage backends.
 #[derive(Debug, Clone, PartialEq)]
-pub struct Dataset {
-    pub x: Vec<f32>,
+enum Store {
+    /// Row-major dense (`n × d` f32) — the historical layout.
+    Dense(Vec<f32>),
+    /// Compressed sparse rows.
+    Sparse(Csr),
+}
+
+/// A binary-classification / regression data matrix (y ∈ {−1,+1} for
+/// classification workloads), dense or CSR-sparse.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataMatrix {
+    store: Store,
     pub y: Vec<f32>,
     pub n: usize,
     pub d: usize,
+    /// Non-IID partition skew in [0, 1): 0 = the historical contiguous
+    /// IID placement (bit-identical); >0 = label- and size-skewed
+    /// placement across machines.
+    pub skew: f64,
+    /// Seed of the skewed placement's tie-break stream.
+    skew_seed: u64,
 }
 
-impl Dataset {
-    pub fn new(x: Vec<f32>, y: Vec<f32>, n: usize, d: usize) -> Dataset {
+impl DataMatrix {
+    /// Dense construction — the historical `Dataset::new`.
+    pub fn new(x: Vec<f32>, y: Vec<f32>, n: usize, d: usize) -> DataMatrix {
         assert_eq!(x.len(), n * d, "x length mismatch");
         assert_eq!(y.len(), n, "y length mismatch");
-        Dataset { x, y, n, d }
+        DataMatrix {
+            store: Store::Dense(x),
+            y,
+            n,
+            d,
+            skew: 0.0,
+            skew_seed: 0,
+        }
     }
 
+    /// Sparse construction from CSR rows.
+    pub fn from_csr(csr: Csr, y: Vec<f32>, d: usize) -> DataMatrix {
+        let n = csr.rows();
+        assert_eq!(y.len(), n, "y length mismatch");
+        DataMatrix {
+            store: Store::Sparse(csr),
+            y,
+            n,
+            d,
+            skew: 0.0,
+            skew_seed: 0,
+        }
+    }
+
+    /// Attach a non-IID partition skew (see [`DataMatrix::partition`]).
+    pub fn with_skew(mut self, skew: f64, seed: u64) -> DataMatrix {
+        assert!((0.0..1.0).contains(&skew), "skew {skew} out of [0, 1)");
+        self.skew = skew;
+        self.skew_seed = seed;
+        self
+    }
+
+    /// True when rows are CSR-stored.
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.store, Store::Sparse(_))
+    }
+
+    /// The sparse store, when present.
+    pub fn csr(&self) -> Option<&Csr> {
+        match &self.store {
+            Store::Sparse(csr) => Some(csr),
+            Store::Dense(_) => None,
+        }
+    }
+
+    /// Stored entries (dense counts every slot).
+    pub fn nnz(&self) -> usize {
+        match &self.store {
+            Store::Dense(_) => self.n * self.d,
+            Store::Sparse(csr) => csr.nnz(),
+        }
+    }
+
+    /// Fraction of stored entries: 1.0 for dense.
+    pub fn density(&self) -> f64 {
+        if self.n == 0 || self.d == 0 {
+            return 1.0;
+        }
+        self.nnz() as f64 / (self.n * self.d) as f64
+    }
+
+    /// The per-row coordinate count that drives per-iteration flops:
+    /// `d` for dense, the mean stored entries per row for sparse.
+    pub fn cost_dim(&self) -> f64 {
+        match &self.store {
+            Store::Dense(_) => self.d as f64,
+            Store::Sparse(csr) => csr.nnz() as f64 / self.n.max(1) as f64,
+        }
+    }
+
+    /// Dense row access — the historical accessor. Sparse stores have
+    /// no dense rows; callers on the sparse path must dispatch through
+    /// [`DataMatrix::csr`] instead.
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
-        &self.x[i * self.d..(i + 1) * self.d]
+        match &self.store {
+            Store::Dense(x) => &x[i * self.d..(i + 1) * self.d],
+            Store::Sparse(_) => {
+                panic!("DataMatrix::row is a dense accessor; this matrix is CSR-stored")
+            }
+        }
+    }
+
+    /// The dense backing store (tests + PJRT upload path).
+    pub fn dense_x(&self) -> &[f32] {
+        match &self.store {
+            Store::Dense(x) => x,
+            Store::Sparse(_) => {
+                panic!("DataMatrix::dense_x on a CSR-stored matrix")
+            }
+        }
     }
 
     /// Fraction of rows with positive labels.
@@ -30,70 +145,206 @@ impl Dataset {
 
     /// A uniformly subsampled dataset of `k` rows (used by the
     /// training-resources study: fit the convergence model on a data
-    /// subsample, per paper §6 "Training resources").
-    pub fn subsample(&self, k: usize, seed: u64) -> Dataset {
-        assert!(k <= self.n);
+    /// subsample, per paper §6 "Training resources"). Refuses `k > n`
+    /// loudly — a caller-driven size must never abort the process.
+    pub fn subsample(&self, k: usize, seed: u64) -> crate::Result<DataMatrix> {
+        crate::ensure!(
+            k <= self.n,
+            "cannot subsample {k} rows from a {}-row dataset",
+            self.n
+        );
         let mut rng = Pcg32::new(seed, 404);
         let idx = rng.sample_indices(self.n, k);
-        let mut x = Vec::with_capacity(k * self.d);
-        let mut y = Vec::with_capacity(k);
-        for &i in &idx {
-            x.extend_from_slice(self.row(i));
-            y.push(self.y[i]);
-        }
-        Dataset::new(x, y, k, self.d)
+        let mut out = self.take_rows(&idx, k);
+        out.skew = self.skew;
+        out.skew_seed = self.skew_seed;
+        Ok(out)
     }
 
     /// Shuffle rows (BSP partitioning assumes random row placement, as
     /// Spark's `repartition` gives the paper's setup).
-    pub fn shuffled(&self, seed: u64) -> Dataset {
+    pub fn shuffled(&self, seed: u64) -> DataMatrix {
         let mut rng = Pcg32::new(seed, 505);
         let perm = rng.permutation(self.n);
-        let mut x = Vec::with_capacity(self.n * self.d);
-        let mut y = Vec::with_capacity(self.n);
-        for &i in &perm {
-            x.extend_from_slice(self.row(i));
+        let mut out = self.take_rows(&perm, self.n);
+        out.skew = self.skew;
+        out.skew_seed = self.skew_seed;
+        out
+    }
+
+    /// Gather `idx` rows (in order) into a new matrix of the same
+    /// store kind.
+    fn take_rows(&self, idx: &[usize], k: usize) -> DataMatrix {
+        let mut y = Vec::with_capacity(k);
+        for &i in idx {
             y.push(self.y[i]);
         }
-        Dataset::new(x, y, self.n, self.d)
+        match &self.store {
+            Store::Dense(_) => {
+                let mut x = Vec::with_capacity(k * self.d);
+                for &i in idx {
+                    x.extend_from_slice(self.row(i));
+                }
+                DataMatrix::new(x, y, k, self.d)
+            }
+            Store::Sparse(csr) => {
+                let mut out = Csr::with_rows(0);
+                for &i in idx {
+                    out.push_row_from(csr, i);
+                }
+                DataMatrix::from_csr(out, y, self.d)
+            }
+        }
     }
 
     /// Partition rows across `m` machines, padding every partition to
-    /// the common size `ceil(n/m)` (the artifact grid's shape). Padded
-    /// rows have `x = 0`, `y = 0`, `mask = 0`.
-    pub fn partition(&self, m: usize) -> Vec<Partition> {
-        assert!(m >= 1 && m <= self.n, "bad machine count {m}");
-        let n_loc = self.n.div_ceil(m);
+    /// a common size (the artifact grid's shape). Padded rows have
+    /// `x = 0`, `y = 0`, `mask = 0`.
+    ///
+    /// With `skew == 0` the placement is the historical contiguous IID
+    /// split (`n_loc = ceil(n/m)`, bit-identical buffers). With
+    /// `skew > 0` machines receive both *more rows* (sizes follow a
+    /// skew-interpolated linear ramp, machine 0 heaviest) and *more
+    /// positives* (rows are ordered by a skew-blended label key before
+    /// placement), so stragglers arise from data volume and local
+    /// label distributions drift apart — every row still placed
+    /// exactly once.
+    ///
+    /// Refuses `m > n` loudly: elastic re-planning can request more
+    /// machines than rows on tiny grids and must get a refusal, not an
+    /// abort.
+    pub fn partition(&self, m: usize) -> crate::Result<Vec<Partition>> {
+        crate::ensure!(
+            m >= 1 && m <= self.n,
+            "bad machine count {m}: need 1 ≤ m ≤ n = {} rows",
+            self.n
+        );
+        let assignment = if self.skew == 0.0 {
+            // The historical contiguous split, expressed as row-id
+            // ranges (identical buffers to the pre-refactor copy).
+            (0..m)
+                .map(|k| {
+                    let lo = (k * self.n) / m;
+                    let hi = ((k + 1) * self.n) / m;
+                    (lo..hi).collect()
+                })
+                .collect()
+        } else {
+            self.skewed_assignment(m)
+        };
+        let n_loc = assignment.iter().map(Vec::len).max().unwrap_or(0);
         let mut parts = Vec::with_capacity(m);
-        for k in 0..m {
-            let lo = (k * self.n) / m;
-            let hi = ((k + 1) * self.n) / m;
-            let rows = hi - lo;
-            let mut x = vec![0.0f32; n_loc * self.d];
+        for (k, rows) in assignment.iter().enumerate() {
+            let valid = rows.len();
             let mut y = vec![0.0f32; n_loc];
             let mut mask = vec![0.0f32; n_loc];
-            x[..rows * self.d].copy_from_slice(&self.x[lo * self.d..hi * self.d]);
-            y[..rows].copy_from_slice(&self.y[lo..hi]);
-            mask[..rows].fill(1.0);
+            for (j, &ri) in rows.iter().enumerate() {
+                y[j] = self.y[ri];
+            }
+            mask[..valid].fill(1.0);
+            let (x, csr) = match &self.store {
+                Store::Dense(_) => {
+                    let mut x = vec![0.0f32; n_loc * self.d];
+                    for (j, &ri) in rows.iter().enumerate() {
+                        x[j * self.d..(j + 1) * self.d].copy_from_slice(self.row(ri));
+                    }
+                    (x, None)
+                }
+                Store::Sparse(src) => {
+                    let mut csr = Csr::with_rows(0);
+                    for &ri in rows {
+                        csr.push_row_from(src, ri);
+                    }
+                    for _ in valid..n_loc {
+                        csr.push_empty_row();
+                    }
+                    (Vec::new(), Some(csr))
+                }
+            };
             parts.push(Partition {
                 x,
+                csr,
                 y,
                 mask,
                 n_loc,
-                valid: rows,
+                valid,
                 d: self.d,
                 index: k,
                 uid: next_partition_uid(),
             });
         }
-        parts
+        Ok(parts)
     }
+
+    /// The skewed placement: machine sizes from a skew-interpolated
+    /// linear ramp (largest remainder, every machine ≥ 1 row), row
+    /// order from a skew-blended label key (positives sort toward the
+    /// heavy machines), NaN-safe via `total_cmp`.
+    fn skewed_assignment(&self, m: usize) -> Vec<Vec<usize>> {
+        // Sizes: weight_k = (1-s)·1 + s·(m-k), so at s→1 the ramp is
+        // linear m:…:1 and at s→0 it is uniform.
+        let weights: Vec<f64> = (0..m)
+            .map(|k| (1.0 - self.skew) + self.skew * (m - k) as f64)
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let spare = self.n - m; // every machine starts with 1 row
+        let mut sizes = vec![1usize; m];
+        let mut fracs: Vec<(usize, f64)> = Vec::with_capacity(m);
+        let mut assigned = 0usize;
+        for k in 0..m {
+            let q = spare as f64 * weights[k] / total;
+            let base = q.floor() as usize;
+            sizes[k] += base;
+            assigned += base;
+            fracs.push((k, q - base as f64));
+        }
+        // Largest remainder, ties to the lower machine index.
+        fracs.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        for &(k, _) in fracs.iter().take(spare - assigned) {
+            sizes[k] += 1;
+        }
+        // Row order: blend the label indicator with a per-row uniform
+        // tie-break so s→0 recovers a random permutation and s→1 packs
+        // positives first (onto the heavy machines).
+        let mut rng = Pcg32::new(self.skew_seed, 808);
+        let mut keys: Vec<(usize, f64)> = (0..self.n)
+            .map(|i| {
+                let label = if self.y[i] > 0.0 { 1.0 } else { 0.0 };
+                (i, self.skew * label + (1.0 - self.skew) * rng.uniform())
+            })
+            .collect();
+        keys.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        let mut assignment = Vec::with_capacity(m);
+        let mut cursor = 0usize;
+        for &size in &sizes {
+            assignment.push(keys[cursor..cursor + size].iter().map(|&(i, _)| i).collect());
+            cursor += size;
+        }
+        assignment
+    }
+}
+
+/// The per-machine compute-load vector for [`crate::optim::IterationCost`]:
+/// empty (= uniform, the historical bit-identical shape) unless the
+/// matrix carries a partition skew, in which case machine `k`'s load is
+/// its real row share of the padded size.
+pub fn partition_load(skew: f64, parts: &[Partition]) -> Vec<f64> {
+    if skew == 0.0 {
+        return Vec::new();
+    }
+    parts
+        .iter()
+        .map(|p| p.valid as f64 / p.n_loc.max(1) as f64)
+        .collect()
 }
 
 /// One machine's padded slice of the dataset.
 #[derive(Debug, Clone)]
 pub struct Partition {
+    /// Dense store (row-major `n_loc × d`); empty when CSR-stored.
     pub x: Vec<f32>,
+    /// CSR store (`n_loc` rows, padded rows empty); `None` when dense.
+    pub csr: Option<Csr>,
     pub y: Vec<f32>,
     pub mask: Vec<f32>,
     /// Padded row count (uniform across partitions; artifact shape).
@@ -107,6 +358,24 @@ pub struct Partition {
     /// partition-constant tensors (x, y, mask) are uploaded to the
     /// PJRT device exactly once per partition (§Perf).
     pub uid: u64,
+}
+
+impl Partition {
+    /// True when rows are CSR-stored.
+    pub fn is_sparse(&self) -> bool {
+        self.csr.is_some()
+    }
+
+    /// The dense backing store; a loud error on sparse partitions
+    /// (whose rows have no dense buffer to upload or scan).
+    pub fn dense_x(&self) -> crate::Result<&[f32]> {
+        crate::ensure!(
+            self.csr.is_none(),
+            "partition {} is CSR-stored; this path needs the dense layout",
+            self.index
+        );
+        Ok(&self.x)
+    }
 }
 
 static PARTITION_UID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
@@ -137,7 +406,7 @@ mod tests {
                 ((n, m), tiny(n, 3))
             },
             |&(n, m), ds| {
-                let parts = ds.partition(m);
+                let parts = ds.partition(m).unwrap();
                 if parts.len() != m {
                     return false;
                 }
@@ -156,7 +425,7 @@ mod tests {
     #[test]
     fn partition_preserves_content() {
         let ds = tiny(10, 2);
-        let parts = ds.partition(3);
+        let parts = ds.partition(3).unwrap();
         // Reassemble valid rows in order and compare.
         let mut x = Vec::new();
         let mut y = Vec::new();
@@ -164,14 +433,14 @@ mod tests {
             x.extend_from_slice(&p.x[..p.valid * 2]);
             y.extend_from_slice(&p.y[..p.valid]);
         }
-        assert_eq!(x, ds.x);
+        assert_eq!(x, ds.dense_x());
         assert_eq!(y, ds.y);
     }
 
     #[test]
     fn padded_rows_are_zero() {
         let ds = tiny(10, 2);
-        let parts = ds.partition(4); // n_loc = 3, valid ∈ {2,3}
+        let parts = ds.partition(4).unwrap(); // n_loc = 3, valid ∈ {2,3}
         for p in &parts {
             for i in p.valid..p.n_loc {
                 assert_eq!(p.y[i], 0.0);
@@ -182,11 +451,115 @@ mod tests {
     }
 
     #[test]
+    fn oversized_requests_refuse_loudly() {
+        let ds = tiny(8, 2);
+        // Elastic re-planning can ask for m > n on tiny grids; both
+        // paths must return an error, never abort.
+        assert!(ds.partition(9).is_err());
+        assert!(ds.partition(0).is_err());
+        assert!(ds.subsample(9, 1).is_err());
+        assert!(ds.partition(8).is_ok());
+        assert!(ds.subsample(8, 1).is_ok());
+    }
+
+    #[test]
+    fn skewed_partition_covers_rows_and_ramps_sizes() {
+        forall(
+            "skewed partition covers rows exactly once",
+            40,
+            |g: &mut Gen| {
+                let n = g.usize_in(4, 200);
+                let m = g.usize_in(2, n.min(12));
+                let skew = g.f64_in(0.05, 0.95);
+                ((n, m, skew), g.rng().next_u64())
+            },
+            |&(n, m, skew), &seed| {
+                let ds = tiny(n, 3).with_skew(skew, seed);
+                let parts = ds.partition(m).unwrap();
+                let mut seen = vec![false; n];
+                for p in &parts {
+                    for j in 0..p.valid {
+                        // Recover the row id from the first feature
+                        // (tiny() stores i*d+c at (i, c)).
+                        let ri = (p.x[j * 3] as usize) / 3;
+                        if seen[ri] {
+                            return false;
+                        }
+                        seen[ri] = true;
+                    }
+                }
+                let sizes: Vec<usize> = parts.iter().map(|p| p.valid).collect();
+                seen.iter().all(|&s| s)
+                    && sizes.iter().sum::<usize>() == n
+                    && sizes.iter().all(|&s| s >= 1)
+                    && sizes.windows(2).all(|w| w[0] >= w[1])
+                    && parts.iter().all(|p| p.n_loc == sizes[0])
+            },
+        );
+    }
+
+    #[test]
+    fn skewed_partition_concentrates_positives() {
+        let n = 300;
+        let x: Vec<f32> = vec![0.5; n * 2];
+        let y: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let ds = Dataset::new(x, y, n, 2).with_skew(0.9, 7);
+        let parts = ds.partition(4).unwrap();
+        let pos_rate = |p: &Partition| {
+            p.y[..p.valid].iter().filter(|&&v| v > 0.0).count() as f64 / p.valid as f64
+        };
+        // The heavy machine is positive-rich, the light one depleted.
+        assert!(pos_rate(&parts[0]) > 0.8, "rate {}", pos_rate(&parts[0]));
+        assert!(pos_rate(&parts[3]) < 0.2, "rate {}", pos_rate(&parts[3]));
+        // And the load vector reflects the volume ramp.
+        let load = partition_load(ds.skew, &parts);
+        assert_eq!(load.len(), 4);
+        assert_eq!(load[0], 1.0);
+        assert!(load[3] < load[0]);
+        // Unskewed data keeps the empty (uniform) load shape.
+        assert!(partition_load(0.0, &parts).is_empty());
+    }
+
+    #[test]
+    fn sparse_partition_mirrors_mask_contract() {
+        let x = vec![1.0, 0.0, 0.0, 2.0, 3.0, 0.0, 0.0, 0.0, 0.0, 4.0];
+        let ds_dense = Dataset::new(x.clone(), vec![1.0, -1.0, 1.0, -1.0, 1.0], 5, 2);
+        let csr = Csr::from_dense(&x, 5, 2);
+        let ds = DataMatrix::from_csr(csr, ds_dense.y.clone(), 2);
+        assert!(ds.is_sparse());
+        assert_eq!(ds.nnz(), 4);
+        let parts = ds.partition(2).unwrap();
+        assert_eq!(parts.len(), 2);
+        for (p, pd) in parts.iter().zip(ds_dense.partition(2).unwrap().iter()) {
+            assert!(p.is_sparse());
+            assert!(p.dense_x().is_err());
+            let csr = p.csr.as_ref().unwrap();
+            assert_eq!(csr.rows(), p.n_loc);
+            assert_eq!(csr.to_dense(2), pd.x);
+            assert_eq!(p.y, pd.y);
+            assert_eq!(p.mask, pd.mask);
+        }
+    }
+
+    #[test]
+    fn sparse_subsample_and_shuffle_match_dense() {
+        let ds_dense = tiny(40, 3);
+        let csr = Csr::from_dense(ds_dense.dense_x(), 40, 3);
+        let ds = DataMatrix::from_csr(csr, ds_dense.y.clone(), 3);
+        let (a, b) = (ds_dense.subsample(15, 9).unwrap(), ds.subsample(15, 9).unwrap());
+        assert_eq!(b.csr().unwrap().to_dense(3), a.dense_x());
+        assert_eq!(a.y, b.y);
+        let (a, b) = (ds_dense.shuffled(3), ds.shuffled(3));
+        assert_eq!(b.csr().unwrap().to_dense(3), a.dense_x());
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
     fn subsample_sizes_and_determinism() {
         let ds = tiny(100, 4);
-        let a = ds.subsample(30, 9);
-        let b = ds.subsample(30, 9);
-        assert_eq!(a.x, b.x);
+        let a = ds.subsample(30, 9).unwrap();
+        let b = ds.subsample(30, 9).unwrap();
+        assert_eq!(a.dense_x(), b.dense_x());
         assert_eq!(a.n, 30);
         assert_eq!(a.d, 4);
     }
@@ -195,11 +568,11 @@ mod tests {
     fn shuffle_is_permutation() {
         let ds = tiny(50, 2);
         let s = ds.shuffled(1);
-        assert_ne!(s.x, ds.x);
+        assert_ne!(s.dense_x(), ds.dense_x());
         let mut y1 = ds.y.clone();
         let mut y2 = s.y.clone();
-        y1.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        y2.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        y1.sort_by(f32::total_cmp);
+        y2.sort_by(f32::total_cmp);
         assert_eq!(y1, y2);
     }
 

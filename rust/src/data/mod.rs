@@ -8,9 +8,14 @@
 //! (substitution table in DESIGN.md §2).
 
 pub mod dataset;
+pub mod scenario;
+pub mod sparse;
 pub mod synth;
 
-pub use dataset::{Dataset, Partition};
+pub use dataset::{partition_load, DataMatrix, Dataset, Partition};
+pub use scenario::DataScenario;
+pub use sparse::Csr;
 pub use synth::{
-    dataset_for, logistic_like, mnist_like, regression_like, two_gaussians, SynthConfig,
+    dataset_for, dataset_for_scenario, logistic_like, mnist_like, regression_like, two_gaussians,
+    SynthConfig,
 };

@@ -1,0 +1,188 @@
+//! The data-scenario axis: a strict-parsed description of *what the
+//! data looks like* — feature density, label imbalance, and non-IID
+//! partition skew — carried through config → sweep cell keys → trace
+//! store → advisor artifacts → the serve wire (DESIGN.md §6.13).
+//!
+//! Grammar (parts joined by `+`, each at most once, any order):
+//!
+//! ```text
+//! dense                      the historical dense IID dataset
+//! sparse:<density>           CSR features, density ∈ (0, 1]
+//! pos:<rate>                 positive-label rate ∈ (0, 1)
+//! skew:<s>                   non-IID partition skew ∈ [0, 1)
+//! ```
+//!
+//! `dense` stands alone. The canonical form (via `Display`) orders
+//! parts `sparse`, `pos`, `skew` and collapses the all-default
+//! combination back to `dense`, so one string uniquely names one
+//! behavior — cell keys, cache entries and artifacts compare strings,
+//! never floats.
+
+use std::fmt;
+
+/// One data scenario (see the module grammar).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataScenario {
+    /// Feature density in (0, 1]; 1.0 = the dense store.
+    pub density: f64,
+    /// Positive-label rate in (0, 1); `None` = the generator's
+    /// natural balance (the historical labels).
+    pub pos_rate: Option<f64>,
+    /// Non-IID partition skew in [0, 1); 0 = IID contiguous placement.
+    pub skew: f64,
+}
+
+impl Default for DataScenario {
+    fn default() -> DataScenario {
+        DataScenario {
+            density: 1.0,
+            pos_rate: None,
+            skew: 0.0,
+        }
+    }
+}
+
+impl DataScenario {
+    /// The default scenario: the historical dense IID dataset.
+    pub fn dense() -> DataScenario {
+        DataScenario::default()
+    }
+
+    /// True when this is the all-default scenario — the one whose
+    /// cells, cache keys and wire fields stay byte-identical to the
+    /// pre-data-axis shapes.
+    pub fn is_dense(&self) -> bool {
+        self.density == 1.0 && self.pos_rate.is_none() && self.skew == 0.0
+    }
+
+    /// Strict parse. Every malformed or out-of-range part is a loud
+    /// error — a typo must never silently fall back to `dense`.
+    pub fn parse(s: &str) -> crate::Result<DataScenario> {
+        let s = s.trim();
+        crate::ensure!(!s.is_empty(), "empty data scenario");
+        if s == "dense" {
+            return Ok(DataScenario::dense());
+        }
+        let mut out = DataScenario::dense();
+        let (mut saw_sparse, mut saw_pos, mut saw_skew) = (false, false, false);
+        for part in s.split('+') {
+            let part = part.trim();
+            let (key, val) = part.split_once(':').ok_or_else(|| {
+                crate::err!(
+                    "bad data scenario part '{part}' in '{s}' \
+                     (expected dense, sparse:<density>, pos:<rate> or skew:<s>)"
+                )
+            })?;
+            let num: f64 = val
+                .parse()
+                .map_err(|_| crate::err!("bad number '{val}' in data scenario '{s}'"))?;
+            match key {
+                "sparse" => {
+                    crate::ensure!(!saw_sparse, "duplicate 'sparse' in data scenario '{s}'");
+                    crate::ensure!(
+                        num > 0.0 && num <= 1.0,
+                        "sparse density {num} out of range (0, 1] in '{s}'"
+                    );
+                    saw_sparse = true;
+                    out.density = num;
+                }
+                "pos" => {
+                    crate::ensure!(!saw_pos, "duplicate 'pos' in data scenario '{s}'");
+                    crate::ensure!(
+                        num > 0.0 && num < 1.0,
+                        "positive rate {num} out of range (0, 1) in '{s}'"
+                    );
+                    saw_pos = true;
+                    out.pos_rate = Some(num);
+                }
+                "skew" => {
+                    crate::ensure!(!saw_skew, "duplicate 'skew' in data scenario '{s}'");
+                    crate::ensure!(
+                        (0.0..1.0).contains(&num),
+                        "partition skew {num} out of range [0, 1) in '{s}'"
+                    );
+                    saw_skew = true;
+                    out.skew = num;
+                }
+                _ => {
+                    return Err(crate::err!(
+                        "unknown data scenario part '{key}' in '{s}' \
+                         (expected sparse, pos or skew)"
+                    ))
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse and return the canonical wire string (what cell keys,
+    /// artifacts and responses carry).
+    pub fn canonical(s: &str) -> crate::Result<String> {
+        Ok(DataScenario::parse(s)?.to_string())
+    }
+}
+
+impl fmt::Display for DataScenario {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_dense() {
+            return write!(f, "dense");
+        }
+        let mut parts = Vec::new();
+        if self.density != 1.0 {
+            parts.push(format!("sparse:{}", self.density));
+        }
+        if let Some(r) = self.pos_rate {
+            parts.push(format!("pos:{r}"));
+        }
+        if self.skew != 0.0 {
+            parts.push(format!("skew:{}", self.skew));
+        }
+        write!(f, "{}", parts.join("+"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_and_canonical_forms() {
+        assert!(DataScenario::parse("dense").unwrap().is_dense());
+        // All-default parts collapse back to the canonical "dense".
+        assert_eq!(DataScenario::canonical("sparse:1").unwrap(), "dense");
+        assert_eq!(DataScenario::canonical("skew:0").unwrap(), "dense");
+        let s = DataScenario::parse("skew:0.8+sparse:0.01").unwrap();
+        assert_eq!(s.to_string(), "sparse:0.01+skew:0.8");
+        assert_eq!(s.density, 0.01);
+        assert_eq!(s.skew, 0.8);
+        let p = DataScenario::parse("pos:0.1").unwrap();
+        assert_eq!(p.pos_rate, Some(0.1));
+        assert_eq!(p.to_string(), "pos:0.1");
+        // Canonical strings re-parse to themselves.
+        assert_eq!(
+            DataScenario::canonical("sparse:0.01+skew:0.8").unwrap(),
+            "sparse:0.01+skew:0.8"
+        );
+    }
+
+    #[test]
+    fn malformed_scenarios_are_loud() {
+        for bad in [
+            "",
+            "Dense",
+            "sparse",
+            "sparse:0",
+            "sparse:1.5",
+            "sparse:x",
+            "pos:0",
+            "pos:1",
+            "skew:1",
+            "skew:-0.1",
+            "sparse:0.5+sparse:0.5",
+            "fleet:3",
+            "dense+skew:0.5",
+        ] {
+            assert!(DataScenario::parse(bad).is_err(), "'{bad}' should be rejected");
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Compressed sparse row (CSR) storage — the sparse backend of
+//! [`DataMatrix`](crate::data::DataMatrix).
+//!
+//! Entries within a row are stored in ascending column order, so an
+//! f64 accumulation over a full-density CSR row visits coordinates in
+//! exactly the order the dense kernels do — that is what makes the
+//! density-1.0 CSR path agree with the dense path to 0 ULP (pinned by
+//! `tests/data_props.rs`).
+
+/// A CSR matrix: `indptr` has one entry per row plus one, `indices`
+/// and `values` hold the non-zero (column, value) pairs row by row.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Csr {
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// An empty matrix with `n` rows (all empty).
+    pub fn with_rows(n: usize) -> Csr {
+        Csr {
+            indptr: vec![0; n + 1],
+            indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    /// Number of stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Row `i`'s stored (columns, values) pair, columns ascending.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let lo = self.indptr[i] as usize;
+        let hi = self.indptr[i + 1] as usize;
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Append one row given its (column, value) entries; columns must
+    /// be ascending (debug-asserted) so kernel accumulation order is
+    /// deterministic.
+    pub fn push_row(&mut self, cols: &[u32], vals: &[f32]) {
+        debug_assert_eq!(cols.len(), vals.len());
+        debug_assert!(cols.windows(2).all(|w| w[0] < w[1]), "columns must ascend");
+        self.indices.extend_from_slice(cols);
+        self.values.extend_from_slice(vals);
+        self.indptr.push(self.indices.len() as u32);
+    }
+
+    /// Copy row `i` of another CSR matrix onto the end of this one.
+    pub fn push_row_from(&mut self, other: &Csr, i: usize) {
+        let (cols, vals) = other.row(i);
+        self.indices.extend_from_slice(cols);
+        self.values.extend_from_slice(vals);
+        self.indptr.push(self.indices.len() as u32);
+    }
+
+    /// An empty padding row (the partition contract's `mask = 0` rows).
+    pub fn push_empty_row(&mut self) {
+        self.indptr.push(self.indices.len() as u32);
+    }
+
+    /// Build from a dense row-major matrix, storing every entry (zeros
+    /// included) so the stored coordinate order — and therefore f64
+    /// accumulation order — is identical to the dense row walk. Used
+    /// by the density-1.0 equivalence tests and benches.
+    pub fn from_dense_full(x: &[f32], n: usize, d: usize) -> Csr {
+        let mut csr = Csr {
+            indptr: Vec::with_capacity(n + 1),
+            indices: Vec::with_capacity(n * d),
+            values: Vec::with_capacity(n * d),
+        };
+        csr.indptr.push(0);
+        for i in 0..n {
+            for j in 0..d {
+                csr.indices.push(j as u32);
+                csr.values.push(x[i * d + j]);
+            }
+            csr.indptr.push(csr.indices.len() as u32);
+        }
+        csr
+    }
+
+    /// Build from a dense row-major matrix, dropping exact zeros.
+    pub fn from_dense(x: &[f32], n: usize, d: usize) -> Csr {
+        let mut csr = Csr {
+            indptr: Vec::with_capacity(n + 1),
+            indices: Vec::new(),
+            values: Vec::new(),
+        };
+        csr.indptr.push(0);
+        for i in 0..n {
+            for j in 0..d {
+                let v = x[i * d + j];
+                if v != 0.0 {
+                    csr.indices.push(j as u32);
+                    csr.values.push(v);
+                }
+            }
+            csr.indptr.push(csr.indices.len() as u32);
+        }
+        csr
+    }
+
+    /// Materialize as a dense row-major matrix (`rows() × d`).
+    pub fn to_dense(&self, d: usize) -> Vec<f32> {
+        let n = self.rows();
+        let mut x = vec![0.0f32; n * d];
+        for i in 0..n {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                x[i * d + c as usize] = v;
+            }
+        }
+        x
+    }
+
+    /// Squared Euclidean norm of row `i`, accumulated in f64 in stored
+    /// order (matches the dense kernels' `q_j` at full density).
+    #[inline]
+    pub fn row_norm_sq(&self, i: usize) -> f64 {
+        let (_, vals) = self.row(i);
+        vals.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// `⟨row i, w⟩` accumulated in f64 in stored order.
+    #[inline]
+    pub fn dot_row(&self, i: usize, w: &[f32]) -> f64 {
+        let (cols, vals) = self.row(i);
+        cols.iter()
+            .zip(vals)
+            .map(|(&c, &v)| v as f64 * w[c as usize] as f64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_dense() {
+        let x = vec![1.0, 0.0, 2.0, 0.0, 0.0, 3.0];
+        let csr = Csr::from_dense(&x, 2, 3);
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.to_dense(3), x);
+        let full = Csr::from_dense_full(&x, 2, 3);
+        assert_eq!(full.nnz(), 6);
+        assert_eq!(full.to_dense(3), x);
+    }
+
+    #[test]
+    fn row_access_and_norms() {
+        let x = vec![1.0, 0.0, 2.0, 0.0, 4.0, 0.0];
+        let csr = Csr::from_dense(&x, 2, 3);
+        let (cols, vals) = csr.row(0);
+        assert_eq!(cols, &[0, 2]);
+        assert_eq!(vals, &[1.0, 2.0]);
+        assert_eq!(csr.row_norm_sq(0), 5.0);
+        let w = vec![1.0f32, 1.0, 1.0];
+        assert_eq!(csr.dot_row(1, &w), 4.0);
+    }
+
+    #[test]
+    fn padded_rows_are_empty() {
+        let mut csr = Csr::with_rows(0);
+        csr.push_row(&[1], &[2.0]);
+        csr.push_empty_row();
+        assert_eq!(csr.rows(), 2);
+        let (cols, _) = csr.row(1);
+        assert!(cols.is_empty());
+    }
+}

@@ -5,7 +5,9 @@
 //! generator; the hinge arm is [`mnist_like`] verbatim, so the hinge
 //! workload's data is bit-identical to the pre-workload-axis path.
 
-use super::dataset::Dataset;
+use super::dataset::{DataMatrix, Dataset};
+use super::scenario::DataScenario;
+use super::sparse::Csr;
 use crate::optim::Objective;
 use crate::util::rng::Pcg32;
 
@@ -176,6 +178,109 @@ pub fn dataset_for(objective: Objective, cfg: &SynthConfig) -> Dataset {
     }
 }
 
+/// The dataset a (workload, data scenario) pair trains on.
+///
+/// The `dense` scenario routes through [`dataset_for`] verbatim — the
+/// bit-identical historical path. A skew-only scenario keeps those
+/// exact bytes too (skew changes *placement*, not content). Any
+/// density or label-rate override goes through the sparse generator
+/// below.
+pub fn dataset_for_scenario(
+    objective: Objective,
+    scenario: &DataScenario,
+    cfg: &SynthConfig,
+) -> DataMatrix {
+    let data = if scenario.density == 1.0 && scenario.pos_rate.is_none() {
+        dataset_for(objective, cfg)
+    } else {
+        sparse_task(objective, cfg, scenario.density, scenario.pos_rate)
+    };
+    if scenario.skew > 0.0 {
+        data.with_skew(scenario.skew, cfg.seed)
+    } else {
+        data
+    }
+}
+
+/// Sparse / label-imbalanced task generator (salt 606 — an independent
+/// stream from every per-workload generator).
+///
+/// Each row activates `max(1, round(d·density))` coordinates (sorted,
+/// CSR order), values Gaussian, row-normalized to unit L2 norm — the
+/// same preprocessing contract as the dense generators. Labels come
+/// from a sparse ground-truth direction: classification workloads
+/// threshold the score at the (1 − pos_rate) quantile (NaN-safe
+/// `total_cmp` sort) plus 5% label flips so the task is not exactly
+/// separable; ridge keeps real-valued targets (`pos_rate` does not
+/// apply to regression). A density of exactly 1.0 (label imbalance
+/// only) keeps the dense store.
+pub fn sparse_task(
+    objective: Objective,
+    cfg: &SynthConfig,
+    density: f64,
+    pos_rate: Option<f64>,
+) -> DataMatrix {
+    let mut rng = Pcg32::new(cfg.seed, 606);
+    let dir = sparse_direction(&mut rng, cfg.d, (density * 4.0).clamp(0.05, 1.0));
+    let nnz_per_row = ((cfg.d as f64 * density).round() as usize).clamp(1, cfg.d);
+    let mut csr = Csr::with_rows(0);
+    let mut scores = Vec::with_capacity(cfg.n);
+    let mut cols_buf: Vec<u32> = Vec::with_capacity(nnz_per_row);
+    let mut vals_buf: Vec<f32> = Vec::with_capacity(nnz_per_row);
+    for _ in 0..cfg.n {
+        cols_buf.clear();
+        vals_buf.clear();
+        let mut idx = rng.sample_indices(cfg.d, nnz_per_row);
+        idx.sort_unstable();
+        let mut norm_sq = 0.0f64;
+        for &c in &idx {
+            let v = rng.normal() + cfg.noise * rng.normal();
+            cols_buf.push(c as u32);
+            vals_buf.push(v as f32);
+            norm_sq += v * v;
+        }
+        let norm = norm_sq.sqrt().max(1e-6) as f32;
+        vals_buf.iter_mut().for_each(|v| *v /= norm);
+        let score: f64 = cols_buf
+            .iter()
+            .zip(&vals_buf)
+            .map(|(&c, &v)| v as f64 * dir[c as usize])
+            .sum();
+        scores.push(score);
+        csr.push_row(&cols_buf, &vals_buf);
+    }
+    let y: Vec<f32> = match objective {
+        Objective::Ridge => scores
+            .iter()
+            .map(|&s| (s + cfg.noise * 0.2 * rng.normal()) as f32)
+            .collect(),
+        _ => {
+            let rate = pos_rate.unwrap_or(0.5);
+            let mut sorted = scores.clone();
+            sorted.sort_by(f64::total_cmp);
+            let cut = ((cfg.n as f64) * (1.0 - rate)) as usize;
+            let threshold = sorted[cut.min(cfg.n - 1)];
+            scores
+                .iter()
+                .map(|&s| {
+                    let label = if s > threshold { 1.0 } else { -1.0 };
+                    if rng.uniform() < 0.05 {
+                        -label
+                    } else {
+                        label
+                    }
+                })
+                .collect()
+        }
+    };
+    if density == 1.0 {
+        let x = csr.to_dense(cfg.d);
+        DataMatrix::new(x, y, cfg.n, cfg.d)
+    } else {
+        DataMatrix::from_csr(csr, y, cfg.d)
+    }
+}
+
 /// A simple two-Gaussian binary task (used by unit tests and the
 /// quickstart example where class structure doesn't matter).
 pub fn two_gaussians(n: usize, d: usize, separation: f64, seed: u64) -> Dataset {
@@ -215,7 +320,7 @@ mod tests {
         });
         assert_eq!(ds.n, 500);
         assert_eq!(ds.d, 32);
-        assert_eq!(ds.x.len(), 500 * 32);
+        assert_eq!(ds.dense_x().len(), 500 * 32);
         assert!(ds.y.iter().all(|&v| v == 1.0 || v == -1.0));
         // Positive rate ≈ 1/10.
         let pos = ds.y.iter().filter(|&&v| v == 1.0).count();
@@ -245,10 +350,10 @@ mod tests {
         };
         let a = mnist_like(&cfg);
         let b = mnist_like(&cfg);
-        assert_eq!(a.x, b.x);
+        assert_eq!(a.dense_x(), b.dense_x());
         assert_eq!(a.y, b.y);
         let c = mnist_like(&SynthConfig { seed: 7, ..cfg });
-        assert_ne!(a.x, c.x);
+        assert_ne!(a.dense_x(), c.dense_x());
     }
 
     #[test]
@@ -290,7 +395,7 @@ mod tests {
         };
         let direct = mnist_like(&cfg);
         let via = dataset_for(Objective::Hinge, &cfg);
-        assert_eq!(direct.x, via.x);
+        assert_eq!(direct.dense_x(), via.dense_x());
         assert_eq!(direct.y, via.y);
     }
 
@@ -328,7 +433,7 @@ mod tests {
         };
         let a = regression_like(&cfg);
         let b = regression_like(&cfg);
-        assert_eq!(a.x, b.x);
+        assert_eq!(a.dense_x(), b.dense_x());
         assert_eq!(a.y, b.y);
         // Real targets: not all ±1, O(1) scale, nonzero spread.
         assert!(a.y.iter().any(|&v| v != 1.0 && v != -1.0));
@@ -343,7 +448,7 @@ mod tests {
         }
         // Different seeds move the data.
         let c = regression_like(&SynthConfig { seed: 9, ..cfg });
-        assert_ne!(a.x, c.x);
+        assert_ne!(a.dense_x(), c.dense_x());
     }
 
     #[test]

@@ -15,8 +15,8 @@
 //!   info             engine/artifact diagnostics
 
 use hemingway::advisor::{
-    adaptive_cocoa_plus, run_elastic, AdaptiveConfig, AlgorithmId, Constraints, ElasticConfig,
-    FleetFilter, ModeFilter, Query, WorkloadFilter,
+    adaptive_cocoa_plus, run_elastic, AdaptiveConfig, AlgorithmId, Constraints, DataFilter,
+    ElasticConfig, FleetFilter, ModeFilter, Query, WorkloadFilter,
 };
 use hemingway::cluster::{BarrierMode, BspSim, ClusterSim, FleetSpec, Scenario};
 use hemingway::optim::Objective;
@@ -52,17 +52,20 @@ fn print_help() {
          commands:\n\
          \x20 run              --algo cocoa+ --machines 16 [--config f.json] [--native]\n\
          \x20 sweep            --algo cocoa+ [--seeds N] [--threads K] [--barrier MODE]\n\
-         \x20                  [--staleness-grid 0,2,8] [--fleets F,..]\n\
+         \x20                  [--staleness-grid 0,2,8] [--fleets F,..] [--data D,..]\n\
          \x20                  [--workloads hinge,logistic,ridge] [--resume] [--native]\n\
          \x20 fit-system       --algo cocoa+ [--native]\n\
          \x20 fit-convergence  --algo cocoa+ [--native]\n\
          \x20 fit              [--algos cocoa+,cocoa] [--barriers bsp,ssp:4,async]\n\
-         \x20                  [--fleets local48,straggly48] [--workloads W,..] [--native]\n\
+         \x20                  [--fleets local48,straggly48] [--workloads W,..]\n\
+         \x20                  [--data dense,sparse:0.01,..] [--native]\n\
          \x20 advise           --eps 1e-4 --budget 20 [--max-machines M] [--cost-weight W]\n\
          \x20                  [--barrier MODE|any] [--fleet SPEC|base|any]\n\
-         \x20                  [--workload hinge|logistic|ridge|base|any] [--native]\n\
+         \x20                  [--workload hinge|logistic|ridge|base|any]\n\
+         \x20                  [--data SCENARIO|base|any] [--native]\n\
          \x20 serve            [--algos ...] [--barriers ...] [--fleets ...]\n\
-         \x20                  [--workloads ...] [--native]  JSON queries on stdin\n\
+         \x20                  [--workloads ...] [--data ...] [--native]\n\
+         \x20                  JSON queries on stdin\n\
          \x20                  [--tcp <addr>] [--workers N] [--reload-ms MS]\n\
          \x20                  [--port-file <f>]  threaded TCP server instead of stdin\n\
          \x20 serve-load       --addr <host:port> [--clients N] [--queries M]\n\
@@ -85,15 +88,18 @@ fn print_help() {
          \x20                  or a preset (mixed48, straggly48); first entry = base fleet\n\
          \x20 --workloads <W,..> objectives to sweep/fit/serve (hinge, logistic, ridge);\n\
          \x20                  first entry = base workload (default: hinge)\n\
+         \x20 --data <D,..>    data scenarios to sweep/fit/serve: dense, sparse:<density>,\n\
+         \x20                  pos:<rate>, skew:<s> (parts joined with '+'); first entry =\n\
+         \x20                  base scenario; for advise, one scenario, 'base' or 'any'\n\
          \x20 --resume         (sweep) report how many cells the trace store already\n\
          \x20                  holds, then run only the remainder\n\
          \x20 --verbose         debug logging (or HEMINGWAY_LOG=debug)\n\n\
          `fit` writes <out_dir>/models/*.json; `advise` and `serve` load them\n\
          (fit-on-miss) and detect stale artifacts via the config hash.\n\
-         Queries default to barrier mode 'bsp' on the base fleet and base\n\
-         workload; pass --barrier any / --fleet any / --workload any (or wire\n\
-         \"barrier_mode\"/\"fleet\"/\"workload\" fields) to search over every\n\
-         fitted variant. The serve loop also answers\n\
+         Queries default to barrier mode 'bsp' on the base fleet, base\n\
+         workload and base data scenario; pass --barrier any / --fleet any /\n\
+         --workload any / --data any (or wire \"barrier_mode\"/\"fleet\"/\n\
+         \"workload\"/\"data\" fields) to search over every fitted variant. The serve loop also answers\n\
          {{\"query\":\"cheapest_to\",\"eps\":…}} in real fleet dollars, plus\n\
          {{\"query\":\"stats\"}} (qps + latency percentiles) and\n\
          {{\"query\":\"shutdown\"}} (graceful drain). With --tcp the same\n\
@@ -139,6 +145,17 @@ fn load_cfg(args: &Args) -> hemingway::Result<ExperimentConfig> {
             .map(Objective::parse)
             .collect::<hemingway::Result<_>>()?;
         hemingway::ensure!(!cfg.workloads.is_empty(), "--workloads lists no objectives");
+    }
+    if let Some(ds) = args.get("data") {
+        // `advise` reuses --data as its query filter; the filter-only
+        // spellings ('base', 'any') name no scenario axis to fit on.
+        if ds.trim() != "base" && ds.trim() != "any" {
+            cfg.data_scenarios = ds
+                .split(',')
+                .map(hemingway::data::DataScenario::canonical)
+                .collect::<hemingway::Result<_>>()?;
+            hemingway::ensure!(!cfg.data_scenarios.is_empty(), "--data lists no scenarios");
+        }
     }
     Ok(cfg)
 }
@@ -209,6 +226,7 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                 modes,
                 fleets: ctx.cfg.fleets.clone(),
                 workloads: ctx.cfg.workloads.clone(),
+                data: ctx.cfg.data_scenarios.clone(),
                 events: String::new(),
                 seeds,
                 base_seed: ctx.cfg.seed,
@@ -262,6 +280,7 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                 "barrier",
                 "fleet",
                 "workload",
+                "data",
                 "replicates",
                 "reached",
                 "iters_mean",
@@ -281,11 +300,19 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                     .iter()
                     .position(|f| *f == a.fleet)
                     .unwrap_or(0);
+                // Likewise the data column: index into the grid's data
+                // axis (0 = the base, or the implicit dense scenario).
+                let data_idx = grid
+                    .data
+                    .iter()
+                    .position(|d| *d == a.data)
+                    .unwrap_or(0);
                 agg_table.push(vec![
                     a.machines as f64,
                     a.barrier_mode.csv_id(),
                     fleet_idx as f64,
                     a.workload.csv_id(),
+                    data_idx as f64,
                     a.replicates as f64,
                     a.reached as f64,
                     a.iters_to_target.mean,
@@ -298,11 +325,12 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                     a.mean_iter_time.std,
                 ]);
                 println!(
-                    "  m={:<4} {:<7} {:<12} {:<8} reached {}/{}  iters-to-{:.0e} {}  iter-time {}s",
+                    "  m={:<4} {:<7} {:<12} {:<8} {:<8} reached {}/{}  iters-to-{:.0e} {}  iter-time {}s",
                     a.machines,
                     a.barrier_mode.as_str(),
                     if a.fleet.is_empty() { "-" } else { a.fleet.as_str() },
                     a.workload.as_str(),
+                    if a.data.is_empty() { "-" } else { a.data.as_str() },
                     a.reached,
                     a.replicates,
                     ctx.cfg.target_subopt,
@@ -385,6 +413,14 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                 barrier_mode: ModeFilter::parse(args.str_or("barrier", "bsp"))?,
                 fleet: FleetFilter::parse(args.str_or("fleet", "base"))?,
                 workload: WorkloadFilter::parse(args.str_or("workload", "base"))?,
+                data: match args.get("data") {
+                    // A comma-separated list names the fit axis (parsed
+                    // in load_cfg); searching then spans every fitted
+                    // scenario rather than pinning one.
+                    Some(d) if d.contains(',') => DataFilter::Any,
+                    Some(d) => DataFilter::parse(d)?,
+                    None => DataFilter::Base,
+                },
             };
             constraints.validate()?;
             let algos = parse_algos(args, &cfg)?;
@@ -403,26 +439,35 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                     format!(" workload={workload}")
                 }
             };
+            let data_tag = |data: &str| {
+                if data.is_empty() {
+                    String::new()
+                } else {
+                    format!(" data={data}")
+                }
+            };
             match registry.answer(&Query::FastestTo { eps, constraints: constraints.clone() }) {
                 Some(rec) => println!(
-                    "fastest to {eps:.0e}:   {} m={} [{}]{}{} → {:.2} predicted seconds",
+                    "fastest to {eps:.0e}:   {} m={} [{}]{}{}{} → {:.2} predicted seconds",
                     rec.algorithm,
                     rec.machines,
                     rec.barrier_mode,
                     fleet_tag(&rec.fleet),
                     workload_tag(rec.workload),
+                    data_tag(&rec.data),
                     rec.predicted.value()
                 ),
                 None => println!("fastest to {eps:.0e}:   no configuration reaches the target"),
             }
             match registry.answer(&Query::BestAt { budget, constraints: constraints.clone() }) {
                 Some(rec) => println!(
-                    "best loss in {budget}s: {} m={} [{}]{}{} → {:.2e} predicted suboptimality",
+                    "best loss in {budget}s: {} m={} [{}]{}{}{} → {:.2e} predicted suboptimality",
                     rec.algorithm,
                     rec.machines,
                     rec.barrier_mode,
                     fleet_tag(&rec.fleet),
                     workload_tag(rec.workload),
+                    data_tag(&rec.data),
                     rec.predicted.value()
                 ),
                 None => println!("best loss in {budget}s: no feasible configuration"),
@@ -434,26 +479,28 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                     .answer(&Query::CheapestTo { eps, constraints: constraints.clone() })
                 {
                     Some(rec) => println!(
-                        "cheapest to {eps:.0e}:  {} m={} [{}]{}{} → ${:.4} predicted",
+                        "cheapest to {eps:.0e}:  {} m={} [{}]{}{}{} → ${:.4} predicted",
                         rec.algorithm,
                         rec.machines,
                         rec.barrier_mode,
                         fleet_tag(&rec.fleet),
                         workload_tag(rec.workload),
+                        data_tag(&rec.data),
                         rec.predicted.value()
                     ),
                     None => println!("cheapest to {eps:.0e}:  no priceable configuration"),
                 }
             }
-            println!("\nprediction table (algorithm × m × mode × fleet × workload):");
+            println!("\nprediction table (algorithm × m × mode × fleet × workload × data):");
             for row in registry.table(eps, budget, &constraints) {
                 println!(
-                    "  {:<13} m={:<4} {:<7}{:<14}{:<10} time-to-ε {:<10} subopt@{budget}s {:.3e}",
+                    "  {:<13} m={:<4} {:<7}{:<14}{:<10}{:<12} time-to-ε {:<10} subopt@{budget}s {:.3e}",
                     row.algorithm,
                     row.machines,
                     row.barrier_mode.as_str(),
                     fleet_tag(&row.fleet),
                     workload_tag(row.workload),
+                    data_tag(&row.data),
                     row.time_to_eps
                         .map(|t| format!("{t:.2}s"))
                         .unwrap_or_else(|| "-".into()),

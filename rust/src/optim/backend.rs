@@ -73,13 +73,19 @@ impl<'e> HloBackend<'e> {
     }
 }
 
-/// The AOT artifacts are compiled for the hinge case study; any other
-/// workload must fail loudly here, never silently run hinge math.
-fn ensure_hinge(objective: Objective, kernel: &str) -> crate::Result<()> {
+/// The AOT artifacts are compiled for the hinge case study over dense
+/// row-major buffers; any other workload — or a CSR-stored partition —
+/// must fail loudly here, never silently run the wrong math.
+fn ensure_hinge(objective: Objective, part: &Partition, kernel: &str) -> crate::Result<()> {
     crate::ensure!(
         objective.is_hinge(),
         "the HLO backend's {kernel} artifact is compiled for the hinge workload; \
          '{objective}' requires the native backend (--native)"
+    );
+    crate::ensure!(
+        !part.is_sparse(),
+        "the HLO backend's {kernel} artifact expects dense row-major features; \
+         sparse data scenarios require the native backend (--native)"
     );
     Ok(())
 }
@@ -95,7 +101,7 @@ impl Backend for HloBackend<'_> {
         sigma_prime: f32,
         seed: u32,
     ) -> crate::Result<CocoaLocalOut> {
-        ensure_hinge(objective, "cocoa_local")?;
+        ensure_hinge(objective, part, "cocoa_local")?;
         self.engine
             .cocoa_local_part(part, alpha, w, lambda_n, sigma_prime, seed)
     }
@@ -107,7 +113,7 @@ impl Backend for HloBackend<'_> {
         weights: &[f32],
         w: &[f32],
     ) -> crate::Result<GradOut> {
-        ensure_hinge(objective, "grad")?;
+        ensure_hinge(objective, part, "grad")?;
         self.engine.grad_part(part, weights, w)
     }
 
@@ -120,7 +126,7 @@ impl Backend for HloBackend<'_> {
         t0: f32,
         seed: u32,
     ) -> crate::Result<Vec<f32>> {
-        ensure_hinge(objective, "local_sgd")?;
+        ensure_hinge(objective, part, "local_sgd")?;
         self.engine.local_sgd_part(part, w, lambda, t0, seed)
     }
 

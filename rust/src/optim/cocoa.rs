@@ -18,7 +18,7 @@ use super::checkpoint::{f32s_from_json, f32s_to_json};
 use super::objective::Objective;
 use super::problem::Problem;
 use super::{Algorithm, IterationCost};
-use crate::data::Partition;
+use crate::data::{partition_load, Partition};
 use crate::util::json::Json;
 use crate::util::rng::Lcg32;
 
@@ -42,15 +42,28 @@ pub struct Cocoa {
     seed: u32,
     machines: usize,
     d: usize,
+    /// Mean stored entries per row (= d for dense data) — what the
+    /// flops term scales with under sparse scenarios.
+    cost_dim: f64,
+    /// Per-machine relative data load (empty = balanced; see
+    /// [`IterationCost::load`]).
+    load: Vec<f64>,
 }
 
 impl Cocoa {
-    pub fn new(problem: &Problem, machines: usize, variant: CocoaVariant, seed: u32) -> Cocoa {
-        let parts = problem.data.partition(machines);
+    pub fn new(
+        problem: &Problem,
+        machines: usize,
+        variant: CocoaVariant,
+        seed: u32,
+    ) -> crate::Result<Cocoa> {
+        let parts = problem.data.partition(machines)?;
         let alpha = parts.iter().map(|p| vec![0.0f32; p.n_loc]).collect();
-        Cocoa {
+        Ok(Cocoa {
             w: vec![0.0f32; problem.data.d],
             d: problem.data.d,
+            cost_dim: problem.data.cost_dim(),
+            load: partition_load(problem.data.skew, &parts),
             lambda_n: problem.lambda_n(),
             objective: problem.objective,
             alpha,
@@ -58,7 +71,7 @@ impl Cocoa {
             variant,
             seed,
             machines,
-        }
+        })
     }
 
     fn sigma_prime(&self) -> f32 {
@@ -88,9 +101,9 @@ impl Cocoa {
     /// order and re-split. `w` is untouched, keeping primal/dual
     /// consistency; convergence guarantees continue to hold at the new
     /// σ'/γ.
-    pub fn repartition(&mut self, problem: &Problem, machines: usize) {
+    pub fn repartition(&mut self, problem: &Problem, machines: usize) -> crate::Result<()> {
         if machines == self.machines {
-            return;
+            return Ok(());
         }
         // Gather valid-row duals in global order.
         let mut global_alpha = Vec::with_capacity(problem.data.n);
@@ -98,8 +111,8 @@ impl Cocoa {
             global_alpha.extend_from_slice(&block[..part.valid]);
         }
         debug_assert_eq!(global_alpha.len(), problem.data.n);
-        // Re-split along the same contiguous row ranges partition() uses.
-        let parts = problem.data.partition(machines);
+        // Re-split along the same row assignment partition() uses.
+        let parts = problem.data.partition(machines)?;
         let mut alpha = Vec::with_capacity(machines);
         let mut cursor = 0usize;
         for p in &parts {
@@ -108,9 +121,11 @@ impl Cocoa {
             cursor += p.valid;
             alpha.push(block);
         }
+        self.load = partition_load(problem.data.skew, &parts);
         self.parts = parts;
         self.alpha = alpha;
         self.machines = machines;
+        Ok(())
     }
 }
 
@@ -155,14 +170,15 @@ impl Algorithm for Cocoa {
             *wv += (gamma * dw) as f32;
         }
 
-        // Cost model: h SDCA steps, each ~8d flops (two d-dot products
-        // for the effective margin + two d-axpys), plus the w/Δw
-        // broadcast/reduce pair.
+        // Cost model: h SDCA steps, each ~8·nnz flops (two dot products
+        // over the stored entries + two axpys; = 8d for dense data),
+        // plus the w/Δw broadcast/reduce pair (always dense vectors).
         Ok(IterationCost {
             machines: self.machines,
-            flops_per_machine: (h as f64) * 8.0 * self.d as f64,
+            flops_per_machine: (h as f64) * 8.0 * self.cost_dim,
             broadcast_bytes: 4.0 * self.d as f64,
             reduce_bytes: 4.0 * self.d as f64,
+            load: self.load.clone(),
         })
     }
 
@@ -238,8 +254,7 @@ impl Algorithm for Cocoa {
 
     fn resize(&mut self, problem: &Problem, machines: usize) -> crate::Result<()> {
         crate::ensure!(machines >= 1, "cannot resize to {machines} machines");
-        self.repartition(problem, machines);
-        Ok(())
+        self.repartition(problem, machines)
     }
 }
 
@@ -264,7 +279,7 @@ mod tests {
     fn single_machine_converges_fast() {
         let p = problem();
         let (p_star, _, _) = p.reference_solve(1e-7, 400);
-        let mut algo = Cocoa::new(&p, 1, CocoaVariant::Averaging, 1);
+        let mut algo = Cocoa::new(&p, 1, CocoaVariant::Averaging, 1).unwrap();
         run_n(&mut algo, 30);
         let sub = p.primal(algo.weights()) - p_star;
         assert!(sub < 1e-3, "m=1 suboptimality {sub}");
@@ -278,7 +293,7 @@ mod tests {
         let (p_star, _, _) = p.reference_solve(1e-7, 400);
         let iters = 15;
         let sub_at = |m: usize| -> f64 {
-            let mut algo = Cocoa::new(&p, m, CocoaVariant::Averaging, 1);
+            let mut algo = Cocoa::new(&p, m, CocoaVariant::Averaging, 1).unwrap();
             run_n(&mut algo, iters);
             p.primal(algo.weights()) - p_star
         };
@@ -298,8 +313,8 @@ mod tests {
         let (p_star, _, _) = p.reference_solve(1e-7, 400);
         let m = 16;
         let early = 5;
-        let mut avg = Cocoa::new(&p, m, CocoaVariant::Averaging, 1);
-        let mut add = Cocoa::new(&p, m, CocoaVariant::Adding, 1);
+        let mut avg = Cocoa::new(&p, m, CocoaVariant::Averaging, 1).unwrap();
+        let mut add = Cocoa::new(&p, m, CocoaVariant::Adding, 1).unwrap();
         run_n(&mut avg, early);
         run_n(&mut add, early);
         let s_avg = p.primal(avg.weights()) - p_star;
@@ -314,7 +329,7 @@ mod tests {
     fn duality_gap_shrinks_and_stays_valid() {
         let p = problem();
         let backend = NativeBackend;
-        let mut algo = Cocoa::new(&p, 4, CocoaVariant::Adding, 3);
+        let mut algo = Cocoa::new(&p, 4, CocoaVariant::Adding, 3).unwrap();
         let mut last_gap = f64::INFINITY;
         for i in 0..25 {
             algo.step(&backend, i).unwrap();
@@ -330,7 +345,7 @@ mod tests {
     #[test]
     fn alpha_stays_in_box_across_outer_iterations() {
         let p = problem();
-        let mut algo = Cocoa::new(&p, 8, CocoaVariant::Adding, 5);
+        let mut algo = Cocoa::new(&p, 8, CocoaVariant::Adding, 5).unwrap();
         run_n(&mut algo, 10);
         for block in algo.alpha() {
             assert!(block.iter().all(|&a| (0.0..=1.0).contains(&a)));
@@ -349,7 +364,7 @@ mod tests {
         for obj in Objective::ALL {
             let p = Problem::with_objective(dataset_for(obj, &cfg), 1e-2, obj);
             let (p_star, _, _) = p.reference_solve(1e-6, 400);
-            let mut algo = Cocoa::new(&p, 4, CocoaVariant::Adding, 3);
+            let mut algo = Cocoa::new(&p, 4, CocoaVariant::Adding, 3).unwrap();
             let start = p.primal(algo.weights()) - p_star;
             for i in 0..25 {
                 algo.step(&backend, i).unwrap();
@@ -374,8 +389,8 @@ mod tests {
     fn cost_model_scales_with_partition_size() {
         let p = problem();
         let backend = NativeBackend;
-        let mut a1 = Cocoa::new(&p, 1, CocoaVariant::Averaging, 1);
-        let mut a4 = Cocoa::new(&p, 4, CocoaVariant::Averaging, 1);
+        let mut a1 = Cocoa::new(&p, 1, CocoaVariant::Averaging, 1).unwrap();
+        let mut a4 = Cocoa::new(&p, 4, CocoaVariant::Averaging, 1).unwrap();
         let c1 = a1.step(&backend, 0).unwrap();
         let c4 = a4.step(&backend, 0).unwrap();
         assert!((c1.flops_per_machine / c4.flops_per_machine - 4.0).abs() < 1e-9);

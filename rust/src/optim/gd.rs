@@ -10,7 +10,7 @@ use super::checkpoint::{f32s_from_json, f32s_to_json, f64_from_json, f64_to_json
 use super::objective::Objective;
 use super::problem::Problem;
 use super::{Algorithm, IterationCost};
-use crate::data::Partition;
+use crate::data::{partition_load, Partition};
 use crate::util::json::Json;
 
 pub struct GradientDescent {
@@ -20,23 +20,28 @@ pub struct GradientDescent {
     objective: Objective,
     n: usize,
     d: usize,
+    cost_dim: f64,
+    load: Vec<f64>,
     machines: usize,
     /// Step schedule offset (η_t = 1/(λ(t + shift))).
     pub t_shift: f64,
 }
 
 impl GradientDescent {
-    pub fn new(problem: &Problem, machines: usize) -> GradientDescent {
-        GradientDescent {
-            parts: problem.data.partition(machines),
+    pub fn new(problem: &Problem, machines: usize) -> crate::Result<GradientDescent> {
+        let parts = problem.data.partition(machines)?;
+        Ok(GradientDescent {
+            load: partition_load(problem.data.skew, &parts),
+            parts,
             w: vec![0.0f32; problem.data.d],
             lambda: problem.lambda,
             objective: problem.objective,
             n: problem.data.n,
             d: problem.data.d,
+            cost_dim: problem.data.cost_dim(),
             machines,
             t_shift: 8.0,
-        }
+        })
     }
 }
 
@@ -72,9 +77,10 @@ impl Algorithm for GradientDescent {
         let n_loc = self.parts[0].n_loc as f64;
         Ok(IterationCost {
             machines: self.machines,
-            flops_per_machine: 4.0 * n_loc * self.d as f64,
+            flops_per_machine: 4.0 * n_loc * self.cost_dim,
             broadcast_bytes: 4.0 * self.d as f64,
             reduce_bytes: 4.0 * self.d as f64,
+            load: self.load.clone(),
         })
     }
 
@@ -120,7 +126,8 @@ impl Algorithm for GradientDescent {
             return Ok(());
         }
         crate::ensure!(machines >= 1, "cannot resize to {machines} machines");
-        self.parts = problem.data.partition(machines);
+        self.parts = problem.data.partition(machines)?;
+        self.load = partition_load(problem.data.skew, &self.parts);
         self.machines = machines;
         Ok(())
     }
@@ -138,8 +145,8 @@ mod tests {
         // depend on the degree of parallelism (only the timing does).
         let p = Problem::new(two_gaussians(120, 6, 2.0, 13), 1e-2);
         let backend = NativeBackend;
-        let mut g1 = GradientDescent::new(&p, 1);
-        let mut g8 = GradientDescent::new(&p, 8);
+        let mut g1 = GradientDescent::new(&p, 1).unwrap();
+        let mut g8 = GradientDescent::new(&p, 8).unwrap();
         for i in 0..20 {
             g1.step(&backend, i).unwrap();
             g8.step(&backend, i).unwrap();
@@ -153,7 +160,7 @@ mod tests {
     fn descends_monotonically_after_warmup() {
         let p = Problem::new(two_gaussians(120, 6, 2.0, 13), 1e-2);
         let backend = NativeBackend;
-        let mut gd = GradientDescent::new(&p, 4);
+        let mut gd = GradientDescent::new(&p, 4).unwrap();
         let mut prev = f64::INFINITY;
         for i in 0..40 {
             gd.step(&backend, i).unwrap();
@@ -177,7 +184,7 @@ mod tests {
         let backend = NativeBackend;
         for obj in Objective::ALL {
             let p = Problem::with_objective(dataset_for(obj, &cfg), 1e-2, obj);
-            let mut gd = GradientDescent::new(&p, 2);
+            let mut gd = GradientDescent::new(&p, 2).unwrap();
             let start = p.primal(gd.weights());
             for i in 0..60 {
                 gd.step(&backend, i).unwrap();

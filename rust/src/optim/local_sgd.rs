@@ -19,7 +19,7 @@ use super::objective::Objective;
 use super::problem::Problem;
 use super::stale::StaleWeights;
 use super::{Algorithm, IterationCost};
-use crate::data::Partition;
+use crate::data::{partition_load, Partition};
 use crate::util::json::Json;
 use crate::util::rng::Lcg32;
 
@@ -33,15 +33,19 @@ pub struct LocalSgd {
     seed: u32,
     machines: usize,
     d: usize,
+    cost_dim: f64,
+    load: Vec<f64>,
     /// Bounded-stale snapshots of `w` (driver-fed staleness; fresh
     /// under BSP).
     stale: StaleWeights,
 }
 
 impl LocalSgd {
-    pub fn new(problem: &Problem, machines: usize, seed: u32) -> LocalSgd {
-        LocalSgd {
-            parts: problem.data.partition(machines),
+    pub fn new(problem: &Problem, machines: usize, seed: u32) -> crate::Result<LocalSgd> {
+        let parts = problem.data.partition(machines)?;
+        Ok(LocalSgd {
+            load: partition_load(problem.data.skew, &parts),
+            parts,
             w: vec![0.0f32; problem.data.d],
             lambda: problem.lambda,
             objective: problem.objective,
@@ -50,8 +54,9 @@ impl LocalSgd {
             seed,
             machines,
             d: problem.data.d,
+            cost_dim: problem.data.cost_dim(),
             stale: StaleWeights::new(),
-        }
+        })
     }
 }
 
@@ -106,9 +111,10 @@ impl Algorithm for LocalSgd {
         self.t0 += h as f64;
         Ok(IterationCost {
             machines: self.machines,
-            flops_per_machine: (h as f64) * 6.0 * self.d as f64,
+            flops_per_machine: (h as f64) * 6.0 * self.cost_dim,
             broadcast_bytes: 4.0 * self.d as f64,
             reduce_bytes: 4.0 * self.d as f64,
+            load: self.load.clone(),
         })
     }
 
@@ -174,7 +180,8 @@ impl Algorithm for LocalSgd {
             return Ok(());
         }
         crate::ensure!(machines >= 1, "cannot resize to {machines} machines");
-        self.parts = problem.data.partition(machines);
+        self.parts = problem.data.partition(machines)?;
+        self.load = partition_load(problem.data.skew, &self.parts);
         self.machines = machines;
         Ok(())
     }
@@ -191,7 +198,7 @@ mod tests {
         let p = Problem::new(two_gaussians(256, 8, 2.0, 17), 1e-2);
         let (p_star, _, _) = p.reference_solve(1e-7, 500);
         let backend = NativeBackend;
-        let mut algo = LocalSgd::new(&p, 1, 3);
+        let mut algo = LocalSgd::new(&p, 1, 3).unwrap();
         for i in 0..60 {
             algo.step(&backend, i).unwrap();
         }
@@ -205,7 +212,7 @@ mod tests {
         let (p_star, _, _) = p.reference_solve(1e-7, 500);
         let backend = NativeBackend;
         let sub_at = |m: usize| {
-            let mut algo = LocalSgd::new(&p, m, 3);
+            let mut algo = LocalSgd::new(&p, m, 3).unwrap();
             for i in 0..25 {
                 algo.step(&backend, i).unwrap();
             }
@@ -220,8 +227,8 @@ mod tests {
     fn zero_staleness_is_bitwise_synchronous() {
         let p = Problem::new(two_gaussians(256, 8, 2.0, 17), 1e-2);
         let backend = NativeBackend;
-        let mut plain = LocalSgd::new(&p, 4, 3);
-        let mut staled = LocalSgd::new(&p, 4, 3);
+        let mut plain = LocalSgd::new(&p, 4, 3).unwrap();
+        let mut staled = LocalSgd::new(&p, 4, 3).unwrap();
         for i in 0..15 {
             plain.step(&backend, i).unwrap();
             staled.set_staleness(0);
@@ -236,7 +243,7 @@ mod tests {
         let (p_star, _, _) = p.reference_solve(1e-7, 500);
         let backend = NativeBackend;
         let run = |tau: usize| {
-            let mut algo = LocalSgd::new(&p, 4, 3);
+            let mut algo = LocalSgd::new(&p, 4, 3).unwrap();
             for i in 0..40 {
                 algo.set_staleness(tau);
                 algo.step(&backend, i).unwrap();
@@ -255,7 +262,7 @@ mod tests {
     fn step_schedule_continues_across_iterations() {
         let p = Problem::new(two_gaussians(64, 4, 2.0, 17), 1e-2);
         let backend = NativeBackend;
-        let mut algo = LocalSgd::new(&p, 2, 3);
+        let mut algo = LocalSgd::new(&p, 2, 3).unwrap();
         let t_before = algo.t0;
         algo.step(&backend, 0).unwrap();
         assert_eq!(algo.t0, t_before + 32.0); // h = n_loc = 32

@@ -41,6 +41,12 @@ pub struct IterationCost {
     pub broadcast_bytes: f64,
     /// Bytes reduced machines → driver (per machine contribution).
     pub reduce_bytes: f64,
+    /// Per-machine relative data load in (0, 1] for non-IID (skewed)
+    /// partitions: machine k holds `load[k]·n_loc` valid rows of the
+    /// padded partition, so its useful compute scales by `load[k]`
+    /// while stragglers still pace the barrier. Empty = balanced
+    /// partitions (the historical IID path, priced identically).
+    pub load: Vec<f64>,
 }
 
 /// A distributed optimization algorithm executing BSP iterations.
@@ -163,14 +169,14 @@ pub fn by_name(
 ) -> crate::Result<Box<dyn Algorithm>> {
     Ok(match AlgorithmId::parse(name)? {
         AlgorithmId::Cocoa => {
-            Box::new(Cocoa::new(problem, machines, CocoaVariant::Averaging, seed))
+            Box::new(Cocoa::new(problem, machines, CocoaVariant::Averaging, seed)?)
         }
         AlgorithmId::CocoaPlus => {
-            Box::new(Cocoa::new(problem, machines, CocoaVariant::Adding, seed))
+            Box::new(Cocoa::new(problem, machines, CocoaVariant::Adding, seed)?)
         }
-        AlgorithmId::MiniBatchSgd => Box::new(MiniBatchSgd::new(problem, machines, seed)),
-        AlgorithmId::LocalSgd => Box::new(LocalSgd::new(problem, machines, seed)),
-        AlgorithmId::Gd => Box::new(GradientDescent::new(problem, machines)),
+        AlgorithmId::MiniBatchSgd => Box::new(MiniBatchSgd::new(problem, machines, seed)?),
+        AlgorithmId::LocalSgd => Box::new(LocalSgd::new(problem, machines, seed)?),
+        AlgorithmId::Gd => Box::new(GradientDescent::new(problem, machines)?),
     })
 }
 

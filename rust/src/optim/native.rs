@@ -26,9 +26,24 @@ impl Backend for NativeBackend {
         sigma_prime: f32,
         seed: u32,
     ) -> crate::Result<CocoaLocalOut> {
-        // The hinge workload dispatches to the historical kernel
-        // verbatim — bit-identical to the pre-workload-axis path.
-        let (alpha, delta_w) = if objective.is_hinge() {
+        // Store dispatch first: CSR partitions run the sparse kernels;
+        // dense partitions route exactly as before. The hinge workload
+        // dispatches to the historical kernel verbatim — bit-identical
+        // to the pre-workload-axis path.
+        let (alpha, delta_w) = if let Some(csr) = &part.csr {
+            sdca_epoch_csr(
+                objective,
+                csr,
+                &part.y,
+                &part.mask,
+                alpha,
+                w,
+                lambda_n as f64,
+                sigma_prime as f64,
+                seed,
+                self.h_steps(part.n_loc),
+            )
+        } else if objective.is_hinge() {
             sdca_epoch(
                 &part.x,
                 &part.y,
@@ -64,7 +79,9 @@ impl Backend for NativeBackend {
         weights: &[f32],
         w: &[f32],
     ) -> crate::Result<GradOut> {
-        Ok(if objective.is_hinge() {
+        Ok(if let Some(csr) = &part.csr {
+            loss_stats_csr(objective, csr, &part.y, weights, w)
+        } else if objective.is_hinge() {
             hinge_stats(&part.x, &part.y, weights, w)
         } else {
             loss_stats(objective, &part.x, &part.y, weights, w)
@@ -80,7 +97,19 @@ impl Backend for NativeBackend {
         t0: f32,
         seed: u32,
     ) -> crate::Result<Vec<f32>> {
-        Ok(if objective.is_hinge() {
+        Ok(if let Some(csr) = &part.csr {
+            sgd_epoch_csr(
+                objective,
+                csr,
+                &part.y,
+                &part.mask,
+                w,
+                lambda as f64,
+                t0 as f64,
+                seed,
+                self.h_steps(part.n_loc),
+            )
+        } else if objective.is_hinge() {
             pegasos_epoch(
                 &part.x,
                 &part.y,
@@ -369,6 +398,165 @@ pub fn sgd_epoch_obj(
     w.iter().map(|&v| v as f32).collect()
 }
 
+/// One local SDCA epoch over CSR rows — the sparse mirror of
+/// [`sdca_epoch_obj`]: the same LCG coordinate stream, the same f64
+/// accumulation and update formula, with the dense row walk replaced
+/// by iteration over each row's stored `(column, value)` pairs. Rows
+/// store entries in ascending column order, so at density 1.0 (every
+/// entry stored, zeros included) the accumulation order — and hence
+/// every intermediate rounding — is identical to the dense kernel:
+/// the two agree to 0 ULP. The inner loop is allocation-free; the
+/// dual and dw buffers are built once per epoch, as in the dense path.
+#[allow(clippy::too_many_arguments)]
+pub fn sdca_epoch_csr(
+    objective: Objective,
+    csr: &crate::data::Csr,
+    y: &[f32],
+    mask: &[f32],
+    alpha: &[f32],
+    w: &[f32],
+    lambda_n: f64,
+    sigma_prime: f64,
+    seed: u32,
+    h_steps: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let n_loc = y.len();
+    debug_assert_eq!(csr.rows(), n_loc);
+    let mut a: Vec<f64> = alpha.iter().map(|&v| v as f64).collect();
+    let mut dw = vec![0.0f64; w.len()];
+    let mut lcg = Lcg32 { state: seed };
+    for _ in 0..h_steps {
+        let j = lcg.next_index(n_loc as u32) as usize;
+        let (cols, vals) = csr.row(j);
+        let qj: f64 = vals.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let dot: f64 = cols
+            .iter()
+            .zip(vals)
+            .map(|(&c, &xi)| {
+                let c = c as usize;
+                xi as f64 * (w[c] as f64 + sigma_prime * dw[c])
+            })
+            .sum();
+        let denom = (sigma_prime * qj).max(1e-12);
+        let yj = y[j] as f64;
+        let a_new = if qj > 0.0 {
+            objective.dual_step(a[j], yj, dot, denom, lambda_n)
+        } else {
+            a[j]
+        };
+        let delta = (a_new - a[j]) * mask[j] as f64;
+        a[j] += delta;
+        if delta != 0.0 {
+            let scale = delta * objective.coef_scale(yj) / lambda_n;
+            for (&c, &xi) in cols.iter().zip(vals) {
+                dw[c as usize] += scale * xi as f64;
+            }
+        }
+    }
+    (
+        a.iter().map(|&v| v as f32).collect(),
+        dw.iter().map(|&v| v as f32).collect(),
+    )
+}
+
+/// Weighted loss statistics over CSR rows — the sparse mirror of
+/// [`loss_stats`], with the same per-row f64 score/gradient arithmetic
+/// walking stored entries instead of the dense row slice.
+pub fn loss_stats_csr(
+    objective: Objective,
+    csr: &crate::data::Csr,
+    y: &[f32],
+    weights: &[f32],
+    w: &[f32],
+) -> GradOut {
+    let n_loc = y.len();
+    debug_assert_eq!(csr.rows(), n_loc);
+    let mut grad = vec![0.0f64; w.len()];
+    let mut loss = 0.0f64;
+    let mut correct = 0.0f64;
+    for i in 0..n_loc {
+        let wt = weights[i] as f64;
+        if wt == 0.0 {
+            continue;
+        }
+        let (cols, vals) = csr.row(i);
+        let score: f64 = cols
+            .iter()
+            .zip(vals)
+            .map(|(&c, &a)| a as f64 * w[c as usize] as f64)
+            .sum();
+        let yi = y[i] as f64;
+        loss += wt * objective.loss(score, yi);
+        let g = objective.dloss(score, yi);
+        if g != 0.0 {
+            let c = wt * g;
+            for (&col, &xv) in cols.iter().zip(vals) {
+                grad[col as usize] += c * xv as f64;
+            }
+        }
+        if objective.is_hit(score, yi) {
+            correct += wt;
+        }
+    }
+    GradOut {
+        grad_sum: grad.iter().map(|&v| v as f32).collect(),
+        hinge_sum: loss as f32,
+        correct_sum: correct as f32,
+    }
+}
+
+/// One local SGD epoch over CSR rows — the sparse mirror of
+/// [`sgd_epoch_obj`]. The shrink factor touches every coordinate (the
+/// ℓ2 term is dense regardless of the data), so each step first scales
+/// the whole iterate and then adds the gradient gain at the stored
+/// columns only. The rounding sequence per coordinate — one multiply,
+/// one multiply, one add — is the same as the dense kernel's fused
+/// `shrink*w + gain*x` expression, so density-1.0 CSR agrees to 0 ULP.
+#[allow(clippy::too_many_arguments)]
+pub fn sgd_epoch_csr(
+    objective: Objective,
+    csr: &crate::data::Csr,
+    y: &[f32],
+    mask: &[f32],
+    w0: &[f32],
+    lambda: f64,
+    t0: f64,
+    seed: u32,
+    h_steps: usize,
+) -> Vec<f32> {
+    let n_loc = y.len();
+    debug_assert_eq!(csr.rows(), n_loc);
+    let mut w: Vec<f64> = w0.iter().map(|&v| v as f64).collect();
+    let mut lcg = Lcg32 { state: seed };
+    let step_cap = objective.max_stable_step(lambda);
+    for t in 0..h_steps {
+        let j = lcg.next_index(n_loc as u32) as usize;
+        let (cols, vals) = csr.row(j);
+        let mut eta = 1.0 / (lambda * (t0 + t as f64 + 1.0));
+        if let Some(cap) = step_cap {
+            eta = eta.min(cap);
+        }
+        let dot: f64 = cols
+            .iter()
+            .zip(vals)
+            .map(|(&c, &xv)| xv as f64 * w[c as usize])
+            .sum();
+        let g = objective.dloss(dot, y[j] as f64);
+        let mj = mask[j] as f64;
+        let shrink = 1.0 - eta * lambda * mj;
+        let gain = -eta * g * mj;
+        for wv in w.iter_mut() {
+            *wv *= shrink;
+        }
+        if gain != 0.0 {
+            for (&c, &xv) in cols.iter().zip(vals) {
+                w[c as usize] += gain * xv as f64;
+            }
+        }
+    }
+    w.iter().map(|&v| v as f32).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -403,7 +591,7 @@ mod tests {
     #[test]
     fn sdca_dw_is_consistent_with_alpha_delta() {
         let ds = two_gaussians(32, 6, 1.0, 3);
-        let parts = ds.partition(1);
+        let parts = ds.partition(1).unwrap();
         let p = &parts[0];
         let alpha = vec![0.0f32; 32];
         let w = vec![0.0f32; 6];
@@ -425,7 +613,7 @@ mod tests {
     #[test]
     fn hinge_stats_ignores_zero_weight_rows() {
         let ds = two_gaussians(16, 4, 1.0, 4);
-        let parts = ds.partition(1);
+        let parts = ds.partition(1).unwrap();
         let p = &parts[0];
         let w = vec![0.1f32; 4];
         let full = hinge_stats(&p.x, &p.y, &p.mask, &w);
@@ -442,7 +630,7 @@ mod tests {
     #[test]
     fn pegasos_masked_rows_do_not_move_w() {
         let ds = two_gaussians(8, 4, 1.0, 5);
-        let parts = ds.partition(1);
+        let parts = ds.partition(1).unwrap();
         let p = &parts[0];
         let mask = vec![0.0f32; 8]; // everything masked
         let w0 = vec![0.3f32, -0.2, 0.1, 0.0];
@@ -457,7 +645,7 @@ mod tests {
         // on in-box duals — pinning that the two formulations are one
         // update rule, not two drifting ones.
         let ds = two_gaussians(48, 6, 1.5, 8);
-        let parts = ds.partition(1);
+        let parts = ds.partition(1).unwrap();
         let p = &parts[0];
         let alpha = vec![0.25f32; 48];
         let w = vec![0.05f32; 6];
@@ -491,7 +679,7 @@ mod tests {
         };
         for obj in [Objective::Logistic, Objective::Ridge] {
             let ds = dataset_for(obj, &cfg);
-            let parts = ds.partition(1);
+            let parts = ds.partition(1).unwrap();
             let p = &parts[0];
             // Fully masked epochs change nothing.
             let mask0 = vec![0.0f32; p.n_loc];
@@ -523,7 +711,7 @@ mod tests {
         };
         for obj in [Objective::Logistic, Objective::Ridge] {
             let ds = dataset_for(obj, &cfg);
-            let parts = ds.partition(1);
+            let parts = ds.partition(1).unwrap();
             let p = &parts[0];
             let w = vec![0.1f32, -0.2, 0.05, 0.3];
             let out = loss_stats(obj, &p.x, &p.y, &p.mask, &w);
@@ -542,6 +730,52 @@ mod tests {
                     "{obj} coord {j}: analytic {ana} vs numeric {num}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn csr_kernels_at_full_density_match_dense_to_zero_ulp() {
+        use crate::data::sparse::Csr;
+        use crate::data::synth::{dataset_for, SynthConfig};
+        let cfg = SynthConfig {
+            n: 40,
+            d: 6,
+            ..Default::default()
+        };
+        for obj in [Objective::Hinge, Objective::Logistic, Objective::Ridge] {
+            let ds = dataset_for(obj, &cfg);
+            let parts = ds.partition(1).unwrap();
+            let p = &parts[0];
+            // Full-density CSR: every entry stored (zeros included), so
+            // the accumulation order is identical to the dense walk.
+            let csr = Csr::from_dense_full(&p.x, p.n_loc, p.d);
+            let alpha = vec![0.1f32; p.n_loc];
+            let w = vec![0.05f32; 6];
+            let (da, ddw) = if obj.is_hinge() {
+                sdca_epoch(&p.x, &p.y, &p.mask, &alpha, &w, 0.4, 2.0, 31, 90)
+            } else {
+                sdca_epoch_obj(obj, &p.x, &p.y, &p.mask, &alpha, &w, 0.4, 2.0, 31, 90)
+            };
+            let (sa, sdw) =
+                sdca_epoch_csr(obj, &csr, &p.y, &p.mask, &alpha, &w, 0.4, 2.0, 31, 90);
+            assert_eq!(da, sa, "{obj}: sdca alpha drifted");
+            assert_eq!(ddw, sdw, "{obj}: sdca dw drifted");
+            let dsgd = if obj.is_hinge() {
+                pegasos_epoch(&p.x, &p.y, &p.mask, &w, 0.02, 0.0, 31, 90)
+            } else {
+                sgd_epoch_obj(obj, &p.x, &p.y, &p.mask, &w, 0.02, 0.0, 31, 90)
+            };
+            let ssgd = sgd_epoch_csr(obj, &csr, &p.y, &p.mask, &w, 0.02, 0.0, 31, 90);
+            assert_eq!(dsgd, ssgd, "{obj}: sgd weights drifted");
+            let dg = if obj.is_hinge() {
+                hinge_stats(&p.x, &p.y, &p.mask, &dsgd)
+            } else {
+                loss_stats(obj, &p.x, &p.y, &p.mask, &dsgd)
+            };
+            let sg = loss_stats_csr(obj, &csr, &p.y, &p.mask, &dsgd);
+            assert_eq!(dg.grad_sum, sg.grad_sum, "{obj}: grad drifted");
+            assert_eq!(dg.hinge_sum.to_bits(), sg.hinge_sum.to_bits(), "{obj}");
+            assert_eq!(dg.correct_sum.to_bits(), sg.correct_sum.to_bits(), "{obj}");
         }
     }
 }

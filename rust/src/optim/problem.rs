@@ -48,6 +48,20 @@ impl Problem {
         self.lambda * self.data.n as f64
     }
 
+    /// `x_iᵀw` in f64, dispatching on the store. The dense arm is the
+    /// historical zip-sum expression verbatim; the sparse arm walks
+    /// stored entries in ascending column order, so at density 1.0 the
+    /// two accumulate identically.
+    fn score(&self, i: usize, w: &[f32]) -> f64 {
+        match self.data.csr() {
+            Some(csr) => csr.dot_row(i, w),
+            None => {
+                let xi = self.data.row(i);
+                xi.iter().zip(w).map(|(&a, &b)| a as f64 * b as f64).sum()
+            }
+        }
+    }
+
     /// Exact primal objective (f64, native). The hinge arm of
     /// [`Objective::loss`] is the historical expression, so the hinge
     /// workload's primal is bit-identical to the pre-redesign path.
@@ -56,8 +70,7 @@ impl Problem {
         assert_eq!(w.len(), d);
         let mut loss = 0.0f64;
         for i in 0..self.data.n {
-            let xi = self.data.row(i);
-            let score: f64 = xi.iter().zip(w).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let score = self.score(i, w);
             loss += self.objective.loss(score, self.data.y[i] as f64);
         }
         let ww: f64 = w.iter().map(|&v| (v as f64) * (v as f64)).sum();
@@ -79,8 +92,7 @@ impl Problem {
     pub fn accuracy(&self, w: &[f32]) -> f64 {
         let mut correct = 0usize;
         for i in 0..self.data.n {
-            let xi = self.data.row(i);
-            let score: f64 = xi.iter().zip(w).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let score = self.score(i, w);
             if self.objective.is_hit(score, self.data.y[i] as f64) {
                 correct += 1;
             }
@@ -106,14 +118,17 @@ impl Problem {
         let mut a = vec![0.0f64; n];
         let mut w = vec![0.0f64; d];
         let mut gap = f64::INFINITY;
-        // Precompute row norms.
+        // Precompute row norms (store-dispatched; both arms accumulate
+        // in f64 over the same entry order at full density).
         let qs: Vec<f64> = (0..n)
-            .map(|i| {
-                self.data
+            .map(|i| match self.data.csr() {
+                Some(csr) => csr.row_norm_sq(i),
+                None => self
+                    .data
                     .row(i)
                     .iter()
                     .map(|&v| (v as f64) * (v as f64))
-                    .sum()
+                    .sum(),
             })
             .collect();
         let contrib_sum = |a: &[f64]| -> f64 {
@@ -129,16 +144,37 @@ impl Problem {
                 if qs[j] <= 0.0 {
                     continue;
                 }
-                let xj = self.data.row(j);
                 let yj = self.data.y[j] as f64;
-                let dot: f64 = xj.iter().zip(&w).map(|(&xv, wv)| xv as f64 * wv).sum();
+                let dot: f64 = match self.data.csr() {
+                    Some(csr) => {
+                        let (cols, vals) = csr.row(j);
+                        cols.iter()
+                            .zip(vals)
+                            .map(|(&c, &xv)| xv as f64 * w[c as usize])
+                            .sum()
+                    }
+                    None => {
+                        let xj = self.data.row(j);
+                        xj.iter().zip(&w).map(|(&xv, wv)| xv as f64 * wv).sum()
+                    }
+                };
                 let a_new = obj.dual_step(a[j], yj, dot, qs[j], lambda_n);
                 let delta = a_new - a[j];
                 if delta != 0.0 {
                     a[j] = a_new;
                     let scale = delta * obj.coef_scale(yj) / lambda_n;
-                    for (wv, &xv) in w.iter_mut().zip(xj) {
-                        *wv += scale * xv as f64;
+                    match self.data.csr() {
+                        Some(csr) => {
+                            let (cols, vals) = csr.row(j);
+                            for (&c, &xv) in cols.iter().zip(vals) {
+                                w[c as usize] += scale * xv as f64;
+                            }
+                        }
+                        None => {
+                            for (wv, &xv) in w.iter_mut().zip(self.data.row(j)) {
+                                *wv += scale * xv as f64;
+                            }
+                        }
                     }
                 }
             }

@@ -21,7 +21,7 @@ use super::objective::Objective;
 use super::problem::Problem;
 use super::stale::StaleWeights;
 use super::{Algorithm, IterationCost};
-use crate::data::Partition;
+use crate::data::{partition_load, Partition};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 
@@ -37,6 +37,8 @@ pub struct MiniBatchSgd {
     rng: Pcg32,
     machines: usize,
     d: usize,
+    cost_dim: f64,
+    load: Vec<f64>,
     weights_buf: Vec<Vec<f32>>,
     /// Bounded-stale snapshots of `w` (driver-fed staleness; fresh
     /// under BSP).
@@ -44,16 +46,18 @@ pub struct MiniBatchSgd {
 }
 
 impl MiniBatchSgd {
-    pub fn new(problem: &Problem, machines: usize, seed: u32) -> MiniBatchSgd {
-        let parts = problem.data.partition(machines);
+    pub fn new(problem: &Problem, machines: usize, seed: u32) -> crate::Result<MiniBatchSgd> {
+        let parts = problem.data.partition(machines)?;
         let weights_buf = parts.iter().map(|p| vec![0.0f32; p.n_loc]).collect();
         // Paper-style setup: batch grows with parallelism (each machine
         // contributes a fixed local batch), the root cause of the
         // O(√b) convergence penalty at scale.
         let local_batch = 16usize;
-        MiniBatchSgd {
+        Ok(MiniBatchSgd {
             w: vec![0.0f32; problem.data.d],
             d: problem.data.d,
+            cost_dim: problem.data.cost_dim(),
+            load: partition_load(problem.data.skew, &parts),
             lambda: problem.lambda,
             objective: problem.objective,
             batch: local_batch * machines,
@@ -66,7 +70,7 @@ impl MiniBatchSgd {
             machines,
             weights_buf,
             stale: StaleWeights::new(),
-        }
+        })
     }
 }
 
@@ -160,10 +164,11 @@ impl Algorithm for MiniBatchSgd {
         let n_loc = self.parts[0].n_loc as f64;
         Ok(IterationCost {
             machines: self.machines,
-            flops_per_machine: 2.0 * n_loc * self.d as f64
-                + 2.0 * local_b as f64 * self.d as f64,
+            flops_per_machine: 2.0 * n_loc * self.cost_dim
+                + 2.0 * local_b as f64 * self.cost_dim,
             broadcast_bytes: 4.0 * self.d as f64,
             reduce_bytes: 4.0 * self.d as f64,
+            load: self.load.clone(),
         })
     }
 
@@ -245,7 +250,8 @@ impl Algorithm for MiniBatchSgd {
         }
         crate::ensure!(machines >= 1, "cannot resize to {machines} machines");
         let local = (self.batch / self.machines).max(1);
-        self.parts = problem.data.partition(machines);
+        self.parts = problem.data.partition(machines)?;
+        self.load = partition_load(problem.data.skew, &self.parts);
         self.weights_buf = self.parts.iter().map(|p| vec![0.0f32; p.n_loc]).collect();
         self.batch = local * machines;
         self.machines = machines;
@@ -268,7 +274,7 @@ mod tests {
         let p = problem();
         let (p_star, _, _) = p.reference_solve(1e-7, 500);
         let backend = NativeBackend;
-        let mut algo = MiniBatchSgd::new(&p, 4, 1);
+        let mut algo = MiniBatchSgd::new(&p, 4, 1).unwrap();
         for i in 0..300 {
             algo.step(&backend, i).unwrap();
         }
@@ -279,22 +285,22 @@ mod tests {
     #[test]
     fn batch_scales_with_machines() {
         let p = problem();
-        assert_eq!(MiniBatchSgd::new(&p, 1, 1).batch, 16);
-        assert_eq!(MiniBatchSgd::new(&p, 8, 1).batch, 128);
+        assert_eq!(MiniBatchSgd::new(&p, 1, 1).unwrap().batch, 16);
+        assert_eq!(MiniBatchSgd::new(&p, 8, 1).unwrap().batch, 128);
     }
 
     #[test]
     fn deterministic_given_seed() {
         let p = problem();
         let backend = NativeBackend;
-        let mut a = MiniBatchSgd::new(&p, 4, 9);
-        let mut b = MiniBatchSgd::new(&p, 4, 9);
+        let mut a = MiniBatchSgd::new(&p, 4, 9).unwrap();
+        let mut b = MiniBatchSgd::new(&p, 4, 9).unwrap();
         for i in 0..5 {
             a.step(&backend, i).unwrap();
             b.step(&backend, i).unwrap();
         }
         assert_eq!(a.weights(), b.weights());
-        let mut c = MiniBatchSgd::new(&p, 4, 10);
+        let mut c = MiniBatchSgd::new(&p, 4, 10).unwrap();
         for i in 0..5 {
             c.step(&backend, i).unwrap();
         }
@@ -307,8 +313,8 @@ mod tests {
         // bit-identical weights to the plain synchronous step.
         let p = problem();
         let backend = NativeBackend;
-        let mut plain = MiniBatchSgd::new(&p, 4, 9);
-        let mut staled = MiniBatchSgd::new(&p, 4, 9);
+        let mut plain = MiniBatchSgd::new(&p, 4, 9).unwrap();
+        let mut staled = MiniBatchSgd::new(&p, 4, 9).unwrap();
         for i in 0..20 {
             plain.step(&backend, i).unwrap();
             staled.set_staleness(0);
@@ -323,7 +329,7 @@ mod tests {
         let (p_star, _, _) = p.reference_solve(1e-7, 500);
         let backend = NativeBackend;
         let run = |tau: usize| {
-            let mut algo = MiniBatchSgd::new(&p, 4, 1);
+            let mut algo = MiniBatchSgd::new(&p, 4, 1).unwrap();
             for i in 0..200 {
                 algo.set_staleness(if i >= tau { tau } else { 0 });
                 algo.step(&backend, i).unwrap();
@@ -347,8 +353,8 @@ mod tests {
         let (p_star, _, _) = p.reference_solve(1e-7, 500);
         let backend = NativeBackend;
         let iters = 30;
-        let mut sgd = MiniBatchSgd::new(&p, 16, 1);
-        let mut cocoa = Cocoa::new(&p, 16, CocoaVariant::Averaging, 1);
+        let mut sgd = MiniBatchSgd::new(&p, 16, 1).unwrap();
+        let mut cocoa = Cocoa::new(&p, 16, CocoaVariant::Averaging, 1).unwrap();
         for i in 0..iters {
             sgd.step(&backend, i).unwrap();
             cocoa.step(&backend, i).unwrap();

@@ -42,6 +42,12 @@ pub struct Trace {
     /// is carried by the binary sweep store (format v6 when non-empty)
     /// and left out of the numeric trace table.
     pub events: String,
+    /// Canonical data-scenario string the run trained on
+    /// ([`crate::data::DataScenario`] grammar: `sparse:0.01+skew:0.8`).
+    /// Empty = the historical dense IID dataset. Run metadata like
+    /// [`fleet`](Self::fleet)/[`events`](Self::events): carried by the
+    /// binary sweep store (format v7 when non-empty), not a CSV column.
+    pub data: String,
     pub p_star: f64,
     pub records: Vec<Record>,
 }
@@ -55,6 +61,7 @@ impl Trace {
             fleet: String::new(),
             workload: Objective::Hinge,
             events: String::new(),
+            data: String::new(),
             p_star,
             records: Vec::new(),
         }

@@ -14,7 +14,8 @@ use crate::advisor::{
 };
 use crate::cluster::{BarrierMode, ClusterSim, FleetSpec, HardwareProfile, Scenario};
 use crate::config::ExperimentConfig;
-use crate::data::synth::dataset_for;
+use crate::data::synth::{dataset_for, dataset_for_scenario};
+use crate::data::DataScenario;
 use crate::ernest::{ErnestModel, Observation};
 use crate::hemingway_model::{points_from_traces, ConvPoint, ConvergenceModel, FeatureLibrary};
 use crate::optim::{
@@ -53,6 +54,10 @@ pub struct ReproContext {
     /// generation plus a reference solve — on first use and shared
     /// across grids from then on).
     workload_problems: Mutex<Vec<(Objective, Arc<WorkloadProblem>)>>,
+    /// Same lazy cache for non-dense data scenarios, keyed by
+    /// (workload, canonical scenario string). Dense/implicit cells
+    /// route through `workload_problems` instead — one shared problem.
+    scenario_problems: Mutex<Vec<((Objective, String), Arc<WorkloadProblem>)>>,
 }
 
 impl ReproContext {
@@ -126,6 +131,7 @@ impl ReproContext {
             sweep,
             context_key,
             workload_problems,
+            scenario_problems: Mutex::new(Vec::new()),
             cfg,
         })
     }
@@ -154,6 +160,44 @@ impl ReproContext {
         );
         let wp = Arc::new(WorkloadProblem { problem, p_star });
         cache.push((workload, wp.clone()));
+        Ok(wp)
+    }
+
+    /// The (problem, P*) pair a (workload, data scenario) cell runs
+    /// against. The implicit (`""`) and explicit `dense` scenarios
+    /// route through [`Self::workload_problem`] — one shared,
+    /// bit-identical historical problem; every other scenario is built
+    /// on first use (scenario generation + reference solve) and cached
+    /// for every later grid.
+    pub fn scenario_problem(
+        &self,
+        workload: Objective,
+        data: &str,
+    ) -> crate::Result<Arc<WorkloadProblem>> {
+        if data.is_empty() {
+            return self.workload_problem(workload);
+        }
+        let scenario = DataScenario::parse(data)?;
+        if scenario.is_dense() {
+            return self.workload_problem(workload);
+        }
+        let mut cache = self.scenario_problems.lock().unwrap();
+        if let Some((_, wp)) = cache
+            .iter()
+            .find(|((w, d), _)| *w == workload && d.as_str() == data)
+        {
+            return Ok(wp.clone());
+        }
+        let matrix = dataset_for_scenario(workload, &scenario, &self.cfg.synth());
+        let problem = Problem::with_objective(matrix, self.cfg.lambda, workload);
+        let t0 = std::time::Instant::now();
+        let (p_star, _, gap) = problem.reference_solve(1e-7, 600);
+        crate::log_info!(
+            "workload {workload} data {data} ready: P*={p_star:.6} (gap {gap:.2e}, {:.2}s)",
+            t0.elapsed().as_secs_f64()
+        );
+        let wp = Arc::new(WorkloadProblem { problem, p_star });
+        cache.push(((workload, data.to_string()), wp.clone()));
         Ok(wp)
     }
 
@@ -186,6 +230,16 @@ impl ReproContext {
     pub fn base_fleet_axis(&self) -> Vec<String> {
         match self.cfg.fleets.first() {
             Some(f) => vec![f.clone()],
+            None => Vec::new(),
+        }
+    }
+
+    /// Data axis for single-scenario grids: the base scenario alone,
+    /// in the shape `SweepGrid.data` expects (empty = the implicit
+    /// dense scenario of the pre-data-axis cache-key shape).
+    pub fn base_data_axis(&self) -> Vec<String> {
+        match self.cfg.data_scenarios.first() {
+            Some(d) => vec![d.clone()],
             None => Vec::new(),
         }
     }
@@ -239,7 +293,7 @@ impl ReproContext {
         // is paid up front, and workers share read-only parsed specs
         // and problems instead of rebuilding them per cell.
         let mut fleets: Vec<(String, FleetSpec)> = Vec::new();
-        let mut problems: Vec<(Objective, Arc<WorkloadProblem>)> = Vec::new();
+        let mut problems: Vec<((Objective, String), Arc<WorkloadProblem>)> = Vec::new();
         for cell in &cells {
             // The HLO backend's artifacts are hinge-only; fail before
             // the expensive per-workload reference solves, not on the
@@ -250,11 +304,25 @@ impl ReproContext {
                  the HLO artifacts are compiled for hinge",
                 cell.workload
             );
+            // Likewise any non-dense scenario: the artifacts are
+            // compiled for the dense store and uniform partitions.
+            crate::ensure!(
+                self.use_native || cell.data.is_empty() || cell.data == "dense",
+                "data scenario '{}' requires the native backend (--native); \
+                 the HLO artifacts are compiled for the dense IID store",
+                cell.data
+            );
             if !fleets.iter().any(|(name, _)| *name == cell.fleet) {
                 fleets.push((cell.fleet.clone(), self.fleet_for(&cell.fleet)?));
             }
-            if !problems.iter().any(|(w, _)| *w == cell.workload) {
-                problems.push((cell.workload, self.workload_problem(cell.workload)?));
+            if !problems
+                .iter()
+                .any(|((w, d), _)| *w == cell.workload && *d == cell.data)
+            {
+                problems.push((
+                    (cell.workload, cell.data.clone()),
+                    self.scenario_problem(cell.workload, &cell.data)?,
+                ));
             }
         }
         if self.use_native {
@@ -287,6 +355,7 @@ impl ReproContext {
             SweepGrid::single(algo_name, &[machines], self.cfg.seed, self.run_config());
         grid.fleets = self.base_fleet_axis();
         grid.workloads = vec![self.base_workload()];
+        grid.data = self.base_data_axis();
         let traces = self.run_grid(&grid)?;
         Ok(traces.into_iter().next().expect("single-cell grid"))
     }
@@ -302,6 +371,7 @@ impl ReproContext {
         let mut grid = SweepGrid::single(algo_name, machines, self.cfg.seed, run);
         grid.fleets = self.base_fleet_axis();
         grid.workloads = vec![self.base_workload()];
+        grid.data = self.base_data_axis();
         self.run_grid(&grid)
     }
 
@@ -313,6 +383,7 @@ impl ReproContext {
             modes: vec![BarrierMode::Bsp],
             fleets: self.base_fleet_axis(),
             workloads: vec![self.base_workload()],
+            data: self.base_data_axis(),
             events: String::new(),
             seeds: 1,
             base_seed: self.cfg.seed,
@@ -389,10 +460,12 @@ impl ReproContext {
     ) -> crate::Result<Vec<Observation>> {
         // Profiling runs on the base fleet (the uniform profile when
         // the config names no fleets — bit-identical to the historical
-        // plain-profile path).
+        // plain-profile path) and the base data scenario (ditto: the
+        // implicit dense scenario shares `self.problem`).
         let fleet = self.fleet_for(&self.base_fleet_name())?;
+        let base = self.scenario_problem(self.base_workload(), self.cfg.base_data())?;
         let per_config: Vec<Vec<Observation>> = if self.use_native {
-            let problem = &self.problem;
+            let problem = &base.problem;
             let fleet = &fleet;
             let seed = self.cfg.seed;
             let lambda = self.cfg.lambda;
@@ -414,7 +487,7 @@ impl ReproContext {
             for c in configs {
                 out.push(profile_one(
                     backend.as_ref(),
-                    &self.problem,
+                    &base.problem,
                     &fleet,
                     self.cfg.seed,
                     self.cfg.lambda,
@@ -474,6 +547,7 @@ impl ReproContext {
         let mut model = CombinedModel::new(ernest, conv, self.problem.data.n as f64);
         model.base_fleet = base_fleet.clone();
         model.base_workload = base_workload;
+        model.base_data = self.cfg.base_data().to_string();
         for &mode in &self.cfg.barrier_modes {
             if mode.is_bsp() {
                 continue;
@@ -507,6 +581,23 @@ impl ReproContext {
                 model.insert_workload_pair(workload, &base_fleet, mode, pair);
             }
         }
+        // And every non-base data scenario gets per-mode pairs on the
+        // base fleet and base workload — a scenario changes g (sparse
+        // rounds make different per-round progress) *and* f (per-row
+        // flops, skewed per-machine loads). Crossing scenarios with
+        // non-base fleets or workloads is left to an explicit future
+        // need, keeping fit cost linear in the axes.
+        let base_data = self.cfg.base_data().to_string();
+        for data in &self.cfg.data_scenarios {
+            if *data == base_data {
+                continue;
+            }
+            for &mode in &modes {
+                let pair =
+                    self.fit_scenario_pair(algo, base_workload, mode, &base_fleet, data)?;
+                model.insert_data_pair(data, base_workload, &base_fleet, mode, pair);
+            }
+        }
         Ok(model)
     }
 
@@ -524,6 +615,19 @@ impl ReproContext {
         mode: BarrierMode,
         fleet: &str,
     ) -> crate::Result<(Vec<ConvPoint>, Vec<Observation>)> {
+        self.sweep_fit_inputs_data(algo_name, workload, mode, fleet, self.cfg.base_data())
+    }
+
+    /// [`Self::sweep_fit_inputs`] under an explicit data scenario
+    /// (empty = the implicit dense dataset).
+    pub fn sweep_fit_inputs_data(
+        &self,
+        algo_name: &str,
+        workload: Objective,
+        mode: BarrierMode,
+        fleet: &str,
+        data: &str,
+    ) -> crate::Result<(Vec<ConvPoint>, Vec<Observation>)> {
         let mut grid = SweepGrid::single_in_mode(
             algo_name,
             &self.cfg.machines,
@@ -535,6 +639,9 @@ impl ReproContext {
             grid.fleets = vec![fleet.to_string()];
         }
         grid.workloads = vec![workload];
+        if !data.is_empty() {
+            grid.data = vec![data.to_string()];
+        }
         let size = self.problem.data.n as f64;
         let mut pts: Vec<ConvPoint> = Vec::new();
         let mut obs: Vec<Observation> = Vec::new();
@@ -561,6 +668,33 @@ impl ReproContext {
         let ernest = crate::ernest::ErnestModel::fit(&obs)?;
         crate::log_info!(
             "{algo} {mode} fleet={} workload={workload}: conv R²={:.4}, \
+             f(θ)=[{:.4}, {:.3e}, {:.4}, {:.5}]",
+            if fleet.is_empty() { "-" } else { fleet },
+            conv.train_r2,
+            ernest.theta[0],
+            ernest.theta[1],
+            ernest.theta[2],
+            ernest.theta[3]
+        );
+        Ok(ModeModel { ernest, conv })
+    }
+
+    /// Fit one non-base data scenario's (workload, mode, fleet) pair
+    /// from a sweep run on that scenario's dataset.
+    fn fit_scenario_pair(
+        &self,
+        algo: AlgorithmId,
+        workload: Objective,
+        mode: BarrierMode,
+        fleet: &str,
+        data: &str,
+    ) -> crate::Result<ModeModel> {
+        let (pts, obs) =
+            self.sweep_fit_inputs_data(algo.as_str(), workload, mode, fleet, data)?;
+        let conv = ConvergenceModel::fit(&pts, FeatureLibrary::standard(), self.cfg.seed)?;
+        let ernest = crate::ernest::ErnestModel::fit(&obs)?;
+        crate::log_info!(
+            "{algo} {mode} fleet={} workload={workload} data={data}: conv R²={:.4}, \
              f(θ)=[{:.4}, {:.3e}, {:.4}, {:.5}]",
             if fleet.is_empty() { "-" } else { fleet },
             conv.train_r2,
@@ -599,16 +733,22 @@ impl ReproContext {
 /// pre-resolved spec / problem (resolved once per grid).
 fn run_cell(
     backend: &dyn Backend,
-    problems: &[(Objective, Arc<WorkloadProblem>)],
+    problems: &[((Objective, String), Arc<WorkloadProblem>)],
     fleets: &[(String, FleetSpec)],
     cell: &CellSpec,
     run_cfg: &RunConfig,
 ) -> crate::Result<Trace> {
     let wp = problems
         .iter()
-        .find(|(w, _)| *w == cell.workload)
+        .find(|((w, d), _)| *w == cell.workload && *d == cell.data)
         .map(|(_, wp)| wp.clone())
-        .ok_or_else(|| crate::err!("cell workload '{}' was not pre-resolved", cell.workload))?;
+        .ok_or_else(|| {
+            crate::err!(
+                "cell (workload '{}', data '{}') was not pre-resolved",
+                cell.workload,
+                cell.data
+            )
+        })?;
     let problem = &wp.problem;
     let mut algo = by_name(&cell.algorithm, problem, cell.machines, cell.seed as u32)?;
     let fleet = fleets
@@ -627,14 +767,16 @@ fn run_cell(
     let t0 = std::time::Instant::now();
     let mut trace = run(algo.as_mut(), backend, problem, &mut sim, wp.p_star, run_cfg)?;
     trace.fleet = cell.fleet.clone();
+    trace.data = cell.data.clone();
     trace.events = cell.events.clone();
     crate::log_info!(
-        "{} m={} mode={} fleet={} workload={} rep={}: {} iters, final subopt {:.2e} ({:.1}s wall)",
+        "{} m={} mode={} fleet={} workload={} data={} rep={}: {} iters, final subopt {:.2e} ({:.1}s wall)",
         cell.algorithm,
         cell.machines,
         cell.mode,
         if cell.fleet.is_empty() { "-" } else { &cell.fleet },
         cell.workload,
+        if cell.data.is_empty() { "-" } else { &cell.data },
         cell.replicate,
         trace.records.last().map(|r| r.iter).unwrap_or(0),
         trace.final_subopt(),
@@ -677,7 +819,7 @@ fn profile_one(
     iters_per_config: usize,
 ) -> crate::Result<Vec<Observation>> {
     let rows = ((problem.data.n as f64) * c.fraction) as usize;
-    let sub = problem.data.subsample(rows, seed ^ 0xE51);
+    let sub = problem.data.subsample(rows, seed ^ 0xE51)?;
     let sub_problem = Problem::with_objective(sub, lambda, problem.objective);
     let mut algo = by_name(algo_name, &sub_problem, c.machines, seed as u32)?;
     let mut sim =

@@ -1,27 +1,27 @@
-//! Workload-crossover scenario (beyond the paper): which (algorithm,
-//! cluster size) wins *flips with the objective* at a fixed time
-//! budget.
+//! Data-scenario crossover (beyond the paper): which (algorithm,
+//! cluster size) wins *flips with the data* at a fixed target.
 //!
-//! Hemingway's core claim is that the right algorithm and degree of
-//! parallelism depend on the problem; Tsianos et al. show the
-//! compute/communication balance point moves with objective
-//! conditioning, and Dünner et al. fit per-workload performance models
-//! for exactly this reason. This target measures it end to end on the
-//! simulator: the config's algorithms × machine grid × the three
-//! objectives (hinge, logistic, ridge), one paired noise realization
-//! per cell, and two readouts per workload —
+//! Hemingway's models are fitted per workload and per cluster; this
+//! target shows the third axis matters just as much. Feature density
+//! moves the compute/communication balance point (a 1%-dense CSR row
+//! costs ~1% of a dense row's flops, so communication dominates far
+//! earlier), label imbalance changes how hard a target suboptimality
+//! is, and non-IID partition skew makes BSP rounds wait on the
+//! heaviest machine. The sweep runs the config's algorithms × machine
+//! grid × the data-scenario axis (one paired noise realization per
+//! cell) and reads out, per scenario,
 //!
-//! * the fastest (algorithm, m) to a per-workload suboptimality
-//!   target (objectives live on different loss scales, so each
-//!   workload's target is relaxed from its own final suboptimalities
+//! * the fastest (algorithm, m) to a per-scenario suboptimality
+//!   target (scenarios change the reachable loss scale, so each
+//!   scenario's target is relaxed from its own final suboptimalities
 //!   when the config's global target is out of reach), and
-//! * the best (algorithm, m) at the shared fixed time budget.
+//! * the best (algorithm, m) at a shared fixed time budget.
 //!
 //! The headline output is the crossover: whether the winning
-//! (algorithm, m) differs between workloads — the fact that makes a
-//! workload-blind advisor wrong on at least one of them.
+//! (algorithm, m) differs between scenarios — the fact that makes a
+//! data-blind advisor wrong on at least one of them.
 
-use crate::optim::{Objective, Trace};
+use crate::optim::Trace;
 use crate::sweep::SweepGrid;
 use crate::util::asciiplot::Series;
 use crate::util::csv::Table;
@@ -29,19 +29,20 @@ use crate::util::stats;
 
 use super::common::ReproContext;
 
-/// The workload set swept when the config names fewer than two: all
-/// three objectives, hinge first (the paper's case study).
-fn default_workloads(ctx: &ReproContext) -> Vec<Objective> {
-    if ctx.cfg.workloads.len() >= 2 {
-        ctx.cfg.workloads.clone()
+/// The scenario set swept when the config names fewer than two: the
+/// historical dense IID dataset against a sparse, skewed contrast
+/// scenario (canonical strings — the grammar's `Display` order).
+fn default_scenarios(ctx: &ReproContext) -> Vec<String> {
+    if ctx.cfg.data_scenarios.len() >= 2 {
+        ctx.cfg.data_scenarios.clone()
     } else {
-        Objective::ALL.to_vec()
+        vec!["dense".to_string(), "sparse:0.02+skew:0.6".to_string()]
     }
 }
 
 /// The algorithms compared: the config's list when it names several,
-/// otherwise a contrast pair whose winner genuinely depends on the
-/// objective (a dual method vs a first-order method).
+/// otherwise a contrast pair whose balance point genuinely moves with
+/// the data (a communication-heavy dual method vs a first-order one).
 fn pick_algorithms(ctx: &ReproContext) -> Vec<String> {
     if ctx.cfg.algorithms.len() >= 2 {
         ctx.cfg.algorithms.clone()
@@ -50,27 +51,27 @@ fn pick_algorithms(ctx: &ReproContext) -> Vec<String> {
     }
 }
 
-pub fn workloads(ctx: &ReproContext) -> crate::Result<String> {
-    println!("== workloads scenario: per-objective winners at a fixed budget ==");
-    // The HLO artifacts are hinge-only, and a hinge-only "crossover"
-    // is vacuous — skip with a recorded reason instead of failing the
-    // whole `repro all` run after every earlier figure's compute.
+pub fn data(ctx: &ReproContext) -> crate::Result<String> {
+    println!("== data scenario: per-scenario winners at a fixed target ==");
+    // Non-dense scenarios need the sparse kernels and skewed
+    // partitions of the native backend — skip with a recorded reason
+    // instead of failing the whole `repro all` run.
     if !ctx.use_native {
-        let summary = "workloads: skipped — logistic/ridge need the native backend \
+        let summary = "data: skipped — sparse/skewed scenarios need the native backend \
                        (rerun with --native)"
             .to_string();
         println!("{summary}\n");
         return Ok(summary);
     }
-    let workload_list = default_workloads(ctx);
+    let scenarios = default_scenarios(ctx);
     let algos = pick_algorithms(ctx);
     let grid = SweepGrid {
         algorithms: algos.clone(),
         machines: ctx.cfg.machines.clone(),
         modes: vec![crate::cluster::BarrierMode::Bsp],
         fleets: ctx.base_fleet_axis(),
-        workloads: workload_list.clone(),
-        data: Vec::new(),
+        workloads: vec![ctx.base_workload()],
+        data: scenarios.clone(),
         events: String::new(),
         seeds: 1,
         base_seed: ctx.cfg.seed,
@@ -89,7 +90,7 @@ pub fn workloads(ctx: &ReproContext) -> crate::Result<String> {
     let budget = stats::median(&totals);
 
     let mut table = Table::new(&[
-        "workload",
+        "scenario_id",
         "algo_id",
         "machines",
         "target",
@@ -98,24 +99,27 @@ pub fn workloads(ctx: &ReproContext) -> crate::Result<String> {
         "final_subopt",
     ]);
     let algo_id = |name: &str| algos.iter().position(|a| a == name).unwrap_or(99) as f64;
+    for (i, scenario) in scenarios.iter().enumerate() {
+        println!("  scenario_id {i} = {scenario}");
+    }
 
-    // Per-workload winners.
+    // Per-scenario winners.
     struct Winner {
-        workload: Objective,
+        scenario: String,
         eps: f64,
         fastest: Option<(String, usize, f64)>,
         best_at_budget: Option<(String, usize, f64)>,
     }
     let mut winners: Vec<Winner> = Vec::new();
     let mut series = Vec::new();
-    for &workload in &workload_list {
-        let group: Vec<&Trace> = traces.iter().filter(|t| t.workload == workload).collect();
+    for (sid, scenario) in scenarios.iter().enumerate() {
+        let group: Vec<&Trace> = traces.iter().filter(|t| t.data == *scenario).collect();
         if group.is_empty() {
             continue;
         }
-        // Per-workload target: the config's if most cells reach it,
-        // otherwise relaxed to what ~three quarters of this workload's
-        // cells achieved (objectives live on different loss scales).
+        // Per-scenario target: the config's if most cells reach it,
+        // otherwise relaxed to what ~three quarters of this scenario's
+        // cells achieved (scenarios change the reachable loss scale).
         let mut eps = ctx.cfg.target_subopt;
         let reached = group.iter().filter(|t| t.time_to(eps).is_some()).count();
         if reached * 2 < group.len() {
@@ -125,7 +129,7 @@ pub fn workloads(ctx: &ReproContext) -> crate::Result<String> {
                 .collect();
             eps = stats::percentile(&finals, 75.0) * 1.2;
             println!(
-                "  ({workload}: target {:.0e} unreachable for most cells; using {eps:.2e})",
+                "  ({scenario}: target {:.0e} unreachable for most cells; using {eps:.2e})",
                 ctx.cfg.target_subopt
             );
         }
@@ -142,7 +146,7 @@ pub fn workloads(ctx: &ReproContext) -> crate::Result<String> {
                 .last()
                 .map(|r| r.subopt);
             table.push(vec![
-                workload.csv_id(),
+                sid as f64,
                 algo_id(&t.algorithm),
                 t.machines as f64,
                 eps,
@@ -166,19 +170,19 @@ pub fn workloads(ctx: &ReproContext) -> crate::Result<String> {
         }
         if !pts.is_empty() {
             pts.sort_by(|a, b| a.0.total_cmp(&b.0));
-            series.push(Series::new(workload.as_str(), pts));
+            series.push(Series::new(scenario, pts));
         }
         winners.push(Winner {
-            workload,
+            scenario: scenario.clone(),
             eps,
             fastest,
             best_at_budget,
         });
     }
-    ctx.write_csv("workloads_crossover.csv", &table)?;
+    ctx.write_csv("data_crossover.csv", &table)?;
     if !series.is_empty() {
         ctx.show(
-            "workloads: seconds to per-workload target vs machines (log y)",
+            "data: seconds to per-scenario target vs machines (log y)",
             series,
             true,
             "machines",
@@ -186,10 +190,10 @@ pub fn workloads(ctx: &ReproContext) -> crate::Result<String> {
     }
 
     // The crossover verdict: does the fastest (algorithm, m) differ
-    // across workloads?
-    let picks: Vec<(Objective, &(String, usize, f64))> = winners
+    // across data scenarios?
+    let picks: Vec<(&str, &(String, usize, f64))> = winners
         .iter()
-        .filter_map(|w| w.fastest.as_ref().map(|f| (w.workload, f)))
+        .filter_map(|w| w.fastest.as_ref().map(|f| (w.scenario.as_str(), f)))
         .collect();
     let crossover = picks
         .windows(2)
@@ -206,15 +210,15 @@ pub fn workloads(ctx: &ReproContext) -> crate::Result<String> {
             .as_ref()
             .map(|(a, m, s)| format!("{a}@m={m} ({s:.2e} @ {budget:.1}s)"))
             .unwrap_or_else(|| "-".into());
-        parts.push(format!("{}: fastest {fast}, best-at-budget {at}", w.workload));
+        parts.push(format!("{}: fastest {fast}, best-at-budget {at}", w.scenario));
     }
     let summary = format!(
-        "workloads: {}; crossover: {}",
+        "data: {}; crossover: {}",
         parts.join("; "),
         if crossover {
-            "yes — the winning (algorithm, m) flips with the objective"
+            "yes — the winning (algorithm, m) flips with the data scenario"
         } else {
-            "no — one configuration wins every workload on this grid"
+            "no — one configuration wins every scenario on this grid"
         }
     );
     println!("{summary}\n");

@@ -119,6 +119,7 @@ pub fn elastic(ctx: &ReproContext) -> crate::Result<String> {
         modes: vec![BarrierMode::Bsp],
         fleets: ctx.base_fleet_axis(),
         workloads: vec![ctx.base_workload()],
+        data: Vec::new(),
         events: spec.clone(),
         seeds: 1,
         base_seed: ctx.cfg.seed,

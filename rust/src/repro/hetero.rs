@@ -84,6 +84,7 @@ pub fn hetero(ctx: &ReproContext) -> crate::Result<String> {
         modes: modes.clone(),
         fleets: fleet_names.clone(),
         workloads: vec![ctx.base_workload()],
+        data: Vec::new(),
         events: String::new(),
         seeds: 1,
         base_seed: ctx.cfg.seed,

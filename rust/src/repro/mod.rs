@@ -6,6 +6,7 @@
 
 pub mod ablation;
 pub mod common;
+pub mod data;
 pub mod elastic;
 pub mod fig1;
 pub mod fig3;
@@ -22,7 +23,8 @@ pub use common::ReproContext;
 /// All figure ids `hemingway repro --figure` accepts.
 pub const FIGURES: &[&str] = &[
     "1a", "1b", "1c", "3a", "3b", "4", "5", "6", "7", "8", "9", "10",
-    "table-ernest", "table-advisor", "ablation", "ssp", "hetero", "workloads", "elastic",
+    "table-ernest", "table-advisor", "ablation", "ssp", "hetero", "workloads", "data",
+    "elastic",
 ];
 
 /// Run one or all targets; returns the collected summary lines.
@@ -94,6 +96,9 @@ pub fn run_figures(ctx: &ReproContext, which: &str) -> crate::Result<Vec<String>
     }
     if wants("workloads") {
         summaries.push(workloads::workloads(ctx)?);
+    }
+    if wants("data") {
+        summaries.push(data::data(ctx)?);
     }
     if wants("elastic") {
         summaries.push(elastic::elastic(ctx)?);

@@ -64,6 +64,7 @@ pub fn ssp(ctx: &ReproContext) -> crate::Result<String> {
         // Single-workload scenario too: the base workload (the
         // workloads scenario is the one that sweeps the objective).
         workloads: vec![ctx.base_workload()],
+        data: Vec::new(),
         events: String::new(),
         seeds: 1,
         base_seed: ctx.cfg.seed,

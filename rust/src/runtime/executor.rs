@@ -163,7 +163,9 @@ impl Engine {
                 .map_err(|e| crate::err!("uploading partition buffer: {e:?}"))
         };
         let b = Arc::new(PartitionBuffers {
-            x: up(&part.x, &[part.n_loc, part.d])?,
+            // `dense_x` refuses CSR partitions loudly — the HLO
+            // kernels only scan the dense row-major layout.
+            x: up(part.dense_x()?, &[part.n_loc, part.d])?,
             y: up(&part.y, &[part.n_loc, 1])?,
             mask: up(&part.mask, &[part.n_loc, 1])?,
         });

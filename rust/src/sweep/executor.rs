@@ -273,7 +273,7 @@ fn format_eta(secs: f64) -> String {
 }
 
 /// Seed-replication aggregate for one (algorithm, machines, barrier
-/// mode, fleet, workload) cell.
+/// mode, fleet, workload, data scenario) cell.
 #[derive(Debug, Clone)]
 pub struct CellAggregate {
     pub algorithm: String,
@@ -283,6 +283,9 @@ pub struct CellAggregate {
     pub fleet: String,
     /// The objective the cell optimized.
     pub workload: Objective,
+    /// Canonical data-scenario string ("" = the historical dense IID
+    /// dataset).
+    pub data: String,
     pub replicates: usize,
     /// Replicates that reached the suboptimality target.
     pub reached: usize,
@@ -317,6 +320,7 @@ struct GroupAcc {
     mode: BarrierMode,
     fleet: String,
     workload: Objective,
+    data: String,
     replicates: usize,
     iters: Vec<f64>,
     times: Vec<f64>,
@@ -331,6 +335,7 @@ impl GroupAcc {
             && self.mode == t.barrier_mode
             && self.fleet == t.fleet
             && self.workload == t.workload
+            && self.data == t.data
     }
 }
 
@@ -357,6 +362,8 @@ fn group_hash(t: &Trace) -> u64 {
     h = fnv_step(h, t.fleet.as_bytes());
     h = fnv_step(h, &[0xFF]);
     h = fnv_step(h, t.workload.as_str().as_bytes());
+    h = fnv_step(h, &[0xFF]);
+    h = fnv_step(h, t.data.as_bytes());
     h
 }
 
@@ -409,6 +416,7 @@ impl StreamAggregator {
                     mode: t.barrier_mode,
                     fleet: t.fleet.clone(),
                     workload: t.workload,
+                    data: t.data.clone(),
                     replicates: 0,
                     iters: Vec::new(),
                     times: Vec::new(),
@@ -444,6 +452,7 @@ impl StreamAggregator {
                 barrier_mode: g.mode,
                 fleet: g.fleet,
                 workload: g.workload,
+                data: g.data,
                 replicates: g.replicates,
                 reached: g.iters.len(),
                 iters_to_target: agg_or_nan(&g.iters),
@@ -456,7 +465,7 @@ impl StreamAggregator {
 }
 
 /// Group replicate traces by (algorithm, machines, barrier mode,
-/// fleet, workload) — first-seen order — and aggregate each cell's
+/// fleet, workload, data scenario) — first-seen order — and aggregate each cell's
 /// metrics with mean ± stddev ([`stats::mean_stddev`]). Cells no
 /// replicate of which reached the target get NaN (not 0.0) for the
 /// to-target metrics. (A fold over [`StreamAggregator`]; callers that
@@ -508,6 +517,7 @@ mod tests {
             modes: vec![crate::cluster::BarrierMode::Bsp],
             fleets: Vec::new(),
             workloads: Vec::new(),
+            data: Vec::new(),
             events: String::new(),
             seeds,
             base_seed: 7,
@@ -582,6 +592,7 @@ mod tests {
             modes: vec![crate::cluster::BarrierMode::Bsp],
             fleets: Vec::new(),
             workloads: Vec::new(),
+            data: Vec::new(),
             events: String::new(),
             seeds: 2,
             base_seed: 11,
@@ -861,6 +872,36 @@ mod tests {
         assert_eq!(aggs[0].replicates, 2);
         assert_eq!(aggs[1].workload, Objective::Ridge);
         assert_eq!(aggs[2].workload, Objective::Logistic);
+    }
+
+    #[test]
+    fn aggregate_separates_data_scenarios() {
+        let mk = |data: &str| {
+            let mut t = Trace::new("cocoa", 8, 0.0);
+            t.data = data.to_string();
+            for i in 0..5 {
+                t.push(Record {
+                    iter: i,
+                    sim_time: i as f64,
+                    primal: 1.0,
+                    dual: f64::NAN,
+                    subopt: 1.0,
+                });
+            }
+            t
+        };
+        let traces = vec![
+            mk(""),
+            mk("sparse:0.01"),
+            mk(""),
+            mk("sparse:0.01+skew:0.8"),
+        ];
+        let aggs = aggregate(&traces, 1e-4);
+        assert_eq!(aggs.len(), 3);
+        assert_eq!(aggs[0].data, "");
+        assert_eq!(aggs[0].replicates, 2);
+        assert_eq!(aggs[1].data, "sparse:0.01");
+        assert_eq!(aggs[2].data, "sparse:0.01+skew:0.8");
     }
 
     #[test]

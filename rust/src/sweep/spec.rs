@@ -21,6 +21,11 @@ pub struct CellSpec {
     /// The objective the cell optimizes (hinge = the historical
     /// single-workload shape).
     pub workload: Objective,
+    /// Canonical data-scenario string (`data::DataScenario` grammar)
+    /// the cell trains on. Empty = the historical dense IID dataset —
+    /// and the historical cache-key shape (the key only grows a
+    /// `data=` field when one is set).
+    pub data: String,
     /// Scenario string (`cluster::sim::Scenario` grammar) the cell's
     /// simulator replays: pool size plus timed preempt/restore/slowdown
     /// events. Empty = the static path — and the historical cache-key
@@ -75,6 +80,10 @@ pub struct SweepGrid {
     /// Workloads to sweep. Empty behaves as `[Hinge]` — the
     /// pre-workload-axis grid shape.
     pub workloads: Vec<Objective>,
+    /// Canonical data-scenario strings to sweep. Empty behaves as one
+    /// implicit dense scenario (`data == ""` on every cell) — the
+    /// pre-data-axis grid shape.
+    pub data: Vec<String>,
     /// Scenario string every cell replays (the events axis is a grid
     /// constant, not a cross product: a sweep is either static or runs
     /// one failure scenario). Empty = static.
@@ -106,6 +115,7 @@ impl SweepGrid {
             modes: vec![mode],
             fleets: Vec::new(),
             workloads: Vec::new(),
+            data: Vec::new(),
             events: String::new(),
             seeds: 1,
             base_seed,
@@ -134,12 +144,19 @@ impl SweepGrid {
         } else {
             &self.workloads
         };
+        let default_data = [String::new()];
+        let data: &[String] = if self.data.is_empty() {
+            &default_data
+        } else {
+            &self.data
+        };
         let mut out = Vec::with_capacity(
             self.algorithms.len()
                 * self.machines.len()
                 * modes.len()
                 * fleets.len()
                 * workloads.len()
+                * data.len()
                 * self.seeds,
         );
         for algo in &self.algorithms {
@@ -147,17 +164,20 @@ impl SweepGrid {
                 for &mode in modes {
                     for fleet in fleets {
                         for &workload in workloads {
-                            for rep in 0..self.seeds.max(1) {
-                                out.push(CellSpec {
-                                    algorithm: algo.clone(),
-                                    machines: m,
-                                    mode,
-                                    fleet: fleet.clone(),
-                                    workload,
-                                    events: self.events.clone(),
-                                    replicate: rep,
-                                    seed: cell_seed(self.base_seed, rep),
-                                });
+                            for scenario in data {
+                                for rep in 0..self.seeds.max(1) {
+                                    out.push(CellSpec {
+                                        algorithm: algo.clone(),
+                                        machines: m,
+                                        mode,
+                                        fleet: fleet.clone(),
+                                        workload,
+                                        data: scenario.clone(),
+                                        events: self.events.clone(),
+                                        replicate: rep,
+                                        seed: cell_seed(self.base_seed, rep),
+                                    });
+                                }
                             }
                         }
                     }
@@ -202,8 +222,12 @@ pub fn cell_key_into(out: &mut String, context_key: &str, cell: &CellSpec) {
         cell.replicate,
         cell.seed
     );
-    // Event-free cells keep the historical key byte-for-byte, so every
-    // pre-elastic cache entry still hits; a scenario adds its own field.
+    // Dense, event-free cells keep the historical key byte-for-byte,
+    // so every pre-existing cache entry still hits; a data scenario or
+    // a failure scenario each add their own field.
+    if !cell.data.is_empty() {
+        let _ = write!(out, ";data={}", cell.data);
+    }
     if !cell.events.is_empty() {
         let _ = write!(out, ";events={}", cell.events);
     }
@@ -220,6 +244,7 @@ mod tests {
             modes: vec![BarrierMode::Bsp],
             fleets: Vec::new(),
             workloads: Vec::new(),
+            data: Vec::new(),
             events: String::new(),
             seeds: 3,
             base_seed: 42,
@@ -399,6 +424,37 @@ mod tests {
         let mut g = grid();
         g.events = "slow@1x2".into();
         assert!(g.cells().iter().all(|c| c.events == "slow@1x2"));
+        // A data scenario adds its field *before* events, so the two
+        // axes compose into one stable key shape.
+        let mut sparse = stormy.clone();
+        sparse.data = "sparse:0.01+skew:0.8".into();
+        let spk = cell_key("ctx", &sparse);
+        assert!(spk.contains(";data=sparse:0.01+skew:0.8;events=pool=4,preempt@0.5x2"));
+        assert_ne!(spk, sk);
+    }
+
+    #[test]
+    fn data_axis_multiplies_cells_and_shares_seeds() {
+        let mut g = grid();
+        g.data = vec!["dense".into(), "sparse:0.05".into()];
+        let cells = g.cells();
+        assert_eq!(cells.len(), 2 * 2 * 2 * 3);
+        // Data varies inside (algorithm, machines, mode, fleet,
+        // workload), replicate inside data — with paired seeds.
+        assert_eq!(cells[0].data, "dense");
+        assert_eq!(cells[3].data, "sparse:0.05");
+        assert_eq!(cells[0].seed, cells[3].seed);
+        // Cells differing only in scenario never share a key — the
+        // explicit "dense" string included (it names the same bytes as
+        // "" today, but key equality would alias them forever).
+        assert_ne!(cell_key("ctx", &cells[0]), cell_key("ctx", &cells[3]));
+        let mut implicit = cells[0].clone();
+        implicit.data = String::new();
+        assert_ne!(cell_key("ctx", &implicit), cell_key("ctx", &cells[0]));
+        // An empty data list behaves as one implicit dense scenario.
+        g.data.clear();
+        assert!(g.cells().iter().all(|c| c.data.is_empty()));
+        assert_eq!(g.cells().len(), 2 * 2 * 3);
     }
 
     #[test]

@@ -48,6 +48,11 @@ pub const MAGIC_V5: &str = "hemingway-trace v5";
 /// Event-free traces keep encoding as v5 byte-for-byte, so the v6
 /// axis costs existing caches nothing.
 pub const MAGIC_V6: &str = "hemingway-trace v6";
+/// Magic line of the binary v7 format: v6 plus a `data` string (the
+/// canonical data scenario a run trained on) after the events field.
+/// Dense traces keep encoding as v5 (event-free) or v6 byte-for-byte,
+/// so the data axis costs existing caches nothing.
+pub const MAGIC_V7: &str = "hemingway-trace v7";
 /// First line of a well-formed manifest.
 pub const MANIFEST_MAGIC: &str = "hemingway-manifest v1";
 /// Manifest file name under the store root.
@@ -77,13 +82,20 @@ fn put_f64(out: &mut Vec<u8>, v: f64) {
 
 /// Encode a trace (with its cache key) into the binary format,
 /// reusing `out`'s capacity (the sweep hot loop hands every worker one
-/// scratch buffer instead of allocating per cell). Traces with no
-/// scenario events encode as v5 **byte-for-byte** (the pre-elastic
-/// bytes); only an event-carrying trace pays the v6 `events` field.
+/// scratch buffer instead of allocating per cell). Dense traces with
+/// no scenario events encode as v5 **byte-for-byte** (the pre-elastic
+/// bytes); an event-carrying dense trace pays the v6 `events` field;
+/// only a trace with a data scenario pays the v7 `events`+`data` pair.
 pub fn encode_trace_into(key: &str, trace: &Trace, out: &mut Vec<u8>) {
     out.clear();
     out.reserve(64 + key.len() + trace.records.len() * 40);
-    let magic = if trace.events.is_empty() { MAGIC_V5 } else { MAGIC_V6 };
+    let magic = if !trace.data.is_empty() {
+        MAGIC_V7
+    } else if !trace.events.is_empty() {
+        MAGIC_V6
+    } else {
+        MAGIC_V5
+    };
     out.extend_from_slice(magic.as_bytes());
     out.push(b'\n');
     out.extend_from_slice(b"key=");
@@ -94,8 +106,13 @@ pub fn encode_trace_into(key: &str, trace: &Trace, out: &mut Vec<u8>) {
     put_str(out, &trace.barrier_mode.as_str());
     put_str(out, &trace.fleet);
     put_str(out, trace.workload.as_str());
-    if !trace.events.is_empty() {
+    if !trace.events.is_empty() || !trace.data.is_empty() {
+        // v6 and v7 both carry events; v7 writes it even when empty so
+        // the layout stays one fixed field sequence per magic.
         put_str(out, &trace.events);
+    }
+    if !trace.data.is_empty() {
+        put_str(out, &trace.data);
     }
     put_f64(out, trace.p_star);
     put_u64(out, trace.records.len() as u64);
@@ -160,6 +177,12 @@ pub fn decode_trace_v6(bytes: &[u8]) -> crate::Result<(String, Trace)> {
     decode_binary(bytes, MAGIC_V6, true)
 }
 
+/// Decode a v7 binary file (v6 + the `data` scenario string) back into
+/// (key, Trace). Same strictness as v5/v6.
+pub fn decode_trace_v7(bytes: &[u8]) -> crate::Result<(String, Trace)> {
+    decode_binary(bytes, MAGIC_V7, true)
+}
+
 fn decode_binary(bytes: &[u8], magic: &str, has_events: bool) -> crate::Result<(String, Trace)> {
     let body = strip_header(bytes, magic)?;
     let (key, body) = body;
@@ -170,6 +193,9 @@ fn decode_binary(bytes: &[u8], magic: &str, has_events: bool) -> crate::Result<(
     let fleet = c.str("fleet")?;
     let workload = Objective::parse(&c.str("workload")?)?;
     let events = if has_events { c.str("events")? } else { String::new() };
+    // Only v7 carries the data scenario; v4/v5/v6 decode as the
+    // implicit dense scenario (empty string).
+    let data = if magic == MAGIC_V7 { c.str("data")? } else { String::new() };
     let p_star = c.f64("p_star")?;
     let n = c.u64("record count")? as usize;
     // A forged count can't make us allocate past the file's own size
@@ -185,6 +211,7 @@ fn decode_binary(bytes: &[u8], magic: &str, has_events: bool) -> crate::Result<(
     trace.fleet = fleet;
     trace.workload = workload;
     trace.events = events;
+    trace.data = data;
     trace.records.reserve_exact(n);
     for _ in 0..n {
         trace.push(Record {
@@ -233,13 +260,17 @@ pub fn decode_any(bytes: &[u8]) -> crate::Result<(String, Trace, bool)> {
             let (key, trace) = decode_trace_v6(bytes)?;
             Ok((key, trace, false))
         }
+        Some((m, _, _)) if m == MAGIC_V7.as_bytes() => {
+            let (key, trace) = decode_trace_v7(bytes)?;
+            Ok((key, trace, false))
+        }
         Some((m, _, _)) if m == MAGIC_V4.as_bytes() => {
             let text = std::str::from_utf8(bytes)
                 .map_err(|e| crate::err!("bad utf-8 in v4 trace: {e}"))?;
             let (key, trace) = parse_trace(text)?;
             Ok((key, trace, true))
         }
-        _ => crate::bail!("not a readable trace file (v4/v5/v6)"),
+        _ => crate::bail!("not a readable trace file (v4/v5/v6/v7)"),
     }
 }
 
@@ -252,8 +283,9 @@ pub fn decode_any(bytes: &[u8]) -> crate::Result<(String, Trace, bool)> {
 pub enum Probe {
     /// No file, wrong key, or an unreadable/old format.
     Miss,
-    /// A binary-format file (v5, or v6 when the trace carries scenario
-    /// events) in the sharded layout carries this key.
+    /// A binary-format file (v5; v6 when the trace carries scenario
+    /// events; v7 when it carries a data scenario) in the sharded
+    /// layout carries this key.
     V5(PathBuf),
     /// A legacy v4 text file (flat layout) carries this key — a hit
     /// that wants migration.
@@ -304,7 +336,7 @@ impl ShardedStore {
         let hash = hash_key(key);
         let shard = self.shard_path(hash);
         match probe_file(&shard, key) {
-            Some(MAGIC_V5) | Some(MAGIC_V6) => return Probe::V5(shard),
+            Some(MAGIC_V5) | Some(MAGIC_V6) | Some(MAGIC_V7) => return Probe::V5(shard),
             // A v4 file can sit in the sharded slot too (hand-copied
             // caches); it is just as migratable as a flat one.
             Some(MAGIC_V4) => return Probe::V4(shard),
@@ -312,7 +344,7 @@ impl ShardedStore {
         }
         let legacy = self.legacy_path(hash);
         match probe_file(&legacy, key) {
-            Some(MAGIC_V5) | Some(MAGIC_V6) => Probe::V5(legacy),
+            Some(MAGIC_V5) | Some(MAGIC_V6) | Some(MAGIC_V7) => Probe::V5(legacy),
             Some(MAGIC_V4) => Probe::V4(legacy),
             _ => Probe::Miss,
         }
@@ -489,6 +521,8 @@ fn verdict(magic: &[u8], key_line: &[u8], key: &str) -> Option<&'static str> {
         Some(MAGIC_V5)
     } else if magic == MAGIC_V6.as_bytes() {
         Some(MAGIC_V6)
+    } else if magic == MAGIC_V7.as_bytes() {
+        Some(MAGIC_V7)
     } else if magic == MAGIC_V4.as_bytes() {
         Some(MAGIC_V4)
     } else {
@@ -620,6 +654,45 @@ mod tests {
         let served = store.load("cell-v6").expect("v6 entry must hit");
         assert_eq!(served.events, t.events);
         assert_eq!(encode_trace("cell-v6", &served), encode_trace("cell-v6", &t));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn v7_roundtrip_carries_data_scenario_bit_exactly() {
+        // A data scenario alone (no events) is enough to pick v7, and
+        // the empty events string survives the roundtrip.
+        let mut t = sample_trace();
+        t.data = "sparse:0.01+skew:0.8".to_string();
+        let bytes = encode_trace("k7", &t);
+        assert!(bytes.starts_with(MAGIC_V7.as_bytes()));
+        let (key, back, legacy) = decode_any(&bytes).unwrap();
+        assert_eq!((key.as_str(), legacy), ("k7", false));
+        assert_eq!(back.data, t.data);
+        assert_eq!(back.events, "");
+        assert_eq!(encode_trace("k7", &back), bytes);
+        // Events + data together still roundtrip.
+        t.events = "pool=16,preempt@0.5x8".to_string();
+        let both = encode_trace("k7b", &t);
+        assert!(both.starts_with(MAGIC_V7.as_bytes()));
+        let (_, back2, _) = decode_any(&both).unwrap();
+        assert_eq!((back2.data.as_str(), back2.events.as_str()),
+                   ("sparse:0.01+skew:0.8", "pool=16,preempt@0.5x8"));
+        assert_eq!(encode_trace("k7b", &back2), both);
+        // Torn-tail discipline.
+        for cut in [bytes.len() - 1, bytes.len() - 40, 30] {
+            assert!(decode_any(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // Dense traces never pay the v7 magic.
+        let dense = sample_trace();
+        assert!(encode_trace("k", &dense).starts_with(MAGIC_V5.as_bytes()));
+        // And the sharded store serves v7 entries through probe + load.
+        let dir = tmp_dir("v7");
+        let store = ShardedStore::open(&dir);
+        let mut buf = Vec::new();
+        store.store("cell-v7", &t, &mut buf);
+        assert!(store.probe("cell-v7") != Probe::Miss);
+        let served = store.load("cell-v7").expect("v7 entry must hit");
+        assert_eq!(served.data, t.data);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

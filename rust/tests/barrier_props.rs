@@ -51,6 +51,7 @@ fn random_costs(g: &mut Gen) -> Vec<IterationCost> {
             flops_per_machine: g.f64_in(0.0, 1e7),
             broadcast_bytes: g.f64_in(-10.0, 1e6), // ≤ 0 is a free edge case
             reduce_bytes: g.f64_in(0.0, 1e6),
+            load: Vec::new(),
         })
         .collect()
 }

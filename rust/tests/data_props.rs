@@ -1,0 +1,362 @@
+//! Property tests for the data axis (via `util::quickcheck`): the
+//! invariants ISSUE 9 pins down.
+//!
+//! * the **dense scenario is bitwise identical** to the historical
+//!   path: `dataset_for_scenario(·, dense, ·)` hands back the exact
+//!   dataset `dataset_for` builds, and driving it through every
+//!   algorithm × barrier mode × workload reproduces the same traces
+//!   bit for bit;
+//! * a **density-1.0 CSR store matches the dense store to 0 ULP**:
+//!   `Csr::from_dense_full` keeps every entry (zeros included) in row
+//!   order, so the sparse kernels accumulate the same f64 sums and the
+//!   reference solve, sim times, primals and weights agree exactly;
+//! * **skewed partitions cover every row exactly once** (dense and CSR
+//!   stores), padding stays masked out, and `partition_load` reports
+//!   each machine's real row share;
+//! * **trace-store v7 round-trips byte-identically**, data-free traces
+//!   keep their v5/v6 bytes, and legacy (pre-data-axis) bytes decode
+//!   as the implicit dense scenario — never an error.
+//!
+//! CI runs this suite under a pinned `QUICKCHECK_SEED` (see ci.sh) so
+//! a property failure names a seed that reproduces locally.
+
+use hemingway::cluster::{BarrierMode, ClusterSim, HardwareProfile};
+use hemingway::data::synth::{dataset_for, dataset_for_scenario, SynthConfig};
+use hemingway::data::{partition_load, Csr, DataMatrix, DataScenario};
+use hemingway::optim::{by_name, run, Backend, NativeBackend, Objective, Problem, RunConfig};
+use hemingway::sweep::store::{
+    decode_any, decode_trace_v7, encode_trace, MAGIC_V5, MAGIC_V6, MAGIC_V7,
+};
+use hemingway::util::quickcheck::{forall_ok, Gen};
+
+/// Run one (algorithm, machines, mode) through the full driver on a
+/// fresh simulated cluster; returns (per-record (sim_time, primal,
+/// subopt) triples, final weights).
+fn drive(
+    backend: &dyn Backend,
+    problem: &Problem,
+    p_star: f64,
+    algo_name: &str,
+    machines: usize,
+    mode: BarrierMode,
+    seed: u64,
+    iters: usize,
+) -> (Vec<(f64, f64, f64)>, Vec<f32>) {
+    let mut algo = by_name(algo_name, problem, machines, seed as u32).unwrap();
+    let mut sim = ClusterSim::with_mode(HardwareProfile::local48(), mode, seed);
+    let cfg = RunConfig {
+        max_iters: iters,
+        target_subopt: -1.0,
+        time_budget: None,
+    };
+    let trace = run(algo.as_mut(), backend, problem, &mut sim, p_star, &cfg).unwrap();
+    let rows = trace
+        .records
+        .iter()
+        .map(|r| (r.sim_time, r.primal, r.subopt))
+        .collect();
+    (rows, algo.weights().to_vec())
+}
+
+/// Bitwise comparison of two drives (record triples + final weights).
+fn assert_drives_equal(
+    label: &str,
+    a: &(Vec<(f64, f64, f64)>, Vec<f32>),
+    b: &(Vec<(f64, f64, f64)>, Vec<f32>),
+) -> Result<(), String> {
+    if a.0.len() != b.0.len() {
+        return Err(format!("{label}: record counts differ ({} vs {})", a.0.len(), b.0.len()));
+    }
+    for (i, (ra, rb)) in a.0.iter().zip(&b.0).enumerate() {
+        for (name, x, y) in [
+            ("sim_time", ra.0, rb.0),
+            ("primal", ra.1, rb.1),
+            ("subopt", ra.2, rb.2),
+        ] {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("{label} record {i}: {name} {x} vs {y}"));
+            }
+        }
+    }
+    if a.1 != b.1 {
+        return Err(format!("{label}: weight trajectories diverged"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_dense_scenario_routes_bitwise_identically() {
+    // The scenario path at `dense` must be the historical path, not a
+    // near-copy: same dataset bytes, same reference solve, and the
+    // same driver traces for every algorithm × mode × workload.
+    forall_ok(
+        "dense scenario == historical dataset_for path, bit for bit",
+        8,
+        |g| {
+            let workload = *g.choose(&Objective::ALL);
+            let algo = *g.choose(&["cocoa", "cocoa+", "minibatch-sgd", "local-sgd", "gd"]);
+            let mode = *g.choose(&[
+                BarrierMode::Bsp,
+                BarrierMode::Ssp { staleness: g.usize_in(0, 4) },
+            ]);
+            ((workload, algo, mode, g.usize_in(1, 12), g.rng().next_u64(), g.usize_in(3, 8)), ())
+        },
+        |&(workload, algo, mode, m, seed, iters), _| {
+            let cfg = SynthConfig {
+                n: 128,
+                d: 8,
+                seed: seed ^ 0xD4,
+                ..Default::default()
+            };
+            let base = dataset_for(workload, &cfg);
+            let routed = dataset_for_scenario(workload, &DataScenario::dense(), &cfg);
+            if base.dense_x() != routed.dense_x() || base.y != routed.y {
+                return Err(format!("{workload}: dense scenario rebuilt different bytes"));
+            }
+            let pa = Problem::with_objective(base, 1e-2, workload);
+            let pb = Problem::with_objective(routed, 1e-2, workload);
+            let (ps_a, w_a, _) = pa.reference_solve(1e-6, 120);
+            let (ps_b, w_b, _) = pb.reference_solve(1e-6, 120);
+            if ps_a.to_bits() != ps_b.to_bits() || w_a != w_b {
+                return Err(format!("{workload}: reference solve drifted ({ps_a} vs {ps_b})"));
+            }
+            let da = drive(&NativeBackend, &pa, ps_a, algo, m, mode, seed, iters);
+            let db = drive(&NativeBackend, &pb, ps_b, algo, m, mode, seed, iters);
+            assert_drives_equal(&format!("{workload} {algo} m={m} {mode}"), &da, &db)
+        },
+    );
+}
+
+#[test]
+fn prop_full_density_csr_matches_dense_to_zero_ulp() {
+    // `from_dense_full` stores every entry (zeros included) in row
+    // order, so the CSR kernels see the same f64 accumulation order as
+    // the dense scans: reference solve and full driver traces must
+    // agree to 0 ULP, for every algorithm and workload.
+    forall_ok(
+        "density-1.0 CSR store == dense store, 0 ULP through the driver",
+        8,
+        |g| {
+            let workload = *g.choose(&Objective::ALL);
+            let algo = *g.choose(&["cocoa", "cocoa+", "minibatch-sgd", "local-sgd", "gd"]);
+            let mode = *g.choose(&[
+                BarrierMode::Bsp,
+                BarrierMode::Ssp { staleness: g.usize_in(0, 3) },
+            ]);
+            ((workload, algo, mode, g.usize_in(1, 10), g.rng().next_u64(), g.usize_in(3, 8)), ())
+        },
+        |&(workload, algo, mode, m, seed, iters), _| {
+            let cfg = SynthConfig {
+                n: 96,
+                d: 6,
+                seed: seed ^ 0xC5,
+                ..Default::default()
+            };
+            let dense = dataset_for(workload, &cfg);
+            let csr = Csr::from_dense_full(dense.dense_x(), dense.n, dense.d);
+            if csr.nnz() != dense.n * dense.d {
+                return Err("from_dense_full dropped entries".into());
+            }
+            let sparse = DataMatrix::from_csr(csr, dense.y.clone(), dense.d);
+            let pa = Problem::with_objective(dense, 1e-2, workload);
+            let pb = Problem::with_objective(sparse, 1e-2, workload);
+            let (ps_a, w_a, gap_a) = pa.reference_solve(1e-6, 120);
+            let (ps_b, w_b, gap_b) = pb.reference_solve(1e-6, 120);
+            if ps_a.to_bits() != ps_b.to_bits() || gap_a.to_bits() != gap_b.to_bits() {
+                return Err(format!(
+                    "{workload}: CSR reference solve drifted (P* {ps_a} vs {ps_b})"
+                ));
+            }
+            if w_a != w_b {
+                return Err(format!("{workload}: CSR reference w* drifted"));
+            }
+            let da = drive(&NativeBackend, &pa, ps_a, algo, m, mode, seed, iters);
+            let db = drive(&NativeBackend, &pb, ps_b, algo, m, mode, seed, iters);
+            assert_drives_equal(&format!("{workload} {algo} m={m} {mode} csr"), &da, &db)
+        },
+    );
+}
+
+#[test]
+fn prop_skewed_partitions_cover_every_row_once() {
+    // Skewed placement reorders and unbalances, but it must stay a
+    // partition: every row on exactly one machine, padding masked out,
+    // and `partition_load` reporting each machine's real row share.
+    // Row identity is recovered from a row-id tag planted in column 0
+    // (1-based, so a padded all-zero row can never alias a real one).
+    forall_ok(
+        "skewed partitions: every row exactly once, loads = row shares",
+        20,
+        |g| {
+            let n = g.usize_in(24, 160);
+            let d = g.usize_in(2, 6);
+            let m = g.usize_in(1, 12.min(n));
+            let skew = g.f64_in(0.05, 0.95);
+            let seed = g.rng().next_u64();
+            let sparse_store = g.bool();
+            ((n, d, m, skew, seed, sparse_store), ())
+        },
+        |&(n, d, m, skew, seed, sparse_store), _| {
+            let mut x = vec![0.0f32; n * d];
+            let mut y = vec![0.0f32; n];
+            let mut g2 = Gen::new(seed ^ 0x5E);
+            for i in 0..n {
+                x[i * d] = (i + 1) as f32;
+                for j in 1..d {
+                    x[i * d + j] = g2.f64_in(-1.0, 1.0) as f32;
+                }
+                y[i] = if g2.bool() { 1.0 } else { -1.0 };
+            }
+            let ds = if sparse_store {
+                DataMatrix::from_csr(Csr::from_dense_full(&x, n, d), y, d)
+            } else {
+                DataMatrix::new(x, y, n, d)
+            }
+            .with_skew(skew, seed);
+            let parts = ds.partition(m).map_err(|e| e.to_string())?;
+            if parts.len() != m {
+                return Err(format!("{} partitions for m={m}", parts.len()));
+            }
+            let mut seen = vec![0usize; n + 1];
+            for p in &parts {
+                for j in 0..p.n_loc {
+                    let tag = if let Some(csr) = &p.csr {
+                        let (_, vals) = csr.row(j);
+                        vals.first().copied().unwrap_or(0.0)
+                    } else {
+                        p.x[j * d]
+                    };
+                    let expect_mask = if j < p.valid { 1.0 } else { 0.0 };
+                    if p.mask[j] != expect_mask {
+                        return Err(format!("partition {} row {j}: bad mask", p.index));
+                    }
+                    if j < p.valid {
+                        let id = tag as usize;
+                        if id == 0 || id > n || tag != id as f32 {
+                            return Err(format!("partition {} row {j}: bad row tag {tag}", p.index));
+                        }
+                        seen[id] += 1;
+                    } else if tag != 0.0 {
+                        return Err(format!("partition {} padded row {j} not zeroed", p.index));
+                    }
+                }
+            }
+            if let Some(id) = (1..=n).find(|&id| seen[id] != 1) {
+                return Err(format!("row {id} placed {} times", seen[id]));
+            }
+            let total: usize = parts.iter().map(|p| p.valid).sum();
+            if total != n {
+                return Err(format!("valid rows sum to {total}, not n={n}"));
+            }
+            let load = partition_load(ds.skew, &parts);
+            if load.len() != m {
+                return Err(format!("partition_load length {} for m={m}", load.len()));
+            }
+            for (k, (&l, p)) in load.iter().zip(&parts).enumerate() {
+                let want = p.valid as f64 / p.n_loc.max(1) as f64;
+                if l.to_bits() != want.to_bits() || !(0.0..=1.0).contains(&l) {
+                    return Err(format!("machine {k}: load {l}, want {want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_store_v7_roundtrips_and_legacy_decodes_as_implicit_dense() {
+    // Format ladder: a data-carrying trace pays the v7 magic and
+    // round-trips byte-identically; clearing `data` drops the bytes
+    // back to v6 (events only) or v5 (neither) — the pre-data-axis
+    // encodings — and those legacy bytes decode as the implicit dense
+    // scenario (`data == ""`), never as an error.
+    forall_ok(
+        "store v7 byte round trip; legacy v5/v6 bytes == implicit dense",
+        25,
+        |g| {
+            let workload = *g.choose(&Objective::ALL);
+            let machines = g.usize_in(1, 128);
+            let data = g
+                .choose(&[
+                    "sparse:0.01",
+                    "sparse:0.1+skew:0.5",
+                    "pos:0.2",
+                    "skew:0.8",
+                    "sparse:0.02+pos:0.3+skew:0.6",
+                ])
+                .to_string();
+            let events = if g.bool() { "pool=8,preempt@10x2".to_string() } else { String::new() };
+            let n_records = g.usize_in(0, 12);
+            let records: Vec<(f64, f64, f64, f64)> = (0..n_records)
+                .map(|_| {
+                    (
+                        g.f64_in(0.0, 100.0),
+                        g.f64_in(-2.0, 2.0),
+                        if g.bool() { g.f64_in(-2.0, 2.0) } else { f64::NAN },
+                        g.f64_in(0.0, 1.5),
+                    )
+                })
+                .collect();
+            let salt = g.rng().next_u64();
+            ((workload, machines, salt), (data, events, records))
+        },
+        |&(workload, machines, salt), (data, events, records)| {
+            // The canonical grammar must accept every scenario we store.
+            DataScenario::parse(data).map_err(|e| e.to_string())?;
+            let mut t = hemingway::optim::Trace::new("cocoa+", machines, 0.123);
+            t.workload = workload;
+            t.fleet = "base".to_string();
+            t.events = events.clone();
+            t.data = data.clone();
+            for (i, &(sim_time, primal, dual, subopt)) in records.iter().enumerate() {
+                t.push(hemingway::optim::Record {
+                    iter: i,
+                    sim_time,
+                    primal,
+                    dual,
+                    subopt,
+                });
+            }
+            let key = format!("ctx|workload={workload};salt={salt};data={data}");
+            let bytes = encode_trace(&key, &t);
+            if !bytes.starts_with(MAGIC_V7.as_bytes()) {
+                return Err("data-carrying trace did not encode as v7".into());
+            }
+            let (key_back, back) = decode_trace_v7(&bytes).map_err(|e| e.to_string())?;
+            if key_back != key || back.data != *data || back.events != *events {
+                return Err(format!(
+                    "v7 metadata drifted: data '{}', events '{}'",
+                    back.data, back.events
+                ));
+            }
+            if encode_trace(&key, &back) != bytes {
+                return Err("v7 round trip is not byte-identical".into());
+            }
+            let (_, any, legacy_text) = decode_any(&bytes).map_err(|e| e.to_string())?;
+            if any.data != *data || legacy_text {
+                return Err("decode_any mishandled a v7 file".into());
+            }
+            // Legacy bytes for the same cell: clearing `data` must fall
+            // back to the exact pre-data-axis magic, and decoding those
+            // bytes yields the implicit dense scenario.
+            let mut legacy = t.clone();
+            legacy.data = String::new();
+            let legacy_bytes = encode_trace(&key, &legacy);
+            let want_magic = if events.is_empty() { MAGIC_V5 } else { MAGIC_V6 };
+            if !legacy_bytes.starts_with(want_magic.as_bytes()) {
+                return Err(format!("data-free trace did not encode as {want_magic}"));
+            }
+            let (legacy_key, dense, _) = decode_any(&legacy_bytes).map_err(|e| e.to_string())?;
+            if legacy_key != key {
+                return Err("legacy key drifted".into());
+            }
+            if !dense.data.is_empty() {
+                return Err(format!("legacy bytes decoded with data '{}'", dense.data));
+            }
+            if dense.events != *events || dense.records.len() != t.records.len() {
+                return Err("legacy decode lost payload".into());
+            }
+            Ok(())
+        },
+    );
+}

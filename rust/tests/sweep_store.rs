@@ -48,6 +48,7 @@ fn grid(seeds: usize, base_seed: u64) -> SweepGrid {
         modes: vec![BarrierMode::Bsp, BarrierMode::Ssp { staleness: 2 }],
         fleets: Vec::new(),
         workloads: vec![Objective::Hinge, Objective::Ridge],
+        data: Vec::new(),
         events: String::new(),
         seeds,
         base_seed,
