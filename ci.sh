@@ -40,6 +40,12 @@ QUICKCHECK_SEED=20170211 cargo test -q --release --test advisor_server
 # resize is a strict no-op, wire encoding byte-stable for every f32/f64
 # bit pattern incl. NaN/-0.0/±∞) under the same pinned seed.
 QUICKCHECK_SEED=20170211 cargo test -q --release --test elastic_props
+# Calibration invariants (fitter recovers randomized ground-truth
+# profiles from synthetic samples, artifacts round-trip bit-exactly
+# while truncation/schema bumps fail loudly, a measured profile with a
+# built-in's exact numbers drives a bitwise-identical sim) under the
+# same pinned seed.
+QUICKCHECK_SEED=20170211 cargo test -q --release --test calib_props
 cargo fmt --check
 
 # Advisor-service smoke: fit-on-miss once, then three JSON queries
@@ -225,6 +231,41 @@ if [ -z "$t_replanned" ]; then
 fi
 echo "elastic smoke OK"
 
+# Calibration smoke: measured hardware profiles end to end —
+# `calibrate --quick` fits an artifact from real on-host
+# microbenchmarks, `advise` answers on the measured profile, the serve
+# stats response carries calibration provenance, and
+# `repro --figure calib` prices assumed-vs-measured advice into
+# calib_compare.csv.
+cargo run --release --quiet -- calibrate --quick --name cihost --out "$tmp/calib" \
+  > "$tmp/calibrate.out"
+cat "$tmp/calibrate.out"
+test -f "$tmp/calib/cihost.json"
+grep -q 'hemingway-calib/v1' "$tmp/calib/cihost.json"
+grep -q 'generation' "$tmp/calibrate.out"
+cat > "$tmp/calib.json" <<EOF
+{"n": 256, "d": 16, "machines": [1, 2, 4], "max_iters": 40,
+ "target_subopt": 1e-2, "advisor_iter_cap": 2000,
+ "algorithms": ["cocoa+", "minibatch-sgd"],
+ "profile": "measured:cihost", "profile_dir": "$tmp/calib",
+ "out_dir": "$tmp/calib_out"}
+EOF
+cargo run --release --quiet -- advise --native --eps 0.5 --config "$tmp/calib.json" \
+  > "$tmp/calib_advise.out"
+cat "$tmp/calib_advise.out"
+grep -q '^fastest to' "$tmp/calib_advise.out"
+printf '%s\n' '{"query":"stats"}' \
+  | cargo run --release --quiet -- serve --native --config "$tmp/calib.json" \
+  > "$tmp/calib_stats.out"
+cat "$tmp/calib_stats.out"
+grep -q '"calibration"' "$tmp/calib_stats.out"
+grep -q '"name":"cihost"' "$tmp/calib_stats.out"
+cargo run --release --quiet -- repro --figure calib --native --config "$tmp/calib.json"
+grep -q '^calib:' "$tmp/calib_out/summaries.txt"
+test -f "$tmp/calib_out/calib_compare.csv"
+[ "$(wc -l < "$tmp/calib_out/calib_compare.csv")" -ge 2 ]
+echo "calib smoke OK"
+
 # Resume smoke: a tiny sweep, then tear the trace-store manifest tail
 # (as a kill mid-append would) and rerun with --resume. Planning runs
 # off the torn manifest so exactly one cell replans, but the shard
@@ -252,7 +293,8 @@ cmp "$tmp/agg_first.csv" "$tmp/sweep_out/sweep_cocoa+_agg.csv"
 echo "resume smoke OK"
 
 # Bench snapshots: regenerate BENCH_workloads.json, BENCH_sweep.json,
-# BENCH_serve.json and BENCH_data.json at the repo root (cache-probe
+# BENCH_serve.json, BENCH_data.json and BENCH_calib.json at the repo
+# root (cache-probe
 # hit/miss latency sharded-v5 vs flat-v4, streamed cells/sec, aggregate
 # throughput, TCP serve qps single- vs multi-client, dense-vs-CSR
 # kernel cost and skewed-partition overhead — see
@@ -265,5 +307,6 @@ if [ "${HEMINGWAY_BENCH:-1}" = "1" ]; then
   test -f ../BENCH_sweep.json
   test -f ../BENCH_serve.json
   test -f ../BENCH_data.json
+  test -f ../BENCH_calib.json
   echo "bench snapshots OK"
 fi

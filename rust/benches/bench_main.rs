@@ -12,6 +12,9 @@
 //!                 the skewed partitioner's overhead (BENCH_data.json)
 //!   models      — NNLS / Lasso / LassoCV / convergence-fit cost
 //!   advisor     — query latency over a fitted model set
+//!   calib       — the calibration microbenchmark suite + profile fit
+//!                 (BENCH_calib.json; every snapshot carries the host
+//!                 fingerprint that produced it)
 //!
 //! HLO groups run only when the PJRT engine is available (`pjrt`
 //! feature + artifacts); everything else is native and always runs.
@@ -108,6 +111,11 @@ fn fmt_t(s: f64) -> String {
 fn main() -> hemingway::Result<()> {
     let mut b = Bench::new();
     println!("== hemingway bench harness (filter: '{}') ==\n", b.filter);
+    // Every BENCH_*.json snapshot is stamped with the host that
+    // produced it — cross-host comparisons of checked-in numbers are
+    // apples-to-oranges otherwise.
+    let host = hemingway::calib::HostFingerprint::detect();
+    println!("host: {}\n", host.summary());
 
     let engine = match Engine::new(&default_artifact_dir()) {
         Ok(e) => {
@@ -279,6 +287,7 @@ fn main() -> hemingway::Result<()> {
             .collect();
         let doc = Json::object(vec![
             ("bench", Json::str("workloads")),
+            ("host", host.to_json()),
             ("algorithm", Json::str("cocoa+")),
             ("machines", Json::num(4.0)),
             ("workloads", Json::Object(entries)),
@@ -405,6 +414,7 @@ fn main() -> hemingway::Result<()> {
             use hemingway::util::json::Json;
             let doc = Json::object(vec![
                 ("bench", Json::str("data")),
+                ("host", host.to_json()),
                 ("n", Json::num(dcfg.n as f64)),
                 ("d", Json::num(dcfg.d as f64)),
                 ("sdca_epoch_dense_s", Json::num(dense_epoch)),
@@ -650,6 +660,7 @@ fn main() -> hemingway::Result<()> {
             let agg = mean("sweep_store/aggregate/512traces");
             let doc = Json::object(vec![
                 ("bench", Json::str("sweep_store")),
+                ("host", host.to_json()),
                 ("store_entries", Json::num(STORE_CELLS as f64)),
                 ("probe_hit_sharded_v5_s", Json::num(hit5)),
                 ("probe_hit_flat_v4_s", Json::num(hit4)),
@@ -832,6 +843,7 @@ fn main() -> hemingway::Result<()> {
             );
             let doc = Json::object(vec![
                 ("bench", Json::str("serve")),
+                ("host", host.to_json()),
                 ("workers", Json::num(workers as f64)),
                 ("queries_per_client", Json::num(queries as f64)),
                 ("single_client", single.to_json()),
@@ -843,6 +855,46 @@ fn main() -> hemingway::Result<()> {
             println!("wrote {}", path.display());
         }
     }
+
+    // ---------------- calib: microbenchmark suite + profile fit ----------------
+    // The calibration subsystem's own cost: one quick on-host suite
+    // (real kernels, threadpool fan-out, loopback TCP) plus the NNLS
+    // profile fit over its samples. Whole-suite runs, not closure
+    // timings — gate on the filter by hand like serve/load. Residuals
+    // and the fitted headline numbers land in BENCH_calib.json.
+    if b.filter.is_empty() || "calib".contains(&b.filter) {
+        use hemingway::util::json::Json;
+        let t0 = Instant::now();
+        let samples = hemingway::calib::run_suite(true)?;
+        let suite_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let fit = hemingway::calib::fit_measured("bench-host", &samples)?;
+        let fit_s = t0.elapsed().as_secs_f64();
+        println!("calib/suite/quick                                    {:>12}", fmt_t(suite_s));
+        println!("calib/fit                                            {:>12}", fmt_t(fit_s));
+        let doc = Json::object(vec![
+            ("bench", Json::str("calib")),
+            ("host", host.to_json()),
+            ("suite_quick_s", Json::num(suite_s)),
+            ("fit_s", Json::num(fit_s)),
+            ("compute_samples", Json::num(samples.compute.len() as f64)),
+            ("sched_samples", Json::num(samples.sched.len() as f64)),
+            ("net_samples", Json::num(samples.net.len() as f64)),
+            ("compute_rmse_s", Json::num(fit.compute_rmse)),
+            ("sched_rmse_s", Json::num(fit.sched_rmse)),
+            ("net_rmse_s", Json::num(fit.net_rmse)),
+            ("flops_per_sec", Json::num(fit.profile.flops_per_sec)),
+            ("iteration_overhead_s", Json::num(fit.profile.iteration_overhead)),
+            ("sched_per_machine_s", Json::num(fit.profile.sched_per_machine)),
+            ("net_latency_s", Json::num(fit.profile.net_latency)),
+            ("net_bandwidth_bps", Json::num(fit.profile.net_bandwidth)),
+            ("noise_sigma", Json::num(fit.profile.noise_sigma)),
+        ]);
+        let path = bench_out("BENCH_calib.json");
+        std::fs::write(&path, doc.to_pretty())?;
+        println!("wrote {}", path.display());
+    }
+    println!();
 
     // ---------------- summary ----------------
     let find = |name: &str| {

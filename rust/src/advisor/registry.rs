@@ -55,6 +55,11 @@ pub struct ModelRegistry {
     /// variant's fleet name here — an unnamed base fleet (legacy
     /// artifacts) falls back to the first entry.
     pub fleets: Vec<FleetSpec>,
+    /// Calibration provenance of the profiles this registry advises
+    /// over (`crate::calib::calibration_json`): `Some` only when the
+    /// serving config references `measured:` profiles, so
+    /// calibration-blind stats responses stay byte-stable.
+    pub calibration: Option<Json>,
 }
 
 impl ModelRegistry {
@@ -64,6 +69,7 @@ impl ModelRegistry {
             machine_grid,
             iter_cap,
             fleets: Vec::new(),
+            calibration: None,
         }
     }
 

@@ -50,7 +50,10 @@ pub fn handle_service_line(
         Err(_) => "other".to_string(),
     };
     let (resp, shutdown) = match (&doc, kind.as_str()) {
-        (Ok(_), "stats") => (metrics.stats_response(), false),
+        (Ok(_), "stats") => (
+            metrics.stats_response_with(registry.calibration.as_ref()),
+            false,
+        ),
         (Ok(_), "shutdown") => {
             let resp = ok_response(
                 "shutdown",
@@ -117,5 +120,25 @@ mod tests {
         let snap = metrics.serve_stats();
         assert_eq!(snap.queries, 2);
         assert_eq!(snap.errors, 0);
+    }
+
+    #[test]
+    fn stats_carry_the_registry_calibration_when_present() {
+        let metrics = ServeMetrics::new();
+        // Calibration-blind registry → no calibration field (legacy
+        // bytes).
+        let plain = empty_registry();
+        let resp = handle_service_line(&plain, &metrics, r#"{"query":"stats"}"#);
+        assert!(!resp.response().to_string().contains("calibration"));
+        // Registry advising from a measured profile → provenance in
+        // the response.
+        let mut measured = empty_registry();
+        measured.calibration = Some(Json::object(vec![
+            ("source", Json::str("measured")),
+            ("artifacts", Json::array(vec![])),
+        ]));
+        let resp = handle_service_line(&measured, &metrics, r#"{"query":"stats"}"#);
+        let text = resp.response().to_string();
+        assert!(text.contains(r#""calibration":{"source":"measured""#), "{text}");
     }
 }

@@ -61,6 +61,14 @@ impl ServeMetrics {
     /// The wire response to `{"query":"stats"}`: totals, throughput,
     /// latency percentiles (µs), and non-zero per-kind counts.
     pub fn stats_response(&self) -> Json {
+        self.stats_response_with(None)
+    }
+
+    /// [`Self::stats_response`] plus the serving registry's calibration
+    /// provenance. The `calibration` field is appended only when the
+    /// registry carries one (a `measured:` profile is in play), so
+    /// legacy responses stay byte-stable.
+    pub fn stats_response_with(&self, calibration: Option<&Json>) -> Json {
         let by_kind: Vec<(String, Json)> = KIND_NAMES
             .iter()
             .zip(&self.by_kind)
@@ -70,20 +78,21 @@ impl ServeMetrics {
             .collect();
         let uptime = self.started.elapsed().as_secs_f64();
         let pct = |q: f64| Json::num(self.latency.percentile_seconds(q) * 1e6);
-        crate::advisor::service::ok_response(
-            "stats",
-            vec![
-                ("queries".into(), Json::num(self.queries() as f64)),
-                ("errors".into(), Json::num(self.errors() as f64)),
-                ("uptime_seconds".into(), Json::num(uptime)),
-                ("qps".into(), Json::num(self.qps())),
-                ("mean_us".into(), Json::num(self.latency.mean_seconds() * 1e6)),
-                ("p50_us".into(), pct(50.0)),
-                ("p90_us".into(), pct(90.0)),
-                ("p99_us".into(), pct(99.0)),
-                ("by_kind".into(), Json::Object(by_kind)),
-            ],
-        )
+        let mut fields = vec![
+            ("queries".into(), Json::num(self.queries() as f64)),
+            ("errors".into(), Json::num(self.errors() as f64)),
+            ("uptime_seconds".into(), Json::num(uptime)),
+            ("qps".into(), Json::num(self.qps())),
+            ("mean_us".into(), Json::num(self.latency.mean_seconds() * 1e6)),
+            ("p50_us".into(), pct(50.0)),
+            ("p90_us".into(), pct(90.0)),
+            ("p99_us".into(), pct(99.0)),
+            ("by_kind".into(), Json::Object(by_kind)),
+        ];
+        if let Some(calib) = calibration {
+            fields.push(("calibration".into(), calib.clone()));
+        }
+        crate::advisor::service::ok_response("stats", fields)
     }
 
     /// Snapshot the accounting into the [`ServeStats`] both serve
@@ -144,5 +153,21 @@ mod tests {
         let by_kind = resp.get("by_kind").and_then(Json::as_object).unwrap();
         assert_eq!(by_kind.len(), 1);
         assert_eq!(by_kind[0].0, "table");
+    }
+
+    #[test]
+    fn calibration_field_appears_only_when_provided() {
+        let m = ServeMetrics::new();
+        // No calibration → the historical response, byte for byte.
+        assert_eq!(
+            m.stats_response().to_string(),
+            m.stats_response_with(None).to_string()
+        );
+        assert!(!m.stats_response().to_string().contains("calibration"));
+        // With calibration → the provenance rides along verbatim.
+        let calib = Json::object(vec![("source", Json::str("measured"))]);
+        let resp = m.stats_response_with(Some(&calib));
+        let got = resp.get("calibration").expect("calibration field");
+        assert_eq!(got.to_string(), calib.to_string());
     }
 }

@@ -65,6 +65,10 @@ pub struct ReloadConfig {
     /// Fleet axis to price `cheapest_to` queries with (the registry
     /// artifacts don't carry it).
     pub fleets: Vec<FleetSpec>,
+    /// Calibration provenance to serve in `stats` responses (the
+    /// registry artifacts don't carry it either); `None` when the
+    /// serving config only uses built-in profiles.
+    pub calibration: Option<crate::util::json::Json>,
     /// Restrict the reloaded registry to these algorithms (`None`
     /// serves whatever the directory holds).
     pub algos: Option<Vec<AlgorithmId>>,
@@ -116,6 +120,7 @@ pub(crate) fn watch_artifacts(shared: &SharedRegistry, cfg: &ReloadConfig, stop:
         match loaded {
             Ok((mut registry, report)) => {
                 registry.fleets = cfg.fleets.clone();
+                registry.calibration = cfg.calibration.clone();
                 if let Some(algos) = &cfg.algos {
                     registry.retain(|key| algos.contains(&key.algorithm));
                 }

@@ -1,0 +1,283 @@
+//! Persisted calibration artifacts: `calib/<name>.json`.
+//!
+//! The wire format follows the checkpoint discipline
+//! (`optim::checkpoint`): every float is stored as its IEEE-754 bit
+//! pattern so a save/load round trip is byte-exact, the document
+//! carries a `schema` tag that is rejected loudly on mismatch, and a
+//! truncated file fails the full-document parse rather than yielding a
+//! half-profile.
+//!
+//! The artifact's *generation* — the FNV-64 hash of its canonical JSON
+//! — is what `ExperimentConfig::model_context_hash` folds in, so any
+//! advisor model fitted against one calibration goes stale the moment
+//! a re-calibration lands.
+
+use std::path::{Path, PathBuf};
+
+use super::bench::HostFingerprint;
+use crate::cluster::HardwareProfile;
+use crate::optim::checkpoint::{f64_from_json, f64_to_json};
+use crate::util::json::{read_json_file, write_json_file, Json};
+
+/// Schema tag; bump only with a migration path.
+pub const SCHEMA: &str = "hemingway-calib/v1";
+
+/// A fitted, persistable calibration: the measured profile plus enough
+/// provenance (host, residuals, sample counts) to judge whether to
+/// trust it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibArtifact {
+    /// Artifact name — the `<name>` in `measured:<name>` and in the
+    /// `calib/<name>.json` filename.
+    pub name: String,
+    pub host: HostFingerprint,
+    pub profile: HardwareProfile,
+    pub compute_rmse: f64,
+    pub sched_rmse: f64,
+    pub net_rmse: f64,
+    /// Sample counts per family, for the provenance record.
+    pub compute_samples: usize,
+    pub sched_samples: usize,
+    pub net_samples: usize,
+    /// Wall-clock seconds the microbenchmark suite took.
+    pub wall_seconds: f64,
+}
+
+/// Artifact names double as filename stems and as tokens inside fleet
+/// specs (`mixed:measured:fast*0.5+local48`), so keep them to a
+/// charset that neither the filesystem nor the fleet grammar
+/// (`+ * : =` separators) can misparse.
+pub fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.')
+}
+
+fn profile_to_json(p: &HardwareProfile) -> Json {
+    Json::object(vec![
+        ("name", Json::str(p.name.clone())),
+        ("flops_per_sec", f64_to_json(p.flops_per_sec)),
+        ("iteration_overhead", f64_to_json(p.iteration_overhead)),
+        ("sched_per_machine", f64_to_json(p.sched_per_machine)),
+        ("net_latency", f64_to_json(p.net_latency)),
+        ("net_bandwidth", f64_to_json(p.net_bandwidth)),
+        ("noise_sigma", f64_to_json(p.noise_sigma)),
+        ("straggler_prob", f64_to_json(p.straggler_prob)),
+        ("straggler_factor", f64_to_json(p.straggler_factor)),
+        (
+            "price_per_machine_second",
+            f64_to_json(p.price_per_machine_second),
+        ),
+    ])
+}
+
+fn profile_from_json(v: &Json) -> crate::Result<HardwareProfile> {
+    let f = |k: &str| -> crate::Result<f64> {
+        f64_from_json(
+            v.get(k).ok_or_else(|| crate::err!("profile missing '{k}'"))?,
+            k,
+        )
+    };
+    Ok(HardwareProfile {
+        name: v.req_str("name")?.to_string(),
+        flops_per_sec: f("flops_per_sec")?,
+        iteration_overhead: f("iteration_overhead")?,
+        sched_per_machine: f("sched_per_machine")?,
+        net_latency: f("net_latency")?,
+        net_bandwidth: f("net_bandwidth")?,
+        noise_sigma: f("noise_sigma")?,
+        straggler_prob: f("straggler_prob")?,
+        straggler_factor: f("straggler_factor")?,
+        price_per_machine_second: f("price_per_machine_second")?,
+    })
+}
+
+impl CalibArtifact {
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("name", Json::str(self.name.clone())),
+            ("host", self.host.to_json()),
+            ("profile", profile_to_json(&self.profile)),
+            (
+                "fit",
+                Json::object(vec![
+                    ("compute_rmse", f64_to_json(self.compute_rmse)),
+                    ("sched_rmse", f64_to_json(self.sched_rmse)),
+                    ("net_rmse", f64_to_json(self.net_rmse)),
+                ]),
+            ),
+            (
+                "samples",
+                Json::object(vec![
+                    ("compute", Json::num(self.compute_samples as f64)),
+                    ("sched", Json::num(self.sched_samples as f64)),
+                    ("net", Json::num(self.net_samples as f64)),
+                ]),
+            ),
+            ("wall_seconds", f64_to_json(self.wall_seconds)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> crate::Result<CalibArtifact> {
+        let schema = v.req_str("schema")?;
+        crate::ensure!(
+            schema == SCHEMA,
+            "unsupported calibration schema '{schema}' (expected '{SCHEMA}')"
+        );
+        let name = v.req_str("name")?.to_string();
+        crate::ensure!(
+            valid_name(&name),
+            "invalid calibration name '{name}' (allowed: alphanumerics, '_', '-', '.')"
+        );
+        let fit = v.get("fit").ok_or_else(|| crate::err!("artifact missing 'fit'"))?;
+        let samples = v
+            .get("samples")
+            .ok_or_else(|| crate::err!("artifact missing 'samples'"))?;
+        Ok(CalibArtifact {
+            name,
+            host: HostFingerprint::from_json(
+                v.get("host").ok_or_else(|| crate::err!("artifact missing 'host'"))?,
+            )?,
+            profile: profile_from_json(
+                v.get("profile")
+                    .ok_or_else(|| crate::err!("artifact missing 'profile'"))?,
+            )?,
+            compute_rmse: f64_from_json(
+                fit.get("compute_rmse")
+                    .ok_or_else(|| crate::err!("fit missing 'compute_rmse'"))?,
+                "compute_rmse",
+            )?,
+            sched_rmse: f64_from_json(
+                fit.get("sched_rmse")
+                    .ok_or_else(|| crate::err!("fit missing 'sched_rmse'"))?,
+                "sched_rmse",
+            )?,
+            net_rmse: f64_from_json(
+                fit.get("net_rmse")
+                    .ok_or_else(|| crate::err!("fit missing 'net_rmse'"))?,
+                "net_rmse",
+            )?,
+            compute_samples: samples.req_usize("compute")?,
+            sched_samples: samples.req_usize("sched")?,
+            net_samples: samples.req_usize("net")?,
+            wall_seconds: f64_from_json(
+                v.get("wall_seconds")
+                    .ok_or_else(|| crate::err!("artifact missing 'wall_seconds'"))?,
+                "wall_seconds",
+            )?,
+        })
+    }
+
+    /// The calibration *generation*: a 16-hex FNV-64 digest of the
+    /// canonical JSON. Two artifacts agree on generation iff they are
+    /// byte-identical, so folding this into the model context hash
+    /// staleness-checks advisor artifacts against re-calibration.
+    pub fn generation(&self) -> String {
+        format!(
+            "{:016x}",
+            crate::sweep::cache::hash_key(&self.to_json().to_string())
+        )
+    }
+
+    /// Path of this artifact inside `dir`.
+    pub fn path_in(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("{}.json", self.name))
+    }
+
+    /// Persist to `dir/<name>.json` (creating `dir` as needed).
+    pub fn save(&self, dir: &Path) -> crate::Result<PathBuf> {
+        crate::ensure!(
+            valid_name(&self.name),
+            "invalid calibration name '{}' (allowed: alphanumerics, '_', '-', '.')",
+            self.name
+        );
+        let path = self.path_in(dir);
+        write_json_file(&path, &self.to_json())?;
+        Ok(path)
+    }
+
+    /// Load one artifact file, rejecting truncation and schema drift.
+    pub fn load(path: &Path) -> crate::Result<CalibArtifact> {
+        Self::from_json(&read_json_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_artifact() -> CalibArtifact {
+        CalibArtifact {
+            name: "testhost".into(),
+            host: HostFingerprint::detect(),
+            profile: HardwareProfile {
+                name: "testhost".into(),
+                // Deliberately awkward floats: bit-exactness must survive.
+                flops_per_sec: 1.234567890123e7 + 0.1,
+                iteration_overhead: 0.1 + 0.2,
+                ..HardwareProfile::local48()
+            },
+            compute_rmse: 1.0e-4 / 3.0,
+            sched_rmse: 2.0e-5,
+            net_rmse: 7.0e-6,
+            compute_samples: 45,
+            sched_samples: 15,
+            net_samples: 18,
+            wall_seconds: 2.75,
+        }
+    }
+
+    #[test]
+    fn artifact_round_trips_bit_exactly() {
+        let a = sample_artifact();
+        let dir = std::env::temp_dir().join("hemingway_calib_artifact_test");
+        let path = a.save(&dir).unwrap();
+        let b = CalibArtifact::load(&path).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(
+            a.profile.flops_per_sec.to_bits(),
+            b.profile.flops_per_sec.to_bits()
+        );
+        assert_eq!(a.generation(), b.generation());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_artifact_is_rejected() {
+        let text = sample_artifact().to_json().to_string();
+        let cut = &text[..text.len() / 2];
+        assert!(Json::parse(cut).is_err());
+    }
+
+    #[test]
+    fn schema_bump_is_rejected() {
+        let text = sample_artifact().to_json().to_string();
+        let bumped = text.replace("hemingway-calib/v1", "hemingway-calib/v2");
+        let err = CalibArtifact::from_json(&Json::parse(&bumped).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("schema"), "{err}");
+    }
+
+    #[test]
+    fn generation_tracks_content() {
+        let a = sample_artifact();
+        let mut b = a.clone();
+        assert_eq!(a.generation(), b.generation());
+        b.profile.net_latency += 1.0e-9;
+        assert_ne!(a.generation(), b.generation());
+    }
+
+    #[test]
+    fn names_are_policed() {
+        assert!(valid_name("ci-host_1.2"));
+        for bad in ["", "a b", "a+b", "a*b", "a:b", "a=b", "a/b"] {
+            assert!(!valid_name(bad), "{bad:?} should be invalid");
+        }
+        let mut a = sample_artifact();
+        a.name = "oops:colon".into();
+        assert!(a.save(&std::env::temp_dir()).is_err());
+    }
+}

@@ -1,0 +1,405 @@
+//! On-host microbenchmarks behind `hemingway calibrate`.
+//!
+//! The simulator's [`crate::cluster::HardwareProfile`] fields are
+//! proxied by three sample families, each timed with warmup + repeated
+//! samples so the fitter (`calib::fit`) can regress profile fields and
+//! a noise sigma out of them:
+//!
+//! * **compute** — the real kernels in `optim::native` (generic dense
+//!   and CSR sdca/sgd epochs and `loss_stats`) across problem sizes
+//!   and densities, with flop counts charged by the *same* conventions
+//!   the algorithms use for `IterationCost::flops_per_machine` (8
+//!   flops per touched coordinate for SDCA, 6 for SGD, 4 for a
+//!   full-pass gradient) — so the fitted `flops_per_sec` lives in the
+//!   simulator's unit system;
+//! * **sched** — thread-pool fan-out ([`parallel_map`]) over a fanout
+//!   grid, the on-host proxy for the driver's per-executor scheduling
+//!   cost (`iteration_overhead + sched_per_machine·m`);
+//! * **net** — loopback-TCP length-prefixed send + 1-byte ack round
+//!   trips across payload sizes, the proxy for
+//!   `net_latency + bytes/net_bandwidth`.
+//!
+//! Every sample set ships with a [`HostFingerprint`] (cpu count, os,
+//! arch, cargo profile) so artifacts and `BENCH_*.json` snapshots are
+//! comparable across machines.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Instant;
+
+use crate::optim::native::{loss_stats, loss_stats_csr, sdca_epoch_obj, sdca_epoch_csr, sgd_epoch_obj, sgd_epoch_csr};
+use crate::optim::Objective;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use crate::util::threadpool::parallel_map;
+
+/// Where a sample set was measured: enough to tell two hosts (or two
+/// build profiles on one host) apart when comparing artifacts and
+/// bench snapshots.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HostFingerprint {
+    /// `std::thread::available_parallelism` at measurement time.
+    pub cpus: usize,
+    pub os: String,
+    pub arch: String,
+    /// Cargo profile the measuring binary was built under
+    /// (`release`/`debug`) — debug timings are not comparable.
+    pub build: String,
+}
+
+impl HostFingerprint {
+    pub fn detect() -> HostFingerprint {
+        HostFingerprint {
+            cpus: std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1),
+            os: std::env::consts::OS.to_string(),
+            arch: std::env::consts::ARCH.to_string(),
+            build: if cfg!(debug_assertions) { "debug" } else { "release" }.to_string(),
+        }
+    }
+
+    /// One-line form for summaries, serve stats and bench stamps.
+    pub fn summary(&self) -> String {
+        format!("{}x-{}-{}-{}", self.cpus, self.os, self.arch, self.build)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::object(vec![
+            ("cpus", Json::num(self.cpus as f64)),
+            ("os", Json::str(self.os.clone())),
+            ("arch", Json::str(self.arch.clone())),
+            ("build", Json::str(self.build.clone())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> crate::Result<HostFingerprint> {
+        Ok(HostFingerprint {
+            cpus: v.req_usize("cpus")?,
+            os: v.req_str("os")?.to_string(),
+            arch: v.req_str("arch")?.to_string(),
+            build: v.req_str("build")?.to_string(),
+        })
+    }
+}
+
+/// One timed kernel pass. `point` groups repeats of the same
+/// (kernel, size, density) grid point so the fitter can estimate the
+/// lognormal noise sigma from within-point spread.
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeSample {
+    pub flops: f64,
+    pub seconds: f64,
+    pub point: usize,
+}
+
+/// One timed fork-join over `machines` workers.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedSample {
+    pub machines: f64,
+    pub seconds: f64,
+}
+
+/// One timed loopback round trip: `bytes` sent, 1-byte ack received —
+/// `seconds ≈ 2·net_latency + bytes/net_bandwidth`.
+#[derive(Debug, Clone, Copy)]
+pub struct NetSample {
+    pub bytes: f64,
+    pub seconds: f64,
+}
+
+/// Everything one calibration run measured.
+#[derive(Debug, Clone)]
+pub struct CalibSamples {
+    pub host: HostFingerprint,
+    pub compute: Vec<ComputeSample>,
+    pub sched: Vec<SchedSample>,
+    pub net: Vec<NetSample>,
+    /// Wall-clock seconds the whole suite took (reported in
+    /// `BENCH_calib.json`).
+    pub wall_seconds: f64,
+}
+
+/// Mean of the middle ~60% of samples (20% trimmed from each tail) —
+/// robust against the occasional scheduler hiccup without hiding the
+/// within-point spread the noise fit needs (raw samples are kept too).
+pub fn trimmed_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let cut = v.len() / 5;
+    let kept = &v[cut..v.len() - cut];
+    kept.iter().sum::<f64>() / kept.len() as f64
+}
+
+fn time_it(mut f: impl FnMut()) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+/// Deterministic synthetic rows for the kernel benches (the timing
+/// target is the kernel, not the data distribution, so a plain uniform
+/// fill is enough — and keeps the bench independent of the dataset
+/// subsystem's generation pipeline).
+fn bench_rows(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg32::new(seed, 0xCA11B);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+    let y: Vec<f32> = (0..n)
+        .map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 })
+        .collect();
+    (x, y)
+}
+
+/// Zero out all but `density` of each row, then store it as CSR —
+/// exercises the sparse kernels with a realistic stored-entry count.
+fn bench_csr(x: &mut [f32], n: usize, d: usize, density: f64, seed: u64) -> crate::data::Csr {
+    let mut rng = Pcg32::new(seed, 0xC53);
+    for row in 0..n {
+        for col in 0..d {
+            if rng.uniform() >= density {
+                x[row * d + col] = 0.0;
+            }
+        }
+    }
+    crate::data::Csr::from_dense(x, n, d)
+}
+
+/// Time the kernel suite at one (n, d, density) grid point, appending
+/// one [`ComputeSample`] per (kernel, repeat). Returns the next free
+/// point id.
+fn compute_point(
+    out: &mut Vec<ComputeSample>,
+    n: usize,
+    d: usize,
+    density: f64,
+    repeats: usize,
+    mut point: usize,
+) -> usize {
+    let (mut x, y) = bench_rows(n, d, (n * d) as u64 ^ 0x5EED);
+    let mask = vec![1.0f32; n];
+    let alpha = vec![0.25f32; n];
+    let w = vec![0.05f32; d];
+    let obj = Objective::Logistic;
+    let nnz = (density * d as f64).max(1.0);
+    let h = n; // one epoch: n steps
+    let csr = if density < 1.0 {
+        Some(bench_csr(&mut x, n, d, density, (n + d) as u64))
+    } else {
+        None
+    };
+    // (flops-per-sample, timed body) per kernel, matching the cost
+    // conventions in optim::{cocoa,sgd,gd}.
+    let mut kernels: Vec<(f64, Box<dyn FnMut() + '_>)> = match &csr {
+        None => vec![
+            (
+                h as f64 * 8.0 * nnz,
+                Box::new(|| {
+                    sdca_epoch_obj(obj, &x, &y, &mask, &alpha, &w, 0.1 * n as f64, 1.0, 7, h);
+                }),
+            ),
+            (
+                h as f64 * 6.0 * nnz,
+                Box::new(|| {
+                    sgd_epoch_obj(obj, &x, &y, &mask, &w, 0.01, 0.0, 7, h);
+                }),
+            ),
+            (
+                4.0 * n as f64 * nnz,
+                Box::new(|| {
+                    loss_stats(obj, &x, &y, &mask, &w);
+                }),
+            ),
+        ],
+        Some(csr) => vec![
+            (
+                h as f64 * 8.0 * nnz,
+                Box::new(|| {
+                    sdca_epoch_csr(obj, csr, &y, &mask, &alpha, &w, 0.1 * n as f64, 1.0, 7, h);
+                }),
+            ),
+            (
+                h as f64 * 6.0 * nnz,
+                Box::new(|| {
+                    sgd_epoch_csr(obj, csr, &y, &mask, &w, 0.01, 0.0, 7, h);
+                }),
+            ),
+            (
+                4.0 * n as f64 * nnz,
+                Box::new(|| {
+                    loss_stats_csr(obj, csr, &y, &mask, &w);
+                }),
+            ),
+        ],
+    };
+    for (flops, body) in kernels.iter_mut() {
+        body(); // warmup (page-in, branch history, scratch growth)
+        for _ in 0..repeats {
+            let seconds = time_it(&mut *body);
+            out.push(ComputeSample {
+                flops: *flops,
+                seconds,
+                point,
+            });
+        }
+        point += 1;
+    }
+    point
+}
+
+/// Time fork-joins across the fanout grid — the scheduling proxy.
+fn sched_samples(fanouts: &[usize], repeats: usize) -> Vec<SchedSample> {
+    let mut out = Vec::new();
+    for &k in fanouts {
+        parallel_map(k, k, |i| i); // warmup
+        for _ in 0..repeats {
+            let seconds = time_it(|| {
+                parallel_map(k, k, |i| i);
+            });
+            out.push(SchedSample {
+                machines: k as f64,
+                seconds,
+            });
+        }
+    }
+    out
+}
+
+/// Time loopback round trips across the payload grid — the network
+/// proxy. Protocol: 8-byte big-endian length header + payload one way,
+/// a 1-byte ack back (an echo of the full payload can deadlock once
+/// both socket buffers fill; the ack never does).
+fn net_samples(sizes: &[usize], repeats: usize) -> crate::Result<Vec<NetSample>> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let server = std::thread::spawn(move || {
+        if let Ok((mut sock, _)) = listener.accept() {
+            let mut header = [0u8; 8];
+            let mut buf = vec![0u8; 1 << 16];
+            while sock.read_exact(&mut header).is_ok() {
+                let mut left = u64::from_be_bytes(header) as usize;
+                while left > 0 {
+                    let take = left.min(buf.len());
+                    if sock.read_exact(&mut buf[..take]).is_err() {
+                        return;
+                    }
+                    left -= take;
+                }
+                if sock.write_all(&[1u8]).is_err() {
+                    return;
+                }
+            }
+        }
+    });
+    let mut out = Vec::new();
+    {
+        let mut sock = TcpStream::connect(addr)?;
+        sock.set_nodelay(true)?;
+        let mut ack = [0u8; 1];
+        let mut round = |bytes: usize, sock: &mut TcpStream| -> crate::Result<f64> {
+            let payload = vec![0x42u8; bytes];
+            let t0 = Instant::now();
+            sock.write_all(&(bytes as u64).to_be_bytes())?;
+            sock.write_all(&payload)?;
+            sock.read_exact(&mut ack)?;
+            Ok(t0.elapsed().as_secs_f64())
+        };
+        for &bytes in sizes {
+            round(bytes, &mut sock)?; // warmup
+            for _ in 0..repeats {
+                let seconds = round(bytes, &mut sock)?;
+                out.push(NetSample {
+                    bytes: bytes as f64,
+                    seconds,
+                });
+            }
+        }
+    } // drop the client socket so the server loop exits
+    let _ = server.join();
+    Ok(out)
+}
+
+/// Run the full microbenchmark suite. `quick` shrinks the grids and
+/// repeat counts to CI scale (a couple of seconds) while keeping every
+/// sample family populated enough for the fit.
+pub fn run_suite(quick: bool) -> crate::Result<CalibSamples> {
+    let t0 = Instant::now();
+    let host = HostFingerprint::detect();
+    // (n, d, density) kernel grid: dense points at a few sizes plus
+    // sparse points so CSR kernels are represented.
+    let grid: &[(usize, usize, f64)] = if quick {
+        &[(128, 32, 1.0), (256, 64, 1.0), (256, 64, 0.125)]
+    } else {
+        &[
+            (128, 32, 1.0),
+            (256, 64, 1.0),
+            (512, 96, 1.0),
+            (1024, 128, 1.0),
+            (256, 64, 0.125),
+            (512, 96, 0.0625),
+        ]
+    };
+    let repeats = if quick { 5 } else { 15 };
+    let mut compute = Vec::new();
+    let mut point = 0usize;
+    for &(n, d, density) in grid {
+        point = compute_point(&mut compute, n, d, density, repeats, point);
+    }
+    let fanouts: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8, 16] };
+    let sched = sched_samples(fanouts, repeats);
+    let sizes: &[usize] = if quick {
+        &[1 << 12, 1 << 16, 1 << 20]
+    } else {
+        &[1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22]
+    };
+    let net = net_samples(sizes, repeats)?;
+    Ok(CalibSamples {
+        host,
+        compute,
+        sched,
+        net,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_detects_and_round_trips() {
+        let h = HostFingerprint::detect();
+        assert!(h.cpus >= 1);
+        assert!(!h.os.is_empty() && !h.arch.is_empty());
+        let back = HostFingerprint::from_json(&h.to_json()).unwrap();
+        assert_eq!(h, back);
+        assert!(h.summary().starts_with(&format!("{}x-", h.cpus)));
+    }
+
+    #[test]
+    fn trimmed_mean_drops_tails() {
+        // One wild outlier in ten samples must not move the estimate.
+        let mut xs = vec![1.0; 9];
+        xs.push(1000.0);
+        assert_eq!(trimmed_mean(&xs), 1.0);
+        assert_eq!(trimmed_mean(&[]), 0.0);
+        assert_eq!(trimmed_mean(&[3.0]), 3.0);
+    }
+
+    #[test]
+    fn quick_suite_populates_every_family() {
+        let s = run_suite(true).unwrap();
+        assert!(!s.compute.is_empty());
+        assert!(!s.sched.is_empty());
+        assert!(!s.net.is_empty());
+        assert!(s.compute.iter().all(|c| c.seconds >= 0.0 && c.flops > 0.0));
+        assert!(s.net.iter().all(|n| n.seconds > 0.0 && n.bytes > 0.0));
+        assert!(s.wall_seconds > 0.0);
+        // Repeats share a point id; distinct kernels/sizes do not.
+        let points: std::collections::BTreeSet<usize> =
+            s.compute.iter().map(|c| c.point).collect();
+        assert!(points.len() >= 3, "expected ≥3 grid points, got {points:?}");
+    }
+}

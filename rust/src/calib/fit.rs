@@ -1,0 +1,261 @@
+//! Regress microbenchmark samples onto [`HardwareProfile`] fields.
+//!
+//! Each sample family maps to a small non-negative least-squares
+//! problem solved with the crate's existing [`crate::linalg::nnls`]
+//! (the same Lawson–Hanson machinery behind the Ernest fit):
+//!
+//! * compute: `seconds ≈ c·flops` → `flops_per_sec = 1/c`;
+//! * sched:   `seconds ≈ θ0 + θ1·m` → `iteration_overhead = θ0`,
+//!   `sched_per_machine = θ1`;
+//! * net:     `seconds ≈ c0 + c1·bytes` with `c0 = 2·net_latency`
+//!   (one latency each way per round trip) and `c1 = 1/net_bandwidth`;
+//! * noise:   `noise_sigma` is the median within-point standard
+//!   deviation of `ln(seconds)` over repeated compute samples — the
+//!   simulator's compute noise is lognormal, so the log-spread *is*
+//!   its sigma.
+//!
+//! `straggler_prob`, `straggler_factor` and
+//! `price_per_machine_second` are not observable from a single-host
+//! microbenchmark; they are carried over from a named baseline profile
+//! (the `local48` defaults unless the caller picks another).
+
+use std::collections::BTreeMap;
+
+use super::bench::CalibSamples;
+use crate::cluster::HardwareProfile;
+use crate::linalg::{nnls, Matrix};
+use crate::util::rng::Pcg32;
+use crate::util::stats::{rmse, stddev};
+
+/// A fitted profile plus per-family residuals (reported by
+/// `hemingway calibrate` and `BENCH_calib.json`).
+#[derive(Debug, Clone)]
+pub struct CalibFit {
+    pub profile: HardwareProfile,
+    /// RMSE of the compute regression, seconds.
+    pub compute_rmse: f64,
+    /// RMSE of the fork-join regression, seconds.
+    pub sched_rmse: f64,
+    /// RMSE of the loopback regression, seconds.
+    pub net_rmse: f64,
+}
+
+/// Fit a [`HardwareProfile`] named `name` from measured samples.
+/// `carry` supplies the fields a single-host bench cannot observe
+/// (straggler behavior, dollar price).
+pub fn fit_profile(
+    name: &str,
+    samples: &CalibSamples,
+    carry: &HardwareProfile,
+) -> crate::Result<CalibFit> {
+    crate::ensure!(
+        samples.compute.len() >= 3,
+        "calibration needs ≥3 compute samples, got {}",
+        samples.compute.len()
+    );
+    let sched_fanouts: std::collections::BTreeSet<u64> =
+        samples.sched.iter().map(|s| s.machines as u64).collect();
+    crate::ensure!(
+        sched_fanouts.len() >= 2,
+        "calibration needs ≥2 distinct fan-out widths, got {}",
+        sched_fanouts.len()
+    );
+    let net_sizes: std::collections::BTreeSet<u64> =
+        samples.net.iter().map(|s| s.bytes as u64).collect();
+    crate::ensure!(
+        net_sizes.len() >= 2,
+        "calibration needs ≥2 distinct payload sizes, got {}",
+        net_sizes.len()
+    );
+
+    // compute: seconds ≈ c · flops (single non-negative coefficient).
+    let a = Matrix::from_fn(samples.compute.len(), 1, |i, _| samples.compute[i].flops);
+    let b: Vec<f64> = samples.compute.iter().map(|s| s.seconds).collect();
+    let c = nnls(&a, &b)?[0];
+    crate::ensure!(
+        c > 0.0,
+        "compute samples show no positive per-flop cost (is the clock too coarse?)"
+    );
+    let flops_per_sec = 1.0 / c;
+    let compute_pred: Vec<f64> = samples.compute.iter().map(|s| c * s.flops).collect();
+    let compute_rmse = rmse(&b, &compute_pred);
+
+    // sched: seconds ≈ θ0 + θ1·m.
+    let a = Matrix::from_fn(samples.sched.len(), 2, |i, j| {
+        if j == 0 {
+            1.0
+        } else {
+            samples.sched[i].machines
+        }
+    });
+    let b: Vec<f64> = samples.sched.iter().map(|s| s.seconds).collect();
+    let theta = nnls(&a, &b)?;
+    let (iteration_overhead, sched_per_machine) = (theta[0], theta[1]);
+    let sched_pred: Vec<f64> = samples
+        .sched
+        .iter()
+        .map(|s| theta[0] + theta[1] * s.machines)
+        .collect();
+    let sched_rmse = rmse(&b, &sched_pred);
+
+    // net: seconds ≈ c0 + c1·bytes, c0 = 2·latency, c1 = 1/bandwidth.
+    let a = Matrix::from_fn(samples.net.len(), 2, |i, j| {
+        if j == 0 {
+            1.0
+        } else {
+            samples.net[i].bytes
+        }
+    });
+    let b: Vec<f64> = samples.net.iter().map(|s| s.seconds).collect();
+    let coef = nnls(&a, &b)?;
+    let net_latency = coef[0] / 2.0;
+    let net_bandwidth = if coef[1] > 0.0 {
+        1.0 / coef[1]
+    } else {
+        // NNLS clipped the slope to zero (transfer cost lost in the
+        // noise): fall back to the throughput of the largest payload —
+        // a lower bound, deterministic, never a divide-by-zero.
+        let big = samples
+            .net
+            .iter()
+            .max_by(|x, y| x.bytes.total_cmp(&y.bytes))
+            .expect("net samples are non-empty");
+        big.bytes / big.seconds.max(1e-12)
+    };
+    let net_pred: Vec<f64> = samples
+        .net
+        .iter()
+        .map(|s| coef[0] + coef[1] * s.bytes)
+        .collect();
+    let net_rmse = rmse(&b, &net_pred);
+
+    // noise: median within-point stddev of ln(seconds).
+    let mut groups: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+    for s in &samples.compute {
+        if s.seconds > 0.0 {
+            groups.entry(s.point).or_default().push(s.seconds.ln());
+        }
+    }
+    let mut sigmas: Vec<f64> = groups
+        .values()
+        .filter(|g| g.len() >= 2)
+        .map(|g| stddev(g))
+        .collect();
+    sigmas.sort_by(|a, b| a.total_cmp(b));
+    let noise_sigma = if sigmas.is_empty() {
+        0.0
+    } else {
+        sigmas[sigmas.len() / 2].clamp(0.0, 1.0)
+    };
+
+    Ok(CalibFit {
+        profile: HardwareProfile {
+            name: name.to_string(),
+            flops_per_sec,
+            iteration_overhead,
+            sched_per_machine,
+            net_latency,
+            net_bandwidth,
+            noise_sigma,
+            straggler_prob: carry.straggler_prob,
+            straggler_factor: carry.straggler_factor,
+            price_per_machine_second: carry.price_per_machine_second,
+        },
+        compute_rmse,
+        sched_rmse,
+        net_rmse,
+    })
+}
+
+/// [`fit_profile`] with the `local48` baseline carrying the
+/// unmeasurable fields — what `hemingway calibrate` uses.
+pub fn fit_measured(name: &str, samples: &CalibSamples) -> crate::Result<CalibFit> {
+    fit_profile(name, samples, &HardwareProfile::local48())
+}
+
+/// Generate samples from a *known* profile — the ground truth for the
+/// fitter's recovery property (tests feed these back through
+/// [`fit_profile`] and assert each field comes back within tolerance).
+pub fn synthetic_samples(profile: &HardwareProfile, seed: u64) -> CalibSamples {
+    use super::bench::{ComputeSample, HostFingerprint, NetSample, SchedSample};
+    let mut rng = Pcg32::new(seed, 0x5F17);
+    let mut compute = Vec::new();
+    for (point, &flops) in [2.0e5, 8.0e5, 3.2e6, 1.28e7, 5.12e7].iter().enumerate() {
+        for _ in 0..12 {
+            let noise = (rng.normal() * profile.noise_sigma).exp();
+            compute.push(ComputeSample {
+                flops,
+                seconds: flops / profile.flops_per_sec * noise,
+                point,
+            });
+        }
+    }
+    let mut sched = Vec::new();
+    for &m in &[1.0, 2.0, 4.0, 8.0, 16.0] {
+        for _ in 0..6 {
+            sched.push(SchedSample {
+                machines: m,
+                seconds: profile.iteration_overhead + profile.sched_per_machine * m,
+            });
+        }
+    }
+    let mut net = Vec::new();
+    for &bytes in &[4096.0, 65536.0, 1048576.0, 4194304.0] {
+        for _ in 0..6 {
+            net.push(NetSample {
+                bytes,
+                seconds: 2.0 * profile.net_latency + bytes / profile.net_bandwidth,
+            });
+        }
+    }
+    CalibSamples {
+        host: HostFingerprint::detect(),
+        compute,
+        sched,
+        net,
+        wall_seconds: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_noiseless_ground_truth_exactly() {
+        let truth = HardwareProfile {
+            noise_sigma: 0.0,
+            ..HardwareProfile::r3_xlarge()
+        };
+        let samples = synthetic_samples(&truth, 11);
+        let fit = fit_profile("probe", &samples, &truth).unwrap();
+        let p = &fit.profile;
+        assert!((p.flops_per_sec / truth.flops_per_sec - 1.0).abs() < 1e-6);
+        assert!((p.iteration_overhead - truth.iteration_overhead).abs() < 1e-9);
+        assert!((p.sched_per_machine - truth.sched_per_machine).abs() < 1e-9);
+        assert!((p.net_latency - truth.net_latency).abs() < 1e-9);
+        assert!((p.net_bandwidth / truth.net_bandwidth - 1.0).abs() < 1e-6);
+        assert_eq!(p.noise_sigma, 0.0);
+        assert!(fit.compute_rmse < 1e-9 && fit.sched_rmse < 1e-9 && fit.net_rmse < 1e-9);
+        // Carried fields are the baseline's, untouched.
+        assert_eq!(p.straggler_prob, truth.straggler_prob);
+        assert_eq!(p.price_per_machine_second, truth.price_per_machine_second);
+        assert_eq!(p.name, "probe");
+    }
+
+    #[test]
+    fn too_few_samples_are_rejected_loudly() {
+        let truth = HardwareProfile::ideal();
+        let mut s = synthetic_samples(&truth, 3);
+        s.sched.retain(|x| x.machines == 1.0);
+        let err = fit_profile("probe", &s, &truth).unwrap_err().to_string();
+        assert!(err.contains("fan-out"), "{err}");
+        let mut s = synthetic_samples(&truth, 3);
+        s.compute.truncate(2);
+        assert!(fit_profile("probe", &s, &truth).is_err());
+        let mut s = synthetic_samples(&truth, 3);
+        s.net.retain(|x| x.bytes < 5000.0);
+        let err = fit_profile("probe", &s, &truth).unwrap_err().to_string();
+        assert!(err.contains("payload"), "{err}");
+    }
+}

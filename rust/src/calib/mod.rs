@@ -1,0 +1,295 @@
+//! Calibration: measured hardware profiles from on-host
+//! microbenchmarks.
+//!
+//! Everywhere else in the crate the hardware model is *assumed* — the
+//! constants in [`crate::cluster::HardwareProfile`] stand in for the
+//! paper's testbeds. This subsystem closes the measure→model→advise
+//! loop: [`bench`] times the crate's own kernels, thread-pool fan-out
+//! and loopback TCP on the current host; [`fit`] regresses those
+//! samples onto the profile fields with the same NNLS machinery the
+//! Ernest system model uses; [`artifact`] persists the result as a
+//! `hemingway-calib/v1` JSON artifact.
+//!
+//! Measured profiles enter the rest of the stack by name:
+//! `--profile-dir <dir>` loads every artifact in a directory into a
+//! process-wide registry, after which `measured:<name>` resolves
+//! anywhere a built-in profile name is accepted (`--profile`, fleet
+//! specs, configs). Built-in names keep resolving exactly as before —
+//! the registry is only consulted behind the `measured:` prefix.
+//!
+//! Provenance is part of the model context: when a config references a
+//! measured profile, [`provenance_segment`] contributes a
+//! `calib=[name@generation]` segment to
+//! `ExperimentConfig::context_key`, so advisor artifacts fitted
+//! against one calibration go stale when the host is re-calibrated,
+//! and [`calibration_json`] surfaces the same provenance in the serve
+//! layers' `stats` responses.
+
+pub mod artifact;
+pub mod bench;
+pub mod fit;
+
+pub use artifact::{CalibArtifact, SCHEMA};
+pub use bench::{run_suite, CalibSamples, HostFingerprint};
+pub use fit::{fit_measured, fit_profile, CalibFit};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Mutex, OnceLock};
+
+use crate::cluster::HardwareProfile;
+use crate::util::json::Json;
+
+/// Prefix that routes a profile name to the measured registry.
+pub const MEASURED_PREFIX: &str = "measured:";
+
+/// One registered calibration: the fitted profile plus the provenance
+/// the serve layer and context hash report.
+#[derive(Debug, Clone)]
+pub struct MeasuredEntry {
+    pub profile: HardwareProfile,
+    /// 16-hex digest of the artifact's canonical JSON.
+    pub generation: String,
+    /// `HostFingerprint::summary()` of the measuring host.
+    pub host: String,
+}
+
+fn registry() -> &'static Mutex<BTreeMap<String, MeasuredEntry>> {
+    static REGISTRY: OnceLock<Mutex<BTreeMap<String, MeasuredEntry>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Register one artifact (keyed by its name; replaces any previous
+/// registration of the same name — last loader wins, like `--fleets`).
+pub fn register(a: &CalibArtifact) {
+    let entry = MeasuredEntry {
+        profile: a.profile.clone(),
+        generation: a.generation(),
+        host: a.host.summary(),
+    };
+    registry().lock().unwrap().insert(a.name.clone(), entry);
+}
+
+/// Look up a registered calibration by bare name.
+pub fn lookup(name: &str) -> Option<MeasuredEntry> {
+    registry().lock().unwrap().get(name).cloned()
+}
+
+/// Names currently registered, sorted.
+pub fn loaded_names() -> Vec<String> {
+    registry().lock().unwrap().keys().cloned().collect()
+}
+
+/// Resolve a bare measured-profile name to its fitted profile. The
+/// returned profile is renamed to the registry key so the simulator's
+/// per-profile RNG stream is keyed by the name the user wrote — a
+/// measured profile carrying a built-in's name and numbers is then
+/// bit-identical to the built-in in simulation.
+pub fn resolve(name: &str) -> crate::Result<HardwareProfile> {
+    match lookup(name) {
+        Some(entry) => {
+            let mut p = entry.profile;
+            p.name = name.to_string();
+            Ok(p)
+        }
+        None => crate::bail!(
+            "measured profile '{name}' is not loaded (run `hemingway calibrate --name {name}` \
+             and pass --profile-dir <dir>; loaded: [{}])",
+            loaded_names().join(", ")
+        ),
+    }
+}
+
+/// Load every `*.json` artifact in `dir` into the registry, loudly
+/// rejecting anything that is not a valid `hemingway-calib/v1` file.
+/// Returns the loaded names, sorted.
+pub fn load_profile_dir(dir: &Path) -> crate::Result<Vec<String>> {
+    crate::ensure!(
+        dir.is_dir(),
+        "profile dir '{}' does not exist or is not a directory",
+        dir.display()
+    );
+    let mut paths: Vec<_> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    paths.sort();
+    let mut names = Vec::new();
+    for path in paths {
+        let a = CalibArtifact::load(&path)
+            .map_err(|e| crate::err!("loading calibration {}: {e}", path.display()))?;
+        names.push(a.name.clone());
+        register(&a);
+    }
+    names.sort();
+    Ok(names)
+}
+
+/// Extract the bare names of every `measured:<name>` reference in a
+/// profile string and a set of fleet specs (sorted, deduplicated).
+/// Name tokens stop at the first character outside the artifact-name
+/// charset, which is exactly where the fleet grammar's separators
+/// (`+ * : =`) begin.
+pub fn measured_refs(profile: &str, fleets: &[String]) -> Vec<String> {
+    let mut names = std::collections::BTreeSet::new();
+    let mut scan = |s: &str| {
+        let mut rest = s;
+        while let Some(i) = rest.find(MEASURED_PREFIX) {
+            let tail = &rest[i + MEASURED_PREFIX.len()..];
+            let end = tail
+                .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.'))
+                .unwrap_or(tail.len());
+            if end > 0 {
+                names.insert(tail[..end].to_string());
+            }
+            rest = &tail[end..];
+        }
+    };
+    scan(profile);
+    for f in fleets {
+        scan(f);
+    }
+    names.into_iter().collect()
+}
+
+/// The context-key segment recording which calibrations a config
+/// depends on: `calib=[name@generation,…]`, or `None` when the config
+/// only references built-ins (legacy context keys stay byte-stable).
+/// Unloaded references hash as `@unloaded`, so merely *loading* the
+/// artifact changes the hash — which is the point.
+pub fn provenance_segment(profile: &str, fleets: &[String]) -> Option<String> {
+    let refs = measured_refs(profile, fleets);
+    if refs.is_empty() {
+        return None;
+    }
+    let parts: Vec<String> = refs
+        .iter()
+        .map(|n| match lookup(n) {
+            Some(e) => format!("{n}@{}", e.generation),
+            None => format!("{n}@unloaded"),
+        })
+        .collect();
+    Some(format!("calib=[{}]", parts.join(",")))
+}
+
+/// Provenance for the serve layers' `stats` responses: `None` when the
+/// config only uses built-ins (legacy responses stay byte-stable),
+/// otherwise the measured artifacts with generation + host.
+pub fn calibration_json(profile: &str, fleets: &[String]) -> Option<Json> {
+    let refs = measured_refs(profile, fleets);
+    if refs.is_empty() {
+        return None;
+    }
+    let artifacts: Vec<Json> = refs
+        .iter()
+        .map(|n| match lookup(n) {
+            Some(e) => Json::object(vec![
+                ("name", Json::str(n.clone())),
+                ("generation", Json::str(e.generation)),
+                ("host", Json::str(e.host)),
+            ]),
+            None => Json::object(vec![
+                ("name", Json::str(n.clone())),
+                ("generation", Json::str("unloaded")),
+                ("host", Json::str("")),
+            ]),
+        })
+        .collect();
+    Some(Json::object(vec![
+        ("source", Json::str("measured")),
+        ("artifacts", Json::array(artifacts)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_artifact(name: &str) -> CalibArtifact {
+        CalibArtifact {
+            name: name.into(),
+            host: HostFingerprint::detect(),
+            profile: HardwareProfile {
+                name: name.into(),
+                ..HardwareProfile::ideal()
+            },
+            compute_rmse: 0.0,
+            sched_rmse: 0.0,
+            net_rmse: 0.0,
+            compute_samples: 3,
+            sched_samples: 3,
+            net_samples: 3,
+            wall_seconds: 0.1,
+        }
+    }
+
+    #[test]
+    fn register_lookup_resolve_cycle() {
+        let a = toy_artifact("modtest-cycle");
+        register(&a);
+        let e = lookup("modtest-cycle").unwrap();
+        assert_eq!(e.generation, a.generation());
+        assert_eq!(e.host, a.host.summary());
+        let p = resolve("modtest-cycle").unwrap();
+        assert_eq!(p.name, "modtest-cycle");
+        assert_eq!(p.flops_per_sec, a.profile.flops_per_sec);
+        let err = resolve("modtest-absent").unwrap_err().to_string();
+        assert!(err.contains("not loaded"), "{err}");
+    }
+
+    #[test]
+    fn measured_refs_parse_profiles_and_fleet_specs() {
+        assert!(measured_refs("local48", &["mixed:local48*0.5+ideal".into()]).is_empty());
+        assert_eq!(
+            measured_refs("measured:box-a", &[]),
+            vec!["box-a".to_string()]
+        );
+        // Fleet grammar: names stop at the separators, duplicates collapse.
+        let refs = measured_refs(
+            "measured:box-a",
+            &[
+                "mixed:measured:box-a*0.5+measured:box.b".into(),
+                "measured:box-a:slow=1.5x".into(),
+            ],
+        );
+        assert_eq!(refs, vec!["box-a".to_string(), "box.b".to_string()]);
+    }
+
+    #[test]
+    fn provenance_segment_is_none_for_builtins_only() {
+        assert!(provenance_segment("local48", &["r3_xlarge".into()]).is_none());
+        assert!(calibration_json("ideal", &[]).is_none());
+    }
+
+    #[test]
+    fn provenance_segment_tracks_generation_and_load_state() {
+        let seg = provenance_segment("measured:modtest-unreg", &[]).unwrap();
+        assert_eq!(seg, "calib=[modtest-unreg@unloaded]");
+        let a = toy_artifact("modtest-prov");
+        register(&a);
+        let seg = provenance_segment("measured:modtest-prov", &[]).unwrap();
+        assert_eq!(seg, format!("calib=[modtest-prov@{}]", a.generation()));
+        let j = calibration_json("measured:modtest-prov", &[]).unwrap();
+        assert_eq!(j.get("source").unwrap().as_str().unwrap(), "measured");
+        let arts = j.get("artifacts").unwrap().as_array().unwrap();
+        assert_eq!(arts.len(), 1);
+        assert_eq!(
+            arts[0].get("generation").unwrap().as_str().unwrap(),
+            a.generation()
+        );
+    }
+
+    #[test]
+    fn profile_dir_loading_is_loud_on_garbage() {
+        let dir = std::env::temp_dir().join("hemingway_calib_dir_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        toy_artifact("modtest-dir").save(&dir).unwrap();
+        let names = load_profile_dir(&dir).unwrap();
+        assert!(names.contains(&"modtest-dir".to_string()));
+        std::fs::write(dir.join("junk.json"), "{\"schema\":\"nope\"}").unwrap();
+        let err = load_profile_dir(&dir).unwrap_err().to_string();
+        assert!(err.contains("junk.json"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(load_profile_dir(&dir).is_err());
+    }
+}

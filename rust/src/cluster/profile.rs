@@ -94,14 +94,21 @@ impl HardwareProfile {
         }
     }
 
-    /// Look up a profile by name (CLI entry point).
+    /// Look up a profile by name (CLI entry point). `measured:<name>`
+    /// resolves through the calibration registry (`crate::calib`,
+    /// populated by `--profile-dir` / `hemingway calibrate`); the
+    /// built-in names resolve exactly as they always have.
     pub fn by_name(name: &str) -> crate::Result<HardwareProfile> {
+        if let Some(measured) = name.strip_prefix(crate::calib::MEASURED_PREFIX) {
+            return crate::calib::resolve(measured);
+        }
         Ok(match name {
             "local48" => Self::local48(),
             "r3_xlarge" => Self::r3_xlarge(),
             "ideal" => Self::ideal(),
             other => crate::bail!(
-                "unknown profile '{other}' (expected local48, r3_xlarge, ideal)"
+                "unknown profile '{other}' (expected local48, r3_xlarge, ideal, \
+                 or measured:<name> with --profile-dir)"
             ),
         })
     }
@@ -117,6 +124,36 @@ mod tests {
             assert_eq!(HardwareProfile::by_name(n).unwrap().name, n);
         }
         assert!(HardwareProfile::by_name("quantum").is_err());
+    }
+
+    #[test]
+    fn measured_prefix_routes_to_the_calibration_registry() {
+        // Unloaded measured names fail with guidance, not "unknown".
+        let err = HardwareProfile::by_name("measured:profiletest-nope")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not loaded"), "{err}");
+        // A registered artifact resolves under the measured: prefix with
+        // the bare name (what the simulator's RNG stream is keyed by).
+        let art = crate::calib::CalibArtifact {
+            name: "profiletest-box".into(),
+            host: crate::calib::HostFingerprint::detect(),
+            profile: HardwareProfile {
+                name: "profiletest-box".into(),
+                ..HardwareProfile::r3_xlarge()
+            },
+            compute_rmse: 0.0,
+            sched_rmse: 0.0,
+            net_rmse: 0.0,
+            compute_samples: 3,
+            sched_samples: 3,
+            net_samples: 3,
+            wall_seconds: 0.1,
+        };
+        crate::calib::register(&art);
+        let p = HardwareProfile::by_name("measured:profiletest-box").unwrap();
+        assert_eq!(p.name, "profiletest-box");
+        assert_eq!(p.flops_per_sec, HardwareProfile::r3_xlarge().flops_per_sec);
     }
 
     #[test]

@@ -21,8 +21,14 @@ pub struct ExperimentConfig {
     pub machines: Vec<usize>,
     /// Algorithms to run.
     pub algorithms: Vec<String>,
-    /// Cluster hardware profile name.
+    /// Cluster hardware profile name. Built-ins (`local48`,
+    /// `r3_xlarge`, `ideal`) or `measured:<name>` for a calibration
+    /// artifact loaded via `profile_dir` / `--profile-dir`.
     pub profile: String,
+    /// Directory of `hemingway-calib/v1` artifacts to load into the
+    /// measured-profile registry before profile/fleet resolution.
+    /// Empty (the default) loads nothing — built-in profiles only.
+    pub profile_dir: String,
     /// Stopping rules (paper: 1e-4 or 500 iterations).
     pub max_iters: usize,
     pub target_subopt: f64,
@@ -74,6 +80,7 @@ impl Default for ExperimentConfig {
             machines: vec![1, 2, 4, 8, 16, 32, 64, 128],
             algorithms: vec!["cocoa+".into()],
             profile: "local48".into(),
+            profile_dir: String::new(),
             max_iters: 500,
             target_subopt: 1e-4,
             seed: 20170211,
@@ -103,6 +110,13 @@ impl ExperimentConfig {
     /// not know must not quietly run BSP instead).
     pub fn from_json(doc: &Json) -> crate::Result<ExperimentConfig> {
         let dft = ExperimentConfig::default();
+        // Calibration artifacts load *before* profile/fleet validation,
+        // so a config can name `measured:<x>` profiles it ships the
+        // artifacts for.
+        let profile_dir = doc.opt_str("profile_dir", &dft.profile_dir).to_string();
+        if !profile_dir.is_empty() {
+            crate::calib::load_profile_dir(Path::new(&profile_dir))?;
+        }
         let machines = doc
             .get("machines")
             .and_then(Json::as_array)
@@ -204,6 +218,7 @@ impl ExperimentConfig {
             machines,
             algorithms,
             profile: doc.opt_str("profile", &dft.profile).to_string(),
+            profile_dir,
             max_iters: doc.opt_usize("max_iters", dft.max_iters),
             target_subopt: doc.opt_f64("target_subopt", dft.target_subopt),
             seed: doc.opt_f64("seed", dft.seed as f64) as u64,
@@ -270,6 +285,7 @@ impl ExperimentConfig {
                 Json::array(self.algorithms.iter().map(|a| Json::str(a.clone()))),
             ),
             ("profile", Json::str(self.profile.clone())),
+            ("profile_dir", Json::str(self.profile_dir.clone())),
             ("max_iters", Json::num(self.max_iters as f64)),
             ("target_subopt", Json::num(self.target_subopt)),
             ("seed", Json::num(self.seed as f64)),
@@ -301,8 +317,17 @@ impl ExperimentConfig {
     /// for every sweep cell this config runs (the per-grid stopping
     /// rules are appended by [`crate::sweep::SweepGrid::run_key`]).
     pub fn context_key(&self, native: bool) -> String {
+        // The calib segment only appears when the config references
+        // measured profiles, so calibration-blind configs keep their
+        // historical keys; it embeds each artifact's *generation*, so
+        // re-calibrating the host moves the key (and thereby both the
+        // sweep cache and the advisor-artifact staleness hash).
+        let calib = match crate::calib::provenance_segment(&self.profile, &self.fleets) {
+            Some(seg) => format!(";{seg}"),
+            None => String::new(),
+        };
         format!(
-            "n={};d={};lambda={:e};noise={};density={};seed={};profile={};backend={}",
+            "n={};d={};lambda={:e};noise={};density={};seed={};profile={};backend={}{}",
             self.n,
             self.d,
             self.lambda,
@@ -310,7 +335,8 @@ impl ExperimentConfig {
             self.data_density,
             self.seed,
             self.profile,
-            if native { "native" } else { "hlo" }
+            if native { "native" } else { "hlo" },
+            calib
         )
     }
 
@@ -527,6 +553,85 @@ mod tests {
         assert_ne!(a.model_context_hash(true), b.model_context_hash(true));
         assert!(!a.model_context(true).contains(";data=["));
         assert!(b.model_context(true).contains(";data=[sparse:0.01]"));
+    }
+
+    #[test]
+    fn calib_provenance_moves_the_context_hash() {
+        // Built-in-only configs carry no calib segment — historical
+        // keys and hashes are untouched by the subsystem's existence.
+        let a = ExperimentConfig::default();
+        assert!(!a.model_context(true).contains("calib=["));
+        // Referencing a measured profile adds the segment even before
+        // the artifact is loaded…
+        let mut b = a.clone();
+        b.profile = "measured:cfgtest-unreg".into();
+        assert!(b.model_context(true).contains("calib=[cfgtest-unreg@unloaded]"));
+        let unloaded = b.model_context_hash(true);
+        // …and loading the artifact moves the hash to its generation.
+        let art = crate::calib::CalibArtifact {
+            name: "cfgtest-unreg".into(),
+            host: crate::calib::HostFingerprint::detect(),
+            profile: HardwareProfile {
+                name: "cfgtest-unreg".into(),
+                ..HardwareProfile::ideal()
+            },
+            compute_rmse: 0.0,
+            sched_rmse: 0.0,
+            net_rmse: 0.0,
+            compute_samples: 3,
+            sched_samples: 3,
+            net_samples: 3,
+            wall_seconds: 0.1,
+        };
+        crate::calib::register(&art);
+        assert_ne!(b.model_context_hash(true), unloaded);
+        assert!(b
+            .model_context(true)
+            .contains(&format!("calib=[cfgtest-unreg@{}]", art.generation())));
+        // Fleet specs referencing measured types are tracked too.
+        let mut c = a.clone();
+        c.fleets = vec!["mixed:measured:cfgtest-unreg*0.5+local48".into()];
+        assert!(c.model_context(true).contains("calib=[cfgtest-unreg@"));
+    }
+
+    #[test]
+    fn profile_dir_loads_artifacts_for_validation() {
+        let dir = std::env::temp_dir().join("hemingway_cfgtest_profile_dir");
+        std::fs::remove_dir_all(&dir).ok();
+        let art = crate::calib::CalibArtifact {
+            name: "cfgtest-dirbox".into(),
+            host: crate::calib::HostFingerprint::detect(),
+            profile: HardwareProfile {
+                name: "cfgtest-dirbox".into(),
+                ..HardwareProfile::local48()
+            },
+            compute_rmse: 0.0,
+            sched_rmse: 0.0,
+            net_rmse: 0.0,
+            compute_samples: 3,
+            sched_samples: 3,
+            net_samples: 3,
+            wall_seconds: 0.1,
+        };
+        art.save(&dir).unwrap();
+        // A config can name the measured profile in `fleets` (which are
+        // validated eagerly) because profile_dir loads first.
+        let doc = Json::parse(&format!(
+            r#"{{"profile": "measured:cfgtest-dirbox",
+                 "profile_dir": {},
+                 "fleets": ["measured:cfgtest-dirbox"]}}"#,
+            Json::str(dir.display().to_string()).to_string()
+        ))
+        .unwrap();
+        let c = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(c.profile, "measured:cfgtest-dirbox");
+        assert_eq!(c.profile_dir, dir.display().to_string());
+        let specs = c.fleet_specs().unwrap();
+        assert_eq!(specs[0].base.name, "cfgtest-dirbox");
+        // A missing dir is a load-time error, not a silent built-in run.
+        let doc = Json::parse(r#"{"profile_dir": "/nonexistent/calibdir"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

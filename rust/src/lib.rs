@@ -36,12 +36,19 @@
 //! across a thread pool and caches finished traces in memory and on
 //! disk.
 //!
+//! The hardware model itself can be *measured* rather than assumed:
+//! the [`calib`] subsystem microbenchmarks the current host, fits a
+//! [`cluster::HardwareProfile`] out of the samples, and persists it as
+//! an artifact that `measured:<name>` resolves to anywhere a built-in
+//! profile name is accepted (`hemingway calibrate`, `--profile-dir`).
+//!
 //! See [`DESIGN.md`](../../DESIGN.md) (repo root) for the full system
 //! inventory and per-figure experiment index, and
 //! [`EXPERIMENTS.md`](../../EXPERIMENTS.md) for the experiment
 //! protocol and recorded sweep results.
 
 pub mod advisor;
+pub mod calib;
 pub mod cluster;
 pub mod config;
 pub mod data;

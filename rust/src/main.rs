@@ -59,6 +59,9 @@ fn print_help() {
          \x20 fit              [--algos cocoa+,cocoa] [--barriers bsp,ssp:4,async]\n\
          \x20                  [--fleets local48,straggly48] [--workloads W,..]\n\
          \x20                  [--data dense,sparse:0.01,..] [--native]\n\
+         \x20 calibrate        [--name N] [--quick] [--out DIR]  run on-host\n\
+         \x20                  microbenchmarks, fit a measured hardware profile,\n\
+         \x20                  write <out_dir>/calib/<N>.json (hemingway-calib/v1)\n\
          \x20 advise           --eps 1e-4 --budget 20 [--max-machines M] [--cost-weight W]\n\
          \x20                  [--barrier MODE|any] [--fleet SPEC|base|any]\n\
          \x20                  [--workload hinge|logistic|ridge|base|any]\n\
@@ -79,6 +82,8 @@ fn print_help() {
          figure ids: {}\n\n\
          common options:\n\
          \x20 --config <file>   JSON experiment config (see configs/default.json)\n\
+         \x20 --profile-dir <d> load measured hemingway-calib/v1 profiles; name them\n\
+         \x20                  as measured:<name> in profile/fleet specs\n\
          \x20 --native          use the native backend instead of PJRT/HLO\n\
          \x20 --seeds <N>       seed replicates per sweep cell (mean±std aggregation)\n\
          \x20 --threads <K>     sweep worker threads (default: HEMINGWAY_THREADS or cores)\n\
@@ -110,10 +115,22 @@ fn print_help() {
 }
 
 fn load_cfg(args: &Args) -> hemingway::Result<ExperimentConfig> {
+    // Measured-profile artifacts register before the config parses:
+    // a config (or --fleets below) naming `measured:<n>` validates its
+    // fleet grammar eagerly and needs the registry populated first.
+    if let Some(dir) = args.get("profile-dir") {
+        let names = hemingway::calib::load_profile_dir(std::path::Path::new(dir))?;
+        hemingway::log_info!("loaded {} measured profile(s): {}", names.len(), names.join(", "));
+    }
     let mut cfg = match args.get("config") {
         Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
         None => ExperimentConfig::default(),
     };
+    if let Some(dir) = args.get("profile-dir") {
+        if cfg.profile_dir.is_empty() {
+            cfg.profile_dir = dir.to_string();
+        }
+    }
     if let Some(ms) = args.get("machines-grid") {
         cfg.machines = ms
             .split(',')
@@ -400,6 +417,50 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                 );
             }
         }
+        "calibrate" => {
+            let cfg = load_cfg(args)?;
+            let name = args.str_or("name", "host").to_string();
+            let quick = args.flag("quick");
+            let out_dir = match args.get("out") {
+                Some(d) => std::path::PathBuf::from(d),
+                None => std::path::Path::new(&cfg.out_dir).join("calib"),
+            };
+            println!(
+                "calibrating '{name}' ({} suite; timing real kernels, threadpool, loopback TCP)…",
+                if quick { "quick" } else { "full" }
+            );
+            let samples = hemingway::calib::run_suite(quick)?;
+            let fit = hemingway::calib::fit_measured(&name, &samples)?;
+            let artifact = hemingway::calib::CalibArtifact {
+                name: name.clone(),
+                host: samples.host.clone(),
+                profile: fit.profile.clone(),
+                compute_rmse: fit.compute_rmse,
+                sched_rmse: fit.sched_rmse,
+                net_rmse: fit.net_rmse,
+                compute_samples: samples.compute.len(),
+                sched_samples: samples.sched.len(),
+                net_samples: samples.net.len(),
+                wall_seconds: samples.wall_seconds,
+            };
+            let path = artifact.save(&out_dir)?;
+            let p = &artifact.profile;
+            println!("host {}  ({:.1}s of microbenchmarks)", samples.host.summary(), samples.wall_seconds);
+            println!("  flops_per_sec      {:.3e}  (rmse {:.2e}s over {} samples)",
+                p.flops_per_sec, artifact.compute_rmse, artifact.compute_samples);
+            println!("  iteration_overhead {:.4}s + {:.5}s/machine  (rmse {:.2e}s over {} samples)",
+                p.iteration_overhead, p.sched_per_machine, artifact.sched_rmse, artifact.sched_samples);
+            println!("  net_latency        {:.5}s, bandwidth {:.3e} B/s  (rmse {:.2e}s over {} samples)",
+                p.net_latency, p.net_bandwidth, artifact.net_rmse, artifact.net_samples);
+            println!("  noise_sigma        {:.4}  (straggler/price fields carried from local48)",
+                p.noise_sigma);
+            println!(
+                "wrote {} (generation {})\nuse it with:  --profile-dir {}  and profile/fleet 'measured:{name}'",
+                path.display(),
+                artifact.generation(),
+                out_dir.display()
+            );
+        }
         "advise" => {
             let cfg = load_cfg(args)?;
             let eps = args.f64_or("eps", cfg.target_subopt)?;
@@ -525,6 +586,10 @@ fn dispatch(cmd: &str, args: &Args) -> hemingway::Result<()> {
                         machine_grid: cfg.machines.clone(),
                         iter_cap: cfg.advisor_iter_cap,
                         fleets: cfg.fleet_specs()?,
+                        calibration: hemingway::calib::calibration_json(
+                            &cfg.profile,
+                            &cfg.fleets,
+                        ),
                         algos: Some(algos.clone()),
                         poll: std::time::Duration::from_millis(reload_ms),
                     })

@@ -257,6 +257,30 @@ pub fn pegasos_epoch(
     w.iter().map(|&v| v as f32).collect()
 }
 
+/// Reusable f64 working buffers for the generic epochs. Each epoch
+/// call used to allocate its dual vector and weight accumulator fresh;
+/// threading one of these through [`sdca_epoch_obj_with`],
+/// [`sgd_epoch_obj_with`] and [`loss_stats_with`] makes the hot loops
+/// allocation-free after the first call (the buffers are cleared and
+/// regrown in place, so the arithmetic — and hence every bit of the
+/// output — is identical to a fresh allocation).
+#[derive(Debug, Default)]
+pub struct EpochScratch {
+    /// Dual-iterate buffer (length `n_loc` while an SDCA epoch runs).
+    a: Vec<f64>,
+    /// Weight-space buffer (length `d`): `dw` for SDCA, the iterate
+    /// for SGD, the gradient sum for the loss statistics.
+    w: Vec<f64>,
+}
+
+thread_local! {
+    /// Per-thread scratch behind the allocating-signature wrappers, so
+    /// sweep workers reuse buffers across epochs without any caller
+    /// changing its call sites (or racing another worker's buffers).
+    static EPOCH_SCRATCH: std::cell::RefCell<EpochScratch> =
+        std::cell::RefCell::new(EpochScratch::default());
+}
+
 /// One local SDCA epoch for a non-hinge [`Objective`] — the same LCG
 /// coordinate stream, masking and σ′ discipline as [`sdca_epoch`], with
 /// the coordinate update supplied by [`Objective::dual_step`] (closed
@@ -276,11 +300,48 @@ pub fn sdca_epoch_obj(
     seed: u32,
     h_steps: usize,
 ) -> (Vec<f32>, Vec<f32>) {
+    EPOCH_SCRATCH.with(|s| {
+        sdca_epoch_obj_with(
+            objective,
+            x,
+            y,
+            mask,
+            alpha,
+            w,
+            lambda_n,
+            sigma_prime,
+            seed,
+            h_steps,
+            &mut s.borrow_mut(),
+        )
+    })
+}
+
+/// [`sdca_epoch_obj`] against caller-owned scratch — bit-identical
+/// output, no per-epoch buffer allocations.
+#[allow(clippy::too_many_arguments)]
+pub fn sdca_epoch_obj_with(
+    objective: Objective,
+    x: &[f32],
+    y: &[f32],
+    mask: &[f32],
+    alpha: &[f32],
+    w: &[f32],
+    lambda_n: f64,
+    sigma_prime: f64,
+    seed: u32,
+    h_steps: usize,
+    scratch: &mut EpochScratch,
+) -> (Vec<f32>, Vec<f32>) {
     let d = w.len();
     let n_loc = y.len();
     debug_assert_eq!(x.len(), n_loc * d);
-    let mut a: Vec<f64> = alpha.iter().map(|&v| v as f64).collect();
-    let mut dw = vec![0.0f64; d];
+    scratch.a.clear();
+    scratch.a.extend(alpha.iter().map(|&v| v as f64));
+    scratch.w.clear();
+    scratch.w.resize(d, 0.0);
+    let a = &mut scratch.a;
+    let dw = &mut scratch.w;
     let mut lcg = Lcg32 { state: seed };
     for _ in 0..h_steps {
         let j = lcg.next_index(n_loc as u32) as usize;
@@ -288,7 +349,7 @@ pub fn sdca_epoch_obj(
         let qj: f64 = xj.iter().map(|&v| (v as f64) * (v as f64)).sum();
         let dot: f64 = xj
             .iter()
-            .zip(w.iter().zip(&dw))
+            .zip(w.iter().zip(dw.iter()))
             .map(|(&xi, (&wi, &dwi))| xi as f64 * (wi as f64 + sigma_prime * dwi))
             .sum();
         let denom = (sigma_prime * qj).max(1e-12);
@@ -324,10 +385,25 @@ pub fn loss_stats(
     weights: &[f32],
     w: &[f32],
 ) -> GradOut {
+    EPOCH_SCRATCH.with(|s| loss_stats_with(objective, x, y, weights, w, &mut s.borrow_mut()))
+}
+
+/// [`loss_stats`] against caller-owned scratch — bit-identical output,
+/// no per-call gradient-buffer allocation.
+pub fn loss_stats_with(
+    objective: Objective,
+    x: &[f32],
+    y: &[f32],
+    weights: &[f32],
+    w: &[f32],
+    scratch: &mut EpochScratch,
+) -> GradOut {
     let d = w.len();
     let n_loc = y.len();
     debug_assert_eq!(x.len(), n_loc * d);
-    let mut grad = vec![0.0f64; d];
+    scratch.w.clear();
+    scratch.w.resize(d, 0.0);
+    let grad = &mut scratch.w;
     let mut loss = 0.0f64;
     let mut correct = 0.0f64;
     for i in 0..n_loc {
@@ -373,10 +449,32 @@ pub fn sgd_epoch_obj(
     seed: u32,
     h_steps: usize,
 ) -> Vec<f32> {
+    EPOCH_SCRATCH.with(|s| {
+        sgd_epoch_obj_with(objective, x, y, mask, w0, lambda, t0, seed, h_steps, &mut s.borrow_mut())
+    })
+}
+
+/// [`sgd_epoch_obj`] against caller-owned scratch — bit-identical
+/// output, no per-epoch iterate allocation.
+#[allow(clippy::too_many_arguments)]
+pub fn sgd_epoch_obj_with(
+    objective: Objective,
+    x: &[f32],
+    y: &[f32],
+    mask: &[f32],
+    w0: &[f32],
+    lambda: f64,
+    t0: f64,
+    seed: u32,
+    h_steps: usize,
+    scratch: &mut EpochScratch,
+) -> Vec<f32> {
     let d = w0.len();
     let n_loc = y.len();
     debug_assert_eq!(x.len(), n_loc * d);
-    let mut w: Vec<f64> = w0.iter().map(|&v| v as f64).collect();
+    scratch.w.clear();
+    scratch.w.extend(w0.iter().map(|&v| v as f64));
+    let w = &mut scratch.w;
     let mut lcg = Lcg32 { state: seed };
     let step_cap = objective.max_stable_step(lambda);
     for t in 0..h_steps {
@@ -386,7 +484,7 @@ pub fn sgd_epoch_obj(
         if let Some(cap) = step_cap {
             eta = eta.min(cap);
         }
-        let dot: f64 = xj.iter().zip(&w).map(|(&xv, wv)| xv as f64 * wv).sum();
+        let dot: f64 = xj.iter().zip(w.iter()).map(|(&xv, wv)| xv as f64 * wv).sum();
         let g = objective.dloss(dot, y[j] as f64);
         let mj = mask[j] as f64;
         let shrink = 1.0 - eta * lambda * mj;
@@ -730,6 +828,50 @@ mod tests {
                     "{obj} coord {j}: analytic {ana} vs numeric {num}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn scratch_variants_match_allocating_wrappers_bitwise() {
+        use crate::data::synth::{dataset_for, SynthConfig};
+        let cfg = SynthConfig {
+            n: 32,
+            d: 5,
+            ..Default::default()
+        };
+        for obj in [Objective::Hinge, Objective::Logistic, Objective::Ridge] {
+            let ds = dataset_for(obj, &cfg);
+            let parts = ds.partition(1).unwrap();
+            let p = &parts[0];
+            let alpha = vec![0.2f32; p.n_loc];
+            let w = vec![0.1f32; 5];
+            // Deliberately dirty, wrongly-sized scratch: the `_with`
+            // variants must clear and regrow it in place without any
+            // of the garbage leaking into the arithmetic.
+            let mut scratch = EpochScratch {
+                a: vec![7.5; 3],
+                w: vec![-2.25; 11],
+            };
+            let fresh =
+                sdca_epoch_obj(obj, &p.x, &p.y, &p.mask, &alpha, &w, 0.4, 1.5, 19, 77);
+            let reused = sdca_epoch_obj_with(
+                obj, &p.x, &p.y, &p.mask, &alpha, &w, 0.4, 1.5, 19, 77, &mut scratch,
+            );
+            assert_eq!(fresh, reused, "{obj}: sdca drifted under reused scratch");
+            let fresh = sgd_epoch_obj(obj, &p.x, &p.y, &p.mask, &w, 0.02, 0.0, 19, 77);
+            let reused = sgd_epoch_obj_with(
+                obj, &p.x, &p.y, &p.mask, &w, 0.02, 0.0, 19, 77, &mut scratch,
+            );
+            assert_eq!(fresh, reused, "{obj}: sgd drifted under reused scratch");
+            let fresh = loss_stats(obj, &p.x, &p.y, &p.mask, &w);
+            let reused = loss_stats_with(obj, &p.x, &p.y, &p.mask, &w, &mut scratch);
+            assert_eq!(fresh.grad_sum, reused.grad_sum, "{obj}: grad drifted");
+            assert_eq!(fresh.hinge_sum.to_bits(), reused.hinge_sum.to_bits(), "{obj}");
+            assert_eq!(
+                fresh.correct_sum.to_bits(),
+                reused.correct_sum.to_bits(),
+                "{obj}"
+            );
         }
     }
 

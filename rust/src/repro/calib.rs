@@ -1,0 +1,162 @@
+//! Calibration comparison (beyond the paper): the same sweep under the
+//! config's *assumed* built-in hardware profile and under a *measured*
+//! profile fitted from on-host microbenchmarks (`hemingway calibrate`),
+//! asking the question that motivates calibrating at all — does the
+//! advisor's recommendation flip once the simulator runs on numbers
+//! the hardware actually produced?
+//!
+//! Every (algorithm, m) cell runs under both profiles with the same
+//! cell seed, so the comparison is paired: any divergence is the
+//! profile numbers, not the noise realization. The target writes
+//! `calib_compare.csv` and a one-line verdict: either the winning
+//! (algorithm, m) agrees under both profiles, or it flips — and then
+//! the summary prices the flip, i.e. how much slower the
+//! assumed-profile winner actually is on the measured hardware.
+
+use crate::cluster::BarrierMode;
+use crate::optim::Trace;
+use crate::sweep::SweepGrid;
+use crate::util::csv::Table;
+use crate::util::stats;
+
+use super::common::ReproContext;
+
+/// The (assumed, measured) profile pair to compare. The measured side
+/// comes from the config's own `measured:` profile when it names one,
+/// otherwise from the first loaded calibration artifact; the assumed
+/// side is the config's built-in profile (or local48 when the config
+/// already runs measured).
+fn profile_pair(ctx: &ReproContext) -> crate::Result<(String, String)> {
+    let cfg_profile = ctx.cfg.profile.as_str();
+    if cfg_profile.starts_with(crate::calib::MEASURED_PREFIX) {
+        return Ok(("local48".to_string(), cfg_profile.to_string()));
+    }
+    let loaded = crate::calib::loaded_names();
+    let measured = loaded.first().ok_or_else(|| {
+        crate::err!(
+            "repro --figure calib needs a measured profile: run \
+             `hemingway calibrate --quick --name <n>` and pass \
+             --profile-dir <dir> (or set \"profile_dir\" and \
+             \"profile\": \"measured:<n>\" in the config)"
+        )
+    })?;
+    Ok((
+        cfg_profile.to_string(),
+        format!("{}{measured}", crate::calib::MEASURED_PREFIX),
+    ))
+}
+
+pub fn calib(ctx: &ReproContext) -> crate::Result<String> {
+    println!("== calib: assumed vs measured profile — does the advice flip? ==");
+    let (assumed, measured) = profile_pair(ctx)?;
+    println!("  assumed: {assumed}   measured: {measured}");
+    let profiles = [assumed.clone(), measured.clone()];
+    let algos: Vec<String> = ctx.cfg.algorithms.clone();
+    let grid = SweepGrid {
+        algorithms: algos.clone(),
+        machines: ctx.cfg.machines.clone(),
+        modes: vec![BarrierMode::Bsp],
+        fleets: profiles.to_vec(),
+        workloads: vec![ctx.base_workload()],
+        data: Vec::new(),
+        events: String::new(),
+        seeds: 1,
+        base_seed: ctx.cfg.seed,
+        run: ctx.run_config(),
+    };
+    let traces = ctx.run_grid(&grid)?;
+
+    // A target both profiles can reach (same relaxation rule as the
+    // ssp/hetero scenarios: short-budget runs may never see 1e-4).
+    let mut eps = ctx.cfg.target_subopt;
+    let reached = traces.iter().filter(|t| t.time_to(eps).is_some()).count();
+    if reached * 2 < traces.len() {
+        let finals: Vec<f64> = traces
+            .iter()
+            .map(|t| t.final_subopt().max(1e-12))
+            .collect();
+        eps = stats::percentile(&finals, 75.0) * 1.2;
+        println!(
+            "  (target {:.0e} unreachable for most cells; comparing at {eps:.2e})",
+            ctx.cfg.target_subopt
+        );
+    }
+
+    // profile column: 0 = assumed, 1 = measured; algorithm column: the
+    // index into the config's `algorithms` list (the CSV convention
+    // the sweep aggregate uses for its fleet column).
+    let mut table = Table::new(&[
+        "machines",
+        "algorithm",
+        "profile",
+        "reached",
+        "time_to_target",
+        "final_subopt",
+        "mean_iter_time",
+    ]);
+    // Per-profile winner: the fastest-to-target (algorithm, m).
+    let mut winners: [Option<(usize, usize, f64)>; 2] = [None, None];
+    for (pi, profile) in profiles.iter().enumerate() {
+        for (ai, algo) in algos.iter().enumerate() {
+            for &m in &ctx.cfg.machines {
+                let Some(t) = find_trace(&traces, algo, m, profile) else {
+                    continue;
+                };
+                let tt = t.time_to(eps);
+                table.push(vec![
+                    m as f64,
+                    ai as f64,
+                    pi as f64,
+                    tt.is_some() as usize as f64,
+                    tt.unwrap_or(f64::NAN),
+                    t.final_subopt(),
+                    t.mean_iter_time(),
+                ]);
+                if let Some(tt) = tt {
+                    if winners[pi].map(|w| tt < w.2).unwrap_or(true) {
+                        winners[pi] = Some((ai, m, tt));
+                    }
+                }
+            }
+        }
+    }
+    ctx.write_csv("calib_compare.csv", &table)?;
+
+    let summary = match (winners[0], winners[1]) {
+        (Some((a0, m0, t0)), Some((a1, m1, t1))) => {
+            if (a0, m0) == (a1, m1) {
+                format!(
+                    "calib: advice holds — {} m={m0} wins to {eps:.1e} under both \
+                     {assumed} ({t0:.2}s) and {measured} ({t1:.2}s)",
+                    algos[a0]
+                )
+            } else {
+                // Price the flip: what the assumed-profile pick costs
+                // when it actually runs on the measured hardware.
+                let regret = find_trace(&traces, &algos[a0], m0, &measured)
+                    .and_then(|t| t.time_to(eps))
+                    .map(|t| format!("; trusting {assumed} costs ×{:.2} there", t / t1))
+                    .unwrap_or_default();
+                format!(
+                    "calib: advice FLIPS — {} m={m0} ({t0:.2}s) under {assumed} vs \
+                     {} m={m1} ({t1:.2}s) under {measured}{regret}",
+                    algos[a0], algos[a1]
+                )
+            }
+        }
+        _ => format!("calib: no (algorithm, m) reached {eps:.1e} under both profiles"),
+    };
+    println!("{summary}\n");
+    Ok(summary)
+}
+
+fn find_trace<'a>(
+    traces: &'a [Trace],
+    algo: &str,
+    machines: usize,
+    fleet: &str,
+) -> Option<&'a Trace> {
+    traces
+        .iter()
+        .find(|t| t.algorithm == algo && t.machines == machines && t.fleet == fleet)
+}

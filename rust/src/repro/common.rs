@@ -864,6 +864,9 @@ pub fn load_or_fit_registry(
     // The fleet axis prices cheapest_to queries (per-machine dollar
     // rates); the base fleet also backs unnamed-legacy artifacts.
     registry.fleets = cfg.fleet_specs()?;
+    // Calibration provenance rides into `stats` responses; `None` for
+    // built-in-only configs keeps those responses byte-stable.
+    registry.calibration = crate::calib::calibration_json(&cfg.profile, &cfg.fleets);
     for (algo, path) in &report.stale {
         crate::log_warn!(
             "model artifact {} ({algo}) was fitted under a different config; \

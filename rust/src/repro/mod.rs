@@ -5,6 +5,7 @@
 //! EXPERIMENTS.md.
 
 pub mod ablation;
+pub mod calib;
 pub mod common;
 pub mod data;
 pub mod elastic;
@@ -24,7 +25,7 @@ pub use common::ReproContext;
 pub const FIGURES: &[&str] = &[
     "1a", "1b", "1c", "3a", "3b", "4", "5", "6", "7", "8", "9", "10",
     "table-ernest", "table-advisor", "ablation", "ssp", "hetero", "workloads", "data",
-    "elastic",
+    "elastic", "calib",
 ];
 
 /// Run one or all targets; returns the collected summary lines.
@@ -102,6 +103,12 @@ pub fn run_figures(ctx: &ReproContext, which: &str) -> crate::Result<Vec<String>
     }
     if wants("elastic") {
         summaries.push(elastic::elastic(ctx)?);
+    }
+    // Explicit-only (`which == "calib"`, never under `all`): it needs a
+    // measured profile loaded (`calibrate` + `--profile-dir`), which a
+    // plain `repro all` run has no business requiring.
+    if which == "calib" {
+        summaries.push(calib::calib(ctx)?);
     }
 
     crate::ensure!(

@@ -239,6 +239,7 @@ fn hot_reload_under_load_never_drops_or_tears_a_response() {
                 machine_grid: vec![1, 2, 4],
                 iter_cap: 100_000,
                 fleets: Vec::new(),
+                calibration: None,
                 algos: None,
                 poll: Duration::from_millis(25),
             }),

@@ -1,0 +1,254 @@
+//! Property tests for the calibration subsystem (via
+//! `util::quickcheck`): the invariants ISSUE 10 pins down.
+//!
+//! * the **fitter recovers known profiles**: samples synthesized from a
+//!   known `HardwareProfile` (`calib::fit::synthetic_samples`) fed back
+//!   through `fit_profile` reproduce every measured field — exactly
+//!   when noiseless, within tolerance under lognormal compute noise —
+//!   and carry the unmeasurable fields through untouched;
+//! * **artifacts round-trip bit-exactly** through their canonical JSON
+//!   (`f64` fields compare by bit pattern, not approximately), while a
+//!   truncated file or a bumped schema version is rejected loudly
+//!   rather than half-loaded;
+//! * a **measured profile carrying a built-in's exact numbers drives a
+//!   bit-identical simulation**: registering local48's numbers under
+//!   `measured:local48` and sweeping through every barrier mode yields
+//!   the same sim times, primals, suboptimalities and weights, bit for
+//!   bit — substituting measured hardware numbers perturbs nothing but
+//!   the numbers.
+//!
+//! CI runs this suite under a pinned `QUICKCHECK_SEED` (see ci.sh) so
+//! a property failure names a seed that reproduces locally.
+
+use hemingway::calib::fit::synthetic_samples;
+use hemingway::calib::{fit_profile, register, CalibArtifact, HostFingerprint, SCHEMA};
+use hemingway::cluster::{BarrierMode, ClusterSim, FleetSpec, HardwareProfile};
+use hemingway::data::synth::{dataset_for, SynthConfig};
+use hemingway::optim::{by_name, run, NativeBackend, Objective, Problem, RunConfig};
+use hemingway::util::json::Json;
+use hemingway::util::quickcheck::{forall_ok, Gen};
+
+#[test]
+fn fitter_recovers_randomized_ground_truth_profiles() {
+    forall_ok(
+        "calibration fit recovers a known profile from its own samples",
+        8,
+        |g: &mut Gen| {
+            let noisy = g.bool();
+            let profile = HardwareProfile {
+                name: "truth".into(),
+                flops_per_sec: g.f64_in(1e6, 1e9),
+                iteration_overhead: g.f64_in(0.01, 0.5),
+                sched_per_machine: g.f64_in(1e-4, 1e-2),
+                net_latency: g.f64_in(1e-4, 5e-3),
+                net_bandwidth: g.f64_in(1e7, 1e9),
+                noise_sigma: if noisy { g.f64_in(0.01, 0.08) } else { 0.0 },
+                straggler_prob: g.f64_in(0.0, 0.2),
+                straggler_factor: g.f64_in(1.0, 5.0),
+                price_per_machine_second: g.f64_in(1e-6, 1e-3),
+            };
+            let seed = g.rng().next_u32() as u64;
+            ((profile, seed), ())
+        },
+        |(profile, seed), _| {
+            let samples = synthetic_samples(profile, *seed);
+            let fit = fit_profile("probe", &samples, profile).map_err(|e| e.to_string())?;
+            let p = &fit.profile;
+            let rel = |got: f64, want: f64| (got - want).abs() / want.abs().max(1e-300);
+            // Scheduling and network samples are synthesized exactly;
+            // only the compute family carries the lognormal noise.
+            let checks = [
+                ("iteration_overhead", p.iteration_overhead, profile.iteration_overhead, 1e-5),
+                ("sched_per_machine", p.sched_per_machine, profile.sched_per_machine, 1e-5),
+                ("net_latency", p.net_latency, profile.net_latency, 1e-5),
+                ("net_bandwidth", p.net_bandwidth, profile.net_bandwidth, 1e-5),
+                (
+                    "flops_per_sec",
+                    p.flops_per_sec,
+                    profile.flops_per_sec,
+                    if profile.noise_sigma == 0.0 { 1e-5 } else { 0.05 },
+                ),
+            ];
+            for (field, got, want, tol) in checks {
+                if rel(got, want) > tol {
+                    return Err(format!(
+                        "{field}: fitted {got} vs truth {want} (rel {:.2e} > {tol:.0e})",
+                        rel(got, want)
+                    ));
+                }
+            }
+            let sig_err = (p.noise_sigma - profile.noise_sigma).abs();
+            if sig_err > 0.5 * profile.noise_sigma + 0.005 {
+                return Err(format!(
+                    "noise_sigma: fitted {} vs truth {} (err {sig_err:.4})",
+                    p.noise_sigma, profile.noise_sigma
+                ));
+            }
+            // The single-host bench can't observe these — they must be
+            // the carry profile's values, bit for bit.
+            for (field, got, want) in [
+                ("straggler_prob", p.straggler_prob, profile.straggler_prob),
+                ("straggler_factor", p.straggler_factor, profile.straggler_factor),
+                (
+                    "price_per_machine_second",
+                    p.price_per_machine_second,
+                    profile.price_per_machine_second,
+                ),
+            ] {
+                if got.to_bits() != want.to_bits() {
+                    return Err(format!("{field}: carried {got} != {want}"));
+                }
+            }
+            if p.name != "probe" {
+                return Err(format!("fitted profile is named '{}', not 'probe'", p.name));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn artifacts_round_trip_bitwise_and_reject_corruption() {
+    const NAME_CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789_-.";
+    forall_ok(
+        "calib artifacts round-trip bit-exactly; truncation and schema bumps fail loudly",
+        16,
+        |g: &mut Gen| {
+            let name: String = (0..g.usize_in(1, 12))
+                .map(|_| NAME_CHARS[g.usize_in(0, NAME_CHARS.len() - 1)] as char)
+                .collect();
+            // Positive floats spanning 18 decades: the JSON codec must
+            // hand every bit back, not a pretty-printed approximation.
+            let mag = |g: &mut Gen| 10f64.powf(g.f64_in(-9.0, 9.0));
+            let artifact = CalibArtifact {
+                name: name.clone(),
+                host: HostFingerprint::detect(),
+                profile: HardwareProfile {
+                    name,
+                    flops_per_sec: mag(g),
+                    iteration_overhead: mag(g),
+                    sched_per_machine: mag(g),
+                    net_latency: mag(g),
+                    net_bandwidth: mag(g),
+                    noise_sigma: g.f64_in(0.0, 1.0),
+                    straggler_prob: g.f64_in(0.0, 1.0),
+                    straggler_factor: mag(g),
+                    price_per_machine_second: mag(g),
+                },
+                compute_rmse: mag(g),
+                sched_rmse: mag(g),
+                net_rmse: mag(g),
+                compute_samples: g.usize_in(0, 500),
+                sched_samples: g.usize_in(0, 500),
+                net_samples: g.usize_in(0, 500),
+                wall_seconds: mag(g),
+            };
+            let cut_sel = g.rng().next_u32() as usize;
+            ((artifact.name.clone(), cut_sel), artifact)
+        },
+        |(_, cut_sel), artifact| {
+            let text = artifact.to_json().to_string();
+            let back = CalibArtifact::from_json(
+                &Json::parse(&text).map_err(|e| e.to_string())?,
+            )
+            .map_err(|e| e.to_string())?;
+            if back != *artifact {
+                return Err("artifact changed across the JSON round trip".into());
+            }
+            for (field, a, b) in [
+                ("flops_per_sec", artifact.profile.flops_per_sec, back.profile.flops_per_sec),
+                ("net_bandwidth", artifact.profile.net_bandwidth, back.profile.net_bandwidth),
+                ("compute_rmse", artifact.compute_rmse, back.compute_rmse),
+                ("wall_seconds", artifact.wall_seconds, back.wall_seconds),
+            ] {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("{field}: {a} round-tripped to {b} (bits differ)"));
+                }
+            }
+            if back.generation() != artifact.generation() {
+                return Err("generation digest drifted across the round trip".into());
+            }
+            // Any strict prefix of the canonical text must be rejected
+            // at parse or validation — never half-loaded.
+            let cut = 1 + cut_sel % (text.len() - 1);
+            let truncated = Json::parse(&text[..cut])
+                .map_err(|e| e.to_string())
+                .and_then(|v| CalibArtifact::from_json(&v).map_err(|e| e.to_string()));
+            if truncated.is_ok() {
+                return Err(format!("truncation at byte {cut}/{} loaded cleanly", text.len()));
+            }
+            // A future schema version must fail with a schema error,
+            // not be reinterpreted under today's field layout.
+            let bumped = text.replace(SCHEMA, "hemingway-calib/v99");
+            match CalibArtifact::from_json(&Json::parse(&bumped).map_err(|e| e.to_string())?) {
+                Ok(_) => Err("schema-bumped artifact loaded cleanly".into()),
+                Err(e) if e.to_string().contains("schema") => Ok(()),
+                Err(e) => Err(format!("schema bump failed for the wrong reason: {e}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn measured_profile_with_identical_numbers_drives_a_bitwise_identical_sim() {
+    // Register local48's exact numbers as a measured artifact under the
+    // same name: `measured:local48` must then be indistinguishable from
+    // the built-in — the simulator keys its noise stream off the
+    // profile *name*, and `calib::resolve` renames the fitted profile
+    // to the bare registry key for exactly this reason.
+    register(&CalibArtifact {
+        name: "local48".into(),
+        host: HostFingerprint::detect(),
+        profile: HardwareProfile::local48(),
+        compute_rmse: 0.0,
+        sched_rmse: 0.0,
+        net_rmse: 0.0,
+        compute_samples: 0,
+        sched_samples: 0,
+        net_samples: 0,
+        wall_seconds: 0.0,
+    });
+    let measured = HardwareProfile::by_name("measured:local48").unwrap();
+    assert_eq!(measured, HardwareProfile::local48(), "resolved profile drifted");
+
+    let cfg = SynthConfig {
+        n: 256,
+        d: 16,
+        ..Default::default()
+    };
+    let ds = dataset_for(Objective::Hinge, &cfg);
+    let problem = Problem::with_objective(ds, 1e-3, Objective::Hinge);
+    let (p_star, _, _) = problem.reference_solve(1e-6, 300);
+    let run_cfg = RunConfig {
+        max_iters: 12,
+        target_subopt: -1.0,
+        time_budget: None,
+    };
+    for mode in [
+        BarrierMode::Bsp,
+        BarrierMode::Ssp { staleness: 2 },
+        BarrierMode::Async,
+    ] {
+        let drive = |fleet_name: &str| {
+            let fleet = FleetSpec::parse(fleet_name).unwrap();
+            let mut algo = by_name("cocoa+", &problem, 4, 7).unwrap();
+            let mut sim = ClusterSim::with_fleet(fleet, mode, 7 ^ 4);
+            let trace =
+                run(algo.as_mut(), &NativeBackend, &problem, &mut sim, p_star, &run_cfg)
+                    .unwrap();
+            let rows: Vec<(u64, u64, u64)> = trace
+                .records
+                .iter()
+                .map(|r| (r.sim_time.to_bits(), r.primal.to_bits(), r.subopt.to_bits()))
+                .collect();
+            let weights: Vec<u32> = algo.weights().iter().map(|w| w.to_bits()).collect();
+            (rows, weights)
+        };
+        let builtin = drive("local48");
+        let via_measured = drive("measured:local48");
+        assert_eq!(
+            builtin, via_measured,
+            "{mode:?}: measured:local48 and local48 simulations diverged"
+        );
+    }
+}
